@@ -1,0 +1,93 @@
+//! **Ablation A2** — access-pattern generality: LIFO / FIFO / random-churn
+//! / steady-state / game-frame traces across the full allocator zoo (paper
+//! pool, eager pool, pointer free-list, malloc, first-fit, buddy).
+//!
+//! Run: `cargo bench --bench ablate_churn`
+
+use fastpool::alloc::{
+    BenchAllocator, BuddyAllocator, EagerPoolAllocator, FirstFitAllocator,
+    PoolAllocator, PtrPoolAllocator, SystemAllocator,
+};
+use fastpool::bench_harness::{write_csv, write_markdown, ReportTable, Suite};
+use fastpool::workload::{game, patterns, replay, SizeDist, Trace};
+
+const SIZE: u32 = 64;
+
+fn traces() -> Vec<(&'static str, Trace)> {
+    vec![
+        ("pairs", patterns::alloc_free_pairs(20_000, SIZE)),
+        ("lifo", patterns::lifo(512, 40, SIZE)),
+        ("fifo", patterns::fifo(512, 40, SIZE)),
+        ("churn", patterns::random_churn(40_000, 512, SizeDist::Fixed(SIZE), 11)),
+        ("steady", patterns::steady_state(512, 20_000, SizeDist::Fixed(SIZE), 12)),
+        ("game", {
+            let cfg = game::GameConfig {
+                frames: 300,
+                particle_size: SIZE,
+                packet_size: SIZE,
+                asset_size: SIZE,
+                ..Default::default()
+            };
+            game::generate(cfg, 13).0
+        }),
+    ]
+}
+
+fn allocators(peak: u32) -> Vec<Box<dyn BenchAllocator>> {
+    let cap = peak + 64;
+    vec![
+        Box::new(PoolAllocator::new(SIZE as usize, cap)),
+        Box::new(EagerPoolAllocator::new(SIZE as usize, cap)),
+        Box::new(PtrPoolAllocator::new(SIZE as usize, cap)),
+        Box::new(SystemAllocator::new()),
+        Box::new(FirstFitAllocator::new((cap as usize) * (SIZE as usize) * 2)),
+        Box::new(BuddyAllocator::new((cap as usize) * (SIZE as usize) * 4)),
+    ]
+}
+
+fn main() {
+    let suite = Suite::new("churn");
+    let traces = traces();
+    let names: Vec<&str> =
+        vec!["pool", "pool-eager", "pool-ptrlist", "malloc", "firstfit", "buddy"];
+
+    let mut tab = ReportTable::new(
+        "A2: ns/op by access pattern × allocator (64B requests)",
+        "pattern",
+        traces.iter().map(|(n, _)| n.to_string()).collect(),
+        names.iter().map(|s| s.to_string()).collect(),
+        "ns per op (median of 9 replays)",
+    );
+
+    for (ri, (tname, trace)) in traces.iter().enumerate() {
+        for (ci, alloc) in allocators(trace.peak_live).iter_mut().enumerate() {
+            let bench_name = format!("{tname}/{}", names[ci]);
+            if !suite.enabled(&bench_name) {
+                continue;
+            }
+            // Warm twice, then take the median of 9 replays.
+            replay(trace, alloc.as_mut());
+            replay(trace, alloc.as_mut());
+            let mut per_op: Vec<f64> =
+                (0..9).map(|_| replay(trace, alloc.as_mut()).ns_per_op()).collect();
+            per_op.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let med = per_op[per_op.len() / 2];
+            println!("{bench_name:<24} {med:>8.1} ns/op");
+            tab.set(ri, ci, med);
+        }
+    }
+
+    // Derived: pool speedup per pattern.
+    println!("\n== A2 summary (pool vs malloc) ==");
+    for (ri, (tname, _)) in traces.iter().enumerate() {
+        let pool = tab.cells[ri][0];
+        let malloc = tab.cells[ri][3];
+        if !pool.is_nan() && !malloc.is_nan() {
+            println!("  {tname:<8} {:>5.1}x", malloc / pool);
+        }
+    }
+
+    write_markdown("ablate_churn", &[], &[tab.clone()]).unwrap();
+    write_csv("ablate_churn", &[tab]).unwrap();
+    println!("wrote bench_out/ablate_churn.md (+csv)");
+}

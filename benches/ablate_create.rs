@@ -1,0 +1,100 @@
+//! **Ablation A1** — the "no loops" contribution in isolation: pool
+//! creation cost vs block count, lazy (paper) against the eager-init
+//! baseline [6][7] and the pointer free-list pool [14].
+//!
+//! Expectation: lazy is O(1) — flat as n grows; both eager variants are
+//! O(n). Also measures §VII resizing (grow is O(1)) vs re-creating.
+//!
+//! Run: `cargo bench --bench ablate_create`
+
+use fastpool::bench_harness::{write_csv, write_markdown, ReportTable, Suite};
+use fastpool::pool::{EagerPool, FixedPool, PtrFreeListPool, ResizablePool};
+use fastpool::util::black_box;
+
+const NS: &[u32] = &[1 << 10, 1 << 12, 1 << 14, 1 << 16, 1 << 18, 1 << 20, 1 << 22];
+const BLOCK: usize = 64;
+
+fn main() {
+    let mut suite = Suite::new("create");
+    suite.bencher = fastpool::bench_harness::Bencher::new(
+        fastpool::bench_harness::runner::BenchConfig {
+            warmup_ns: 5_000_000,
+            sample_target_ns: 10_000_000,
+            samples: 10,
+            max_total_iters: u64::MAX,
+        },
+    );
+
+    let rows: Vec<String> = NS.iter().map(|n| n.to_string()).collect();
+    let cols = vec![
+        "lazy (paper)".to_string(),
+        "eager-index".to_string(),
+        "eager-ptrlist".to_string(),
+    ];
+    let mut tab = ReportTable::new(
+        "A1: pool creation cost vs blocks (64B blocks)",
+        "blocks",
+        rows,
+        cols,
+        "µs per create+destroy (median)",
+    );
+
+    for (ri, &n) in NS.iter().enumerate() {
+        let r_lazy = suite.bencher.bench(format!("create/lazy/n={n}"), || {
+            black_box(FixedPool::with_blocks(BLOCK, n));
+        });
+        println!("{}", r_lazy.one_line());
+        tab.set(ri, 0, r_lazy.summary.median / 1e3);
+
+        // Eager variants get too slow for huge n; skip the top sizes to
+        // keep the bench bounded (the trend is unambiguous by then).
+        if n <= 1 << 20 {
+            let r_eager = suite.bencher.bench(format!("create/eager/n={n}"), || {
+                black_box(EagerPool::with_blocks(BLOCK, n));
+            });
+            println!("{}", r_eager.one_line());
+            tab.set(ri, 1, r_eager.summary.median / 1e3);
+
+            let r_ptr = suite.bencher.bench(format!("create/ptrlist/n={n}"), || {
+                black_box(PtrFreeListPool::with_blocks(BLOCK, n));
+            });
+            println!("{}", r_ptr.one_line());
+            tab.set(ri, 2, r_ptr.summary.median / 1e3);
+        }
+    }
+
+    // §VII resizing: grow in place vs destroy+recreate at double size.
+    let mut tab2 = ReportTable::new(
+        "A6-lite: grow-in-place (§VII) vs recreate (128k → 256k blocks)",
+        "strategy",
+        vec!["grow (member update)".into(), "destroy + recreate".into()],
+        vec!["cost".into()],
+        "µs (median)",
+    );
+    {
+        let n = 1 << 17;
+        let r_grow = suite.bencher.bench("resize/grow", || {
+            let mut p = ResizablePool::new(BLOCK, n, 2 * n);
+            black_box(p.allocate());
+            p.grow(2 * n);
+            black_box(p.num_free());
+        });
+        println!("{}", r_grow.one_line());
+        let r_recreate = suite.bencher.bench("resize/recreate", || {
+            let p = FixedPool::with_blocks(BLOCK, n);
+            drop(p);
+            let p2 = FixedPool::with_blocks(BLOCK, 2 * n);
+            black_box(p2.num_free());
+        });
+        println!("{}", r_recreate.one_line());
+        tab2.set(0, 0, r_grow.summary.median / 1e3);
+        tab2.set(1, 0, r_recreate.summary.median / 1e3);
+    }
+
+    println!("\n== A1 summary ==");
+    println!("lazy creation stays flat (O(1)); eager variants grow linearly (O(n)).");
+    let tables = [tab, tab2];
+    write_markdown("ablate_create", &[], &tables).unwrap();
+    write_csv("ablate_create", &tables).unwrap();
+    println!("wrote bench_out/ablate_create.md (+csv)");
+}

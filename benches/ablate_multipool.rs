@@ -1,0 +1,141 @@
+//! **Ablation A5** — the §V ad-hoc hybrid: mixed-size workloads through
+//! `MultiPool` (size classes + system fallback) vs straight malloc.
+//! Reports speed, hit rate, and internal waste — the §VI trade-off.
+//!
+//! Run: `cargo bench --bench ablate_multipool`
+
+use fastpool::bench_harness::{write_csv, write_markdown, ReportTable, Suite};
+use fastpool::pool::{MultiPool, MultiPoolConfig};
+use fastpool::util::{Rng, Timer, Zipf};
+
+const OPS: usize = 400_000;
+const LIVE_TARGET: usize = 1024;
+
+#[derive(Clone, Copy)]
+enum Mix {
+    /// Zipf-distributed power-of-two-ish sizes, 8..2048 (asset-like).
+    Zipf,
+    /// Uniform 1..1024 (worst case for class rounding).
+    Uniform,
+    /// 90% exactly 64B, 10% uniform large (packet-like).
+    Bimodal,
+}
+
+fn sample_size(mix: Mix, rng: &mut Rng, zipf: &Zipf) -> usize {
+    match mix {
+        Mix::Zipf => 8usize << zipf.sample(rng),
+        Mix::Uniform => 1 + rng.gen_usize(0, 1024),
+        Mix::Bimodal => {
+            if rng.gen_bool(0.9) {
+                64
+            } else {
+                2048 + rng.gen_usize(0, 4096)
+            }
+        }
+    }
+}
+
+fn run_multipool(mix: Mix) -> (f64, f64, u64) {
+    let mut mp = MultiPool::new(MultiPoolConfig {
+        min_class: 16,
+        max_class: 4096,
+        blocks_per_class: LIVE_TARGET as u32 * 2,
+        system_fallback: true,
+    });
+    let zipf = Zipf::new(9, 1.1);
+    let mut rng = Rng::new(5);
+    let mut live = Vec::with_capacity(LIVE_TARGET);
+    let t = Timer::start();
+    for _ in 0..OPS {
+        if live.is_empty() || (live.len() < LIVE_TARGET && rng.gen_bool(0.5)) {
+            let size = sample_size(mix, &mut rng, &zipf);
+            if let Some((p, o)) = mp.allocate(size) {
+                live.push((p, size, o));
+            }
+        } else {
+            let i = rng.gen_usize(0, live.len());
+            let (p, size, o) = live.swap_remove(i);
+            unsafe { mp.deallocate(p, size, o) };
+        }
+    }
+    let ns = t.elapsed_ns() as f64 / OPS as f64;
+    for (p, size, o) in live.drain(..) {
+        unsafe { mp.deallocate(p, size, o) };
+    }
+    (ns, mp.pool_hit_rate(), mp.total_internal_waste())
+}
+
+fn run_malloc(mix: Mix) -> f64 {
+    let zipf = Zipf::new(9, 1.1);
+    let mut rng = Rng::new(5);
+    let mut live: Vec<(*mut u8, usize)> = Vec::with_capacity(LIVE_TARGET);
+    let t = Timer::start();
+    for _ in 0..OPS {
+        if live.is_empty() || (live.len() < LIVE_TARGET && rng.gen_bool(0.5)) {
+            let size = sample_size(mix, &mut rng, &zipf);
+            let p = unsafe { libc::malloc(size) } as *mut u8;
+            live.push((p, size));
+        } else {
+            let i = rng.gen_usize(0, live.len());
+            let (p, _) = live.swap_remove(i);
+            unsafe { libc::free(p as *mut libc::c_void) };
+        }
+    }
+    let ns = t.elapsed_ns() as f64 / OPS as f64;
+    for (p, _) in live.drain(..) {
+        unsafe { libc::free(p as *mut libc::c_void) };
+    }
+    ns
+}
+
+extern crate libc;
+
+fn main() {
+    let suite = Suite::new("multipool");
+    let mixes = [("zipf", Mix::Zipf), ("uniform", Mix::Uniform), ("bimodal", Mix::Bimodal)];
+    let mut tab = ReportTable::new(
+        "A5: MultiPool (size classes + fallback) vs malloc on mixed sizes",
+        "size mix",
+        mixes.iter().map(|(n, _)| n.to_string()).collect(),
+        vec![
+            "multipool ns/op".into(),
+            "malloc ns/op".into(),
+            "speedup".into(),
+            "hit rate %".into(),
+            "waste MiB".into(),
+        ],
+        "median of 5 runs",
+    );
+
+    for (ri, (name, mix)) in mixes.iter().enumerate() {
+        if !suite.enabled(name) {
+            continue;
+        }
+        let med = |f: &dyn Fn() -> f64| {
+            let mut xs: Vec<f64> = (0..5).map(|_| f()).collect();
+            xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            xs[2]
+        };
+        let (mp_ns, hit, waste) = {
+            let mut runs: Vec<(f64, f64, u64)> = (0..5).map(|_| run_multipool(*mix)).collect();
+            runs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            runs[2]
+        };
+        let malloc_ns = med(&|| run_malloc(*mix));
+        println!(
+            "{name:<8} multipool {mp_ns:>6.1} ns | malloc {malloc_ns:>6.1} ns | {:>4.1}x | hit {:>5.1}% | waste {:.1} MiB",
+            malloc_ns / mp_ns,
+            hit * 100.0,
+            waste as f64 / (1 << 20) as f64
+        );
+        tab.set(ri, 0, mp_ns);
+        tab.set(ri, 1, malloc_ns);
+        tab.set(ri, 2, malloc_ns / mp_ns);
+        tab.set(ri, 3, hit * 100.0);
+        tab.set(ri, 4, waste as f64 / (1 << 20) as f64);
+    }
+
+    write_markdown("ablate_multipool", &[], &[tab.clone()]).unwrap();
+    write_csv("ablate_multipool", &[tab]).unwrap();
+    println!("wrote bench_out/ablate_multipool.md (+csv)");
+}

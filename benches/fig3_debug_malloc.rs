@@ -1,0 +1,156 @@
+//! **Figure 3 reproduction** — "Release build with full optimization
+//! running within the debugger; system malloc only" (E1 in DESIGN.md).
+//!
+//! The debugger-attached Windows CRT heap is simulated by
+//! `DebugHeapAllocator` (guard bands + fills + allocation registry +
+//! full-heap verification sweeps — exactly the cost drivers of the debug
+//! CRT; see DESIGN.md substitution table). Two levels are reported:
+//!
+//! * `malloc-debug`    — guards/fills/registry only (≈ debug build)
+//! * `malloc-debugger` — plus a heap sweep on every alloc AND free
+//!                       (≈ debugger attached), the paper's ~100–1000×.
+//!
+//! Counts are capped lower than Figure 4: the sweep makes each cycle
+//! O(n²), which is precisely the point the figure makes.
+//!
+//! Run: `cargo bench --bench fig3_debug_malloc`
+
+use fastpool::alloc::{
+    AllocHandle, BenchAllocator, DebugHeapAllocator, DebugLevel, PoolAllocator,
+    SystemAllocator,
+};
+use fastpool::bench_harness::{write_csv, write_markdown, BenchResult, ReportTable, Suite};
+use fastpool::util::black_box;
+
+const SIZES: &[u32] = &[16, 64, 256, 1024, 4096];
+const COUNTS: &[u32] = &[256, 512, 1_024, 2_048, 4_096];
+
+fn run_cycle(a: &mut dyn BenchAllocator, n: u32, size: u32, held: &mut Vec<AllocHandle>) {
+    for _ in 0..n {
+        match a.alloc(size as usize) {
+            Some(h) => held.push(h),
+            None => break,
+        }
+    }
+    for h in held.drain(..) {
+        a.free(h);
+    }
+}
+
+fn main() {
+    let suite = Suite::new("fig3");
+    let bencher = fastpool::bench_harness::Bencher::new(
+        fastpool::bench_harness::runner::BenchConfig {
+            warmup_ns: 5_000_000,
+            sample_target_ns: 40_000_000,
+            samples: 5,
+            max_total_iters: u64::MAX,
+        },
+    );
+
+    let col_labels: Vec<String> = SIZES.iter().map(|s| format!("{s}B")).collect();
+    let row_labels: Vec<String> = COUNTS.iter().map(|c| c.to_string()).collect();
+    let mut tab_dbg = ReportTable::new(
+        "Figure 3: malloc 'within the debugger' (simulated debug heap, full sweeps)",
+        "allocations",
+        row_labels.clone(),
+        col_labels.clone(),
+        "ms per cycle (median)",
+    );
+    let mut tab_light = ReportTable::new(
+        "Debug build (guards+fills+registry, no sweeps)",
+        "allocations",
+        row_labels.clone(),
+        col_labels.clone(),
+        "ms per cycle (median)",
+    );
+    let mut tab_ratio = ReportTable::new(
+        "Slowdown: debugger-malloc / release-malloc (paper: 'up to 100x'…'1000x')",
+        "allocations",
+        row_labels,
+        col_labels,
+        "x slower than release malloc",
+    );
+    let mut results: Vec<BenchResult> = Vec::new();
+
+    for (ci, &size) in SIZES.iter().enumerate() {
+        for (ri, &n) in COUNTS.iter().enumerate() {
+            let name = format!("debugger/n={n}/size={size}");
+            if !suite.enabled(&name) {
+                continue;
+            }
+            let mut held = Vec::with_capacity(n as usize);
+
+            // Release malloc baseline for the ratio.
+            let mut rel = SystemAllocator::new();
+            let rr = bencher.bench_with_elements(
+                &format!("malloc-release/n={n}/size={size}"),
+                n as u64,
+                &mut || {
+                    run_cycle(&mut rel, n, size, &mut held);
+                    black_box(&mut held);
+                },
+            );
+            println!("{}", rr.one_line());
+
+            let mut light = DebugHeapAllocator::new(DebugLevel::Light);
+            let rl = bencher.bench_with_elements(
+                &format!("malloc-debug/n={n}/size={size}"),
+                n as u64,
+                &mut || {
+                    run_cycle(&mut light, n, size, &mut held);
+                    black_box(&mut held);
+                },
+            );
+            println!("{}", rl.one_line());
+
+            let mut dbg = DebugHeapAllocator::new(DebugLevel::Full);
+            let rd = bencher.bench_with_elements(&name, n as u64, &mut || {
+                run_cycle(&mut dbg, n, size, &mut held);
+                black_box(&mut held);
+            });
+            println!("{}", rd.one_line());
+
+            tab_light.set(ri, ci, rl.summary.median / 1e6);
+            tab_dbg.set(ri, ci, rd.summary.median / 1e6);
+            tab_ratio.set(ri, ci, rd.summary.median / rr.summary.median);
+            results.push(rr);
+            results.push(rl);
+            results.push(rd);
+        }
+    }
+
+    // Pool-vs-debugger headline (the paper's "thousand times faster").
+    {
+        let n = 2_048u32;
+        let size = 64u32;
+        let mut held = Vec::with_capacity(n as usize);
+        let mut pool = PoolAllocator::new(size as usize, n);
+        let rp = bencher.bench_with_elements("pool/n=2048/size=64", n as u64, &mut || {
+            run_cycle(&mut pool, n, size, &mut held);
+            black_box(&mut held);
+        });
+        let mut dbg = DebugHeapAllocator::new(DebugLevel::Full);
+        let rd = bencher.bench_with_elements(
+            "debugger-malloc/n=2048/size=64",
+            n as u64,
+            &mut || {
+                run_cycle(&mut dbg, n, size, &mut held);
+                black_box(&mut held);
+            },
+        );
+        println!("\n== Figure 3 headline ==");
+        println!(
+            "pool vs debugger-malloc at n=2048/64B: {:.0}x faster",
+            rd.summary.median / rp.summary.median
+        );
+        println!("(paper: \"a thousand times faster when running within a debug environment\")");
+        results.push(rp);
+        results.push(rd);
+    }
+
+    let tables = [tab_dbg, tab_light, tab_ratio];
+    write_markdown("fig3_debug_malloc", &results, &tables).unwrap();
+    write_csv("fig3_debug_malloc", &tables).unwrap();
+    println!("\nwrote bench_out/fig3_debug_malloc.md (+csv)");
+}

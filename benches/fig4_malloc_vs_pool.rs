@@ -1,0 +1,130 @@
+//! **Figure 4 reproduction** — "Running outside the debugger – standalone:
+//! (a) system malloc and, (b) custom pool", plus the §VIII headline ratio
+//! table (E2–E4 in DESIGN.md).
+//!
+//! Each line of the paper's figure is a fixed allocation size; the x-axis
+//! is the number of allocations; the y-axis total time. We sweep the same
+//! grid with the same inner loop (allocate n chunks, free them all),
+//! report median total ms per cell for malloc and pool, and the derived
+//! speedup table. Output: bench_out/fig4*.{md,csv}.
+//!
+//! Run: `cargo bench --bench fig4_malloc_vs_pool` (optionally with a
+//! substring filter argument).
+
+use fastpool::alloc::{AllocHandle, BenchAllocator, PoolAllocator, SystemAllocator};
+use fastpool::bench_harness::{write_csv, write_markdown, BenchResult, ReportTable, Suite};
+use fastpool::util::black_box;
+
+const SIZES: &[u32] = &[16, 32, 64, 128, 256, 512, 1024, 4096];
+const COUNTS: &[u32] = &[1_000, 2_000, 4_000, 8_000, 16_000, 32_000, 64_000];
+
+fn labels_counts() -> Vec<String> {
+    COUNTS.iter().map(|c| c.to_string()).collect()
+}
+
+fn labels_sizes() -> Vec<String> {
+    SIZES.iter().map(|s| format!("{s}B")).collect()
+}
+
+/// The paper's inner loop: allocate `n` chunks of `size`, then free all.
+/// Returns handles vec reused across iterations to avoid re-allocating the
+/// bookkeeping array inside the timed region.
+fn run_cycle(a: &mut dyn BenchAllocator, n: u32, size: u32, held: &mut Vec<AllocHandle>) {
+    for _ in 0..n {
+        match a.alloc(size as usize) {
+            Some(h) => held.push(h),
+            None => break,
+        }
+    }
+    for h in held.drain(..) {
+        a.free(h);
+    }
+}
+
+fn main() {
+    let mut suite = Suite::new("fig4");
+    // Fewer samples: each iteration is a full n-alloc cycle.
+    suite.bencher = fastpool::bench_harness::Bencher::new(
+        fastpool::bench_harness::runner::BenchConfig {
+            warmup_ns: 20_000_000,
+            sample_target_ns: 25_000_000,
+            samples: 12,
+            max_total_iters: u64::MAX,
+        },
+    );
+
+    let mut tab_malloc = ReportTable::new(
+        "Figure 4(a): system malloc, standalone (total ms per cycle)",
+        "allocations",
+        labels_counts(),
+        labels_sizes(),
+        "ms per alloc-all-free-all cycle (median)",
+    );
+    let mut tab_pool = ReportTable::new(
+        "Figure 4(b): fixed-size pool (total ms per cycle)",
+        "allocations",
+        labels_counts(),
+        labels_sizes(),
+        "ms per alloc-all-free-all cycle (median)",
+    );
+    let mut tab_speedup = ReportTable::new(
+        "§VIII headline: malloc time / pool time",
+        "allocations",
+        labels_counts(),
+        labels_sizes(),
+        "x (higher = pool faster)",
+    );
+    let mut results: Vec<BenchResult> = Vec::new();
+
+    for (ci, &size) in SIZES.iter().enumerate() {
+        for (ri, &n) in COUNTS.iter().enumerate() {
+            let name_m = format!("malloc/n={n}/size={size}");
+            let name_p = format!("pool/n={n}/size={size}");
+            if !suite.enabled(&name_m) && !suite.enabled(&name_p) {
+                continue;
+            }
+            let mut held = Vec::with_capacity(n as usize);
+
+            let mut malloc = SystemAllocator::new();
+            let rm = suite.bencher.bench_with_elements(&name_m, n as u64, &mut || {
+                run_cycle(&mut malloc, n, size, &mut held);
+                black_box(&mut held);
+            });
+            println!("{}", rm.one_line());
+
+            let mut pool = PoolAllocator::new(size as usize, n);
+            let rp = suite.bencher.bench_with_elements(&name_p, n as u64, &mut || {
+                run_cycle(&mut pool, n, size, &mut held);
+                black_box(&mut held);
+            });
+            println!("{}", rp.one_line());
+
+            tab_malloc.set(ri, ci, rm.summary.median / 1e6);
+            tab_pool.set(ri, ci, rp.summary.median / 1e6);
+            tab_speedup.set(ri, ci, rm.summary.median / rp.summary.median);
+            results.push(rm);
+            results.push(rp);
+        }
+    }
+
+    // Headline summary (geometric mean of speedups over the grid).
+    let ratios: Vec<f64> = tab_speedup
+        .cells
+        .iter()
+        .flatten()
+        .copied()
+        .filter(|v| !v.is_nan())
+        .collect();
+    if !ratios.is_empty() {
+        let gm = fastpool::util::geomean(&ratios);
+        let max = ratios.iter().cloned().fold(f64::MIN, f64::max);
+        println!("\n== Figure 4 summary ==");
+        println!("pool vs malloc speedup: geomean {gm:.1}x, max {max:.1}x over the grid");
+        println!("(paper: \"ten times faster than the general system allocator\")");
+    }
+
+    let tables = [tab_malloc, tab_pool, tab_speedup];
+    write_markdown("fig4_malloc_vs_pool", &results, &tables).unwrap();
+    write_csv("fig4_malloc_vs_pool", &tables).unwrap();
+    println!("\nwrote bench_out/fig4_malloc_vs_pool.md (+csv)");
+}

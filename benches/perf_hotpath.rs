@@ -1,0 +1,128 @@
+//! §Perf microbench: the pool hot path in isolation, for the optimization
+//! loop (EXPERIMENTS.md §Perf). Three access shapes:
+//!
+//! * pair      — alloc;free (head stays hot: best case)
+//! * batch64   — alloc 64; free 64 LIFO (L1-resident working set)
+//! * churn1k   — random replace in a 1k live set (cache-realistic)
+//!
+//! Compares the paper pool against malloc and the index allocator used by
+//! the KV manager.
+//!
+//! Run: `cargo bench --bench perf_hotpath`
+
+use fastpool::kvcache::BlockAllocator;
+use fastpool::pool::FixedPool;
+use fastpool::util::{black_box, Rng, Timer};
+
+extern crate libc;
+
+const BLOCK: usize = 64;
+
+fn median(mut xs: Vec<f64>) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs[xs.len() / 2]
+}
+
+fn bench<F: FnMut() -> f64>(name: &str, mut f: F) -> f64 {
+    let m = median((0..9).map(|_| f()).collect());
+    println!("{name:<28} {m:>8.2} ns/op");
+    m
+}
+
+fn main() {
+    const N: usize = 1_000_000;
+
+    println!("-- pair (alloc;free, hot head) --");
+    let pool_pair = bench("pool pair", || {
+        let mut p = FixedPool::with_blocks(BLOCK, 1024);
+        let t = Timer::start();
+        for _ in 0..N {
+            let a = p.allocate().unwrap();
+            unsafe { p.deallocate(black_box(a)) };
+        }
+        t.elapsed_ns() as f64 / N as f64
+    });
+    let malloc_pair = bench("malloc pair", || {
+        let t = Timer::start();
+        for _ in 0..N {
+            let a = unsafe { libc::malloc(BLOCK) };
+            unsafe { libc::free(black_box(a)) };
+        }
+        t.elapsed_ns() as f64 / N as f64
+    });
+    bench("blockalloc pair (index)", || {
+        let mut p = BlockAllocator::new(1024);
+        let t = Timer::start();
+        for _ in 0..N {
+            let a = p.allocate().unwrap();
+            p.free(black_box(a));
+        }
+        t.elapsed_ns() as f64 / N as f64
+    });
+
+    println!("-- batch64 (alloc 64, free 64 LIFO) --");
+    bench("pool batch64", || {
+        let mut p = FixedPool::with_blocks(BLOCK, 128);
+        let mut held = Vec::with_capacity(64);
+        let t = Timer::start();
+        for _ in 0..N / 64 {
+            for _ in 0..64 {
+                held.push(p.allocate().unwrap());
+            }
+            while let Some(a) = held.pop() {
+                unsafe { p.deallocate(a) };
+            }
+        }
+        t.elapsed_ns() as f64 / N as f64
+    });
+    bench("malloc batch64", || {
+        let mut held: Vec<*mut libc::c_void> = Vec::with_capacity(64);
+        let t = Timer::start();
+        for _ in 0..N / 64 {
+            for _ in 0..64 {
+                held.push(unsafe { libc::malloc(BLOCK) });
+            }
+            while let Some(a) = held.pop() {
+                unsafe { libc::free(a) };
+            }
+        }
+        t.elapsed_ns() as f64 / N as f64
+    });
+
+    println!("-- churn1k (random replace in 1k live set) --");
+    let pool_churn = bench("pool churn1k", || {
+        let mut p = FixedPool::with_blocks(BLOCK, 2048);
+        let mut rng = Rng::new(1);
+        let mut live: Vec<_> = (0..1024).map(|_| p.allocate().unwrap()).collect();
+        let t = Timer::start();
+        for _ in 0..N {
+            let i = rng.gen_usize(0, live.len());
+            unsafe { p.deallocate(live[i]) };
+            live[i] = p.allocate().unwrap();
+        }
+        let ns = t.elapsed_ns() as f64 / N as f64;
+        for a in live {
+            unsafe { p.deallocate(a) };
+        }
+        ns
+    });
+    let malloc_churn = bench("malloc churn1k", || {
+        let mut rng = Rng::new(1);
+        let mut live: Vec<*mut libc::c_void> =
+            (0..1024).map(|_| unsafe { libc::malloc(BLOCK) }).collect();
+        let t = Timer::start();
+        for _ in 0..N {
+            let i = rng.gen_usize(0, live.len());
+            unsafe { libc::free(live[i]) };
+            live[i] = unsafe { libc::malloc(BLOCK) };
+        }
+        let ns = t.elapsed_ns() as f64 / N as f64;
+        for a in live {
+            unsafe { libc::free(a) };
+        }
+        ns
+    });
+
+    println!("\npair speedup vs malloc:  {:.2}x", malloc_pair / pool_pair);
+    println!("churn speedup vs malloc: {:.2}x", malloc_churn / pool_churn);
+}

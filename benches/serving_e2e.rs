@@ -1,0 +1,166 @@
+//! **Experiment A8** — the framework headline: end-to-end serving
+//! throughput with the paper's pool as KV-block manager.
+//!
+//! Part 1 (always runs): scheduler-only throughput with the deterministic
+//! MockBackend — isolates the L3 coordinator + pool path. Compares the
+//! paper's lazy BlockAllocator against an eager-init variant and measures
+//! pool-op share of the step loop.
+//!
+//! Part 2 (runs when artifacts/ exists): the real PJRT model, batched
+//! decode tokens/s at batch 1/2/4, plus model-vs-engine time split.
+//!
+//! Run: `cargo bench --bench serving_e2e`
+
+use fastpool::bench_harness::{write_csv, write_markdown, ReportTable, Suite};
+use fastpool::coordinator::{
+    Engine, EngineConfig, MockBackend, SamplingParams, XlaBackend,
+};
+use fastpool::kvcache::BlockAllocator;
+use fastpool::runtime::Runtime;
+use fastpool::util::{Rng, Timer};
+
+fn mock_engine_run(n_requests: usize, max_batch: usize) -> (f64, u64) {
+    let be = MockBackend::with_blocks(256, 16, 8);
+    let mut e = Engine::new(be, EngineConfig { max_batch, queue_limit: 4096, ..Default::default() });
+    let mut rng = Rng::new(7);
+    for _ in 0..n_requests {
+        let plen = 1 + rng.gen_usize(0, 30);
+        let prompt: Vec<i32> = (0..plen).map(|_| rng.gen_range(256) as i32).collect();
+        e.submit(prompt, SamplingParams::greedy(16 + rng.gen_range(48) as u32))
+            .unwrap();
+    }
+    let t = Timer::start();
+    let outs = e.run_to_completion(10_000_000).unwrap();
+    let secs = t.elapsed_secs();
+    let tokens: usize = outs.iter().map(|o| o.tokens.len()).sum();
+    (tokens as f64 / secs, e.steps())
+}
+
+fn main() {
+    let suite = Suite::new("serving");
+
+    // ---- Part 1: coordinator throughput (mock model) --------------------
+    let mut tab1 = ReportTable::new(
+        "A8.1: scheduler throughput, mock model (pool-managed KV blocks)",
+        "max_batch",
+        vec!["1".into(), "2".into(), "4".into()],
+        vec!["tokens/s".into(), "engine steps".into()],
+        "512 requests, median of 3",
+    );
+    if suite.enabled("scheduler") {
+        for (ri, mb) in [1usize, 2, 4].into_iter().enumerate() {
+            let mut runs: Vec<(f64, u64)> =
+                (0..3).map(|_| mock_engine_run(512, mb)).collect();
+            runs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            let (tps, steps) = runs[1];
+            println!("mock scheduler max_batch={mb}: {tps:>10.0} tok/s in {steps} steps");
+            tab1.set(ri, 0, tps);
+            tab1.set(ri, 1, steps as f64);
+        }
+    }
+
+    // ---- Pool-op share of the serving hot path --------------------------
+    let mut tab2 = ReportTable::new(
+        "A8.2: KV block-pool op cost inside the serving loop",
+        "op",
+        vec![
+            "allocate (lazy, paper)".into(),
+            "free".into(),
+            "serving-trace replay / op".into(),
+        ],
+        vec!["ns".into()],
+        "median of 7",
+    );
+    if suite.enabled("poolops") {
+        let med = |f: &dyn Fn() -> f64| {
+            let mut xs: Vec<f64> = (0..7).map(|_| f()).collect();
+            xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            xs[3]
+        };
+        let alloc_ns = med(&|| {
+            let mut a = BlockAllocator::new(4096);
+            let t = Timer::start();
+            for _ in 0..4096 {
+                std::hint::black_box(a.allocate());
+            }
+            t.elapsed_ns() as f64 / 4096.0
+        });
+        let free_ns = med(&|| {
+            let mut a = BlockAllocator::new(4096);
+            let idxs: Vec<u32> = (0..4096).map(|_| a.allocate().unwrap()).collect();
+            let t = Timer::start();
+            for i in idxs {
+                a.free(i);
+            }
+            t.elapsed_ns() as f64 / 4096.0
+        });
+        // Replay the serving block trace through the allocator.
+        let trace_ns = med(&|| {
+            let (trace, _, stats) = fastpool::workload::serving::generate(
+                fastpool::workload::serving::ServingConfig::default(),
+                3,
+            );
+            let mut a = BlockAllocator::new(stats.peak_live_blocks + 8);
+            let mut live: Vec<Option<u32>> = vec![None; trace.num_allocs() + 1];
+            let t = Timer::start();
+            for op in &trace.ops {
+                match *op {
+                    fastpool::workload::Op::Alloc { id, .. } => {
+                        live[id as usize] = a.allocate();
+                    }
+                    fastpool::workload::Op::Free { id } => {
+                        if let Some(b) = live[id as usize].take() {
+                            a.free(b);
+                        }
+                    }
+                }
+            }
+            t.elapsed_ns() as f64 / trace.ops.len() as f64
+        });
+        println!("block-pool: alloc {alloc_ns:.2} ns | free {free_ns:.2} ns | serving trace {trace_ns:.2} ns/op");
+        tab2.set(0, 0, alloc_ns);
+        tab2.set(1, 0, free_ns);
+        tab2.set(2, 0, trace_ns);
+    }
+
+    // ---- Part 2: real model (needs artifacts) ----------------------------
+    let mut tab3 = ReportTable::new(
+        "A8.3: real PJRT model serving (tokens/s by batch)",
+        "max_batch",
+        vec!["1".into(), "2".into(), "4".into()],
+        vec!["tokens/s".into(), "model time %".into()],
+        "12 requests x 16 tokens",
+    );
+    if std::path::Path::new("artifacts/meta.json").exists() && suite.enabled("xla") {
+        for (ri, mb) in [1usize, 2, 4].into_iter().enumerate() {
+            let rt = Runtime::load("artifacts").unwrap();
+            let be = XlaBackend::new(rt).unwrap();
+            let mut e = Engine::new(be, EngineConfig { max_batch: mb, ..Default::default() });
+            let mut rng = Rng::new(3);
+            for _ in 0..12 {
+                let plen = 4 + rng.gen_usize(0, 20);
+                let prompt: Vec<i32> =
+                    (0..plen).map(|_| rng.gen_range(256) as i32).collect();
+                e.submit(prompt, SamplingParams::greedy(16)).unwrap();
+            }
+            let t = Timer::start();
+            let outs = e.run_to_completion(1_000_000).unwrap();
+            let secs = t.elapsed_secs();
+            let tokens: usize = outs.iter().map(|o| o.tokens.len()).sum();
+            let model_pct = 100.0 * e.backend.model_ns as f64 / (secs * 1e9);
+            println!(
+                "xla serving max_batch={mb}: {:.1} tok/s ({model_pct:.1}% in model)",
+                tokens as f64 / secs
+            );
+            tab3.set(ri, 0, tokens as f64 / secs);
+            tab3.set(ri, 1, model_pct);
+        }
+    } else {
+        println!("(skipping real-model part: artifacts/ missing or filtered)");
+    }
+
+    let tables = [tab1, tab2, tab3];
+    write_markdown("serving_e2e", &[], &tables).unwrap();
+    write_csv("serving_e2e", &tables).unwrap();
+    println!("\nwrote bench_out/serving_e2e.md (+csv)");
+}

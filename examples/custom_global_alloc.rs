@@ -1,0 +1,47 @@
+//! §V "overloading new and delete": the pool family as the program's
+//! `#[global_allocator]`. Every `Box`, `Vec`, `String` under 4 KiB in this
+//! process is served by lock-free fixed pools with system fallback.
+//!
+//! ```bash
+//! cargo run --release --example custom_global_alloc
+//! ```
+
+use fastpool::pool::PooledGlobalAlloc;
+use fastpool::util::Timer;
+
+#[global_allocator]
+static GLOBAL: PooledGlobalAlloc = PooledGlobalAlloc::new(131_072);
+
+fn main() {
+    // Ordinary Rust code — no pool API in sight.
+    let t = Timer::start();
+    let mut strings: Vec<String> = Vec::new();
+    for i in 0..100_000 {
+        strings.push(format!("request-{i}"));
+        if i % 3 == 0 {
+            strings.swap_remove(i / 3 % strings.len().max(1));
+        }
+    }
+    let mut maps = Vec::new();
+    for i in 0..1000 {
+        let mut m = std::collections::HashMap::new();
+        for j in 0..50 {
+            m.insert(j, vec![i as u8; 100]);
+        }
+        maps.push(m);
+    }
+    drop(maps);
+    let total = strings.iter().map(|s| s.len()).sum::<usize>();
+    let elapsed = t.elapsed_secs();
+
+    let (pool_hits, system) = GLOBAL.stats();
+    println!("did ordinary Vec/String/HashMap work: {total} bytes live, {elapsed:.3}s");
+    println!("global allocator stats:");
+    println!("  served from pools:  {pool_hits}");
+    println!("  system fallbacks:   {system}");
+    println!(
+        "  pool share:         {:.1}%",
+        100.0 * pool_hits as f64 / (pool_hits + system).max(1) as f64
+    );
+    assert!(pool_hits > system, "pools should serve the majority of small allocs");
+}

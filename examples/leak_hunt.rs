@@ -1,0 +1,91 @@
+//! §IV.B in action: hunting leaks, overruns, and double frees with
+//! `GuardedPool` — then measuring what the checks cost (the debug/release
+//! trade-off the paper quantifies with Figures 3 vs 4).
+//!
+//! ```bash
+//! cargo run --release --example leak_hunt
+//! ```
+
+use fastpool::pool::{FixedPool, GuardConfig, GuardError, GuardedPool};
+use fastpool::util::{fmt_ns, Timer};
+
+fn main() {
+    println!("=== 1. leak report with tags (\"the line number of the allocation\") ===");
+    let mut pool = GuardedPool::with_blocks(64, 32, GuardConfig::default());
+    let _a = pool.allocate("asset_loader.rs:101").unwrap();
+    let b = pool.allocate("particle_system.rs:55").unwrap();
+    let _c = pool.allocate("net/session.rs:310").unwrap();
+    pool.deallocate(b).unwrap();
+    println!("live allocations at shutdown (leaks):");
+    for leak in pool.leaks() {
+        println!("  block {:>3}  seq {:>3}  tag {}", leak.index, leak.seq, leak.tag);
+    }
+
+    println!("\n=== 2. buffer overrun caught by the post-canary ===");
+    let mut pool = GuardedPool::with_blocks(16, 8, GuardConfig::default());
+    let p = pool.allocate("overrun.rs:1").unwrap();
+    unsafe {
+        // Write 17 bytes into a 16-byte block — classic off-by-one.
+        std::ptr::write_bytes(p.as_ptr(), 0xAB, 17);
+    }
+    match pool.deallocate(p) {
+        Err(GuardError::PostCanaryClobbered { index, found }) => {
+            println!("  caught: block {index} post-canary = {found:#018x}");
+        }
+        other => println!("  unexpected: {other:?}"),
+    }
+
+    println!("\n=== 3. double free caught by the allocation bitmap ===");
+    let mut pool = GuardedPool::with_blocks(16, 8, GuardConfig::default());
+    let p = pool.allocate("df.rs:2").unwrap();
+    pool.deallocate(p).unwrap();
+    match pool.deallocate(p) {
+        Err(GuardError::NotAllocated) => println!("  caught: double free"),
+        other => println!("  unexpected: {other:?}"),
+    }
+
+    println!("\n=== 4. global sweep catches corruption of a LIVE block ===");
+    let mut pool = GuardedPool::with_blocks(16, 8, GuardConfig::paranoid());
+    let victim = pool.allocate("live.rs:3").unwrap();
+    let _ok = pool.allocate("live.rs:4").unwrap();
+    unsafe { victim.as_ptr().add(16).write(0xFF) };
+    match pool.check_all() {
+        Err(e) => println!("  caught by global sweep: {e}"),
+        Ok(()) => println!("  MISSED (should not happen)"),
+    }
+
+    println!("\n=== 5. what do the checks cost? (§IV.B \"at the cost of\") ===");
+    const N: u32 = 100_000;
+    let cost = |label: &str, cfg: Option<GuardConfig>| {
+        let t = Timer::start();
+        match cfg {
+            Some(cfg) => {
+                let mut p = GuardedPool::with_blocks(64, 1024, cfg);
+                for _ in 0..N {
+                    let h = p.allocate("bench").unwrap();
+                    p.deallocate(h).unwrap();
+                }
+            }
+            None => {
+                let mut p = FixedPool::with_blocks(64, 1024);
+                for _ in 0..N {
+                    let h = p.allocate().unwrap();
+                    unsafe { p.deallocate(h) };
+                }
+            }
+        }
+        let ns = t.elapsed_ns() as f64 / (N as f64);
+        println!("  {label:<26} {:>10}/pair", fmt_ns(ns));
+        ns
+    };
+    let raw = cost("raw pool (release)", None);
+    let off = cost("guarded, checks off", Some(GuardConfig::off()));
+    let def = cost("guarded, default checks", Some(GuardConfig::default()));
+    let par = cost("guarded, paranoid+sweeps", Some(GuardConfig::paranoid()));
+    println!(
+        "  → overhead: wrapper {:.1}x, default {:.1}x, paranoid {:.1}x vs raw",
+        off / raw,
+        def / raw,
+        par / raw
+    );
+}

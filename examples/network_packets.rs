@@ -1,0 +1,151 @@
+//! Network-packet example: MTU-sized buffers from a lock-free pool shared
+//! by producer and consumer threads (§VI's threading limitation, solved by
+//! `AtomicPool`), plus the ad-hoc `MultiPool` for odd-sized control
+//! messages (§V).
+//!
+//! ```bash
+//! cargo run --release --example network_packets
+//! ```
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use fastpool::pool::{AtomicPool, MultiPool, MultiPoolConfig, Origin};
+use fastpool::util::{fmt_rate, Rng, Timer};
+
+const MTU: usize = 1536;
+const RING: usize = 1024;
+
+fn main() {
+    println!("=== lock-free packet pool: 2 producers, 2 consumers ===");
+    let pool = Arc::new(AtomicPool::with_blocks(MTU, 4096));
+    let (tx, rx) = std::sync::mpsc::sync_channel::<u32>(RING);
+    let rx = Arc::new(std::sync::Mutex::new(rx));
+    let stop = Arc::new(AtomicBool::new(false));
+    let sent = Arc::new(AtomicU64::new(0));
+    let received = Arc::new(AtomicU64::new(0));
+
+    let t = Timer::start();
+    std::thread::scope(|s| {
+        // Producers: "receive" packets off the wire into pool buffers.
+        for prod in 0..2u64 {
+            let pool = Arc::clone(&pool);
+            let tx = tx.clone();
+            let stop = Arc::clone(&stop);
+            let sent = Arc::clone(&sent);
+            s.spawn(move || {
+                let mut rng = Rng::new(prod + 1);
+                while !stop.load(Ordering::Relaxed) {
+                    if let Some(idx) = pool.allocate_index() {
+                        // Fill a header + payload.
+                        let p = unsafe {
+                            std::slice::from_raw_parts_mut(
+                                pool_ptr(&pool, idx),
+                                MTU,
+                            )
+                        };
+                        let len = 64 + rng.gen_usize(0, MTU - 64);
+                        p[0..8].copy_from_slice(&(len as u64).to_le_bytes());
+                        p[8] = prod as u8;
+                        if tx.send(idx).is_err() {
+                            pool.deallocate_index(idx);
+                            break;
+                        }
+                        sent.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        std::hint::spin_loop(); // pool exhausted: backpressure
+                    }
+                }
+            });
+        }
+        // Consumers: process and return buffers.
+        for _ in 0..2 {
+            let pool = Arc::clone(&pool);
+            let rx = Arc::clone(&rx);
+            let stop = Arc::clone(&stop);
+            let received = Arc::clone(&received);
+            s.spawn(move || {
+                loop {
+                    let idx = {
+                        let guard = rx.lock().unwrap();
+                        guard.recv_timeout(std::time::Duration::from_millis(50))
+                    };
+                    match idx {
+                        Ok(idx) => {
+                            let p = unsafe {
+                                std::slice::from_raw_parts(pool_ptr(&pool, idx), MTU)
+                            };
+                            let len = u64::from_le_bytes(p[0..8].try_into().unwrap());
+                            assert!(len as usize <= MTU, "corrupt packet");
+                            pool.deallocate_index(idx);
+                            received.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(_) => {
+                            if stop.load(Ordering::Relaxed) {
+                                break;
+                            }
+                        }
+                    }
+                }
+            });
+        }
+        std::thread::sleep(std::time::Duration::from_millis(500));
+        stop.store(true, Ordering::Relaxed);
+        drop(tx);
+    });
+    let secs = t.elapsed_secs();
+    let n = received.load(Ordering::Relaxed);
+    println!(
+        "processed {} packets in {:.2}s = {} | pool free at end: {}/{}",
+        n,
+        secs,
+        fmt_rate(n as f64 / secs),
+        pool.num_free(),
+        pool.num_blocks()
+    );
+    assert_eq!(pool.num_free(), pool.num_blocks(), "buffer leak!");
+
+    println!("\n=== ad-hoc multi-pool for control messages (§V) ===");
+    let mut mp = MultiPool::new(MultiPoolConfig {
+        min_class: 16,
+        max_class: 2048,
+        blocks_per_class: 512,
+        system_fallback: true,
+    });
+    let mut rng = Rng::new(99);
+    let mut live = Vec::new();
+    for _ in 0..20_000 {
+        if live.is_empty() || rng.gen_bool(0.5) {
+            // Control messages: zipf-ish sizes, occasional jumbo.
+            let size = if rng.gen_bool(0.02) {
+                4096 + rng.gen_usize(0, 8192)
+            } else {
+                8 + rng.gen_usize(0, 512)
+            };
+            if let Some((p, o)) = mp.allocate(size) {
+                live.push((p, size, o));
+            }
+        } else {
+            let i = rng.gen_usize(0, live.len());
+            let (p, size, o) = live.swap_remove(i);
+            unsafe { mp.deallocate(p, size, o) };
+        }
+    }
+    let pooled = live.iter().filter(|(_, _, o)| matches!(o, Origin::Pool(_))).count();
+    println!(
+        "live at end: {} ({} pooled) | pool hit rate {:.1}% | internal waste {} KiB | system fallbacks {}",
+        live.len(),
+        pooled,
+        mp.pool_hit_rate() * 100.0,
+        mp.total_internal_waste() / 1024,
+        mp.system_allocs
+    );
+    for (p, size, o) in live.drain(..) {
+        unsafe { mp.deallocate(p, size, o) };
+    }
+    println!("drained cleanly");
+}
+
+fn pool_ptr(pool: &AtomicPool, idx: u32) -> *mut u8 {
+    (pool.region_start() + idx as usize * pool.block_size()) as *mut u8
+}

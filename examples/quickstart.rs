@@ -1,0 +1,96 @@
+//! Quickstart: the paper's fixed-size pool in five minutes.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Walks the §IV algorithm step by step (the Figure-2 example), then shows
+//! the typed RAII layer, the overhead accounting (§I "no overhead"), and a
+//! first speed taste against malloc.
+
+use fastpool::alloc::{PoolAllocator, SystemAllocator};
+use fastpool::pool::{FixedPool, PoolConfig, TypedPool};
+use fastpool::util::{fmt_ns, Timer};
+use fastpool::workload::{patterns, replay};
+
+fn main() {
+    banner("1. the paper's algorithm, step by step (Figure 2)");
+    let mut pool = FixedPool::new(PoolConfig::new(8, 4));
+    println!("created 4x8B pool: watermark={}, free={}  (creation touched 0 blocks)",
+        pool.raw().num_initialized(), pool.num_free());
+
+    let a = pool.allocate().unwrap();
+    println!("alloc -> block {} | watermark={} free={}",
+        pool.raw().index_from_addr(a), pool.raw().num_initialized(), pool.num_free());
+    let b = pool.allocate().unwrap();
+    println!("alloc -> block {} | watermark={} free={}",
+        pool.raw().index_from_addr(b), pool.raw().num_initialized(), pool.num_free());
+    unsafe { pool.deallocate(a) };
+    println!("free block 0     | head of in-band free list is block 0 again");
+    let c = pool.allocate().unwrap();
+    println!("alloc -> block {} (LIFO reuse, O(1), no loops)", pool.raw().index_from_addr(c));
+
+    banner("2. typed pool: ctor/dtor discipline for free (§V)");
+    #[derive(Debug)]
+    struct Particle {
+        pos: [f32; 3],
+        vel: [f32; 3],
+        life: f32,
+    }
+    let particles: TypedPool<Particle> = TypedPool::new(1024);
+    let p = particles
+        .alloc(Particle { pos: [0.0; 3], vel: [1.0, 2.0, 0.5], life: 1.0 })
+        .ok()
+        .unwrap();
+    println!("allocated {p:?}");
+    println!("live={} free={}", particles.live(), particles.free());
+    drop(p); // destructor runs, block returns — no manual bookkeeping
+    println!("after drop: live={} free={}", particles.live(), particles.free());
+
+    banner("3. overhead accounting (§I \"little memory footprint\")");
+    let big = FixedPool::with_blocks(256, 1_000_000);
+    let s = big.stats();
+    println!("pool: 1M x 256B = {} MiB managed", s.capacity_bytes / (1 << 20));
+    println!(
+        "bookkeeping: {} bytes total = {:.6} bytes/block = {:.8}% of capacity",
+        s.header_overhead_bytes,
+        s.overhead_per_block(),
+        s.overhead_ratio() * 100.0
+    );
+
+    banner("4. first taste of the speedup (Figure 4 preview)");
+    let trace = patterns::alloc_then_free_all(10_000, 64);
+    let mut malloc = SystemAllocator::new();
+    let mut pool = PoolAllocator::new(64, 10_000);
+    // Warm both once, measure second run.
+    replay(&trace, &mut malloc);
+    replay(&trace, &mut pool);
+    let rm = replay(&trace, &mut malloc);
+    let rp = replay(&trace, &mut pool);
+    println!("10k alloc+free of 64B:");
+    println!("  malloc: {:>10} ({:.1} ns/op)", fmt_ns(rm.total_ns as f64), rm.ns_per_op());
+    println!("  pool:   {:>10} ({:.1} ns/op)", fmt_ns(rp.total_ns as f64), rp.ns_per_op());
+    println!("  speedup: {:.1}x  (full sweep: cargo bench)", rm.ns_per_op() / rp.ns_per_op());
+
+    banner("5. creation cost: lazy vs the naive loop (§I)");
+    for n in [1_000u32, 100_000, 10_000_000] {
+        let t = Timer::start();
+        let lazy = FixedPool::with_blocks(64, n);
+        let lazy_ns = t.elapsed_ns();
+        let t = Timer::start();
+        let eager = fastpool::pool::EagerPool::with_blocks(64, n);
+        let eager_ns = t.elapsed_ns();
+        println!(
+            "n={n:>9}: lazy create {} | eager create {} ({:>6.1}x)",
+            fmt_ns(lazy_ns as f64),
+            fmt_ns(eager_ns as f64),
+            eager_ns as f64 / lazy_ns.max(1) as f64
+        );
+        drop(lazy);
+        drop(eager);
+    }
+}
+
+fn banner(s: &str) {
+    println!("\n=== {s} ===");
+}

@@ -1,0 +1,236 @@
+"""AOT export: lower prefill + decode_step to HLO **text** artifacts.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax ≥ 0.5
+emits protos with 64-bit instruction ids which the xla crate's bundled
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs in `--out-dir` (default `artifacts/`):
+
+* `decode_b{B}.hlo.txt`, `prefill_b{B}.hlo.txt` for each batch variant
+* `params.bin` — the flat f32 parameter vector (little-endian)
+* `meta.json` — geometry + per-artifact I/O specs for the rust runtime
+
+Run via `make artifacts` (a no-op when inputs are unchanged).
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .config import DEFAULT, ModelConfig
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True so the rust
+    side unwraps one tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def io_spec(shape, dtype):
+    return {"shape": list(shape), "dtype": dtype}
+
+
+def export(cfg: ModelConfig, out_dir: str, seed: int = 0) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    cfg.validate()
+    L, NB, T = cfg.n_layers, cfg.num_blocks, cfg.block_tokens
+    H, Dh, MB, P, V = (
+        cfg.n_heads,
+        cfg.head_dim,
+        cfg.max_blocks_per_seq,
+        cfg.prefill_len,
+        cfg.vocab,
+    )
+    nparams = M.num_params(cfg)
+    kv_shape = [L, NB, T, H, Dh]
+
+    # --- weights -----------------------------------------------------------
+    flat = M.init_params_flat(cfg, seed=seed)
+    params_path = os.path.join(out_dir, "params.bin")
+    flat.astype("<f4").tofile(params_path)
+
+    artifacts = []
+    for B in cfg.batch_sizes:
+        # decode_step
+        fn = lambda params, tokens, seq_lens, table, kk, vv: M.decode_step(
+            cfg, params, tokens, seq_lens, table, kk, vv, use_kernel=True
+        )
+        lowered = jax.jit(fn).lower(
+            spec((nparams,), jnp.float32),
+            spec((B,), jnp.int32),
+            spec((B,), jnp.int32),
+            spec((B, MB), jnp.int32),
+            spec(kv_shape, jnp.float32),
+            spec(kv_shape, jnp.float32),
+        )
+        name = f"decode_b{B}"
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(to_hlo_text(lowered))
+        artifacts.append(
+            {
+                "name": name,
+                "kind": "decode",
+                "batch": B,
+                "file": f"{name}.hlo.txt",
+                "inputs": [
+                    io_spec([nparams], "f32"),
+                    io_spec([B], "i32"),
+                    io_spec([B], "i32"),
+                    io_spec([B, MB], "i32"),
+                    io_spec(kv_shape, "f32"),
+                    io_spec(kv_shape, "f32"),
+                ],
+                "outputs": [
+                    io_spec([B, V], "f32"),
+                    io_spec(kv_shape, "f32"),
+                    io_spec(kv_shape, "f32"),
+                ],
+            }
+        )
+
+        # prefill
+        fnp = lambda params, tokens, lens, table, kk, vv: M.prefill(
+            cfg, params, tokens, lens, table, kk, vv
+        )
+        lowered = jax.jit(fnp).lower(
+            spec((nparams,), jnp.float32),
+            spec((B, P), jnp.int32),
+            spec((B,), jnp.int32),
+            spec((B, MB), jnp.int32),
+            spec(kv_shape, jnp.float32),
+            spec(kv_shape, jnp.float32),
+        )
+        name = f"prefill_b{B}"
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(to_hlo_text(lowered))
+        artifacts.append(
+            {
+                "name": name,
+                "kind": "prefill",
+                "batch": B,
+                "file": f"{name}.hlo.txt",
+                "inputs": [
+                    io_spec([nparams], "f32"),
+                    io_spec([B, P], "i32"),
+                    io_spec([B], "i32"),
+                    io_spec([B, MB], "i32"),
+                    io_spec(kv_shape, "f32"),
+                    io_spec(kv_shape, "f32"),
+                ],
+                "outputs": [
+                    io_spec([B, V], "f32"),
+                    io_spec(kv_shape, "f32"),
+                    io_spec(kv_shape, "f32"),
+                ],
+            }
+        )
+
+    meta = {
+        "model": {
+            "vocab": V,
+            "d_model": cfg.d_model,
+            "n_heads": H,
+            "head_dim": Dh,
+            "n_layers": L,
+            "d_ff": cfg.d_ff,
+            "num_params": nparams,
+            "seed": seed,
+        },
+        "cache": {
+            "block_tokens": T,
+            "num_blocks": NB,
+            "max_blocks_per_seq": MB,
+            "max_context": cfg.max_context,
+            "scratch_block": NB - 1,
+            "kv_shape": kv_shape,
+        },
+        "prefill_len": P,
+        "batch_sizes": list(cfg.batch_sizes),
+        "params_file": "params.bin",
+        "params_sha256": hashlib.sha256(flat.astype("<f4").tobytes()).hexdigest(),
+        "artifacts": artifacts,
+    }
+    # --- golden fixture ------------------------------------------------------
+    # A deterministic prefill + greedy-decode trajectory computed here in
+    # python; the rust runtime integration test replays it through the AOT
+    # artifacts and must reproduce the tokens exactly (cross-layer signal).
+    meta["golden"] = golden_trajectory(cfg, flat)
+
+    meta_path = os.path.join(out_dir, "meta.json")
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=1, sort_keys=True)
+    return meta
+
+
+def golden_trajectory(cfg: ModelConfig, flat_np, steps: int = 8) -> dict:
+    """Greedy tokens for a fixed prompt via prefill_b1 + decode_b1 semantics."""
+    flat = jnp.asarray(flat_np)
+    prompt = [104, 101, 108, 108, 111, 32, 112, 111, 111, 108]  # b"hello pool"
+    P = cfg.prefill_len
+    padded = np.zeros((1, P), np.int32)
+    padded[0, : len(prompt)] = prompt
+    table = jnp.asarray([list(range(cfg.max_blocks_per_seq))], jnp.int32)
+    kv_shape = (cfg.n_layers, cfg.num_blocks, cfg.block_tokens, cfg.n_heads, cfg.head_dim)
+    kv_k = jnp.zeros(kv_shape, jnp.float32)
+    kv_v = jnp.zeros(kv_shape, jnp.float32)
+    last_logits, kv_k, kv_v = M.prefill(
+        cfg, flat, jnp.asarray(padded), jnp.asarray([len(prompt)], jnp.int32),
+        table, kv_k, kv_v,
+    )
+    toks = [int(jnp.argmax(last_logits[0]))]
+    seq_len = len(prompt)
+    for _ in range(steps - 1):
+        logits, kv_k, kv_v = M.decode_step(
+            cfg, flat,
+            jnp.asarray([toks[-1]], jnp.int32),
+            jnp.asarray([seq_len], jnp.int32),
+            table, kv_k, kv_v,
+        )
+        seq_len += 1
+        toks.append(int(jnp.argmax(logits[0])))
+    return {
+        "prompt": prompt,
+        "block_table": [list(range(cfg.max_blocks_per_seq))],
+        "greedy_tokens": toks,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="(Makefile stamp) ignored path hint")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    out_dir = args.out_dir
+    if args.out is not None:
+        out_dir = os.path.dirname(args.out) or out_dir
+    meta = export(DEFAULT, out_dir, seed=args.seed)
+    total = sum(
+        os.path.getsize(os.path.join(out_dir, a["file"])) for a in meta["artifacts"]
+    )
+    print(
+        f"wrote {len(meta['artifacts'])} HLO artifacts ({total/1e6:.1f} MB), "
+        f"params.bin ({meta['model']['num_params']} f32), meta.json → {out_dir}"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Model + cache geometry shared by the kernel, the model, and AOT export.
+
+The serving framework's tensors mirror the paper's pool exactly: the KV
+cache is a flat arena of NUM_BLOCKS fixed-size blocks; the rust-side
+BlockAllocator (the paper's algorithm in index space) hands out block
+indices which reach the model as block tables.
+"""
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Geometry of the tiny serving transformer (all shapes static for AOT)."""
+
+    vocab: int = 256  # byte-level tokenizer
+    d_model: int = 128
+    n_heads: int = 4
+    n_layers: int = 2
+    d_ff: int = 512
+    # --- paged KV cache geometry (the pool) ---
+    block_tokens: int = 16  # tokens per KV block (pool block granularity)
+    num_blocks: int = 128  # pool capacity (shared by all sequences)
+    max_blocks_per_seq: int = 8  # → max context = 128 tokens
+    # --- AOT batch/prefill shapes ---
+    prefill_len: int = 32  # prompts padded/truncated to this
+    batch_sizes: tuple = (1, 2, 4)  # one compiled executable per variant
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def max_context(self) -> int:
+        return self.block_tokens * self.max_blocks_per_seq
+
+    def validate(self) -> None:
+        assert self.prefill_len <= self.max_context
+        assert self.vocab >= 256
+        assert self.num_blocks >= self.max_blocks_per_seq
+
+
+DEFAULT = ModelConfig()

@@ -1,0 +1,115 @@
+"""L1: paged-attention decode kernel in Pallas.
+
+One grid program per (batch, head). Each program walks its sequence's
+block table (static trip count = MB, the compile-time max blocks per
+sequence) and accumulates attention with the online-softmax (flash)
+recurrence, so the working set is one KV block at a time.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's domain is
+CPU pools; the serving framework's kernel layer targets TPU. Block size
+(T=16 tokens) × head_dim keeps each (k_blk, v_blk) tile comfortably inside
+VMEM; q/out tiles are mapped per-program via BlockSpec; the block arena
+stays in HBM-equivalent memory and is gathered one block per step — the
+BlockSpec/dslice schedule plays the role CUDA threadblock tiling plays in
+GPU paged-attention implementations.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret mode lowers to plain HLO so the exported
+artifact runs anywhere (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _paged_attention_kernel(
+    table_ref,  # [1, MB] int32 — this sequence's block table row
+    seqlen_ref,  # [1] int32 — tokens live in this sequence's cache
+    q_ref,  # [1, 1, Dh] — this (batch, head)'s query
+    k_ref,  # [1, NB, T, Dh] — key arena pane for this head
+    v_ref,  # [1, NB, T, Dh] — value arena pane for this head
+    o_ref,  # [1, 1, Dh] — output tile
+    *,
+    mb: int,
+    block_tokens: int,
+):
+    dh = q_ref.shape[-1]
+    t = block_tokens
+    q = q_ref[0, 0, :].astype(jnp.float32)  # [Dh]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    seq_len = seqlen_ref[0]
+
+    # Online-softmax state.
+    m = jnp.asarray(-1e30, jnp.float32)  # running max
+    l = jnp.asarray(0.0, jnp.float32)  # running denom
+    acc = jnp.zeros((dh,), jnp.float32)  # running numerator
+
+    # Static loop over the max block count; dead blocks are masked. This is
+    # the TPU-friendly shape: fixed trip count, one block tile per step.
+    for j in range(mb):
+        bidx = table_ref[0, j]
+        k_blk = k_ref[0, pl.dslice(bidx, 1), :, :][0].astype(jnp.float32)  # [T, Dh]
+        v_blk = v_ref[0, pl.dslice(bidx, 1), :, :][0].astype(jnp.float32)  # [T, Dh]
+        s = (k_blk @ q) * scale  # [T]
+        # Mask tokens at/after seq_len.
+        pos = j * t + jnp.arange(t)
+        valid = pos < seq_len
+        s = jnp.where(valid, s, -1e30)
+        # Flash update.
+        m_new = jnp.maximum(m, s.max())
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new) * valid.astype(jnp.float32)
+        l = l * alpha + p.sum()
+        acc = acc * alpha + p @ v_blk
+        m = m_new
+
+    out = acc / jnp.maximum(l, 1e-30)
+    o_ref[0, 0, :] = out.astype(o_ref.dtype)
+
+
+def paged_attention(q, kv_k, kv_v, block_table, seq_lens, *, interpret=True):
+    """Paged attention over the block arena.
+
+    Args:
+      q:           [B, H, Dh]
+      kv_k, kv_v:  [NB, T, H, Dh]
+      block_table: [B, MB] int32
+      seq_lens:    [B] int32
+      interpret:   keep True on CPU (see module docstring).
+
+    Returns:
+      [B, H, Dh] attention output, dtype of `q`.
+    """
+    B, H, Dh = q.shape
+    NB, T, KH, KDh = kv_k.shape
+    assert kv_v.shape == kv_k.shape
+    assert (KH, KDh) == (H, Dh), f"kv heads {KH}x{KDh} != q heads {H}x{Dh}"
+    MB = block_table.shape[1]
+    assert block_table.shape == (B, MB)
+    assert seq_lens.shape == (B,)
+
+    # Head-major arenas so each program reads a contiguous [NB, T, Dh] pane.
+    k_hm = jnp.transpose(kv_k, (2, 0, 1, 3))  # [H, NB, T, Dh]
+    v_hm = jnp.transpose(kv_v, (2, 0, 1, 3))
+
+    kernel = functools.partial(
+        _paged_attention_kernel, mb=MB, block_tokens=T
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H),
+        in_specs=[
+            pl.BlockSpec((1, MB), lambda b, h: (b, 0)),  # table row
+            pl.BlockSpec((1,), lambda b, h: (b,)),  # seq_len
+            pl.BlockSpec((1, 1, Dh), lambda b, h: (b, h, 0)),  # q tile
+            pl.BlockSpec((1, NB, T, Dh), lambda b, h: (h, 0, 0, 0)),  # K pane
+            pl.BlockSpec((1, NB, T, Dh), lambda b, h: (h, 0, 0, 0)),  # V pane
+        ],
+        out_specs=pl.BlockSpec((1, 1, Dh), lambda b, h: (b, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Dh), q.dtype),
+        interpret=interpret,
+    )(block_table, seq_lens, q, k_hm, v_hm)
+    return out

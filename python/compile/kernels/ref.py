@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness references: `test_kernel.py` sweeps shapes
+and dtypes (hypothesis) asserting the Pallas kernel matches these to tight
+tolerances, and `model.py` can be built against either implementation.
+"""
+
+import jax.numpy as jnp
+
+
+def ref_paged_attention(q, kv_k, kv_v, block_table, seq_lens):
+    """Reference paged attention for one decode step.
+
+    Args:
+      q:           [B, H, Dh]      query for the newest token of each seq.
+      kv_k, kv_v:  [NB, T, H, Dh]  the block arena (all sequences share it).
+      block_table: [B, MB] int32   block indices per sequence; entries past
+                                   the sequence's blocks are arbitrary (masked).
+      seq_lens:    [B] int32       tokens already in the cache per sequence
+                                   (including the newest token's k/v).
+
+    Returns:
+      out: [B, H, Dh] attention output.
+    """
+    B, H, Dh = q.shape
+    NB, T, _, _ = kv_k.shape
+    MB = block_table.shape[1]
+
+    # Gather each sequence's blocks: [B, MB, T, H, Dh] → [B, MB*T, H, Dh].
+    k = kv_k[block_table]  # advanced indexing gather
+    v = kv_v[block_table]
+    k = k.reshape(B, MB * T, H, Dh)
+    v = v.reshape(B, MB * T, H, Dh)
+
+    # Scores: [B, H, MB*T].
+    scale = 1.0 / jnp.sqrt(jnp.asarray(Dh, q.dtype))
+    scores = jnp.einsum("bhd,bshd->bhs", q, k) * scale
+
+    # Mask positions ≥ seq_len.
+    pos = jnp.arange(MB * T)[None, None, :]  # [1,1,S]
+    mask = pos < seq_lens[:, None, None]
+    scores = jnp.where(mask, scores, jnp.asarray(-1e30, scores.dtype))
+
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs * mask.astype(probs.dtype)
+    denom = probs.sum(axis=-1, keepdims=True)
+    probs = probs / jnp.maximum(denom, 1e-30)
+    return jnp.einsum("bhs,bshd->bhd", probs, v)
+
+
+def ref_full_attention(q, k, v, causal=True):
+    """Plain full attention over contiguous [B, S, H, Dh] tensors — the
+    ground truth the paged path must reproduce end-to-end (prefill)."""
+    B, S, H, Dh = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(Dh, q.dtype))
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) * scale
+    if causal:
+        qi = jnp.arange(S)[:, None]
+        ki = jnp.arange(S)[None, :]
+        scores = jnp.where(ki <= qi, scores, jnp.asarray(-1e30, scores.dtype))
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / jnp.maximum(probs.sum(axis=-1, keepdims=True), 1e-30)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)

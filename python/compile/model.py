@@ -1,0 +1,264 @@
+"""L2: the tiny serving transformer over a paged KV cache (build-time JAX).
+
+Functional model with two entry points per batch-size variant, both
+AOT-lowered to HLO text by `aot.py`:
+
+* `prefill(params_flat, tokens, prompt_lens, block_table, kv_k, kv_v)`
+  → (last_logits, kv_k', kv_v') — runs the whole (padded) prompt with full
+  causal attention, writes K/V into the sequence's blocks.
+* `decode_step(params_flat, tokens, seq_lens, block_table, kv_k, kv_v)`
+  → (logits, kv_k', kv_v') — one token per sequence, attention via the
+  L1 Pallas paged-attention kernel.
+
+All parameters travel as ONE flat f32 vector (`params_flat`), so the rust
+runtime feeds a single weights literal loaded from `artifacts/params.bin`.
+Block indices come from the rust-side BlockAllocator — the paper's pool in
+index space — via `block_table`.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import DEFAULT, ModelConfig
+from .kernels.paged_attention import paged_attention
+from .kernels.ref import ref_full_attention, ref_paged_attention
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def param_specs(cfg: ModelConfig):
+    """Ordered (name, shape) list defining the flat parameter layout."""
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    specs = [("embed", (v, d))]
+    for i in range(cfg.n_layers):
+        specs += [
+            (f"l{i}.ln1", (d,)),
+            (f"l{i}.wqkv", (d, 3 * d)),
+            (f"l{i}.wo", (d, d)),
+            (f"l{i}.ln2", (d,)),
+            (f"l{i}.w1", (d, f)),
+            (f"l{i}.w2", (f, d)),
+        ]
+    specs += [("ln_f", (d,)), ("head", (d, v))]
+    return specs
+
+
+def num_params(cfg: ModelConfig) -> int:
+    return sum(int(np.prod(s)) for _, s in param_specs(cfg))
+
+
+def init_params_flat(cfg: ModelConfig, seed: int = 0) -> np.ndarray:
+    """Deterministic scaled-gaussian init, flattened in spec order."""
+    rng = np.random.default_rng(seed)
+    chunks = []
+    for name, shape in param_specs(cfg):
+        if name.endswith(("ln1", "ln2", "ln_f")):
+            w = np.ones(shape, np.float32)  # layernorm scales
+        else:
+            fan_in = shape[0] if len(shape) > 1 else shape[0]
+            w = rng.standard_normal(shape).astype(np.float32) / math.sqrt(fan_in)
+        chunks.append(w.reshape(-1))
+    return np.concatenate(chunks)
+
+
+def unflatten(cfg: ModelConfig, flat):
+    """Flat vector → dict of named arrays (inside the traced function)."""
+    params = {}
+    off = 0
+    for name, shape in param_specs(cfg):
+        n = int(np.prod(shape))
+        params[name] = flat[off : off + n].reshape(shape)
+        off += n
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def _rmsnorm(x, scale):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + 1e-6) * scale
+
+
+def _rope(x, positions):
+    """Rotary embedding over the last dim. x: [..., H, Dh], positions
+    broadcastable to x[..., 0, 0]."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32) * (math.log(10000.0) / half))
+    ang = positions[..., None, None].astype(jnp.float32) * freqs  # [..., 1, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _mlp(x, w1, w2):
+    return jax.nn.gelu(x @ w1) @ w2
+
+
+# ---------------------------------------------------------------------------
+# Decode step (uses the Pallas kernel)
+# ---------------------------------------------------------------------------
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params_flat,
+    tokens,  # [B] int32 — the newest token of each sequence
+    seq_lens,  # [B] int32 — tokens in cache BEFORE this one
+    block_table,  # [B, MB] int32
+    kv_k,  # [L, NB, T, H, Dh]
+    kv_v,
+    *,
+    use_kernel: bool = True,
+    interpret: bool = True,
+):
+    """One decode iteration. Returns (logits [B, V], kv_k', kv_v')."""
+    p = unflatten(cfg, params_flat)
+    B = tokens.shape[0]
+    T = cfg.block_tokens
+    H, Dh = cfg.n_heads, cfg.head_dim
+
+    x = p["embed"][tokens]  # [B, D]
+    pos = seq_lens  # 0-based position of the new token
+
+    # Which slot the new token's K/V lands in.
+    blk_of_pos = pos // T  # [B] logical block
+    slot = pos % T  # [B] slot within block
+    phys_blk = jnp.take_along_axis(block_table, blk_of_pos[:, None], axis=1)[:, 0]
+
+    new_lens = seq_lens + 1
+    for i in range(cfg.n_layers):
+        h = _rmsnorm(x, p[f"l{i}.ln1"])
+        qkv = h @ p[f"l{i}.wqkv"]  # [B, 3D]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q = _rope(q.reshape(B, H, Dh), pos)
+        k = _rope(k.reshape(B, H, Dh), pos)
+        v = v.reshape(B, H, Dh)
+        # Scatter the new token's K/V into its block (advanced indexing →
+        # HLO scatter; indices come from the pool's block table).
+        kv_k = kv_k.at[i, phys_blk, slot].set(k)
+        kv_v = kv_v.at[i, phys_blk, slot].set(v)
+        if use_kernel:
+            attn = paged_attention(
+                q, kv_k[i], kv_v[i], block_table, new_lens, interpret=interpret
+            )
+        else:
+            attn = ref_paged_attention(q, kv_k[i], kv_v[i], block_table, new_lens)
+        x = x + attn.reshape(B, -1) @ p[f"l{i}.wo"]
+        x = x + _mlp(_rmsnorm(x, p[f"l{i}.ln2"]), p[f"l{i}.w1"], p[f"l{i}.w2"])
+
+    logits = _rmsnorm(x, p["ln_f"]) @ p["head"]  # [B, V]
+    return logits, kv_k, kv_v
+
+
+# ---------------------------------------------------------------------------
+# Prefill (full causal attention over the padded prompt)
+# ---------------------------------------------------------------------------
+
+
+def prefill(
+    cfg: ModelConfig,
+    params_flat,
+    tokens,  # [B, P] int32, padded with 0
+    prompt_lens,  # [B] int32 — true lengths (≤ P)
+    block_table,  # [B, MB] int32
+    kv_k,  # [L, NB, T, H, Dh]
+    kv_v,
+):
+    """Process prompts; write K/V into blocks; return logits at the last
+    real token of each prompt: (last_logits [B, V], kv_k', kv_v')."""
+    p = unflatten(cfg, params_flat)
+    B, P = tokens.shape
+    T = cfg.block_tokens
+    H, Dh = cfg.n_heads, cfg.head_dim
+    assert P % T == 0, "prefill length must be a whole number of blocks"
+
+    x = p["embed"][tokens]  # [B, P, D]
+    positions = jnp.arange(P)[None, :].repeat(B, axis=0)  # [B, P]
+    # Padding mask: token t is real iff t < prompt_len.
+    real = positions < prompt_lens[:, None]  # [B, P]
+
+    for i in range(cfg.n_layers):
+        h = _rmsnorm(x, p[f"l{i}.ln1"])
+        qkv = h @ p[f"l{i}.wqkv"]  # [B, P, 3D]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q = _rope(q.reshape(B, P, H, Dh), positions)
+        k = _rope(k.reshape(B, P, H, Dh), positions)
+        v = v.reshape(B, P, H, Dh)
+        # Causal attention over the padded prompt; padding keys masked by
+        # pushing them outside every query's window (they are ≥ prompt_len,
+        # queries ≥ their keys ⇒ only affects padded queries, discarded).
+        attn = ref_full_attention(q, k, v, causal=True)  # [B, P, H, Dh]
+        x = x + attn.reshape(B, P, -1) @ p[f"l{i}.wo"]
+        x = x + _mlp(_rmsnorm(x, p[f"l{i}.ln2"]), p[f"l{i}.w1"], p[f"l{i}.w2"])
+
+        # Write K/V for REAL tokens into the paged arena:
+        # position t → block_table[b, t // T], slot t % T.
+        phys = jnp.take_along_axis(block_table, positions // T, axis=1)  # [B, P]
+        slot = positions % T
+        # Masked scatter: route padded tokens to a scratch block (NB-1 is
+        # reserved by the engine as scratch) so they never corrupt data.
+        scratch = cfg.num_blocks - 1
+        phys = jnp.where(real, phys, scratch)
+        bidx = jnp.broadcast_to(jnp.arange(B)[:, None], (B, P)).reshape(-1)
+        kv_k = kv_k.at[i, phys.reshape(-1), slot.reshape(-1)].set(
+            k.reshape(B * P, H, Dh)
+        )
+        kv_v = kv_v.at[i, phys.reshape(-1), slot.reshape(-1)].set(
+            v.reshape(B * P, H, Dh)
+        )
+        del bidx
+
+    logits = _rmsnorm(x, p["ln_f"]) @ p["head"]  # [B, P, V]
+    last = jnp.clip(prompt_lens - 1, 0, P - 1)
+    last_logits = jnp.take_along_axis(
+        logits, last[:, None, None].repeat(logits.shape[-1], axis=2), axis=1
+    )[:, 0, :]
+    return last_logits, kv_k, kv_v
+
+
+# ---------------------------------------------------------------------------
+# Pure-jnp end-to-end reference (contiguous KV) for differential tests
+# ---------------------------------------------------------------------------
+
+
+def reference_forward(cfg: ModelConfig, params_flat, tokens):
+    """Full causal forward over contiguous tokens [B, S] → logits [B, S, V].
+    The paged prefill+decode pipeline must reproduce this exactly."""
+    p = unflatten(cfg, params_flat)
+    B, S = tokens.shape
+    H, Dh = cfg.n_heads, cfg.head_dim
+    x = p["embed"][tokens]
+    positions = jnp.arange(S)[None, :].repeat(B, axis=0)
+    for i in range(cfg.n_layers):
+        h = _rmsnorm(x, p[f"l{i}.ln1"])
+        qkv = h @ p[f"l{i}.wqkv"]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q = _rope(q.reshape(B, S, H, Dh), positions)
+        k = _rope(k.reshape(B, S, H, Dh), positions)
+        v = v.reshape(B, S, H, Dh)
+        attn = ref_full_attention(q, k, v, causal=True)
+        x = x + attn.reshape(B, S, -1) @ p[f"l{i}.wo"]
+        x = x + _mlp(_rmsnorm(x, p[f"l{i}.ln2"]), p[f"l{i}.w1"], p[f"l{i}.w2"])
+    return _rmsnorm(x, p["ln_f"]) @ p["head"]
+
+
+__all__ = [
+    "DEFAULT",
+    "ModelConfig",
+    "decode_step",
+    "prefill",
+    "reference_forward",
+    "param_specs",
+    "num_params",
+    "init_params_flat",
+    "unflatten",
+]

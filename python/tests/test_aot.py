@@ -1,0 +1,105 @@
+"""AOT pipeline tests: artifacts exist, parse as HLO text, meta.json is
+consistent, and params.bin round-trips."""
+
+import hashlib
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile.config import ModelConfig
+from compile import aot, model as M
+
+SMALL = ModelConfig(
+    n_layers=1,
+    d_model=32,
+    n_heads=2,
+    d_ff=64,
+    num_blocks=16,
+    max_blocks_per_seq=2,
+    prefill_len=16,
+    block_tokens=8,
+    batch_sizes=(1,),
+)
+
+
+@pytest.fixture(scope="module")
+def exported(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    meta = aot.export(SMALL, out, seed=0)
+    return out, meta
+
+
+def test_artifact_files_exist(exported):
+    out, meta = exported
+    assert os.path.exists(os.path.join(out, "meta.json"))
+    assert os.path.exists(os.path.join(out, "params.bin"))
+    for a in meta["artifacts"]:
+        p = os.path.join(out, a["file"])
+        assert os.path.exists(p), a["file"]
+        assert os.path.getsize(p) > 1000
+
+
+def test_hlo_text_shape(exported):
+    out, meta = exported
+    for a in meta["artifacts"]:
+        text = open(os.path.join(out, a["file"])).read()
+        assert text.startswith("HloModule"), a["file"]
+        assert "ENTRY" in text
+        # No Mosaic custom-calls: interpret-mode lowering only.
+        assert "tpu_custom_call" not in text
+        assert "mosaic" not in text.lower()
+
+
+def test_meta_consistency(exported):
+    out, meta = exported
+    disk = json.load(open(os.path.join(out, "meta.json")))
+    assert disk == meta
+    assert meta["model"]["num_params"] == M.num_params(SMALL)
+    assert meta["cache"]["num_blocks"] == SMALL.num_blocks
+    assert meta["cache"]["scratch_block"] == SMALL.num_blocks - 1
+    names = {a["name"] for a in meta["artifacts"]}
+    assert names == {"decode_b1", "prefill_b1"}
+
+
+def test_params_bin_roundtrip(exported):
+    out, meta = exported
+    raw = np.fromfile(os.path.join(out, "params.bin"), dtype="<f4")
+    assert raw.shape == (meta["model"]["num_params"],)
+    expect = M.init_params_flat(SMALL, seed=0)
+    np.testing.assert_array_equal(raw, expect)
+    assert (
+        hashlib.sha256(raw.astype("<f4").tobytes()).hexdigest()
+        == meta["params_sha256"]
+    )
+
+
+def test_io_specs_match_model(exported):
+    _, meta = exported
+    kv_shape = meta["cache"]["kv_shape"]
+    assert kv_shape == [
+        SMALL.n_layers,
+        SMALL.num_blocks,
+        SMALL.block_tokens,
+        SMALL.n_heads,
+        SMALL.head_dim,
+    ]
+    for a in meta["artifacts"]:
+        # params, tokens, lens, table, kv_k, kv_v
+        assert len(a["inputs"]) == 6
+        assert a["inputs"][0]["shape"] == [meta["model"]["num_params"]]
+        assert a["inputs"][4]["shape"] == kv_shape
+        # logits, kv_k, kv_v
+        assert len(a["outputs"]) == 3
+        assert a["outputs"][0]["shape"] == [a["batch"], SMALL.vocab]
+
+
+def test_export_deterministic(tmp_path):
+    out1 = str(tmp_path / "a")
+    out2 = str(tmp_path / "b")
+    aot.export(SMALL, out1, seed=0)
+    aot.export(SMALL, out2, seed=0)
+    h1 = open(os.path.join(out1, "decode_b1.hlo.txt")).read()
+    h2 = open(os.path.join(out2, "decode_b1.hlo.txt")).read()
+    assert h1 == h2

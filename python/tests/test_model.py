@@ -1,0 +1,233 @@
+"""L2 correctness: the paged prefill/decode pipeline vs the contiguous
+reference transformer, parameter plumbing, and cache-isolation properties."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.config import ModelConfig
+from compile import model as M
+
+CFG = ModelConfig(n_layers=2, num_blocks=32, max_blocks_per_seq=4, prefill_len=16)
+
+
+@pytest.fixture(scope="module")
+def flat():
+    return jnp.asarray(M.init_params_flat(CFG, seed=0))
+
+
+def empty_kv(cfg=CFG):
+    shape = (cfg.n_layers, cfg.num_blocks, cfg.block_tokens, cfg.n_heads, cfg.head_dim)
+    return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)
+
+
+def disjoint_tables(cfg, B):
+    mb = cfg.max_blocks_per_seq
+    return jnp.asarray(
+        [[b * mb + j for j in range(mb)] for b in range(B)], jnp.int32
+    )
+
+
+# ---------------------------------------------------------------------------
+# Parameter plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_param_count_matches_specs(flat):
+    assert flat.shape == (M.num_params(CFG),)
+
+
+def test_unflatten_roundtrip(flat):
+    params = M.unflatten(CFG, flat)
+    specs = dict(M.param_specs(CFG))
+    assert set(params.keys()) == set(specs.keys())
+    for name, shape in specs.items():
+        assert params[name].shape == tuple(shape), name
+    # Concatenating back in spec order reproduces the flat vector.
+    rebuilt = jnp.concatenate(
+        [params[name].reshape(-1) for name, _ in M.param_specs(CFG)]
+    )
+    np.testing.assert_array_equal(np.asarray(rebuilt), np.asarray(flat))
+
+
+def test_init_deterministic():
+    a = M.init_params_flat(CFG, seed=3)
+    b = M.init_params_flat(CFG, seed=3)
+    c = M.init_params_flat(CFG, seed=4)
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, c)
+
+
+def test_layernorm_scales_init_to_one():
+    flat = M.init_params_flat(CFG, seed=0)
+    params = M.unflatten(CFG, jnp.asarray(flat))
+    np.testing.assert_array_equal(np.asarray(params["l0.ln1"]), 1.0)
+    np.testing.assert_array_equal(np.asarray(params["ln_f"]), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Pipeline equivalence (the headline correctness property)
+# ---------------------------------------------------------------------------
+
+
+def greedy_reference(flat, tokens_2d, steps):
+    """Greedy continuation with the contiguous reference model."""
+    out = []
+    toks = list(np.asarray(tokens_2d[0]))
+    for _ in range(steps):
+        logits = M.reference_forward(CFG, flat, jnp.asarray([toks]))
+        nxt = int(jnp.argmax(logits[0, -1]))
+        out.append(nxt)
+        toks.append(nxt)
+    return out
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    prompt_len=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_paged_pipeline_matches_reference_single_seq(prompt_len, seed):
+    flat = jnp.asarray(M.init_params_flat(CFG, seed=0))
+    rng = np.random.default_rng(seed)
+    P = CFG.prefill_len
+    steps = 5
+    prompt = rng.integers(1, 256, prompt_len).astype(np.int32)
+    padded = np.zeros((1, P), np.int32)
+    padded[0, :prompt_len] = prompt
+
+    table = disjoint_tables(CFG, 1)
+    kv_k, kv_v = empty_kv()
+    last_logits, kv_k, kv_v = M.prefill(
+        CFG, flat, jnp.asarray(padded), jnp.asarray([prompt_len], jnp.int32),
+        table, kv_k, kv_v,
+    )
+    got = [int(jnp.argmax(last_logits[0]))]
+    seq_len = prompt_len
+    for _ in range(steps - 1):
+        logits, kv_k, kv_v = M.decode_step(
+            CFG, flat,
+            jnp.asarray([got[-1]], jnp.int32),
+            jnp.asarray([seq_len], jnp.int32),
+            table, kv_k, kv_v,
+        )
+        seq_len += 1
+        got.append(int(jnp.argmax(logits[0])))
+
+    want = greedy_reference(flat, [list(prompt)], steps)
+    assert got == want, f"paged {got} != reference {want}"
+
+
+def test_paged_pipeline_matches_reference_batch(flat):
+    """Batched prefill+decode with different prompt lengths per lane."""
+    rng = np.random.default_rng(42)
+    B, P, steps = 2, CFG.prefill_len, 4
+    prompt_lens = [5, 13]
+    padded = np.zeros((B, P), np.int32)
+    prompts = []
+    for b in range(B):
+        pr = rng.integers(1, 256, prompt_lens[b]).astype(np.int32)
+        prompts.append(list(pr))
+        padded[b, : prompt_lens[b]] = pr
+
+    table = disjoint_tables(CFG, B)
+    kv_k, kv_v = empty_kv()
+    last_logits, kv_k, kv_v = M.prefill(
+        CFG, flat, jnp.asarray(padded), jnp.asarray(prompt_lens, jnp.int32),
+        table, kv_k, kv_v,
+    )
+    got = [[int(jnp.argmax(last_logits[b]))] for b in range(B)]
+    lens = list(prompt_lens)
+    for _ in range(steps - 1):
+        logits, kv_k, kv_v = M.decode_step(
+            CFG, flat,
+            jnp.asarray([g[-1] for g in got], jnp.int32),
+            jnp.asarray(lens, jnp.int32),
+            table, kv_k, kv_v,
+        )
+        lens = [l + 1 for l in lens]
+        for b in range(B):
+            got[b].append(int(jnp.argmax(logits[b])))
+
+    for b in range(B):
+        want = greedy_reference(flat, [prompts[b]], steps)
+        assert got[b] == want, f"lane {b}: {got[b]} != {want}"
+
+
+def test_decode_kernel_vs_ref_attention_logits(flat):
+    """decode_step(use_kernel=True) ≡ decode_step(use_kernel=False)."""
+    rng = np.random.default_rng(7)
+    B = 2
+    table = disjoint_tables(CFG, B)
+    kv_k, kv_v = empty_kv()
+    P = CFG.prefill_len
+    padded = np.asarray(rng.integers(1, 256, (B, P)), np.int32)
+    lens = jnp.asarray([P, P // 2], jnp.int32)
+    _, kv_k, kv_v = M.prefill(CFG, flat, jnp.asarray(padded), lens, table, kv_k, kv_v)
+    tok = jnp.asarray([1, 2], jnp.int32)
+    lk, kk1, vv1 = M.decode_step(CFG, flat, tok, lens, table, kv_k, kv_v, use_kernel=True)
+    lr, kk2, vv2 = M.decode_step(CFG, flat, tok, lens, table, kv_k, kv_v, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(lk), np.asarray(lr), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(kk1), np.asarray(kk2), rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Cache isolation / pool semantics
+# ---------------------------------------------------------------------------
+
+
+def test_sequences_do_not_touch_each_others_blocks(flat):
+    """Prefill of lane 0 must write only lane-0's blocks (+ scratch)."""
+    B = 2
+    table = disjoint_tables(CFG, B)
+    kv_k0, kv_v0 = empty_kv()
+    padded = np.zeros((B, CFG.prefill_len), np.int32)
+    padded[0, :8] = np.arange(1, 9)
+    # Lane 1 has prompt_len 0 → contributes nothing real.
+    lens = jnp.asarray([8, 0], jnp.int32)
+    _, kv_k, kv_v = M.prefill(CFG, flat, jnp.asarray(padded), lens, table, kv_k0, kv_v0)
+    touched = np.unique(np.nonzero(np.asarray(kv_k))[1])  # block axis
+    lane0 = set(np.asarray(table)[0].tolist())
+    scratch = {CFG.num_blocks - 1}
+    assert set(touched.tolist()) <= lane0 | scratch, f"touched {touched}"
+
+
+def test_decode_writes_exactly_one_slot(flat):
+    table = disjoint_tables(CFG, 1)
+    kv_k, kv_v = empty_kv()
+    tok = jnp.asarray([42], jnp.int32)
+    lens = jnp.asarray([0], jnp.int32)
+    _, kv_k2, _ = M.decode_step(CFG, flat, tok, lens, table, kv_k, kv_v)
+    diff = np.nonzero(np.asarray(kv_k2))
+    blocks = np.unique(diff[1])
+    slots = np.unique(diff[2])
+    assert blocks.tolist() == [int(table[0, 0])]
+    assert slots.tolist() == [0]
+
+
+def test_scratch_block_absorbs_padding(flat):
+    """Padding tokens' K/V go to the scratch block, so a fully-padded lane
+    leaves all data blocks untouched."""
+    B = 1
+    table = disjoint_tables(CFG, B)
+    kv_k0, kv_v0 = empty_kv()
+    padded = np.zeros((B, CFG.prefill_len), np.int32)
+    lens = jnp.asarray([0], jnp.int32)  # everything is padding
+    _, kv_k, kv_v = M.prefill(CFG, flat, jnp.asarray(padded), lens, table, kv_k0, kv_v0)
+    touched = np.unique(np.nonzero(np.asarray(kv_k))[1])
+    assert set(touched.tolist()) <= {CFG.num_blocks - 1}
+
+
+def test_logits_shapes(flat):
+    B = 2
+    table = disjoint_tables(CFG, B)
+    kv_k, kv_v = empty_kv()
+    padded = jnp.zeros((B, CFG.prefill_len), jnp.int32)
+    lens = jnp.asarray([3, 4], jnp.int32)
+    lg, kk, vv = M.prefill(CFG, flat, padded, lens, table, kv_k, kv_v)
+    assert lg.shape == (B, CFG.vocab)
+    assert kk.shape == kv_k.shape
+    lg2, _, _ = M.decode_step(CFG, flat, jnp.asarray([1, 2], jnp.int32), lens, table, kk, vv)
+    assert lg2.shape == (B, CFG.vocab)

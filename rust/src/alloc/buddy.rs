@@ -1,0 +1,223 @@
+//! `BuddyAllocator` — binary buddy system over a power-of-two arena.
+//!
+//! Second general-purpose baseline (§II surveys allocator families; the
+//! buddy system is the canonical O(log n) splitter). Compared in ablation
+//! A2 against first-fit, malloc and the paper's pool.
+
+use core::ptr::NonNull;
+
+use super::fragmentation::FragMetrics;
+use super::traits::{AllocHandle, BenchAllocator};
+use crate::util::align::next_pow2;
+
+const MIN_ORDER: u32 = 4; // 16 B
+
+/// Binary buddy allocator.
+pub struct BuddyAllocator {
+    arena: Vec<u8>,
+    max_order: u32,
+    /// free_lists[k] = offsets of free blocks of size 2^(MIN_ORDER + k).
+    free_lists: Vec<Vec<usize>>,
+    /// Order of each live allocation, keyed by offset (out-of-band header).
+    live: std::collections::HashMap<usize, u32>,
+    pub total_splits: u64,
+    pub total_merges: u64,
+}
+
+impl BuddyAllocator {
+    /// `arena_bytes` is rounded up to a power of two.
+    pub fn new(arena_bytes: usize) -> Self {
+        let size = next_pow2(arena_bytes.max(1 << MIN_ORDER));
+        let max_order = size.trailing_zeros();
+        let levels = (max_order - MIN_ORDER + 1) as usize;
+        let mut free_lists = vec![Vec::new(); levels];
+        free_lists[levels - 1].push(0); // one max-size block
+        Self {
+            arena: vec![0u8; size],
+            max_order,
+            free_lists,
+            live: std::collections::HashMap::new(),
+            total_splits: 0,
+            total_merges: 0,
+        }
+    }
+
+    fn order_for(&self, size: usize) -> Option<u32> {
+        let order = next_pow2(size.max(1 << MIN_ORDER)).trailing_zeros();
+        if order > self.max_order {
+            None
+        } else {
+            Some(order)
+        }
+    }
+
+    fn level(&self, order: u32) -> usize {
+        (order - MIN_ORDER) as usize
+    }
+
+    /// Point-in-time fragmentation metrics.
+    pub fn frag_metrics(&self) -> FragMetrics {
+        let mut total_free = 0usize;
+        let mut largest_free = 0usize;
+        let mut free_chunks = 0usize;
+        for (lvl, list) in self.free_lists.iter().enumerate() {
+            let size = 1usize << (MIN_ORDER as usize + lvl);
+            total_free += size * list.len();
+            if !list.is_empty() {
+                largest_free = largest_free.max(size);
+            }
+            free_chunks += list.len();
+        }
+        FragMetrics { total_free, largest_free, free_chunks }
+    }
+
+    pub fn live_count(&self) -> usize {
+        self.live.len()
+    }
+}
+
+impl BenchAllocator for BuddyAllocator {
+    fn name(&self) -> &'static str {
+        "buddy"
+    }
+
+    fn alloc(&mut self, size: usize) -> Option<AllocHandle> {
+        let want = self.order_for(size)?;
+        // Find the smallest order ≥ want with a free block.
+        let mut order = want;
+        while order <= self.max_order && self.free_lists[self.level(order)].is_empty() {
+            order += 1;
+        }
+        if order > self.max_order {
+            return None;
+        }
+        let lvl = self.level(order);
+        let off = self.free_lists[lvl].pop().unwrap();
+        // Split down to the wanted order.
+        while order > want {
+            order -= 1;
+            self.total_splits += 1;
+            let buddy = off + (1usize << order);
+            let lvl = self.level(order);
+            self.free_lists[lvl].push(buddy);
+        }
+        self.live.insert(off, want);
+        let _ = off; // offset is the handle's identity
+        let ptr =
+            unsafe { NonNull::new_unchecked(self.arena.as_mut_ptr().add(off)) };
+        Some(AllocHandle::new(ptr, size).with_meta(want as u64))
+    }
+
+    fn free(&mut self, handle: AllocHandle) {
+        let mut off = handle.ptr.as_ptr() as usize - self.arena.as_ptr() as usize;
+        let mut order = self
+            .live
+            .remove(&off)
+            .expect("buddy: free of unknown/double-freed block");
+        // Merge with the buddy as long as it is free at the same order.
+        while order < self.max_order {
+            let buddy = off ^ (1usize << order);
+            let lvl = self.level(order);
+            if let Some(pos) = self.free_lists[lvl].iter().position(|&b| b == buddy) {
+                self.free_lists[lvl].swap_remove(pos);
+                self.total_merges += 1;
+                off = off.min(buddy);
+                order += 1;
+            } else {
+                break;
+            }
+        }
+        let lvl = self.level(order);
+        self.free_lists[lvl].push(off);
+    }
+
+    fn overhead_bytes(&self) -> usize {
+        self.free_lists.iter().map(|l| l.len() * 8).sum::<usize>() + self.live.len() * 16
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_splits_free_merges() {
+        let mut a = BuddyAllocator::new(1024);
+        let h = a.alloc(16).unwrap();
+        assert!(a.total_splits > 0);
+        a.free(h);
+        // Fully merged back to one arena-size block.
+        let m = a.frag_metrics();
+        assert_eq!(m.free_chunks, 1);
+        assert_eq!(m.largest_free, 1024);
+        assert_eq!(a.total_merges, a.total_splits);
+    }
+
+    #[test]
+    fn distinct_addresses_until_full() {
+        let mut a = BuddyAllocator::new(1024);
+        let mut seen = std::collections::BTreeSet::new();
+        let mut held = Vec::new();
+        // 1024 / 16 = 64 minimum blocks.
+        for _ in 0..64 {
+            let h = a.alloc(16).unwrap();
+            assert!(seen.insert(h.ptr.as_ptr() as usize));
+            held.push(h);
+        }
+        assert!(a.alloc(16).is_none());
+        for h in held {
+            a.free(h);
+        }
+        assert_eq!(a.frag_metrics().largest_free, 1024);
+    }
+
+    #[test]
+    fn oversize_rejected() {
+        let mut a = BuddyAllocator::new(256);
+        assert!(a.alloc(512).is_none());
+    }
+
+    #[test]
+    fn rounding_to_pow2_internal_waste() {
+        let mut a = BuddyAllocator::new(1024);
+        let h = a.alloc(17).unwrap(); // rounds to 32
+        assert_eq!(h.meta, 5); // order 5 = 32 bytes
+        let m = a.frag_metrics();
+        assert_eq!(m.total_free, 1024 - 32);
+        a.free(h);
+    }
+
+    #[test]
+    fn churn_returns_to_pristine() {
+        let mut a = BuddyAllocator::new(8192);
+        let mut rng = crate::util::Rng::new(3);
+        let mut live = Vec::new();
+        for _ in 0..3000 {
+            if live.is_empty() || rng.gen_bool(0.5) {
+                let size = rng.gen_usize(1, 256);
+                if let Some(h) = a.alloc(size) {
+                    live.push(h);
+                }
+            } else {
+                let i = rng.gen_usize(0, live.len());
+                a.free(live.swap_remove(i));
+            }
+        }
+        for h in live {
+            a.free(h);
+        }
+        let m = a.frag_metrics();
+        assert_eq!(m.free_chunks, 1, "all buddies must re-merge");
+        assert_eq!(m.largest_free, 8192);
+        assert_eq!(a.live_count(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown/double-freed")]
+    fn double_free_panics() {
+        let mut a = BuddyAllocator::new(256);
+        let h = a.alloc(16).unwrap();
+        a.free(h);
+        a.free(h);
+    }
+}

@@ -1,0 +1,215 @@
+//! `DebugHeapAllocator` — the "running within the debugger" substrate for
+//! reproducing **Figure 3**.
+//!
+//! The paper measured `malloc` inside the Visual Studio debugger, where the
+//! Windows debug CRT heap is active, and found allocations "up to 100
+//! times" slower (§IV.B; the figures show ~2–3 orders of magnitude). That
+//! heap is proprietary, but its cost drivers are documented and simple:
+//!
+//! 1. guard bands written and checked around every allocation,
+//! 2. fill patterns (0xCD on alloc, 0xDD on free) over the payload,
+//! 3. an allocation registry (every block linked into a list), and
+//! 4. heap verification sweeps that walk **all** live allocations.
+//!
+//! `DebugHeapAllocator` implements exactly those four mechanisms on top of
+//! `malloc`, so the Figure-3 reproduction exercises the same code-path
+//! shape on Linux. `DebugLevel` scales the paranoia: `Light` ≈ debug-build
+//! CRT defaults, `Full` ≈ debugger-attached with frequent heap checks.
+
+use core::ptr::NonNull;
+use std::collections::HashMap;
+
+use super::traits::{AllocHandle, BenchAllocator};
+
+const PRE: u64 = 0xFDFD_FDFD_FDFD_FDFD; // MSVC no-man's-land byte 0xFD
+const POST: u64 = 0xFDFD_FDFD_FDFD_FDFD;
+const GUARD: usize = 8;
+const FILL_ALLOC: u8 = 0xCD;
+const FILL_FREE: u8 = 0xDD;
+
+/// How much debug machinery to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DebugLevel {
+    /// Guards + fills + registry; verify only the freed block.
+    Light,
+    /// Everything in `Light`, plus a full-heap verification sweep on every
+    /// allocation **and** free (the debugger-attached behaviour that
+    /// produces the paper's ~1000× gap).
+    Full,
+}
+
+struct Record {
+    size: usize,
+    /// Allocation sequence number (kept for leak-report ordering parity
+    /// with GuardedPool; not otherwise read).
+    #[allow(dead_code)]
+    seq: u64,
+}
+
+/// Instrumented allocator reproducing debug-CRT behaviour.
+pub struct DebugHeapAllocator {
+    level: DebugLevel,
+    live: HashMap<usize, Record>,
+    seq: u64,
+    pub verifications: u64,
+    pub violations: u64,
+}
+
+impl DebugHeapAllocator {
+    pub fn new(level: DebugLevel) -> Self {
+        Self { level, live: HashMap::new(), seq: 0, verifications: 0, violations: 0 }
+    }
+
+    fn verify_block(&mut self, base: *mut u8, size: usize) -> bool {
+        // SAFETY: base..base+GUARD+size+GUARD is one of our live blocks.
+        unsafe {
+            let pre = (base as *const u64).read_unaligned();
+            let post = (base.add(GUARD + size) as *const u64).read_unaligned();
+            if pre != PRE || post != POST {
+                self.violations += 1;
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Walk every live allocation and verify its guards (the expensive
+    /// "heap check" a debugger-attached CRT performs).
+    fn verify_heap(&mut self) {
+        self.verifications += 1;
+        let blocks: Vec<(usize, usize)> =
+            self.live.iter().map(|(&base, r)| (base, r.size)).collect();
+        for (base, size) in blocks {
+            self.verify_block(base as *mut u8, size);
+        }
+    }
+
+    pub fn live_count(&self) -> usize {
+        self.live.len()
+    }
+}
+
+impl BenchAllocator for DebugHeapAllocator {
+    fn name(&self) -> &'static str {
+        match self.level {
+            DebugLevel::Light => "malloc-debug",
+            DebugLevel::Full => "malloc-debugger",
+        }
+    }
+
+    fn alloc(&mut self, size: usize) -> Option<AllocHandle> {
+        if self.level == DebugLevel::Full {
+            self.verify_heap();
+        }
+        let total = GUARD + size.max(1) + GUARD;
+        // SAFETY: plain malloc.
+        let base = unsafe { libc::malloc(total) } as *mut u8;
+        let base = NonNull::new(base)?;
+        unsafe {
+            (base.as_ptr() as *mut u64).write_unaligned(PRE);
+            core::ptr::write_bytes(base.as_ptr().add(GUARD), FILL_ALLOC, size.max(1));
+            (base.as_ptr().add(GUARD + size.max(1)) as *mut u64).write_unaligned(POST);
+        }
+        self.seq += 1;
+        self.live
+            .insert(base.as_ptr() as usize, Record { size: size.max(1), seq: self.seq });
+        // Hand out the payload pointer.
+        let payload = unsafe { NonNull::new_unchecked(base.as_ptr().add(GUARD)) };
+        Some(AllocHandle::new(payload, size))
+    }
+
+    fn free(&mut self, handle: AllocHandle) {
+        let base = unsafe { handle.ptr.as_ptr().sub(GUARD) };
+        let Some(rec) = self.live.remove(&(base as usize)) else {
+            self.violations += 1; // wild/double free
+            return;
+        };
+        // Local verification (always, like the CRT).
+        self.verify_block(base, rec.size);
+        // Fill freed payload.
+        unsafe { core::ptr::write_bytes(base.add(GUARD), FILL_FREE, rec.size) };
+        if self.level == DebugLevel::Full {
+            self.verify_heap();
+        }
+        // SAFETY: base came from our malloc.
+        unsafe { libc::free(base as *mut libc::c_void) };
+    }
+
+    fn overhead_bytes(&self) -> usize {
+        // 2 guards per block + registry entry estimate.
+        self.live.len() * (2 * GUARD + core::mem::size_of::<(usize, Record)>())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_and_fills() {
+        let mut a = DebugHeapAllocator::new(DebugLevel::Light);
+        let h = a.alloc(32).unwrap();
+        unsafe {
+            for i in 0..32 {
+                assert_eq!(h.ptr.as_ptr().add(i).read(), FILL_ALLOC);
+            }
+            std::ptr::write_bytes(h.ptr.as_ptr(), 0x11, 32);
+        }
+        a.free(h);
+        assert_eq!(a.live_count(), 0);
+        assert_eq!(a.violations, 0);
+    }
+
+    #[test]
+    fn detects_overrun_on_free() {
+        let mut a = DebugHeapAllocator::new(DebugLevel::Light);
+        let h = a.alloc(16).unwrap();
+        unsafe { h.ptr.as_ptr().add(16).write(0x00) }; // clobber post guard
+        a.free(h);
+        assert_eq!(a.violations, 1);
+    }
+
+    #[test]
+    fn detects_double_free() {
+        let mut a = DebugHeapAllocator::new(DebugLevel::Light);
+        let h = a.alloc(16).unwrap();
+        a.free(h);
+        a.free(h); // registry miss
+        assert_eq!(a.violations, 1);
+    }
+
+    #[test]
+    fn full_level_sweeps_heap() {
+        let mut a = DebugHeapAllocator::new(DebugLevel::Full);
+        let hs: Vec<_> = (0..10).map(|_| a.alloc(64).unwrap()).collect();
+        // 10 allocs → 10 sweeps (one before each).
+        assert_eq!(a.verifications, 10);
+        for h in hs {
+            a.free(h);
+        }
+        // +10 sweeps on frees.
+        assert_eq!(a.verifications, 20);
+        assert_eq!(a.violations, 0);
+    }
+
+    #[test]
+    fn full_level_catches_live_corruption_on_next_op() {
+        let mut a = DebugHeapAllocator::new(DebugLevel::Full);
+        let h1 = a.alloc(16).unwrap();
+        unsafe { h1.ptr.as_ptr().add(16).write(0xAA) }; // corrupt, keep live
+        let _h2 = a.alloc(16); // sweep sees the corruption
+        assert!(a.violations >= 1);
+    }
+
+    #[test]
+    fn overhead_scales_with_live_blocks() {
+        let mut a = DebugHeapAllocator::new(DebugLevel::Light);
+        assert_eq!(a.overhead_bytes(), 0);
+        let hs: Vec<_> = (0..5).map(|_| a.alloc(8).unwrap()).collect();
+        assert!(a.overhead_bytes() >= 5 * 16);
+        for h in hs {
+            a.free(h);
+        }
+        assert_eq!(a.overhead_bytes(), 0);
+    }
+}

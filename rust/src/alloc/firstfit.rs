@@ -1,0 +1,298 @@
+//! `FirstFitAllocator` — a classic general-purpose allocator over an
+//! arena: first-fit search, block splitting, and neighbour coalescing.
+//!
+//! This is the §VI strawman made measurable: "a general memory management
+//! system could become slower and fragmented over time. Whereby, a suitable
+//! block of memory would require considerable searching overhead, in
+//! addition to, small chunks of unsuitable and unusable memory being
+//! scattered around." Ablation A7 runs churn on this allocator and plots
+//! search length and external fragmentation against the pool's constant
+//! zero.
+//!
+//! Metadata lives out-of-band in a `BTreeMap<offset, Block>` (address
+//! order), which makes first-fit, splitting and coalescing explicit and
+//! safe while preserving the *algorithmic* costs the paper talks about
+//! (linear search, per-op map maintenance).
+
+use core::ptr::NonNull;
+use std::collections::BTreeMap;
+
+use super::fragmentation::FragMetrics;
+use super::traits::{AllocHandle, BenchAllocator};
+use crate::util::align::align_up;
+
+const ALIGN: usize = 16;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct Block {
+    size: usize,
+    free: bool,
+}
+
+/// First-fit arena allocator with coalescing.
+pub struct FirstFitAllocator {
+    arena: Vec<u8>,
+    /// offset → block descriptor, in address order.
+    blocks: BTreeMap<usize, Block>,
+    /// Cumulative number of free-blocks inspected by searches.
+    pub total_search_steps: u64,
+    pub total_allocs: u64,
+    pub failed_allocs: u64,
+}
+
+impl FirstFitAllocator {
+    pub fn new(arena_bytes: usize) -> Self {
+        let arena_bytes = align_up(arena_bytes, ALIGN);
+        let mut blocks = BTreeMap::new();
+        blocks.insert(0, Block { size: arena_bytes, free: true });
+        Self {
+            arena: vec![0u8; arena_bytes],
+            blocks,
+            total_search_steps: 0,
+            total_allocs: 0,
+            failed_allocs: 0,
+        }
+    }
+
+    fn offset_of(&self, p: NonNull<u8>) -> usize {
+        p.as_ptr() as usize - self.arena.as_ptr() as usize
+    }
+
+    fn ptr_at(&mut self, offset: usize) -> NonNull<u8> {
+        // SAFETY: offset < arena.len() by construction.
+        unsafe { NonNull::new_unchecked(self.arena.as_mut_ptr().add(offset)) }
+    }
+
+    /// Point-in-time fragmentation metrics (ablation A7).
+    pub fn frag_metrics(&self) -> FragMetrics {
+        let mut total_free = 0usize;
+        let mut largest_free = 0usize;
+        let mut free_chunks = 0usize;
+        for b in self.blocks.values().filter(|b| b.free) {
+            total_free += b.size;
+            largest_free = largest_free.max(b.size);
+            free_chunks += 1;
+        }
+        FragMetrics { total_free, largest_free, free_chunks }
+    }
+
+    /// Mean free-list positions inspected per allocation so far.
+    pub fn mean_search_len(&self) -> f64 {
+        if self.total_allocs == 0 {
+            0.0
+        } else {
+            self.total_search_steps as f64 / self.total_allocs as f64
+        }
+    }
+
+    /// Consistency check (tests): blocks tile the arena exactly, and no two
+    /// adjacent free blocks exist (coalescing invariant).
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut expect = 0usize;
+        let mut prev_free = false;
+        for (&off, b) in &self.blocks {
+            if off != expect {
+                return Err(format!("gap/overlap at offset {off}, expected {expect}"));
+            }
+            if b.size == 0 {
+                return Err(format!("zero-size block at {off}"));
+            }
+            if b.free && prev_free {
+                return Err(format!("uncoalesced neighbours at {off}"));
+            }
+            prev_free = b.free;
+            expect = off + b.size;
+        }
+        if expect != self.arena.len() {
+            return Err(format!("blocks cover {expect} of {} bytes", self.arena.len()));
+        }
+        Ok(())
+    }
+}
+
+impl BenchAllocator for FirstFitAllocator {
+    fn name(&self) -> &'static str {
+        "firstfit"
+    }
+
+    fn alloc(&mut self, size: usize) -> Option<AllocHandle> {
+        let need = align_up(size.max(1), ALIGN);
+        // First-fit: scan blocks in address order for the first free block
+        // large enough — the searching overhead §VI describes.
+        let mut steps = 0u64;
+        let mut found: Option<(usize, Block)> = None;
+        for (&off, &b) in &self.blocks {
+            if b.free {
+                steps += 1;
+                if b.size >= need {
+                    found = Some((off, b));
+                    break;
+                }
+            }
+        }
+        self.total_search_steps += steps;
+        let (off, b) = match found {
+            Some(x) => x,
+            None => {
+                self.failed_allocs += 1;
+                return None;
+            }
+        };
+        self.total_allocs += 1;
+        // Split if the remainder is worth keeping.
+        if b.size - need >= ALIGN {
+            self.blocks.insert(off, Block { size: need, free: false });
+            self.blocks.insert(off + need, Block { size: b.size - need, free: true });
+        } else {
+            self.blocks.insert(off, Block { size: b.size, free: false });
+        }
+        let ptr = self.ptr_at(off);
+        Some(AllocHandle::new(ptr, size))
+    }
+
+    fn free(&mut self, handle: AllocHandle) {
+        let off = self.offset_of(handle.ptr);
+        let b = *self.blocks.get(&off).expect("free of unknown block");
+        assert!(!b.free, "double free at offset {off}");
+        // Remove the block's own entry; it is re-inserted (possibly merged
+        // wider, possibly at an earlier offset) below.
+        self.blocks.remove(&off);
+        let mut start = off;
+        let mut size = b.size;
+        // Coalesce with next neighbour.
+        if let Some((&noff, &nb)) = self.blocks.range(off + b.size..).next() {
+            if nb.free && noff == off + b.size {
+                self.blocks.remove(&noff);
+                size += nb.size;
+            }
+        }
+        // Coalesce with previous neighbour.
+        if let Some((&poff, &pb)) = self.blocks.range(..off).next_back() {
+            if pb.free && poff + pb.size == off {
+                self.blocks.remove(&poff);
+                start = poff;
+                size += pb.size;
+            }
+        }
+        self.blocks.insert(start, Block { size, free: true });
+    }
+
+    fn overhead_bytes(&self) -> usize {
+        self.blocks.len() * (core::mem::size_of::<usize>() + core::mem::size_of::<Block>())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_coalesce_roundtrip() {
+        let mut a = FirstFitAllocator::new(1024);
+        let h1 = a.alloc(100).unwrap();
+        let h2 = a.alloc(200).unwrap();
+        let h3 = a.alloc(300).unwrap();
+        a.check_invariants().unwrap();
+        a.free(h2);
+        a.check_invariants().unwrap();
+        a.free(h1);
+        a.check_invariants().unwrap();
+        a.free(h3);
+        a.check_invariants().unwrap();
+        // Fully coalesced: one free block covering the arena.
+        let m = a.frag_metrics();
+        assert_eq!(m.free_chunks, 1);
+        assert_eq!(m.largest_free, 1024);
+    }
+
+    #[test]
+    fn split_leaves_usable_remainder() {
+        let mut a = FirstFitAllocator::new(256);
+        let h = a.alloc(64).unwrap();
+        let m = a.frag_metrics();
+        assert_eq!(m.total_free, 256 - 64);
+        a.free(h);
+    }
+
+    #[test]
+    fn exhaustion_fails_cleanly() {
+        let mut a = FirstFitAllocator::new(128);
+        let _h = a.alloc(120).unwrap();
+        assert!(a.alloc(64).is_none());
+        assert_eq!(a.failed_allocs, 1);
+    }
+
+    #[test]
+    fn fragmentation_blocks_large_alloc_despite_total_space() {
+        // The §VI scenario: enough total free bytes, but scattered.
+        let mut a = FirstFitAllocator::new(16 * 64);
+        let hs: Vec<_> = (0..32).map(|_| a.alloc(16).unwrap()).collect();
+        // Free every other block → 16 free chunks of 32 bytes (16+pad).
+        for (i, h) in hs.into_iter().enumerate() {
+            if i % 2 == 0 {
+                a.free(h);
+            }
+        }
+        let m = a.frag_metrics();
+        assert!(m.free_chunks > 1);
+        assert!(m.total_free >= 256);
+        // A request smaller than total_free but bigger than any chunk fails.
+        assert!(a.alloc(m.largest_free + 16).is_none());
+        assert!(m.external_frag() > 0.0);
+    }
+
+    #[test]
+    fn search_length_grows_with_fragmentation() {
+        let mut a = FirstFitAllocator::new(16 * 1024);
+        // Create a sandwich of small live blocks and small holes, then ask
+        // for a big block: the search must walk past every hole.
+        let hs: Vec<_> = (0..256).map(|_| a.alloc(16).unwrap()).collect();
+        for (i, h) in hs.into_iter().enumerate() {
+            if i % 2 == 0 {
+                a.free(h);
+            }
+        }
+        let before = a.total_search_steps;
+        let _ = a.alloc(1024); // fails or walks far
+        assert!(
+            a.total_search_steps - before > 50,
+            "big alloc should scan many holes: {}",
+            a.total_search_steps - before
+        );
+    }
+
+    #[test]
+    fn churn_preserves_invariants() {
+        let mut a = FirstFitAllocator::new(64 * 1024);
+        let mut rng = crate::util::Rng::new(7);
+        let mut live = Vec::new();
+        for step in 0..2000 {
+            if live.is_empty() || rng.gen_bool(0.55) {
+                let size = rng.gen_usize(1, 512);
+                if let Some(h) = a.alloc(size) {
+                    live.push(h);
+                }
+            } else {
+                let i = rng.gen_usize(0, live.len());
+                a.free(live.swap_remove(i));
+            }
+            if step % 100 == 0 {
+                a.check_invariants().unwrap();
+            }
+        }
+        for h in live {
+            a.free(h);
+        }
+        a.check_invariants().unwrap();
+        assert_eq!(a.frag_metrics().free_chunks, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_panics() {
+        let mut a = FirstFitAllocator::new(256);
+        let h = a.alloc(16).unwrap();
+        a.free(h);
+        a.free(h);
+    }
+}

@@ -1,0 +1,77 @@
+//! Fragmentation metrics (§VI) shared by the general-purpose baselines.
+
+/// Point-in-time external fragmentation measurement.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FragMetrics {
+    /// Total free bytes.
+    pub total_free: usize,
+    /// Largest single free chunk.
+    pub largest_free: usize,
+    /// Number of disjoint free chunks.
+    pub free_chunks: usize,
+}
+
+impl FragMetrics {
+    /// External fragmentation in [0, 1]: `1 - largest_free / total_free`.
+    /// 0 = all free memory is one chunk (the pool's invariant state);
+    /// → 1 = free memory is shattered into unusably small pieces.
+    pub fn external_frag(&self) -> f64 {
+        if self.total_free == 0 {
+            0.0
+        } else {
+            1.0 - self.largest_free as f64 / self.total_free as f64
+        }
+    }
+
+    /// Can a request of `size` bytes be satisfied?
+    pub fn can_fit(&self, size: usize) -> bool {
+        self.largest_free >= size
+    }
+}
+
+/// A fixed-size pool never fragments (§I "No-fragmentation"): every free
+/// block is usable for any request ≤ block size. This helper renders the
+/// pool's fragmentation as `FragMetrics` for apples-to-apples A7 plots.
+pub fn pool_frag_metrics(free_blocks: u32, block_size: usize) -> FragMetrics {
+    FragMetrics {
+        total_free: free_blocks as usize * block_size,
+        // Every free block is as good as any other: the "largest usable
+        // chunk" for pool-sized requests is the whole free set.
+        largest_free: free_blocks as usize * block_size,
+        free_chunks: 1,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_free_is_zero_frag() {
+        let m = FragMetrics { total_free: 0, largest_free: 0, free_chunks: 0 };
+        assert_eq!(m.external_frag(), 0.0);
+        assert!(!m.can_fit(1));
+    }
+
+    #[test]
+    fn single_chunk_is_zero_frag() {
+        let m = FragMetrics { total_free: 1000, largest_free: 1000, free_chunks: 1 };
+        assert_eq!(m.external_frag(), 0.0);
+        assert!(m.can_fit(1000));
+        assert!(!m.can_fit(1001));
+    }
+
+    #[test]
+    fn shattered_heap_high_frag() {
+        let m = FragMetrics { total_free: 1000, largest_free: 50, free_chunks: 20 };
+        assert!((m.external_frag() - 0.95).abs() < 1e-12);
+        assert!(!m.can_fit(51));
+    }
+
+    #[test]
+    fn pool_is_always_unfragmented() {
+        let m = pool_frag_metrics(100, 64);
+        assert_eq!(m.external_frag(), 0.0);
+        assert_eq!(m.total_free, 6400);
+    }
+}

@@ -1,0 +1,24 @@
+//! Baseline allocators and the uniform bench interface.
+//!
+//! * [`BenchAllocator`] — the trait every experiment drives.
+//! * [`SystemAllocator`] — `malloc`/`free` (the paper's §VIII baseline).
+//! * [`DebugHeapAllocator`] — simulated debug-CRT/debugger heap (Figure 3).
+//! * [`FirstFitAllocator`] — general first-fit with split/coalesce (§VI
+//!   fragmentation substrate).
+//! * [`BuddyAllocator`] — binary buddy system (second general baseline).
+//! * [`system::adapters`] — the paper's pools behind [`BenchAllocator`].
+
+pub mod buddy;
+pub mod debug_heap;
+pub mod firstfit;
+pub mod fragmentation;
+pub mod system;
+pub mod traits;
+
+pub use buddy::BuddyAllocator;
+pub use debug_heap::{DebugHeapAllocator, DebugLevel};
+pub use firstfit::FirstFitAllocator;
+pub use fragmentation::{pool_frag_metrics, FragMetrics};
+pub use system::adapters::{EagerPoolAllocator, PoolAllocator, PtrPoolAllocator};
+pub use system::SystemAllocator;
+pub use traits::{AllocHandle, BenchAllocator};

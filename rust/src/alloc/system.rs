@@ -1,0 +1,196 @@
+//! The general system allocator (the paper's `malloc` baseline, §VIII).
+//!
+//! Goes straight to `libc::malloc`/`free` — the same calls the paper's
+//! benchmark makes — rather than through `std::alloc` (which on glibc is
+//! the same thing plus a layout detour).
+
+use core::ptr::NonNull;
+
+use super::traits::{AllocHandle, BenchAllocator};
+
+/// `malloc`/`free` baseline.
+#[derive(Debug, Default)]
+pub struct SystemAllocator {
+    pub total_allocs: u64,
+    pub total_frees: u64,
+}
+
+impl SystemAllocator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl BenchAllocator for SystemAllocator {
+    fn name(&self) -> &'static str {
+        "malloc"
+    }
+
+    #[inline]
+    fn alloc(&mut self, size: usize) -> Option<AllocHandle> {
+        // SAFETY: plain malloc; size > 0 enforced below.
+        let p = unsafe { libc::malloc(size.max(1)) } as *mut u8;
+        let ptr = NonNull::new(p)?;
+        self.total_allocs += 1;
+        Some(AllocHandle::new(ptr, size))
+    }
+
+    #[inline]
+    fn free(&mut self, handle: AllocHandle) {
+        self.total_frees += 1;
+        // SAFETY: handle came from our `alloc`.
+        unsafe { libc::free(handle.ptr.as_ptr() as *mut libc::c_void) };
+    }
+}
+
+/// Pool adapters: wrap the paper's pools in the bench interface.
+pub mod adapters {
+    use super::*;
+    use crate::pool::{EagerPool, FixedPool, PtrFreeListPool};
+
+    /// The paper's lazy pool under the bench interface.
+    pub struct PoolAllocator {
+        pool: FixedPool,
+    }
+
+    impl PoolAllocator {
+        pub fn new(block_size: usize, num_blocks: u32) -> Self {
+            Self { pool: FixedPool::with_blocks(block_size, num_blocks) }
+        }
+
+        pub fn pool(&self) -> &FixedPool {
+            &self.pool
+        }
+    }
+
+    impl BenchAllocator for PoolAllocator {
+        fn name(&self) -> &'static str {
+            "pool"
+        }
+
+        #[inline]
+        fn alloc(&mut self, size: usize) -> Option<AllocHandle> {
+            debug_assert!(size <= self.pool.block_size(), "request exceeds slot");
+            self.pool.allocate().map(|p| AllocHandle::new(p, size))
+        }
+
+        #[inline]
+        fn free(&mut self, handle: AllocHandle) {
+            // SAFETY: the driver only frees handles it got from `alloc`.
+            unsafe { self.pool.deallocate(handle.ptr) };
+        }
+
+        fn overhead_bytes(&self) -> usize {
+            self.pool.stats().header_overhead_bytes
+        }
+    }
+
+    /// Eager-init pool baseline (ablation A1).
+    pub struct EagerPoolAllocator {
+        pool: EagerPool,
+    }
+
+    impl EagerPoolAllocator {
+        pub fn new(block_size: usize, num_blocks: u32) -> Self {
+            Self { pool: EagerPool::with_blocks(block_size, num_blocks) }
+        }
+    }
+
+    impl BenchAllocator for EagerPoolAllocator {
+        fn name(&self) -> &'static str {
+            "pool-eager"
+        }
+
+        #[inline]
+        fn alloc(&mut self, size: usize) -> Option<AllocHandle> {
+            self.pool.allocate().map(|p| AllocHandle::new(p, size))
+        }
+
+        #[inline]
+        fn free(&mut self, handle: AllocHandle) {
+            unsafe { self.pool.deallocate(handle.ptr) };
+        }
+    }
+
+    /// Pointer free-list pool baseline (ablation A2).
+    pub struct PtrPoolAllocator {
+        pool: PtrFreeListPool,
+    }
+
+    impl PtrPoolAllocator {
+        pub fn new(block_size: usize, num_blocks: u32) -> Self {
+            Self { pool: PtrFreeListPool::with_blocks(block_size, num_blocks) }
+        }
+    }
+
+    impl BenchAllocator for PtrPoolAllocator {
+        fn name(&self) -> &'static str {
+            "pool-ptrlist"
+        }
+
+        #[inline]
+        fn alloc(&mut self, size: usize) -> Option<AllocHandle> {
+            self.pool.allocate().map(|p| AllocHandle::new(p, size))
+        }
+
+        #[inline]
+        fn free(&mut self, handle: AllocHandle) {
+            unsafe { self.pool.deallocate(handle.ptr) };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::adapters::*;
+    use super::*;
+
+    #[test]
+    fn malloc_roundtrip() {
+        let mut a = SystemAllocator::new();
+        let h = a.alloc(128).unwrap();
+        unsafe { std::ptr::write_bytes(h.ptr.as_ptr(), 0x5A, 128) };
+        a.free(h);
+        assert_eq!(a.total_allocs, 1);
+        assert_eq!(a.total_frees, 1);
+    }
+
+    #[test]
+    fn malloc_zero_size_ok() {
+        let mut a = SystemAllocator::new();
+        let h = a.alloc(0).unwrap();
+        a.free(h);
+    }
+
+    #[test]
+    fn pool_adapter_matches_pool_semantics() {
+        let mut a = PoolAllocator::new(64, 4);
+        let hs: Vec<_> = (0..4).map(|_| a.alloc(64).unwrap()).collect();
+        assert!(a.alloc(64).is_none());
+        for h in hs {
+            a.free(h);
+        }
+        assert_eq!(a.pool().num_free(), 4);
+    }
+
+    #[test]
+    fn all_adapters_roundtrip() {
+        let mut allocators: Vec<Box<dyn BenchAllocator>> = vec![
+            Box::new(SystemAllocator::new()),
+            Box::new(PoolAllocator::new(256, 16)),
+            Box::new(EagerPoolAllocator::new(256, 16)),
+            Box::new(PtrPoolAllocator::new(256, 16)),
+        ];
+        for a in allocators.iter_mut() {
+            let mut held = Vec::new();
+            for _ in 0..16 {
+                let h = a.alloc(256).expect(a.name());
+                unsafe { h.ptr.as_ptr().write(0x42) };
+                held.push(h);
+            }
+            for h in held {
+                a.free(h);
+            }
+        }
+    }
+}

@@ -1,0 +1,66 @@
+//! Common allocator interface for the benchmark harness and workload
+//! driver, so the paper's pool, the system allocator, the debug heap and
+//! the general-purpose baselines are interchangeable in every experiment.
+
+use core::ptr::NonNull;
+
+/// An allocation handle: pointer + the metadata needed to free it again.
+///
+/// `meta` is allocator-private (e.g. `MultiPool` stores the origin class,
+/// `FirstFit` ignores it, the pool stores nothing).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AllocHandle {
+    pub ptr: NonNull<u8>,
+    pub size: usize,
+    pub meta: u64,
+}
+
+impl AllocHandle {
+    pub fn new(ptr: NonNull<u8>, size: usize) -> Self {
+        Self { ptr, size, meta: 0 }
+    }
+
+    pub fn with_meta(mut self, meta: u64) -> Self {
+        self.meta = meta;
+        self
+    }
+}
+
+/// The uniform allocator interface used by every bench and workload.
+///
+/// `&mut self` because the single-threaded paper algorithm is the subject
+/// under test; threaded ablations use the pool types directly.
+pub trait BenchAllocator {
+    /// Short display name for report tables (e.g. `"pool"`, `"malloc"`).
+    fn name(&self) -> &'static str;
+
+    /// Allocate `size` bytes; `None` on exhaustion.
+    fn alloc(&mut self, size: usize) -> Option<AllocHandle>;
+
+    /// Free a handle previously returned by `alloc`.
+    fn free(&mut self, handle: AllocHandle);
+
+    /// Optional: bytes of bookkeeping overhead currently in use.
+    fn overhead_bytes(&self) -> usize {
+        0
+    }
+
+    /// Optional: called between benchmark repetitions to reset internal
+    /// statistics (not allocations — those must be freed by the driver).
+    fn reset_stats(&mut self) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handle_meta_roundtrip() {
+        let mut x = 7u64;
+        let p = NonNull::new(&mut x as *mut u64 as *mut u8).unwrap();
+        let h = AllocHandle::new(p, 8).with_meta(42);
+        assert_eq!(h.size, 8);
+        assert_eq!(h.meta, 42);
+        assert_eq!(h.ptr, p);
+    }
+}

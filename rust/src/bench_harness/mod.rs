@@ -1,0 +1,14 @@
+//! Criterion-lite benchmark harness (criterion is unavailable offline).
+//!
+//! * [`Bencher`] — adaptive timing: warms up, picks an iteration count to
+//!   hit a target sample time, collects per-sample ns/iter, summarises.
+//! * [`Suite`] — named groups of benchmarks with CLI-style filtering,
+//!   markdown/CSV reporting into `bench_out/`.
+//!
+//! Used by every `benches/*.rs` target (`harness = false`).
+
+pub mod report;
+pub mod runner;
+
+pub use report::{write_csv, write_markdown, ReportTable};
+pub use runner::{BenchResult, Bencher, Suite};

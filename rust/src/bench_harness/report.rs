@@ -1,0 +1,211 @@
+//! Report writers: markdown + CSV tables into `bench_out/`, matching the
+//! row/series structure of the paper's figures so EXPERIMENTS.md can quote
+//! them directly.
+
+use std::io::Write;
+use std::path::Path;
+
+use super::runner::BenchResult;
+
+/// A 2-D results table: rows × columns of median ns (one per series),
+/// e.g. rows = allocation counts, columns = chunk sizes (Figures 3/4).
+#[derive(Debug, Clone)]
+pub struct ReportTable {
+    pub title: String,
+    pub row_label: String,
+    pub rows: Vec<String>,
+    pub cols: Vec<String>,
+    /// `cells[r][c]` — typically median ns; NaN renders as "-".
+    pub cells: Vec<Vec<f64>>,
+    pub unit: String,
+}
+
+impl ReportTable {
+    pub fn new(
+        title: impl Into<String>,
+        row_label: impl Into<String>,
+        rows: Vec<String>,
+        cols: Vec<String>,
+        unit: impl Into<String>,
+    ) -> Self {
+        let (nr, nc) = (rows.len(), cols.len());
+        Self {
+            title: title.into(),
+            row_label: row_label.into(),
+            rows,
+            cols,
+            cells: vec![vec![f64::NAN; nc]; nr],
+            unit: unit.into(),
+        }
+    }
+
+    pub fn set(&mut self, r: usize, c: usize, v: f64) {
+        self.cells[r][c] = v;
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut s = format!("### {}\n\n", self.title);
+        s.push_str(&format!("| {} |", self.row_label));
+        for c in &self.cols {
+            s.push_str(&format!(" {c} |"));
+        }
+        s.push('\n');
+        s.push_str("|---|");
+        for _ in &self.cols {
+            s.push_str("---|");
+        }
+        s.push('\n');
+        for (r, row) in self.rows.iter().enumerate() {
+            s.push_str(&format!("| {row} |"));
+            for c in 0..self.cols.len() {
+                let v = self.cells[r][c];
+                if v.is_nan() {
+                    s.push_str(" - |");
+                } else if v >= 1000.0 {
+                    s.push_str(&format!(" {v:.0} |"));
+                } else {
+                    s.push_str(&format!(" {v:.2} |"));
+                }
+            }
+            s.push('\n');
+        }
+        s.push_str(&format!("\n(unit: {})\n", self.unit));
+        s
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = format!("{}", self.row_label);
+        for c in &self.cols {
+            s.push_str(&format!(",{c}"));
+        }
+        s.push('\n');
+        for (r, row) in self.rows.iter().enumerate() {
+            s.push_str(row);
+            for c in 0..self.cols.len() {
+                let v = self.cells[r][c];
+                if v.is_nan() {
+                    s.push(',');
+                } else {
+                    s.push_str(&format!(",{v}"));
+                }
+            }
+            s.push('\n');
+        }
+        s
+    }
+}
+
+/// Write a markdown report of raw results + tables to
+/// `bench_out/<stem>.md`.
+pub fn write_markdown(
+    stem: &str,
+    results: &[BenchResult],
+    tables: &[ReportTable],
+) -> std::io::Result<std::path::PathBuf> {
+    write_markdown_to(Path::new("bench_out"), stem, results, tables)
+}
+
+/// As [`write_markdown`] but into an explicit directory.
+pub fn write_markdown_to(
+    dir: &Path,
+    stem: &str,
+    results: &[BenchResult],
+    tables: &[ReportTable],
+) -> std::io::Result<std::path::PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("{stem}.md"));
+    let mut f = std::fs::File::create(&path)?;
+    writeln!(f, "# {stem}\n")?;
+    for t in tables {
+        writeln!(f, "{}", t.to_markdown())?;
+    }
+    if !results.is_empty() {
+        writeln!(f, "## Raw results\n")?;
+        writeln!(f, "| bench | median | mean | p05 | p95 | samples |")?;
+        writeln!(f, "|---|---|---|---|---|---|")?;
+        for r in results {
+            writeln!(
+                f,
+                "| {} | {:.1} ns | {:.1} ns | {:.1} ns | {:.1} ns | {} |",
+                r.name,
+                r.summary.median,
+                r.summary.mean,
+                r.summary.p05,
+                r.summary.p95,
+                r.summary.count
+            )?;
+        }
+    }
+    Ok(path)
+}
+
+/// Write each table as CSV to `bench_out/<stem>_<i>.csv`.
+pub fn write_csv(stem: &str, tables: &[ReportTable]) -> std::io::Result<Vec<std::path::PathBuf>> {
+    write_csv_to(Path::new("bench_out"), stem, tables)
+}
+
+/// As [`write_csv`] but into an explicit directory.
+pub fn write_csv_to(
+    dir: &Path,
+    stem: &str,
+    tables: &[ReportTable],
+) -> std::io::Result<Vec<std::path::PathBuf>> {
+    std::fs::create_dir_all(dir)?;
+    let mut paths = Vec::new();
+    for (i, t) in tables.iter().enumerate() {
+        let path = dir.join(format!("{stem}_{i}.csv"));
+        std::fs::write(&path, t.to_csv())?;
+        paths.push(path);
+    }
+    Ok(paths)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_markdown_shape() {
+        let mut t = ReportTable::new(
+            "Fig 4(b)",
+            "allocs",
+            vec!["1000".into(), "2000".into()],
+            vec!["16B".into(), "64B".into()],
+            "ns/op",
+        );
+        t.set(0, 0, 5.2);
+        t.set(0, 1, 6.1);
+        t.set(1, 0, 5.3);
+        // (1,1) left NaN
+        let md = t.to_markdown();
+        assert!(md.contains("| allocs | 16B | 64B |"));
+        assert!(md.contains("| 1000 | 5.20 | 6.10 |"));
+        assert!(md.contains("| 2000 | 5.30 | - |"));
+        assert!(md.contains("unit: ns/op"));
+    }
+
+    #[test]
+    fn table_csv_shape() {
+        let mut t = ReportTable::new(
+            "x",
+            "n",
+            vec!["1".into()],
+            vec!["a".into(), "b".into()],
+            "ns",
+        );
+        t.set(0, 0, 1.5);
+        let csv = t.to_csv();
+        assert_eq!(csv, "n,a,b\n1,1.5,\n");
+    }
+
+    #[test]
+    fn write_files() {
+        let t = ReportTable::new("t", "r", vec!["1".into()], vec!["c".into()], "ns");
+        let tmp = std::env::temp_dir().join("fastpool_report_test");
+        let md = write_markdown_to(&tmp, "unit_test_stem", &[], &[t.clone()]).unwrap();
+        let csvs = write_csv_to(&tmp, "unit_test_stem", &[t]).unwrap();
+        assert!(md.exists());
+        assert_eq!(csvs.len(), 1);
+        assert!(csvs[0].exists());
+    }
+}

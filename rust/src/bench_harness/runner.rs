@@ -1,0 +1,352 @@
+//! Adaptive micro-benchmark runner.
+
+use crate::util::stats::Summary;
+use crate::util::{fmt_ns, Timer};
+
+/// One benchmark's measurements.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// ns per iteration, one entry per sample.
+    pub samples_ns: Vec<f64>,
+    pub summary: Summary,
+    /// Iterations per sample the runner settled on.
+    pub iters_per_sample: u64,
+    /// Optional throughput denominator: "elements" processed per iteration
+    /// (ops in a trace, tokens in a batch …).
+    pub elements_per_iter: u64,
+}
+
+impl BenchResult {
+    /// ns per element (median-based).
+    pub fn ns_per_element(&self) -> f64 {
+        if self.elements_per_iter == 0 {
+            self.summary.median
+        } else {
+            self.summary.median / self.elements_per_iter as f64
+        }
+    }
+
+    pub fn elements_per_sec(&self) -> f64 {
+        let nspe = self.ns_per_element();
+        if nspe == 0.0 {
+            0.0
+        } else {
+            1e9 / nspe
+        }
+    }
+
+    pub fn one_line(&self) -> String {
+        format!(
+            "{:<44} {:>12}/iter  (p05 {:>10}, p95 {:>10}, n={})",
+            self.name,
+            fmt_ns(self.summary.median),
+            fmt_ns(self.summary.p05),
+            fmt_ns(self.summary.p95),
+            self.summary.count,
+        )
+    }
+}
+
+/// Measurement configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    /// Wall-clock spent warming up.
+    pub warmup_ns: u64,
+    /// Target wall-clock per sample.
+    pub sample_target_ns: u64,
+    /// Number of samples.
+    pub samples: usize,
+    /// Hard cap on total iterations (guards slow benches).
+    pub max_total_iters: u64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup_ns: 50_000_000,       // 50 ms
+            sample_target_ns: 10_000_000, // 10 ms
+            samples: 30,
+            max_total_iters: u64::MAX,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Faster settings for long-running end-to-end benches.
+    pub fn quick() -> Self {
+        Self {
+            warmup_ns: 10_000_000,
+            sample_target_ns: 5_000_000,
+            samples: 10,
+            max_total_iters: u64::MAX,
+        }
+    }
+}
+
+/// Adaptive bencher.
+pub struct Bencher {
+    cfg: BenchConfig,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new(BenchConfig::default())
+    }
+}
+
+impl Bencher {
+    pub fn new(cfg: BenchConfig) -> Self {
+        Self { cfg }
+    }
+
+    /// Benchmark `f`, which performs ONE iteration of the subject per call.
+    pub fn bench<F: FnMut()>(&self, name: impl Into<String>, mut f: F) -> BenchResult {
+        self.bench_with_elements(name, 1, &mut f)
+    }
+
+    /// Benchmark with a throughput denominator (`elements` per iteration).
+    pub fn bench_with_elements<F: FnMut()>(
+        &self,
+        name: impl Into<String>,
+        elements: u64,
+        f: &mut F,
+    ) -> BenchResult {
+        // Warm-up + estimate cost of one iteration.
+        let mut iters_done: u64 = 0;
+        let warm = Timer::start();
+        let mut one_iter_ns: u64;
+        loop {
+            let t = Timer::start();
+            f();
+            one_iter_ns = t.elapsed_ns().max(1);
+            iters_done += 1;
+            if warm.elapsed_ns() >= self.cfg.warmup_ns || iters_done >= 1_000_000 {
+                break;
+            }
+        }
+        // Iterations per sample to hit the target sample time.
+        let iters_per_sample = (self.cfg.sample_target_ns / one_iter_ns).clamp(1, 10_000_000);
+
+        let mut samples_ns = Vec::with_capacity(self.cfg.samples);
+        let mut total_iters = 0u64;
+        for _ in 0..self.cfg.samples {
+            if total_iters >= self.cfg.max_total_iters {
+                break;
+            }
+            let t = Timer::start();
+            for _ in 0..iters_per_sample {
+                f();
+            }
+            let ns = t.elapsed_ns();
+            samples_ns.push(ns as f64 / iters_per_sample as f64);
+            total_iters += iters_per_sample;
+        }
+        let summary = Summary::from_samples(&samples_ns);
+        BenchResult {
+            name: name.into(),
+            samples_ns,
+            summary,
+            iters_per_sample,
+            elements_per_iter: elements,
+        }
+    }
+
+    /// Benchmark a setup+run pair where setup must not be timed.
+    /// `setup` produces a state, `run` consumes it; one iteration = one
+    /// `run`. Used for creation-cost benches (A1) where each iteration
+    /// needs a fresh input.
+    pub fn bench_with_setup<S, T, F>(
+        &self,
+        name: impl Into<String>,
+        mut setup: S,
+        mut run: F,
+    ) -> BenchResult
+    where
+        S: FnMut() -> T,
+        F: FnMut(T),
+    {
+        // Estimate.
+        let mut est_ns = 0u64;
+        for _ in 0..3 {
+            let state = setup();
+            let t = Timer::start();
+            run(state);
+            est_ns = est_ns.max(t.elapsed_ns()).max(1);
+        }
+        let iters_per_sample =
+            (self.cfg.sample_target_ns / est_ns).clamp(1, 1_000_000);
+        let mut samples_ns = Vec::with_capacity(self.cfg.samples);
+        for _ in 0..self.cfg.samples {
+            // Pre-build states outside the timed region.
+            let states: Vec<T> = (0..iters_per_sample).map(|_| setup()).collect();
+            let t = Timer::start();
+            for state in states {
+                run(state);
+            }
+            let ns = t.elapsed_ns();
+            samples_ns.push(ns as f64 / iters_per_sample as f64);
+        }
+        let summary = Summary::from_samples(&samples_ns);
+        BenchResult {
+            name: name.into(),
+            samples_ns,
+            summary,
+            iters_per_sample,
+            elements_per_iter: 1,
+        }
+    }
+}
+
+/// A named collection of results with filtering and reporting.
+pub struct Suite {
+    pub name: String,
+    pub results: Vec<BenchResult>,
+    filter: Option<String>,
+    pub bencher: Bencher,
+}
+
+impl Suite {
+    /// `filter` comes from argv — run only benches whose name contains it.
+    pub fn new(name: impl Into<String>) -> Self {
+        let filter = std::env::args().nth(1).filter(|a| !a.starts_with('-'));
+        Self {
+            name: name.into(),
+            results: Vec::new(),
+            filter,
+            bencher: Bencher::default(),
+        }
+    }
+
+    pub fn with_config(mut self, cfg: BenchConfig) -> Self {
+        self.bencher = Bencher::new(cfg);
+        self
+    }
+
+    pub fn enabled(&self, name: &str) -> bool {
+        match &self.filter {
+            Some(f) => name.contains(f.as_str()),
+            None => true,
+        }
+    }
+
+    /// Run and record (prints the one-liner as it goes).
+    pub fn run<F: FnMut()>(&mut self, name: impl Into<String>, f: F) {
+        let name = name.into();
+        if !self.enabled(&name) {
+            return;
+        }
+        let r = self.bencher.bench(name, f);
+        println!("{}", r.one_line());
+        self.results.push(r);
+    }
+
+    /// Run with a throughput denominator.
+    pub fn run_elements<F: FnMut()>(&mut self, name: impl Into<String>, elements: u64, mut f: F) {
+        let name = name.into();
+        if !self.enabled(&name) {
+            return;
+        }
+        let r = self.bencher.bench_with_elements(name, elements, &mut f);
+        println!("{}", r.one_line());
+        self.results.push(r);
+    }
+
+    /// Record an externally-produced result (e.g. from `replay`).
+    pub fn record(&mut self, r: BenchResult) {
+        println!("{}", r.one_line());
+        self.results.push(r);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::black_box;
+
+    fn fast_cfg() -> BenchConfig {
+        BenchConfig {
+            warmup_ns: 100_000,
+            sample_target_ns: 100_000,
+            samples: 5,
+            max_total_iters: u64::MAX,
+        }
+    }
+
+    #[test]
+    fn bench_measures_something() {
+        let b = Bencher::new(fast_cfg());
+        let r = b.bench("spin", || {
+            let mut s = 0u64;
+            for i in 0..100 {
+                s = s.wrapping_add(black_box(i));
+            }
+            black_box(s);
+        });
+        assert!(r.summary.median > 0.0);
+        assert_eq!(r.samples_ns.len(), 5);
+        assert!(r.iters_per_sample >= 1);
+    }
+
+    #[test]
+    fn slower_code_measures_slower() {
+        let b = Bencher::new(fast_cfg());
+        let fast = b.bench("fast", || {
+            black_box(1 + 1);
+        });
+        let slow = b.bench("slow", || {
+            let mut s = 0u64;
+            for i in 0..10_000 {
+                s = s.wrapping_add(black_box(i));
+            }
+            black_box(s);
+        });
+        assert!(
+            slow.summary.median > fast.summary.median * 5.0,
+            "slow {} vs fast {}",
+            slow.summary.median,
+            fast.summary.median
+        );
+    }
+
+    #[test]
+    fn elements_denominator() {
+        let b = Bencher::new(fast_cfg());
+        let r = b.bench_with_elements("batch", 100, &mut || {
+            let mut s = 0u64;
+            for i in 0..100u64 {
+                s = s.wrapping_add(black_box(i));
+            }
+            black_box(s);
+        });
+        assert!(r.ns_per_element() < r.summary.median);
+        assert!(r.elements_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn bench_with_setup_excludes_setup() {
+        let b = Bencher::new(fast_cfg());
+        // Setup builds a big vec (slow); run only reads one element (fast).
+        let r = b.bench_with_setup(
+            "setup-heavy",
+            || vec![1u8; 100_000],
+            |v| {
+                black_box(v[0]);
+            },
+        );
+        // The timed part must be far cheaper than building 100 KB (~µs).
+        // Generous bound: dropping the vec is timed too, so just sanity.
+        assert!(r.summary.median < 1_000_000.0);
+    }
+
+    #[test]
+    fn one_line_formatting() {
+        let b = Bencher::new(fast_cfg());
+        let r = b.bench("fmt", || {
+            black_box(0);
+        });
+        let line = r.one_line();
+        assert!(line.contains("fmt"));
+        assert!(line.contains("/iter"));
+    }
+}

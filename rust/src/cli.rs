@@ -1,0 +1,151 @@
+//! Minimal CLI argument parser (clap is unavailable offline).
+//!
+//! Supports the launcher's needs: a subcommand word, `--key value`,
+//! `--key=value`, bare `--flag`, and positional arguments, with typed
+//! accessors and helpful errors.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding `argv[0]`).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Self, String> {
+        let mut out = Args::default();
+        let mut iter = args.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(rest) = arg.strip_prefix("--") {
+                if rest.is_empty() {
+                    // `--` separator: everything after is positional.
+                    out.positional.extend(iter);
+                    break;
+                }
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Result<Self, String> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name}: expected integer, got `{v}`")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name}: expected integer, got `{v}`")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name}: expected number, got `{v}`")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("serve --port 8080 --model=tiny --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.get("port"), Some("8080"));
+        assert_eq!(a.get("model"), Some("tiny"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn positionals() {
+        let a = parse("bench fig3 fig4");
+        assert_eq!(a.subcommand.as_deref(), Some("bench"));
+        assert_eq!(a.positional, vec!["fig3", "fig4"]);
+    }
+
+    #[test]
+    fn double_dash_separator() {
+        let a = parse("run --x 1 -- --not-an-option");
+        assert_eq!(a.get("x"), Some("1"));
+        assert_eq!(a.positional, vec!["--not-an-option"]);
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = parse("x --n 42 --rate 1.5");
+        assert_eq!(a.get_usize("n", 0).unwrap(), 42);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+        assert!((a.get_f64("rate", 0.0).unwrap() - 1.5).abs() < 1e-12);
+        let a = parse("x --n abc");
+        assert!(a.get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("x --verbose");
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get("verbose"), None);
+    }
+
+    #[test]
+    fn empty() {
+        let a = parse("");
+        assert_eq!(a.subcommand, None);
+        assert!(a.positional.is_empty());
+    }
+}

@@ -1,0 +1,192 @@
+//! Configuration for the serving stack: typed structs, a simple
+//! `key = value` config-file format (sections via `[name]` headers), and
+//! CLI overrides. (serde/toml are unavailable offline; this covers the
+//! subset a launcher needs.)
+
+use std::collections::BTreeMap;
+
+use crate::cli::Args;
+
+/// Raw parsed config file: `section.key → value`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RawConfig {
+    pub values: BTreeMap<String, String>,
+}
+
+impl RawConfig {
+    /// Parse `key = value` lines with optional `[section]` headers and
+    /// `#` comments.
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected `key = value`", ln + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            values.insert(key, v.trim().to_string());
+        }
+        Ok(Self { values })
+    }
+
+    pub fn load(path: &str) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("{key}: cannot parse `{v}`")),
+        }
+    }
+}
+
+/// Engine/server configuration (see DESIGN.md S21–S23).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServerConfig {
+    /// Directory holding `*.hlo.txt` + `meta.json` artifacts.
+    pub artifacts_dir: String,
+    /// KV blocks available to the block manager.
+    pub kv_blocks: u32,
+    /// Tokens per KV block.
+    pub block_tokens: u32,
+    /// Max sequences scheduled per engine step.
+    pub max_batch: usize,
+    /// Max waiting requests before admission rejects (backpressure).
+    pub queue_limit: usize,
+    /// Max new tokens a request may ask for.
+    pub max_tokens: u32,
+    /// Scheduler policy: "fcfs" or "sjf" (shortest prompt first).
+    pub policy: String,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            artifacts_dir: "artifacts".into(),
+            kv_blocks: 4096,
+            block_tokens: 16,
+            max_batch: 8,
+            queue_limit: 256,
+            max_tokens: 128,
+            policy: "fcfs".into(),
+        }
+    }
+}
+
+impl ServerConfig {
+    /// Layer: defaults ← config file section `[server]` ← CLI `--key`.
+    pub fn from_sources(raw: Option<&RawConfig>, args: &Args) -> Result<Self, String> {
+        let mut c = Self::default();
+        if let Some(raw) = raw {
+            c.artifacts_dir = raw
+                .get("server.artifacts_dir")
+                .unwrap_or(&c.artifacts_dir)
+                .to_string();
+            c.kv_blocks = raw.get_parse("server.kv_blocks", c.kv_blocks)?;
+            c.block_tokens = raw.get_parse("server.block_tokens", c.block_tokens)?;
+            c.max_batch = raw.get_parse("server.max_batch", c.max_batch)?;
+            c.queue_limit = raw.get_parse("server.queue_limit", c.queue_limit)?;
+            c.max_tokens = raw.get_parse("server.max_tokens", c.max_tokens)?;
+            c.policy = raw.get("server.policy").unwrap_or(&c.policy).to_string();
+        }
+        c.artifacts_dir = args.get_or("artifacts-dir", &c.artifacts_dir).to_string();
+        c.kv_blocks = args.get_u64("kv-blocks", c.kv_blocks as u64)? as u32;
+        c.block_tokens = args.get_u64("block-tokens", c.block_tokens as u64)? as u32;
+        c.max_batch = args.get_usize("max-batch", c.max_batch)?;
+        c.queue_limit = args.get_usize("queue-limit", c.queue_limit)?;
+        c.max_tokens = args.get_u64("max-tokens", c.max_tokens as u64)? as u32;
+        c.policy = args.get_or("policy", &c.policy).to_string();
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.kv_blocks == 0 {
+            return Err("kv_blocks must be > 0".into());
+        }
+        if self.block_tokens == 0 {
+            return Err("block_tokens must be > 0".into());
+        }
+        if self.max_batch == 0 {
+            return Err("max_batch must be > 0".into());
+        }
+        if self.policy != "fcfs" && self.policy != "sjf" {
+            return Err(format!("unknown policy `{}` (fcfs|sjf)", self.policy));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_sections_and_comments() {
+        let raw = RawConfig::parse(
+            "# top comment\n\
+             global_key = 1\n\
+             [server]\n\
+             kv_blocks = 128  # inline comment\n\
+             policy = sjf\n\
+             [other]\n\
+             x = y\n",
+        )
+        .unwrap();
+        assert_eq!(raw.get("global_key"), Some("1"));
+        assert_eq!(raw.get("server.kv_blocks"), Some("128"));
+        assert_eq!(raw.get("server.policy"), Some("sjf"));
+        assert_eq!(raw.get("other.x"), Some("y"));
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(RawConfig::parse("not a kv line").is_err());
+    }
+
+    #[test]
+    fn layering_defaults_file_cli() {
+        let raw = RawConfig::parse("[server]\nkv_blocks = 100\nmax_batch = 4\n").unwrap();
+        let args =
+            Args::parse(["--kv-blocks".to_string(), "200".to_string()]).unwrap();
+        let c = ServerConfig::from_sources(Some(&raw), &args).unwrap();
+        assert_eq!(c.kv_blocks, 200); // CLI wins
+        assert_eq!(c.max_batch, 4); // file wins over default
+        assert_eq!(c.block_tokens, 16); // default
+    }
+
+    #[test]
+    fn validation_errors() {
+        let mut c = ServerConfig::default();
+        c.policy = "lifo".into();
+        assert!(c.validate().is_err());
+        c.policy = "fcfs".into();
+        c.kv_blocks = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn bad_numeric_value_reported() {
+        let raw = RawConfig::parse("[server]\nkv_blocks = banana\n").unwrap();
+        let args = Args::default();
+        assert!(ServerConfig::from_sources(Some(&raw), &args).is_err());
+    }
+}

@@ -1,0 +1,305 @@
+//! The model-execution interface the engine drives.
+//!
+//! Two implementations:
+//! * [`XlaBackend`] — the real PJRT runtime (owns the KV literals, feeds
+//!   them through every call); used by the launcher and examples.
+//! * [`MockBackend`] — deterministic arithmetic "model" for coordinator
+//!   unit/integration/property tests (no artifacts needed). Its next-token
+//!   function depends only on (last token, sequence length), so
+//!   preemption-with-recompute must reproduce identical continuations —
+//!   the property the scheduler tests lean on.
+
+use crate::runtime::Runtime;
+
+/// Geometry the scheduler needs from a backend.
+#[derive(Debug, Clone)]
+pub struct BackendGeometry {
+    pub vocab: usize,
+    pub prefill_len: usize,
+    pub block_tokens: u32,
+    pub num_blocks: u32,
+    pub max_blocks_per_seq: usize,
+    pub scratch_block: u32,
+    pub batch_sizes: Vec<usize>,
+}
+
+impl BackendGeometry {
+    /// Max tokens a sequence can ever hold.
+    pub fn max_context(&self) -> u32 {
+        self.block_tokens * self.max_blocks_per_seq as u32
+    }
+
+    /// Smallest compiled batch variant ≥ want (fallback: largest).
+    pub fn pick_batch(&self, want: usize) -> usize {
+        let mut sizes = self.batch_sizes.clone();
+        sizes.sort_unstable();
+        for &b in &sizes {
+            if b >= want {
+                return b;
+            }
+        }
+        *sizes.last().unwrap()
+    }
+}
+
+/// Model execution: logits come back row-major `[batch, vocab]`.
+pub trait Backend {
+    fn geometry(&self) -> BackendGeometry;
+
+    /// Prefill `batch` lanes. `tokens`: `[batch * prefill_len]`,
+    /// `lens`: `[batch]`, `tables`: `[batch * max_blocks_per_seq]`.
+    fn prefill(
+        &mut self,
+        batch: usize,
+        tokens: &[i32],
+        lens: &[i32],
+        tables: &[i32],
+    ) -> Result<Vec<f32>, String>;
+
+    /// One decode step. `tokens`/`lens`: `[batch]`, `tables` as above.
+    fn decode(
+        &mut self,
+        batch: usize,
+        tokens: &[i32],
+        lens: &[i32],
+        tables: &[i32],
+    ) -> Result<Vec<f32>, String>;
+}
+
+// ---------------------------------------------------------------------------
+// Real backend
+// ---------------------------------------------------------------------------
+
+/// PJRT-backed implementation; owns the KV arena literals.
+pub struct XlaBackend {
+    rt: Runtime,
+    kv_k: xla::Literal,
+    kv_v: xla::Literal,
+    /// Cumulative ns inside PJRT execute (for the perf report).
+    pub model_ns: u64,
+    pub prefill_calls: u64,
+    pub decode_calls: u64,
+}
+
+// SAFETY: the xla crate's PJRT handles are raw pointers without Send
+// auto-derivation, but the CPU PJRT client is thread-safe and XlaBackend
+// owns its Runtime + KV literals exclusively — the engine (and hence the
+// backend) is only ever driven by one thread at a time (the server moves
+// the whole Engine into its single engine-loop thread).
+unsafe impl Send for XlaBackend {}
+
+impl XlaBackend {
+    pub fn new(rt: Runtime) -> Result<Self, String> {
+        let (kv_k, kv_v) = rt.fresh_kv()?;
+        Ok(Self { rt, kv_k, kv_v, model_ns: 0, prefill_calls: 0, decode_calls: 0 })
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+}
+
+impl Backend for XlaBackend {
+    fn geometry(&self) -> BackendGeometry {
+        let m = &self.rt.meta;
+        BackendGeometry {
+            vocab: m.vocab,
+            prefill_len: m.prefill_len,
+            block_tokens: m.block_tokens as u32,
+            num_blocks: m.num_blocks as u32,
+            max_blocks_per_seq: m.max_blocks_per_seq,
+            scratch_block: m.scratch_block as u32,
+            batch_sizes: m.batch_sizes.clone(),
+        }
+    }
+
+    fn prefill(
+        &mut self,
+        batch: usize,
+        tokens: &[i32],
+        lens: &[i32],
+        tables: &[i32],
+    ) -> Result<Vec<f32>, String> {
+        let t = std::time::Instant::now();
+        let (logits, kk, vv) =
+            self.rt.prefill(batch, tokens, lens, tables, &self.kv_k, &self.kv_v)?;
+        self.kv_k = kk;
+        self.kv_v = vv;
+        self.model_ns += t.elapsed().as_nanos() as u64;
+        self.prefill_calls += 1;
+        Ok(logits)
+    }
+
+    fn decode(
+        &mut self,
+        batch: usize,
+        tokens: &[i32],
+        lens: &[i32],
+        tables: &[i32],
+    ) -> Result<Vec<f32>, String> {
+        let t = std::time::Instant::now();
+        let (logits, kk, vv) =
+            self.rt.decode(batch, tokens, lens, tables, &self.kv_k, &self.kv_v)?;
+        self.kv_k = kk;
+        self.kv_v = vv;
+        self.model_ns += t.elapsed().as_nanos() as u64;
+        self.decode_calls += 1;
+        Ok(logits)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Mock backend
+// ---------------------------------------------------------------------------
+
+/// Deterministic fake model for coordinator tests.
+///
+/// Next-token function: `next(prev, total) = (prev*31 + total*17 + 7) % vocab`,
+/// expressed as one-hot logits. Depends only on sequence *content length*
+/// and last token, so recompute after preemption is bit-identical.
+pub struct MockBackend {
+    pub geo: BackendGeometry,
+    pub prefill_calls: u64,
+    pub decode_calls: u64,
+    /// Fail the next N decode calls (failure-injection tests).
+    pub fail_next_decodes: u32,
+}
+
+impl MockBackend {
+    pub fn new() -> Self {
+        Self::with_blocks(32, 16, 4)
+    }
+
+    /// `num_blocks` includes the scratch block.
+    pub fn with_blocks(num_blocks: u32, block_tokens: u32, max_blocks_per_seq: usize) -> Self {
+        Self {
+            geo: BackendGeometry {
+                vocab: 256,
+                prefill_len: 32,
+                block_tokens,
+                num_blocks,
+                max_blocks_per_seq,
+                scratch_block: num_blocks - 1,
+                batch_sizes: vec![1, 2, 4],
+            },
+            prefill_calls: 0,
+            decode_calls: 0,
+            fail_next_decodes: 0,
+        }
+    }
+
+    pub fn next_token(prev: i32, total: u32) -> i32 {
+        ((prev as i64 * 31 + total as i64 * 17 + 7) % 256) as i32
+    }
+
+    fn one_hot(&self, tok: i32, out: &mut [f32]) {
+        out.fill(0.0);
+        out[tok as usize % self.geo.vocab] = 1.0;
+    }
+}
+
+impl Default for MockBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Backend for MockBackend {
+    fn geometry(&self) -> BackendGeometry {
+        self.geo.clone()
+    }
+
+    fn prefill(
+        &mut self,
+        batch: usize,
+        tokens: &[i32],
+        lens: &[i32],
+        _tables: &[i32],
+    ) -> Result<Vec<f32>, String> {
+        assert_eq!(tokens.len(), batch * self.geo.prefill_len);
+        self.prefill_calls += 1;
+        let v = self.geo.vocab;
+        let mut logits = vec![0.0f32; batch * v];
+        for b in 0..batch {
+            let len = lens[b] as usize;
+            let row = &mut logits[b * v..(b + 1) * v];
+            if len == 0 {
+                row[0] = 1.0; // pad lane: arbitrary
+                continue;
+            }
+            let prev = tokens[b * self.geo.prefill_len + len - 1];
+            let tok = Self::next_token(prev, len as u32);
+            self.one_hot(tok, row);
+        }
+        Ok(logits)
+    }
+
+    fn decode(
+        &mut self,
+        batch: usize,
+        tokens: &[i32],
+        lens: &[i32],
+        _tables: &[i32],
+    ) -> Result<Vec<f32>, String> {
+        if self.fail_next_decodes > 0 {
+            self.fail_next_decodes -= 1;
+            return Err("injected decode failure".into());
+        }
+        assert_eq!(tokens.len(), batch);
+        self.decode_calls += 1;
+        let v = self.geo.vocab;
+        let mut logits = vec![0.0f32; batch * v];
+        for b in 0..batch {
+            let row = &mut logits[b * v..(b + 1) * v];
+            let tok = Self::next_token(tokens[b], lens[b] as u32 + 1);
+            self.one_hot(tok, row);
+        }
+        Ok(logits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mock_prefill_decode_consistency() {
+        // Continuing a prompt via decode must equal prefilling the longer
+        // prompt — the recompute-equivalence property.
+        let mut m = MockBackend::new();
+        let p = m.geo.prefill_len;
+        let mut toks = vec![0i32; p];
+        toks[0] = 10;
+        toks[1] = 20;
+        let lg = m.prefill(1, &toks, &[2], &[]).unwrap();
+        let t1 = crate::coordinator::sampler::argmax(&lg);
+
+        // decode from (t1, len 2 cached) → t2.
+        let lg2 = m.decode(1, &[t1], &[2], &[]).unwrap();
+        let t2 = crate::coordinator::sampler::argmax(&lg2);
+
+        // Replay: prefill [10, 20, t1] → must give t2.
+        let mut toks2 = vec![0i32; p];
+        toks2[..3].copy_from_slice(&[10, 20, t1]);
+        let lg3 = m.prefill(1, &toks2, &[3], &[]).unwrap();
+        assert_eq!(crate::coordinator::sampler::argmax(&lg3), t2);
+    }
+
+    #[test]
+    fn geometry_pick_batch() {
+        let g = MockBackend::new().geometry();
+        assert_eq!(g.pick_batch(1), 1);
+        assert_eq!(g.pick_batch(2), 2);
+        assert_eq!(g.pick_batch(3), 4);
+        assert_eq!(g.pick_batch(9), 4); // largest available
+        assert_eq!(g.max_context(), 64);
+    }
+
+    #[test]
+    fn failure_injection() {
+        let mut m = MockBackend::new();
+        m.fail_next_decodes = 1;
+        assert!(m.decode(1, &[1], &[1], &[]).is_err());
+        assert!(m.decode(1, &[1], &[1], &[]).is_ok());
+    }
+}

@@ -1,0 +1,591 @@
+//! The serving engine: continuous (iteration-level) batching over the
+//! paged KV cache, with admission control, optional preemption, and
+//! per-request accounting.
+//!
+//! One `step()` is one scheduler iteration (Orca-style):
+//!
+//! 1. **Admit**: pull waiting requests (FCFS or SJF) while the block pool
+//!    can hold their prompts and the batch has room; run ONE batched
+//!    prefill for the admitted set and sample their first tokens.
+//! 2. Otherwise **decode**: one batched decode step over all running
+//!    sequences (chunked to the compiled batch variants), sample, append.
+//! 3. On pool exhaustion mid-decode, **preempt** the youngest running
+//!    sequence: free its blocks and requeue it for recompute (its replay
+//!    prompt must fit the prefill window, else it aborts).
+//!
+//! The KV block pool IS the paper's allocator (`kvcache::BlockAllocator`);
+//! every admission/append/free on the hot path is an O(1) pool op.
+
+use std::collections::{HashMap, VecDeque};
+
+use super::backend::{Backend, BackendGeometry};
+use super::request::{FinishReason, Request, RequestOutput, RequestState, SamplingParams};
+use super::sampler;
+use crate::kvcache::{CacheError, KvCacheManager};
+use crate::metrics::Metrics;
+
+/// Admission policy for prompt blocks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    /// Admit when the prompt's blocks fit — may preempt later.
+    Optimistic,
+    /// Admit only when a worst-case context (max_blocks_per_seq) fits —
+    /// never preempts.
+    Conservative,
+}
+
+/// Scheduling order for the waiting queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    Fcfs,
+    /// Shortest prompt first.
+    Sjf,
+}
+
+/// Engine configuration.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub max_batch: usize,
+    pub queue_limit: usize,
+    pub admission: Admission,
+    pub policy: Policy,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self {
+            max_batch: 4,
+            queue_limit: 256,
+            admission: Admission::Optimistic,
+            policy: Policy::Fcfs,
+        }
+    }
+}
+
+/// The engine.
+pub struct Engine<B: Backend> {
+    pub backend: B,
+    pub kv: KvCacheManager,
+    pub cfg: EngineConfig,
+    geo: BackendGeometry,
+    waiting: VecDeque<u64>,
+    running: Vec<u64>,
+    reqs: HashMap<u64, Request>,
+    finished: Vec<RequestOutput>,
+    next_id: u64,
+    step_count: u64,
+    pub metrics: Metrics,
+}
+
+impl<B: Backend> Engine<B> {
+    pub fn new(backend: B, cfg: EngineConfig) -> Self {
+        let geo = backend.geometry();
+        let kv = KvCacheManager::new(
+            geo.num_blocks,
+            geo.block_tokens,
+            geo.max_blocks_per_seq,
+        );
+        Self {
+            backend,
+            kv,
+            cfg,
+            geo,
+            waiting: VecDeque::new(),
+            running: Vec::new(),
+            reqs: HashMap::new(),
+            finished: Vec::new(),
+            next_id: 1,
+            step_count: 0,
+            metrics: Metrics::new(),
+        }
+    }
+
+    /// Submit a request. Fails fast on overload (backpressure) or an
+    /// impossible prompt.
+    pub fn submit(&mut self, prompt: Vec<i32>, params: SamplingParams) -> Result<u64, String> {
+        if prompt.is_empty() {
+            return Err("empty prompt".into());
+        }
+        if prompt.len() > self.geo.prefill_len {
+            return Err(format!(
+                "prompt len {} exceeds prefill window {}",
+                prompt.len(),
+                self.geo.prefill_len
+            ));
+        }
+        if self.waiting.len() >= self.cfg.queue_limit {
+            self.metrics.counter("rejected").inc();
+            return Err("queue full".into());
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        let mut req = Request::new(id, prompt, params);
+        req.arrived_step = self.step_count;
+        self.reqs.insert(id, req);
+        self.waiting.push_back(id);
+        self.metrics.counter("submitted").inc();
+        Ok(id)
+    }
+
+    pub fn num_waiting(&self) -> usize {
+        self.waiting.len()
+    }
+
+    pub fn num_running(&self) -> usize {
+        self.running.len()
+    }
+
+    /// waiting + running (router load balancing).
+    pub fn load(&self) -> usize {
+        self.waiting.len() + self.running.len()
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.waiting.is_empty() || !self.running.is_empty()
+    }
+
+    /// Drain finished outputs collected so far.
+    pub fn take_finished(&mut self) -> Vec<RequestOutput> {
+        std::mem::take(&mut self.finished)
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.step_count
+    }
+
+    // ------------------------------------------------------------------
+    // Scheduling
+    // ------------------------------------------------------------------
+
+    /// Pick which waiting requests to admit this step.
+    fn plan_admission(&mut self) -> Vec<u64> {
+        if self.running.len() >= self.cfg.max_batch {
+            return Vec::new();
+        }
+        // SJF: stable-sort waiting by prompt length.
+        if self.cfg.policy == Policy::Sjf {
+            let mut ids: Vec<u64> = self.waiting.iter().copied().collect();
+            ids.sort_by_key(|id| self.reqs[id].replay_prompt().len());
+            self.waiting = ids.into();
+        }
+        let mut admitted = Vec::new();
+        let mut free = self.kv.num_free_blocks() as i64;
+        if self.cfg.admission == Admission::Conservative {
+            // Reserve worst-case growth for every running sequence so a
+            // conservative engine can never hit pool exhaustion.
+            let reserved: i64 = self
+                .running
+                .iter()
+                .map(|id| {
+                    self.geo.max_blocks_per_seq as i64
+                        - self.kv.seq(*id).map(|s| s.blocks.len()).unwrap_or(0) as i64
+                })
+                .sum();
+            free -= reserved;
+        }
+        let room = self.cfg.max_batch - self.running.len();
+        while admitted.len() < room {
+            let Some(&id) = self.waiting.front() else { break };
+            let prompt_tokens = self.reqs[&id].replay_prompt().len() as u32;
+            let needed = match self.cfg.admission {
+                Admission::Optimistic => self.kv.blocks_for(prompt_tokens).max(1) as i64,
+                Admission::Conservative => self.geo.max_blocks_per_seq as i64,
+            };
+            if needed > free {
+                break; // FCFS head-of-line: wait for blocks
+            }
+            free -= needed;
+            self.waiting.pop_front();
+            admitted.push(id);
+        }
+        admitted
+    }
+
+    /// Run one scheduler iteration. Returns the number of tokens produced.
+    pub fn step(&mut self) -> Result<usize, String> {
+        self.step_count += 1;
+        let admitted = self.plan_admission();
+        let produced = if !admitted.is_empty() {
+            self.do_prefill(admitted)?
+        } else if !self.running.is_empty() {
+            self.do_decode()?
+        } else {
+            0
+        };
+        self.metrics.gauge("running").set(self.running.len() as i64);
+        self.metrics.gauge("waiting").set(self.waiting.len() as i64);
+        self.metrics
+            .gauge("kv_free_blocks")
+            .set(self.kv.num_free_blocks() as i64);
+        Ok(produced)
+    }
+
+    /// Drive until all work completes (or `max_steps`). Returns outputs.
+    pub fn run_to_completion(&mut self, max_steps: u64) -> Result<Vec<RequestOutput>, String> {
+        let mut steps = 0;
+        while self.has_work() {
+            self.step()?;
+            steps += 1;
+            if steps > max_steps {
+                return Err(format!("no completion after {max_steps} steps"));
+            }
+        }
+        Ok(self.take_finished())
+    }
+
+    // ------------------------------------------------------------------
+    // Phases
+    // ------------------------------------------------------------------
+
+    fn do_prefill(&mut self, admitted: Vec<u64>) -> Result<usize, String> {
+        let p = self.geo.prefill_len;
+        let mb = self.geo.max_blocks_per_seq;
+        let batch = self.geo.pick_batch(admitted.len());
+        // Register sequences + build inputs (pad lanes: len 0, scratch table).
+        let mut tokens = vec![0i32; batch * p];
+        let mut lens = vec![0i32; batch];
+        let mut tables = vec![self.geo.scratch_block as i32; batch * mb];
+        for (lane, &id) in admitted.iter().enumerate() {
+            let replay = self.reqs[&id].replay_prompt();
+            self.kv
+                .create_seq(id, replay.len() as u32)
+                .map_err(|e| format!("admission raced: {e}"))?;
+            tokens[lane * p..lane * p + replay.len()].copy_from_slice(&replay);
+            lens[lane] = replay.len() as i32;
+            tables[lane * mb..(lane + 1) * mb]
+                .copy_from_slice(&self.kv.table_row(id).unwrap());
+            let req = self.reqs.get_mut(&id).unwrap();
+            req.state = RequestState::Running;
+            if req.first_scheduled_step.is_none() {
+                req.first_scheduled_step = Some(self.step_count);
+            }
+        }
+        let logits = self.backend.prefill(batch, &tokens, &lens, &tables)?;
+        self.metrics.counter("prefill_batches").inc();
+        // Sample first tokens.
+        let v = self.geo.vocab;
+        let mut produced = 0;
+        for (lane, &id) in admitted.iter().enumerate() {
+            let row = &logits[lane * v..(lane + 1) * v];
+            let params = self.reqs[&id].params.clone();
+            let tok = sampler::sample(row, &params, self.reqs[&id].total_tokens() as u64);
+            produced += 1;
+            self.running.push(id);
+            self.commit_token(id, tok)?;
+        }
+        Ok(produced)
+    }
+
+    fn do_decode(&mut self) -> Result<usize, String> {
+        let mb = self.geo.max_blocks_per_seq;
+        let ids: Vec<u64> = self.running.clone();
+        let mut produced = 0;
+        // Chunk the running set into compiled batch variants.
+        for chunk in ids.chunks(self.geo.pick_batch(ids.len().min(self.cfg.max_batch))) {
+            let batch = self.geo.pick_batch(chunk.len());
+            let mut tokens = vec![0i32; batch];
+            let mut lens = vec![0i32; batch];
+            let mut tables = vec![self.geo.scratch_block as i32; batch * mb];
+            for (lane, &id) in chunk.iter().enumerate() {
+                let req = &self.reqs[&id];
+                // Last token is the most recent generated one (running seqs
+                // always have ≥1 generated token, from prefill sampling).
+                tokens[lane] = *req.generated.last().expect("running seq has a token");
+                // Cache currently holds total_tokens - 1 (the new token's
+                // K/V is written by this decode call).
+                lens[lane] = (req.total_tokens() - 1) as i32;
+                tables[lane * mb..(lane + 1) * mb]
+                    .copy_from_slice(&self.kv.table_row(id).unwrap());
+            }
+            let logits = self.backend.decode(batch, &tokens, &lens, &tables)?;
+            self.metrics.counter("decode_batches").inc();
+            let v = self.geo.vocab;
+            for (lane, &id) in chunk.iter().enumerate() {
+                let row = &logits[lane * v..(lane + 1) * v];
+                let params = self.reqs[&id].params.clone();
+                let tok = sampler::sample(row, &params, self.reqs[&id].total_tokens() as u64);
+                produced += 1;
+                self.commit_token(id, tok)?;
+            }
+        }
+        Ok(produced)
+    }
+
+    /// Append a sampled token: pool accounting, finish detection,
+    /// preemption on exhaustion.
+    fn commit_token(&mut self, id: u64, tok: i32) -> Result<(), String> {
+        // The token's K/V slot: append_token allocates the block if this
+        // token crossed a boundary. (The model already wrote K/V into the
+        // slot — block ownership was guaranteed by the table row; a fresh
+        // block is needed only for the NEXT step's write, so allocating
+        // here keeps the table ready before the next decode.)
+        let preempted_mid_chunk = {
+            let req = &self.reqs[&id];
+            req.state == RequestState::Preempted
+        };
+        let finish = {
+            let req = self.reqs.get_mut(&id).unwrap();
+            req.push_token(tok)
+        };
+        if let Some(reason) = finish {
+            self.finish(id, reason);
+            return Ok(());
+        }
+        if preempted_mid_chunk {
+            // The seq lost its blocks to a preemption earlier in this same
+            // chunk; the token (computed before the preemption) is kept in
+            // `generated` so the replay prompt stays exact, but there is no
+            // cache accounting to do.
+            return Ok(());
+        }
+        match self.kv.append_token(id) {
+            Ok(()) => Ok(()),
+            Err(CacheError::ContextOverflow) => {
+                self.finish(id, FinishReason::ContextOverflow);
+                Ok(())
+            }
+            Err(CacheError::OutOfBlocks { .. }) => {
+                self.metrics.counter("pool_exhaustion_events").inc();
+                // Preempt the *youngest* running sequence (LIFO) — possibly
+                // the one that just overflowed.
+                let victim = *self.running.last().unwrap();
+                self.preempt(victim);
+                if victim != id {
+                    // Retry the original append now that blocks are free.
+                    match self.kv.append_token(id) {
+                        Ok(()) => {}
+                        Err(_) => {
+                            // Still starved: preempt this one too.
+                            self.preempt(id);
+                        }
+                    }
+                }
+                Ok(())
+            }
+            Err(e) => Err(e.to_string()),
+        }
+    }
+
+    fn preempt(&mut self, id: u64) {
+        let _ = self.kv.free_seq(id);
+        self.running.retain(|&r| r != id);
+        let req = self.reqs.get_mut(&id).unwrap();
+        req.preemptions += 1;
+        self.metrics.counter("preemptions").inc();
+        if req.replay_prompt().len() <= self.geo.prefill_len {
+            req.state = RequestState::Preempted;
+            self.waiting.push_front(id);
+        } else {
+            // Cannot recompute through the prefill window.
+            self.finish(id, FinishReason::Aborted);
+        }
+    }
+
+    fn finish(&mut self, id: u64, reason: FinishReason) {
+        let _ = self.kv.free_seq(id);
+        self.running.retain(|&r| r != id);
+        self.waiting.retain(|&r| r != id); // may finish while preempted
+        let mut req = self.reqs.remove(&id).unwrap();
+        req.state = RequestState::Finished(reason);
+        req.finished_step = Some(self.step_count);
+        let first = req.first_scheduled_step.unwrap_or(self.step_count);
+        self.metrics.counter("finished").inc();
+        self.metrics
+            .histogram("queue_steps")
+            .record(first.saturating_sub(req.arrived_step));
+        self.finished.push(RequestOutput {
+            id,
+            prompt: req.prompt.clone(),
+            tokens: req.generated.clone(),
+            finish: reason,
+            preemptions: req.preemptions,
+            queue_steps: first.saturating_sub(req.arrived_step),
+            run_steps: self.step_count.saturating_sub(first),
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::MockBackend;
+
+    fn engine(cfg: EngineConfig) -> Engine<MockBackend> {
+        Engine::new(MockBackend::new(), cfg)
+    }
+
+    /// Expected mock continuation for a prompt.
+    fn mock_expect(prompt: &[i32], n: usize) -> Vec<i32> {
+        let mut out = Vec::new();
+        let mut prev = *prompt.last().unwrap();
+        let mut total = prompt.len() as u32;
+        for _ in 0..n {
+            let t = MockBackend::next_token(prev, total);
+            out.push(t);
+            prev = t;
+            total += 1;
+        }
+        out
+    }
+
+    #[test]
+    fn single_request_end_to_end() {
+        let mut e = engine(EngineConfig::default());
+        let id = e.submit(vec![10, 20, 30], SamplingParams::greedy(6)).unwrap();
+        let outs = e.run_to_completion(1000).unwrap();
+        assert_eq!(outs.len(), 1);
+        assert_eq!(outs[0].id, id);
+        assert_eq!(outs[0].finish, FinishReason::Length);
+        assert_eq!(outs[0].tokens, mock_expect(&[10, 20, 30], 6));
+    }
+
+    #[test]
+    fn batch_of_requests_all_correct() {
+        let mut e = engine(EngineConfig { max_batch: 4, ..Default::default() });
+        let prompts: Vec<Vec<i32>> =
+            (0..6).map(|i| vec![i + 1, (i + 2) * 3, (i * 7) % 250]).collect();
+        for p in &prompts {
+            e.submit(p.clone(), SamplingParams::greedy(8)).unwrap();
+        }
+        let mut outs = e.run_to_completion(10_000).unwrap();
+        outs.sort_by_key(|o| o.id);
+        assert_eq!(outs.len(), 6);
+        for (o, p) in outs.iter().zip(&prompts) {
+            assert_eq!(o.tokens, mock_expect(p, 8), "req {}", o.id);
+            assert_eq!(o.finish, FinishReason::Length);
+        }
+        // All KV blocks returned to the pool.
+        assert_eq!(e.kv.num_seqs(), 0);
+        assert_eq!(e.kv.num_free_blocks(), e.backend.geo.num_blocks - 1);
+    }
+
+    #[test]
+    fn queue_limit_backpressure() {
+        let mut e = engine(EngineConfig { queue_limit: 2, ..Default::default() });
+        e.submit(vec![1], SamplingParams::greedy(1)).unwrap();
+        e.submit(vec![2], SamplingParams::greedy(1)).unwrap();
+        assert!(e.submit(vec![3], SamplingParams::greedy(1)).is_err());
+        assert_eq!(e.metrics.counter("rejected").get(), 1);
+    }
+
+    #[test]
+    fn prompt_too_long_rejected() {
+        let mut e = engine(EngineConfig::default());
+        let long = vec![1i32; 33]; // prefill window is 32
+        assert!(e.submit(long, SamplingParams::greedy(1)).is_err());
+        assert!(e.submit(vec![1i32; 32], SamplingParams::greedy(1)).is_ok());
+    }
+
+    #[test]
+    fn eos_stops_early() {
+        // Find the first mock token for this prompt and set it as EOS.
+        let prompt = vec![5, 6];
+        let first = mock_expect(&prompt, 1)[0];
+        let mut e = engine(EngineConfig::default());
+        e.submit(
+            prompt,
+            SamplingParams { eos: Some(first), max_tokens: 50, ..Default::default() },
+        )
+        .unwrap();
+        let outs = e.run_to_completion(1000).unwrap();
+        assert_eq!(outs[0].finish, FinishReason::Stop);
+        assert_eq!(outs[0].tokens.len(), 1);
+    }
+
+    #[test]
+    fn context_overflow_finishes_cleanly() {
+        // max context = 4 blocks × 16 tokens = 64; prompt 30 + max_tokens
+        // 100 would exceed → ContextOverflow.
+        let mut e = engine(EngineConfig::default());
+        e.submit(vec![9; 30], SamplingParams::greedy(100)).unwrap();
+        let outs = e.run_to_completion(10_000).unwrap();
+        assert_eq!(outs[0].finish, FinishReason::ContextOverflow);
+        // 30 prompt + 34 cached + 1 final uncached token = 35 max.
+        assert!(outs[0].tokens.len() <= 35, "{}", outs[0].tokens.len());
+        assert_eq!(e.kv.num_free_blocks(), e.backend.geo.num_blocks - 1);
+    }
+
+    #[test]
+    fn preemption_recovers_identical_output() {
+        // Tiny pool (9 = 8 data + scratch blocks) with long generations
+        // forces preemption; the mock's determinism means outputs must be
+        // IDENTICAL to an uncontended run.
+        let be = MockBackend::with_blocks(9, 4, 4); // blocks of 4 tokens
+        let mut e = Engine::new(be, EngineConfig { max_batch: 4, ..Default::default() });
+        let prompts: Vec<Vec<i32>> = (0..4).map(|i| vec![i * 3 + 1, i + 2]).collect();
+        for p in &prompts {
+            e.submit(p.clone(), SamplingParams::greedy(10)).unwrap();
+        }
+        let mut outs = e.run_to_completion(100_000).unwrap();
+        outs.sort_by_key(|o| o.id);
+        let preempted: u32 = outs.iter().map(|o| o.preemptions).sum();
+        assert!(preempted > 0, "test should exercise preemption");
+        for (o, p) in outs.iter().zip(&prompts) {
+            assert_eq!(o.finish, FinishReason::Length, "req {}", o.id);
+            assert_eq!(o.tokens, mock_expect(p, 10), "req {} after preemption", o.id);
+        }
+        assert_eq!(e.metrics.counter("preemptions").get() as u32, preempted);
+    }
+
+    #[test]
+    fn conservative_admission_never_preempts() {
+        let be = MockBackend::with_blocks(9, 4, 4);
+        let mut e = Engine::new(
+            be,
+            EngineConfig {
+                max_batch: 4,
+                admission: Admission::Conservative,
+                ..Default::default()
+            },
+        );
+        for i in 0..4 {
+            e.submit(vec![i + 1, i + 5], SamplingParams::greedy(10)).unwrap();
+        }
+        let outs = e.run_to_completion(100_000).unwrap();
+        assert_eq!(outs.len(), 4);
+        assert_eq!(e.metrics.counter("preemptions").get(), 0);
+        assert!(outs.iter().all(|o| o.finish == FinishReason::Length));
+    }
+
+    #[test]
+    fn sjf_schedules_short_prompts_first() {
+        let mut e = engine(EngineConfig {
+            max_batch: 1,
+            policy: Policy::Sjf,
+            ..Default::default()
+        });
+        let long = e.submit(vec![1; 20], SamplingParams::greedy(1)).unwrap();
+        let short = e.submit(vec![2; 2], SamplingParams::greedy(1)).unwrap();
+        let outs = e.run_to_completion(1000).unwrap();
+        let pos = |id| outs.iter().position(|o| o.id == id).unwrap();
+        assert!(pos(short) < pos(long), "short prompt should finish first");
+    }
+
+    #[test]
+    fn fcfs_preserves_order_single_lane() {
+        let mut e = engine(EngineConfig { max_batch: 1, ..Default::default() });
+        let a = e.submit(vec![1; 20], SamplingParams::greedy(1)).unwrap();
+        let b = e.submit(vec![2; 2], SamplingParams::greedy(1)).unwrap();
+        let outs = e.run_to_completion(1000).unwrap();
+        let pos = |id| outs.iter().position(|o| o.id == id).unwrap();
+        assert!(pos(a) < pos(b));
+    }
+
+    #[test]
+    fn metrics_populated() {
+        let mut e = engine(EngineConfig::default());
+        e.submit(vec![1, 2], SamplingParams::greedy(3)).unwrap();
+        e.run_to_completion(1000).unwrap();
+        assert_eq!(e.metrics.counter("submitted").get(), 1);
+        assert_eq!(e.metrics.counter("finished").get(), 1);
+        assert!(e.metrics.counter("decode_batches").get() >= 1);
+        assert!(e.metrics.counter("prefill_batches").get() >= 1);
+    }
+
+    #[test]
+    fn idle_step_is_noop() {
+        let mut e = engine(EngineConfig::default());
+        assert_eq!(e.step().unwrap(), 0);
+        assert!(!e.has_work());
+    }
+}

@@ -1,0 +1,24 @@
+//! L3 coordinator: the serving framework whose allocation hot paths run on
+//! the paper's pool.
+//!
+//! * [`request`] — request lifecycle FSM, sampling params, outputs.
+//! * [`backend`] — model execution interface: [`XlaBackend`] (PJRT) and
+//!   [`MockBackend`] (deterministic, for tests).
+//! * [`engine`] — continuous-batching scheduler with admission control and
+//!   preemption over the [`crate::kvcache`] block pool.
+//! * [`router`] — multi-engine routing (round-robin / least-loaded).
+//! * [`sampler`], [`tokenizer`] — greedy/top-k sampling, byte tokenizer.
+
+pub mod backend;
+pub mod engine;
+pub mod request;
+pub mod router;
+pub mod server;
+pub mod sampler;
+pub mod tokenizer;
+
+pub use backend::{Backend, BackendGeometry, MockBackend, XlaBackend};
+pub use engine::{Admission, Engine, EngineConfig, Policy};
+pub use request::{FinishReason, Request, RequestOutput, RequestState, SamplingParams};
+pub use router::{GlobalId, RoutePolicy, Router};
+pub use server::Server;

@@ -1,0 +1,161 @@
+//! Request model: lifecycle state machine, sampling parameters, outputs.
+
+/// Sampling configuration for one request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SamplingParams {
+    /// Stop after this many generated tokens.
+    pub max_tokens: u32,
+    /// Optional stop token.
+    pub eos: Option<i32>,
+    /// 0 = greedy; k > 0 = top-k sampling.
+    pub top_k: u32,
+    /// Softmax temperature for top-k (ignored for greedy).
+    pub temperature: f32,
+    /// Per-request sampling seed (deterministic replay).
+    pub seed: u64,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        Self { max_tokens: 16, eos: None, top_k: 0, temperature: 1.0, seed: 0 }
+    }
+}
+
+impl SamplingParams {
+    pub fn greedy(max_tokens: u32) -> Self {
+        Self { max_tokens, ..Default::default() }
+    }
+}
+
+/// Why a request finished.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Hit `max_tokens`.
+    Length,
+    /// Produced the EOS token.
+    Stop,
+    /// Would exceed the model's max context.
+    ContextOverflow,
+    /// Preempted and could not be recovered (prompt+generated exceeds the
+    /// prefill window, so recompute is impossible).
+    Aborted,
+    /// Rejected at admission (queue full).
+    Rejected,
+}
+
+/// Lifecycle states (§DESIGN S22).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestState {
+    Queued,
+    Running,
+    /// Evicted under memory pressure, waiting to be re-prefilled.
+    Preempted,
+    Finished(FinishReason),
+}
+
+/// A generation request moving through the engine.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub params: SamplingParams,
+    pub state: RequestState,
+    pub generated: Vec<i32>,
+    // -- timing (engine step indices; wall times live in metrics) --
+    pub arrived_step: u64,
+    pub first_scheduled_step: Option<u64>,
+    pub finished_step: Option<u64>,
+    pub preemptions: u32,
+}
+
+impl Request {
+    pub fn new(id: u64, prompt: Vec<i32>, params: SamplingParams) -> Self {
+        Self {
+            id,
+            prompt,
+            params,
+            state: RequestState::Queued,
+            generated: Vec::new(),
+            arrived_step: 0,
+            first_scheduled_step: None,
+            finished_step: None,
+            preemptions: 0,
+        }
+    }
+
+    /// Total tokens the sequence currently holds (prompt + generated).
+    pub fn total_tokens(&self) -> u32 {
+        (self.prompt.len() + self.generated.len()) as u32
+    }
+
+    pub fn is_finished(&self) -> bool {
+        matches!(self.state, RequestState::Finished(_))
+    }
+
+    /// Record a generated token; returns the finish reason if the request
+    /// is now complete.
+    pub fn push_token(&mut self, tok: i32) -> Option<FinishReason> {
+        self.generated.push(tok);
+        if self.params.eos == Some(tok) {
+            return Some(FinishReason::Stop);
+        }
+        if self.generated.len() as u32 >= self.params.max_tokens {
+            return Some(FinishReason::Length);
+        }
+        None
+    }
+
+    /// The "replay prompt" used after preemption: original prompt plus
+    /// everything generated so far (recompute-based recovery).
+    pub fn replay_prompt(&self) -> Vec<i32> {
+        let mut p = self.prompt.clone();
+        p.extend_from_slice(&self.generated);
+        p
+    }
+}
+
+/// Final result handed back to the caller.
+#[derive(Debug, Clone)]
+pub struct RequestOutput {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub tokens: Vec<i32>,
+    pub finish: FinishReason,
+    pub preemptions: u32,
+    /// Engine steps spent queued before first schedule.
+    pub queue_steps: u64,
+    /// Engine steps from first schedule to finish.
+    pub run_steps: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_token_finish_length() {
+        let mut r = Request::new(1, vec![1, 2], SamplingParams::greedy(2));
+        assert_eq!(r.push_token(5), None);
+        assert_eq!(r.push_token(6), Some(FinishReason::Length));
+        assert_eq!(r.generated, vec![5, 6]);
+    }
+
+    #[test]
+    fn push_token_finish_eos() {
+        let mut r = Request::new(
+            1,
+            vec![1],
+            SamplingParams { eos: Some(0), max_tokens: 10, ..Default::default() },
+        );
+        assert_eq!(r.push_token(3), None);
+        assert_eq!(r.push_token(0), Some(FinishReason::Stop));
+    }
+
+    #[test]
+    fn replay_prompt_includes_generated() {
+        let mut r = Request::new(1, vec![1, 2], SamplingParams::greedy(5));
+        r.push_token(9);
+        assert_eq!(r.replay_prompt(), vec![1, 2, 9]);
+        assert_eq!(r.total_tokens(), 3);
+    }
+}

@@ -1,0 +1,171 @@
+//! Multi-engine router: spreads requests across engine replicas
+//! (round-robin or least-loaded), steps them all, and merges outputs.
+//! Reference shape: vllm-project/router.
+
+use super::backend::Backend;
+use super::engine::Engine;
+use super::request::{RequestOutput, SamplingParams};
+
+/// Routing policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    RoundRobin,
+    LeastLoaded,
+}
+
+/// A global request id: (engine index, engine-local id).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GlobalId {
+    pub engine: usize,
+    pub local: u64,
+}
+
+/// In-process router over engine replicas.
+pub struct Router<B: Backend> {
+    engines: Vec<Engine<B>>,
+    policy: RoutePolicy,
+    rr_next: usize,
+    pub routed: Vec<u64>,
+}
+
+impl<B: Backend> Router<B> {
+    pub fn new(engines: Vec<Engine<B>>, policy: RoutePolicy) -> Self {
+        assert!(!engines.is_empty());
+        let n = engines.len();
+        Self { engines, policy, rr_next: 0, routed: vec![0; n] }
+    }
+
+    pub fn num_engines(&self) -> usize {
+        self.engines.len()
+    }
+
+    pub fn engine(&self, i: usize) -> &Engine<B> {
+        &self.engines[i]
+    }
+
+    pub fn engine_mut(&mut self, i: usize) -> &mut Engine<B> {
+        &mut self.engines[i]
+    }
+
+    fn pick(&mut self) -> usize {
+        match self.policy {
+            RoutePolicy::RoundRobin => {
+                let i = self.rr_next;
+                self.rr_next = (self.rr_next + 1) % self.engines.len();
+                i
+            }
+            RoutePolicy::LeastLoaded => self
+                .engines
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.load())
+                .map(|(i, _)| i)
+                .unwrap(),
+        }
+    }
+
+    /// Route a request to an engine.
+    pub fn submit(
+        &mut self,
+        prompt: Vec<i32>,
+        params: SamplingParams,
+    ) -> Result<GlobalId, String> {
+        let engine = self.pick();
+        let local = self.engines[engine].submit(prompt, params)?;
+        self.routed[engine] += 1;
+        Ok(GlobalId { engine, local })
+    }
+
+    /// Step every engine once; returns tokens produced.
+    pub fn step_all(&mut self) -> Result<usize, String> {
+        let mut produced = 0;
+        for e in &mut self.engines {
+            produced += e.step()?;
+        }
+        Ok(produced)
+    }
+
+    pub fn has_work(&self) -> bool {
+        self.engines.iter().any(|e| e.has_work())
+    }
+
+    /// Drive all engines to completion; outputs tagged with engine index.
+    pub fn run_to_completion(
+        &mut self,
+        max_steps: u64,
+    ) -> Result<Vec<(usize, RequestOutput)>, String> {
+        let mut steps = 0;
+        while self.has_work() {
+            self.step_all()?;
+            steps += 1;
+            if steps > max_steps {
+                return Err(format!("router: no completion after {max_steps} steps"));
+            }
+        }
+        let mut outs = Vec::new();
+        for (i, e) in self.engines.iter_mut().enumerate() {
+            for o in e.take_finished() {
+                outs.push((i, o));
+            }
+        }
+        Ok(outs)
+    }
+
+    pub fn total_load(&self) -> usize {
+        self.engines.iter().map(|e| e.load()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::MockBackend;
+    use crate::coordinator::engine::EngineConfig;
+
+    fn router(n: usize, policy: RoutePolicy) -> Router<MockBackend> {
+        let engines = (0..n)
+            .map(|_| Engine::new(MockBackend::new(), EngineConfig::default()))
+            .collect();
+        Router::new(engines, policy)
+    }
+
+    #[test]
+    fn round_robin_spreads_evenly() {
+        let mut r = router(3, RoutePolicy::RoundRobin);
+        for i in 0..9 {
+            r.submit(vec![i + 1], SamplingParams::greedy(1)).unwrap();
+        }
+        assert_eq!(r.routed, vec![3, 3, 3]);
+    }
+
+    #[test]
+    fn least_loaded_balances_uneven_queues() {
+        let mut r = router(2, RoutePolicy::LeastLoaded);
+        // Pre-load engine 0 directly.
+        for i in 0..5 {
+            r.engine_mut(0).submit(vec![i + 1], SamplingParams::greedy(4)).unwrap();
+        }
+        for i in 0..4 {
+            let gid = r.submit(vec![i + 10], SamplingParams::greedy(4)).unwrap();
+            assert_eq!(gid.engine, 1, "submission {i} should avoid loaded engine");
+        }
+    }
+
+    #[test]
+    fn outputs_complete_across_engines() {
+        let mut r = router(2, RoutePolicy::RoundRobin);
+        let mut ids = Vec::new();
+        for i in 0..6 {
+            ids.push(r.submit(vec![i + 1, i + 2], SamplingParams::greedy(3)).unwrap());
+        }
+        let outs = r.run_to_completion(10_000).unwrap();
+        assert_eq!(outs.len(), 6);
+        for gid in ids {
+            assert!(
+                outs.iter().any(|(e, o)| *e == gid.engine && o.id == gid.local),
+                "{gid:?} missing"
+            );
+        }
+        assert_eq!(r.total_load(), 0);
+    }
+}

@@ -1,0 +1,116 @@
+//! Token sampling from logits: greedy argmax and top-k/temperature, all
+//! deterministic given the request seed.
+
+use crate::coordinator::request::SamplingParams;
+use crate::util::Rng;
+
+/// Sample one token from a `vocab`-sized logits row.
+pub fn sample(logits: &[f32], params: &SamplingParams, step: u64) -> i32 {
+    if params.top_k == 0 {
+        return argmax(logits);
+    }
+    // Deterministic per (seed, step) stream.
+    let mut rng = Rng::new(params.seed ^ step.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    let k = (params.top_k as usize).min(logits.len()).max(1);
+    let temp = params.temperature.max(1e-3);
+
+    // Top-k indices by logit.
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    idx.select_nth_unstable_by(k - 1, |&a, &b| {
+        logits[b].partial_cmp(&logits[a]).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let top = &idx[..k];
+
+    // Softmax over the top-k at the given temperature.
+    let max = top.iter().map(|&i| logits[i]).fold(f32::NEG_INFINITY, f32::max);
+    let weights: Vec<f64> = top
+        .iter()
+        .map(|&i| (((logits[i] - max) / temp) as f64).exp())
+        .collect();
+    let total: f64 = weights.iter().sum();
+    let mut u = rng.next_f64() * total;
+    for (w, &i) in weights.iter().zip(top) {
+        u -= w;
+        if u <= 0.0 {
+            return i as i32;
+        }
+    }
+    top[k - 1] as i32
+}
+
+/// Greedy argmax (ties → lowest index, matching numpy/jnp argmax).
+pub fn argmax(logits: &[f32]) -> i32 {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_max_lowest_tie() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.3]), 1);
+        assert_eq!(argmax(&[0.5, 0.5, 0.5]), 0);
+    }
+
+    #[test]
+    fn greedy_via_sample() {
+        let p = SamplingParams::greedy(1);
+        assert_eq!(sample(&[1.0, 3.0, 2.0], &p, 0), 1);
+    }
+
+    #[test]
+    fn topk_deterministic_per_seed_step() {
+        let p = SamplingParams { top_k: 3, seed: 42, ..Default::default() };
+        let logits: Vec<f32> = (0..100).map(|i| (i as f32 * 0.37).sin()).collect();
+        let a = sample(&logits, &p, 7);
+        let b = sample(&logits, &p, 7);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn topk_only_picks_topk() {
+        // One dominant + rest tiny: with k=2 only the top-2 can appear.
+        let mut logits = vec![-100.0f32; 50];
+        logits[10] = 5.0;
+        logits[20] = 4.0;
+        let p = SamplingParams { top_k: 2, temperature: 1.0, seed: 1, ..Default::default() };
+        for step in 0..50 {
+            let t = sample(&logits, &p, step);
+            assert!(t == 10 || t == 20, "sampled {t}");
+        }
+    }
+
+    #[test]
+    fn low_temperature_approaches_greedy() {
+        let logits = vec![0.0f32, 1.0, 0.5];
+        let p = SamplingParams {
+            top_k: 3,
+            temperature: 0.01,
+            seed: 3,
+            ..Default::default()
+        };
+        for step in 0..20 {
+            assert_eq!(sample(&logits, &p, step), 1);
+        }
+    }
+
+    #[test]
+    fn high_temperature_spreads() {
+        let logits = vec![0.0f32, 0.2, 0.1, 0.05];
+        let p = SamplingParams { top_k: 4, temperature: 50.0, seed: 9, ..Default::default() };
+        let mut seen = std::collections::BTreeSet::new();
+        for step in 0..200 {
+            seen.insert(sample(&logits, &p, step));
+        }
+        assert!(seen.len() >= 3, "only saw {seen:?}");
+    }
+}

@@ -1,0 +1,297 @@
+//! TCP front-end: newline-delimited JSON over `std::net`, one engine loop
+//! thread, N connection threads. This is the deployable face of the
+//! framework (the launcher's `serve --listen` mode).
+//!
+//! Protocol (one JSON object per line):
+//!
+//! ```text
+//! → {"prompt": "hello pool", "max_tokens": 16, "top_k": 0}
+//! ← {"id": 3, "text": "…", "tokens": [1,2,3], "finish": "length",
+//!    "queue_steps": 0, "run_steps": 17}
+//! ← {"error": "queue full"}            (on rejection)
+//! ```
+//!
+//! The engine thread owns the `Engine` (and through it the PJRT runtime
+//! and the KV block pool); connections talk to it via an mpsc channel, so
+//! the model hot path stays single-threaded and allocation-free of locks.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+use super::backend::Backend;
+use super::engine::Engine;
+use super::request::{FinishReason, RequestOutput, SamplingParams};
+use super::tokenizer;
+use crate::util::json::{self, Json};
+
+/// A submission handed to the engine thread.
+struct Submit {
+    prompt: Vec<i32>,
+    params: SamplingParams,
+    reply: Sender<Result<RequestOutput, String>>,
+}
+
+/// Server handle: join it to block until shutdown.
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+    engine_thread: Option<std::thread::JoinHandle<()>>,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl Server {
+    /// Start serving `engine` on `listener`. Returns immediately.
+    pub fn start<B: Backend + Send + 'static>(
+        mut engine: Engine<B>,
+        listener: TcpListener,
+    ) -> std::io::Result<Server> {
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let (tx, rx): (Sender<Submit>, Receiver<Submit>) = channel();
+
+        // Engine loop thread.
+        let shutdown_e = Arc::clone(&shutdown);
+        let engine_thread = std::thread::spawn(move || {
+            let mut waiters: HashMap<u64, Sender<Result<RequestOutput, String>>> =
+                HashMap::new();
+            loop {
+                // Drain submissions (non-blocking).
+                while let Ok(sub) = rx.try_recv() {
+                    match engine.submit(sub.prompt, sub.params) {
+                        Ok(id) => {
+                            waiters.insert(id, sub.reply);
+                        }
+                        Err(e) => {
+                            let _ = sub.reply.send(Err(e));
+                        }
+                    }
+                }
+                if engine.has_work() {
+                    if let Err(e) = engine.step() {
+                        // Fatal model error: fail all waiters and stop.
+                        for (_, w) in waiters.drain() {
+                            let _ = w.send(Err(format!("engine error: {e}")));
+                        }
+                        return;
+                    }
+                    for out in engine.take_finished() {
+                        if let Some(w) = waiters.remove(&out.id) {
+                            let _ = w.send(Ok(out));
+                        }
+                    }
+                } else {
+                    if shutdown_e.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    std::thread::sleep(std::time::Duration::from_micros(200));
+                }
+            }
+        });
+
+        // Accept loop thread (connections get their own threads).
+        let shutdown_a = Arc::clone(&shutdown);
+        let accept_thread = std::thread::spawn(move || {
+            let mut conn_threads = Vec::new();
+            while !shutdown_a.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let tx = tx.clone();
+                        let shutdown_c = Arc::clone(&shutdown_a);
+                        conn_threads.push(std::thread::spawn(move || {
+                            let _ = handle_conn(stream, tx, shutdown_c);
+                        }));
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+            for t in conn_threads {
+                let _ = t.join();
+            }
+        });
+
+        Ok(Server {
+            addr,
+            accept_thread: Some(accept_thread),
+            engine_thread: Some(engine_thread),
+            shutdown,
+        })
+    }
+
+    /// Signal shutdown and join the threads (waits for in-flight work).
+    pub fn stop(mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        if let Some(t) = self.engine_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    tx: Sender<Submit>,
+    shutdown: Arc<AtomicBool>,
+) -> std::io::Result<()> {
+    // Read with a timeout so idle keep-alive connections notice shutdown
+    // instead of pinning the accept thread's join forever.
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(100)))?;
+    let peer = stream.try_clone()?;
+    let mut reader = BufReader::new(peer);
+    let mut writer = stream;
+    let mut line = String::new();
+    loop {
+        // NOTE: `line` is cleared after successful processing, not here —
+        // a read timeout can leave a partial line buffered in it.
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(()), // client closed
+            Ok(_) => {}
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if shutdown.load(Ordering::Relaxed) {
+                    return Ok(());
+                }
+                continue;
+            }
+            Err(e) => return Err(e),
+        }
+        if line.trim().is_empty() {
+            line.clear();
+            continue;
+        }
+        let response = match parse_request(&line) {
+            Ok((prompt, params)) => {
+                let (reply_tx, reply_rx) = channel();
+                if tx.send(Submit { prompt, params, reply: reply_tx }).is_err() {
+                    err_json("server shutting down")
+                } else {
+                    match reply_rx.recv() {
+                        Ok(Ok(out)) => output_json(&out),
+                        Ok(Err(e)) => err_json(&e),
+                        Err(_) => err_json("engine dropped request"),
+                    }
+                }
+            }
+            Err(e) => err_json(&e),
+        };
+        writer.write_all(response.as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+        line.clear();
+    }
+}
+
+fn parse_request(line: &str) -> Result<(Vec<i32>, SamplingParams), String> {
+    let j = json::parse(line).map_err(|e| e.to_string())?;
+    let prompt_text = j.req_str("prompt").map_err(|e| e.to_string())?;
+    let prompt = tokenizer::encode(prompt_text);
+    if prompt.is_empty() {
+        return Err("empty prompt".into());
+    }
+    let max_tokens = j
+        .get("max_tokens")
+        .and_then(|v| v.as_u64())
+        .unwrap_or(16) as u32;
+    let top_k = j.get("top_k").and_then(|v| v.as_u64()).unwrap_or(0) as u32;
+    let temperature = j
+        .get("temperature")
+        .and_then(|v| v.as_f64())
+        .unwrap_or(1.0) as f32;
+    let seed = j.get("seed").and_then(|v| v.as_u64()).unwrap_or(0);
+    let eos = j.get("eos").and_then(|v| v.as_u64()).map(|v| v as i32);
+    Ok((prompt, SamplingParams { max_tokens, eos, top_k, temperature, seed }))
+}
+
+fn finish_str(f: FinishReason) -> &'static str {
+    match f {
+        FinishReason::Length => "length",
+        FinishReason::Stop => "stop",
+        FinishReason::ContextOverflow => "context_overflow",
+        FinishReason::Aborted => "aborted",
+        FinishReason::Rejected => "rejected",
+    }
+}
+
+fn output_json(out: &RequestOutput) -> String {
+    json::obj(vec![
+        ("id", Json::Num(out.id as f64)),
+        ("text", Json::Str(tokenizer::decode(&out.tokens))),
+        (
+            "tokens",
+            Json::Arr(out.tokens.iter().map(|&t| Json::Num(t as f64)).collect()),
+        ),
+        ("finish", Json::Str(finish_str(out.finish).into())),
+        ("preemptions", Json::Num(out.preemptions as f64)),
+        ("queue_steps", Json::Num(out.queue_steps as f64)),
+        ("run_steps", Json::Num(out.run_steps as f64)),
+    ])
+    .to_string()
+}
+
+fn err_json(msg: &str) -> String {
+    json::obj(vec![("error", Json::Str(msg.into()))]).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_request_fields() {
+        let (prompt, params) = parse_request(
+            r#"{"prompt": "hi", "max_tokens": 5, "top_k": 3, "temperature": 0.5, "seed": 9}"#,
+        )
+        .unwrap();
+        assert_eq!(prompt, vec![104, 105]);
+        assert_eq!(params.max_tokens, 5);
+        assert_eq!(params.top_k, 3);
+        assert!((params.temperature - 0.5).abs() < 1e-6);
+        assert_eq!(params.seed, 9);
+        assert_eq!(params.eos, None);
+    }
+
+    #[test]
+    fn parse_request_defaults_and_errors() {
+        let (_, params) = parse_request(r#"{"prompt": "x"}"#).unwrap();
+        assert_eq!(params.max_tokens, 16);
+        assert!(parse_request(r#"{"prompt": ""}"#).is_err());
+        assert!(parse_request("not json").is_err());
+        assert!(parse_request(r#"{"max_tokens": 4}"#).is_err());
+    }
+
+    #[test]
+    fn output_json_roundtrips() {
+        let out = RequestOutput {
+            id: 7,
+            prompt: vec![104],
+            tokens: vec![104, 105],
+            finish: FinishReason::Length,
+            preemptions: 1,
+            queue_steps: 2,
+            run_steps: 3,
+        };
+        let s = output_json(&out);
+        let j = json::parse(&s).unwrap();
+        assert_eq!(j.req_usize("id").unwrap(), 7);
+        assert_eq!(j.req_str("finish").unwrap(), "length");
+        assert_eq!(j.req_str("text").unwrap(), "hi");
+        assert_eq!(j.get("tokens").unwrap().as_arr().unwrap().len(), 2);
+    }
+}

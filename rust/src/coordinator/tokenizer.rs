@@ -1,0 +1,48 @@
+//! Byte-level tokenizer (vocab = 256): trivial, reversible, and exactly
+//! what the tiny model was trained-shaped for. A real deployment would swap
+//! in BPE behind the same two functions.
+
+/// Encode text as byte tokens.
+pub fn encode(text: &str) -> Vec<i32> {
+    text.as_bytes().iter().map(|&b| b as i32).collect()
+}
+
+/// Decode byte tokens back to text (lossy on invalid UTF-8, which random
+/// weights will happily produce).
+pub fn decode(tokens: &[i32]) -> String {
+    let bytes: Vec<u8> = tokens
+        .iter()
+        .filter(|&&t| (0..256).contains(&t))
+        .map(|&t| t as u8)
+        .collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = encode("hello pool");
+        assert_eq!(t.len(), 10);
+        assert_eq!(decode(&t), "hello pool");
+    }
+
+    #[test]
+    fn roundtrip_utf8() {
+        let s = "héllo ☂";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn out_of_range_tokens_skipped() {
+        assert_eq!(decode(&[104, 105, 999, -1]), "hi");
+    }
+
+    #[test]
+    fn empty() {
+        assert_eq!(encode(""), Vec::<i32>::new());
+        assert_eq!(decode(&[]), "");
+    }
+}

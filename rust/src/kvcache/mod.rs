@@ -1,0 +1,448 @@
+//! KV-cache block management — the paper's pool algorithm in index space.
+//!
+//! [`BlockAllocator`] is field-for-field the paper's `Pool_c` with one
+//! twist: blocks hold *tensor data on the PJRT device*, so the free list
+//! cannot live inside the blocks themselves. The same in-band trick is
+//! preserved structurally: the `next_free` side array plays the role of the
+//! block bodies, the lazy-init watermark and O(1) push/pop are identical
+//! (compare `allocate`/`free` here with `pool::raw`).
+//!
+//! [`SeqCache`] tracks one sequence's block table; [`KvCacheManager`] owns
+//! the allocator plus per-sequence state and enforces the scratch-block
+//! reservation the model expects (`meta.scratch_block`).
+
+use std::collections::HashMap;
+
+/// The paper's fixed-size pool over block *indices* (§IV adapted to
+/// device-resident blocks). O(1) allocate/free, lazy initialisation,
+/// no loops.
+#[derive(Debug, Clone)]
+pub struct BlockAllocator {
+    num_blocks: u32,
+    num_free: u32,
+    num_initialized: u32,
+    /// Head of the free list; `u32::MAX` = empty.
+    head: u32,
+    /// next_free[i] = index after i on the free list. Only entries below
+    /// the watermark are meaningful — exactly the paper's lazy-init rule.
+    next_free: Vec<u32>,
+}
+
+const NIL: u32 = u32::MAX;
+
+impl BlockAllocator {
+    /// O(1)* creation — no loop threads the free list; the watermark does.
+    /// (*the side array is zero-allocated by `vec!`, the analogue of the
+    /// pool's untouched region.)
+    pub fn new(num_blocks: u32) -> Self {
+        assert!(num_blocks > 0 && num_blocks < NIL);
+        Self {
+            num_blocks,
+            num_free: num_blocks,
+            num_initialized: 0,
+            head: 0, // paper: m_next = m_memStart (block 0)
+            next_free: vec![0; num_blocks as usize],
+        }
+    }
+
+    /// Allocate one block index (paper Listing 1 steps 2–6).
+    pub fn allocate(&mut self) -> Option<u32> {
+        // Lazy init: thread one more block (paper step 3).
+        if self.num_initialized < self.num_blocks {
+            self.next_free[self.num_initialized as usize] = self.num_initialized + 1;
+            self.num_initialized += 1;
+        }
+        if self.num_free == 0 {
+            return None;
+        }
+        let ret = self.head;
+        self.num_free -= 1;
+        self.head = if self.num_free != 0 {
+            self.next_free[ret as usize]
+        } else {
+            NIL
+        };
+        Some(ret)
+    }
+
+    /// Free a block index (paper Listing 1 steps 7–9).
+    pub fn free(&mut self, idx: u32) {
+        assert!(idx < self.num_blocks, "free: block {idx} out of range");
+        debug_assert!(!self.is_free_slow(idx), "double free of block {idx}");
+        self.next_free[idx as usize] = if self.head == NIL { self.num_blocks } else { self.head };
+        self.head = idx;
+        self.num_free += 1;
+    }
+
+    pub fn num_free(&self) -> u32 {
+        self.num_free
+    }
+
+    pub fn num_blocks(&self) -> u32 {
+        self.num_blocks
+    }
+
+    pub fn num_used(&self) -> u32 {
+        self.num_blocks - self.num_free
+    }
+
+    pub fn watermark(&self) -> u32 {
+        self.num_initialized
+    }
+
+    /// Test/debug helper: walks the free list (O(n), never on hot path).
+    fn is_free_slow(&self, idx: u32) -> bool {
+        let mut cur = self.head;
+        let mut steps = 0;
+        while cur != NIL && cur < self.num_blocks && steps <= self.num_blocks {
+            if cur == idx {
+                return true;
+            }
+            // Stop at the uninitialised tail.
+            if cur >= self.num_initialized {
+                break;
+            }
+            cur = self.next_free[cur as usize];
+            steps += 1;
+        }
+        false
+    }
+}
+
+/// One sequence's cache state: its block table and token count.
+#[derive(Debug, Clone)]
+pub struct SeqCache {
+    pub blocks: Vec<u32>,
+    pub tokens: u32,
+}
+
+impl SeqCache {
+    /// Padded block-table row of width `max_blocks` (dead entries point at
+    /// the scratch block — always valid, always masked by seq_len).
+    pub fn table_row(&self, max_blocks: usize, scratch: u32) -> Vec<i32> {
+        let mut row = vec![scratch as i32; max_blocks];
+        for (i, &b) in self.blocks.iter().enumerate().take(max_blocks) {
+            row[i] = b as i32;
+        }
+        row
+    }
+}
+
+/// Errors from the cache manager.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CacheError {
+    /// Not enough free blocks; caller should preempt or wait.
+    OutOfBlocks { needed: u32, free: u32 },
+    /// Sequence would exceed max_blocks_per_seq (context overflow).
+    ContextOverflow,
+    UnknownSeq(u64),
+}
+
+impl std::fmt::Display for CacheError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CacheError::OutOfBlocks { needed, free } => {
+                write!(f, "out of KV blocks: need {needed}, have {free}")
+            }
+            CacheError::ContextOverflow => write!(f, "sequence exceeds max context"),
+            CacheError::UnknownSeq(id) => write!(f, "unknown sequence {id}"),
+        }
+    }
+}
+
+/// The KV-cache manager: allocator + per-sequence tables.
+pub struct KvCacheManager {
+    alloc: BlockAllocator,
+    seqs: HashMap<u64, SeqCache>,
+    pub block_tokens: u32,
+    pub max_blocks_per_seq: usize,
+    /// Reserved scratch block (the model routes padding writes here); never
+    /// handed to a sequence.
+    pub scratch_block: u32,
+    /// High-water mark of used blocks (capacity planning).
+    pub peak_used: u32,
+}
+
+impl KvCacheManager {
+    /// `num_blocks` includes the scratch block (index `num_blocks - 1`),
+    /// which is reserved immediately.
+    pub fn new(num_blocks: u32, block_tokens: u32, max_blocks_per_seq: usize) -> Self {
+        assert!(num_blocks >= 2, "need at least one data block + scratch");
+        // Reserve the scratch block: the lazy allocator hands out 0,1,2,…
+        // so burning indices until we hit scratch would defeat laziness;
+        // instead the scratch is defined as the LAST block and the
+        // allocator simply manages one block fewer (the paper's §VII
+        // shrink in reverse: commit num_blocks - 1).
+        let scratch_block = num_blocks - 1;
+        let alloc = BlockAllocator::new(num_blocks - 1);
+        Self {
+            alloc,
+            seqs: HashMap::new(),
+            block_tokens,
+            max_blocks_per_seq,
+            scratch_block,
+            peak_used: 0,
+        }
+    }
+
+    /// Blocks needed to hold `tokens` tokens.
+    pub fn blocks_for(&self, tokens: u32) -> u32 {
+        tokens.div_ceil(self.block_tokens)
+    }
+
+    /// Can a prompt of `tokens` tokens be admitted right now?
+    pub fn can_admit(&self, tokens: u32) -> bool {
+        self.blocks_for(tokens) <= self.alloc.num_free()
+    }
+
+    /// Register a sequence and allocate blocks for its prompt.
+    pub fn create_seq(&mut self, seq_id: u64, prompt_tokens: u32) -> Result<(), CacheError> {
+        let needed = self.blocks_for(prompt_tokens).max(1);
+        if needed as usize > self.max_blocks_per_seq {
+            return Err(CacheError::ContextOverflow);
+        }
+        if needed > self.alloc.num_free() {
+            return Err(CacheError::OutOfBlocks { needed, free: self.alloc.num_free() });
+        }
+        let mut blocks = Vec::with_capacity(needed as usize);
+        for _ in 0..needed {
+            blocks.push(self.alloc.allocate().expect("checked free count"));
+        }
+        self.seqs.insert(seq_id, SeqCache { blocks, tokens: prompt_tokens });
+        self.peak_used = self.peak_used.max(self.alloc.num_used());
+        Ok(())
+    }
+
+    /// Account one generated token; allocates a fresh block at block
+    /// boundaries. O(1) — the paper's allocate on the hot decode path.
+    pub fn append_token(&mut self, seq_id: u64) -> Result<(), CacheError> {
+        // Check growth requirements first (borrow rules: compute then mutate).
+        let (needs_block, would_overflow) = {
+            let seq = self.seqs.get(&seq_id).ok_or(CacheError::UnknownSeq(seq_id))?;
+            let new_tokens = seq.tokens + 1;
+            let needed_blocks = new_tokens.div_ceil(self.block_tokens).max(1);
+            (
+                needed_blocks as usize > seq.blocks.len(),
+                needed_blocks as usize > self.max_blocks_per_seq,
+            )
+        };
+        if would_overflow {
+            return Err(CacheError::ContextOverflow);
+        }
+        if needs_block {
+            let blk = self
+                .alloc
+                .allocate()
+                .ok_or(CacheError::OutOfBlocks { needed: 1, free: 0 })?;
+            self.seqs.get_mut(&seq_id).unwrap().blocks.push(blk);
+        }
+        self.seqs.get_mut(&seq_id).unwrap().tokens += 1;
+        self.peak_used = self.peak_used.max(self.alloc.num_used());
+        Ok(())
+    }
+
+    /// Free all of a sequence's blocks (completion or preemption).
+    pub fn free_seq(&mut self, seq_id: u64) -> Result<u32, CacheError> {
+        let seq = self.seqs.remove(&seq_id).ok_or(CacheError::UnknownSeq(seq_id))?;
+        let n = seq.blocks.len() as u32;
+        for b in seq.blocks {
+            self.alloc.free(b);
+        }
+        Ok(n)
+    }
+
+    pub fn seq(&self, seq_id: u64) -> Option<&SeqCache> {
+        self.seqs.get(&seq_id)
+    }
+
+    /// Block-table row for the model input.
+    pub fn table_row(&self, seq_id: u64) -> Result<Vec<i32>, CacheError> {
+        let seq = self.seqs.get(&seq_id).ok_or(CacheError::UnknownSeq(seq_id))?;
+        Ok(seq.table_row(self.max_blocks_per_seq, self.scratch_block))
+    }
+
+    pub fn num_free_blocks(&self) -> u32 {
+        self.alloc.num_free()
+    }
+
+    pub fn num_seqs(&self) -> usize {
+        self.seqs.len()
+    }
+
+    pub fn utilization(&self) -> f64 {
+        self.alloc.num_used() as f64 / self.alloc.num_blocks() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // ---- BlockAllocator: mirror the paper's semantics ----
+
+    #[test]
+    fn allocator_figure2_sequence() {
+        let mut a = BlockAllocator::new(4);
+        assert_eq!(a.watermark(), 0);
+        assert_eq!(a.allocate(), Some(0));
+        assert_eq!(a.watermark(), 1);
+        assert_eq!(a.allocate(), Some(1));
+        a.free(0);
+        assert_eq!(a.allocate(), Some(0)); // LIFO
+        assert_eq!(a.allocate(), Some(2));
+        assert_eq!(a.allocate(), Some(3));
+        assert_eq!(a.allocate(), None);
+    }
+
+    #[test]
+    fn allocator_full_cycles() {
+        let mut a = BlockAllocator::new(16);
+        for _ in 0..5 {
+            let got: Vec<u32> = (0..16).map(|_| a.allocate().unwrap()).collect();
+            assert_eq!(a.allocate(), None);
+            let mut sorted = got.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 16);
+            for b in got {
+                a.free(b);
+            }
+            assert_eq!(a.num_free(), 16);
+        }
+    }
+
+    #[test]
+    fn allocator_sentinel_path() {
+        let mut a = BlockAllocator::new(2);
+        let x = a.allocate().unwrap();
+        let y = a.allocate().unwrap();
+        a.free(x); // head was NIL → sentinel written
+        a.free(y);
+        assert_eq!(a.allocate(), Some(y));
+        assert_eq!(a.allocate(), Some(x));
+        assert_eq!(a.allocate(), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn allocator_free_bad_index() {
+        BlockAllocator::new(2).free(5);
+    }
+
+    // ---- KvCacheManager ----
+
+    fn mgr() -> KvCacheManager {
+        // 17 blocks = 16 data + scratch; 16 tokens/block; 4 blocks/seq max.
+        KvCacheManager::new(17, 16, 4)
+    }
+
+    #[test]
+    fn scratch_block_reserved() {
+        let mut m = mgr();
+        assert_eq!(m.scratch_block, 16);
+        // Allocate everything: scratch index must never appear.
+        let mut all = Vec::new();
+        for id in 0..16 {
+            m.create_seq(id, 16).unwrap();
+            all.push(id);
+        }
+        for id in all {
+            let row = m.table_row(id).unwrap();
+            assert!(!row[..1].contains(&(m.scratch_block as i32)));
+        }
+    }
+
+    #[test]
+    fn create_seq_block_math() {
+        let mut m = mgr();
+        m.create_seq(1, 1).unwrap(); // 1 token → 1 block
+        m.create_seq(2, 16).unwrap(); // 16 → 1
+        m.create_seq(3, 17).unwrap(); // 17 → 2
+        assert_eq!(m.seq(1).unwrap().blocks.len(), 1);
+        assert_eq!(m.seq(2).unwrap().blocks.len(), 1);
+        assert_eq!(m.seq(3).unwrap().blocks.len(), 2);
+        assert_eq!(m.num_free_blocks(), 12);
+    }
+
+    #[test]
+    fn append_token_allocates_at_boundary() {
+        let mut m = mgr();
+        m.create_seq(1, 15).unwrap();
+        assert_eq!(m.seq(1).unwrap().blocks.len(), 1);
+        m.append_token(1).unwrap(); // 16th token fits
+        assert_eq!(m.seq(1).unwrap().blocks.len(), 1);
+        m.append_token(1).unwrap(); // 17th → new block
+        assert_eq!(m.seq(1).unwrap().blocks.len(), 2);
+    }
+
+    #[test]
+    fn context_overflow_detected() {
+        let mut m = mgr();
+        m.create_seq(1, 64).unwrap(); // exactly 4 blocks
+        let err = m.append_token(1).unwrap_err();
+        assert_eq!(err, CacheError::ContextOverflow);
+        assert!(m.create_seq(2, 65).is_err());
+    }
+
+    #[test]
+    fn out_of_blocks_and_preemption_recovers() {
+        let mut m = mgr();
+        for id in 0..8 {
+            m.create_seq(id, 32).unwrap(); // 2 blocks each = 16 total
+        }
+        assert_eq!(m.num_free_blocks(), 0);
+        assert_eq!(
+            m.create_seq(99, 1),
+            Err(CacheError::OutOfBlocks { needed: 1, free: 0 })
+        );
+        // Preempt one sequence → its blocks come back.
+        let freed = m.free_seq(3).unwrap();
+        assert_eq!(freed, 2);
+        m.create_seq(99, 17).unwrap();
+        assert_eq!(m.num_free_blocks(), 0);
+    }
+
+    #[test]
+    fn table_row_padded_with_scratch() {
+        let mut m = mgr();
+        m.create_seq(1, 20).unwrap(); // 2 blocks
+        let row = m.table_row(1).unwrap();
+        assert_eq!(row.len(), 4);
+        assert_eq!(row[2], m.scratch_block as i32);
+        assert_eq!(row[3], m.scratch_block as i32);
+        assert_ne!(row[0], row[1]);
+    }
+
+    #[test]
+    fn unknown_seq_errors() {
+        let mut m = mgr();
+        assert_eq!(m.append_token(7), Err(CacheError::UnknownSeq(7)));
+        assert_eq!(m.free_seq(7), Err(CacheError::UnknownSeq(7)));
+        assert!(m.table_row(7).is_err());
+    }
+
+    #[test]
+    fn utilization_and_peak() {
+        let mut m = mgr();
+        assert_eq!(m.utilization(), 0.0);
+        m.create_seq(1, 64).unwrap();
+        assert!(m.utilization() > 0.2);
+        assert_eq!(m.peak_used, 4);
+        m.free_seq(1).unwrap();
+        assert_eq!(m.peak_used, 4); // peak sticks
+        assert_eq!(m.utilization(), 0.0);
+    }
+
+    #[test]
+    fn can_admit_matches_create() {
+        let mut m = mgr();
+        for id in 0..7 {
+            m.create_seq(id, 32).unwrap();
+        }
+        // 2 free blocks left.
+        assert!(m.can_admit(32));
+        assert!(!m.can_admit(33));
+        m.create_seq(7, 32).unwrap();
+        assert!(!m.can_admit(1));
+    }
+}

@@ -1,0 +1,30 @@
+//! # fastpool
+//!
+//! A production-shaped reproduction of Kenwright, *"Fast Efficient
+//! Fixed-Size Memory Pool: No Loops and No Overhead"*.
+//!
+//! The crate is organised in three layers (see `DESIGN.md`):
+//!
+//! * [`pool`] — the paper's fixed-size pool family (the contribution).
+//! * Substrates — [`alloc`] baseline allocators, [`workload`] trace
+//!   generators, [`bench_harness`] measurement, [`util`] (RNG, stats,
+//!   JSON), [`metrics`], [`config`], [`testkit`].
+//! * Serving framework — [`kvcache`] block manager, [`coordinator`]
+//!   continuous-batching scheduler, [`runtime`] PJRT executor for the
+//!   AOT-compiled JAX/Pallas model (`python/compile`).
+
+pub mod alloc;
+pub mod coordinator;
+pub mod kvcache;
+pub mod runtime;
+pub mod bench_harness;
+pub mod cli;
+pub mod config;
+pub mod metrics;
+pub mod pool;
+pub mod testkit;
+pub mod util;
+pub mod workload;
+
+/// Crate version (mirrors Cargo.toml).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

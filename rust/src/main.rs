@@ -1,0 +1,226 @@
+//! `fastpool` launcher.
+//!
+//! Subcommands:
+//!   serve      — load artifacts, run the serving engine on a generated or
+//!                stdin workload, report latency/throughput.
+//!   pool-demo  — quick demonstration of the paper's pool + stats.
+//!   trace-gen  — emit a workload trace as CSV.
+//!   info       — print artifact/runtime info.
+//!
+//! Benchmarks live in `benches/` (`cargo bench`); examples in `examples/`.
+
+use fastpool::cli::Args;
+use fastpool::config::{RawConfig, ServerConfig};
+use fastpool::coordinator::{
+    tokenizer, Admission, Engine, EngineConfig, Policy, SamplingParams, XlaBackend,
+};
+use fastpool::pool::{FixedPool, GuardConfig, GuardedPool};
+use fastpool::runtime::Runtime;
+use fastpool::util::{fmt_ns, Timer};
+use fastpool::workload::{self, SizeDist};
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.subcommand.as_deref() {
+        Some("serve") => cmd_serve(&args),
+        Some("pool-demo") => cmd_pool_demo(&args),
+        Some("trace-gen") => cmd_trace_gen(&args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            print_usage();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn print_usage() {
+    println!(
+        "fastpool {} — fixed-size memory pool serving framework\n\n\
+         USAGE: fastpool <serve|pool-demo|trace-gen|info> [--options]\n\n\
+         serve      --artifacts-dir D --requests N --max-batch B --policy fcfs|sjf\n                    --listen HOST:PORT (line-JSON server mode)\n\
+                    --conservative (admission) --prompt TEXT --max-tokens N\n\
+         pool-demo  --blocks N --block-size B\n\
+         trace-gen  --kind game|serving|churn --out FILE\n\
+         info       --artifacts-dir D",
+        fastpool::VERSION
+    );
+}
+
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    let raw = args.get("config").map(RawConfig::load).transpose()?;
+    let cfg = ServerConfig::from_sources(raw.as_ref(), args)?;
+    let n_requests = args.get_usize("requests", 16)?;
+    let prompt_text = args.get_or("prompt", "the quick brown fox jumps over");
+    let max_tokens = args.get_u64("max-tokens", 24)? as u32;
+
+    eprintln!("loading artifacts from {} ...", cfg.artifacts_dir);
+    let t = Timer::start();
+    let rt = Runtime::load(&cfg.artifacts_dir)?;
+    eprintln!(
+        "compiled {} executables in {:.1}s",
+        rt.names().len(),
+        t.elapsed_secs()
+    );
+    let backend = XlaBackend::new(rt)?;
+    let engine_cfg = EngineConfig {
+        max_batch: cfg.max_batch,
+        queue_limit: cfg.queue_limit,
+        admission: if args.flag("conservative") {
+            Admission::Conservative
+        } else {
+            Admission::Optimistic
+        },
+        policy: if cfg.policy == "sjf" { Policy::Sjf } else { Policy::Fcfs },
+    };
+    let mut engine = Engine::new(backend, engine_cfg);
+
+    // Network mode: serve the line-JSON protocol until killed.
+    if let Some(listen) = args.get("listen") {
+        let listener =
+            std::net::TcpListener::bind(listen).map_err(|e| format!("bind {listen}: {e}"))?;
+        let server = fastpool::coordinator::Server::start(engine, listener)
+            .map_err(|e| e.to_string())?;
+        eprintln!(
+            "listening on {} — send {{\"prompt\": \"...\", \"max_tokens\": N}} lines",
+            server.addr
+        );
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+
+    // Submit the workload: the given prompt plus deterministic variations.
+    let base = tokenizer::encode(prompt_text);
+    let t = Timer::start();
+    for i in 0..n_requests {
+        let mut prompt = base.clone();
+        prompt.truncate(engine.backend.runtime().meta.prefill_len - 1);
+        prompt.push((i % 251) as i32); // vary the tail
+        engine
+            .submit(prompt, SamplingParams::greedy(max_tokens))
+            .map_err(|e| format!("submit {i}: {e}"))?;
+    }
+    let outs = engine.run_to_completion(1_000_000)?;
+    let wall = t.elapsed_secs();
+
+    let total_tokens: usize = outs.iter().map(|o| o.tokens.len()).sum();
+    println!("== fastpool serve report ==");
+    println!("requests:        {}", outs.len());
+    println!("generated:       {total_tokens} tokens in {wall:.2}s");
+    println!("throughput:      {:.1} tok/s", total_tokens as f64 / wall);
+    println!("engine steps:    {}", engine.steps());
+    println!(
+        "model time:      {} ({} prefills, {} decodes)",
+        fmt_ns(engine.backend.model_ns as f64),
+        engine.backend.prefill_calls,
+        engine.backend.decode_calls
+    );
+    println!("kv peak blocks:  {}", engine.kv.peak_used);
+    println!("preemptions:     {}", engine.metrics.counter("preemptions").get());
+    println!("\nmetrics:\n{}", engine.metrics.report());
+    for o in outs.iter().take(3) {
+        println!(
+            "sample output {}: {:?} -> {:?}",
+            o.id,
+            tokenizer::decode(&o.prompt),
+            tokenizer::decode(&o.tokens)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_pool_demo(args: &Args) -> Result<(), String> {
+    let blocks = args.get_u64("blocks", 1024)? as u32;
+    let block_size = args.get_usize("block-size", 64)?;
+    println!("== paper pool demo: {blocks} x {block_size}B ==");
+
+    let t = Timer::start();
+    let mut pool = FixedPool::with_blocks(block_size, blocks);
+    println!("create (lazy, no loops): {}", fmt_ns(t.elapsed_ns() as f64));
+
+    let t = Timer::start();
+    let ptrs: Vec<_> = (0..blocks).map(|_| pool.allocate().unwrap()).collect();
+    let alloc_ns = t.elapsed_ns();
+    println!(
+        "allocate {blocks}: {} ({} per alloc)",
+        fmt_ns(alloc_ns as f64),
+        fmt_ns(alloc_ns as f64 / blocks as f64)
+    );
+    let t = Timer::start();
+    for p in ptrs {
+        unsafe { pool.deallocate(p) };
+    }
+    let free_ns = t.elapsed_ns();
+    println!(
+        "free {blocks}:     {} ({} per free)",
+        fmt_ns(free_ns as f64),
+        fmt_ns(free_ns as f64 / blocks as f64)
+    );
+    println!("stats: {}", pool.stats().report());
+
+    // Guarded variant demo.
+    let mut g = GuardedPool::with_blocks(block_size, 8, GuardConfig::default());
+    let a = g.allocate("demo:leak-me").unwrap();
+    let b = g.allocate("demo:freed").unwrap();
+    g.deallocate(b).map_err(|e| e.to_string())?;
+    let _ = a;
+    println!("guarded pool leaks: {:?}", g.leaks());
+    Ok(())
+}
+
+fn cmd_trace_gen(args: &Args) -> Result<(), String> {
+    let kind = args.get_or("kind", "churn");
+    let out = args.get_or("out", "/dev/stdout");
+    let seed = args.get_u64("seed", 42)?;
+    let trace = match kind {
+        "game" => workload::game::generate(workload::game::GameConfig::default(), seed).0,
+        "serving" => {
+            workload::serving::generate(workload::serving::ServingConfig::default(), seed).0
+        }
+        "churn" => workload::patterns::random_churn(
+            args.get_u64("steps", 10_000)? as u32,
+            args.get_u64("live", 256)? as u32,
+            SizeDist::Fixed(args.get_u64("size", 64)? as u32),
+            seed,
+        ),
+        k => return Err(format!("unknown kind `{k}` (game|serving|churn)")),
+    };
+    std::fs::write(out, trace.to_csv()).map_err(|e| e.to_string())?;
+    eprintln!(
+        "wrote {} ({} ops, peak live {})",
+        out,
+        trace.ops.len(),
+        trace.peak_live
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<(), String> {
+    let dir = args.get_or("artifacts-dir", "artifacts");
+    let rt = Runtime::load(dir)?;
+    let m = &rt.meta;
+    println!("artifacts dir:  {dir}");
+    println!("compile time:   {} ms", rt.compile_ms);
+    println!("executables:    {:?}", rt.names());
+    println!(
+        "model:          d={} heads={} layers={} vocab={} params={}",
+        m.d_model, m.n_heads, m.n_layers, m.vocab, m.num_params
+    );
+    println!(
+        "kv cache:       {} blocks x {} tokens (max ctx {}, scratch {})",
+        m.num_blocks, m.block_tokens, m.max_context, m.scratch_block
+    );
+    println!("batch variants: {:?}", m.batch_sizes);
+    println!("golden tokens:  {:?}", m.golden.greedy_tokens);
+    Ok(())
+}

@@ -1,0 +1,199 @@
+//! Metrics registry: named counters, gauges and latency histograms for the
+//! serving engine and examples. Thread-safe, lock-cheap (one mutex per
+//! metric kind; hot-path increments are atomic).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::LogHistogram;
+
+/// Monotone counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    #[inline]
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous value.
+#[derive(Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    #[inline]
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Mutex-protected histogram (record path is a short critical section).
+#[derive(Default)]
+pub struct Histo(Mutex<LogHistogram>);
+
+impl Histo {
+    pub fn record(&self, v: u64) {
+        self.0.lock().unwrap().record(v);
+    }
+
+    pub fn snapshot(&self) -> LogHistogram {
+        self.0.lock().unwrap().clone()
+    }
+}
+
+/// The registry. Cheap to clone (Arc).
+#[derive(Clone, Default)]
+pub struct Metrics {
+    inner: Arc<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histos: Mutex<BTreeMap<String, Arc<Histo>>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        self.inner
+            .counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        self.inner
+            .gauges
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histo> {
+        self.inner
+            .histos
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    /// Human-readable snapshot of everything, sorted by name.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for (name, c) in self.inner.counters.lock().unwrap().iter() {
+            out.push_str(&format!("counter {name} = {}\n", c.get()));
+        }
+        for (name, g) in self.inner.gauges.lock().unwrap().iter() {
+            out.push_str(&format!("gauge   {name} = {}\n", g.get()));
+        }
+        for (name, h) in self.inner.histos.lock().unwrap().iter() {
+            let s = h.snapshot();
+            out.push_str(&format!(
+                "histo   {name}: n={} p50={} p99={} max={}\n",
+                s.count(),
+                s.percentile(50.0),
+                s.percentile(99.0),
+                s.max()
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge() {
+        let m = Metrics::new();
+        m.counter("reqs").inc();
+        m.counter("reqs").add(4);
+        m.gauge("live").set(7);
+        m.gauge("live").add(-2);
+        assert_eq!(m.counter("reqs").get(), 5);
+        assert_eq!(m.gauge("live").get(), 5);
+    }
+
+    #[test]
+    fn histogram_snapshot() {
+        let m = Metrics::new();
+        for v in [10u64, 20, 30] {
+            m.histogram("lat").record(v);
+        }
+        let s = m.histogram("lat").snapshot();
+        assert_eq!(s.count(), 3);
+        assert_eq!(s.max(), 30);
+    }
+
+    #[test]
+    fn same_name_same_metric() {
+        let m = Metrics::new();
+        let a = m.counter("x");
+        let b = m.counter("x");
+        a.inc();
+        assert_eq!(b.get(), 1);
+    }
+
+    #[test]
+    fn concurrent_increments_exact() {
+        let m = Metrics::new();
+        let c = m.counter("n");
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let c = c.clone();
+                s.spawn(move || {
+                    for _ in 0..10_000 {
+                        c.inc();
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), 80_000);
+    }
+
+    #[test]
+    fn report_contains_all() {
+        let m = Metrics::new();
+        m.counter("a").inc();
+        m.gauge("b").set(2);
+        m.histogram("c").record(3);
+        let r = m.report();
+        assert!(r.contains("counter a = 1"));
+        assert!(r.contains("gauge   b = 2"));
+        assert!(r.contains("histo   c: n=1"));
+    }
+}

@@ -1,0 +1,185 @@
+//! `EagerPool` — the *naive* pool the paper improves upon (§I: "Naive
+//! memory pool implementations initialize all the memory pool segments
+//! when created \[6]\[7]. This can be expensive since it is usually
+//! necessary to loop over all the uninitialized segments.").
+//!
+//! Identical in-band index free list, but the whole chain is threaded by a
+//! creation-time loop over all `n` blocks. Alloc/free are the same O(1)
+//! operations. This is the baseline for ablation A1 (creation cost).
+
+use core::alloc::Layout;
+use core::ptr::NonNull;
+
+use crate::util::align::align_up;
+
+/// Eagerly-initialised fixed-size pool (creation is O(n)).
+pub struct EagerPool {
+    num_blocks: u32,
+    block_size: usize,
+    num_free: u32,
+    mem_start: NonNull<u8>,
+    next: Option<NonNull<u8>>,
+    layout: Layout,
+}
+
+unsafe impl Send for EagerPool {}
+
+impl EagerPool {
+    /// Create the pool and loop over **every** block to thread the free
+    /// list — the initialisation cost the paper eliminates.
+    pub fn with_blocks(block_size: usize, num_blocks: u32) -> Self {
+        assert!(num_blocks > 0);
+        let align = core::mem::size_of::<usize>();
+        let bs = align_up(block_size.max(4), align);
+        let bytes = bs * num_blocks as usize;
+        let layout = Layout::from_size_align(bytes, align).expect("bad layout");
+        let region = NonNull::new(unsafe { std::alloc::alloc(layout) })
+            .expect("pool region allocation failed");
+        // THE LOOP: thread block i → i+1 for all blocks up front.
+        unsafe {
+            for i in 0..num_blocks {
+                let p = region.as_ptr().add(i as usize * bs) as *mut u32;
+                p.write_unaligned(i + 1);
+            }
+        }
+        Self {
+            num_blocks,
+            block_size: bs,
+            num_free: num_blocks,
+            mem_start: region,
+            next: Some(region),
+            layout,
+        }
+    }
+
+    #[inline(always)]
+    fn addr_from_index(&self, i: u32) -> NonNull<u8> {
+        unsafe {
+            NonNull::new_unchecked(self.mem_start.as_ptr().add(i as usize * self.block_size))
+        }
+    }
+
+    #[inline(always)]
+    fn index_from_addr(&self, p: NonNull<u8>) -> u32 {
+        ((p.as_ptr() as usize - self.mem_start.as_ptr() as usize) / self.block_size) as u32
+    }
+
+    /// O(1) pop (same as the lazy pool minus the watermark branch).
+    #[inline]
+    pub fn allocate(&mut self) -> Option<NonNull<u8>> {
+        if self.num_free == 0 {
+            return None;
+        }
+        let ret = self.next?;
+        self.num_free -= 1;
+        self.next = if self.num_free != 0 {
+            let idx = unsafe { (ret.as_ptr() as *const u32).read_unaligned() };
+            if idx < self.num_blocks {
+                Some(self.addr_from_index(idx))
+            } else {
+                None
+            }
+        } else {
+            None
+        };
+        Some(ret)
+    }
+
+    /// O(1) push.
+    ///
+    /// # Safety
+    /// `p` must come from `allocate` on this pool, freed at most once.
+    #[inline]
+    pub unsafe fn deallocate(&mut self, p: NonNull<u8>) {
+        let slot = p.as_ptr() as *mut u32;
+        match self.next {
+            Some(head) => slot.write_unaligned(self.index_from_addr(head)),
+            None => slot.write_unaligned(self.num_blocks),
+        }
+        self.next = Some(p);
+        self.num_free += 1;
+    }
+
+    pub fn num_free(&self) -> u32 {
+        self.num_free
+    }
+
+    pub fn num_blocks(&self) -> u32 {
+        self.num_blocks
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+}
+
+impl Drop for EagerPool {
+    fn drop(&mut self) {
+        unsafe { std::alloc::dealloc(self.mem_start.as_ptr(), self.layout) };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_blocks_pre_threaded() {
+        let mut p = EagerPool::with_blocks(16, 8);
+        // Eager init: allocation order is 0, 1, 2, ... without any
+        // watermark bookkeeping.
+        for i in 0..8 {
+            let a = p.allocate().unwrap();
+            assert_eq!(p.index_from_addr(a), i);
+        }
+        assert!(p.allocate().is_none());
+    }
+
+    #[test]
+    fn alloc_free_cycles() {
+        let mut p = EagerPool::with_blocks(8, 4);
+        for _ in 0..100 {
+            let a = p.allocate().unwrap();
+            let b = p.allocate().unwrap();
+            unsafe {
+                p.deallocate(a);
+                p.deallocate(b);
+            }
+        }
+        assert_eq!(p.num_free(), 4);
+    }
+
+    #[test]
+    fn lifo_order() {
+        let mut p = EagerPool::with_blocks(8, 4);
+        let a = p.allocate().unwrap();
+        let b = p.allocate().unwrap();
+        unsafe {
+            p.deallocate(a);
+            p.deallocate(b);
+        }
+        assert_eq!(p.allocate().unwrap().as_ptr(), b.as_ptr());
+        assert_eq!(p.allocate().unwrap().as_ptr(), a.as_ptr());
+    }
+
+    #[test]
+    fn drain_after_mixed_ops() {
+        let mut p = EagerPool::with_blocks(8, 16);
+        let mut held = Vec::new();
+        for _ in 0..16 {
+            held.push(p.allocate().unwrap());
+        }
+        for ptr in held.drain(8..) {
+            unsafe { p.deallocate(ptr) };
+        }
+        for _ in 0..8 {
+            held.push(p.allocate().unwrap());
+        }
+        assert!(p.allocate().is_none());
+        // All distinct.
+        let mut addrs: Vec<_> = held.iter().map(|p| p.as_ptr() as usize).collect();
+        addrs.sort_unstable();
+        addrs.dedup();
+        assert_eq!(addrs.len(), 16);
+    }
+}

@@ -1,0 +1,316 @@
+//! `FixedPool` — an owning, aligned fixed-size pool (the paper's
+//! `CreatePool`/`DestroyPool` pair, §V) wrapping [`RawPool`].
+//!
+//! The paper allocates the region with `new uchar[size*n]`; here the region
+//! comes from `std::alloc` with a caller-chosen alignment so pooled blocks
+//! can back any `repr(C)` payload. Create/destroy stay O(1): the region is
+//! *not* zeroed and no block is touched.
+
+use core::alloc::Layout;
+use core::ptr::NonNull;
+
+use super::raw::{RawPool, MIN_BLOCK_SIZE};
+use super::stats::PoolStats;
+use crate::util::align::align_up;
+
+/// Configuration for a [`FixedPool`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolConfig {
+    /// Size of each block in bytes (rounded up to `align`; min 4).
+    pub block_size: usize,
+    /// Number of blocks.
+    pub num_blocks: u32,
+    /// Block alignment (power of two). Every returned pointer is aligned
+    /// to this.
+    pub align: usize,
+}
+
+impl PoolConfig {
+    pub fn new(block_size: usize, num_blocks: u32) -> Self {
+        Self { block_size, num_blocks, align: core::mem::size_of::<usize>() }
+    }
+
+    pub fn with_align(mut self, align: usize) -> Self {
+        self.align = align;
+        self
+    }
+
+    /// Effective (aligned) block size.
+    pub fn effective_block_size(&self) -> usize {
+        align_up(self.block_size.max(MIN_BLOCK_SIZE), self.align)
+    }
+}
+
+/// An owning fixed-size memory pool.
+pub struct FixedPool {
+    raw: RawPool,
+    layout: Layout,
+    /// Cumulative counters for reporting.
+    total_allocs: u64,
+    total_frees: u64,
+    failed_allocs: u64,
+}
+
+impl FixedPool {
+    /// Create a pool; O(1) — allocates the region but initialises no block.
+    ///
+    /// # Panics
+    /// On zero blocks, on a non-power-of-two alignment, or if the region
+    /// allocation fails.
+    pub fn new(config: PoolConfig) -> Self {
+        assert!(config.align.is_power_of_two(), "alignment must be a power of two");
+        let bs = config.effective_block_size();
+        let bytes = bs
+            .checked_mul(config.num_blocks as usize)
+            .expect("pool size overflow");
+        let layout = Layout::from_size_align(bytes, config.align).expect("bad layout");
+        // SAFETY: layout has non-zero size (num_blocks > 0 checked by RawPool).
+        assert!(config.num_blocks > 0, "pool must have at least one block");
+        let region = unsafe { std::alloc::alloc(layout) };
+        let region = NonNull::new(region).expect("pool region allocation failed");
+        // SAFETY: we own `region` for `layout.size()` bytes.
+        let raw = unsafe { RawPool::new(region, bytes, bs, config.num_blocks) };
+        Self { raw, layout, total_allocs: 0, total_frees: 0, failed_allocs: 0 }
+    }
+
+    /// Convenience: `block_size` bytes × `num_blocks`, word alignment.
+    pub fn with_blocks(block_size: usize, num_blocks: u32) -> Self {
+        Self::new(PoolConfig::new(block_size, num_blocks))
+    }
+
+    /// Allocate one block (O(1), no loops). `None` when exhausted.
+    #[inline]
+    pub fn allocate(&mut self) -> Option<NonNull<u8>> {
+        match self.raw.allocate() {
+            Some(p) => {
+                self.total_allocs += 1;
+                Some(p)
+            }
+            None => {
+                self.failed_allocs += 1;
+                None
+            }
+        }
+    }
+
+    /// Return a block (O(1), no loops).
+    ///
+    /// # Safety
+    /// `p` must come from `allocate` on this pool and not be freed twice.
+    #[inline]
+    pub unsafe fn deallocate(&mut self, p: NonNull<u8>) {
+        self.total_frees += 1;
+        self.raw.deallocate(p);
+    }
+
+    /// §IV.B checked deallocation: validates the address (bounds + block
+    /// boundary) before freeing. Returns `false` (and does nothing) for an
+    /// address that cannot belong to this pool.
+    ///
+    /// # Safety
+    /// Still requires "allocated and not yet freed" — double frees within
+    /// valid addresses need [`GuardedPool`](super::guarded::GuardedPool).
+    pub unsafe fn deallocate_checked(&mut self, p: NonNull<u8>) -> bool {
+        if !self.raw.validate_addr(p) {
+            return false;
+        }
+        self.deallocate(p);
+        true
+    }
+
+    #[inline]
+    pub fn block_size(&self) -> usize {
+        self.raw.block_size()
+    }
+
+    #[inline]
+    pub fn num_blocks(&self) -> u32 {
+        self.raw.num_blocks()
+    }
+
+    #[inline]
+    pub fn num_free(&self) -> u32 {
+        self.raw.num_free()
+    }
+
+    #[inline]
+    pub fn num_used(&self) -> u32 {
+        self.raw.num_used()
+    }
+
+    #[inline]
+    pub fn is_full(&self) -> bool {
+        self.raw.is_full()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.raw.is_empty()
+    }
+
+    #[inline]
+    pub fn contains(&self, p: NonNull<u8>) -> bool {
+        self.raw.contains(p)
+    }
+
+    #[inline]
+    pub fn validate_addr(&self, p: NonNull<u8>) -> bool {
+        self.raw.validate_addr(p)
+    }
+
+    pub fn raw(&self) -> &RawPool {
+        &self.raw
+    }
+
+    /// Stats snapshot for reports and the metrics registry.
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            block_size: self.raw.block_size(),
+            num_blocks: self.raw.num_blocks(),
+            num_free: self.raw.num_free(),
+            num_initialized: self.raw.num_initialized(),
+            capacity_bytes: self.raw.capacity_bytes(),
+            header_overhead_bytes: self.raw.overhead_bytes() + core::mem::size_of::<Layout>(),
+            total_allocs: self.total_allocs,
+            total_frees: self.total_frees,
+            failed_allocs: self.failed_allocs,
+        }
+    }
+}
+
+impl Drop for FixedPool {
+    fn drop(&mut self) {
+        // O(1) destroy (paper's DestroyPool): free the region; no per-block
+        // work. Leak detection is GuardedPool's job.
+        unsafe { std::alloc::dealloc(self.raw.mem_start().as_ptr(), self.layout) };
+    }
+}
+
+impl std::fmt::Debug for FixedPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FixedPool")
+            .field("block_size", &self.block_size())
+            .field("num_blocks", &self.num_blocks())
+            .field("num_free", &self.num_free())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_alloc_free() {
+        let mut p = FixedPool::with_blocks(32, 10);
+        let a = p.allocate().unwrap();
+        let b = p.allocate().unwrap();
+        assert_ne!(a.as_ptr(), b.as_ptr());
+        assert_eq!(p.num_used(), 2);
+        unsafe {
+            p.deallocate(a);
+            p.deallocate(b);
+        }
+        assert!(p.is_empty());
+    }
+
+    #[test]
+    fn block_size_rounded_to_alignment() {
+        let cfg = PoolConfig::new(5, 4).with_align(16);
+        assert_eq!(cfg.effective_block_size(), 16);
+        let mut p = FixedPool::new(cfg);
+        assert_eq!(p.block_size(), 16);
+        let a = p.allocate().unwrap();
+        assert_eq!(a.as_ptr() as usize % 16, 0);
+    }
+
+    #[test]
+    fn min_block_size_enforced() {
+        let cfg = PoolConfig::new(1, 4).with_align(1);
+        assert_eq!(cfg.effective_block_size(), 4);
+    }
+
+    #[test]
+    fn alignment_of_every_block() {
+        for align in [8usize, 16, 64, 128] {
+            let mut p = FixedPool::new(PoolConfig::new(24, 50).with_align(align));
+            for _ in 0..50 {
+                let a = p.allocate().unwrap();
+                assert_eq!(a.as_ptr() as usize % align, 0, "align {align}");
+            }
+        }
+    }
+
+    #[test]
+    fn writes_to_blocks_do_not_corrupt_pool() {
+        let mut p = FixedPool::with_blocks(64, 8);
+        let ptrs: Vec<_> = (0..8).map(|_| p.allocate().unwrap()).collect();
+        // Scribble over every byte of every block (user data).
+        for ptr in &ptrs {
+            unsafe { std::ptr::write_bytes(ptr.as_ptr(), 0xEE, 64) };
+        }
+        for ptr in ptrs {
+            unsafe { p.deallocate(ptr) };
+        }
+        // Pool must be fully reusable.
+        for _ in 0..8 {
+            assert!(p.allocate().is_some());
+        }
+        assert!(p.allocate().is_none());
+    }
+
+    #[test]
+    fn deallocate_checked_rejects_foreign_and_misaligned() {
+        let mut p = FixedPool::with_blocks(16, 4);
+        let a = p.allocate().unwrap();
+        let mut foreign = [0u8; 16];
+        let f = NonNull::new(foreign.as_mut_ptr()).unwrap();
+        unsafe {
+            assert!(!p.deallocate_checked(f));
+            let mis = NonNull::new_unchecked(a.as_ptr().add(3));
+            assert!(!p.deallocate_checked(mis));
+            assert!(p.deallocate_checked(a));
+        }
+        assert_eq!(p.num_used(), 0);
+    }
+
+    #[test]
+    fn stats_counters() {
+        let mut p = FixedPool::with_blocks(16, 2);
+        let a = p.allocate().unwrap();
+        let _b = p.allocate().unwrap();
+        assert!(p.allocate().is_none());
+        unsafe { p.deallocate(a) };
+        let s = p.stats();
+        assert_eq!(s.total_allocs, 2);
+        assert_eq!(s.total_frees, 1);
+        assert_eq!(s.failed_allocs, 1);
+        assert_eq!(s.num_free, 1);
+        assert_eq!(s.utilization(), 0.5);
+        assert!(s.header_overhead_bytes <= 96);
+    }
+
+    #[test]
+    fn exhaust_and_recover() {
+        let mut p = FixedPool::with_blocks(8, 100);
+        let ptrs: Vec<_> = (0..100).map(|_| p.allocate().unwrap()).collect();
+        assert!(p.is_full());
+        for ptr in ptrs {
+            unsafe { p.deallocate(ptr) };
+        }
+        assert!(p.is_empty());
+        assert_eq!(p.stats().total_allocs, 100);
+    }
+
+    #[test]
+    fn large_pool_creation_is_instant() {
+        // 1 GiB virtual pool: creation must not touch pages (lazy init).
+        // If creation looped over blocks this would visibly stall/fault.
+        let t = crate::util::Timer::start();
+        let p = FixedPool::with_blocks(4096, 262_144); // 1 GiB
+        let create_ns = t.elapsed_ns();
+        assert_eq!(p.num_free(), 262_144);
+        // Generous bound: even a page-zeroing loop over 1 GiB takes >100 ms.
+        assert!(create_ns < 100_000_000, "creation took {create_ns} ns");
+    }
+}

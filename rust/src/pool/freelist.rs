@@ -1,0 +1,144 @@
+//! `PtrFreeListPool` — the classic pointer-linked free-list pool (the
+//! technique the paper cites as prior art: Boost.Pool \[14], Hanson \[7]).
+//!
+//! Differences from the paper's algorithm:
+//! * free blocks store a full **pointer** (8 bytes) to the next free block,
+//!   not a 4-byte index → minimum block size is 8 on 64-bit targets;
+//! * the free list is threaded eagerly at creation (loop).
+//!
+//! Serves as the "existing technique \[14]\[6]\[13]" baseline in ablation A2.
+
+use core::alloc::Layout;
+use core::ptr::NonNull;
+
+use crate::util::align::align_up;
+
+/// Pointer-linked eager free-list pool.
+pub struct PtrFreeListPool {
+    num_blocks: u32,
+    block_size: usize,
+    num_free: u32,
+    mem_start: NonNull<u8>,
+    head: *mut u8, // null = empty
+    layout: Layout,
+}
+
+unsafe impl Send for PtrFreeListPool {}
+
+impl PtrFreeListPool {
+    pub fn with_blocks(block_size: usize, num_blocks: u32) -> Self {
+        assert!(num_blocks > 0);
+        let align = core::mem::size_of::<usize>();
+        // Must hold a pointer.
+        let bs = align_up(block_size.max(core::mem::size_of::<*mut u8>()), align);
+        let bytes = bs * num_blocks as usize;
+        let layout = Layout::from_size_align(bytes, align).expect("bad layout");
+        let region = NonNull::new(unsafe { std::alloc::alloc(layout) })
+            .expect("pool region allocation failed");
+        // Thread every block: block i points to block i+1; last → null.
+        unsafe {
+            for i in 0..num_blocks as usize {
+                let p = region.as_ptr().add(i * bs) as *mut *mut u8;
+                let next = if i + 1 < num_blocks as usize {
+                    region.as_ptr().add((i + 1) * bs)
+                } else {
+                    core::ptr::null_mut()
+                };
+                p.write(next);
+            }
+        }
+        Self {
+            num_blocks,
+            block_size: bs,
+            num_free: num_blocks,
+            mem_start: region,
+            head: region.as_ptr(),
+            layout,
+        }
+    }
+
+    #[inline]
+    pub fn allocate(&mut self) -> Option<NonNull<u8>> {
+        let head = NonNull::new(self.head)?;
+        // SAFETY: head is a free block; its first word is the next pointer.
+        self.head = unsafe { (head.as_ptr() as *const *mut u8).read() };
+        self.num_free -= 1;
+        Some(head)
+    }
+
+    /// # Safety
+    /// `p` must come from `allocate` on this pool, freed at most once.
+    #[inline]
+    pub unsafe fn deallocate(&mut self, p: NonNull<u8>) {
+        (p.as_ptr() as *mut *mut u8).write(self.head);
+        self.head = p.as_ptr();
+        self.num_free += 1;
+    }
+
+    pub fn num_free(&self) -> u32 {
+        self.num_free
+    }
+
+    pub fn num_blocks(&self) -> u32 {
+        self.num_blocks
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+}
+
+impl Drop for PtrFreeListPool {
+    fn drop(&mut self) {
+        unsafe { std::alloc::dealloc(self.mem_start.as_ptr(), self.layout) };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn min_block_is_pointer_sized() {
+        let p = PtrFreeListPool::with_blocks(1, 4);
+        assert_eq!(p.block_size(), core::mem::size_of::<*mut u8>());
+    }
+
+    #[test]
+    fn allocate_all_then_none() {
+        let mut p = PtrFreeListPool::with_blocks(16, 10);
+        let mut addrs = std::collections::BTreeSet::new();
+        for _ in 0..10 {
+            let a = p.allocate().unwrap();
+            assert!(addrs.insert(a.as_ptr() as usize));
+        }
+        assert!(p.allocate().is_none());
+        assert_eq!(p.num_free(), 0);
+    }
+
+    #[test]
+    fn lifo_reuse() {
+        let mut p = PtrFreeListPool::with_blocks(16, 4);
+        let a = p.allocate().unwrap();
+        unsafe { p.deallocate(a) };
+        assert_eq!(p.allocate().unwrap().as_ptr(), a.as_ptr());
+    }
+
+    #[test]
+    fn churn_consistency() {
+        let mut p = PtrFreeListPool::with_blocks(32, 64);
+        let mut rng = crate::util::Rng::new(42);
+        let mut live = Vec::new();
+        for _ in 0..5000 {
+            if live.is_empty() || (live.len() < 64 && rng.gen_bool(0.5)) {
+                if let Some(a) = p.allocate() {
+                    live.push(a);
+                }
+            } else {
+                let i = rng.gen_usize(0, live.len());
+                unsafe { p.deallocate(live.swap_remove(i)) };
+            }
+            assert_eq!(p.num_free() as usize, 64 - live.len());
+        }
+    }
+}

@@ -1,0 +1,262 @@
+//! `PooledGlobalAlloc` — §V's "overloading the new and delete operators",
+//! translated to Rust's `GlobalAlloc`.
+//!
+//! "This ad-hoc approach works by checking the memory allocation size
+//! within the new operator; if space is available inside the pool, and the
+//! size is within a specified tolerance the memory is taken from the pool,
+//! but if not, the general system allocator is called to supply the
+//! memory."
+//!
+//! Built on the lock-free [`AtomicPool`] per
+//! size class so it is safe as a true `#[global_allocator]` (see
+//! `examples/custom_global_alloc.rs`). Classes are created lazily on first
+//! use with a `Once`-style spinflag; after that both paths are lock-free.
+//!
+//! Routing rule: served-from-pool iff `size <= MAX_CLASS` *and*
+//! `align <= 16` *and* the class has a free block; everything else falls
+//! through to [`std::alloc::System`].
+
+use core::alloc::{GlobalAlloc, Layout};
+use core::cell::Cell;
+use core::sync::atomic::{AtomicPtr, AtomicU64, Ordering};
+
+use super::atomic::AtomicPool;
+
+std::thread_local! {
+    /// Reentrancy guard: building a class pool allocates (its region and
+    /// side table come from `std::alloc`, which IS this allocator when
+    /// installed globally). While set, everything routes to the system
+    /// allocator to break the recursion.
+    static IN_POOL_INIT: Cell<bool> = const { Cell::new(false) };
+}
+
+const MIN_SHIFT: u32 = 4; // 16 B
+const MAX_SHIFT: u32 = 12; // 4096 B
+const NUM_CLASSES: usize = (MAX_SHIFT - MIN_SHIFT + 1) as usize; // 9
+const CLASS_ALIGN: usize = 16;
+
+/// A pool-backed global allocator with system fallback.
+pub struct PooledGlobalAlloc {
+    classes: [AtomicPtr<AtomicPool>; NUM_CLASSES],
+    blocks_per_class: u32,
+    pub pool_hits: AtomicU64,
+    pub system_allocs: AtomicU64,
+}
+
+impl PooledGlobalAlloc {
+    /// `const`-constructible so it can be a `static`.
+    pub const fn new(blocks_per_class: u32) -> Self {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const NULL: AtomicPtr<AtomicPool> = AtomicPtr::new(core::ptr::null_mut());
+        Self {
+            classes: [NULL; NUM_CLASSES],
+            blocks_per_class,
+            pool_hits: AtomicU64::new(0),
+            system_allocs: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    fn class_of(layout: &Layout) -> Option<usize> {
+        if layout.align() > CLASS_ALIGN || layout.size() == 0 {
+            return None;
+        }
+        let size = layout.size().max(1 << MIN_SHIFT);
+        if size > 1 << MAX_SHIFT {
+            return None;
+        }
+        let shift = usize::BITS - (size - 1).leading_zeros(); // ceil log2
+        Some((shift - MIN_SHIFT) as usize)
+    }
+
+    /// Get or lazily create the pool for class `ci`.
+    fn class_pool(&self, ci: usize) -> &AtomicPool {
+        let ptr = self.classes[ci].load(Ordering::Acquire);
+        if !ptr.is_null() {
+            // SAFETY: once published, pools live for the program duration.
+            return unsafe { &*ptr };
+        }
+        // Slow path: build one and race to publish it. The construction
+        // itself allocates → set the reentrancy guard so those nested
+        // allocations go to the system allocator.
+        let block_size = 1usize << (MIN_SHIFT + ci as u32);
+        IN_POOL_INIT.with(|c| c.set(true));
+        let fresh = Box::into_raw(Box::new(AtomicPool::with_blocks(
+            block_size,
+            self.blocks_per_class,
+        )));
+        IN_POOL_INIT.with(|c| c.set(false));
+        match self.classes[ci].compare_exchange(
+            core::ptr::null_mut(),
+            fresh,
+            Ordering::AcqRel,
+            Ordering::Acquire,
+        ) {
+            Ok(_) => unsafe { &*fresh },
+            Err(winner) => {
+                // Another thread won: drop ours, use theirs.
+                drop(unsafe { Box::from_raw(fresh) });
+                unsafe { &*winner }
+            }
+        }
+    }
+
+    /// Did `ptr` come from one of our pools? (bounds check per class)
+    fn owning_class(&self, ptr: *mut u8) -> Option<usize> {
+        for ci in 0..NUM_CLASSES {
+            let pool = self.classes[ci].load(Ordering::Acquire);
+            if pool.is_null() {
+                continue;
+            }
+            let pool = unsafe { &*pool };
+            if let Some(nn) = core::ptr::NonNull::new(ptr) {
+                let start = pool_region_start(pool);
+                let len = pool.block_size() * pool.num_blocks() as usize;
+                let a = nn.as_ptr() as usize;
+                if a >= start && a < start + len {
+                    return Some(ci);
+                }
+            }
+        }
+        None
+    }
+
+    pub fn stats(&self) -> (u64, u64) {
+        (
+            self.pool_hits.load(Ordering::Relaxed),
+            self.system_allocs.load(Ordering::Relaxed),
+        )
+    }
+}
+
+#[inline]
+fn pool_region_start(pool: &AtomicPool) -> usize {
+    pool.region_start()
+}
+
+// SAFETY: GlobalAlloc contract — alloc returns valid blocks or null;
+// dealloc only touches memory we own.
+unsafe impl GlobalAlloc for PooledGlobalAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if IN_POOL_INIT.with(|c| c.get()) {
+            return std::alloc::System.alloc(layout);
+        }
+        if let Some(ci) = Self::class_of(&layout) {
+            let pool = self.class_pool(ci);
+            if let Some(p) = pool.allocate() {
+                self.pool_hits.fetch_add(1, Ordering::Relaxed);
+                return p.as_ptr();
+            }
+        }
+        self.system_allocs.fetch_add(1, Ordering::Relaxed);
+        std::alloc::System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        // Fast path: size+align says it *could* be pooled; verify by range.
+        if Self::class_of(&layout).is_some() {
+            if let Some(ci) = self.owning_class(ptr) {
+                let pool = &*self.classes[ci].load(Ordering::Acquire);
+                pool.deallocate(core::ptr::NonNull::new_unchecked(ptr));
+                return;
+            }
+        }
+        std::alloc::System.dealloc(ptr, layout)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_of_routing() {
+        let l = |s, a| Layout::from_size_align(s, a).unwrap();
+        assert_eq!(PooledGlobalAlloc::class_of(&l(1, 1)), Some(0));
+        assert_eq!(PooledGlobalAlloc::class_of(&l(16, 8)), Some(0));
+        assert_eq!(PooledGlobalAlloc::class_of(&l(17, 8)), Some(1));
+        assert_eq!(PooledGlobalAlloc::class_of(&l(4096, 16)), Some(8));
+        assert_eq!(PooledGlobalAlloc::class_of(&l(4097, 8)), None);
+        assert_eq!(PooledGlobalAlloc::class_of(&l(64, 32)), None); // over-aligned
+    }
+
+    #[test]
+    fn alloc_dealloc_roundtrip() {
+        let ga = PooledGlobalAlloc::new(64);
+        let layout = Layout::from_size_align(100, 8).unwrap();
+        unsafe {
+            let p = ga.alloc(layout);
+            assert!(!p.is_null());
+            core::ptr::write_bytes(p, 0xAB, 100);
+            ga.dealloc(p, layout);
+        }
+        let (hits, sys) = ga.stats();
+        assert_eq!(hits, 1);
+        assert_eq!(sys, 0);
+    }
+
+    #[test]
+    fn oversize_uses_system() {
+        let ga = PooledGlobalAlloc::new(8);
+        let layout = Layout::from_size_align(1 << 20, 8).unwrap();
+        unsafe {
+            let p = ga.alloc(layout);
+            assert!(!p.is_null());
+            ga.dealloc(p, layout);
+        }
+        assert_eq!(ga.stats().1, 1);
+    }
+
+    #[test]
+    fn exhaustion_falls_back_and_frees_correctly() {
+        let ga = PooledGlobalAlloc::new(2);
+        let layout = Layout::from_size_align(32, 8).unwrap();
+        unsafe {
+            let a = ga.alloc(layout);
+            let b = ga.alloc(layout);
+            let c = ga.alloc(layout); // pool of 2 exhausted → system
+            assert_eq!(ga.stats(), (2, 1));
+            // dealloc must route each pointer to its true owner.
+            ga.dealloc(c, layout);
+            ga.dealloc(b, layout);
+            ga.dealloc(a, layout);
+            // Pool fully free again: two more pool hits.
+            let d = ga.alloc(layout);
+            let e = ga.alloc(layout);
+            assert_eq!(ga.stats().0, 4);
+            ga.dealloc(d, layout);
+            ga.dealloc(e, layout);
+        }
+    }
+
+    #[test]
+    fn concurrent_global_alloc() {
+        let ga: &'static PooledGlobalAlloc =
+            Box::leak(Box::new(PooledGlobalAlloc::new(1024)));
+        std::thread::scope(|s| {
+            for t in 0..8 {
+                s.spawn(move || {
+                    let mut rng = crate::util::Rng::new(t);
+                    let mut held: Vec<(*mut u8, Layout)> = Vec::new();
+                    for _ in 0..2000 {
+                        if held.is_empty() || rng.gen_bool(0.5) {
+                            let size = rng.gen_usize(1, 512);
+                            let layout = Layout::from_size_align(size, 8).unwrap();
+                            let p = unsafe { ga.alloc(layout) };
+                            assert!(!p.is_null());
+                            unsafe { p.write(t as u8) };
+                            held.push((p, layout));
+                        } else {
+                            let i = rng.gen_usize(0, held.len());
+                            let (p, layout) = held.swap_remove(i);
+                            unsafe { ga.dealloc(p, layout) };
+                        }
+                    }
+                    for (p, layout) in held {
+                        unsafe { ga.dealloc(p, layout) };
+                    }
+                });
+            }
+        });
+    }
+}

@@ -1,0 +1,416 @@
+//! `GuardedPool` — §IV.B "Verification" made concrete.
+//!
+//! The paper: "memory guards can be added to include boundary checks by
+//! adding a pre and post byte signature to each block. These memory guards
+//! can be checked globally (i.e., for all blocks) and locally (i.e.,
+//! currently deleted block) … leaks can be found by extending and embedding
+//! the memory guards to store additional information about the allocation;
+//! for example, the line number of the allocation."
+//!
+//! Layout of each guarded slot (user block size `B`, guard word `G = 8`):
+//!
+//! ```text
+//! | pre-canary (8) | tag (8) | user payload (B) | post-canary (8) |
+//! ```
+//!
+//! Checks provided (each toggleable via [`GuardConfig`]):
+//! * address validation on free (bounds + slot boundary)        — cheap
+//! * double-free detection via an allocation bitmap             — cheap
+//! * pre/post canary check on free ("local")                    — cheap
+//! * whole-pool canary sweep ([`GuardedPool::check_all`])                    — O(n), on demand
+//! * alloc/free fill patterns (0xCD / 0xDD, debug-CRT style)    — O(B)
+//! * leak report with a caller-supplied tag (e.g. line number)  — free
+//!
+//! All checks sit *outside* the hot path of [`super::raw::RawPool`]: this type is the
+//! "debug build" flavour; release code uses `FixedPool` directly. Ablation
+//! A4 measures exactly this gap.
+
+use core::ptr::NonNull;
+
+use super::fixed::{FixedPool, PoolConfig};
+
+const PRE_CANARY: u64 = 0xBEEF_FACE_CAFE_F00D;
+const POST_CANARY: u64 = 0xDEAD_C0DE_ABAD_1DEA;
+const GUARD: usize = 8;
+/// Fill byte for freshly allocated payloads (MSVC debug-CRT convention).
+pub const FILL_ALLOC: u8 = 0xCD;
+/// Fill byte for freed payloads.
+pub const FILL_FREE: u8 = 0xDD;
+
+/// Which checks to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GuardConfig {
+    /// Write+verify pre/post canaries.
+    pub canaries: bool,
+    /// Fill payload with 0xCD on alloc and 0xDD on free.
+    pub fills: bool,
+    /// Track an allocation bitmap to catch double frees / wild frees.
+    pub track_double_free: bool,
+    /// Sweep every live block's canaries every `sweep_every` frees
+    /// (0 = never). This is the expensive "global check".
+    pub sweep_every: u32,
+}
+
+impl Default for GuardConfig {
+    fn default() -> Self {
+        Self { canaries: true, fills: true, track_double_free: true, sweep_every: 0 }
+    }
+}
+
+impl GuardConfig {
+    /// Everything on, periodic global sweeps — maximally paranoid (and
+    /// slow), mimicking a debug-heap environment.
+    pub fn paranoid() -> Self {
+        Self { canaries: true, fills: true, track_double_free: true, sweep_every: 64 }
+    }
+
+    /// All checks off — measures the pure wrapper overhead.
+    pub fn off() -> Self {
+        Self { canaries: false, fills: false, track_double_free: false, sweep_every: 0 }
+    }
+}
+
+/// Error kinds the guards can report.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum GuardError {
+    /// Pointer not inside the pool or not on a slot boundary.
+    InvalidAddress,
+    /// Slot is not currently allocated (double free or wild free).
+    NotAllocated,
+    /// Pre-canary clobbered (buffer *underrun* into the slot header).
+    PreCanaryClobbered { index: u32, found: u64 },
+    /// Post-canary clobbered (buffer overrun past the payload).
+    PostCanaryClobbered { index: u32, found: u64 },
+}
+
+impl std::fmt::Display for GuardError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            GuardError::InvalidAddress => write!(f, "invalid address"),
+            GuardError::NotAllocated => write!(f, "block not allocated (double/wild free)"),
+            GuardError::PreCanaryClobbered { index, found } => {
+                write!(f, "pre-canary clobbered on block {index}: {found:#018x}")
+            }
+            GuardError::PostCanaryClobbered { index, found } => {
+                write!(f, "post-canary clobbered on block {index}: {found:#018x}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for GuardError {}
+
+/// A live-allocation record for leak reports.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Allocation {
+    pub index: u32,
+    /// Caller-supplied tag (§IV.B suggests "the line number of the
+    /// allocation"; any string works).
+    pub tag: &'static str,
+    pub seq: u64,
+}
+
+/// Fixed-size pool with §IV.B guards.
+pub struct GuardedPool {
+    pool: FixedPool,
+    cfg: GuardConfig,
+    user_block_size: usize,
+    /// slot index → allocated?
+    allocated: Vec<bool>,
+    /// slot index → tag of the live allocation (for leak reports).
+    tags: Vec<&'static str>,
+    seq: u64,
+    seqs: Vec<u64>,
+    frees_since_sweep: u32,
+    /// Count of canary violations detected (for tests/metrics).
+    pub violations: u64,
+}
+
+impl GuardedPool {
+    /// `block_size` is the *user-visible* payload size.
+    pub fn with_blocks(block_size: usize, num_blocks: u32, cfg: GuardConfig) -> Self {
+        let slot = GUARD * 2 + 8 + block_size.max(4); // pre + tagpad + payload + post
+        let pool = FixedPool::new(PoolConfig::new(slot, num_blocks).with_align(8));
+        Self {
+            pool,
+            cfg,
+            user_block_size: block_size.max(4),
+            allocated: vec![false; num_blocks as usize],
+            tags: vec![""; num_blocks as usize],
+            seq: 0,
+            seqs: vec![0; num_blocks as usize],
+            frees_since_sweep: 0,
+            violations: 0,
+        }
+    }
+
+    /// Allocate a payload, recording `tag` for leak reports.
+    pub fn allocate(&mut self, tag: &'static str) -> Option<NonNull<u8>> {
+        let slot = self.pool.allocate()?;
+        let index = self.pool.raw().index_from_addr(slot);
+        unsafe {
+            if self.cfg.canaries {
+                (slot.as_ptr() as *mut u64).write_unaligned(PRE_CANARY);
+                (slot.as_ptr().add(GUARD + 8 + self.user_block_size) as *mut u64)
+                    .write_unaligned(POST_CANARY);
+            }
+            if self.cfg.fills {
+                core::ptr::write_bytes(
+                    slot.as_ptr().add(GUARD + 8),
+                    FILL_ALLOC,
+                    self.user_block_size,
+                );
+            }
+        }
+        if self.cfg.track_double_free {
+            self.allocated[index as usize] = true;
+        }
+        self.seq += 1;
+        self.seqs[index as usize] = self.seq;
+        self.tags[index as usize] = tag;
+        // SAFETY: payload starts GUARD+8 into the slot.
+        Some(unsafe { NonNull::new_unchecked(slot.as_ptr().add(GUARD + 8)) })
+    }
+
+    /// Checked free. Returns the detected error instead of corrupting the
+    /// pool — the caller decides whether to abort.
+    pub fn deallocate(&mut self, payload: NonNull<u8>) -> Result<(), GuardError> {
+        let slot_ptr = unsafe { payload.as_ptr().sub(GUARD + 8) };
+        let slot = NonNull::new(slot_ptr).ok_or(GuardError::InvalidAddress)?;
+        if !self.pool.validate_addr(slot) {
+            return Err(GuardError::InvalidAddress);
+        }
+        let index = self.pool.raw().index_from_addr(slot);
+        if self.cfg.track_double_free && !self.allocated[index as usize] {
+            return Err(GuardError::NotAllocated);
+        }
+        if self.cfg.canaries {
+            self.check_block(index)?;
+        }
+        if self.cfg.fills {
+            unsafe {
+                core::ptr::write_bytes(
+                    slot.as_ptr().add(GUARD + 8),
+                    FILL_FREE,
+                    self.user_block_size,
+                )
+            };
+        }
+        if self.cfg.track_double_free {
+            self.allocated[index as usize] = false;
+        }
+        self.tags[index as usize] = "";
+        // SAFETY: slot came from our pool and the bitmap says it is live.
+        unsafe { self.pool.deallocate(slot) };
+
+        if self.cfg.sweep_every > 0 {
+            self.frees_since_sweep += 1;
+            if self.frees_since_sweep >= self.cfg.sweep_every {
+                self.frees_since_sweep = 0;
+                self.check_all()?;
+            }
+        }
+        Ok(())
+    }
+
+    /// "Local" canary check of one block (§IV.B).
+    fn check_block(&mut self, index: u32) -> Result<(), GuardError> {
+        let slot = self.pool.raw().addr_from_index(index);
+        unsafe {
+            let pre = (slot.as_ptr() as *const u64).read_unaligned();
+            if pre != PRE_CANARY {
+                self.violations += 1;
+                return Err(GuardError::PreCanaryClobbered { index, found: pre });
+            }
+            let post = (slot.as_ptr().add(GUARD + 8 + self.user_block_size) as *const u64)
+                .read_unaligned();
+            if post != POST_CANARY {
+                self.violations += 1;
+                return Err(GuardError::PostCanaryClobbered { index, found: post });
+            }
+        }
+        Ok(())
+    }
+
+    /// "Global" canary sweep over every live block (§IV.B). O(n).
+    pub fn check_all(&mut self) -> Result<(), GuardError> {
+        for index in 0..self.pool.num_blocks() {
+            if self.allocated[index as usize] {
+                self.check_block(index)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Live allocations (the leak report, §IV.B). Order: by allocation
+    /// sequence number.
+    pub fn leaks(&self) -> Vec<Allocation> {
+        let mut out: Vec<Allocation> = self
+            .allocated
+            .iter()
+            .enumerate()
+            .filter(|(_, &live)| live)
+            .map(|(i, _)| Allocation {
+                index: i as u32,
+                tag: self.tags[i],
+                seq: self.seqs[i],
+            })
+            .collect();
+        out.sort_by_key(|a| a.seq);
+        out
+    }
+
+    pub fn num_live(&self) -> usize {
+        self.allocated.iter().filter(|&&b| b).count()
+    }
+
+    pub fn num_free(&self) -> u32 {
+        self.pool.num_free()
+    }
+
+    pub fn user_block_size(&self) -> usize {
+        self.user_block_size
+    }
+
+    /// Was the freshly-returned payload filled with the alloc pattern?
+    pub fn fill_ok(&self, payload: NonNull<u8>) -> bool {
+        if !self.cfg.fills {
+            return true;
+        }
+        unsafe {
+            (0..self.user_block_size).all(|i| payload.as_ptr().add(i).read() == FILL_ALLOC)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_clean() {
+        let mut g = GuardedPool::with_blocks(32, 8, GuardConfig::default());
+        let p = g.allocate("test:1").unwrap();
+        assert!(g.fill_ok(p));
+        unsafe { std::ptr::write_bytes(p.as_ptr(), 0x11, 32) }; // stay in bounds
+        g.deallocate(p).unwrap();
+        assert_eq!(g.num_live(), 0);
+    }
+
+    #[test]
+    fn detects_overrun() {
+        let mut g = GuardedPool::with_blocks(16, 4, GuardConfig::default());
+        let p = g.allocate("overrun").unwrap();
+        // Write one byte past the payload → clobbers post canary.
+        unsafe { p.as_ptr().add(16).write(0xFF) };
+        match g.deallocate(p) {
+            Err(GuardError::PostCanaryClobbered { index: 0, .. }) => {}
+            other => panic!("expected post-canary error, got {other:?}"),
+        }
+        assert_eq!(g.violations, 1);
+    }
+
+    #[test]
+    fn detects_underrun() {
+        let mut g = GuardedPool::with_blocks(16, 4, GuardConfig::default());
+        let p = g.allocate("underrun").unwrap();
+        unsafe { p.as_ptr().sub(GUARD + 8).write(0x00) }; // clobber pre canary
+        assert!(matches!(
+            g.deallocate(p),
+            Err(GuardError::PreCanaryClobbered { .. })
+        ));
+    }
+
+    #[test]
+    fn detects_double_free() {
+        let mut g = GuardedPool::with_blocks(16, 4, GuardConfig::default());
+        let p = g.allocate("df").unwrap();
+        g.deallocate(p).unwrap();
+        assert_eq!(g.deallocate(p), Err(GuardError::NotAllocated));
+    }
+
+    #[test]
+    fn detects_wild_free() {
+        let mut g = GuardedPool::with_blocks(16, 4, GuardConfig::default());
+        let mut junk = [0u8; 64];
+        let p = NonNull::new(junk.as_mut_ptr()).unwrap();
+        assert_eq!(g.deallocate(p), Err(GuardError::InvalidAddress));
+    }
+
+    #[test]
+    fn leak_report_ordered_with_tags() {
+        let mut g = GuardedPool::with_blocks(16, 8, GuardConfig::default());
+        let a = g.allocate("file.rs:10").unwrap();
+        let b = g.allocate("file.rs:20").unwrap();
+        let _c = g.allocate("file.rs:30").unwrap();
+        g.deallocate(b).unwrap();
+        let _ = a;
+        let leaks = g.leaks();
+        assert_eq!(leaks.len(), 2);
+        assert_eq!(leaks[0].tag, "file.rs:10");
+        assert_eq!(leaks[1].tag, "file.rs:30");
+        assert!(leaks[0].seq < leaks[1].seq);
+    }
+
+    #[test]
+    fn global_sweep_catches_live_corruption() {
+        let mut g = GuardedPool::with_blocks(16, 4, GuardConfig::paranoid());
+        let a = g.allocate("live").unwrap();
+        let b = g.allocate("ok").unwrap();
+        // Corrupt `a`'s post canary but free only `b` — only a global
+        // sweep can catch this.
+        unsafe { a.as_ptr().add(16).write(0xAA) };
+        g.deallocate(b).unwrap(); // sweep_every=64, not yet
+        assert!(matches!(
+            g.check_all(),
+            Err(GuardError::PostCanaryClobbered { .. })
+        ));
+    }
+
+    #[test]
+    fn fills_applied_on_alloc_and_free() {
+        let mut g = GuardedPool::with_blocks(8, 2, GuardConfig::default());
+        let p = g.allocate("fills").unwrap();
+        assert!(g.fill_ok(p));
+        let slot_payload = p.as_ptr();
+        g.deallocate(p).unwrap();
+        // After free the payload is 0xDD (read through the raw pointer;
+        // the block is free but the memory is still ours via the pool).
+        // Note: first 4 bytes of the *slot* hold the free-list index, but
+        // the payload area (offset GUARD+8) keeps the fill.
+        unsafe {
+            assert_eq!(slot_payload.read(), FILL_FREE);
+            assert_eq!(slot_payload.add(7).read(), FILL_FREE);
+        }
+    }
+
+    #[test]
+    fn checks_off_mode_skips_detection() {
+        let mut g = GuardedPool::with_blocks(16, 4, GuardConfig::off());
+        let p = g.allocate("off").unwrap();
+        unsafe { p.as_ptr().add(16).write(0xFF) }; // would clobber canary
+        g.deallocate(p).unwrap(); // no error: checks disabled
+                                  // double free IS unchecked in off mode — don't do it here; just
+                                  // verify state is consistent.
+        assert_eq!(g.num_free(), 4);
+    }
+
+    #[test]
+    fn payload_isolation_between_blocks() {
+        // Writing the full payload of one block must not trip its
+        // neighbours' canaries.
+        let mut g = GuardedPool::with_blocks(24, 8, GuardConfig::default());
+        let ptrs: Vec<_> = (0..8).map(|i| {
+            let tag: &'static str = Box::leak(format!("t{i}").into_boxed_str());
+            g.allocate(tag).unwrap()
+        }).collect();
+        for p in &ptrs {
+            unsafe { std::ptr::write_bytes(p.as_ptr(), 0x77, 24) };
+        }
+        g.check_all().unwrap();
+        for p in ptrs {
+            g.deallocate(p).unwrap();
+        }
+        assert_eq!(g.num_live(), 0);
+    }
+}

@@ -1,0 +1,160 @@
+//! `LockedPool` — the simplest answer to §VI's multi-threading limitation:
+//! a `Mutex` around [`FixedPool`]. Shareable via `Arc`; baseline for
+//! ablation A3 against the lock-free [`AtomicPool`](super::atomic::AtomicPool).
+
+use core::ptr::NonNull;
+use std::sync::{Arc, Mutex};
+
+use super::fixed::{FixedPool, PoolConfig};
+use super::stats::PoolStats;
+
+/// Mutex-protected fixed-size pool.
+pub struct LockedPool {
+    inner: Mutex<FixedPool>,
+}
+
+impl LockedPool {
+    pub fn new(config: PoolConfig) -> Self {
+        Self { inner: Mutex::new(FixedPool::new(config)) }
+    }
+
+    pub fn with_blocks(block_size: usize, num_blocks: u32) -> Self {
+        Self::new(PoolConfig::new(block_size, num_blocks))
+    }
+
+    /// Shareable handle.
+    pub fn shared(config: PoolConfig) -> Arc<Self> {
+        Arc::new(Self::new(config))
+    }
+
+    #[inline]
+    pub fn allocate(&self) -> Option<NonNull<u8>> {
+        self.inner.lock().expect("pool mutex poisoned").allocate()
+    }
+
+    /// # Safety
+    /// `p` must come from `allocate` on this pool, freed at most once.
+    #[inline]
+    pub unsafe fn deallocate(&self, p: NonNull<u8>) {
+        self.inner.lock().expect("pool mutex poisoned").deallocate(p)
+    }
+
+    pub fn num_free(&self) -> u32 {
+        self.inner.lock().unwrap().num_free()
+    }
+
+    pub fn num_blocks(&self) -> u32 {
+        self.inner.lock().unwrap().num_blocks()
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        self.inner.lock().unwrap().stats()
+    }
+}
+
+// SAFETY: all access is serialised by the mutex; raw pointers inside the
+// pool never escape unsynchronised.
+unsafe impl Send for LockedPool {}
+unsafe impl Sync for LockedPool {}
+
+/// Send-able token representing a block owned by a thread. Converting a
+/// `NonNull<u8>` into a `BlockToken` lets tests/benches move pool blocks
+/// across threads without unsafe in the caller.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlockToken(pub usize);
+
+impl BlockToken {
+    pub fn from_ptr(p: NonNull<u8>) -> Self {
+        Self(p.as_ptr() as usize)
+    }
+
+    pub fn into_ptr(self) -> NonNull<u8> {
+        NonNull::new(self.0 as *mut u8).expect("null token")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn single_thread_basics() {
+        let p = LockedPool::with_blocks(16, 4);
+        let a = p.allocate().unwrap();
+        assert_eq!(p.num_free(), 3);
+        unsafe { p.deallocate(a) };
+        assert_eq!(p.num_free(), 4);
+    }
+
+    #[test]
+    fn concurrent_alloc_free_no_double_handout() {
+        const THREADS: usize = 8;
+        const PER_THREAD: usize = 200;
+        let pool = LockedPool::shared(PoolConfig::new(32, (THREADS * PER_THREAD) as u32));
+        let handed = Arc::new(AtomicUsize::new(0));
+
+        std::thread::scope(|s| {
+            for _ in 0..THREADS {
+                let pool = Arc::clone(&pool);
+                let handed = Arc::clone(&handed);
+                s.spawn(move || {
+                    let mut mine = Vec::new();
+                    for _ in 0..PER_THREAD {
+                        let p = pool.allocate().expect("sized for all threads");
+                        // Tag the block with a unique value and verify no
+                        // other thread holds the same address.
+                        unsafe { (p.as_ptr() as *mut usize).write(p.as_ptr() as usize) };
+                        mine.push(BlockToken::from_ptr(p));
+                        handed.fetch_add(1, Ordering::Relaxed);
+                    }
+                    for t in &mine {
+                        let p = t.into_ptr();
+                        let v = unsafe { (p.as_ptr() as *const usize).read() };
+                        assert_eq!(v, p.as_ptr() as usize, "block shared between threads");
+                    }
+                    for t in mine {
+                        unsafe { pool.deallocate(t.into_ptr()) };
+                    }
+                });
+            }
+        });
+
+        assert_eq!(handed.load(Ordering::Relaxed), THREADS * PER_THREAD);
+        assert_eq!(pool.num_free(), (THREADS * PER_THREAD) as u32);
+    }
+
+    #[test]
+    fn exhaustion_under_contention() {
+        let pool = LockedPool::shared(PoolConfig::new(16, 64));
+        let failures = Arc::new(AtomicUsize::new(0));
+        // Barrier: no thread frees until every thread has finished its
+        // allocation phase, so exactly 128 - 64 = 64 requests must fail.
+        let barrier = Arc::new(std::sync::Barrier::new(4));
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let pool = Arc::clone(&pool);
+                let failures = Arc::clone(&failures);
+                let barrier = Arc::clone(&barrier);
+                s.spawn(move || {
+                    let mut held = Vec::new();
+                    for _ in 0..32 {
+                        match pool.allocate() {
+                            Some(p) => held.push(BlockToken::from_ptr(p)),
+                            None => {
+                                failures.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                    barrier.wait();
+                    for t in held {
+                        unsafe { pool.deallocate(t.into_ptr()) };
+                    }
+                });
+            }
+        });
+        // 4 threads × 32 requests = 128 > 64 blocks → exactly 64 failures.
+        assert_eq!(failures.load(Ordering::Relaxed), 64);
+        assert_eq!(pool.num_free(), 64);
+    }
+}

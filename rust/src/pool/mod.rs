@@ -1,0 +1,44 @@
+//! The paper's contribution: a family of fixed-size memory pools built
+//! around the no-loops, no-overhead algorithm of §IV.
+//!
+//! * [`RawPool`] — the paper's `Pool_c` (Listing 2), field for field:
+//!   lazy-init watermark + in-band index free list over a borrowed region.
+//! * [`FixedPool`] — owning, aligned, with stats ([`PoolStats`]).
+//! * [`TypedPool`]/[`PoolBox`] — RAII typed layer (§V ctor/dtor discipline).
+//! * [`EagerPool`] — the naive loop-at-create baseline the paper improves
+//!   on (§I, refs \[6]\[7]).
+//! * [`PtrFreeListPool`] — classic pointer-linked pool (prior art \[14]\[7]).
+//! * [`GuardedPool`] — §IV.B verification: canaries, fills, double-free,
+//!   leak reports.
+//! * [`LockedPool`] / [`AtomicPool`] — §VI's threading limitation solved
+//!   two ways (mutex vs lock-free Treiber stack with ABA tags).
+//! * [`ResizablePool`] — §VII grow/shrink by member-variable update.
+//! * [`MultiPool`] — §V/§VI ad-hoc hybrid: size classes + system fallback.
+//! * [`PooledGlobalAlloc`] — §V "overload new/delete" as a Rust
+//!   `#[global_allocator]`.
+
+pub mod atomic;
+pub mod eager;
+pub mod fixed;
+pub mod freelist;
+pub mod global_alloc;
+pub mod guarded;
+pub mod locked;
+pub mod multi;
+pub mod raw;
+pub mod resize;
+pub mod stats;
+pub mod typed;
+
+pub use atomic::AtomicPool;
+pub use eager::EagerPool;
+pub use fixed::{FixedPool, PoolConfig};
+pub use freelist::PtrFreeListPool;
+pub use global_alloc::PooledGlobalAlloc;
+pub use guarded::{GuardConfig, GuardError, GuardedPool};
+pub use locked::{BlockToken, LockedPool};
+pub use multi::{MultiPool, MultiPoolConfig, Origin};
+pub use raw::{RawPool, MIN_BLOCK_SIZE};
+pub use resize::ResizablePool;
+pub use stats::PoolStats;
+pub use typed::{PoolBox, TypedPool};

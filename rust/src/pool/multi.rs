@@ -1,0 +1,288 @@
+//! `MultiPool` — the paper's "ad-hoc" hybrid (§V, §VI): "a general system
+//! allocator in conjunction with multiple fixed-size pools would help to
+//! reduce memory wastage while still benefiting from the pool speedups."
+//!
+//! Power-of-two size classes route each request to the smallest fitting
+//! pool; requests larger than the biggest class (or landing in an exhausted
+//! pool, if fallback is enabled) go to the system allocator. Per-class hit
+//! and waste statistics feed ablation A5.
+
+use core::alloc::Layout;
+use core::ptr::NonNull;
+
+use super::fixed::{FixedPool, PoolConfig};
+use crate::util::align::next_pow2;
+
+/// Where an allocation was served from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Origin {
+    /// Size class index.
+    Pool(usize),
+    /// System allocator (too big or pool exhausted).
+    System,
+}
+
+/// Per-class statistics.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ClassStats {
+    pub hits: u64,
+    /// Requests routed to this class that found it exhausted.
+    pub exhausted: u64,
+    /// Total bytes wasted by rounding request → class size.
+    pub internal_waste: u64,
+}
+
+/// Configuration for [`MultiPool`].
+#[derive(Debug, Clone)]
+pub struct MultiPoolConfig {
+    /// Smallest class (power of two, ≥ 8).
+    pub min_class: usize,
+    /// Largest class (power of two).
+    pub max_class: usize,
+    /// Blocks per class.
+    pub blocks_per_class: u32,
+    /// Fall back to the system allocator when a class is exhausted
+    /// (otherwise allocation fails).
+    pub system_fallback: bool,
+}
+
+impl Default for MultiPoolConfig {
+    fn default() -> Self {
+        Self { min_class: 16, max_class: 4096, blocks_per_class: 1024, system_fallback: true }
+    }
+}
+
+/// A best-fit family of fixed-size pools with optional system fallback.
+pub struct MultiPool {
+    classes: Vec<FixedPool>,
+    class_sizes: Vec<usize>,
+    stats: Vec<ClassStats>,
+    cfg: MultiPoolConfig,
+    pub system_allocs: u64,
+    pub system_frees: u64,
+}
+
+impl MultiPool {
+    pub fn new(cfg: MultiPoolConfig) -> Self {
+        assert!(cfg.min_class.is_power_of_two() && cfg.min_class >= 8);
+        assert!(cfg.max_class.is_power_of_two() && cfg.max_class >= cfg.min_class);
+        let mut classes = Vec::new();
+        let mut class_sizes = Vec::new();
+        let mut size = cfg.min_class;
+        while size <= cfg.max_class {
+            classes.push(FixedPool::new(
+                PoolConfig::new(size, cfg.blocks_per_class).with_align(16),
+            ));
+            class_sizes.push(size);
+            size *= 2;
+        }
+        let n = classes.len();
+        Self {
+            classes,
+            class_sizes,
+            stats: vec![ClassStats::default(); n],
+            cfg,
+            system_allocs: 0,
+            system_frees: 0,
+        }
+    }
+
+    /// Class index for a request of `size` bytes, or `None` if too large.
+    #[inline]
+    pub fn class_of(&self, size: usize) -> Option<usize> {
+        if size > self.cfg.max_class {
+            return None;
+        }
+        let rounded = next_pow2(size.max(self.cfg.min_class));
+        // min_class = 2^k → index = log2(rounded) - k.
+        Some(rounded.trailing_zeros() as usize - self.cfg.min_class.trailing_zeros() as usize)
+    }
+
+    /// Allocate `size` bytes. Returns the pointer and where it came from.
+    pub fn allocate(&mut self, size: usize) -> Option<(NonNull<u8>, Origin)> {
+        match self.class_of(size) {
+            Some(ci) => {
+                if let Some(p) = self.classes[ci].allocate() {
+                    self.stats[ci].hits += 1;
+                    self.stats[ci].internal_waste +=
+                        (self.class_sizes[ci] - size) as u64;
+                    Some((p, Origin::Pool(ci)))
+                } else {
+                    self.stats[ci].exhausted += 1;
+                    if self.cfg.system_fallback {
+                        self.system_alloc(size).map(|p| (p, Origin::System))
+                    } else {
+                        None
+                    }
+                }
+            }
+            None => {
+                if self.cfg.system_fallback {
+                    self.system_alloc(size).map(|p| (p, Origin::System))
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    /// Free an allocation made by [`allocate`](Self::allocate). The caller
+    /// supplies the original request size and origin (as with
+    /// `std::alloc::Allocator::deallocate`, the size is part of the
+    /// contract — this keeps pooled blocks header-free, preserving the
+    /// paper's zero-overhead property).
+    ///
+    /// # Safety
+    /// `(p, size, origin)` must match a live allocation from this pool.
+    pub unsafe fn deallocate(&mut self, p: NonNull<u8>, size: usize, origin: Origin) {
+        match origin {
+            Origin::Pool(ci) => {
+                debug_assert_eq!(self.class_of(size), Some(ci), "size/class mismatch");
+                self.classes[ci].deallocate(p);
+            }
+            Origin::System => {
+                let layout = Layout::from_size_align(size.max(1), 16).unwrap();
+                std::alloc::dealloc(p.as_ptr(), layout);
+                self.system_frees += 1;
+            }
+        }
+    }
+
+    fn system_alloc(&mut self, size: usize) -> Option<NonNull<u8>> {
+        let layout = Layout::from_size_align(size.max(1), 16).ok()?;
+        let p = NonNull::new(unsafe { std::alloc::alloc(layout) })?;
+        self.system_allocs += 1;
+        Some(p)
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.classes.len()
+    }
+
+    pub fn class_size(&self, ci: usize) -> usize {
+        self.class_sizes[ci]
+    }
+
+    pub fn class_stats(&self, ci: usize) -> ClassStats {
+        self.stats[ci]
+    }
+
+    /// Fraction of requests served from pools (vs system fallback).
+    pub fn pool_hit_rate(&self) -> f64 {
+        let hits: u64 = self.stats.iter().map(|s| s.hits).sum();
+        let total = hits + self.system_allocs;
+        if total == 0 {
+            0.0
+        } else {
+            hits as f64 / total as f64
+        }
+    }
+
+    /// Total bytes lost to size-class rounding so far.
+    pub fn total_internal_waste(&self) -> u64 {
+        self.stats.iter().map(|s| s.internal_waste).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg_small() -> MultiPoolConfig {
+        MultiPoolConfig { min_class: 16, max_class: 256, blocks_per_class: 8, system_fallback: true }
+    }
+
+    #[test]
+    fn class_routing() {
+        let mp = MultiPool::new(cfg_small());
+        assert_eq!(mp.class_of(1), Some(0)); // → 16
+        assert_eq!(mp.class_of(16), Some(0));
+        assert_eq!(mp.class_of(17), Some(1)); // → 32
+        assert_eq!(mp.class_of(100), Some(3)); // → 128
+        assert_eq!(mp.class_of(256), Some(4));
+        assert_eq!(mp.class_of(257), None); // too big
+        assert_eq!(mp.num_classes(), 5);
+    }
+
+    #[test]
+    fn alloc_hits_right_class_and_tracks_waste() {
+        let mut mp = MultiPool::new(cfg_small());
+        let (p, o) = mp.allocate(20).unwrap();
+        assert_eq!(o, Origin::Pool(1)); // 32B class
+        assert_eq!(mp.class_stats(1).hits, 1);
+        assert_eq!(mp.class_stats(1).internal_waste, 12);
+        unsafe { mp.deallocate(p, 20, o) };
+    }
+
+    #[test]
+    fn oversize_goes_to_system() {
+        let mut mp = MultiPool::new(cfg_small());
+        let (p, o) = mp.allocate(1000).unwrap();
+        assert_eq!(o, Origin::System);
+        assert_eq!(mp.system_allocs, 1);
+        unsafe { mp.deallocate(p, 1000, o) };
+        assert_eq!(mp.system_frees, 1);
+    }
+
+    #[test]
+    fn exhausted_class_falls_back() {
+        let mut mp = MultiPool::new(cfg_small());
+        let mut held = Vec::new();
+        for _ in 0..8 {
+            let (p, o) = mp.allocate(16).unwrap();
+            assert_eq!(o, Origin::Pool(0));
+            held.push((p, o));
+        }
+        let (p, o) = mp.allocate(16).unwrap();
+        assert_eq!(o, Origin::System);
+        assert_eq!(mp.class_stats(0).exhausted, 1);
+        unsafe {
+            mp.deallocate(p, 16, o);
+            for (p, o) in held {
+                mp.deallocate(p, 16, o);
+            }
+        }
+    }
+
+    #[test]
+    fn no_fallback_mode_fails_clean() {
+        let mut cfg = cfg_small();
+        cfg.system_fallback = false;
+        let mut mp = MultiPool::new(cfg);
+        assert!(mp.allocate(10_000).is_none());
+        for _ in 0..8 {
+            mp.allocate(16).unwrap();
+        }
+        assert!(mp.allocate(16).is_none());
+    }
+
+    #[test]
+    fn hit_rate_accounting() {
+        let mut mp = MultiPool::new(cfg_small());
+        for _ in 0..9 {
+            mp.allocate(16).unwrap(); // 8 pool hits + 1 system
+        }
+        assert!((mp.pool_hit_rate() - 8.0 / 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mixed_sizes_distinct_pointers() {
+        let mut mp = MultiPool::new(cfg_small());
+        let mut all = Vec::new();
+        let mut rng = crate::util::Rng::new(2);
+        for _ in 0..30 {
+            let size = rng.gen_usize(1, 257);
+            let (p, o) = mp.allocate(size).unwrap();
+            all.push((p, size, o));
+        }
+        let mut addrs: Vec<_> = all.iter().map(|(p, _, _)| p.as_ptr() as usize).collect();
+        addrs.sort_unstable();
+        addrs.dedup();
+        assert_eq!(addrs.len(), 30);
+        unsafe {
+            for (p, size, o) in all {
+                mp.deallocate(p, size, o);
+            }
+        }
+    }
+}

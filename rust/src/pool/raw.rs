@@ -1,0 +1,696 @@
+//! The paper's core algorithm (§IV, Appendix A Listing 2), verbatim.
+//!
+//! `RawPool` manages a caller-provided contiguous region subdivided into
+//! `num_blocks` equally-sized blocks. Bookkeeping is *in-band*: each unused
+//! block stores the 4-byte index of the next unused block, so the free list
+//! costs zero extra memory. Initialisation is *lazy*: creation touches no
+//! blocks at all ("no loops"); the `num_initialized` watermark appends one
+//! fresh block to the free list per allocation until all blocks have been
+//! threaded.
+//!
+//! Field-for-field mapping to the paper's `Pool_c`:
+//!
+//! | paper (Listing 2)     | here              |
+//! |-----------------------|-------------------|
+//! | `m_numOfBlocks`       | `num_blocks`      |
+//! | `m_sizeOfEachBlock`   | `block_size`      |
+//! | `m_numFreeBlocks`     | `num_free`        |
+//! | `m_numInitialized`    | `num_initialized` |
+//! | `m_memStart`          | `mem_start`       |
+//! | `m_next`              | `next`            |
+//!
+//! Both `allocate` and `deallocate` are O(1) with no loops and no
+//! recursion, as claimed in §I.
+
+use core::ptr::NonNull;
+
+/// Minimum block size: a free block must hold a 4-byte index (§IV).
+pub const MIN_BLOCK_SIZE: usize = core::mem::size_of::<u32>();
+
+/// The raw fixed-size pool over an externally-owned region.
+///
+/// # Safety contract
+///
+/// * The region `[mem_start, mem_start + num_blocks * block_size)` must be
+///   valid for reads and writes for the lifetime of the pool and must not
+///   be accessed through other aliases while pooled blocks are free (free
+///   blocks are scribbled on by the free-list).
+/// * `deallocate` must only be called with pointers obtained from
+///   `allocate` on the *same* pool, exactly once per allocation
+///   (`validate_addr` + `GuardedPool` exist to check this dynamically).
+#[derive(Debug)]
+pub struct RawPool {
+    num_blocks: u32,
+    block_size: usize,
+    num_free: u32,
+    num_initialized: u32,
+    mem_start: NonNull<u8>,
+    next: Option<NonNull<u8>>,
+    /// §Perf: exact division of block offsets (always multiples of
+    /// `block_size`) by shift + multiplicative inverse — replaces the
+    /// hardware divide on the `deallocate` hot path (see EXPERIMENTS.md
+    /// §Perf). `block_size = odd << div_shift`, `div_inv = odd⁻¹ mod 2⁶⁴`.
+    div_shift: u32,
+    div_inv: u64,
+}
+
+/// Modular inverse of an odd u64 (Newton's iteration, 5 steps).
+#[inline]
+const fn mod_inverse_u64(x: u64) -> u64 {
+    debug_assert!(x & 1 == 1);
+    let mut inv = x;
+    let mut i = 0;
+    while i < 5 {
+        inv = inv.wrapping_mul(2u64.wrapping_sub(x.wrapping_mul(inv)));
+        i += 1;
+    }
+    inv
+}
+
+// The pool is `Send` (it owns no thread-affine state); it is NOT `Sync` —
+// concurrent use requires `LockedPool` or `AtomicPool`.
+unsafe impl Send for RawPool {}
+
+impl RawPool {
+    /// Create a pool over `region`. O(1): no block is touched (§I "little
+    /// initialization overhead" — only the six header fields are set).
+    ///
+    /// # Panics
+    /// If `block_size < 4` (the index must fit, §IV) or `num_blocks == 0`
+    /// or the region is too small.
+    ///
+    /// # Safety
+    /// See the type-level safety contract.
+    pub unsafe fn new(
+        region: NonNull<u8>,
+        region_len: usize,
+        block_size: usize,
+        num_blocks: u32,
+    ) -> Self {
+        assert!(
+            block_size >= MIN_BLOCK_SIZE,
+            "block_size {block_size} < minimum {MIN_BLOCK_SIZE} (must hold a u32 index)"
+        );
+        assert!(num_blocks > 0, "pool must have at least one block");
+        assert!(
+            region_len >= block_size * num_blocks as usize,
+            "region too small: {region_len} < {}",
+            block_size * num_blocks as usize
+        );
+        let div_shift = block_size.trailing_zeros();
+        let div_inv = mod_inverse_u64((block_size >> div_shift) as u64);
+        Self {
+            num_blocks,
+            block_size,
+            num_free: num_blocks,
+            num_initialized: 0,
+            mem_start: region,
+            // Paper: m_next = m_memStart — head starts at block 0, which the
+            // watermark step will initialise on the first allocation.
+            next: Some(region),
+            div_shift,
+            div_inv,
+        }
+    }
+
+    /// Paper's `AddrFromIndex`: block index → address.
+    #[inline(always)]
+    pub fn addr_from_index(&self, i: u32) -> NonNull<u8> {
+        debug_assert!(i < self.num_blocks, "index {i} out of range");
+        // SAFETY: i < num_blocks keeps the pointer inside the region.
+        unsafe { NonNull::new_unchecked(self.mem_start.as_ptr().add(i as usize * self.block_size)) }
+    }
+
+    /// Paper's `IndexFromAddr`: address → block index.
+    ///
+    /// Block offsets are exact multiples of `block_size`, so division is
+    /// done with a shift + multiplicative inverse (~3 cycles) instead of a
+    /// hardware divide (~20+) — this is on the `deallocate` hot path.
+    #[inline(always)]
+    pub fn index_from_addr(&self, p: NonNull<u8>) -> u32 {
+        debug_assert!(self.contains(p));
+        let off = (p.as_ptr() as usize - self.mem_start.as_ptr() as usize) as u64;
+        debug_assert!(off % self.block_size as u64 == 0);
+        ((off >> self.div_shift).wrapping_mul(self.div_inv)) as u32
+    }
+
+    /// Allocate one block. O(1), no loops (§IV Listing 1 steps 2–6).
+    ///
+    /// Returns `None` when the pool is exhausted.
+    #[inline]
+    pub fn allocate(&mut self) -> Option<NonNull<u8>> {
+        // Step 3 (lazy init): thread one more unused block onto the list.
+        // This is the paper's trick — instead of a creation-time loop over
+        // all n blocks, each allocation initialises at most one block.
+        if self.num_initialized < self.num_blocks {
+            // SAFETY: block `num_initialized` is inside the region and (by
+            // the watermark invariant) currently unused, so writing the
+            // next-index into its first 4 bytes is sound.
+            unsafe {
+                let p = self.addr_from_index(self.num_initialized).as_ptr() as *mut u32;
+                p.write_unaligned(self.num_initialized + 1);
+            }
+            self.num_initialized += 1;
+        }
+
+        if self.num_free == 0 {
+            return None;
+        }
+
+        // Pop the head of the in-place free list.
+        let ret = self.next?;
+        self.num_free -= 1;
+        self.next = if self.num_free != 0 {
+            // SAFETY: `ret` is a free (hence initialised) block; its first
+            // 4 bytes hold the index of the next free block. When the
+            // popped block is the sentinel-tagged one (index == num_blocks,
+            // written by `deallocate` on an empty list), num_free is 0 and
+            // this branch is not taken — see §IV and the sentinel test.
+            let next_index = unsafe { (ret.as_ptr() as *const u32).read_unaligned() };
+            Some(self.addr_from_index(next_index))
+        } else {
+            None
+        };
+        Some(ret)
+    }
+
+    /// Return a block to the pool. O(1), no loops (§IV Listing 1 steps 7–9).
+    ///
+    /// # Safety
+    /// `p` must be a pointer previously returned by `allocate` on this pool
+    /// and not already deallocated. Use `validate_addr` / `GuardedPool` for
+    /// dynamic checking.
+    #[inline]
+    pub unsafe fn deallocate(&mut self, p: NonNull<u8>) {
+        debug_assert!(
+            self.validate_addr(p),
+            "deallocate: {p:p} is not a block of this pool"
+        );
+        let slot = p.as_ptr() as *mut u32;
+        match self.next {
+            Some(head) => {
+                // Push: store current head's index into the freed block.
+                slot.write_unaligned(self.index_from_addr(head));
+                self.next = Some(p);
+            }
+            None => {
+                // List was empty: the paper writes `m_numOfBlocks` as an
+                // out-of-range sentinel. It is never dereferenced because
+                // this block is always the last one popped (num_free == 0
+                // at that point).
+                slot.write_unaligned(self.num_blocks);
+                self.next = Some(p);
+            }
+        }
+        self.num_free += 1;
+    }
+
+    /// §IV.B: is `p` a plausible block address — inside the region and on a
+    /// block boundary?
+    #[inline]
+    pub fn validate_addr(&self, p: NonNull<u8>) -> bool {
+        self.contains(p)
+            && (p.as_ptr() as usize - self.mem_start.as_ptr() as usize) % self.block_size == 0
+    }
+
+    /// Is `p` inside the pool's region?
+    #[inline]
+    pub fn contains(&self, p: NonNull<u8>) -> bool {
+        let start = self.mem_start.as_ptr() as usize;
+        let end = start + self.capacity_bytes();
+        let a = p.as_ptr() as usize;
+        a >= start && a < end
+    }
+
+    // ---- introspection ----------------------------------------------------
+
+    pub fn num_blocks(&self) -> u32 {
+        self.num_blocks
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    /// Blocks currently available (free, counting not-yet-initialised).
+    pub fn num_free(&self) -> u32 {
+        self.num_free
+    }
+
+    /// Blocks currently handed out.
+    pub fn num_used(&self) -> u32 {
+        self.num_blocks - self.num_free
+    }
+
+    /// Lazy-initialisation watermark: how many blocks have ever been
+    /// threaded onto the free list (§IV "number of initialized blocks").
+    pub fn num_initialized(&self) -> u32 {
+        self.num_initialized
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.num_free == self.num_blocks
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.num_free == 0
+    }
+
+    pub fn capacity_bytes(&self) -> usize {
+        self.block_size * self.num_blocks as usize
+    }
+
+    pub fn mem_start(&self) -> NonNull<u8> {
+        self.mem_start
+    }
+
+    /// Header-only bookkeeping cost in bytes — the paper's "few dozen
+    /// bytes" claim (§I). The free list itself costs zero.
+    pub fn overhead_bytes(&self) -> usize {
+        core::mem::size_of::<Self>()
+    }
+
+    // ---- §VII resizing ----------------------------------------------------
+
+    /// Grow the pool to `new_num_blocks`, assuming the caller has extended
+    /// the underlying region contiguously (§VII: "the pool can be extended
+    /// effortlessly with little cost by updating its member variables").
+    /// O(1): untouched new blocks are absorbed by the lazy-init watermark.
+    ///
+    /// # Safety
+    /// The region starting at `mem_start` must now be valid for
+    /// `new_num_blocks * block_size` bytes.
+    pub unsafe fn grow(&mut self, new_num_blocks: u32) {
+        assert!(
+            new_num_blocks >= self.num_blocks,
+            "grow: {new_num_blocks} < current {}",
+            self.num_blocks
+        );
+        let added = new_num_blocks - self.num_blocks;
+        self.num_blocks = new_num_blocks;
+        self.num_free += added;
+        // If the pool was fully drained (`next == None`), re-point the head
+        // at the watermark block so allocation resumes in the new region.
+        if self.next.is_none() && self.num_initialized < self.num_blocks {
+            self.next = Some(self.addr_from_index(self.num_initialized));
+        }
+    }
+
+    /// Shrink to the lazy-init watermark (§VII): blocks beyond
+    /// `num_initialized` have never been touched or handed out, so they can
+    /// be released without scanning anything. Returns the new block count.
+    ///
+    /// Fails (returns current count) if all blocks are initialised — the
+    /// paper's scheme can only trim the never-used tail.
+    pub fn shrink_to_watermark(&mut self) -> u32 {
+        let target = self.num_initialized.max(1);
+        if target < self.num_blocks {
+            let removed = self.num_blocks - target;
+            self.num_blocks = target;
+            self.num_free -= removed;
+        }
+        self.num_blocks
+    }
+
+    // ---- test / verification helpers -------------------------------------
+
+    /// Walk the free list and collect indices (test/diagnostic only — this
+    /// is the one deliberately-looping routine, it is NOT on any hot path).
+    /// The not-yet-initialised tail is reported separately by
+    /// `uninitialized_free()`.
+    pub fn free_list_indices(&self) -> Vec<u32> {
+        let mut out = Vec::new();
+        let mut cur = self.next;
+        // Number of *initialised* free blocks on the explicit chain.
+        let chain_len = self
+            .num_free
+            .saturating_sub(self.num_blocks - self.num_initialized);
+        for _ in 0..chain_len {
+            let Some(p) = cur else { break };
+            let idx = self.index_from_addr(p);
+            out.push(idx);
+            let next_idx = unsafe { (p.as_ptr() as *const u32).read_unaligned() };
+            cur = if next_idx < self.num_blocks {
+                Some(self.addr_from_index(next_idx))
+            } else {
+                None // sentinel
+            };
+        }
+        out
+    }
+
+    /// Count of free blocks that have never been initialised (beyond the
+    /// watermark).
+    pub fn uninitialized_free(&self) -> u32 {
+        self.num_blocks - self.num_initialized
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Helper: an owned, aligned region + pool.
+    struct TestPool {
+        buf: Vec<u8>,
+        pool: RawPool,
+    }
+
+    fn mk(block_size: usize, n: u32) -> TestPool {
+        let mut buf = vec![0u8; block_size * n as usize];
+        let region = NonNull::new(buf.as_mut_ptr()).unwrap();
+        let pool = unsafe { RawPool::new(region, buf.len(), block_size, n) };
+        TestPool { buf, pool }
+    }
+
+    #[test]
+    fn creation_touches_no_blocks() {
+        // §I "no loops": creation must leave every block byte untouched.
+        let mut buf = vec![0xAB_u8; 64 * 1024];
+        let region = NonNull::new(buf.as_mut_ptr()).unwrap();
+        let pool = unsafe { RawPool::new(region, buf.len(), 64, 1024) };
+        assert_eq!(pool.num_initialized(), 0);
+        assert!(buf.iter().all(|&b| b == 0xAB), "creation wrote to a block");
+    }
+
+    #[test]
+    #[should_panic(expected = "block_size")]
+    fn rejects_tiny_blocks() {
+        mk(2, 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one block")]
+    fn rejects_zero_blocks() {
+        let mut buf = vec![0u8; 64];
+        let region = NonNull::new(buf.as_mut_ptr()).unwrap();
+        let _ = unsafe { RawPool::new(region, 64, 16, 0) };
+    }
+
+    #[test]
+    #[should_panic(expected = "region too small")]
+    fn rejects_small_region() {
+        let mut buf = vec![0u8; 63];
+        let region = NonNull::new(buf.as_mut_ptr()).unwrap();
+        let _ = unsafe { RawPool::new(region, 63, 16, 4) };
+    }
+
+    /// Reproduce Figure 2's 4-slot step-by-step example exactly.
+    #[test]
+    fn figure2_step_by_step() {
+        let mut t = mk(8, 4);
+        let p = &mut t.pool;
+
+        // (a) creation: free=4, init=0, head=block0.
+        assert_eq!(p.num_free(), 4);
+        assert_eq!(p.num_initialized(), 0);
+        assert_eq!(p.index_from_addr(p.next.unwrap()), 0);
+
+        // (b) first allocation → block 0; watermark threads block 0 → 1.
+        let a = p.allocate().unwrap();
+        assert_eq!(p.index_from_addr(a), 0);
+        assert_eq!(p.num_initialized(), 1);
+        assert_eq!(p.num_free(), 3);
+        assert_eq!(p.index_from_addr(p.next.unwrap()), 1);
+
+        // (c) second allocation → block 1.
+        let b = p.allocate().unwrap();
+        assert_eq!(p.index_from_addr(b), 1);
+        assert_eq!(p.num_free(), 2);
+        assert_eq!(p.index_from_addr(p.next.unwrap()), 2);
+
+        // (d) deallocate block 0 → head of list, links to block 2 (which is
+        // still beyond the watermark; it will be initialised on the next
+        // allocation, so the walkable chain is just [0]).
+        unsafe { p.deallocate(a) };
+        assert_eq!(p.num_free(), 3);
+        assert_eq!(p.index_from_addr(p.next.unwrap()), 0);
+        assert_eq!(p.free_list_indices(), vec![0]);
+        assert_eq!(p.uninitialized_free(), 2);
+
+        // (e) allocate → block 0 again (LIFO).
+        let c = p.allocate().unwrap();
+        assert_eq!(p.index_from_addr(c), 0);
+
+        // Drain the rest.
+        let d = p.allocate().unwrap();
+        let e = p.allocate().unwrap();
+        assert_eq!(p.index_from_addr(d), 2);
+        assert_eq!(p.index_from_addr(e), 3);
+        assert!(p.is_full());
+        assert!(p.allocate().is_none());
+    }
+
+    #[test]
+    fn exhaustion_returns_none_repeatedly() {
+        let mut t = mk(16, 3);
+        let p = &mut t.pool;
+        for _ in 0..3 {
+            assert!(p.allocate().is_some());
+        }
+        for _ in 0..5 {
+            assert!(p.allocate().is_none());
+        }
+        assert_eq!(p.num_free(), 0);
+    }
+
+    #[test]
+    fn sentinel_path_dealloc_into_empty_list() {
+        // Drain fully (next == None), then deallocate: the paper writes the
+        // out-of-range sentinel `num_blocks`. It must never be chased.
+        let mut t = mk(8, 2);
+        let p = &mut t.pool;
+        let a = p.allocate().unwrap();
+        let b = p.allocate().unwrap();
+        assert!(p.next.is_none());
+
+        unsafe { p.deallocate(a) };
+        // Block a's first 4 bytes now hold the sentinel.
+        let sentinel = unsafe { (a.as_ptr() as *const u32).read_unaligned() };
+        assert_eq!(sentinel, 2);
+        assert_eq!(p.free_list_indices(), vec![0]);
+
+        unsafe { p.deallocate(b) };
+        assert_eq!(p.free_list_indices(), vec![1, 0]);
+
+        // Pop both; the sentinel block must be the last pop (num_free == 0
+        // at that point so the index is never read).
+        let x = p.allocate().unwrap();
+        assert_eq!(p.index_from_addr(x), 1);
+        let y = p.allocate().unwrap();
+        assert_eq!(p.index_from_addr(y), 0);
+        assert!(p.allocate().is_none());
+    }
+
+    #[test]
+    fn lifo_reuse_order() {
+        let mut t = mk(8, 8);
+        let p = &mut t.pool;
+        let ptrs: Vec<_> = (0..8).map(|_| p.allocate().unwrap()).collect();
+        // Free 3, 5, 1 → reallocation order must be 1, 5, 3 (LIFO).
+        unsafe {
+            p.deallocate(ptrs[3]);
+            p.deallocate(ptrs[5]);
+            p.deallocate(ptrs[1]);
+        }
+        for expect in [1u32, 5, 3] {
+            let q = p.allocate().unwrap();
+            assert_eq!(p.index_from_addr(q), expect);
+        }
+    }
+
+    #[test]
+    fn all_addresses_distinct_in_range_aligned() {
+        let mut t = mk(24, 100);
+        let base = t.buf.as_ptr() as usize;
+        let p = &mut t.pool;
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..100 {
+            let a = p.allocate().unwrap();
+            let off = a.as_ptr() as usize - base;
+            assert!(off < 24 * 100);
+            assert_eq!(off % 24, 0);
+            assert!(seen.insert(off), "block handed out twice");
+        }
+    }
+
+    #[test]
+    fn full_cycle_many_times() {
+        let mut t = mk(8, 16);
+        let p = &mut t.pool;
+        for cycle in 0..10 {
+            let ptrs: Vec<_> = (0..16).map(|_| p.allocate().unwrap()).collect();
+            assert!(p.is_full(), "cycle {cycle}");
+            for ptr in ptrs {
+                unsafe { p.deallocate(ptr) };
+            }
+            assert!(p.is_empty(), "cycle {cycle}");
+        }
+        // Watermark saturates at num_blocks and stays there.
+        assert_eq!(p.num_initialized(), 16);
+    }
+
+    #[test]
+    fn interleaved_alloc_free_with_reference_model() {
+        // Exhaustive differential check against a set-based model.
+        use crate::util::Rng;
+        let mut t = mk(16, 32);
+        let p = &mut t.pool;
+        let mut rng = Rng::new(0xF00D);
+        let mut live: Vec<NonNull<u8>> = Vec::new();
+        for step in 0..10_000 {
+            let do_alloc = live.is_empty() || (live.len() < 32 && rng.gen_bool(0.55));
+            if do_alloc {
+                match p.allocate() {
+                    Some(ptr) => {
+                        assert!(
+                            !live.iter().any(|q| q.as_ptr() == ptr.as_ptr()),
+                            "step {step}: double handout"
+                        );
+                        live.push(ptr);
+                    }
+                    None => assert_eq!(live.len(), 32, "step {step}: spurious exhaustion"),
+                }
+            } else {
+                let i = rng.gen_usize(0, live.len());
+                let ptr = live.swap_remove(i);
+                unsafe { p.deallocate(ptr) };
+            }
+            assert_eq!(p.num_used() as usize, live.len(), "step {step}: count drift");
+        }
+    }
+
+    #[test]
+    fn validate_addr_checks() {
+        let mut t = mk(16, 4);
+        let p = &mut t.pool;
+        let a = p.allocate().unwrap();
+        assert!(p.validate_addr(a));
+        // Off-boundary pointer inside region: invalid.
+        let off = unsafe { NonNull::new_unchecked(a.as_ptr().add(1)) };
+        assert!(!p.validate_addr(off));
+        // Outside region: invalid.
+        let mut other = [0u8; 16];
+        let q = NonNull::new(other.as_mut_ptr()).unwrap();
+        assert!(!p.validate_addr(q));
+    }
+
+    #[test]
+    fn grow_is_o1_and_usable() {
+        let mut buf = vec![0u8; 16 * 8];
+        let region = NonNull::new(buf.as_mut_ptr()).unwrap();
+        // Start with 4 of the 8 block capacity.
+        let mut p = unsafe { RawPool::new(region, buf.len(), 16, 4) };
+        let mut held = Vec::new();
+        for _ in 0..4 {
+            held.push(p.allocate().unwrap());
+        }
+        assert!(p.allocate().is_none());
+        unsafe { p.grow(8) };
+        assert_eq!(p.num_free(), 4);
+        for i in 4..8 {
+            let q = p.allocate().unwrap();
+            assert_eq!(p.index_from_addr(q), i);
+        }
+        assert!(p.allocate().is_none());
+    }
+
+    #[test]
+    fn grow_when_list_nonempty_keeps_chain() {
+        let mut buf = vec![0u8; 8 * 10];
+        let region = NonNull::new(buf.as_mut_ptr()).unwrap();
+        let mut p = unsafe { RawPool::new(region, buf.len(), 8, 5) };
+        let a = p.allocate().unwrap();
+        let _b = p.allocate().unwrap();
+        unsafe { p.deallocate(a) };
+        unsafe { p.grow(10) };
+        assert_eq!(p.num_free(), 9);
+        // Head is still the freed block.
+        let q = p.allocate().unwrap();
+        assert_eq!(p.index_from_addr(q), 0);
+    }
+
+    #[test]
+    fn shrink_to_watermark() {
+        let mut t = mk(8, 100);
+        let p = &mut t.pool;
+        // Touch 10 blocks.
+        let held: Vec<_> = (0..10).map(|_| p.allocate().unwrap()).collect();
+        for h in held {
+            unsafe { p.deallocate(h) };
+        }
+        assert_eq!(p.num_initialized(), 10);
+        let n = p.shrink_to_watermark();
+        assert_eq!(n, 10);
+        assert_eq!(p.num_free(), 10);
+        // Pool still fully usable at the reduced size.
+        for _ in 0..10 {
+            assert!(p.allocate().is_some());
+        }
+        assert!(p.allocate().is_none());
+    }
+
+    #[test]
+    fn shrink_noop_when_fully_initialized() {
+        let mut t = mk(8, 4);
+        let p = &mut t.pool;
+        let held: Vec<_> = (0..4).map(|_| p.allocate().unwrap()).collect();
+        for h in held {
+            unsafe { p.deallocate(h) };
+        }
+        assert_eq!(p.shrink_to_watermark(), 4);
+    }
+
+    #[test]
+    fn overhead_is_a_few_dozen_bytes() {
+        // §I "little memory footprint (few dozen bytes)".
+        let t = mk(64, 1000);
+        assert!(
+            t.pool.overhead_bytes() <= 64,
+            "header too large: {}",
+            t.pool.overhead_bytes()
+        );
+    }
+
+    #[test]
+    fn unaligned_block_sizes_work() {
+        // Paper imposes only the >= 4 bytes constraint; odd sizes must work
+        // (the index write is unaligned-safe).
+        for bs in [4usize, 5, 7, 9, 13, 24, 100] {
+            let mut t = mk(bs, 16);
+            let p = &mut t.pool;
+            let ptrs: Vec<_> = (0..16).map(|_| p.allocate().unwrap()).collect();
+            for ptr in ptrs.into_iter().rev() {
+                unsafe { p.deallocate(ptr) };
+            }
+            assert!(p.is_empty(), "block_size {bs}");
+        }
+    }
+
+    #[test]
+    fn watermark_never_exceeds_num_blocks() {
+        let mut t = mk(8, 4);
+        let p = &mut t.pool;
+        for _ in 0..4 {
+            p.allocate();
+        }
+        for _ in 0..10 {
+            p.allocate();
+            assert!(p.num_initialized() <= 4);
+        }
+    }
+
+    #[test]
+    fn free_list_walk_matches_counts() {
+        let mut t = mk(8, 8);
+        let p = &mut t.pool;
+        let ptrs: Vec<_> = (0..6).map(|_| p.allocate().unwrap()).collect();
+        unsafe {
+            p.deallocate(ptrs[0]);
+            p.deallocate(ptrs[4]);
+        }
+        let chain = p.free_list_indices();
+        assert_eq!(chain.len() as u32 + p.uninitialized_free(), p.num_free());
+        assert_eq!(chain, vec![4, 0]); // LIFO pushes; blocks 6,7 beyond watermark
+    }
+}

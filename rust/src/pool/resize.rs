@@ -1,0 +1,180 @@
+//! `ResizablePool` — §VII "Resizing" as a usable type.
+//!
+//! The paper: "if more memory blocks are needed than are available, and
+//! further additional memory follows the end of the continuous memory
+//! pool's allocation, the pool can be extended effortlessly with little
+//! cost by updating its member variables."
+//!
+//! We realise "memory following the end" by *reserving* virtual capacity up
+//! front (one region of `max_blocks`) and *committing* only `num_blocks` of
+//! it to the pool. `grow()` bumps the committed count — O(1), no loops, no
+//! copying, exactly the member-variable update the paper describes.
+//! `shrink_to_watermark()` trims never-touched tail blocks (§VII ¶2).
+
+use core::alloc::Layout;
+use core::ptr::NonNull;
+
+use super::raw::RawPool;
+use crate::util::align::align_up;
+
+/// A pool that can grow up to a reserved maximum and shrink to its
+/// lazy-initialisation watermark.
+pub struct ResizablePool {
+    raw: RawPool,
+    max_blocks: u32,
+    layout: Layout,
+}
+
+impl ResizablePool {
+    /// Reserve `max_blocks` worth of address space, commit `initial_blocks`.
+    pub fn new(block_size: usize, initial_blocks: u32, max_blocks: u32) -> Self {
+        assert!(initial_blocks >= 1 && initial_blocks <= max_blocks);
+        let align = core::mem::size_of::<usize>();
+        let bs = align_up(block_size.max(4), align);
+        let bytes = bs * max_blocks as usize;
+        let layout = Layout::from_size_align(bytes, align).expect("bad layout");
+        let region = NonNull::new(unsafe { std::alloc::alloc(layout) })
+            .expect("pool region allocation failed");
+        // SAFETY: region is valid for max_blocks ≥ initial_blocks blocks.
+        let raw = unsafe { RawPool::new(region, bytes, bs, initial_blocks) };
+        Self { raw, max_blocks, layout }
+    }
+
+    #[inline]
+    pub fn allocate(&mut self) -> Option<NonNull<u8>> {
+        self.raw.allocate()
+    }
+
+    /// Allocate, growing (doubling, capped at `max_blocks`) on exhaustion.
+    pub fn allocate_or_grow(&mut self) -> Option<NonNull<u8>> {
+        if let Some(p) = self.raw.allocate() {
+            return Some(p);
+        }
+        let cur = self.raw.num_blocks();
+        if cur >= self.max_blocks {
+            return None;
+        }
+        let target = (cur * 2).min(self.max_blocks);
+        // SAFETY: the reserved region covers max_blocks.
+        unsafe { self.raw.grow(target) };
+        self.raw.allocate()
+    }
+
+    /// # Safety
+    /// `p` must come from this pool's `allocate*`, freed at most once.
+    #[inline]
+    pub unsafe fn deallocate(&mut self, p: NonNull<u8>) {
+        self.raw.deallocate(p)
+    }
+
+    /// Explicit O(1) grow to `new_blocks` (≤ reserved maximum).
+    pub fn grow(&mut self, new_blocks: u32) {
+        assert!(
+            new_blocks <= self.max_blocks,
+            "grow beyond reservation: {new_blocks} > {}",
+            self.max_blocks
+        );
+        // SAFETY: within the reserved region.
+        unsafe { self.raw.grow(new_blocks) };
+    }
+
+    /// §VII ¶2: release never-initialised tail blocks. O(1).
+    pub fn shrink_to_watermark(&mut self) -> u32 {
+        self.raw.shrink_to_watermark()
+    }
+
+    pub fn num_blocks(&self) -> u32 {
+        self.raw.num_blocks()
+    }
+
+    pub fn max_blocks(&self) -> u32 {
+        self.max_blocks
+    }
+
+    pub fn num_free(&self) -> u32 {
+        self.raw.num_free()
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.raw.block_size()
+    }
+}
+
+impl Drop for ResizablePool {
+    fn drop(&mut self) {
+        unsafe { std::alloc::dealloc(self.raw.mem_start().as_ptr(), self.layout) };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grows_on_demand_up_to_max() {
+        let mut p = ResizablePool::new(16, 2, 16);
+        let mut held = Vec::new();
+        for _ in 0..16 {
+            held.push(p.allocate_or_grow().expect("within max"));
+        }
+        assert!(p.allocate_or_grow().is_none());
+        assert_eq!(p.num_blocks(), 16);
+        // All distinct addresses.
+        let mut addrs: Vec<_> = held.iter().map(|q| q.as_ptr() as usize).collect();
+        addrs.sort_unstable();
+        addrs.dedup();
+        assert_eq!(addrs.len(), 16);
+        for q in held {
+            unsafe { p.deallocate(q) };
+        }
+        assert_eq!(p.num_free(), 16);
+    }
+
+    #[test]
+    fn doubling_schedule() {
+        let mut p = ResizablePool::new(8, 2, 64);
+        for _ in 0..2 {
+            p.allocate_or_grow().unwrap();
+        }
+        assert_eq!(p.num_blocks(), 2);
+        p.allocate_or_grow().unwrap(); // triggers 2→4
+        assert_eq!(p.num_blocks(), 4);
+        for _ in 0..2 {
+            p.allocate_or_grow().unwrap();
+        }
+        p.allocate_or_grow().unwrap(); // 4→8
+        assert_eq!(p.num_blocks(), 8);
+    }
+
+    #[test]
+    fn explicit_grow_is_immediate() {
+        let mut p = ResizablePool::new(8, 4, 32);
+        p.grow(32);
+        assert_eq!(p.num_blocks(), 32);
+        assert_eq!(p.num_free(), 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "beyond reservation")]
+    fn grow_beyond_max_panics() {
+        let mut p = ResizablePool::new(8, 4, 8);
+        p.grow(9);
+    }
+
+    #[test]
+    fn shrink_then_regrow() {
+        let mut p = ResizablePool::new(8, 32, 32);
+        let a = p.allocate().unwrap();
+        unsafe { p.deallocate(a) };
+        assert_eq!(p.shrink_to_watermark(), 1);
+        assert_eq!(p.num_free(), 1);
+        p.grow(32);
+        assert_eq!(p.num_free(), 32);
+        // Fully usable after shrink+regrow.
+        let held: Vec<_> = (0..32).map(|_| p.allocate().unwrap()).collect();
+        assert!(p.allocate().is_none());
+        for q in held {
+            unsafe { p.deallocate(q) };
+        }
+    }
+}

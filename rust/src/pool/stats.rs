@@ -1,0 +1,118 @@
+//! Pool statistics snapshot — backs the "no overhead" accounting in
+//! EXPERIMENTS.md and the metrics registry.
+
+/// A point-in-time statistics snapshot of a pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolStats {
+    pub block_size: usize,
+    pub num_blocks: u32,
+    pub num_free: u32,
+    /// Lazy-init watermark (blocks ever threaded onto the free list).
+    pub num_initialized: u32,
+    pub capacity_bytes: usize,
+    /// Bytes of bookkeeping outside the region (the pool header only —
+    /// the free list lives in-band and costs nothing).
+    pub header_overhead_bytes: usize,
+    pub total_allocs: u64,
+    pub total_frees: u64,
+    pub failed_allocs: u64,
+}
+
+impl PoolStats {
+    pub fn num_used(&self) -> u32 {
+        self.num_blocks - self.num_free
+    }
+
+    /// Fraction of blocks in use, in [0, 1].
+    pub fn utilization(&self) -> f64 {
+        if self.num_blocks == 0 {
+            0.0
+        } else {
+            self.num_used() as f64 / self.num_blocks as f64
+        }
+    }
+
+    /// Bookkeeping bytes per block — the paper's headline "no overhead"
+    /// number (→ 0 as the pool grows; the header is amortised).
+    pub fn overhead_per_block(&self) -> f64 {
+        if self.num_blocks == 0 {
+            0.0
+        } else {
+            self.header_overhead_bytes as f64 / self.num_blocks as f64
+        }
+    }
+
+    /// Overhead as a fraction of capacity.
+    pub fn overhead_ratio(&self) -> f64 {
+        if self.capacity_bytes == 0 {
+            0.0
+        } else {
+            self.header_overhead_bytes as f64 / self.capacity_bytes as f64
+        }
+    }
+
+    /// One-line human-readable report.
+    pub fn report(&self) -> String {
+        format!(
+            "blocks {}x{}B | used {}/{} ({:.1}%) | watermark {} | allocs {} frees {} fails {} | overhead {}B ({:.4}%)",
+            self.num_blocks,
+            self.block_size,
+            self.num_used(),
+            self.num_blocks,
+            self.utilization() * 100.0,
+            self.num_initialized,
+            self.total_allocs,
+            self.total_frees,
+            self.failed_allocs,
+            self.header_overhead_bytes,
+            self.overhead_ratio() * 100.0,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> PoolStats {
+        PoolStats {
+            block_size: 64,
+            num_blocks: 100,
+            num_free: 25,
+            num_initialized: 80,
+            capacity_bytes: 6400,
+            header_overhead_bytes: 64,
+            total_allocs: 500,
+            total_frees: 425,
+            failed_allocs: 3,
+        }
+    }
+
+    #[test]
+    fn derived_quantities() {
+        let s = sample();
+        assert_eq!(s.num_used(), 75);
+        assert!((s.utilization() - 0.75).abs() < 1e-12);
+        assert!((s.overhead_per_block() - 0.64).abs() < 1e-12);
+        assert!((s.overhead_ratio() - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_blocks_no_panic() {
+        let mut s = sample();
+        s.num_blocks = 0;
+        s.num_free = 0;
+        s.capacity_bytes = 0;
+        assert_eq!(s.utilization(), 0.0);
+        assert_eq!(s.overhead_per_block(), 0.0);
+        assert_eq!(s.overhead_ratio(), 0.0);
+    }
+
+    #[test]
+    fn report_contains_key_numbers() {
+        let r = sample().report();
+        assert!(r.contains("100x64B"));
+        assert!(r.contains("75/100"));
+        assert!(r.contains("watermark 80"));
+    }
+}

@@ -1,0 +1,252 @@
+//! `TypedPool<T>` — a type-safe pool with RAII handles.
+//!
+//! §V of the paper warns that "the greatest care must be exercised to
+//! ensure that classes … allocated and de-allocated by the fixed-size pool
+//! allocator have their constructors and destructors manually called".
+//! `TypedPool` solves this with the type system: `alloc(value)` placement-
+//! constructs `T` in a block and returns a [`PoolBox`] whose `Drop` runs
+//! `T::drop` and returns the block — no manual ctor/dtor discipline needed.
+
+use core::cell::RefCell;
+use core::marker::PhantomData;
+use core::ops::{Deref, DerefMut};
+use core::ptr::NonNull;
+use std::rc::Rc;
+
+use super::fixed::{FixedPool, PoolConfig};
+use super::stats::PoolStats;
+
+/// Shared interior for `TypedPool` and its outstanding boxes.
+struct Inner {
+    pool: FixedPool,
+    live: u32,
+}
+
+/// A typed fixed-size pool for values of type `T`.
+///
+/// Blocks are sized/aligned for `T` automatically. Cloning the pool handle
+/// is cheap (it is reference-counted); the region is freed when the pool
+/// and all its boxes are gone. Single-threaded by design (the paper's base
+/// algorithm, §VI) — see `locked`/`atomic` for concurrent variants.
+pub struct TypedPool<T> {
+    inner: Rc<RefCell<Inner>>,
+    _marker: PhantomData<T>,
+}
+
+impl<T> Clone for TypedPool<T> {
+    fn clone(&self) -> Self {
+        Self { inner: Rc::clone(&self.inner), _marker: PhantomData }
+    }
+}
+
+impl<T> TypedPool<T> {
+    /// Create a pool with capacity for `num_blocks` values of `T`.
+    pub fn new(num_blocks: u32) -> Self {
+        let cfg = PoolConfig::new(core::mem::size_of::<T>().max(4), num_blocks)
+            .with_align(core::mem::align_of::<T>().max(4));
+        Self {
+            inner: Rc::new(RefCell::new(Inner { pool: FixedPool::new(cfg), live: 0 })),
+            _marker: PhantomData,
+        }
+    }
+
+    /// Placement-construct `value` in a pooled block.
+    ///
+    /// Returns `Err(value)` (giving the value back) when the pool is full.
+    pub fn alloc(&self, value: T) -> Result<PoolBox<T>, T> {
+        let mut inner = self.inner.borrow_mut();
+        match inner.pool.allocate() {
+            Some(p) => {
+                let ptr = p.cast::<T>();
+                // SAFETY: block is sized+aligned for T and exclusively ours.
+                unsafe { ptr.as_ptr().write(value) };
+                inner.live += 1;
+                Ok(PoolBox { ptr, pool: Rc::clone(&self.inner) })
+            }
+            None => Err(value),
+        }
+    }
+
+    /// Number of live boxes.
+    pub fn live(&self) -> u32 {
+        self.inner.borrow().live
+    }
+
+    /// Remaining capacity.
+    pub fn free(&self) -> u32 {
+        self.inner.borrow().pool.num_free()
+    }
+
+    pub fn capacity(&self) -> u32 {
+        self.inner.borrow().pool.num_blocks()
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        self.inner.borrow().pool.stats()
+    }
+}
+
+/// Owning RAII handle to a pooled `T`. Dropping it destroys the value and
+/// returns the block to the pool — the paper's ctor/dtor discipline made
+/// automatic.
+pub struct PoolBox<T> {
+    ptr: NonNull<T>,
+    pool: Rc<RefCell<Inner>>,
+}
+
+impl<T> PoolBox<T> {
+    /// Consume the box, returning the value (block goes back to the pool).
+    pub fn into_inner(self) -> T {
+        let this = core::mem::ManuallyDrop::new(self);
+        // SAFETY: we own the value; the block is returned below and the
+        // Drop impl is suppressed by ManuallyDrop.
+        let value = unsafe { this.ptr.as_ptr().read() };
+        let mut inner = this.pool.borrow_mut();
+        inner.live -= 1;
+        unsafe { inner.pool.deallocate(this.ptr.cast()) };
+        value
+    }
+}
+
+impl<T> Deref for PoolBox<T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        // SAFETY: ptr is valid & exclusively owned by this box.
+        unsafe { self.ptr.as_ref() }
+    }
+}
+
+impl<T> DerefMut for PoolBox<T> {
+    fn deref_mut(&mut self) -> &mut T {
+        // SAFETY: as above; &mut self gives exclusivity.
+        unsafe { self.ptr.as_mut() }
+    }
+}
+
+impl<T> Drop for PoolBox<T> {
+    fn drop(&mut self) {
+        // SAFETY: value is live; run its destructor then release the block.
+        unsafe { core::ptr::drop_in_place(self.ptr.as_ptr()) };
+        let mut inner = self.pool.borrow_mut();
+        inner.live -= 1;
+        unsafe { inner.pool.deallocate(self.ptr.cast()) };
+    }
+}
+
+impl<T: std::fmt::Debug> std::fmt::Debug for PoolBox<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "PoolBox({:?})", **self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::cell::Cell;
+
+    #[test]
+    fn alloc_deref_mutate() {
+        let pool: TypedPool<[u64; 4]> = TypedPool::new(8);
+        let mut b = pool.alloc([1, 2, 3, 4]).unwrap();
+        assert_eq!(b[2], 3);
+        b[2] = 30;
+        assert_eq!(*b, [1, 2, 30, 4]);
+        assert_eq!(pool.live(), 1);
+        drop(b);
+        assert_eq!(pool.live(), 0);
+        assert_eq!(pool.free(), 8);
+    }
+
+    #[test]
+    fn full_pool_returns_value_back() {
+        let pool: TypedPool<u64> = TypedPool::new(2);
+        let _a = pool.alloc(1).unwrap();
+        let _b = pool.alloc(2).unwrap();
+        match pool.alloc(3) {
+            Err(v) => assert_eq!(v, 3),
+            Ok(_) => panic!("pool should be full"),
+        }
+    }
+
+    #[test]
+    fn destructors_run_exactly_once() {
+        struct Counted<'a>(&'a Cell<u32>);
+        impl Drop for Counted<'_> {
+            fn drop(&mut self) {
+                self.0.set(self.0.get() + 1);
+            }
+        }
+        let drops = Cell::new(0);
+        let pool: TypedPool<Counted> = TypedPool::new(4);
+        {
+            let _a = pool.alloc(Counted(&drops)).ok().unwrap();
+            let _b = pool.alloc(Counted(&drops)).ok().unwrap();
+            assert_eq!(drops.get(), 0);
+        }
+        assert_eq!(drops.get(), 2);
+        // Slots reusable after drop.
+        let _c = pool.alloc(Counted(&drops)).ok().unwrap();
+        assert_eq!(pool.live(), 1);
+    }
+
+    #[test]
+    fn into_inner_moves_without_drop() {
+        struct NoisyDrop(u32);
+        impl Drop for NoisyDrop {
+            fn drop(&mut self) {
+                assert_ne!(self.0, 99, "into_inner must not double-drop");
+            }
+        }
+        let pool: TypedPool<NoisyDrop> = TypedPool::new(1);
+        let b = pool.alloc(NoisyDrop(99)).ok().unwrap();
+        let mut v = b.into_inner();
+        assert_eq!(pool.live(), 0);
+        assert_eq!(pool.free(), 1);
+        v.0 = 1; // defuse
+    }
+
+    #[test]
+    fn boxes_keep_pool_alive() {
+        let b;
+        {
+            let pool: TypedPool<String> = TypedPool::new(2);
+            b = pool.alloc("hello".to_string()).unwrap();
+            // pool handle dropped here; Rc keeps the region alive.
+        }
+        assert_eq!(&*b, "hello");
+    }
+
+    #[test]
+    fn zero_sized_payload_ok() {
+        // size_of::<()>() == 0 → rounded to the 4-byte index minimum.
+        let pool: TypedPool<()> = TypedPool::new(4);
+        let a = pool.alloc(()).unwrap();
+        let b = pool.alloc(()).unwrap();
+        drop(a);
+        drop(b);
+        assert_eq!(pool.free(), 4);
+    }
+
+    #[test]
+    fn high_churn_reuse() {
+        let pool: TypedPool<u128> = TypedPool::new(3);
+        for i in 0..1000u128 {
+            let b = pool.alloc(i).unwrap();
+            assert_eq!(*b, i);
+        }
+        assert_eq!(pool.stats().total_allocs, 1000);
+        assert_eq!(pool.stats().total_frees, 1000);
+    }
+
+    #[test]
+    fn alignment_respected_for_overaligned_types() {
+        #[repr(align(64))]
+        struct Aligned64(#[allow(dead_code)] u8);
+        let pool: TypedPool<Aligned64> = TypedPool::new(8);
+        let boxes: Vec<_> = (0..8).map(|i| pool.alloc(Aligned64(i as u8)).ok().unwrap()).collect();
+        for b in &boxes {
+            assert_eq!(b.ptr.as_ptr() as usize % 64, 0);
+        }
+    }
+}

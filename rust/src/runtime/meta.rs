@@ -1,0 +1,242 @@
+//! `meta.json` parsing: the contract between `python/compile/aot.py` and
+//! the rust runtime (shapes, dtypes, artifact inventory, golden fixture).
+
+use crate::util::json::{self, Json};
+
+/// Tensor spec: shape + dtype string ("f32" | "i32").
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<Self, String> {
+        let shape = j
+            .get("shape")
+            .and_then(|s| s.as_arr())
+            .ok_or("missing shape")?
+            .iter()
+            .map(|v| v.as_usize().ok_or("bad dim"))
+            .collect::<Result<Vec<_>, _>>()?;
+        let dtype = j.req_str("dtype").map_err(|e| e.to_string())?.to_string();
+        Ok(Self { shape, dtype })
+    }
+}
+
+/// One AOT artifact (an HLO file + its I/O contract).
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub kind: String, // "decode" | "prefill"
+    pub batch: usize,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Golden trajectory fixture for cross-layer verification.
+#[derive(Debug, Clone, Default)]
+pub struct Golden {
+    pub prompt: Vec<i32>,
+    pub block_table: Vec<Vec<i32>>,
+    pub greedy_tokens: Vec<i32>,
+}
+
+/// The full model/cache geometry.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub n_layers: usize,
+    pub num_params: usize,
+    pub block_tokens: usize,
+    pub num_blocks: usize,
+    pub max_blocks_per_seq: usize,
+    pub max_context: usize,
+    pub scratch_block: usize,
+    pub kv_shape: Vec<usize>,
+    pub prefill_len: usize,
+    pub batch_sizes: Vec<usize>,
+    pub params_file: String,
+    pub artifacts: Vec<ArtifactMeta>,
+    pub golden: Golden,
+}
+
+impl ModelMeta {
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let j = json::parse(text).map_err(|e| e.to_string())?;
+        let model = j.get("model").ok_or("missing model")?;
+        let cache = j.get("cache").ok_or("missing cache")?;
+        let e = |e: json::JsonError| e.to_string();
+
+        let artifacts = j
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or("missing artifacts")?
+            .iter()
+            .map(|a| -> Result<ArtifactMeta, String> {
+                Ok(ArtifactMeta {
+                    name: a.req_str("name").map_err(e)?.to_string(),
+                    kind: a.req_str("kind").map_err(e)?.to_string(),
+                    batch: a.req_usize("batch").map_err(e)?,
+                    file: a.req_str("file").map_err(e)?.to_string(),
+                    inputs: a
+                        .get("inputs")
+                        .and_then(|x| x.as_arr())
+                        .ok_or("missing inputs")?
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect::<Result<_, _>>()?,
+                    outputs: a
+                        .get("outputs")
+                        .and_then(|x| x.as_arr())
+                        .ok_or("missing outputs")?
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect::<Result<_, _>>()?,
+                })
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+
+        let golden = match j.get("golden") {
+            None => Golden::default(),
+            Some(g) => Golden {
+                prompt: json_i32_arr(g.get("prompt"))?,
+                block_table: g
+                    .get("block_table")
+                    .and_then(|a| a.as_arr())
+                    .ok_or("golden.block_table")?
+                    .iter()
+                    .map(|row| json_i32_arr(Some(row)))
+                    .collect::<Result<_, _>>()?,
+                greedy_tokens: json_i32_arr(g.get("greedy_tokens"))?,
+            },
+        };
+
+        Ok(Self {
+            vocab: model.req_usize("vocab").map_err(e)?,
+            d_model: model.req_usize("d_model").map_err(e)?,
+            n_heads: model.req_usize("n_heads").map_err(e)?,
+            head_dim: model.req_usize("head_dim").map_err(e)?,
+            n_layers: model.req_usize("n_layers").map_err(e)?,
+            num_params: model.req_usize("num_params").map_err(e)?,
+            block_tokens: cache.req_usize("block_tokens").map_err(e)?,
+            num_blocks: cache.req_usize("num_blocks").map_err(e)?,
+            max_blocks_per_seq: cache.req_usize("max_blocks_per_seq").map_err(e)?,
+            max_context: cache.req_usize("max_context").map_err(e)?,
+            scratch_block: cache.req_usize("scratch_block").map_err(e)?,
+            kv_shape: cache
+                .get("kv_shape")
+                .and_then(|a| a.as_arr())
+                .ok_or("missing kv_shape")?
+                .iter()
+                .map(|v| v.as_usize().ok_or("bad kv dim".to_string()))
+                .collect::<Result<_, _>>()?,
+            prefill_len: j.req_usize("prefill_len").map_err(e)?,
+            batch_sizes: j
+                .get("batch_sizes")
+                .and_then(|a| a.as_arr())
+                .ok_or("missing batch_sizes")?
+                .iter()
+                .map(|v| v.as_usize().ok_or("bad batch".to_string()))
+                .collect::<Result<_, _>>()?,
+            params_file: j.req_str("params_file").map_err(e)?.to_string(),
+            artifacts,
+            golden,
+        })
+    }
+
+    pub fn load(dir: &std::path::Path) -> Result<Self, String> {
+        let path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|err| format!("{}: {err} (run `make artifacts`)", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn artifact(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    pub fn kv_elements(&self) -> usize {
+        self.kv_shape.iter().product()
+    }
+}
+
+fn json_i32_arr(j: Option<&Json>) -> Result<Vec<i32>, String> {
+    j.and_then(|a| a.as_arr())
+        .ok_or("missing int array")?
+        .iter()
+        .map(|v| v.as_f64().map(|f| f as i32).ok_or("bad int".to_string()))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "model": {"vocab": 256, "d_model": 32, "n_heads": 2, "head_dim": 16,
+                "n_layers": 1, "d_ff": 64, "num_params": 100, "seed": 0},
+      "cache": {"block_tokens": 8, "num_blocks": 16, "max_blocks_per_seq": 2,
+                "max_context": 16, "scratch_block": 15,
+                "kv_shape": [1, 16, 8, 2, 16]},
+      "prefill_len": 16,
+      "batch_sizes": [1],
+      "params_file": "params.bin",
+      "params_sha256": "x",
+      "artifacts": [
+        {"name": "decode_b1", "kind": "decode", "batch": 1,
+         "file": "decode_b1.hlo.txt",
+         "inputs": [{"shape": [100], "dtype": "f32"},
+                    {"shape": [1], "dtype": "i32"},
+                    {"shape": [1], "dtype": "i32"},
+                    {"shape": [1, 2], "dtype": "i32"},
+                    {"shape": [1, 16, 8, 2, 16], "dtype": "f32"},
+                    {"shape": [1, 16, 8, 2, 16], "dtype": "f32"}],
+         "outputs": [{"shape": [1, 256], "dtype": "f32"},
+                     {"shape": [1, 16, 8, 2, 16], "dtype": "f32"},
+                     {"shape": [1, 16, 8, 2, 16], "dtype": "f32"}]}
+      ],
+      "golden": {"prompt": [1, 2], "block_table": [[0, 1]],
+                 "greedy_tokens": [3, 4, 5]}
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = ModelMeta::parse(SAMPLE).unwrap();
+        assert_eq!(m.vocab, 256);
+        assert_eq!(m.kv_shape, vec![1, 16, 8, 2, 16]);
+        assert_eq!(m.kv_elements(), 16 * 8 * 2 * 16);
+        assert_eq!(m.artifacts.len(), 1);
+        let a = m.artifact("decode_b1").unwrap();
+        assert_eq!(a.inputs.len(), 6);
+        assert_eq!(a.inputs[0].elements(), 100);
+        assert_eq!(a.outputs[0].shape, vec![1, 256]);
+        assert_eq!(m.golden.greedy_tokens, vec![3, 4, 5]);
+        assert_eq!(m.golden.block_table, vec![vec![0, 1]]);
+        assert!(m.artifact("nope").is_none());
+    }
+
+    #[test]
+    fn parse_real_artifacts_if_present() {
+        let dir = std::path::Path::new("artifacts");
+        if dir.join("meta.json").exists() {
+            let m = ModelMeta::load(dir).unwrap();
+            assert!(m.num_params > 0);
+            assert!(!m.artifacts.is_empty());
+        }
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        assert!(ModelMeta::parse("{}").is_err());
+        assert!(ModelMeta::parse("not json").is_err());
+    }
+}

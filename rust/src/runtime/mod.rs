@@ -1,0 +1,211 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute on the
+//! request path. Python never runs at serve time — the rust binary is
+//! self-contained once `make artifacts` has produced `artifacts/`.
+//!
+//! Pattern from /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Outputs come back as a single tuple buffer (the xla wrapper does not
+//! untuple device buffers), so each step syncs the tuple to a host literal
+//! and decomposes it; the KV literals are fed straight back into the next
+//! step without further copies.
+
+pub mod meta;
+pub mod tensor;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+pub use meta::{ArtifactMeta, Golden, ModelMeta, TensorSpec};
+pub use tensor::{argmax_rows, check_spec, lit_f32, lit_i32, to_vec_f32, zeros_f32};
+
+/// A compiled artifact plus its I/O contract.
+pub struct Executable {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with validated inputs; returns the decomposed output tuple
+    /// as host literals.
+    pub fn run(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>, String> {
+        if inputs.len() != self.meta.inputs.len() {
+            return Err(format!(
+                "{}: expected {} inputs, got {}",
+                self.meta.name,
+                self.meta.inputs.len(),
+                inputs.len()
+            ));
+        }
+        for (i, (lit, spec)) in inputs.iter().zip(&self.meta.inputs).enumerate() {
+            check_spec(lit, spec, &format!("{} input {i}", self.meta.name))?;
+        }
+        let outs = self
+            .exe
+            .execute::<&xla::Literal>(inputs)
+            .map_err(|e| format!("{}: execute: {e}", self.meta.name))?;
+        let mut tuple = outs[0][0]
+            .to_literal_sync()
+            .map_err(|e| format!("{}: sync: {e}", self.meta.name))?;
+        let parts = tuple
+            .decompose_tuple()
+            .map_err(|e| format!("{}: decompose: {e}", self.meta.name))?;
+        if parts.len() != self.meta.outputs.len() {
+            return Err(format!(
+                "{}: expected {} outputs, got {}",
+                self.meta.name,
+                self.meta.outputs.len(),
+                parts.len()
+            ));
+        }
+        Ok(parts)
+    }
+}
+
+/// The loaded runtime: one PJRT client, all artifacts compiled, weights
+/// resident as a literal.
+pub struct Runtime {
+    pub meta: ModelMeta,
+    pub params: xla::Literal,
+    executables: HashMap<String, Executable>,
+    pub artifacts_dir: PathBuf,
+    /// Wall time spent compiling at load (for reports).
+    pub compile_ms: u128,
+}
+
+impl Runtime {
+    /// Load `meta.json`, weights and every artifact from `dir`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self, String> {
+        let dir = dir.as_ref();
+        let meta = ModelMeta::load(dir)?;
+        // Weights.
+        let params_path = dir.join(&meta.params_file);
+        let bytes = std::fs::read(&params_path)
+            .map_err(|e| format!("{}: {e}", params_path.display()))?;
+        if bytes.len() != meta.num_params * 4 {
+            return Err(format!(
+                "params.bin has {} bytes, expected {}",
+                bytes.len(),
+                meta.num_params * 4
+            ));
+        }
+        let params = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            &[meta.num_params],
+            &bytes,
+        )
+        .map_err(|e| e.to_string())?;
+
+        let client = xla::PjRtClient::cpu().map_err(|e| e.to_string())?;
+        let t0 = std::time::Instant::now();
+        let mut executables = HashMap::new();
+        for art in &meta.artifacts {
+            let path = dir.join(&art.file);
+            let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+                .map_err(|e| format!("{}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| format!("compile {}: {e}", art.name))?;
+            executables.insert(art.name.clone(), Executable { meta: art.clone(), exe });
+        }
+        Ok(Self {
+            meta,
+            params,
+            executables,
+            artifacts_dir: dir.to_path_buf(),
+            compile_ms: t0.elapsed().as_millis(),
+        })
+    }
+
+    pub fn executable(&self, name: &str) -> Result<&Executable, String> {
+        self.executables
+            .get(name)
+            .ok_or_else(|| format!("no artifact `{name}` (have: {:?})", self.names()))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.executables.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    /// Smallest compiled batch variant ≥ `want` (the engine pads unused
+    /// lanes), falling back to the largest available.
+    pub fn pick_batch(&self, want: usize) -> usize {
+        let mut sizes = self.meta.batch_sizes.clone();
+        sizes.sort_unstable();
+        for &b in &sizes {
+            if b >= want {
+                return b;
+            }
+        }
+        *sizes.last().unwrap()
+    }
+
+    /// Fresh zeroed KV arena literals.
+    pub fn fresh_kv(&self) -> Result<(xla::Literal, xla::Literal), String> {
+        Ok((zeros_f32(&self.meta.kv_shape)?, zeros_f32(&self.meta.kv_shape)?))
+    }
+
+    /// Run a prefill step. `tokens` is row-major `[batch, prefill_len]`.
+    /// Returns `(logits [batch*vocab], kv_k, kv_v)`.
+    pub fn prefill(
+        &self,
+        batch: usize,
+        tokens: &[i32],
+        prompt_lens: &[i32],
+        block_tables: &[i32],
+        kv_k: &xla::Literal,
+        kv_v: &xla::Literal,
+    ) -> Result<(Vec<f32>, xla::Literal, xla::Literal), String> {
+        let name = format!("prefill_b{batch}");
+        let exe = self.executable(&name)?;
+        let m = &self.meta;
+        let toks = lit_i32(&[batch, m.prefill_len], tokens)?;
+        let lens = lit_i32(&[batch], prompt_lens)?;
+        let tables = lit_i32(&[batch, m.max_blocks_per_seq], block_tables)?;
+        let mut parts = exe.run(&[&self.params, &toks, &lens, &tables, kv_k, kv_v])?;
+        let kv_v_out = parts.pop().unwrap();
+        let kv_k_out = parts.pop().unwrap();
+        let logits = to_vec_f32(&parts.pop().unwrap())?;
+        Ok((logits, kv_k_out, kv_v_out))
+    }
+
+    /// Run one decode step. Returns `(logits [batch*vocab], kv_k, kv_v)`.
+    pub fn decode(
+        &self,
+        batch: usize,
+        tokens: &[i32],
+        seq_lens: &[i32],
+        block_tables: &[i32],
+        kv_k: &xla::Literal,
+        kv_v: &xla::Literal,
+    ) -> Result<(Vec<f32>, xla::Literal, xla::Literal), String> {
+        let name = format!("decode_b{batch}");
+        let exe = self.executable(&name)?;
+        let m = &self.meta;
+        let toks = lit_i32(&[batch], tokens)?;
+        let lens = lit_i32(&[batch], seq_lens)?;
+        let tables = lit_i32(&[batch, m.max_blocks_per_seq], block_tables)?;
+        let mut parts = exe.run(&[&self.params, &toks, &lens, &tables, kv_k, kv_v])?;
+        let kv_v_out = parts.pop().unwrap();
+        let kv_k_out = parts.pop().unwrap();
+        let logits = to_vec_f32(&parts.pop().unwrap())?;
+        Ok((logits, kv_k_out, kv_v_out))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Runtime tests that need compiled artifacts live in
+    // rust/tests/runtime_integration.rs (skipped when artifacts/ absent).
+    use super::*;
+
+    #[test]
+    fn load_missing_dir_errors() {
+        match Runtime::load("/nonexistent/artifacts") {
+            Err(err) => assert!(err.contains("make artifacts"), "{err}"),
+            Ok(_) => panic!("expected error"),
+        }
+    }
+}

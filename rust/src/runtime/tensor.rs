@@ -1,0 +1,127 @@
+//! Host tensor ↔ `xla::Literal` helpers with shape/dtype validation against
+//! the artifact specs.
+
+use super::meta::TensorSpec;
+
+/// Build an f32 literal of `shape` from `data` (row-major).
+pub fn lit_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal, String> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        return Err(format!("shape {shape:?} needs {n} elements, got {}", data.len()));
+    }
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, shape, bytes)
+        .map_err(|e| e.to_string())
+}
+
+/// Build an i32 literal of `shape` from `data` (row-major).
+pub fn lit_i32(shape: &[usize], data: &[i32]) -> Result<xla::Literal, String> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        return Err(format!("shape {shape:?} needs {n} elements, got {}", data.len()));
+    }
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, shape, bytes)
+        .map_err(|e| e.to_string())
+}
+
+/// Zero-filled f32 literal (fresh KV arenas).
+pub fn zeros_f32(shape: &[usize]) -> Result<xla::Literal, String> {
+    let n: usize = shape.iter().product();
+    xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        shape,
+        &vec![0u8; n * 4],
+    )
+    .map_err(|e| e.to_string())
+}
+
+/// Check a literal against a spec (element count + dtype family).
+pub fn check_spec(lit: &xla::Literal, spec: &TensorSpec, what: &str) -> Result<(), String> {
+    let n = lit.element_count();
+    if n != spec.elements() {
+        return Err(format!(
+            "{what}: literal has {n} elements, spec {:?} needs {}",
+            spec.shape,
+            spec.elements()
+        ));
+    }
+    let ty = lit.ty().map_err(|e| e.to_string())?;
+    let ok = matches!(
+        (spec.dtype.as_str(), ty),
+        ("f32", xla::ElementType::F32) | ("i32", xla::ElementType::S32)
+    );
+    if !ok {
+        return Err(format!("{what}: dtype {ty:?} != spec {}", spec.dtype));
+    }
+    Ok(())
+}
+
+/// Extract an f32 vec from a literal.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>, String> {
+    lit.to_vec::<f32>().map_err(|e| e.to_string())
+}
+
+/// Argmax over each row of a [rows, cols] flattened matrix.
+pub fn argmax_rows(data: &[f32], rows: usize, cols: usize) -> Vec<usize> {
+    assert_eq!(data.len(), rows * cols);
+    (0..rows)
+        .map(|r| {
+            let row = &data[r * cols..(r + 1) * cols];
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lit_f32_roundtrip() {
+        let l = lit_f32(&[2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        assert_eq!(l.element_count(), 6);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn lit_i32_roundtrip() {
+        let l = lit_i32(&[4], &[7, 8, 9, 10]).unwrap();
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![7, 8, 9, 10]);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(lit_f32(&[2, 2], &[1.0]).is_err());
+        assert!(lit_i32(&[3], &[1, 2]).is_err());
+    }
+
+    #[test]
+    fn zeros_are_zero() {
+        let l = zeros_f32(&[5]).unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![0.0; 5]);
+    }
+
+    #[test]
+    fn check_spec_matches() {
+        let spec = TensorSpec { shape: vec![2, 2], dtype: "f32".into() };
+        let l = lit_f32(&[2, 2], &[0.0; 4]).unwrap();
+        check_spec(&l, &spec, "x").unwrap();
+        let bad_count = lit_f32(&[2], &[0.0; 2]).unwrap();
+        assert!(check_spec(&bad_count, &spec, "x").is_err());
+        let bad_ty = lit_i32(&[2, 2], &[0; 4]).unwrap();
+        assert!(check_spec(&bad_ty, &spec, "x").is_err());
+    }
+
+    #[test]
+    fn argmax_rows_basic() {
+        let data = [0.1, 0.9, 0.0, /* row2 */ 5.0, 1.0, 2.0];
+        assert_eq!(argmax_rows(&data, 2, 3), vec![1, 0]);
+    }
+}

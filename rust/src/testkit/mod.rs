@@ -1,0 +1,211 @@
+//! Property-testing kit (proptest is unavailable offline).
+//!
+//! A deliberately small framework: seeded generators, a case runner that
+//! reports the failing seed, and linear input shrinking for sequence-shaped
+//! inputs. Used by `rust/tests/prop_*.rs` for the coordinator/pool
+//! invariants the task calls for.
+
+use crate::util::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct PropConfig {
+    pub cases: u32,
+    pub seed: u64,
+    /// Max shrink attempts after a failure.
+    pub max_shrink: u32,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        Self { cases: 256, seed: 0xFA57_9001, max_shrink: 512 }
+    }
+}
+
+/// Outcome of a property check.
+#[derive(Debug)]
+pub enum PropResult {
+    Ok { cases: u32 },
+    Failed { case: u32, seed: u64, message: String, shrunk: Option<String> },
+}
+
+impl PropResult {
+    /// Panic with diagnostics if the property failed (test entry point).
+    pub fn unwrap(self) {
+        match self {
+            PropResult::Ok { .. } => {}
+            PropResult::Failed { case, seed, message, shrunk } => {
+                panic!(
+                    "property failed at case {case} (seed {seed:#x}): {message}\nshrunk: {}",
+                    shrunk.unwrap_or_else(|| "<none>".into())
+                );
+            }
+        }
+    }
+}
+
+/// Check `prop` over `cases` random inputs produced by `gen`.
+///
+/// `prop` returns `Err(reason)` to signal failure; panics inside `prop`
+/// are NOT caught (keep properties panic-free, return errors).
+pub fn check<T, G, P>(cfg: PropConfig, mut gen: G, mut prop: P) -> PropResult
+where
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(case_seed);
+        let input = gen(&mut rng);
+        if let Err(message) = prop(&input) {
+            return PropResult::Failed { case, seed: case_seed, message, shrunk: None };
+        }
+    }
+    PropResult::Ok { cases: cfg.cases }
+}
+
+/// Check a property over generated *sequences*, shrinking a failing
+/// sequence by binary-chopping prefixes and removing elements.
+///
+/// Sequences are the shape all our pool/scheduler properties take (ops
+/// lists), so this is the only shrinker we need.
+pub fn check_seq<T, G, P>(cfg: PropConfig, mut gen: G, mut prop: P) -> PropResult
+where
+    T: Clone + std::fmt::Debug,
+    G: FnMut(&mut Rng) -> Vec<T>,
+    P: FnMut(&[T]) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(case_seed);
+        let input = gen(&mut rng);
+        if let Err(first_msg) = prop(&input) {
+            // Shrink: try removing chunks (halves, quarters, … singles).
+            let mut best: Vec<T> = input.clone();
+            let mut best_msg = first_msg;
+            let mut budget = cfg.max_shrink;
+            let mut chunk = (best.len() / 2).max(1);
+            while chunk >= 1 && budget > 0 {
+                let mut improved = false;
+                let mut start = 0;
+                while start < best.len() && budget > 0 {
+                    let mut candidate = best.clone();
+                    let end = (start + chunk).min(candidate.len());
+                    candidate.drain(start..end);
+                    budget -= 1;
+                    if candidate.is_empty() {
+                        start += chunk;
+                        continue;
+                    }
+                    if let Err(msg) = prop(&candidate) {
+                        best = candidate;
+                        best_msg = msg;
+                        improved = true;
+                        // retry same position (sequence shifted left)
+                    } else {
+                        start += chunk;
+                    }
+                }
+                if !improved {
+                    if chunk == 1 {
+                        break;
+                    }
+                    chunk /= 2;
+                }
+            }
+            return PropResult::Failed {
+                case,
+                seed: case_seed,
+                message: best_msg,
+                shrunk: Some(format!("{} ops: {:?}", best.len(), best)),
+            };
+        }
+    }
+    PropResult::Ok { cases: cfg.cases }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_ok() {
+        let r = check(
+            PropConfig { cases: 64, ..Default::default() },
+            |rng| rng.gen_range(100),
+            |&x| {
+                if x < 100 {
+                    Ok(())
+                } else {
+                    Err(format!("{x} out of range"))
+                }
+            },
+        );
+        assert!(matches!(r, PropResult::Ok { cases: 64 }));
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let r = check(
+            PropConfig { cases: 64, ..Default::default() },
+            |rng| rng.gen_range(100),
+            |&x| if x < 50 { Ok(()) } else { Err("too big".into()) },
+        );
+        match r {
+            PropResult::Failed { message, .. } => assert_eq!(message, "too big"),
+            _ => panic!("expected failure"),
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn unwrap_panics_on_failure() {
+        check(PropConfig::default(), |_| 1u32, |_| Err("always".into())).unwrap();
+    }
+
+    #[test]
+    fn shrinker_minimises() {
+        // Property: no element equals 7. Generator plants a 7 somewhere in
+        // a long sequence; the shrinker should reduce to exactly [7].
+        let r = check_seq(
+            PropConfig { cases: 8, ..Default::default() },
+            |rng| {
+                let mut v: Vec<u32> =
+                    (0..100).map(|_| rng.gen_range(6) as u32).collect();
+                let pos = rng.gen_usize(0, v.len());
+                v[pos] = 7;
+                v
+            },
+            |xs| {
+                if xs.contains(&7) {
+                    Err("contains 7".into())
+                } else {
+                    Ok(())
+                }
+            },
+        );
+        match r {
+            PropResult::Failed { shrunk: Some(s), .. } => {
+                assert!(s.starts_with("1 ops: [7]"), "not minimal: {s}");
+            }
+            other => panic!("expected shrunk failure, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let run = || {
+            let mut seen = Vec::new();
+            let _ = check(
+                PropConfig { cases: 10, ..Default::default() },
+                |rng| rng.next_u64(),
+                |&x| {
+                    seen.push(x);
+                    Ok(())
+                },
+            );
+            seen
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -1,0 +1,88 @@
+//! Alignment arithmetic shared by all allocators.
+
+/// Round `n` up to the next multiple of `align` (power of two).
+#[inline]
+pub const fn align_up(n: usize, align: usize) -> usize {
+    debug_assert!(align.is_power_of_two());
+    (n + align - 1) & !(align - 1)
+}
+
+/// Round `n` down to the previous multiple of `align` (power of two).
+#[inline]
+pub const fn align_down(n: usize, align: usize) -> usize {
+    debug_assert!(align.is_power_of_two());
+    n & !(align - 1)
+}
+
+/// Is `n` a multiple of `align` (power of two)?
+#[inline]
+pub const fn is_aligned(n: usize, align: usize) -> bool {
+    n & (align - 1) == 0
+}
+
+/// Is the pointer aligned to `align`?
+#[inline]
+pub fn ptr_is_aligned(p: *const u8, align: usize) -> bool {
+    is_aligned(p as usize, align)
+}
+
+/// Smallest power of two >= n (n > 0).
+#[inline]
+pub const fn next_pow2(n: usize) -> usize {
+    if n <= 1 {
+        1
+    } else {
+        1 << (usize::BITS - (n - 1).leading_zeros())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn align_up_basic() {
+        assert_eq!(align_up(0, 8), 0);
+        assert_eq!(align_up(1, 8), 8);
+        assert_eq!(align_up(8, 8), 8);
+        assert_eq!(align_up(9, 8), 16);
+        assert_eq!(align_up(100, 64), 128);
+    }
+
+    #[test]
+    fn align_down_basic() {
+        assert_eq!(align_down(0, 8), 0);
+        assert_eq!(align_down(7, 8), 0);
+        assert_eq!(align_down(8, 8), 8);
+        assert_eq!(align_down(15, 8), 8);
+    }
+
+    #[test]
+    fn is_aligned_basic() {
+        assert!(is_aligned(0, 16));
+        assert!(is_aligned(32, 16));
+        assert!(!is_aligned(33, 16));
+    }
+
+    #[test]
+    fn next_pow2_basic() {
+        assert_eq!(next_pow2(0), 1);
+        assert_eq!(next_pow2(1), 1);
+        assert_eq!(next_pow2(2), 2);
+        assert_eq!(next_pow2(3), 4);
+        assert_eq!(next_pow2(1000), 1024);
+        assert_eq!(next_pow2(1024), 1024);
+    }
+
+    #[test]
+    fn roundtrip_up_down() {
+        for n in 0..200 {
+            for a in [1usize, 2, 4, 8, 16, 64] {
+                assert!(align_up(n, a) >= n);
+                assert!(align_down(n, a) <= n);
+                assert!(is_aligned(align_up(n, a), a));
+                assert!(is_aligned(align_down(n, a), a));
+            }
+        }
+    }
+}

@@ -1,0 +1,238 @@
+//! Log-bucketed latency histogram (HdrHistogram-lite).
+//!
+//! Fixed memory, O(1) record, ~4% relative error: values are bucketed by
+//! (exponent, 4-bit mantissa) — 16 sub-buckets per power of two. Used by
+//! the metrics registry and the serving engine for latency percentiles.
+
+const SUB_BITS: u32 = 4;
+const SUB: usize = 1 << SUB_BITS; // 16 sub-buckets per octave
+const OCTAVES: usize = 64;
+const BUCKETS: usize = OCTAVES * SUB;
+
+/// Histogram over `u64` values (typically nanoseconds).
+#[derive(Clone)]
+pub struct LogHistogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        Self {
+            counts: vec![0; BUCKETS],
+            total: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    #[inline]
+    fn bucket_of(value: u64) -> usize {
+        if value < SUB as u64 {
+            return value as usize; // exact buckets for tiny values
+        }
+        let exp = 63 - value.leading_zeros();
+        let mantissa = ((value >> (exp - SUB_BITS)) & (SUB as u64 - 1)) as usize;
+        ((exp - SUB_BITS + 1) as usize) * SUB + mantissa
+    }
+
+    /// Representative (lower-bound) value for a bucket index.
+    fn bucket_low(idx: usize) -> u64 {
+        if idx < SUB {
+            return idx as u64;
+        }
+        let octave = (idx / SUB) as u32 + SUB_BITS - 1;
+        let mantissa = (idx % SUB) as u64;
+        (1u64 << octave) | (mantissa << (octave - SUB_BITS))
+    }
+
+    #[inline]
+    pub fn record(&mut self, value: u64) {
+        self.counts[Self::bucket_of(value)] += 1;
+        self.total += 1;
+        self.sum += value as u128;
+        self.min = self.min.min(value);
+        self.max = self.max.max(value);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.total as f64
+        }
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Approximate percentile (`p` in `[0,100]`). Returns 0 when empty.
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        if p >= 100.0 {
+            return self.max;
+        }
+        let target = ((p / 100.0) * self.total as f64).ceil().max(1.0) as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return Self::bucket_low(i).clamp(self.min, self.max.max(self.min));
+            }
+        }
+        self.max
+    }
+
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn clear(&mut self) {
+        self.counts.iter_mut().for_each(|c| *c = 0);
+        self.total = 0;
+        self.sum = 0;
+        self.min = u64::MAX;
+        self.max = 0;
+    }
+}
+
+impl std::fmt::Debug for LogHistogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "LogHistogram {{ n: {}, mean: {:.1}, p50: {}, p99: {}, max: {} }}",
+            self.total,
+            self.mean(),
+            self.percentile(50.0),
+            self.percentile(99.0),
+            self.max
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram() {
+        let h = LogHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile(50.0), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.min(), 0);
+    }
+
+    #[test]
+    fn exact_small_values() {
+        let mut h = LogHistogram::new();
+        for v in 0..16u64 {
+            h.record(v);
+        }
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 15);
+        assert_eq!(h.count(), 16);
+    }
+
+    #[test]
+    fn bucket_monotonic() {
+        let mut last = 0usize;
+        for v in [1u64, 2, 3, 15, 16, 17, 100, 1000, 1 << 20, u64::MAX / 2] {
+            let b = LogHistogram::bucket_of(v);
+            assert!(b >= last, "bucket not monotonic at {v}");
+            last = b;
+        }
+    }
+
+    #[test]
+    fn bucket_low_is_lower_bound() {
+        for v in [5u64, 17, 100, 999, 12345, 1 << 30] {
+            let b = LogHistogram::bucket_of(v);
+            let low = LogHistogram::bucket_low(b);
+            assert!(low <= v, "low {low} > v {v}");
+            // relative error bound ~ 1/16
+            assert!(
+                (v - low) as f64 <= v as f64 / 16.0 + 1.0,
+                "error too large: v={v} low={low}"
+            );
+        }
+    }
+
+    #[test]
+    fn percentile_accuracy() {
+        let mut h = LogHistogram::new();
+        for v in 1..=10_000u64 {
+            h.record(v);
+        }
+        let p50 = h.percentile(50.0) as f64;
+        let p99 = h.percentile(99.0) as f64;
+        assert!((p50 - 5000.0).abs() / 5000.0 < 0.10, "p50 {p50}");
+        assert!((p99 - 9900.0).abs() / 9900.0 < 0.10, "p99 {p99}");
+        assert_eq!(h.percentile(100.0), 10_000);
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        for v in 1..=100u64 {
+            a.record(v);
+        }
+        for v in 101..=200u64 {
+            b.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 200);
+        assert_eq!(a.min(), 1);
+        assert_eq!(a.max(), 200);
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut h = LogHistogram::new();
+        h.record(42);
+        h.clear();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile(99.0), 0);
+    }
+
+    #[test]
+    fn mean_exact() {
+        let mut h = LogHistogram::new();
+        for v in [10u64, 20, 30] {
+            h.record(v);
+        }
+        assert!((h.mean() - 20.0).abs() < 1e-12);
+    }
+}

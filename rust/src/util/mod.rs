@@ -1,0 +1,16 @@
+//! Shared substrates: deterministic RNG + distributions, statistics,
+//! log-bucket histograms, timing, alignment math, and a minimal JSON
+//! parser/writer. These replace the `rand`/`criterion`/`serde` crates,
+//! which are unavailable in the offline build environment.
+
+pub mod align;
+pub mod histogram;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod time;
+
+pub use histogram::LogHistogram;
+pub use rng::{Rng, SplitMix64, Zipf};
+pub use stats::{geomean, percentile_sorted, Summary, Welford};
+pub use time::{black_box, fmt_bytes, fmt_ns, fmt_rate, Timer};

@@ -1,0 +1,363 @@
+//! Deterministic pseudo-random number generation and distributions.
+//!
+//! The build environment is offline (no `rand` crate), so this module is a
+//! first-class substrate: a SplitMix64 seeder, an xoshiro256** generator,
+//! and the distributions the workload generators need (uniform, Zipf,
+//! Poisson, exponential, shuffle).
+//!
+//! Everything here is deterministic given a seed — bench runs and property
+//! tests are reproducible by construction.
+
+/// SplitMix64: used to seed xoshiro and as a cheap standalone generator.
+///
+/// Reference: Steele, Lea, Flood, "Fast splittable pseudorandom number
+/// generators" (OOPSLA 2014).
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256** 1.0 — the workhorse generator.
+///
+/// Reference: Blackman & Vigna, "Scrambled linear pseudorandom number
+/// generators" (2019). Passes BigCrush; 2^256-1 period.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed (expanded via SplitMix64).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let s = [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()];
+        Self { s }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[0, 1)` as f32.
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Unbiased uniform integer in `[0, bound)` (Lemire's method).
+    ///
+    /// Panics if `bound == 0`.
+    #[inline]
+    pub fn gen_range(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0, "gen_range bound must be > 0");
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(bound as u128);
+        let mut lo = m as u64;
+        if lo < bound {
+            let threshold = bound.wrapping_neg() % bound;
+            while lo < threshold {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(bound as u128);
+                lo = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform usize in `[lo, hi)`.
+    #[inline]
+    pub fn gen_usize(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi > lo, "empty range {lo}..{hi}");
+        lo + self.gen_range((hi - lo) as u64) as usize
+    }
+
+    /// Bernoulli trial with probability `p`.
+    #[inline]
+    pub fn gen_bool(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Standard normal via Box–Muller (polar form avoided for determinism
+    /// of call count; basic form is fine here).
+    pub fn gen_normal(&mut self) -> f64 {
+        // Avoid ln(0).
+        let u1 = (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        let u1 = if u1 <= 0.0 { f64::MIN_POSITIVE } else { u1 };
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Exponential with rate `lambda` (mean `1/lambda`).
+    pub fn gen_exp(&mut self, lambda: f64) -> f64 {
+        let u = 1.0 - self.next_f64(); // (0, 1]
+        -u.ln() / lambda
+    }
+
+    /// Poisson-distributed count with mean `lambda` (Knuth for small
+    /// lambda, normal approximation above 64 to stay O(1)).
+    pub fn gen_poisson(&mut self, lambda: f64) -> u64 {
+        if lambda <= 0.0 {
+            return 0;
+        }
+        if lambda > 64.0 {
+            let n = lambda + lambda.sqrt() * self.gen_normal();
+            return n.max(0.0).round() as u64;
+        }
+        let l = (-lambda).exp();
+        let mut k = 0u64;
+        let mut p = 1.0;
+        loop {
+            p *= self.next_f64();
+            if p <= l {
+                return k;
+            }
+            k += 1;
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.gen_range(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Pick a uniformly random element.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.gen_usize(0, xs.len())]
+    }
+}
+
+/// Zipf(s) sampler over `{0, .., n-1}` using the rejection-inversion
+/// method of Hörmann & Derflinger — O(1) per sample, no table.
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    n: f64,
+    s: f64,
+    h_x1: f64,
+    h_n: f64,
+    dd: f64,
+}
+
+impl Zipf {
+    /// `n` elements with exponent `s > 0`, `s != 1` handled via the
+    /// generalized harmonic integral.
+    pub fn new(n: usize, s: f64) -> Self {
+        assert!(n >= 1 && s > 0.0);
+        let nf = n as f64;
+        let h = |x: f64| -> f64 {
+            if (s - 1.0).abs() < 1e-9 {
+                (1.0 + x).ln()
+            } else {
+                ((1.0 + x).powf(1.0 - s) - 1.0) / (1.0 - s)
+            }
+        };
+        Self {
+            n: nf,
+            s,
+            h_x1: h(1.5) - 1.0,
+            h_n: h(nf + 0.5),
+            dd: h(0.5),
+        }
+    }
+
+    fn h_inv(&self, x: f64) -> f64 {
+        if (self.s - 1.0).abs() < 1e-9 {
+            x.exp() - 1.0
+        } else {
+            (1.0 + x * (1.0 - self.s)).powf(1.0 / (1.0 - self.s)) - 1.0
+        }
+    }
+
+    /// Sample an index in `[0, n)` (0 is the most popular).
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        loop {
+            let u = self.dd + rng.next_f64() * (self.h_n - self.dd);
+            let x = self.h_inv(u);
+            let k = (x + 0.5).floor().clamp(1.0, self.n);
+            // Acceptance test.
+            let h_k = if (self.s - 1.0).abs() < 1e-9 {
+                (k + 0.5).ln() - (k - 0.5).ln()
+            } else {
+                ((k + 0.5).powf(1.0 - self.s) - (k - 0.5).powf(1.0 - self.s)) / (1.0 - self.s)
+            };
+            if u >= self.h_x1 || rng.next_f64() * h_k <= k.powf(-self.s) {
+                return k as usize - 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_deterministic() {
+        let mut a = SplitMix64::new(42);
+        let mut b = SplitMix64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn splitmix_known_value() {
+        // First output for seed 0 is the finalizer of 0x9E3779B97F4A7C15.
+        let mut sm = SplitMix64::new(0);
+        let v = sm.next_u64();
+        assert_eq!(v, 0xE220A8397B1DCDAF);
+    }
+
+    #[test]
+    fn rng_deterministic_and_distinct_seeds() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(1);
+        let mut c = Rng::new(2);
+        let va: Vec<u64> = (0..10).map(|_| a.next_u64()).collect();
+        let vb: Vec<u64> = (0..10).map(|_| b.next_u64()).collect();
+        let vc: Vec<u64> = (0..10).map(|_| c.next_u64()).collect();
+        assert_eq!(va, vb);
+        assert_ne!(va, vc);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn gen_range_bounds_and_coverage() {
+        let mut r = Rng::new(3);
+        let mut seen = [false; 10];
+        for _ in 0..10_000 {
+            let v = r.gen_range(10);
+            assert!(v < 10);
+            seen[v as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all values in range hit");
+    }
+
+    #[test]
+    fn gen_range_uniformity_chi_square() {
+        let mut r = Rng::new(11);
+        const K: usize = 16;
+        const N: usize = 160_000;
+        let mut counts = [0usize; K];
+        for _ in 0..N {
+            counts[r.gen_range(K as u64) as usize] += 1;
+        }
+        let expected = (N / K) as f64;
+        let chi2: f64 = counts
+            .iter()
+            .map(|&c| {
+                let d = c as f64 - expected;
+                d * d / expected
+            })
+            .sum();
+        // 15 dof, p=0.001 critical value ~ 37.7.
+        assert!(chi2 < 37.7, "chi2 {chi2} too large");
+    }
+
+    #[test]
+    fn exp_mean() {
+        let mut r = Rng::new(5);
+        let lambda = 2.0;
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.gen_exp(lambda)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn poisson_mean_small_and_large() {
+        let mut r = Rng::new(6);
+        for &lambda in &[0.5, 4.0, 32.0, 200.0] {
+            let n = 20_000;
+            let mean: f64 =
+                (0..n).map(|_| r.gen_poisson(lambda) as f64).sum::<f64>() / n as f64;
+            assert!(
+                (mean - lambda).abs() < lambda.max(1.0) * 0.1,
+                "lambda={lambda} mean={mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(9);
+        let mut v: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>(), "shuffle changed order");
+    }
+
+    #[test]
+    fn zipf_range_and_skew() {
+        let mut r = Rng::new(13);
+        let z = Zipf::new(100, 1.1);
+        let mut counts = vec![0usize; 100];
+        for _ in 0..50_000 {
+            let k = z.sample(&mut r);
+            assert!(k < 100);
+            counts[k] += 1;
+        }
+        // Rank 0 must dominate rank 50.
+        assert!(counts[0] > counts[50] * 5, "zipf skew: {} vs {}", counts[0], counts[50]);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(17);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.gen_normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+}

@@ -1,0 +1,132 @@
+//! Timing helpers: monotonic ns timers, a compiler-fence `black_box`, and
+//! human-friendly duration formatting for reports.
+
+use std::time::Instant;
+
+/// Prevent the optimizer from eliding a value (stable-Rust black box).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Simple ns stopwatch.
+#[derive(Debug, Clone, Copy)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    #[inline]
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    #[inline]
+    pub fn elapsed_ns(&self) -> u64 {
+        self.start.elapsed().as_nanos() as u64
+    }
+
+    #[inline]
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Format a nanosecond quantity with an adaptive unit (`ns`, `µs`, `ms`, `s`).
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Format a byte count with an adaptive unit.
+pub fn fmt_bytes(b: u64) -> String {
+    const KIB: u64 = 1024;
+    const MIB: u64 = 1024 * KIB;
+    const GIB: u64 = 1024 * MIB;
+    if b < KIB {
+        format!("{b} B")
+    } else if b < MIB {
+        format!("{:.1} KiB", b as f64 / KIB as f64)
+    } else if b < GIB {
+        format!("{:.1} MiB", b as f64 / MIB as f64)
+    } else {
+        format!("{:.2} GiB", b as f64 / GIB as f64)
+    }
+}
+
+/// Format a throughput (ops/sec) with an adaptive unit.
+pub fn fmt_rate(ops_per_sec: f64) -> String {
+    if ops_per_sec >= 1e9 {
+        format!("{:.2} Gop/s", ops_per_sec / 1e9)
+    } else if ops_per_sec >= 1e6 {
+        format!("{:.2} Mop/s", ops_per_sec / 1e6)
+    } else if ops_per_sec >= 1e3 {
+        format!("{:.2} Kop/s", ops_per_sec / 1e3)
+    } else {
+        format!("{ops_per_sec:.1} op/s")
+    }
+}
+
+/// Measure the wall-clock time of a closure in nanoseconds.
+#[inline]
+pub fn time_ns<F: FnOnce()>(f: F) -> u64 {
+    let t = Timer::start();
+    f();
+    t.elapsed_ns()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotonic() {
+        let t = Timer::start();
+        let a = t.elapsed_ns();
+        let b = t.elapsed_ns();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(500.0).ends_with("ns"));
+        assert!(fmt_ns(5_000.0).ends_with("µs"));
+        assert!(fmt_ns(5_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with(" s"));
+    }
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.0 KiB");
+        assert!(fmt_bytes(3 * 1024 * 1024).contains("MiB"));
+        assert!(fmt_bytes(5 * 1024 * 1024 * 1024).contains("GiB"));
+    }
+
+    #[test]
+    fn fmt_rate_units() {
+        assert!(fmt_rate(100.0).contains("op/s"));
+        assert!(fmt_rate(5e3).contains("Kop/s"));
+        assert!(fmt_rate(5e6).contains("Mop/s"));
+        assert!(fmt_rate(5e9).contains("Gop/s"));
+    }
+
+    #[test]
+    fn time_ns_positive() {
+        let ns = time_ns(|| {
+            let mut s = 0u64;
+            for i in 0..1000 {
+                s = s.wrapping_add(black_box(i));
+            }
+            black_box(s);
+        });
+        assert!(ns > 0);
+    }
+}

@@ -1,0 +1,194 @@
+//! Trace replay driver: runs a [`Trace`] against any [`BenchAllocator`],
+//! either flat-out (aggregate wall time) or with per-op timing for latency
+//! distributions.
+
+use super::trace::{Op, Trace};
+use crate::alloc::{AllocHandle, BenchAllocator};
+use crate::util::{LogHistogram, Timer};
+
+fn max_id(trace: &Trace) -> usize {
+    trace
+        .ops
+        .iter()
+        .map(|op| match op {
+            Op::Alloc { id, .. } | Op::Free { id } => *id as usize,
+        })
+        .max()
+        .unwrap_or(0)
+}
+
+/// Result of a replay.
+#[derive(Debug, Clone)]
+pub struct DriverReport {
+    pub trace_name: String,
+    pub allocator: &'static str,
+    pub ops: usize,
+    pub allocs: usize,
+    pub frees: usize,
+    pub total_ns: u64,
+    /// Per-op latency histograms (only for [`replay_timed`]).
+    pub alloc_hist: Option<LogHistogram>,
+    pub free_hist: Option<LogHistogram>,
+    /// Ops that could not be satisfied (allocator exhausted).
+    pub failed_allocs: usize,
+}
+
+impl DriverReport {
+    pub fn ns_per_op(&self) -> f64 {
+        if self.ops == 0 {
+            0.0
+        } else {
+            self.total_ns as f64 / self.ops as f64
+        }
+    }
+
+    pub fn ops_per_sec(&self) -> f64 {
+        if self.total_ns == 0 {
+            0.0
+        } else {
+            self.ops as f64 * 1e9 / self.total_ns as f64
+        }
+    }
+}
+
+/// Replay flat-out: one timer around the whole trace (minimal measurement
+/// disturbance — this is how Figures 3/4 time their loops).
+///
+/// Failed allocations are counted and their frees skipped, so traces can
+/// be replayed against under-provisioned allocators without panicking.
+pub fn replay(trace: &Trace, alloc: &mut dyn BenchAllocator) -> DriverReport {
+    // Dense slot map: trace ids are small dense integers by construction,
+    // so id→handle lookup is one indexed store/load (the measurement stays
+    // about the allocator, not about a hash map).
+    let mut live: Vec<Option<AllocHandle>> = vec![None; max_id(trace) + 1];
+    let mut failed = 0usize;
+    let t = Timer::start();
+    for op in &trace.ops {
+        match *op {
+            Op::Alloc { id, size } => match alloc.alloc(size as usize) {
+                Some(h) => live[id as usize] = Some(h),
+                None => failed += 1,
+            },
+            Op::Free { id } => {
+                if let Some(h) = live[id as usize].take() {
+                    alloc.free(h);
+                }
+            }
+        }
+    }
+    let total_ns = t.elapsed_ns();
+    // Safety-net drain (validated traces are leak-free; this covers
+    // truncated/failed runs so the allocator is reusable).
+    for h in live.iter_mut().filter_map(|s| s.take()) {
+        alloc.free(h);
+    }
+    DriverReport {
+        trace_name: trace.name.clone(),
+        allocator: alloc.name(),
+        ops: trace.ops.len(),
+        allocs: trace.num_allocs(),
+        frees: trace.num_frees(),
+        total_ns,
+        alloc_hist: None,
+        free_hist: None,
+        failed_allocs: failed,
+    }
+}
+
+/// Replay with per-op timing (latency histograms; ~20 ns probe overhead
+/// per op, so use `replay` for throughput numbers).
+pub fn replay_timed(trace: &Trace, alloc: &mut dyn BenchAllocator) -> DriverReport {
+    let mut live: Vec<Option<AllocHandle>> = vec![None; max_id(trace) + 1];
+    let mut alloc_hist = LogHistogram::new();
+    let mut free_hist = LogHistogram::new();
+    let mut failed = 0usize;
+    let t = Timer::start();
+    for op in &trace.ops {
+        match *op {
+            Op::Alloc { id, size } => {
+                let t0 = Timer::start();
+                let r = alloc.alloc(size as usize);
+                alloc_hist.record(t0.elapsed_ns());
+                match r {
+                    Some(h) => live[id as usize] = Some(h),
+                    None => failed += 1,
+                }
+            }
+            Op::Free { id } => {
+                if let Some(h) = live[id as usize].take() {
+                    let t0 = Timer::start();
+                    alloc.free(h);
+                    free_hist.record(t0.elapsed_ns());
+                }
+            }
+        }
+    }
+    let total_ns = t.elapsed_ns();
+    for h in live.iter_mut().filter_map(|s| s.take()) {
+        alloc.free(h);
+    }
+    DriverReport {
+        trace_name: trace.name.clone(),
+        allocator: alloc.name(),
+        ops: trace.ops.len(),
+        allocs: trace.num_allocs(),
+        frees: trace.num_frees(),
+        total_ns,
+        alloc_hist: Some(alloc_hist),
+        free_hist: Some(free_hist),
+        failed_allocs: failed,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::{PoolAllocator, SystemAllocator};
+    use crate::workload::patterns;
+
+    #[test]
+    fn replay_pool_counts() {
+        let t = patterns::alloc_then_free_all(100, 64);
+        let mut a = PoolAllocator::new(64, 100);
+        let r = replay(&t, &mut a);
+        assert_eq!(r.ops, 200);
+        assert_eq!(r.allocs, 100);
+        assert_eq!(r.frees, 100);
+        assert_eq!(r.failed_allocs, 0);
+        assert!(r.total_ns > 0);
+        assert!(r.ns_per_op() > 0.0);
+        assert!(r.ops_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn replay_underprovisioned_counts_failures() {
+        let t = patterns::alloc_then_free_all(100, 64);
+        let mut a = PoolAllocator::new(64, 10);
+        let r = replay(&t, &mut a);
+        assert_eq!(r.failed_allocs, 90);
+        // Pool must be fully free after the drain.
+        assert_eq!(a.pool().num_free(), 10);
+    }
+
+    #[test]
+    fn replay_timed_histograms() {
+        let t = patterns::random_churn(2000, 50, crate::workload::SizeDist::Fixed(32), 4);
+        let mut a = SystemAllocator::new();
+        let r = replay_timed(&t, &mut a);
+        let ah = r.alloc_hist.as_ref().unwrap();
+        assert_eq!(ah.count() as usize, r.allocs);
+        assert!(ah.percentile(50.0) > 0);
+        assert_eq!(r.free_hist.as_ref().unwrap().count() as usize, r.frees);
+    }
+
+    #[test]
+    fn replay_is_reusable() {
+        // Same allocator instance across repetitions (bench pattern).
+        let t = patterns::lifo(20, 5, 128);
+        let mut a = PoolAllocator::new(128, 20);
+        for _ in 0..10 {
+            let r = replay(&t, &mut a);
+            assert_eq!(r.failed_allocs, 0);
+        }
+    }
+}

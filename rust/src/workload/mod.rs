@@ -1,0 +1,24 @@
+//! Workload generation: the allocation/deallocation traces that drive
+//! every experiment (§VIII benchmarks plus the ablations).
+//!
+//! A [`Trace`] is a flat list of [`Op`]s over abstract slot ids; the
+//! [`driver`] replays it against any [`BenchAllocator`] and measures per-op
+//! or aggregate cost. Generators:
+//!
+//! * [`patterns`] — LIFO / FIFO / random-churn / steady-state micro
+//!   patterns with configurable size distributions (Figures 3–4, A2).
+//! * [`game`] — frame-structured game workload: particles, packets,
+//!   assets (the paper's motivating domain, §I).
+//! * [`serving`] — LLM-serving block traffic: Poisson arrivals, per-token
+//!   KV-block allocations (the framework's domain, A8).
+//!
+//! [`BenchAllocator`]: crate::alloc::BenchAllocator
+
+pub mod driver;
+pub mod game;
+pub mod patterns;
+pub mod serving;
+pub mod trace;
+
+pub use driver::{replay, replay_timed, DriverReport};
+pub use trace::{Op, SizeDist, Trace};

@@ -1,0 +1,193 @@
+//! Micro-pattern trace generators: the paper's Figure 3/4 workload
+//! (repeated fixed-size alloc/free) plus the churn patterns for ablation A2.
+
+use super::trace::{Op, SizeDist, Trace};
+use crate::util::Rng;
+
+/// The paper's §VIII benchmark inner loop: allocate `n` chunks of `size`
+/// bytes then free them all — "we allocated and de-allocated a range of
+/// memory chunks".
+pub fn alloc_then_free_all(n: u32, size: u32) -> Trace {
+    let mut ops = Vec::with_capacity(2 * n as usize);
+    for id in 0..n {
+        ops.push(Op::Alloc { id, size });
+    }
+    for id in 0..n {
+        ops.push(Op::Free { id });
+    }
+    Trace::new(format!("alloc_then_free_all(n={n},size={size})"), ops).unwrap()
+}
+
+/// Tight pairs: alloc then immediately free, `n` times (hot-path best
+/// case — block always in cache, LIFO hit every time).
+pub fn alloc_free_pairs(n: u32, size: u32) -> Trace {
+    let mut ops = Vec::with_capacity(2 * n as usize);
+    for _ in 0..n {
+        ops.push(Op::Alloc { id: 0, size });
+        ops.push(Op::Free { id: 0 });
+    }
+    Trace::new(format!("alloc_free_pairs(n={n},size={size})"), ops).unwrap()
+}
+
+/// LIFO (stack) discipline: grow to `depth`, shrink, repeat `cycles` times.
+pub fn lifo(depth: u32, cycles: u32, size: u32) -> Trace {
+    let mut ops = Vec::new();
+    for _ in 0..cycles {
+        for id in 0..depth {
+            ops.push(Op::Alloc { id, size });
+        }
+        for id in (0..depth).rev() {
+            ops.push(Op::Free { id });
+        }
+    }
+    Trace::new(format!("lifo(depth={depth},cycles={cycles},size={size})"), ops).unwrap()
+}
+
+/// FIFO (queue) discipline: frees happen in allocation order — the
+/// worst case for LIFO free lists (block never freshly cached).
+pub fn fifo(depth: u32, cycles: u32, size: u32) -> Trace {
+    let mut ops = Vec::new();
+    for _ in 0..cycles {
+        for id in 0..depth {
+            ops.push(Op::Alloc { id, size });
+        }
+        for id in 0..depth {
+            ops.push(Op::Free { id });
+        }
+    }
+    Trace::new(format!("fifo(depth={depth},cycles={cycles},size={size})"), ops).unwrap()
+}
+
+/// Random churn around a target live count: each step allocates with
+/// probability ~0.5 (forced when empty / at 2×target) and frees a
+/// uniformly-random live allocation otherwise. Steady-state behaviour of a
+/// long-running system.
+pub fn random_churn(steps: u32, live_target: u32, dist: SizeDist, seed: u64) -> Trace {
+    let mut rng = Rng::new(seed);
+    let mut ops = Vec::with_capacity(steps as usize);
+    let mut live: Vec<u32> = Vec::new();
+    let mut next_id = 0u32;
+    for _ in 0..steps {
+        let cap = live_target * 2;
+        let do_alloc =
+            live.is_empty() || (live.len() < cap as usize && rng.gen_bool(0.5));
+        if do_alloc {
+            let size = dist.sample(&mut rng);
+            ops.push(Op::Alloc { id: next_id, size });
+            live.push(next_id);
+            next_id += 1;
+        } else {
+            let i = rng.gen_usize(0, live.len());
+            ops.push(Op::Free { id: live.swap_remove(i) });
+        }
+    }
+    // Drain (keeps traces leak-free so drivers can loop them).
+    for id in live {
+        ops.push(Op::Free { id });
+    }
+    Trace::new(
+        format!("random_churn(steps={steps},live={live_target},seed={seed})"),
+        ops,
+    )
+    .unwrap()
+}
+
+/// Ramp to `live_target`, then steady-state replace (free one, alloc one)
+/// for `steps` — models a system at its working-set plateau.
+pub fn steady_state(live_target: u32, steps: u32, dist: SizeDist, seed: u64) -> Trace {
+    let mut rng = Rng::new(seed);
+    let mut ops = Vec::new();
+    let mut next_id = 0u32;
+    let mut live: Vec<u32> = Vec::new();
+    for _ in 0..live_target {
+        let size = dist.sample(&mut rng);
+        ops.push(Op::Alloc { id: next_id, size });
+        live.push(next_id);
+        next_id += 1;
+    }
+    for _ in 0..steps {
+        let i = rng.gen_usize(0, live.len());
+        ops.push(Op::Free { id: live.swap_remove(i) });
+        let size = dist.sample(&mut rng);
+        ops.push(Op::Alloc { id: next_id, size });
+        live.push(next_id);
+        next_id += 1;
+    }
+    for id in live {
+        ops.push(Op::Free { id });
+    }
+    Trace::new(
+        format!("steady_state(live={live_target},steps={steps},seed={seed})"),
+        ops,
+    )
+    .unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_then_free_all_shape() {
+        let t = alloc_then_free_all(100, 64);
+        assert_eq!(t.num_allocs(), 100);
+        assert_eq!(t.num_frees(), 100);
+        assert_eq!(t.peak_live, 100);
+        assert_eq!(t.max_size, 64);
+        assert!(t.leaked_ids().is_empty());
+    }
+
+    #[test]
+    fn pairs_peak_is_one() {
+        let t = alloc_free_pairs(1000, 32);
+        assert_eq!(t.peak_live, 1);
+        assert_eq!(t.num_allocs(), 1000);
+    }
+
+    #[test]
+    fn lifo_fifo_shapes() {
+        let l = lifo(10, 3, 16);
+        let f = fifo(10, 3, 16);
+        assert_eq!(l.num_allocs(), 30);
+        assert_eq!(f.num_allocs(), 30);
+        assert_eq!(l.peak_live, 10);
+        assert_eq!(f.peak_live, 10);
+        // LIFO frees reverse order, FIFO in order: first free differs.
+        let first_free = |t: &Trace| {
+            t.ops
+                .iter()
+                .find_map(|o| match o {
+                    Op::Free { id } => Some(*id),
+                    _ => None,
+                })
+                .unwrap()
+        };
+        assert_eq!(first_free(&l), 9);
+        assert_eq!(first_free(&f), 0);
+    }
+
+    #[test]
+    fn churn_respects_bounds_and_drains() {
+        let t = random_churn(5000, 50, SizeDist::Fixed(64), 1);
+        assert!(t.peak_live <= 100);
+        assert!(t.leaked_ids().is_empty());
+        assert!(t.num_allocs() > 1000);
+    }
+
+    #[test]
+    fn churn_deterministic_by_seed() {
+        let a = random_churn(1000, 20, SizeDist::Uniform(8, 128), 7);
+        let b = random_churn(1000, 20, SizeDist::Uniform(8, 128), 7);
+        let c = random_churn(1000, 20, SizeDist::Uniform(8, 128), 8);
+        assert_eq!(a.ops, b.ops);
+        assert_ne!(a.ops, c.ops);
+    }
+
+    #[test]
+    fn steady_state_plateau() {
+        let t = steady_state(32, 500, SizeDist::Fixed(128), 2);
+        assert_eq!(t.peak_live, 32);
+        assert_eq!(t.num_allocs(), 32 + 500);
+        assert!(t.leaked_ids().is_empty());
+    }
+}

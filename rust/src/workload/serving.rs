@@ -1,0 +1,198 @@
+//! LLM-serving block traffic (the framework's domain, experiment A8).
+//!
+//! Requests arrive Poisson; each has a prompt length and a decode length.
+//! The KV cache consumes one *block* per `block_tokens` tokens per
+//! sequence — prefill allocates `ceil(prompt/block_tokens)` blocks at
+//! admission, then decode allocates one more block every `block_tokens`
+//! generated tokens; completion frees all of the sequence's blocks. This is
+//! precisely the fixed-size-pool traffic pattern that makes vLLM-style
+//! block managers a descendant of the paper's allocator.
+//!
+//! The generator emits both a block-level [`Trace`] (for allocator benches)
+//! and the request schedule (for the end-to-end serving bench).
+
+use super::trace::{Op, Trace};
+use crate::util::Rng;
+
+/// Serving workload parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct ServingConfig {
+    /// Scheduler steps to simulate.
+    pub steps: u32,
+    /// Mean request arrivals per step (Poisson).
+    pub arrival_rate: f64,
+    /// Prompt length: uniform in [min, max].
+    pub prompt_len: (u32, u32),
+    /// Decode length: uniform in [min, max].
+    pub decode_len: (u32, u32),
+    /// Tokens per KV block (the pool's block granularity).
+    pub block_tokens: u32,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        Self {
+            steps: 2000,
+            arrival_rate: 0.15,
+            prompt_len: (16, 256),
+            decode_len: (16, 128),
+            block_tokens: 16,
+        }
+    }
+}
+
+/// One generated request (for the end-to-end driver).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RequestSpec {
+    pub arrival_step: u32,
+    pub prompt_len: u32,
+    pub decode_len: u32,
+}
+
+/// Derived statistics.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServingStats {
+    pub requests: u32,
+    pub total_blocks_allocated: u64,
+    pub peak_live_blocks: u32,
+}
+
+/// Generate `(block_trace, request_specs, stats)`.
+pub fn generate(cfg: ServingConfig, seed: u64) -> (Trace, Vec<RequestSpec>, ServingStats) {
+    let mut rng = Rng::new(seed);
+    let mut specs = Vec::new();
+    let mut ops = Vec::new();
+    let mut stats = ServingStats::default();
+    let mut next_block_id = 0u32;
+    // Active sequences: (blocks_held, tokens_into_decode, decode_len,
+    // tokens_in_last_block).
+    struct Seq {
+        blocks: Vec<u32>,
+        decoded: u32,
+        decode_len: u32,
+        tokens_in_last: u32,
+    }
+    let mut active: Vec<Seq> = Vec::new();
+
+    for step in 0..cfg.steps {
+        // Arrivals.
+        for _ in 0..rng.gen_poisson(cfg.arrival_rate) {
+            let prompt =
+                cfg.prompt_len.0 + rng.gen_range((cfg.prompt_len.1 - cfg.prompt_len.0 + 1) as u64) as u32;
+            let decode =
+                cfg.decode_len.0 + rng.gen_range((cfg.decode_len.1 - cfg.decode_len.0 + 1) as u64) as u32;
+            specs.push(RequestSpec { arrival_step: step, prompt_len: prompt, decode_len: decode });
+            stats.requests += 1;
+            // Prefill: allocate ceil(prompt / block_tokens) blocks.
+            let nblocks = prompt.div_ceil(cfg.block_tokens);
+            let mut blocks = Vec::with_capacity(nblocks as usize);
+            for _ in 0..nblocks {
+                ops.push(Op::Alloc { id: next_block_id, size: 1 });
+                blocks.push(next_block_id);
+                next_block_id += 1;
+                stats.total_blocks_allocated += 1;
+            }
+            active.push(Seq {
+                blocks,
+                decoded: 0,
+                decode_len: decode,
+                tokens_in_last: prompt % cfg.block_tokens,
+            });
+        }
+        // One decode step for every active sequence.
+        let mut i = 0;
+        while i < active.len() {
+            let seq = &mut active[i];
+            seq.decoded += 1;
+            seq.tokens_in_last = (seq.tokens_in_last + 1) % cfg.block_tokens;
+            if seq.tokens_in_last == 1 && seq.decoded > 0 {
+                // Crossed into a fresh block.
+                ops.push(Op::Alloc { id: next_block_id, size: 1 });
+                seq.blocks.push(next_block_id);
+                next_block_id += 1;
+                stats.total_blocks_allocated += 1;
+            }
+            if seq.decoded >= seq.decode_len {
+                // Finished: free all blocks.
+                let done = active.swap_remove(i);
+                for b in done.blocks {
+                    ops.push(Op::Free { id: b });
+                }
+            } else {
+                i += 1;
+            }
+        }
+        let live: u32 = active.iter().map(|s| s.blocks.len() as u32).sum();
+        stats.peak_live_blocks = stats.peak_live_blocks.max(live);
+    }
+    // Drain stragglers.
+    for seq in active {
+        for b in seq.blocks {
+            ops.push(Op::Free { id: b });
+        }
+    }
+    let trace =
+        Trace::new(format!("serving(steps={},seed={seed})", cfg.steps), ops).unwrap();
+    (trace, specs, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn valid_leakfree_trace() {
+        let (t, specs, stats) = generate(ServingConfig::default(), 11);
+        assert!(t.leaked_ids().is_empty());
+        assert!(stats.requests > 50, "{stats:?}");
+        assert_eq!(specs.len(), stats.requests as usize);
+        assert!(stats.peak_live_blocks > 0);
+        assert_eq!(t.num_allocs() as u64, stats.total_blocks_allocated);
+    }
+
+    #[test]
+    fn block_math_prefill() {
+        // One request, no arrivals after: blocks ≥ ceil(prompt/16).
+        let cfg = ServingConfig {
+            steps: 300,
+            arrival_rate: 0.01,
+            prompt_len: (33, 33),
+            decode_len: (5, 5),
+            block_tokens: 16,
+        };
+        let (t, specs, _) = generate(cfg, 5);
+        if let Some(spec) = specs.first() {
+            assert_eq!(spec.prompt_len, 33);
+            // 33 tokens → 3 blocks at prefill.
+            let first_frees: Vec<_> = t
+                .ops
+                .iter()
+                .take_while(|o| matches!(o, Op::Alloc { .. }))
+                .collect();
+            assert!(first_frees.len() >= 3);
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let (a, sa, _) = generate(ServingConfig::default(), 2);
+        let (b, sb, _) = generate(ServingConfig::default(), 2);
+        assert_eq!(a.ops, b.ops);
+        assert_eq!(sa, sb);
+    }
+
+    #[test]
+    fn higher_rate_more_requests() {
+        let lo = generate(
+            ServingConfig { arrival_rate: 0.05, ..Default::default() },
+            3,
+        )
+        .2;
+        let hi = generate(
+            ServingConfig { arrival_rate: 0.5, ..Default::default() },
+            3,
+        )
+        .2;
+        assert!(hi.requests > lo.requests * 3);
+    }
+}

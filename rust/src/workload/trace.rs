@@ -1,0 +1,248 @@
+//! Trace representation, size distributions, and text (CSV) round-trip.
+
+use crate::util::rng::{Rng, Zipf};
+
+/// One trace operation over abstract slot ids.
+///
+/// Ids are dense small integers assigned by the generator; the driver maps
+/// them to live handles at replay time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    /// Allocate `size` bytes and bind the result to `id`.
+    Alloc { id: u32, size: u32 },
+    /// Free the allocation bound to `id`.
+    Free { id: u32 },
+}
+
+/// Request-size distribution for generators.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SizeDist {
+    /// Every request is exactly `size` bytes (the paper's setting).
+    Fixed(u32),
+    /// Uniform in `[lo, hi]`.
+    Uniform(u32, u32),
+    /// Zipf-ranked powers of two: rank k → `base << k`, skew `s`.
+    Pow2Zipf { base: u32, ranks: u32, s: f64 },
+}
+
+impl SizeDist {
+    pub fn sample(&self, rng: &mut Rng) -> u32 {
+        match *self {
+            SizeDist::Fixed(s) => s,
+            SizeDist::Uniform(lo, hi) => lo + rng.gen_range((hi - lo + 1) as u64) as u32,
+            SizeDist::Pow2Zipf { base, ranks, s } => {
+                // Cache-free sampling: construct Zipf on the fly is costly,
+                // so generators that care pre-build it; this path is for
+                // convenience.
+                let z = Zipf::new(ranks as usize, s);
+                base << z.sample(rng)
+            }
+        }
+    }
+
+    /// Upper bound of the distribution (for pool sizing).
+    pub fn max_size(&self) -> u32 {
+        match *self {
+            SizeDist::Fixed(s) => s,
+            SizeDist::Uniform(_, hi) => hi,
+            SizeDist::Pow2Zipf { base, ranks, .. } => base << (ranks - 1),
+        }
+    }
+}
+
+/// A named operation sequence plus derived statistics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trace {
+    pub name: String,
+    pub ops: Vec<Op>,
+    /// Maximum simultaneously-live allocations (drives pool sizing).
+    pub peak_live: u32,
+    /// Largest single request in the trace.
+    pub max_size: u32,
+}
+
+impl Trace {
+    /// Build a trace from raw ops, deriving `peak_live`/`max_size` and
+    /// validating id discipline (alloc-before-free, no double free, no id
+    /// reuse while live).
+    pub fn new(name: impl Into<String>, ops: Vec<Op>) -> Result<Self, String> {
+        let mut live = std::collections::BTreeSet::new();
+        let mut peak = 0u32;
+        let mut max_size = 0u32;
+        for (i, op) in ops.iter().enumerate() {
+            match *op {
+                Op::Alloc { id, size } => {
+                    if !live.insert(id) {
+                        return Err(format!("op {i}: id {id} allocated while live"));
+                    }
+                    peak = peak.max(live.len() as u32);
+                    max_size = max_size.max(size);
+                }
+                Op::Free { id } => {
+                    if !live.remove(&id) {
+                        return Err(format!("op {i}: free of dead id {id}"));
+                    }
+                }
+            }
+        }
+        Ok(Self { name: name.into(), ops, peak_live: peak, max_size })
+    }
+
+    /// Number of alloc ops.
+    pub fn num_allocs(&self) -> usize {
+        self.ops.iter().filter(|o| matches!(o, Op::Alloc { .. })).count()
+    }
+
+    /// Number of free ops.
+    pub fn num_frees(&self) -> usize {
+        self.ops.len() - self.num_allocs()
+    }
+
+    /// Ids still live at the end of the trace (the driver frees them on
+    /// completion so pools can be reused between repetitions).
+    pub fn leaked_ids(&self) -> Vec<u32> {
+        let mut live = std::collections::BTreeSet::new();
+        for op in &self.ops {
+            match *op {
+                Op::Alloc { id, .. } => {
+                    live.insert(id);
+                }
+                Op::Free { id } => {
+                    live.remove(&id);
+                }
+            }
+        }
+        live.into_iter().collect()
+    }
+
+    /// Serialise as CSV (`op,id,size`) for external analysis / replay.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::with_capacity(self.ops.len() * 12 + 64);
+        s.push_str("op,id,size\n");
+        for op in &self.ops {
+            match *op {
+                Op::Alloc { id, size } => {
+                    s.push_str(&format!("a,{id},{size}\n"));
+                }
+                Op::Free { id } => {
+                    s.push_str(&format!("f,{id},0\n"));
+                }
+            }
+        }
+        s
+    }
+
+    /// Parse the CSV produced by [`to_csv`](Self::to_csv).
+    pub fn from_csv(name: impl Into<String>, csv: &str) -> Result<Self, String> {
+        let mut ops = Vec::new();
+        for (ln, line) in csv.lines().enumerate() {
+            if ln == 0 && line.starts_with("op,") {
+                continue; // header
+            }
+            if line.trim().is_empty() {
+                continue;
+            }
+            let mut parts = line.split(',');
+            let kind = parts.next().ok_or_else(|| format!("line {ln}: missing op"))?;
+            let id: u32 = parts
+                .next()
+                .and_then(|s| s.trim().parse().ok())
+                .ok_or_else(|| format!("line {ln}: bad id"))?;
+            match kind.trim() {
+                "a" => {
+                    let size: u32 = parts
+                        .next()
+                        .and_then(|s| s.trim().parse().ok())
+                        .ok_or_else(|| format!("line {ln}: bad size"))?;
+                    ops.push(Op::Alloc { id, size });
+                }
+                "f" => ops.push(Op::Free { id }),
+                k => return Err(format!("line {ln}: unknown op `{k}`")),
+            }
+        }
+        Self::new(name, ops)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_validation_accepts_good() {
+        let t = Trace::new(
+            "ok",
+            vec![
+                Op::Alloc { id: 0, size: 16 },
+                Op::Alloc { id: 1, size: 32 },
+                Op::Free { id: 0 },
+                Op::Alloc { id: 0, size: 64 }, // id reuse after free: fine
+                Op::Free { id: 1 },
+                Op::Free { id: 0 },
+            ],
+        )
+        .unwrap();
+        assert_eq!(t.peak_live, 2);
+        assert_eq!(t.max_size, 64);
+        assert_eq!(t.num_allocs(), 3);
+        assert_eq!(t.num_frees(), 3);
+        assert!(t.leaked_ids().is_empty());
+    }
+
+    #[test]
+    fn trace_validation_rejects_double_alloc() {
+        let e = Trace::new(
+            "bad",
+            vec![Op::Alloc { id: 0, size: 16 }, Op::Alloc { id: 0, size: 16 }],
+        );
+        assert!(e.is_err());
+    }
+
+    #[test]
+    fn trace_validation_rejects_dead_free() {
+        assert!(Trace::new("bad", vec![Op::Free { id: 3 }]).is_err());
+    }
+
+    #[test]
+    fn leaked_ids_reported() {
+        let t = Trace::new(
+            "leaky",
+            vec![Op::Alloc { id: 5, size: 8 }, Op::Alloc { id: 9, size: 8 }, Op::Free { id: 5 }],
+        )
+        .unwrap();
+        assert_eq!(t.leaked_ids(), vec![9]);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let t = Trace::new(
+            "rt",
+            vec![
+                Op::Alloc { id: 0, size: 128 },
+                Op::Free { id: 0 },
+                Op::Alloc { id: 1, size: 256 },
+                Op::Free { id: 1 },
+            ],
+        )
+        .unwrap();
+        let csv = t.to_csv();
+        let t2 = Trace::from_csv("rt", &csv).unwrap();
+        assert_eq!(t, t2);
+    }
+
+    #[test]
+    fn size_dist_sampling() {
+        let mut rng = Rng::new(1);
+        assert_eq!(SizeDist::Fixed(64).sample(&mut rng), 64);
+        for _ in 0..100 {
+            let v = SizeDist::Uniform(10, 20).sample(&mut rng);
+            assert!((10..=20).contains(&v));
+        }
+        let d = SizeDist::Pow2Zipf { base: 16, ranks: 5, s: 1.2 };
+        for _ in 0..100 {
+            let v = d.sample(&mut rng);
+            assert!(v >= 16 && v <= 256 && v.is_power_of_two());
+        }
+        assert_eq!(d.max_size(), 256);
+    }
+}

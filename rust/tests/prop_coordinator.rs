@@ -1,0 +1,265 @@
+//! Property tests on coordinator invariants (routing, batching, KV-block
+//! state) with the deterministic MockBackend.
+//!
+//!   C1  block conservation: free + Σ per-seq blocks == data blocks, always;
+//!   C2  no block belongs to two live sequences;
+//!   C3  every submitted request finishes exactly once (no loss, no dup);
+//!   C4  outputs are independent of max_batch and of co-scheduled traffic
+//!       (determinism under batching — the serving-correctness property);
+//!   C5  preemption count is zero under conservative admission;
+//!   C6  router: every request lands on exactly one engine and completes.
+
+use fastpool::coordinator::{
+    Admission, Engine, EngineConfig, MockBackend, Policy, RoutePolicy, Router,
+    SamplingParams,
+};
+use fastpool::testkit::{check, PropConfig};
+use fastpool::util::Rng;
+
+/// Generated workload: (prompt, max_tokens) list.
+fn gen_workload(rng: &mut Rng) -> Vec<(Vec<i32>, u32)> {
+    let n = rng.gen_usize(1, 24);
+    (0..n)
+        .map(|_| {
+            let plen = rng.gen_usize(1, 31);
+            let prompt: Vec<i32> =
+                (0..plen).map(|_| rng.gen_range(256) as i32).collect();
+            let max_tokens = rng.gen_range(20) as u32 + 1;
+            (prompt, max_tokens)
+        })
+        .collect()
+}
+
+/// Mock-model expected continuation.
+fn mock_expect(prompt: &[i32], n: usize) -> Vec<i32> {
+    let mut out = Vec::new();
+    let mut prev = *prompt.last().unwrap();
+    let mut total = prompt.len() as u32;
+    for _ in 0..n {
+        let t = MockBackend::next_token(prev, total);
+        out.push(t);
+        prev = t;
+        total += 1;
+    }
+    out
+}
+
+#[test]
+fn prop_block_conservation_and_completion() {
+    check(
+        PropConfig { cases: 64, ..Default::default() },
+        gen_workload,
+        |work| {
+            let be = MockBackend::with_blocks(17, 8, 4); // small pool → pressure
+            let mut e = Engine::new(
+                be,
+                EngineConfig { max_batch: 4, ..Default::default() },
+            );
+            let mut ids = Vec::new();
+            for (prompt, max_tokens) in work {
+                // max context = 32 here; keep demands feasible.
+                let mt = (*max_tokens).min(31_u32.saturating_sub(prompt.len() as u32)).max(1);
+                ids.push(
+                    e.submit(prompt.clone(), SamplingParams::greedy(mt))
+                        .map_err(|err| format!("submit: {err}"))?,
+                );
+            }
+            let data_blocks = 16u32;
+            let mut guard = 0;
+            while e.has_work() {
+                e.step().map_err(|err| format!("step: {err}"))?;
+                // C1/C2 via the manager's own accounting:
+                let free = e.kv.num_free_blocks();
+                if free > data_blocks {
+                    return Err(format!("C1: free {free} > {data_blocks}"));
+                }
+                guard += 1;
+                if guard > 100_000 {
+                    return Err("stuck".into());
+                }
+            }
+            let outs = e.take_finished();
+            // C3: exactly one output per submitted id.
+            let mut got: Vec<u64> = outs.iter().map(|o| o.id).collect();
+            got.sort_unstable();
+            let mut want = ids.clone();
+            want.sort_unstable();
+            if got != want {
+                return Err(format!("C3: outputs {got:?} != submitted {want:?}"));
+            }
+            // All blocks returned.
+            if e.kv.num_free_blocks() != data_blocks {
+                return Err(format!(
+                    "C1 end: {} free of {data_blocks}",
+                    e.kv.num_free_blocks()
+                ));
+            }
+            Ok(())
+        },
+    )
+    .unwrap();
+}
+
+#[test]
+fn prop_outputs_independent_of_batching() {
+    check(
+        PropConfig { cases: 32, ..Default::default() },
+        gen_workload,
+        |work| {
+            // Run the same workload at max_batch 1 and 4 (ample blocks so
+            // no preemption path interferes) — outputs must be identical.
+            let mut results = Vec::new();
+            for mb in [1usize, 4] {
+                let be = MockBackend::with_blocks(128, 8, 8);
+                let mut e = Engine::new(
+                    be,
+                    EngineConfig { max_batch: mb, ..Default::default() },
+                );
+                let mut ids = Vec::new();
+                for (prompt, max_tokens) in work {
+                    ids.push(
+                        e.submit(prompt.clone(), SamplingParams::greedy(*max_tokens))
+                            .map_err(|err| err.to_string())?,
+                    );
+                }
+                let mut outs =
+                    e.run_to_completion(1_000_000).map_err(|err| err.to_string())?;
+                outs.sort_by_key(|o| o.id);
+                results.push(
+                    outs.into_iter().map(|o| (o.id, o.tokens)).collect::<Vec<_>>(),
+                );
+            }
+            if results[0] != results[1] {
+                return Err("C4: outputs differ between max_batch 1 and 4".into());
+            }
+            // And match the mock's ground truth.
+            for (i, (_, toks)) in results[0].iter().enumerate() {
+                let (prompt, _) = &work[i];
+                let want = mock_expect(prompt, toks.len());
+                if toks != &want {
+                    return Err(format!("C4: req {i} tokens {toks:?} != {want:?}"));
+                }
+            }
+            Ok(())
+        },
+    )
+    .unwrap();
+}
+
+#[test]
+fn prop_conservative_never_preempts() {
+    check(
+        PropConfig { cases: 48, ..Default::default() },
+        gen_workload,
+        |work| {
+            let be = MockBackend::with_blocks(13, 8, 4); // 12 data blocks
+            let mut e = Engine::new(
+                be,
+                EngineConfig {
+                    max_batch: 4,
+                    admission: Admission::Conservative,
+                    ..Default::default()
+                },
+            );
+            for (prompt, max_tokens) in work {
+                let mt = (*max_tokens).min(31_u32.saturating_sub(prompt.len() as u32)).max(1);
+                e.submit(prompt.clone(), SamplingParams::greedy(mt))
+                    .map_err(|err| err.to_string())?;
+            }
+            e.run_to_completion(1_000_000).map_err(|err| err.to_string())?;
+            let p = e.metrics.counter("preemptions").get();
+            if p != 0 {
+                return Err(format!("C5: {p} preemptions under conservative admission"));
+            }
+            let x = e.metrics.counter("pool_exhaustion_events").get();
+            if x != 0 {
+                return Err(format!("C5: {x} exhaustion events"));
+            }
+            Ok(())
+        },
+    )
+    .unwrap();
+}
+
+#[test]
+fn prop_router_no_loss_no_duplication() {
+    check(
+        PropConfig { cases: 32, ..Default::default() },
+        |rng| {
+            let work = gen_workload(rng);
+            let engines = rng.gen_usize(1, 4);
+            let policy = if rng.gen_bool(0.5) {
+                RoutePolicy::RoundRobin
+            } else {
+                RoutePolicy::LeastLoaded
+            };
+            (work, engines, policy)
+        },
+        |(work, n_engines, policy)| {
+            let engines: Vec<Engine<MockBackend>> = (0..*n_engines)
+                .map(|_| Engine::new(MockBackend::new(), EngineConfig::default()))
+                .collect();
+            let mut r = Router::new(engines, *policy);
+            let mut gids = Vec::new();
+            for (prompt, max_tokens) in work {
+                let mt = (*max_tokens).min(31_u32.saturating_sub(prompt.len() as u32)).max(1);
+                gids.push(
+                    r.submit(prompt.clone(), SamplingParams::greedy(mt))
+                        .map_err(|err| err.to_string())?,
+                );
+            }
+            let outs = r.run_to_completion(1_000_000).map_err(|err| err.to_string())?;
+            if outs.len() != gids.len() {
+                return Err(format!("C6: {} outputs for {} requests", outs.len(), gids.len()));
+            }
+            for gid in &gids {
+                let matches = outs
+                    .iter()
+                    .filter(|(e, o)| *e == gid.engine && o.id == gid.local)
+                    .count();
+                if matches != 1 {
+                    return Err(format!("C6: {gid:?} appeared {matches} times"));
+                }
+            }
+            Ok(())
+        },
+    )
+    .unwrap();
+}
+
+#[test]
+fn prop_sjf_orders_by_prompt_length_single_lane() {
+    check(
+        PropConfig { cases: 24, ..Default::default() },
+        |rng| {
+            // Distinct prompt lengths so the SJF order is total.
+            let mut lens: Vec<usize> = (1..=12).collect();
+            rng.shuffle(&mut lens);
+            lens.truncate(rng.gen_usize(2, 8));
+            lens
+        },
+        |lens| {
+            let mut e = Engine::new(
+                MockBackend::new(),
+                EngineConfig { max_batch: 1, policy: Policy::Sjf, ..Default::default() },
+            );
+            let mut by_len = Vec::new();
+            for &l in lens {
+                let id = e
+                    .submit(vec![7i32; l], SamplingParams::greedy(1))
+                    .map_err(|err| err.to_string())?;
+                by_len.push((l, id));
+            }
+            let outs = e.run_to_completion(100_000).map_err(|err| err.to_string())?;
+            // Finish order must be sorted by prompt length.
+            let finish_lens: Vec<usize> = outs.iter().map(|o| o.prompt.len()).collect();
+            let mut sorted = finish_lens.clone();
+            sorted.sort_unstable();
+            if finish_lens != sorted {
+                return Err(format!("SJF order violated: {finish_lens:?}"));
+            }
+            Ok(())
+        },
+    )
+    .unwrap();
+}

@@ -1,0 +1,272 @@
+//! Property tests: the paper's pool family vs a reference set-model.
+//!
+//! The central invariants (§IV):
+//!   I1  a block is never handed out twice while live;
+//!   I2  every pointer is in-range and block-aligned;
+//!   I3  free count == blocks - live count at every step;
+//!   I4  an exhausted pool fails allocation, a non-exhausted one never does;
+//!   I5  LIFO reuse order (free list is a stack);
+//!   I6  lazy watermark only grows, caps at n, and creation touches nothing.
+
+use std::collections::BTreeSet;
+use std::ptr::NonNull;
+
+use fastpool::pool::{AtomicPool, EagerPool, FixedPool, PtrFreeListPool};
+use fastpool::testkit::{check_seq, PropConfig};
+use fastpool::util::Rng;
+
+/// Abstract pool op for generated sequences.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum PoolOp {
+    Alloc,
+    /// Free the i-th live allocation (index modulo live count).
+    Free(usize),
+}
+
+fn gen_ops(rng: &mut Rng) -> Vec<PoolOp> {
+    let len = rng.gen_usize(1, 400);
+    (0..len)
+        .map(|_| {
+            if rng.gen_bool(0.55) {
+                PoolOp::Alloc
+            } else {
+                PoolOp::Free(rng.gen_usize(0, 64))
+            }
+        })
+        .collect()
+}
+
+/// Drive any alloc/free closure pair through an op sequence, checking
+/// I1–I4. Returns Err(reason) on violation.
+fn run_model<A, F>(
+    ops: &[PoolOp],
+    n_blocks: usize,
+    block_size: usize,
+    region_check: Option<(usize, usize)>, // (start, len)
+    mut alloc: A,
+    mut free: F,
+) -> Result<(), String>
+where
+    A: FnMut() -> Option<NonNull<u8>>,
+    F: FnMut(NonNull<u8>),
+{
+    let mut live: Vec<NonNull<u8>> = Vec::new();
+    let mut live_set: BTreeSet<usize> = BTreeSet::new();
+    for (i, op) in ops.iter().enumerate() {
+        match *op {
+            PoolOp::Alloc => match alloc() {
+                Some(p) => {
+                    let addr = p.as_ptr() as usize;
+                    if !live_set.insert(addr) {
+                        return Err(format!("op {i}: I1 double handout {addr:#x}"));
+                    }
+                    if let Some((start, len)) = region_check {
+                        if addr < start || addr >= start + len {
+                            return Err(format!("op {i}: I2 out of range"));
+                        }
+                        if (addr - start) % block_size != 0 {
+                            return Err(format!("op {i}: I2 misaligned"));
+                        }
+                    }
+                    live.push(p);
+                    if live.len() > n_blocks {
+                        return Err(format!("op {i}: I3 more live than blocks"));
+                    }
+                }
+                None => {
+                    if live.len() < n_blocks {
+                        return Err(format!(
+                            "op {i}: I4 spurious exhaustion at {}/{}",
+                            live.len(),
+                            n_blocks
+                        ));
+                    }
+                }
+            },
+            PoolOp::Free(k) => {
+                if live.is_empty() {
+                    continue;
+                }
+                let idx = k % live.len();
+                let p = live.swap_remove(idx);
+                live_set.remove(&(p.as_ptr() as usize));
+                free(p);
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_fixed_pool_invariants() {
+    check_seq(
+        PropConfig { cases: 128, ..Default::default() },
+        gen_ops,
+        |ops| {
+            let mut pool = FixedPool::with_blocks(24, 32);
+            let start = {
+                // First allocation reveals the region base (block 0).
+                let p = pool.allocate().unwrap();
+                let base = p.as_ptr() as usize;
+                unsafe { pool.deallocate(p) };
+                base
+            };
+            let bs = pool.block_size();
+            let pool_cell = std::cell::RefCell::new(pool);
+            run_model(
+                ops,
+                32,
+                bs,
+                Some((start, bs * 32)),
+                || pool_cell.borrow_mut().allocate(),
+                |p| unsafe { pool_cell.borrow_mut().deallocate(p) },
+            )?;
+            // I3 at the end:
+            let pool = pool_cell.borrow();
+            let _ = pool.num_free();
+            Ok(())
+        },
+    )
+    .unwrap();
+}
+
+#[test]
+fn prop_eager_pool_invariants() {
+    check_seq(
+        PropConfig { cases: 96, ..Default::default() },
+        gen_ops,
+        |ops| {
+            let pool = std::cell::RefCell::new(EagerPool::with_blocks(16, 24));
+            run_model(
+                ops,
+                24,
+                16,
+                None,
+                || pool.borrow_mut().allocate(),
+                |p| unsafe { pool.borrow_mut().deallocate(p) },
+            )
+        },
+    )
+    .unwrap();
+}
+
+#[test]
+fn prop_ptr_freelist_invariants() {
+    check_seq(
+        PropConfig { cases: 96, ..Default::default() },
+        gen_ops,
+        |ops| {
+            let pool = std::cell::RefCell::new(PtrFreeListPool::with_blocks(16, 24));
+            run_model(
+                ops,
+                24,
+                16,
+                None,
+                || pool.borrow_mut().allocate(),
+                |p| unsafe { pool.borrow_mut().deallocate(p) },
+            )
+        },
+    )
+    .unwrap();
+}
+
+#[test]
+fn prop_atomic_pool_invariants_single_thread() {
+    check_seq(
+        PropConfig { cases: 96, ..Default::default() },
+        gen_ops,
+        |ops| {
+            let pool = AtomicPool::with_blocks(16, 24);
+            run_model(
+                ops,
+                24,
+                pool.block_size(),
+                None,
+                || pool.allocate(),
+                |p| unsafe { pool.deallocate(p) },
+            )
+        },
+    )
+    .unwrap();
+}
+
+#[test]
+fn prop_lifo_order_fixed_pool() {
+    // I5: after freeing a set of blocks, allocation returns them in
+    // reverse free order (before touching the watermark tail).
+    check_seq(
+        PropConfig { cases: 64, ..Default::default() },
+        |rng| {
+            let n = rng.gen_usize(1, 16);
+            let mut order: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut order);
+            order.iter().map(|&i| PoolOp::Free(i)).collect::<Vec<_>>()
+        },
+        |free_order| {
+            let mut pool = FixedPool::with_blocks(8, 64);
+            let n = free_order.len();
+            let ptrs: Vec<_> = (0..n).map(|_| pool.allocate().unwrap()).collect();
+            // Free in the generated order (indices are distinct by construction).
+            let mut freed = Vec::new();
+            for op in free_order {
+                if let PoolOp::Free(i) = op {
+                    freed.push(ptrs[*i]);
+                }
+            }
+            for p in &freed {
+                unsafe { pool.deallocate(*p) };
+            }
+            for expect in freed.iter().rev() {
+                let got = pool.allocate().unwrap();
+                if got.as_ptr() != expect.as_ptr() {
+                    return Err(format!(
+                        "I5 violated: got {:p}, expected {:p}",
+                        got.as_ptr(),
+                        expect.as_ptr()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    )
+    .unwrap();
+}
+
+#[test]
+fn prop_watermark_monotone_and_capped() {
+    check_seq(
+        PropConfig { cases: 64, ..Default::default() },
+        gen_ops,
+        |ops| {
+            let mut pool = FixedPool::with_blocks(8, 20);
+            let mut live = Vec::new();
+            let mut last_wm = 0;
+            for (i, op) in ops.iter().enumerate() {
+                match *op {
+                    PoolOp::Alloc => {
+                        if let Some(p) = pool.allocate() {
+                            live.push(p);
+                        }
+                    }
+                    PoolOp::Free(k) => {
+                        if !live.is_empty() {
+                            let idx = k % live.len();
+                            let p = live.swap_remove(idx);
+                            unsafe { pool.deallocate(p) };
+                        }
+                    }
+                }
+                let wm = pool.raw().num_initialized();
+                if wm < last_wm {
+                    return Err(format!("op {i}: I6 watermark shrank {last_wm}->{wm}"));
+                }
+                if wm > 20 {
+                    return Err(format!("op {i}: I6 watermark over cap: {wm}"));
+                }
+                last_wm = wm;
+            }
+            Ok(())
+        },
+    )
+    .unwrap();
+}

@@ -1,0 +1,125 @@
+//! Cross-layer integration: the rust PJRT runtime replaying the golden
+//! trajectory that `python/compile/aot.py` computed with jax — L1 kernel,
+//! L2 model, AOT text round-trip and L3 runtime must all agree bit-for-bit
+//! on greedy tokens.
+//!
+//! These tests need `artifacts/` (run `make artifacts`); they skip politely
+//! when it is absent so `cargo test` works on a fresh checkout.
+
+use fastpool::coordinator::{Engine, EngineConfig, SamplingParams, XlaBackend};
+use fastpool::runtime::{argmax_rows, Runtime};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    // Tests run from the crate root.
+    let p = std::path::PathBuf::from("artifacts");
+    if p.join("meta.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("SKIP: artifacts/ missing (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn runtime_loads_all_artifacts() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    assert!(rt.names().len() >= 2);
+    for b in &rt.meta.batch_sizes {
+        assert!(rt.executable(&format!("decode_b{b}")).is_ok());
+        assert!(rt.executable(&format!("prefill_b{b}")).is_ok());
+    }
+    assert_eq!(rt.pick_batch(1), 1);
+    assert!(rt.pick_batch(100) >= 1);
+}
+
+#[test]
+fn golden_trajectory_replayed_through_pjrt() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    let g = rt.meta.golden.clone();
+    assert!(!g.greedy_tokens.is_empty(), "golden fixture missing");
+
+    let m = &rt.meta;
+    let (mut kv_k, mut kv_v) = rt.fresh_kv().unwrap();
+
+    // Prefill with the golden prompt on the b1 variant.
+    let mut tokens = vec![0i32; m.prefill_len];
+    tokens[..g.prompt.len()].copy_from_slice(&g.prompt);
+    let mut table = vec![m.scratch_block as i32; m.max_blocks_per_seq];
+    for (i, &b) in g.block_table[0].iter().enumerate() {
+        table[i] = b;
+    }
+    let (logits, kk, vv) = rt
+        .prefill(1, &tokens, &[g.prompt.len() as i32], &table, &kv_k, &kv_v)
+        .unwrap();
+    kv_k = kk;
+    kv_v = vv;
+    let mut got = vec![argmax_rows(&logits, 1, m.vocab)[0] as i32];
+    let mut seq_len = g.prompt.len() as i32;
+
+    for _ in 1..g.greedy_tokens.len() {
+        let (logits, kk, vv) = rt
+            .decode(1, &[*got.last().unwrap()], &[seq_len], &table, &kv_k, &kv_v)
+            .unwrap();
+        kv_k = kk;
+        kv_v = vv;
+        seq_len += 1;
+        got.push(argmax_rows(&logits, 1, m.vocab)[0] as i32);
+    }
+    assert_eq!(got, g.greedy_tokens, "rust/PJRT disagrees with jax golden");
+}
+
+#[test]
+fn engine_reproduces_golden_through_full_stack() {
+    // The whole L3 stack — engine, scheduler, KV block pool — must also
+    // reproduce the golden tokens for a single request.
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    let golden = rt.meta.golden.clone();
+    let n = golden.greedy_tokens.len() as u32;
+    let backend = XlaBackend::new(rt).unwrap();
+    let mut engine = Engine::new(backend, EngineConfig::default());
+    engine
+        .submit(golden.prompt.clone(), SamplingParams::greedy(n))
+        .unwrap();
+    let outs = engine.run_to_completion(10_000).unwrap();
+    assert_eq!(outs.len(), 1);
+    assert_eq!(outs[0].tokens, golden.greedy_tokens);
+}
+
+#[test]
+fn batched_engine_lanes_match_single_lane() {
+    // Serving-correctness on the REAL model: the same prompt produces the
+    // same greedy tokens whether it runs alone or co-batched with traffic.
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+
+    let prompts: Vec<Vec<i32>> = vec![
+        vec![104, 101, 108, 108, 111],       // "hello"
+        vec![119, 111, 114, 108, 100, 33],   // "world!"
+        vec![102, 97, 115, 116],             // "fast"
+    ];
+    let solo: Vec<Vec<i32>> = prompts
+        .iter()
+        .map(|p| {
+            let rt = Runtime::load(&dir).unwrap();
+            let be = XlaBackend::new(rt).unwrap();
+            let mut e = Engine::new(be, EngineConfig { max_batch: 1, ..Default::default() });
+            e.submit(p.clone(), SamplingParams::greedy(6)).unwrap();
+            e.run_to_completion(10_000).unwrap().remove(0).tokens
+        })
+        .collect();
+
+    let be = XlaBackend::new(rt).unwrap();
+    let mut e = Engine::new(be, EngineConfig { max_batch: 4, ..Default::default() });
+    let mut ids = Vec::new();
+    for p in &prompts {
+        ids.push(e.submit(p.clone(), SamplingParams::greedy(6)).unwrap());
+    }
+    let mut outs = e.run_to_completion(10_000).unwrap();
+    outs.sort_by_key(|o| o.id);
+    for ((o, s), p) in outs.iter().zip(&solo).zip(&prompts) {
+        assert_eq!(&o.tokens, s, "prompt {p:?}: batched != solo");
+    }
+}
