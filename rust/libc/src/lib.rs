@@ -1,0 +1,36 @@
+//! Offline stand-in for the `libc` crate.
+//!
+//! The build environment has no crates.io access, and the only thing the
+//! benchmarks and baseline allocators need from libc is raw
+//! `malloc`/`free` (the paper's §VIII baseline calls them directly rather
+//! than going through `std::alloc`). These bindings link against the C
+//! library the program is linked with anyway; the module keeps the
+//! `libc::malloc` spelling used throughout the crate so swapping in the
+//! real `libc` crate later is a one-line Cargo.toml change.
+
+#![allow(non_camel_case_types)]
+
+pub use core::ffi::c_void;
+
+extern "C" {
+    /// C `malloc(3)`.
+    pub fn malloc(size: usize) -> *mut c_void;
+    /// C `free(3)`.
+    pub fn free(ptr: *mut c_void);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn malloc_free_roundtrip() {
+        unsafe {
+            let p = malloc(64) as *mut u8;
+            assert!(!p.is_null());
+            core::ptr::write_bytes(p, 0xA5, 64);
+            assert_eq!(p.read(), 0xA5);
+            free(p as *mut c_void);
+        }
+    }
+}

@@ -10,5 +10,5 @@
 pub mod report;
 pub mod runner;
 
-pub use report::{write_csv, write_markdown, ReportTable};
+pub use report::{write_csv, write_json, write_markdown, ReportTable};
 pub use runner::{BenchResult, Bencher, Suite};

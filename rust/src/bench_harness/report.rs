@@ -6,6 +6,7 @@ use std::io::Write;
 use std::path::Path;
 
 use super::runner::BenchResult;
+use crate::util::json::{self, Json};
 
 /// A 2-D results table: rows × columns of median ns (one per series),
 /// e.g. rows = allocation counts, columns = chunk sizes (Figures 3/4).
@@ -139,6 +140,65 @@ pub fn write_markdown_to(
     Ok(path)
 }
 
+/// Write tables (plus free-form summary fields) as one machine-readable
+/// JSON document to `bench_out/<stem>.json`.
+pub fn write_json(
+    stem: &str,
+    tables: &[ReportTable],
+    summary: &[(&str, Json)],
+) -> std::io::Result<std::path::PathBuf> {
+    write_json_to(Path::new("bench_out"), stem, tables, summary)
+}
+
+/// As [`write_json`] but into an explicit directory.
+pub fn write_json_to(
+    dir: &Path,
+    stem: &str,
+    tables: &[ReportTable],
+    summary: &[(&str, Json)],
+) -> std::io::Result<std::path::PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("{stem}.json"));
+    let mut fields = vec![
+        ("bench", json::s(stem)),
+        ("tables", Json::Arr(tables.iter().map(table_to_json).collect())),
+    ];
+    if !summary.is_empty() {
+        fields.push(("summary", json::obj(summary.to_vec())));
+    }
+    std::fs::write(&path, json::obj(fields).to_string())?;
+    Ok(path)
+}
+
+fn table_to_json(t: &ReportTable) -> Json {
+    let rows: Vec<(&str, Json)> = t
+        .rows
+        .iter()
+        .enumerate()
+        .map(|(r, name)| {
+            let cells: Vec<(&str, Json)> = t
+                .cols
+                .iter()
+                .enumerate()
+                .map(|(c, col)| {
+                    let v = t.cells[r][c];
+                    (
+                        col.as_str(),
+                        if v.is_nan() { Json::Null } else { Json::Num(v) },
+                    )
+                })
+                .collect();
+            (name.as_str(), json::obj(cells))
+        })
+        .collect();
+    json::obj(vec![
+        ("title", json::s(&t.title)),
+        ("row_label", json::s(&t.row_label)),
+        ("unit", json::s(&t.unit)),
+        ("rows", json::obj(rows)),
+    ])
+}
+
 /// Write each table as CSV to `bench_out/<stem>_<i>.csv`.
 pub fn write_csv(stem: &str, tables: &[ReportTable]) -> std::io::Result<Vec<std::path::PathBuf>> {
     write_csv_to(Path::new("bench_out"), stem, tables)
@@ -207,5 +267,42 @@ mod tests {
         assert!(md.exists());
         assert_eq!(csvs.len(), 1);
         assert!(csvs[0].exists());
+    }
+
+    #[test]
+    fn json_report_roundtrips() {
+        let mut t = ReportTable::new(
+            "A3",
+            "threads",
+            vec!["1".into(), "8".into()],
+            vec!["atomic".into(), "sharded".into()],
+            "ns per pair",
+        );
+        t.set(0, 0, 12.5);
+        t.set(0, 1, 14.0);
+        t.set(1, 0, 90.0);
+        t.set(1, 1, 20.0);
+        let tmp = std::env::temp_dir().join("fastpool_report_test_json");
+        let path = write_json_to(
+            &tmp,
+            "unit_test_json",
+            &[t],
+            &[("sharded_vs_atomic_speedup_8t", Json::Num(4.5))],
+        )
+        .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = json::parse(&text).unwrap();
+        assert_eq!(j.req_str("bench").unwrap(), "unit_test_json");
+        let tab = &j.get("tables").unwrap().as_arr().unwrap()[0];
+        assert_eq!(tab.req_str("unit").unwrap(), "ns per pair");
+        let row8 = tab.get("rows").unwrap().get("8").unwrap();
+        assert_eq!(row8.get("sharded").unwrap().as_f64(), Some(20.0));
+        let speedup = j
+            .get("summary")
+            .unwrap()
+            .get("sharded_vs_atomic_speedup_8t")
+            .unwrap()
+            .as_f64();
+        assert_eq!(speedup, Some(4.5));
     }
 }

@@ -42,7 +42,10 @@ pub struct AtomicPool {
     num_blocks: u32,
     block_size: usize,
     mem_start: NonNull<u8>,
-    layout: Layout,
+    /// `Some(layout)` when the pool owns its region (allocated in
+    /// `with_layout`); `None` for `over_region` pools, whose region is
+    /// owned by the caller (e.g. one shard of a `ShardedPool`).
+    owned: Option<Layout>,
     /// Packed (head index | NIL, aba tag).
     head: AtomicU64,
     /// Blocks 0..watermark have been threaded at least once.
@@ -60,21 +63,58 @@ unsafe impl Sync for AtomicPool {}
 impl AtomicPool {
     /// O(1) creation: no block is touched, the side table is allocated but
     /// only the header fields are written (`Vec` of atomics is zero-init).
+    /// Blocks are word-aligned; use [`Self::with_layout`] for stricter
+    /// alignment requirements.
     pub fn with_blocks(block_size: usize, num_blocks: u32) -> Self {
+        let layout = Layout::from_size_align(block_size.max(1), core::mem::size_of::<usize>())
+            .expect("bad layout");
+        Self::with_layout(layout, num_blocks)
+    }
+
+    /// Create an owning pool whose blocks honour `layout`'s alignment.
+    ///
+    /// Bugfix: `with_blocks` used to pin the region to
+    /// `size_of::<usize>()` alignment, so 16-byte-or-higher-aligned
+    /// requests served through `global_alloc` could come back misaligned.
+    /// Here the region is allocated at `layout.align()` and the block
+    /// stride is rounded up to a multiple of it, so every block is aligned.
+    pub fn with_layout(layout: Layout, num_blocks: u32) -> Self {
         assert!(num_blocks > 0 && num_blocks < NIL);
-        let align = core::mem::size_of::<usize>();
-        let bs = align_up(block_size.max(4), align);
-        let bytes = bs * num_blocks as usize;
-        let layout = Layout::from_size_align(bytes, align).expect("bad layout");
-        let region = NonNull::new(unsafe { std::alloc::alloc(layout) })
+        let align = layout.align().max(core::mem::size_of::<usize>());
+        let bs = align_up(layout.size().max(4), align);
+        let bytes = bs
+            .checked_mul(num_blocks as usize)
+            .expect("pool region size overflows usize");
+        let region_layout = Layout::from_size_align(bytes, align).expect("bad layout");
+        let region = NonNull::new(unsafe { std::alloc::alloc(region_layout) })
             .expect("pool region allocation failed");
+        // SAFETY: we just allocated `bytes = bs * num_blocks` at `region`
+        // and hand exclusive ownership to the pool.
+        let mut pool = unsafe { Self::over_region(region, bs, num_blocks) };
+        pool.owned = Some(region_layout);
+        pool
+    }
+
+    /// Build a pool over a caller-owned region (no allocation, no
+    /// deallocation on drop). Used by [`super::sharded::ShardedPool`] to
+    /// stripe one contiguous region across shards.
+    ///
+    /// # Safety
+    /// `region` must be valid for reads and writes for
+    /// `block_size * num_blocks` bytes for the pool's lifetime, not
+    /// accessed through other aliases while the pool is live, and
+    /// `block_size`-aligned storage must satisfy whatever alignment the
+    /// caller promises its own users.
+    pub unsafe fn over_region(region: NonNull<u8>, block_size: usize, num_blocks: u32) -> Self {
+        assert!(num_blocks > 0 && num_blocks < NIL);
+        assert!(block_size >= 4, "block_size {block_size} < 4");
         let mut next = Vec::with_capacity(num_blocks as usize);
         next.resize_with(num_blocks as usize, || AtomicU32::new(NIL));
         Self {
             num_blocks,
-            block_size: bs,
+            block_size,
             mem_start: region,
-            layout,
+            owned: None,
             head: AtomicU64::new(pack(NIL, 0)),
             watermark: AtomicU32::new(0),
             next,
@@ -211,11 +251,19 @@ impl AtomicPool {
     pub fn overhead_bytes(&self) -> usize {
         core::mem::size_of::<Self>() + self.next.len() * 4
     }
+
+    /// Current ABA generation tag (bumps on every successful head CAS).
+    /// Exposed for the ABA regression tests.
+    pub fn aba_tag(&self) -> u32 {
+        unpack(self.head.load(Ordering::Relaxed)).1
+    }
 }
 
 impl Drop for AtomicPool {
     fn drop(&mut self) {
-        unsafe { std::alloc::dealloc(self.mem_start.as_ptr(), self.layout) };
+        if let Some(layout) = self.owned {
+            unsafe { std::alloc::dealloc(self.mem_start.as_ptr(), layout) };
+        }
     }
 }
 
@@ -372,5 +420,48 @@ mod tests {
     fn deallocate_bad_index_panics() {
         let p = AtomicPool::with_blocks(16, 4);
         p.deallocate_index(4);
+    }
+
+    #[test]
+    fn with_layout_honours_alignment() {
+        // Regression: the region used to be pinned to word alignment, so
+        // 16-byte-or-higher-aligned layouts could get misaligned blocks.
+        for align in [16usize, 32, 64, 128] {
+            let layout = Layout::from_size_align(24, align).unwrap();
+            let p = AtomicPool::with_layout(layout, 8);
+            assert_eq!(p.block_size() % align, 0, "stride not padded to {align}");
+            for _ in 0..8 {
+                let a = p.allocate().unwrap();
+                assert_eq!(a.as_ptr() as usize % align, 0, "block misaligned at {align}");
+            }
+        }
+    }
+
+    #[test]
+    fn over_region_does_not_free_on_drop() {
+        // A borrowed-region pool must leave the caller's buffer alone.
+        let mut buf = vec![0u8; 16 * 8];
+        let region = NonNull::new(buf.as_mut_ptr()).unwrap();
+        {
+            let p = unsafe { AtomicPool::over_region(region, 16, 8) };
+            let a = p.allocate().unwrap();
+            assert!(a.as_ptr() as usize >= buf.as_ptr() as usize);
+            unsafe { p.deallocate(a) };
+        } // drop: must NOT dealloc `buf`'s storage
+        buf[0] = 0xEE; // still writable
+        assert_eq!(buf[0], 0xEE);
+    }
+
+    #[test]
+    fn aba_tag_bumps_on_every_op() {
+        let p = AtomicPool::with_blocks(8, 2);
+        let mut last = p.aba_tag();
+        let a = p.allocate().unwrap(); // watermark path: no CAS, tag unchanged
+        unsafe { p.deallocate(a) };
+        let t1 = p.aba_tag();
+        assert_ne!(t1, last, "free must bump the ABA tag");
+        last = t1;
+        let _b = p.allocate().unwrap(); // stack pop: CAS bumps again
+        assert_ne!(p.aba_tag(), last, "stack pop must bump the ABA tag");
     }
 }

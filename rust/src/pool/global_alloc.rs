@@ -7,20 +7,25 @@
 //! but if not, the general system allocator is called to supply the
 //! memory."
 //!
-//! Built on the lock-free [`AtomicPool`] per
-//! size class so it is safe as a true `#[global_allocator]` (see
-//! `examples/custom_global_alloc.rs`). Classes are created lazily on first
-//! use with a `Once`-style spinflag; after that both paths are lock-free.
+//! Built on the sharded lock-free [`ShardedPool`] per size class so it is
+//! safe — and scalable — as a true `#[global_allocator]` (see
+//! `examples/custom_global_alloc.rs`): each thread's allocations hit a
+//! core-local shard head instead of one process-wide CAS. Classes are
+//! created lazily on first use with a `Once`-style publish race; after
+//! that both paths are lock-free.
 //!
 //! Routing rule: served-from-pool iff `size <= MAX_CLASS` *and*
 //! `align <= 16` *and* the class has a free block; everything else falls
-//! through to [`std::alloc::System`].
+//! through to [`std::alloc::System`]. Class pools are built 16-aligned
+//! (`CLASS_ALIGN`), so every pooled pointer satisfies the strictest
+//! alignment the router admits — previously the region was word-aligned
+//! and 16-aligned requests could come back misaligned.
 
 use core::alloc::{GlobalAlloc, Layout};
 use core::cell::Cell;
 use core::sync::atomic::{AtomicPtr, AtomicU64, Ordering};
 
-use super::atomic::AtomicPool;
+use super::sharded::{default_shards, ShardedPool};
 
 std::thread_local! {
     /// Reentrancy guard: building a class pool allocates (its region and
@@ -37,7 +42,7 @@ const CLASS_ALIGN: usize = 16;
 
 /// A pool-backed global allocator with system fallback.
 pub struct PooledGlobalAlloc {
-    classes: [AtomicPtr<AtomicPool>; NUM_CLASSES],
+    classes: [AtomicPtr<ShardedPool>; NUM_CLASSES],
     blocks_per_class: u32,
     pub pool_hits: AtomicU64,
     pub system_allocs: AtomicU64,
@@ -47,7 +52,7 @@ impl PooledGlobalAlloc {
     /// `const`-constructible so it can be a `static`.
     pub const fn new(blocks_per_class: u32) -> Self {
         #[allow(clippy::declare_interior_mutable_const)]
-        const NULL: AtomicPtr<AtomicPool> = AtomicPtr::new(core::ptr::null_mut());
+        const NULL: AtomicPtr<ShardedPool> = AtomicPtr::new(core::ptr::null_mut());
         Self {
             classes: [NULL; NUM_CLASSES],
             blocks_per_class,
@@ -70,7 +75,7 @@ impl PooledGlobalAlloc {
     }
 
     /// Get or lazily create the pool for class `ci`.
-    fn class_pool(&self, ci: usize) -> &AtomicPool {
+    fn class_pool(&self, ci: usize) -> &ShardedPool {
         let ptr = self.classes[ci].load(Ordering::Acquire);
         if !ptr.is_null() {
             // SAFETY: once published, pools live for the program duration.
@@ -80,10 +85,12 @@ impl PooledGlobalAlloc {
         // itself allocates → set the reentrancy guard so those nested
         // allocations go to the system allocator.
         let block_size = 1usize << (MIN_SHIFT + ci as u32);
+        let layout = Layout::from_size_align(block_size, CLASS_ALIGN).expect("class layout");
         IN_POOL_INIT.with(|c| c.set(true));
-        let fresh = Box::into_raw(Box::new(AtomicPool::with_blocks(
-            block_size,
+        let fresh = Box::into_raw(Box::new(ShardedPool::with_layout(
+            layout,
             self.blocks_per_class,
+            default_shards(),
         )));
         IN_POOL_INIT.with(|c| c.set(false));
         match self.classes[ci].compare_exchange(
@@ -101,21 +108,18 @@ impl PooledGlobalAlloc {
         }
     }
 
-    /// Did `ptr` come from one of our pools? (bounds check per class)
+    /// Did `ptr` come from one of our pools? (region check per class)
     fn owning_class(&self, ptr: *mut u8) -> Option<usize> {
+        let nn = core::ptr::NonNull::new(ptr)?;
         for ci in 0..NUM_CLASSES {
             let pool = self.classes[ci].load(Ordering::Acquire);
             if pool.is_null() {
                 continue;
             }
-            let pool = unsafe { &*pool };
-            if let Some(nn) = core::ptr::NonNull::new(ptr) {
-                let start = pool_region_start(pool);
-                let len = pool.block_size() * pool.num_blocks() as usize;
-                let a = nn.as_ptr() as usize;
-                if a >= start && a < start + len {
-                    return Some(ci);
-                }
+            // Range-only check: divide-free on the dealloc hot path. A
+            // system pointer can never fall inside a pool-owned region.
+            if unsafe { &*pool }.owns(nn) {
+                return Some(ci);
             }
         }
         None
@@ -127,11 +131,6 @@ impl PooledGlobalAlloc {
             self.system_allocs.load(Ordering::Relaxed),
         )
     }
-}
-
-#[inline]
-fn pool_region_start(pool: &AtomicPool) -> usize {
-    pool.region_start()
 }
 
 // SAFETY: GlobalAlloc contract — alloc returns valid blocks or null;
@@ -227,6 +226,34 @@ mod tests {
             ga.dealloc(d, layout);
             ga.dealloc(e, layout);
         }
+    }
+
+    #[test]
+    fn sixteen_aligned_type_served_aligned_from_pool() {
+        // Regression: class pools used to sit on a word-aligned region, so
+        // a 16-aligned type could get a pointer at 8 mod 16. The router
+        // admits align <= 16, so the pool must actually deliver it.
+        #[repr(align(16))]
+        #[allow(dead_code)]
+        struct Vec4([f32; 4]);
+        let layout = Layout::new::<Vec4>();
+        assert_eq!(layout.align(), 16);
+        let ga = PooledGlobalAlloc::new(64);
+        unsafe {
+            let mut held = Vec::new();
+            for _ in 0..32 {
+                let p = ga.alloc(layout);
+                assert!(!p.is_null());
+                assert_eq!(p as usize % 16, 0, "pooled block must be 16-aligned");
+                held.push(p);
+            }
+            for p in held {
+                ga.dealloc(p, layout);
+            }
+        }
+        let (hits, sys) = ga.stats();
+        assert_eq!(hits, 32, "all requests must be pool-served");
+        assert_eq!(sys, 0);
     }
 
     #[test]

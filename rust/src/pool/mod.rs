@@ -12,6 +12,9 @@
 //!   leak reports.
 //! * [`LockedPool`] / [`AtomicPool`] — §VI's threading limitation solved
 //!   two ways (mutex vs lock-free Treiber stack with ABA tags).
+//! * [`ShardedPool`] — the scaling layer: N `AtomicPool` shards with
+//!   per-thread routing and sibling stealing, so the one-CAS head stops
+//!   being a contention hot-spot (ablation A3).
 //! * [`ResizablePool`] — §VII grow/shrink by member-variable update.
 //! * [`MultiPool`] — §V/§VI ad-hoc hybrid: size classes + system fallback.
 //! * [`PooledGlobalAlloc`] — §V "overload new/delete" as a Rust
@@ -27,6 +30,7 @@ pub mod locked;
 pub mod multi;
 pub mod raw;
 pub mod resize;
+pub mod sharded;
 pub mod stats;
 pub mod typed;
 
@@ -37,8 +41,9 @@ pub use freelist::PtrFreeListPool;
 pub use global_alloc::PooledGlobalAlloc;
 pub use guarded::{GuardConfig, GuardError, GuardedPool};
 pub use locked::{BlockToken, LockedPool};
-pub use multi::{MultiPool, MultiPoolConfig, Origin};
+pub use multi::{MultiPool, MultiPoolConfig, Origin, ShardedMultiPool};
 pub use raw::{RawPool, MIN_BLOCK_SIZE};
 pub use resize::ResizablePool;
-pub use stats::PoolStats;
+pub use sharded::{default_shards, ShardedPool};
+pub use stats::{PoolStats, ShardStats, ShardedPoolStats};
 pub use typed::{PoolBox, TypedPool};

@@ -9,8 +9,11 @@
 
 use core::alloc::Layout;
 use core::ptr::NonNull;
+use core::sync::atomic::{AtomicU64, Ordering};
 
 use super::fixed::{FixedPool, PoolConfig};
+use super::sharded::{default_shards, ShardedPool};
+use super::stats::ShardedPoolStats;
 use crate::util::align::next_pow2;
 
 /// Where an allocation was served from.
@@ -90,12 +93,7 @@ impl MultiPool {
     /// Class index for a request of `size` bytes, or `None` if too large.
     #[inline]
     pub fn class_of(&self, size: usize) -> Option<usize> {
-        if size > self.cfg.max_class {
-            return None;
-        }
-        let rounded = next_pow2(size.max(self.cfg.min_class));
-        // min_class = 2^k → index = log2(rounded) - k.
-        Some(rounded.trailing_zeros() as usize - self.cfg.min_class.trailing_zeros() as usize)
+        class_index(&self.cfg, size)
     }
 
     /// Allocate `size` bytes. Returns the pointer and where it came from.
@@ -184,6 +182,154 @@ impl MultiPool {
     }
 }
 
+/// Class index for `size` under `cfg` (shared by both multi-pool flavours).
+#[inline]
+fn class_index(cfg: &MultiPoolConfig, size: usize) -> Option<usize> {
+    if size > cfg.max_class {
+        return None;
+    }
+    let rounded = next_pow2(size.max(cfg.min_class));
+    // min_class = 2^k → index = log2(rounded) - k.
+    Some(rounded.trailing_zeros() as usize - cfg.min_class.trailing_zeros() as usize)
+}
+
+/// Thread-safe sharded mode of the multi-pool: every size class is a
+/// [`ShardedPool`], so concurrent callers allocate through `&self` with a
+/// core-local fast path (the serving framework's multi-tenant case — many
+/// worker threads, mixed request sizes).
+///
+/// Same routing rule and system fallback as [`MultiPool`]; per-class hit
+/// and exhaustion counters are atomics, and per-shard hit/steal accounting
+/// is available via [`Self::class_shard_stats`].
+pub struct ShardedMultiPool {
+    classes: Vec<ShardedPool>,
+    class_sizes: Vec<usize>,
+    hits: Vec<AtomicU64>,
+    exhausted: Vec<AtomicU64>,
+    cfg: MultiPoolConfig,
+    pub system_allocs: AtomicU64,
+    pub system_frees: AtomicU64,
+}
+
+impl ShardedMultiPool {
+    /// Shard count defaults to available parallelism.
+    pub fn new(cfg: MultiPoolConfig) -> Self {
+        Self::with_shards(cfg, default_shards())
+    }
+
+    pub fn with_shards(cfg: MultiPoolConfig, shards: usize) -> Self {
+        assert!(cfg.min_class.is_power_of_two() && cfg.min_class >= 8);
+        assert!(cfg.max_class.is_power_of_two() && cfg.max_class >= cfg.min_class);
+        let mut classes = Vec::new();
+        let mut class_sizes = Vec::new();
+        let mut size = cfg.min_class;
+        while size <= cfg.max_class {
+            let layout = Layout::from_size_align(size, 16).expect("bad class layout");
+            classes.push(ShardedPool::with_layout(layout, cfg.blocks_per_class, shards));
+            class_sizes.push(size);
+            size *= 2;
+        }
+        let n = classes.len();
+        Self {
+            classes,
+            class_sizes,
+            hits: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            exhausted: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            cfg,
+            system_allocs: AtomicU64::new(0),
+            system_frees: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    pub fn class_of(&self, size: usize) -> Option<usize> {
+        class_index(&self.cfg, size)
+    }
+
+    /// Allocate `size` bytes; thread-safe (`&self`).
+    pub fn allocate(&self, size: usize) -> Option<(NonNull<u8>, Origin)> {
+        match self.class_of(size) {
+            Some(ci) => {
+                if let Some(p) = self.classes[ci].allocate() {
+                    self.hits[ci].fetch_add(1, Ordering::Relaxed);
+                    Some((p, Origin::Pool(ci)))
+                } else {
+                    self.exhausted[ci].fetch_add(1, Ordering::Relaxed);
+                    if self.cfg.system_fallback {
+                        self.system_alloc(size).map(|p| (p, Origin::System))
+                    } else {
+                        None
+                    }
+                }
+            }
+            None => {
+                if self.cfg.system_fallback {
+                    self.system_alloc(size).map(|p| (p, Origin::System))
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    /// Free an allocation made by [`allocate`](Self::allocate).
+    ///
+    /// # Safety
+    /// `(p, size, origin)` must match a live allocation from this pool.
+    pub unsafe fn deallocate(&self, p: NonNull<u8>, size: usize, origin: Origin) {
+        match origin {
+            Origin::Pool(ci) => {
+                debug_assert_eq!(self.class_of(size), Some(ci), "size/class mismatch");
+                self.classes[ci].deallocate(p);
+            }
+            Origin::System => {
+                let layout = Layout::from_size_align(size.max(1), 16).unwrap();
+                std::alloc::dealloc(p.as_ptr(), layout);
+                self.system_frees.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    fn system_alloc(&self, size: usize) -> Option<NonNull<u8>> {
+        let layout = Layout::from_size_align(size.max(1), 16).ok()?;
+        let p = NonNull::new(unsafe { std::alloc::alloc(layout) })?;
+        self.system_allocs.fetch_add(1, Ordering::Relaxed);
+        Some(p)
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.classes.len()
+    }
+
+    pub fn class_size(&self, ci: usize) -> usize {
+        self.class_sizes[ci]
+    }
+
+    pub fn class_hits(&self, ci: usize) -> u64 {
+        self.hits[ci].load(Ordering::Relaxed)
+    }
+
+    pub fn class_exhausted(&self, ci: usize) -> u64 {
+        self.exhausted[ci].load(Ordering::Relaxed)
+    }
+
+    /// Per-shard hit/steal accounting for one size class.
+    pub fn class_shard_stats(&self, ci: usize) -> ShardedPoolStats {
+        self.classes[ci].stats()
+    }
+
+    /// Fraction of requests served from pools (vs system fallback).
+    pub fn pool_hit_rate(&self) -> f64 {
+        let hits: u64 = self.hits.iter().map(|h| h.load(Ordering::Relaxed)).sum();
+        let total = hits + self.system_allocs.load(Ordering::Relaxed);
+        if total == 0 {
+            0.0
+        } else {
+            hits as f64 / total as f64
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -263,6 +409,89 @@ mod tests {
             mp.allocate(16).unwrap(); // 8 pool hits + 1 system
         }
         assert!((mp.pool_hit_rate() - 8.0 / 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sharded_multi_routes_like_multi() {
+        let mp = ShardedMultiPool::with_shards(cfg_small(), 2);
+        assert_eq!(mp.class_of(1), Some(0));
+        assert_eq!(mp.class_of(17), Some(1));
+        assert_eq!(mp.class_of(257), None);
+        assert_eq!(mp.num_classes(), 5);
+        assert_eq!(mp.class_size(3), 128);
+    }
+
+    #[test]
+    fn sharded_multi_alloc_free_and_fallback() {
+        let mp = ShardedMultiPool::with_shards(cfg_small(), 2);
+        let mut held = Vec::new();
+        for _ in 0..8 {
+            let (p, o) = mp.allocate(16).unwrap();
+            assert_eq!(o, Origin::Pool(0));
+            assert_eq!(p.as_ptr() as usize % 16, 0, "class blocks are 16-aligned");
+            held.push((p, o));
+        }
+        // Class 0 exhausted → system fallback.
+        let (p, o) = mp.allocate(16).unwrap();
+        assert_eq!(o, Origin::System);
+        assert_eq!(mp.class_exhausted(0), 1);
+        assert_eq!(mp.class_hits(0), 8);
+        unsafe {
+            mp.deallocate(p, 16, o);
+            for (p, o) in held {
+                mp.deallocate(p, 16, o);
+            }
+        }
+        assert_eq!(mp.system_frees.load(Ordering::Relaxed), 1);
+        assert!(mp.pool_hit_rate() > 0.8);
+        // Shard accounting saw all eight pooled allocations.
+        let s = mp.class_shard_stats(0);
+        assert_eq!(s.total_allocs(), 8);
+        assert_eq!(s.num_free(), 8);
+    }
+
+    #[test]
+    fn sharded_multi_concurrent_distinct_pointers() {
+        use std::collections::BTreeSet;
+        use std::sync::Mutex;
+        let mp = ShardedMultiPool::with_shards(
+            MultiPoolConfig {
+                min_class: 16,
+                max_class: 256,
+                blocks_per_class: 512,
+                system_fallback: false,
+            },
+            4,
+        );
+        let seen = Mutex::new(BTreeSet::new());
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                let mp = &mp;
+                let seen = &seen;
+                s.spawn(move || {
+                    let mut rng = crate::util::Rng::new(t + 7);
+                    let mut held = Vec::new();
+                    for _ in 0..200 {
+                        let size = rng.gen_usize(1, 257);
+                        if let Some((p, o)) = mp.allocate(size) {
+                            assert!(
+                                seen.lock().unwrap().insert(p.as_ptr() as usize),
+                                "double handout across threads"
+                            );
+                            held.push((p, size, o));
+                        }
+                    }
+                    for (p, size, o) in held {
+                        seen.lock().unwrap().remove(&(p.as_ptr() as usize));
+                        unsafe { mp.deallocate(p, size, o) };
+                    }
+                });
+            }
+        });
+        assert!(seen.lock().unwrap().is_empty());
+        for ci in 0..mp.num_classes() {
+            assert_eq!(mp.class_shard_stats(ci).num_free(), 512, "class {ci}");
+        }
     }
 
     #[test]

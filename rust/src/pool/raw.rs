@@ -54,9 +54,11 @@ pub struct RawPool {
     div_inv: u64,
 }
 
-/// Modular inverse of an odd u64 (Newton's iteration, 5 steps).
+/// Modular inverse of an odd u64 (Newton's iteration, 5 steps). Shared
+/// with [`super::sharded`], which reuses the same exact-division trick to
+/// decode the owning shard from a pointer offset.
 #[inline]
-const fn mod_inverse_u64(x: u64) -> u64 {
+pub(crate) const fn mod_inverse_u64(x: u64) -> u64 {
     debug_assert!(x & 1 == 1);
     let mut inv = x;
     let mut i = 0;
@@ -92,10 +94,15 @@ impl RawPool {
             "block_size {block_size} < minimum {MIN_BLOCK_SIZE} (must hold a u32 index)"
         );
         assert!(num_blocks > 0, "pool must have at least one block");
+        // `block_size * num_blocks` can wrap on adversarial inputs (or on
+        // 32-bit targets with plausible ones), silently passing the region
+        // check below with a tiny wrapped product — overflow must fail loudly.
+        let region_bytes = block_size
+            .checked_mul(num_blocks as usize)
+            .expect("pool region size overflows usize (block_size * num_blocks)");
         assert!(
-            region_len >= block_size * num_blocks as usize,
-            "region too small: {region_len} < {}",
-            block_size * num_blocks as usize
+            region_len >= region_bytes,
+            "region too small: {region_len} < {region_bytes}"
         );
         let div_shift = block_size.trailing_zeros();
         let div_inv = mod_inverse_u64((block_size >> div_shift) as u64);
@@ -385,6 +392,17 @@ mod tests {
         let mut buf = vec![0u8; 64];
         let region = NonNull::new(buf.as_mut_ptr()).unwrap();
         let _ = unsafe { RawPool::new(region, 64, 16, 0) };
+    }
+
+    #[test]
+    #[should_panic(expected = "overflows usize")]
+    fn rejects_overflowing_region_math() {
+        // Regression: `block_size * num_blocks` used to wrap, letting a
+        // near-usize::MAX block size slip past the region-size assert.
+        let mut buf = [0u8; 8];
+        let region = NonNull::new(buf.as_mut_ptr()).unwrap();
+        let huge = usize::MAX / 2 + 2; // huge * 4 wraps
+        let _ = unsafe { RawPool::new(region, 8, huge, 4) };
     }
 
     #[test]

@@ -1,0 +1,548 @@
+//! `ShardedPool` — the scaling answer to the single-CAS bottleneck.
+//!
+//! [`AtomicPool`](super::atomic::AtomicPool) solves §VI's threading
+//! limitation with one Treiber stack, but its single packed head word is a
+//! contention hot-spot: every allocate/free from every thread CASes the
+//! same cache line, so throughput *degrades* as cores are added (ablation
+//! A3). Following the per-thread-structure direction of Blelloch & Wei,
+//! *Concurrent Fixed-Size Allocation and Free in Constant Time*
+//! (arXiv:2008.04296), this module stripes one region across N independent
+//! `AtomicPool` shards:
+//!
+//! * **Routing** — each thread gets a round-robin *home shard* on first
+//!   use (a const-init thread-local, so the hint costs one TLS read on the
+//!   hot path and never allocates). Threads ≤ shards ⇒ zero CAS sharing.
+//! * **Stealing** — on local exhaustion the allocator scans sibling
+//!   shards, so capacity is pooled, not partitioned: one thread can still
+//!   drain the entire pool. Steals are counted per home shard — the
+//!   "concurrency tax" visible in [`ShardedPoolStats`].
+//! * **O(1) free with no hardware divide** — shards are laid out at a
+//!   uniform power-of-two *stride* (in blocks) inside one contiguous
+//!   region, so `deallocate` recovers the owning shard from the pointer
+//!   offset alone: the offset is exact-divided by `block_size` with the
+//!   same shift + multiplicative-inverse trick as
+//!   [`RawPool`](super::raw::RawPool) (§Perf), then shard = index >>
+//!   stride_shift and local index = index & (stride-1). No shard id is
+//!   stored in the block; the paper's zero-header property is preserved.
+//!
+//! ### Memory accounting (the concurrency tax, itemised)
+//!
+//! * 4 bytes/block side tables (inherited from `AtomicPool`).
+//! * One cache line of counters per shard.
+//! * Stride padding: when `num_blocks / shards` is not a power of two the
+//!   region is laid out with up-to-2× *virtual* slack between shards.
+//!   Padding blocks are **never touched** — creation is lazy exactly as in
+//!   the paper (§IV) — so on demand-paged systems they cost address space,
+//!   not resident memory. [`ShardedPool::padded_bytes`] reports the slack
+//!   so benchmarks can account for it honestly.
+
+use core::alloc::Layout;
+use core::cell::Cell;
+use core::ptr::NonNull;
+use core::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+use super::atomic::AtomicPool;
+use super::raw::{mod_inverse_u64, MIN_BLOCK_SIZE};
+use super::stats::{ShardStats, ShardedPoolStats};
+use crate::metrics::Metrics;
+use crate::util::align::{align_up, next_pow2};
+
+/// Monotone source of home-shard assignments (round-robin across threads).
+static NEXT_HOME: AtomicUsize = AtomicUsize::new(0);
+
+std::thread_local! {
+    /// This thread's home slot (masked per pool). `usize::MAX` = unset.
+    /// Const-init `Cell<usize>` carries no destructor, so reading it inside
+    /// a `#[global_allocator]` cannot recurse into allocation.
+    static HOME: Cell<usize> = const { Cell::new(usize::MAX) };
+}
+
+#[inline]
+fn home_slot() -> usize {
+    HOME.with(|h| {
+        let v = h.get();
+        if v != usize::MAX {
+            v
+        } else {
+            let fresh = NEXT_HOME.fetch_add(1, Ordering::Relaxed);
+            h.set(fresh);
+            fresh
+        }
+    })
+}
+
+/// Default shard count: available parallelism rounded up to a power of
+/// two, capped at 64 (past that the steal scan costs more than the
+/// contention it avoids).
+pub fn default_shards() -> usize {
+    let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    next_pow2(n).min(64)
+}
+
+/// Per-shard counters, cache-line separated so a hot shard's stats updates
+/// do not false-share with its neighbours.
+#[repr(align(64))]
+#[derive(Default)]
+struct ShardCounters {
+    /// Allocations served by this shard for threads homed on it.
+    local_hits: AtomicU64,
+    /// Allocations a thread homed here had to steal from a sibling.
+    steals: AtomicU64,
+    /// Allocations that failed after scanning every shard.
+    failures: AtomicU64,
+    /// Frees routed to this shard by pointer decode.
+    frees: AtomicU64,
+}
+
+/// A lock-free pool striped over power-of-two `AtomicPool` shards.
+///
+/// `Sync`: share by reference or `Arc`; all operations take `&self`.
+pub struct ShardedPool {
+    shards: Box<[AtomicPool]>,
+    counters: Box<[ShardCounters]>,
+    mem_start: NonNull<u8>,
+    layout: Layout,
+    block_size: usize,
+    num_blocks: u32,
+    /// `shards.len() - 1` (shard count is a power of two).
+    shard_mask: usize,
+    /// log2 of the per-shard stride in blocks.
+    stride_shift: u32,
+    /// `stride - 1` as u64 (for local-index extraction).
+    stride_mask: u64,
+    /// Exact division by `block_size`: `block_size = odd << div_shift`,
+    /// `div_inv = odd⁻¹ mod 2⁶⁴` (see `raw.rs` §Perf).
+    div_shift: u32,
+    div_inv: u64,
+}
+
+// SAFETY: the region is exclusively owned; shards are `Sync` and all
+// shared mutation goes through their atomics.
+unsafe impl Send for ShardedPool {}
+unsafe impl Sync for ShardedPool {}
+
+impl ShardedPool {
+    /// Word-aligned pool of `num_blocks` × `block_size`, sharded
+    /// `default_shards()` ways.
+    pub fn with_blocks(block_size: usize, num_blocks: u32) -> Self {
+        Self::with_shards(block_size, num_blocks, default_shards())
+    }
+
+    /// As [`Self::with_blocks`] with an explicit shard count (rounded
+    /// *down* to a power of two — never more shards than requested — and
+    /// clamped so every shard owns at least one block).
+    pub fn with_shards(block_size: usize, num_blocks: u32, shards: usize) -> Self {
+        let layout =
+            Layout::from_size_align(block_size.max(1), core::mem::size_of::<usize>())
+                .expect("bad layout");
+        Self::with_layout(layout, num_blocks, shards)
+    }
+
+    /// Fully explicit constructor: blocks honour `layout`'s alignment
+    /// (stride rounded up to a multiple of it, region allocated at it).
+    pub fn with_layout(layout: Layout, num_blocks: u32, shards: usize) -> Self {
+        assert!(num_blocks > 0, "pool must have at least one block");
+        assert!(shards > 0, "need at least one shard");
+        let align = layout.align().max(core::mem::size_of::<usize>());
+        let bs = align_up(layout.size().max(MIN_BLOCK_SIZE), align);
+
+        // Power-of-two shard count: never more shards than requested (or
+        // than there are blocks), so round DOWN to a power of two.
+        let want = shards.min(num_blocks as usize).max(1);
+        let n_shards = if want.is_power_of_two() { want } else { next_pow2(want) / 2 };
+
+        // Even split: the first `rem` shards take one extra block.
+        let base = num_blocks / n_shards as u32;
+        let rem = (num_blocks % n_shards as u32) as usize;
+        // Uniform power-of-two stride ≥ the largest shard's count, so the
+        // owning shard falls out of a block index with one shift.
+        let stride = next_pow2((base + (rem > 0) as u32) as usize);
+        let stride_shift = stride.trailing_zeros();
+
+        let shard_bytes = bs.checked_mul(stride).expect("pool region size overflows usize");
+        let total_bytes = shard_bytes
+            .checked_mul(n_shards)
+            .expect("pool region size overflows usize");
+        let region_layout = Layout::from_size_align(total_bytes, align).expect("bad layout");
+        let region = NonNull::new(unsafe { std::alloc::alloc(region_layout) })
+            .expect("pool region allocation failed");
+
+        let mut pools = Vec::with_capacity(n_shards);
+        let mut counters = Vec::with_capacity(n_shards);
+        for i in 0..n_shards {
+            let count = base + ((i < rem) as u32);
+            // SAFETY: shard i's window [i*shard_bytes, i*shard_bytes +
+            // count*bs) lies inside the region we just allocated; windows
+            // are disjoint and each shard gets exclusive use of its own.
+            let shard_base =
+                unsafe { NonNull::new_unchecked(region.as_ptr().add(i * shard_bytes)) };
+            pools.push(unsafe { AtomicPool::over_region(shard_base, bs, count) });
+            counters.push(ShardCounters::default());
+        }
+
+        let div_shift = bs.trailing_zeros();
+        let div_inv = mod_inverse_u64((bs >> div_shift) as u64);
+        Self {
+            shards: pools.into_boxed_slice(),
+            counters: counters.into_boxed_slice(),
+            mem_start: region,
+            layout: region_layout,
+            block_size: bs,
+            num_blocks,
+            shard_mask: n_shards - 1,
+            stride_shift,
+            stride_mask: stride as u64 - 1,
+            div_shift,
+            div_inv,
+        }
+    }
+
+    /// Lock-free allocate: home shard first, then steal round the ring.
+    /// `None` only when every shard is (momentarily) empty.
+    #[inline]
+    pub fn allocate(&self) -> Option<NonNull<u8>> {
+        let home = home_slot() & self.shard_mask;
+        if let Some(p) = self.shards[home].allocate() {
+            self.counters[home].local_hits.fetch_add(1, Ordering::Relaxed);
+            return Some(p);
+        }
+        // Local shard dry: steal from siblings so capacity is pooled, not
+        // partitioned. The scan order (home+1, home+2, …) spreads victim
+        // pressure instead of dog-piling shard 0.
+        for k in 1..=self.shard_mask {
+            let s = (home + k) & self.shard_mask;
+            if let Some(p) = self.shards[s].allocate() {
+                self.counters[home].steals.fetch_add(1, Ordering::Relaxed);
+                return Some(p);
+            }
+        }
+        self.counters[home].failures.fetch_add(1, Ordering::Relaxed);
+        None
+    }
+
+    /// Lock-free deallocate. O(1): the owning shard is decoded from the
+    /// pointer offset with shift + multiplicative-inverse exact division —
+    /// no hardware divide, no shard id stored in the block.
+    ///
+    /// # Safety
+    /// `p` must come from `allocate` on this pool, freed at most once.
+    #[inline]
+    pub unsafe fn deallocate(&self, p: NonNull<u8>) {
+        debug_assert!(self.contains(p), "deallocate: {p:p} is not a block of this pool");
+        let off = (p.as_ptr() as usize - self.mem_start.as_ptr() as usize) as u64;
+        // Exact division by block_size (offsets are block multiples).
+        let grid = (off >> self.div_shift).wrapping_mul(self.div_inv);
+        let shard = (grid >> self.stride_shift) as usize;
+        let local = (grid & self.stride_mask) as u32;
+        self.shards[shard].deallocate_index(local);
+        self.counters[shard].frees.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Fast ownership test: is `p` inside this pool's region? Range
+    /// compare only (no divide) — sufficient for allocator routing
+    /// because no other allocator can produce a pointer inside a region
+    /// this pool exclusively owns. Use [`Self::contains`] when the
+    /// pointer must also be validated as an actual block address.
+    #[inline]
+    pub fn owns(&self, p: NonNull<u8>) -> bool {
+        let start = self.mem_start.as_ptr() as usize;
+        let a = p.as_ptr() as usize;
+        a >= start && a < start + self.layout.size()
+    }
+
+    /// Is `p` a plausible block of this pool (in range, on the block grid,
+    /// inside a shard's populated window)?
+    pub fn contains(&self, p: NonNull<u8>) -> bool {
+        let start = self.mem_start.as_ptr() as usize;
+        let a = p.as_ptr() as usize;
+        if a < start || a >= start + self.layout.size() {
+            return false;
+        }
+        let off = (a - start) as u64;
+        if off % self.block_size as u64 != 0 {
+            return false;
+        }
+        let grid = off / self.block_size as u64;
+        let shard = (grid >> self.stride_shift) as usize;
+        let local = grid & self.stride_mask;
+        shard < self.shards.len() && local < self.shards[shard].num_blocks() as u64
+    }
+
+    // ---- introspection ----------------------------------------------------
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Total usable blocks (excludes stride padding).
+    pub fn num_blocks(&self) -> u32 {
+        self.num_blocks
+    }
+
+    /// Effective (aligned) block size.
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    /// Free blocks summed over shards (exact when quiescent).
+    pub fn num_free(&self) -> u32 {
+        self.shards.iter().map(|s| s.num_free()).sum()
+    }
+
+    pub fn region_start(&self) -> usize {
+        self.mem_start.as_ptr() as usize
+    }
+
+    /// Usable capacity in bytes.
+    pub fn capacity_bytes(&self) -> usize {
+        self.block_size * self.num_blocks as usize
+    }
+
+    /// Virtual address-space slack from stride padding (never touched, so
+    /// not resident on demand-paged systems).
+    pub fn padded_bytes(&self) -> usize {
+        self.layout.size() - self.capacity_bytes()
+    }
+
+    /// Concurrency tax: shard headers + side tables + counters.
+    pub fn overhead_bytes(&self) -> usize {
+        core::mem::size_of::<Self>()
+            + self.shards.iter().map(|s| s.overhead_bytes()).sum::<usize>()
+            + self.counters.len() * core::mem::size_of::<ShardCounters>()
+    }
+
+    /// Snapshot of per-shard hit/steal accounting.
+    pub fn stats(&self) -> ShardedPoolStats {
+        let per_shard = self
+            .shards
+            .iter()
+            .zip(self.counters.iter())
+            .map(|(s, c)| ShardStats {
+                num_blocks: s.num_blocks(),
+                num_free: s.num_free(),
+                local_hits: c.local_hits.load(Ordering::Relaxed),
+                steals: c.steals.load(Ordering::Relaxed),
+                failed_allocs: c.failures.load(Ordering::Relaxed),
+                frees: c.frees.load(Ordering::Relaxed),
+            })
+            .collect();
+        ShardedPoolStats {
+            block_size: self.block_size,
+            num_blocks: self.num_blocks,
+            per_shard,
+        }
+    }
+
+    /// Publish per-shard gauges into a [`Metrics`] registry under
+    /// `prefix` (e.g. `pool.packets.shard0.steals`).
+    pub fn export_metrics(&self, metrics: &Metrics, prefix: &str) {
+        let s = self.stats();
+        metrics.gauge(&format!("{prefix}.shards")).set(s.per_shard.len() as i64);
+        metrics.gauge(&format!("{prefix}.free_blocks")).set(s.num_free() as i64);
+        metrics
+            .gauge(&format!("{prefix}.steals_total"))
+            .set(s.total_steals() as i64);
+        for (i, sh) in s.per_shard.iter().enumerate() {
+            metrics
+                .gauge(&format!("{prefix}.shard{i}.local_hits"))
+                .set(sh.local_hits as i64);
+            metrics.gauge(&format!("{prefix}.shard{i}.steals")).set(sh.steals as i64);
+            metrics.gauge(&format!("{prefix}.shard{i}.free")).set(sh.num_free as i64);
+        }
+    }
+}
+
+impl Drop for ShardedPool {
+    fn drop(&mut self) {
+        // Shards are `over_region` borrowers; only the striped region is
+        // owned here.
+        unsafe { std::alloc::dealloc(self.mem_start.as_ptr(), self.layout) };
+    }
+}
+
+impl std::fmt::Debug for ShardedPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ShardedPool")
+            .field("shards", &self.num_shards())
+            .field("block_size", &self.block_size)
+            .field("num_blocks", &self.num_blocks)
+            .field("num_free", &self.num_free())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeSet;
+    use std::sync::Arc;
+
+    #[test]
+    fn geometry_counts_sum_and_clamp() {
+        // 10 blocks over a requested 5 shards → 4 shards, counts 3,3,2,2.
+        let p = ShardedPool::with_shards(24, 10, 5);
+        assert_eq!(p.num_shards(), 4);
+        assert_eq!(p.num_blocks(), 10);
+        assert_eq!(p.num_free(), 10);
+        // One block, absurd shard request → one shard.
+        let q = ShardedPool::with_shards(16, 1, 64);
+        assert_eq!(q.num_shards(), 1);
+        assert_eq!(q.num_free(), 1);
+    }
+
+    #[test]
+    fn single_thread_can_drain_whole_pool() {
+        // Capacity is pooled, not partitioned: one thread steals through
+        // every sibling shard.
+        let p = ShardedPool::with_shards(16, 64, 8);
+        let mut seen = BTreeSet::new();
+        for _ in 0..64 {
+            let a = p.allocate().expect("stealing must reach all shards");
+            assert!(seen.insert(a.as_ptr() as usize), "double handout");
+            assert!(p.contains(a));
+        }
+        assert!(p.allocate().is_none());
+        assert_eq!(p.num_free(), 0);
+        let s = p.stats();
+        assert_eq!(s.total_allocs(), 64);
+        assert!(s.total_steals() > 0, "draining 8 shards must steal");
+    }
+
+    #[test]
+    fn dealloc_routes_to_owning_shard() {
+        let p = ShardedPool::with_shards(24, 10, 4); // stride 4, counts 3,3,2,2
+        let ptrs: Vec<_> = (0..10).map(|_| p.allocate().unwrap()).collect();
+        assert_eq!(p.num_free(), 0);
+        for ptr in &ptrs {
+            unsafe { p.deallocate(*ptr) };
+        }
+        assert_eq!(p.num_free(), 10, "every block must return to its shard");
+        // And the pool is fully reusable.
+        let again: BTreeSet<usize> =
+            (0..10).map(|_| p.allocate().unwrap().as_ptr() as usize).collect();
+        assert_eq!(again.len(), 10);
+        assert!(p.allocate().is_none());
+    }
+
+    #[test]
+    fn odd_block_sizes_decode_correctly() {
+        // Exercise the shift+inverse exact division on non-power-of-two
+        // strides in bytes (block sizes get word-aligned: 24, 40, 72, 104).
+        for bs in [17usize, 33, 65, 100] {
+            let p = ShardedPool::with_shards(bs, 13, 4);
+            let ptrs: Vec<_> = (0..13).map(|_| p.allocate().unwrap()).collect();
+            for ptr in ptrs.into_iter().rev() {
+                unsafe { p.deallocate(ptr) };
+            }
+            assert_eq!(p.num_free(), 13, "block_size {bs}");
+        }
+    }
+
+    #[test]
+    fn alignment_honoured_across_shards() {
+        let layout = Layout::from_size_align(20, 64).unwrap();
+        let p = ShardedPool::with_layout(layout, 32, 4);
+        for _ in 0..32 {
+            let a = p.allocate().unwrap();
+            assert_eq!(a.as_ptr() as usize % 64, 0);
+        }
+    }
+
+    #[test]
+    fn contains_rejects_foreign_and_padding() {
+        let p = ShardedPool::with_shards(16, 6, 4); // counts 2,2,1,1; stride 2
+        let a = p.allocate().unwrap();
+        assert!(p.contains(a));
+        // Off-grid pointer inside the region.
+        let off = unsafe { NonNull::new_unchecked(a.as_ptr().add(1)) };
+        assert!(!p.contains(off));
+        // Padding slot of shard 2 (local index 1 does not exist there).
+        let pad = unsafe {
+            NonNull::new_unchecked(
+                (p.region_start() + (2 * 2 + 1) * p.block_size()) as *mut u8,
+            )
+        };
+        assert!(!p.contains(pad));
+        // Foreign pointer.
+        let mut other = [0u8; 16];
+        assert!(!p.contains(NonNull::new(other.as_mut_ptr()).unwrap()));
+        unsafe { p.deallocate(a) };
+    }
+
+    #[test]
+    fn stats_split_hits_and_steals() {
+        let p = ShardedPool::with_shards(16, 8, 4); // 2 blocks per shard
+        let mut held = Vec::new();
+        for _ in 0..8 {
+            held.push(p.allocate().unwrap());
+        }
+        assert!(p.allocate().is_none());
+        let s = p.stats();
+        assert_eq!(s.total_allocs(), 8);
+        assert_eq!(s.total_local_hits(), 2, "home shard holds 2 blocks");
+        assert_eq!(s.total_steals(), 6);
+        assert_eq!(s.total_failed(), 1);
+        assert!(s.steal_rate() > 0.7);
+        for ptr in held {
+            unsafe { p.deallocate(ptr) };
+        }
+        assert_eq!(p.stats().total_frees(), 8);
+    }
+
+    #[test]
+    fn metrics_export_publishes_gauges() {
+        let p = ShardedPool::with_shards(16, 8, 2);
+        let a = p.allocate().unwrap();
+        unsafe { p.deallocate(a) };
+        let m = Metrics::new();
+        p.export_metrics(&m, "pool.test");
+        let report = m.report();
+        assert!(report.contains("pool.test.shards = 2"), "{report}");
+        assert!(report.contains("pool.test.free_blocks = 8"), "{report}");
+    }
+
+    #[test]
+    fn overhead_and_padding_accounting() {
+        // 12 blocks, 4 shards → 3 per shard, stride 4 → 4 padding blocks.
+        let p = ShardedPool::with_shards(64, 12, 4);
+        assert_eq!(p.padded_bytes(), 4 * p.block_size());
+        // Side tables: 4 bytes per real block, plus headers/counters.
+        assert!(p.overhead_bytes() >= 12 * 4);
+        assert!(p.overhead_bytes() < 4096, "{}", p.overhead_bytes());
+    }
+
+    #[test]
+    fn concurrent_churn_exact_at_quiescence() {
+        let pool = Arc::new(ShardedPool::with_shards(32, 128, 4));
+        std::thread::scope(|s| {
+            for t in 0..8u64 {
+                let pool = Arc::clone(&pool);
+                s.spawn(move || {
+                    let mut rng = crate::util::Rng::new(t + 1);
+                    let mut held = Vec::new();
+                    for _ in 0..20_000 {
+                        if held.is_empty() || rng.gen_bool(0.5) {
+                            if let Some(p) = pool.allocate() {
+                                held.push(p.as_ptr() as usize);
+                            }
+                        } else {
+                            let i = rng.gen_usize(0, held.len());
+                            let addr = held.swap_remove(i);
+                            unsafe {
+                                pool.deallocate(NonNull::new_unchecked(addr as *mut u8))
+                            };
+                        }
+                    }
+                    for addr in held {
+                        unsafe {
+                            pool.deallocate(NonNull::new_unchecked(addr as *mut u8))
+                        };
+                    }
+                });
+            }
+        });
+        assert_eq!(pool.num_free(), 128);
+        let s = pool.stats();
+        assert_eq!(s.total_allocs(), s.total_frees());
+    }
+}

@@ -70,6 +70,83 @@ impl PoolStats {
     }
 }
 
+/// One shard's slice of a [`ShardedPoolStats`] snapshot.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ShardStats {
+    pub num_blocks: u32,
+    pub num_free: u32,
+    /// Allocations served locally for threads homed on this shard.
+    pub local_hits: u64,
+    /// Allocations a thread homed here satisfied from a sibling shard.
+    pub steals: u64,
+    /// Allocations that failed after scanning every shard.
+    pub failed_allocs: u64,
+    /// Frees routed to this shard by pointer decode.
+    pub frees: u64,
+}
+
+/// Point-in-time snapshot of a `ShardedPool`'s per-shard accounting — the
+/// sharded layer's "concurrency tax" report (steal rate ≈ how often the
+/// core-local fast path missed).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardedPoolStats {
+    pub block_size: usize,
+    pub num_blocks: u32,
+    pub per_shard: Vec<ShardStats>,
+}
+
+impl ShardedPoolStats {
+    pub fn total_local_hits(&self) -> u64 {
+        self.per_shard.iter().map(|s| s.local_hits).sum()
+    }
+
+    pub fn total_steals(&self) -> u64 {
+        self.per_shard.iter().map(|s| s.steals).sum()
+    }
+
+    pub fn total_failed(&self) -> u64 {
+        self.per_shard.iter().map(|s| s.failed_allocs).sum()
+    }
+
+    pub fn total_frees(&self) -> u64 {
+        self.per_shard.iter().map(|s| s.frees).sum()
+    }
+
+    /// Successful allocations (local + stolen).
+    pub fn total_allocs(&self) -> u64 {
+        self.total_local_hits() + self.total_steals()
+    }
+
+    pub fn num_free(&self) -> u32 {
+        self.per_shard.iter().map(|s| s.num_free).sum()
+    }
+
+    /// Fraction of successful allocations that crossed shards, in [0, 1].
+    pub fn steal_rate(&self) -> f64 {
+        let total = self.total_allocs();
+        if total == 0 {
+            0.0
+        } else {
+            self.total_steals() as f64 / total as f64
+        }
+    }
+
+    /// One-line human-readable report.
+    pub fn report(&self) -> String {
+        format!(
+            "shards {} | blocks {}x{}B | allocs {} ({} stolen, {:.2}% cross-shard) | fails {} | free {}",
+            self.per_shard.len(),
+            self.num_blocks,
+            self.block_size,
+            self.total_allocs(),
+            self.total_steals(),
+            self.steal_rate() * 100.0,
+            self.total_failed(),
+            self.num_free(),
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -114,5 +191,47 @@ mod tests {
         assert!(r.contains("100x64B"));
         assert!(r.contains("75/100"));
         assert!(r.contains("watermark 80"));
+    }
+
+    #[test]
+    fn sharded_totals_and_steal_rate() {
+        let s = ShardedPoolStats {
+            block_size: 64,
+            num_blocks: 8,
+            per_shard: vec![
+                ShardStats {
+                    num_blocks: 4,
+                    num_free: 1,
+                    local_hits: 6,
+                    steals: 2,
+                    failed_allocs: 1,
+                    frees: 5,
+                },
+                ShardStats {
+                    num_blocks: 4,
+                    num_free: 2,
+                    local_hits: 2,
+                    steals: 0,
+                    failed_allocs: 0,
+                    frees: 2,
+                },
+            ],
+        };
+        assert_eq!(s.total_allocs(), 10);
+        assert_eq!(s.total_steals(), 2);
+        assert_eq!(s.total_failed(), 1);
+        assert_eq!(s.total_frees(), 7);
+        assert_eq!(s.num_free(), 3);
+        assert!((s.steal_rate() - 0.2).abs() < 1e-12);
+        let r = s.report();
+        assert!(r.contains("shards 2"), "{r}");
+        assert!(r.contains("2 stolen"), "{r}");
+    }
+
+    #[test]
+    fn sharded_empty_no_div_by_zero() {
+        let s = ShardedPoolStats { block_size: 16, num_blocks: 0, per_shard: vec![] };
+        assert_eq!(s.steal_rate(), 0.0);
+        assert_eq!(s.total_allocs(), 0);
     }
 }

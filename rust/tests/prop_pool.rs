@@ -11,7 +11,7 @@
 use std::collections::BTreeSet;
 use std::ptr::NonNull;
 
-use fastpool::pool::{AtomicPool, EagerPool, FixedPool, PtrFreeListPool};
+use fastpool::pool::{AtomicPool, EagerPool, FixedPool, PtrFreeListPool, ShardedPool};
 use fastpool::testkit::{check_seq, PropConfig};
 use fastpool::util::Rng;
 
@@ -177,6 +177,29 @@ fn prop_atomic_pool_invariants_single_thread() {
         gen_ops,
         |ops| {
             let pool = AtomicPool::with_blocks(16, 24);
+            run_model(
+                ops,
+                24,
+                pool.block_size(),
+                None,
+                || pool.allocate(),
+                |p| unsafe { pool.deallocate(p) },
+            )
+        },
+    )
+    .unwrap();
+}
+
+#[test]
+fn prop_sharded_pool_invariants_single_thread() {
+    // Single-threaded, the sharded pool must satisfy the same invariants
+    // as the flat pools: stealing makes exhaustion exact (I4) even though
+    // the home shard holds only a fraction of capacity.
+    check_seq(
+        PropConfig { cases: 96, ..Default::default() },
+        gen_ops,
+        |ops| {
+            let pool = ShardedPool::with_shards(16, 24, 4);
             run_model(
                 ops,
                 24,

@@ -1,0 +1,220 @@
+//! Concurrency stress tests for the thread-safe pools (§VI and the
+//! sharded layer): allocate/free churn across ≥4 threads, asserting
+//!
+//!   S1  no double-hand-out: the set of live block addresses is duplicate
+//!       free at every instant (checked by stamping + a shared live-set);
+//!   S2  exact free-count at quiescence: after all threads drain, every
+//!       block is back (`num_free == num_blocks`);
+//!   S3  ABA safety: the Treiber head's generation tag advances on every
+//!       successful CAS, and heavy index-reuse churn on a tiny pool (the
+//!       classic ABA amplifier) never corrupts the free list.
+
+use std::collections::BTreeSet;
+use std::ptr::NonNull;
+use std::sync::{Arc, Mutex};
+
+use fastpool::pool::{AtomicPool, ShardedPool};
+use fastpool::util::Rng;
+
+const THREADS: usize = 8;
+
+/// Drive `allocate`/`deallocate` closures from many threads with a shared
+/// duplicate-detecting live set; returns total successful allocations.
+fn churn_with_live_set<A, F>(threads: usize, ops: usize, alloc: A, free: F) -> u64
+where
+    A: Fn() -> Option<NonNull<u8>> + Sync,
+    F: Fn(NonNull<u8>) + Sync,
+{
+    let live = Mutex::new(BTreeSet::new());
+    let total = std::sync::atomic::AtomicU64::new(0);
+    std::thread::scope(|s| {
+        for t in 0..threads as u64 {
+            let alloc = &alloc;
+            let free = &free;
+            let live = &live;
+            let total = &total;
+            s.spawn(move || {
+                let mut rng = Rng::new(t + 1);
+                let mut held: Vec<usize> = Vec::new();
+                for _ in 0..ops {
+                    if held.is_empty() || rng.gen_bool(0.5) {
+                        if let Some(p) = alloc() {
+                            let addr = p.as_ptr() as usize;
+                            assert!(
+                                live.lock().unwrap().insert(addr),
+                                "S1: block {addr:#x} handed out twice"
+                            );
+                            total.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            held.push(addr);
+                        }
+                    } else {
+                        let i = rng.gen_usize(0, held.len());
+                        let addr = held.swap_remove(i);
+                        live.lock().unwrap().remove(&addr);
+                        free(NonNull::new(addr as *mut u8).unwrap());
+                    }
+                }
+                for addr in held {
+                    live.lock().unwrap().remove(&addr);
+                    free(NonNull::new(addr as *mut u8).unwrap());
+                }
+            });
+        }
+    });
+    assert!(live.lock().unwrap().is_empty(), "live set must drain");
+    total.load(std::sync::atomic::Ordering::Relaxed)
+}
+
+#[test]
+fn atomic_pool_churn_unique_and_exact() {
+    let pool = AtomicPool::with_blocks(64, 256);
+    let n = churn_with_live_set(
+        THREADS,
+        10_000,
+        || pool.allocate(),
+        |p| unsafe { pool.deallocate(p) },
+    );
+    assert!(n > 0);
+    assert_eq!(pool.num_free(), 256, "S2: exact free count at quiescence");
+}
+
+#[test]
+fn sharded_pool_churn_unique_and_exact() {
+    let pool = ShardedPool::with_shards(64, 256, 4);
+    let n = churn_with_live_set(
+        THREADS,
+        10_000,
+        || pool.allocate(),
+        |p| unsafe { pool.deallocate(p) },
+    );
+    assert!(n > 0);
+    assert_eq!(pool.num_free(), 256, "S2: exact free count at quiescence");
+    let s = pool.stats();
+    assert_eq!(s.total_allocs(), n, "per-shard counters must account every alloc");
+    assert_eq!(s.total_frees(), n, "per-shard counters must account every free");
+}
+
+#[test]
+fn sharded_pool_data_integrity_under_churn() {
+    // Stamp every byte of a held block with the owner's tag and verify it
+    // before freeing — any overlap between threads corrupts the pattern.
+    const BLOCK: usize = 64;
+    let pool = Arc::new(ShardedPool::with_shards(BLOCK, 128, 8));
+    std::thread::scope(|s| {
+        for t in 0..THREADS {
+            let pool = Arc::clone(&pool);
+            s.spawn(move || {
+                let mut rng = Rng::new(t as u64 + 31);
+                let mut held: Vec<NonNull<u8>> = Vec::new();
+                for _ in 0..20_000 {
+                    if held.is_empty() || rng.gen_bool(0.5) {
+                        if let Some(p) = pool.allocate() {
+                            unsafe { std::ptr::write_bytes(p.as_ptr(), t as u8, BLOCK) };
+                            held.push(p);
+                        }
+                    } else {
+                        let i = rng.gen_usize(0, held.len());
+                        let p = held.swap_remove(i);
+                        unsafe {
+                            for off in 0..BLOCK {
+                                assert_eq!(
+                                    p.as_ptr().add(off).read(),
+                                    t as u8,
+                                    "S1: block shared between threads"
+                                );
+                            }
+                            pool.deallocate(p);
+                        }
+                    }
+                }
+                for p in held {
+                    pool_free(&pool, p);
+                }
+            });
+        }
+    });
+    assert_eq!(pool.num_free(), 128);
+}
+
+fn pool_free(pool: &ShardedPool, p: NonNull<u8>) {
+    unsafe { pool.deallocate(p) };
+}
+
+#[test]
+fn sharded_exhaustion_is_exact_under_contention() {
+    // More demand than supply, no concurrent frees: exactly num_blocks
+    // allocations can succeed across all threads (stealing pools capacity).
+    let pool = ShardedPool::with_shards(32, 100, 4);
+    let got = std::sync::atomic::AtomicU64::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..4 {
+            let pool = &pool;
+            let got = &got;
+            s.spawn(move || {
+                for _ in 0..50 {
+                    if pool.allocate().is_some() {
+                        got.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    }
+                }
+            });
+        }
+    });
+    assert_eq!(got.load(std::sync::atomic::Ordering::Relaxed), 100);
+    assert_eq!(pool.num_free(), 0);
+}
+
+#[test]
+fn aba_tag_advances_and_tiny_pool_survives_reuse_storm() {
+    // Part 1: the generation tag must move on every successful head CAS —
+    // it is the only thing standing between a stale pop and list corruption.
+    let p = AtomicPool::with_blocks(16, 2);
+    let a = p.allocate().unwrap(); // watermark path
+    let t0 = p.aba_tag();
+    unsafe { p.deallocate(a) }; // push: CAS
+    let t1 = p.aba_tag();
+    assert_ne!(t0, t1, "free must bump the ABA tag");
+    let _a2 = p.allocate().unwrap(); // pop: CAS
+    let t2 = p.aba_tag();
+    assert_ne!(t1, t2, "pop must bump the ABA tag");
+
+    // Part 2: classic ABA amplifier — a 2-block pool hammered by 8
+    // threads maximises index reuse between a stale read and its CAS.
+    // Without the tag, a resurrected head value would corrupt the list;
+    // with it, counts stay exact.
+    let pool = AtomicPool::with_blocks(16, 2);
+    std::thread::scope(|s| {
+        for _ in 0..THREADS {
+            let pool = &pool;
+            s.spawn(move || {
+                for _ in 0..100_000 {
+                    if let Some(idx) = pool.allocate_index() {
+                        pool.deallocate_index(idx);
+                    }
+                }
+            });
+        }
+    });
+    assert_eq!(pool.num_free(), 2, "S3: free list intact after reuse storm");
+    // Both blocks still allocatable and distinct.
+    let x = pool.allocate_index().unwrap();
+    let y = pool.allocate_index().unwrap();
+    assert_ne!(x, y);
+    assert!(pool.allocate_index().is_none());
+}
+
+#[test]
+fn sharded_single_thread_sees_whole_capacity() {
+    // Capacity is pooled, not partitioned: one thread (one home shard)
+    // must still reach every block via stealing.
+    let pool = ShardedPool::with_shards(16, 64, 8);
+    let mut got = Vec::new();
+    while let Some(p) = pool.allocate() {
+        got.push(p);
+    }
+    assert_eq!(got.len(), 64);
+    assert!(pool.stats().total_steals() >= 56, "7 of 8 shards need steals");
+    for p in got {
+        unsafe { pool.deallocate(p) };
+    }
+    assert_eq!(pool.num_free(), 64);
+}
