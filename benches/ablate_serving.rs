@@ -1,0 +1,134 @@
+//! **Ablation A4** — pool-backed vs malloc-backed serving path.
+//!
+//! Both arms run the *identical* continuous-batching engine over the
+//! deterministic MockBackend; the only difference is the allocation
+//! handle: `PoolHandle::serving_default()` (per-step buffers, request
+//! storage and KV block tables on a `ShardedMultiPool`) vs
+//! `PoolHandle::system()` (same code paths, system allocator). The gap
+//! is therefore exactly the allocator's share of the serving loop — the
+//! paper's claim, measured end-to-end instead of in a micro-loop.
+//!
+//! Writes `bench_out/ablate_serving.{md,csv,json}`; the JSON summary
+//! carries the pooled arm's hit-rate and batched-steal counters.
+//!
+//! Run: `cargo bench --bench ablate_serving`
+
+use fastpool::bench_harness::{write_csv, write_json, write_markdown, ReportTable, Suite};
+use fastpool::coordinator::{Engine, EngineConfig, MockBackend, SamplingParams};
+use fastpool::pool::PoolHandle;
+use fastpool::util::json::{self, Json};
+use fastpool::util::{Rng, Timer};
+
+const REQUESTS: usize = 384;
+
+/// One serving run; returns (tokens/s, engine steps, pool hit rate).
+fn run_arm(pool: PoolHandle, max_batch: usize, seed: u64) -> (f64, u64, f64) {
+    let be = MockBackend::with_blocks(256, 16, 8);
+    let mut e = Engine::with_pool(
+        be,
+        EngineConfig { max_batch, queue_limit: 4096, ..Default::default() },
+        pool,
+    );
+    let mut rng = Rng::new(seed);
+    for _ in 0..REQUESTS {
+        let plen = 1 + rng.gen_usize(0, 30);
+        let prompt: Vec<i32> = (0..plen).map(|_| rng.gen_range(256) as i32).collect();
+        e.submit(prompt, SamplingParams::greedy(16 + rng.gen_range(48) as u32))
+            .unwrap();
+    }
+    let t = Timer::start();
+    let outs = e.run_to_completion(10_000_000).unwrap();
+    let secs = t.elapsed_secs();
+    let tokens: usize = outs.iter().map(|o| o.tokens.len()).sum();
+    let hit_rate = e.pool().multi().map_or(0.0, |mp| mp.pool_hit_rate());
+    (tokens as f64 / secs, e.steps(), hit_rate)
+}
+
+fn median3(f: &dyn Fn() -> (f64, u64, f64)) -> (f64, u64, f64) {
+    let mut runs: Vec<(f64, u64, f64)> = (0..3).map(|_| f()).collect();
+    runs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    runs[1]
+}
+
+fn main() {
+    let suite = Suite::new("ablate_serving");
+    let mut tab = ReportTable::new(
+        "A4: serving throughput, pool-backed vs malloc-backed hot path",
+        "max_batch",
+        vec!["1".into(), "2".into(), "4".into()],
+        vec![
+            "pool tok/s".into(),
+            "malloc tok/s".into(),
+            "speedup".into(),
+            "pool hit %".into(),
+        ],
+        format!("{REQUESTS} requests, mock model, median of 3"),
+    );
+
+    let mut last_hit_rate = 0.0;
+    if suite.enabled("throughput") {
+        for (ri, mb) in [1usize, 2, 4].into_iter().enumerate() {
+            let (pool_tps, steps_p, hit) =
+                median3(&|| run_arm(PoolHandle::serving_default(), mb, 7));
+            let (sys_tps, steps_s, _) = median3(&|| run_arm(PoolHandle::system(), mb, 7));
+            assert_eq!(
+                steps_p, steps_s,
+                "arms must schedule identically — same engine, same workload"
+            );
+            last_hit_rate = hit;
+            println!(
+                "max_batch={mb}: pool {pool_tps:>10.0} tok/s | malloc {sys_tps:>10.0} tok/s | x{:.3} | hit {:.1}%",
+                pool_tps / sys_tps,
+                hit * 100.0
+            );
+            tab.set(ri, 0, pool_tps);
+            tab.set(ri, 1, sys_tps);
+            tab.set(ri, 2, pool_tps / sys_tps);
+            tab.set(ri, 3, hit * 100.0);
+        }
+    }
+
+    // Batched-steal counters from a contended pooled run (many worker
+    // threads submitting through one shared multi-pool).
+    let mut steal_summary: Vec<(&str, Json)> = Vec::new();
+    if suite.enabled("steals") {
+        let handle = PoolHandle::serving_default();
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                let handle = handle.clone();
+                s.spawn(move || {
+                    let _ = run_arm(handle, 4, 11 + t);
+                });
+            }
+        });
+        let mp = handle.multi().unwrap();
+        let (mut steals, mut scans, mut stash_hits) = (0u64, 0u64, 0u64);
+        for ci in 0..mp.num_classes() {
+            let st = mp.class_shard_stats(ci);
+            steals += st.total_steals();
+            scans += st.total_steal_scans();
+            stash_hits += st.total_stash_hits();
+        }
+        let avg_batch = if scans == 0 { 0.0 } else { steals as f64 / scans as f64 };
+        println!(
+            "contended pool: {steals} blocks stolen over {scans} scans (avg batch {avg_batch:.2}), {stash_hits} stash hits"
+        );
+        steal_summary.push(("stolen_blocks", Json::Num(steals as f64)));
+        steal_summary.push(("steal_scans", Json::Num(scans as f64)));
+        steal_summary.push(("stash_hits", Json::Num(stash_hits as f64)));
+        steal_summary.push(("avg_steal_batch", Json::Num(avg_batch)));
+    }
+
+    let mut summary = vec![
+        ("requests", Json::Num(REQUESTS as f64)),
+        ("pool_hit_rate", Json::Num(last_hit_rate)),
+        ("mode", json::s("mock-engine A/B, allocation handle only")),
+    ];
+    summary.extend(steal_summary);
+
+    let tables = [tab];
+    write_markdown("ablate_serving", &[], &tables).unwrap();
+    write_csv("ablate_serving", &tables).unwrap();
+    write_json("ablate_serving", &tables, &summary).unwrap();
+    println!("\nwrote bench_out/ablate_serving.json (+md, csv)");
+}

@@ -29,41 +29,50 @@ impl BackendGeometry {
         self.block_tokens * self.max_blocks_per_seq as u32
     }
 
-    /// Smallest compiled batch variant ≥ want (fallback: largest).
+    /// Smallest compiled batch variant ≥ want (fallback: largest). Runs
+    /// inside the decode loop, so: one pass, no clone, no sort, no heap.
     pub fn pick_batch(&self, want: usize) -> usize {
-        let mut sizes = self.batch_sizes.clone();
-        sizes.sort_unstable();
-        for &b in &sizes {
-            if b >= want {
-                return b;
+        let mut best: Option<usize> = None;
+        let mut largest = 0;
+        for &b in &self.batch_sizes {
+            largest = largest.max(b);
+            if b >= want && best.map_or(true, |x| b < x) {
+                best = Some(b);
             }
         }
-        *sizes.last().unwrap()
+        best.unwrap_or(largest)
     }
 }
 
-/// Model execution: logits come back row-major `[batch, vocab]`.
+/// Model execution: logits are written row-major `[batch, vocab]` into a
+/// caller-provided buffer, so the engine's step loop can reuse one
+/// pool-backed buffer instead of receiving a fresh `Vec` per step (the
+/// steady-state decode path performs zero system allocations).
 pub trait Backend {
     fn geometry(&self) -> BackendGeometry;
 
     /// Prefill `batch` lanes. `tokens`: `[batch * prefill_len]`,
-    /// `lens`: `[batch]`, `tables`: `[batch * max_blocks_per_seq]`.
+    /// `lens`: `[batch]`, `tables`: `[batch * max_blocks_per_seq]`,
+    /// `logits`: out-buffer of exactly `batch * vocab`.
     fn prefill(
         &mut self,
         batch: usize,
         tokens: &[i32],
         lens: &[i32],
         tables: &[i32],
-    ) -> Result<Vec<f32>, String>;
+        logits: &mut [f32],
+    ) -> Result<(), String>;
 
-    /// One decode step. `tokens`/`lens`: `[batch]`, `tables` as above.
+    /// One decode step. `tokens`/`lens`: `[batch]`, `tables`/`logits` as
+    /// above.
     fn decode(
         &mut self,
         batch: usize,
         tokens: &[i32],
         lens: &[i32],
         tables: &[i32],
-    ) -> Result<Vec<f32>, String>;
+        logits: &mut [f32],
+    ) -> Result<(), String>;
 }
 
 // ---------------------------------------------------------------------------
@@ -119,15 +128,17 @@ impl Backend for XlaBackend {
         tokens: &[i32],
         lens: &[i32],
         tables: &[i32],
-    ) -> Result<Vec<f32>, String> {
+        logits: &mut [f32],
+    ) -> Result<(), String> {
         let t = std::time::Instant::now();
-        let (logits, kk, vv) =
+        let (out, kk, vv) =
             self.rt.prefill(batch, tokens, lens, tables, &self.kv_k, &self.kv_v)?;
         self.kv_k = kk;
         self.kv_v = vv;
+        logits.copy_from_slice(&out);
         self.model_ns += t.elapsed().as_nanos() as u64;
         self.prefill_calls += 1;
-        Ok(logits)
+        Ok(())
     }
 
     fn decode(
@@ -136,15 +147,17 @@ impl Backend for XlaBackend {
         tokens: &[i32],
         lens: &[i32],
         tables: &[i32],
-    ) -> Result<Vec<f32>, String> {
+        logits: &mut [f32],
+    ) -> Result<(), String> {
         let t = std::time::Instant::now();
-        let (logits, kk, vv) =
+        let (out, kk, vv) =
             self.rt.decode(batch, tokens, lens, tables, &self.kv_k, &self.kv_v)?;
         self.kv_k = kk;
         self.kv_v = vv;
+        logits.copy_from_slice(&out);
         self.model_ns += t.elapsed().as_nanos() as u64;
         self.decode_calls += 1;
-        Ok(logits)
+        Ok(())
     }
 }
 
@@ -215,15 +228,17 @@ impl Backend for MockBackend {
         tokens: &[i32],
         lens: &[i32],
         _tables: &[i32],
-    ) -> Result<Vec<f32>, String> {
+        logits: &mut [f32],
+    ) -> Result<(), String> {
         assert_eq!(tokens.len(), batch * self.geo.prefill_len);
-        self.prefill_calls += 1;
         let v = self.geo.vocab;
-        let mut logits = vec![0.0f32; batch * v];
+        assert_eq!(logits.len(), batch * v);
+        self.prefill_calls += 1;
         for b in 0..batch {
             let len = lens[b] as usize;
             let row = &mut logits[b * v..(b + 1) * v];
             if len == 0 {
+                row.fill(0.0);
                 row[0] = 1.0; // pad lane: arbitrary
                 continue;
             }
@@ -231,7 +246,7 @@ impl Backend for MockBackend {
             let tok = Self::next_token(prev, len as u32);
             self.one_hot(tok, row);
         }
-        Ok(logits)
+        Ok(())
     }
 
     fn decode(
@@ -240,21 +255,22 @@ impl Backend for MockBackend {
         tokens: &[i32],
         lens: &[i32],
         _tables: &[i32],
-    ) -> Result<Vec<f32>, String> {
+        logits: &mut [f32],
+    ) -> Result<(), String> {
         if self.fail_next_decodes > 0 {
             self.fail_next_decodes -= 1;
             return Err("injected decode failure".into());
         }
         assert_eq!(tokens.len(), batch);
-        self.decode_calls += 1;
         let v = self.geo.vocab;
-        let mut logits = vec![0.0f32; batch * v];
+        assert_eq!(logits.len(), batch * v);
+        self.decode_calls += 1;
         for b in 0..batch {
             let row = &mut logits[b * v..(b + 1) * v];
             let tok = Self::next_token(tokens[b], lens[b] as u32 + 1);
             self.one_hot(tok, row);
         }
-        Ok(logits)
+        Ok(())
     }
 }
 
@@ -268,21 +284,22 @@ mod tests {
         // prompt — the recompute-equivalence property.
         let mut m = MockBackend::new();
         let p = m.geo.prefill_len;
+        let mut lg = vec![0.0f32; m.geo.vocab];
         let mut toks = vec![0i32; p];
         toks[0] = 10;
         toks[1] = 20;
-        let lg = m.prefill(1, &toks, &[2], &[]).unwrap();
+        m.prefill(1, &toks, &[2], &[], &mut lg).unwrap();
         let t1 = crate::coordinator::sampler::argmax(&lg);
 
         // decode from (t1, len 2 cached) → t2.
-        let lg2 = m.decode(1, &[t1], &[2], &[]).unwrap();
-        let t2 = crate::coordinator::sampler::argmax(&lg2);
+        m.decode(1, &[t1], &[2], &[], &mut lg).unwrap();
+        let t2 = crate::coordinator::sampler::argmax(&lg);
 
         // Replay: prefill [10, 20, t1] → must give t2.
         let mut toks2 = vec![0i32; p];
         toks2[..3].copy_from_slice(&[10, 20, t1]);
-        let lg3 = m.prefill(1, &toks2, &[3], &[]).unwrap();
-        assert_eq!(crate::coordinator::sampler::argmax(&lg3), t2);
+        m.prefill(1, &toks2, &[3], &[], &mut lg).unwrap();
+        assert_eq!(crate::coordinator::sampler::argmax(&lg), t2);
     }
 
     #[test]
@@ -298,8 +315,9 @@ mod tests {
     #[test]
     fn failure_injection() {
         let mut m = MockBackend::new();
+        let mut lg = vec![0.0f32; m.geo.vocab];
         m.fail_next_decodes = 1;
-        assert!(m.decode(1, &[1], &[1], &[]).is_err());
-        assert!(m.decode(1, &[1], &[1], &[]).is_ok());
+        assert!(m.decode(1, &[1], &[1], &[], &mut lg).is_err());
+        assert!(m.decode(1, &[1], &[1], &[], &mut lg).is_ok());
     }
 }

@@ -23,6 +23,7 @@ use super::request::{FinishReason, Request, RequestOutput, RequestState, Samplin
 use super::sampler;
 use crate::kvcache::{CacheError, KvCacheManager};
 use crate::metrics::Metrics;
+use crate::pool::{PoolHandle, PooledVec};
 
 /// Admission policy for prompt blocks.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -62,6 +63,41 @@ impl Default for EngineConfig {
     }
 }
 
+/// Reusable pool-backed step buffers: sized once from the backend
+/// geometry, repainted every iteration, never reallocated in steady
+/// state. This is what keeps the decode loop off the system allocator —
+/// the per-step `vec![…]`s the loop used to build now live on the
+/// engine's [`ShardedMultiPool`](crate::pool::ShardedMultiPool).
+struct StepBuffers {
+    /// Decode-iteration snapshot of `running` (commit may mutate it).
+    ids: PooledVec<u64>,
+    tokens: PooledVec<i32>,
+    lens: PooledVec<i32>,
+    tables: PooledVec<i32>,
+    logits: PooledVec<f32>,
+}
+
+impl StepBuffers {
+    fn new(pool: &PoolHandle, geo: &BackendGeometry, max_batch: usize) -> Self {
+        // Lane-indexed buffers are bounded by the largest compiled batch
+        // variant (pick_batch never exceeds it); the ids snapshot by the
+        // scheduler's own batch cap.
+        let max_b = geo.batch_sizes.iter().copied().max().unwrap_or(1).max(max_batch);
+        // The logits buffer is write-only to the engine (every Backend
+        // fully overwrites `batch * vocab`): paint it once here so the
+        // per-step resize is a pure length change, no memset.
+        let mut logits = PooledVec::with_capacity(pool, max_b * geo.vocab);
+        logits.fill_with(max_b * geo.vocab, 0.0);
+        Self {
+            ids: PooledVec::with_capacity(pool, max_b),
+            tokens: PooledVec::with_capacity(pool, max_b * geo.prefill_len),
+            lens: PooledVec::with_capacity(pool, max_b),
+            tables: PooledVec::with_capacity(pool, max_b * geo.max_blocks_per_seq),
+            logits,
+        }
+    }
+}
+
 /// The engine.
 pub struct Engine<B: Backend> {
     pub backend: B,
@@ -74,17 +110,32 @@ pub struct Engine<B: Backend> {
     finished: Vec<RequestOutput>,
     next_id: u64,
     step_count: u64,
+    /// Allocation capability for the request/KV hot path; shared with the
+    /// KV manager and the step buffers.
+    pool: PoolHandle,
+    bufs: StepBuffers,
     pub metrics: Metrics,
 }
 
 impl<B: Backend> Engine<B> {
+    /// Pool-backed engine (the default): per-request and per-step
+    /// allocations ride a shared [`crate::pool::ShardedMultiPool`].
     pub fn new(backend: B, cfg: EngineConfig) -> Self {
+        Self::with_pool(backend, cfg, PoolHandle::serving_default())
+    }
+
+    /// Engine over an explicit allocation handle. Pass
+    /// [`PoolHandle::system`] for the malloc-backed ablation arm (A4) —
+    /// identical engine code, no pool.
+    pub fn with_pool(backend: B, cfg: EngineConfig, pool: PoolHandle) -> Self {
         let geo = backend.geometry();
-        let kv = KvCacheManager::new(
+        let kv = KvCacheManager::with_pool(
             geo.num_blocks,
             geo.block_tokens,
             geo.max_blocks_per_seq,
+            pool.clone(),
         );
+        let bufs = StepBuffers::new(&pool, &geo, cfg.max_batch);
         Self {
             backend,
             kv,
@@ -96,8 +147,25 @@ impl<B: Backend> Engine<B> {
             finished: Vec::new(),
             next_id: 1,
             step_count: 0,
+            pool,
+            bufs,
             metrics: Metrics::new(),
         }
+    }
+
+    /// The engine's allocation handle (shared with the KV manager).
+    pub fn pool(&self) -> &PoolHandle {
+        &self.pool
+    }
+
+    /// Publish the serving pool's per-class and per-shard hit/steal
+    /// gauges into this engine's metrics registry — the payload of the
+    /// server's periodic stats dump.
+    pub fn export_pool_metrics(&self) {
+        if let Some(mp) = self.pool.multi() {
+            mp.export_metrics(&self.metrics, "pool.serving");
+        }
+        self.metrics.gauge("kv_peak_used").set(self.kv.peak_used as i64);
     }
 
     /// Submit a request. Fails fast on overload (backpressure) or an
@@ -117,6 +185,13 @@ impl<B: Backend> Engine<B> {
             self.metrics.counter("rejected").inc();
             return Err("queue full".into());
         }
+        // Clamp the generation budget to the model's context window:
+        // generation can never exceed it (ContextOverflow fires first), and
+        // `Request::new` reserves `max_tokens` up front — an unclamped
+        // client value (e.g. u32::MAX over the wire) must not turn into a
+        // multi-GiB reservation.
+        let mut params = params;
+        params.max_tokens = params.max_tokens.min(self.geo.max_context());
         let id = self.next_id;
         self.next_id += 1;
         let mut req = Request::new(id, prompt, params);
@@ -240,35 +315,46 @@ impl<B: Backend> Engine<B> {
     fn do_prefill(&mut self, admitted: Vec<u64>) -> Result<usize, String> {
         let p = self.geo.prefill_len;
         let mb = self.geo.max_blocks_per_seq;
+        let v = self.geo.vocab;
         let batch = self.geo.pick_batch(admitted.len());
-        // Register sequences + build inputs (pad lanes: len 0, scratch table).
-        let mut tokens = vec![0i32; batch * p];
-        let mut lens = vec![0i32; batch];
-        let mut tables = vec![self.geo.scratch_block as i32; batch * mb];
+        // Register sequences + repaint the step buffers (pad lanes: len 0,
+        // scratch table). The buffers are pool-backed and reused.
+        self.bufs.tokens.fill_with(batch * p, 0);
+        self.bufs.lens.fill_with(batch, 0);
+        self.bufs.tables.fill_with(batch * mb, self.geo.scratch_block as i32);
+        self.bufs.logits.set_len_initialized(batch * v);
         for (lane, &id) in admitted.iter().enumerate() {
             let replay = self.reqs[&id].replay_prompt();
             self.kv
                 .create_seq(id, replay.len() as u32)
                 .map_err(|e| format!("admission raced: {e}"))?;
-            tokens[lane * p..lane * p + replay.len()].copy_from_slice(&replay);
-            lens[lane] = replay.len() as i32;
-            tables[lane * mb..(lane + 1) * mb]
-                .copy_from_slice(&self.kv.table_row(id).unwrap());
+            self.bufs.tokens[lane * p..lane * p + replay.len()].copy_from_slice(&replay);
+            self.bufs.lens[lane] = replay.len() as i32;
+            self.kv
+                .table_row_into(id, &mut self.bufs.tables[lane * mb..(lane + 1) * mb])
+                .unwrap();
             let req = self.reqs.get_mut(&id).unwrap();
             req.state = RequestState::Running;
             if req.first_scheduled_step.is_none() {
                 req.first_scheduled_step = Some(self.step_count);
             }
         }
-        let logits = self.backend.prefill(batch, &tokens, &lens, &tables)?;
+        self.backend.prefill(
+            batch,
+            &self.bufs.tokens,
+            &self.bufs.lens,
+            &self.bufs.tables,
+            &mut self.bufs.logits,
+        )?;
         self.metrics.counter("prefill_batches").inc();
         // Sample first tokens.
-        let v = self.geo.vocab;
         let mut produced = 0;
         for (lane, &id) in admitted.iter().enumerate() {
-            let row = &logits[lane * v..(lane + 1) * v];
-            let params = self.reqs[&id].params.clone();
-            let tok = sampler::sample(row, &params, self.reqs[&id].total_tokens() as u64);
+            let tok = {
+                let req = &self.reqs[&id];
+                let row = &self.bufs.logits[lane * v..(lane + 1) * v];
+                sampler::sample(row, &req.params, req.total_tokens() as u64)
+            };
             produced += 1;
             self.running.push(id);
             self.commit_token(id, tok)?;
@@ -277,33 +363,74 @@ impl<B: Backend> Engine<B> {
     }
 
     fn do_decode(&mut self) -> Result<usize, String> {
+        // Snapshot the running set into the reusable ids buffer — commit
+        // may preempt/finish entries mid-iteration, so we must not walk
+        // `self.running` directly (this replaces the per-step clone).
+        let mut ids = std::mem::take(&mut self.bufs.ids);
+        ids.clear();
+        ids.extend_from_slice(&self.running);
+        let res = self.decode_ids(&ids);
+        self.bufs.ids = ids;
+        res
+    }
+
+    fn decode_ids(&mut self, ids: &[u64]) -> Result<usize, String> {
         let mb = self.geo.max_blocks_per_seq;
-        let ids: Vec<u64> = self.running.clone();
+        let v = self.geo.vocab;
         let mut produced = 0;
         // Chunk the running set into compiled batch variants.
         for chunk in ids.chunks(self.geo.pick_batch(ids.len().min(self.cfg.max_batch))) {
             let batch = self.geo.pick_batch(chunk.len());
-            let mut tokens = vec![0i32; batch];
-            let mut lens = vec![0i32; batch];
-            let mut tables = vec![self.geo.scratch_block as i32; batch * mb];
+            self.bufs.tokens.fill_with(batch, 0);
+            self.bufs.lens.fill_with(batch, 0);
+            self.bufs.tables.fill_with(batch * mb, self.geo.scratch_block as i32);
+            self.bufs.logits.set_len_initialized(batch * v);
             for (lane, &id) in chunk.iter().enumerate() {
-                let req = &self.reqs[&id];
+                // A request can vanish (aborted) or lose its cache rows
+                // (preempted) through an earlier chunk's preemption
+                // cascade; decoding such a lane would attend over the
+                // scratch block and commit a garbage token into its
+                // replay prompt. Leave it a pad lane — `lens == 0` marks
+                // it, and the sampling loop below skips those (a live
+                // lane always has lens ≥ 1: non-empty prompt + ≥1
+                // generated token).
+                let Some(req) = self.reqs.get(&id) else { continue };
+                if req.state != RequestState::Running {
+                    continue;
+                }
                 // Last token is the most recent generated one (running seqs
                 // always have ≥1 generated token, from prefill sampling).
-                tokens[lane] = *req.generated.last().expect("running seq has a token");
+                self.bufs.tokens[lane] =
+                    *req.generated.last().expect("running seq has a token");
                 // Cache currently holds total_tokens - 1 (the new token's
                 // K/V is written by this decode call).
-                lens[lane] = (req.total_tokens() - 1) as i32;
-                tables[lane * mb..(lane + 1) * mb]
-                    .copy_from_slice(&self.kv.table_row(id).unwrap());
+                self.bufs.lens[lane] = (req.total_tokens() - 1) as i32;
+                self.kv
+                    .table_row_into(id, &mut self.bufs.tables[lane * mb..(lane + 1) * mb])
+                    .expect("running request has a cache row");
             }
-            let logits = self.backend.decode(batch, &tokens, &lens, &tables)?;
+            self.backend.decode(
+                batch,
+                &self.bufs.tokens,
+                &self.bufs.lens,
+                &self.bufs.tables,
+                &mut self.bufs.logits,
+            )?;
             self.metrics.counter("decode_batches").inc();
-            let v = self.geo.vocab;
             for (lane, &id) in chunk.iter().enumerate() {
-                let row = &logits[lane * v..(lane + 1) * v];
-                let params = self.reqs[&id].params.clone();
-                let tok = sampler::sample(row, &params, self.reqs[&id].total_tokens() as u64);
+                // Pad lane (vanished or preempted before this chunk was
+                // painted): nothing was decoded for it, nothing to commit.
+                // Requests preempted mid-chunk (after painting) keep their
+                // lens ≥ 1 lane and still commit, preserving the exact
+                // replay prompt.
+                if self.bufs.lens[lane] == 0 {
+                    continue;
+                }
+                let tok = {
+                    let Some(req) = self.reqs.get(&id) else { continue };
+                    let row = &self.bufs.logits[lane * v..(lane + 1) * v];
+                    sampler::sample(row, &req.params, req.total_tokens() as u64)
+                };
                 produced += 1;
                 self.commit_token(id, tok)?;
             }
@@ -393,10 +520,12 @@ impl<B: Backend> Engine<B> {
         self.metrics
             .histogram("queue_steps")
             .record(first.saturating_sub(req.arrived_step));
+        // The request is dead: move its buffers into the output instead of
+        // cloning them.
         self.finished.push(RequestOutput {
             id,
-            prompt: req.prompt.clone(),
-            tokens: req.generated.clone(),
+            prompt: req.prompt,
+            tokens: req.generated,
             finish: reason,
             preemptions: req.preemptions,
             queue_steps: first.saturating_sub(req.arrived_step),
@@ -587,5 +716,50 @@ mod tests {
         let mut e = engine(EngineConfig::default());
         assert_eq!(e.step().unwrap(), 0);
         assert!(!e.has_work());
+    }
+
+    #[test]
+    fn pool_backed_and_malloc_backed_agree() {
+        // A4's correctness leg: the two ablation arms run identical
+        // engine code and must produce identical outputs.
+        let run = |pool: crate::pool::PoolHandle| {
+            let mut e = Engine::with_pool(
+                MockBackend::new(),
+                EngineConfig { max_batch: 4, ..Default::default() },
+                pool,
+            );
+            for i in 0..6 {
+                e.submit(vec![i + 1, 2 * i + 3], SamplingParams::greedy(12)).unwrap();
+            }
+            let mut outs = e.run_to_completion(100_000).unwrap();
+            outs.sort_by_key(|o| o.id);
+            outs.iter().map(|o| o.tokens.clone()).collect::<Vec<_>>()
+        };
+        let pooled = run(crate::pool::PoolHandle::serving_default());
+        let malloc = run(crate::pool::PoolHandle::system());
+        assert_eq!(pooled, malloc);
+    }
+
+    #[test]
+    fn pool_serves_the_steady_state_hot_path() {
+        let mut e = engine(EngineConfig::default());
+        e.submit(vec![1, 2, 3], SamplingParams::greedy(20)).unwrap();
+        e.run_to_completion(10_000).unwrap();
+        let mp = e.pool().multi().expect("default engine is pool-backed");
+        let hits: u64 = (0..mp.num_classes()).map(|c| mp.class_hits(c)).sum();
+        assert!(hits > 0, "step buffers and KV tables must be pool-served");
+        assert!(mp.pool_hit_rate() > 0.9, "{}", mp.pool_hit_rate());
+    }
+
+    #[test]
+    fn export_pool_metrics_publishes_gauges() {
+        let mut e = engine(EngineConfig::default());
+        e.submit(vec![4, 5], SamplingParams::greedy(4)).unwrap();
+        e.run_to_completion(1000).unwrap();
+        e.export_pool_metrics();
+        let r = e.metrics.report();
+        assert!(r.contains("pool.serving.hit_rate_pct"), "{r}");
+        assert!(r.contains("pool.serving.c16.shards"), "{r}");
+        assert!(r.contains("kv_peak_used"), "{r}");
     }
 }

@@ -70,12 +70,15 @@ pub struct Request {
 
 impl Request {
     pub fn new(id: u64, prompt: Vec<i32>, params: SamplingParams) -> Self {
+        // Reserve the whole generation up front (bounded by max_tokens):
+        // submit-time cost so the decode hot path's push never reallocates.
+        let generated = Vec::with_capacity(params.max_tokens as usize);
         Self {
             id,
             prompt,
             params,
             state: RequestState::Queued,
-            generated: Vec::new(),
+            generated,
             arrived_step: 0,
             first_scheduled_step: None,
             finished_step: None,

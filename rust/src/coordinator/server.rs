@@ -35,6 +35,12 @@ struct Submit {
     reply: Sender<Result<RequestOutput, String>>,
 }
 
+/// Engine steps between periodic stats dumps (pool per-class/per-shard
+/// hit/steal gauges + scheduler counters, printed to stderr). The export
+/// formats gauge names on every call — cheap at this cadence, but do not
+/// move it into the per-step path.
+const STATS_EVERY_STEPS: u64 = 512;
+
 /// Server handle: join it to block until shutdown.
 pub struct Server {
     pub addr: std::net::SocketAddr,
@@ -59,6 +65,7 @@ impl Server {
         let engine_thread = std::thread::spawn(move || {
             let mut waiters: HashMap<u64, Sender<Result<RequestOutput, String>>> =
                 HashMap::new();
+            let mut last_stats_step = 0u64;
             loop {
                 // Drain submissions (non-blocking).
                 while let Ok(sub) = rx.try_recv() {
@@ -84,8 +91,26 @@ impl Server {
                             let _ = w.send(Ok(out));
                         }
                     }
+                    // Periodic stats dump: pool hit/steal gauges land in
+                    // the registry and the whole report goes to stderr.
+                    if engine.steps() - last_stats_step >= STATS_EVERY_STEPS {
+                        last_stats_step = engine.steps();
+                        engine.export_pool_metrics();
+                        eprintln!(
+                            "[server stats @ step {}]\n{}",
+                            engine.steps(),
+                            engine.metrics.report()
+                        );
+                    }
                 } else {
                     if shutdown_e.load(Ordering::Relaxed) {
+                        // Final dump so short-lived servers still report.
+                        engine.export_pool_metrics();
+                        eprintln!(
+                            "[server stats @ shutdown, step {}]\n{}",
+                            engine.steps(),
+                            engine.metrics.report()
+                        );
                         return;
                     }
                     std::thread::sleep(std::time::Duration::from_micros(200));

@@ -13,6 +13,8 @@
 
 use std::collections::HashMap;
 
+use crate::pool::{PoolHandle, PooledVec};
+
 /// The paper's fixed-size pool over block *indices* (§IV adapted to
 /// device-resident blocks). O(1) allocate/free, lazy initialisation,
 /// no loops.
@@ -69,7 +71,11 @@ impl BlockAllocator {
     pub fn free(&mut self, idx: u32) {
         assert!(idx < self.num_blocks, "free: block {idx} out of range");
         debug_assert!(!self.is_free_slow(idx), "double free of block {idx}");
-        self.next_free[idx as usize] = if self.head == NIL { self.num_blocks } else { self.head };
+        // Bugfix: freeing into an EMPTY list used to write the
+        // out-of-range sentinel `num_blocks` as the terminator instead of
+        // the module's NIL convention. `head` is NIL exactly when the
+        // list is empty, so it is always the correct link to thread.
+        self.next_free[idx as usize] = self.head;
         self.head = idx;
         self.num_free += 1;
     }
@@ -91,10 +97,15 @@ impl BlockAllocator {
     }
 
     /// Test/debug helper: walks the free list (O(n), never on hot path).
+    ///
+    /// Hardened against a stale terminator: any link outside the valid
+    /// index range (NIL, or the out-of-range `num_blocks` sentinel that
+    /// pre-fix `free` wrote into serialized pool states) ends the walk
+    /// instead of indexing out of bounds.
     fn is_free_slow(&self, idx: u32) -> bool {
         let mut cur = self.head;
         let mut steps = 0;
-        while cur != NIL && cur < self.num_blocks && steps <= self.num_blocks {
+        while cur < self.num_blocks && steps <= self.num_blocks {
             if cur == idx {
                 return true;
             }
@@ -109,10 +120,13 @@ impl BlockAllocator {
     }
 }
 
-/// One sequence's cache state: its block table and token count.
+/// One sequence's cache state: its block table and token count. The
+/// block table is a [`PooledVec`] sized to `max_blocks_per_seq` at
+/// admission, so decode-time growth is a plain in-place write — the
+/// per-request storage itself lives on the pool, not the system heap.
 #[derive(Debug, Clone)]
 pub struct SeqCache {
-    pub blocks: Vec<u32>,
+    pub blocks: PooledVec<u32>,
     pub tokens: u32,
 }
 
@@ -121,10 +135,17 @@ impl SeqCache {
     /// the scratch block — always valid, always masked by seq_len).
     pub fn table_row(&self, max_blocks: usize, scratch: u32) -> Vec<i32> {
         let mut row = vec![scratch as i32; max_blocks];
-        for (i, &b) in self.blocks.iter().enumerate().take(max_blocks) {
-            row[i] = b as i32;
-        }
+        self.table_row_into(&mut row, scratch);
         row
+    }
+
+    /// Write the padded block-table row into `out` without allocating —
+    /// the decode hot path's flavour.
+    pub fn table_row_into(&self, out: &mut [i32], scratch: u32) {
+        out.fill(scratch as i32);
+        for (o, &b) in out.iter_mut().zip(self.blocks.iter()) {
+            *o = b as i32;
+        }
     }
 }
 
@@ -150,10 +171,14 @@ impl std::fmt::Display for CacheError {
     }
 }
 
-/// The KV-cache manager: allocator + per-sequence tables.
+/// The KV-cache manager: allocator + per-sequence tables. Per-sequence
+/// block tables are pool-backed through a [`PoolHandle`] — the serving
+/// engine passes its shared [`crate::pool::ShardedMultiPool`] handle so
+/// admission-time storage comes off the pool, not malloc.
 pub struct KvCacheManager {
     alloc: BlockAllocator,
     seqs: HashMap<u64, SeqCache>,
+    pool: PoolHandle,
     pub block_tokens: u32,
     pub max_blocks_per_seq: usize,
     /// Reserved scratch block (the model routes padding writes here); never
@@ -164,9 +189,22 @@ pub struct KvCacheManager {
 }
 
 impl KvCacheManager {
-    /// `num_blocks` includes the scratch block (index `num_blocks - 1`),
-    /// which is reserved immediately.
+    /// As [`Self::with_pool`] with a system (malloc) handle — standalone
+    /// uses and the A4 malloc arm. The serving engine always passes its
+    /// pooled handle instead.
     pub fn new(num_blocks: u32, block_tokens: u32, max_blocks_per_seq: usize) -> Self {
+        Self::with_pool(num_blocks, block_tokens, max_blocks_per_seq, PoolHandle::system())
+    }
+
+    /// `num_blocks` includes the scratch block (index `num_blocks - 1`),
+    /// which is reserved immediately. Per-sequence block tables are
+    /// allocated from `pool`.
+    pub fn with_pool(
+        num_blocks: u32,
+        block_tokens: u32,
+        max_blocks_per_seq: usize,
+        pool: PoolHandle,
+    ) -> Self {
         assert!(num_blocks >= 2, "need at least one data block + scratch");
         // Reserve the scratch block: the lazy allocator hands out 0,1,2,…
         // so burning indices until we hit scratch would defeat laziness;
@@ -178,6 +216,7 @@ impl KvCacheManager {
         Self {
             alloc,
             seqs: HashMap::new(),
+            pool,
             block_tokens,
             max_blocks_per_seq,
             scratch_block,
@@ -204,7 +243,9 @@ impl KvCacheManager {
         if needed > self.alloc.num_free() {
             return Err(CacheError::OutOfBlocks { needed, free: self.alloc.num_free() });
         }
-        let mut blocks = Vec::with_capacity(needed as usize);
+        // Pool-backed table sized to the worst case up front, so decode
+        // growth (append_token) never reallocates.
+        let mut blocks = PooledVec::with_capacity(&self.pool, self.max_blocks_per_seq);
         for _ in 0..needed {
             blocks.push(self.alloc.allocate().expect("checked free count"));
         }
@@ -241,11 +282,12 @@ impl KvCacheManager {
         Ok(())
     }
 
-    /// Free all of a sequence's blocks (completion or preemption).
+    /// Free all of a sequence's blocks (completion or preemption). The
+    /// pool-backed table itself returns to the pool when `seq` drops.
     pub fn free_seq(&mut self, seq_id: u64) -> Result<u32, CacheError> {
         let seq = self.seqs.remove(&seq_id).ok_or(CacheError::UnknownSeq(seq_id))?;
         let n = seq.blocks.len() as u32;
-        for b in seq.blocks {
+        for &b in seq.blocks.iter() {
             self.alloc.free(b);
         }
         Ok(n)
@@ -255,10 +297,19 @@ impl KvCacheManager {
         self.seqs.get(&seq_id)
     }
 
-    /// Block-table row for the model input.
+    /// Block-table row for the model input (allocating flavour; tests and
+    /// cold paths).
     pub fn table_row(&self, seq_id: u64) -> Result<Vec<i32>, CacheError> {
         let seq = self.seqs.get(&seq_id).ok_or(CacheError::UnknownSeq(seq_id))?;
         Ok(seq.table_row(self.max_blocks_per_seq, self.scratch_block))
+    }
+
+    /// Write the block-table row into `out` (a `max_blocks_per_seq`-wide
+    /// lane of the step buffer) without allocating — the decode path.
+    pub fn table_row_into(&self, seq_id: u64, out: &mut [i32]) -> Result<(), CacheError> {
+        let seq = self.seqs.get(&seq_id).ok_or(CacheError::UnknownSeq(seq_id))?;
+        seq.table_row_into(out, self.scratch_block);
+        Ok(())
     }
 
     pub fn num_free_blocks(&self) -> u32 {
@@ -316,11 +367,40 @@ mod tests {
         let mut a = BlockAllocator::new(2);
         let x = a.allocate().unwrap();
         let y = a.allocate().unwrap();
-        a.free(x); // head was NIL → sentinel written
+        a.free(x); // head was NIL → NIL terminator written
         a.free(y);
         assert_eq!(a.allocate(), Some(y));
         assert_eq!(a.allocate(), Some(x));
         assert_eq!(a.allocate(), None);
+    }
+
+    #[test]
+    fn free_into_empty_list_writes_nil_and_recycles_to_exhaustion() {
+        // Regression: freeing into an empty list wrote the out-of-range
+        // sentinel `num_blocks` into `next_free` instead of NIL.
+        let mut a = BlockAllocator::new(3);
+        let got: Vec<u32> = (0..3).map(|_| a.allocate().unwrap()).collect();
+        assert_eq!(a.allocate(), None);
+        a.free(got[0]);
+        assert_eq!(
+            a.next_free[got[0] as usize],
+            NIL,
+            "empty-list free must thread the NIL terminator"
+        );
+        assert!(a.is_free_slow(got[0]));
+        // The hardened walk must also survive a stale pre-fix sentinel.
+        a.next_free[got[0] as usize] = a.num_blocks;
+        assert!(a.is_free_slow(got[0]));
+        assert!(!a.is_free_slow(got[1]));
+        a.next_free[got[0] as usize] = NIL;
+        // The whole pool recycles to exhaustion through that entry.
+        for &b in &got[1..] {
+            a.free(b);
+        }
+        let mut again: Vec<u32> = (0..3).map(|_| a.allocate().unwrap()).collect();
+        assert_eq!(a.allocate(), None);
+        again.sort_unstable();
+        assert_eq!(again, vec![0, 1, 2]);
     }
 
     #[test]
@@ -431,6 +511,27 @@ mod tests {
         m.free_seq(1).unwrap();
         assert_eq!(m.peak_used, 4); // peak sticks
         assert_eq!(m.utilization(), 0.0);
+    }
+
+    #[test]
+    fn pooled_manager_tables_come_from_the_pool() {
+        let pool = PoolHandle::serving_default();
+        let mut m = KvCacheManager::with_pool(17, 16, 4, pool.clone());
+        m.create_seq(1, 40).unwrap(); // 3 blocks
+        let mp = pool.multi().unwrap();
+        let hits: u64 = (0..mp.num_classes()).map(|c| mp.class_hits(c)).sum();
+        assert!(hits >= 1, "block table must be pool-served");
+        // table_row_into writes without allocating and matches table_row.
+        let mut lane = [0i32; 4];
+        m.table_row_into(1, &mut lane).unwrap();
+        assert_eq!(lane.to_vec(), m.table_row(1).unwrap());
+        // Growth stays in place up to max_blocks_per_seq.
+        for _ in 0..8 {
+            m.append_token(1).unwrap();
+        }
+        assert_eq!(m.seq(1).unwrap().blocks.len(), 3);
+        m.free_seq(1).unwrap();
+        assert_eq!(m.num_free_blocks(), 16);
     }
 
     #[test]

@@ -80,34 +80,33 @@ impl Metrics {
         Self::default()
     }
 
+    // The getters probe with `&str` before inserting so a metric that
+    // already exists is returned without allocating (`to_string` only on
+    // first registration) — the engine's step loop calls these every
+    // iteration and must stay heap-silent in steady state.
+
     pub fn counter(&self, name: &str) -> Arc<Counter> {
-        self.inner
-            .counters
-            .lock()
-            .unwrap()
-            .entry(name.to_string())
-            .or_default()
-            .clone()
+        let mut m = self.inner.counters.lock().unwrap();
+        if let Some(c) = m.get(name) {
+            return c.clone();
+        }
+        m.entry(name.to_string()).or_default().clone()
     }
 
     pub fn gauge(&self, name: &str) -> Arc<Gauge> {
-        self.inner
-            .gauges
-            .lock()
-            .unwrap()
-            .entry(name.to_string())
-            .or_default()
-            .clone()
+        let mut m = self.inner.gauges.lock().unwrap();
+        if let Some(g) = m.get(name) {
+            return g.clone();
+        }
+        m.entry(name.to_string()).or_default().clone()
     }
 
     pub fn histogram(&self, name: &str) -> Arc<Histo> {
-        self.inner
-            .histos
-            .lock()
-            .unwrap()
-            .entry(name.to_string())
-            .or_default()
-            .clone()
+        let mut m = self.inner.histos.lock().unwrap();
+        if let Some(h) = m.get(name) {
+            return h.clone();
+        }
+        m.entry(name.to_string()).or_default().clone()
     }
 
     /// Human-readable snapshot of everything, sorted by name.

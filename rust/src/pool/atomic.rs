@@ -141,41 +141,9 @@ impl AtomicPool {
         self.allocate_index().map(|i| self.addr_from_index(i))
     }
 
-    /// Allocate, returning the block index (used by the KV-cache manager,
-    /// which works in index space like the paper's bookkeeping).
-    pub fn allocate_index(&self) -> Option<u32> {
-        // Fast path: pop the Treiber stack.
-        let mut cur = self.head.load(Ordering::Acquire);
-        loop {
-            let (idx, tag) = unpack(cur);
-            if idx == NIL {
-                break; // stack empty → try the watermark
-            }
-            let nxt = self.next[idx as usize].load(Ordering::Relaxed);
-            match self.head.compare_exchange_weak(
-                cur,
-                pack(nxt, tag.wrapping_add(1)),
-                Ordering::AcqRel,
-                Ordering::Acquire,
-            ) {
-                Ok(_) => {
-                    self.free.fetch_sub(1, Ordering::Relaxed);
-                    return Some(idx);
-                }
-                Err(actual) => cur = actual,
-            }
-        }
-        // Slow path: claim a never-threaded block (the paper's lazy-init
-        // watermark, made atomic). One fetch_add, no loop.
-        let w = self.watermark.fetch_add(1, Ordering::Relaxed);
-        if w < self.num_blocks {
-            self.free.fetch_sub(1, Ordering::Relaxed);
-            return Some(w);
-        }
-        // Undo overshoot so the counter cannot wrap over many failures.
-        self.watermark.fetch_sub(1, Ordering::Relaxed);
-        // The stack may have been refilled by a racing free; one retry of
-        // the pop keeps exhaustion detection accurate without spinning.
+    /// One Treiber pop (CAS loop). `None` when the stack is empty.
+    #[inline]
+    fn pop_stack(&self) -> Option<u32> {
         let mut cur = self.head.load(Ordering::Acquire);
         loop {
             let (idx, tag) = unpack(cur);
@@ -196,6 +164,108 @@ impl AtomicPool {
                 Err(actual) => cur = actual,
             }
         }
+    }
+
+    /// Claim up to `want` never-threaded blocks from the lazy-init
+    /// watermark with one `fetch_add`, writing indices into `out`.
+    /// Returns the number claimed (overshoot is undone).
+    #[inline]
+    fn claim_watermark(&self, want: u32, out: &mut [u32]) -> u32 {
+        debug_assert!(want as usize <= out.len());
+        let w = self.watermark.fetch_add(want, Ordering::Relaxed);
+        let avail = self.num_blocks.saturating_sub(w).min(want);
+        if avail < want {
+            // Undo overshoot so the counter cannot wrap over many failures.
+            self.watermark.fetch_sub(want - avail, Ordering::Relaxed);
+        }
+        for (i, slot) in out.iter_mut().take(avail as usize).enumerate() {
+            *slot = w + i as u32;
+        }
+        if avail > 0 {
+            self.free.fetch_sub(avail, Ordering::Relaxed);
+        }
+        avail
+    }
+
+    /// Allocate, returning the block index (used by the KV-cache manager,
+    /// which works in index space like the paper's bookkeeping).
+    pub fn allocate_index(&self) -> Option<u32> {
+        // Fast path: pop the Treiber stack.
+        if let Some(idx) = self.pop_stack() {
+            return Some(idx);
+        }
+        // Slow path: claim a never-threaded block (the paper's lazy-init
+        // watermark, made atomic). One fetch_add, no loop.
+        let mut one = [0u32; 1];
+        if self.claim_watermark(1, &mut one) == 1 {
+            return Some(one[0]);
+        }
+        // The stack may have been refilled by a racing free; one retry of
+        // the pop keeps exhaustion detection accurate without spinning.
+        self.pop_stack()
+    }
+
+    /// Batched allocate: take up to `max` blocks in (amortised) one head
+    /// CAS, filling `out[..n]` with their indices and returning `n`.
+    ///
+    /// The Treiber chain is detached whole: the chain `head → … → k-th`
+    /// is read, then one tag-guarded CAS moves the head past it. A stale
+    /// walk (another thread popped/pushed meanwhile) bumps the tag and the
+    /// CAS fails, discarding the read — the same ABA defence as the
+    /// single pop. Any shortfall is topped up from the lazy-init
+    /// watermark with one more `fetch_add`. Used by the sharded layer's
+    /// batched sibling steal (take k per scan, amortising the scan cost).
+    pub fn allocate_batch(&self, max: u32, out: &mut [u32]) -> u32 {
+        let want = max.min(out.len() as u32);
+        if want == 0 {
+            return 0;
+        }
+        let mut got = 0u32;
+        // Chain-pop from the stack.
+        let mut cur = self.head.load(Ordering::Acquire);
+        loop {
+            let (idx, tag) = unpack(cur);
+            if idx == NIL {
+                break;
+            }
+            // Walk up to `want` links. The values read may be stale; the
+            // head CAS below validates the whole chain (any interleaved
+            // pop or push bumps the tag and fails it).
+            out[0] = idx;
+            let mut n = 1u32;
+            let mut tail_next = self.next[idx as usize].load(Ordering::Relaxed);
+            while n < want && tail_next != NIL && tail_next < self.num_blocks {
+                out[n as usize] = tail_next;
+                tail_next = self.next[tail_next as usize].load(Ordering::Relaxed);
+                n += 1;
+            }
+            match self.head.compare_exchange_weak(
+                cur,
+                pack(tail_next, tag.wrapping_add(1)),
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => {
+                    self.free.fetch_sub(n, Ordering::Relaxed);
+                    got = n;
+                    break;
+                }
+                Err(actual) => cur = actual,
+            }
+        }
+        // Top up from the watermark.
+        if got < want {
+            got += self.claim_watermark(want - got, &mut out[got as usize..]);
+        }
+        // Parity with `allocate_index`: catch a free that raced the
+        // empty-stack observation so exhaustion reports stay accurate.
+        if got == 0 {
+            if let Some(idx) = self.pop_stack() {
+                out[0] = idx;
+                got = 1;
+            }
+        }
+        got
     }
 
     /// Lock-free deallocate by pointer.
@@ -450,6 +520,101 @@ mod tests {
         } // drop: must NOT dealloc `buf`'s storage
         buf[0] = 0xEE; // still writable
         assert_eq!(buf[0], 0xEE);
+    }
+
+    #[test]
+    fn batch_allocate_drains_exactly_and_uniquely() {
+        let p = AtomicPool::with_blocks(16, 10);
+        let mut out = [0u32; 4];
+        let mut seen = BTreeSet::new();
+        let mut total = 0;
+        loop {
+            let n = p.allocate_batch(4, &mut out);
+            if n == 0 {
+                break;
+            }
+            for &i in &out[..n as usize] {
+                assert!(seen.insert(i), "batch handed out {i} twice");
+            }
+            total += n;
+        }
+        assert_eq!(total, 10);
+        assert_eq!(p.num_free(), 0);
+        assert!(p.allocate().is_none());
+    }
+
+    #[test]
+    fn batch_allocate_chains_through_freed_stack() {
+        // Free a LIFO chain, then detach it whole: one batch must return
+        // the freed blocks (stack first), topping up from the watermark.
+        let p = AtomicPool::with_blocks(16, 8);
+        let a: Vec<u32> = (0..4).map(|_| p.allocate_index().unwrap()).collect();
+        for &i in &a {
+            p.deallocate_index(i);
+        }
+        let mut out = [0u32; 6];
+        let n = p.allocate_batch(6, &mut out);
+        assert_eq!(n, 6, "4 from the stack chain + 2 from the watermark");
+        let got: BTreeSet<u32> = out[..6].iter().copied().collect();
+        assert_eq!(got.len(), 6);
+        for &i in &a {
+            assert!(got.contains(&i), "freed block {i} must be in the chain");
+        }
+        assert_eq!(p.num_free(), 2);
+    }
+
+    #[test]
+    fn batch_allocate_zero_and_oversize_requests() {
+        let p = AtomicPool::with_blocks(16, 3);
+        let mut out = [0u32; 8];
+        assert_eq!(p.allocate_batch(0, &mut out), 0);
+        assert_eq!(p.allocate_batch(0, &mut []), 0);
+        // Asking for more than capacity returns what exists.
+        assert_eq!(p.allocate_batch(8, &mut out), 3);
+        assert_eq!(p.allocate_batch(8, &mut out), 0);
+        assert_eq!(p.num_free(), 0);
+    }
+
+    #[test]
+    fn batch_allocate_concurrent_no_double_handout() {
+        // Mixed single/batch churn: conservation and uniqueness must hold.
+        let pool = Arc::new(AtomicPool::with_blocks(16, 128));
+        std::thread::scope(|s| {
+            for t in 0..8u64 {
+                let pool = Arc::clone(&pool);
+                s.spawn(move || {
+                    let mut rng = crate::util::Rng::new(t + 11);
+                    let mut held: Vec<u32> = Vec::new();
+                    let mut out = [0u32; 8];
+                    for _ in 0..20_000 {
+                        if held.is_empty() || rng.gen_bool(0.5) {
+                            if rng.gen_bool(0.3) {
+                                let n = pool.allocate_batch(
+                                    1 + rng.gen_range(8) as u32,
+                                    &mut out,
+                                );
+                                held.extend_from_slice(&out[..n as usize]);
+                            } else if let Some(i) = pool.allocate_index() {
+                                held.push(i);
+                            }
+                        } else {
+                            let i = rng.gen_usize(0, held.len());
+                            pool.deallocate_index(held.swap_remove(i));
+                        }
+                    }
+                    for i in held {
+                        pool.deallocate_index(i);
+                    }
+                });
+            }
+        });
+        assert_eq!(pool.num_free(), 128, "exact free count at quiescence");
+        // Every block allocatable exactly once afterwards.
+        let mut seen = BTreeSet::new();
+        while let Some(i) = pool.allocate_index() {
+            assert!(seen.insert(i), "double handout after churn");
+        }
+        assert_eq!(seen.len(), 128);
     }
 
     #[test]

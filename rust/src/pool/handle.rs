@@ -1,0 +1,504 @@
+//! `PoolHandle` / `PooledVec` — the serving engine's route into the pool
+//! family.
+//!
+//! The coordinator's hot path needs plain growable buffers (token lanes,
+//! block tables, logits rows), not raw blocks. `PoolHandle` is a cheap,
+//! cloneable capability that routes byte allocations either through a
+//! shared [`ShardedMultiPool`] (the paper's pool speedup, thread-safe via
+//! the sharded layer) or straight through the system allocator — the
+//! latter exists so ablation A4 can A/B "pool-backed vs malloc-backed
+//! serving path" with the *same* engine code.
+//!
+//! `PooledVec<T>` is the vec flavour the engine uses: fixed capacity
+//! decided up front (engine geometry is static), length moves freely, and
+//! the backing block returns to the pool on drop. Pushing past capacity
+//! grows by doubling — correct but counted, so the steady-state tests can
+//! prove it never happens on the decode path.
+
+use core::alloc::Layout;
+use core::marker::PhantomData;
+use core::ops::{Deref, DerefMut};
+use core::ptr::NonNull;
+use std::sync::Arc;
+
+use super::multi::{MultiPoolConfig, Origin, ShardedMultiPool};
+
+/// All pool-served blocks (and the system fallback inside
+/// [`ShardedMultiPool`]) are 16-aligned; `PooledVec` element types must
+/// not need more.
+const HANDLE_ALIGN: usize = 16;
+
+/// Where a `PooledVec`'s backing block came from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Backing {
+    /// Served by the handle's multi-pool (class or its system fallback).
+    Pool(Origin),
+    /// Handle is in system mode (malloc-backed ablation arm).
+    System,
+    /// Zero-capacity vec: nothing to free.
+    Empty,
+}
+
+/// A cloneable allocation capability for the serving stack.
+///
+/// `pooled`/`serving_default` route through a shared thread-safe
+/// [`ShardedMultiPool`]; [`PoolHandle::system`] routes every request to
+/// the system allocator (the malloc-backed ablation arm).
+#[derive(Clone)]
+pub struct PoolHandle {
+    inner: Option<Arc<ShardedMultiPool>>,
+}
+
+impl PoolHandle {
+    /// Pool-backed handle over a fresh [`ShardedMultiPool`].
+    pub fn pooled(cfg: MultiPoolConfig, shards: usize) -> Self {
+        Self { inner: Some(Arc::new(ShardedMultiPool::with_shards(cfg, shards))) }
+    }
+
+    /// Share an existing multi-pool.
+    pub fn from_multi(multi: Arc<ShardedMultiPool>) -> Self {
+        Self { inner: Some(multi) }
+    }
+
+    /// Pool-backed handle sized for the serving engine: classes 16 B …
+    /// 4 KiB (token lanes, block tables, logits rows for small models all
+    /// land inside; bigger rows fall through to the counted system
+    /// fallback), sharded by available parallelism.
+    pub fn serving_default() -> Self {
+        Self::pooled(
+            MultiPoolConfig {
+                min_class: 16,
+                max_class: 4096,
+                blocks_per_class: 256,
+                system_fallback: true,
+            },
+            super::sharded::default_shards(),
+        )
+    }
+
+    /// Malloc-backed handle: every allocation goes to the system
+    /// allocator. The ablation baseline — same engine code, no pool.
+    pub fn system() -> Self {
+        Self { inner: None }
+    }
+
+    pub fn is_pooled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// The backing multi-pool, when pooled (metrics export, stats).
+    pub fn multi(&self) -> Option<&ShardedMultiPool> {
+        self.inner.as_deref()
+    }
+
+    /// Allocate `size` bytes at 16-alignment. `size` must be non-zero.
+    fn alloc_bytes(&self, size: usize) -> Option<(NonNull<u8>, Backing)> {
+        debug_assert!(size > 0);
+        match &self.inner {
+            Some(mp) => mp.allocate(size).map(|(p, o)| (p, Backing::Pool(o))),
+            None => {
+                let layout = Layout::from_size_align(size, HANDLE_ALIGN).ok()?;
+                NonNull::new(unsafe { std::alloc::alloc(layout) })
+                    .map(|p| (p, Backing::System))
+            }
+        }
+    }
+
+    /// # Safety
+    /// `(p, size, backing)` must match a live allocation from
+    /// [`Self::alloc_bytes`] on this handle (or a clone of it).
+    unsafe fn dealloc_bytes(&self, p: NonNull<u8>, size: usize, backing: Backing) {
+        match backing {
+            Backing::Pool(origin) => {
+                self.inner
+                    .as_ref()
+                    .expect("pool-backed block freed through a system handle")
+                    .deallocate(p, size, origin);
+            }
+            Backing::System => {
+                let layout = Layout::from_size_align(size, HANDLE_ALIGN)
+                    .expect("layout was valid at alloc");
+                std::alloc::dealloc(p.as_ptr(), layout);
+            }
+            Backing::Empty => {}
+        }
+    }
+}
+
+impl std::fmt::Debug for PoolHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PoolHandle").field("pooled", &self.is_pooled()).finish()
+    }
+}
+
+/// A fixed-capacity vector whose backing block comes from a
+/// [`PoolHandle`]. `T: Copy` keeps drops trivial — exactly the payloads
+/// the serving path moves (token ids, lens, table rows, logits).
+pub struct PooledVec<T: Copy> {
+    ptr: NonNull<u8>,
+    /// Capacity in elements. 0 ⇒ `ptr` dangles and nothing is freed.
+    cap: usize,
+    len: usize,
+    /// High-water mark of initialised elements (`max` of every `len` ever
+    /// reached): [`Self::set_len_initialized`] may expose up to here
+    /// without repainting.
+    init: usize,
+    backing: Backing,
+    handle: PoolHandle,
+    _marker: PhantomData<T>,
+}
+
+// SAFETY: PooledVec owns its block exclusively; the handle's pools are
+// Sync, so moving/sharing follows the element type.
+unsafe impl<T: Copy + Send> Send for PooledVec<T> {}
+unsafe impl<T: Copy + Sync> Sync for PooledVec<T> {}
+
+impl<T: Copy> PooledVec<T> {
+    /// Empty vec with `cap` elements of room taken from `handle`.
+    pub fn with_capacity(handle: &PoolHandle, cap: usize) -> Self {
+        assert!(
+            core::mem::align_of::<T>() <= HANDLE_ALIGN,
+            "PooledVec element alignment exceeds pool block alignment"
+        );
+        assert!(core::mem::size_of::<T>() > 0, "PooledVec does not support ZSTs");
+        if cap == 0 {
+            return Self {
+                // T-aligned dangling pointer: `as_slice` feeds it to
+                // `from_raw_parts`, which demands alignment even for
+                // length-0 slices.
+                ptr: NonNull::<T>::dangling().cast::<u8>(),
+                cap: 0,
+                len: 0,
+                init: 0,
+                backing: Backing::Empty,
+                handle: handle.clone(),
+                _marker: PhantomData,
+            };
+        }
+        let bytes = cap
+            .checked_mul(core::mem::size_of::<T>())
+            .expect("PooledVec capacity overflows usize");
+        let (ptr, backing) = handle
+            .alloc_bytes(bytes)
+            .expect("PooledVec backing allocation failed");
+        Self { ptr, cap, len: 0, init: 0, backing, handle: handle.clone(), _marker: PhantomData }
+    }
+
+    /// Empty vec bound to `handle` with no backing block (useful as the
+    /// `mem::take` placeholder for reusable buffers).
+    pub fn new(handle: &PoolHandle) -> Self {
+        Self::with_capacity(handle, 0)
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn clear(&mut self) {
+        self.len = 0;
+    }
+
+    pub fn as_slice(&self) -> &[T] {
+        // SAFETY: 0..len are initialised (only push/resize advance len).
+        unsafe { core::slice::from_raw_parts(self.ptr.as_ptr() as *const T, self.len) }
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [T] {
+        // SAFETY: as above; &mut self gives exclusive access.
+        unsafe { core::slice::from_raw_parts_mut(self.ptr.as_ptr() as *mut T, self.len) }
+    }
+
+    /// Append, growing (pool re-allocation) only past the fixed capacity.
+    pub fn push(&mut self, v: T) {
+        if self.len == self.cap {
+            self.grow((self.cap * 2).max(4));
+        }
+        // SAFETY: len < cap after the growth check.
+        unsafe { (self.ptr.as_ptr() as *mut T).add(self.len).write(v) };
+        self.len += 1;
+        self.init = self.init.max(self.len);
+    }
+
+    pub fn extend_from_slice(&mut self, xs: &[T]) {
+        if self.len + xs.len() > self.cap {
+            self.grow((self.len + xs.len()).max(self.cap * 2));
+        }
+        // SAFETY: room for xs.len() more elements after the growth check.
+        unsafe {
+            core::ptr::copy_nonoverlapping(
+                xs.as_ptr(),
+                (self.ptr.as_ptr() as *mut T).add(self.len),
+                xs.len(),
+            );
+        }
+        self.len += xs.len();
+        self.init = self.init.max(self.len);
+    }
+
+    /// Set length to `n`, filling every slot with `v` (the step buffers'
+    /// "clear and repaint the lane" idiom). Grows only past capacity.
+    pub fn fill_with(&mut self, n: usize, v: T) {
+        if n > self.cap {
+            self.grow(n.max(self.cap * 2));
+        }
+        self.len = n;
+        self.init = self.init.max(self.len);
+        self.as_mut_slice().fill(v);
+    }
+
+    /// Set the length to `n` WITHOUT touching contents — the write-only
+    /// out-buffer idiom (e.g. a logits buffer the backend fully
+    /// overwrites), skipping `fill_with`'s memset on the hot path.
+    ///
+    /// Safe because only already-initialised storage may be exposed:
+    /// panics if `n` exceeds the high-water initialised length (pre-fill
+    /// once with [`Self::fill_with`] at construction).
+    pub fn set_len_initialized(&mut self, n: usize) {
+        assert!(
+            n <= self.init,
+            "set_len_initialized({n}) past initialised high-water {}",
+            self.init
+        );
+        self.len = n;
+    }
+
+    pub fn truncate(&mut self, n: usize) {
+        if n < self.len {
+            self.len = n;
+        }
+    }
+
+    /// Re-seat the vec on a block of at least `new_cap` elements.
+    fn grow(&mut self, new_cap: usize) {
+        debug_assert!(new_cap > self.cap);
+        let fresh = {
+            let mut v = Self::with_capacity(&self.handle, new_cap);
+            v.extend_from_slice(self.as_slice());
+            v
+        };
+        *self = fresh; // old self drops, returning its block
+    }
+}
+
+impl<T: Copy> Drop for PooledVec<T> {
+    fn drop(&mut self) {
+        if self.cap > 0 {
+            let bytes = self.cap * core::mem::size_of::<T>();
+            // SAFETY: (ptr, bytes, backing) is the live allocation made in
+            // with_capacity on this handle.
+            unsafe { self.handle.dealloc_bytes(self.ptr, bytes, self.backing) };
+        }
+    }
+}
+
+impl<T: Copy> Deref for PooledVec<T> {
+    type Target = [T];
+    fn deref(&self) -> &[T] {
+        self.as_slice()
+    }
+}
+
+impl<T: Copy> DerefMut for PooledVec<T> {
+    fn deref_mut(&mut self) -> &mut [T] {
+        self.as_mut_slice()
+    }
+}
+
+/// A zero-capacity system-mode placeholder — what `mem::take` leaves
+/// behind when a reusable buffer is temporarily moved out of a struct.
+impl<T: Copy> Default for PooledVec<T> {
+    fn default() -> Self {
+        Self::new(&PoolHandle::system())
+    }
+}
+
+impl<T: Copy> Clone for PooledVec<T> {
+    fn clone(&self) -> Self {
+        let mut v = Self::with_capacity(&self.handle, self.cap.max(self.len));
+        v.extend_from_slice(self.as_slice());
+        v
+    }
+}
+
+impl<T: Copy + std::fmt::Debug> std::fmt::Debug for PooledVec<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_list().entries(self.as_slice()).finish()
+    }
+}
+
+impl<T: Copy + PartialEq> PartialEq for PooledVec<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_handle() -> PoolHandle {
+        PoolHandle::pooled(
+            MultiPoolConfig {
+                min_class: 16,
+                max_class: 256,
+                blocks_per_class: 8,
+                system_fallback: true,
+            },
+            2,
+        )
+    }
+
+    #[test]
+    fn push_index_slice_roundtrip() {
+        for handle in [small_handle(), PoolHandle::system()] {
+            let mut v: PooledVec<i32> = PooledVec::with_capacity(&handle, 8);
+            assert!(v.is_empty());
+            for i in 0..8 {
+                v.push(i);
+            }
+            assert_eq!(v.len(), 8);
+            assert_eq!(v[3], 3);
+            assert_eq!(&v[..2], &[0, 1]);
+            v[5] = 50;
+            assert_eq!(v.as_slice()[5], 50);
+            v.clear();
+            assert!(v.is_empty());
+        }
+    }
+
+    #[test]
+    fn pooled_blocks_come_from_the_pool_and_return() {
+        let handle = small_handle();
+        let mp_hits = |h: &PoolHandle| {
+            let mp = h.multi().unwrap();
+            (0..mp.num_classes()).map(|c| mp.class_hits(c)).sum::<u64>()
+        };
+        let before = mp_hits(&handle);
+        {
+            let mut v: PooledVec<u64> = PooledVec::with_capacity(&handle, 4); // 32 B class
+            v.push(7);
+            assert_eq!(mp_hits(&handle), before + 1, "backing must be pool-served");
+        }
+        // Block back in the pool: same-size vec is another pool hit.
+        let _v2: PooledVec<u64> = PooledVec::with_capacity(&handle, 4);
+        assert_eq!(mp_hits(&handle), before + 2);
+    }
+
+    #[test]
+    fn grow_preserves_contents_past_fixed_capacity() {
+        let handle = small_handle();
+        let mut v: PooledVec<i32> = PooledVec::with_capacity(&handle, 2);
+        for i in 0..40 {
+            v.push(i);
+        }
+        assert_eq!(v.len(), 40);
+        assert!(v.capacity() >= 40);
+        assert_eq!(v.as_slice(), (0..40).collect::<Vec<_>>().as_slice());
+    }
+
+    #[test]
+    fn fill_with_and_truncate() {
+        let handle = small_handle();
+        let mut v: PooledVec<i32> = PooledVec::with_capacity(&handle, 16);
+        v.fill_with(10, -1);
+        assert_eq!(v.len(), 10);
+        assert!(v.iter().all(|&x| x == -1));
+        v.truncate(3);
+        assert_eq!(v.len(), 3);
+        v.fill_with(16, 9); // repaint to full capacity, no grow
+        assert_eq!(v.capacity(), 16);
+        assert_eq!(v[15], 9);
+    }
+
+    #[test]
+    fn set_len_initialized_reuses_painted_storage() {
+        let handle = small_handle();
+        let mut v: PooledVec<f32> = PooledVec::with_capacity(&handle, 8);
+        v.fill_with(8, 1.5); // paint the full capacity once
+        v.clear();
+        v.set_len_initialized(5); // pure length change, no memset
+        assert_eq!(v.len(), 5);
+        assert!(v.iter().all(|&x| x == 1.5), "contents untouched");
+        v.set_len_initialized(8);
+        assert_eq!(v.len(), 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "initialised high-water")]
+    fn set_len_initialized_rejects_unpainted_tail() {
+        let handle = small_handle();
+        let mut v: PooledVec<i32> = PooledVec::with_capacity(&handle, 8);
+        v.fill_with(3, 0);
+        v.set_len_initialized(4); // 3 initialised, 4 requested → panic
+    }
+
+    #[test]
+    fn clone_and_eq_across_handles() {
+        let handle = small_handle();
+        let mut v: PooledVec<u32> = PooledVec::with_capacity(&handle, 4);
+        v.extend_from_slice(&[1, 2, 3]);
+        let w = v.clone();
+        assert_eq!(v, w);
+        assert_eq!(w.as_slice(), &[1, 2, 3]);
+    }
+
+    #[test]
+    fn zero_capacity_and_take_placeholder() {
+        let handle = small_handle();
+        let mut v: PooledVec<i32> = PooledVec::new(&handle);
+        assert_eq!(v.capacity(), 0);
+        v.push(5); // grows from empty
+        assert_eq!(v.as_slice(), &[5]);
+        let w: PooledVec<i32> = PooledVec::new(&PoolHandle::system());
+        drop(w); // nothing to free
+    }
+
+    #[test]
+    fn oversize_requests_fall_through_but_work() {
+        let handle = small_handle(); // max class 256 B
+        let mut v: PooledVec<u64> = PooledVec::with_capacity(&handle, 1024); // 8 KiB
+        for i in 0..1024u64 {
+            v.push(i);
+        }
+        assert_eq!(v[1023], 1023);
+        assert!(
+            handle.multi().unwrap().system_allocs.load(core::sync::atomic::Ordering::Relaxed)
+                >= 1,
+            "oversize block must be system-served"
+        );
+    }
+
+    #[test]
+    fn concurrent_pooled_vecs_distinct_backing() {
+        let handle = PoolHandle::pooled(
+            MultiPoolConfig {
+                min_class: 16,
+                max_class: 256,
+                blocks_per_class: 512,
+                system_fallback: false,
+            },
+            4,
+        );
+        std::thread::scope(|s| {
+            for t in 0..4i32 {
+                let handle = handle.clone();
+                s.spawn(move || {
+                    for round in 0..200 {
+                        let mut v: PooledVec<i32> =
+                            PooledVec::with_capacity(&handle, 8);
+                        v.fill_with(8, t * 1000 + round);
+                        assert!(v.iter().all(|&x| x == t * 1000 + round));
+                    }
+                });
+            }
+        });
+    }
+}

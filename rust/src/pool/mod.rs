@@ -26,6 +26,7 @@ pub mod fixed;
 pub mod freelist;
 pub mod global_alloc;
 pub mod guarded;
+pub mod handle;
 pub mod locked;
 pub mod multi;
 pub mod raw;
@@ -40,10 +41,11 @@ pub use fixed::{FixedPool, PoolConfig};
 pub use freelist::PtrFreeListPool;
 pub use global_alloc::PooledGlobalAlloc;
 pub use guarded::{GuardConfig, GuardError, GuardedPool};
+pub use handle::{PoolHandle, PooledVec};
 pub use locked::{BlockToken, LockedPool};
 pub use multi::{MultiPool, MultiPoolConfig, Origin, ShardedMultiPool};
 pub use raw::{RawPool, MIN_BLOCK_SIZE};
 pub use resize::ResizablePool;
-pub use sharded::{default_shards, ShardedPool};
+pub use sharded::{default_shards, ShardedPool, MAX_STEAL_BATCH};
 pub use stats::{PoolStats, ShardStats, ShardedPoolStats};
 pub use typed::{PoolBox, TypedPool};

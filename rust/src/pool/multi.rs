@@ -328,6 +328,28 @@ impl ShardedMultiPool {
             hits as f64 / total as f64
         }
     }
+
+    /// Publish gauges for every size class into `metrics` under `prefix`:
+    /// per-class hits/exhaustion plus each class pool's per-shard
+    /// hit/steal gauges (via [`ShardedPool::export_metrics`]).
+    pub fn export_metrics(&self, metrics: &crate::metrics::Metrics, prefix: &str) {
+        metrics
+            .gauge(&format!("{prefix}.system_allocs"))
+            .set(self.system_allocs.load(Ordering::Relaxed) as i64);
+        metrics
+            .gauge(&format!("{prefix}.hit_rate_pct"))
+            .set((self.pool_hit_rate() * 100.0) as i64);
+        for ci in 0..self.classes.len() {
+            let size = self.class_sizes[ci];
+            metrics
+                .gauge(&format!("{prefix}.c{size}.hits"))
+                .set(self.hits[ci].load(Ordering::Relaxed) as i64);
+            metrics
+                .gauge(&format!("{prefix}.c{size}.exhausted"))
+                .set(self.exhausted[ci].load(Ordering::Relaxed) as i64);
+            self.classes[ci].export_metrics(metrics, &format!("{prefix}.c{size}"));
+        }
+    }
 }
 
 #[cfg(test)]
@@ -492,6 +514,20 @@ mod tests {
         for ci in 0..mp.num_classes() {
             assert_eq!(mp.class_shard_stats(ci).num_free(), 512, "class {ci}");
         }
+    }
+
+    #[test]
+    fn sharded_multi_exports_metrics() {
+        let mp = ShardedMultiPool::with_shards(cfg_small(), 2);
+        let (p, o) = mp.allocate(20).unwrap();
+        unsafe { mp.deallocate(p, 20, o) };
+        let m = crate::metrics::Metrics::new();
+        mp.export_metrics(&m, "pool.serving");
+        let r = m.report();
+        assert!(r.contains("pool.serving.c32.hits = 1"), "{r}");
+        assert!(r.contains("pool.serving.c32.shards = 2"), "{r}");
+        assert!(r.contains("pool.serving.system_allocs = 0"), "{r}");
+        assert!(r.contains("pool.serving.hit_rate_pct = 100"), "{r}");
     }
 
     #[test]

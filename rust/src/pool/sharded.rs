@@ -12,10 +12,20 @@
 //! * **Routing** — each thread gets a round-robin *home shard* on first
 //!   use (a const-init thread-local, so the hint costs one TLS read on the
 //!   hot path and never allocates). Threads ≤ shards ⇒ zero CAS sharing.
-//! * **Stealing** — on local exhaustion the allocator scans sibling
-//!   shards, so capacity is pooled, not partitioned: one thread can still
-//!   drain the entire pool. Steals are counted per home shard — the
-//!   "concurrency tax" visible in [`ShardedPoolStats`].
+//! * **Batched stealing** — on local exhaustion the allocator scans
+//!   sibling shards, so capacity is pooled, not partitioned: one thread
+//!   can still drain the entire pool. Each successful scan detaches up to
+//!   *k* blocks from the victim in one tag-guarded CAS (Blelloch & Wei's
+//!   batch-transfer amortisation): one block is returned to the caller
+//!   and the extras are parked in the home slot's **steal stash**, a
+//!   Treiber stack of grid indices that is checked before the next scan.
+//!   *k* adapts to the recent steal rate — it doubles after every
+//!   successful scan (up to [`MAX_STEAL_BATCH`]) and halves on a local
+//!   hit, so a thread in a steady cross-shard regime pays one scan per
+//!   *k* allocations while a balanced pool keeps k = 1 and steals no
+//!   more than it needs. Scans, stolen blocks and stash hits are counted
+//!   per home shard — the "concurrency tax" visible in
+//!   [`ShardedPoolStats`].
 //! * **O(1) free with no hardware divide** — shards are laid out at a
 //!   uniform power-of-two *stride* (in blocks) inside one contiguous
 //!   region, so `deallocate` recovers the owning shard from the pointer
@@ -28,18 +38,31 @@
 //! ### Memory accounting (the concurrency tax, itemised)
 //!
 //! * 4 bytes/block side tables (inherited from `AtomicPool`).
-//! * One cache line of counters per shard.
+//! * One cache line of counters per shard (includes the stash head and
+//!   the adaptive batch width).
+//! * **Batched-steal side table**: 4 bytes per *grid slot* (`shards ×
+//!   stride`, so stride padding is included) for the stash next-links.
+//!   Like the shard side tables these live outside user blocks — a stale
+//!   stash reader may inspect the link of a block already handed to user
+//!   code, so the link must stay in memory the user never owns. Cost:
+//!   ≤ 8 bytes/block total side tables, reported by
+//!   [`ShardedPool::overhead_bytes`].
 //! * Stride padding: when `num_blocks / shards` is not a power of two the
 //!   region is laid out with up-to-2× *virtual* slack between shards.
 //!   Padding blocks are **never touched** — creation is lazy exactly as in
 //!   the paper (§IV) — so on demand-paged systems they cost address space,
 //!   not resident memory. [`ShardedPool::padded_bytes`] reports the slack
 //!   so benchmarks can account for it honestly.
+//! * **Transfer latency**: a batch in flight (detached from the victim,
+//!   not yet published in the stash) is invisible for a few instructions;
+//!   a concurrent scan can momentarily see fewer free blocks than exist.
+//!   Allocation failure is therefore "every shard and stash looked empty
+//!   during the scan", exactly as a single-block steal can race a free.
 
 use core::alloc::Layout;
 use core::cell::Cell;
 use core::ptr::NonNull;
-use core::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use core::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
 
 use super::atomic::AtomicPool;
 use super::raw::{mod_inverse_u64, MIN_BLOCK_SIZE};
@@ -79,19 +102,61 @@ pub fn default_shards() -> usize {
     next_pow2(n).min(64)
 }
 
-/// Per-shard counters, cache-line separated so a hot shard's stats updates
-/// do not false-share with its neighbours.
+/// Upper bound on the adaptive steal batch (blocks moved per scan).
+pub const MAX_STEAL_BATCH: u32 = 16;
+
+/// Sentinel for an empty stash / end of a stash chain (grid index space).
+const GRID_NIL: u32 = u32::MAX;
+
+#[inline(always)]
+fn pack(grid: u32, tag: u32) -> u64 {
+    ((tag as u64) << 32) | grid as u64
+}
+
+#[inline(always)]
+fn unpack(v: u64) -> (u32, u32) {
+    (v as u32, (v >> 32) as u32)
+}
+
+/// Per-shard counters plus the home slot's steal-stash head and adaptive
+/// batch width, cache-line separated so a hot shard's updates do not
+/// false-share with its neighbours.
 #[repr(align(64))]
-#[derive(Default)]
 struct ShardCounters {
     /// Allocations served by this shard for threads homed on it.
     local_hits: AtomicU64,
-    /// Allocations a thread homed here had to steal from a sibling.
+    /// Blocks taken from siblings by threads homed here (incl. extras).
     steals: AtomicU64,
-    /// Allocations that failed after scanning every shard.
+    /// Sibling scans that found a victim (one block returned per scan).
+    steal_scans: AtomicU64,
+    /// Allocations served from this home's steal stash.
+    stash_hits: AtomicU64,
+    /// Allocations that failed after scanning every shard and stash.
     failures: AtomicU64,
     /// Frees routed to this shard by pointer decode.
     frees: AtomicU64,
+    /// Steal-stash head: packed (grid index | GRID_NIL, ABA tag).
+    stash_head: AtomicU64,
+    /// Blocks currently parked in this home's stash.
+    stash_count: AtomicU32,
+    /// Adaptive steal batch k ∈ [1, MAX_STEAL_BATCH].
+    steal_batch: AtomicU32,
+}
+
+impl ShardCounters {
+    fn new() -> Self {
+        Self {
+            local_hits: AtomicU64::new(0),
+            steals: AtomicU64::new(0),
+            steal_scans: AtomicU64::new(0),
+            stash_hits: AtomicU64::new(0),
+            failures: AtomicU64::new(0),
+            frees: AtomicU64::new(0),
+            stash_head: AtomicU64::new(pack(GRID_NIL, 0)),
+            stash_count: AtomicU32::new(0),
+            steal_batch: AtomicU32::new(1),
+        }
+    }
 }
 
 /// A lock-free pool striped over power-of-two `AtomicPool` shards.
@@ -100,6 +165,11 @@ struct ShardCounters {
 pub struct ShardedPool {
     shards: Box<[AtomicPool]>,
     counters: Box<[ShardCounters]>,
+    /// Stash next-links, indexed by grid index (shard << stride_shift |
+    /// local). Side table for the same reason as `AtomicPool::next`: a
+    /// stale stash reader may inspect the link of a block already handed
+    /// to user code.
+    steal_next: Box<[AtomicU32]>,
     mem_start: NonNull<u8>,
     layout: Layout,
     block_size: usize,
@@ -177,14 +247,23 @@ impl ShardedPool {
             let shard_base =
                 unsafe { NonNull::new_unchecked(region.as_ptr().add(i * shard_bytes)) };
             pools.push(unsafe { AtomicPool::over_region(shard_base, bs, count) });
-            counters.push(ShardCounters::default());
+            counters.push(ShardCounters::new());
         }
+
+        // Grid index space (shard << stride_shift | local) must fit u32
+        // with GRID_NIL free — guaranteed well before the region-bytes
+        // overflow check would fire, but assert the invariant anyway.
+        let grid_slots = (n_shards as u64) << stride_shift;
+        assert!(grid_slots < GRID_NIL as u64, "grid index space overflows u32");
+        let mut steal_next = Vec::with_capacity(grid_slots as usize);
+        steal_next.resize_with(grid_slots as usize, || AtomicU32::new(GRID_NIL));
 
         let div_shift = bs.trailing_zeros();
         let div_inv = mod_inverse_u64((bs >> div_shift) as u64);
         Self {
             shards: pools.into_boxed_slice(),
             counters: counters.into_boxed_slice(),
+            steal_next: steal_next.into_boxed_slice(),
             mem_start: region,
             layout: region_layout,
             block_size: bs,
@@ -197,26 +276,128 @@ impl ShardedPool {
         }
     }
 
-    /// Lock-free allocate: home shard first, then steal round the ring.
-    /// `None` only when every shard is (momentarily) empty.
+    /// Pointer for a grid index (shard << stride_shift | local).
+    #[inline(always)]
+    fn grid_to_ptr(&self, grid: u32) -> NonNull<u8> {
+        // SAFETY: grid indices come from shard geometry; the offset lies
+        // inside the owned region.
+        unsafe {
+            NonNull::new_unchecked(
+                self.mem_start.as_ptr().add(grid as usize * self.block_size),
+            )
+        }
+    }
+
+    /// Pop one grid index off `slot`'s steal stash (Treiber, tag-guarded).
+    fn stash_pop(&self, slot: usize) -> Option<u32> {
+        let c = &self.counters[slot];
+        let mut cur = c.stash_head.load(Ordering::Acquire);
+        loop {
+            let (grid, tag) = unpack(cur);
+            if grid == GRID_NIL {
+                return None;
+            }
+            let nxt = self.steal_next[grid as usize].load(Ordering::Relaxed);
+            match c.stash_head.compare_exchange_weak(
+                cur,
+                pack(nxt, tag.wrapping_add(1)),
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => {
+                    c.stash_count.fetch_sub(1, Ordering::Relaxed);
+                    return Some(grid);
+                }
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    /// Park a pre-linked chain of grid indices in `slot`'s stash with one
+    /// head CAS per attempt.
+    fn stash_push_chain(&self, slot: usize, grids: &[u32]) {
+        debug_assert!(!grids.is_empty());
+        for w in grids.windows(2) {
+            self.steal_next[w[0] as usize].store(w[1], Ordering::Relaxed);
+        }
+        let first = grids[0];
+        let last = *grids.last().unwrap();
+        let c = &self.counters[slot];
+        let mut cur = c.stash_head.load(Ordering::Acquire);
+        loop {
+            let (head, tag) = unpack(cur);
+            self.steal_next[last as usize].store(head, Ordering::Relaxed);
+            match c.stash_head.compare_exchange_weak(
+                cur,
+                pack(first, tag.wrapping_add(1)),
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => {
+                    c.stash_count.fetch_add(grids.len() as u32, Ordering::Relaxed);
+                    return;
+                }
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    /// Lock-free allocate: home shard, then the home steal stash, then a
+    /// batched steal round the sibling ring, then sibling stashes.
+    /// `None` only when every shard and stash is (momentarily) empty.
     #[inline]
     pub fn allocate(&self) -> Option<NonNull<u8>> {
         let home = home_slot() & self.shard_mask;
+        let c = &self.counters[home];
         if let Some(p) = self.shards[home].allocate() {
-            self.counters[home].local_hits.fetch_add(1, Ordering::Relaxed);
+            c.local_hits.fetch_add(1, Ordering::Relaxed);
+            // Local supply is back: decay the steal batch.
+            let k = c.steal_batch.load(Ordering::Relaxed);
+            if k > 1 {
+                c.steal_batch.store(k / 2, Ordering::Relaxed);
+            }
             return Some(p);
+        }
+        // Batch extras imported by an earlier steal scan.
+        if let Some(grid) = self.stash_pop(home) {
+            c.stash_hits.fetch_add(1, Ordering::Relaxed);
+            return Some(self.grid_to_ptr(grid));
         }
         // Local shard dry: steal from siblings so capacity is pooled, not
         // partitioned. The scan order (home+1, home+2, …) spreads victim
-        // pressure instead of dog-piling shard 0.
-        for k in 1..=self.shard_mask {
-            let s = (home + k) & self.shard_mask;
-            if let Some(p) = self.shards[s].allocate() {
-                self.counters[home].steals.fetch_add(1, Ordering::Relaxed);
-                return Some(p);
+        // pressure instead of dog-piling shard 0. Take up to k blocks per
+        // scan — one for the caller, the rest into the home stash — so a
+        // steady cross-shard regime pays one scan per k allocations.
+        let k = c.steal_batch.load(Ordering::Relaxed).clamp(1, MAX_STEAL_BATCH);
+        let mut buf = [0u32; MAX_STEAL_BATCH as usize];
+        for j in 1..=self.shard_mask {
+            let s = (home + j) & self.shard_mask;
+            let got = self.shards[s].allocate_batch(k, &mut buf);
+            if got > 0 {
+                c.steals.fetch_add(got as u64, Ordering::Relaxed);
+                c.steal_scans.fetch_add(1, Ordering::Relaxed);
+                // Ramp the batch: recent steals predict more steals.
+                c.steal_batch.store((k * 2).min(MAX_STEAL_BATCH), Ordering::Relaxed);
+                let base = (s as u32) << self.stride_shift;
+                for g in buf[..got as usize].iter_mut() {
+                    *g += base;
+                }
+                if got > 1 {
+                    self.stash_push_chain(home, &buf[1..got as usize]);
+                }
+                return Some(self.grid_to_ptr(buf[0]));
             }
         }
-        self.counters[home].failures.fetch_add(1, Ordering::Relaxed);
+        // Last resort: raid every stash, own included (a racing thread
+        // may have parked extras in any of them during our scan).
+        for j in 0..=self.shard_mask {
+            let s = (home + j) & self.shard_mask;
+            if let Some(grid) = self.stash_pop(s) {
+                c.stash_hits.fetch_add(1, Ordering::Relaxed);
+                return Some(self.grid_to_ptr(grid));
+            }
+        }
+        c.failures.fetch_add(1, Ordering::Relaxed);
         None
     }
 
@@ -284,9 +465,11 @@ impl ShardedPool {
         self.block_size
     }
 
-    /// Free blocks summed over shards (exact when quiescent).
+    /// Free blocks summed over shards plus blocks parked in steal
+    /// stashes (exact when quiescent).
     pub fn num_free(&self) -> u32 {
-        self.shards.iter().map(|s| s.num_free()).sum()
+        self.shards.iter().map(|s| s.num_free()).sum::<u32>()
+            + self.counters.iter().map(|c| c.stash_count.load(Ordering::Relaxed)).sum::<u32>()
     }
 
     pub fn region_start(&self) -> usize {
@@ -304,11 +487,13 @@ impl ShardedPool {
         self.layout.size() - self.capacity_bytes()
     }
 
-    /// Concurrency tax: shard headers + side tables + counters.
+    /// Concurrency tax: shard headers + side tables + counters + the
+    /// batched-steal stash links.
     pub fn overhead_bytes(&self) -> usize {
         core::mem::size_of::<Self>()
             + self.shards.iter().map(|s| s.overhead_bytes()).sum::<usize>()
             + self.counters.len() * core::mem::size_of::<ShardCounters>()
+            + self.steal_next.len() * 4
     }
 
     /// Snapshot of per-shard hit/steal accounting.
@@ -322,6 +507,9 @@ impl ShardedPool {
                 num_free: s.num_free(),
                 local_hits: c.local_hits.load(Ordering::Relaxed),
                 steals: c.steals.load(Ordering::Relaxed),
+                steal_scans: c.steal_scans.load(Ordering::Relaxed),
+                stash_hits: c.stash_hits.load(Ordering::Relaxed),
+                stash_free: c.stash_count.load(Ordering::Relaxed),
                 failed_allocs: c.failures.load(Ordering::Relaxed),
                 frees: c.frees.load(Ordering::Relaxed),
             })
@@ -342,6 +530,15 @@ impl ShardedPool {
         metrics
             .gauge(&format!("{prefix}.steals_total"))
             .set(s.total_steals() as i64);
+        metrics
+            .gauge(&format!("{prefix}.steal_scans_total"))
+            .set(s.total_steal_scans() as i64);
+        metrics
+            .gauge(&format!("{prefix}.stash_hits_total"))
+            .set(s.total_stash_hits() as i64);
+        metrics
+            .gauge(&format!("{prefix}.stash_blocks"))
+            .set(s.total_stash_free() as i64);
         for (i, sh) in s.per_shard.iter().enumerate() {
             metrics
                 .gauge(&format!("{prefix}.shard{i}.local_hits"))
@@ -509,6 +706,70 @@ mod tests {
         // Side tables: 4 bytes per real block, plus headers/counters.
         assert!(p.overhead_bytes() >= 12 * 4);
         assert!(p.overhead_bytes() < 4096, "{}", p.overhead_bytes());
+    }
+
+    #[test]
+    fn batched_steal_ramps_and_conserves() {
+        // Draining 8 shards single-threaded ramps k: far fewer scans than
+        // stolen blocks, extras served from the stash, nothing lost.
+        let p = ShardedPool::with_shards(16, 64, 8);
+        let mut seen = BTreeSet::new();
+        for _ in 0..64 {
+            let a = p.allocate().expect("batched stealing must reach all shards");
+            assert!(seen.insert(a.as_ptr() as usize), "double handout");
+        }
+        assert!(p.allocate().is_none());
+        let s = p.stats();
+        assert_eq!(s.total_allocs(), 64);
+        assert_eq!(s.total_steals(), 56, "all 7 sibling shards drained");
+        assert!(
+            s.total_steal_scans() < s.total_steals(),
+            "batching must amortise: {} scans for {} blocks",
+            s.total_steal_scans(),
+            s.total_steals()
+        );
+        assert!(s.avg_steal_batch() > 2.0, "{}", s.avg_steal_batch());
+        // Conservation: every stolen block was returned by a scan, served
+        // from a stash, or is still parked.
+        assert_eq!(
+            s.total_steals(),
+            s.total_steal_scans() + s.total_stash_hits() + s.total_stash_free() as u64
+        );
+        assert_eq!(s.total_stash_free(), 0, "full drain leaves no stash");
+    }
+
+    #[test]
+    fn stash_push_pop_lifo_chain() {
+        let p = ShardedPool::with_shards(16, 16, 4);
+        // Mechanics only: park grid indices in slot 0's stash and pop.
+        p.stash_push_chain(0, &[8, 9, 10]);
+        assert_eq!(p.counters[0].stash_count.load(Ordering::Relaxed), 3);
+        assert_eq!(p.stash_pop(0), Some(8));
+        assert_eq!(p.stash_pop(0), Some(9));
+        assert_eq!(p.stash_pop(0), Some(10));
+        assert_eq!(p.stash_pop(0), None);
+        assert_eq!(p.counters[0].stash_count.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn allocate_raids_sibling_stash() {
+        // A block parked in a slot the caller is NOT homed on (a
+        // home-mate's in-flight batch import) must still be reachable.
+        let p = ShardedPool::with_shards(16, 8, 4);
+        let held: Vec<_> = (0..8).map(|_| p.allocate().unwrap()).collect();
+        assert!(p.allocate().is_none());
+        let home = home_slot() & p.shard_mask;
+        // Return the caller's first block (a home local hit), pull it back
+        // out of the home shard and park it in a sibling slot's stash.
+        unsafe { p.deallocate(held[0]) };
+        let local = p.shards[home].allocate_index().expect("just freed");
+        let grid = ((home as u32) << p.stride_shift) + local;
+        p.stash_push_chain((home + 1) & p.shard_mask, &[grid]);
+        assert_eq!(p.num_free(), 1, "stashed block counts as free");
+        let got = p.allocate().expect("raid must reach the sibling stash");
+        assert_eq!(got.as_ptr(), held[0].as_ptr());
+        assert!(p.stats().total_stash_hits() >= 1);
+        assert_eq!(p.num_free(), 0);
     }
 
     #[test]

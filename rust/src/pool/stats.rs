@@ -77,9 +77,19 @@ pub struct ShardStats {
     pub num_free: u32,
     /// Allocations served locally for threads homed on this shard.
     pub local_hits: u64,
-    /// Allocations a thread homed here satisfied from a sibling shard.
+    /// Blocks taken from sibling shards by threads homed here — includes
+    /// the batch extras parked in the home steal stash, so `steals` counts
+    /// *blocks moved*, not allocations served.
     pub steals: u64,
-    /// Allocations that failed after scanning every shard.
+    /// Sibling scans that found a victim (each returns exactly one block
+    /// to the caller; `steals / steal_scans` is the realised batch size).
+    pub steal_scans: u64,
+    /// Allocations served from a steal stash (the batch extras of an
+    /// earlier scan) instead of rescanning siblings.
+    pub stash_hits: u64,
+    /// Blocks currently parked in this home's steal stash.
+    pub stash_free: u32,
+    /// Allocations that failed after scanning every shard and stash.
     pub failed_allocs: u64,
     /// Frees routed to this shard by pointer decode.
     pub frees: u64,
@@ -100,8 +110,24 @@ impl ShardedPoolStats {
         self.per_shard.iter().map(|s| s.local_hits).sum()
     }
 
+    /// Total blocks moved across shards (scan returns + batch extras).
     pub fn total_steals(&self) -> u64 {
         self.per_shard.iter().map(|s| s.steals).sum()
+    }
+
+    /// Sibling scans that found a victim.
+    pub fn total_steal_scans(&self) -> u64 {
+        self.per_shard.iter().map(|s| s.steal_scans).sum()
+    }
+
+    /// Allocations served from a steal stash.
+    pub fn total_stash_hits(&self) -> u64 {
+        self.per_shard.iter().map(|s| s.stash_hits).sum()
+    }
+
+    /// Blocks currently parked in steal stashes.
+    pub fn total_stash_free(&self) -> u32 {
+        self.per_shard.iter().map(|s| s.stash_free).sum()
     }
 
     pub fn total_failed(&self) -> u64 {
@@ -112,37 +138,54 @@ impl ShardedPoolStats {
         self.per_shard.iter().map(|s| s.frees).sum()
     }
 
-    /// Successful allocations (local + stolen).
+    /// Successful allocations: each `allocate` call is exactly one of a
+    /// local hit, a stash hit, or a successful steal scan.
     pub fn total_allocs(&self) -> u64 {
-        self.total_local_hits() + self.total_steals()
+        self.total_local_hits() + self.total_stash_hits() + self.total_steal_scans()
     }
 
+    /// Mean blocks moved per successful steal scan — the realised batch
+    /// size of the adaptive batched steal.
+    pub fn avg_steal_batch(&self) -> f64 {
+        let scans = self.total_steal_scans();
+        if scans == 0 {
+            0.0
+        } else {
+            self.total_steals() as f64 / scans as f64
+        }
+    }
+
+    /// Free blocks: shard free lists plus blocks parked in steal stashes.
     pub fn num_free(&self) -> u32 {
-        self.per_shard.iter().map(|s| s.num_free).sum()
+        self.per_shard.iter().map(|s| s.num_free).sum::<u32>() + self.total_stash_free()
     }
 
-    /// Fraction of successful allocations that crossed shards, in [0, 1].
+    /// Fraction of successful allocations that crossed shards (stash hits
+    /// and scan returns), in [0, 1].
     pub fn steal_rate(&self) -> f64 {
         let total = self.total_allocs();
         if total == 0 {
             0.0
         } else {
-            self.total_steals() as f64 / total as f64
+            (self.total_stash_hits() + self.total_steal_scans()) as f64 / total as f64
         }
     }
 
     /// One-line human-readable report.
     pub fn report(&self) -> String {
         format!(
-            "shards {} | blocks {}x{}B | allocs {} ({} stolen, {:.2}% cross-shard) | fails {} | free {}",
+            "shards {} | blocks {}x{}B | allocs {} ({} stolen over {} scans, avg batch {:.1}, {:.2}% cross-shard) | fails {} | free {} ({} stashed)",
             self.per_shard.len(),
             self.num_blocks,
             self.block_size,
             self.total_allocs(),
             self.total_steals(),
+            self.total_steal_scans(),
+            self.avg_steal_batch(),
             self.steal_rate() * 100.0,
             self.total_failed(),
             self.num_free(),
+            self.total_stash_free(),
         )
     }
 }
@@ -203,7 +246,10 @@ mod tests {
                     num_blocks: 4,
                     num_free: 1,
                     local_hits: 6,
-                    steals: 2,
+                    steals: 3,
+                    steal_scans: 1,
+                    stash_hits: 1,
+                    stash_free: 1,
                     failed_allocs: 1,
                     frees: 5,
                 },
@@ -212,20 +258,56 @@ mod tests {
                     num_free: 2,
                     local_hits: 2,
                     steals: 0,
+                    steal_scans: 0,
+                    stash_hits: 0,
+                    stash_free: 0,
                     failed_allocs: 0,
                     frees: 2,
                 },
             ],
         };
+        // allocs = local (8) + stash hits (1) + scan returns (1).
         assert_eq!(s.total_allocs(), 10);
-        assert_eq!(s.total_steals(), 2);
+        assert_eq!(s.total_steals(), 3);
+        assert_eq!(s.total_steal_scans(), 1);
+        assert_eq!(s.total_stash_hits(), 1);
+        assert_eq!(s.total_stash_free(), 1);
         assert_eq!(s.total_failed(), 1);
         assert_eq!(s.total_frees(), 7);
-        assert_eq!(s.num_free(), 3);
+        // free = shard free lists (3) + stashed (1).
+        assert_eq!(s.num_free(), 4);
         assert!((s.steal_rate() - 0.2).abs() < 1e-12);
+        assert!((s.avg_steal_batch() - 3.0).abs() < 1e-12);
         let r = s.report();
         assert!(r.contains("shards 2"), "{r}");
-        assert!(r.contains("2 stolen"), "{r}");
+        assert!(r.contains("3 stolen"), "{r}");
+        assert!(r.contains("1 stashed"), "{r}");
+    }
+
+    #[test]
+    fn steal_block_conservation() {
+        // steals (blocks moved) = scan returns + stash hits + still stashed
+        // at quiescence — the invariant the stress suite checks live.
+        let s = ShardedPoolStats {
+            block_size: 16,
+            num_blocks: 32,
+            per_shard: vec![ShardStats {
+                num_blocks: 32,
+                num_free: 20,
+                local_hits: 4,
+                steals: 9,
+                steal_scans: 2,
+                stash_hits: 5,
+                stash_free: 2,
+                failed_allocs: 0,
+                frees: 11,
+            }],
+        };
+        assert_eq!(
+            s.total_steals(),
+            s.total_steal_scans() + s.total_stash_hits() + s.total_stash_free() as u64
+        );
+        assert_eq!(s.total_allocs(), s.total_frees());
     }
 
     #[test]
