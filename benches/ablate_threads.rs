@@ -7,14 +7,27 @@
 //! `ShardedPool` gives each thread a home shard (8 shards here), so pairs
 //! stay core-local and throughput scales instead of collapsing.
 //!
-//! Run: `cargo bench --bench ablate_threads`
+//! **A3b (skewed affinity)** — the shard-topology question: every worker
+//! starts homed on shard 0 of an 8-shard pool (a `Pinned::all(0)` base —
+//! the worst placement a NUMA-oblivious runtime can hand you) and keeps a
+//! working set that shard 0 cannot hold. The static arm pays a steal scan
+//! tax forever; the `StealAware` arm rehomes threads to their dominant
+//! victims and reports the rehome count and post-rehome (phase-2)
+//! local-hit rate.
+//!
+//! Run: `cargo bench --bench ablate_threads` (arg 1 filters by name, e.g.
+//! `skew`; `--smoke` shrinks iteration counts for CI).
 //! Output: bench_out/ablate_threads.{md,csv,json} — the JSON carries the
-//! raw grid plus the 8-thread sharded-vs-atomic speedup headline.
+//! raw grid, the 8-thread sharded-vs-atomic speedup headline and the
+//! skewed-affinity rehome/local-hit summary.
 
 use std::sync::Arc;
 
 use fastpool::bench_harness::{write_csv, write_json, write_markdown, ReportTable, Suite};
-use fastpool::pool::{AtomicPool, LockedPool, PoolConfig, ShardedPool};
+use fastpool::pool::{
+    AtomicPool, LockedPool, Pinned, PoolConfig, ShardPlacement, ShardedPool, StealAware,
+};
+use fastpool::testkit::skew::{run_skewed_affinity, SkewConfig, SkewOutcome};
 use fastpool::util::json::Json;
 use fastpool::util::Timer;
 
@@ -97,6 +110,7 @@ fn bench_malloc(threads: usize) -> f64 {
 
 fn main() {
     let suite = Suite::new("threads");
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let mut tab = ReportTable::new(
         "A3: alloc+free pair latency under contention (shared 4096x64B pool)",
         "threads",
@@ -161,11 +175,48 @@ fn main() {
         );
     }
 
+    // ---- A3b: skewed affinity (steal-aware rehoming vs static) ---------
+    // Same `testkit::skew` workload the acceptance stress test asserts on.
+    let skew_cfg = SkewConfig {
+        phase_ops: if smoke { 2_000 } else { SkewConfig::default().phase_ops },
+        ..Default::default()
+    };
+    let mut skew_tab = ReportTable::new(
+        "A3b: skewed affinity — all workers homed on shard 0, phase-2 measurements",
+        "placement",
+        vec!["pinned-static".into(), "steal-aware".into()],
+        vec!["local_hit_pct".into(), "steal_scans_per_1k".into(), "rehomes".into()],
+        "phase-2 local-hit % / steal scans per 1k allocs / rehome count",
+    );
+    type PlacementFactory = fn() -> Arc<dyn ShardPlacement>;
+    let mut skew_results: Vec<(&'static str, SkewOutcome)> = Vec::new();
+    let arms: [(&'static str, PlacementFactory); 2] = [
+        ("skew=pinned-static", || Arc::new(Pinned::all(0))),
+        ("skew=steal-aware", || Arc::new(StealAware::over(Arc::new(Pinned::all(0))))),
+    ];
+    for (ri, (name, make)) in arms.iter().enumerate() {
+        if !suite.enabled(name) {
+            continue;
+        }
+        let r = run_skewed_affinity(make(), skew_cfg);
+        println!(
+            "{name}: local {:>5.1}% | {:>6.1} steal scans/1k allocs | {} rehomes",
+            100.0 * r.local_rate(),
+            r.scans_per_1k(),
+            r.rehomes
+        );
+        skew_tab.set(ri, 0, 100.0 * r.local_rate());
+        skew_tab.set(ri, 1, r.scans_per_1k());
+        skew_tab.set(ri, 2, r.rehomes as f64);
+        skew_results.push((*name, r));
+    }
+
     // Only finite numbers go into the JSON summary (a name filter can skip
     // the max-thread row, leaving these NaN — and NaN is not valid JSON).
     let mut summary = vec![
         ("shards", Json::Num(SHARDS as f64)),
         ("ops_per_thread", Json::Num(OPS_PER_THREAD as f64)),
+        ("skew_phase_ops", Json::Num(skew_cfg.phase_ops as f64)),
     ];
     if speedup.is_finite() {
         summary.push(("sharded_vs_atomic_speedup_8t", Json::Num(speedup)));
@@ -173,9 +224,24 @@ fn main() {
     if steal_rate_max_t.is_finite() {
         summary.push(("sharded_steal_rate_8t", Json::Num(steal_rate_max_t)));
     }
+    for (name, r) in &skew_results {
+        match *name {
+            "skew=pinned-static" => {
+                summary
+                    .push(("skew_static_local_hit_pct", Json::Num(100.0 * r.local_rate())));
+                summary.push(("skew_static_scans_per_1k", Json::Num(r.scans_per_1k())));
+            }
+            _ => {
+                summary
+                    .push(("skew_aware_local_hit_pct", Json::Num(100.0 * r.local_rate())));
+                summary.push(("skew_aware_scans_per_1k", Json::Num(r.scans_per_1k())));
+                summary.push(("skew_rehomes", Json::Num(r.rehomes as f64)));
+            }
+        }
+    }
 
-    write_markdown("ablate_threads", &[], &[tab.clone()]).unwrap();
-    write_csv("ablate_threads", &[tab.clone()]).unwrap();
-    write_json("ablate_threads", &[tab], &summary).unwrap();
+    write_markdown("ablate_threads", &[], &[tab.clone(), skew_tab.clone()]).unwrap();
+    write_csv("ablate_threads", &[tab.clone(), skew_tab.clone()]).unwrap();
+    write_json("ablate_threads", &[tab, skew_tab], &summary).unwrap();
     println!("wrote bench_out/ablate_threads.md (+csv, +json)");
 }

@@ -168,6 +168,19 @@ impl<B: Backend> Engine<B> {
         self.metrics.gauge("kv_peak_used").set(self.kv.peak_used as i64);
     }
 
+    /// Periodic pool maintenance (the server runs it with the stats
+    /// dump): return steal-stash blocks — including chains orphaned by
+    /// exited worker threads — to their owning shards' free lists, and
+    /// record how many moved. Allocation-free; a no-op in system mode.
+    pub fn maintain_pool(&self) {
+        if let Some(mp) = self.pool.multi() {
+            let drained = mp.drain_stashes();
+            if drained > 0 {
+                self.metrics.counter("pool_stash_drained").add(drained as u64);
+            }
+        }
+    }
+
     /// Submit a request. Fails fast on overload (backpressure) or an
     /// impossible prompt.
     pub fn submit(&mut self, prompt: Vec<i32>, params: SamplingParams) -> Result<u64, String> {
@@ -204,6 +217,12 @@ impl<B: Backend> Engine<B> {
 
     pub fn num_waiting(&self) -> usize {
         self.waiting.len()
+    }
+
+    /// Can another request enter the waiting queue right now? (The
+    /// router's capacity-aware failover checks this before routing.)
+    pub fn has_queue_capacity(&self) -> bool {
+        self.waiting.len() < self.cfg.queue_limit
     }
 
     pub fn num_running(&self) -> usize {
@@ -296,14 +315,18 @@ impl<B: Backend> Engine<B> {
     }
 
     /// Drive until all work completes (or `max_steps`). Returns outputs.
+    ///
+    /// `max_steps` is an exact budget — at most `max_steps` calls to
+    /// [`Self::step`] — matching `Router::run_to_completion` (both used
+    /// to burn one extra step before erroring).
     pub fn run_to_completion(&mut self, max_steps: u64) -> Result<Vec<RequestOutput>, String> {
         let mut steps = 0;
         while self.has_work() {
-            self.step()?;
-            steps += 1;
-            if steps > max_steps {
+            if steps == max_steps {
                 return Err(format!("no completion after {max_steps} steps"));
             }
+            self.step()?;
+            steps += 1;
         }
         Ok(self.take_finished())
     }
@@ -712,6 +735,15 @@ mod tests {
     }
 
     #[test]
+    fn run_to_completion_budget_is_exact() {
+        let mut e = engine(EngineConfig::default());
+        e.submit(vec![1], SamplingParams::greedy(50)).unwrap();
+        let err = e.run_to_completion(3).unwrap_err();
+        assert!(err.contains("after 3 steps"), "{err}");
+        assert_eq!(e.steps(), 3, "budget is exact, not max_steps + 1");
+    }
+
+    #[test]
     fn idle_step_is_noop() {
         let mut e = engine(EngineConfig::default());
         assert_eq!(e.step().unwrap(), 0);
@@ -760,6 +792,30 @@ mod tests {
         let r = e.metrics.report();
         assert!(r.contains("pool.serving.hit_rate_pct"), "{r}");
         assert!(r.contains("pool.serving.c16.shards"), "{r}");
+        assert!(r.contains("pool.serving.rehomes_total"), "{r}");
+        assert!(r.contains("pool.serving.c16.local_hit_pct"), "{r}");
         assert!(r.contains("kv_peak_used"), "{r}");
+    }
+
+    #[test]
+    fn placement_choice_reaches_the_engine_pool() {
+        use crate::pool::{PoolHandle, RoundRobin};
+        use std::sync::Arc;
+        let e = Engine::with_pool(
+            MockBackend::new(),
+            EngineConfig::default(),
+            PoolHandle::serving_with_placement(Arc::new(RoundRobin)),
+        );
+        assert_eq!(e.pool().multi().unwrap().placement_name(), "round_robin");
+        let d = engine(EngineConfig::default());
+        assert_eq!(
+            d.pool().multi().unwrap().placement_name(),
+            "steal_aware",
+            "default serving topology is steal-aware"
+        );
+        // Maintenance is safe on an idle pool and in system mode.
+        d.maintain_pool();
+        Engine::with_pool(MockBackend::new(), EngineConfig::default(), PoolHandle::system())
+            .maintain_pool();
     }
 }

@@ -47,13 +47,11 @@ impl<B: Backend> Router<B> {
         &mut self.engines[i]
     }
 
-    fn pick(&mut self) -> usize {
+    /// Candidate engine for the next submission. Pure — round-robin state
+    /// only advances once a submission actually lands (see `submit`).
+    fn pick(&self) -> usize {
         match self.policy {
-            RoutePolicy::RoundRobin => {
-                let i = self.rr_next;
-                self.rr_next = (self.rr_next + 1) % self.engines.len();
-                i
-            }
+            RoutePolicy::RoundRobin => self.rr_next,
             RoutePolicy::LeastLoaded => self
                 .engines
                 .iter()
@@ -65,13 +63,38 @@ impl<B: Backend> Router<B> {
     }
 
     /// Route a request to an engine.
+    ///
+    /// Fairness: the round-robin cursor advances only when a submission
+    /// actually *lands*. It used to advance before the engine could
+    /// reject (queue full, bad prompt), so every rejection silently
+    /// skipped an engine's turn and skewed the rotation. Capacity is
+    /// checked up front: a round-robin pick skips engines whose queue is
+    /// full (one full engine must not block idle capacity elsewhere),
+    /// with no prompt cloning or retry loop. Request-invalid submissions
+    /// (empty/oversized prompt) fail identically everywhere, so they
+    /// fail fast on the picked engine and leave the cursor unmoved.
+    /// Least-loaded keeps its single pick — it already chose the best
+    /// candidate, so a rejection there means cluster-wide pressure.
     pub fn submit(
         &mut self,
         prompt: Vec<i32>,
         params: SamplingParams,
     ) -> Result<GlobalId, String> {
-        let engine = self.pick();
+        let n = self.engines.len();
+        let start = self.pick();
+        let engine = match self.policy {
+            // First engine from the cursor with queue room; when every
+            // queue is full, let the cursor's engine surface the error.
+            RoutePolicy::RoundRobin => (0..n)
+                .map(|j| (start + j) % n)
+                .find(|&e| self.engines[e].has_queue_capacity())
+                .unwrap_or(start),
+            RoutePolicy::LeastLoaded => start,
+        };
         let local = self.engines[engine].submit(prompt, params)?;
+        if self.policy == RoutePolicy::RoundRobin {
+            self.rr_next = (engine + 1) % n;
+        }
         self.routed[engine] += 1;
         Ok(GlobalId { engine, local })
     }
@@ -90,17 +113,22 @@ impl<B: Backend> Router<B> {
     }
 
     /// Drive all engines to completion; outputs tagged with engine index.
+    ///
+    /// `max_steps` is an exact budget: at most `max_steps` calls to
+    /// [`Self::step_all`] are made. (The budget check used to run *after*
+    /// stepping, so a stuck router burned `max_steps + 1` steps before
+    /// erroring.)
     pub fn run_to_completion(
         &mut self,
         max_steps: u64,
     ) -> Result<Vec<(usize, RequestOutput)>, String> {
         let mut steps = 0;
         while self.has_work() {
-            self.step_all()?;
-            steps += 1;
-            if steps > max_steps {
+            if steps == max_steps {
                 return Err(format!("router: no completion after {max_steps} steps"));
             }
+            self.step_all()?;
+            steps += 1;
         }
         let mut outs = Vec::new();
         for (i, e) in self.engines.iter_mut().enumerate() {
@@ -149,6 +177,70 @@ mod tests {
             let gid = r.submit(vec![i + 10], SamplingParams::greedy(4)).unwrap();
             assert_eq!(gid.engine, 1, "submission {i} should avoid loaded engine");
         }
+    }
+
+    #[test]
+    fn failed_submit_does_not_skew_round_robin() {
+        let mut r = router(2, RoutePolicy::RoundRobin);
+        let a = r.submit(vec![1], SamplingParams::greedy(1)).unwrap();
+        assert_eq!(a.engine, 0);
+        // A rejected submission (empty prompt) must not consume engine
+        // 1's turn — the old code advanced the cursor before the engine
+        // could say no, silently skipping an engine per rejection.
+        assert!(r.submit(vec![], SamplingParams::greedy(1)).is_err());
+        assert!(r.submit(vec![], SamplingParams::greedy(1)).is_err());
+        let b = r.submit(vec![2], SamplingParams::greedy(1)).unwrap();
+        assert_eq!(b.engine, 1, "rejections must not skip engine 1's turn");
+        let c = r.submit(vec![3], SamplingParams::greedy(1)).unwrap();
+        assert_eq!(c.engine, 0);
+        assert_eq!(r.routed, vec![2, 1]);
+    }
+
+    #[test]
+    fn queue_full_fails_over_instead_of_blocking_the_ring() {
+        let engines = (0..2)
+            .map(|_| {
+                Engine::new(
+                    MockBackend::new(),
+                    EngineConfig { queue_limit: 1, ..Default::default() },
+                )
+            })
+            .collect();
+        let mut r = Router::new(engines, RoutePolicy::RoundRobin);
+        // Fill engine 0 out-of-band: the cursor still points at it.
+        r.engine_mut(0).submit(vec![1], SamplingParams::greedy(2)).unwrap();
+        // A full engine must not block the ring — the submission fails
+        // over to idle engine 1 and the cursor advances past it.
+        let gid = r.submit(vec![2], SamplingParams::greedy(2)).unwrap();
+        assert_eq!(gid.engine, 1, "failover must reach the idle engine");
+        assert_eq!(r.routed, vec![0, 1]);
+        // Now every queue is full: the error surfaces only after the
+        // whole ring rejected, and the cursor stays put for the retry.
+        let err = r.submit(vec![3], SamplingParams::greedy(2)).unwrap_err();
+        assert!(err.contains("queue full"), "{err}");
+        // Drain; the next success lands on engine 0, whose turn it still is.
+        r.run_to_completion(1_000).unwrap();
+        let gid = r.submit(vec![4], SamplingParams::greedy(2)).unwrap();
+        assert_eq!(gid.engine, 0);
+    }
+
+    #[test]
+    fn run_to_completion_step_budget_is_exact() {
+        let mut r = router(2, RoutePolicy::RoundRobin);
+        for i in 0..2 {
+            r.submit(vec![i + 1], SamplingParams::greedy(50)).unwrap();
+        }
+        let err = r.run_to_completion(7).unwrap_err();
+        assert!(err.contains("after 7 steps"), "{err}");
+        for i in 0..r.num_engines() {
+            // Budget is exact: each engine stepped max_steps times, not
+            // max_steps + 1 as before the fix.
+            assert_eq!(r.engine(i).steps(), 7, "engine {i}");
+        }
+        // Zero budget with work pending: error before any stepping.
+        let err = r.run_to_completion(0).unwrap_err();
+        assert!(err.contains("after 0 steps"), "{err}");
+        assert_eq!(r.engine(0).steps(), 7);
     }
 
     #[test]

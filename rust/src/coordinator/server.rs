@@ -91,10 +91,14 @@ impl Server {
                             let _ = w.send(Ok(out));
                         }
                     }
-                    // Periodic stats dump: pool hit/steal gauges land in
-                    // the registry and the whole report goes to stderr.
+                    // Periodic stats dump: pool hit/steal/rehome gauges
+                    // land in the registry and the whole report goes to
+                    // stderr. Maintenance first, so stash blocks orphaned
+                    // by exited connection threads are back on their
+                    // shards before the gauges are read.
                     if engine.steps() - last_stats_step >= STATS_EVERY_STEPS {
                         last_stats_step = engine.steps();
+                        engine.maintain_pool();
                         engine.export_pool_metrics();
                         eprintln!(
                             "[server stats @ step {}]\n{}",
@@ -105,6 +109,7 @@ impl Server {
                 } else {
                     if shutdown_e.load(Ordering::Relaxed) {
                         // Final dump so short-lived servers still report.
+                        engine.maintain_pool();
                         engine.export_pool_metrics();
                         eprintln!(
                             "[server stats @ shutdown, step {}]\n{}",

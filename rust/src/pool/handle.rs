@@ -22,6 +22,7 @@ use core::ptr::NonNull;
 use std::sync::Arc;
 
 use super::multi::{MultiPoolConfig, Origin, ShardedMultiPool};
+use super::placement::ShardPlacement;
 
 /// All pool-served blocks (and the system fallback inside
 /// [`ShardedMultiPool`]) are 16-aligned; `PooledVec` element types must
@@ -50,9 +51,23 @@ pub struct PoolHandle {
 }
 
 impl PoolHandle {
-    /// Pool-backed handle over a fresh [`ShardedMultiPool`].
+    /// Pool-backed handle over a fresh [`ShardedMultiPool`] (steal-aware
+    /// topology by default).
     pub fn pooled(cfg: MultiPoolConfig, shards: usize) -> Self {
         Self { inner: Some(Arc::new(ShardedMultiPool::with_shards(cfg, shards))) }
+    }
+
+    /// As [`Self::pooled`] with an explicit shard-topology policy
+    /// (ablations pass [`crate::pool::RoundRobin`] to measure what
+    /// steal-aware rehoming buys).
+    pub fn pooled_with_placement(
+        cfg: MultiPoolConfig,
+        shards: usize,
+        placement: Arc<dyn ShardPlacement>,
+    ) -> Self {
+        Self {
+            inner: Some(Arc::new(ShardedMultiPool::with_placement(cfg, shards, placement))),
+        }
     }
 
     /// Share an existing multi-pool.
@@ -65,14 +80,28 @@ impl PoolHandle {
     /// land inside; bigger rows fall through to the counted system
     /// fallback), sharded by available parallelism.
     pub fn serving_default() -> Self {
-        Self::pooled(
-            MultiPoolConfig {
-                min_class: 16,
-                max_class: 4096,
-                blocks_per_class: 256,
-                system_fallback: true,
-            },
+        Self::pooled(Self::serving_config(), super::sharded::default_shards())
+    }
+
+    /// The serving-engine pool geometry (shared by `serving_default` and
+    /// the placement-explicit variant).
+    fn serving_config() -> MultiPoolConfig {
+        MultiPoolConfig {
+            min_class: 16,
+            max_class: 4096,
+            blocks_per_class: 256,
+            system_fallback: true,
+        }
+    }
+
+    /// [`Self::serving_default`] geometry with an explicit shard-topology
+    /// policy — how the engine/server ablation arms choose between
+    /// `RoundRobin`, `StealAware` and `Pinned` placements.
+    pub fn serving_with_placement(placement: Arc<dyn ShardPlacement>) -> Self {
+        Self::pooled_with_placement(
+            Self::serving_config(),
             super::sharded::default_shards(),
+            placement,
         )
     }
 
@@ -354,6 +383,15 @@ mod tests {
             },
             2,
         )
+    }
+
+    #[test]
+    fn placement_choice_flows_through_handle() {
+        use crate::pool::placement::RoundRobin;
+        let h = PoolHandle::serving_with_placement(Arc::new(RoundRobin));
+        assert_eq!(h.multi().unwrap().placement_name(), "round_robin");
+        let d = PoolHandle::serving_default();
+        assert_eq!(d.multi().unwrap().placement_name(), "steal_aware");
     }
 
     #[test]

@@ -14,7 +14,11 @@
 //!   two ways (mutex vs lock-free Treiber stack with ABA tags).
 //! * [`ShardedPool`] — the scaling layer: N `AtomicPool` shards with
 //!   per-thread routing and sibling stealing, so the one-CAS head stops
-//!   being a contention hot-spot (ablation A3).
+//!   being a contention hot-spot (ablation A3). Shard topology is a
+//!   policy ([`ShardPlacement`]): static [`RoundRobin`], adaptive
+//!   [`StealAware`] rehoming (the default), or a NUMA-ready [`Pinned`]
+//!   map; home slots are leased from a recyclable registry so thread
+//!   churn cannot leak routing state.
 //! * [`ResizablePool`] — §VII grow/shrink by member-variable update.
 //! * [`MultiPool`] — §V/§VI ad-hoc hybrid: size classes + system fallback.
 //! * [`PooledGlobalAlloc`] — §V "overload new/delete" as a Rust
@@ -29,6 +33,7 @@ pub mod guarded;
 pub mod handle;
 pub mod locked;
 pub mod multi;
+pub mod placement;
 pub mod raw;
 pub mod resize;
 pub mod sharded;
@@ -44,8 +49,15 @@ pub use guarded::{GuardConfig, GuardError, GuardedPool};
 pub use handle::{PoolHandle, PooledVec};
 pub use locked::{BlockToken, LockedPool};
 pub use multi::{MultiPool, MultiPoolConfig, Origin, ShardedMultiPool};
+pub use placement::{
+    Pinned, RoundRobin, ShardPlacement, StealAware, DEFAULT_REHOME_THRESHOLD_PCT,
+    DEFAULT_REHOME_WINDOW,
+};
 pub use raw::{RawPool, MIN_BLOCK_SIZE};
 pub use resize::ResizablePool;
-pub use sharded::{default_shards, ShardedPool, MAX_STEAL_BATCH};
+pub use sharded::{
+    default_shards, home_slot_epoch, home_slots_free, home_slots_high_water, ShardedPool,
+    MAX_HOME_SLOTS, MAX_STEAL_BATCH,
+};
 pub use stats::{PoolStats, ShardStats, ShardedPoolStats};
 pub use typed::{PoolBox, TypedPool};

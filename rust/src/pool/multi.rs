@@ -11,7 +11,10 @@ use core::alloc::Layout;
 use core::ptr::NonNull;
 use core::sync::atomic::{AtomicU64, Ordering};
 
+use std::sync::Arc;
+
 use super::fixed::{FixedPool, PoolConfig};
+use super::placement::{ShardPlacement, StealAware};
 use super::sharded::{default_shards, ShardedPool};
 use super::stats::ShardedPoolStats;
 use crate::util::align::next_pow2;
@@ -217,7 +220,18 @@ impl ShardedMultiPool {
         Self::with_shards(cfg, default_shards())
     }
 
+    /// Default (steal-aware) topology with an explicit shard count.
     pub fn with_shards(cfg: MultiPoolConfig, shards: usize) -> Self {
+        Self::with_placement(cfg, shards, Arc::new(StealAware::default()))
+    }
+
+    /// Fully explicit constructor: every size class is a [`ShardedPool`]
+    /// sharing one [`ShardPlacement`] topology policy.
+    pub fn with_placement(
+        cfg: MultiPoolConfig,
+        shards: usize,
+        placement: Arc<dyn ShardPlacement>,
+    ) -> Self {
         assert!(cfg.min_class.is_power_of_two() && cfg.min_class >= 8);
         assert!(cfg.max_class.is_power_of_two() && cfg.max_class >= cfg.min_class);
         let mut classes = Vec::new();
@@ -225,7 +239,12 @@ impl ShardedMultiPool {
         let mut size = cfg.min_class;
         while size <= cfg.max_class {
             let layout = Layout::from_size_align(size, 16).expect("bad class layout");
-            classes.push(ShardedPool::with_layout(layout, cfg.blocks_per_class, shards));
+            classes.push(ShardedPool::with_layout_placement(
+                layout,
+                cfg.blocks_per_class,
+                shards,
+                Arc::clone(&placement),
+            ));
             class_sizes.push(size);
             size *= 2;
         }
@@ -318,6 +337,19 @@ impl ShardedMultiPool {
         self.classes[ci].stats()
     }
 
+    /// The topology policy shared by every size class.
+    pub fn placement_name(&self) -> &'static str {
+        self.classes[0].placement_name()
+    }
+
+    /// Maintenance: return every stash-parked block (including chains
+    /// orphaned by exited threads) to its owning shard's free list,
+    /// across all size classes. Returns blocks moved. The serving loop
+    /// calls this on its periodic stats tick.
+    pub fn drain_stashes(&self) -> u32 {
+        self.classes.iter().map(|c| c.drain_stashes()).sum()
+    }
+
     /// Fraction of requests served from pools (vs system fallback).
     pub fn pool_hit_rate(&self) -> f64 {
         let hits: u64 = self.hits.iter().map(|h| h.load(Ordering::Relaxed)).sum();
@@ -331,7 +363,9 @@ impl ShardedMultiPool {
 
     /// Publish gauges for every size class into `metrics` under `prefix`:
     /// per-class hits/exhaustion plus each class pool's per-shard
-    /// hit/steal gauges (via [`ShardedPool::export_metrics`]).
+    /// hit/steal/rehome gauges (via [`ShardedPool::export_metrics`]),
+    /// and the cross-class rehome aggregates
+    /// (`{prefix}.rehomes_total`, `{prefix}.rehome_drained_total`).
     pub fn export_metrics(&self, metrics: &crate::metrics::Metrics, prefix: &str) {
         metrics
             .gauge(&format!("{prefix}.system_allocs"))
@@ -339,6 +373,8 @@ impl ShardedMultiPool {
         metrics
             .gauge(&format!("{prefix}.hit_rate_pct"))
             .set((self.pool_hit_rate() * 100.0) as i64);
+        let mut rehomes = 0u64;
+        let mut drained = 0u64;
         for ci in 0..self.classes.len() {
             let size = self.class_sizes[ci];
             metrics
@@ -347,8 +383,12 @@ impl ShardedMultiPool {
             metrics
                 .gauge(&format!("{prefix}.c{size}.exhausted"))
                 .set(self.exhausted[ci].load(Ordering::Relaxed) as i64);
-            self.classes[ci].export_metrics(metrics, &format!("{prefix}.c{size}"));
+            let s = self.classes[ci].export_metrics(metrics, &format!("{prefix}.c{size}"));
+            rehomes += s.total_rehomes();
+            drained += s.total_stash_drained();
         }
+        metrics.gauge(&format!("{prefix}.rehomes_total")).set(rehomes as i64);
+        metrics.gauge(&format!("{prefix}.rehome_drained_total")).set(drained as i64);
     }
 }
 
@@ -528,6 +568,21 @@ mod tests {
         assert!(r.contains("pool.serving.c32.shards = 2"), "{r}");
         assert!(r.contains("pool.serving.system_allocs = 0"), "{r}");
         assert!(r.contains("pool.serving.hit_rate_pct = 100"), "{r}");
+    }
+
+    #[test]
+    fn placement_choice_threads_through_classes() {
+        use crate::pool::placement::RoundRobin;
+        let mp = ShardedMultiPool::with_placement(cfg_small(), 2, Arc::new(RoundRobin));
+        assert_eq!(mp.placement_name(), "round_robin");
+        let mp2 = ShardedMultiPool::with_shards(cfg_small(), 2);
+        assert_eq!(mp2.placement_name(), "steal_aware", "steal-aware is the default");
+        assert_eq!(mp2.drain_stashes(), 0, "fresh pool has nothing stashed");
+        let m = crate::metrics::Metrics::new();
+        mp2.export_metrics(&m, "pool.x");
+        let r = m.report();
+        assert!(r.contains("pool.x.rehomes_total = 0"), "{r}");
+        assert!(r.contains("pool.x.rehome_drained_total = 0"), "{r}");
     }
 
     #[test]

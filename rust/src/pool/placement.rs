@@ -1,0 +1,261 @@
+//! `ShardPlacement` — the shard-topology policy seam of
+//! [`ShardedPool`](super::sharded::ShardedPool).
+//!
+//! Per-thread locality is what makes a sharded pool constant-time under
+//! contention (Blelloch & Wei, *Concurrent Fixed-Size Allocation and Free
+//! in Constant Time*, arXiv:2008.04296), and topology/tuning parameters
+//! dominate custom-allocator throughput (Risco-Martín et al., *Simulation
+//! of high-performance memory allocators*). This module turns both
+//! observations into a policy object:
+//!
+//! * [`RoundRobin`] — the static baseline: home slot *s* maps to shard
+//!   `s % shards` forever. Zero bookkeeping, but a thread whose home runs
+//!   dry pays a cross-shard steal scan on every allocation for the rest of
+//!   its life.
+//! * [`StealAware`] — adaptive rehoming. Each home shard tracks a
+//!   windowed local-hit vs. per-victim steal profile; when one victim
+//!   supplies at least [`StealAware::threshold_pct`] percent of a window's
+//!   allocations, the thread that closed the window is rehomed to that
+//!   victim (its own home-slot entry is switched with a single
+//!   generation-stamped CAS, so the move is race-free and per-thread).
+//!   Composable over any base placement via [`StealAware::over`].
+//! * [`Pinned`] — an explicit slot→shard map. This is the NUMA seam: fill
+//!   the map from a NUMA probe (slots of node-0 threads → shards whose
+//!   region pages live on node 0) and placement becomes topology-aware
+//!   with no further pool changes. The probe itself needs OS support the
+//!   offline container lacks, so `Pinned` ships as a ready stub — and
+//!   doubles as the deterministic skew generator for the topology tests
+//!   and the `ablate_threads` skewed-affinity arm.
+
+use std::sync::Arc;
+
+/// Ops per rehome-decision window for [`StealAware::default`].
+pub const DEFAULT_REHOME_WINDOW: u32 = 256;
+
+/// Percentage of a window that one victim must supply before
+/// [`StealAware::default`] rehomes the deciding thread to it.
+pub const DEFAULT_REHOME_THRESHOLD_PCT: u32 = 50;
+
+/// A shard-topology policy: where home slots start, and when (if ever)
+/// threads are rehomed.
+///
+/// Implementations must be cheap and allocation-free: `place` runs on the
+/// pool's slow-ish rebinding path and `rehome` once per closed window,
+/// both potentially inside a `#[global_allocator]`.
+pub trait ShardPlacement: Send + Sync + core::fmt::Debug {
+    /// Short stable identifier (metrics, bench reports).
+    fn name(&self) -> &'static str;
+
+    /// Initial shard for home slot `slot` in a pool of `num_shards`
+    /// (callers clamp the result with `% num_shards` defensively).
+    fn place(&self, slot: usize, num_shards: usize) -> usize;
+
+    /// Allocations per rehome-decision window. `0` disables rehoming and
+    /// all windowed accounting.
+    fn window(&self) -> u32 {
+        0
+    }
+
+    /// Decide whether the thread that just closed a window at `home`
+    /// should move. `local_hits`/`steals_total` partition the window's
+    /// allocations; `victim` is the shard that supplied the most stolen
+    /// blocks (`victim_steals` of them). Return `Some(new_home)` to move
+    /// the deciding thread.
+    fn rehome(
+        &self,
+        home: usize,
+        local_hits: u32,
+        steals_total: u32,
+        victim: usize,
+        victim_steals: u32,
+    ) -> Option<usize> {
+        let _ = (home, local_hits, steals_total, victim, victim_steals);
+        None
+    }
+}
+
+/// Static round-robin placement: slot `s` lives on shard `s % shards`
+/// forever. The pre-topology behaviour, kept as the ablation baseline.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RoundRobin;
+
+impl ShardPlacement for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round_robin"
+    }
+
+    fn place(&self, slot: usize, num_shards: usize) -> usize {
+        slot % num_shards
+    }
+}
+
+/// Explicit slot→shard map — the NUMA-ready placement stub.
+///
+/// `map[slot % map.len()]` is the slot's shard. A NUMA-aware deployment
+/// fills the map so threads land on shards whose backing pages share
+/// their socket; the tests and benches use it to manufacture deterministic
+/// skew (e.g. [`Pinned::all`] homes every thread on one shard).
+#[derive(Debug, Clone)]
+pub struct Pinned {
+    map: Vec<usize>,
+}
+
+impl Pinned {
+    /// Placement from an explicit slot→shard map (`map.len()` need not
+    /// match the shard count; slots wrap, shards are clamped).
+    pub fn new(map: Vec<usize>) -> Self {
+        assert!(!map.is_empty(), "Pinned placement needs a non-empty map");
+        Self { map }
+    }
+
+    /// Home every slot on one shard — maximal skew, used by the topology
+    /// stress tests and the skewed-affinity bench arm.
+    pub fn all(shard: usize) -> Self {
+        Self::new(vec![shard])
+    }
+}
+
+impl ShardPlacement for Pinned {
+    fn name(&self) -> &'static str {
+        "pinned"
+    }
+
+    fn place(&self, slot: usize, num_shards: usize) -> usize {
+        self.map[slot % self.map.len()] % num_shards
+    }
+}
+
+/// Steal-aware adaptive rehoming over a base placement.
+///
+/// Initial placement delegates to `base` (default [`RoundRobin`]). Once a
+/// home shard's window of `window` allocations closes with one victim
+/// supplying ≥ `threshold_pct`% of them, the thread that closed the
+/// window is rehomed to that victim. The pool applies the switch with a
+/// generation-stamped per-slot CAS and drains the abandoned home's steal
+/// stash back to the owning shards, so the move is race-free and leaves
+/// no stranded blocks behind.
+#[derive(Debug, Clone)]
+pub struct StealAware {
+    /// Allocations per decision window (≥ 2; `0` disables rehoming).
+    pub window: u32,
+    /// Dominant-victim share (percent of the window) that triggers a move.
+    pub threshold_pct: u32,
+    /// Initial placement.
+    pub base: Arc<dyn ShardPlacement>,
+}
+
+impl Default for StealAware {
+    fn default() -> Self {
+        Self {
+            window: DEFAULT_REHOME_WINDOW,
+            threshold_pct: DEFAULT_REHOME_THRESHOLD_PCT,
+            base: Arc::new(RoundRobin),
+        }
+    }
+}
+
+impl StealAware {
+    /// Default thresholds over an explicit base placement (e.g. a skewed
+    /// [`Pinned`] map, or a NUMA map once the probe exists).
+    pub fn over(base: Arc<dyn ShardPlacement>) -> Self {
+        Self { base, ..Default::default() }
+    }
+}
+
+impl ShardPlacement for StealAware {
+    fn name(&self) -> &'static str {
+        "steal_aware"
+    }
+
+    fn place(&self, slot: usize, num_shards: usize) -> usize {
+        self.base.place(slot, num_shards)
+    }
+
+    fn window(&self) -> u32 {
+        self.window
+    }
+
+    fn rehome(
+        &self,
+        home: usize,
+        local_hits: u32,
+        steals_total: u32,
+        victim: usize,
+        victim_steals: u32,
+    ) -> Option<usize> {
+        if victim == home || victim_steals == 0 {
+            return None;
+        }
+        let total = local_hits as u64 + steals_total as u64;
+        if total == 0 {
+            return None;
+        }
+        if victim_steals as u64 * 100 >= self.threshold_pct as u64 * total {
+            Some(victim)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_cycles_and_never_rehomes() {
+        let p = RoundRobin;
+        assert_eq!(p.place(0, 4), 0);
+        assert_eq!(p.place(5, 4), 1);
+        assert_eq!(p.place(7, 4), 3);
+        assert_eq!(p.window(), 0, "static placement keeps windows off");
+        assert_eq!(p.rehome(0, 0, 100, 1, 100), None);
+    }
+
+    #[test]
+    fn pinned_maps_and_clamps() {
+        let p = Pinned::new(vec![2, 5, 0]);
+        assert_eq!(p.place(0, 4), 2);
+        assert_eq!(p.place(1, 4), 1, "shard 5 clamps to 5 % 4");
+        assert_eq!(p.place(3, 4), 2, "slots wrap the map");
+        let all = Pinned::all(3);
+        for slot in 0..10 {
+            assert_eq!(all.place(slot, 8), 3);
+        }
+        assert_eq!(all.window(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-empty")]
+    fn pinned_rejects_empty_map() {
+        let _ = Pinned::new(vec![]);
+    }
+
+    #[test]
+    fn steal_aware_threshold_edges() {
+        let p = StealAware::default();
+        assert_eq!(p.window(), DEFAULT_REHOME_WINDOW);
+        // Exactly at threshold: 128 of 256 from one victim → move.
+        assert_eq!(p.rehome(0, 128, 128, 3, 128), Some(3));
+        // Just under: stay.
+        assert_eq!(p.rehome(0, 129, 127, 3, 127), None);
+        // Dominant victim but diluted across many victims: stay.
+        assert_eq!(p.rehome(0, 0, 256, 3, 64), None);
+        // Degenerate inputs never move.
+        assert_eq!(p.rehome(0, 0, 0, 0, 0), None);
+        assert_eq!(p.rehome(2, 0, 256, 2, 256), None, "victim == home");
+    }
+
+    #[test]
+    fn steal_aware_delegates_initial_placement() {
+        let p = StealAware::over(Arc::new(Pinned::all(2)));
+        for slot in 0..6 {
+            assert_eq!(p.place(slot, 8), 2);
+        }
+        assert_eq!(p.name(), "steal_aware");
+        // Custom thresholds are honoured.
+        let strict = StealAware { threshold_pct: 90, ..StealAware::default() };
+        assert_eq!(strict.rehome(0, 64, 192, 1, 192), None, "75% < 90%");
+        assert_eq!(strict.rehome(0, 16, 240, 1, 240), Some(1), "93% ≥ 90%");
+    }
+}

@@ -15,7 +15,7 @@ use core::alloc::Layout;
 use core::ptr::NonNull;
 
 use super::raw::RawPool;
-use crate::util::align::align_up;
+use crate::util::align::checked_align_up;
 
 /// A pool that can grow up to a reserved maximum and shrink to its
 /// lazy-initialisation watermark.
@@ -30,8 +30,21 @@ impl ResizablePool {
     pub fn new(block_size: usize, initial_blocks: u32, max_blocks: u32) -> Self {
         assert!(initial_blocks >= 1 && initial_blocks <= max_blocks);
         let align = core::mem::size_of::<usize>();
-        let bs = align_up(block_size.max(4), align);
-        let bytes = bs * max_blocks as usize;
+        // Checked align-up: a plain `align_up(usize::MAX, 8)` wraps to 0,
+        // which would sail through the reservation check below and reach
+        // `alloc` with a zero-size layout (UB). Unlike the Layout-taking
+        // pool constructors (where `Layout::from_size_align` already
+        // bounds the size), this constructor takes a raw usize.
+        let bs = checked_align_up(block_size.max(4), align)
+            .expect("pool block size overflows usize (alignment padding)");
+        // The reservation is `bs * max_blocks` even though only
+        // `initial_blocks` are committed — the product must be checked
+        // exactly like `RawPool::new` checks its committed size, or an
+        // adversarial `max_blocks` wraps to a tiny reservation that later
+        // `grow` calls happily run off the end of.
+        let bytes = bs
+            .checked_mul(max_blocks as usize)
+            .expect("pool reservation size overflows usize (block_size * max_blocks)");
         let layout = Layout::from_size_align(bytes, align).expect("bad layout");
         let region = NonNull::new(unsafe { std::alloc::alloc(layout) })
             .expect("pool region allocation failed");
@@ -54,7 +67,7 @@ impl ResizablePool {
         if cur >= self.max_blocks {
             return None;
         }
-        let target = (cur * 2).min(self.max_blocks);
+        let target = doubling_target(cur, self.max_blocks);
         // SAFETY: the reserved region covers max_blocks.
         unsafe { self.raw.grow(target) };
         self.raw.allocate()
@@ -104,6 +117,15 @@ impl Drop for ResizablePool {
     fn drop(&mut self) {
         unsafe { std::alloc::dealloc(self.raw.mem_start().as_ptr(), self.layout) };
     }
+}
+
+/// Next step of the doubling schedule. `cur * 2` wraps for pools past
+/// 2³¹ blocks (a plain `cur * 2` silently truncates in release builds,
+/// turning "grow" into a panic inside `RawPool::grow` or worse) —
+/// saturate, then cap at the reservation.
+#[inline]
+fn doubling_target(cur: u32, max_blocks: u32) -> u32 {
+    cur.saturating_mul(2).min(max_blocks)
 }
 
 #[cfg(test)]
@@ -159,6 +181,35 @@ mod tests {
     fn grow_beyond_max_panics() {
         let mut p = ResizablePool::new(8, 4, 8);
         p.grow(9);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflows usize")]
+    fn new_rejects_overflowing_reservation() {
+        // Regression: `bs * max_blocks` used to be unchecked — on a
+        // 64-bit target this wraps to a tiny reservation and every later
+        // grow writes past it. Must fail loudly before allocating.
+        let _ = ResizablePool::new(usize::MAX / 2, 1, 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflows usize")]
+    fn new_rejects_align_up_wraparound() {
+        // Regression: `align_up(usize::MAX, 8)` wraps to 0, which would
+        // bypass the reservation check and hit `alloc` with a zero-size
+        // layout. The checked align-up must panic first.
+        let _ = ResizablePool::new(usize::MAX, 1, 4);
+    }
+
+    #[test]
+    fn doubling_schedule_saturates_instead_of_wrapping() {
+        // Regression: `cur * 2` wrapped for cur ≥ 2³¹, so a huge pool's
+        // next "doubling" target became 0 (release) or panicked (debug).
+        assert_eq!(doubling_target(0x8000_0000, u32::MAX), u32::MAX);
+        assert_eq!(doubling_target(u32::MAX, u32::MAX), u32::MAX);
+        assert_eq!(doubling_target(3, 16), 6);
+        assert_eq!(doubling_target(10, 16), 16, "cap at the reservation");
+        assert_eq!(doubling_target(1, 2), 2);
     }
 
     #[test]

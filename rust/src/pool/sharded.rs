@@ -9,9 +9,12 @@
 //! (arXiv:2008.04296), this module stripes one region across N independent
 //! `AtomicPool` shards:
 //!
-//! * **Routing** — each thread gets a round-robin *home shard* on first
-//!   use (a const-init thread-local, so the hint costs one TLS read on the
-//!   hot path and never allocates). Threads ≤ shards ⇒ zero CAS sharing.
+//! * **Routing** — each thread owns a *home slot* leased from a small
+//!   process-wide recyclable free-list (see *Home-slot lifecycle* below);
+//!   a [`ShardPlacement`](super::placement::ShardPlacement) policy maps
+//!   the slot to a shard. The hot path costs one const-init TLS read plus
+//!   one relaxed load of the pool's per-slot home map, and never
+//!   allocates. Threads ≤ shards ⇒ zero CAS sharing.
 //! * **Batched stealing** — on local exhaustion the allocator scans
 //!   sibling shards, so capacity is pooled, not partitioned: one thread
 //!   can still drain the entire pool. Each successful scan detaches up to
@@ -26,6 +29,22 @@
 //!   more than it needs. Scans, stolen blocks and stash hits are counted
 //!   per home shard — the "concurrency tax" visible in
 //!   [`ShardedPoolStats`].
+//! * **Steal-aware rehoming** — with a
+//!   [`StealAware`](super::placement::StealAware) placement (the
+//!   default), each home shard also keeps a *windowed* local-hit vs.
+//!   per-victim steal profile. When a window of
+//!   [`DEFAULT_REHOME_WINDOW`](super::placement::DEFAULT_REHOME_WINDOW)
+//!   allocations closes with one victim shard supplying ≥
+//!   [`DEFAULT_REHOME_THRESHOLD_PCT`](super::placement::DEFAULT_REHOME_THRESHOLD_PCT)%
+//!   of them, the thread that closed the window is rehomed to that
+//!   victim: its own home-map entry is swung with a single
+//!   generation-stamped CAS (no other thread's routing changes, and a
+//!   racing rehome/reassignment loses the CAS cleanly), the abandoned
+//!   home's steal stash is drained back to the owning shards, and the
+//!   move shows up in the `rehomes`/`stash_drained` counters and the
+//!   `rehome*` gauges. A thread stuck in a >50% cross-shard regime thus
+//!   converges back to the paper's one-CAS local fast path instead of
+//!   paying a steal scan forever.
 //! * **O(1) free with no hardware divide** — shards are laid out at a
 //!   uniform power-of-two *stride* (in blocks) inside one contiguous
 //!   region, so `deallocate` recovers the owning shard from the pointer
@@ -35,18 +54,45 @@
 //!   stride_shift and local index = index & (stride-1). No shard id is
 //!   stored in the block; the paper's zero-header property is preserved.
 //!
+//! ### Home-slot lifecycle (churn safety)
+//!
+//! Home slots used to come from a monotone global counter, so every
+//! short-lived thread consumed a fresh id forever and slot assignment
+//! drifted with churn. Slots are now leased from a process-wide
+//! free-list over a fixed arena of [`MAX_HOME_SLOTS`] ids: a thread takes
+//! the lowest recycled id (or a fresh one) on first use and a TLS guard
+//! returns it at thread exit, bumping the slot's generation and the
+//! global [`home_slot_epoch`]. Beyond `MAX_HOME_SLOTS` concurrently live
+//! threads, overflow ids are shared round-robin (never recycled — they
+//! are already shared, and sharing a routing hint is harmless). The
+//! generation stamp makes recycling race-free: a pool's per-slot home map
+//! entry records the generation it was written under, so a recycled
+//! slot's new owner never inherits routing state (or rehoming history)
+//! from the dead thread — the first use under the new generation rebinds
+//! the entry from the placement policy.
+//!
+//! Stash chains a dead thread left behind stay *reachable* at all times
+//! (the allocate slow path raids every stash before failing), so no block
+//! is ever lost to churn; [`ShardedPool::drain_stashes`] (called by the
+//! serving engine's periodic maintenance and on rehome) additionally
+//! returns them to their owning shards' free lists so local fast paths
+//! see them again.
+//!
 //! ### Memory accounting (the concurrency tax, itemised)
 //!
 //! * 4 bytes/block side tables (inherited from `AtomicPool`).
-//! * One cache line of counters per shard (includes the stash head and
-//!   the adaptive batch width).
+//! * Two cache lines of counters per shard (the hit/steal/free tallies
+//!   plus the stash head, the adaptive batch width and the rehome
+//!   window/drain counters — 84 payload bytes, aligned up to 128).
+//! * **Home map**: 8 bytes per home slot (`MAX_HOME_SLOTS` entries) for
+//!   the generation-stamped slot→shard routing, plus a `shards²`-entry
+//!   window matrix for the per-victim steal profile. Both are fixed-size
+//!   and reported by [`ShardedPool::overhead_bytes`].
 //! * **Batched-steal side table**: 4 bytes per *grid slot* (`shards ×
 //!   stride`, so stride padding is included) for the stash next-links.
 //!   Like the shard side tables these live outside user blocks — a stale
 //!   stash reader may inspect the link of a block already handed to user
-//!   code, so the link must stay in memory the user never owns. Cost:
-//!   ≤ 8 bytes/block total side tables, reported by
-//!   [`ShardedPool::overhead_bytes`].
+//!   code, so the link must stay in memory the user never owns.
 //! * Stride padding: when `num_blocks / shards` is not a power of two the
 //!   region is laid out with up-to-2× *virtual* slack between shards.
 //!   Padding blocks are **never touched** — creation is lazy exactly as in
@@ -58,40 +104,200 @@
 //!   a concurrent scan can momentarily see fewer free blocks than exist.
 //!   Allocation failure is therefore "every shard and stash looked empty
 //!   during the scan", exactly as a single-block steal can race a free.
+//!
+//! ### Gauges
+//!
+//! [`ShardedPool::export_metrics`] publishes, per prefix: `shards`,
+//! `free_blocks`, `steals_total`, `steal_scans_total`, `stash_hits_total`,
+//! `stash_blocks`, **`rehomes_total`** (home-map switches performed by the
+//! steal-aware policy), **`stash_drained_total`** (blocks returned to
+//! their owning shards by rehome/maintenance drains), **`local_hit_pct`**
+//! (share of allocations served by the caller's home shard) and per-shard
+//! `shardN.{local_hits,steals,free}`. Through the serving engine these
+//! appear under `pool.serving.c<class>.*`, with `pool.serving.rehomes_total`
+//! aggregated across classes.
 
 use core::alloc::Layout;
 use core::cell::Cell;
 use core::ptr::NonNull;
-use core::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use core::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::Arc;
 
 use super::atomic::AtomicPool;
+use super::placement::{ShardPlacement, StealAware};
 use super::raw::{mod_inverse_u64, MIN_BLOCK_SIZE};
 use super::stats::{ShardStats, ShardedPoolStats};
 use crate::metrics::Metrics;
 use crate::util::align::{align_up, next_pow2};
 
-/// Monotone source of home-shard assignments (round-robin across threads).
-static NEXT_HOME: AtomicUsize = AtomicUsize::new(0);
+// ---------------------------------------------------------------------------
+// Process-wide home-slot registry: a recyclable free-list over a fixed
+// arena of slot ids. Entirely lock-free and allocation-free so it is safe
+// to run inside a `#[global_allocator]`.
+// ---------------------------------------------------------------------------
+
+/// Size of the home-slot arena: the number of concurrently live threads
+/// that get private, recyclable routing slots. Beyond this, slots are
+/// shared round-robin (harmless — a slot is only a routing hint).
+pub const MAX_HOME_SLOTS: usize = 256;
+
+/// Sentinel for "no slot" in the registry free-list.
+const SLOT_NIL: u32 = u32::MAX;
+
+/// High bit of a TLS slot word: the slot is shared (overflow or acquired
+/// during thread teardown) — never recycled, excluded from rehoming.
+const SLOT_SHARED_BIT: u32 = 1 << 31;
+
+/// TLS sentinel: no slot acquired yet.
+const HOME_UNSET: u64 = u64::MAX;
+/// TLS sentinel: the exit guard ran; any later use takes a shared slot.
+const HOME_EXITED: u64 = u64::MAX - 1;
+
+/// Free-list head: packed (slot | SLOT_NIL, ABA tag).
+static SLOT_FREE_HEAD: AtomicU64 = AtomicU64::new(pack(SLOT_NIL, 0));
+/// Free-list next links (static arena — no allocation, ever).
+static SLOT_NEXT: [AtomicU32; MAX_HOME_SLOTS] =
+    [const { AtomicU32::new(SLOT_NIL) }; MAX_HOME_SLOTS];
+/// Per-slot generation, bumped on every release; stale-owner detector.
+static SLOT_GEN: [AtomicU32; MAX_HOME_SLOTS] =
+    [const { AtomicU32::new(0) }; MAX_HOME_SLOTS];
+/// Slots ever handed out (clamped to the arena in the getter).
+static SLOT_HIGH_WATER: AtomicU32 = AtomicU32::new(0);
+/// Slots currently parked in the free-list.
+static SLOT_FREE_COUNT: AtomicU32 = AtomicU32::new(0);
+/// Round-robin source for shared overflow slots.
+static SLOT_OVERFLOW_RR: AtomicU32 = AtomicU32::new(0);
+/// Bumped on every slot release — pools and tests can watch thread churn.
+static SLOT_EPOCH: AtomicU64 = AtomicU64::new(0);
 
 std::thread_local! {
-    /// This thread's home slot (masked per pool). `usize::MAX` = unset.
-    /// Const-init `Cell<usize>` carries no destructor, so reading it inside
-    /// a `#[global_allocator]` cannot recurse into allocation.
-    static HOME: Cell<usize> = const { Cell::new(usize::MAX) };
+    /// This thread's home slot, packed `(gen << 32) | slot_with_flags`.
+    /// Const-init `Cell<u64>` carries no destructor, so reading it inside
+    /// a `#[global_allocator]` (or another key's TLS destructor) cannot
+    /// recurse into allocation.
+    static HOME: Cell<u64> = const { Cell::new(HOME_UNSET) };
+    /// Exit guard returning the slot to the registry. Kept separate from
+    /// `HOME` so the hot path never touches a destructor-bearing key.
+    static HOME_GUARD: Cell<Option<HomeGuard>> = const { Cell::new(None) };
 }
 
+struct HomeGuard(u32);
+
+impl Drop for HomeGuard {
+    fn drop(&mut self) {
+        // Mark the cached slot dead *before* recycling it, so allocations
+        // from later-running TLS destructors fall back to a shared slot
+        // instead of racing the id's next owner.
+        HOME.with(|h| h.set(HOME_EXITED));
+        release_slot(self.0);
+    }
+}
+
+/// Pop a recycled slot, else claim a fresh one; `(slot, privately_owned)`.
+fn acquire_slot() -> (u32, bool) {
+    let mut cur = SLOT_FREE_HEAD.load(Ordering::Acquire);
+    loop {
+        let (slot, tag) = unpack(cur);
+        if slot == SLOT_NIL {
+            break;
+        }
+        let nxt = SLOT_NEXT[slot as usize].load(Ordering::Relaxed);
+        match SLOT_FREE_HEAD.compare_exchange_weak(
+            cur,
+            pack(nxt, tag.wrapping_add(1)),
+            Ordering::AcqRel,
+            Ordering::Acquire,
+        ) {
+            Ok(_) => {
+                SLOT_FREE_COUNT.fetch_sub(1, Ordering::Relaxed);
+                return (slot, true);
+            }
+            Err(actual) => cur = actual,
+        }
+    }
+    let fresh = SLOT_HIGH_WATER.fetch_add(1, Ordering::Relaxed);
+    if (fresh as usize) < MAX_HOME_SLOTS {
+        return (fresh, true);
+    }
+    // Arena exhausted: undo the probe and share an id round-robin.
+    SLOT_HIGH_WATER.fetch_sub(1, Ordering::Relaxed);
+    (overflow_slot(), false)
+}
+
+fn overflow_slot() -> u32 {
+    SLOT_OVERFLOW_RR.fetch_add(1, Ordering::Relaxed) % MAX_HOME_SLOTS as u32
+}
+
+fn release_slot(slot: u32) {
+    debug_assert!((slot as usize) < MAX_HOME_SLOTS);
+    // Generation first: the release-CAS below publishes it to the next
+    // acquirer, which is what keeps recycled ids race-free.
+    SLOT_GEN[slot as usize].fetch_add(1, Ordering::Relaxed);
+    let mut cur = SLOT_FREE_HEAD.load(Ordering::Acquire);
+    loop {
+        let (head, tag) = unpack(cur);
+        SLOT_NEXT[slot as usize].store(head, Ordering::Relaxed);
+        match SLOT_FREE_HEAD.compare_exchange_weak(
+            cur,
+            pack(slot, tag.wrapping_add(1)),
+            Ordering::AcqRel,
+            Ordering::Acquire,
+        ) {
+            Ok(_) => break,
+            Err(actual) => cur = actual,
+        }
+    }
+    SLOT_FREE_COUNT.fetch_add(1, Ordering::Relaxed);
+    SLOT_EPOCH.fetch_add(1, Ordering::Release);
+}
+
+/// This thread's `(slot_with_flags, generation)`, acquiring on first use.
 #[inline]
-fn home_slot() -> usize {
+fn home_slot() -> (u32, u32) {
     HOME.with(|h| {
         let v = h.get();
-        if v != usize::MAX {
-            v
+        if v != HOME_UNSET && v != HOME_EXITED {
+            ((v & u32::MAX as u64) as u32, (v >> 32) as u32)
         } else {
-            let fresh = NEXT_HOME.fetch_add(1, Ordering::Relaxed);
-            h.set(fresh);
-            fresh
+            init_home_slot(h, v == HOME_EXITED)
         }
     })
+}
+
+#[cold]
+fn init_home_slot(h: &Cell<u64>, teardown: bool) -> (u32, u32) {
+    let (slot, owned) =
+        if teardown { (overflow_slot(), false) } else { acquire_slot() };
+    let gen = SLOT_GEN[slot as usize].load(Ordering::Relaxed);
+    let flagged = if owned { slot } else { slot | SLOT_SHARED_BIT };
+    h.set(((gen as u64) << 32) | flagged as u64);
+    if owned {
+        // Register the exit guard AFTER the cell is set: if registering a
+        // destructor-bearing TLS key allocates (it can on some platforms),
+        // the re-entrant allocation reads the cell and returns without
+        // touching the guard key. During thread teardown `try_with` fails
+        // and the slot simply stays out of circulation.
+        let _ = HOME_GUARD.try_with(|g| g.set(Some(HomeGuard(slot))));
+    }
+    (flagged, gen)
+}
+
+/// Highest number of home-slot ids ever live at once (clamped to the
+/// arena). Flat across thread churn — the recycling proof the stress
+/// suite asserts.
+pub fn home_slots_high_water() -> usize {
+    (SLOT_HIGH_WATER.load(Ordering::Relaxed) as usize).min(MAX_HOME_SLOTS)
+}
+
+/// Slot ids currently parked in the recycle free-list.
+pub fn home_slots_free() -> usize {
+    SLOT_FREE_COUNT.load(Ordering::Relaxed) as usize
+}
+
+/// Monotone thread-churn counter: bumps every time a thread exits and
+/// returns its home slot.
+pub fn home_slot_epoch() -> u64 {
+    SLOT_EPOCH.load(Ordering::Acquire)
 }
 
 /// Default shard count: available parallelism rounded up to a power of
@@ -108,19 +314,22 @@ pub const MAX_STEAL_BATCH: u32 = 16;
 /// Sentinel for an empty stash / end of a stash chain (grid index space).
 const GRID_NIL: u32 = u32::MAX;
 
+/// Home-map generation sentinel: entry never written for this slot.
+const GEN_UNSET: u32 = u32::MAX;
+
 #[inline(always)]
-fn pack(grid: u32, tag: u32) -> u64 {
-    ((tag as u64) << 32) | grid as u64
+const fn pack(lo: u32, hi: u32) -> u64 {
+    ((hi as u64) << 32) | lo as u64
 }
 
 #[inline(always)]
-fn unpack(v: u64) -> (u32, u32) {
+const fn unpack(v: u64) -> (u32, u32) {
     (v as u32, (v >> 32) as u32)
 }
 
-/// Per-shard counters plus the home slot's steal-stash head and adaptive
-/// batch width, cache-line separated so a hot shard's updates do not
-/// false-share with its neighbours.
+/// Per-shard counters plus the home slot's steal-stash head, adaptive
+/// batch width and rehome window, cache-line separated so a hot shard's
+/// updates do not false-share with its neighbours.
 #[repr(align(64))]
 struct ShardCounters {
     /// Allocations served by this shard for threads homed on it.
@@ -141,6 +350,12 @@ struct ShardCounters {
     stash_count: AtomicU32,
     /// Adaptive steal batch k ∈ [1, MAX_STEAL_BATCH].
     steal_batch: AtomicU32,
+    /// Allocations in the current rehome-decision window.
+    win_ops: AtomicU32,
+    /// Threads rehomed away from this shard by the placement policy.
+    rehomes: AtomicU64,
+    /// Stash blocks returned to their owning shards by drains.
+    stash_drained: AtomicU64,
 }
 
 impl ShardCounters {
@@ -155,6 +370,9 @@ impl ShardCounters {
             stash_head: AtomicU64::new(pack(GRID_NIL, 0)),
             stash_count: AtomicU32::new(0),
             steal_batch: AtomicU32::new(1),
+            win_ops: AtomicU32::new(0),
+            rehomes: AtomicU64::new(0),
+            stash_drained: AtomicU64::new(0),
         }
     }
 }
@@ -170,6 +388,17 @@ pub struct ShardedPool {
     /// stale stash reader may inspect the link of a block already handed
     /// to user code.
     steal_next: Box<[AtomicU32]>,
+    /// Topology policy: initial slot→shard placement + rehome rule.
+    placement: Arc<dyn ShardPlacement>,
+    /// Cached `placement.window()` (0 ⇒ no windowed accounting at all).
+    window: u32,
+    /// Per-slot routing: packed (target shard, slot generation). A stale
+    /// generation (slot recycled since the entry was written) forces a
+    /// rebind from the placement policy, so routing state never leaks
+    /// across thread lifetimes.
+    home_map: Box<[AtomicU64]>,
+    /// Windowed per-victim steal counts, row-major `[home][victim]`.
+    win_steals: Box<[AtomicU32]>,
     mem_start: NonNull<u8>,
     layout: Layout,
     block_size: usize,
@@ -193,7 +422,7 @@ unsafe impl Sync for ShardedPool {}
 
 impl ShardedPool {
     /// Word-aligned pool of `num_blocks` × `block_size`, sharded
-    /// `default_shards()` ways.
+    /// `default_shards()` ways with the default steal-aware placement.
     pub fn with_blocks(block_size: usize, num_blocks: u32) -> Self {
         Self::with_shards(block_size, num_blocks, default_shards())
     }
@@ -208,9 +437,39 @@ impl ShardedPool {
         Self::with_layout(layout, num_blocks, shards)
     }
 
-    /// Fully explicit constructor: blocks honour `layout`'s alignment
-    /// (stride rounded up to a multiple of it, region allocated at it).
+    /// As [`Self::with_shards`] with an explicit topology policy.
+    pub fn with_placement(
+        block_size: usize,
+        num_blocks: u32,
+        shards: usize,
+        placement: Arc<dyn ShardPlacement>,
+    ) -> Self {
+        let layout =
+            Layout::from_size_align(block_size.max(1), core::mem::size_of::<usize>())
+                .expect("bad layout");
+        Self::with_layout_placement(layout, num_blocks, shards, placement)
+    }
+
+    /// Explicit layout, default steal-aware placement: blocks honour
+    /// `layout`'s alignment (stride rounded up to a multiple of it,
+    /// region allocated at it).
     pub fn with_layout(layout: Layout, num_blocks: u32, shards: usize) -> Self {
+        Self::with_layout_placement(
+            layout,
+            num_blocks,
+            shards,
+            Arc::new(StealAware::default()),
+        )
+    }
+
+    /// Fully explicit constructor: layout, shard count and topology
+    /// policy.
+    pub fn with_layout_placement(
+        layout: Layout,
+        num_blocks: u32,
+        shards: usize,
+        placement: Arc<dyn ShardPlacement>,
+    ) -> Self {
         assert!(num_blocks > 0, "pool must have at least one block");
         assert!(shards > 0, "need at least one shard");
         let align = layout.align().max(core::mem::size_of::<usize>());
@@ -258,12 +517,24 @@ impl ShardedPool {
         let mut steal_next = Vec::with_capacity(grid_slots as usize);
         steal_next.resize_with(grid_slots as usize, || AtomicU32::new(GRID_NIL));
 
+        // Home map starts unbound: the first use of a slot (under its
+        // current generation) rebinds it from the placement policy.
+        let mut home_map = Vec::with_capacity(MAX_HOME_SLOTS);
+        home_map.resize_with(MAX_HOME_SLOTS, || AtomicU64::new(pack(0, GEN_UNSET)));
+        let mut win_steals = Vec::with_capacity(n_shards * n_shards);
+        win_steals.resize_with(n_shards * n_shards, || AtomicU32::new(0));
+
+        let window = placement.window();
         let div_shift = bs.trailing_zeros();
         let div_inv = mod_inverse_u64((bs >> div_shift) as u64);
         Self {
             shards: pools.into_boxed_slice(),
             counters: counters.into_boxed_slice(),
             steal_next: steal_next.into_boxed_slice(),
+            placement,
+            window,
+            home_map: home_map.into_boxed_slice(),
+            win_steals: win_steals.into_boxed_slice(),
             mem_start: region,
             layout: region_layout,
             block_size: bs,
@@ -285,6 +556,114 @@ impl ShardedPool {
             NonNull::new_unchecked(
                 self.mem_start.as_ptr().add(grid as usize * self.block_size),
             )
+        }
+    }
+
+    /// Effective home shard for `(slot, gen)` from [`home_slot`].
+    #[inline]
+    fn resolve_home(&self, slot: u32, gen: u32) -> usize {
+        let n = self.shards.len();
+        if slot & SLOT_SHARED_BIT != 0 {
+            // Shared slot: stateless placement, no rehome participation.
+            return self.placement.place((slot & !SLOT_SHARED_BIT) as usize, n) % n;
+        }
+        let idx = slot as usize & (MAX_HOME_SLOTS - 1);
+        let (target, egen) = unpack(self.home_map[idx].load(Ordering::Relaxed));
+        if egen == gen && (target as usize) < n {
+            target as usize
+        } else {
+            self.rebind_home(idx, slot, gen)
+        }
+    }
+
+    /// First use of a slot generation in this pool (or a recycled slot's
+    /// stale entry): bind it from the placement policy.
+    #[cold]
+    fn rebind_home(&self, idx: usize, slot: u32, gen: u32) -> usize {
+        let n = self.shards.len();
+        let target = self.placement.place(slot as usize, n) % n;
+        self.home_map[idx].store(pack(target as u32, gen), Ordering::Relaxed);
+        target
+    }
+
+    /// The calling thread's current effective home shard (tests, benches).
+    pub fn current_home(&self) -> usize {
+        let (slot, gen) = home_slot();
+        self.resolve_home(slot, gen)
+    }
+
+    /// The active topology policy.
+    pub fn placement_name(&self) -> &'static str {
+        self.placement.name()
+    }
+
+    /// Record one successful allocation at effective home `home`, served
+    /// by shard `victim` (`victim == home` for a local hit), and close
+    /// the rehome window when it fills.
+    #[inline]
+    fn note_window(&self, slot: u32, gen: u32, home: usize, victim: usize) {
+        if self.window == 0 || slot & SLOT_SHARED_BIT != 0 {
+            return;
+        }
+        let n = self.shards.len();
+        if n == 1 {
+            return;
+        }
+        if victim != home {
+            self.win_steals[home * n + victim].fetch_add(1, Ordering::Relaxed);
+        }
+        let c = &self.counters[home];
+        let w = c.win_ops.fetch_add(1, Ordering::Relaxed) + 1;
+        if w >= self.window {
+            c.win_ops.store(0, Ordering::Relaxed);
+            self.consider_rehome(slot, gen, home);
+        }
+    }
+
+    /// A window closed at `home`: snapshot-and-reset its victim profile
+    /// and let the placement policy move the deciding thread. The window
+    /// counters are shared by every thread homed here, so the profile is
+    /// an approximation — good enough for a heuristic, and each thread
+    /// only ever moves itself (single generation-stamped CAS on its own
+    /// home-map entry), so the switch is race-free.
+    #[cold]
+    fn consider_rehome(&self, slot: u32, gen: u32, home: usize) {
+        let n = self.shards.len();
+        let mut steals_total = 0u32;
+        let mut victim = home;
+        let mut victim_steals = 0u32;
+        for (v, cell) in self.win_steals[home * n..home * n + n].iter().enumerate() {
+            let x = cell.swap(0, Ordering::Relaxed);
+            steals_total = steals_total.saturating_add(x);
+            if x > victim_steals {
+                victim_steals = x;
+                victim = v;
+            }
+        }
+        let local = self.window.saturating_sub(steals_total);
+        if let Some(target) =
+            self.placement.rehome(home, local, steals_total, victim, victim_steals)
+        {
+            let target = target % n;
+            if target == home {
+                return;
+            }
+            let idx = slot as usize & (MAX_HOME_SLOTS - 1);
+            let expected = pack(home as u32, gen);
+            if self.home_map[idx]
+                .compare_exchange(
+                    expected,
+                    pack(target as u32, gen),
+                    Ordering::AcqRel,
+                    Ordering::Acquire,
+                )
+                .is_ok()
+            {
+                self.counters[home].rehomes.fetch_add(1, Ordering::Relaxed);
+                // Leave nothing stranded behind: park-ed extras of the
+                // abandoned home go back to their owning shards.
+                self.drain_slot_stash(home);
+            }
         }
     }
 
@@ -342,12 +721,40 @@ impl ShardedPool {
         }
     }
 
+    /// Drain home slot `home`'s steal stash, returning every parked block
+    /// to its *owning* shard's free list. Safe to call from any thread at
+    /// any time (the stash is a lock-free stack; blocks conserve).
+    fn drain_slot_stash(&self, home: usize) -> u32 {
+        let mut drained = 0u32;
+        while let Some(grid) = self.stash_pop(home) {
+            let shard = (grid >> self.stride_shift) as usize;
+            let local = (grid as u64 & self.stride_mask) as u32;
+            self.shards[shard].deallocate_index(local);
+            drained += 1;
+        }
+        if drained > 0 {
+            self.counters[home].stash_drained.fetch_add(drained as u64, Ordering::Relaxed);
+        }
+        drained
+    }
+
+    /// Return every stash-parked block to its owning shard's free list;
+    /// returns the number of blocks moved. Orphan reclamation for thread
+    /// churn: stash chains left by exited threads stay *reachable* via
+    /// the allocate slow path regardless, but draining puts them back on
+    /// the local fast paths. The serving engine calls this from its
+    /// periodic maintenance tick.
+    pub fn drain_stashes(&self) -> u32 {
+        (0..self.counters.len()).map(|i| self.drain_slot_stash(i)).sum()
+    }
+
     /// Lock-free allocate: home shard, then the home steal stash, then a
     /// batched steal round the sibling ring, then sibling stashes.
     /// `None` only when every shard and stash is (momentarily) empty.
     #[inline]
     pub fn allocate(&self) -> Option<NonNull<u8>> {
-        let home = home_slot() & self.shard_mask;
+        let (slot, gen) = home_slot();
+        let home = self.resolve_home(slot, gen);
         let c = &self.counters[home];
         if let Some(p) = self.shards[home].allocate() {
             c.local_hits.fetch_add(1, Ordering::Relaxed);
@@ -356,11 +763,13 @@ impl ShardedPool {
             if k > 1 {
                 c.steal_batch.store(k / 2, Ordering::Relaxed);
             }
+            self.note_window(slot, gen, home, home);
             return Some(p);
         }
         // Batch extras imported by an earlier steal scan.
         if let Some(grid) = self.stash_pop(home) {
             c.stash_hits.fetch_add(1, Ordering::Relaxed);
+            self.note_window(slot, gen, home, (grid >> self.stride_shift) as usize);
             return Some(self.grid_to_ptr(grid));
         }
         // Local shard dry: steal from siblings so capacity is pooled, not
@@ -385,15 +794,19 @@ impl ShardedPool {
                 if got > 1 {
                     self.stash_push_chain(home, &buf[1..got as usize]);
                 }
+                self.note_window(slot, gen, home, s);
                 return Some(self.grid_to_ptr(buf[0]));
             }
         }
         // Last resort: raid every stash, own included (a racing thread
-        // may have parked extras in any of them during our scan).
+        // may have parked extras in any of them during our scan). This is
+        // also what keeps orphaned stash chains from exited threads
+        // reachable without any drain having run.
         for j in 0..=self.shard_mask {
             let s = (home + j) & self.shard_mask;
             if let Some(grid) = self.stash_pop(s) {
                 c.stash_hits.fetch_add(1, Ordering::Relaxed);
+                self.note_window(slot, gen, home, (grid >> self.stride_shift) as usize);
                 return Some(self.grid_to_ptr(grid));
             }
         }
@@ -488,15 +901,17 @@ impl ShardedPool {
     }
 
     /// Concurrency tax: shard headers + side tables + counters + the
-    /// batched-steal stash links.
+    /// batched-steal stash links + the home map and rehome window matrix.
     pub fn overhead_bytes(&self) -> usize {
         core::mem::size_of::<Self>()
             + self.shards.iter().map(|s| s.overhead_bytes()).sum::<usize>()
             + self.counters.len() * core::mem::size_of::<ShardCounters>()
             + self.steal_next.len() * 4
+            + self.home_map.len() * 8
+            + self.win_steals.len() * 4
     }
 
-    /// Snapshot of per-shard hit/steal accounting.
+    /// Snapshot of per-shard hit/steal/rehome accounting.
     pub fn stats(&self) -> ShardedPoolStats {
         let per_shard = self
             .shards
@@ -512,6 +927,8 @@ impl ShardedPool {
                 stash_free: c.stash_count.load(Ordering::Relaxed),
                 failed_allocs: c.failures.load(Ordering::Relaxed),
                 frees: c.frees.load(Ordering::Relaxed),
+                rehomes: c.rehomes.load(Ordering::Relaxed),
+                stash_drained: c.stash_drained.load(Ordering::Relaxed),
             })
             .collect();
         ShardedPoolStats {
@@ -522,8 +939,10 @@ impl ShardedPool {
     }
 
     /// Publish per-shard gauges into a [`Metrics`] registry under
-    /// `prefix` (e.g. `pool.packets.shard0.steals`).
-    pub fn export_metrics(&self, metrics: &Metrics, prefix: &str) {
+    /// `prefix` (e.g. `pool.packets.shard0.steals`). Returns the snapshot
+    /// the gauges were read from so callers aggregating across pools
+    /// (e.g. `ShardedMultiPool`) do not snapshot twice.
+    pub fn export_metrics(&self, metrics: &Metrics, prefix: &str) -> ShardedPoolStats {
         let s = self.stats();
         metrics.gauge(&format!("{prefix}.shards")).set(s.per_shard.len() as i64);
         metrics.gauge(&format!("{prefix}.free_blocks")).set(s.num_free() as i64);
@@ -539,6 +958,15 @@ impl ShardedPool {
         metrics
             .gauge(&format!("{prefix}.stash_blocks"))
             .set(s.total_stash_free() as i64);
+        metrics
+            .gauge(&format!("{prefix}.rehomes_total"))
+            .set(s.total_rehomes() as i64);
+        metrics
+            .gauge(&format!("{prefix}.stash_drained_total"))
+            .set(s.total_stash_drained() as i64);
+        metrics
+            .gauge(&format!("{prefix}.local_hit_pct"))
+            .set((s.local_hit_rate() * 100.0) as i64);
         for (i, sh) in s.per_shard.iter().enumerate() {
             metrics
                 .gauge(&format!("{prefix}.shard{i}.local_hits"))
@@ -546,6 +974,7 @@ impl ShardedPool {
             metrics.gauge(&format!("{prefix}.shard{i}.steals")).set(sh.steals as i64);
             metrics.gauge(&format!("{prefix}.shard{i}.free")).set(sh.num_free as i64);
         }
+        s
     }
 }
 
@@ -561,6 +990,7 @@ impl std::fmt::Debug for ShardedPool {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("ShardedPool")
             .field("shards", &self.num_shards())
+            .field("placement", &self.placement_name())
             .field("block_size", &self.block_size)
             .field("num_blocks", &self.num_blocks)
             .field("num_free", &self.num_free())
@@ -571,6 +1001,7 @@ impl std::fmt::Debug for ShardedPool {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::pool::placement::{Pinned, RoundRobin};
     use std::collections::BTreeSet;
     use std::sync::Arc;
 
@@ -696,6 +1127,8 @@ mod tests {
         let report = m.report();
         assert!(report.contains("pool.test.shards = 2"), "{report}");
         assert!(report.contains("pool.test.free_blocks = 8"), "{report}");
+        assert!(report.contains("pool.test.rehomes_total = 0"), "{report}");
+        assert!(report.contains("pool.test.local_hit_pct = 100"), "{report}");
     }
 
     #[test]
@@ -703,9 +1136,10 @@ mod tests {
         // 12 blocks, 4 shards → 3 per shard, stride 4 → 4 padding blocks.
         let p = ShardedPool::with_shards(64, 12, 4);
         assert_eq!(p.padded_bytes(), 4 * p.block_size());
-        // Side tables: 4 bytes per real block, plus headers/counters.
-        assert!(p.overhead_bytes() >= 12 * 4);
-        assert!(p.overhead_bytes() < 4096, "{}", p.overhead_bytes());
+        // Side tables: 4 bytes per real block, plus headers/counters plus
+        // the fixed-size home map (MAX_HOME_SLOTS × 8 B) and window matrix.
+        assert!(p.overhead_bytes() >= 12 * 4 + MAX_HOME_SLOTS * 8);
+        assert!(p.overhead_bytes() < 8192, "{}", p.overhead_bytes());
     }
 
     #[test]
@@ -730,10 +1164,13 @@ mod tests {
         );
         assert!(s.avg_steal_batch() > 2.0, "{}", s.avg_steal_batch());
         // Conservation: every stolen block was returned by a scan, served
-        // from a stash, or is still parked.
+        // from a stash, drained back to a shard, or is still parked.
         assert_eq!(
             s.total_steals(),
-            s.total_steal_scans() + s.total_stash_hits() + s.total_stash_free() as u64
+            s.total_steal_scans()
+                + s.total_stash_hits()
+                + s.total_stash_drained()
+                + s.total_stash_free() as u64
         );
         assert_eq!(s.total_stash_free(), 0, "full drain leaves no stash");
     }
@@ -758,7 +1195,7 @@ mod tests {
         let p = ShardedPool::with_shards(16, 8, 4);
         let held: Vec<_> = (0..8).map(|_| p.allocate().unwrap()).collect();
         assert!(p.allocate().is_none());
-        let home = home_slot() & p.shard_mask;
+        let home = p.current_home();
         // Return the caller's first block (a home local hit), pull it back
         // out of the home shard and park it in a sibling slot's stash.
         unsafe { p.deallocate(held[0]) };
@@ -770,6 +1207,131 @@ mod tests {
         assert_eq!(got.as_ptr(), held[0].as_ptr());
         assert!(p.stats().total_stash_hits() >= 1);
         assert_eq!(p.num_free(), 0);
+    }
+
+    #[test]
+    fn drain_stashes_returns_parked_blocks_to_owners() {
+        let p = ShardedPool::with_shards(16, 8, 4);
+        let held: Vec<_> = (0..8).map(|_| p.allocate().unwrap()).collect();
+        let home = p.current_home();
+        unsafe { p.deallocate(held[0]) };
+        let local = p.shards[home].allocate_index().expect("just freed");
+        let grid = ((home as u32) << p.stride_shift) + local;
+        // Park it in a sibling's stash — the shape an exited thread's
+        // orphaned batch import leaves behind.
+        p.stash_push_chain((home + 1) & p.shard_mask, &[grid]);
+        assert_eq!(p.stats().total_stash_free(), 1);
+        assert_eq!(p.drain_stashes(), 1);
+        let s = p.stats();
+        assert_eq!(s.total_stash_free(), 0, "stash empty after drain");
+        assert_eq!(s.total_stash_drained(), 1);
+        assert_eq!(
+            p.shards[home].num_free(),
+            1,
+            "drained block back on its owning shard's free list"
+        );
+        assert_eq!(p.drain_stashes(), 0, "idempotent when empty");
+    }
+
+    #[test]
+    fn round_robin_placement_never_rehomes() {
+        let placement = Arc::new(RoundRobin);
+        let p = ShardedPool::with_placement(16, 64, 8, placement);
+        assert_eq!(p.placement_name(), "round_robin");
+        let home0 = p.current_home();
+        // Hammer way past any window: a static placement never moves.
+        for _ in 0..2_000 {
+            let a = p.allocate().unwrap();
+            unsafe { p.deallocate(a) };
+        }
+        assert_eq!(p.current_home(), home0);
+        assert_eq!(p.stats().total_rehomes(), 0);
+    }
+
+    #[test]
+    fn steal_aware_rehomes_single_thread_to_its_victim() {
+        use crate::pool::placement::StealAware;
+        // Skewed start: this thread is pinned to shard 0, whose 8 blocks
+        // we immediately pin down — every further allocation must steal.
+        let placement = Arc::new(StealAware {
+            window: 16,
+            threshold_pct: 50,
+            base: Arc::new(Pinned::all(0)),
+        });
+        let p = ShardedPool::with_placement(16, 32, 4, placement); // 8 blocks/shard
+        assert_eq!(p.current_home(), 0);
+        let held: Vec<_> = (0..8).map(|_| p.allocate().unwrap()).collect();
+        assert_eq!(p.stats().total_local_hits(), 8);
+        // Cross-shard churn: every pair steals from (or stash-hits blocks
+        // of) a sibling, so the window fills with one dominant victim and
+        // the policy moves us there.
+        for _ in 0..64 {
+            let a = p.allocate().expect("siblings have free blocks");
+            unsafe { p.deallocate(a) };
+        }
+        let s = p.stats();
+        assert!(s.total_rehomes() >= 1, "sustained stealing must rehome: {s:?}");
+        let new_home = p.current_home();
+        assert_ne!(new_home, 0, "moved off the exhausted shard");
+        // Post-rehome the fast path is local again.
+        let local_before = p.stats().total_local_hits();
+        for _ in 0..32 {
+            let a = p.allocate().unwrap();
+            unsafe { p.deallocate(a) };
+        }
+        let local_after = p.stats().total_local_hits();
+        assert!(
+            local_after - local_before >= 30,
+            "rehomed thread should hit locally: {} → {}",
+            local_before,
+            local_after
+        );
+        for ptr in held {
+            unsafe { p.deallocate(ptr) };
+        }
+        assert_eq!(p.num_free(), 32);
+        // Stolen-block conservation holds through the rehome drain.
+        let s = p.stats();
+        assert_eq!(
+            s.total_steals(),
+            s.total_steal_scans()
+                + s.total_stash_hits()
+                + s.total_stash_drained()
+                + s.total_stash_free() as u64
+        );
+    }
+
+    #[test]
+    fn home_slots_recycle_across_thread_churn() {
+        // Waves of short-lived threads must reuse slot ids instead of
+        // growing the arena without bound. Other tests run concurrently in
+        // this process, so assert with slack: 64 sequential threads must
+        // not consume anywhere near 64 fresh ids.
+        let before = home_slots_high_water();
+        let epoch_before = home_slot_epoch();
+        let pool = ShardedPool::with_shards(16, 32, 4);
+        for _ in 0..16 {
+            std::thread::scope(|s| {
+                for _ in 0..4 {
+                    s.spawn(|| {
+                        let a = pool.allocate().unwrap();
+                        unsafe { pool.deallocate(a) };
+                    });
+                }
+            });
+        }
+        let after = home_slots_high_water();
+        // The old monotone counter would have consumed ≥ 64 fresh ids for
+        // these threads alone (other tests' concurrent threads only add).
+        assert!(
+            after - before < 64,
+            "64 churned threads must recycle slots: {before} → {after}"
+        );
+        assert!(
+            home_slot_epoch() >= epoch_before + 64,
+            "every exit must bump the churn epoch"
+        );
+        assert_eq!(pool.num_free(), 32);
     }
 
     #[test]

@@ -93,6 +93,11 @@ pub struct ShardStats {
     pub failed_allocs: u64,
     /// Frees routed to this shard by pointer decode.
     pub frees: u64,
+    /// Threads rehomed away from this shard by a steal-aware placement.
+    pub rehomes: u64,
+    /// Stash blocks returned to their owning shards by rehome/maintenance
+    /// drains (they re-enter circulation as ordinary shard free blocks).
+    pub stash_drained: u64,
 }
 
 /// Point-in-time snapshot of a `ShardedPool`'s per-shard accounting — the
@@ -128,6 +133,16 @@ impl ShardedPoolStats {
     /// Blocks currently parked in steal stashes.
     pub fn total_stash_free(&self) -> u32 {
         self.per_shard.iter().map(|s| s.stash_free).sum()
+    }
+
+    /// Threads rehomed by the steal-aware placement policy.
+    pub fn total_rehomes(&self) -> u64 {
+        self.per_shard.iter().map(|s| s.rehomes).sum()
+    }
+
+    /// Stash blocks returned to their owning shards by drains.
+    pub fn total_stash_drained(&self) -> u64 {
+        self.per_shard.iter().map(|s| s.stash_drained).sum()
     }
 
     pub fn total_failed(&self) -> u64 {
@@ -168,6 +183,18 @@ impl ShardedPoolStats {
             0.0
         } else {
             (self.total_stash_hits() + self.total_steal_scans()) as f64 / total as f64
+        }
+    }
+
+    /// Fraction of successful allocations served by the caller's home
+    /// shard, in [0, 1] — the complement of [`Self::steal_rate`] and the
+    /// number steal-aware rehoming exists to push up.
+    pub fn local_hit_rate(&self) -> f64 {
+        let total = self.total_allocs();
+        if total == 0 {
+            0.0
+        } else {
+            self.total_local_hits() as f64 / total as f64
         }
     }
 
@@ -252,6 +279,8 @@ mod tests {
                     stash_free: 1,
                     failed_allocs: 1,
                     frees: 5,
+                    rehomes: 1,
+                    stash_drained: 0,
                 },
                 ShardStats {
                     num_blocks: 4,
@@ -263,6 +292,8 @@ mod tests {
                     stash_free: 0,
                     failed_allocs: 0,
                     frees: 2,
+                    rehomes: 0,
+                    stash_drained: 0,
                 },
             ],
         };
@@ -274,9 +305,12 @@ mod tests {
         assert_eq!(s.total_stash_free(), 1);
         assert_eq!(s.total_failed(), 1);
         assert_eq!(s.total_frees(), 7);
+        assert_eq!(s.total_rehomes(), 1);
+        assert_eq!(s.total_stash_drained(), 0);
         // free = shard free lists (3) + stashed (1).
         assert_eq!(s.num_free(), 4);
         assert!((s.steal_rate() - 0.2).abs() < 1e-12);
+        assert!((s.local_hit_rate() - 0.8).abs() < 1e-12);
         assert!((s.avg_steal_batch() - 3.0).abs() < 1e-12);
         let r = s.report();
         assert!(r.contains("shards 2"), "{r}");
@@ -286,8 +320,9 @@ mod tests {
 
     #[test]
     fn steal_block_conservation() {
-        // steals (blocks moved) = scan returns + stash hits + still stashed
-        // at quiescence — the invariant the stress suite checks live.
+        // steals (blocks moved) = scan returns + stash hits + drained back
+        // to owners + still stashed at quiescence — the invariant the
+        // stress suite checks live.
         let s = ShardedPoolStats {
             block_size: 16,
             num_blocks: 32,
@@ -295,17 +330,22 @@ mod tests {
                 num_blocks: 32,
                 num_free: 20,
                 local_hits: 4,
-                steals: 9,
+                steals: 12,
                 steal_scans: 2,
                 stash_hits: 5,
                 stash_free: 2,
                 failed_allocs: 0,
                 frees: 11,
+                rehomes: 1,
+                stash_drained: 3,
             }],
         };
         assert_eq!(
             s.total_steals(),
-            s.total_steal_scans() + s.total_stash_hits() + s.total_stash_free() as u64
+            s.total_steal_scans()
+                + s.total_stash_hits()
+                + s.total_stash_drained()
+                + s.total_stash_free() as u64
         );
         assert_eq!(s.total_allocs(), s.total_frees());
     }

@@ -5,6 +5,8 @@
 //! inputs. Used by `rust/tests/prop_*.rs` for the coordinator/pool
 //! invariants the task calls for.
 
+pub mod skew;
+
 use crate::util::Rng;
 
 /// Configuration for a property run.

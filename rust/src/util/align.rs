@@ -7,6 +7,19 @@ pub const fn align_up(n: usize, align: usize) -> usize {
     (n + align - 1) & !(align - 1)
 }
 
+/// As [`align_up`] but overflow-checked: `None` when adding the padding
+/// wraps `usize` (e.g. `align_up(usize::MAX, 8)` silently wraps to 0).
+/// Use this when `n` comes from an untrusted raw size rather than a
+/// `Layout` (which bounds its sizes on construction).
+#[inline]
+pub const fn checked_align_up(n: usize, align: usize) -> Option<usize> {
+    debug_assert!(align.is_power_of_two());
+    match n.checked_add(align - 1) {
+        Some(padded) => Some(padded & !(align - 1)),
+        None => None,
+    }
+}
+
 /// Round `n` down to the previous multiple of `align` (power of two).
 #[inline]
 pub const fn align_down(n: usize, align: usize) -> usize {
@@ -47,6 +60,15 @@ mod tests {
         assert_eq!(align_up(8, 8), 8);
         assert_eq!(align_up(9, 8), 16);
         assert_eq!(align_up(100, 64), 128);
+    }
+
+    #[test]
+    fn checked_align_up_catches_wraparound() {
+        assert_eq!(checked_align_up(0, 8), Some(0));
+        assert_eq!(checked_align_up(9, 8), Some(16));
+        assert_eq!(checked_align_up(usize::MAX - 7, 8), Some(usize::MAX - 7));
+        assert_eq!(checked_align_up(usize::MAX - 6, 8), None);
+        assert_eq!(checked_align_up(usize::MAX, 8), None, "plain align_up wraps to 0 here");
     }
 
     #[test]

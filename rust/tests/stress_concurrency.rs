@@ -13,7 +13,11 @@ use std::collections::BTreeSet;
 use std::ptr::NonNull;
 use std::sync::{Arc, Mutex};
 
-use fastpool::pool::{AtomicPool, ShardedPool};
+use fastpool::pool::{
+    home_slot_epoch, home_slots_high_water, AtomicPool, Pinned, RoundRobin, ShardPlacement,
+    ShardedPool, StealAware,
+};
+use fastpool::testkit::skew::{run_skewed_affinity, SkewConfig};
 use fastpool::util::Rng;
 
 const THREADS: usize = 8;
@@ -263,6 +267,130 @@ fn batched_steal_no_double_handout_under_contention() {
     assert!(s.total_steals() > 0, "8 threads on 2 shards must steal");
 }
 
+// ---------------------------------------------------------------------------
+// Topology (S5): churn-safe home-slot lifecycle and steal-aware rehoming.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn thread_churn_recycles_slots_and_drains_orphan_stashes() {
+    // 2 shards under 8-thread waves → constant cross-shard stealing, so
+    // exiting threads leave batch extras parked in steal stashes.
+    let pool = ShardedPool::with_shards(32, 64, 2);
+    let hw_before = home_slots_high_water();
+    let epoch_before = home_slot_epoch();
+    const WAVES: usize = 24;
+    const PER_WAVE: usize = 8;
+    for wave in 0..WAVES {
+        std::thread::scope(|s| {
+            for t in 0..PER_WAVE {
+                let pool = &pool;
+                s.spawn(move || {
+                    let mut rng = Rng::new((wave * PER_WAVE + t) as u64 + 1);
+                    let mut held: Vec<usize> = Vec::new();
+                    for _ in 0..500 {
+                        if held.is_empty() || rng.gen_bool(0.6) {
+                            if let Some(p) = pool.allocate() {
+                                held.push(p.as_ptr() as usize);
+                            }
+                        } else {
+                            let i = rng.gen_usize(0, held.len());
+                            let addr = held.swap_remove(i);
+                            unsafe {
+                                pool.deallocate(NonNull::new_unchecked(addr as *mut u8))
+                            };
+                        }
+                    }
+                    for addr in held {
+                        unsafe {
+                            pool.deallocate(NonNull::new_unchecked(addr as *mut u8))
+                        };
+                    }
+                });
+            }
+        });
+        // Exact block conservation at every wave's quiescence (stash-parked
+        // blocks count as free).
+        assert_eq!(pool.num_free(), 64, "wave {wave}");
+    }
+    // Every exited thread bumped the churn epoch when its slot came back.
+    assert!(
+        home_slot_epoch() - epoch_before >= (WAVES * PER_WAVE) as u64,
+        "thread exits must recycle home slots through the registry"
+    );
+    // Slot ids are recycled, not consumed: under the old monotone counter
+    // these 192 short-lived threads alone would have burned ≥ 192 fresh
+    // ids. (Strict bound, with slack for unrelated tests of this binary
+    // running threads concurrently.)
+    let hw_after = home_slots_high_water();
+    assert!(
+        hw_after - hw_before < WAVES * PER_WAVE,
+        "slot ids must recycle across churn: {hw_before} → {hw_after} after {} threads",
+        WAVES * PER_WAVE
+    );
+    // No orphaned stash blocks after maintenance: every chain left behind
+    // by an exited thread drains back to its owning shard.
+    pool.drain_stashes();
+    let s = pool.stats();
+    assert_eq!(s.total_stash_free(), 0, "no orphaned stash blocks");
+    assert_eq!(pool.num_free(), 64);
+    assert_eq!(s.total_allocs(), s.total_frees());
+    assert_eq!(
+        s.total_steals(),
+        s.total_steal_scans()
+            + s.total_stash_hits()
+            + s.total_stash_drained()
+            + s.total_stash_free() as u64,
+        "stolen-block conservation across {} thread lifetimes",
+        WAVES * PER_WAVE
+    );
+    // And the whole pool is still allocatable.
+    let mut drained = 0;
+    while pool.allocate().is_some() {
+        drained += 1;
+    }
+    assert_eq!(drained, 64);
+}
+
+#[test]
+fn skewed_affinity_rehoming_beats_static_placement() {
+    // Acceptance: after warm-up, the steal-aware arm's local-hit rate
+    // rises and its steal scans drop versus the statically-placed arm.
+    // The workload itself (every worker homed on shard 0, working sets
+    // shard 0 cannot hold) is the shared `testkit::skew` harness — the
+    // same one ablation A3b measures.
+    let cfg = SkewConfig::default();
+    let static_arm = run_skewed_affinity(Arc::new(Pinned::all(0)), cfg);
+    let aware_arm =
+        run_skewed_affinity(Arc::new(StealAware::over(Arc::new(Pinned::all(0)))), cfg);
+    assert!(static_arm.phase2_allocs > 0 && aware_arm.phase2_allocs > 0);
+    assert_eq!(static_arm.rehomes, 0, "static placement never moves a thread");
+    assert!(
+        aware_arm.rehomes >= 1,
+        "sustained skew must trigger rehoming (got {})",
+        aware_arm.rehomes
+    );
+    assert!(
+        aware_arm.local_rate() > 0.6,
+        "rehomed threads must be mostly local after warm-up: {:.3}",
+        aware_arm.local_rate()
+    );
+    assert!(
+        aware_arm.local_rate() > static_arm.local_rate() + 0.15,
+        "steal-aware {:.3} vs static {:.3}: rehoming must raise locality",
+        aware_arm.local_rate(),
+        static_arm.local_rate()
+    );
+    assert!(
+        aware_arm.phase2_steal_scans < static_arm.phase2_steal_scans,
+        "steal scans must drop post-rehome: aware {} vs static {}",
+        aware_arm.phase2_steal_scans,
+        static_arm.phase2_steal_scans
+    );
+    // Sanity: the same RoundRobin policy type used by default pools keeps
+    // its name distinct for the report.
+    assert_eq!(RoundRobin.place(9, 8), 1);
+}
+
 #[test]
 fn batched_steal_counters_exact_at_quiescence() {
     // Conservation of stolen blocks: every block that crossed shards was
@@ -301,8 +429,11 @@ fn batched_steal_counters_exact_at_quiescence() {
     assert_eq!(s.total_allocs(), s.total_frees(), "alloc/free balance");
     assert_eq!(
         s.total_steals(),
-        s.total_steal_scans() + s.total_stash_hits() + s.total_stash_free() as u64,
-        "stolen-block conservation: scans + stash hits + parked"
+        s.total_steal_scans()
+            + s.total_stash_hits()
+            + s.total_stash_drained()
+            + s.total_stash_free() as u64,
+        "stolen-block conservation: scans + stash hits + drained + parked"
     );
     assert_eq!(pool.num_free(), 128, "S2 incl. stashed blocks");
     assert_eq!(s.num_free(), 128, "stats view agrees");
