@@ -41,6 +41,7 @@ fn run_multipool(mix: Mix) -> (f64, f64, u64) {
         max_class: 4096,
         blocks_per_class: LIVE_TARGET as u32 * 2,
         system_fallback: true,
+        magazine_depth: 0, // MultiPool is single-threaded: no magazines
     });
     let zipf = Zipf::new(9, 1.1);
     let mut rng = Rng::new(5);

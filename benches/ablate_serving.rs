@@ -53,11 +53,12 @@ fn median3(f: &dyn Fn() -> (f64, u64, f64)) -> (f64, u64, f64) {
 fn main() {
     let suite = Suite::new("ablate_serving");
     let mut tab = ReportTable::new(
-        "A4: serving throughput, pool-backed vs malloc-backed hot path",
+        "A4: serving throughput — cached pool vs bare-sharded pool vs malloc",
         "max_batch",
         vec!["1".into(), "2".into(), "4".into()],
         vec![
             "pool tok/s".into(),
+            "uncached tok/s".into(),
             "malloc tok/s".into(),
             "speedup".into(),
             "pool hit %".into(),
@@ -70,21 +71,25 @@ fn main() {
         for (ri, mb) in [1usize, 2, 4].into_iter().enumerate() {
             let (pool_tps, steps_p, hit) =
                 median3(&|| run_arm(PoolHandle::serving_default(), mb, 7));
+            let (bare_tps, steps_b, _) =
+                median3(&|| run_arm(PoolHandle::serving_uncached(), mb, 7));
             let (sys_tps, steps_s, _) = median3(&|| run_arm(PoolHandle::system(), mb, 7));
             assert_eq!(
                 steps_p, steps_s,
                 "arms must schedule identically — same engine, same workload"
             );
+            assert_eq!(steps_p, steps_b, "cached and uncached arms must agree too");
             last_hit_rate = hit;
             println!(
-                "max_batch={mb}: pool {pool_tps:>10.0} tok/s | malloc {sys_tps:>10.0} tok/s | x{:.3} | hit {:.1}%",
+                "max_batch={mb}: pool {pool_tps:>10.0} tok/s | uncached {bare_tps:>10.0} | malloc {sys_tps:>10.0} tok/s | x{:.3} | hit {:.1}%",
                 pool_tps / sys_tps,
                 hit * 100.0
             );
             tab.set(ri, 0, pool_tps);
-            tab.set(ri, 1, sys_tps);
-            tab.set(ri, 2, pool_tps / sys_tps);
-            tab.set(ri, 3, hit * 100.0);
+            tab.set(ri, 1, bare_tps);
+            tab.set(ri, 2, sys_tps);
+            tab.set(ri, 3, pool_tps / sys_tps);
+            tab.set(ri, 4, hit * 100.0);
         }
     }
 
@@ -117,6 +122,18 @@ fn main() {
         steal_summary.push(("steal_scans", Json::Num(scans as f64)));
         steal_summary.push(("stash_hits", Json::Num(stash_hits as f64)));
         steal_summary.push(("avg_steal_batch", Json::Num(avg_batch)));
+        let ms = mp.magazine_stats();
+        println!(
+            "contended pool magazines: {} hits / {} refills / {} flushes ({:.0} hits per refill)",
+            ms.hits,
+            ms.refills,
+            ms.flushes,
+            ms.hits_per_refill()
+        );
+        steal_summary.push(("magazine_hits", Json::Num(ms.hits as f64)));
+        steal_summary.push(("magazine_refills", Json::Num(ms.refills as f64)));
+        steal_summary.push(("magazine_flushes", Json::Num(ms.flushes as f64)));
+        steal_summary.push(("magazine_hits_per_refill", Json::Num(ms.hits_per_refill())));
     }
 
     let mut summary = vec![

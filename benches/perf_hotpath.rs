@@ -5,124 +5,264 @@
 //! * batch64   — alloc 64; free 64 LIFO (L1-resident working set)
 //! * churn1k   — random replace in a 1k live set (cache-realistic)
 //!
-//! Compares the paper pool against malloc and the index allocator used by
-//! the KV manager.
+//! Arms, in hot-path lineage order (see `pool/mod.rs`):
 //!
-//! Run: `cargo bench --bench perf_hotpath`
+//! * fixed     — the paper's single-thread pool (`FixedPool`, `&mut`)
+//! * malloc    — libc baseline
+//! * blockalloc— the KV manager's index allocator (pair row only)
+//! * atomic    — lock-free Treiber (`AtomicPool`): 2 CAS per pair
+//! * sharded   — `ShardedPool`: same 2 CAS, but uncontended/core-local
+//! * magazine  — `MagazinePool`: 0 CAS steady state; refills/flushes
+//!               amortise shared traffic to ~1 CAS per magazine
+//!
+//! The headline this bench exists to track: the magazine arm beating the
+//! bare sharded arm on the pair shape, with the amortisation visible in
+//! the `magazine_*` counters of the JSON summary
+//! (`bench_out/perf_hotpath.json`).
+//!
+//! Run: `cargo bench --bench perf_hotpath` (arg 1 filters shapes by
+//! name; `--smoke` shrinks iteration counts for CI).
 
+use core::ptr::NonNull;
+
+use fastpool::bench_harness::{write_json, write_markdown, ReportTable, Suite};
 use fastpool::kvcache::BlockAllocator;
-use fastpool::pool::FixedPool;
+use fastpool::pool::{AtomicPool, FixedPool, MagazinePool, ShardedPool, DEFAULT_MAG_DEPTH};
+use fastpool::util::json::Json;
 use fastpool::util::{black_box, Rng, Timer};
 
 extern crate libc;
 
 const BLOCK: usize = 64;
+const POOL_BLOCKS: u32 = 2048;
+const SHARDS: usize = 8;
+const LIVE: usize = 1024;
+
+/// One allocator under test: tokens are opaque (pointer or index).
+trait Arm {
+    fn alloc(&mut self) -> u64;
+    fn free(&mut self, t: u64);
+}
+
+struct FixedArm(FixedPool);
+impl Arm for FixedArm {
+    fn alloc(&mut self) -> u64 {
+        self.0.allocate().expect("fixed pool sized for the shape").as_ptr() as u64
+    }
+    fn free(&mut self, t: u64) {
+        unsafe { self.0.deallocate(NonNull::new_unchecked(t as *mut u8)) }
+    }
+}
+
+struct MallocArm;
+impl Arm for MallocArm {
+    fn alloc(&mut self) -> u64 {
+        unsafe { libc::malloc(BLOCK) as u64 }
+    }
+    fn free(&mut self, t: u64) {
+        unsafe { libc::free(t as *mut libc::c_void) }
+    }
+}
+
+struct AtomicArm(AtomicPool);
+impl Arm for AtomicArm {
+    fn alloc(&mut self) -> u64 {
+        self.0.allocate().expect("atomic pool sized for the shape").as_ptr() as u64
+    }
+    fn free(&mut self, t: u64) {
+        unsafe { self.0.deallocate(NonNull::new_unchecked(t as *mut u8)) }
+    }
+}
+
+struct ShardedArm(ShardedPool);
+impl Arm for ShardedArm {
+    fn alloc(&mut self) -> u64 {
+        self.0.allocate().expect("sharded pool sized for the shape").as_ptr() as u64
+    }
+    fn free(&mut self, t: u64) {
+        unsafe { self.0.deallocate(NonNull::new_unchecked(t as *mut u8)) }
+    }
+}
+
+struct MagazineArm(MagazinePool);
+impl Arm for MagazineArm {
+    fn alloc(&mut self) -> u64 {
+        self.0.allocate().expect("magazine pool sized for the shape").as_ptr() as u64
+    }
+    fn free(&mut self, t: u64) {
+        unsafe { self.0.deallocate(NonNull::new_unchecked(t as *mut u8)) }
+    }
+}
+
+fn make_arm(name: &str) -> Box<dyn Arm> {
+    match name {
+        "fixed" => Box::new(FixedArm(FixedPool::with_blocks(BLOCK, POOL_BLOCKS))),
+        "malloc" => Box::new(MallocArm),
+        "atomic" => Box::new(AtomicArm(AtomicPool::with_blocks(BLOCK, POOL_BLOCKS))),
+        "sharded" => {
+            Box::new(ShardedArm(ShardedPool::with_shards(BLOCK, POOL_BLOCKS, SHARDS)))
+        }
+        "magazine" => Box::new(MagazineArm(MagazinePool::with_shards(
+            BLOCK,
+            POOL_BLOCKS,
+            SHARDS,
+            DEFAULT_MAG_DEPTH,
+        ))),
+        _ => unreachable!("unknown arm {name}"),
+    }
+}
+
+fn pair_shape(a: &mut dyn Arm, n: usize) -> f64 {
+    let t = Timer::start();
+    for _ in 0..n {
+        let x = a.alloc();
+        a.free(black_box(x));
+    }
+    t.elapsed_ns() as f64 / n as f64
+}
+
+fn batch64_shape(a: &mut dyn Arm, n: usize) -> f64 {
+    let mut held = Vec::with_capacity(64);
+    let t = Timer::start();
+    for _ in 0..n / 64 {
+        for _ in 0..64 {
+            held.push(a.alloc());
+        }
+        while let Some(x) = held.pop() {
+            a.free(black_box(x));
+        }
+    }
+    t.elapsed_ns() as f64 / n as f64
+}
+
+fn churn1k_shape(a: &mut dyn Arm, n: usize) -> f64 {
+    let mut rng = Rng::new(1);
+    let mut live: Vec<u64> = (0..LIVE).map(|_| a.alloc()).collect();
+    let t = Timer::start();
+    for _ in 0..n {
+        let i = rng.gen_usize(0, live.len());
+        a.free(live[i]);
+        live[i] = a.alloc();
+    }
+    let ns = t.elapsed_ns() as f64 / n as f64;
+    for x in live {
+        a.free(x);
+    }
+    ns
+}
 
 fn median(mut xs: Vec<f64>) -> f64 {
     xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
     xs[xs.len() / 2]
 }
 
-fn bench<F: FnMut() -> f64>(name: &str, mut f: F) -> f64 {
-    let m = median((0..9).map(|_| f()).collect());
-    println!("{name:<28} {m:>8.2} ns/op");
-    m
-}
+const ARMS: &[&str] = &["fixed", "malloc", "atomic", "sharded", "magazine"];
+const SHAPES: &[&str] = &["pair", "batch64", "churn1k"];
 
 fn main() {
-    const N: usize = 1_000_000;
+    let suite = Suite::new("perf_hotpath");
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let n: usize = if smoke { 50_000 } else { 1_000_000 };
+    let runs: usize = if smoke { 3 } else { 9 };
 
-    println!("-- pair (alloc;free, hot head) --");
-    let pool_pair = bench("pool pair", || {
-        let mut p = FixedPool::with_blocks(BLOCK, 1024);
-        let t = Timer::start();
-        for _ in 0..N {
-            let a = p.allocate().unwrap();
-            unsafe { p.deallocate(black_box(a)) };
-        }
-        t.elapsed_ns() as f64 / N as f64
-    });
-    let malloc_pair = bench("malloc pair", || {
-        let t = Timer::start();
-        for _ in 0..N {
-            let a = unsafe { libc::malloc(BLOCK) };
-            unsafe { libc::free(black_box(a)) };
-        }
-        t.elapsed_ns() as f64 / N as f64
-    });
-    bench("blockalloc pair (index)", || {
-        let mut p = BlockAllocator::new(1024);
-        let t = Timer::start();
-        for _ in 0..N {
-            let a = p.allocate().unwrap();
-            p.free(black_box(a));
-        }
-        t.elapsed_ns() as f64 / N as f64
-    });
+    let mut tab = ReportTable::new(
+        "§Perf: hot-path latency by shape and allocator tier",
+        "shape",
+        SHAPES.iter().map(|s| s.to_string()).collect(),
+        ARMS.iter()
+            .map(|a| a.to_string())
+            .chain(std::iter::once("blockalloc".to_string()))
+            .collect(),
+        format!("ns per op (median of {runs} runs of {n} ops)"),
+    );
 
-    println!("-- batch64 (alloc 64, free 64 LIFO) --");
-    bench("pool batch64", || {
-        let mut p = FixedPool::with_blocks(BLOCK, 128);
-        let mut held = Vec::with_capacity(64);
-        let t = Timer::start();
-        for _ in 0..N / 64 {
-            for _ in 0..64 {
-                held.push(p.allocate().unwrap());
+    let mut cell = vec![vec![f64::NAN; ARMS.len()]; SHAPES.len()];
+    for (si, shape) in SHAPES.iter().enumerate() {
+        for (ai, arm) in ARMS.iter().enumerate() {
+            let name = format!("{shape}/{arm}");
+            if !suite.enabled(&name) {
+                continue;
             }
-            while let Some(a) = held.pop() {
-                unsafe { p.deallocate(a) };
-            }
+            let m = median(
+                (0..runs)
+                    .map(|_| {
+                        let mut a = make_arm(arm);
+                        match *shape {
+                            "pair" => pair_shape(a.as_mut(), n),
+                            "batch64" => batch64_shape(a.as_mut(), n),
+                            _ => churn1k_shape(a.as_mut(), n),
+                        }
+                    })
+                    .collect(),
+            );
+            println!("{name:<20} {m:>8.2} ns/op");
+            cell[si][ai] = m;
+            tab.set(si, ai, m);
         }
-        t.elapsed_ns() as f64 / N as f64
-    });
-    bench("malloc batch64", || {
-        let mut held: Vec<*mut libc::c_void> = Vec::with_capacity(64);
-        let t = Timer::start();
-        for _ in 0..N / 64 {
-            for _ in 0..64 {
-                held.push(unsafe { libc::malloc(BLOCK) });
-            }
-            while let Some(a) = held.pop() {
-                unsafe { libc::free(a) };
-            }
-        }
-        t.elapsed_ns() as f64 / N as f64
-    });
+    }
 
-    println!("-- churn1k (random replace in 1k live set) --");
-    let pool_churn = bench("pool churn1k", || {
-        let mut p = FixedPool::with_blocks(BLOCK, 2048);
-        let mut rng = Rng::new(1);
-        let mut live: Vec<_> = (0..1024).map(|_| p.allocate().unwrap()).collect();
-        let t = Timer::start();
-        for _ in 0..N {
-            let i = rng.gen_usize(0, live.len());
-            unsafe { p.deallocate(live[i]) };
-            live[i] = p.allocate().unwrap();
-        }
-        let ns = t.elapsed_ns() as f64 / N as f64;
-        for a in live {
-            unsafe { p.deallocate(a) };
-        }
-        ns
-    });
-    let malloc_churn = bench("malloc churn1k", || {
-        let mut rng = Rng::new(1);
-        let mut live: Vec<*mut libc::c_void> =
-            (0..1024).map(|_| unsafe { libc::malloc(BLOCK) }).collect();
-        let t = Timer::start();
-        for _ in 0..N {
-            let i = rng.gen_usize(0, live.len());
-            unsafe { libc::free(live[i]) };
-            live[i] = unsafe { libc::malloc(BLOCK) };
-        }
-        let ns = t.elapsed_ns() as f64 / N as f64;
-        for a in live {
-            unsafe { libc::free(a) };
-        }
-        ns
-    });
+    // Pair-only extra: the KV manager's index allocator (the paper's
+    // bookkeeping flavour — no pointers, so it sits outside the Arm grid).
+    if suite.enabled("pair/blockalloc") {
+        let m = median(
+            (0..runs)
+                .map(|_| {
+                    let mut p = BlockAllocator::new(POOL_BLOCKS);
+                    let t = Timer::start();
+                    for _ in 0..n {
+                        let i = p.allocate().unwrap();
+                        p.free(black_box(i));
+                    }
+                    t.elapsed_ns() as f64 / n as f64
+                })
+                .collect(),
+        );
+        println!("{:<20} {m:>8.2} ns/op", "pair/blockalloc");
+        tab.set(0, ARMS.len(), m);
+    }
 
-    println!("\npair speedup vs malloc:  {:.2}x", malloc_pair / pool_pair);
-    println!("churn speedup vs malloc: {:.2}x", malloc_churn / pool_churn);
+    // Instrumented magazine pair run: the amortisation proof. The
+    // counters — not the timer — are what the acceptance criterion
+    // checks: hits/refill ≥ one magazine of ops means the shared-pool
+    // CAS traffic is ≤ 1 per magazine.
+    let mag = MagazinePool::with_shards(BLOCK, POOL_BLOCKS, SHARDS, DEFAULT_MAG_DEPTH);
+    for _ in 0..n {
+        let p = mag.allocate().unwrap();
+        unsafe { mag.deallocate(black_box(p)) };
+    }
+    let ms = mag.magazine_stats();
+    println!(
+        "\nmagazine pair counters: {} hits / {} refills ({:.0} ops per refill, hit rate {:.4})",
+        ms.hits,
+        ms.refills,
+        ms.hits_per_refill(),
+        ms.hit_rate()
+    );
+
+    let pair_sharded = cell[0][3];
+    let pair_magazine = cell[0][4];
+    let mut summary = vec![
+        ("ops", Json::Num(n as f64)),
+        ("runs", Json::Num(runs as f64)),
+        ("block_size", Json::Num(BLOCK as f64)),
+        ("shards", Json::Num(SHARDS as f64)),
+        ("magazine_pair_hits", Json::Num(ms.hits as f64)),
+        ("magazine_pair_refills", Json::Num(ms.refills as f64)),
+        ("magazine_hits_per_refill", Json::Num(ms.hits_per_refill())),
+        ("magazine_hit_rate", Json::Num(ms.hit_rate())),
+    ];
+    if pair_sharded.is_finite() && pair_magazine.is_finite() {
+        let speedup = pair_sharded / pair_magazine;
+        println!(
+            "pair: magazine {pair_magazine:.2} ns vs sharded {pair_sharded:.2} ns ({speedup:.2}x)"
+        );
+        summary.push(("magazine_vs_sharded_pair_speedup", Json::Num(speedup)));
+        summary.push(("sharded_pair_ns", Json::Num(pair_sharded)));
+        summary.push(("magazine_pair_ns", Json::Num(pair_magazine)));
+    }
+
+    let tables = [tab];
+    write_markdown("perf_hotpath", &[], &tables).unwrap();
+    write_json("perf_hotpath", &tables, &summary).unwrap();
+    println!("wrote bench_out/perf_hotpath.json (+md)");
 }

@@ -206,6 +206,7 @@ fn main() {
         max_class: 2048,
         blocks_per_class: 512,
         system_fallback: true,
+        magazine_depth: 0, // MultiPool is single-threaded: no magazines
     });
     let mut rng = Rng::new(99);
     let mut live = Vec::new();

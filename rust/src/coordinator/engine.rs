@@ -171,12 +171,18 @@ impl<B: Backend> Engine<B> {
     /// Periodic pool maintenance (the server runs it with the stats
     /// dump): return steal-stash blocks — including chains orphaned by
     /// exited worker threads — to their owning shards' free lists, and
-    /// record how many moved. Allocation-free; a no-op in system mode.
+    /// flush idle magazines (per-thread caches whose owner has exited)
+    /// back to the shared tiers, recording how many blocks moved.
+    /// Allocation-free; a no-op in system mode.
     pub fn maintain_pool(&self) {
         if let Some(mp) = self.pool.multi() {
             let drained = mp.drain_stashes();
             if drained > 0 {
                 self.metrics.counter("pool_stash_drained").add(drained as u64);
+            }
+            let flushed = mp.flush_stale_magazines();
+            if flushed > 0 {
+                self.metrics.counter("pool_magazines_flushed").add(flushed as u64);
             }
         }
     }
@@ -781,6 +787,14 @@ mod tests {
         let hits: u64 = (0..mp.num_classes()).map(|c| mp.class_hits(c)).sum();
         assert!(hits > 0, "step buffers and KV tables must be pool-served");
         assert!(mp.pool_hit_rate() > 0.9, "{}", mp.pool_hit_rate());
+        // The serving arm runs in cached mode: the same workload must
+        // have ridden the per-thread magazines.
+        assert!(mp.magazines_enabled(), "serving pool defaults to cached mode");
+        let ms = mp.magazine_stats();
+        assert!(
+            ms.hits + ms.refills > 0,
+            "request/KV allocations must ride the magazine layer: {ms:?}"
+        );
     }
 
     #[test]
@@ -794,6 +808,9 @@ mod tests {
         assert!(r.contains("pool.serving.c16.shards"), "{r}");
         assert!(r.contains("pool.serving.rehomes_total"), "{r}");
         assert!(r.contains("pool.serving.c16.local_hit_pct"), "{r}");
+        assert!(r.contains("pool.serving.magazine_hits_total"), "{r}");
+        assert!(r.contains("pool.serving.magazine_refills_total"), "{r}");
+        assert!(r.contains("pool.serving.c16.magazine_cached"), "{r}");
         assert!(r.contains("kv_peak_used"), "{r}");
     }
 

@@ -7,12 +7,16 @@
 //! but if not, the general system allocator is called to supply the
 //! memory."
 //!
-//! Built on the sharded lock-free [`ShardedPool`] per size class so it is
+//! Built on a magazine-fronted sharded pool ([`MagazinePool`] over
+//! [`ShardedPool`](super::sharded::ShardedPool)) per size class so it is
 //! safe — and scalable — as a true `#[global_allocator]` (see
-//! `examples/custom_global_alloc.rs`): each thread's allocations hit a
-//! core-local shard head instead of one process-wide CAS. Classes are
-//! created lazily on first use with a `Once`-style publish race; after
-//! that both paths are lock-free.
+//! `examples/custom_global_alloc.rs`): each thread's steady-state
+//! allocations are a CAS-free pop from its own magazine, refilled from a
+//! core-local shard head instead of one process-wide CAS. The magazine
+//! fast path is allocation-free (const-init TLS + a fixed rack), so it is
+//! re-entrancy-safe inside the allocator. Classes are created lazily on
+//! first use with a `Once`-style publish race; after that both paths are
+//! lock-free.
 //!
 //! Routing rule: served-from-pool iff `size <= MAX_CLASS` *and*
 //! `align <= 16` *and* the class has a free block; everything else falls
@@ -25,6 +29,7 @@ use core::alloc::{GlobalAlloc, Layout};
 use core::cell::Cell;
 use core::sync::atomic::{AtomicPtr, AtomicU64, Ordering};
 
+use super::magazine::{MagazinePool, DEFAULT_MAG_DEPTH};
 use super::sharded::{default_shards, ShardedPool};
 
 std::thread_local! {
@@ -42,7 +47,7 @@ const CLASS_ALIGN: usize = 16;
 
 /// A pool-backed global allocator with system fallback.
 pub struct PooledGlobalAlloc {
-    classes: [AtomicPtr<ShardedPool>; NUM_CLASSES],
+    classes: [AtomicPtr<MagazinePool>; NUM_CLASSES],
     blocks_per_class: u32,
     pub pool_hits: AtomicU64,
     pub system_allocs: AtomicU64,
@@ -52,7 +57,7 @@ impl PooledGlobalAlloc {
     /// `const`-constructible so it can be a `static`.
     pub const fn new(blocks_per_class: u32) -> Self {
         #[allow(clippy::declare_interior_mutable_const)]
-        const NULL: AtomicPtr<ShardedPool> = AtomicPtr::new(core::ptr::null_mut());
+        const NULL: AtomicPtr<MagazinePool> = AtomicPtr::new(core::ptr::null_mut());
         Self {
             classes: [NULL; NUM_CLASSES],
             blocks_per_class,
@@ -75,7 +80,7 @@ impl PooledGlobalAlloc {
     }
 
     /// Get or lazily create the pool for class `ci`.
-    fn class_pool(&self, ci: usize) -> &ShardedPool {
+    fn class_pool(&self, ci: usize) -> &MagazinePool {
         let ptr = self.classes[ci].load(Ordering::Acquire);
         if !ptr.is_null() {
             // SAFETY: once published, pools live for the program duration.
@@ -87,10 +92,9 @@ impl PooledGlobalAlloc {
         let block_size = 1usize << (MIN_SHIFT + ci as u32);
         let layout = Layout::from_size_align(block_size, CLASS_ALIGN).expect("class layout");
         IN_POOL_INIT.with(|c| c.set(true));
-        let fresh = Box::into_raw(Box::new(ShardedPool::with_layout(
-            layout,
-            self.blocks_per_class,
-            default_shards(),
+        let fresh = Box::into_raw(Box::new(MagazinePool::new(
+            ShardedPool::with_layout(layout, self.blocks_per_class, default_shards()),
+            DEFAULT_MAG_DEPTH,
         )));
         IN_POOL_INIT.with(|c| c.set(false));
         match self.classes[ci].compare_exchange(

@@ -78,19 +78,30 @@ impl PoolHandle {
     /// Pool-backed handle sized for the serving engine: classes 16 B …
     /// 4 KiB (token lanes, block tables, logits rows for small models all
     /// land inside; bigger rows fall through to the counted system
-    /// fallback), sharded by available parallelism.
+    /// fallback), sharded by available parallelism, **cached** — each
+    /// worker thread fronts the shards with a two-magazine CAS-free
+    /// cache (see [`crate::pool::MagazinePool`]).
     pub fn serving_default() -> Self {
         Self::pooled(Self::serving_config(), super::sharded::default_shards())
     }
 
-    /// The serving-engine pool geometry (shared by `serving_default` and
-    /// the placement-explicit variant).
+    /// [`Self::serving_default`] with the magazine layer disabled — the
+    /// bare-sharded A/B arm for measuring what the CAS-free hot path
+    /// buys on the serving path (same classes, same topology).
+    pub fn serving_uncached() -> Self {
+        let cfg = MultiPoolConfig { magazine_depth: 0, ..Self::serving_config() };
+        Self::pooled(cfg, super::sharded::default_shards())
+    }
+
+    /// The serving-engine pool geometry (shared by `serving_default`, the
+    /// uncached arm and the placement-explicit variant).
     fn serving_config() -> MultiPoolConfig {
         MultiPoolConfig {
             min_class: 16,
             max_class: 4096,
             blocks_per_class: 256,
             system_fallback: true,
+            magazine_depth: super::magazine::DEFAULT_MAG_DEPTH,
         }
     }
 
@@ -380,6 +391,7 @@ mod tests {
                 max_class: 256,
                 blocks_per_class: 8,
                 system_fallback: true,
+                magazine_depth: crate::pool::DEFAULT_MAG_DEPTH,
             },
             2,
         )
@@ -392,6 +404,20 @@ mod tests {
         assert_eq!(h.multi().unwrap().placement_name(), "round_robin");
         let d = PoolHandle::serving_default();
         assert_eq!(d.multi().unwrap().placement_name(), "steal_aware");
+    }
+
+    #[test]
+    fn serving_default_is_cached_and_uncached_arm_is_not() {
+        let cached = PoolHandle::serving_default();
+        assert!(cached.multi().unwrap().magazines_enabled());
+        let bare = PoolHandle::serving_uncached();
+        assert!(!bare.multi().unwrap().magazines_enabled());
+        // Both arms serve the same vec workload through the same code.
+        for h in [cached, bare] {
+            let mut v: PooledVec<u32> = PooledVec::with_capacity(&h, 8);
+            v.extend_from_slice(&[1, 2, 3]);
+            assert_eq!(v.as_slice(), &[1, 2, 3]);
+        }
     }
 
     #[test]
@@ -522,6 +548,7 @@ mod tests {
                 max_class: 256,
                 blocks_per_class: 512,
                 system_fallback: false,
+                magazine_depth: crate::pool::DEFAULT_MAG_DEPTH,
             },
             4,
         );

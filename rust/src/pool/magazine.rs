@@ -1,0 +1,866 @@
+//! `MagazinePool` — a per-thread *magazine* layer in front of
+//! [`ShardedPool`]: the CAS-free hot path.
+//!
+//! The sharded layer got the paper's O(1) pool down to ~1 uncontended CAS
+//! per op (home-shard Treiber push/pop) plus an occasional steal scan.
+//! This module removes the remaining shared-memory traffic from the
+//! steady state, following Bonwick's magazine design (vmem/slab) and the
+//! per-thread-cache lever the allocator-simulation literature
+//! (Risco-Martín et al.) identifies as dominant for hot-path latency:
+//!
+//! * **Two magazines per thread** — each home-slot lease owns a *loaded*
+//!   and a *previous* magazine: bounded arrays of grid indices in
+//!   thread-private storage. Steady-state allocate/free is a plain
+//!   non-atomic push/pop on `loaded` — **zero CAS, zero fence, zero
+//!   steal scan** — with the two-magazine exchange absorbing
+//!   alloc/free alternation right at a magazine boundary (the thrash case
+//!   a single magazine gets wrong: it would hit the shared pool on every
+//!   op).
+//! * **Bulk refill** — an empty pair refills from the home shard via
+//!   [`ShardedPool::allocate_grids`], which rides
+//!   [`AtomicPool::allocate_batch`](super::atomic::AtomicPool::allocate_batch)'s
+//!   chain detach: a whole magazine for ~1 CAS. If the home shard is dry
+//!   the layer falls back to [`ShardedPool::allocate`], whose batched
+//!   steal scan already amortises cross-shard traffic through the stash
+//!   grid.
+//! * **Bulk flush** — a full pair flushes the *previous* magazine via
+//!   [`ShardedPool::deallocate_grids`]: grids are grouped by owning shard
+//!   and returned as pre-linked chains through the same side-table links,
+//!   **one head CAS per shard touched** (for a locality-respecting
+//!   workload: one CAS per magazine) instead of a per-free cross-shard
+//!   CAS.
+//! * **Adaptive depth** — every refill miss doubles the magazine depth
+//!   (the thread is allocation-hungry; push the next miss further out)
+//!   and every both-full flush halves it (the thread is a net freer;
+//!   shallow magazines hand memory back to the shared tiers sooner).
+//!   Depth is clamped to a per-class budget:
+//!   `min(`[`MAX_MAG_DEPTH`]`, 4 KiB / block_size, num_blocks / 4)`, so
+//!   big classes and small pools never hoard.
+//! * **Churn safety** — magazines key off the same PR 4 home-slot lease
+//!   as shard routing. A slot's state word carries the owner's slot
+//!   *generation*; thread exit bumps the generation through the registry
+//!   guard, which makes the dead thread's magazines *stale*. Stale
+//!   magazines are flushed back to the owning shards by the next owner of
+//!   the recycled slot, by [`MagazinePool::flush_stale_magazines`] (the
+//!   serving engine's maintenance tick), or by the allocate slow path
+//!   before it reports exhaustion — so no block is ever stranded and
+//!   conservation stays exact. Cached blocks always count as free
+//!   ([`MagazineStats::cached`] feeds `num_free`).
+//!
+//! ### Why this is safe without locks
+//!
+//! A magazine slot is touched non-atomically only by the thread that owns
+//! the home-slot lease (`state == owned(gen)` with `gen` current). A
+//! reclaimer may claim a slot only after observing, with an Acquire load,
+//! a slot generation *newer* than the stamped owner — which pairs with
+//! the Release bump in the registry's thread-exit guard, so the dead
+//! thread's magazine writes are visible. Claim/hand-over transitions go
+//! through a CLAIMED state via CAS, so a reclaimer, a new owner of the
+//! recycled slot, and the maintenance tick serialise cleanly; the live
+//! owner's fast path stays a single relaxed load.
+//!
+//! Shared (overflow / teardown) slots bypass the layer entirely and use
+//! the sharded pool directly — a shared routing hint is harmless, a
+//! shared magazine would not be.
+
+use core::cell::UnsafeCell;
+use core::ptr::NonNull;
+use core::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use super::placement::ShardPlacement;
+use super::sharded::{
+    current_slot, slot_generation, ShardedPool, MAX_HOME_SLOTS, SLOT_SHARED_BIT,
+};
+use super::stats::{MagazineStats, ShardedPoolStats};
+use crate::metrics::Metrics;
+
+/// Default initial magazine depth (blocks per magazine before adaptation).
+pub const DEFAULT_MAG_DEPTH: u32 = 8;
+
+/// Hard upper bound on the adaptive depth (and the magazines' array size).
+pub const MAX_MAG_DEPTH: u32 = 32;
+
+/// Per-magazine byte budget: depth is clamped so one magazine never
+/// caches more than this many bytes of blocks.
+const MAG_BYTE_BUDGET: usize = 4096;
+
+/// Slot state: no owner, magazines empty.
+const MAG_FREE: u64 = 0;
+/// Slot state: a reclaimer or incoming owner holds exclusive access.
+const MAG_CLAIMED: u64 = 1;
+
+/// Slot state: owned by the thread whose lease generation is `gen`.
+#[inline(always)]
+const fn owned(gen: u32) -> u64 {
+    ((gen as u64) << 32) | 2
+}
+
+/// The thread-private side of a slot: two bounded magazines of grid
+/// indices plus the adaptive depth. Touched non-atomically, guarded by
+/// the slot's `state` protocol.
+struct MagInner {
+    loaded: [u32; MAX_MAG_DEPTH as usize],
+    prev: [u32; MAX_MAG_DEPTH as usize],
+    loaded_len: u32,
+    prev_len: u32,
+    /// Adaptive capacity in [1, pool max_depth].
+    depth: u32,
+}
+
+impl MagInner {
+    #[inline(always)]
+    fn len(&self) -> u32 {
+        self.loaded_len + self.prev_len
+    }
+
+    /// Exchange the loaded and previous magazines.
+    #[inline]
+    fn exchange(&mut self) {
+        core::mem::swap(&mut self.loaded, &mut self.prev);
+        core::mem::swap(&mut self.loaded_len, &mut self.prev_len);
+    }
+}
+
+/// One home slot's magazine pair plus its single-writer stat mirrors,
+/// cache-line aligned so neighbouring slots (owned by different threads)
+/// never false-share.
+#[repr(align(64))]
+struct MagazineSlot {
+    /// `MAG_FREE`, `MAG_CLAIMED`, or `owned(gen)`.
+    state: AtomicU64,
+    /// Mirror of `loaded_len + prev_len` (Release store by the owner):
+    /// feeds `num_free`, exact at quiescence.
+    cached: AtomicU32,
+    /// Mirror of the adaptive depth.
+    depth: AtomicU32,
+    hits: AtomicU64,
+    refills: AtomicU64,
+    refilled_blocks: AtomicU64,
+    flushes: AtomicU64,
+    flushed_blocks: AtomicU64,
+    inner: UnsafeCell<MagInner>,
+}
+
+// SAFETY: `inner` is only accessed by whoever holds the slot per the
+// state protocol (owner under a current generation, or a CAS-winning
+// claimer of a stale/free slot); everything else is atomic.
+unsafe impl Sync for MagazineSlot {}
+
+impl MagazineSlot {
+    fn new(depth: u32) -> Self {
+        Self {
+            state: AtomicU64::new(MAG_FREE),
+            cached: AtomicU32::new(0),
+            depth: AtomicU32::new(depth),
+            hits: AtomicU64::new(0),
+            refills: AtomicU64::new(0),
+            refilled_blocks: AtomicU64::new(0),
+            flushes: AtomicU64::new(0),
+            flushed_blocks: AtomicU64::new(0),
+            inner: UnsafeCell::new(MagInner {
+                loaded: [0; MAX_MAG_DEPTH as usize],
+                prev: [0; MAX_MAG_DEPTH as usize],
+                loaded_len: 0,
+                prev_len: 0,
+                depth,
+            }),
+        }
+    }
+}
+
+/// Single-writer counter bump: load + store, never an atomic RMW — the
+/// hot path must not pay a locked instruction for accounting.
+#[inline(always)]
+fn bump(c: &AtomicU64, by: u64) {
+    c.store(c.load(Ordering::Relaxed).wrapping_add(by), Ordering::Relaxed);
+}
+
+/// A [`ShardedPool`] fronted by per-thread two-magazine caches.
+///
+/// `Sync`: share by reference or `Arc`; all operations take `&self`.
+/// Construct with `depth == 0` to disable the layer (pure pass-through —
+/// the ablation arm).
+pub struct MagazinePool {
+    shared: ShardedPool,
+    /// One slot per home-slot lease; empty when the layer is disabled.
+    rack: Box<[MagazineSlot]>,
+    /// Initial per-slot depth (already budget-clamped).
+    init_depth: u32,
+    /// Depth ceiling from the class budget.
+    max_depth: u32,
+    /// One past the highest rack slot ever bound (updated only on the
+    /// cold bind path). Slots beyond it have never held a magazine, so
+    /// rack scans — stale flushes on the exhaustion path, stats — stop
+    /// there instead of walking all `MAX_HOME_SLOTS` lines. The registry
+    /// hands out the lowest free ids first, so this tracks the number of
+    /// distinct threads that ever used the pool, not 256.
+    bound_hw: AtomicU32,
+}
+
+impl MagazinePool {
+    /// Front `shared` with magazines of initial depth `depth` (clamped to
+    /// the class budget; 0 disables the layer).
+    pub fn new(shared: ShardedPool, depth: u32) -> Self {
+        let max_depth = if depth == 0 {
+            0
+        } else {
+            Self::depth_budget(shared.block_size(), shared.num_blocks())
+        };
+        let init_depth = depth.min(max_depth);
+        let rack: Box<[MagazineSlot]> = if init_depth == 0 {
+            Vec::new().into_boxed_slice()
+        } else {
+            (0..MAX_HOME_SLOTS).map(|_| MagazineSlot::new(init_depth)).collect()
+        };
+        Self { shared, rack, init_depth, max_depth, bound_hw: AtomicU32::new(0) }
+    }
+
+    /// Word-aligned magazine-fronted pool (see
+    /// [`ShardedPool::with_shards`] for the shard geometry rules).
+    pub fn with_shards(block_size: usize, num_blocks: u32, shards: usize, depth: u32) -> Self {
+        Self::new(ShardedPool::with_shards(block_size, num_blocks, shards), depth)
+    }
+
+    /// Fully explicit constructor (layout, shard count, topology policy,
+    /// magazine depth).
+    pub fn with_layout_placement(
+        layout: core::alloc::Layout,
+        num_blocks: u32,
+        shards: usize,
+        placement: Arc<dyn ShardPlacement>,
+        depth: u32,
+    ) -> Self {
+        Self::new(
+            ShardedPool::with_layout_placement(layout, num_blocks, shards, placement),
+            depth,
+        )
+    }
+
+    /// Depth ceiling for a class: never more than [`MAX_MAG_DEPTH`], more
+    /// than 4 KiB of blocks, or a quarter of the pool per magazine.
+    fn depth_budget(block_size: usize, num_blocks: u32) -> u32 {
+        let by_bytes = (MAG_BYTE_BUDGET / block_size).max(1) as u32;
+        let by_blocks = (num_blocks / 4).max(1);
+        MAX_MAG_DEPTH.min(by_bytes).min(by_blocks)
+    }
+
+    /// The backing sharded pool (stats, drains, geometry).
+    pub fn shared(&self) -> &ShardedPool {
+        &self.shared
+    }
+
+    /// Is the magazine layer active (depth > 0 at construction)?
+    pub fn magazines_enabled(&self) -> bool {
+        !self.rack.is_empty()
+    }
+
+    /// The calling thread's magazine slot, bound and owned — `None` when
+    /// the layer is disabled, the thread is on a shared/teardown slot, or
+    /// the slot is transiently claimed by a reclaimer.
+    #[inline]
+    fn my_slot(&self) -> Option<&MagazineSlot> {
+        if self.rack.is_empty() {
+            return None;
+        }
+        let (slot, gen) = current_slot();
+        if slot & SLOT_SHARED_BIT != 0 {
+            return None;
+        }
+        let idx = slot as usize & (MAX_HOME_SLOTS - 1);
+        let m = &self.rack[idx];
+        if m.state.load(Ordering::Relaxed) == owned(gen) {
+            Some(m)
+        } else {
+            self.bind(idx, gen)
+        }
+    }
+
+    /// First use of this pool under the current slot lease: take the slot
+    /// over, flushing anything a dead predecessor left cached.
+    #[cold]
+    fn bind(&self, idx: usize, gen: u32) -> Option<&MagazineSlot> {
+        let m = &self.rack[idx];
+        loop {
+            let cur = m.state.load(Ordering::Acquire);
+            if cur == owned(gen) {
+                return Some(m);
+            }
+            if cur == MAG_CLAIMED {
+                // A reclaimer is mid-flush on a dead predecessor's
+                // contents; bypass the magazine for this op.
+                return None;
+            }
+            if m.state
+                .compare_exchange(cur, MAG_CLAIMED, Ordering::AcqRel, Ordering::Acquire)
+                .is_err()
+            {
+                continue;
+            }
+            // SAFETY: the CAS to CLAIMED grants exclusive access. If the
+            // previous state was owned(stale), that owner exited (only
+            // exit bumps the lease generation), and the registry's
+            // release/acquire edges make its writes visible here.
+            let inner = unsafe { &mut *m.inner.get() };
+            self.flush_all(m, inner);
+            inner.depth = self.init_depth;
+            m.depth.store(self.init_depth, Ordering::Relaxed);
+            m.state.store(owned(gen), Ordering::Release);
+            self.bound_hw.fetch_max(idx as u32 + 1, Ordering::Relaxed);
+            return Some(m);
+        }
+    }
+
+    /// Allocate one block. Steady state: a non-atomic pop from the
+    /// calling thread's loaded magazine — no CAS, no fence, no scan.
+    #[inline]
+    pub fn allocate(&self) -> Option<NonNull<u8>> {
+        if let Some(m) = self.my_slot() {
+            // SAFETY: `my_slot` returns only while this thread owns the
+            // slot state, so `inner` is exclusively ours.
+            let inner = unsafe { &mut *m.inner.get() };
+            if inner.loaded_len == 0 && inner.prev_len != 0 {
+                inner.exchange();
+            }
+            if inner.loaded_len != 0 {
+                inner.loaded_len -= 1;
+                let grid = inner.loaded[inner.loaded_len as usize];
+                bump(&m.hits, 1);
+                m.cached.store(inner.len(), Ordering::Release);
+                return Some(self.shared.grid_to_ptr(grid));
+            }
+            return self.refill_and_pop(m, inner);
+        }
+        self.allocate_shared_slow()
+    }
+
+    /// Free one block. Steady state: a non-atomic push into the calling
+    /// thread's loaded magazine.
+    ///
+    /// # Safety
+    /// `p` must come from `allocate` on this pool, freed at most once.
+    #[inline]
+    pub unsafe fn deallocate(&self, p: NonNull<u8>) {
+        if let Some(m) = self.my_slot() {
+            // SAFETY: as in `allocate` — slot ownership is exclusive.
+            let inner = unsafe { &mut *m.inner.get() };
+            if inner.loaded_len >= inner.depth {
+                if inner.prev_len == 0 {
+                    // Park the full magazine as `previous`; keep pushing
+                    // into the (now empty) loaded one.
+                    inner.exchange();
+                } else {
+                    // Both full: return the previous magazine to the
+                    // owning shards in chained CASes, then rotate.
+                    self.flush_prev(m, inner);
+                    inner.exchange();
+                }
+            }
+            inner.loaded[inner.loaded_len as usize] = self.shared.ptr_to_grid(p);
+            inner.loaded_len += 1;
+            m.cached.store(inner.len(), Ordering::Release);
+            return;
+        }
+        // SAFETY: forwarded contract.
+        unsafe { self.shared.deallocate(p) }
+    }
+
+    /// Both magazines empty: pull a fresh one from the home shard in one
+    /// chain detach, serving the first block directly.
+    #[cold]
+    fn refill_and_pop(&self, m: &MagazineSlot, inner: &mut MagInner) -> Option<NonNull<u8>> {
+        debug_assert_eq!(inner.len(), 0);
+        let want = inner.depth.min(MAX_MAG_DEPTH);
+        let mut buf = [0u32; MAX_MAG_DEPTH as usize];
+        let got = self.shared.allocate_grids(want, &mut buf[..want as usize]);
+        if got == 0 {
+            // Home shard dry: serve this one request through the shared
+            // steal path (whose scan batch-stashes extras already) rather
+            // than bulk-stealing a hoard the siblings may need.
+            return self.allocate_shared_slow();
+        }
+        bump(&m.refills, 1);
+        bump(&m.refilled_blocks, got as u64);
+        // A refill is a cache miss: deepen so the next one is further out.
+        inner.depth = (inner.depth * 2).min(self.max_depth);
+        m.depth.store(inner.depth, Ordering::Relaxed);
+        let n = got as usize;
+        inner.loaded[..n - 1].copy_from_slice(&buf[1..n]);
+        inner.loaded_len = got - 1;
+        m.cached.store(inner.len(), Ordering::Release);
+        Some(self.shared.grid_to_ptr(buf[0]))
+    }
+
+    /// Shared-pool allocate with a stale-magazine rescue: if every shard
+    /// and stash looks empty, blocks may still sit in magazines of exited
+    /// threads — reclaim those and retry once, so churn can never strand
+    /// capacity.
+    fn allocate_shared_slow(&self) -> Option<NonNull<u8>> {
+        if let Some(p) = self.shared.allocate() {
+            return Some(p);
+        }
+        if self.flush_stale_magazines() > 0 {
+            return self.shared.allocate();
+        }
+        None
+    }
+
+    /// Return `inner.prev` to the owning shards (grouped chain frees) and
+    /// halve the depth — sustained flushing means this thread is a net
+    /// freer and should hand memory back sooner.
+    #[cold]
+    fn flush_prev(&self, m: &MagazineSlot, inner: &mut MagInner) {
+        let n = inner.prev_len as usize;
+        if n == 0 {
+            return;
+        }
+        self.shared.deallocate_grids(&mut inner.prev[..n]);
+        inner.prev_len = 0;
+        bump(&m.flushes, 1);
+        bump(&m.flushed_blocks, n as u64);
+        inner.depth = (inner.depth / 2).max(1);
+        m.depth.store(inner.depth, Ordering::Relaxed);
+    }
+
+    /// Flush both magazines of a slot the caller exclusively holds;
+    /// returns blocks moved.
+    fn flush_all(&self, m: &MagazineSlot, inner: &mut MagInner) -> u32 {
+        let mut moved = 0u32;
+        let n = inner.loaded_len as usize;
+        if n > 0 {
+            self.shared.deallocate_grids(&mut inner.loaded[..n]);
+            moved += n as u32;
+        }
+        let n = inner.prev_len as usize;
+        if n > 0 {
+            self.shared.deallocate_grids(&mut inner.prev[..n]);
+            moved += n as u32;
+        }
+        inner.loaded_len = 0;
+        inner.prev_len = 0;
+        if moved > 0 {
+            bump(&m.flushes, 1);
+            bump(&m.flushed_blocks, moved as u64);
+        }
+        m.cached.store(0, Ordering::Release);
+        moved
+    }
+
+    /// Flush the calling thread's own magazines back to the shared pool;
+    /// returns blocks moved. Deterministic hand-back for benches and for
+    /// callers about to park a thread.
+    pub fn flush_local(&self) -> u32 {
+        match self.my_slot() {
+            Some(m) => {
+                // SAFETY: slot ownership is exclusive (see `allocate`).
+                let inner = unsafe { &mut *m.inner.get() };
+                self.flush_all(m, inner)
+            }
+            None => 0,
+        }
+    }
+
+    /// Flush magazines whose owning thread has exited (their home-slot
+    /// lease generation moved on) back to the owning shards; returns
+    /// blocks moved. Safe from any thread at any time — the serving
+    /// engine calls this from its maintenance tick, and the allocate slow
+    /// path uses it as a last resort before reporting exhaustion.
+    pub fn flush_stale_magazines(&self) -> u32 {
+        let mut moved = 0u32;
+        // Only slots that were ever bound can hold anything; the bound
+        // high-water keeps this scan proportional to the pool's actual
+        // thread population (it matters on the allocate slow path, which
+        // runs this before reporting exhaustion). A slot binding
+        // concurrently with the scan has a live owner and is never stale,
+        // so racing past the relaxed high-water read is harmless.
+        let hw = (self.bound_hw.load(Ordering::Relaxed) as usize).min(self.rack.len());
+        for (slot, m) in self.rack[..hw].iter().enumerate() {
+            let cur = m.state.load(Ordering::Acquire);
+            if cur as u32 != 2 {
+                continue; // FREE or CLAIMED: nothing stale to take
+            }
+            let gen = (cur >> 32) as u32;
+            if slot_generation(slot) == gen {
+                continue; // owner still live — its cache, its business
+            }
+            if m.state
+                .compare_exchange(cur, MAG_CLAIMED, Ordering::AcqRel, Ordering::Acquire)
+                .is_err()
+            {
+                continue; // lost to the new owner or another reclaimer
+            }
+            // SAFETY: CLAIMED grants exclusive access; the Acquire load
+            // of the bumped generation makes the dead owner's writes
+            // visible (Release bump in the registry exit guard).
+            let inner = unsafe { &mut *m.inner.get() };
+            moved += self.flush_all(m, inner);
+            m.state.store(MAG_FREE, Ordering::Release);
+        }
+        moved
+    }
+
+    // ---- delegation & introspection ---------------------------------------
+
+    /// See [`ShardedPool::drain_stashes`].
+    pub fn drain_stashes(&self) -> u32 {
+        self.shared.drain_stashes()
+    }
+
+    /// See [`ShardedPool::owns`].
+    #[inline]
+    pub fn owns(&self, p: NonNull<u8>) -> bool {
+        self.shared.owns(p)
+    }
+
+    /// See [`ShardedPool::contains`].
+    pub fn contains(&self, p: NonNull<u8>) -> bool {
+        self.shared.contains(p)
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shared.num_shards()
+    }
+
+    pub fn num_blocks(&self) -> u32 {
+        self.shared.num_blocks()
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.shared.block_size()
+    }
+
+    pub fn placement_name(&self) -> &'static str {
+        self.shared.placement_name()
+    }
+
+    /// Free blocks: shard free lists + steal stashes + magazine-cached.
+    /// Exact when quiescent, like the underlying counters.
+    pub fn num_free(&self) -> u32 {
+        self.shared.num_free() + self.magazine_stats().cached
+    }
+
+    /// Concurrency tax including the magazine rack.
+    pub fn overhead_bytes(&self) -> usize {
+        self.shared.overhead_bytes()
+            + self.rack.len() * core::mem::size_of::<MagazineSlot>()
+    }
+
+    /// Aggregate magazine-layer counters across the rack.
+    pub fn magazine_stats(&self) -> MagazineStats {
+        let mut hits = 0u64;
+        let mut refills = 0u64;
+        let mut refilled_blocks = 0u64;
+        let mut flushes = 0u64;
+        let mut flushed_blocks = 0u64;
+        let mut cached = 0u32;
+        let mut active_slots = 0u32;
+        let mut depth_sum = 0u64;
+        // Counters past the bound high-water are all zero by definition.
+        let hw = (self.bound_hw.load(Ordering::Relaxed) as usize).min(self.rack.len());
+        for m in self.rack[..hw].iter() {
+            hits += m.hits.load(Ordering::Relaxed);
+            refills += m.refills.load(Ordering::Relaxed);
+            refilled_blocks += m.refilled_blocks.load(Ordering::Relaxed);
+            flushes += m.flushes.load(Ordering::Relaxed);
+            flushed_blocks += m.flushed_blocks.load(Ordering::Relaxed);
+            cached += m.cached.load(Ordering::Acquire);
+            if m.state.load(Ordering::Relaxed) as u32 == 2 {
+                active_slots += 1;
+                depth_sum += m.depth.load(Ordering::Relaxed) as u64;
+            }
+        }
+        MagazineStats {
+            hits,
+            refills,
+            refilled_blocks,
+            flushes,
+            flushed_blocks,
+            cached,
+            active_slots,
+            depth_sum,
+        }
+    }
+
+    /// Shared-pool snapshot with the magazine aggregates filled in (so
+    /// `num_free` and conservation identities see cached blocks).
+    pub fn stats(&self) -> ShardedPoolStats {
+        let mut s = self.shared.stats();
+        s.magazines = self.magazine_stats();
+        s
+    }
+
+    /// Publish the shared pool's gauges plus the magazine layer's
+    /// `magazine_{hits,refills,flushes,cached,depth}` under `prefix`,
+    /// correcting `free_blocks` to include cached blocks.
+    pub fn export_metrics(&self, metrics: &Metrics, prefix: &str) -> ShardedPoolStats {
+        let mut s = self.shared.export_metrics(metrics, prefix);
+        let m = self.magazine_stats();
+        metrics.gauge(&format!("{prefix}.magazine_hits")).set(m.hits as i64);
+        metrics.gauge(&format!("{prefix}.magazine_refills")).set(m.refills as i64);
+        metrics.gauge(&format!("{prefix}.magazine_flushes")).set(m.flushes as i64);
+        metrics.gauge(&format!("{prefix}.magazine_cached")).set(m.cached as i64);
+        metrics.gauge(&format!("{prefix}.magazine_depth")).set(m.avg_depth() as i64);
+        s.magazines = m;
+        metrics.gauge(&format!("{prefix}.free_blocks")).set(s.num_free() as i64);
+        s
+    }
+}
+
+impl std::fmt::Debug for MagazinePool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let m = self.magazine_stats();
+        f.debug_struct("MagazinePool")
+            .field("shared", &self.shared)
+            .field("enabled", &self.magazines_enabled())
+            .field("init_depth", &self.init_depth)
+            .field("max_depth", &self.max_depth)
+            .field("cached", &m.cached)
+            .field("hits", &m.hits)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeSet;
+
+    #[test]
+    fn pair_steady_state_is_all_hits() {
+        let p = MagazinePool::with_shards(64, 256, 4, 8);
+        // Warm: first alloc refills; thereafter pure magazine traffic.
+        for _ in 0..1000 {
+            let a = p.allocate().unwrap();
+            unsafe { p.deallocate(a) };
+        }
+        let m = p.magazine_stats();
+        assert_eq!(m.refills, 1, "pair shape refills exactly once");
+        assert_eq!(m.hits, 999, "everything after the refill is CAS-free");
+        assert_eq!(m.flushes, 0, "pair shape never fills both magazines");
+        assert!(m.hits_per_refill() > 900.0);
+        assert_eq!(p.num_free(), 256, "cached blocks count as free");
+    }
+
+    #[test]
+    fn depth_budget_clamps() {
+        // 4 KiB blocks → depth 1 regardless of the requested 8.
+        let big = MagazinePool::with_shards(4096, 64, 2, 8);
+        assert_eq!(big.init_depth, 1);
+        // Tiny pool → num_blocks/4 wins.
+        let tiny = MagazinePool::with_shards(16, 8, 2, 8);
+        assert_eq!(tiny.init_depth, 2);
+        // Roomy pool → MAX clamp.
+        let wide = MagazinePool::with_shards(16, 4096, 2, 4096);
+        assert_eq!(wide.init_depth, MAX_MAG_DEPTH);
+    }
+
+    #[test]
+    fn disabled_mode_is_pass_through() {
+        let p = MagazinePool::with_shards(32, 16, 2, 0);
+        assert!(!p.magazines_enabled());
+        let a = p.allocate().unwrap();
+        unsafe { p.deallocate(a) };
+        let m = p.magazine_stats();
+        assert_eq!(m.hits + m.refills + m.cached as u64, 0);
+        assert_eq!(p.num_free(), 16);
+        assert_eq!(p.flush_stale_magazines(), 0);
+        assert_eq!(p.flush_local(), 0);
+        // The op went straight to the shared pool.
+        assert_eq!(p.shared().stats().total_allocs(), 1);
+    }
+
+    #[test]
+    fn single_thread_drains_whole_pool_through_magazines() {
+        let p = MagazinePool::with_shards(16, 64, 8, 4);
+        let mut seen = BTreeSet::new();
+        while let Some(a) = p.allocate() {
+            assert!(seen.insert(a.as_ptr() as usize), "double handout");
+            assert!(p.contains(a));
+        }
+        assert_eq!(seen.len(), 64, "magazines must not hide capacity");
+        assert_eq!(p.num_free(), 0);
+    }
+
+    #[test]
+    fn flush_on_free_burst_returns_chains_and_conserves() {
+        let p = MagazinePool::with_shards(16, 128, 4, 4);
+        // Alloc burst deepens the magazine; free burst then overflows
+        // both magazines and forces chained flushes.
+        let held: Vec<_> = (0..96).map(|_| p.allocate().unwrap()).collect();
+        for a in held {
+            unsafe { p.deallocate(a) };
+        }
+        let m = p.magazine_stats();
+        assert!(m.flushes >= 1, "free burst must flush: {m:?}");
+        assert!(m.refills >= 1);
+        assert_eq!(p.num_free(), 128, "conservation across refill/flush cycles");
+        // Flush the local remainder: everything lands back on shards.
+        p.flush_local();
+        assert_eq!(p.magazine_stats().cached, 0);
+        assert_eq!(p.shared().num_free(), 128);
+    }
+
+    #[test]
+    fn depth_adapts_up_on_misses_and_down_on_flushes() {
+        let p = MagazinePool::with_shards(16, 512, 2, 2);
+        // Sustained alloc misses: depth doubles toward the budget.
+        let held: Vec<_> = (0..128).map(|_| p.allocate().unwrap()).collect();
+        let deep = p.magazine_stats();
+        assert!(
+            deep.depth_sum > 2,
+            "refill misses must deepen the magazine: {deep:?}"
+        );
+        let refills_so_far = deep.refills;
+        assert!(
+            (refills_so_far as usize) < 128 / 2,
+            "deepening must amortise refills: {refills_so_far} for 128 allocs"
+        );
+        // Sustained frees: flushes halve it back down.
+        for a in held {
+            unsafe { p.deallocate(a) };
+        }
+        let m = p.magazine_stats();
+        assert!(m.flushes >= 1);
+        assert!(
+            m.depth_sum < deep.depth_sum || m.depth_sum <= 2,
+            "flush pressure must shallow the magazine: {} → {}",
+            deep.depth_sum,
+            m.depth_sum
+        );
+        assert_eq!(p.num_free(), 512);
+    }
+
+    #[test]
+    fn exited_threads_magazines_are_stale_flushed() {
+        let p = MagazinePool::with_shards(32, 64, 2, 8);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                // Leave blocks cached in this worker's magazines.
+                let held: Vec<_> = (0..16).map(|_| p.allocate().unwrap()).collect();
+                for a in held {
+                    unsafe { p.deallocate(a) };
+                }
+            });
+        });
+        // Worker exited: its cached blocks still count as free...
+        assert_eq!(p.num_free(), 64);
+        let cached = p.magazine_stats().cached;
+        assert!(cached > 0, "worker must have left a warm magazine behind");
+        // ...and a maintenance flush returns exactly them to the shards.
+        assert_eq!(p.flush_stale_magazines(), cached);
+        assert_eq!(p.magazine_stats().cached, 0);
+        assert_eq!(p.shared().num_free(), 64);
+        assert_eq!(p.flush_stale_magazines(), 0, "idempotent when clean");
+    }
+
+    #[test]
+    fn allocate_rescues_blocks_stranded_by_exited_threads() {
+        // No explicit maintenance: the allocate slow path itself must
+        // reach blocks cached by dead threads before reporting failure.
+        let p = MagazinePool::with_shards(16, 32, 2, 8);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                let held: Vec<_> = (0..32).map(|_| p.allocate().unwrap()).collect();
+                for a in held {
+                    unsafe { p.deallocate(a) };
+                }
+            });
+        });
+        assert!(p.magazine_stats().cached > 0);
+        let mut seen = BTreeSet::new();
+        while let Some(a) = p.allocate() {
+            assert!(seen.insert(a.as_ptr() as usize), "double handout");
+        }
+        assert_eq!(seen.len(), 32, "stale-magazine rescue must reach every block");
+    }
+
+    #[test]
+    fn recycled_slot_owner_inherits_nothing() {
+        // A new thread that recycles a dead thread's home slot must start
+        // with an empty magazine (the stale contents get flushed on bind),
+        // never with the dead thread's cached blocks.
+        let p = MagazinePool::with_shards(32, 64, 2, 8);
+        for _ in 0..8 {
+            std::thread::scope(|s| {
+                s.spawn(|| {
+                    let a = p.allocate().unwrap();
+                    let b = p.allocate().unwrap();
+                    unsafe {
+                        p.deallocate(a);
+                        p.deallocate(b);
+                    }
+                });
+            });
+        }
+        assert_eq!(p.num_free(), 64, "conservation across slot recycling");
+        p.flush_stale_magazines();
+        assert_eq!(p.shared().num_free(), 64);
+    }
+
+    #[test]
+    fn stats_surface_magazines_and_identities_hold() {
+        let p = MagazinePool::with_shards(16, 64, 8, 4);
+        let held: Vec<_> = (0..48).map(|_| p.allocate().unwrap()).collect();
+        for a in held {
+            unsafe { p.deallocate(a) };
+        }
+        p.flush_local();
+        let s = p.stats();
+        // Steal conservation holds unchanged under refills and flushes.
+        assert_eq!(
+            s.total_steals(),
+            s.total_steal_scans()
+                + s.total_stash_hits()
+                + s.total_stash_drained()
+                + s.total_stash_free() as u64
+        );
+        // Post-flush, every block pulled from the shared tier went back.
+        assert_eq!(s.total_allocs(), s.total_frees());
+        assert_eq!(s.num_free(), 64);
+        let m = crate::metrics::Metrics::new();
+        let exported = p.export_metrics(&m, "pool.mag");
+        assert_eq!(exported.magazines, p.magazine_stats());
+        let r = m.report();
+        assert!(r.contains("pool.mag.magazine_hits"), "{r}");
+        assert!(r.contains("pool.mag.magazine_refills"), "{r}");
+        assert!(r.contains("pool.mag.free_blocks = 64"), "{r}");
+    }
+
+    #[test]
+    fn concurrent_churn_exact_at_quiescence() {
+        let p = MagazinePool::with_shards(32, 256, 4, 8);
+        std::thread::scope(|s| {
+            for t in 0..8u64 {
+                let p = &p;
+                s.spawn(move || {
+                    let mut rng = crate::util::Rng::new(t + 21);
+                    let mut held: Vec<usize> = Vec::new();
+                    for _ in 0..20_000 {
+                        if held.is_empty() || rng.gen_bool(0.5) {
+                            if let Some(a) = p.allocate() {
+                                held.push(a.as_ptr() as usize);
+                            }
+                        } else {
+                            let i = rng.gen_usize(0, held.len());
+                            let addr = held.swap_remove(i);
+                            unsafe {
+                                p.deallocate(NonNull::new_unchecked(addr as *mut u8))
+                            };
+                        }
+                    }
+                    for addr in held {
+                        unsafe {
+                            p.deallocate(NonNull::new_unchecked(addr as *mut u8))
+                        };
+                    }
+                });
+            }
+        });
+        assert_eq!(p.num_free(), 256, "exact conservation incl. cached blocks");
+        p.flush_stale_magazines();
+        assert_eq!(p.magazine_stats().cached, 0, "every worker magazine drained");
+        assert_eq!(p.shared().num_free(), 256, "all blocks back on shards/stashes");
+        let s = p.stats();
+        assert_eq!(s.total_allocs(), s.total_frees(), "pull/return balance post-flush");
+    }
+}

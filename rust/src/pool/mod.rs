@@ -19,10 +19,32 @@
 //!   [`StealAware`] rehoming (the default), or a NUMA-ready [`Pinned`]
 //!   map; home slots are leased from a recyclable registry so thread
 //!   churn cannot leak routing state.
+//! * [`MagazinePool`] — the hot-path layer: per-thread two-magazine
+//!   caches (loaded/previous, Bonwick-style) in front of a
+//!   `ShardedPool`, so the steady-state alloc/free pair is a plain
+//!   non-atomic push/pop — zero CAS — with refills/flushes moving whole
+//!   chains at ~1 CAS per magazine. Default for the serving arm via
+//!   [`PoolHandle`].
 //! * [`ResizablePool`] — §VII grow/shrink by member-variable update.
 //! * [`MultiPool`] — §V/§VI ad-hoc hybrid: size classes + system fallback.
 //! * [`PooledGlobalAlloc`] — §V "overload new/delete" as a Rust
-//!   `#[global_allocator]`.
+//!   `#[global_allocator]`, magazine-fronted per size class.
+//!
+//! ### Layer diagram (hot-path lineage)
+//!
+//! ```text
+//! raw        §IV reference: lazy init, in-band free list, zero overhead
+//!  └─ fixed      owning + aligned + stats
+//!      └─ atomic     lock-free Treiber + ABA tag: 1 CAS/op, any thread
+//!          └─ sharded    home shards + batched stealing + rehoming:
+//!          │             ~1 *uncontended* CAS/op
+//!          └──── magazine   per-thread loaded/previous cache:
+//!                           0 CAS steady state, ~1 CAS per magazine amortised
+//! ```
+//!
+//! Each tier trades a little memory (side tables, counters, racks) for
+//! the next order of magnitude of concurrency; every tier above `raw`
+//! preserves the paper's O(1)/no-loops contract on its fast path.
 
 pub mod atomic;
 pub mod eager;
@@ -32,6 +54,7 @@ pub mod global_alloc;
 pub mod guarded;
 pub mod handle;
 pub mod locked;
+pub mod magazine;
 pub mod multi;
 pub mod placement;
 pub mod raw;
@@ -48,6 +71,7 @@ pub use global_alloc::PooledGlobalAlloc;
 pub use guarded::{GuardConfig, GuardError, GuardedPool};
 pub use handle::{PoolHandle, PooledVec};
 pub use locked::{BlockToken, LockedPool};
+pub use magazine::{MagazinePool, DEFAULT_MAG_DEPTH, MAX_MAG_DEPTH};
 pub use multi::{MultiPool, MultiPoolConfig, Origin, ShardedMultiPool};
 pub use placement::{
     Pinned, RoundRobin, ShardPlacement, StealAware, DEFAULT_REHOME_THRESHOLD_PCT,
@@ -59,5 +83,5 @@ pub use sharded::{
     default_shards, home_slot_epoch, home_slots_free, home_slots_high_water, ShardedPool,
     MAX_HOME_SLOTS, MAX_STEAL_BATCH,
 };
-pub use stats::{PoolStats, ShardStats, ShardedPoolStats};
+pub use stats::{MagazineStats, PoolStats, ShardStats, ShardedPoolStats};
 pub use typed::{PoolBox, TypedPool};

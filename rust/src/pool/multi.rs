@@ -14,9 +14,10 @@ use core::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use super::fixed::{FixedPool, PoolConfig};
+use super::magazine::{MagazinePool, DEFAULT_MAG_DEPTH};
 use super::placement::{ShardPlacement, StealAware};
-use super::sharded::{default_shards, ShardedPool};
-use super::stats::ShardedPoolStats;
+use super::sharded::default_shards;
+use super::stats::{MagazineStats, ShardedPoolStats};
 use crate::util::align::next_pow2;
 
 /// Where an allocation was served from.
@@ -50,11 +51,22 @@ pub struct MultiPoolConfig {
     /// Fall back to the system allocator when a class is exhausted
     /// (otherwise allocation fails).
     pub system_fallback: bool,
+    /// Initial per-thread magazine depth for the sharded flavour's
+    /// CAS-free hot path (clamped per class; 0 disables the layer).
+    /// [`MultiPool`] ignores it — single-threaded callers have no
+    /// cross-thread CAS to amortise.
+    pub magazine_depth: u32,
 }
 
 impl Default for MultiPoolConfig {
     fn default() -> Self {
-        Self { min_class: 16, max_class: 4096, blocks_per_class: 1024, system_fallback: true }
+        Self {
+            min_class: 16,
+            max_class: 4096,
+            blocks_per_class: 1024,
+            system_fallback: true,
+            magazine_depth: DEFAULT_MAG_DEPTH,
+        }
     }
 }
 
@@ -197,15 +209,19 @@ fn class_index(cfg: &MultiPoolConfig, size: usize) -> Option<usize> {
 }
 
 /// Thread-safe sharded mode of the multi-pool: every size class is a
-/// [`ShardedPool`], so concurrent callers allocate through `&self` with a
-/// core-local fast path (the serving framework's multi-tenant case — many
-/// worker threads, mixed request sizes).
+/// magazine-fronted [`super::sharded::ShardedPool`] ([`MagazinePool`]), so concurrent
+/// callers allocate through `&self` with a thread-local CAS-free fast
+/// path over a core-local shard (the serving framework's multi-tenant
+/// case — many worker threads, mixed request sizes). Set
+/// [`MultiPoolConfig::magazine_depth`] to 0 for the bare-sharded
+/// (uncached) ablation arm.
 ///
 /// Same routing rule and system fallback as [`MultiPool`]; per-class hit
-/// and exhaustion counters are atomics, and per-shard hit/steal accounting
-/// is available via [`Self::class_shard_stats`].
+/// and exhaustion counters are atomics, per-shard hit/steal accounting is
+/// available via [`Self::class_shard_stats`], and the magazine layer's
+/// aggregates via [`Self::magazine_stats`].
 pub struct ShardedMultiPool {
-    classes: Vec<ShardedPool>,
+    classes: Vec<MagazinePool>,
     class_sizes: Vec<usize>,
     hits: Vec<AtomicU64>,
     exhausted: Vec<AtomicU64>,
@@ -225,8 +241,9 @@ impl ShardedMultiPool {
         Self::with_placement(cfg, shards, Arc::new(StealAware::default()))
     }
 
-    /// Fully explicit constructor: every size class is a [`ShardedPool`]
-    /// sharing one [`ShardPlacement`] topology policy.
+    /// Fully explicit constructor: every size class is a magazine-fronted
+    /// [`super::sharded::ShardedPool`] sharing one [`ShardPlacement`]
+    /// topology policy.
     pub fn with_placement(
         cfg: MultiPoolConfig,
         shards: usize,
@@ -239,11 +256,12 @@ impl ShardedMultiPool {
         let mut size = cfg.min_class;
         while size <= cfg.max_class {
             let layout = Layout::from_size_align(size, 16).expect("bad class layout");
-            classes.push(ShardedPool::with_layout_placement(
+            classes.push(MagazinePool::with_layout_placement(
                 layout,
                 cfg.blocks_per_class,
                 shards,
                 Arc::clone(&placement),
+                cfg.magazine_depth,
             ));
             class_sizes.push(size);
             size *= 2;
@@ -350,6 +368,28 @@ impl ShardedMultiPool {
         self.classes.iter().map(|c| c.drain_stashes()).sum()
     }
 
+    /// Maintenance companion: flush magazines whose owning thread has
+    /// exited back to the shared shards, across all size classes; returns
+    /// blocks moved. Idle-safe and lock-free — the serving loop runs it
+    /// with [`Self::drain_stashes`] on the maintenance tick.
+    pub fn flush_stale_magazines(&self) -> u32 {
+        self.classes.iter().map(|c| c.flush_stale_magazines()).sum()
+    }
+
+    /// Is the per-thread magazine layer active (cached mode)?
+    pub fn magazines_enabled(&self) -> bool {
+        self.classes.iter().any(|c| c.magazines_enabled())
+    }
+
+    /// Magazine-layer counters aggregated across all size classes.
+    pub fn magazine_stats(&self) -> MagazineStats {
+        let mut total = MagazineStats::default();
+        for c in &self.classes {
+            total.absorb(&c.magazine_stats());
+        }
+        total
+    }
+
     /// Fraction of requests served from pools (vs system fallback).
     pub fn pool_hit_rate(&self) -> f64 {
         let hits: u64 = self.hits.iter().map(|h| h.load(Ordering::Relaxed)).sum();
@@ -363,9 +403,12 @@ impl ShardedMultiPool {
 
     /// Publish gauges for every size class into `metrics` under `prefix`:
     /// per-class hits/exhaustion plus each class pool's per-shard
-    /// hit/steal/rehome gauges (via [`ShardedPool::export_metrics`]),
-    /// and the cross-class rehome aggregates
-    /// (`{prefix}.rehomes_total`, `{prefix}.rehome_drained_total`).
+    /// hit/steal/rehome and magazine gauges (via
+    /// [`MagazinePool::export_metrics`]), the cross-class rehome
+    /// aggregates (`{prefix}.rehomes_total`,
+    /// `{prefix}.rehome_drained_total`) and the cross-class magazine
+    /// aggregates (`{prefix}.magazine_{hits,refills,flushes}_total`,
+    /// `{prefix}.magazine_cached`).
     pub fn export_metrics(&self, metrics: &crate::metrics::Metrics, prefix: &str) {
         metrics
             .gauge(&format!("{prefix}.system_allocs"))
@@ -375,6 +418,7 @@ impl ShardedMultiPool {
             .set((self.pool_hit_rate() * 100.0) as i64);
         let mut rehomes = 0u64;
         let mut drained = 0u64;
+        let mut mags = MagazineStats::default();
         for ci in 0..self.classes.len() {
             let size = self.class_sizes[ci];
             metrics
@@ -386,9 +430,22 @@ impl ShardedMultiPool {
             let s = self.classes[ci].export_metrics(metrics, &format!("{prefix}.c{size}"));
             rehomes += s.total_rehomes();
             drained += s.total_stash_drained();
+            mags.absorb(&s.magazines);
         }
         metrics.gauge(&format!("{prefix}.rehomes_total")).set(rehomes as i64);
         metrics.gauge(&format!("{prefix}.rehome_drained_total")).set(drained as i64);
+        metrics
+            .gauge(&format!("{prefix}.magazine_hits_total"))
+            .set(mags.hits as i64);
+        metrics
+            .gauge(&format!("{prefix}.magazine_refills_total"))
+            .set(mags.refills as i64);
+        metrics
+            .gauge(&format!("{prefix}.magazine_flushes_total"))
+            .set(mags.flushes as i64);
+        metrics
+            .gauge(&format!("{prefix}.magazine_cached"))
+            .set(mags.cached as i64);
     }
 }
 
@@ -397,7 +454,13 @@ mod tests {
     use super::*;
 
     fn cfg_small() -> MultiPoolConfig {
-        MultiPoolConfig { min_class: 16, max_class: 256, blocks_per_class: 8, system_fallback: true }
+        MultiPoolConfig {
+            min_class: 16,
+            max_class: 256,
+            blocks_per_class: 8,
+            system_fallback: true,
+            magazine_depth: DEFAULT_MAG_DEPTH,
+        }
     }
 
     #[test]
@@ -522,6 +585,7 @@ mod tests {
                 max_class: 256,
                 blocks_per_class: 512,
                 system_fallback: false,
+                magazine_depth: DEFAULT_MAG_DEPTH,
             },
             4,
         );
@@ -583,6 +647,48 @@ mod tests {
         let r = m.report();
         assert!(r.contains("pool.x.rehomes_total = 0"), "{r}");
         assert!(r.contains("pool.x.rehome_drained_total = 0"), "{r}");
+    }
+
+    #[test]
+    fn magazine_mode_is_default_and_uncached_opt_out_works() {
+        let cached = ShardedMultiPool::with_shards(cfg_small(), 2);
+        assert!(cached.magazines_enabled(), "cached mode is the default");
+        // Warm one class with a pair loop: hits accumulate CAS-free.
+        for _ in 0..64 {
+            let (p, o) = cached.allocate(20).unwrap();
+            unsafe { cached.deallocate(p, 20, o) };
+        }
+        let ms = cached.magazine_stats();
+        assert!(ms.hits > 0, "pairs must ride the magazine: {ms:?}");
+        assert!(ms.refills >= 1);
+        assert!(ms.cached > 0, "a warm magazine stays loaded");
+        // Flushing a live thread's magazine is not maintenance's job...
+        assert_eq!(cached.flush_stale_magazines(), 0);
+        // ...and per-class free accounting still sees every block.
+        let s = cached.class_shard_stats(1); // 32 B class took the traffic
+        assert_eq!(s.num_free(), 8);
+
+        let mut cfg = cfg_small();
+        cfg.magazine_depth = 0;
+        let bare = ShardedMultiPool::with_shards(cfg, 2);
+        assert!(!bare.magazines_enabled());
+        let (p, o) = bare.allocate(20).unwrap();
+        unsafe { bare.deallocate(p, 20, o) };
+        assert_eq!(bare.magazine_stats(), MagazineStats::default());
+    }
+
+    #[test]
+    fn magazine_gauges_exported() {
+        let mp = ShardedMultiPool::with_shards(cfg_small(), 2);
+        let (p, o) = mp.allocate(20).unwrap();
+        unsafe { mp.deallocate(p, 20, o) };
+        let m = crate::metrics::Metrics::new();
+        mp.export_metrics(&m, "pool.serving");
+        let r = m.report();
+        assert!(r.contains("pool.serving.magazine_hits_total"), "{r}");
+        assert!(r.contains("pool.serving.magazine_refills_total"), "{r}");
+        assert!(r.contains("pool.serving.magazine_cached"), "{r}");
+        assert!(r.contains("pool.serving.c32.magazine_refills = 1"), "{r}");
     }
 
     #[test]

@@ -81,9 +81,12 @@
 //! ### Memory accounting (the concurrency tax, itemised)
 //!
 //! * 4 bytes/block side tables (inherited from `AtomicPool`).
-//! * Two cache lines of counters per shard (the hit/steal/free tallies
-//!   plus the stash head, the adaptive batch width and the rehome
-//!   window/drain counters — 84 payload bytes, aligned up to 128).
+//! * Three cache lines of counters per shard: the hit/steal/free tallies
+//!   and rehome window on the first two, and the steal-stash head —
+//!   CASed by arbitrary threads — isolated on its own trailing line so
+//!   cross-thread stash traffic never invalidates the owner's tally
+//!   lines. Shards themselves are `CachePadded` for the same reason: two
+//!   Treiber heads must never share a line.
 //! * **Home map**: 8 bytes per home slot (`MAX_HOME_SLOTS` entries) for
 //!   the generation-stamped slot→shard routing, plus a `shards²`-entry
 //!   window matrix for the per-victim steal profile. Both are fixed-size
@@ -126,9 +129,10 @@ use std::sync::Arc;
 use super::atomic::AtomicPool;
 use super::placement::{ShardPlacement, StealAware};
 use super::raw::{mod_inverse_u64, MIN_BLOCK_SIZE};
-use super::stats::{ShardStats, ShardedPoolStats};
+use super::stats::{MagazineStats, ShardStats, ShardedPoolStats};
 use crate::metrics::Metrics;
 use crate::util::align::{align_up, next_pow2};
+use crate::util::CachePadded;
 
 // ---------------------------------------------------------------------------
 // Process-wide home-slot registry: a recyclable free-list over a fixed
@@ -145,8 +149,9 @@ pub const MAX_HOME_SLOTS: usize = 256;
 const SLOT_NIL: u32 = u32::MAX;
 
 /// High bit of a TLS slot word: the slot is shared (overflow or acquired
-/// during thread teardown) — never recycled, excluded from rehoming.
-const SLOT_SHARED_BIT: u32 = 1 << 31;
+/// during thread teardown) — never recycled, excluded from rehoming (and
+/// from the per-thread magazine layer, which needs exclusive slots).
+pub(crate) const SLOT_SHARED_BIT: u32 = 1 << 31;
 
 /// TLS sentinel: no slot acquired yet.
 const HOME_UNSET: u64 = u64::MAX;
@@ -231,8 +236,12 @@ fn overflow_slot() -> u32 {
 fn release_slot(slot: u32) {
     debug_assert!((slot as usize) < MAX_HOME_SLOTS);
     // Generation first: the release-CAS below publishes it to the next
-    // acquirer, which is what keeps recycled ids race-free.
-    SLOT_GEN[slot as usize].fetch_add(1, Ordering::Relaxed);
+    // acquirer, which is what keeps recycled ids race-free. The bump is
+    // Release so that a *reclaimer* (not the next acquirer) observing the
+    // new generation via [`slot_generation`]'s Acquire load also sees
+    // every per-slot write — e.g. magazine contents — the dead thread
+    // made before exiting.
+    SLOT_GEN[slot as usize].fetch_add(1, Ordering::Release);
     let mut cur = SLOT_FREE_HEAD.load(Ordering::Acquire);
     loop {
         let (head, tag) = unpack(cur);
@@ -282,6 +291,23 @@ fn init_home_slot(h: &Cell<u64>, teardown: bool) -> (u32, u32) {
     (flagged, gen)
 }
 
+/// This thread's `(slot_with_flags, generation)` — shared with the
+/// magazine layer, so shard routing and the per-thread block cache key
+/// off the same home-slot lease (one TLS read serves both).
+#[inline]
+pub(crate) fn current_slot() -> (u32, u32) {
+    home_slot()
+}
+
+/// Current generation of a home slot. Acquire: pairs with the Release
+/// bump in `release_slot`, so a reclaimer that observes a newer
+/// generation than a cached owner stamp also sees every per-slot write
+/// the exited owner made (the magazine layer's stale-flush relies on
+/// this edge).
+pub(crate) fn slot_generation(slot: usize) -> u32 {
+    SLOT_GEN[slot & (MAX_HOME_SLOTS - 1)].load(Ordering::Acquire)
+}
+
 /// Highest number of home-slot ids ever live at once (clamped to the
 /// arena). Flat across thread churn — the recycling proof the stress
 /// suite asserts.
@@ -327,10 +353,27 @@ const fn unpack(v: u64) -> (u32, u32) {
     (v as u32, (v >> 32) as u32)
 }
 
-/// Per-shard counters plus the home slot's steal-stash head, adaptive
-/// batch width and rehome window, cache-line separated so a hot shard's
-/// updates do not false-share with its neighbours.
-#[repr(align(64))]
+/// The steal-stash head for one home slot, on its own cache line.
+///
+/// The head is CASed by *arbitrary* threads (batch imports, raids,
+/// drains) while the owning home's tally counters are bumped by the
+/// threads homed there — co-locating them made every cross-thread stash
+/// CAS invalidate the owner's hot counter line (false sharing). `repr(C,
+/// align(64))` on both structs keeps the stash line private.
+#[repr(C, align(64))]
+struct StashLine {
+    /// Steal-stash head: packed (grid index | GRID_NIL, ABA tag).
+    head: AtomicU64,
+    /// Blocks currently parked in this home's stash.
+    count: AtomicU32,
+}
+
+/// Per-shard counters plus the home slot's steal stash, adaptive batch
+/// width and rehome window. `repr(C, align(64))` with the stash on its
+/// own trailing line: the tally fields (written by threads homed here)
+/// never share a line with the stash head (CASed by any thread) or with
+/// a neighbouring shard's counters.
+#[repr(C, align(64))]
 struct ShardCounters {
     /// Allocations served by this shard for threads homed on it.
     local_hits: AtomicU64,
@@ -344,18 +387,17 @@ struct ShardCounters {
     failures: AtomicU64,
     /// Frees routed to this shard by pointer decode.
     frees: AtomicU64,
-    /// Steal-stash head: packed (grid index | GRID_NIL, ABA tag).
-    stash_head: AtomicU64,
-    /// Blocks currently parked in this home's stash.
-    stash_count: AtomicU32,
-    /// Adaptive steal batch k ∈ [1, MAX_STEAL_BATCH].
-    steal_batch: AtomicU32,
-    /// Allocations in the current rehome-decision window.
-    win_ops: AtomicU32,
     /// Threads rehomed away from this shard by the placement policy.
     rehomes: AtomicU64,
     /// Stash blocks returned to their owning shards by drains.
     stash_drained: AtomicU64,
+    /// Adaptive steal batch k ∈ [1, MAX_STEAL_BATCH].
+    steal_batch: AtomicU32,
+    /// Allocations in the current rehome-decision window.
+    win_ops: AtomicU32,
+    /// The cross-thread-CASed stash head, on its own line (align(64)
+    /// pushes it past the tally fields above).
+    stash: StashLine,
 }
 
 impl ShardCounters {
@@ -367,12 +409,14 @@ impl ShardCounters {
             stash_hits: AtomicU64::new(0),
             failures: AtomicU64::new(0),
             frees: AtomicU64::new(0),
-            stash_head: AtomicU64::new(pack(GRID_NIL, 0)),
-            stash_count: AtomicU32::new(0),
-            steal_batch: AtomicU32::new(1),
-            win_ops: AtomicU32::new(0),
             rehomes: AtomicU64::new(0),
             stash_drained: AtomicU64::new(0),
+            steal_batch: AtomicU32::new(1),
+            win_ops: AtomicU32::new(0),
+            stash: StashLine {
+                head: AtomicU64::new(pack(GRID_NIL, 0)),
+                count: AtomicU32::new(0),
+            },
         }
     }
 }
@@ -381,7 +425,10 @@ impl ShardCounters {
 ///
 /// `Sync`: share by reference or `Arc`; all operations take `&self`.
 pub struct ShardedPool {
-    shards: Box<[AtomicPool]>,
+    /// Each shard on its own cache line: the Treiber head inside an
+    /// `AtomicPool` is the hottest CAS word in the pool, and packing
+    /// shards back-to-back would false-share neighbouring heads.
+    shards: Box<[CachePadded<AtomicPool>]>,
     counters: Box<[ShardCounters]>,
     /// Stash next-links, indexed by grid index (shard << stride_shift |
     /// local). Side table for the same reason as `AtomicPool::next`: a
@@ -505,7 +552,9 @@ impl ShardedPool {
             // are disjoint and each shard gets exclusive use of its own.
             let shard_base =
                 unsafe { NonNull::new_unchecked(region.as_ptr().add(i * shard_bytes)) };
-            pools.push(unsafe { AtomicPool::over_region(shard_base, bs, count) });
+            pools.push(CachePadded::new(unsafe {
+                AtomicPool::over_region(shard_base, bs, count)
+            }));
             counters.push(ShardCounters::new());
         }
 
@@ -547,9 +596,11 @@ impl ShardedPool {
         }
     }
 
-    /// Pointer for a grid index (shard << stride_shift | local).
+    /// Pointer for a grid index (shard << stride_shift | local). Shared
+    /// with the magazine layer, which caches grid indices and converts on
+    /// the way out — one multiply+add, no atomics.
     #[inline(always)]
-    fn grid_to_ptr(&self, grid: u32) -> NonNull<u8> {
+    pub(crate) fn grid_to_ptr(&self, grid: u32) -> NonNull<u8> {
         // SAFETY: grid indices come from shard geometry; the offset lies
         // inside the owned region.
         unsafe {
@@ -557,6 +608,17 @@ impl ShardedPool {
                 self.mem_start.as_ptr().add(grid as usize * self.block_size),
             )
         }
+    }
+
+    /// Grid index for a block pointer of this pool — the §Perf exact
+    /// division (shift + multiplicative inverse, no hardware divide).
+    /// Inverse of [`Self::grid_to_ptr`]; `p` must be a block of this
+    /// pool.
+    #[inline(always)]
+    pub(crate) fn ptr_to_grid(&self, p: NonNull<u8>) -> u32 {
+        debug_assert!(self.contains(p), "ptr_to_grid: {p:p} is not a block of this pool");
+        let off = (p.as_ptr() as usize - self.mem_start.as_ptr() as usize) as u64;
+        ((off >> self.div_shift).wrapping_mul(self.div_inv)) as u32
     }
 
     /// Effective home shard for `(slot, gen)` from [`home_slot`].
@@ -670,21 +732,21 @@ impl ShardedPool {
     /// Pop one grid index off `slot`'s steal stash (Treiber, tag-guarded).
     fn stash_pop(&self, slot: usize) -> Option<u32> {
         let c = &self.counters[slot];
-        let mut cur = c.stash_head.load(Ordering::Acquire);
+        let mut cur = c.stash.head.load(Ordering::Acquire);
         loop {
             let (grid, tag) = unpack(cur);
             if grid == GRID_NIL {
                 return None;
             }
             let nxt = self.steal_next[grid as usize].load(Ordering::Relaxed);
-            match c.stash_head.compare_exchange_weak(
+            match c.stash.head.compare_exchange_weak(
                 cur,
                 pack(nxt, tag.wrapping_add(1)),
                 Ordering::AcqRel,
                 Ordering::Acquire,
             ) {
                 Ok(_) => {
-                    c.stash_count.fetch_sub(1, Ordering::Relaxed);
+                    c.stash.count.fetch_sub(1, Ordering::Relaxed);
                     return Some(grid);
                 }
                 Err(actual) => cur = actual,
@@ -702,18 +764,18 @@ impl ShardedPool {
         let first = grids[0];
         let last = *grids.last().unwrap();
         let c = &self.counters[slot];
-        let mut cur = c.stash_head.load(Ordering::Acquire);
+        let mut cur = c.stash.head.load(Ordering::Acquire);
         loop {
             let (head, tag) = unpack(cur);
             self.steal_next[last as usize].store(head, Ordering::Relaxed);
-            match c.stash_head.compare_exchange_weak(
+            match c.stash.head.compare_exchange_weak(
                 cur,
                 pack(first, tag.wrapping_add(1)),
                 Ordering::AcqRel,
                 Ordering::Acquire,
             ) {
                 Ok(_) => {
-                    c.stash_count.fetch_add(grids.len() as u32, Ordering::Relaxed);
+                    c.stash.count.fetch_add(grids.len() as u32, Ordering::Relaxed);
                     return;
                 }
                 Err(actual) => cur = actual,
@@ -814,6 +876,67 @@ impl ShardedPool {
         None
     }
 
+    /// Bulk allocate for the magazine layer: detach up to `want` blocks
+    /// from the *home* shard's free list in one chain CAS (plus a
+    /// watermark top-up), writing their **grid indices** into `out` and
+    /// returning the count. Returns 0 when the home shard is dry — the
+    /// caller falls back to [`Self::allocate`], whose steal scan already
+    /// batch-amortises cross-shard traffic.
+    ///
+    /// Counts the whole batch as home local hits, but charges the rehome
+    /// window only **once**: a magazine refill is one routing decision,
+    /// so the `StealAware` policy sees refills, not individual blocks,
+    /// and its window thresholds keep their meaning under caching.
+    pub(crate) fn allocate_grids(&self, want: u32, out: &mut [u32]) -> u32 {
+        debug_assert!(want as usize <= out.len());
+        let (slot, gen) = home_slot();
+        let home = self.resolve_home(slot, gen);
+        let got = self.shards[home].allocate_batch(want, out);
+        if got == 0 {
+            return 0;
+        }
+        let c = &self.counters[home];
+        c.local_hits.fetch_add(got as u64, Ordering::Relaxed);
+        // Local supply: decay the steal batch exactly like a local hit.
+        let k = c.steal_batch.load(Ordering::Relaxed);
+        if k > 1 {
+            c.steal_batch.store(k / 2, Ordering::Relaxed);
+        }
+        let base = (home as u32) << self.stride_shift;
+        for g in out[..got as usize].iter_mut() {
+            *g += base;
+        }
+        self.note_window(slot, gen, home, home);
+        got
+    }
+
+    /// Bulk deallocate for the magazine layer: return a set of grid
+    /// indices to their owning shards, one pre-linked chain and **one**
+    /// head CAS per shard touched (via
+    /// [`AtomicPool::deallocate_indices`]) instead of one CAS per block.
+    /// Sorting groups the grids by shard (shard = grid >> stride_shift),
+    /// which is also why the slice is taken `&mut`.
+    pub(crate) fn deallocate_grids(&self, grids: &mut [u32]) {
+        if grids.is_empty() {
+            return;
+        }
+        grids.sort_unstable();
+        let mut i = 0;
+        while i < grids.len() {
+            let shard = (grids[i] >> self.stride_shift) as usize;
+            let mut j = i + 1;
+            while j < grids.len() && (grids[j] >> self.stride_shift) as usize == shard {
+                j += 1;
+            }
+            for g in grids[i..j].iter_mut() {
+                *g = (*g as u64 & self.stride_mask) as u32;
+            }
+            self.shards[shard].deallocate_indices(&grids[i..j]);
+            self.counters[shard].frees.fetch_add((j - i) as u64, Ordering::Relaxed);
+            i = j;
+        }
+    }
+
     /// Lock-free deallocate. O(1): the owning shard is decoded from the
     /// pointer offset with shift + multiplicative-inverse exact division —
     /// no hardware divide, no shard id stored in the block.
@@ -822,12 +945,9 @@ impl ShardedPool {
     /// `p` must come from `allocate` on this pool, freed at most once.
     #[inline]
     pub unsafe fn deallocate(&self, p: NonNull<u8>) {
-        debug_assert!(self.contains(p), "deallocate: {p:p} is not a block of this pool");
-        let off = (p.as_ptr() as usize - self.mem_start.as_ptr() as usize) as u64;
-        // Exact division by block_size (offsets are block multiples).
-        let grid = (off >> self.div_shift).wrapping_mul(self.div_inv);
+        let grid = self.ptr_to_grid(p);
         let shard = (grid >> self.stride_shift) as usize;
-        let local = (grid & self.stride_mask) as u32;
+        let local = (grid as u64 & self.stride_mask) as u32;
         self.shards[shard].deallocate_index(local);
         self.counters[shard].frees.fetch_add(1, Ordering::Relaxed);
     }
@@ -882,7 +1002,7 @@ impl ShardedPool {
     /// stashes (exact when quiescent).
     pub fn num_free(&self) -> u32 {
         self.shards.iter().map(|s| s.num_free()).sum::<u32>()
-            + self.counters.iter().map(|c| c.stash_count.load(Ordering::Relaxed)).sum::<u32>()
+            + self.counters.iter().map(|c| c.stash.count.load(Ordering::Relaxed)).sum::<u32>()
     }
 
     pub fn region_start(&self) -> usize {
@@ -924,7 +1044,7 @@ impl ShardedPool {
                 steals: c.steals.load(Ordering::Relaxed),
                 steal_scans: c.steal_scans.load(Ordering::Relaxed),
                 stash_hits: c.stash_hits.load(Ordering::Relaxed),
-                stash_free: c.stash_count.load(Ordering::Relaxed),
+                stash_free: c.stash.count.load(Ordering::Relaxed),
                 failed_allocs: c.failures.load(Ordering::Relaxed),
                 frees: c.frees.load(Ordering::Relaxed),
                 rehomes: c.rehomes.load(Ordering::Relaxed),
@@ -935,6 +1055,9 @@ impl ShardedPool {
             block_size: self.block_size,
             num_blocks: self.num_blocks,
             per_shard,
+            // The bare sharded pool has no per-thread cache; the magazine
+            // layer overwrites this in `MagazinePool::stats`.
+            magazines: MagazineStats::default(),
         }
     }
 
@@ -1180,12 +1303,12 @@ mod tests {
         let p = ShardedPool::with_shards(16, 16, 4);
         // Mechanics only: park grid indices in slot 0's stash and pop.
         p.stash_push_chain(0, &[8, 9, 10]);
-        assert_eq!(p.counters[0].stash_count.load(Ordering::Relaxed), 3);
+        assert_eq!(p.counters[0].stash.count.load(Ordering::Relaxed), 3);
         assert_eq!(p.stash_pop(0), Some(8));
         assert_eq!(p.stash_pop(0), Some(9));
         assert_eq!(p.stash_pop(0), Some(10));
         assert_eq!(p.stash_pop(0), None);
-        assert_eq!(p.counters[0].stash_count.load(Ordering::Relaxed), 0);
+        assert_eq!(p.counters[0].stash.count.load(Ordering::Relaxed), 0);
     }
 
     #[test]
@@ -1231,6 +1354,52 @@ mod tests {
             "drained block back on its owning shard's free list"
         );
         assert_eq!(p.drain_stashes(), 0, "idempotent when empty");
+    }
+
+    #[test]
+    fn grid_roundtrip_and_bulk_grid_paths() {
+        // ptr↔grid must invert exactly on odd block sizes (exact-division
+        // decode), and the magazine-facing bulk paths must conserve.
+        let p = ShardedPool::with_shards(24, 16, 4);
+        let a = p.allocate().unwrap();
+        let g = p.ptr_to_grid(a);
+        assert_eq!(p.grid_to_ptr(g).as_ptr(), a.as_ptr());
+        unsafe { p.deallocate(a) };
+
+        // Bulk allocate from the caller's home shard only.
+        let mut out = [0u32; 8];
+        let got = p.allocate_grids(4, &mut out);
+        assert!((1..=4).contains(&got), "home shard holds 4 blocks: {got}");
+        let home = p.current_home();
+        for &g in &out[..got as usize] {
+            assert_eq!((g >> p.stride_shift) as usize, home, "grids are home-local");
+            assert!(p.contains(p.grid_to_ptr(g)));
+        }
+        // Bulk free returns them as per-shard chains; counts stay exact.
+        let frees_before = p.stats().total_frees();
+        p.deallocate_grids(&mut out[..got as usize]);
+        assert_eq!(p.stats().total_frees(), frees_before + got as u64);
+        assert_eq!(p.num_free(), 16);
+        // The whole pool still hands out every block exactly once.
+        let mut seen = BTreeSet::new();
+        while let Some(a) = p.allocate() {
+            assert!(seen.insert(a.as_ptr() as usize));
+        }
+        assert_eq!(seen.len(), 16);
+    }
+
+    #[test]
+    fn deallocate_grids_groups_cross_shard_chains() {
+        // Hand-build a mixed-shard grid set: deallocate_grids must route
+        // every block to its owning shard (one chain per shard).
+        let p = ShardedPool::with_shards(16, 16, 4); // stride 4
+        let held: Vec<_> = (0..16).map(|_| p.allocate().unwrap()).collect();
+        let mut grids: Vec<u32> = held.iter().map(|a| p.ptr_to_grid(*a)).collect();
+        p.deallocate_grids(&mut grids);
+        assert_eq!(p.num_free(), 16);
+        for (i, s) in p.shards.iter().enumerate() {
+            assert_eq!(s.num_free(), 4, "shard {i} must get its own blocks back");
+        }
     }
 
     #[test]

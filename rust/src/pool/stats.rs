@@ -100,6 +100,78 @@ pub struct ShardStats {
     pub stash_drained: u64,
 }
 
+/// Per-thread magazine-layer accounting, aggregated over a pool's whole
+/// magazine rack (one slot per home-slot lease). All counters are
+/// single-writer (the owning thread) with relaxed mirrors, so they are
+/// exact at quiescence — same contract as the shard counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MagazineStats {
+    /// Allocations served CAS-free from a thread's loaded/previous
+    /// magazines — the hot-path wins the layer exists for.
+    pub hits: u64,
+    /// Bulk refills pulled from the shared pool (each is ~1 chain CAS).
+    pub refills: u64,
+    /// Blocks moved into magazines by refills.
+    pub refilled_blocks: u64,
+    /// Magazine flushes returned to the shared pool (each is ~1 chain
+    /// CAS per shard touched).
+    pub flushes: u64,
+    /// Blocks moved out of magazines by flushes.
+    pub flushed_blocks: u64,
+    /// Blocks currently cached in magazines. These count as free: they
+    /// are reachable via their owner's fast path, stale-reclaim, or a
+    /// maintenance flush.
+    pub cached: u32,
+    /// Magazine slots currently bound to a live thread.
+    pub active_slots: u32,
+    /// Sum of live slots' adaptive depths (see [`Self::avg_depth`]).
+    pub depth_sum: u64,
+}
+
+impl MagazineStats {
+    /// Mean adaptive magazine depth across live slots.
+    pub fn avg_depth(&self) -> f64 {
+        if self.active_slots == 0 {
+            0.0
+        } else {
+            self.depth_sum as f64 / self.active_slots as f64
+        }
+    }
+
+    /// Amortisation headline: CAS-free hits per shared-pool refill — the
+    /// "ops per magazine" the acceptance bench asserts on.
+    pub fn hits_per_refill(&self) -> f64 {
+        if self.refills == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.refills as f64
+        }
+    }
+
+    /// Fraction of magazine-eligible allocations served CAS-free.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.refills;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// Accumulate another rack's counters (cross-class aggregation in
+    /// `ShardedMultiPool`).
+    pub fn absorb(&mut self, o: &MagazineStats) {
+        self.hits += o.hits;
+        self.refills += o.refills;
+        self.refilled_blocks += o.refilled_blocks;
+        self.flushes += o.flushes;
+        self.flushed_blocks += o.flushed_blocks;
+        self.cached += o.cached;
+        self.active_slots += o.active_slots;
+        self.depth_sum += o.depth_sum;
+    }
+}
+
 /// Point-in-time snapshot of a `ShardedPool`'s per-shard accounting — the
 /// sharded layer's "concurrency tax" report (steal rate ≈ how often the
 /// core-local fast path missed).
@@ -108,6 +180,8 @@ pub struct ShardedPoolStats {
     pub block_size: usize,
     pub num_blocks: u32,
     pub per_shard: Vec<ShardStats>,
+    /// Magazine-layer accounting (all-zero for a bare `ShardedPool`).
+    pub magazines: MagazineStats,
 }
 
 impl ShardedPoolStats {
@@ -170,9 +244,12 @@ impl ShardedPoolStats {
         }
     }
 
-    /// Free blocks: shard free lists plus blocks parked in steal stashes.
+    /// Free blocks: shard free lists, blocks parked in steal stashes,
+    /// and blocks cached in per-thread magazines.
     pub fn num_free(&self) -> u32 {
-        self.per_shard.iter().map(|s| s.num_free).sum::<u32>() + self.total_stash_free()
+        self.per_shard.iter().map(|s| s.num_free).sum::<u32>()
+            + self.total_stash_free()
+            + self.magazines.cached
     }
 
     /// Fraction of successful allocations that crossed shards (stash hits
@@ -201,7 +278,7 @@ impl ShardedPoolStats {
     /// One-line human-readable report.
     pub fn report(&self) -> String {
         format!(
-            "shards {} | blocks {}x{}B | allocs {} ({} stolen over {} scans, avg batch {:.1}, {:.2}% cross-shard) | fails {} | free {} ({} stashed)",
+            "shards {} | blocks {}x{}B | allocs {} ({} stolen over {} scans, avg batch {:.1}, {:.2}% cross-shard) | fails {} | free {} ({} stashed, {} magazined) | mag {} hits / {} refills",
             self.per_shard.len(),
             self.num_blocks,
             self.block_size,
@@ -213,6 +290,9 @@ impl ShardedPoolStats {
             self.total_failed(),
             self.num_free(),
             self.total_stash_free(),
+            self.magazines.cached,
+            self.magazines.hits,
+            self.magazines.refills,
         )
     }
 }
@@ -296,6 +376,7 @@ mod tests {
                     stash_drained: 0,
                 },
             ],
+            magazines: MagazineStats::default(),
         };
         // allocs = local (8) + stash hits (1) + scan returns (1).
         assert_eq!(s.total_allocs(), 10);
@@ -339,6 +420,7 @@ mod tests {
                 rehomes: 1,
                 stash_drained: 3,
             }],
+            magazines: MagazineStats::default(),
         };
         assert_eq!(
             s.total_steals(),
@@ -352,8 +434,50 @@ mod tests {
 
     #[test]
     fn sharded_empty_no_div_by_zero() {
-        let s = ShardedPoolStats { block_size: 16, num_blocks: 0, per_shard: vec![] };
+        let s = ShardedPoolStats {
+            block_size: 16,
+            num_blocks: 0,
+            per_shard: vec![],
+            magazines: MagazineStats::default(),
+        };
         assert_eq!(s.steal_rate(), 0.0);
         assert_eq!(s.total_allocs(), 0);
+    }
+
+    #[test]
+    fn magazine_rates_and_absorb() {
+        let mut a = MagazineStats {
+            hits: 90,
+            refills: 10,
+            refilled_blocks: 80,
+            flushes: 4,
+            flushed_blocks: 32,
+            cached: 6,
+            active_slots: 2,
+            depth_sum: 24,
+        };
+        assert!((a.hits_per_refill() - 9.0).abs() < 1e-12);
+        assert!((a.hit_rate() - 0.9).abs() < 1e-12);
+        assert!((a.avg_depth() - 12.0).abs() < 1e-12);
+        let zero = MagazineStats::default();
+        assert_eq!(zero.hits_per_refill(), 0.0);
+        assert_eq!(zero.hit_rate(), 0.0);
+        assert_eq!(zero.avg_depth(), 0.0);
+        a.absorb(&MagazineStats { hits: 10, cached: 2, ..Default::default() });
+        assert_eq!(a.hits, 100);
+        assert_eq!(a.cached, 8);
+    }
+
+    #[test]
+    fn magazine_cached_counts_as_free() {
+        let s = ShardedPoolStats {
+            block_size: 16,
+            num_blocks: 8,
+            per_shard: vec![ShardStats { num_blocks: 8, num_free: 3, ..Default::default() }],
+            magazines: MagazineStats { cached: 5, ..Default::default() },
+        };
+        assert_eq!(s.num_free(), 8, "magazine-cached blocks are free blocks");
+        let r = s.report();
+        assert!(r.contains("5 magazined"), "{r}");
     }
 }

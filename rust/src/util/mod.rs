@@ -4,12 +4,14 @@
 //! which are unavailable in the offline build environment.
 
 pub mod align;
+pub mod cache;
 pub mod histogram;
 pub mod json;
 pub mod rng;
 pub mod stats;
 pub mod time;
 
+pub use cache::CachePadded;
 pub use histogram::LogHistogram;
 pub use rng::{Rng, SplitMix64, Zipf};
 pub use stats::{geomean, percentile_sorted, Summary, Welford};

@@ -68,6 +68,13 @@ fn steady_state_decode_step_makes_zero_system_allocator_calls() {
     assert_eq!(e.num_running(), 4, "all requests must be in steady decode");
     assert_eq!(e.num_waiting(), 0);
 
+    // The serving arm runs in cached (magazine) mode by default — the
+    // zero below is therefore also the CAS-free hot path's zero.
+    assert!(
+        e.pool().multi().expect("default engine is pool-backed").magazines_enabled(),
+        "serving arm must default to cached mode"
+    );
+
     let a0 = ALLOC_CALLS.load(Ordering::SeqCst);
     let d0 = DEALLOC_CALLS.load(Ordering::SeqCst);
     for _ in 0..20 {
@@ -82,6 +89,11 @@ fn steady_state_decode_step_makes_zero_system_allocator_calls() {
         "steady-state decode steps must not call the system allocator"
     );
     assert_eq!(frees, 0, "steady-state decode steps must not free to it either");
+    let ms = e.pool().multi().unwrap().magazine_stats();
+    assert!(
+        ms.hits + ms.refills > 0,
+        "admission/KV pool traffic must ride the magazine layer: {ms:?}"
+    );
 
     // The window crossed a KV block boundary (tokens 13 → 33 passes 17
     // and 33), so pool-backed growth was exercised, not idled around.

@@ -14,8 +14,8 @@ use std::ptr::NonNull;
 use std::sync::{Arc, Mutex};
 
 use fastpool::pool::{
-    home_slot_epoch, home_slots_high_water, AtomicPool, Pinned, RoundRobin, ShardPlacement,
-    ShardedPool, StealAware,
+    home_slot_epoch, home_slots_high_water, AtomicPool, MagazinePool, Pinned, RoundRobin,
+    ShardPlacement, ShardedPool, StealAware,
 };
 use fastpool::testkit::skew::{run_skewed_affinity, SkewConfig};
 use fastpool::util::Rng;
@@ -389,6 +389,113 @@ fn skewed_affinity_rehoming_beats_static_placement() {
     // Sanity: the same RoundRobin policy type used by default pools keeps
     // its name distinct for the report.
     assert_eq!(RoundRobin.place(9, 8), 1);
+}
+
+// ---------------------------------------------------------------------------
+// Magazine layer (S6): the CAS-free per-thread cache must preserve S1/S2
+// under churn AND under random thread exits — exited threads' magazines
+// count as free, drain back on maintenance, and can never strand blocks.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn magazine_pool_churn_unique_and_exact() {
+    let pool = MagazinePool::with_shards(64, 256, 4, 8);
+    let n = churn_with_live_set(
+        THREADS,
+        10_000,
+        || pool.allocate(),
+        |p| unsafe { pool.deallocate(p) },
+    );
+    assert!(n > 0);
+    // Workers exited holding nothing, but their magazines stayed warm:
+    // cached blocks must count as free for exact conservation.
+    assert_eq!(pool.num_free(), 256, "S2 incl. magazine-cached blocks");
+    let ms = pool.stats().magazines;
+    assert!(ms.hits > 0, "churn must ride the CAS-free fast path: {ms:?}");
+    // Maintenance returns exactly the stale magazines' blocks.
+    let cached = ms.cached;
+    assert_eq!(pool.flush_stale_magazines(), cached);
+    assert_eq!(pool.stats().magazines.cached, 0, "exited magazines drain back");
+    assert_eq!(pool.shared().num_free(), 256);
+    // And the full pool is still allocatable exactly once.
+    let mut seen = BTreeSet::new();
+    while let Some(p) = pool.allocate() {
+        assert!(seen.insert(p.as_ptr() as usize), "S1 after magazine churn");
+    }
+    assert_eq!(seen.len(), 256);
+}
+
+#[test]
+fn magazine_conservation_across_random_thread_exits() {
+    // Waves of threads with staggered lifetimes (op counts vary per
+    // worker, so exits land at random points of the churn). Quiescence
+    // after every wave must be block-exact WITHOUT any drain having run,
+    // and the final maintenance flush must account for every cached
+    // block.
+    let pool = MagazinePool::with_shards(32, 128, 4, 8);
+    const WAVES: usize = 12;
+    const PER_WAVE: usize = 6;
+    for wave in 0..WAVES {
+        std::thread::scope(|s| {
+            for t in 0..PER_WAVE {
+                let pool = &pool;
+                s.spawn(move || {
+                    let mut rng = Rng::new((wave * PER_WAVE + t) as u64 + 5);
+                    // Staggered exit: between 100 and 1300 ops.
+                    let ops = 100 + 400 * ((wave + t) % 4);
+                    let mut held: Vec<usize> = Vec::new();
+                    for _ in 0..ops {
+                        if held.is_empty() || rng.gen_bool(0.55) {
+                            if let Some(p) = pool.allocate() {
+                                held.push(p.as_ptr() as usize);
+                            }
+                        } else {
+                            let i = rng.gen_usize(0, held.len());
+                            let addr = held.swap_remove(i);
+                            unsafe {
+                                pool.deallocate(NonNull::new_unchecked(addr as *mut u8))
+                            };
+                        }
+                    }
+                    for addr in held {
+                        unsafe {
+                            pool.deallocate(NonNull::new_unchecked(addr as *mut u8))
+                        };
+                    }
+                });
+            }
+        });
+        assert_eq!(
+            pool.num_free(),
+            128,
+            "wave {wave}: conservation incl. exited threads' magazines"
+        );
+    }
+    // Steal conservation is untouched by refill/flush traffic.
+    let s = pool.stats();
+    assert_eq!(
+        s.total_steals(),
+        s.total_steal_scans()
+            + s.total_stash_hits()
+            + s.total_stash_drained()
+            + s.total_stash_free() as u64,
+        "stolen-block conservation under the magazine flush paths"
+    );
+    assert!(s.magazines.hits > 0);
+    // Maintenance: drain stashes + flush stale magazines → everything
+    // back on shard free lists, pull/return balanced.
+    pool.drain_stashes();
+    pool.flush_stale_magazines();
+    let s = pool.stats();
+    assert_eq!(s.magazines.cached, 0, "exited threads' magazines drained back");
+    assert_eq!(s.total_stash_free(), 0);
+    assert_eq!(s.total_allocs(), s.total_frees(), "exact pull/return balance");
+    assert_eq!(pool.shared().num_free(), 128);
+    let mut drained = 0;
+    while pool.allocate().is_some() {
+        drained += 1;
+    }
+    assert_eq!(drained, 128, "whole pool reachable after churn + maintenance");
 }
 
 #[test]
