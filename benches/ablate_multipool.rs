@@ -1,12 +1,21 @@
 //! **Ablation A5** — the §V ad-hoc hybrid: mixed-size workloads through
-//! `MultiPool` (size classes + system fallback) vs straight malloc.
-//! Reports speed, hit rate, and internal waste — the §VI trade-off.
+//! `MultiPool` (sorted class table + spill + system fallback) vs straight
+//! malloc. Reports speed, hit rate, and internal waste — the §VI
+//! trade-off — plus the **spill arm**: one hot class pushed past its
+//! capacity, spill-on-exhaustion vs the fail-fast (spill_hops = 0)
+//! baseline, reporting spill rate and p99 alloc latency.
 //!
 //! Run: `cargo bench --bench ablate_multipool`
+//!      `cargo bench --bench ablate_multipool -- spill --smoke` (CI)
+//!
+//! Writes `bench_out/ablate_multipool.{md,csv,json}`; the JSON summary
+//! carries `spill_hot_total` (≥ 1: the hot scenario must spill) and
+//! `spill_uncontended_total` (== 0: no spurious spill), which CI asserts.
 
-use fastpool::bench_harness::{write_csv, write_markdown, ReportTable, Suite};
+use fastpool::bench_harness::{write_csv, write_json, write_markdown, ReportTable, Suite};
 use fastpool::pool::{MultiPool, MultiPoolConfig};
-use fastpool::util::{Rng, Timer, Zipf};
+use fastpool::util::json::{self, Json};
+use fastpool::util::{LogHistogram, Rng, Timer, Zipf};
 
 const OPS: usize = 400_000;
 const LIVE_TARGET: usize = 1024;
@@ -35,43 +44,44 @@ fn sample_size(mix: Mix, rng: &mut Rng, zipf: &Zipf) -> usize {
     }
 }
 
-fn run_multipool(mix: Mix) -> (f64, f64, u64) {
+fn run_multipool(mix: Mix, ops: usize) -> (f64, f64, u64) {
     let mut mp = MultiPool::new(MultiPoolConfig {
         min_class: 16,
         max_class: 4096,
         blocks_per_class: LIVE_TARGET as u32 * 2,
         system_fallback: true,
         magazine_depth: 0, // MultiPool is single-threaded: no magazines
+        ..Default::default()
     });
     let zipf = Zipf::new(9, 1.1);
     let mut rng = Rng::new(5);
     let mut live = Vec::with_capacity(LIVE_TARGET);
     let t = Timer::start();
-    for _ in 0..OPS {
+    for _ in 0..ops {
         if live.is_empty() || (live.len() < LIVE_TARGET && rng.gen_bool(0.5)) {
             let size = sample_size(mix, &mut rng, &zipf);
-            if let Some((p, o)) = mp.allocate(size) {
-                live.push((p, size, o));
+            if let Some((p, _)) = mp.allocate(size) {
+                live.push((p, size));
             }
         } else {
             let i = rng.gen_usize(0, live.len());
-            let (p, size, o) = live.swap_remove(i);
-            unsafe { mp.deallocate(p, size, o) };
+            let (p, size) = live.swap_remove(i);
+            unsafe { mp.deallocate(p, size) };
         }
     }
-    let ns = t.elapsed_ns() as f64 / OPS as f64;
-    for (p, size, o) in live.drain(..) {
-        unsafe { mp.deallocate(p, size, o) };
+    let ns = t.elapsed_ns() as f64 / ops as f64;
+    for (p, size) in live.drain(..) {
+        unsafe { mp.deallocate(p, size) };
     }
     (ns, mp.pool_hit_rate(), mp.total_internal_waste())
 }
 
-fn run_malloc(mix: Mix) -> f64 {
+fn run_malloc(mix: Mix, ops: usize) -> f64 {
     let zipf = Zipf::new(9, 1.1);
     let mut rng = Rng::new(5);
     let mut live: Vec<(*mut u8, usize)> = Vec::with_capacity(LIVE_TARGET);
     let t = Timer::start();
-    for _ in 0..OPS {
+    for _ in 0..ops {
         if live.is_empty() || (live.len() < LIVE_TARGET && rng.gen_bool(0.5)) {
             let size = sample_size(mix, &mut rng, &zipf);
             let p = unsafe { libc::malloc(size) } as *mut u8;
@@ -82,7 +92,7 @@ fn run_malloc(mix: Mix) -> f64 {
             unsafe { libc::free(p as *mut libc::c_void) };
         }
     }
-    let ns = t.elapsed_ns() as f64 / OPS as f64;
+    let ns = t.elapsed_ns() as f64 / ops as f64;
     for (p, _) in live.drain(..) {
         unsafe { libc::free(p as *mut libc::c_void) };
     }
@@ -91,7 +101,66 @@ fn run_malloc(mix: Mix) -> f64 {
 
 extern crate libc;
 
+/// Spill-arm result: per-alloc latency histogram + end-of-run counters.
+struct SpillRun {
+    p50_ns: u64,
+    p99_ns: u64,
+    spill_total: u64,
+    system_allocs: u64,
+    spill_rate: f64,
+}
+
+/// One hot class (64 B) driven past its capacity while the larger
+/// classes idle with room — the skewed-tenant scenario spill exists for.
+/// `hops = 0` is the fail-fast baseline: exhaustion goes straight to the
+/// system allocator. `live_target` beyond `blocks` forces exhaustion;
+/// below it, the run is uncontended and must never spill.
+fn run_spill(hops: u32, blocks: u32, live_target: usize, ops: usize) -> SpillRun {
+    let mut mp = MultiPool::new(MultiPoolConfig {
+        min_class: 16,
+        max_class: 4096,
+        blocks_per_class: blocks,
+        system_fallback: true,
+        magazine_depth: 0,
+        spill_hops: hops,
+        ..Default::default()
+    });
+    let mut rng = Rng::new(11);
+    let mut live: Vec<(core::ptr::NonNull<u8>, usize)> = Vec::with_capacity(live_target);
+    let mut hist = LogHistogram::new();
+    let mut allocs = 0u64;
+    for _ in 0..ops {
+        if live.is_empty() || (live.len() < live_target && rng.gen_bool(0.6)) {
+            // Hot class: every allocation asks for 64 B.
+            let t = Timer::start();
+            let got = mp.allocate(64);
+            hist.record(t.elapsed_ns().max(1));
+            allocs += 1;
+            if let Some((p, _)) = got {
+                live.push((p, 64));
+            }
+        } else {
+            let i = rng.gen_usize(0, live.len());
+            let (p, size) = live.swap_remove(i);
+            unsafe { mp.deallocate(p, size) };
+        }
+    }
+    for (p, size) in live.drain(..) {
+        unsafe { mp.deallocate(p, size) };
+    }
+    let spill_total = mp.spill_total();
+    SpillRun {
+        p50_ns: hist.percentile(50.0),
+        p99_ns: hist.percentile(99.0),
+        spill_total,
+        system_allocs: mp.system_allocs,
+        spill_rate: if allocs == 0 { 0.0 } else { spill_total as f64 / allocs as f64 },
+    }
+}
+
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let ops = if smoke { 40_000 } else { OPS };
     let suite = Suite::new("multipool");
     let mixes = [("zipf", Mix::Zipf), ("uniform", Mix::Uniform), ("bimodal", Mix::Bimodal)];
     let mut tab = ReportTable::new(
@@ -118,11 +187,12 @@ fn main() {
             xs[2]
         };
         let (mp_ns, hit, waste) = {
-            let mut runs: Vec<(f64, f64, u64)> = (0..5).map(|_| run_multipool(*mix)).collect();
+            let mut runs: Vec<(f64, f64, u64)> =
+                (0..5).map(|_| run_multipool(*mix, ops)).collect();
             runs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
             runs[2]
         };
-        let malloc_ns = med(&|| run_malloc(*mix));
+        let malloc_ns = med(&|| run_malloc(*mix, ops));
         println!(
             "{name:<8} multipool {mp_ns:>6.1} ns | malloc {malloc_ns:>6.1} ns | {:>4.1}x | hit {:>5.1}% | waste {:.1} MiB",
             malloc_ns / mp_ns,
@@ -136,7 +206,83 @@ fn main() {
         tab.set(ri, 4, waste as f64 / (1 << 20) as f64);
     }
 
-    write_markdown("ablate_multipool", &[], &[tab.clone()]).unwrap();
-    write_csv("ablate_multipool", &[tab]).unwrap();
-    println!("wrote bench_out/ablate_multipool.md (+csv)");
+    // Spill arm: hot 64B class, capacity 512 blocks, ~768 live wanted →
+    // exhausted; classes 128/256 idle with room. Three scenarios:
+    //   spill      — spill_hops=2, overflow rides the larger classes
+    //   failfast   — spill_hops=0, overflow goes to the system allocator
+    //   uncontended— live fits in class capacity, spill must stay 0
+    let mut spill_tab = ReportTable::new(
+        "A5b: spill-on-exhaustion vs fail-fast (hot 64B class over capacity)",
+        "scenario",
+        vec!["spill".into(), "failfast".into(), "uncontended".into()],
+        vec![
+            "p50 ns".into(),
+            "p99 ns".into(),
+            "spill_total".into(),
+            "system allocs".into(),
+            "spill rate %".into(),
+        ],
+        "single-threaded MultiPool, 60/40 alloc/free at the live target",
+    );
+    let mut spill_summary: Vec<(&str, Json)> = Vec::new();
+    if suite.enabled("spill") {
+        let blocks = 512u32;
+        let hot = run_spill(2, blocks, 768, ops);
+        let failfast = run_spill(0, blocks, 768, ops);
+        let uncontended = run_spill(2, blocks, 256, ops);
+        assert!(
+            hot.spill_total >= 1,
+            "hot scenario must spill (got {})",
+            hot.spill_total
+        );
+        assert_eq!(
+            uncontended.spill_total, 0,
+            "uncontended scenario must never spill"
+        );
+        assert_eq!(failfast.spill_total, 0, "fail-fast arm has spill disabled");
+        for (ri, r) in [&hot, &failfast, &uncontended].into_iter().enumerate() {
+            spill_tab.set(ri, 0, r.p50_ns as f64);
+            spill_tab.set(ri, 1, r.p99_ns as f64);
+            spill_tab.set(ri, 2, r.spill_total as f64);
+            spill_tab.set(ri, 3, r.system_allocs as f64);
+            spill_tab.set(ri, 4, r.spill_rate * 100.0);
+        }
+        println!(
+            "spill     p99 {:>6} ns | {} spills ({:.2}% of allocs) | {} system allocs",
+            hot.p99_ns,
+            hot.spill_total,
+            hot.spill_rate * 100.0,
+            hot.system_allocs
+        );
+        println!(
+            "failfast  p99 {:>6} ns | {} spills | {} system allocs",
+            failfast.p99_ns, failfast.spill_total, failfast.system_allocs
+        );
+        println!(
+            "uncontend p99 {:>6} ns | {} spills | {} system allocs",
+            uncontended.p99_ns, uncontended.spill_total, uncontended.system_allocs
+        );
+        spill_summary.extend([
+            ("spill_hot_total", Json::Num(hot.spill_total as f64)),
+            ("spill_hot_rate", Json::Num(hot.spill_rate)),
+            ("spill_hot_p99_ns", Json::Num(hot.p99_ns as f64)),
+            ("spill_hot_system_allocs", Json::Num(hot.system_allocs as f64)),
+            ("failfast_p99_ns", Json::Num(failfast.p99_ns as f64)),
+            ("failfast_system_allocs", Json::Num(failfast.system_allocs as f64)),
+            ("spill_uncontended_total", Json::Num(uncontended.spill_total as f64)),
+        ]);
+    }
+
+    let mut summary = vec![
+        ("ops", Json::Num(ops as f64)),
+        ("smoke", Json::Bool(smoke)),
+        ("mode", json::s("single-threaded MultiPool vs malloc + spill ablation")),
+    ];
+    summary.extend(spill_summary);
+
+    let tables = [tab, spill_tab];
+    write_markdown("ablate_multipool", &[], &tables).unwrap();
+    write_csv("ablate_multipool", &tables).unwrap();
+    write_json("ablate_multipool", &tables, &summary).unwrap();
+    println!("wrote bench_out/ablate_multipool.json (+md, csv)");
 }

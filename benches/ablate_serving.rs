@@ -2,7 +2,7 @@
 //!
 //! Both arms run the *identical* continuous-batching engine over the
 //! deterministic MockBackend; the only difference is the allocation
-//! handle: `PoolHandle::serving_default()` (per-step buffers, request
+//! handle: `PoolHandle::builder().build()` (per-step buffers, request
 //! storage and KV block tables on a `ShardedMultiPool`) vs
 //! `PoolHandle::system()` (same code paths, system allocator). The gap
 //! is therefore exactly the allocator's share of the serving loop — the
@@ -70,9 +70,9 @@ fn main() {
     if suite.enabled("throughput") {
         for (ri, mb) in [1usize, 2, 4].into_iter().enumerate() {
             let (pool_tps, steps_p, hit) =
-                median3(&|| run_arm(PoolHandle::serving_default(), mb, 7));
+                median3(&|| run_arm(PoolHandle::builder().build(), mb, 7));
             let (bare_tps, steps_b, _) =
-                median3(&|| run_arm(PoolHandle::serving_uncached(), mb, 7));
+                median3(&|| run_arm(PoolHandle::builder().magazines(false).build(), mb, 7));
             let (sys_tps, steps_s, _) = median3(&|| run_arm(PoolHandle::system(), mb, 7));
             assert_eq!(
                 steps_p, steps_s,
@@ -97,7 +97,7 @@ fn main() {
     // threads submitting through one shared multi-pool).
     let mut steal_summary: Vec<(&str, Json)> = Vec::new();
     if suite.enabled("steals") {
-        let handle = PoolHandle::serving_default();
+        let handle = PoolHandle::builder().build();
         std::thread::scope(|s| {
             for t in 0..4u64 {
                 let handle = handle.clone();

@@ -207,6 +207,7 @@ fn main() {
         blocks_per_class: 512,
         system_fallback: true,
         magazine_depth: 0, // MultiPool is single-threaded: no magazines
+        ..Default::default()
     });
     let mut rng = Rng::new(99);
     let mut live = Vec::new();
@@ -223,21 +224,23 @@ fn main() {
             }
         } else {
             let i = rng.gen_usize(0, live.len());
-            let (p, size, o) = live.swap_remove(i);
-            unsafe { mp.deallocate(p, size, o) };
+            // Frees resolve the serving class from the pointer alone.
+            let (p, size, _o) = live.swap_remove(i);
+            unsafe { mp.deallocate(p, size) };
         }
     }
     let pooled = live.iter().filter(|(_, _, o)| matches!(o, Origin::Pool(_))).count();
     println!(
-        "live at end: {} ({} pooled) | pool hit rate {:.1}% | internal waste {} KiB | system fallbacks {}",
+        "live at end: {} ({} pooled) | pool hit rate {:.1}% | internal waste {} KiB | system fallbacks {} | cross-class spills {}",
         live.len(),
         pooled,
         mp.pool_hit_rate() * 100.0,
         mp.total_internal_waste() / 1024,
-        mp.system_allocs
+        mp.system_allocs,
+        mp.spill_total()
     );
-    for (p, size, o) in live.drain(..) {
-        unsafe { mp.deallocate(p, size, o) };
+    for (p, size, _o) in live.drain(..) {
+        unsafe { mp.deallocate(p, size) };
     }
     println!("drained cleanly");
 }

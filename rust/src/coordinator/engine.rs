@@ -121,7 +121,7 @@ impl<B: Backend> Engine<B> {
     /// Pool-backed engine (the default): per-request and per-step
     /// allocations ride a shared [`crate::pool::ShardedMultiPool`].
     pub fn new(backend: B, cfg: EngineConfig) -> Self {
-        Self::with_pool(backend, cfg, PoolHandle::serving_default())
+        Self::with_pool(backend, cfg, PoolHandle::builder().build())
     }
 
     /// Engine over an explicit allocation handle. Pass
@@ -773,7 +773,7 @@ mod tests {
             outs.sort_by_key(|o| o.id);
             outs.iter().map(|o| o.tokens.clone()).collect::<Vec<_>>()
         };
-        let pooled = run(crate::pool::PoolHandle::serving_default());
+        let pooled = run(crate::pool::PoolHandle::builder().build());
         let malloc = run(crate::pool::PoolHandle::system());
         assert_eq!(pooled, malloc);
     }
@@ -821,7 +821,7 @@ mod tests {
         let e = Engine::with_pool(
             MockBackend::new(),
             EngineConfig::default(),
-            PoolHandle::serving_with_placement(Arc::new(RoundRobin)),
+            PoolHandle::builder().placement(Arc::new(RoundRobin)).build(),
         );
         assert_eq!(e.pool().multi().unwrap().placement_name(), "round_robin");
         let d = engine(EngineConfig::default());

@@ -515,7 +515,7 @@ mod tests {
 
     #[test]
     fn pooled_manager_tables_come_from_the_pool() {
-        let pool = PoolHandle::serving_default();
+        let pool = PoolHandle::builder().build();
         let mut m = KvCacheManager::with_pool(17, 16, 4, pool.clone());
         m.create_seq(1, 40).unwrap(); // 3 blocks
         let mp = pool.multi().unwrap();

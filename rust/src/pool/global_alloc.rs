@@ -15,28 +15,50 @@
 //! core-local shard head instead of one process-wide CAS. The magazine
 //! fast path is allocation-free (const-init TLS + a fixed rack), so it is
 //! re-entrancy-safe inside the allocator. Classes are created lazily on
-//! first use with a `Once`-style publish race; after that both paths are
-//! lock-free.
+//! first use (serialised by a tiny creation lock); after that both paths
+//! are lock-free.
 //!
-//! Routing rule: served-from-pool iff `size <= MAX_CLASS` *and*
-//! `align <= 16` *and* the class has a free block; everything else falls
-//! through to [`std::alloc::System`]. Class pools are built 16-aligned
-//! (`CLASS_ALIGN`), so every pooled pointer satisfies the strictest
-//! alignment the router admits — previously the region was word-aligned
-//! and 16-aligned requests could come back misaligned.
+//! ### Routing rule
+//!
+//! * **Alloc, by layout** — served from a pool iff `size <= 4096` *and*
+//!   `align <= 16` *and* a class has a free block; everything else falls
+//!   through to [`std::alloc::System`]. Class pools are built 16-aligned
+//!   ([`CLASS_ALIGN`]), so every pooled pointer satisfies the strictest
+//!   alignment the router admits. When the routed class is exhausted the
+//!   request **spills** to up to [`SPILL_HOPS`] next-larger classes that
+//!   already exist (spill never *creates* a class — building a fresh
+//!   region to dodge a full one would be slower than the system
+//!   fallback it is trying to avoid).
+//! * **Free, by pointer** — the owning class is recovered by **binary
+//!   search** over a published table of class regions sorted by base
+//!   address (no linear scan over the classes, no per-alloc
+//!   bookkeeping). Ranges are half-open `[start, end)`, so a pointer
+//!   one-past-the-end of a region never misclassifies — that address can
+//!   legitimately be the first byte of a system allocation. Spilled
+//!   blocks therefore free into the class that *served* them, which is
+//!   exactly what makes spill safe.
+//!
+//! The range table is rebuilt (into a fresh allocation) each time a class
+//! is lazily created — at most [`NUM_CLASSES`] times per process — and
+//! published with release ordering *before* the new class pointer, so any
+//! thread that can be served from a class can also resolve its pointers.
+//! Old tables are intentionally leaked: a concurrent `dealloc` may still
+//! be reading one, and the total leak is bounded by
+//! `NUM_CLASSES * size_of::<RangeTable>()` (a few hundred bytes).
 
 use core::alloc::{GlobalAlloc, Layout};
 use core::cell::Cell;
-use core::sync::atomic::{AtomicPtr, AtomicU64, Ordering};
+use core::sync::atomic::{AtomicBool, AtomicPtr, AtomicU64, Ordering};
 
 use super::magazine::{MagazinePool, DEFAULT_MAG_DEPTH};
 use super::sharded::{default_shards, ShardedPool};
 
 std::thread_local! {
-    /// Reentrancy guard: building a class pool allocates (its region and
-    /// side table come from `std::alloc`, which IS this allocator when
-    /// installed globally). While set, everything routes to the system
-    /// allocator to break the recursion.
+    /// Reentrancy guard: building a class pool (and its range table)
+    /// allocates — the region, side tables and table box come from
+    /// `std::alloc`, which IS this allocator when installed globally.
+    /// While set, everything routes to the system allocator to break the
+    /// recursion.
     static IN_POOL_INIT: Cell<bool> = const { Cell::new(false) };
 }
 
@@ -45,12 +67,42 @@ const MAX_SHIFT: u32 = 12; // 4096 B
 const NUM_CLASSES: usize = (MAX_SHIFT - MIN_SHIFT + 1) as usize; // 9
 const CLASS_ALIGN: usize = 16;
 
+/// Bounded spill walk: how many next-larger classes an allocation tries
+/// when its own class is exhausted (mirrors
+/// [`DEFAULT_SPILL_HOPS`](super::multi::DEFAULT_SPILL_HOPS)).
+const SPILL_HOPS: usize = super::multi::DEFAULT_SPILL_HOPS as usize;
+
+/// One class's region in the address-sorted resolve table.
+#[derive(Clone, Copy)]
+struct RangeEntry {
+    start: usize,
+    /// One past the last byte (half-open range).
+    end: usize,
+    class: usize,
+}
+
+/// Snapshot of every created class's region, sorted by base address.
+/// Immutable once published; rebuilt wholesale on class creation.
+struct RangeTable {
+    len: usize,
+    entries: [RangeEntry; NUM_CLASSES],
+}
+
 /// A pool-backed global allocator with system fallback.
 pub struct PooledGlobalAlloc {
     classes: [AtomicPtr<MagazinePool>; NUM_CLASSES],
+    /// Address-sorted class regions for O(log C) pointer→class
+    /// resolution on `dealloc`. Null until the first class is created.
+    ranges: AtomicPtr<RangeTable>,
+    /// Serialises lazy class creation (and the table rebuild that rides
+    /// along). Creation happens at most `NUM_CLASSES` times, so a spin
+    /// lock is cheaper than threading a `Mutex` through a `const fn`.
+    creating: AtomicBool,
     blocks_per_class: u32,
     pub pool_hits: AtomicU64,
     pub system_allocs: AtomicU64,
+    /// Allocations served by a larger class after their own exhausted.
+    pub spills: AtomicU64,
 }
 
 impl PooledGlobalAlloc {
@@ -60,9 +112,12 @@ impl PooledGlobalAlloc {
         const NULL: AtomicPtr<MagazinePool> = AtomicPtr::new(core::ptr::null_mut());
         Self {
             classes: [NULL; NUM_CLASSES],
+            ranges: AtomicPtr::new(core::ptr::null_mut()),
+            creating: AtomicBool::new(false),
             blocks_per_class,
             pool_hits: AtomicU64::new(0),
             system_allocs: AtomicU64::new(0),
+            spills: AtomicU64::new(0),
         }
     }
 
@@ -80,53 +135,90 @@ impl PooledGlobalAlloc {
     }
 
     /// Get or lazily create the pool for class `ci`.
+    #[inline]
     fn class_pool(&self, ci: usize) -> &MagazinePool {
         let ptr = self.classes[ci].load(Ordering::Acquire);
         if !ptr.is_null() {
             // SAFETY: once published, pools live for the program duration.
             return unsafe { &*ptr };
         }
-        // Slow path: build one and race to publish it. The construction
-        // itself allocates → set the reentrancy guard so those nested
-        // allocations go to the system allocator.
+        self.create_class(ci)
+    }
+
+    /// Slow path: build class `ci` and republish the range table, under
+    /// the creation lock. Publication order is the correctness hinge:
+    /// the new table is swapped in (release) *before* the class pointer
+    /// is stored (release), so any thread that observes the class —
+    /// i.e. any thread that can be handed one of its blocks — observes a
+    /// range table that resolves those blocks. Cross-thread frees
+    /// inherit the same guarantee from whatever synchronisation passed
+    /// the pointer between threads.
+    #[cold]
+    fn create_class(&self, ci: usize) -> &MagazinePool {
+        while self.creating.swap(true, Ordering::Acquire) {
+            core::hint::spin_loop();
+        }
+        // Double-check under the lock: another thread may have built it
+        // while we spun.
+        let existing = self.classes[ci].load(Ordering::Acquire);
+        if !existing.is_null() {
+            self.creating.store(false, Ordering::Release);
+            return unsafe { &*existing };
+        }
         let block_size = 1usize << (MIN_SHIFT + ci as u32);
         let layout = Layout::from_size_align(block_size, CLASS_ALIGN).expect("class layout");
+        // The construction (and the table box) allocate → set the
+        // reentrancy guard so those nested allocations go to the system.
         IN_POOL_INIT.with(|c| c.set(true));
         let fresh = Box::into_raw(Box::new(MagazinePool::new(
             ShardedPool::with_layout(layout, self.blocks_per_class, default_shards()),
             DEFAULT_MAG_DEPTH,
         )));
-        IN_POOL_INIT.with(|c| c.set(false));
-        match self.classes[ci].compare_exchange(
-            core::ptr::null_mut(),
-            fresh,
-            Ordering::AcqRel,
-            Ordering::Acquire,
-        ) {
-            Ok(_) => unsafe { &*fresh },
-            Err(winner) => {
-                // Another thread won: drop ours, use theirs.
-                drop(unsafe { Box::from_raw(fresh) });
-                unsafe { &*winner }
-            }
-        }
-    }
-
-    /// Did `ptr` come from one of our pools? (region check per class)
-    fn owning_class(&self, ptr: *mut u8) -> Option<usize> {
-        let nn = core::ptr::NonNull::new(ptr)?;
-        for ci in 0..NUM_CLASSES {
-            let pool = self.classes[ci].load(Ordering::Acquire);
-            if pool.is_null() {
+        let mut table = RangeTable {
+            len: 0,
+            entries: [RangeEntry { start: 0, end: 0, class: 0 }; NUM_CLASSES],
+        };
+        for cj in 0..NUM_CLASSES {
+            let p = if cj == ci { fresh } else { self.classes[cj].load(Ordering::Acquire) };
+            if p.is_null() {
                 continue;
             }
-            // Range-only check: divide-free on the dealloc hot path. A
-            // system pointer can never fall inside a pool-owned region.
-            if unsafe { &*pool }.owns(nn) {
-                return Some(ci);
-            }
+            let pool = unsafe { &*p };
+            table.entries[table.len] = RangeEntry {
+                start: pool.region_start(),
+                end: pool.region_start() + pool.region_bytes(),
+                class: cj,
+            };
+            table.len += 1;
         }
-        None
+        table.entries[..table.len].sort_unstable_by_key(|e| e.start);
+        let table = Box::into_raw(Box::new(table));
+        IN_POOL_INIT.with(|c| c.set(false));
+        // Table first, then the class pointer (both release): see above.
+        let old = self.ranges.swap(table, Ordering::AcqRel);
+        self.classes[ci].store(fresh, Ordering::Release);
+        self.creating.store(false, Ordering::Release);
+        // `old` is intentionally leaked (concurrent readers; bounded).
+        let _ = old;
+        unsafe { &*fresh }
+    }
+
+    /// Did `ptr` come from one of our pools? Binary search over the
+    /// address-sorted region table — O(log C), no per-class scan. A
+    /// system pointer can never fall inside a pool-owned region, and a
+    /// pointer one-past-the-end of a region is *outside* it (half-open
+    /// ranges), so neither can misclassify.
+    fn owning_class(&self, ptr: *mut u8) -> Option<usize> {
+        let table = self.ranges.load(Ordering::Acquire);
+        if table.is_null() {
+            return None;
+        }
+        let table = unsafe { &*table };
+        let entries = &table.entries[..table.len];
+        let a = ptr as usize;
+        let i = entries.partition_point(|e| e.start <= a);
+        let e = &entries[i.checked_sub(1)?];
+        (a < e.end).then_some(e.class)
     }
 
     pub fn stats(&self) -> (u64, u64) {
@@ -134,6 +226,11 @@ impl PooledGlobalAlloc {
             self.pool_hits.load(Ordering::Relaxed),
             self.system_allocs.load(Ordering::Relaxed),
         )
+    }
+
+    /// Allocations served via cross-class spill so far.
+    pub fn spill_total(&self) -> u64 {
+        self.spills.load(Ordering::Relaxed)
     }
 }
 
@@ -150,13 +247,29 @@ unsafe impl GlobalAlloc for PooledGlobalAlloc {
                 self.pool_hits.fetch_add(1, Ordering::Relaxed);
                 return p.as_ptr();
             }
+            // Class exhausted: bounded spill into next-larger classes
+            // that already exist (never creating one — see module docs).
+            let top = (ci + 1 + SPILL_HOPS).min(NUM_CLASSES);
+            for sj in ci + 1..top {
+                let p = self.classes[sj].load(Ordering::Acquire);
+                if p.is_null() {
+                    continue;
+                }
+                if let Some(b) = (*p).allocate() {
+                    self.pool_hits.fetch_add(1, Ordering::Relaxed);
+                    self.spills.fetch_add(1, Ordering::Relaxed);
+                    return b.as_ptr();
+                }
+            }
         }
         self.system_allocs.fetch_add(1, Ordering::Relaxed);
         std::alloc::System.alloc(layout)
     }
 
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
-        // Fast path: size+align says it *could* be pooled; verify by range.
+        // Fast path: size+align says it *could* be pooled; resolve the
+        // serving class by address (spill means it may be any class ≥
+        // the routed one).
         if Self::class_of(&layout).is_some() {
             if let Some(ci) = self.owning_class(ptr) {
                 let pool = &*self.classes[ci].load(Ordering::Acquire);
@@ -217,8 +330,11 @@ mod tests {
         unsafe {
             let a = ga.alloc(layout);
             let b = ga.alloc(layout);
-            let c = ga.alloc(layout); // pool of 2 exhausted → system
+            // Pool of 2 exhausted; no larger class exists yet, so spill
+            // finds nothing and the system serves.
+            let c = ga.alloc(layout);
             assert_eq!(ga.stats(), (2, 1));
+            assert_eq!(ga.spill_total(), 0);
             // dealloc must route each pointer to its true owner.
             ga.dealloc(c, layout);
             ga.dealloc(b, layout);
@@ -229,6 +345,87 @@ mod tests {
             assert_eq!(ga.stats().0, 4);
             ga.dealloc(d, layout);
             ga.dealloc(e, layout);
+        }
+    }
+
+    #[test]
+    fn exhausted_class_spills_into_existing_larger_class() {
+        let ga = PooledGlobalAlloc::new(2);
+        let l32 = Layout::from_size_align(32, 8).unwrap();
+        let l64 = Layout::from_size_align(64, 8).unwrap();
+        unsafe {
+            // Materialise the 64B class so spill has somewhere to go.
+            let warm = ga.alloc(l64);
+            ga.dealloc(warm, l64);
+            let a = ga.alloc(l32);
+            let b = ga.alloc(l32);
+            // 32B class dry → served by the 64B class, not the system.
+            let c = ga.alloc(l32);
+            assert!(!c.is_null());
+            assert_eq!(ga.spill_total(), 1, "third 32B alloc must spill");
+            assert_eq!(ga.stats().1, 0, "spill keeps the system allocator out");
+            // The spilled pointer resolves to the 64B class (index 2).
+            assert_eq!(ga.owning_class(c), Some(2));
+            ga.dealloc(c, l32);
+            ga.dealloc(b, l32);
+            ga.dealloc(a, l32);
+            // Both 64B blocks are home again: two pool hits, no spill.
+            let spills_before = ga.spill_total();
+            let d = ga.alloc(l64);
+            let e = ga.alloc(l64);
+            assert!(!d.is_null() && !e.is_null());
+            assert_eq!(ga.spill_total(), spills_before);
+            assert_eq!(ga.stats().1, 0);
+            ga.dealloc(d, l64);
+            ga.dealloc(e, l64);
+        }
+    }
+
+    #[test]
+    fn region_boundary_one_past_the_end_never_misclassifies() {
+        // Regression for the owning-class range check: a pointer exactly
+        // one past a class region's last byte must not resolve to that
+        // class — half-open `[start, end)` ranges. (The old linear scan
+        // got this right via `owns`; the binary search must too, and the
+        // doc comment must match the behaviour.)
+        let ga = PooledGlobalAlloc::new(4);
+        let l16 = Layout::from_size_align(16, 8).unwrap();
+        let l128 = Layout::from_size_align(128, 8).unwrap();
+        unsafe {
+            // Materialise two classes so the table has multiple entries.
+            let a = ga.alloc(l16);
+            let b = ga.alloc(l128);
+            ga.dealloc(b, l128);
+            ga.dealloc(a, l16);
+        }
+        for ci in 0..NUM_CLASSES {
+            let p = ga.classes[ci].load(Ordering::Acquire);
+            if p.is_null() {
+                continue;
+            }
+            let pool = unsafe { &*p };
+            let start = pool.region_start();
+            let end = start + pool.region_bytes();
+            assert_eq!(
+                ga.owning_class(start as *mut u8),
+                Some(ci),
+                "first byte of class {ci} must resolve to it"
+            );
+            assert_eq!(
+                ga.owning_class((end - 1) as *mut u8),
+                Some(ci),
+                "last byte of class {ci} must resolve to it"
+            );
+            assert_ne!(
+                ga.owning_class(end as *mut u8),
+                Some(ci),
+                "one-past-the-end of class {ci} must not misclassify"
+            );
+            assert_ne!(
+                ga.owning_class((start - 1) as *mut u8),
+                Some(ci),
+                "one-before-the-start of class {ci} must not misclassify"
+            );
         }
     }
 

@@ -21,7 +21,7 @@ use core::ops::{Deref, DerefMut};
 use core::ptr::NonNull;
 use std::sync::Arc;
 
-use super::multi::{MultiPoolConfig, Origin, ShardedMultiPool};
+use super::multi::{ConfigError, MultiPoolConfig, ShardedMultiPool};
 use super::placement::ShardPlacement;
 
 /// All pool-served blocks (and the system fallback inside
@@ -32,8 +32,9 @@ const HANDLE_ALIGN: usize = 16;
 /// Where a `PooledVec`'s backing block came from.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum Backing {
-    /// Served by the handle's multi-pool (class or its system fallback).
-    Pool(Origin),
+    /// Served by the handle's multi-pool (class or its system fallback);
+    /// the pool resolves the exact class from the pointer on free.
+    Pool,
     /// Handle is in system mode (malloc-backed ablation arm).
     System,
     /// Zero-capacity vec: nothing to free.
@@ -42,32 +43,167 @@ enum Backing {
 
 /// A cloneable allocation capability for the serving stack.
 ///
-/// `pooled`/`serving_default` route through a shared thread-safe
-/// [`ShardedMultiPool`]; [`PoolHandle::system`] routes every request to
-/// the system allocator (the malloc-backed ablation arm).
+/// Built with [`PoolHandle::builder`], which routes through a shared
+/// thread-safe [`ShardedMultiPool`]; [`PoolHandle::system`] routes every
+/// request to the system allocator (the malloc-backed ablation arm).
 #[derive(Clone)]
 pub struct PoolHandle {
     inner: Option<Arc<ShardedMultiPool>>,
 }
 
-impl PoolHandle {
-    /// Pool-backed handle over a fresh [`ShardedMultiPool`] (steal-aware
-    /// topology by default).
-    pub fn pooled(cfg: MultiPoolConfig, shards: usize) -> Self {
-        Self { inner: Some(Arc::new(ShardedMultiPool::with_shards(cfg, shards))) }
+/// Builder for pool-backed [`PoolHandle`]s — the one construction path
+/// that replaced the old constructor zoo (`pooled`,
+/// `pooled_with_placement`, `serving_default`, `serving_uncached`,
+/// `serving_with_placement`, all now thin deprecated shims).
+///
+/// Defaults are the serving-engine geometry: derived classes 16 B …
+/// 4 KiB, 256 blocks per class, system fallback on, magazines on
+/// (CAS-free per-thread hot path), spill on
+/// ([`super::multi::DEFAULT_SPILL_HOPS`] hops), steal-aware shard
+/// topology sized by available parallelism.
+///
+/// ```
+/// use fastpool::pool::PoolHandle;
+/// let h = PoolHandle::builder()
+///     .classes([32, 48, 256])      // arbitrary monotone class table
+///     .blocks_per_class(64)
+///     .magazines(false)            // bare-sharded A/B arm
+///     .spill(1)                    // at most one hop on exhaustion
+///     .shards(2)
+///     .build();
+/// assert!(h.is_pooled());
+/// ```
+#[derive(Clone)]
+pub struct PoolHandleBuilder {
+    cfg: MultiPoolConfig,
+    shards: Option<usize>,
+    placement: Option<Arc<dyn ShardPlacement>>,
+}
+
+impl PoolHandleBuilder {
+    fn new() -> Self {
+        Self { cfg: serving_config(), shards: None, placement: None }
     }
 
-    /// As [`Self::pooled`] with an explicit shard-topology policy
-    /// (ablations pass [`crate::pool::RoundRobin`] to measure what
+    /// Replace the whole pool geometry (the other setters then tweak it).
+    pub fn config(mut self, cfg: MultiPoolConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Explicit class table: arbitrary strictly-increasing block sizes
+    /// (normalised to 16-byte multiples; validated at build).
+    pub fn classes(mut self, classes: impl IntoIterator<Item = usize>) -> Self {
+        self.cfg.classes = classes.into_iter().collect();
+        self
+    }
+
+    /// Derived power-of-two class ladder `min..=max` (the default is
+    /// 16 B … 4 KiB). Ignored if [`Self::classes`] was set.
+    pub fn class_range(mut self, min: usize, max: usize) -> Self {
+        self.cfg.min_class = min;
+        self.cfg.max_class = max;
+        self
+    }
+
+    pub fn blocks_per_class(mut self, blocks: u32) -> Self {
+        self.cfg.blocks_per_class = blocks;
+        self
+    }
+
+    /// Toggle the per-thread magazine layer (default on). Off = the
+    /// bare-sharded "uncached" ablation arm: same classes, same
+    /// topology, no CAS-free front.
+    pub fn magazines(mut self, on: bool) -> Self {
+        self.cfg.magazine_depth =
+            if on { super::magazine::DEFAULT_MAG_DEPTH } else { 0 };
+        self
+    }
+
+    /// Bound the cross-class spill walk on exhaustion (0 = fail fast to
+    /// the system fallback; default [`super::multi::DEFAULT_SPILL_HOPS`]).
+    pub fn spill(mut self, hops: u32) -> Self {
+        self.cfg.spill_hops = hops;
+        self
+    }
+
+    /// Route oversize/exhausted requests to the system allocator
+    /// (default on; off makes exhaustion a hard allocation failure).
+    pub fn system_fallback(mut self, on: bool) -> Self {
+        self.cfg.system_fallback = on;
+        self
+    }
+
+    /// Shard count (default: available parallelism).
+    pub fn shards(mut self, shards: usize) -> Self {
+        self.shards = Some(shards);
+        self
+    }
+
+    /// Shard-topology policy (default [`crate::pool::StealAware`];
+    /// ablations pass [`crate::pool::RoundRobin`] to measure what
     /// steal-aware rehoming buys).
+    pub fn placement(mut self, placement: Arc<dyn ShardPlacement>) -> Self {
+        self.placement = Some(placement);
+        self
+    }
+
+    /// Build, validating the configuration.
+    pub fn try_build(self) -> Result<PoolHandle, ConfigError> {
+        let shards = self.shards.unwrap_or_else(super::sharded::default_shards);
+        let mp = match self.placement {
+            Some(p) => ShardedMultiPool::try_with_placement(self.cfg, shards, p)?,
+            None => ShardedMultiPool::try_with_placement(
+                self.cfg,
+                shards,
+                Arc::new(super::placement::StealAware::default()),
+            )?,
+        };
+        Ok(PoolHandle { inner: Some(Arc::new(mp)) })
+    }
+
+    /// Build, panicking on an invalid configuration (delegates to
+    /// [`Self::try_build`]).
+    pub fn build(self) -> PoolHandle {
+        self.try_build().expect("invalid PoolHandleBuilder configuration")
+    }
+}
+
+/// The serving-engine pool geometry — the builder's starting point.
+fn serving_config() -> MultiPoolConfig {
+    MultiPoolConfig {
+        min_class: 16,
+        max_class: 4096,
+        blocks_per_class: 256,
+        ..Default::default()
+    }
+}
+
+impl PoolHandle {
+    /// Start building a pool-backed handle (serving defaults; see
+    /// [`PoolHandleBuilder`]).
+    pub fn builder() -> PoolHandleBuilder {
+        PoolHandleBuilder::new()
+    }
+
+    /// Pool-backed handle over a fresh [`ShardedMultiPool`] (steal-aware
+    /// topology by default).
+    #[deprecated(since = "0.6.0", note = "use PoolHandle::builder().config(cfg).shards(n)")]
+    pub fn pooled(cfg: MultiPoolConfig, shards: usize) -> Self {
+        Self::builder().config(cfg).shards(shards).build()
+    }
+
+    /// As `pooled` with an explicit shard-topology policy.
+    #[deprecated(
+        since = "0.6.0",
+        note = "use PoolHandle::builder().config(cfg).shards(n).placement(p)"
+    )]
     pub fn pooled_with_placement(
         cfg: MultiPoolConfig,
         shards: usize,
         placement: Arc<dyn ShardPlacement>,
     ) -> Self {
-        Self {
-            inner: Some(Arc::new(ShardedMultiPool::with_placement(cfg, shards, placement))),
-        }
+        Self::builder().config(cfg).shards(shards).placement(placement).build()
     }
 
     /// Share an existing multi-pool.
@@ -75,45 +211,22 @@ impl PoolHandle {
         Self { inner: Some(multi) }
     }
 
-    /// Pool-backed handle sized for the serving engine: classes 16 B …
-    /// 4 KiB (token lanes, block tables, logits rows for small models all
-    /// land inside; bigger rows fall through to the counted system
-    /// fallback), sharded by available parallelism, **cached** — each
-    /// worker thread fronts the shards with a two-magazine CAS-free
-    /// cache (see [`crate::pool::MagazinePool`]).
+    /// Pool-backed handle sized for the serving engine.
+    #[deprecated(since = "0.6.0", note = "use PoolHandle::builder().build()")]
     pub fn serving_default() -> Self {
-        Self::pooled(Self::serving_config(), super::sharded::default_shards())
+        Self::builder().build()
     }
 
-    /// [`Self::serving_default`] with the magazine layer disabled — the
-    /// bare-sharded A/B arm for measuring what the CAS-free hot path
-    /// buys on the serving path (same classes, same topology).
+    /// Serving geometry with the magazine layer disabled.
+    #[deprecated(since = "0.6.0", note = "use PoolHandle::builder().magazines(false)")]
     pub fn serving_uncached() -> Self {
-        let cfg = MultiPoolConfig { magazine_depth: 0, ..Self::serving_config() };
-        Self::pooled(cfg, super::sharded::default_shards())
+        Self::builder().magazines(false).build()
     }
 
-    /// The serving-engine pool geometry (shared by `serving_default`, the
-    /// uncached arm and the placement-explicit variant).
-    fn serving_config() -> MultiPoolConfig {
-        MultiPoolConfig {
-            min_class: 16,
-            max_class: 4096,
-            blocks_per_class: 256,
-            system_fallback: true,
-            magazine_depth: super::magazine::DEFAULT_MAG_DEPTH,
-        }
-    }
-
-    /// [`Self::serving_default`] geometry with an explicit shard-topology
-    /// policy — how the engine/server ablation arms choose between
-    /// `RoundRobin`, `StealAware` and `Pinned` placements.
+    /// Serving geometry with an explicit shard-topology policy.
+    #[deprecated(since = "0.6.0", note = "use PoolHandle::builder().placement(p)")]
     pub fn serving_with_placement(placement: Arc<dyn ShardPlacement>) -> Self {
-        Self::pooled_with_placement(
-            Self::serving_config(),
-            super::sharded::default_shards(),
-            placement,
-        )
+        Self::builder().placement(placement).build()
     }
 
     /// Malloc-backed handle: every allocation goes to the system
@@ -135,7 +248,7 @@ impl PoolHandle {
     fn alloc_bytes(&self, size: usize) -> Option<(NonNull<u8>, Backing)> {
         debug_assert!(size > 0);
         match &self.inner {
-            Some(mp) => mp.allocate(size).map(|(p, o)| (p, Backing::Pool(o))),
+            Some(mp) => mp.allocate(size).map(|(p, _origin)| (p, Backing::Pool)),
             None => {
                 let layout = Layout::from_size_align(size, HANDLE_ALIGN).ok()?;
                 NonNull::new(unsafe { std::alloc::alloc(layout) })
@@ -149,11 +262,13 @@ impl PoolHandle {
     /// [`Self::alloc_bytes`] on this handle (or a clone of it).
     unsafe fn dealloc_bytes(&self, p: NonNull<u8>, size: usize, backing: Backing) {
         match backing {
-            Backing::Pool(origin) => {
+            Backing::Pool => {
+                // The pool resolves the serving class from the pointer
+                // (address-sorted binary search) — no origin to carry.
                 self.inner
                     .as_ref()
                     .expect("pool-backed block freed through a system handle")
-                    .deallocate(p, size, origin);
+                    .deallocate(p, size);
             }
             Backing::System => {
                 let layout = Layout::from_size_align(size, HANDLE_ALIGN)
@@ -385,32 +500,23 @@ mod tests {
     use super::*;
 
     fn small_handle() -> PoolHandle {
-        PoolHandle::pooled(
-            MultiPoolConfig {
-                min_class: 16,
-                max_class: 256,
-                blocks_per_class: 8,
-                system_fallback: true,
-                magazine_depth: crate::pool::DEFAULT_MAG_DEPTH,
-            },
-            2,
-        )
+        PoolHandle::builder().class_range(16, 256).blocks_per_class(8).shards(2).build()
     }
 
     #[test]
     fn placement_choice_flows_through_handle() {
         use crate::pool::placement::RoundRobin;
-        let h = PoolHandle::serving_with_placement(Arc::new(RoundRobin));
+        let h = PoolHandle::builder().placement(Arc::new(RoundRobin)).build();
         assert_eq!(h.multi().unwrap().placement_name(), "round_robin");
-        let d = PoolHandle::serving_default();
+        let d = PoolHandle::builder().build();
         assert_eq!(d.multi().unwrap().placement_name(), "steal_aware");
     }
 
     #[test]
     fn serving_default_is_cached_and_uncached_arm_is_not() {
-        let cached = PoolHandle::serving_default();
+        let cached = PoolHandle::builder().build();
         assert!(cached.multi().unwrap().magazines_enabled());
-        let bare = PoolHandle::serving_uncached();
+        let bare = PoolHandle::builder().magazines(false).build();
         assert!(!bare.multi().unwrap().magazines_enabled());
         // Both arms serve the same vec workload through the same code.
         for h in [cached, bare] {
@@ -418,6 +524,62 @@ mod tests {
             v.extend_from_slice(&[1, 2, 3]);
             assert_eq!(v.as_slice(), &[1, 2, 3]);
         }
+    }
+
+    #[test]
+    fn builder_explicit_classes_and_spill_flow_through() {
+        let h = PoolHandle::builder()
+            .classes([32, 48, 256])
+            .blocks_per_class(4)
+            .spill(1)
+            .shards(1)
+            .build();
+        let mp = h.multi().unwrap();
+        assert_eq!(mp.num_classes(), 3);
+        assert_eq!(mp.class_size(1), 48);
+        // Exhaust the 48B class; spill(1) reaches the 256B class.
+        let mut held = Vec::new();
+        for _ in 0..4 {
+            let (p, _) = mp.allocate(48).unwrap();
+            held.push(p);
+        }
+        let (p, _) = mp.allocate(48).unwrap();
+        assert_eq!(mp.spill_total(), 1);
+        assert_eq!(mp.class_of_ptr(p), Some(2));
+        unsafe {
+            mp.deallocate(p, 48);
+            for p in held {
+                mp.deallocate(p, 48);
+            }
+        }
+    }
+
+    #[test]
+    fn builder_validates_config() {
+        assert!(PoolHandle::builder().blocks_per_class(0).try_build().is_err());
+        assert!(PoolHandle::builder().classes([64, 64]).try_build().is_err());
+        assert!(PoolHandle::builder().class_range(24, 4096).try_build().is_err());
+        assert!(PoolHandle::builder().classes([16, 48]).try_build().is_ok());
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_constructor_shims_still_work() {
+        // The old zoo must keep building equivalent handles until callers
+        // finish migrating to the builder.
+        let p = PoolHandle::pooled(
+            MultiPoolConfig { blocks_per_class: 8, ..Default::default() },
+            2,
+        );
+        assert!(p.is_pooled());
+        let d = PoolHandle::serving_default();
+        assert!(d.multi().unwrap().magazines_enabled());
+        let u = PoolHandle::serving_uncached();
+        assert!(!u.multi().unwrap().magazines_enabled());
+        let r = PoolHandle::serving_with_placement(Arc::new(
+            crate::pool::placement::RoundRobin,
+        ));
+        assert_eq!(r.multi().unwrap().placement_name(), "round_robin");
     }
 
     #[test]
@@ -542,16 +704,12 @@ mod tests {
 
     #[test]
     fn concurrent_pooled_vecs_distinct_backing() {
-        let handle = PoolHandle::pooled(
-            MultiPoolConfig {
-                min_class: 16,
-                max_class: 256,
-                blocks_per_class: 512,
-                system_fallback: false,
-                magazine_depth: crate::pool::DEFAULT_MAG_DEPTH,
-            },
-            4,
-        );
+        let handle = PoolHandle::builder()
+            .class_range(16, 256)
+            .blocks_per_class(512)
+            .system_fallback(false)
+            .shards(4)
+            .build();
         std::thread::scope(|s| {
             for t in 0..4i32 {
                 let handle = handle.clone();

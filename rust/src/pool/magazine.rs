@@ -517,6 +517,16 @@ impl MagazinePool {
         self.shared.contains(p)
     }
 
+    /// See [`ShardedPool::region_start`].
+    pub fn region_start(&self) -> usize {
+        self.shared.region_start()
+    }
+
+    /// See [`ShardedPool::region_bytes`].
+    pub fn region_bytes(&self) -> usize {
+        self.shared.region_bytes()
+    }
+
     pub fn num_shards(&self) -> usize {
         self.shared.num_shards()
     }

@@ -26,9 +26,17 @@
 //!   chains at ~1 CAS per magazine. Default for the serving arm via
 //!   [`PoolHandle`].
 //! * [`ResizablePool`] — §VII grow/shrink by member-variable update.
-//! * [`MultiPool`] — §V/§VI ad-hoc hybrid: size classes + system fallback.
+//! * [`MultiPool`]/[`ShardedMultiPool`] — §V/§VI ad-hoc hybrid: a sorted
+//!   class table (arbitrary monotone sizes) routed by O(log C) binary
+//!   search on alloc, pointer→class resolution by binary search over
+//!   address-sorted regions on free, bounded cross-class spill on
+//!   exhaustion, and system fallback. Configured via [`MultiPoolConfig`]
+//!   (fallible validation: [`ConfigError`], `try_new`).
 //! * [`PooledGlobalAlloc`] — §V "overload new/delete" as a Rust
-//!   `#[global_allocator]`, magazine-fronted per size class.
+//!   `#[global_allocator]`, magazine-fronted per size class, same
+//!   sorted-range pointer resolution and spill walk.
+//! * [`PoolHandle`] — the engine-facing capability; built with
+//!   [`PoolHandleBuilder`] (`PoolHandle::builder()`).
 //!
 //! ### Layer diagram (hot-path lineage)
 //!
@@ -69,10 +77,13 @@ pub use fixed::{FixedPool, PoolConfig};
 pub use freelist::PtrFreeListPool;
 pub use global_alloc::PooledGlobalAlloc;
 pub use guarded::{GuardConfig, GuardError, GuardedPool};
-pub use handle::{PoolHandle, PooledVec};
+pub use handle::{PoolHandle, PoolHandleBuilder, PooledVec};
 pub use locked::{BlockToken, LockedPool};
 pub use magazine::{MagazinePool, DEFAULT_MAG_DEPTH, MAX_MAG_DEPTH};
-pub use multi::{MultiPool, MultiPoolConfig, Origin, ShardedMultiPool};
+pub use multi::{
+    ConfigError, MultiPool, MultiPoolConfig, Origin, ShardedMultiPool, CLASS_ALIGN,
+    DEFAULT_SPILL_HOPS,
+};
 pub use placement::{
     Pinned, RoundRobin, ShardPlacement, StealAware, DEFAULT_REHOME_THRESHOLD_PCT,
     DEFAULT_REHOME_WINDOW,
@@ -83,5 +94,5 @@ pub use sharded::{
     default_shards, home_slot_epoch, home_slots_free, home_slots_high_water, ShardedPool,
     MAX_HOME_SLOTS, MAX_STEAL_BATCH,
 };
-pub use stats::{MagazineStats, PoolStats, ShardStats, ShardedPoolStats};
+pub use stats::{MagazineStats, PoolStats, ShardStats, ShardedPoolStats, SpillStats};
 pub use typed::{PoolBox, TypedPool};

@@ -2,10 +2,36 @@
 //! allocator in conjunction with multiple fixed-size pools would help to
 //! reduce memory wastage while still benefiting from the pool speedups."
 //!
-//! Power-of-two size classes route each request to the smallest fitting
-//! pool; requests larger than the biggest class (or landing in an exhausted
-//! pool, if fallback is enabled) go to the system allocator. Per-class hit
-//! and waste statistics feed ablation A5.
+//! ### Routing rule (both flavours)
+//!
+//! The tier keeps a **sorted class table** of block sizes — arbitrary
+//! strictly-monotone sizes (normalised to multiples of
+//! [`CLASS_ALIGN`]), not just powers of two — and routes in O(log C):
+//!
+//! * **Alloc, by layout** — `class_of(size)` binary-searches the table
+//!   for the smallest class ≥ `size` ([`slice::partition_point`]); every
+//!   class pool is built [`CLASS_ALIGN`]-aligned, so any request with
+//!   `align <= CLASS_ALIGN` is served correctly by its size class
+//!   ([`class_of_layout`](ShardedMultiPool::class_of_layout) checks
+//!   both). Requests larger than the biggest class go to the system
+//!   allocator (when fallback is enabled).
+//! * **Free, by pointer** — each class owns one contiguous region; the
+//!   regions are kept in a second table **sorted by base address**, and
+//!   `deallocate` recovers the serving class by binary-searching the
+//!   freed pointer against it. No per-allocation class bookkeeping, no
+//!   linear scan: the pointer alone names its owner, and a pointer
+//!   one-past-the-end of a region never misclassifies (range checks are
+//!   half-open `[start, end)`).
+//! * **Spill on exhaustion** — a request whose class is empty walks up
+//!   to [`MultiPoolConfig::spill_hops`] next-larger classes before
+//!   falling back (or failing): one hot class cannot take the tier down
+//!   while a colder, larger class has room. Spilled blocks free
+//!   correctly *because* frees resolve by address — the block returns to
+//!   the class that served it, not the one the size requested. Per-class
+//!   `spill_in`/`spill_out` counters make the skew observable.
+//!
+//! Per-class hit, exhaustion, waste and spill statistics feed ablation
+//! A5 (`benches/ablate_multipool.rs`, EXPERIMENTS.md §A5).
 
 use core::alloc::Layout;
 use core::ptr::NonNull;
@@ -17,15 +43,25 @@ use super::fixed::{FixedPool, PoolConfig};
 use super::magazine::{MagazinePool, DEFAULT_MAG_DEPTH};
 use super::placement::{ShardPlacement, StealAware};
 use super::sharded::default_shards;
-use super::stats::{MagazineStats, ShardedPoolStats};
-use crate::util::align::next_pow2;
+use super::stats::{MagazineStats, ShardedPoolStats, SpillStats};
+use crate::util::align::{align_up, next_pow2};
+
+/// Alignment every class pool is built at (and the strictest request
+/// alignment the routing admits). Class sizes are normalised to
+/// multiples of this.
+pub const CLASS_ALIGN: usize = 16;
+
+/// Default bound on the spill walk: how many next-larger classes an
+/// allocation may try when its own class is exhausted.
+pub const DEFAULT_SPILL_HOPS: u32 = 2;
 
 /// Where an allocation was served from.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Origin {
-    /// Size class index.
+    /// Size class index (the *serving* class — under spill this can be
+    /// larger than the class the size routed to).
     Pool(usize),
-    /// System allocator (too big or pool exhausted).
+    /// System allocator (too big or pools exhausted).
     System,
 }
 
@@ -37,25 +73,89 @@ pub struct ClassStats {
     pub exhausted: u64,
     /// Total bytes wasted by rounding request → class size.
     pub internal_waste: u64,
+    /// Allocations this class served for a smaller, exhausted class.
+    pub spill_in: u64,
+    /// Requests routed here that were served by a larger class.
+    pub spill_out: u64,
 }
 
-/// Configuration for [`MultiPool`].
+/// [`MultiPoolConfig`] validation failure — the fallible face of the
+/// tier ([`MultiPool::try_new`], [`ShardedMultiPool::try_new`]); the
+/// panicking constructors delegate and `expect` it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ConfigError {
+    /// The class table resolved to zero classes.
+    NoClasses,
+    /// Derived-table mode: `min_class` must be a power of two ≥
+    /// [`CLASS_ALIGN`].
+    MinClass { got: usize },
+    /// Derived-table mode: `max_class` must be a power of two ≥
+    /// `min_class`.
+    MaxClass { min: usize, max: usize },
+    /// Explicit table not strictly increasing after normalisation to
+    /// [`CLASS_ALIGN`] multiples.
+    NotMonotone { index: usize, prev: usize, next: usize },
+    /// `blocks_per_class` is zero.
+    ZeroBlocks,
+    /// `class size × blocks_per_class` (with shard-stride slack)
+    /// overflows the address space.
+    RegionOverflow { class: usize, blocks: u32 },
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::NoClasses => write!(f, "class table is empty"),
+            Self::MinClass { got } => write!(
+                f,
+                "min_class {got} must be a power of two >= {CLASS_ALIGN}"
+            ),
+            Self::MaxClass { min, max } => write!(
+                f,
+                "max_class {max} must be a power of two >= min_class {min}"
+            ),
+            Self::NotMonotone { index, prev, next } => write!(
+                f,
+                "class table not strictly increasing at index {index}: \
+                 {prev} -> {next} (sizes normalise to multiples of {CLASS_ALIGN})"
+            ),
+            Self::ZeroBlocks => write!(f, "blocks_per_class must be > 0"),
+            Self::RegionOverflow { class, blocks } => write!(
+                f,
+                "class {class} x {blocks} blocks overflows the address space"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+/// Configuration for [`MultiPool`] / [`ShardedMultiPool`].
 #[derive(Debug, Clone)]
 pub struct MultiPoolConfig {
-    /// Smallest class (power of two, ≥ 8).
+    /// Smallest derived class (power of two ≥ [`CLASS_ALIGN`]). Ignored
+    /// when [`Self::classes`] is non-empty.
     pub min_class: usize,
-    /// Largest class (power of two).
+    /// Largest derived class (power of two ≥ `min_class`). Ignored when
+    /// [`Self::classes`] is non-empty.
     pub max_class: usize,
+    /// Explicit class table: arbitrary strictly-increasing block sizes
+    /// (normalised up to multiples of [`CLASS_ALIGN`]). Empty ⇒ derive
+    /// powers of two `min_class..=max_class`.
+    pub classes: Vec<usize>,
     /// Blocks per class.
     pub blocks_per_class: u32,
-    /// Fall back to the system allocator when a class is exhausted
-    /// (otherwise allocation fails).
+    /// Fall back to the system allocator when routing misses or every
+    /// spill candidate is exhausted (otherwise allocation fails).
     pub system_fallback: bool,
     /// Initial per-thread magazine depth for the sharded flavour's
     /// CAS-free hot path (clamped per class; 0 disables the layer).
     /// [`MultiPool`] ignores it — single-threaded callers have no
     /// cross-thread CAS to amortise.
     pub magazine_depth: u32,
+    /// On class exhaustion, try up to this many next-larger classes
+    /// before the system fallback (0 = fail fast to the fallback).
+    pub spill_hops: u32,
 }
 
 impl Default for MultiPoolConfig {
@@ -63,17 +163,132 @@ impl Default for MultiPoolConfig {
         Self {
             min_class: 16,
             max_class: 4096,
+            classes: Vec::new(),
             blocks_per_class: 1024,
             system_fallback: true,
             magazine_depth: DEFAULT_MAG_DEPTH,
+            spill_hops: DEFAULT_SPILL_HOPS,
         }
     }
 }
 
-/// A best-fit family of fixed-size pools with optional system fallback.
+impl MultiPoolConfig {
+    /// Resolve and validate the class table: the explicit
+    /// [`Self::classes`] (normalised to [`CLASS_ALIGN`] multiples,
+    /// strictly increasing) or the derived power-of-two ladder
+    /// `min_class..=max_class`.
+    pub fn class_table(&self) -> Result<Vec<usize>, ConfigError> {
+        if self.blocks_per_class == 0 {
+            return Err(ConfigError::ZeroBlocks);
+        }
+        let table = if self.classes.is_empty() {
+            if !self.min_class.is_power_of_two() || self.min_class < CLASS_ALIGN {
+                return Err(ConfigError::MinClass { got: self.min_class });
+            }
+            if !self.max_class.is_power_of_two() || self.max_class < self.min_class {
+                return Err(ConfigError::MaxClass {
+                    min: self.min_class,
+                    max: self.max_class,
+                });
+            }
+            let mut t = Vec::new();
+            let mut size = self.min_class;
+            while size <= self.max_class {
+                t.push(size);
+                match size.checked_mul(2) {
+                    Some(next) => size = next,
+                    None => break,
+                }
+            }
+            t
+        } else {
+            let t: Vec<usize> = self
+                .classes
+                .iter()
+                .map(|&s| align_up(s.max(CLASS_ALIGN), CLASS_ALIGN))
+                .collect();
+            for (i, w) in t.windows(2).enumerate() {
+                if w[0] >= w[1] {
+                    return Err(ConfigError::NotMonotone {
+                        index: i + 1,
+                        prev: w[0],
+                        next: w[1],
+                    });
+                }
+            }
+            t
+        };
+        if table.is_empty() {
+            return Err(ConfigError::NoClasses);
+        }
+        // Region-size overflow, conservatively including the sharded
+        // flavour's up-to-2× stride slack (`next_pow2` of the per-shard
+        // count; see `ShardedPool::with_layout_placement`).
+        let slack_blocks = 2usize.saturating_mul(next_pow2(self.blocks_per_class as usize));
+        for &c in &table {
+            if c.checked_mul(slack_blocks).is_none()
+                || Layout::from_size_align(c, CLASS_ALIGN).is_err()
+            {
+                return Err(ConfigError::RegionOverflow {
+                    class: c,
+                    blocks: self.blocks_per_class,
+                });
+            }
+        }
+        Ok(table)
+    }
+
+    /// Validate without materialising the table.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        self.class_table().map(|_| ())
+    }
+}
+
+/// Binary-search the sorted class table for the smallest class ≥ `size`
+/// (O(log C); the routing hot path shared by both flavours).
+#[inline]
+fn route(table: &[usize], size: usize) -> Option<usize> {
+    let i = table.partition_point(|&c| c < size);
+    (i < table.len()).then_some(i)
+}
+
+/// One class's contiguous region, in the address-sorted resolve table.
+#[derive(Debug, Clone, Copy)]
+struct Region {
+    start: usize,
+    /// One past the last byte: the range is half-open `[start, end)`, so
+    /// a pointer exactly at `end` belongs to *no* class (it may be the
+    /// first byte of an unrelated allocation).
+    end: usize,
+    class: u32,
+}
+
+/// Binary-search the address-sorted region table for the class owning
+/// `addr` (O(log C); the dealloc hot path shared by both flavours).
+#[inline]
+fn resolve(regions: &[Region], addr: usize) -> Option<usize> {
+    let i = regions.partition_point(|r| r.start <= addr);
+    let r = &regions[i.checked_sub(1)?];
+    (addr < r.end).then_some(r.class as usize)
+}
+
+fn sorted_regions(iter: impl Iterator<Item = (usize, usize)>) -> Vec<Region> {
+    let mut regions: Vec<Region> = iter
+        .enumerate()
+        .map(|(ci, (start, len))| Region { start, end: start + len, class: ci as u32 })
+        .collect();
+    regions.sort_unstable_by_key(|r| r.start);
+    regions
+}
+
+/// A best-fit family of fixed-size pools with cross-class spill and
+/// optional system fallback (single-threaded flavour).
 pub struct MultiPool {
     classes: Vec<FixedPool>,
     class_sizes: Vec<usize>,
+    /// Class regions sorted by base address: the pointer→class resolve
+    /// table for [`Self::deallocate`].
+    regions: Vec<Region>,
     stats: Vec<ClassStats>,
     cfg: MultiPoolConfig,
     pub system_allocs: u64,
@@ -81,37 +296,57 @@ pub struct MultiPool {
 }
 
 impl MultiPool {
-    pub fn new(cfg: MultiPoolConfig) -> Self {
-        assert!(cfg.min_class.is_power_of_two() && cfg.min_class >= 8);
-        assert!(cfg.max_class.is_power_of_two() && cfg.max_class >= cfg.min_class);
-        let mut classes = Vec::new();
-        let mut class_sizes = Vec::new();
-        let mut size = cfg.min_class;
-        while size <= cfg.max_class {
-            classes.push(FixedPool::new(
-                PoolConfig::new(size, cfg.blocks_per_class).with_align(16),
-            ));
-            class_sizes.push(size);
-            size *= 2;
-        }
+    /// Fallible constructor: validates `cfg` instead of panicking.
+    pub fn try_new(cfg: MultiPoolConfig) -> Result<Self, ConfigError> {
+        let class_sizes = cfg.class_table()?;
+        let classes: Vec<FixedPool> = class_sizes
+            .iter()
+            .map(|&size| {
+                FixedPool::new(
+                    PoolConfig::new(size, cfg.blocks_per_class).with_align(CLASS_ALIGN),
+                )
+            })
+            .collect();
+        let regions = sorted_regions(
+            classes
+                .iter()
+                .map(|p| (p.raw().mem_start().as_ptr() as usize, p.raw().capacity_bytes())),
+        );
         let n = classes.len();
-        Self {
+        Ok(Self {
             classes,
             class_sizes,
+            regions,
             stats: vec![ClassStats::default(); n],
             cfg,
             system_allocs: 0,
             system_frees: 0,
-        }
+        })
     }
 
-    /// Class index for a request of `size` bytes, or `None` if too large.
+    /// Panicking constructor; delegates to [`Self::try_new`].
+    pub fn new(cfg: MultiPoolConfig) -> Self {
+        Self::try_new(cfg).expect("invalid MultiPoolConfig")
+    }
+
+    /// Class index for a request of `size` bytes (binary search over the
+    /// sorted class table), or `None` if too large for every class.
     #[inline]
     pub fn class_of(&self, size: usize) -> Option<usize> {
-        class_index(&self.cfg, size)
+        route(&self.class_sizes, size)
     }
 
-    /// Allocate `size` bytes. Returns the pointer and where it came from.
+    /// Serving class for a pointer previously returned by
+    /// [`allocate`](Self::allocate) (binary search over the
+    /// address-sorted region table), or `None` for system pointers.
+    #[inline]
+    pub fn class_of_ptr(&self, p: NonNull<u8>) -> Option<usize> {
+        resolve(&self.regions, p.as_ptr() as usize)
+    }
+
+    /// Allocate `size` bytes. Returns the pointer and where it came
+    /// from; on class exhaustion the request spills to up to
+    /// `spill_hops` next-larger classes before the system fallback.
     pub fn allocate(&mut self, size: usize) -> Option<(NonNull<u8>, Origin)> {
         match self.class_of(size) {
             Some(ci) => {
@@ -119,14 +354,25 @@ impl MultiPool {
                     self.stats[ci].hits += 1;
                     self.stats[ci].internal_waste +=
                         (self.class_sizes[ci] - size) as u64;
-                    Some((p, Origin::Pool(ci)))
-                } else {
-                    self.stats[ci].exhausted += 1;
-                    if self.cfg.system_fallback {
-                        self.system_alloc(size).map(|p| (p, Origin::System))
-                    } else {
-                        None
+                    return Some((p, Origin::Pool(ci)));
+                }
+                self.stats[ci].exhausted += 1;
+                let top =
+                    (ci + 1 + self.cfg.spill_hops as usize).min(self.classes.len());
+                for sj in ci + 1..top {
+                    if let Some(p) = self.classes[sj].allocate() {
+                        self.stats[ci].spill_out += 1;
+                        self.stats[sj].spill_in += 1;
+                        self.stats[sj].hits += 1;
+                        self.stats[sj].internal_waste +=
+                            (self.class_sizes[sj] - size) as u64;
+                        return Some((p, Origin::Pool(sj)));
                     }
+                }
+                if self.cfg.system_fallback {
+                    self.system_alloc(size).map(|p| (p, Origin::System))
+                } else {
+                    None
                 }
             }
             None => {
@@ -139,22 +385,24 @@ impl MultiPool {
         }
     }
 
-    /// Free an allocation made by [`allocate`](Self::allocate). The caller
-    /// supplies the original request size and origin (as with
-    /// `std::alloc::Allocator::deallocate`, the size is part of the
-    /// contract — this keeps pooled blocks header-free, preserving the
-    /// paper's zero-overhead property).
+    /// Free an allocation made by [`allocate`](Self::allocate). The
+    /// serving class is recovered from the pointer itself (binary search
+    /// over the region table), so spilled blocks return to the class
+    /// that actually served them; `size` is only needed to rebuild the
+    /// system-fallback layout (as with `std::alloc::Allocator`, the
+    /// request size is part of the contract — pooled blocks stay
+    /// header-free, preserving the paper's zero-overhead property).
     ///
     /// # Safety
-    /// `(p, size, origin)` must match a live allocation from this pool.
-    pub unsafe fn deallocate(&mut self, p: NonNull<u8>, size: usize, origin: Origin) {
-        match origin {
-            Origin::Pool(ci) => {
-                debug_assert_eq!(self.class_of(size), Some(ci), "size/class mismatch");
+    /// `(p, size)` must match a live allocation from this pool.
+    pub unsafe fn deallocate(&mut self, p: NonNull<u8>, size: usize) {
+        match self.class_of_ptr(p) {
+            Some(ci) => {
+                debug_assert!(size <= self.class_sizes[ci], "block smaller than request");
                 self.classes[ci].deallocate(p);
             }
-            Origin::System => {
-                let layout = Layout::from_size_align(size.max(1), 16).unwrap();
+            None => {
+                let layout = Layout::from_size_align(size.max(1), CLASS_ALIGN).unwrap();
                 std::alloc::dealloc(p.as_ptr(), layout);
                 self.system_frees += 1;
             }
@@ -162,7 +410,7 @@ impl MultiPool {
     }
 
     fn system_alloc(&mut self, size: usize) -> Option<NonNull<u8>> {
-        let layout = Layout::from_size_align(size.max(1), 16).ok()?;
+        let layout = Layout::from_size_align(size.max(1), CLASS_ALIGN).ok()?;
         let p = NonNull::new(unsafe { std::alloc::alloc(layout) })?;
         self.system_allocs += 1;
         Some(p)
@@ -178,6 +426,16 @@ impl MultiPool {
 
     pub fn class_stats(&self, ci: usize) -> ClassStats {
         self.stats[ci]
+    }
+
+    /// Free blocks currently in class `ci`.
+    pub fn class_free(&self, ci: usize) -> u32 {
+        self.classes[ci].num_free()
+    }
+
+    /// Total cross-class spill events so far (each counted once).
+    pub fn spill_total(&self) -> u64 {
+        self.stats.iter().map(|s| s.spill_in).sum()
     }
 
     /// Fraction of requests served from pools (vs system fallback).
@@ -197,34 +455,28 @@ impl MultiPool {
     }
 }
 
-/// Class index for `size` under `cfg` (shared by both multi-pool flavours).
-#[inline]
-fn class_index(cfg: &MultiPoolConfig, size: usize) -> Option<usize> {
-    if size > cfg.max_class {
-        return None;
-    }
-    let rounded = next_pow2(size.max(cfg.min_class));
-    // min_class = 2^k → index = log2(rounded) - k.
-    Some(rounded.trailing_zeros() as usize - cfg.min_class.trailing_zeros() as usize)
-}
-
-/// Thread-safe sharded mode of the multi-pool: every size class is a
-/// magazine-fronted [`super::sharded::ShardedPool`] ([`MagazinePool`]), so concurrent
-/// callers allocate through `&self` with a thread-local CAS-free fast
-/// path over a core-local shard (the serving framework's multi-tenant
-/// case — many worker threads, mixed request sizes). Set
+/// Thread-safe sharded flavour of the multi-pool: every size class is a
+/// magazine-fronted [`super::sharded::ShardedPool`] ([`MagazinePool`]),
+/// so concurrent callers allocate through `&self` with a thread-local
+/// CAS-free fast path over a core-local shard (the serving framework's
+/// multi-tenant case — many worker threads, mixed request sizes). Set
 /// [`MultiPoolConfig::magazine_depth`] to 0 for the bare-sharded
 /// (uncached) ablation arm.
 ///
-/// Same routing rule and system fallback as [`MultiPool`]; per-class hit
-/// and exhaustion counters are atomics, per-shard hit/steal accounting is
-/// available via [`Self::class_shard_stats`], and the magazine layer's
-/// aggregates via [`Self::magazine_stats`].
+/// Same O(log C) routing rule, spill walk and system fallback as
+/// [`MultiPool`] (see the module docs); per-class hit/exhaustion/spill
+/// counters are atomics, per-shard hit/steal accounting is available via
+/// [`Self::class_shard_stats`], and the magazine layer's aggregates via
+/// [`Self::magazine_stats`].
 pub struct ShardedMultiPool {
     classes: Vec<MagazinePool>,
     class_sizes: Vec<usize>,
+    /// Class regions sorted by base address (pointer→class resolution).
+    regions: Vec<Region>,
     hits: Vec<AtomicU64>,
     exhausted: Vec<AtomicU64>,
+    spill_in: Vec<AtomicU64>,
+    spill_out: Vec<AtomicU64>,
     cfg: MultiPoolConfig,
     pub system_allocs: AtomicU64,
     pub system_frees: AtomicU64,
@@ -236,67 +488,117 @@ impl ShardedMultiPool {
         Self::with_shards(cfg, default_shards())
     }
 
+    /// Fallible [`Self::new`]; delegates to [`Self::try_with_placement`].
+    pub fn try_new(cfg: MultiPoolConfig) -> Result<Self, ConfigError> {
+        Self::try_with_placement(cfg, default_shards(), Arc::new(StealAware::default()))
+    }
+
     /// Default (steal-aware) topology with an explicit shard count.
     pub fn with_shards(cfg: MultiPoolConfig, shards: usize) -> Self {
         Self::with_placement(cfg, shards, Arc::new(StealAware::default()))
     }
 
-    /// Fully explicit constructor: every size class is a magazine-fronted
-    /// [`super::sharded::ShardedPool`] sharing one [`ShardPlacement`]
-    /// topology policy.
+    /// Panicking constructor; delegates to
+    /// [`Self::try_with_placement`].
     pub fn with_placement(
         cfg: MultiPoolConfig,
         shards: usize,
         placement: Arc<dyn ShardPlacement>,
     ) -> Self {
-        assert!(cfg.min_class.is_power_of_two() && cfg.min_class >= 8);
-        assert!(cfg.max_class.is_power_of_two() && cfg.max_class >= cfg.min_class);
-        let mut classes = Vec::new();
-        let mut class_sizes = Vec::new();
-        let mut size = cfg.min_class;
-        while size <= cfg.max_class {
-            let layout = Layout::from_size_align(size, 16).expect("bad class layout");
-            classes.push(MagazinePool::with_layout_placement(
-                layout,
-                cfg.blocks_per_class,
-                shards,
-                Arc::clone(&placement),
-                cfg.magazine_depth,
-            ));
-            class_sizes.push(size);
-            size *= 2;
-        }
+        Self::try_with_placement(cfg, shards, placement).expect("invalid MultiPoolConfig")
+    }
+
+    /// Fully explicit fallible constructor: every size class is a
+    /// magazine-fronted [`super::sharded::ShardedPool`] sharing one
+    /// [`ShardPlacement`] topology policy.
+    pub fn try_with_placement(
+        cfg: MultiPoolConfig,
+        shards: usize,
+        placement: Arc<dyn ShardPlacement>,
+    ) -> Result<Self, ConfigError> {
+        let class_sizes = cfg.class_table()?;
+        let classes: Vec<MagazinePool> = class_sizes
+            .iter()
+            .map(|&size| {
+                let layout = Layout::from_size_align(size, CLASS_ALIGN)
+                    .expect("validated class layout");
+                MagazinePool::with_layout_placement(
+                    layout,
+                    cfg.blocks_per_class,
+                    shards,
+                    Arc::clone(&placement),
+                    cfg.magazine_depth,
+                )
+            })
+            .collect();
+        let regions =
+            sorted_regions(classes.iter().map(|p| (p.region_start(), p.region_bytes())));
         let n = classes.len();
-        Self {
+        Ok(Self {
             classes,
             class_sizes,
+            regions,
             hits: (0..n).map(|_| AtomicU64::new(0)).collect(),
             exhausted: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            spill_in: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            spill_out: (0..n).map(|_| AtomicU64::new(0)).collect(),
             cfg,
             system_allocs: AtomicU64::new(0),
             system_frees: AtomicU64::new(0),
-        }
+        })
     }
 
+    /// Class index for `size` (binary search; `None` = too large).
     #[inline]
     pub fn class_of(&self, size: usize) -> Option<usize> {
-        class_index(&self.cfg, size)
+        route(&self.class_sizes, size)
     }
 
-    /// Allocate `size` bytes; thread-safe (`&self`).
+    /// Class index for a full layout: the size must fit a class *and*
+    /// the alignment must not exceed [`CLASS_ALIGN`] (every class pool
+    /// is built at that alignment).
+    #[inline]
+    pub fn class_of_layout(&self, layout: &Layout) -> Option<usize> {
+        if layout.align() > CLASS_ALIGN {
+            return None;
+        }
+        self.class_of(layout.size())
+    }
+
+    /// Serving class for a pointer previously returned by
+    /// [`allocate`](Self::allocate) (binary search over the
+    /// address-sorted region table), or `None` for system pointers.
+    #[inline]
+    pub fn class_of_ptr(&self, p: NonNull<u8>) -> Option<usize> {
+        resolve(&self.regions, p.as_ptr() as usize)
+    }
+
+    /// Allocate `size` bytes; thread-safe (`&self`). On class
+    /// exhaustion the request spills to up to
+    /// [`MultiPoolConfig::spill_hops`] next-larger classes before the
+    /// system fallback.
     pub fn allocate(&self, size: usize) -> Option<(NonNull<u8>, Origin)> {
         match self.class_of(size) {
             Some(ci) => {
                 if let Some(p) = self.classes[ci].allocate() {
                     self.hits[ci].fetch_add(1, Ordering::Relaxed);
-                    Some((p, Origin::Pool(ci)))
-                } else {
-                    self.exhausted[ci].fetch_add(1, Ordering::Relaxed);
-                    if self.cfg.system_fallback {
-                        self.system_alloc(size).map(|p| (p, Origin::System))
-                    } else {
-                        None
+                    return Some((p, Origin::Pool(ci)));
+                }
+                self.exhausted[ci].fetch_add(1, Ordering::Relaxed);
+                let top =
+                    (ci + 1 + self.cfg.spill_hops as usize).min(self.classes.len());
+                for sj in ci + 1..top {
+                    if let Some(p) = self.classes[sj].allocate() {
+                        self.spill_out[ci].fetch_add(1, Ordering::Relaxed);
+                        self.spill_in[sj].fetch_add(1, Ordering::Relaxed);
+                        self.hits[sj].fetch_add(1, Ordering::Relaxed);
+                        return Some((p, Origin::Pool(sj)));
                     }
+                }
+                if self.cfg.system_fallback {
+                    self.system_alloc(size).map(|p| (p, Origin::System))
+                } else {
+                    None
                 }
             }
             None => {
@@ -309,18 +611,22 @@ impl ShardedMultiPool {
         }
     }
 
-    /// Free an allocation made by [`allocate`](Self::allocate).
+    /// Free an allocation made by [`allocate`](Self::allocate). The
+    /// serving class is recovered from the pointer alone (binary search
+    /// over the address-sorted region table) — no per-alloc class
+    /// bookkeeping, and spilled blocks return to the class that served
+    /// them. `size` only rebuilds the system-fallback layout.
     ///
     /// # Safety
-    /// `(p, size, origin)` must match a live allocation from this pool.
-    pub unsafe fn deallocate(&self, p: NonNull<u8>, size: usize, origin: Origin) {
-        match origin {
-            Origin::Pool(ci) => {
-                debug_assert_eq!(self.class_of(size), Some(ci), "size/class mismatch");
+    /// `(p, size)` must match a live allocation from this pool.
+    pub unsafe fn deallocate(&self, p: NonNull<u8>, size: usize) {
+        match self.class_of_ptr(p) {
+            Some(ci) => {
+                debug_assert!(size <= self.class_sizes[ci], "block smaller than request");
                 self.classes[ci].deallocate(p);
             }
-            Origin::System => {
-                let layout = Layout::from_size_align(size.max(1), 16).unwrap();
+            None => {
+                let layout = Layout::from_size_align(size.max(1), CLASS_ALIGN).unwrap();
                 std::alloc::dealloc(p.as_ptr(), layout);
                 self.system_frees.fetch_add(1, Ordering::Relaxed);
             }
@@ -328,7 +634,7 @@ impl ShardedMultiPool {
     }
 
     fn system_alloc(&self, size: usize) -> Option<NonNull<u8>> {
-        let layout = Layout::from_size_align(size.max(1), 16).ok()?;
+        let layout = Layout::from_size_align(size.max(1), CLASS_ALIGN).ok()?;
         let p = NonNull::new(unsafe { std::alloc::alloc(layout) })?;
         self.system_allocs.fetch_add(1, Ordering::Relaxed);
         Some(p)
@@ -348,6 +654,19 @@ impl ShardedMultiPool {
 
     pub fn class_exhausted(&self, ci: usize) -> u64 {
         self.exhausted[ci].load(Ordering::Relaxed)
+    }
+
+    /// Cross-class spill counters for class `ci`.
+    pub fn class_spill(&self, ci: usize) -> SpillStats {
+        SpillStats {
+            spill_in: self.spill_in[ci].load(Ordering::Relaxed),
+            spill_out: self.spill_out[ci].load(Ordering::Relaxed),
+        }
+    }
+
+    /// Total cross-class spill events (each counted once).
+    pub fn spill_total(&self) -> u64 {
+        self.spill_in.iter().map(|s| s.load(Ordering::Relaxed)).sum()
     }
 
     /// Per-shard hit/steal accounting for one size class.
@@ -391,6 +710,7 @@ impl ShardedMultiPool {
     }
 
     /// Fraction of requests served from pools (vs system fallback).
+    /// Spill serves count as pool hits — they are.
     pub fn pool_hit_rate(&self) -> f64 {
         let hits: u64 = self.hits.iter().map(|h| h.load(Ordering::Relaxed)).sum();
         let total = hits + self.system_allocs.load(Ordering::Relaxed);
@@ -402,12 +722,14 @@ impl ShardedMultiPool {
     }
 
     /// Publish gauges for every size class into `metrics` under `prefix`:
-    /// per-class hits/exhaustion plus each class pool's per-shard
+    /// per-class hits/exhaustion, per-class
+    /// `spill_in`/`spill_out`/`spill_total`, each class pool's per-shard
     /// hit/steal/rehome and magazine gauges (via
-    /// [`MagazinePool::export_metrics`]), the cross-class rehome
-    /// aggregates (`{prefix}.rehomes_total`,
-    /// `{prefix}.rehome_drained_total`) and the cross-class magazine
-    /// aggregates (`{prefix}.magazine_{hits,refills,flushes}_total`,
+    /// [`MagazinePool::export_metrics`]), the cross-class spill aggregate
+    /// (`{prefix}.spill_total`), the cross-class rehome aggregates
+    /// (`{prefix}.rehomes_total`, `{prefix}.rehome_drained_total`) and
+    /// the cross-class magazine aggregates
+    /// (`{prefix}.magazine_{hits,refills,flushes}_total`,
     /// `{prefix}.magazine_cached`).
     pub fn export_metrics(&self, metrics: &crate::metrics::Metrics, prefix: &str) {
         metrics
@@ -416,6 +738,9 @@ impl ShardedMultiPool {
         metrics
             .gauge(&format!("{prefix}.hit_rate_pct"))
             .set((self.pool_hit_rate() * 100.0) as i64);
+        metrics
+            .gauge(&format!("{prefix}.spill_total"))
+            .set(self.spill_total() as i64);
         let mut rehomes = 0u64;
         let mut drained = 0u64;
         let mut mags = MagazineStats::default();
@@ -427,6 +752,16 @@ impl ShardedMultiPool {
             metrics
                 .gauge(&format!("{prefix}.c{size}.exhausted"))
                 .set(self.exhausted[ci].load(Ordering::Relaxed) as i64);
+            let sp = self.class_spill(ci);
+            metrics
+                .gauge(&format!("{prefix}.c{size}.spill_in"))
+                .set(sp.spill_in as i64);
+            metrics
+                .gauge(&format!("{prefix}.c{size}.spill_out"))
+                .set(sp.spill_out as i64);
+            metrics
+                .gauge(&format!("{prefix}.c{size}.spill_total"))
+                .set(sp.total() as i64);
             let s = self.classes[ci].export_metrics(metrics, &format!("{prefix}.c{size}"));
             rehomes += s.total_rehomes();
             drained += s.total_stash_drained();
@@ -459,8 +794,14 @@ mod tests {
             max_class: 256,
             blocks_per_class: 8,
             system_fallback: true,
-            magazine_depth: DEFAULT_MAG_DEPTH,
+            ..Default::default()
         }
+    }
+
+    /// cfg_small with spill disabled — the fail-fast arm the legacy
+    /// fallback tests exercise.
+    fn cfg_no_spill() -> MultiPoolConfig {
+        MultiPoolConfig { spill_hops: 0, ..cfg_small() }
     }
 
     #[test]
@@ -476,13 +817,87 @@ mod tests {
     }
 
     #[test]
+    fn arbitrary_monotone_class_table_routes_by_binary_search() {
+        // Non-power-of-two ladder: 48 and 96 exist, 64 does not.
+        let cfg = MultiPoolConfig {
+            classes: vec![16, 48, 96, 256],
+            blocks_per_class: 4,
+            ..Default::default()
+        };
+        let mp = MultiPool::new(cfg);
+        assert_eq!(mp.num_classes(), 4);
+        assert_eq!(mp.class_size(1), 48);
+        assert_eq!(mp.class_of(17), Some(1)); // → 48
+        assert_eq!(mp.class_of(48), Some(1));
+        assert_eq!(mp.class_of(49), Some(2)); // → 96
+        assert_eq!(mp.class_of(96), Some(2));
+        assert_eq!(mp.class_of(97), Some(3)); // → 256
+        assert_eq!(mp.class_of(257), None);
+    }
+
+    #[test]
+    fn class_table_normalises_to_align_multiples() {
+        let cfg = MultiPoolConfig {
+            classes: vec![8, 24, 100],
+            blocks_per_class: 4,
+            ..Default::default()
+        };
+        let mp = MultiPool::new(cfg); // → 16, 32, 112
+        assert_eq!(mp.class_size(0), 16);
+        assert_eq!(mp.class_size(1), 32);
+        assert_eq!(mp.class_size(2), 112);
+    }
+
+    #[test]
+    fn config_validation_errors() {
+        let bad_min = MultiPoolConfig { min_class: 24, ..Default::default() };
+        assert_eq!(
+            bad_min.validate().unwrap_err(),
+            ConfigError::MinClass { got: 24 }
+        );
+        let bad_max =
+            MultiPoolConfig { min_class: 64, max_class: 32, ..Default::default() };
+        assert_eq!(
+            bad_max.validate().unwrap_err(),
+            ConfigError::MaxClass { min: 64, max: 32 }
+        );
+        // 17 and 24 both normalise to 32: not strictly increasing.
+        let dup = MultiPoolConfig { classes: vec![17, 24], ..Default::default() };
+        assert_eq!(
+            dup.validate().unwrap_err(),
+            ConfigError::NotMonotone { index: 1, prev: 32, next: 32 }
+        );
+        let zero = MultiPoolConfig { blocks_per_class: 0, ..Default::default() };
+        assert_eq!(zero.validate().unwrap_err(), ConfigError::ZeroBlocks);
+        let huge = MultiPoolConfig {
+            classes: vec![usize::MAX / 2],
+            blocks_per_class: 8,
+            ..Default::default()
+        };
+        assert!(matches!(
+            huge.validate().unwrap_err(),
+            ConfigError::RegionOverflow { .. }
+        ));
+        assert!(MultiPool::try_new(MultiPoolConfig {
+            blocks_per_class: 0,
+            ..Default::default()
+        })
+        .is_err());
+        assert!(ShardedMultiPool::try_new(MultiPoolConfig {
+            classes: vec![32, 32],
+            ..Default::default()
+        })
+        .is_err());
+    }
+
+    #[test]
     fn alloc_hits_right_class_and_tracks_waste() {
         let mut mp = MultiPool::new(cfg_small());
         let (p, o) = mp.allocate(20).unwrap();
         assert_eq!(o, Origin::Pool(1)); // 32B class
         assert_eq!(mp.class_stats(1).hits, 1);
         assert_eq!(mp.class_stats(1).internal_waste, 12);
-        unsafe { mp.deallocate(p, 20, o) };
+        unsafe { mp.deallocate(p, 20) };
     }
 
     #[test]
@@ -491,33 +906,88 @@ mod tests {
         let (p, o) = mp.allocate(1000).unwrap();
         assert_eq!(o, Origin::System);
         assert_eq!(mp.system_allocs, 1);
-        unsafe { mp.deallocate(p, 1000, o) };
+        assert_eq!(mp.class_of_ptr(p), None, "system pointer resolves to no class");
+        unsafe { mp.deallocate(p, 1000) };
         assert_eq!(mp.system_frees, 1);
     }
 
     #[test]
-    fn exhausted_class_falls_back() {
+    fn exhausted_class_spills_to_next_larger() {
         let mut mp = MultiPool::new(cfg_small());
         let mut held = Vec::new();
         for _ in 0..8 {
             let (p, o) = mp.allocate(16).unwrap();
             assert_eq!(o, Origin::Pool(0));
-            held.push((p, o));
+            held.push(p);
+        }
+        // Class 0 (16B) is dry; the next request spills into class 1.
+        let (p, o) = mp.allocate(16).unwrap();
+        assert_eq!(o, Origin::Pool(1), "must spill, not fall back");
+        assert_eq!(mp.class_stats(0).exhausted, 1);
+        assert_eq!(mp.class_stats(0).spill_out, 1);
+        assert_eq!(mp.class_stats(1).spill_in, 1);
+        assert_eq!(mp.spill_total(), 1);
+        assert_eq!(mp.system_allocs, 0, "spill must keep the system allocator out");
+        assert_eq!(mp.class_of_ptr(p), Some(1), "spilled block belongs to class 1");
+        unsafe {
+            mp.deallocate(p, 16);
+            for p in held {
+                mp.deallocate(p, 16);
+            }
+        }
+        // The spilled block went back to its serving class.
+        assert_eq!(mp.class_free(0), 8);
+        assert_eq!(mp.class_free(1), 8);
+    }
+
+    #[test]
+    fn spill_walk_is_bounded() {
+        let mut cfg = cfg_small(); // classes 16..256, spill_hops 2
+        cfg.system_fallback = false;
+        let mut mp = MultiPool::new(cfg);
+        // 16B requests drain their own class, then spill-drain exactly
+        // the two classes above it (32/64 B) — 24 blocks in all — and
+        // then fail: 128 B has room but is 3 hops away, past the bound.
+        let mut held = Vec::new();
+        while let Some((p, _)) = mp.allocate(16) {
+            held.push(p);
+        }
+        assert_eq!(held.len(), 24, "own class + two spill hops, nothing more");
+        assert_eq!(mp.class_free(3), 8, "the 128B class never got raided");
+        unsafe {
+            for p in held {
+                mp.deallocate(p, 16);
+            }
+        }
+        for ci in 0..3 {
+            assert_eq!(mp.class_free(ci), 8, "class {ci} whole after drain");
+        }
+    }
+
+    #[test]
+    fn no_spill_exhausted_class_falls_back() {
+        let mut mp = MultiPool::new(cfg_no_spill());
+        let mut held = Vec::new();
+        for _ in 0..8 {
+            let (p, o) = mp.allocate(16).unwrap();
+            assert_eq!(o, Origin::Pool(0));
+            held.push(p);
         }
         let (p, o) = mp.allocate(16).unwrap();
         assert_eq!(o, Origin::System);
         assert_eq!(mp.class_stats(0).exhausted, 1);
+        assert_eq!(mp.spill_total(), 0);
         unsafe {
-            mp.deallocate(p, 16, o);
-            for (p, o) in held {
-                mp.deallocate(p, 16, o);
+            mp.deallocate(p, 16);
+            for p in held {
+                mp.deallocate(p, 16);
             }
         }
     }
 
     #[test]
-    fn no_fallback_mode_fails_clean() {
-        let mut cfg = cfg_small();
+    fn no_fallback_no_spill_mode_fails_clean() {
+        let mut cfg = cfg_no_spill();
         cfg.system_fallback = false;
         let mut mp = MultiPool::new(cfg);
         assert!(mp.allocate(10_000).is_none());
@@ -528,8 +998,30 @@ mod tests {
     }
 
     #[test]
+    fn region_boundary_one_past_the_end_resolves_to_no_class() {
+        // Regression: a pointer exactly one past a class region's last
+        // byte must NOT resolve to that class (half-open ranges), even
+        // though it is the closest region start below it.
+        let mp = MultiPool::new(cfg_small());
+        for ci in 0..mp.num_classes() {
+            let start = mp.classes[ci].raw().mem_start().as_ptr() as usize;
+            let end = start + mp.classes[ci].raw().capacity_bytes();
+            let one_past = NonNull::new(end as *mut u8).unwrap();
+            assert_ne!(
+                mp.class_of_ptr(one_past),
+                Some(ci),
+                "one-past-the-end of class {ci} misclassified"
+            );
+            let first = NonNull::new(start as *mut u8).unwrap();
+            assert_eq!(mp.class_of_ptr(first), Some(ci), "first byte belongs to class {ci}");
+            let last = NonNull::new((end - 1) as *mut u8).unwrap();
+            assert_eq!(mp.class_of_ptr(last), Some(ci), "last byte belongs to class {ci}");
+        }
+    }
+
+    #[test]
     fn hit_rate_accounting() {
-        let mut mp = MultiPool::new(cfg_small());
+        let mut mp = MultiPool::new(cfg_no_spill());
         for _ in 0..9 {
             mp.allocate(16).unwrap(); // 8 pool hits + 1 system
         }
@@ -544,27 +1036,32 @@ mod tests {
         assert_eq!(mp.class_of(257), None);
         assert_eq!(mp.num_classes(), 5);
         assert_eq!(mp.class_size(3), 128);
+        // Layout-aware routing: size fits, alignment gates.
+        let fits = Layout::from_size_align(100, 16).unwrap();
+        assert_eq!(mp.class_of_layout(&fits), Some(3));
+        let over_aligned = Layout::from_size_align(100, 32).unwrap();
+        assert_eq!(mp.class_of_layout(&over_aligned), None);
     }
 
     #[test]
     fn sharded_multi_alloc_free_and_fallback() {
-        let mp = ShardedMultiPool::with_shards(cfg_small(), 2);
+        let mp = ShardedMultiPool::with_shards(cfg_no_spill(), 2);
         let mut held = Vec::new();
         for _ in 0..8 {
             let (p, o) = mp.allocate(16).unwrap();
             assert_eq!(o, Origin::Pool(0));
             assert_eq!(p.as_ptr() as usize % 16, 0, "class blocks are 16-aligned");
-            held.push((p, o));
+            held.push(p);
         }
-        // Class 0 exhausted → system fallback.
+        // Class 0 exhausted, spill disabled → system fallback.
         let (p, o) = mp.allocate(16).unwrap();
         assert_eq!(o, Origin::System);
         assert_eq!(mp.class_exhausted(0), 1);
         assert_eq!(mp.class_hits(0), 8);
         unsafe {
-            mp.deallocate(p, 16, o);
-            for (p, o) in held {
-                mp.deallocate(p, 16, o);
+            mp.deallocate(p, 16);
+            for p in held {
+                mp.deallocate(p, 16);
             }
         }
         assert_eq!(mp.system_frees.load(Ordering::Relaxed), 1);
@@ -573,6 +1070,35 @@ mod tests {
         let s = mp.class_shard_stats(0);
         assert_eq!(s.total_allocs(), 8);
         assert_eq!(s.num_free(), 8);
+    }
+
+    #[test]
+    fn sharded_multi_spills_and_spilled_blocks_free_to_serving_class() {
+        let mp = ShardedMultiPool::with_shards(cfg_small(), 2);
+        let mut held = Vec::new();
+        // Drain class 0 completely (16B class, 8 blocks).
+        for _ in 0..8 {
+            let (p, o) = mp.allocate(16).unwrap();
+            assert_eq!(o, Origin::Pool(0));
+            held.push(p);
+        }
+        // Next 16B requests spill into the 32B class.
+        let (p, o) = mp.allocate(16).unwrap();
+        assert_eq!(o, Origin::Pool(1), "must spill into the next class");
+        assert_eq!(mp.class_spill(0).spill_out, 1);
+        assert_eq!(mp.class_spill(1).spill_in, 1);
+        assert_eq!(mp.spill_total(), 1);
+        assert_eq!(mp.system_allocs.load(Ordering::Relaxed), 0);
+        assert_eq!(mp.class_of_ptr(p), Some(1));
+        unsafe {
+            mp.deallocate(p, 16);
+            for p in held {
+                mp.deallocate(p, 16);
+            }
+        }
+        // Conservation: both classes whole again (magazines count as free).
+        assert_eq!(mp.class_shard_stats(0).num_free(), 8);
+        assert_eq!(mp.class_shard_stats(1).num_free(), 8);
     }
 
     #[test]
@@ -585,7 +1111,7 @@ mod tests {
                 max_class: 256,
                 blocks_per_class: 512,
                 system_fallback: false,
-                magazine_depth: DEFAULT_MAG_DEPTH,
+                ..Default::default()
             },
             4,
         );
@@ -599,17 +1125,17 @@ mod tests {
                     let mut held = Vec::new();
                     for _ in 0..200 {
                         let size = rng.gen_usize(1, 257);
-                        if let Some((p, o)) = mp.allocate(size) {
+                        if let Some((p, _)) = mp.allocate(size) {
                             assert!(
                                 seen.lock().unwrap().insert(p.as_ptr() as usize),
                                 "double handout across threads"
                             );
-                            held.push((p, size, o));
+                            held.push((p, size));
                         }
                     }
-                    for (p, size, o) in held {
+                    for (p, size) in held {
                         seen.lock().unwrap().remove(&(p.as_ptr() as usize));
-                        unsafe { mp.deallocate(p, size, o) };
+                        unsafe { mp.deallocate(p, size) };
                     }
                 });
             }
@@ -623,8 +1149,8 @@ mod tests {
     #[test]
     fn sharded_multi_exports_metrics() {
         let mp = ShardedMultiPool::with_shards(cfg_small(), 2);
-        let (p, o) = mp.allocate(20).unwrap();
-        unsafe { mp.deallocate(p, 20, o) };
+        let (p, _) = mp.allocate(20).unwrap();
+        unsafe { mp.deallocate(p, 20) };
         let m = crate::metrics::Metrics::new();
         mp.export_metrics(&m, "pool.serving");
         let r = m.report();
@@ -632,6 +1158,32 @@ mod tests {
         assert!(r.contains("pool.serving.c32.shards = 2"), "{r}");
         assert!(r.contains("pool.serving.system_allocs = 0"), "{r}");
         assert!(r.contains("pool.serving.hit_rate_pct = 100"), "{r}");
+        assert!(r.contains("pool.serving.spill_total = 0"), "{r}");
+        assert!(r.contains("pool.serving.c32.spill_in = 0"), "{r}");
+        assert!(r.contains("pool.serving.c32.spill_out = 0"), "{r}");
+    }
+
+    #[test]
+    fn spill_gauges_count_events() {
+        let mp = ShardedMultiPool::with_shards(cfg_small(), 2);
+        let mut held = Vec::new();
+        for _ in 0..8 {
+            held.push(mp.allocate(16).unwrap().0);
+        }
+        let spilled = mp.allocate(16).unwrap().0; // spills into c32
+        let m = crate::metrics::Metrics::new();
+        mp.export_metrics(&m, "pool.s");
+        let r = m.report();
+        assert!(r.contains("pool.s.spill_total = 1"), "{r}");
+        assert!(r.contains("pool.s.c16.spill_out = 1"), "{r}");
+        assert!(r.contains("pool.s.c32.spill_in = 1"), "{r}");
+        assert!(r.contains("pool.s.c32.spill_total = 1"), "{r}");
+        unsafe {
+            mp.deallocate(spilled, 16);
+            for p in held {
+                mp.deallocate(p, 16);
+            }
+        }
     }
 
     #[test]
@@ -655,8 +1207,8 @@ mod tests {
         assert!(cached.magazines_enabled(), "cached mode is the default");
         // Warm one class with a pair loop: hits accumulate CAS-free.
         for _ in 0..64 {
-            let (p, o) = cached.allocate(20).unwrap();
-            unsafe { cached.deallocate(p, 20, o) };
+            let (p, _) = cached.allocate(20).unwrap();
+            unsafe { cached.deallocate(p, 20) };
         }
         let ms = cached.magazine_stats();
         assert!(ms.hits > 0, "pairs must ride the magazine: {ms:?}");
@@ -672,16 +1224,16 @@ mod tests {
         cfg.magazine_depth = 0;
         let bare = ShardedMultiPool::with_shards(cfg, 2);
         assert!(!bare.magazines_enabled());
-        let (p, o) = bare.allocate(20).unwrap();
-        unsafe { bare.deallocate(p, 20, o) };
+        let (p, _) = bare.allocate(20).unwrap();
+        unsafe { bare.deallocate(p, 20) };
         assert_eq!(bare.magazine_stats(), MagazineStats::default());
     }
 
     #[test]
     fn magazine_gauges_exported() {
         let mp = ShardedMultiPool::with_shards(cfg_small(), 2);
-        let (p, o) = mp.allocate(20).unwrap();
-        unsafe { mp.deallocate(p, 20, o) };
+        let (p, _) = mp.allocate(20).unwrap();
+        unsafe { mp.deallocate(p, 20) };
         let m = crate::metrics::Metrics::new();
         mp.export_metrics(&m, "pool.serving");
         let r = m.report();
@@ -698,16 +1250,16 @@ mod tests {
         let mut rng = crate::util::Rng::new(2);
         for _ in 0..30 {
             let size = rng.gen_usize(1, 257);
-            let (p, o) = mp.allocate(size).unwrap();
-            all.push((p, size, o));
+            let (p, _) = mp.allocate(size).unwrap();
+            all.push((p, size));
         }
-        let mut addrs: Vec<_> = all.iter().map(|(p, _, _)| p.as_ptr() as usize).collect();
+        let mut addrs: Vec<_> = all.iter().map(|(p, _)| p.as_ptr() as usize).collect();
         addrs.sort_unstable();
         addrs.dedup();
         assert_eq!(addrs.len(), 30);
         unsafe {
-            for (p, size, o) in all {
-                mp.deallocate(p, size, o);
+            for (p, size) in all {
+                mp.deallocate(p, size);
             }
         }
     }

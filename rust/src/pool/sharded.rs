@@ -1009,6 +1009,16 @@ impl ShardedPool {
         self.mem_start.as_ptr() as usize
     }
 
+    /// Full mapped region length in bytes, *including* stride padding —
+    /// the half-open range `[region_start, region_start + region_bytes)`
+    /// contains every pointer this pool can hand out (it is exactly the
+    /// range [`Self::owns`] tests). Address-sorted tables of these
+    /// ranges drive the multi-pool tier's O(log C) pointer→class
+    /// resolution.
+    pub fn region_bytes(&self) -> usize {
+        self.layout.size()
+    }
+
     /// Usable capacity in bytes.
     pub fn capacity_bytes(&self) -> usize {
         self.block_size * self.num_blocks as usize

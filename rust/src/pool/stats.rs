@@ -100,6 +100,28 @@ pub struct ShardStats {
     pub stash_drained: u64,
 }
 
+/// One size class's cross-class spill accounting (multi-pool tier):
+/// when a class exhausts, allocations walk to bounded next-larger
+/// classes instead of failing; the walk is observable from both ends.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SpillStats {
+    /// Allocations this class served on behalf of a smaller, exhausted
+    /// class (it was the spill *target*).
+    pub spill_in: u64,
+    /// Requests routed to this class that a larger class had to serve
+    /// (it was the spill *source*).
+    pub spill_out: u64,
+}
+
+impl SpillStats {
+    /// Spill events touching this class from either side. Summing
+    /// `total()` across classes double-counts (each event is one out +
+    /// one in); a tier-wide total sums `spill_in` only.
+    pub fn total(&self) -> u64 {
+        self.spill_in + self.spill_out
+    }
+}
+
 /// Per-thread magazine-layer accounting, aggregated over a pool's whole
 /// magazine rack (one slot per home-slot lease). All counters are
 /// single-writer (the owning thread) with relaxed mirrors, so they are
@@ -466,6 +488,13 @@ mod tests {
         a.absorb(&MagazineStats { hits: 10, cached: 2, ..Default::default() });
         assert_eq!(a.hits, 100);
         assert_eq!(a.cached, 8);
+    }
+
+    #[test]
+    fn spill_stats_total() {
+        let s = SpillStats { spill_in: 3, spill_out: 2 };
+        assert_eq!(s.total(), 5);
+        assert_eq!(SpillStats::default().total(), 0);
     }
 
     #[test]

@@ -133,5 +133,48 @@ fn steady_state_decode_step_makes_zero_system_allocator_calls() {
         "admission on the malloc arm must hit the system allocator"
     );
     e.run_to_completion(10_000).unwrap();
+
+    // Spill leg (same test fn, same process-global counters): exhausting
+    // a class must NOT mean falling back to the system allocator as long
+    // as a spill class still has room. Build a tiny tier — 8 blocks per
+    // class, uncached CAS path so no magazine stash allocation can muddy
+    // the window — exhaust the 16B class, then keep allocating 16B
+    // requests inside a measured window: every one rides the 32B class
+    // via cross-class spill, with a zero system-allocator delta.
+    use fastpool::pool::{PoolHandle, PooledVec};
+    let h = PoolHandle::builder()
+        .classes([16, 32, 64])
+        .blocks_per_class(8)
+        .shards(1)
+        .magazines(false)
+        .spill(2)
+        .build();
+    let mut held: Vec<PooledVec<u8>> = Vec::with_capacity(8);
+    for _ in 0..8 {
+        held.push(PooledVec::with_capacity(&h, 16)); // drains the 16B class
+    }
+    let mut window: Vec<PooledVec<u8>> = Vec::with_capacity(4);
+    let mp = h.multi().expect("builder handle is pool-backed");
+    assert_eq!(mp.spill_total(), 0, "exhaustion alone must not spill");
+
+    let a0 = ALLOC_CALLS.load(Ordering::SeqCst);
+    let d0 = DEALLOC_CALLS.load(Ordering::SeqCst);
+    for _ in 0..4 {
+        window.push(PooledVec::with_capacity(&h, 16)); // 16B class empty -> spill
+    }
+    window.clear(); // frees resolve the 32B class from the pointer alone
+    let allocs = ALLOC_CALLS.load(Ordering::SeqCst) - a0;
+    let frees = DEALLOC_CALLS.load(Ordering::SeqCst) - d0;
+    assert_eq!(
+        allocs, 0,
+        "spill must absorb exhaustion without a system allocation"
+    );
+    assert_eq!(frees, 0, "spilled blocks must free back to the pool");
+    assert!(
+        mp.spill_total() >= 4,
+        "window allocations must have spilled: {}",
+        mp.spill_total()
+    );
+    drop(held);
 }
 

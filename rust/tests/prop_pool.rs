@@ -11,7 +11,10 @@
 use std::collections::BTreeSet;
 use std::ptr::NonNull;
 
-use fastpool::pool::{AtomicPool, EagerPool, FixedPool, PtrFreeListPool, ShardedPool};
+use fastpool::pool::{
+    AtomicPool, EagerPool, FixedPool, MultiPool, MultiPoolConfig, PtrFreeListPool, ShardedPool,
+    CLASS_ALIGN,
+};
 use fastpool::testkit::{check_seq, PropConfig};
 use fastpool::util::Rng;
 
@@ -246,6 +249,135 @@ fn prop_lifo_order_fixed_pool() {
                         "I5 violated: got {:p}, expected {:p}",
                         got.as_ptr(),
                         expect.as_ptr()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    )
+    .unwrap();
+}
+
+#[test]
+fn prop_binary_search_routing_matches_linear_reference() {
+    // The tier routes size -> class by `partition_point` over the sorted
+    // class table (I7). A linear scan over the same table is the obvious
+    // reference model; the two must agree on *every* size, including the
+    // over-max sizes that must route nowhere. Tables are arbitrary
+    // monotone runs of CLASS_ALIGN multiples, not just powers of two.
+    check_seq(
+        PropConfig { cases: 64, ..Default::default() },
+        |rng| {
+            // Strictly increasing multiples of CLASS_ALIGN: normalization
+            // is the identity on these, so the table survives validation.
+            let n = rng.gen_usize(1, 8);
+            let mut c = CLASS_ALIGN * (1 + rng.gen_usize(0, 4));
+            let mut classes = Vec::with_capacity(n);
+            for _ in 0..n {
+                classes.push(c);
+                c += CLASS_ALIGN * (1 + rng.gen_usize(0, 16));
+            }
+            classes
+        },
+        |classes| {
+            let mp = MultiPool::new(MultiPoolConfig {
+                classes: classes.to_vec(),
+                blocks_per_class: 4,
+                system_fallback: false,
+                magazine_depth: 0,
+                ..Default::default()
+            });
+            let table: Vec<usize> =
+                (0..mp.num_classes()).map(|ci| mp.class_size(ci)).collect();
+            if table != *classes {
+                return Err(format!("table mangled: {table:?} != {classes:?}"));
+            }
+            let max = *table.last().unwrap();
+            for size in 1..=max + 2 * CLASS_ALIGN + 1 {
+                let linear = table.iter().position(|&c| c >= size);
+                let routed = mp.class_of(size);
+                if routed != linear {
+                    return Err(format!(
+                        "size {size}: binary search routed {routed:?}, linear reference {linear:?} (table {table:?})"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    )
+    .unwrap();
+}
+
+/// Alloc op carrying a request size, for the spill-conservation run.
+#[derive(Debug, Clone, Copy)]
+enum MultiOp {
+    Alloc(usize),
+    Free(usize),
+}
+
+#[test]
+fn prop_spill_free_round_trip_conserves_class_free() {
+    // I8: every block handed out — from its home class, a spill class,
+    // or the system allocator — returns to exactly where it came from.
+    // After draining all live allocations, every class's free count is
+    // back at blocks_per_class; nothing leaked into or out of any class.
+    // Sizes are biased to the smallest class so its 4 blocks exhaust and
+    // the spill path (<= 2 hops) runs routinely, not incidentally.
+    check_seq(
+        PropConfig { cases: 96, ..Default::default() },
+        |rng| {
+            let len = rng.gen_usize(1, 300);
+            (0..len)
+                .map(|_| {
+                    if rng.gen_bool(0.65) {
+                        let size = if rng.gen_bool(0.7) {
+                            1 + rng.gen_usize(0, 16) // 16B class: exhausts fast
+                        } else {
+                            1 + rng.gen_usize(0, 160) // any class, incl. over-max
+                        };
+                        MultiOp::Alloc(size)
+                    } else {
+                        MultiOp::Free(rng.gen_usize(0, 64))
+                    }
+                })
+                .collect::<Vec<_>>()
+        },
+        |ops| {
+            const BLOCKS: u32 = 4;
+            let mut mp = MultiPool::new(MultiPoolConfig {
+                min_class: 16,
+                max_class: 128,
+                blocks_per_class: BLOCKS,
+                system_fallback: true,
+                magazine_depth: 0,
+                ..Default::default()
+            });
+            let mut live: Vec<(NonNull<u8>, usize)> = Vec::new();
+            for op in ops {
+                match *op {
+                    MultiOp::Alloc(size) => {
+                        if let Some((p, _)) = mp.allocate(size) {
+                            live.push((p, size));
+                        }
+                    }
+                    MultiOp::Free(k) => {
+                        if !live.is_empty() {
+                            let idx = k % live.len();
+                            let (p, size) = live.swap_remove(idx);
+                            unsafe { mp.deallocate(p, size) };
+                        }
+                    }
+                }
+            }
+            for (p, size) in live.drain(..) {
+                unsafe { mp.deallocate(p, size) };
+            }
+            for ci in 0..mp.num_classes() {
+                let free = mp.class_free(ci);
+                if free != BLOCKS {
+                    return Err(format!(
+                        "class {ci} ({}B): {free}/{BLOCKS} free after full drain (spilled or foreign block mis-homed)",
+                        mp.class_size(ci)
                     ));
                 }
             }
