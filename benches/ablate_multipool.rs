@@ -66,11 +66,14 @@ fn run_multipool(mix: Mix, ops: usize) -> (f64, f64, u64) {
         } else {
             let i = rng.gen_usize(0, live.len());
             let (p, size) = live.swap_remove(i);
+            // SAFETY: `(p, size)` came from `allocate(size)` and was removed from
+            // `live`, so it is freed exactly once.
             unsafe { mp.deallocate(p, size) };
         }
     }
     let ns = t.elapsed_ns() as f64 / ops as f64;
     for (p, size) in live.drain(..) {
+        // SAFETY: the remaining live pairs were never freed in the loop above.
         unsafe { mp.deallocate(p, size) };
     }
     (ns, mp.pool_hit_rate(), mp.total_internal_waste())
@@ -84,16 +87,19 @@ fn run_malloc(mix: Mix, ops: usize) -> f64 {
     for _ in 0..ops {
         if live.is_empty() || (live.len() < LIVE_TARGET && rng.gen_bool(0.5)) {
             let size = sample_size(mix, &mut rng, &zipf);
+            // SAFETY: plain malloc; the pointer only travels to `free`.
             let p = unsafe { libc::malloc(size) } as *mut u8;
             live.push((p, size));
         } else {
             let i = rng.gen_usize(0, live.len());
             let (p, _) = live.swap_remove(i);
+            // SAFETY: `p` came from `malloc` and was removed from `live`.
             unsafe { libc::free(p as *mut libc::c_void) };
         }
     }
     let ns = t.elapsed_ns() as f64 / ops as f64;
     for (p, _) in live.drain(..) {
+        // SAFETY: the remaining malloc'd pointers were never freed above.
         unsafe { libc::free(p as *mut libc::c_void) };
     }
     ns
@@ -142,10 +148,13 @@ fn run_spill(hops: u32, blocks: u32, live_target: usize, ops: usize) -> SpillRun
         } else {
             let i = rng.gen_usize(0, live.len());
             let (p, size) = live.swap_remove(i);
+            // SAFETY: `(p, size)` came from `allocate(size)` and was removed from
+            // `live`, so it is freed exactly once.
             unsafe { mp.deallocate(p, size) };
         }
     }
     for (p, size) in live.drain(..) {
+        // SAFETY: the remaining live pairs were never freed in the loop above.
         unsafe { mp.deallocate(p, size) };
     }
     let spill_total = mp.spill_total();

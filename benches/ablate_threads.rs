@@ -46,6 +46,7 @@ fn bench_locked(threads: usize) -> f64 {
             s.spawn(move || {
                 for _ in 0..OPS_PER_THREAD {
                     if let Some(p) = pool.allocate() {
+                        // SAFETY: `p` came from `allocate` and is freed exactly once.
                         unsafe { pool.deallocate(p) };
                     }
                 }
@@ -82,6 +83,7 @@ fn sharded_run(threads: usize) -> (f64, f64) {
             s.spawn(move || {
                 for _ in 0..OPS_PER_THREAD {
                     if let Some(p) = pool.allocate() {
+                        // SAFETY: `p` came from `allocate` and is freed exactly once.
                         unsafe { pool.deallocate(p) };
                     }
                 }
@@ -98,8 +100,10 @@ fn bench_malloc(threads: usize) -> f64 {
         for _ in 0..threads {
             s.spawn(move || {
                 for _ in 0..OPS_PER_THREAD {
+                    // SAFETY: plain malloc; the pointer is only passed straight to `free`.
                     let p = unsafe { libc::malloc(BLOCK) };
                     std::hint::black_box(p);
+                    // SAFETY: `p` came from `malloc` above and is freed exactly once.
                     unsafe { libc::free(p) };
                 }
             });

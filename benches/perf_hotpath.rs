@@ -50,6 +50,8 @@ impl Arm for FixedArm {
         self.0.allocate().expect("fixed pool sized for the shape").as_ptr() as u64
     }
     fn free(&mut self, t: u64) {
+        // SAFETY: `t` is a token from this arm's `alloc`, freed exactly once
+        // by the harness.
         unsafe { self.0.deallocate(NonNull::new_unchecked(t as *mut u8)) }
     }
 }
@@ -57,9 +59,11 @@ impl Arm for FixedArm {
 struct MallocArm;
 impl Arm for MallocArm {
     fn alloc(&mut self) -> u64 {
+        // SAFETY: plain malloc; the token only travels back to `free`.
         unsafe { libc::malloc(BLOCK) as u64 }
     }
     fn free(&mut self, t: u64) {
+        // SAFETY: `t` came from `malloc` in `alloc`, freed exactly once.
         unsafe { libc::free(t as *mut libc::c_void) }
     }
 }
@@ -70,6 +74,8 @@ impl Arm for AtomicArm {
         self.0.allocate().expect("atomic pool sized for the shape").as_ptr() as u64
     }
     fn free(&mut self, t: u64) {
+        // SAFETY: `t` is a token from this arm's `alloc`, freed exactly once
+        // by the harness.
         unsafe { self.0.deallocate(NonNull::new_unchecked(t as *mut u8)) }
     }
 }
@@ -80,6 +86,8 @@ impl Arm for ShardedArm {
         self.0.allocate().expect("sharded pool sized for the shape").as_ptr() as u64
     }
     fn free(&mut self, t: u64) {
+        // SAFETY: `t` is a token from this arm's `alloc`, freed exactly once
+        // by the harness.
         unsafe { self.0.deallocate(NonNull::new_unchecked(t as *mut u8)) }
     }
 }
@@ -90,6 +98,8 @@ impl Arm for MagazineArm {
         self.0.allocate().expect("magazine pool sized for the shape").as_ptr() as u64
     }
     fn free(&mut self, t: u64) {
+        // SAFETY: `t` is a token from this arm's `alloc`, freed exactly once
+        // by the harness.
         unsafe { self.0.deallocate(NonNull::new_unchecked(t as *mut u8)) }
     }
 }
@@ -228,6 +238,7 @@ fn main() {
     let mag = MagazinePool::with_shards(BLOCK, POOL_BLOCKS, SHARDS, DEFAULT_MAG_DEPTH);
     for _ in 0..n {
         let p = mag.allocate().unwrap();
+        // SAFETY: `p` came from `allocate` and is freed exactly once.
         unsafe { mag.deallocate(black_box(p)) };
     }
     let ms = mag.magazine_stats();

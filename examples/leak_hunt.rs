@@ -24,6 +24,8 @@ fn main() {
     println!("\n=== 2. buffer overrun caught by the post-canary ===");
     let mut pool = GuardedPool::with_blocks(16, 8, GuardConfig::default());
     let p = pool.allocate("overrun.rs:1").unwrap();
+    // SAFETY: the 17th byte lands in the slot's post-guard area — still
+    // inside pool memory, deliberately clobbering the canary.
     unsafe {
         // Write 17 bytes into a 16-byte block — classic off-by-one.
         std::ptr::write_bytes(p.as_ptr(), 0xAB, 17);
@@ -48,6 +50,7 @@ fn main() {
     let mut pool = GuardedPool::with_blocks(16, 8, GuardConfig::paranoid());
     let victim = pool.allocate("live.rs:3").unwrap();
     let _ok = pool.allocate("live.rs:4").unwrap();
+    // SAFETY: `add(16)` lands in the post-guard area — inside pool memory.
     unsafe { victim.as_ptr().add(16).write(0xFF) };
     match pool.check_all() {
         Err(e) => println!("  caught by global sweep: {e}"),
@@ -70,6 +73,7 @@ fn main() {
                 let mut p = FixedPool::with_blocks(64, 1024);
                 for _ in 0..N {
                     let h = p.allocate().unwrap();
+                    // SAFETY: `h` came from `allocate` and is freed exactly once.
                     unsafe { p.deallocate(h) };
                 }
             }

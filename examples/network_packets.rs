@@ -40,6 +40,8 @@ fn main() {
                 while !stop.load(Ordering::Relaxed) {
                     if let Some(idx) = pool.allocate_index() {
                         // Fill a header + payload.
+                        // SAFETY: `idx` is a block this producer exclusively owns until it is
+                        // sent; the slice covers exactly the MTU-sized block.
                         let p = unsafe {
                             std::slice::from_raw_parts_mut(
                                 pool_ptr(&pool, idx),
@@ -74,6 +76,7 @@ fn main() {
                     };
                     match idx {
                         Ok(idx) => {
+                            // SAFETY: the consumer owns `idx` once received; the block is MTU bytes.
                             let p = unsafe {
                                 std::slice::from_raw_parts(pool_ptr(&pool, idx), MTU)
                             };
@@ -133,11 +136,13 @@ fn main() {
                 let mut rng = Rng::new(prod + 11);
                 while !sstop.load(Ordering::Relaxed) {
                     if let Some(ptr) = spool.allocate() {
+                        // SAFETY: `ptr` is an exclusively-owned MTU-sized block from `allocate`.
                         let p = unsafe { std::slice::from_raw_parts_mut(ptr.as_ptr(), MTU) };
                         let len = 64 + rng.gen_usize(0, MTU - 64);
                         p[0..8].copy_from_slice(&(len as u64).to_le_bytes());
                         p[8] = prod as u8;
                         if stx.send(ptr.as_ptr() as usize).is_err() {
+                            // SAFETY: the send failed, so ownership stays here; freed exactly once.
                             unsafe { spool.deallocate(ptr) };
                             break;
                         }
@@ -160,11 +165,14 @@ fn main() {
                 match addr {
                     Ok(addr) => {
                         let ptr = std::ptr::NonNull::new(addr as *mut u8).unwrap();
+                        // SAFETY: the consumer owns the block once its address is received;
+                        // the block is MTU bytes.
                         let p = unsafe { std::slice::from_raw_parts(ptr.as_ptr(), MTU) };
                         let len = u64::from_le_bytes(p[0..8].try_into().unwrap());
                         assert!(len as usize <= MTU, "corrupt packet");
                         // O(1) free: the owning shard is decoded from the
                         // pointer offset (no shard id travels with the packet).
+                        // SAFETY: the consumer owns the block and frees it exactly once.
                         unsafe { spool.deallocate(ptr) };
                         sreceived.fetch_add(1, Ordering::Relaxed);
                     }
@@ -182,6 +190,8 @@ fn main() {
     });
     // Same shutdown-race drain as the atomic arm above.
     while let Ok(addr) = srx.lock().unwrap().try_recv() {
+        // SAFETY: the drain owns every address still in the channel; each
+        // block is freed exactly once.
         unsafe { spool.deallocate(std::ptr::NonNull::new(addr as *mut u8).unwrap()) };
     }
     let secs = t.elapsed_secs();
@@ -226,6 +236,8 @@ fn main() {
             let i = rng.gen_usize(0, live.len());
             // Frees resolve the serving class from the pointer alone.
             let (p, size, _o) = live.swap_remove(i);
+            // SAFETY: `(p, size)` came from `allocate(size)` and was removed from
+            // `live`, so it is freed exactly once.
             unsafe { mp.deallocate(p, size) };
         }
     }
@@ -240,6 +252,7 @@ fn main() {
         mp.spill_total()
     );
     for (p, size, _o) in live.drain(..) {
+        // SAFETY: the remaining live blocks were never freed in the loop above.
         unsafe { mp.deallocate(p, size) };
     }
     println!("drained cleanly");

@@ -25,6 +25,7 @@ fn main() {
     let b = pool.allocate().unwrap();
     println!("alloc -> block {} | watermark={} free={}",
         pool.raw().index_from_addr(b), pool.raw().num_initialized(), pool.num_free());
+    // SAFETY: `a` came from `allocate` and is freed exactly once.
     unsafe { pool.deallocate(a) };
     println!("free block 0     | head of in-band free list is block 0 again");
     let c = pool.allocate().unwrap();

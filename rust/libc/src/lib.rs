@@ -25,6 +25,7 @@ mod tests {
 
     #[test]
     fn malloc_free_roundtrip() {
+        // SAFETY: `p` is non-null (checked), 64 bytes, and freed exactly once.
         unsafe {
             let p = malloc(64) as *mut u8;
             assert!(!p.is_null());

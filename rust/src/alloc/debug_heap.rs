@@ -105,6 +105,8 @@ impl BenchAllocator for DebugHeapAllocator {
         // SAFETY: plain malloc.
         let base = unsafe { libc::malloc(total) } as *mut u8;
         let base = NonNull::new(base)?;
+        // SAFETY: the allocation spans GUARD + size + GUARD bytes; both canary
+        // writes and the payload fill stay inside it.
         unsafe {
             (base.as_ptr() as *mut u64).write_unaligned(PRE);
             core::ptr::write_bytes(base.as_ptr().add(GUARD), FILL_ALLOC, size.max(1));
@@ -114,11 +116,14 @@ impl BenchAllocator for DebugHeapAllocator {
         self.live
             .insert(base.as_ptr() as usize, Record { size: size.max(1), seq: self.seq });
         // Hand out the payload pointer.
+        // SAFETY: `base + GUARD` is inside the allocation, hence non-null.
         let payload = unsafe { NonNull::new_unchecked(base.as_ptr().add(GUARD)) };
         Some(AllocHandle::new(payload, size))
     }
 
     fn free(&mut self, handle: AllocHandle) {
+        // SAFETY: arithmetic only; the result is validated against the live map
+        // before any dereference.
         let base = unsafe { handle.ptr.as_ptr().sub(GUARD) };
         let Some(rec) = self.live.remove(&(base as usize)) else {
             self.violations += 1; // wild/double free
@@ -127,6 +132,8 @@ impl BenchAllocator for DebugHeapAllocator {
         // Local verification (always, like the CRT).
         self.verify_block(base, rec.size);
         // Fill freed payload.
+        // SAFETY: `rec` proves `base` is a live allocation of `rec.size` payload
+        // bytes starting at offset GUARD.
         unsafe { core::ptr::write_bytes(base.add(GUARD), FILL_FREE, rec.size) };
         if self.level == DebugLevel::Full {
             self.verify_heap();
@@ -149,6 +156,7 @@ mod tests {
     fn roundtrip_and_fills() {
         let mut a = DebugHeapAllocator::new(DebugLevel::Light);
         let h = a.alloc(32).unwrap();
+        // SAFETY: the payload is 32 readable bytes filled by `alloc`.
         unsafe {
             for i in 0..32 {
                 assert_eq!(h.ptr.as_ptr().add(i).read(), FILL_ALLOC);
@@ -164,6 +172,7 @@ mod tests {
     fn detects_overrun_on_free() {
         let mut a = DebugHeapAllocator::new(DebugLevel::Light);
         let h = a.alloc(16).unwrap();
+        // SAFETY: `add(16)` lands in the post-guard area of this allocation.
         unsafe { h.ptr.as_ptr().add(16).write(0x00) }; // clobber post guard
         a.free(h);
         assert_eq!(a.violations, 1);
@@ -196,6 +205,7 @@ mod tests {
     fn full_level_catches_live_corruption_on_next_op() {
         let mut a = DebugHeapAllocator::new(DebugLevel::Full);
         let h1 = a.alloc(16).unwrap();
+        // SAFETY: `add(16)` lands in the post-guard area of this allocation.
         unsafe { h1.ptr.as_ptr().add(16).write(0xAA) }; // corrupt, keep live
         let _h2 = a.alloc(16); // sweep sees the corruption
         assert!(a.violations >= 1);

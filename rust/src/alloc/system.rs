@@ -108,6 +108,8 @@ pub mod adapters {
 
         #[inline]
         fn free(&mut self, handle: AllocHandle) {
+            // SAFETY: the handle wraps a pointer this pool handed out; the adapter
+            // contract frees each handle exactly once.
             unsafe { self.pool.deallocate(handle.ptr) };
         }
     }
@@ -135,6 +137,8 @@ pub mod adapters {
 
         #[inline]
         fn free(&mut self, handle: AllocHandle) {
+            // SAFETY: the handle wraps a pointer this pool handed out; the adapter
+            // contract frees each handle exactly once.
             unsafe { self.pool.deallocate(handle.ptr) };
         }
     }
@@ -149,6 +153,7 @@ mod tests {
     fn malloc_roundtrip() {
         let mut a = SystemAllocator::new();
         let h = a.alloc(128).unwrap();
+        // SAFETY: the allocation is 128 bytes; the write stays in bounds.
         unsafe { std::ptr::write_bytes(h.ptr.as_ptr(), 0x5A, 128) };
         a.free(h);
         assert_eq!(a.total_allocs, 1);
@@ -185,6 +190,7 @@ mod tests {
             let mut held = Vec::new();
             for _ in 0..16 {
                 let h = a.alloc(256).expect(a.name());
+                // SAFETY: the block is at least one byte and exclusively owned.
                 unsafe { h.ptr.as_ptr().write(0x42) };
                 held.push(h);
             }

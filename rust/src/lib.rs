@@ -12,6 +12,15 @@
 //! * Serving framework — [`kvcache`] block manager, [`coordinator`]
 //!   continuous-batching scheduler, [`runtime`] PJRT executor for the
 //!   AOT-compiled JAX/Pallas model (`python/compile`).
+//! * [`sync`] — the concurrency shim + vendored model checker: the pool
+//!   family's lock-free protocols import their atomics from here, so
+//!   `--cfg pallas_model` can replay them under exhaustive bounded
+//!   interleaving (see `tests/model_check.rs`).
+
+// Static-analysis wall: every `unsafe` block must carry a `// SAFETY:`
+// comment stating the invariant it relies on; CI runs clippy with this
+// lint denied so the audit cannot rot.
+#![deny(clippy::undocumented_unsafe_blocks)]
 
 pub mod alloc;
 pub mod coordinator;
@@ -22,6 +31,7 @@ pub mod cli;
 pub mod config;
 pub mod metrics;
 pub mod pool;
+pub mod sync;
 pub mod testkit;
 pub mod util;
 pub mod workload;

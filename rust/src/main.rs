@@ -158,6 +158,7 @@ fn cmd_pool_demo(args: &Args) -> Result<(), String> {
     );
     let t = Timer::start();
     for p in ptrs {
+        // SAFETY: every pointer came from `allocate` and is freed exactly once.
         unsafe { pool.deallocate(p) };
     }
     let free_ns = t.elapsed_ns();

@@ -18,24 +18,22 @@
 //!   creation remains O(1) with no loops, exactly the paper's property.
 //!
 //! Both paths are loop-free except for the inherent CAS retry.
+//!
+//! The protocol itself — the state transitions between the head word,
+//! the side table, and the watermark — lives in
+//! [`crate::pool::proto::head`] as explicit state machines
+//! ([`Pop`]/[`Push`]/[`PushChain`]/[`Detach`]/[`Claim`]), which this
+//! module drives to completion in inlined loops. The model checker
+//! (`tests/model_check.rs`) interleaves the *same* machines step by
+//! step, so the code proved free of double handouts is the code that
+//! runs here.
 
 use core::alloc::Layout;
 use core::ptr::NonNull;
-use core::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 
+use crate::pool::proto::head::{Claim, Detach, Pop, Push, PushChain, TaggedHead, NIL};
+use crate::sync::{AtomicU32, Ordering};
 use crate::util::align::align_up;
-
-const NIL: u32 = u32::MAX;
-
-#[inline(always)]
-fn pack(index: u32, tag: u32) -> u64 {
-    ((tag as u64) << 32) | index as u64
-}
-
-#[inline(always)]
-fn unpack(v: u64) -> (u32, u32) {
-    (v as u32, (v >> 32) as u32)
-}
 
 /// Lock-free fixed-size pool. `Sync`: share by reference or `Arc`.
 pub struct AtomicPool {
@@ -46,8 +44,8 @@ pub struct AtomicPool {
     /// `with_layout`); `None` for `over_region` pools, whose region is
     /// owned by the caller (e.g. one shard of a `ShardedPool`).
     owned: Option<Layout>,
-    /// Packed (head index | NIL, aba tag).
-    head: AtomicU64,
+    /// Tagged Treiber head: packed (top index | NIL, aba tag).
+    head: TaggedHead,
     /// Blocks 0..watermark have been threaded at least once.
     watermark: AtomicU32,
     /// Side-table next links (see module docs).
@@ -57,7 +55,12 @@ pub struct AtomicPool {
     free: AtomicU32,
 }
 
+// SAFETY: all shared state is atomic or immutable after construction; the
+// region pointer is either owned (freed once in Drop) or pinned by the
+// `over_region` caller contract, so the pool may move and be shared freely.
 unsafe impl Send for AtomicPool {}
+// SAFETY: every method takes `&self` and synchronises through the packed
+// head CAS; no interior state is reachable without going through atomics.
 unsafe impl Sync for AtomicPool {}
 
 impl AtomicPool {
@@ -86,6 +89,7 @@ impl AtomicPool {
             .checked_mul(num_blocks as usize)
             .expect("pool region size overflows usize");
         let region_layout = Layout::from_size_align(bytes, align).expect("bad layout");
+        // SAFETY: `region_layout` has non-zero size (num_blocks > 0 asserted above).
         let region = NonNull::new(unsafe { std::alloc::alloc(region_layout) })
             .expect("pool region allocation failed");
         // SAFETY: we just allocated `bytes = bs * num_blocks` at `region`
@@ -115,7 +119,7 @@ impl AtomicPool {
             block_size,
             mem_start: region,
             owned: None,
-            head: AtomicU64::new(pack(NIL, 0)),
+            head: TaggedHead::new(),
             watermark: AtomicU32::new(0),
             next,
             free: AtomicU32::new(num_blocks),
@@ -125,6 +129,7 @@ impl AtomicPool {
     #[inline(always)]
     fn addr_from_index(&self, i: u32) -> NonNull<u8> {
         debug_assert!(i < self.num_blocks);
+        // SAFETY: `i < num_blocks`, so the offset stays inside the region and the result is non-null.
         unsafe {
             NonNull::new_unchecked(self.mem_start.as_ptr().add(i as usize * self.block_size))
         }
@@ -141,46 +146,22 @@ impl AtomicPool {
         self.allocate_index().map(|i| self.addr_from_index(i))
     }
 
-    /// One Treiber pop (CAS loop). `None` when the stack is empty.
+    /// One Treiber pop ([`Pop`] machine, run to completion). `None` when
+    /// the stack is empty.
     #[inline]
     fn pop_stack(&self) -> Option<u32> {
-        let mut cur = self.head.load(Ordering::Acquire);
-        loop {
-            let (idx, tag) = unpack(cur);
-            if idx == NIL {
-                return None;
-            }
-            let nxt = self.next[idx as usize].load(Ordering::Relaxed);
-            match self.head.compare_exchange_weak(
-                cur,
-                pack(nxt, tag.wrapping_add(1)),
-                Ordering::AcqRel,
-                Ordering::Acquire,
-            ) {
-                Ok(_) => {
-                    self.free.fetch_sub(1, Ordering::Relaxed);
-                    return Some(idx);
-                }
-                Err(actual) => cur = actual,
-            }
-        }
+        let idx = Pop::new().run(&self.head, &self.next)?;
+        self.free.fetch_sub(1, Ordering::Relaxed);
+        Some(idx)
     }
 
     /// Claim up to `want` never-threaded blocks from the lazy-init
-    /// watermark with one `fetch_add`, writing indices into `out`.
-    /// Returns the number claimed (overshoot is undone).
+    /// watermark ([`Claim`] machine: one `fetch_add`, overshoot undone),
+    /// writing indices into `out`. Returns the number claimed.
     #[inline]
     fn claim_watermark(&self, want: u32, out: &mut [u32]) -> u32 {
         debug_assert!(want as usize <= out.len());
-        let w = self.watermark.fetch_add(want, Ordering::Relaxed);
-        let avail = self.num_blocks.saturating_sub(w).min(want);
-        if avail < want {
-            // Undo overshoot so the counter cannot wrap over many failures.
-            self.watermark.fetch_sub(want - avail, Ordering::Relaxed);
-        }
-        for (i, slot) in out.iter_mut().take(avail as usize).enumerate() {
-            *slot = w + i as u32;
-        }
+        let avail = Claim::new(want, self.num_blocks).run(&self.watermark, out);
         if avail > 0 {
             self.free.fetch_sub(avail, Ordering::Relaxed);
         }
@@ -220,38 +201,11 @@ impl AtomicPool {
         if want == 0 {
             return 0;
         }
-        let mut got = 0u32;
-        // Chain-pop from the stack.
-        let mut cur = self.head.load(Ordering::Acquire);
-        loop {
-            let (idx, tag) = unpack(cur);
-            if idx == NIL {
-                break;
-            }
-            // Walk up to `want` links. The values read may be stale; the
-            // head CAS below validates the whole chain (any interleaved
-            // pop or push bumps the tag and fails it).
-            out[0] = idx;
-            let mut n = 1u32;
-            let mut tail_next = self.next[idx as usize].load(Ordering::Relaxed);
-            while n < want && tail_next != NIL && tail_next < self.num_blocks {
-                out[n as usize] = tail_next;
-                tail_next = self.next[tail_next as usize].load(Ordering::Relaxed);
-                n += 1;
-            }
-            match self.head.compare_exchange_weak(
-                cur,
-                pack(tail_next, tag.wrapping_add(1)),
-                Ordering::AcqRel,
-                Ordering::Acquire,
-            ) {
-                Ok(_) => {
-                    self.free.fetch_sub(n, Ordering::Relaxed);
-                    got = n;
-                    break;
-                }
-                Err(actual) => cur = actual,
-            }
+        // Chain-pop from the stack ([`Detach`] machine: walk the links,
+        // then one tag-guarded CAS past the whole chain).
+        let mut got = Detach::new(want).run(&self.head, &self.next, out);
+        if got > 0 {
+            self.free.fetch_sub(got, Ordering::Relaxed);
         }
         // Top up from the watermark.
         if got < want {
@@ -280,23 +234,8 @@ impl AtomicPool {
     /// Lock-free deallocate by index (safe: index validity is checked).
     pub fn deallocate_index(&self, idx: u32) {
         assert!(idx < self.num_blocks, "deallocate_index: {idx} out of range");
-        let mut cur = self.head.load(Ordering::Acquire);
-        loop {
-            let (head_idx, tag) = unpack(cur);
-            self.next[idx as usize].store(head_idx, Ordering::Relaxed);
-            match self.head.compare_exchange_weak(
-                cur,
-                pack(idx, tag.wrapping_add(1)),
-                Ordering::AcqRel,
-                Ordering::Acquire,
-            ) {
-                Ok(_) => {
-                    self.free.fetch_add(1, Ordering::Relaxed);
-                    return;
-                }
-                Err(actual) => cur = actual,
-            }
-        }
+        Push::new(idx).run(&self.head, &self.next);
+        self.free.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Lock-free deallocate of a whole batch: the indices are pre-linked
@@ -316,30 +255,11 @@ impl AtomicPool {
         for &i in idxs {
             assert!(i < self.num_blocks, "deallocate_indices: {i} out of range");
         }
-        // Pre-link the chain outside the CAS window; only the tail's next
-        // pointer depends on the observed head.
-        for w in idxs.windows(2) {
-            self.next[w[0] as usize].store(w[1], Ordering::Relaxed);
-        }
-        let first = idxs[0];
-        let last = *idxs.last().unwrap();
-        let mut cur = self.head.load(Ordering::Acquire);
-        loop {
-            let (head_idx, tag) = unpack(cur);
-            self.next[last as usize].store(head_idx, Ordering::Relaxed);
-            match self.head.compare_exchange_weak(
-                cur,
-                pack(first, tag.wrapping_add(1)),
-                Ordering::AcqRel,
-                Ordering::Acquire,
-            ) {
-                Ok(_) => {
-                    self.free.fetch_add(idxs.len() as u32, Ordering::Relaxed);
-                    return;
-                }
-                Err(actual) => cur = actual,
-            }
-        }
+        // [`PushChain`] machine: pre-link the chain outside the CAS
+        // window (only the tail's next pointer depends on the observed
+        // head), then publish with one CAS per retry.
+        PushChain::new(idxs).run(&self.head, &self.next);
+        self.free.fetch_add(idxs.len() as u32, Ordering::Relaxed);
     }
 
     pub fn num_blocks(&self) -> u32 {
@@ -368,13 +288,14 @@ impl AtomicPool {
     /// Current ABA generation tag (bumps on every successful head CAS).
     /// Exposed for the ABA regression tests.
     pub fn aba_tag(&self) -> u32 {
-        unpack(self.head.load(Ordering::Relaxed)).1
+        self.head.tag()
     }
 }
 
 impl Drop for AtomicPool {
     fn drop(&mut self) {
         if let Some(layout) = self.owned {
+            // SAFETY: `owned` is only `Some` when this pool allocated the region with exactly this layout; Drop runs once.
             unsafe { std::alloc::dealloc(self.mem_start.as_ptr(), layout) };
         }
     }
@@ -385,13 +306,6 @@ mod tests {
     use super::*;
     use std::collections::BTreeSet;
     use std::sync::Arc;
-
-    #[test]
-    fn pack_unpack_roundtrip() {
-        for (i, t) in [(0u32, 0u32), (5, 7), (NIL, u32::MAX), (123456, 654321)] {
-            assert_eq!(unpack(pack(i, t)), (i, t));
-        }
-    }
 
     #[test]
     fn single_thread_semantics_match_raw_pool() {
@@ -410,6 +324,7 @@ mod tests {
         let p = AtomicPool::with_blocks(16, 4);
         let a = p.allocate().unwrap();
         let _b = p.allocate().unwrap();
+        // SAFETY: `a` came from this pool's `allocate` and is freed exactly once.
         unsafe { p.deallocate(a) };
         assert_eq!(p.allocate().unwrap().as_ptr(), a.as_ptr());
     }
@@ -419,6 +334,7 @@ mod tests {
         let p = AtomicPool::with_blocks(8, 4);
         let a = p.allocate_index().unwrap();
         assert_eq!(a, 0); // first from watermark
+        // SAFETY: index `a` is an outstanding allocation of this pool, freed exactly once.
         unsafe { p.deallocate(p.addr_from_index(a)) };
         // Freed block goes to the stack and is reused before the watermark
         // advances further.
@@ -444,6 +360,7 @@ mod tests {
                                 // Stamp the whole block with the thread id and
                                 // re-check before freeing — detects overlap.
                                 let p = pool.addr_from_index(idx);
+                                // SAFETY: `idx` was just allocated and is exclusively held, so the 64-byte block is writable.
                                 unsafe {
                                     std::ptr::write_bytes(p.as_ptr(), t as u8, 64);
                                 }
@@ -453,6 +370,7 @@ mod tests {
                             let i = rng.gen_usize(0, held.len());
                             let idx = held.swap_remove(i);
                             let p = pool.addr_from_index(idx);
+                            // SAFETY: `idx` is still held by this thread, so the block is readable and unaliased.
                             unsafe {
                                 for off in 0..64 {
                                     assert_eq!(
@@ -556,9 +474,11 @@ mod tests {
         let mut buf = vec![0u8; 16 * 8];
         let region = NonNull::new(buf.as_mut_ptr()).unwrap();
         {
+            // SAFETY: `buf` outlives the pool and is not touched through any other path while borrowed.
             let p = unsafe { AtomicPool::over_region(region, 16, 8) };
             let a = p.allocate().unwrap();
             assert!(a.as_ptr() as usize >= buf.as_ptr() as usize);
+            // SAFETY: `a` came from this pool's `allocate` and is freed exactly once.
             unsafe { p.deallocate(a) };
         } // drop: must NOT dealloc `buf`'s storage
         buf[0] = 0xEE; // still writable
@@ -727,6 +647,7 @@ mod tests {
         let p = AtomicPool::with_blocks(8, 2);
         let mut last = p.aba_tag();
         let a = p.allocate().unwrap(); // watermark path: no CAS, tag unchanged
+        // SAFETY: `a` came from this pool's `allocate` and is freed exactly once.
         unsafe { p.deallocate(a) };
         let t1 = p.aba_tag();
         assert_ne!(t1, last, "free must bump the ABA tag");

@@ -22,6 +22,8 @@ pub struct EagerPool {
     layout: Layout,
 }
 
+// SAFETY: the pool owns its region exclusively and holds no thread-affine state;
+// it is not `Sync`, so `&mut` methods keep the raw pointers single-threaded.
 unsafe impl Send for EagerPool {}
 
 impl EagerPool {
@@ -33,9 +35,11 @@ impl EagerPool {
         let bs = align_up(block_size.max(4), align);
         let bytes = bs * num_blocks as usize;
         let layout = Layout::from_size_align(bytes, align).expect("bad layout");
+        // SAFETY: `layout` has non-zero size (`num_blocks > 0` asserted above).
         let region = NonNull::new(unsafe { std::alloc::alloc(layout) })
             .expect("pool region allocation failed");
         // THE LOOP: thread block i → i+1 for all blocks up front.
+        // SAFETY: each write targets the first 4 bytes of block `i`, inside the freshly allocated region.
         unsafe {
             for i in 0..num_blocks {
                 let p = region.as_ptr().add(i as usize * bs) as *mut u32;
@@ -54,6 +58,7 @@ impl EagerPool {
 
     #[inline(always)]
     fn addr_from_index(&self, i: u32) -> NonNull<u8> {
+        // SAFETY: callers pass `i < num_blocks`, so the offset stays inside the region and is non-null.
         unsafe {
             NonNull::new_unchecked(self.mem_start.as_ptr().add(i as usize * self.block_size))
         }
@@ -73,6 +78,7 @@ impl EagerPool {
         let ret = self.next?;
         self.num_free -= 1;
         self.next = if self.num_free != 0 {
+            // SAFETY: `ret` is a free block, so its first 4 bytes hold the in-band next index.
             let idx = unsafe { (ret.as_ptr() as *const u32).read_unaligned() };
             if idx < self.num_blocks {
                 Some(self.addr_from_index(idx))
@@ -115,6 +121,7 @@ impl EagerPool {
 
 impl Drop for EagerPool {
     fn drop(&mut self) {
+        // SAFETY: the region was allocated in `with_blocks` with exactly this layout; Drop runs once.
         unsafe { std::alloc::dealloc(self.mem_start.as_ptr(), self.layout) };
     }
 }
@@ -141,6 +148,7 @@ mod tests {
         for _ in 0..100 {
             let a = p.allocate().unwrap();
             let b = p.allocate().unwrap();
+            // SAFETY: `a` and `b` came from this pool's `allocate` and are freed exactly once.
             unsafe {
                 p.deallocate(a);
                 p.deallocate(b);
@@ -154,6 +162,7 @@ mod tests {
         let mut p = EagerPool::with_blocks(8, 4);
         let a = p.allocate().unwrap();
         let b = p.allocate().unwrap();
+        // SAFETY: `a` and `b` came from this pool's `allocate` and are freed exactly once.
         unsafe {
             p.deallocate(a);
             p.deallocate(b);
@@ -170,6 +179,7 @@ mod tests {
             held.push(p.allocate().unwrap());
         }
         for ptr in held.drain(8..) {
+            // SAFETY: each drained pointer is a unique outstanding allocation of this pool.
             unsafe { p.deallocate(ptr) };
         }
         for _ in 0..8 {

@@ -66,6 +66,7 @@ impl FixedPool {
         let layout = Layout::from_size_align(bytes, config.align).expect("bad layout");
         // SAFETY: layout has non-zero size (num_blocks > 0 checked by RawPool).
         assert!(config.num_blocks > 0, "pool must have at least one block");
+        // SAFETY: `layout` has non-zero size (`num_blocks > 0` asserted on the line above).
         let region = unsafe { std::alloc::alloc(layout) };
         let region = NonNull::new(region).expect("pool region allocation failed");
         // SAFETY: we own `region` for `layout.size()` bytes.
@@ -182,6 +183,7 @@ impl Drop for FixedPool {
     fn drop(&mut self) {
         // O(1) destroy (paper's DestroyPool): free the region; no per-block
         // work. Leak detection is GuardedPool's job.
+        // SAFETY: the pool allocated the region with exactly this layout in `new`; Drop runs once.
         unsafe { std::alloc::dealloc(self.raw.mem_start().as_ptr(), self.layout) };
     }
 }
@@ -207,6 +209,7 @@ mod tests {
         let b = p.allocate().unwrap();
         assert_ne!(a.as_ptr(), b.as_ptr());
         assert_eq!(p.num_used(), 2);
+        // SAFETY: `a` and `b` came from this pool's `allocate` and are freed exactly once.
         unsafe {
             p.deallocate(a);
             p.deallocate(b);
@@ -247,9 +250,11 @@ mod tests {
         let ptrs: Vec<_> = (0..8).map(|_| p.allocate().unwrap()).collect();
         // Scribble over every byte of every block (user data).
         for ptr in &ptrs {
+            // SAFETY: `ptr` is an outstanding allocation, so all 64 bytes of the block are writable user data.
             unsafe { std::ptr::write_bytes(ptr.as_ptr(), 0xEE, 64) };
         }
         for ptr in ptrs {
+            // SAFETY: each pointer came from this pool's `allocate` and is freed exactly once.
             unsafe { p.deallocate(ptr) };
         }
         // Pool must be fully reusable.
@@ -265,6 +270,8 @@ mod tests {
         let a = p.allocate().unwrap();
         let mut foreign = [0u8; 16];
         let f = NonNull::new(foreign.as_mut_ptr()).unwrap();
+        // SAFETY: `f` and `mis` are deliberately invalid — `deallocate_checked` must reject them
+        // without dereferencing; `a + 3` stays inside the region, hence non-null.
         unsafe {
             assert!(!p.deallocate_checked(f));
             let mis = NonNull::new_unchecked(a.as_ptr().add(3));
@@ -280,6 +287,7 @@ mod tests {
         let a = p.allocate().unwrap();
         let _b = p.allocate().unwrap();
         assert!(p.allocate().is_none());
+        // SAFETY: `a` came from this pool's `allocate` and is freed exactly once.
         unsafe { p.deallocate(a) };
         let s = p.stats();
         assert_eq!(s.total_allocs, 2);
@@ -296,6 +304,7 @@ mod tests {
         let ptrs: Vec<_> = (0..100).map(|_| p.allocate().unwrap()).collect();
         assert!(p.is_full());
         for ptr in ptrs {
+            // SAFETY: each pointer came from this pool's `allocate` and is freed exactly once.
             unsafe { p.deallocate(ptr) };
         }
         assert!(p.is_empty());

@@ -23,6 +23,8 @@ pub struct PtrFreeListPool {
     layout: Layout,
 }
 
+// SAFETY: the pool owns its region exclusively and holds no thread-affine state;
+// it is not `Sync`, so `&mut` methods keep the raw pointers single-threaded.
 unsafe impl Send for PtrFreeListPool {}
 
 impl PtrFreeListPool {
@@ -33,9 +35,11 @@ impl PtrFreeListPool {
         let bs = align_up(block_size.max(core::mem::size_of::<*mut u8>()), align);
         let bytes = bs * num_blocks as usize;
         let layout = Layout::from_size_align(bytes, align).expect("bad layout");
+        // SAFETY: `layout` has non-zero size (`num_blocks > 0` asserted by the caller path).
         let region = NonNull::new(unsafe { std::alloc::alloc(layout) })
             .expect("pool region allocation failed");
         // Thread every block: block i points to block i+1; last → null.
+        // SAFETY: every write targets the first pointer-sized bytes of block `i`, inside the freshly allocated region.
         unsafe {
             for i in 0..num_blocks as usize {
                 let p = region.as_ptr().add(i * bs) as *mut *mut u8;
@@ -90,6 +94,7 @@ impl PtrFreeListPool {
 
 impl Drop for PtrFreeListPool {
     fn drop(&mut self) {
+        // SAFETY: the region was allocated in `with_blocks` with exactly this layout; Drop runs once.
         unsafe { std::alloc::dealloc(self.mem_start.as_ptr(), self.layout) };
     }
 }
@@ -120,6 +125,7 @@ mod tests {
     fn lifo_reuse() {
         let mut p = PtrFreeListPool::with_blocks(16, 4);
         let a = p.allocate().unwrap();
+        // SAFETY: `a` came from this pool's `allocate` and is freed exactly once.
         unsafe { p.deallocate(a) };
         assert_eq!(p.allocate().unwrap().as_ptr(), a.as_ptr());
     }
@@ -136,6 +142,7 @@ mod tests {
                 }
             } else {
                 let i = rng.gen_usize(0, live.len());
+                // SAFETY: the pointer was drawn from `live`, so it is a unique outstanding allocation.
                 unsafe { p.deallocate(live.swap_remove(i)) };
             }
             assert_eq!(p.num_free() as usize, 64 - live.len());

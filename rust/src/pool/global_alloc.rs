@@ -163,6 +163,8 @@ impl PooledGlobalAlloc {
         let existing = self.classes[ci].load(Ordering::Acquire);
         if !existing.is_null() {
             self.creating.store(false, Ordering::Release);
+            // SAFETY: class pools are created once and never freed (leaked on
+            // purpose), so a non-null pointer is valid for the program's lifetime.
             return unsafe { &*existing };
         }
         let block_size = 1usize << (MIN_SHIFT + ci as u32);
@@ -183,6 +185,7 @@ impl PooledGlobalAlloc {
             if p.is_null() {
                 continue;
             }
+            // SAFETY: non-null class pointers reference leaked, never-freed pools.
             let pool = unsafe { &*p };
             table.entries[table.len] = RangeEntry {
                 start: pool.region_start(),
@@ -200,6 +203,7 @@ impl PooledGlobalAlloc {
         self.creating.store(false, Ordering::Release);
         // `old` is intentionally leaked (concurrent readers; bounded).
         let _ = old;
+        // SAFETY: `fresh` was just leaked via `Box::into_raw` and is never freed.
         unsafe { &*fresh }
     }
 
@@ -213,6 +217,8 @@ impl PooledGlobalAlloc {
         if table.is_null() {
             return None;
         }
+        // SAFETY: range tables are only ever swapped in, never freed (leaked;
+        // see `build_class`), so a non-null snapshot stays valid.
         let table = unsafe { &*table };
         let entries = &table.entries[..table.len];
         let a = ptr as usize;
@@ -300,6 +306,8 @@ mod tests {
     fn alloc_dealloc_roundtrip() {
         let ga = PooledGlobalAlloc::new(64);
         let layout = Layout::from_size_align(100, 8).unwrap();
+        // SAFETY: `p` is non-null and sized for `layout`; write stays in bounds
+        // and the pointer is freed exactly once with the same layout.
         unsafe {
             let p = ga.alloc(layout);
             assert!(!p.is_null());
@@ -315,6 +323,7 @@ mod tests {
     fn oversize_uses_system() {
         let ga = PooledGlobalAlloc::new(8);
         let layout = Layout::from_size_align(1 << 20, 8).unwrap();
+        // SAFETY: `p` is non-null and freed once with the allocating layout.
         unsafe {
             let p = ga.alloc(layout);
             assert!(!p.is_null());
@@ -327,6 +336,7 @@ mod tests {
     fn exhaustion_falls_back_and_frees_correctly() {
         let ga = PooledGlobalAlloc::new(2);
         let layout = Layout::from_size_align(32, 8).unwrap();
+        // SAFETY: each pointer is freed exactly once with its allocating layout.
         unsafe {
             let a = ga.alloc(layout);
             let b = ga.alloc(layout);
@@ -353,6 +363,7 @@ mod tests {
         let ga = PooledGlobalAlloc::new(2);
         let l32 = Layout::from_size_align(32, 8).unwrap();
         let l64 = Layout::from_size_align(64, 8).unwrap();
+        // SAFETY: each pointer is freed exactly once with its allocating layout.
         unsafe {
             // Materialise the 64B class so spill has somewhere to go.
             let warm = ga.alloc(l64);
@@ -391,6 +402,7 @@ mod tests {
         let ga = PooledGlobalAlloc::new(4);
         let l16 = Layout::from_size_align(16, 8).unwrap();
         let l128 = Layout::from_size_align(128, 8).unwrap();
+        // SAFETY: each pointer is freed exactly once with its allocating layout.
         unsafe {
             // Materialise two classes so the table has multiple entries.
             let a = ga.alloc(l16);
@@ -403,6 +415,7 @@ mod tests {
             if p.is_null() {
                 continue;
             }
+            // SAFETY: non-null class pointers reference leaked, never-freed pools.
             let pool = unsafe { &*p };
             let start = pool.region_start();
             let end = start + pool.region_bytes();
@@ -440,6 +453,8 @@ mod tests {
         let layout = Layout::new::<Vec4>();
         assert_eq!(layout.align(), 16);
         let ga = PooledGlobalAlloc::new(64);
+        // SAFETY: each pointer is non-null, written within `layout.size()`, and
+        // freed exactly once with the allocating layout.
         unsafe {
             let mut held = Vec::new();
             for _ in 0..32 {
@@ -470,17 +485,22 @@ mod tests {
                         if held.is_empty() || rng.gen_bool(0.5) {
                             let size = rng.gen_usize(1, 512);
                             let layout = Layout::from_size_align(size, 8).unwrap();
+                            // SAFETY: `layout` has non-zero size (`gen_usize(1, 512)`).
                             let p = unsafe { ga.alloc(layout) };
                             assert!(!p.is_null());
+                            // SAFETY: `p` is non-null and at least one byte (checked above).
                             unsafe { p.write(t as u8) };
                             held.push((p, layout));
                         } else {
                             let i = rng.gen_usize(0, held.len());
                             let (p, layout) = held.swap_remove(i);
+                            // SAFETY: `(p, layout)` came from `alloc(layout)` and was removed from
+                            // `held`, so it is freed exactly once.
                             unsafe { ga.dealloc(p, layout) };
                         }
                     }
                     for (p, layout) in held {
+                        // SAFETY: the remaining pointers were never freed in the loop above.
                         unsafe { ga.dealloc(p, layout) };
                     }
                 });

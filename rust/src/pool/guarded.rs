@@ -148,6 +148,8 @@ impl GuardedPool {
     pub fn allocate(&mut self, tag: &'static str) -> Option<NonNull<u8>> {
         let slot = self.pool.allocate()?;
         let index = self.pool.raw().index_from_addr(slot);
+        // SAFETY: the slot spans GUARD+8 + user_block_size + GUARD+8 bytes
+        // (sized at construction), so canary and fill writes stay inside it.
         unsafe {
             if self.cfg.canaries {
                 (slot.as_ptr() as *mut u64).write_unaligned(PRE_CANARY);
@@ -175,6 +177,8 @@ impl GuardedPool {
     /// Checked free. Returns the detected error instead of corrupting the
     /// pool — the caller decides whether to abort.
     pub fn deallocate(&mut self, payload: NonNull<u8>) -> Result<(), GuardError> {
+        // SAFETY: arithmetic only; the result is validated against the pool's
+        // grid before any dereference (invalid addresses return an error).
         let slot_ptr = unsafe { payload.as_ptr().sub(GUARD + 8) };
         let slot = NonNull::new(slot_ptr).ok_or(GuardError::InvalidAddress)?;
         if !self.pool.validate_addr(slot) {
@@ -188,6 +192,8 @@ impl GuardedPool {
             self.check_block(index)?;
         }
         if self.cfg.fills {
+            // SAFETY: the payload area [GUARD+8, GUARD+8+user_block_size) lies
+            // inside this validated slot.
             unsafe {
                 core::ptr::write_bytes(
                     slot.as_ptr().add(GUARD + 8),
@@ -216,6 +222,8 @@ impl GuardedPool {
     /// "Local" canary check of one block (§IV.B).
     fn check_block(&mut self, index: u32) -> Result<(), GuardError> {
         let slot = self.pool.raw().addr_from_index(index);
+        // SAFETY: `index` was range-checked by the caller; both canary words
+        // lie inside the slot (pre at offset 0, post past the payload).
         unsafe {
             let pre = (slot.as_ptr() as *const u64).read_unaligned();
             if pre != PRE_CANARY {
@@ -277,6 +285,8 @@ impl GuardedPool {
         if !self.cfg.fills {
             return true;
         }
+        // SAFETY: `payload` points at `user_block_size` readable bytes inside
+        // a live slot of this pool.
         unsafe {
             (0..self.user_block_size).all(|i| payload.as_ptr().add(i).read() == FILL_ALLOC)
         }
@@ -292,6 +302,7 @@ mod tests {
         let mut g = GuardedPool::with_blocks(32, 8, GuardConfig::default());
         let p = g.allocate("test:1").unwrap();
         assert!(g.fill_ok(p));
+        // SAFETY: the payload area is 32 bytes; the write stays in bounds.
         unsafe { std::ptr::write_bytes(p.as_ptr(), 0x11, 32) }; // stay in bounds
         g.deallocate(p).unwrap();
         assert_eq!(g.num_live(), 0);
@@ -302,6 +313,8 @@ mod tests {
         let mut g = GuardedPool::with_blocks(16, 4, GuardConfig::default());
         let p = g.allocate("overrun").unwrap();
         // Write one byte past the payload → clobbers post canary.
+        // SAFETY: `add(16)` lands in the post-guard area of this slot — still
+        // inside pool memory, deliberately clobbering the canary.
         unsafe { p.as_ptr().add(16).write(0xFF) };
         match g.deallocate(p) {
             Err(GuardError::PostCanaryClobbered { index: 0, .. }) => {}
@@ -314,6 +327,8 @@ mod tests {
     fn detects_underrun() {
         let mut g = GuardedPool::with_blocks(16, 4, GuardConfig::default());
         let p = g.allocate("underrun").unwrap();
+        // SAFETY: `sub(GUARD + 8)` is the slot's pre-canary word — inside pool
+        // memory, deliberately clobbered.
         unsafe { p.as_ptr().sub(GUARD + 8).write(0x00) }; // clobber pre canary
         assert!(matches!(
             g.deallocate(p),
@@ -359,6 +374,7 @@ mod tests {
         let b = g.allocate("ok").unwrap();
         // Corrupt `a`'s post canary but free only `b` — only a global
         // sweep can catch this.
+        // SAFETY: `add(16)` lands in `a`'s post-guard area — inside pool memory.
         unsafe { a.as_ptr().add(16).write(0xAA) };
         g.deallocate(b).unwrap(); // sweep_every=64, not yet
         assert!(matches!(
@@ -378,6 +394,8 @@ mod tests {
         // the block is free but the memory is still ours via the pool).
         // Note: first 4 bytes of the *slot* hold the free-list index, but
         // the payload area (offset GUARD+8) keeps the fill.
+        // SAFETY: the slot stays mapped after free (pool memory); reads are in
+        // bounds of the old payload.
         unsafe {
             assert_eq!(slot_payload.read(), FILL_FREE);
             assert_eq!(slot_payload.add(7).read(), FILL_FREE);
@@ -388,6 +406,7 @@ mod tests {
     fn checks_off_mode_skips_detection() {
         let mut g = GuardedPool::with_blocks(16, 4, GuardConfig::off());
         let p = g.allocate("off").unwrap();
+        // SAFETY: `add(16)` lands in the post-guard area — inside pool memory.
         unsafe { p.as_ptr().add(16).write(0xFF) }; // would clobber canary
         g.deallocate(p).unwrap(); // no error: checks disabled
                                   // double free IS unchecked in off mode — don't do it here; just
@@ -405,6 +424,7 @@ mod tests {
             g.allocate(tag).unwrap()
         }).collect();
         for p in &ptrs {
+            // SAFETY: each payload area is 24 bytes; writes stay in bounds.
             unsafe { std::ptr::write_bytes(p.as_ptr(), 0x77, 24) };
         }
         g.check_all().unwrap();

@@ -251,6 +251,8 @@ impl PoolHandle {
             Some(mp) => mp.allocate(size).map(|(p, _origin)| (p, Backing::Pool)),
             None => {
                 let layout = Layout::from_size_align(size, HANDLE_ALIGN).ok()?;
+                // SAFETY: `layout` has non-zero size (`size > 0` is the caller contract,
+                // asserted above).
                 NonNull::new(unsafe { std::alloc::alloc(layout) })
                     .map(|p| (p, Backing::System))
             }
@@ -306,6 +308,8 @@ pub struct PooledVec<T: Copy> {
 // SAFETY: PooledVec owns its block exclusively; the handle's pools are
 // Sync, so moving/sharing follows the element type.
 unsafe impl<T: Copy + Send> Send for PooledVec<T> {}
+// SAFETY: shared access only reads through `&self`; interior mutation
+// requires `&mut`, so `Sync` follows the element type too.
 unsafe impl<T: Copy + Sync> Sync for PooledVec<T> {}
 
 impl<T: Copy> PooledVec<T> {
@@ -546,6 +550,7 @@ mod tests {
         let (p, _) = mp.allocate(48).unwrap();
         assert_eq!(mp.spill_total(), 1);
         assert_eq!(mp.class_of_ptr(p), Some(2));
+        // SAFETY: every pointer came from `allocate(48)` and is freed exactly once.
         unsafe {
             mp.deallocate(p, 48);
             for p in held {

@@ -55,6 +55,7 @@ impl LockedPool {
 // SAFETY: all access is serialised by the mutex; raw pointers inside the
 // pool never escape unsynchronised.
 unsafe impl Send for LockedPool {}
+// SAFETY: same argument — the mutex serialises every `&self` method.
 unsafe impl Sync for LockedPool {}
 
 /// Send-able token representing a block owned by a thread. Converting a
@@ -83,6 +84,7 @@ mod tests {
         let p = LockedPool::with_blocks(16, 4);
         let a = p.allocate().unwrap();
         assert_eq!(p.num_free(), 3);
+        // SAFETY: `a` came from `allocate` and is freed exactly once.
         unsafe { p.deallocate(a) };
         assert_eq!(p.num_free(), 4);
     }
@@ -104,16 +106,21 @@ mod tests {
                         let p = pool.allocate().expect("sized for all threads");
                         // Tag the block with a unique value and verify no
                         // other thread holds the same address.
+                        // SAFETY: the block is exclusively owned and at least `usize`-sized
+                        // (block_size 16); the write stays in bounds.
                         unsafe { (p.as_ptr() as *mut usize).write(p.as_ptr() as usize) };
                         mine.push(BlockToken::from_ptr(p));
                         handed.fetch_add(1, Ordering::Relaxed);
                     }
                     for t in &mine {
                         let p = t.into_ptr();
+                        // SAFETY: the block is still owned by this thread; the tag word was
+                        // written above.
                         let v = unsafe { (p.as_ptr() as *const usize).read() };
                         assert_eq!(v, p.as_ptr() as usize, "block shared between threads");
                     }
                     for t in mine {
+                        // SAFETY: every token wraps a pointer from `allocate`, freed once.
                         unsafe { pool.deallocate(t.into_ptr()) };
                     }
                 });
@@ -148,6 +155,7 @@ mod tests {
                     }
                     barrier.wait();
                     for t in held {
+                        // SAFETY: every token wraps a pointer from `allocate`, freed once.
                         unsafe { pool.deallocate(t.into_ptr()) };
                     }
                 });

@@ -65,13 +65,14 @@
 
 use core::cell::UnsafeCell;
 use core::ptr::NonNull;
-use core::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::sync::Arc;
 
 use super::placement::ShardPlacement;
+use super::proto::mag::{Bind, BindOutcome, MagState, MagWord};
 use super::sharded::{
     current_slot, slot_generation, ShardedPool, MAX_HOME_SLOTS, SLOT_SHARED_BIT,
 };
+use crate::sync::{AtomicU32, AtomicU64, Ordering};
 use super::stats::{MagazineStats, ShardedPoolStats};
 use crate::metrics::Metrics;
 
@@ -84,17 +85,6 @@ pub const MAX_MAG_DEPTH: u32 = 32;
 /// Per-magazine byte budget: depth is clamped so one magazine never
 /// caches more than this many bytes of blocks.
 const MAG_BYTE_BUDGET: usize = 4096;
-
-/// Slot state: no owner, magazines empty.
-const MAG_FREE: u64 = 0;
-/// Slot state: a reclaimer or incoming owner holds exclusive access.
-const MAG_CLAIMED: u64 = 1;
-
-/// Slot state: owned by the thread whose lease generation is `gen`.
-#[inline(always)]
-const fn owned(gen: u32) -> u64 {
-    ((gen as u64) << 32) | 2
-}
 
 /// The thread-private side of a slot: two bounded magazines of grid
 /// indices plus the adaptive depth. Touched non-atomically, guarded by
@@ -127,8 +117,9 @@ impl MagInner {
 /// never false-share.
 #[repr(align(64))]
 struct MagazineSlot {
-    /// `MAG_FREE`, `MAG_CLAIMED`, or `owned(gen)`.
-    state: AtomicU64,
+    /// Ownership word: `Free`, `Claimed`, or `Owned(gen)` — the
+    /// `proto::mag` protocol arbitrating access to `inner`.
+    state: MagWord,
     /// Mirror of `loaded_len + prev_len` (Release store by the owner):
     /// feeds `num_free`, exact at quiescence.
     cached: AtomicU32,
@@ -150,7 +141,7 @@ unsafe impl Sync for MagazineSlot {}
 impl MagazineSlot {
     fn new(depth: u32) -> Self {
         Self {
-            state: AtomicU64::new(MAG_FREE),
+            state: MagWord::new(),
             cached: AtomicU32::new(0),
             depth: AtomicU32::new(depth),
             hits: AtomicU64::new(0),
@@ -269,7 +260,7 @@ impl MagazinePool {
         }
         let idx = slot as usize & (MAX_HOME_SLOTS - 1);
         let m = &self.rack[idx];
-        if m.state.load(Ordering::Relaxed) == owned(gen) {
+        if m.state.is_owned_by(gen) {
             Some(m)
         } else {
             self.bind(idx, gen)
@@ -277,37 +268,31 @@ impl MagazinePool {
     }
 
     /// First use of this pool under the current slot lease: take the slot
-    /// over, flushing anything a dead predecessor left cached.
+    /// over, flushing anything a dead predecessor left cached. Drives
+    /// `proto::mag`'s [`Bind`] machine — the state-word transitions the
+    /// model checker interleaves against concurrent reclaimers.
     #[cold]
     fn bind(&self, idx: usize, gen: u32) -> Option<&MagazineSlot> {
         let m = &self.rack[idx];
-        loop {
-            let cur = m.state.load(Ordering::Acquire);
-            if cur == owned(gen) {
-                return Some(m);
+        match Bind::new(gen).run(&m.state) {
+            BindOutcome::AlreadyOwned => Some(m),
+            // A reclaimer is mid-flush on a dead predecessor's contents;
+            // bypass the magazine for this op.
+            BindOutcome::Busy => None,
+            BindOutcome::Claimed => {
+                // SAFETY: winning the claim CAS grants exclusive access.
+                // If the previous state was owned(stale), that owner
+                // exited (only exit bumps the lease generation), and the
+                // registry's release/acquire edges make its writes
+                // visible here.
+                let inner = unsafe { &mut *m.inner.get() };
+                self.flush_all(m, inner);
+                inner.depth = self.init_depth;
+                m.depth.store(self.init_depth, Ordering::Relaxed);
+                m.state.publish_owned(gen);
+                self.bound_hw.fetch_max(idx as u32 + 1, Ordering::Relaxed);
+                Some(m)
             }
-            if cur == MAG_CLAIMED {
-                // A reclaimer is mid-flush on a dead predecessor's
-                // contents; bypass the magazine for this op.
-                return None;
-            }
-            if m.state
-                .compare_exchange(cur, MAG_CLAIMED, Ordering::AcqRel, Ordering::Acquire)
-                .is_err()
-            {
-                continue;
-            }
-            // SAFETY: the CAS to CLAIMED grants exclusive access. If the
-            // previous state was owned(stale), that owner exited (only
-            // exit bumps the lease generation), and the registry's
-            // release/acquire edges make its writes visible here.
-            let inner = unsafe { &mut *m.inner.get() };
-            self.flush_all(m, inner);
-            inner.depth = self.init_depth;
-            m.depth.store(self.init_depth, Ordering::Relaxed);
-            m.state.store(owned(gen), Ordering::Release);
-            self.bound_hw.fetch_max(idx as u32 + 1, Ordering::Relaxed);
-            return Some(m);
         }
     }
 
@@ -475,18 +460,14 @@ impl MagazinePool {
         // so racing past the relaxed high-water read is harmless.
         let hw = (self.bound_hw.load(Ordering::Relaxed) as usize).min(self.rack.len());
         for (slot, m) in self.rack[..hw].iter().enumerate() {
-            let cur = m.state.load(Ordering::Acquire);
-            if cur as u32 != 2 {
+            let observed = m.state.peek();
+            let MagState::Owned(gen) = observed else {
                 continue; // FREE or CLAIMED: nothing stale to take
-            }
-            let gen = (cur >> 32) as u32;
+            };
             if slot_generation(slot) == gen {
                 continue; // owner still live — its cache, its business
             }
-            if m.state
-                .compare_exchange(cur, MAG_CLAIMED, Ordering::AcqRel, Ordering::Acquire)
-                .is_err()
-            {
+            if m.state.try_claim(observed).is_err() {
                 continue; // lost to the new owner or another reclaimer
             }
             // SAFETY: CLAIMED grants exclusive access; the Acquire load
@@ -494,7 +475,7 @@ impl MagazinePool {
             // visible (Release bump in the registry exit guard).
             let inner = unsafe { &mut *m.inner.get() };
             moved += self.flush_all(m, inner);
-            m.state.store(MAG_FREE, Ordering::Release);
+            m.state.publish_free();
         }
         moved
     }
@@ -574,7 +555,7 @@ impl MagazinePool {
             flushes += m.flushes.load(Ordering::Relaxed);
             flushed_blocks += m.flushed_blocks.load(Ordering::Relaxed);
             cached += m.cached.load(Ordering::Acquire);
-            if m.state.load(Ordering::Relaxed) as u32 == 2 {
+            if let MagState::Owned(_) = m.state.peek_relaxed() {
                 active_slots += 1;
                 depth_sum += m.depth.load(Ordering::Relaxed) as u64;
             }
@@ -641,6 +622,7 @@ mod tests {
         // Warm: first alloc refills; thereafter pure magazine traffic.
         for _ in 0..1000 {
             let a = p.allocate().unwrap();
+            // SAFETY: `a` came from `allocate` and is freed exactly once.
             unsafe { p.deallocate(a) };
         }
         let m = p.magazine_stats();
@@ -669,6 +651,7 @@ mod tests {
         let p = MagazinePool::with_shards(32, 16, 2, 0);
         assert!(!p.magazines_enabled());
         let a = p.allocate().unwrap();
+        // SAFETY: `a` came from `allocate` and is freed exactly once.
         unsafe { p.deallocate(a) };
         let m = p.magazine_stats();
         assert_eq!(m.hits + m.refills + m.cached as u64, 0);
@@ -698,6 +681,7 @@ mod tests {
         // both magazines and forces chained flushes.
         let held: Vec<_> = (0..96).map(|_| p.allocate().unwrap()).collect();
         for a in held {
+            // SAFETY: every held pointer came from `allocate` and is freed exactly once.
             unsafe { p.deallocate(a) };
         }
         let m = p.magazine_stats();
@@ -727,6 +711,7 @@ mod tests {
         );
         // Sustained frees: flushes halve it back down.
         for a in held {
+            // SAFETY: every held pointer came from `allocate` and is freed exactly once.
             unsafe { p.deallocate(a) };
         }
         let m = p.magazine_stats();
@@ -748,6 +733,7 @@ mod tests {
                 // Leave blocks cached in this worker's magazines.
                 let held: Vec<_> = (0..16).map(|_| p.allocate().unwrap()).collect();
                 for a in held {
+                    // SAFETY: every held pointer came from `allocate` and is freed exactly once.
                     unsafe { p.deallocate(a) };
                 }
             });
@@ -772,6 +758,7 @@ mod tests {
             s.spawn(|| {
                 let held: Vec<_> = (0..32).map(|_| p.allocate().unwrap()).collect();
                 for a in held {
+                    // SAFETY: every held pointer came from `allocate` and is freed exactly once.
                     unsafe { p.deallocate(a) };
                 }
             });
@@ -795,6 +782,7 @@ mod tests {
                 s.spawn(|| {
                     let a = p.allocate().unwrap();
                     let b = p.allocate().unwrap();
+                    // SAFETY: `a` and `b` came from `allocate` and are each freed once.
                     unsafe {
                         p.deallocate(a);
                         p.deallocate(b);
@@ -812,6 +800,7 @@ mod tests {
         let p = MagazinePool::with_shards(16, 64, 8, 4);
         let held: Vec<_> = (0..48).map(|_| p.allocate().unwrap()).collect();
         for a in held {
+            // SAFETY: every held pointer came from `allocate` and is freed exactly once.
             unsafe { p.deallocate(a) };
         }
         p.flush_local();
@@ -853,12 +842,16 @@ mod tests {
                         } else {
                             let i = rng.gen_usize(0, held.len());
                             let addr = held.swap_remove(i);
+                            // SAFETY: `addr` was recorded from a successful `allocate` and removed
+                            // from `held`, so each block is freed exactly once.
                             unsafe {
                                 p.deallocate(NonNull::new_unchecked(addr as *mut u8))
                             };
                         }
                     }
                     for addr in held {
+                        // SAFETY: the remaining addresses each came from `allocate` and were
+                        // never freed in the loop above.
                         unsafe {
                             p.deallocate(NonNull::new_unchecked(addr as *mut u8))
                         };

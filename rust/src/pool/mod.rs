@@ -65,6 +65,7 @@ pub mod locked;
 pub mod magazine;
 pub mod multi;
 pub mod placement;
+pub mod proto;
 pub mod raw;
 pub mod resize;
 pub mod sharded;

@@ -411,6 +411,7 @@ impl MultiPool {
 
     fn system_alloc(&mut self, size: usize) -> Option<NonNull<u8>> {
         let layout = Layout::from_size_align(size.max(1), CLASS_ALIGN).ok()?;
+        // SAFETY: `layout` has non-zero size (clamped by `max(1)`).
         let p = NonNull::new(unsafe { std::alloc::alloc(layout) })?;
         self.system_allocs += 1;
         Some(p)
@@ -635,6 +636,7 @@ impl ShardedMultiPool {
 
     fn system_alloc(&self, size: usize) -> Option<NonNull<u8>> {
         let layout = Layout::from_size_align(size.max(1), CLASS_ALIGN).ok()?;
+        // SAFETY: `layout` has non-zero size (clamped by `max(1)`).
         let p = NonNull::new(unsafe { std::alloc::alloc(layout) })?;
         self.system_allocs.fetch_add(1, Ordering::Relaxed);
         Some(p)
@@ -897,6 +899,7 @@ mod tests {
         assert_eq!(o, Origin::Pool(1)); // 32B class
         assert_eq!(mp.class_stats(1).hits, 1);
         assert_eq!(mp.class_stats(1).internal_waste, 12);
+        // SAFETY: `p` came from `allocate(20)` and is freed exactly once.
         unsafe { mp.deallocate(p, 20) };
     }
 
@@ -907,6 +910,7 @@ mod tests {
         assert_eq!(o, Origin::System);
         assert_eq!(mp.system_allocs, 1);
         assert_eq!(mp.class_of_ptr(p), None, "system pointer resolves to no class");
+        // SAFETY: `p` came from `allocate(1000)` and is freed exactly once.
         unsafe { mp.deallocate(p, 1000) };
         assert_eq!(mp.system_frees, 1);
     }
@@ -929,6 +933,8 @@ mod tests {
         assert_eq!(mp.spill_total(), 1);
         assert_eq!(mp.system_allocs, 0, "spill must keep the system allocator out");
         assert_eq!(mp.class_of_ptr(p), Some(1), "spilled block belongs to class 1");
+        // SAFETY: every pointer came from `allocate` with the size passed
+        // here and is freed exactly once.
         unsafe {
             mp.deallocate(p, 16);
             for p in held {
@@ -954,6 +960,8 @@ mod tests {
         }
         assert_eq!(held.len(), 24, "own class + two spill hops, nothing more");
         assert_eq!(mp.class_free(3), 8, "the 128B class never got raided");
+        // SAFETY: every pointer came from `allocate` with the size passed
+        // here and is freed exactly once.
         unsafe {
             for p in held {
                 mp.deallocate(p, 16);
@@ -977,6 +985,8 @@ mod tests {
         assert_eq!(o, Origin::System);
         assert_eq!(mp.class_stats(0).exhausted, 1);
         assert_eq!(mp.spill_total(), 0);
+        // SAFETY: every pointer came from `allocate` with the size passed
+        // here and is freed exactly once.
         unsafe {
             mp.deallocate(p, 16);
             for p in held {
@@ -1058,6 +1068,8 @@ mod tests {
         assert_eq!(o, Origin::System);
         assert_eq!(mp.class_exhausted(0), 1);
         assert_eq!(mp.class_hits(0), 8);
+        // SAFETY: every pointer came from `allocate` with the size passed
+        // here and is freed exactly once.
         unsafe {
             mp.deallocate(p, 16);
             for p in held {
@@ -1090,6 +1102,8 @@ mod tests {
         assert_eq!(mp.spill_total(), 1);
         assert_eq!(mp.system_allocs.load(Ordering::Relaxed), 0);
         assert_eq!(mp.class_of_ptr(p), Some(1));
+        // SAFETY: every pointer came from `allocate` with the size passed
+        // here and is freed exactly once.
         unsafe {
             mp.deallocate(p, 16);
             for p in held {
@@ -1135,6 +1149,8 @@ mod tests {
                     }
                     for (p, size) in held {
                         seen.lock().unwrap().remove(&(p.as_ptr() as usize));
+                        // SAFETY: each `(p, size)` pair came from a successful `allocate(size)`
+                        // on this pool and is freed exactly once.
                         unsafe { mp.deallocate(p, size) };
                     }
                 });
@@ -1150,6 +1166,7 @@ mod tests {
     fn sharded_multi_exports_metrics() {
         let mp = ShardedMultiPool::with_shards(cfg_small(), 2);
         let (p, _) = mp.allocate(20).unwrap();
+        // SAFETY: `p` came from `allocate(20)` and is freed exactly once.
         unsafe { mp.deallocate(p, 20) };
         let m = crate::metrics::Metrics::new();
         mp.export_metrics(&m, "pool.serving");
@@ -1178,6 +1195,8 @@ mod tests {
         assert!(r.contains("pool.s.c16.spill_out = 1"), "{r}");
         assert!(r.contains("pool.s.c32.spill_in = 1"), "{r}");
         assert!(r.contains("pool.s.c32.spill_total = 1"), "{r}");
+        // SAFETY: every pointer came from `allocate` with the size passed
+        // here and is freed exactly once.
         unsafe {
             mp.deallocate(spilled, 16);
             for p in held {
@@ -1208,6 +1227,7 @@ mod tests {
         // Warm one class with a pair loop: hits accumulate CAS-free.
         for _ in 0..64 {
             let (p, _) = cached.allocate(20).unwrap();
+            // SAFETY: `p` came from `allocate(20)` and is freed exactly once.
             unsafe { cached.deallocate(p, 20) };
         }
         let ms = cached.magazine_stats();
@@ -1225,6 +1245,7 @@ mod tests {
         let bare = ShardedMultiPool::with_shards(cfg, 2);
         assert!(!bare.magazines_enabled());
         let (p, _) = bare.allocate(20).unwrap();
+        // SAFETY: `p` came from `allocate(20)` and is freed exactly once.
         unsafe { bare.deallocate(p, 20) };
         assert_eq!(bare.magazine_stats(), MagazineStats::default());
     }
@@ -1233,6 +1254,7 @@ mod tests {
     fn magazine_gauges_exported() {
         let mp = ShardedMultiPool::with_shards(cfg_small(), 2);
         let (p, _) = mp.allocate(20).unwrap();
+        // SAFETY: `p` came from `allocate(20)` and is freed exactly once.
         unsafe { mp.deallocate(p, 20) };
         let m = crate::metrics::Metrics::new();
         mp.export_metrics(&m, "pool.serving");
@@ -1257,6 +1279,8 @@ mod tests {
         addrs.sort_unstable();
         addrs.dedup();
         assert_eq!(addrs.len(), 30);
+        // SAFETY: each `(p, size)` pair came from a successful `allocate(size)`
+        // and is freed exactly once.
         unsafe {
             for (p, size) in all {
                 mp.deallocate(p, size);

@@ -17,7 +17,9 @@
 //!   supplies at least [`StealAware::threshold_pct`] percent of a window's
 //!   allocations, the thread that closed the window is rehomed to that
 //!   victim (its own home-slot entry is switched with a single
-//!   generation-stamped CAS, so the move is race-free and per-thread).
+//!   generation-stamped CAS — the `swing` op of
+//!   [`proto::rehome`](super::proto::rehome), model-checked in
+//!   `tests/model_check.rs` — so the move is race-free and per-thread).
 //!   Composable over any base placement via [`StealAware::over`].
 //! * [`Pinned`] — an explicit slot→shard map. This is the NUMA seam: fill
 //!   the map from a NUMA probe (slots of node-0 threads → shards whose

@@ -1,0 +1,626 @@
+//! The Treiber tagged-head protocol (extracted from [`crate::pool::atomic`]).
+//!
+//! Shared state is one `AtomicU64` packing `(index: u32, tag: u32)` plus
+//! a caller-owned side table of `AtomicU32` next links. Every successful
+//! CAS bumps the tag, defeating ABA; the side table keeps links out of
+//! user-owned memory so stale readers never race user data (see the
+//! module docs on `pool::atomic` for the full design rationale).
+//!
+//! The `TAG` const parameter exists for the model checker's mutation
+//! test: [`TaggedHead<false>`] never bumps the tag, re-enabling the
+//! classic ABA double-handout, and `tests/model_check.rs` proves the
+//! explorer catches it. Production code only ever instantiates
+//! [`TaggedHead<true>`] (the default).
+//!
+//! Each machine's `step()` makes exactly one [`crate::sync`] access;
+//! `run()` drives a machine to completion and inlines back to the
+//! original CAS loop.
+
+use crate::sync::{AtomicU32, AtomicU64, Ordering};
+
+use super::Step;
+
+/// Empty-stack sentinel index (`u32::MAX` can never be a block index:
+/// pool constructors assert `num_blocks < NIL`).
+pub const NIL: u32 = u32::MAX;
+
+/// Pack `(index, tag)` into the head word.
+#[inline(always)]
+pub const fn pack(index: u32, tag: u32) -> u64 {
+    ((tag as u64) << 32) | index as u64
+}
+
+/// Unpack the head word into `(index, tag)`.
+#[inline(always)]
+pub const fn unpack(v: u64) -> (u32, u32) {
+    (v as u32, (v >> 32) as u32)
+}
+
+/// The shared head word. `TAG = true` (production) bumps the ABA tag on
+/// every successful CAS; `TAG = false` is the checker's mutant.
+pub struct TaggedHead<const TAG: bool = true> {
+    head: AtomicU64,
+}
+
+impl<const TAG: bool> Default for TaggedHead<TAG> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<const TAG: bool> TaggedHead<TAG> {
+    /// Empty stack, tag 0.
+    pub const fn new() -> Self {
+        Self {
+            head: AtomicU64::new(pack(NIL, 0)),
+        }
+    }
+
+    #[inline(always)]
+    fn bump(tag: u32) -> u32 {
+        if TAG {
+            tag.wrapping_add(1)
+        } else {
+            tag
+        }
+    }
+
+    /// Current ABA tag (Relaxed; for tests and stats).
+    pub fn tag(&self) -> u32 {
+        unpack(self.head.load(Ordering::Relaxed)).1
+    }
+
+    /// Current top index, `NIL` when empty (Relaxed; for tests/stats).
+    pub fn top(&self) -> u32 {
+        unpack(self.head.load(Ordering::Relaxed)).0
+    }
+}
+
+/// The Treiber protocol surface. One blanket impl per head flavour so
+/// the checkable machines below are the only implementation.
+pub trait Head {
+    /// Pop one index; `None` when the stack is observed empty.
+    fn pop(&self, links: &[AtomicU32]) -> Option<u32>;
+    /// Push one index (must be `< links.len()`, not currently threaded).
+    fn push(&self, links: &[AtomicU32], idx: u32);
+    /// Publish a pre-ordered batch as one chain with a single CAS
+    /// (per retry). Indices must be distinct and in range.
+    fn push_chain(&self, links: &[AtomicU32], idxs: &[u32]);
+    /// Detach up to `want` indices as one chain (single CAS per retry),
+    /// filling `out[..n]`; returns `n` (0 when observed empty).
+    fn detach(&self, links: &[AtomicU32], want: u32, out: &mut [u32]) -> u32;
+}
+
+impl<const TAG: bool> Head for TaggedHead<TAG> {
+    #[inline]
+    fn pop(&self, links: &[AtomicU32]) -> Option<u32> {
+        Pop::new().run(self, links)
+    }
+
+    #[inline]
+    fn push(&self, links: &[AtomicU32], idx: u32) {
+        Push::new(idx).run(self, links)
+    }
+
+    #[inline]
+    fn push_chain(&self, links: &[AtomicU32], idxs: &[u32]) {
+        PushChain::new(idxs).run(self, links)
+    }
+
+    #[inline]
+    fn detach(&self, links: &[AtomicU32], want: u32, out: &mut [u32]) -> u32 {
+        Detach::new(want.min(out.len() as u32)).run(self, links, out)
+    }
+}
+
+// ---------------------------------------------------------------- pop --
+
+enum PopState {
+    /// Load the head word.
+    LoadHead,
+    /// Read the popped candidate's next link.
+    ReadNext { cur: u64 },
+    /// Swing the head past the candidate (tag-guarded).
+    Cas { cur: u64, nxt: u32 },
+}
+
+/// One Treiber pop. Protocol: load head → read `next[top]` → CAS head
+/// to `(next, tag+1)`. A failed CAS restarts from the freshly observed
+/// head (the CAS failure itself re-reads it — no extra load).
+pub struct Pop {
+    state: PopState,
+}
+
+impl Default for Pop {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Pop {
+    pub const fn new() -> Self {
+        Self {
+            state: PopState::LoadHead,
+        }
+    }
+
+    /// One transition = one shared access.
+    #[inline(always)]
+    pub fn step<const TAG: bool>(
+        &mut self,
+        head: &TaggedHead<TAG>,
+        links: &[AtomicU32],
+    ) -> Step<Option<u32>> {
+        match self.state {
+            PopState::LoadHead => {
+                let cur = head.head.load(Ordering::Acquire);
+                if unpack(cur).0 == NIL {
+                    return Step::Done(None);
+                }
+                self.state = PopState::ReadNext { cur };
+                Step::Pending
+            }
+            PopState::ReadNext { cur } => {
+                let (idx, _) = unpack(cur);
+                let nxt = links[idx as usize].load(Ordering::Relaxed);
+                self.state = PopState::Cas { cur, nxt };
+                Step::Pending
+            }
+            PopState::Cas { cur, nxt } => {
+                let (idx, tag) = unpack(cur);
+                match head.head.compare_exchange_weak(
+                    cur,
+                    pack(nxt, TaggedHead::<TAG>::bump(tag)),
+                    Ordering::AcqRel,
+                    Ordering::Acquire,
+                ) {
+                    Ok(_) => Step::Done(Some(idx)),
+                    Err(actual) => {
+                        if unpack(actual).0 == NIL {
+                            return Step::Done(None);
+                        }
+                        self.state = PopState::ReadNext { cur: actual };
+                        Step::Pending
+                    }
+                }
+            }
+        }
+    }
+
+    /// Drive to completion (the production fast path).
+    #[inline(always)]
+    pub fn run<const TAG: bool>(
+        mut self,
+        head: &TaggedHead<TAG>,
+        links: &[AtomicU32],
+    ) -> Option<u32> {
+        loop {
+            if let Step::Done(r) = self.step(head, links) {
+                return r;
+            }
+        }
+    }
+}
+
+// --------------------------------------------------------------- push --
+
+enum PushState {
+    /// Load the head word.
+    LoadHead,
+    /// Point the pushed block's next link at the observed top.
+    StoreNext { cur: u64 },
+    /// Swing the head to the pushed block (tag-guarded).
+    Cas { cur: u64 },
+}
+
+/// One Treiber push. Protocol: load head → `next[idx] = top` → CAS head
+/// to `(idx, tag+1)`; a failed CAS re-stores the link against the fresh
+/// head and retries.
+pub struct Push {
+    idx: u32,
+    state: PushState,
+}
+
+impl Push {
+    pub const fn new(idx: u32) -> Self {
+        Self {
+            idx,
+            state: PushState::LoadHead,
+        }
+    }
+
+    /// One transition = one shared access.
+    #[inline(always)]
+    pub fn step<const TAG: bool>(
+        &mut self,
+        head: &TaggedHead<TAG>,
+        links: &[AtomicU32],
+    ) -> Step<()> {
+        match self.state {
+            PushState::LoadHead => {
+                let cur = head.head.load(Ordering::Acquire);
+                self.state = PushState::StoreNext { cur };
+                Step::Pending
+            }
+            PushState::StoreNext { cur } => {
+                links[self.idx as usize].store(unpack(cur).0, Ordering::Relaxed);
+                self.state = PushState::Cas { cur };
+                Step::Pending
+            }
+            PushState::Cas { cur } => {
+                let (_, tag) = unpack(cur);
+                match head.head.compare_exchange_weak(
+                    cur,
+                    pack(self.idx, TaggedHead::<TAG>::bump(tag)),
+                    Ordering::AcqRel,
+                    Ordering::Acquire,
+                ) {
+                    Ok(_) => Step::Done(()),
+                    Err(actual) => {
+                        self.state = PushState::StoreNext { cur: actual };
+                        Step::Pending
+                    }
+                }
+            }
+        }
+    }
+
+    /// Drive to completion (the production fast path).
+    #[inline(always)]
+    pub fn run<const TAG: bool>(mut self, head: &TaggedHead<TAG>, links: &[AtomicU32]) {
+        loop {
+            if let Step::Done(()) = self.step(head, links) {
+                return;
+            }
+        }
+    }
+}
+
+// --------------------------------------------------------- push chain --
+
+enum PushChainState {
+    /// Pre-link `idxs[i] → idxs[i+1]` (outside the CAS window).
+    Link { i: usize },
+    /// Load the head word.
+    LoadHead,
+    /// Point the chain tail at the observed top.
+    StoreTail { cur: u64 },
+    /// Swing the head to the chain front (tag-guarded).
+    Cas { cur: u64 },
+}
+
+/// Batched Treiber push: the whole chain is pre-linked through the side
+/// table, then published with **one** head CAS per retry — only the
+/// tail link depends on the observed head.
+pub struct PushChain<'a> {
+    idxs: &'a [u32],
+    state: PushChainState,
+}
+
+impl<'a> PushChain<'a> {
+    /// `idxs` must be non-empty (callers no-op on empty batches).
+    pub fn new(idxs: &'a [u32]) -> Self {
+        debug_assert!(!idxs.is_empty());
+        Self {
+            idxs,
+            state: if idxs.len() > 1 {
+                PushChainState::Link { i: 0 }
+            } else {
+                PushChainState::LoadHead
+            },
+        }
+    }
+
+    /// One transition = one shared access.
+    #[inline(always)]
+    pub fn step<const TAG: bool>(
+        &mut self,
+        head: &TaggedHead<TAG>,
+        links: &[AtomicU32],
+    ) -> Step<()> {
+        match self.state {
+            PushChainState::Link { i } => {
+                links[self.idxs[i] as usize].store(self.idxs[i + 1], Ordering::Relaxed);
+                self.state = if i + 2 < self.idxs.len() {
+                    PushChainState::Link { i: i + 1 }
+                } else {
+                    PushChainState::LoadHead
+                };
+                Step::Pending
+            }
+            PushChainState::LoadHead => {
+                let cur = head.head.load(Ordering::Acquire);
+                self.state = PushChainState::StoreTail { cur };
+                Step::Pending
+            }
+            PushChainState::StoreTail { cur } => {
+                let last = *self.idxs.last().unwrap();
+                links[last as usize].store(unpack(cur).0, Ordering::Relaxed);
+                self.state = PushChainState::Cas { cur };
+                Step::Pending
+            }
+            PushChainState::Cas { cur } => {
+                let (_, tag) = unpack(cur);
+                match head.head.compare_exchange_weak(
+                    cur,
+                    pack(self.idxs[0], TaggedHead::<TAG>::bump(tag)),
+                    Ordering::AcqRel,
+                    Ordering::Acquire,
+                ) {
+                    Ok(_) => Step::Done(()),
+                    Err(actual) => {
+                        self.state = PushChainState::StoreTail { cur: actual };
+                        Step::Pending
+                    }
+                }
+            }
+        }
+    }
+
+    /// Drive to completion (the production fast path).
+    #[inline(always)]
+    pub fn run<const TAG: bool>(mut self, head: &TaggedHead<TAG>, links: &[AtomicU32]) {
+        loop {
+            if let Step::Done(()) = self.step(head, links) {
+                return;
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------- detach --
+
+enum DetachState {
+    /// Load the head word.
+    LoadHead,
+    /// Walk one next link, extending the candidate chain.
+    Walk { cur: u64, n: u32, last: u32 },
+    /// Swing the head past the whole chain (tag-guarded).
+    Cas { cur: u64, n: u32, tail_next: u32 },
+}
+
+/// Batched Treiber pop: read the chain `top → … → k-th`, then one
+/// tag-guarded CAS moves the head past it. Stale walks (an interleaved
+/// pop/push bumped the tag) fail the CAS and restart — the same ABA
+/// defence as the single pop, amortised over the batch.
+pub struct Detach {
+    want: u32,
+    state: DetachState,
+}
+
+impl Detach {
+    /// `want` must already be clamped to the output buffer length.
+    pub const fn new(want: u32) -> Self {
+        Self {
+            want,
+            state: DetachState::LoadHead,
+        }
+    }
+
+    /// One transition = one shared access. `out` must hold `want` slots.
+    #[inline(always)]
+    pub fn step<const TAG: bool>(
+        &mut self,
+        head: &TaggedHead<TAG>,
+        links: &[AtomicU32],
+        out: &mut [u32],
+    ) -> Step<u32> {
+        match self.state {
+            DetachState::LoadHead => {
+                let cur = head.head.load(Ordering::Acquire);
+                let (idx, _) = unpack(cur);
+                if idx == NIL {
+                    return Step::Done(0);
+                }
+                out[0] = idx;
+                self.state = DetachState::Walk { cur, n: 1, last: idx };
+                Step::Pending
+            }
+            DetachState::Walk { cur, n, last } => {
+                // The link may be stale; the CAS below validates the
+                // whole chain (any interleaved op bumps the tag).
+                let tail_next = links[last as usize].load(Ordering::Relaxed);
+                if n < self.want && tail_next != NIL && (tail_next as usize) < links.len() {
+                    out[n as usize] = tail_next;
+                    self.state = DetachState::Walk {
+                        cur,
+                        n: n + 1,
+                        last: tail_next,
+                    };
+                } else {
+                    self.state = DetachState::Cas { cur, n, tail_next };
+                }
+                Step::Pending
+            }
+            DetachState::Cas { cur, n, tail_next } => {
+                let (_, tag) = unpack(cur);
+                match head.head.compare_exchange_weak(
+                    cur,
+                    pack(tail_next, TaggedHead::<TAG>::bump(tag)),
+                    Ordering::AcqRel,
+                    Ordering::Acquire,
+                ) {
+                    Ok(_) => Step::Done(n),
+                    Err(actual) => {
+                        let (idx, _) = unpack(actual);
+                        if idx == NIL {
+                            return Step::Done(0);
+                        }
+                        out[0] = idx;
+                        self.state = DetachState::Walk {
+                            cur: actual,
+                            n: 1,
+                            last: idx,
+                        };
+                        Step::Pending
+                    }
+                }
+            }
+        }
+    }
+
+    /// Drive to completion (the production fast path).
+    #[inline(always)]
+    pub fn run<const TAG: bool>(
+        mut self,
+        head: &TaggedHead<TAG>,
+        links: &[AtomicU32],
+        out: &mut [u32],
+    ) -> u32 {
+        if self.want == 0 {
+            return 0;
+        }
+        loop {
+            if let Step::Done(n) = self.step(head, links, out) {
+                return n;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------- watermark --
+
+enum ClaimState {
+    /// Claim `want` indices with one `fetch_add`.
+    FetchAdd,
+    /// Give back the overshoot so the counter cannot creep past the cap
+    /// over many failed claims.
+    Undo { give_back: u32, avail: u32 },
+}
+
+/// The lazy-init watermark claim (the paper's O(1) creation, made
+/// atomic): one `fetch_add` claims `want` fresh never-threaded indices;
+/// an overshoot past `cap` is returned with one `fetch_sub`.
+pub struct Claim {
+    want: u32,
+    cap: u32,
+    state: ClaimState,
+}
+
+impl Claim {
+    /// `want` must already be clamped to the output buffer length;
+    /// `cap` is the total block count.
+    pub const fn new(want: u32, cap: u32) -> Self {
+        Self {
+            want,
+            cap,
+            state: ClaimState::FetchAdd,
+        }
+    }
+
+    /// One transition = one shared access. `out` must hold `want` slots.
+    #[inline(always)]
+    pub fn step(&mut self, watermark: &AtomicU32, out: &mut [u32]) -> Step<u32> {
+        match self.state {
+            ClaimState::FetchAdd => {
+                let w = watermark.fetch_add(self.want, Ordering::Relaxed);
+                let avail = self.cap.saturating_sub(w).min(self.want);
+                for (i, slot) in out.iter_mut().take(avail as usize).enumerate() {
+                    *slot = w + i as u32;
+                }
+                if avail < self.want {
+                    self.state = ClaimState::Undo {
+                        give_back: self.want - avail,
+                        avail,
+                    };
+                    Step::Pending
+                } else {
+                    Step::Done(avail)
+                }
+            }
+            ClaimState::Undo { give_back, avail } => {
+                watermark.fetch_sub(give_back, Ordering::Relaxed);
+                Step::Done(avail)
+            }
+        }
+    }
+
+    /// Drive to completion (the production fast path).
+    #[inline(always)]
+    pub fn run(mut self, watermark: &AtomicU32, out: &mut [u32]) -> u32 {
+        if self.want == 0 {
+            return 0;
+        }
+        loop {
+            if let Step::Done(n) = self.step(watermark, out) {
+                return n;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn links(n: usize) -> Vec<AtomicU32> {
+        (0..n).map(|_| AtomicU32::new(NIL)).collect()
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        for (i, t) in [(0u32, 0u32), (5, 7), (NIL, u32::MAX), (123456, 654321)] {
+            assert_eq!(unpack(pack(i, t)), (i, t));
+        }
+    }
+
+    #[test]
+    fn push_pop_lifo_and_tag_bumps() {
+        let h = TaggedHead::<true>::new();
+        let l = links(4);
+        assert_eq!(h.pop(&l), None);
+        h.push(&l, 2);
+        h.push(&l, 0);
+        assert_eq!(h.tag(), 2, "two pushes, two bumps");
+        assert_eq!(h.pop(&l), Some(0));
+        assert_eq!(h.pop(&l), Some(2));
+        assert_eq!(h.pop(&l), None);
+        assert_eq!(h.tag(), 4, "pops bump too");
+    }
+
+    #[test]
+    fn untagged_mutant_never_bumps() {
+        let h = TaggedHead::<false>::new();
+        let l = links(4);
+        h.push(&l, 1);
+        assert_eq!(h.pop(&l), Some(1));
+        assert_eq!(h.tag(), 0, "mutant must leave the tag frozen");
+    }
+
+    #[test]
+    fn chain_push_then_detach_roundtrip() {
+        let h = TaggedHead::<true>::new();
+        let l = links(8);
+        h.push_chain(&l, &[3, 1, 4]);
+        assert_eq!(h.tag(), 1, "chain publishes with one CAS");
+        let mut out = [0u32; 8];
+        let n = h.detach(&l, 8, &mut out);
+        assert_eq!(n, 3);
+        assert_eq!(&out[..3], &[3, 1, 4], "detach preserves chain order");
+        assert_eq!(h.pop(&l), None);
+    }
+
+    #[test]
+    fn detach_respects_want() {
+        let h = TaggedHead::<true>::new();
+        let l = links(8);
+        h.push_chain(&l, &[5, 6, 7]);
+        let mut out = [0u32; 2];
+        assert_eq!(h.detach(&l, 2, &mut out), 2);
+        assert_eq!(&out, &[5, 6]);
+        assert_eq!(h.pop(&l), Some(7), "remainder stays threaded");
+    }
+
+    #[test]
+    fn claim_watermark_clamps_and_undoes_overshoot() {
+        let wm = AtomicU32::new(0);
+        let mut out = [0u32; 8];
+        assert_eq!(Claim::new(3, 5).run(&wm, &mut out), 3);
+        assert_eq!(&out[..3], &[0, 1, 2]);
+        assert_eq!(Claim::new(4, 5).run(&wm, &mut out), 2, "only 2 left");
+        assert_eq!(&out[..2], &[3, 4]);
+        assert_eq!(wm.load(Ordering::Relaxed), 5, "overshoot undone");
+        assert_eq!(Claim::new(1, 5).run(&wm, &mut out), 0);
+        assert_eq!(wm.load(Ordering::Relaxed), 5);
+    }
+}

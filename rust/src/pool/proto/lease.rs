@@ -1,0 +1,305 @@
+//! The home-slot lease protocol (extracted from the registry statics in
+//! [`crate::pool::sharded`]).
+//!
+//! A `LeaseRegistry<N>` is a process-wide recyclable free-list over a
+//! fixed arena of `N` slot ids: acquire pops a recycled id off a tagged
+//! Treiber stack (the same [`super::head`] machines as the block pools),
+//! falling back to a fresh id below the high-water mark and finally to a
+//! shared round-robin id once the arena is exhausted. Release bumps the
+//! slot's **generation** with Release ordering *before* recycling the id,
+//! so any reader that observes the new generation (Acquire) also sees
+//! every per-slot write the old owner made — the edge the magazine
+//! layer's stale-flush and the rehome map's stale-entry detection both
+//! lean on.
+//!
+//! Entirely lock-free and allocation-free: safe to run inside a
+//! `#[global_allocator]`.
+
+use crate::sync::{AtomicU32, AtomicU64, Ordering};
+
+use super::head::{Pop, Push, TaggedHead, NIL};
+use super::Step;
+
+/// The lease protocol surface.
+pub trait Lease {
+    /// Lease a slot: `(slot, privately_owned)`. A shared (`false`) slot
+    /// is a round-robin overflow id — never recycled, safe to share.
+    fn acquire(&self) -> (u32, bool);
+    /// Return a privately-owned slot, bumping its generation.
+    fn release(&self, slot: u32);
+    /// Current generation (Acquire — pairs with `release`'s bump).
+    fn generation(&self, slot: usize) -> u32;
+}
+
+/// Recyclable slot arena. All fields const-init so a registry can be a
+/// `static` (no lazy-init lock, no allocation).
+pub struct LeaseRegistry<const N: usize> {
+    /// Recycle free-list head: packed (slot | NIL, ABA tag).
+    free_head: TaggedHead,
+    /// Free-list next links (static arena — no allocation, ever).
+    next: [AtomicU32; N],
+    /// Per-slot generation, bumped on every release; stale-owner detector.
+    gen: [AtomicU32; N],
+    /// Slots ever handed out (clamped to the arena in the getter).
+    high_water: AtomicU32,
+    /// Slots currently parked in the free-list.
+    free_count: AtomicU32,
+    /// Round-robin source for shared overflow slots.
+    overflow_rr: AtomicU32,
+    /// Bumped on every release — thread-churn watch counter.
+    epoch: AtomicU64,
+}
+
+impl<const N: usize> Default for LeaseRegistry<N> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<const N: usize> LeaseRegistry<N> {
+    pub const fn new() -> Self {
+        Self {
+            free_head: TaggedHead::new(),
+            next: [const { AtomicU32::new(NIL) }; N],
+            gen: [const { AtomicU32::new(0) }; N],
+            high_water: AtomicU32::new(0),
+            free_count: AtomicU32::new(0),
+            overflow_rr: AtomicU32::new(0),
+            epoch: AtomicU64::new(0),
+        }
+    }
+
+    /// A shared overflow id (round-robin over the arena).
+    pub fn shared_slot(&self) -> u32 {
+        self.overflow_rr.fetch_add(1, Ordering::Relaxed) % N as u32
+    }
+
+    /// Generation without the Acquire edge (first-bind stamping only:
+    /// the acquirer owns the slot, so there is nothing to synchronise).
+    pub fn generation_relaxed(&self, slot: usize) -> u32 {
+        self.gen[slot % N].load(Ordering::Relaxed)
+    }
+
+    /// Highest number of ids ever live at once (clamped to the arena).
+    pub fn high_water(&self) -> usize {
+        (self.high_water.load(Ordering::Relaxed) as usize).min(N)
+    }
+
+    /// Ids currently parked in the recycle free-list.
+    pub fn free_slots(&self) -> usize {
+        self.free_count.load(Ordering::Relaxed) as usize
+    }
+
+    /// Monotone churn counter: bumps on every release.
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+}
+
+impl<const N: usize> Lease for LeaseRegistry<N> {
+    #[inline]
+    fn acquire(&self) -> (u32, bool) {
+        Acquire::new().run(self)
+    }
+
+    #[inline]
+    fn release(&self, slot: u32) {
+        Release::new(slot).run(self)
+    }
+
+    #[inline]
+    fn generation(&self, slot: usize) -> u32 {
+        self.gen[slot % N].load(Ordering::Acquire)
+    }
+}
+
+// ------------------------------------------------------------ acquire --
+
+enum AcquireState {
+    /// Pop a recycled slot off the free-list (Treiber machine).
+    Recycle(Pop),
+    /// A recycled slot popped: maintain the free count.
+    SubFree { slot: u32 },
+    /// Free-list empty: claim a fresh id with one `fetch_add`.
+    ClaimFresh,
+    /// Arena exhausted: undo the probe.
+    UndoFresh,
+    /// Hand out a shared round-robin id.
+    Overflow,
+}
+
+/// The slot-acquire machine: recycled id → fresh id → shared overflow.
+pub struct Acquire {
+    state: AcquireState,
+}
+
+impl Default for Acquire {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Acquire {
+    pub const fn new() -> Self {
+        Self {
+            state: AcquireState::Recycle(Pop::new()),
+        }
+    }
+
+    /// One transition = one shared access.
+    #[inline(always)]
+    pub fn step<const N: usize>(&mut self, reg: &LeaseRegistry<N>) -> Step<(u32, bool)> {
+        match &mut self.state {
+            AcquireState::Recycle(pop) => {
+                match pop.step(&reg.free_head, &reg.next) {
+                    Step::Done(Some(slot)) => self.state = AcquireState::SubFree { slot },
+                    Step::Done(None) => self.state = AcquireState::ClaimFresh,
+                    Step::Pending => {}
+                }
+                Step::Pending
+            }
+            AcquireState::SubFree { slot } => {
+                let slot = *slot;
+                reg.free_count.fetch_sub(1, Ordering::Relaxed);
+                Step::Done((slot, true))
+            }
+            AcquireState::ClaimFresh => {
+                let fresh = reg.high_water.fetch_add(1, Ordering::Relaxed);
+                if (fresh as usize) < N {
+                    Step::Done((fresh, true))
+                } else {
+                    self.state = AcquireState::UndoFresh;
+                    Step::Pending
+                }
+            }
+            AcquireState::UndoFresh => {
+                reg.high_water.fetch_sub(1, Ordering::Relaxed);
+                self.state = AcquireState::Overflow;
+                Step::Pending
+            }
+            AcquireState::Overflow => {
+                let rr = reg.overflow_rr.fetch_add(1, Ordering::Relaxed);
+                Step::Done((rr % N as u32, false))
+            }
+        }
+    }
+
+    /// Drive to completion (the production fast path).
+    #[inline]
+    pub fn run<const N: usize>(mut self, reg: &LeaseRegistry<N>) -> (u32, bool) {
+        loop {
+            if let Step::Done(r) = self.step(reg) {
+                return r;
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------ release --
+
+enum ReleaseState {
+    /// Generation first: the recycle-CAS publishes it to the next
+    /// acquirer, which is what keeps recycled ids race-free. Release
+    /// ordering so a *reclaimer* observing the new generation (Acquire)
+    /// also sees every per-slot write — e.g. magazine contents — the
+    /// dead thread made before exiting.
+    BumpGen,
+    /// Push the id back onto the recycle free-list (Treiber machine).
+    Recycle(Push),
+    /// Maintain the free count.
+    AddFree,
+    /// Publish the churn epoch.
+    BumpEpoch,
+}
+
+/// The slot-release machine: generation bump → recycle push → counters.
+pub struct Release {
+    slot: u32,
+    state: ReleaseState,
+}
+
+impl Release {
+    pub const fn new(slot: u32) -> Self {
+        Self {
+            slot,
+            state: ReleaseState::BumpGen,
+        }
+    }
+
+    /// One transition = one shared access.
+    #[inline(always)]
+    pub fn step<const N: usize>(&mut self, reg: &LeaseRegistry<N>) -> Step<()> {
+        match &mut self.state {
+            ReleaseState::BumpGen => {
+                debug_assert!((self.slot as usize) < N);
+                reg.gen[self.slot as usize % N].fetch_add(1, Ordering::Release);
+                self.state = ReleaseState::Recycle(Push::new(self.slot));
+                Step::Pending
+            }
+            ReleaseState::Recycle(push) => {
+                if let Step::Done(()) = push.step(&reg.free_head, &reg.next) {
+                    self.state = ReleaseState::AddFree;
+                }
+                Step::Pending
+            }
+            ReleaseState::AddFree => {
+                reg.free_count.fetch_add(1, Ordering::Relaxed);
+                self.state = ReleaseState::BumpEpoch;
+                Step::Pending
+            }
+            ReleaseState::BumpEpoch => {
+                reg.epoch.fetch_add(1, Ordering::Release);
+                Step::Done(())
+            }
+        }
+    }
+
+    /// Drive to completion (the production fast path).
+    #[inline]
+    pub fn run<const N: usize>(mut self, reg: &LeaseRegistry<N>) {
+        loop {
+            if let Step::Done(()) = self.step(reg) {
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_then_recycle_then_overflow() {
+        let reg = LeaseRegistry::<2>::new();
+        assert_eq!(reg.acquire(), (0, true));
+        assert_eq!(reg.acquire(), (1, true));
+        assert_eq!(reg.high_water(), 2);
+        // Arena exhausted: shared round-robin ids, never recycled.
+        let (s, owned) = reg.acquire();
+        assert!(!owned);
+        assert!((s as usize) < 2);
+        assert_eq!(reg.high_water(), 2, "overflow probe undone");
+        // Release recycles the id and bumps generation + epoch.
+        assert_eq!(reg.generation(1), 0);
+        reg.release(1);
+        assert_eq!(reg.generation(1), 1);
+        assert_eq!(reg.free_slots(), 1);
+        assert_eq!(reg.epoch(), 1);
+        assert_eq!(reg.acquire(), (1, true), "recycled id comes back first");
+        assert_eq!(reg.free_slots(), 0);
+    }
+
+    #[test]
+    fn lifo_recycling_prefers_lowest_churn() {
+        let reg = LeaseRegistry::<4>::new();
+        let a = reg.acquire().0;
+        let b = reg.acquire().0;
+        reg.release(a);
+        reg.release(b);
+        // LIFO: the most recently parked id is reused first.
+        assert_eq!(reg.acquire().0, b);
+        assert_eq!(reg.acquire().0, a);
+        assert_eq!(reg.high_water(), 2, "no fresh ids burned by churn");
+    }
+}

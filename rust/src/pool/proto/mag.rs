@@ -1,0 +1,265 @@
+//! The magazine slot-ownership protocol (extracted from
+//! [`crate::pool::magazine`]'s slot state word).
+//!
+//! One `AtomicU64` per rack slot arbitrates who may touch the slot's
+//! non-atomic magazine pair:
+//!
+//! * [`MagState::Free`] — no owner, magazines empty;
+//! * [`MagState::Claimed`] — a binder or reclaimer holds exclusive
+//!   access while it flushes / resets;
+//! * [`MagState::Owned`]`(gen)` — the thread whose home-slot lease
+//!   generation is `gen` owns the pair; its fast path is one relaxed
+//!   load ([`MagWord::is_owned_by`]).
+//!
+//! All ownership transitions funnel through `Claimed` via CAS, so a new
+//! owner of a recycled slot, a stale-magazine reclaimer, and the
+//! maintenance tick serialise cleanly. Staleness itself is decided
+//! against the lease registry ([`super::lease`]): an `Owned(gen)` word
+//! whose slot generation has moved on belongs to a dead thread, and the
+//! Acquire load that observes the bumped generation pairs with the
+//! registry's Release bump to make the dead thread's magazine writes
+//! visible to whoever claims the slot.
+//!
+//! Every primitive here performs exactly one shared access; the multi-
+//! access bind loop is the [`Bind`] machine.
+
+use crate::sync::{AtomicU64, Ordering};
+
+use super::Step;
+
+/// Raw word value: no owner, magazines empty.
+const MAG_FREE: u64 = 0;
+/// Raw word value: exclusive access held by a binder/reclaimer.
+const MAG_CLAIMED: u64 = 1;
+/// Discriminant tag of the owned encoding (low 32 bits).
+const OWNED_TAG: u32 = 2;
+
+/// Raw word value: owned under lease generation `gen`.
+#[inline(always)]
+const fn owned(gen: u32) -> u64 {
+    ((gen as u64) << 32) | OWNED_TAG as u64
+}
+
+/// Decoded slot state.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum MagState {
+    Free,
+    Claimed,
+    Owned(u32),
+}
+
+impl MagState {
+    #[inline(always)]
+    const fn decode(raw: u64) -> Self {
+        match raw {
+            MAG_FREE => MagState::Free,
+            MAG_CLAIMED => MagState::Claimed,
+            _ => MagState::Owned((raw >> 32) as u32),
+        }
+    }
+
+    #[inline(always)]
+    const fn encode(self) -> u64 {
+        match self {
+            MagState::Free => MAG_FREE,
+            MagState::Claimed => MAG_CLAIMED,
+            MagState::Owned(gen) => owned(gen),
+        }
+    }
+}
+
+/// The slot-ownership word. Each method is exactly one shared access.
+pub struct MagWord {
+    state: AtomicU64,
+}
+
+impl Default for MagWord {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MagWord {
+    /// Fresh slot: `Free`.
+    pub const fn new() -> Self {
+        Self {
+            state: AtomicU64::new(MAG_FREE),
+        }
+    }
+
+    /// The owner's fast-path check: one relaxed load. Relaxed suffices
+    /// because a `true` answer can only be read by the one thread that
+    /// itself published `Owned(gen)` — there is nothing to acquire.
+    #[inline(always)]
+    pub fn is_owned_by(&self, gen: u32) -> bool {
+        self.state.load(Ordering::Relaxed) == owned(gen)
+    }
+
+    /// Decode the current state (Acquire: pairs with the Release
+    /// publishes below, so an observed `Owned`/`Free` implies the
+    /// magazine contents behind it are visible).
+    #[inline(always)]
+    pub fn peek(&self) -> MagState {
+        MagState::decode(self.state.load(Ordering::Acquire))
+    }
+
+    /// Decode with a relaxed load — stats/diagnostics only, implies no
+    /// synchronisation with the magazine contents.
+    #[inline(always)]
+    pub fn peek_relaxed(&self) -> MagState {
+        MagState::decode(self.state.load(Ordering::Relaxed))
+    }
+
+    /// One CAS: take exclusive access from an observed state. On success
+    /// the caller owns the slot's magazines until it publishes again.
+    #[inline(always)]
+    pub fn try_claim(&self, from: MagState) -> Result<(), MagState> {
+        self.state
+            .compare_exchange(
+                from.encode(),
+                MAG_CLAIMED,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            )
+            .map(|_| ())
+            .map_err(MagState::decode)
+    }
+
+    /// Publish ownership under `gen` (Release: the reset magazine state
+    /// becomes visible to any future claimer).
+    #[inline(always)]
+    pub fn publish_owned(&self, gen: u32) {
+        self.state.store(owned(gen), Ordering::Release);
+    }
+
+    /// Publish `Free` after a reclaim flush (Release, as above).
+    #[inline(always)]
+    pub fn publish_free(&self) {
+        self.state.store(MAG_FREE, Ordering::Release);
+    }
+}
+
+// --------------------------------------------------------------- bind --
+
+/// Outcome of a [`Bind`] attempt.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum BindOutcome {
+    /// The word already carried this thread's current generation.
+    AlreadyOwned,
+    /// A reclaimer holds the slot mid-flush: bypass the magazine for
+    /// this op instead of spinning on it.
+    Busy,
+    /// The caller won the claim CAS and now holds exclusive access; it
+    /// must flush any predecessor contents and then `publish_owned`.
+    Claimed,
+}
+
+enum BindState {
+    /// Decode the current word.
+    Load,
+    /// Try to take the slot over from the observed state.
+    Cas { cur: MagState },
+}
+
+/// The slot-bind machine: first use of a pool under a slot lease. Loops
+/// CAS-failure → retry against the freshly observed word (the failed
+/// CAS already re-read it — no extra load, same protocol as the
+/// Treiber machines).
+pub struct Bind {
+    gen: u32,
+    state: BindState,
+}
+
+impl Bind {
+    pub const fn new(gen: u32) -> Self {
+        Self {
+            gen,
+            state: BindState::Load,
+        }
+    }
+
+    /// Route an observed state: terminal outcome or a CAS target.
+    #[inline(always)]
+    fn route(&mut self, cur: MagState) -> Step<BindOutcome> {
+        match cur {
+            MagState::Owned(g) if g == self.gen => Step::Done(BindOutcome::AlreadyOwned),
+            MagState::Claimed => Step::Done(BindOutcome::Busy),
+            other => {
+                self.state = BindState::Cas { cur: other };
+                Step::Pending
+            }
+        }
+    }
+
+    /// One transition = one shared access.
+    #[inline(always)]
+    pub fn step(&mut self, word: &MagWord) -> Step<BindOutcome> {
+        match self.state {
+            BindState::Load => {
+                let cur = word.peek();
+                self.route(cur)
+            }
+            BindState::Cas { cur } => match word.try_claim(cur) {
+                Ok(()) => Step::Done(BindOutcome::Claimed),
+                Err(actual) => self.route(actual),
+            },
+        }
+    }
+
+    /// Drive to completion (the production cold path).
+    #[inline]
+    pub fn run(mut self, word: &MagWord) -> BindOutcome {
+        loop {
+            if let Step::Done(r) = self.step(word) {
+                return r;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        for s in [MagState::Free, MagState::Claimed, MagState::Owned(0), MagState::Owned(7)] {
+            assert_eq!(MagState::decode(s.encode()), s);
+        }
+        // Owned(0) must not collide with Free/Claimed raw values.
+        assert_ne!(MagState::Owned(0).encode(), MAG_FREE);
+        assert_ne!(MagState::Owned(0).encode(), MAG_CLAIMED);
+    }
+
+    #[test]
+    fn bind_takes_over_free_and_stale_slots() {
+        let w = MagWord::new();
+        assert_eq!(Bind::new(3).run(&w), BindOutcome::Claimed);
+        w.publish_owned(3);
+        assert!(w.is_owned_by(3));
+        assert_eq!(Bind::new(3).run(&w), BindOutcome::AlreadyOwned);
+        // A later lease generation treats Owned(3) as a dead predecessor.
+        assert_eq!(Bind::new(4).run(&w), BindOutcome::Claimed);
+        assert_eq!(w.peek(), MagState::Claimed);
+        assert_eq!(Bind::new(5).run(&w), BindOutcome::Busy, "claimed ⇒ bypass");
+        w.publish_owned(4);
+        assert!(w.is_owned_by(4));
+        assert!(!w.is_owned_by(3));
+    }
+
+    #[test]
+    fn reclaim_primitives_compose() {
+        let w = MagWord::new();
+        w.publish_owned(9);
+        // The reclaim scan: peek, decide staleness elsewhere, claim.
+        let observed = w.peek();
+        assert_eq!(observed, MagState::Owned(9));
+        assert!(w.try_claim(observed).is_ok());
+        assert!(
+            w.try_claim(observed).is_err(),
+            "second claimer must lose the CAS"
+        );
+        w.publish_free();
+        assert_eq!(w.peek(), MagState::Free);
+    }
+}

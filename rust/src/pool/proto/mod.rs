@@ -1,0 +1,56 @@
+//! The pool family's lock-free protocols as explicit state machines.
+//!
+//! Each protocol that used to live as a CAS loop inside a production
+//! method ([`super::atomic`]'s Treiber stack, [`super::sharded`]'s
+//! home-slot lease registry, steal stashes and generation-stamped rehome
+//! map, [`super::magazine`]'s slot-claim state word) is extracted here
+//! as a small state machine whose `step()` performs **exactly one**
+//! shared-memory access through the [`crate::sync`] shims.
+//!
+//! Production code drives a machine to completion in a tight inlined
+//! loop (`run()` — compiles to the same CAS loop as before); the model
+//! checker ([`crate::sync::model`]) drives the *same* machine one
+//! transition at a time, interleaving it against other virtual threads.
+//! One source of truth: the code that is checked is the code that ships.
+//!
+//! Protocol surfaces, as traits:
+//!
+//! * [`Head`] — tagged Treiber free-index stack (pop / push / chain
+//!   push / chain detach) over a side table of next links.
+//! * [`Stash`] — a counted Treiber side-stack (the steal stashes).
+//! * [`Lease`] — generation-stamped slot lease (acquire / release with
+//!   generation bump; the home-slot registry).
+//!
+//! The step contract is what makes bounded exploration sound: the
+//! explorer interleaves *steps*, so a step hiding two shared accesses
+//! would hide real interleavings. Under `--cfg pallas_model` the
+//! explorer audits the contract against the shim access ledger.
+
+pub mod head;
+pub mod lease;
+pub mod mag;
+pub mod rehome;
+pub mod stash;
+
+pub use head::{Head, TaggedHead, NIL};
+pub use lease::Lease;
+pub use stash::Stash;
+
+/// Poll result of one protocol-machine step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Step<T> {
+    /// The machine made a transition and needs more steps.
+    Pending,
+    /// The operation completed with this result.
+    Done(T),
+}
+
+impl<T> Step<T> {
+    /// Unwrap a completed step (test helper).
+    pub fn done(self) -> T {
+        match self {
+            Step::Done(t) => t,
+            Step::Pending => panic!("protocol machine still pending"),
+        }
+    }
+}

@@ -1,0 +1,121 @@
+//! The generation-stamped rehome-routing protocol (extracted from
+//! [`crate::pool::sharded`]'s `home_map`).
+//!
+//! Each [`GenEntry`] is one word of the slot→shard routing map, packing
+//! `(target_shard: u32, slot_generation: u32)`. The generation stamp is
+//! the whole protocol: an entry is only honoured while its stamp matches
+//! the slot's *current* lease generation (see [`super::lease`]), so a
+//! routing decision made by a dead thread can never leak to the slot's
+//! next tenant — the reader observes the stale stamp and rebinds
+//! instead. The rehome *swing* is a single CAS conditioned on both the
+//! expected target and the expected generation, so it loses (harmlessly)
+//! against either a concurrent swing or a slot recycle.
+//!
+//! Every method performs exactly one shared access, so production calls
+//! are themselves the model checker's atomic steps.
+
+use crate::sync::{AtomicU64, Ordering};
+
+use super::head::{pack, unpack};
+
+/// Generation stamp meaning "never bound": forces first-use rebind.
+/// A live slot generation can never reach this value in practice
+/// (it would take 2^32 lease recycles of one slot).
+pub const GEN_UNSET: u32 = u32::MAX;
+
+/// One routing-map word: packed `(target_shard, slot_generation)`.
+#[repr(transparent)]
+pub struct GenEntry {
+    word: AtomicU64,
+}
+
+impl Default for GenEntry {
+    fn default() -> Self {
+        Self::unbound()
+    }
+}
+
+impl GenEntry {
+    /// An entry no reader will honour (stamped [`GEN_UNSET`]).
+    pub const fn unbound() -> Self {
+        Self {
+            word: AtomicU64::new(pack(0, GEN_UNSET)),
+        }
+    }
+
+    /// One load: the routed shard, or `None` if the entry is stale
+    /// (stamp ≠ `gen`) or out of range for `shards` — caller rebinds.
+    /// Relaxed is enough: the value is a routing *hint* validated by the
+    /// stamp; a torn-in-time read at worst causes one extra rebind.
+    #[inline(always)]
+    pub fn resolve(&self, gen: u32, shards: usize) -> Option<usize> {
+        let (target, stamp) = unpack(self.word.load(Ordering::Relaxed));
+        let target = target as usize;
+        if stamp == gen && target < shards {
+            Some(target)
+        } else {
+            None
+        }
+    }
+
+    /// One store: bind the entry to `target` under the caller's current
+    /// lease generation. Only the slot's tenant calls this, so a plain
+    /// store (not CAS) is safe: a racing `swing` that overwrites it just
+    /// re-routes the same tenant.
+    #[inline(always)]
+    pub fn rebind(&self, target: usize, gen: u32) {
+        self.word.store(pack(target as u32, gen), Ordering::Relaxed);
+    }
+
+    /// One CAS: move the route `from → to`, conditioned on the stamp.
+    /// Fails (returning `false`) if the entry moved or the slot was
+    /// recycled since the caller profiled — both mean the decision is
+    /// stale and must be dropped.
+    #[inline(always)]
+    pub fn swing(&self, from: usize, to: usize, gen: u32) -> bool {
+        self.word
+            .compare_exchange(
+                pack(from as u32, gen),
+                pack(to as u32, gen),
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            )
+            .is_ok()
+    }
+
+    /// Snapshot `(target, stamp)` for tests and diagnostics.
+    pub fn peek(&self) -> (u32, u32) {
+        unpack(self.word.load(Ordering::Relaxed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unbound_never_resolves() {
+        let e = GenEntry::unbound();
+        assert_eq!(e.resolve(0, 8), None);
+        assert_eq!(e.resolve(GEN_UNSET - 1, 8), None);
+    }
+
+    #[test]
+    fn resolve_honours_stamp_and_range() {
+        let e = GenEntry::unbound();
+        e.rebind(3, 7);
+        assert_eq!(e.resolve(7, 8), Some(3));
+        assert_eq!(e.resolve(8, 8), None, "stale stamp rejected");
+        assert_eq!(e.resolve(7, 3), None, "shrunk topology rejected");
+    }
+
+    #[test]
+    fn swing_is_conditional_on_route_and_stamp() {
+        let e = GenEntry::unbound();
+        e.rebind(1, 5);
+        assert!(!e.swing(1, 2, 6), "recycled slot: swing must lose");
+        assert!(!e.swing(0, 2, 5), "moved route: swing must lose");
+        assert!(e.swing(1, 2, 5));
+        assert_eq!(e.peek(), (2, 5));
+    }
+}

@@ -1,0 +1,217 @@
+//! The per-slot steal-stash protocol (extracted from
+//! [`crate::pool::sharded`]'s `StashLine`).
+//!
+//! A stash is a counted tagged Treiber stack of *grid* indices linked
+//! through a shared side table: structurally the same machines as
+//! [`super::head`], plus an approximate element count maintained by a
+//! separate relaxed counter *after* each successful head CAS. The count
+//! trails the structure by design — it gates heuristics (raid order,
+//! drain-on-rehome) and stats, never correctness — but at quiescence the
+//! two agree exactly, which is the conservation law the model checker
+//! proves in `tests/model_check.rs`.
+
+use crate::sync::{AtomicU32, Ordering};
+
+use super::head::{Pop, PushChain, TaggedHead};
+use super::Step;
+
+/// The stash protocol surface.
+pub trait Stash {
+    /// Pop one stashed grid index (LIFO), or `None` when empty.
+    fn pop(&self, links: &[AtomicU32]) -> Option<u32>;
+    /// Push a pre-linked chain of grid indices in one CAS.
+    fn push_chain(&self, links: &[AtomicU32], grids: &[u32]);
+    /// Approximate element count (exact at quiescence).
+    fn count(&self) -> u32;
+}
+
+/// A counted tagged Treiber stack head. Cache-line aligned so two hot
+/// stash lines never share a line (`ShardCounters` embeds one per slot).
+#[repr(C, align(64))]
+pub struct CountedStash {
+    head: TaggedHead,
+    count: AtomicU32,
+}
+
+impl Default for CountedStash {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CountedStash {
+    pub const fn new() -> Self {
+        Self {
+            head: TaggedHead::new(),
+            count: AtomicU32::new(0),
+        }
+    }
+
+    /// Current ABA tag (tests / diagnostics).
+    pub fn tag(&self) -> u32 {
+        self.head.tag()
+    }
+}
+
+impl Stash for CountedStash {
+    #[inline]
+    fn pop(&self, links: &[AtomicU32]) -> Option<u32> {
+        StashPop::new().run(self, links)
+    }
+
+    #[inline]
+    fn push_chain(&self, links: &[AtomicU32], grids: &[u32]) {
+        StashPush::new(grids).run(self, links)
+    }
+
+    #[inline]
+    fn count(&self) -> u32 {
+        self.count.load(Ordering::Relaxed)
+    }
+}
+
+// ---------------------------------------------------------------- pop --
+
+enum StashPopState {
+    /// Treiber pop over the shared link table.
+    Inner(Pop),
+    /// Popped: maintain the approximate count.
+    SubCount { grid: u32 },
+}
+
+/// The stash-pop machine: head pop, then count decrement.
+pub struct StashPop {
+    state: StashPopState,
+}
+
+impl Default for StashPop {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl StashPop {
+    pub const fn new() -> Self {
+        Self {
+            state: StashPopState::Inner(Pop::new()),
+        }
+    }
+
+    /// One transition = one shared access.
+    #[inline(always)]
+    pub fn step(&mut self, stash: &CountedStash, links: &[AtomicU32]) -> Step<Option<u32>> {
+        match &mut self.state {
+            StashPopState::Inner(pop) => match pop.step(&stash.head, links) {
+                Step::Done(Some(grid)) => {
+                    self.state = StashPopState::SubCount { grid };
+                    Step::Pending
+                }
+                Step::Done(None) => Step::Done(None),
+                Step::Pending => Step::Pending,
+            },
+            StashPopState::SubCount { grid } => {
+                let grid = *grid;
+                stash.count.fetch_sub(1, Ordering::Relaxed);
+                Step::Done(Some(grid))
+            }
+        }
+    }
+
+    /// Drive to completion (the production fast path).
+    #[inline]
+    pub fn run(mut self, stash: &CountedStash, links: &[AtomicU32]) -> Option<u32> {
+        loop {
+            if let Step::Done(r) = self.step(stash, links) {
+                return r;
+            }
+        }
+    }
+}
+
+// --------------------------------------------------------------- push --
+
+enum StashPushState<'a> {
+    /// Treiber chain push over the shared link table.
+    Inner(PushChain<'a>),
+    /// Chain linked in: maintain the approximate count.
+    AddCount,
+}
+
+/// The stash-push machine: one-CAS chain splice, then count increment.
+pub struct StashPush<'a> {
+    len: u32,
+    state: StashPushState<'a>,
+}
+
+impl<'a> StashPush<'a> {
+    /// `grids` must be non-empty; indices must be in-bounds for `links`.
+    pub fn new(grids: &'a [u32]) -> Self {
+        Self {
+            len: grids.len() as u32,
+            state: StashPushState::Inner(PushChain::new(grids)),
+        }
+    }
+
+    /// One transition = one shared access.
+    #[inline(always)]
+    pub fn step(&mut self, stash: &CountedStash, links: &[AtomicU32]) -> Step<()> {
+        match &mut self.state {
+            StashPushState::Inner(chain) => {
+                if let Step::Done(()) = chain.step(&stash.head, links) {
+                    self.state = StashPushState::AddCount;
+                }
+                Step::Pending
+            }
+            StashPushState::AddCount => {
+                stash.count.fetch_add(self.len, Ordering::Relaxed);
+                Step::Done(())
+            }
+        }
+    }
+
+    /// Drive to completion (the production fast path).
+    #[inline]
+    pub fn run(mut self, stash: &CountedStash, links: &[AtomicU32]) {
+        loop {
+            if let Step::Done(()) = self.step(stash, links) {
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn links(n: usize) -> Vec<AtomicU32> {
+        (0..n).map(|_| AtomicU32::new(u32::MAX)).collect()
+    }
+
+    #[test]
+    fn chain_push_then_lifo_pop_conserves() {
+        let stash = CountedStash::new();
+        let links = links(8);
+        assert_eq!(stash.pop(&links), None);
+        stash.push_chain(&links, &[3, 5, 7]);
+        assert_eq!(stash.count(), 3);
+        // LIFO within the chain: first element of the slice is on top.
+        assert_eq!(stash.pop(&links), Some(3));
+        assert_eq!(stash.pop(&links), Some(5));
+        assert_eq!(stash.pop(&links), Some(7));
+        assert_eq!(stash.count(), 0);
+        assert_eq!(stash.pop(&links), None);
+    }
+
+    #[test]
+    fn every_successful_op_bumps_the_tag() {
+        let stash = CountedStash::new();
+        let links = links(4);
+        stash.push_chain(&links, &[0]);
+        let t0 = stash.tag();
+        stash.push_chain(&links, &[1, 2]);
+        assert_eq!(stash.tag(), t0.wrapping_add(1));
+        stash.pop(&links);
+        assert_eq!(stash.tag(), t0.wrapping_add(2));
+    }
+}

@@ -69,8 +69,9 @@ pub(crate) const fn mod_inverse_u64(x: u64) -> u64 {
     inv
 }
 
-// The pool is `Send` (it owns no thread-affine state); it is NOT `Sync` —
-// concurrent use requires `LockedPool` or `AtomicPool`.
+// SAFETY: the pool is `Send` — it owns no thread-affine state, just a raw
+// region pointer whose backing memory the safety contract pins. It is NOT
+// `Sync`: concurrent use requires `LockedPool` or `AtomicPool`.
 unsafe impl Send for RawPool {}
 
 impl RawPool {
@@ -336,6 +337,7 @@ impl RawPool {
             let Some(p) = cur else { break };
             let idx = self.index_from_addr(p);
             out.push(idx);
+            // SAFETY: `p` is an in-range block start and the block is free, so its first 4 bytes hold the in-band next index.
             let next_idx = unsafe { (p.as_ptr() as *const u32).read_unaligned() };
             cur = if next_idx < self.num_blocks {
                 Some(self.addr_from_index(next_idx))
@@ -366,6 +368,7 @@ mod tests {
     fn mk(block_size: usize, n: u32) -> TestPool {
         let mut buf = vec![0u8; block_size * n as usize];
         let region = NonNull::new(buf.as_mut_ptr()).unwrap();
+        // SAFETY: `buf` is an exclusively owned live region of exactly `block_size * n` bytes.
         let pool = unsafe { RawPool::new(region, buf.len(), block_size, n) };
         TestPool { buf, pool }
     }
@@ -375,6 +378,7 @@ mod tests {
         // §I "no loops": creation must leave every block byte untouched.
         let mut buf = vec![0xAB_u8; 64 * 1024];
         let region = NonNull::new(buf.as_mut_ptr()).unwrap();
+        // SAFETY: `buf` is an exclusively owned live region sized for all 1024 blocks.
         let pool = unsafe { RawPool::new(region, buf.len(), 64, 1024) };
         assert_eq!(pool.num_initialized(), 0);
         assert!(buf.iter().all(|&b| b == 0xAB), "creation wrote to a block");
@@ -391,6 +395,7 @@ mod tests {
     fn rejects_zero_blocks() {
         let mut buf = vec![0u8; 64];
         let region = NonNull::new(buf.as_mut_ptr()).unwrap();
+        // SAFETY: the region is valid for its 64 bytes; the constructor must panic before any block is touched.
         let _ = unsafe { RawPool::new(region, 64, 16, 0) };
     }
 
@@ -402,6 +407,7 @@ mod tests {
         let mut buf = [0u8; 8];
         let region = NonNull::new(buf.as_mut_ptr()).unwrap();
         let huge = usize::MAX / 2 + 2; // huge * 4 wraps
+        // SAFETY: the wrapping product must be rejected before the 8-byte region is ever dereferenced.
         let _ = unsafe { RawPool::new(region, 8, huge, 4) };
     }
 
@@ -410,6 +416,7 @@ mod tests {
     fn rejects_small_region() {
         let mut buf = vec![0u8; 63];
         let region = NonNull::new(buf.as_mut_ptr()).unwrap();
+        // SAFETY: the region is valid for its 63 bytes; the size check must panic before any use.
         let _ = unsafe { RawPool::new(region, 63, 16, 4) };
     }
 
@@ -440,6 +447,7 @@ mod tests {
         // (d) deallocate block 0 → head of list, links to block 2 (which is
         // still beyond the watermark; it will be initialised on the next
         // allocation, so the walkable chain is just [0]).
+        // SAFETY: `a` came from this pool's `allocate` and is freed exactly once.
         unsafe { p.deallocate(a) };
         assert_eq!(p.num_free(), 3);
         assert_eq!(p.index_from_addr(p.next.unwrap()), 0);
@@ -482,12 +490,15 @@ mod tests {
         let b = p.allocate().unwrap();
         assert!(p.next.is_none());
 
+        // SAFETY: `a` came from this pool's `allocate` and is freed exactly once.
         unsafe { p.deallocate(a) };
         // Block a's first 4 bytes now hold the sentinel.
+        // SAFETY: `a` was just freed, so its first 4 bytes hold the pool's in-band index sentinel.
         let sentinel = unsafe { (a.as_ptr() as *const u32).read_unaligned() };
         assert_eq!(sentinel, 2);
         assert_eq!(p.free_list_indices(), vec![0]);
 
+        // SAFETY: `b` came from this pool's `allocate` and is freed exactly once.
         unsafe { p.deallocate(b) };
         assert_eq!(p.free_list_indices(), vec![1, 0]);
 
@@ -506,6 +517,7 @@ mod tests {
         let p = &mut t.pool;
         let ptrs: Vec<_> = (0..8).map(|_| p.allocate().unwrap()).collect();
         // Free 3, 5, 1 → reallocation order must be 1, 5, 3 (LIFO).
+        // SAFETY: each pointer came from this pool's `allocate` and is freed exactly once.
         unsafe {
             p.deallocate(ptrs[3]);
             p.deallocate(ptrs[5]);
@@ -540,6 +552,7 @@ mod tests {
             let ptrs: Vec<_> = (0..16).map(|_| p.allocate().unwrap()).collect();
             assert!(p.is_full(), "cycle {cycle}");
             for ptr in ptrs {
+                // SAFETY: each pointer came from this pool's `allocate` and is freed exactly once.
                 unsafe { p.deallocate(ptr) };
             }
             assert!(p.is_empty(), "cycle {cycle}");
@@ -572,6 +585,7 @@ mod tests {
             } else {
                 let i = rng.gen_usize(0, live.len());
                 let ptr = live.swap_remove(i);
+                // SAFETY: `ptr` was drawn from `live`, so it is a unique outstanding allocation of this pool.
                 unsafe { p.deallocate(ptr) };
             }
             assert_eq!(p.num_used() as usize, live.len(), "step {step}: count drift");
@@ -585,6 +599,7 @@ mod tests {
         let a = p.allocate().unwrap();
         assert!(p.validate_addr(a));
         // Off-boundary pointer inside region: invalid.
+        // SAFETY: one byte past `a`'s base is still inside the region, hence non-null.
         let off = unsafe { NonNull::new_unchecked(a.as_ptr().add(1)) };
         assert!(!p.validate_addr(off));
         // Outside region: invalid.
@@ -598,12 +613,14 @@ mod tests {
         let mut buf = vec![0u8; 16 * 8];
         let region = NonNull::new(buf.as_mut_ptr()).unwrap();
         // Start with 4 of the 8 block capacity.
+        // SAFETY: `buf` is an exclusively owned live region sized for the full 8-block capacity.
         let mut p = unsafe { RawPool::new(region, buf.len(), 16, 4) };
         let mut held = Vec::new();
         for _ in 0..4 {
             held.push(p.allocate().unwrap());
         }
         assert!(p.allocate().is_none());
+        // SAFETY: the region was sized for 8 blocks up front and no outstanding pointer moves.
         unsafe { p.grow(8) };
         assert_eq!(p.num_free(), 4);
         for i in 4..8 {
@@ -617,10 +634,13 @@ mod tests {
     fn grow_when_list_nonempty_keeps_chain() {
         let mut buf = vec![0u8; 8 * 10];
         let region = NonNull::new(buf.as_mut_ptr()).unwrap();
+        // SAFETY: `buf` is an exclusively owned live region sized for the full 10-block capacity.
         let mut p = unsafe { RawPool::new(region, buf.len(), 8, 5) };
         let a = p.allocate().unwrap();
         let _b = p.allocate().unwrap();
+        // SAFETY: `a` came from this pool's `allocate` and is freed exactly once.
         unsafe { p.deallocate(a) };
+        // SAFETY: the region was sized for 10 blocks up front and no outstanding pointer moves.
         unsafe { p.grow(10) };
         assert_eq!(p.num_free(), 9);
         // Head is still the freed block.
@@ -635,6 +655,7 @@ mod tests {
         // Touch 10 blocks.
         let held: Vec<_> = (0..10).map(|_| p.allocate().unwrap()).collect();
         for h in held {
+            // SAFETY: each held pointer came from this pool's `allocate` and is freed exactly once.
             unsafe { p.deallocate(h) };
         }
         assert_eq!(p.num_initialized(), 10);
@@ -654,6 +675,7 @@ mod tests {
         let p = &mut t.pool;
         let held: Vec<_> = (0..4).map(|_| p.allocate().unwrap()).collect();
         for h in held {
+            // SAFETY: each held pointer came from this pool's `allocate` and is freed exactly once.
             unsafe { p.deallocate(h) };
         }
         assert_eq!(p.shrink_to_watermark(), 4);
@@ -679,6 +701,7 @@ mod tests {
             let p = &mut t.pool;
             let ptrs: Vec<_> = (0..16).map(|_| p.allocate().unwrap()).collect();
             for ptr in ptrs.into_iter().rev() {
+                // SAFETY: each pointer came from this pool's `allocate` and is freed exactly once.
                 unsafe { p.deallocate(ptr) };
             }
             assert!(p.is_empty(), "block_size {bs}");
@@ -703,6 +726,7 @@ mod tests {
         let mut t = mk(8, 8);
         let p = &mut t.pool;
         let ptrs: Vec<_> = (0..6).map(|_| p.allocate().unwrap()).collect();
+        // SAFETY: each pointer came from this pool's `allocate` and is freed exactly once.
         unsafe {
             p.deallocate(ptrs[0]);
             p.deallocate(ptrs[4]);

@@ -46,6 +46,7 @@ impl ResizablePool {
             .checked_mul(max_blocks as usize)
             .expect("pool reservation size overflows usize (block_size * max_blocks)");
         let layout = Layout::from_size_align(bytes, align).expect("bad layout");
+        // SAFETY: `layout` has non-zero, overflow-checked size.
         let region = NonNull::new(unsafe { std::alloc::alloc(layout) })
             .expect("pool region allocation failed");
         // SAFETY: region is valid for max_blocks ≥ initial_blocks blocks.
@@ -115,6 +116,8 @@ impl ResizablePool {
 
 impl Drop for ResizablePool {
     fn drop(&mut self) {
+        // SAFETY: the region was allocated in `new` with exactly this layout
+        // and is freed only here.
         unsafe { std::alloc::dealloc(self.raw.mem_start().as_ptr(), self.layout) };
     }
 }
@@ -147,6 +150,7 @@ mod tests {
         addrs.dedup();
         assert_eq!(addrs.len(), 16);
         for q in held {
+            // SAFETY: every pointer came from `allocate` and is freed exactly once.
             unsafe { p.deallocate(q) };
         }
         assert_eq!(p.num_free(), 16);
@@ -216,6 +220,7 @@ mod tests {
     fn shrink_then_regrow() {
         let mut p = ResizablePool::new(8, 32, 32);
         let a = p.allocate().unwrap();
+        // SAFETY: `a` came from `allocate` and is freed exactly once.
         unsafe { p.deallocate(a) };
         assert_eq!(p.shrink_to_watermark(), 1);
         assert_eq!(p.num_free(), 1);
@@ -225,6 +230,7 @@ mod tests {
         let held: Vec<_> = (0..32).map(|_| p.allocate().unwrap()).collect();
         assert!(p.allocate().is_none());
         for q in held {
+            // SAFETY: every pointer came from `allocate` and is freed exactly once.
             unsafe { p.deallocate(q) };
         }
     }

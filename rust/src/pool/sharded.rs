@@ -123,11 +123,14 @@
 use core::alloc::Layout;
 use core::cell::Cell;
 use core::ptr::NonNull;
-use core::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::sync::Arc;
 
 use super::atomic::AtomicPool;
 use super::placement::{ShardPlacement, StealAware};
+use super::proto::lease::{Lease, LeaseRegistry};
+use super::proto::rehome::GenEntry;
+use super::proto::stash::{CountedStash, Stash};
+use crate::sync::{AtomicU32, AtomicU64, Ordering};
 use super::raw::{mod_inverse_u64, MIN_BLOCK_SIZE};
 use super::stats::{MagazineStats, ShardStats, ShardedPoolStats};
 use crate::metrics::Metrics;
@@ -135,18 +138,16 @@ use crate::util::align::{align_up, next_pow2};
 use crate::util::CachePadded;
 
 // ---------------------------------------------------------------------------
-// Process-wide home-slot registry: a recyclable free-list over a fixed
-// arena of slot ids. Entirely lock-free and allocation-free so it is safe
-// to run inside a `#[global_allocator]`.
+// Process-wide home-slot registry. The lease protocol itself (recyclable
+// free-list, generation bumps, overflow sharing) lives in
+// `proto::lease` as checkable state machines; this module owns the one
+// static arena instance plus the TLS binding and exit guard.
 // ---------------------------------------------------------------------------
 
 /// Size of the home-slot arena: the number of concurrently live threads
 /// that get private, recyclable routing slots. Beyond this, slots are
 /// shared round-robin (harmless — a slot is only a routing hint).
 pub const MAX_HOME_SLOTS: usize = 256;
-
-/// Sentinel for "no slot" in the registry free-list.
-const SLOT_NIL: u32 = u32::MAX;
 
 /// High bit of a TLS slot word: the slot is shared (overflow or acquired
 /// during thread teardown) — never recycled, excluded from rehoming (and
@@ -158,22 +159,9 @@ const HOME_UNSET: u64 = u64::MAX;
 /// TLS sentinel: the exit guard ran; any later use takes a shared slot.
 const HOME_EXITED: u64 = u64::MAX - 1;
 
-/// Free-list head: packed (slot | SLOT_NIL, ABA tag).
-static SLOT_FREE_HEAD: AtomicU64 = AtomicU64::new(pack(SLOT_NIL, 0));
-/// Free-list next links (static arena — no allocation, ever).
-static SLOT_NEXT: [AtomicU32; MAX_HOME_SLOTS] =
-    [const { AtomicU32::new(SLOT_NIL) }; MAX_HOME_SLOTS];
-/// Per-slot generation, bumped on every release; stale-owner detector.
-static SLOT_GEN: [AtomicU32; MAX_HOME_SLOTS] =
-    [const { AtomicU32::new(0) }; MAX_HOME_SLOTS];
-/// Slots ever handed out (clamped to the arena in the getter).
-static SLOT_HIGH_WATER: AtomicU32 = AtomicU32::new(0);
-/// Slots currently parked in the free-list.
-static SLOT_FREE_COUNT: AtomicU32 = AtomicU32::new(0);
-/// Round-robin source for shared overflow slots.
-static SLOT_OVERFLOW_RR: AtomicU32 = AtomicU32::new(0);
-/// Bumped on every slot release — pools and tests can watch thread churn.
-static SLOT_EPOCH: AtomicU64 = AtomicU64::new(0);
+/// The process-wide slot arena (lock-free and allocation-free, so it is
+/// safe to run inside a `#[global_allocator]`).
+static HOME_SLOTS: LeaseRegistry<MAX_HOME_SLOTS> = LeaseRegistry::new();
 
 std::thread_local! {
     /// This thread's home slot, packed `(gen << 32) | slot_with_flags`.
@@ -199,65 +187,21 @@ impl Drop for HomeGuard {
 }
 
 /// Pop a recycled slot, else claim a fresh one; `(slot, privately_owned)`.
+/// Drives `proto::lease`'s [`Acquire`](super::proto::lease::Acquire)
+/// machine — the code the model checker interleaves step by step.
 fn acquire_slot() -> (u32, bool) {
-    let mut cur = SLOT_FREE_HEAD.load(Ordering::Acquire);
-    loop {
-        let (slot, tag) = unpack(cur);
-        if slot == SLOT_NIL {
-            break;
-        }
-        let nxt = SLOT_NEXT[slot as usize].load(Ordering::Relaxed);
-        match SLOT_FREE_HEAD.compare_exchange_weak(
-            cur,
-            pack(nxt, tag.wrapping_add(1)),
-            Ordering::AcqRel,
-            Ordering::Acquire,
-        ) {
-            Ok(_) => {
-                SLOT_FREE_COUNT.fetch_sub(1, Ordering::Relaxed);
-                return (slot, true);
-            }
-            Err(actual) => cur = actual,
-        }
-    }
-    let fresh = SLOT_HIGH_WATER.fetch_add(1, Ordering::Relaxed);
-    if (fresh as usize) < MAX_HOME_SLOTS {
-        return (fresh, true);
-    }
-    // Arena exhausted: undo the probe and share an id round-robin.
-    SLOT_HIGH_WATER.fetch_sub(1, Ordering::Relaxed);
-    (overflow_slot(), false)
+    HOME_SLOTS.acquire()
 }
 
 fn overflow_slot() -> u32 {
-    SLOT_OVERFLOW_RR.fetch_add(1, Ordering::Relaxed) % MAX_HOME_SLOTS as u32
+    HOME_SLOTS.shared_slot()
 }
 
+/// Return a slot, bumping its generation *before* recycling the id (the
+/// [`Release`](super::proto::lease::Release) machine — see its state
+/// docs for the ordering argument the magazine layer relies on).
 fn release_slot(slot: u32) {
-    debug_assert!((slot as usize) < MAX_HOME_SLOTS);
-    // Generation first: the release-CAS below publishes it to the next
-    // acquirer, which is what keeps recycled ids race-free. The bump is
-    // Release so that a *reclaimer* (not the next acquirer) observing the
-    // new generation via [`slot_generation`]'s Acquire load also sees
-    // every per-slot write — e.g. magazine contents — the dead thread
-    // made before exiting.
-    SLOT_GEN[slot as usize].fetch_add(1, Ordering::Release);
-    let mut cur = SLOT_FREE_HEAD.load(Ordering::Acquire);
-    loop {
-        let (head, tag) = unpack(cur);
-        SLOT_NEXT[slot as usize].store(head, Ordering::Relaxed);
-        match SLOT_FREE_HEAD.compare_exchange_weak(
-            cur,
-            pack(slot, tag.wrapping_add(1)),
-            Ordering::AcqRel,
-            Ordering::Acquire,
-        ) {
-            Ok(_) => break,
-            Err(actual) => cur = actual,
-        }
-    }
-    SLOT_FREE_COUNT.fetch_add(1, Ordering::Relaxed);
-    SLOT_EPOCH.fetch_add(1, Ordering::Release);
+    HOME_SLOTS.release(slot);
 }
 
 /// This thread's `(slot_with_flags, generation)`, acquiring on first use.
@@ -277,7 +221,7 @@ fn home_slot() -> (u32, u32) {
 fn init_home_slot(h: &Cell<u64>, teardown: bool) -> (u32, u32) {
     let (slot, owned) =
         if teardown { (overflow_slot(), false) } else { acquire_slot() };
-    let gen = SLOT_GEN[slot as usize].load(Ordering::Relaxed);
+    let gen = HOME_SLOTS.generation_relaxed(slot as usize);
     let flagged = if owned { slot } else { slot | SLOT_SHARED_BIT };
     h.set(((gen as u64) << 32) | flagged as u64);
     if owned {
@@ -305,25 +249,25 @@ pub(crate) fn current_slot() -> (u32, u32) {
 /// the exited owner made (the magazine layer's stale-flush relies on
 /// this edge).
 pub(crate) fn slot_generation(slot: usize) -> u32 {
-    SLOT_GEN[slot & (MAX_HOME_SLOTS - 1)].load(Ordering::Acquire)
+    HOME_SLOTS.generation(slot)
 }
 
 /// Highest number of home-slot ids ever live at once (clamped to the
 /// arena). Flat across thread churn — the recycling proof the stress
 /// suite asserts.
 pub fn home_slots_high_water() -> usize {
-    (SLOT_HIGH_WATER.load(Ordering::Relaxed) as usize).min(MAX_HOME_SLOTS)
+    HOME_SLOTS.high_water()
 }
 
 /// Slot ids currently parked in the recycle free-list.
 pub fn home_slots_free() -> usize {
-    SLOT_FREE_COUNT.load(Ordering::Relaxed) as usize
+    HOME_SLOTS.free_slots()
 }
 
 /// Monotone thread-churn counter: bumps every time a thread exits and
 /// returns its home slot.
 pub fn home_slot_epoch() -> u64 {
-    SLOT_EPOCH.load(Ordering::Acquire)
+    HOME_SLOTS.epoch()
 }
 
 /// Default shard count: available parallelism rounded up to a power of
@@ -337,36 +281,9 @@ pub fn default_shards() -> usize {
 /// Upper bound on the adaptive steal batch (blocks moved per scan).
 pub const MAX_STEAL_BATCH: u32 = 16;
 
-/// Sentinel for an empty stash / end of a stash chain (grid index space).
+/// Sentinel for an empty stash / end of a stash chain (grid index space;
+/// same value as the proto machines' `NIL`).
 const GRID_NIL: u32 = u32::MAX;
-
-/// Home-map generation sentinel: entry never written for this slot.
-const GEN_UNSET: u32 = u32::MAX;
-
-#[inline(always)]
-const fn pack(lo: u32, hi: u32) -> u64 {
-    ((hi as u64) << 32) | lo as u64
-}
-
-#[inline(always)]
-const fn unpack(v: u64) -> (u32, u32) {
-    (v as u32, (v >> 32) as u32)
-}
-
-/// The steal-stash head for one home slot, on its own cache line.
-///
-/// The head is CASed by *arbitrary* threads (batch imports, raids,
-/// drains) while the owning home's tally counters are bumped by the
-/// threads homed there — co-locating them made every cross-thread stash
-/// CAS invalidate the owner's hot counter line (false sharing). `repr(C,
-/// align(64))` on both structs keeps the stash line private.
-#[repr(C, align(64))]
-struct StashLine {
-    /// Steal-stash head: packed (grid index | GRID_NIL, ABA tag).
-    head: AtomicU64,
-    /// Blocks currently parked in this home's stash.
-    count: AtomicU32,
-}
 
 /// Per-shard counters plus the home slot's steal stash, adaptive batch
 /// width and rehome window. `repr(C, align(64))` with the stash on its
@@ -395,9 +312,13 @@ struct ShardCounters {
     steal_batch: AtomicU32,
     /// Allocations in the current rehome-decision window.
     win_ops: AtomicU32,
-    /// The cross-thread-CASed stash head, on its own line (align(64)
-    /// pushes it past the tally fields above).
-    stash: StashLine,
+    /// The cross-thread-CASed stash head, on its own line: the head is
+    /// CASed by *arbitrary* threads (batch imports, raids, drains) while
+    /// the tally fields above are bumped by threads homed here, and
+    /// co-locating them made every cross-thread stash CAS invalidate the
+    /// owner's hot counter line. `CountedStash`'s own `align(64)` pushes
+    /// it past the tally fields.
+    stash: CountedStash,
 }
 
 impl ShardCounters {
@@ -413,10 +334,7 @@ impl ShardCounters {
             stash_drained: AtomicU64::new(0),
             steal_batch: AtomicU32::new(1),
             win_ops: AtomicU32::new(0),
-            stash: StashLine {
-                head: AtomicU64::new(pack(GRID_NIL, 0)),
-                count: AtomicU32::new(0),
-            },
+            stash: CountedStash::new(),
         }
     }
 }
@@ -439,11 +357,12 @@ pub struct ShardedPool {
     placement: Arc<dyn ShardPlacement>,
     /// Cached `placement.window()` (0 ⇒ no windowed accounting at all).
     window: u32,
-    /// Per-slot routing: packed (target shard, slot generation). A stale
-    /// generation (slot recycled since the entry was written) forces a
-    /// rebind from the placement policy, so routing state never leaks
-    /// across thread lifetimes.
-    home_map: Box<[AtomicU64]>,
+    /// Per-slot routing: generation-stamped `(target shard, slot
+    /// generation)` entries (`proto::rehome`). A stale stamp (slot
+    /// recycled since the entry was written) forces a rebind from the
+    /// placement policy, so routing state never leaks across thread
+    /// lifetimes.
+    home_map: Box<[GenEntry]>,
     /// Windowed per-victim steal counts, row-major `[home][victim]`.
     win_steals: Box<[AtomicU32]>,
     mem_start: NonNull<u8>,
@@ -465,6 +384,8 @@ pub struct ShardedPool {
 // SAFETY: the region is exclusively owned; shards are `Sync` and all
 // shared mutation goes through their atomics.
 unsafe impl Send for ShardedPool {}
+// SAFETY: every method takes `&self`; all shared mutation funnels
+// through the shards' atomics and the atomic placement/counter state.
 unsafe impl Sync for ShardedPool {}
 
 impl ShardedPool {
@@ -540,6 +461,7 @@ impl ShardedPool {
             .checked_mul(n_shards)
             .expect("pool region size overflows usize");
         let region_layout = Layout::from_size_align(total_bytes, align).expect("bad layout");
+        // SAFETY: `region_layout` has non-zero, overflow-checked size.
         let region = NonNull::new(unsafe { std::alloc::alloc(region_layout) })
             .expect("pool region allocation failed");
 
@@ -552,6 +474,8 @@ impl ShardedPool {
             // are disjoint and each shard gets exclusive use of its own.
             let shard_base =
                 unsafe { NonNull::new_unchecked(region.as_ptr().add(i * shard_bytes)) };
+            // SAFETY: `shard_base` addresses `count` blocks of `bs` bytes that
+            // this pool owns and keeps alive for the shard's whole lifetime.
             pools.push(CachePadded::new(unsafe {
                 AtomicPool::over_region(shard_base, bs, count)
             }));
@@ -569,7 +493,7 @@ impl ShardedPool {
         // Home map starts unbound: the first use of a slot (under its
         // current generation) rebinds it from the placement policy.
         let mut home_map = Vec::with_capacity(MAX_HOME_SLOTS);
-        home_map.resize_with(MAX_HOME_SLOTS, || AtomicU64::new(pack(0, GEN_UNSET)));
+        home_map.resize_with(MAX_HOME_SLOTS, GenEntry::unbound);
         let mut win_steals = Vec::with_capacity(n_shards * n_shards);
         win_steals.resize_with(n_shards * n_shards, || AtomicU32::new(0));
 
@@ -630,11 +554,9 @@ impl ShardedPool {
             return self.placement.place((slot & !SLOT_SHARED_BIT) as usize, n) % n;
         }
         let idx = slot as usize & (MAX_HOME_SLOTS - 1);
-        let (target, egen) = unpack(self.home_map[idx].load(Ordering::Relaxed));
-        if egen == gen && (target as usize) < n {
-            target as usize
-        } else {
-            self.rebind_home(idx, slot, gen)
+        match self.home_map[idx].resolve(gen, n) {
+            Some(target) => target,
+            None => self.rebind_home(idx, slot, gen),
         }
     }
 
@@ -644,7 +566,7 @@ impl ShardedPool {
     fn rebind_home(&self, idx: usize, slot: u32, gen: u32) -> usize {
         let n = self.shards.len();
         let target = self.placement.place(slot as usize, n) % n;
-        self.home_map[idx].store(pack(target as u32, gen), Ordering::Relaxed);
+        self.home_map[idx].rebind(target, gen);
         target
     }
 
@@ -711,16 +633,7 @@ impl ShardedPool {
                 return;
             }
             let idx = slot as usize & (MAX_HOME_SLOTS - 1);
-            let expected = pack(home as u32, gen);
-            if self.home_map[idx]
-                .compare_exchange(
-                    expected,
-                    pack(target as u32, gen),
-                    Ordering::AcqRel,
-                    Ordering::Acquire,
-                )
-                .is_ok()
-            {
+            if self.home_map[idx].swing(home, target, gen) {
                 self.counters[home].rehomes.fetch_add(1, Ordering::Relaxed);
                 // Leave nothing stranded behind: park-ed extras of the
                 // abandoned home go back to their owning shards.
@@ -729,58 +642,17 @@ impl ShardedPool {
         }
     }
 
-    /// Pop one grid index off `slot`'s steal stash (Treiber, tag-guarded).
+    /// Pop one grid index off `slot`'s steal stash (Treiber, tag-guarded
+    /// — `proto::stash`'s counted pop machine over `steal_next`).
     fn stash_pop(&self, slot: usize) -> Option<u32> {
-        let c = &self.counters[slot];
-        let mut cur = c.stash.head.load(Ordering::Acquire);
-        loop {
-            let (grid, tag) = unpack(cur);
-            if grid == GRID_NIL {
-                return None;
-            }
-            let nxt = self.steal_next[grid as usize].load(Ordering::Relaxed);
-            match c.stash.head.compare_exchange_weak(
-                cur,
-                pack(nxt, tag.wrapping_add(1)),
-                Ordering::AcqRel,
-                Ordering::Acquire,
-            ) {
-                Ok(_) => {
-                    c.stash.count.fetch_sub(1, Ordering::Relaxed);
-                    return Some(grid);
-                }
-                Err(actual) => cur = actual,
-            }
-        }
+        self.counters[slot].stash.pop(&self.steal_next)
     }
 
     /// Park a pre-linked chain of grid indices in `slot`'s stash with one
-    /// head CAS per attempt.
+    /// head CAS per attempt (the counted chain-push machine).
     fn stash_push_chain(&self, slot: usize, grids: &[u32]) {
         debug_assert!(!grids.is_empty());
-        for w in grids.windows(2) {
-            self.steal_next[w[0] as usize].store(w[1], Ordering::Relaxed);
-        }
-        let first = grids[0];
-        let last = *grids.last().unwrap();
-        let c = &self.counters[slot];
-        let mut cur = c.stash.head.load(Ordering::Acquire);
-        loop {
-            let (head, tag) = unpack(cur);
-            self.steal_next[last as usize].store(head, Ordering::Relaxed);
-            match c.stash.head.compare_exchange_weak(
-                cur,
-                pack(first, tag.wrapping_add(1)),
-                Ordering::AcqRel,
-                Ordering::Acquire,
-            ) {
-                Ok(_) => {
-                    c.stash.count.fetch_add(grids.len() as u32, Ordering::Relaxed);
-                    return;
-                }
-                Err(actual) => cur = actual,
-            }
-        }
+        self.counters[slot].stash.push_chain(&self.steal_next, grids);
     }
 
     /// Drain home slot `home`'s steal stash, returning every parked block
@@ -1002,7 +874,7 @@ impl ShardedPool {
     /// stashes (exact when quiescent).
     pub fn num_free(&self) -> u32 {
         self.shards.iter().map(|s| s.num_free()).sum::<u32>()
-            + self.counters.iter().map(|c| c.stash.count.load(Ordering::Relaxed)).sum::<u32>()
+            + self.counters.iter().map(|c| c.stash.count()).sum::<u32>()
     }
 
     pub fn region_start(&self) -> usize {
@@ -1054,7 +926,7 @@ impl ShardedPool {
                 steals: c.steals.load(Ordering::Relaxed),
                 steal_scans: c.steal_scans.load(Ordering::Relaxed),
                 stash_hits: c.stash_hits.load(Ordering::Relaxed),
-                stash_free: c.stash.count.load(Ordering::Relaxed),
+                stash_free: c.stash.count(),
                 failed_allocs: c.failures.load(Ordering::Relaxed),
                 frees: c.frees.load(Ordering::Relaxed),
                 rehomes: c.rehomes.load(Ordering::Relaxed),
@@ -1113,8 +985,14 @@ impl ShardedPool {
 
 impl Drop for ShardedPool {
     fn drop(&mut self) {
-        // Shards are `over_region` borrowers; only the striped region is
-        // owned here.
+        // `&mut self` guarantees quiescence — no allocate/free/drain can
+        // be in flight — so the steal-conservation identity must hold
+        // exactly here. Every pool teardown in every debug build audits
+        // the merged counters for free.
+        #[cfg(debug_assertions)]
+        self.stats().debug_assert_steal_conservation();
+        // SAFETY: shards are `over_region` borrowers; only the striped
+        // region is owned here, allocated in `with_shards` with this layout.
         unsafe { std::alloc::dealloc(self.mem_start.as_ptr(), self.layout) };
     }
 }
@@ -1175,6 +1053,7 @@ mod tests {
         let ptrs: Vec<_> = (0..10).map(|_| p.allocate().unwrap()).collect();
         assert_eq!(p.num_free(), 0);
         for ptr in &ptrs {
+            // SAFETY: every pointer came from `allocate` and is freed exactly once.
             unsafe { p.deallocate(*ptr) };
         }
         assert_eq!(p.num_free(), 10, "every block must return to its shard");
@@ -1193,6 +1072,7 @@ mod tests {
             let p = ShardedPool::with_shards(bs, 13, 4);
             let ptrs: Vec<_> = (0..13).map(|_| p.allocate().unwrap()).collect();
             for ptr in ptrs.into_iter().rev() {
+                // SAFETY: every pointer came from `allocate` and is freed exactly once.
                 unsafe { p.deallocate(ptr) };
             }
             assert_eq!(p.num_free(), 13, "block_size {bs}");
@@ -1215,9 +1095,12 @@ mod tests {
         let a = p.allocate().unwrap();
         assert!(p.contains(a));
         // Off-grid pointer inside the region.
+        // SAFETY: `add(1)` stays inside block 0 of the region, hence non-null.
         let off = unsafe { NonNull::new_unchecked(a.as_ptr().add(1)) };
         assert!(!p.contains(off));
         // Padding slot of shard 2 (local index 1 does not exist there).
+        // SAFETY: the padding-slot address lies inside the owned region, so it
+        // is non-null; it is only compared, never dereferenced.
         let pad = unsafe {
             NonNull::new_unchecked(
                 (p.region_start() + (2 * 2 + 1) * p.block_size()) as *mut u8,
@@ -1227,6 +1110,7 @@ mod tests {
         // Foreign pointer.
         let mut other = [0u8; 16];
         assert!(!p.contains(NonNull::new(other.as_mut_ptr()).unwrap()));
+        // SAFETY: `a` came from `allocate` and is freed exactly once.
         unsafe { p.deallocate(a) };
     }
 
@@ -1245,6 +1129,7 @@ mod tests {
         assert_eq!(s.total_failed(), 1);
         assert!(s.steal_rate() > 0.7);
         for ptr in held {
+            // SAFETY: every held pointer came from `allocate` and is freed exactly once.
             unsafe { p.deallocate(ptr) };
         }
         assert_eq!(p.stats().total_frees(), 8);
@@ -1254,6 +1139,7 @@ mod tests {
     fn metrics_export_publishes_gauges() {
         let p = ShardedPool::with_shards(16, 8, 2);
         let a = p.allocate().unwrap();
+        // SAFETY: `a` was just allocated from this pool and is freed once.
         unsafe { p.deallocate(a) };
         let m = Metrics::new();
         p.export_metrics(&m, "pool.test");
@@ -1313,12 +1199,12 @@ mod tests {
         let p = ShardedPool::with_shards(16, 16, 4);
         // Mechanics only: park grid indices in slot 0's stash and pop.
         p.stash_push_chain(0, &[8, 9, 10]);
-        assert_eq!(p.counters[0].stash.count.load(Ordering::Relaxed), 3);
+        assert_eq!(p.counters[0].stash.count(), 3);
         assert_eq!(p.stash_pop(0), Some(8));
         assert_eq!(p.stash_pop(0), Some(9));
         assert_eq!(p.stash_pop(0), Some(10));
         assert_eq!(p.stash_pop(0), None);
-        assert_eq!(p.counters[0].stash.count.load(Ordering::Relaxed), 0);
+        assert_eq!(p.counters[0].stash.count(), 0);
     }
 
     #[test]
@@ -1331,6 +1217,7 @@ mod tests {
         let home = p.current_home();
         // Return the caller's first block (a home local hit), pull it back
         // out of the home shard and park it in a sibling slot's stash.
+        // SAFETY: `held[0]` came from `allocate` and is freed exactly once here.
         unsafe { p.deallocate(held[0]) };
         let local = p.shards[home].allocate_index().expect("just freed");
         let grid = ((home as u32) << p.stride_shift) + local;
@@ -1347,6 +1234,7 @@ mod tests {
         let p = ShardedPool::with_shards(16, 8, 4);
         let held: Vec<_> = (0..8).map(|_| p.allocate().unwrap()).collect();
         let home = p.current_home();
+        // SAFETY: `held[0]` came from `allocate` and is freed exactly once here.
         unsafe { p.deallocate(held[0]) };
         let local = p.shards[home].allocate_index().expect("just freed");
         let grid = ((home as u32) << p.stride_shift) + local;
@@ -1374,6 +1262,7 @@ mod tests {
         let a = p.allocate().unwrap();
         let g = p.ptr_to_grid(a);
         assert_eq!(p.grid_to_ptr(g).as_ptr(), a.as_ptr());
+        // SAFETY: `a` came from `allocate` and is freed exactly once.
         unsafe { p.deallocate(a) };
 
         // Bulk allocate from the caller's home shard only.
@@ -1421,6 +1310,7 @@ mod tests {
         // Hammer way past any window: a static placement never moves.
         for _ in 0..2_000 {
             let a = p.allocate().unwrap();
+            // SAFETY: `a` was just allocated from this pool and is freed once.
             unsafe { p.deallocate(a) };
         }
         assert_eq!(p.current_home(), home0);
@@ -1446,6 +1336,7 @@ mod tests {
         // the policy moves us there.
         for _ in 0..64 {
             let a = p.allocate().expect("siblings have free blocks");
+            // SAFETY: `a` was just allocated from this pool and is freed once.
             unsafe { p.deallocate(a) };
         }
         let s = p.stats();
@@ -1456,6 +1347,7 @@ mod tests {
         let local_before = p.stats().total_local_hits();
         for _ in 0..32 {
             let a = p.allocate().unwrap();
+            // SAFETY: `a` was just allocated from this pool and is freed once.
             unsafe { p.deallocate(a) };
         }
         let local_after = p.stats().total_local_hits();
@@ -1466,6 +1358,7 @@ mod tests {
             local_after
         );
         for ptr in held {
+            // SAFETY: every held pointer came from `allocate` and is freed exactly once.
             unsafe { p.deallocate(ptr) };
         }
         assert_eq!(p.num_free(), 32);
@@ -1494,6 +1387,7 @@ mod tests {
                 for _ in 0..4 {
                     s.spawn(|| {
                         let a = pool.allocate().unwrap();
+                        // SAFETY: `a` was just allocated from this pool and is freed once.
                         unsafe { pool.deallocate(a) };
                     });
                 }
@@ -1530,12 +1424,16 @@ mod tests {
                         } else {
                             let i = rng.gen_usize(0, held.len());
                             let addr = held.swap_remove(i);
+                            // SAFETY: `addr` was recorded from a successful `allocate` and removed
+                            // from `held`, so each block is freed exactly once.
                             unsafe {
                                 pool.deallocate(NonNull::new_unchecked(addr as *mut u8))
                             };
                         }
                     }
                     for addr in held {
+                        // SAFETY: the remaining addresses each came from `allocate` and were
+                        // never freed in the loop above.
                         unsafe {
                             pool.deallocate(NonNull::new_unchecked(addr as *mut u8))
                         };

@@ -103,6 +103,8 @@ impl<T> PoolBox<T> {
         let value = unsafe { this.ptr.as_ptr().read() };
         let mut inner = this.pool.borrow_mut();
         inner.live -= 1;
+        // SAFETY: `ptr` came from this pool's `allocate` and, with the value
+        // moved out, nothing references the block again.
         unsafe { inner.pool.deallocate(this.ptr.cast()) };
         value
     }
@@ -130,6 +132,8 @@ impl<T> Drop for PoolBox<T> {
         unsafe { core::ptr::drop_in_place(self.ptr.as_ptr()) };
         let mut inner = self.pool.borrow_mut();
         inner.live -= 1;
+        // SAFETY: `ptr` came from this pool's `allocate`; the value was just
+        // dropped and nothing references the block again.
         unsafe { inner.pool.deallocate(self.ptr.cast()) };
     }
 }

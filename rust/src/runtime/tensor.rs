@@ -10,6 +10,8 @@ pub fn lit_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal, String> {
         return Err(format!("shape {shape:?} needs {n} elements, got {}", data.len()));
     }
     let bytes: &[u8] =
+        // SAFETY: an `f32` slice is trivially viewable as its raw bytes — same
+        // allocation, same lifetime, 4 bytes per element, no alignment demands.
         unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
     xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, shape, bytes)
         .map_err(|e| e.to_string())
@@ -22,6 +24,8 @@ pub fn lit_i32(shape: &[usize], data: &[i32]) -> Result<xla::Literal, String> {
         return Err(format!("shape {shape:?} needs {n} elements, got {}", data.len()));
     }
     let bytes: &[u8] =
+        // SAFETY: an `i32` slice is trivially viewable as its raw bytes — same
+        // allocation, same lifetime, 4 bytes per element, no alignment demands.
         unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
     xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, shape, bytes)
         .map_err(|e| e.to_string())

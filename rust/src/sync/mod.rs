@@ -1,0 +1,60 @@
+//! Concurrency shim layer + vendored model checker (loom-lite).
+//!
+//! Every atomic the pool family's lock-free protocols touch is imported
+//! from **this module**, not from `core::sync::atomic` directly. The
+//! indirection is free in normal builds and buys exhaustive interleaving
+//! checking in model builds:
+//!
+//! * **Normal builds** (`--cfg pallas_model` absent): the types below are
+//!   *re-exports* of `core::sync::atomic` — same `TypeId`, same layout,
+//!   same codegen. Zero cost by type identity, asserted by
+//!   `zero_cost_shims_when_model_off` in `tests/model_check.rs`.
+//! * **Model builds** (`RUSTFLAGS="--cfg pallas_model"`): the types are
+//!   `#[repr(transparent)]` wrappers ([`shim`]) that count every
+//!   load/store/RMW through a thread-local access ledger. The explorer in
+//!   [`model`] uses the ledger to enforce the *one-shared-access-per-step*
+//!   contract on the protocol state machines in [`crate::pool::proto`] —
+//!   the property that makes bounded schedule exploration sound (a step
+//!   is the unit of interleaving, so a step must contain at most one
+//!   observable shared-memory event).
+//!
+//! The explorer itself ([`model::Explorer`]) is compiled under both cfgs
+//! and never spawns OS threads, reads clocks, or consumes entropy: a
+//! "thread" is a heap-allocated state machine ([`model::VThread`]) stepped
+//! by a deterministic scheduler that DFS-enumerates schedule prefixes up
+//! to a preemption bound. `--cfg pallas_model` only switches the atomics
+//! to the counting shims so the explorer can *audit* step granularity; the
+//! schedules explored are identical under either cfg.
+//!
+//! Scope (documented honestly): exploration is **sequentially
+//! consistent** (CHESS-style). Steps execute one at a time on one OS
+//! thread, so weak-memory reorderings (`Relaxed` load/store hoisting
+//! etc.) are *not* explored — the suite proves linearizability of the
+//! protocol logic over all bounded thread interleavings, not absence of
+//! memory-ordering bugs. The orderings themselves are reviewed at each
+//! SAFETY comment and exercised by the multi-threaded stress suite.
+
+/// Normal builds: the shim types *are* the std atomics (re-export).
+#[cfg(not(pallas_model))]
+pub use core::sync::atomic::{
+    fence, AtomicBool, AtomicPtr, AtomicU32, AtomicU64, AtomicUsize, Ordering,
+};
+
+#[cfg(pallas_model)]
+mod shim;
+#[cfg(pallas_model)]
+pub use core::sync::atomic::Ordering;
+#[cfg(pallas_model)]
+pub use shim::{fence, AtomicBool, AtomicPtr, AtomicU32, AtomicU64, AtomicUsize};
+
+pub mod model;
+
+/// Thread shim. In normal builds this is `std::thread`. Model executions
+/// never spawn OS threads — a model "thread" is a [`model::VThread`]
+/// state machine stepped by the [`model::Explorer`] scheduler — so the
+/// same re-export is sound under `pallas_model` too: code that reaches
+/// real `spawn` there (stress tests, benches) is simply running outside
+/// the model and gets ordinary threads.
+pub mod thread {
+    pub use std::thread::*;
+}

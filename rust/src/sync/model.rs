@@ -1,0 +1,469 @@
+//! Deterministic bounded interleaving explorer (the "loom-lite" core).
+//!
+//! A model **scenario** is a set of virtual threads ([`VThread`]) sharing
+//! state through the [`crate::sync`] atomics, plus a finalizer that
+//! asserts the scenario's invariants once every thread has finished. A
+//! virtual thread is a state machine whose `step()` performs **at most
+//! one** shared-memory access — the protocol state machines in
+//! [`crate::pool::proto`] are written to this contract, and under
+//! `--cfg pallas_model` the explorer audits it against the shim access
+//! ledger on every step.
+//!
+//! The [`Explorer`] enumerates thread schedules by stateless
+//! re-execution DFS (CHESS-style):
+//!
+//! * A schedule prefix is a list of thread ids. Executing a prefix
+//!   replays those choices, then extends with a deterministic default
+//!   policy (keep running the current thread while it is runnable,
+//!   otherwise the first runnable thread in seed-permuted order).
+//! * At every decision point past the replayed prefix, each alternative
+//!   runnable thread spawns a new prefix onto the DFS stack — unless
+//!   taking it would exceed the **preemption bound** (a switch away from
+//!   a thread that is still runnable counts as one preemption; switches
+//!   forced by thread completion are free).
+//! * Every complete execution is one distinct interleaving; the set
+//!   explored at bound *k* is exactly "all schedules with ≤ *k*
+//!   preemptions", which is a subset of the bound-*k+1* set (asserted by
+//!   the monotonicity meta-test).
+//!
+//! Everything is deterministic: no OS threads, no wall clock, no entropy.
+//! The `seed` only permutes the *order* in which schedules are visited
+//! (useful for shaking out order-dependent checker bugs); the set of
+//! schedules is seed-independent. CAS under the model never fails
+//! spuriously (see [`super::shim`]), so a replayed prefix always
+//! reproduces the recorded execution.
+
+#[cfg(pallas_model)]
+use std::cell::Cell;
+
+/// Hard cap on virtual threads per scenario (trace entries are `u16`;
+/// the real limit is combinatorial explosion, not this constant).
+pub const MAX_MODEL_THREADS: usize = 8;
+
+/// True when shim access auditing is active (`--cfg pallas_model`).
+pub const ACCESS_AUDIT: bool = cfg!(pallas_model);
+
+#[cfg(pallas_model)]
+thread_local! {
+    static ACCESS_LEDGER: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Tick the shared-access ledger (called by every shim atomic op).
+#[cfg(pallas_model)]
+#[inline]
+pub(crate) fn note_access() {
+    ACCESS_LEDGER.with(|c| c.set(c.get() + 1));
+}
+
+/// Total shim accesses on this OS thread since process start
+/// (monotone; always 0 in normal builds where the shims are re-exports).
+#[inline]
+pub fn access_ledger() -> u64 {
+    #[cfg(pallas_model)]
+    {
+        ACCESS_LEDGER.with(|c| c.get())
+    }
+    #[cfg(not(pallas_model))]
+    {
+        0
+    }
+}
+
+/// One virtual thread: a state machine driven by the explorer.
+///
+/// `step()` executes one transition and returns `true` when the thread
+/// has finished (it is never stepped again). Contract: a step performs
+/// **at most one** access to shared state through the [`crate::sync`]
+/// shims; local bookkeeping is unrestricted. The explorer asserts this
+/// per step whenever [`ACCESS_AUDIT`] is on.
+pub trait VThread {
+    fn step(&mut self) -> bool;
+}
+
+/// A virtual thread that runs a fixed number of no-op steps. Used by the
+/// explorer's own meta-tests, where exact interleaving counts have
+/// closed-form (multinomial) values.
+pub struct FixedSteps {
+    remaining: u32,
+}
+
+impl FixedSteps {
+    pub fn new(steps: u32) -> Self {
+        assert!(steps > 0, "FixedSteps needs at least one step");
+        Self { remaining: steps }
+    }
+}
+
+impl VThread for FixedSteps {
+    fn step(&mut self) -> bool {
+        self.remaining -= 1;
+        self.remaining == 0
+    }
+}
+
+/// One fresh instance of the system under test.
+pub struct Scenario {
+    /// The virtual threads, sharing state via `Rc`/`Arc` captured at
+    /// construction. At most [`MAX_MODEL_THREADS`].
+    pub threads: Vec<Box<dyn VThread>>,
+    /// Runs after all threads finish; panics on invariant violation.
+    pub finalize: Box<dyn FnOnce()>,
+}
+
+/// Bounded-DFS schedule explorer. All fields are plain data so a checker
+/// configuration is copy-pasteable into EXPERIMENTS.md.
+#[derive(Clone, Copy, Debug)]
+pub struct Explorer {
+    /// Max preemptive context switches per schedule (see module docs).
+    pub preemption_bound: usize,
+    /// Permutes visit order only — the schedule set is seed-independent.
+    pub seed: u64,
+    /// Iteration bound: stop after this many complete schedules and
+    /// report `capped` instead of looping forever on a too-large space.
+    pub max_schedules: u64,
+    /// Per-schedule step bound — trips on a livelocked state machine
+    /// (a correct lock-free protocol can only retry when another thread
+    /// made progress, so finite ops ⇒ finite steps).
+    pub max_steps_per_schedule: u64,
+    /// Record every complete schedule into [`Exploration::traces`]
+    /// (meta-tests only; protocol runs keep this off).
+    pub record_traces: bool,
+}
+
+impl Default for Explorer {
+    fn default() -> Self {
+        Self {
+            preemption_bound: 2,
+            seed: 0,
+            max_schedules: 1_000_000,
+            max_steps_per_schedule: 1_000_000,
+            record_traces: false,
+        }
+    }
+}
+
+/// Result of an exploration.
+#[derive(Default, Debug)]
+pub struct Exploration {
+    /// Distinct complete interleavings executed.
+    pub schedules: u64,
+    /// True if `max_schedules` stopped the DFS before exhaustion — the
+    /// space was sampled, not covered; assertions on exhaustiveness
+    /// must check this.
+    pub capped: bool,
+    /// Largest preemption count any schedule actually used.
+    pub max_preemptions_seen: usize,
+    /// Total virtual-thread steps across all schedules.
+    pub total_steps: u64,
+    /// Total shim accesses across all schedules (0 in normal builds).
+    pub total_accesses: u64,
+    /// Complete schedules, in visit order (only if `record_traces`).
+    pub traces: Vec<Vec<u16>>,
+}
+
+/// splitmix64 — the standard 64-bit finalizer; deterministic seed →
+/// permutation stream with no OS entropy.
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e3779b97f4a7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d049bb133111eb);
+    x ^ (x >> 31)
+}
+
+impl Explorer {
+    /// Exhaustively run `scenario` (a factory producing a fresh system
+    /// per schedule) over all interleavings within the preemption bound,
+    /// up to `max_schedules`.
+    ///
+    /// Panics propagate from thread steps and finalizers — a panicking
+    /// schedule is a found bug; wrap in `std::panic::catch_unwind` to
+    /// assert that a mutant *is* caught (the mutation meta-test).
+    pub fn explore<F>(&self, mut scenario: F) -> Exploration
+    where
+        F: FnMut() -> Scenario,
+    {
+        let mut out = Exploration::default();
+        // DFS stack of schedule prefixes still to execute.
+        let mut pending: Vec<Vec<u16>> = vec![Vec::new()];
+        while let Some(prefix) = pending.pop() {
+            if out.schedules >= self.max_schedules {
+                out.capped = true;
+                break;
+            }
+            let trace = self.run_one(&mut scenario, &prefix, &mut pending, &mut out);
+            out.schedules += 1;
+            if self.record_traces {
+                out.traces.push(trace);
+            }
+        }
+        out
+    }
+
+    /// Execute one schedule: replay `prefix`, extend by the default
+    /// policy, and push every in-bound alternative branch onto `pending`.
+    fn run_one<F>(
+        &self,
+        scenario: &mut F,
+        prefix: &[u16],
+        pending: &mut Vec<Vec<u16>>,
+        out: &mut Exploration,
+    ) -> Vec<u16>
+    where
+        F: FnMut() -> Scenario,
+    {
+        let Scenario { mut threads, finalize } = scenario();
+        let n = threads.len();
+        assert!(
+            n > 0 && n <= MAX_MODEL_THREADS,
+            "scenario must have 1..={MAX_MODEL_THREADS} threads, got {n}"
+        );
+        let mut done = vec![false; n];
+        let mut remaining = n;
+        let mut trace: Vec<u16> = Vec::with_capacity(prefix.len() + 8);
+        let mut preemptions = 0usize;
+        let mut prev: Option<usize> = None;
+        let mut steps = 0u64;
+
+        while remaining > 0 {
+            // Runnable threads, rotated by a seed-derived offset so the
+            // seed permutes visit order (never the explored set).
+            let mut enabled: Vec<usize> = (0..n).filter(|&t| !done[t]).collect();
+            let rot = (splitmix64(self.seed ^ trace.len() as u64) % enabled.len() as u64) as usize;
+            enabled.rotate_left(rot);
+
+            let choice = if trace.len() < prefix.len() {
+                // Replay: determinism guarantees the recorded choice is
+                // still runnable.
+                let c = prefix[trace.len()] as usize;
+                assert!(c < n && !done[c], "schedule replay diverged — explorer bug");
+                c
+            } else {
+                // Default policy: stay on the current thread while it is
+                // runnable (no preemption), else first enabled.
+                let default = match prev {
+                    Some(p) if !done[p] => p,
+                    _ => enabled[0],
+                };
+                // A switch away from a still-runnable `prev` costs one
+                // preemption; a switch forced by completion is free.
+                let alt_cost = usize::from(matches!(prev, Some(p) if !done[p]));
+                for &alt in &enabled {
+                    if alt != default && preemptions + alt_cost <= self.preemption_bound {
+                        let mut p = trace.clone();
+                        p.push(alt as u16);
+                        pending.push(p);
+                    }
+                }
+                default
+            };
+
+            if let Some(p) = prev {
+                if !done[p] && choice != p {
+                    preemptions += 1;
+                }
+            }
+            trace.push(choice as u16);
+
+            let before = access_ledger();
+            let finished = threads[choice].step();
+            let accesses = access_ledger() - before;
+            if ACCESS_AUDIT {
+                assert!(
+                    accesses <= 1,
+                    "virtual thread {choice} touched shared memory {accesses} times in one \
+                     step — protocol state machines must make at most one shim access per step"
+                );
+            }
+            out.total_accesses += accesses;
+            steps += 1;
+            out.total_steps += 1;
+            assert!(
+                steps <= self.max_steps_per_schedule,
+                "schedule exceeded {} steps — livelocked state machine?",
+                self.max_steps_per_schedule
+            );
+            if finished {
+                done[choice] = true;
+                remaining -= 1;
+            }
+            prev = Some(choice);
+        }
+
+        out.max_preemptions_seen = out.max_preemptions_seen.max(preemptions);
+        finalize();
+        trace
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeSet;
+
+    fn fixed(threads: &[u32]) -> Scenario {
+        Scenario {
+            threads: threads
+                .iter()
+                .map(|&k| Box::new(FixedSteps::new(k)) as Box<dyn VThread>)
+                .collect(),
+            finalize: Box::new(|| {}),
+        }
+    }
+
+    /// 9!/(3!·3!·3!) — with the bound above the max possible preemptions
+    /// (8 switches in 9 steps) the DFS must enumerate the full
+    /// multinomial, a closed-form check of the explorer itself.
+    #[test]
+    fn full_interleaving_count_matches_multinomial() {
+        let ex = Explorer {
+            preemption_bound: 9,
+            ..Explorer::default()
+        };
+        let r = ex.explore(|| fixed(&[3, 3, 3]));
+        assert!(!r.capped);
+        assert_eq!(r.schedules, 1680);
+        assert_eq!(r.total_steps, 1680 * 9);
+    }
+
+    /// Bound 0 permits only completion-forced switches: the schedules are
+    /// exactly the 3! orderings in which whole threads run to completion.
+    #[test]
+    fn bound_zero_is_thread_permutations() {
+        let ex = Explorer {
+            preemption_bound: 0,
+            record_traces: true,
+            ..Explorer::default()
+        };
+        let r = ex.explore(|| fixed(&[2, 2, 2]));
+        assert_eq!(r.schedules, 6);
+        assert_eq!(r.max_preemptions_seen, 0);
+        let set: BTreeSet<Vec<u16>> = r.traces.into_iter().collect();
+        assert_eq!(set.len(), 6, "all six run-to-completion orders, no dupes");
+        assert!(set.contains(&vec![0, 0, 1, 1, 2, 2]));
+        assert!(set.contains(&vec![2, 2, 1, 1, 0, 0]));
+    }
+
+    /// Same seed + bound ⇒ byte-identical visit order (satellite: the
+    /// checker's determinism claim, machine-checked).
+    #[test]
+    fn determinism_same_seed_same_trace_sequence() {
+        let ex = Explorer {
+            preemption_bound: 2,
+            seed: 42,
+            record_traces: true,
+            ..Explorer::default()
+        };
+        let a = ex.explore(|| fixed(&[3, 2, 2]));
+        let b = ex.explore(|| fixed(&[3, 2, 2]));
+        assert_eq!(a.schedules, b.schedules);
+        assert_eq!(a.traces, b.traces, "visit order must be reproducible");
+    }
+
+    /// Seeds permute visit order but never the explored set.
+    #[test]
+    fn seed_changes_order_not_the_set() {
+        let run = |seed| {
+            let ex = Explorer {
+                preemption_bound: 2,
+                seed,
+                record_traces: true,
+                ..Explorer::default()
+            };
+            ex.explore(|| fixed(&[3, 2, 2]))
+        };
+        let a = run(7);
+        let b = run(8);
+        let sa: BTreeSet<Vec<u16>> = a.traces.iter().cloned().collect();
+        let sb: BTreeSet<Vec<u16>> = b.traces.iter().cloned().collect();
+        assert_eq!(sa, sb);
+        assert_eq!(sa.len() as u64, a.schedules, "no duplicate visits");
+    }
+
+    /// Bound k's schedule set is a subset of bound k+1's, strictly
+    /// growing until the bound saturates (satellite: monotonicity).
+    #[test]
+    fn preemption_bound_monotone() {
+        let run = |bound| {
+            let ex = Explorer {
+                preemption_bound: bound,
+                record_traces: true,
+                ..Explorer::default()
+            };
+            ex.explore(|| fixed(&[2, 2, 2]))
+        };
+        let mut prev: Option<BTreeSet<Vec<u16>>> = None;
+        let mut counts = Vec::new();
+        for bound in 0..=5 {
+            let r = run(bound);
+            assert!(!r.capped);
+            assert!(r.max_preemptions_seen <= bound);
+            let set: BTreeSet<Vec<u16>> = r.traces.into_iter().collect();
+            assert_eq!(set.len() as u64, r.schedules, "schedules are distinct");
+            if let Some(p) = &prev {
+                assert!(p.is_subset(&set), "bound {bound} lost schedules from bound {}", bound - 1);
+            }
+            counts.push(set.len());
+            prev = Some(set);
+        }
+        assert!(counts.windows(2).all(|w| w[0] <= w[1]));
+        assert!(counts[0] < counts[3], "bound must actually buy schedules");
+        // Saturation: 6 steps allow at most 5 switches.
+        assert_eq!(*counts.last().unwrap() as u64, 90, "6!/(2!·2!·2!) at saturation");
+    }
+
+    /// The iteration bound caps the DFS and reports it.
+    #[test]
+    fn max_schedules_caps_and_reports() {
+        let ex = Explorer {
+            preemption_bound: 9,
+            max_schedules: 5,
+            ..Explorer::default()
+        };
+        let r = ex.explore(|| fixed(&[3, 3, 3]));
+        assert!(r.capped);
+        assert_eq!(r.schedules, 5);
+    }
+
+    /// Finalizer panics surface as schedule failures (what the protocol
+    /// invariant checks and the ABA mutation test rely on).
+    #[test]
+    fn finalizer_panic_propagates() {
+        let ex = Explorer::default();
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            ex.explore(|| Scenario {
+                threads: vec![Box::new(FixedSteps::new(1))],
+                finalize: Box::new(|| panic!("invariant violated")),
+            });
+        }));
+        assert!(caught.is_err());
+    }
+
+    /// Step-granularity audit: a thread touching shared memory twice in
+    /// one step must be rejected (model builds only — this is the
+    /// soundness contract the shims exist to enforce).
+    #[cfg(pallas_model)]
+    #[test]
+    fn access_audit_rejects_double_access_steps() {
+        use crate::sync::{AtomicU64, Ordering};
+        use std::rc::Rc;
+        struct Greedy(Rc<AtomicU64>);
+        impl VThread for Greedy {
+            fn step(&mut self) -> bool {
+                self.0.load(Ordering::Relaxed);
+                self.0.load(Ordering::Relaxed); // second access: illegal
+                true
+            }
+        }
+        let ex = Explorer::default();
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            ex.explore(|| {
+                let a = Rc::new(AtomicU64::new(0));
+                Scenario {
+                    threads: vec![Box::new(Greedy(a))],
+                    finalize: Box::new(|| {}),
+                }
+            });
+        }));
+        assert!(caught.is_err(), "double-access step must trip the audit");
+    }
+}

@@ -1,0 +1,304 @@
+//! `--cfg pallas_model` shim atomics: `#[repr(transparent)]` wrappers
+//! over `core::sync::atomic` that tick the [`super::model`] access ledger
+//! on every load/store/RMW.
+//!
+//! Two deliberate deviations from the std types, both in service of
+//! deterministic replay:
+//!
+//! * `compare_exchange_weak` delegates to `compare_exchange`. A spurious
+//!   failure would make a schedule's outcome depend on the machine, so a
+//!   replayed prefix could diverge from the execution that recorded it.
+//!   Strong CAS is a legal implementation of weak CAS, so production
+//!   semantics are preserved (retry loops simply never see a spurious
+//!   failure under the model).
+//! * Every operation calls [`super::model::note_access`] *before* the
+//!   underlying atomic op, so a panic inside an exploration still leaves
+//!   the ledger counting the access that caused it.
+//!
+//! Model executions are single-OS-threaded (the explorer serialises
+//! steps), so the wrapped ops are never actually contended during
+//! checking; the wrappers keep full atomic semantics anyway so that code
+//! running *outside* an exploration (other tests compiled under the cfg)
+//! behaves exactly as in normal builds.
+
+use core::sync::atomic::Ordering;
+
+use super::model::note_access;
+
+macro_rules! shim_atomic_int {
+    ($(#[$meta:meta])* $name:ident, $raw:ident, $t:ty) => {
+        $(#[$meta])*
+        #[repr(transparent)]
+        #[derive(Default, Debug)]
+        pub struct $name {
+            inner: core::sync::atomic::$raw,
+        }
+
+        impl $name {
+            pub const fn new(v: $t) -> Self {
+                Self {
+                    inner: core::sync::atomic::$raw::new(v),
+                }
+            }
+
+            #[inline]
+            pub fn load(&self, order: Ordering) -> $t {
+                note_access();
+                self.inner.load(order)
+            }
+
+            #[inline]
+            pub fn store(&self, val: $t, order: Ordering) {
+                note_access();
+                self.inner.store(val, order)
+            }
+
+            #[inline]
+            pub fn swap(&self, val: $t, order: Ordering) -> $t {
+                note_access();
+                self.inner.swap(val, order)
+            }
+
+            #[inline]
+            pub fn compare_exchange(
+                &self,
+                current: $t,
+                new: $t,
+                success: Ordering,
+                failure: Ordering,
+            ) -> Result<$t, $t> {
+                note_access();
+                self.inner.compare_exchange(current, new, success, failure)
+            }
+
+            /// Deterministic under the model: delegates to the strong CAS
+            /// (see module docs).
+            #[inline]
+            pub fn compare_exchange_weak(
+                &self,
+                current: $t,
+                new: $t,
+                success: Ordering,
+                failure: Ordering,
+            ) -> Result<$t, $t> {
+                note_access();
+                self.inner.compare_exchange(current, new, success, failure)
+            }
+
+            #[inline]
+            pub fn fetch_add(&self, val: $t, order: Ordering) -> $t {
+                note_access();
+                self.inner.fetch_add(val, order)
+            }
+
+            #[inline]
+            pub fn fetch_sub(&self, val: $t, order: Ordering) -> $t {
+                note_access();
+                self.inner.fetch_sub(val, order)
+            }
+
+            #[inline]
+            pub fn fetch_or(&self, val: $t, order: Ordering) -> $t {
+                note_access();
+                self.inner.fetch_or(val, order)
+            }
+
+            #[inline]
+            pub fn fetch_and(&self, val: $t, order: Ordering) -> $t {
+                note_access();
+                self.inner.fetch_and(val, order)
+            }
+
+            #[inline]
+            pub fn fetch_max(&self, val: $t, order: Ordering) -> $t {
+                note_access();
+                self.inner.fetch_max(val, order)
+            }
+
+            #[inline]
+            pub fn fetch_min(&self, val: $t, order: Ordering) -> $t {
+                note_access();
+                self.inner.fetch_min(val, order)
+            }
+
+            #[inline]
+            pub fn into_inner(self) -> $t {
+                self.inner.into_inner()
+            }
+
+            #[inline]
+            pub fn get_mut(&mut self) -> &mut $t {
+                self.inner.get_mut()
+            }
+        }
+    };
+}
+
+shim_atomic_int!(
+    /// Shim over [`core::sync::atomic::AtomicU32`].
+    AtomicU32,
+    AtomicU32,
+    u32
+);
+shim_atomic_int!(
+    /// Shim over [`core::sync::atomic::AtomicU64`].
+    AtomicU64,
+    AtomicU64,
+    u64
+);
+shim_atomic_int!(
+    /// Shim over [`core::sync::atomic::AtomicUsize`].
+    AtomicUsize,
+    AtomicUsize,
+    usize
+);
+
+/// Shim over [`core::sync::atomic::AtomicBool`].
+#[repr(transparent)]
+#[derive(Default, Debug)]
+pub struct AtomicBool {
+    inner: core::sync::atomic::AtomicBool,
+}
+
+impl AtomicBool {
+    pub const fn new(v: bool) -> Self {
+        Self {
+            inner: core::sync::atomic::AtomicBool::new(v),
+        }
+    }
+
+    #[inline]
+    pub fn load(&self, order: Ordering) -> bool {
+        note_access();
+        self.inner.load(order)
+    }
+
+    #[inline]
+    pub fn store(&self, val: bool, order: Ordering) {
+        note_access();
+        self.inner.store(val, order)
+    }
+
+    #[inline]
+    pub fn swap(&self, val: bool, order: Ordering) -> bool {
+        note_access();
+        self.inner.swap(val, order)
+    }
+
+    #[inline]
+    pub fn compare_exchange(
+        &self,
+        current: bool,
+        new: bool,
+        success: Ordering,
+        failure: Ordering,
+    ) -> Result<bool, bool> {
+        note_access();
+        self.inner.compare_exchange(current, new, success, failure)
+    }
+
+    #[inline]
+    pub fn fetch_or(&self, val: bool, order: Ordering) -> bool {
+        note_access();
+        self.inner.fetch_or(val, order)
+    }
+
+    #[inline]
+    pub fn fetch_and(&self, val: bool, order: Ordering) -> bool {
+        note_access();
+        self.inner.fetch_and(val, order)
+    }
+
+    #[inline]
+    pub fn into_inner(self) -> bool {
+        self.inner.into_inner()
+    }
+
+    #[inline]
+    pub fn get_mut(&mut self) -> &mut bool {
+        self.inner.get_mut()
+    }
+}
+
+/// Shim over [`core::sync::atomic::AtomicPtr`].
+#[repr(transparent)]
+#[derive(Debug)]
+pub struct AtomicPtr<T> {
+    inner: core::sync::atomic::AtomicPtr<T>,
+}
+
+impl<T> Default for AtomicPtr<T> {
+    fn default() -> Self {
+        Self::new(core::ptr::null_mut())
+    }
+}
+
+impl<T> AtomicPtr<T> {
+    pub const fn new(p: *mut T) -> Self {
+        Self {
+            inner: core::sync::atomic::AtomicPtr::new(p),
+        }
+    }
+
+    #[inline]
+    pub fn load(&self, order: Ordering) -> *mut T {
+        note_access();
+        self.inner.load(order)
+    }
+
+    #[inline]
+    pub fn store(&self, val: *mut T, order: Ordering) {
+        note_access();
+        self.inner.store(val, order)
+    }
+
+    #[inline]
+    pub fn swap(&self, val: *mut T, order: Ordering) -> *mut T {
+        note_access();
+        self.inner.swap(val, order)
+    }
+
+    #[inline]
+    pub fn compare_exchange(
+        &self,
+        current: *mut T,
+        new: *mut T,
+        success: Ordering,
+        failure: Ordering,
+    ) -> Result<*mut T, *mut T> {
+        note_access();
+        self.inner.compare_exchange(current, new, success, failure)
+    }
+
+    /// Deterministic under the model: delegates to the strong CAS.
+    #[inline]
+    pub fn compare_exchange_weak(
+        &self,
+        current: *mut T,
+        new: *mut T,
+        success: Ordering,
+        failure: Ordering,
+    ) -> Result<*mut T, *mut T> {
+        note_access();
+        self.inner.compare_exchange(current, new, success, failure)
+    }
+
+    #[inline]
+    pub fn into_inner(self) -> *mut T {
+        self.inner.into_inner()
+    }
+
+    #[inline]
+    pub fn get_mut(&mut self) -> &mut *mut T {
+        self.inner.get_mut()
+    }
+}
+
+/// Shim over [`core::sync::atomic::fence`]: a fence is a shared-memory
+/// event for step-granularity accounting, even though the
+/// sequentially-consistent explorer gives it no extra power.
+#[inline]
+pub fn fence(order: Ordering) {
+    note_access();
+    core::sync::atomic::fence(order)
+}

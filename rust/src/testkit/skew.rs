@@ -81,6 +81,8 @@ pub fn run_skewed_affinity(
                     if held.len() >= cfg.hold {
                         let i = rng.gen_usize(0, held.len());
                         let addr = held.swap_remove(i);
+                        // SAFETY: `addr` was recorded from a successful `allocate` and removed
+                        // from `held`, so each block is freed exactly once.
                         unsafe {
                             pool.deallocate(NonNull::new_unchecked(addr as *mut u8))
                         };
@@ -98,6 +100,7 @@ pub fn run_skewed_affinity(
                     churn(&mut held, &mut rng);
                 }
                 for addr in held {
+                    // SAFETY: the remaining addresses were never freed by `churn`.
                     unsafe { pool.deallocate(NonNull::new_unchecked(addr as *mut u8)) };
                 }
             });

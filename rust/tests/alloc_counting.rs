@@ -19,6 +19,8 @@ static DEALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
 /// Pass-through allocator that counts every entry point.
 struct CountingAlloc;
 
+// SAFETY: pure pass-through to `System`; every contract is forwarded
+// unchanged, only counters are added.
 unsafe impl GlobalAlloc for CountingAlloc {
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         ALLOC_CALLS.fetch_add(1, Ordering::SeqCst);

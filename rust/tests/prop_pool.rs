@@ -111,6 +111,7 @@ fn prop_fixed_pool_invariants() {
                 // First allocation reveals the region base (block 0).
                 let p = pool.allocate().unwrap();
                 let base = p.as_ptr() as usize;
+                // SAFETY: `p` came from `allocate` and is freed exactly once.
                 unsafe { pool.deallocate(p) };
                 base
             };
@@ -122,6 +123,8 @@ fn prop_fixed_pool_invariants() {
                 bs,
                 Some((start, bs * 32)),
                 || pool_cell.borrow_mut().allocate(),
+                // SAFETY: `run_model` only frees pointers it previously obtained from
+                // the paired alloc closure, each exactly once.
                 |p| unsafe { pool_cell.borrow_mut().deallocate(p) },
             )?;
             // I3 at the end:
@@ -146,6 +149,8 @@ fn prop_eager_pool_invariants() {
                 16,
                 None,
                 || pool.borrow_mut().allocate(),
+                // SAFETY: `run_model` only frees pointers it previously obtained from
+                // the paired alloc closure, each exactly once.
                 |p| unsafe { pool.borrow_mut().deallocate(p) },
             )
         },
@@ -166,6 +171,8 @@ fn prop_ptr_freelist_invariants() {
                 16,
                 None,
                 || pool.borrow_mut().allocate(),
+                // SAFETY: `run_model` only frees pointers it previously obtained from
+                // the paired alloc closure, each exactly once.
                 |p| unsafe { pool.borrow_mut().deallocate(p) },
             )
         },
@@ -186,6 +193,8 @@ fn prop_atomic_pool_invariants_single_thread() {
                 pool.block_size(),
                 None,
                 || pool.allocate(),
+                // SAFETY: `run_model` only frees pointers it previously obtained from
+                // the paired alloc closure, each exactly once.
                 |p| unsafe { pool.deallocate(p) },
             )
         },
@@ -209,6 +218,8 @@ fn prop_sharded_pool_invariants_single_thread() {
                 pool.block_size(),
                 None,
                 || pool.allocate(),
+                // SAFETY: `run_model` only frees pointers it previously obtained from
+                // the paired alloc closure, each exactly once.
                 |p| unsafe { pool.deallocate(p) },
             )
         },
@@ -240,6 +251,7 @@ fn prop_lifo_order_fixed_pool() {
                 }
             }
             for p in &freed {
+                // SAFETY: `freed` holds distinct pointers from `allocate`, each freed once.
                 unsafe { pool.deallocate(*p) };
             }
             for expect in freed.iter().rev() {
@@ -364,12 +376,15 @@ fn prop_spill_free_round_trip_conserves_class_free() {
                         if !live.is_empty() {
                             let idx = k % live.len();
                             let (p, size) = live.swap_remove(idx);
+                            // SAFETY: `(p, size)` came from `allocate(size)` and was removed from
+                            // `live`, so it is freed exactly once.
                             unsafe { mp.deallocate(p, size) };
                         }
                     }
                 }
             }
             for (p, size) in live.drain(..) {
+                // SAFETY: the remaining live pairs were never freed in the loop above.
                 unsafe { mp.deallocate(p, size) };
             }
             for ci in 0..mp.num_classes() {
@@ -407,6 +422,8 @@ fn prop_watermark_monotone_and_capped() {
                         if !live.is_empty() {
                             let idx = k % live.len();
                             let p = live.swap_remove(idx);
+                            // SAFETY: `p` came from `allocate` and was removed from `live`, so it
+                            // is freed exactly once.
                             unsafe { pool.deallocate(p) };
                         }
                     }

@@ -76,6 +76,8 @@ fn atomic_pool_churn_unique_and_exact() {
         THREADS,
         10_000,
         || pool.allocate(),
+        // SAFETY: `churn_with_live_set` only frees pointers it got from the
+        // paired alloc closure, each exactly once.
         |p| unsafe { pool.deallocate(p) },
     );
     assert!(n > 0);
@@ -89,6 +91,8 @@ fn sharded_pool_churn_unique_and_exact() {
         THREADS,
         10_000,
         || pool.allocate(),
+        // SAFETY: `churn_with_live_set` only frees pointers it got from the
+        // paired alloc closure, each exactly once.
         |p| unsafe { pool.deallocate(p) },
     );
     assert!(n > 0);
@@ -113,12 +117,15 @@ fn sharded_pool_data_integrity_under_churn() {
                 for _ in 0..20_000 {
                     if held.is_empty() || rng.gen_bool(0.5) {
                         if let Some(p) = pool.allocate() {
+                            // SAFETY: the block is BLOCK bytes and exclusively owned until freed.
                             unsafe { std::ptr::write_bytes(p.as_ptr(), t as u8, BLOCK) };
                             held.push(p);
                         }
                     } else {
                         let i = rng.gen_usize(0, held.len());
                         let p = held.swap_remove(i);
+                        // SAFETY: `p` is still exclusively owned; reads stay inside its BLOCK
+                        // bytes, then it is freed exactly once.
                         unsafe {
                             for off in 0..BLOCK {
                                 assert_eq!(
@@ -141,6 +148,8 @@ fn sharded_pool_data_integrity_under_churn() {
 }
 
 fn pool_free(pool: &ShardedPool, p: NonNull<u8>) {
+    // SAFETY: callers pass pointers obtained from this pool's `allocate`,
+    // each freed exactly once.
     unsafe { pool.deallocate(p) };
 }
 
@@ -188,6 +197,7 @@ fn aba_tag_advances_and_tiny_pool_survives_reuse_storm() {
     let p = AtomicPool::with_blocks(16, 2);
     let a = p.allocate().unwrap(); // watermark path
     let t0 = p.aba_tag();
+    // SAFETY: `a` came from `allocate` and is freed exactly once.
     unsafe { p.deallocate(a) }; // push: CAS
     let t1 = p.aba_tag();
     assert_ne!(t0, t1, "free must bump the ABA tag");
@@ -237,6 +247,7 @@ fn sharded_single_thread_sees_whole_capacity() {
         "batched stealing must amortise the scan"
     );
     for p in got {
+        // SAFETY: every pointer came from `allocate` and is freed exactly once.
         unsafe { pool.deallocate(p) };
     }
     assert_eq!(pool.num_free(), 64);
@@ -257,6 +268,8 @@ fn batched_steal_no_double_handout_under_contention() {
         THREADS,
         15_000,
         || pool.allocate(),
+        // SAFETY: `churn_with_live_set` only frees pointers it got from the
+        // paired alloc closure, each exactly once.
         |p| unsafe { pool.deallocate(p) },
     );
     assert!(n > 0);
@@ -295,12 +308,15 @@ fn thread_churn_recycles_slots_and_drains_orphan_stashes() {
                         } else {
                             let i = rng.gen_usize(0, held.len());
                             let addr = held.swap_remove(i);
+                            // SAFETY: `addr` was recorded from a successful `allocate` and removed
+                            // from `held`, so each block is freed exactly once.
                             unsafe {
                                 pool.deallocate(NonNull::new_unchecked(addr as *mut u8))
                             };
                         }
                     }
                     for addr in held {
+                        // SAFETY: the remaining addresses were never freed in the loop above.
                         unsafe {
                             pool.deallocate(NonNull::new_unchecked(addr as *mut u8))
                         };
@@ -404,6 +420,8 @@ fn magazine_pool_churn_unique_and_exact() {
         THREADS,
         10_000,
         || pool.allocate(),
+        // SAFETY: `churn_with_live_set` only frees pointers it got from the
+        // paired alloc closure, each exactly once.
         |p| unsafe { pool.deallocate(p) },
     );
     assert!(n > 0);
@@ -452,12 +470,15 @@ fn magazine_conservation_across_random_thread_exits() {
                         } else {
                             let i = rng.gen_usize(0, held.len());
                             let addr = held.swap_remove(i);
+                            // SAFETY: `addr` was recorded from a successful `allocate` and removed
+                            // from `held`, so each block is freed exactly once.
                             unsafe {
                                 pool.deallocate(NonNull::new_unchecked(addr as *mut u8))
                             };
                         }
                     }
                     for addr in held {
+                        // SAFETY: the remaining addresses were never freed in the loop above.
                         unsafe {
                             pool.deallocate(NonNull::new_unchecked(addr as *mut u8))
                         };
@@ -519,12 +540,15 @@ fn batched_steal_counters_exact_at_quiescence() {
                     } else {
                         let i = rng.gen_usize(0, held.len());
                         let addr = held.swap_remove(i);
+                        // SAFETY: `addr` was recorded from a successful `allocate` and removed
+                        // from `held`, so each block is freed exactly once.
                         unsafe {
                             pool.deallocate(NonNull::new_unchecked(addr as *mut u8))
                         };
                     }
                 }
                 for addr in held {
+                    // SAFETY: the remaining addresses were never freed in the loop above.
                     unsafe {
                         pool.deallocate(NonNull::new_unchecked(addr as *mut u8))
                     };
