@@ -50,9 +50,10 @@ impl Arm for FixedArm {
         self.0.allocate().expect("fixed pool sized for the shape").as_ptr() as u64
     }
     fn free(&mut self, t: u64) {
-        // SAFETY: `t` is a token from this arm's `alloc`, freed exactly once
-        // by the harness.
-        unsafe { self.0.deallocate(NonNull::new_unchecked(t as *mut u8)) }
+        // SAFETY: `t` is a token from this arm's `alloc`, so it is non-null.
+        let p = unsafe { NonNull::new_unchecked(t as *mut u8) };
+        // SAFETY: the harness frees each token exactly once.
+        unsafe { self.0.deallocate(p) }
     }
 }
 
@@ -74,9 +75,10 @@ impl Arm for AtomicArm {
         self.0.allocate().expect("atomic pool sized for the shape").as_ptr() as u64
     }
     fn free(&mut self, t: u64) {
-        // SAFETY: `t` is a token from this arm's `alloc`, freed exactly once
-        // by the harness.
-        unsafe { self.0.deallocate(NonNull::new_unchecked(t as *mut u8)) }
+        // SAFETY: `t` is a token from this arm's `alloc`, so it is non-null.
+        let p = unsafe { NonNull::new_unchecked(t as *mut u8) };
+        // SAFETY: the harness frees each token exactly once.
+        unsafe { self.0.deallocate(p) }
     }
 }
 
@@ -86,9 +88,10 @@ impl Arm for ShardedArm {
         self.0.allocate().expect("sharded pool sized for the shape").as_ptr() as u64
     }
     fn free(&mut self, t: u64) {
-        // SAFETY: `t` is a token from this arm's `alloc`, freed exactly once
-        // by the harness.
-        unsafe { self.0.deallocate(NonNull::new_unchecked(t as *mut u8)) }
+        // SAFETY: `t` is a token from this arm's `alloc`, so it is non-null.
+        let p = unsafe { NonNull::new_unchecked(t as *mut u8) };
+        // SAFETY: the harness frees each token exactly once.
+        unsafe { self.0.deallocate(p) }
     }
 }
 
@@ -98,9 +101,10 @@ impl Arm for MagazineArm {
         self.0.allocate().expect("magazine pool sized for the shape").as_ptr() as u64
     }
     fn free(&mut self, t: u64) {
-        // SAFETY: `t` is a token from this arm's `alloc`, freed exactly once
-        // by the harness.
-        unsafe { self.0.deallocate(NonNull::new_unchecked(t as *mut u8)) }
+        // SAFETY: `t` is a token from this arm's `alloc`, so it is non-null.
+        let p = unsafe { NonNull::new_unchecked(t as *mut u8) };
+        // SAFETY: the harness frees each token exactly once.
+        unsafe { self.0.deallocate(p) }
     }
 }
 

@@ -51,7 +51,9 @@ fn main() {
     let victim = pool.allocate("live.rs:3").unwrap();
     let _ok = pool.allocate("live.rs:4").unwrap();
     // SAFETY: `add(16)` lands in the post-guard area — inside pool memory.
-    unsafe { victim.as_ptr().add(16).write(0xFF) };
+    let guard = unsafe { victim.as_ptr().add(16) };
+    // SAFETY: the post-guard byte is pool memory; clobbering it is the point.
+    unsafe { guard.write(0xFF) };
     match pool.check_all() {
         Err(e) => println!("  caught by global sweep: {e}"),
         Ok(()) => println!("  MISSED (should not happen)"),

@@ -25,13 +25,15 @@ mod tests {
 
     #[test]
     fn malloc_free_roundtrip() {
-        // SAFETY: `p` is non-null (checked), 64 bytes, and freed exactly once.
-        unsafe {
-            let p = malloc(64) as *mut u8;
-            assert!(!p.is_null());
-            core::ptr::write_bytes(p, 0xA5, 64);
-            assert_eq!(p.read(), 0xA5);
-            free(p as *mut c_void);
-        }
+        // SAFETY: plain malloc; null is checked before any use.
+        let p = unsafe { malloc(64) as *mut u8 };
+        assert!(!p.is_null());
+        // SAFETY: `p` is non-null and 64 bytes, so the fill stays in bounds.
+        unsafe { core::ptr::write_bytes(p, 0xA5, 64) };
+        // SAFETY: `p` was just filled; reading the first byte is in bounds.
+        let first = unsafe { p.read() };
+        assert_eq!(first, 0xA5);
+        // SAFETY: `p` came from `malloc` above and is freed exactly once.
+        unsafe { free(p as *mut c_void) };
     }
 }

@@ -103,10 +103,11 @@ impl BenchAllocator for BuddyAllocator {
         }
         self.live.insert(off, want);
         let _ = off; // offset is the handle's identity
-        let ptr =
-            // SAFETY: `off` addresses a free range inside the arena (chosen from
-            // the free lists), so the pointer is in bounds and non-null.
-            unsafe { NonNull::new_unchecked(self.arena.as_mut_ptr().add(off)) };
+        // SAFETY: `off` addresses a free range inside the arena (chosen from
+        // the free lists), so the pointer stays in bounds.
+        let raw = unsafe { self.arena.as_mut_ptr().add(off) };
+        // SAFETY: in-bounds pointer into a live Vec allocation, never null.
+        let ptr = unsafe { NonNull::new_unchecked(raw) };
         Some(AllocHandle::new(ptr, size).with_meta(want as u64))
     }
 

@@ -61,14 +61,16 @@ impl DebugHeapAllocator {
     }
 
     fn verify_block(&mut self, base: *mut u8, size: usize) -> bool {
-        // SAFETY: base..base+GUARD+size+GUARD is one of our live blocks.
-        unsafe {
-            let pre = (base as *const u64).read_unaligned();
-            let post = (base.add(GUARD + size) as *const u64).read_unaligned();
-            if pre != PRE || post != POST {
-                self.violations += 1;
-                return false;
-            }
+        // SAFETY: base..base+GUARD+size+GUARD is one of our live blocks, so
+        // the pre guard is 8 readable bytes at its start.
+        let pre = unsafe { (base as *const u64).read_unaligned() };
+        // SAFETY: the post guard starts GUARD + size bytes into that block.
+        let post_ptr = unsafe { base.add(GUARD + size) };
+        // SAFETY: the post guard is the block's final 8 readable bytes.
+        let post = unsafe { (post_ptr as *const u64).read_unaligned() };
+        if pre != PRE || post != POST {
+            self.violations += 1;
+            return false;
         }
         true
     }
@@ -105,19 +107,24 @@ impl BenchAllocator for DebugHeapAllocator {
         // SAFETY: plain malloc.
         let base = unsafe { libc::malloc(total) } as *mut u8;
         let base = NonNull::new(base)?;
-        // SAFETY: the allocation spans GUARD + size + GUARD bytes; both canary
-        // writes and the payload fill stay inside it.
-        unsafe {
-            (base.as_ptr() as *mut u64).write_unaligned(PRE);
-            core::ptr::write_bytes(base.as_ptr().add(GUARD), FILL_ALLOC, size.max(1));
-            (base.as_ptr().add(GUARD + size.max(1)) as *mut u64).write_unaligned(POST);
-        }
+        // SAFETY: the allocation spans GUARD + size + GUARD bytes; the pre
+        // canary is its first 8 bytes.
+        unsafe { (base.as_ptr() as *mut u64).write_unaligned(PRE) };
+        // SAFETY: the payload starts GUARD bytes into the allocation.
+        let payload_ptr = unsafe { base.as_ptr().add(GUARD) };
+        // SAFETY: the payload spans size.max(1) bytes inside the allocation.
+        unsafe { core::ptr::write_bytes(payload_ptr, FILL_ALLOC, size.max(1)) };
+        // SAFETY: the post canary starts GUARD + size.max(1) bytes in — its 8
+        // bytes are the allocation's final GUARD bytes.
+        let post_ptr = unsafe { base.as_ptr().add(GUARD + size.max(1)) };
+        // SAFETY: see above — the write stays inside the allocation.
+        unsafe { (post_ptr as *mut u64).write_unaligned(POST) };
         self.seq += 1;
         self.live
             .insert(base.as_ptr() as usize, Record { size: size.max(1), seq: self.seq });
         // Hand out the payload pointer.
         // SAFETY: `base + GUARD` is inside the allocation, hence non-null.
-        let payload = unsafe { NonNull::new_unchecked(base.as_ptr().add(GUARD)) };
+        let payload = unsafe { NonNull::new_unchecked(payload_ptr) };
         Some(AllocHandle::new(payload, size))
     }
 
@@ -132,9 +139,10 @@ impl BenchAllocator for DebugHeapAllocator {
         // Local verification (always, like the CRT).
         self.verify_block(base, rec.size);
         // Fill freed payload.
-        // SAFETY: `rec` proves `base` is a live allocation of `rec.size` payload
-        // bytes starting at offset GUARD.
-        unsafe { core::ptr::write_bytes(base.add(GUARD), FILL_FREE, rec.size) };
+        // SAFETY: `rec` proves the payload starts GUARD bytes into the block.
+        let payload = unsafe { base.add(GUARD) };
+        // SAFETY: the payload spans `rec.size` writable bytes.
+        unsafe { core::ptr::write_bytes(payload, FILL_FREE, rec.size) };
         if self.level == DebugLevel::Full {
             self.verify_heap();
         }
@@ -156,13 +164,15 @@ mod tests {
     fn roundtrip_and_fills() {
         let mut a = DebugHeapAllocator::new(DebugLevel::Light);
         let h = a.alloc(32).unwrap();
-        // SAFETY: the payload is 32 readable bytes filled by `alloc`.
-        unsafe {
-            for i in 0..32 {
-                assert_eq!(h.ptr.as_ptr().add(i).read(), FILL_ALLOC);
-            }
-            std::ptr::write_bytes(h.ptr.as_ptr(), 0x11, 32);
+        for i in 0..32 {
+            // SAFETY: i < 32, inside the 32-byte payload.
+            let p = unsafe { h.ptr.as_ptr().add(i) };
+            // SAFETY: every payload byte was initialised by `alloc`'s fill.
+            let byte = unsafe { p.read() };
+            assert_eq!(byte, FILL_ALLOC);
         }
+        // SAFETY: the payload is 32 writable bytes.
+        unsafe { std::ptr::write_bytes(h.ptr.as_ptr(), 0x11, 32) };
         a.free(h);
         assert_eq!(a.live_count(), 0);
         assert_eq!(a.violations, 0);
@@ -173,7 +183,9 @@ mod tests {
         let mut a = DebugHeapAllocator::new(DebugLevel::Light);
         let h = a.alloc(16).unwrap();
         // SAFETY: `add(16)` lands in the post-guard area of this allocation.
-        unsafe { h.ptr.as_ptr().add(16).write(0x00) }; // clobber post guard
+        let guard = unsafe { h.ptr.as_ptr().add(16) };
+        // SAFETY: the guard byte is writable; clobbering it is the point.
+        unsafe { guard.write(0x00) }; // clobber post guard
         a.free(h);
         assert_eq!(a.violations, 1);
     }
@@ -206,7 +218,9 @@ mod tests {
         let mut a = DebugHeapAllocator::new(DebugLevel::Full);
         let h1 = a.alloc(16).unwrap();
         // SAFETY: `add(16)` lands in the post-guard area of this allocation.
-        unsafe { h1.ptr.as_ptr().add(16).write(0xAA) }; // corrupt, keep live
+        let guard = unsafe { h1.ptr.as_ptr().add(16) };
+        // SAFETY: the guard byte is writable; corrupting it is the point.
+        unsafe { guard.write(0xAA) }; // corrupt, keep live
         let _h2 = a.alloc(16); // sweep sees the corruption
         assert!(a.violations >= 1);
     }

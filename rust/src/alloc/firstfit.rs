@@ -60,7 +60,9 @@ impl FirstFitAllocator {
 
     fn ptr_at(&mut self, offset: usize) -> NonNull<u8> {
         // SAFETY: offset < arena.len() by construction.
-        unsafe { NonNull::new_unchecked(self.arena.as_mut_ptr().add(offset)) }
+        let p = unsafe { self.arena.as_mut_ptr().add(offset) };
+        // SAFETY: in-bounds pointer into a live Vec allocation, never null.
+        unsafe { NonNull::new_unchecked(p) }
     }
 
     /// Point-in-time fragmentation metrics (ablation A7).

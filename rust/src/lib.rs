@@ -18,9 +18,11 @@
 //!   interleaving (see `tests/model_check.rs`).
 
 // Static-analysis wall: every `unsafe` block must carry a `// SAFETY:`
-// comment stating the invariant it relies on; CI runs clippy with this
-// lint denied so the audit cannot rot.
+// comment stating the invariant it relies on, and may contain exactly
+// one unsafe operation — so each comment provably covers the op it sits
+// on. CI runs clippy with both lints denied so the audit cannot rot.
 #![deny(clippy::undocumented_unsafe_blocks)]
+#![deny(clippy::multiple_unsafe_ops_per_block)]
 
 pub mod alloc;
 pub mod coordinator;

@@ -129,10 +129,10 @@ impl AtomicPool {
     #[inline(always)]
     fn addr_from_index(&self, i: u32) -> NonNull<u8> {
         debug_assert!(i < self.num_blocks);
-        // SAFETY: `i < num_blocks`, so the offset stays inside the region and the result is non-null.
-        unsafe {
-            NonNull::new_unchecked(self.mem_start.as_ptr().add(i as usize * self.block_size))
-        }
+        // SAFETY: `i < num_blocks`, so the offset stays inside the region.
+        let p = unsafe { self.mem_start.as_ptr().add(i as usize * self.block_size) };
+        // SAFETY: in-bounds pointer into a live allocation, never null.
+        unsafe { NonNull::new_unchecked(p) }
     }
 
     #[inline(always)]
@@ -360,25 +360,25 @@ mod tests {
                                 // Stamp the whole block with the thread id and
                                 // re-check before freeing — detects overlap.
                                 let p = pool.addr_from_index(idx);
-                                // SAFETY: `idx` was just allocated and is exclusively held, so the 64-byte block is writable.
-                                unsafe {
-                                    std::ptr::write_bytes(p.as_ptr(), t as u8, 64);
-                                }
+                                // SAFETY: `idx` was just allocated and is exclusively
+                                // held, so the 64-byte block is writable.
+                                unsafe { std::ptr::write_bytes(p.as_ptr(), t as u8, 64) };
                                 held.push(idx);
                             }
                         } else {
                             let i = rng.gen_usize(0, held.len());
                             let idx = held.swap_remove(i);
                             let p = pool.addr_from_index(idx);
-                            // SAFETY: `idx` is still held by this thread, so the block is readable and unaliased.
-                            unsafe {
-                                for off in 0..64 {
-                                    assert_eq!(
-                                        p.as_ptr().add(off).read(),
-                                        t as u8,
-                                        "block {idx} corrupted: double handout"
-                                    );
-                                }
+                            for off in 0..64 {
+                                // SAFETY: off < 64, inside the held block.
+                                let q = unsafe { p.as_ptr().add(off) };
+                                // SAFETY: `idx` is still held by this thread, so
+                                // the block is readable and unaliased.
+                                let byte = unsafe { q.read() };
+                                assert_eq!(
+                                    byte, t as u8,
+                                    "block {idx} corrupted: double handout"
+                                );
                             }
                             pool.deallocate_index(idx);
                         }

@@ -39,12 +39,11 @@ impl EagerPool {
         let region = NonNull::new(unsafe { std::alloc::alloc(layout) })
             .expect("pool region allocation failed");
         // THE LOOP: thread block i → i+1 for all blocks up front.
-        // SAFETY: each write targets the first 4 bytes of block `i`, inside the freshly allocated region.
-        unsafe {
-            for i in 0..num_blocks {
-                let p = region.as_ptr().add(i as usize * bs) as *mut u32;
-                p.write_unaligned(i + 1);
-            }
+        for i in 0..num_blocks {
+            // SAFETY: block `i` starts inside the freshly allocated region.
+            let p = unsafe { region.as_ptr().add(i as usize * bs) } as *mut u32;
+            // SAFETY: the write covers the first 4 bytes of block `i` (`bs` >= 4).
+            unsafe { p.write_unaligned(i + 1) };
         }
         Self {
             num_blocks,
@@ -58,10 +57,10 @@ impl EagerPool {
 
     #[inline(always)]
     fn addr_from_index(&self, i: u32) -> NonNull<u8> {
-        // SAFETY: callers pass `i < num_blocks`, so the offset stays inside the region and is non-null.
-        unsafe {
-            NonNull::new_unchecked(self.mem_start.as_ptr().add(i as usize * self.block_size))
-        }
+        // SAFETY: callers pass `i < num_blocks`, so the offset stays inside the region.
+        let p = unsafe { self.mem_start.as_ptr().add(i as usize * self.block_size) };
+        // SAFETY: in-bounds pointer into a live allocation, never null.
+        unsafe { NonNull::new_unchecked(p) }
     }
 
     #[inline(always)]
@@ -148,11 +147,10 @@ mod tests {
         for _ in 0..100 {
             let a = p.allocate().unwrap();
             let b = p.allocate().unwrap();
-            // SAFETY: `a` and `b` came from this pool's `allocate` and are freed exactly once.
-            unsafe {
-                p.deallocate(a);
-                p.deallocate(b);
-            }
+            // SAFETY: `a` came from this pool's `allocate`, freed exactly once.
+            unsafe { p.deallocate(a) };
+            // SAFETY: likewise for `b`.
+            unsafe { p.deallocate(b) };
         }
         assert_eq!(p.num_free(), 4);
     }
@@ -162,11 +160,10 @@ mod tests {
         let mut p = EagerPool::with_blocks(8, 4);
         let a = p.allocate().unwrap();
         let b = p.allocate().unwrap();
-        // SAFETY: `a` and `b` came from this pool's `allocate` and are freed exactly once.
-        unsafe {
-            p.deallocate(a);
-            p.deallocate(b);
-        }
+        // SAFETY: `a` came from this pool's `allocate`, freed exactly once.
+        unsafe { p.deallocate(a) };
+        // SAFETY: likewise for `b`.
+        unsafe { p.deallocate(b) };
         assert_eq!(p.allocate().unwrap().as_ptr(), b.as_ptr());
         assert_eq!(p.allocate().unwrap().as_ptr(), a.as_ptr());
     }

@@ -209,11 +209,10 @@ mod tests {
         let b = p.allocate().unwrap();
         assert_ne!(a.as_ptr(), b.as_ptr());
         assert_eq!(p.num_used(), 2);
-        // SAFETY: `a` and `b` came from this pool's `allocate` and are freed exactly once.
-        unsafe {
-            p.deallocate(a);
-            p.deallocate(b);
-        }
+        // SAFETY: `a` came from this pool's `allocate`, freed exactly once.
+        unsafe { p.deallocate(a) };
+        // SAFETY: likewise for `b`.
+        unsafe { p.deallocate(b) };
         assert!(p.is_empty());
     }
 
@@ -270,14 +269,18 @@ mod tests {
         let a = p.allocate().unwrap();
         let mut foreign = [0u8; 16];
         let f = NonNull::new(foreign.as_mut_ptr()).unwrap();
-        // SAFETY: `f` and `mis` are deliberately invalid — `deallocate_checked` must reject them
-        // without dereferencing; `a + 3` stays inside the region, hence non-null.
-        unsafe {
-            assert!(!p.deallocate_checked(f));
-            let mis = NonNull::new_unchecked(a.as_ptr().add(3));
-            assert!(!p.deallocate_checked(mis));
-            assert!(p.deallocate_checked(a));
-        }
+        // SAFETY: `f` is deliberately foreign — `deallocate_checked` must
+        // reject it without dereferencing.
+        unsafe { assert!(!p.deallocate_checked(f)) };
+        // SAFETY: `a + 3` stays inside the region, hence non-null.
+        let mis_raw = unsafe { a.as_ptr().add(3) };
+        // SAFETY: non-null by the bound above.
+        let mis = unsafe { NonNull::new_unchecked(mis_raw) };
+        // SAFETY: `mis` is deliberately misaligned — must be rejected
+        // without dereferencing.
+        unsafe { assert!(!p.deallocate_checked(mis)) };
+        // SAFETY: `a` is an outstanding allocation of this pool.
+        unsafe { assert!(p.deallocate_checked(a)) };
         assert_eq!(p.num_used(), 0);
     }
 

@@ -39,17 +39,18 @@ impl PtrFreeListPool {
         let region = NonNull::new(unsafe { std::alloc::alloc(layout) })
             .expect("pool region allocation failed");
         // Thread every block: block i points to block i+1; last → null.
-        // SAFETY: every write targets the first pointer-sized bytes of block `i`, inside the freshly allocated region.
-        unsafe {
-            for i in 0..num_blocks as usize {
-                let p = region.as_ptr().add(i * bs) as *mut *mut u8;
-                let next = if i + 1 < num_blocks as usize {
-                    region.as_ptr().add((i + 1) * bs)
-                } else {
-                    core::ptr::null_mut()
-                };
-                p.write(next);
-            }
+        for i in 0..num_blocks as usize {
+            // SAFETY: block `i` starts within the freshly allocated region.
+            let p = unsafe { region.as_ptr().add(i * bs) } as *mut *mut u8;
+            let next = if i + 1 < num_blocks as usize {
+                // SAFETY: block `i + 1` also starts within the region.
+                unsafe { region.as_ptr().add((i + 1) * bs) }
+            } else {
+                core::ptr::null_mut()
+            };
+            // SAFETY: the write covers the first pointer-sized bytes of
+            // block `i`, inside the region (`bs` >= pointer size).
+            unsafe { p.write(next) };
         }
         Self {
             num_blocks,

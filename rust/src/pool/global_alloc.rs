@@ -306,14 +306,13 @@ mod tests {
     fn alloc_dealloc_roundtrip() {
         let ga = PooledGlobalAlloc::new(64);
         let layout = Layout::from_size_align(100, 8).unwrap();
-        // SAFETY: `p` is non-null and sized for `layout`; write stays in bounds
-        // and the pointer is freed exactly once with the same layout.
-        unsafe {
-            let p = ga.alloc(layout);
-            assert!(!p.is_null());
-            core::ptr::write_bytes(p, 0xAB, 100);
-            ga.dealloc(p, layout);
-        }
+        // SAFETY: `layout` is valid (non-zero size).
+        let p = unsafe { ga.alloc(layout) };
+        assert!(!p.is_null());
+        // SAFETY: `p` is sized for `layout`; the write stays in bounds.
+        unsafe { core::ptr::write_bytes(p, 0xAB, 100) };
+        // SAFETY: freed exactly once with the allocating layout.
+        unsafe { ga.dealloc(p, layout) };
         let (hits, sys) = ga.stats();
         assert_eq!(hits, 1);
         assert_eq!(sys, 0);
@@ -323,12 +322,11 @@ mod tests {
     fn oversize_uses_system() {
         let ga = PooledGlobalAlloc::new(8);
         let layout = Layout::from_size_align(1 << 20, 8).unwrap();
-        // SAFETY: `p` is non-null and freed once with the allocating layout.
-        unsafe {
-            let p = ga.alloc(layout);
-            assert!(!p.is_null());
-            ga.dealloc(p, layout);
-        }
+        // SAFETY: `layout` is valid (non-zero size).
+        let p = unsafe { ga.alloc(layout) };
+        assert!(!p.is_null());
+        // SAFETY: freed exactly once with the allocating layout.
+        unsafe { ga.dealloc(p, layout) };
         assert_eq!(ga.stats().1, 1);
     }
 
@@ -336,26 +334,26 @@ mod tests {
     fn exhaustion_falls_back_and_frees_correctly() {
         let ga = PooledGlobalAlloc::new(2);
         let layout = Layout::from_size_align(32, 8).unwrap();
-        // SAFETY: each pointer is freed exactly once with its allocating layout.
-        unsafe {
-            let a = ga.alloc(layout);
-            let b = ga.alloc(layout);
-            // Pool of 2 exhausted; no larger class exists yet, so spill
-            // finds nothing and the system serves.
-            let c = ga.alloc(layout);
-            assert_eq!(ga.stats(), (2, 1));
-            assert_eq!(ga.spill_total(), 0);
-            // dealloc must route each pointer to its true owner.
-            ga.dealloc(c, layout);
-            ga.dealloc(b, layout);
-            ga.dealloc(a, layout);
-            // Pool fully free again: two more pool hits.
-            let d = ga.alloc(layout);
-            let e = ga.alloc(layout);
-            assert_eq!(ga.stats().0, 4);
-            ga.dealloc(d, layout);
-            ga.dealloc(e, layout);
-        }
+        // SAFETY (each alloc below): `layout` is valid (non-zero size).
+        // SAFETY (each dealloc below): the pointer is freed exactly once
+        // with its allocating layout.
+        let a = unsafe { ga.alloc(layout) };
+        let b = unsafe { ga.alloc(layout) };
+        // Pool of 2 exhausted; no larger class exists yet, so spill
+        // finds nothing and the system serves.
+        let c = unsafe { ga.alloc(layout) };
+        assert_eq!(ga.stats(), (2, 1));
+        assert_eq!(ga.spill_total(), 0);
+        // dealloc must route each pointer to its true owner.
+        unsafe { ga.dealloc(c, layout) };
+        unsafe { ga.dealloc(b, layout) };
+        unsafe { ga.dealloc(a, layout) };
+        // Pool fully free again: two more pool hits.
+        let d = unsafe { ga.alloc(layout) };
+        let e = unsafe { ga.alloc(layout) };
+        assert_eq!(ga.stats().0, 4);
+        unsafe { ga.dealloc(d, layout) };
+        unsafe { ga.dealloc(e, layout) };
     }
 
     #[test]
@@ -363,33 +361,33 @@ mod tests {
         let ga = PooledGlobalAlloc::new(2);
         let l32 = Layout::from_size_align(32, 8).unwrap();
         let l64 = Layout::from_size_align(64, 8).unwrap();
-        // SAFETY: each pointer is freed exactly once with its allocating layout.
-        unsafe {
-            // Materialise the 64B class so spill has somewhere to go.
-            let warm = ga.alloc(l64);
-            ga.dealloc(warm, l64);
-            let a = ga.alloc(l32);
-            let b = ga.alloc(l32);
-            // 32B class dry → served by the 64B class, not the system.
-            let c = ga.alloc(l32);
-            assert!(!c.is_null());
-            assert_eq!(ga.spill_total(), 1, "third 32B alloc must spill");
-            assert_eq!(ga.stats().1, 0, "spill keeps the system allocator out");
-            // The spilled pointer resolves to the 64B class (index 2).
-            assert_eq!(ga.owning_class(c), Some(2));
-            ga.dealloc(c, l32);
-            ga.dealloc(b, l32);
-            ga.dealloc(a, l32);
-            // Both 64B blocks are home again: two pool hits, no spill.
-            let spills_before = ga.spill_total();
-            let d = ga.alloc(l64);
-            let e = ga.alloc(l64);
-            assert!(!d.is_null() && !e.is_null());
-            assert_eq!(ga.spill_total(), spills_before);
-            assert_eq!(ga.stats().1, 0);
-            ga.dealloc(d, l64);
-            ga.dealloc(e, l64);
-        }
+        // SAFETY (each alloc below): the layout is valid (non-zero size).
+        // SAFETY (each dealloc below): the pointer is freed exactly once
+        // with its allocating layout.
+        // Materialise the 64B class so spill has somewhere to go.
+        let warm = unsafe { ga.alloc(l64) };
+        unsafe { ga.dealloc(warm, l64) };
+        let a = unsafe { ga.alloc(l32) };
+        let b = unsafe { ga.alloc(l32) };
+        // 32B class dry → served by the 64B class, not the system.
+        let c = unsafe { ga.alloc(l32) };
+        assert!(!c.is_null());
+        assert_eq!(ga.spill_total(), 1, "third 32B alloc must spill");
+        assert_eq!(ga.stats().1, 0, "spill keeps the system allocator out");
+        // The spilled pointer resolves to the 64B class (index 2).
+        assert_eq!(ga.owning_class(c), Some(2));
+        unsafe { ga.dealloc(c, l32) };
+        unsafe { ga.dealloc(b, l32) };
+        unsafe { ga.dealloc(a, l32) };
+        // Both 64B blocks are home again: two pool hits, no spill.
+        let spills_before = ga.spill_total();
+        let d = unsafe { ga.alloc(l64) };
+        let e = unsafe { ga.alloc(l64) };
+        assert!(!d.is_null() && !e.is_null());
+        assert_eq!(ga.spill_total(), spills_before);
+        assert_eq!(ga.stats().1, 0);
+        unsafe { ga.dealloc(d, l64) };
+        unsafe { ga.dealloc(e, l64) };
     }
 
     #[test]
@@ -402,14 +400,14 @@ mod tests {
         let ga = PooledGlobalAlloc::new(4);
         let l16 = Layout::from_size_align(16, 8).unwrap();
         let l128 = Layout::from_size_align(128, 8).unwrap();
-        // SAFETY: each pointer is freed exactly once with its allocating layout.
-        unsafe {
-            // Materialise two classes so the table has multiple entries.
-            let a = ga.alloc(l16);
-            let b = ga.alloc(l128);
-            ga.dealloc(b, l128);
-            ga.dealloc(a, l16);
-        }
+        // SAFETY (each alloc below): the layout is valid (non-zero size).
+        // SAFETY (each dealloc below): the pointer is freed exactly once
+        // with its allocating layout.
+        // Materialise two classes so the table has multiple entries.
+        let a = unsafe { ga.alloc(l16) };
+        let b = unsafe { ga.alloc(l128) };
+        unsafe { ga.dealloc(b, l128) };
+        unsafe { ga.dealloc(a, l16) };
         for ci in 0..NUM_CLASSES {
             let p = ga.classes[ci].load(Ordering::Acquire);
             if p.is_null() {
@@ -453,19 +451,17 @@ mod tests {
         let layout = Layout::new::<Vec4>();
         assert_eq!(layout.align(), 16);
         let ga = PooledGlobalAlloc::new(64);
-        // SAFETY: each pointer is non-null, written within `layout.size()`, and
-        // freed exactly once with the allocating layout.
-        unsafe {
-            let mut held = Vec::new();
-            for _ in 0..32 {
-                let p = ga.alloc(layout);
-                assert!(!p.is_null());
-                assert_eq!(p as usize % 16, 0, "pooled block must be 16-aligned");
-                held.push(p);
-            }
-            for p in held {
-                ga.dealloc(p, layout);
-            }
+        let mut held = Vec::new();
+        for _ in 0..32 {
+            // SAFETY: `layout` is valid (non-zero size).
+            let p = unsafe { ga.alloc(layout) };
+            assert!(!p.is_null());
+            assert_eq!(p as usize % 16, 0, "pooled block must be 16-aligned");
+            held.push(p);
+        }
+        for p in held {
+            // SAFETY: freed exactly once with the allocating layout.
+            unsafe { ga.dealloc(p, layout) };
         }
         let (hits, sys) = ga.stats();
         assert_eq!(hits, 32, "all requests must be pool-served");

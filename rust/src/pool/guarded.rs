@@ -148,21 +148,21 @@ impl GuardedPool {
     pub fn allocate(&mut self, tag: &'static str) -> Option<NonNull<u8>> {
         let slot = self.pool.allocate()?;
         let index = self.pool.raw().index_from_addr(slot);
-        // SAFETY: the slot spans GUARD+8 + user_block_size + GUARD+8 bytes
-        // (sized at construction), so canary and fill writes stay inside it.
-        unsafe {
-            if self.cfg.canaries {
-                (slot.as_ptr() as *mut u64).write_unaligned(PRE_CANARY);
-                (slot.as_ptr().add(GUARD + 8 + self.user_block_size) as *mut u64)
-                    .write_unaligned(POST_CANARY);
-            }
-            if self.cfg.fills {
-                core::ptr::write_bytes(
-                    slot.as_ptr().add(GUARD + 8),
-                    FILL_ALLOC,
-                    self.user_block_size,
-                );
-            }
+        // The slot spans GUARD+8 + user_block_size + GUARD+8 bytes (sized at
+        // construction), so every canary and fill write below stays inside it.
+        if self.cfg.canaries {
+            // SAFETY: the pre canary is the slot's first 8 bytes.
+            unsafe { (slot.as_ptr() as *mut u64).write_unaligned(PRE_CANARY) };
+            // SAFETY: the post canary starts GUARD+8+user_block_size bytes in.
+            let post = unsafe { slot.as_ptr().add(GUARD + 8 + self.user_block_size) };
+            // SAFETY: its 8 bytes end GUARD bytes before the slot's end.
+            unsafe { (post as *mut u64).write_unaligned(POST_CANARY) };
+        }
+        // SAFETY: the payload starts GUARD+8 bytes into the slot.
+        let payload = unsafe { slot.as_ptr().add(GUARD + 8) };
+        if self.cfg.fills {
+            // SAFETY: the payload spans user_block_size bytes of the slot.
+            unsafe { core::ptr::write_bytes(payload, FILL_ALLOC, self.user_block_size) };
         }
         if self.cfg.track_double_free {
             self.allocated[index as usize] = true;
@@ -170,8 +170,8 @@ impl GuardedPool {
         self.seq += 1;
         self.seqs[index as usize] = self.seq;
         self.tags[index as usize] = tag;
-        // SAFETY: payload starts GUARD+8 into the slot.
-        Some(unsafe { NonNull::new_unchecked(slot.as_ptr().add(GUARD + 8)) })
+        // SAFETY: in-bounds pointer into the slot, hence non-null.
+        Some(unsafe { NonNull::new_unchecked(payload) })
     }
 
     /// Checked free. Returns the detected error instead of corrupting the
@@ -192,15 +192,10 @@ impl GuardedPool {
             self.check_block(index)?;
         }
         if self.cfg.fills {
-            // SAFETY: the payload area [GUARD+8, GUARD+8+user_block_size) lies
-            // inside this validated slot.
-            unsafe {
-                core::ptr::write_bytes(
-                    slot.as_ptr().add(GUARD + 8),
-                    FILL_FREE,
-                    self.user_block_size,
-                )
-            };
+            // SAFETY: the payload starts GUARD+8 bytes into this validated slot.
+            let payload = unsafe { slot.as_ptr().add(GUARD + 8) };
+            // SAFETY: the payload spans user_block_size bytes of the slot.
+            unsafe { core::ptr::write_bytes(payload, FILL_FREE, self.user_block_size) };
         }
         if self.cfg.track_double_free {
             self.allocated[index as usize] = false;
@@ -222,20 +217,20 @@ impl GuardedPool {
     /// "Local" canary check of one block (§IV.B).
     fn check_block(&mut self, index: u32) -> Result<(), GuardError> {
         let slot = self.pool.raw().addr_from_index(index);
-        // SAFETY: `index` was range-checked by the caller; both canary words
-        // lie inside the slot (pre at offset 0, post past the payload).
-        unsafe {
-            let pre = (slot.as_ptr() as *const u64).read_unaligned();
-            if pre != PRE_CANARY {
-                self.violations += 1;
-                return Err(GuardError::PreCanaryClobbered { index, found: pre });
-            }
-            let post = (slot.as_ptr().add(GUARD + 8 + self.user_block_size) as *const u64)
-                .read_unaligned();
-            if post != POST_CANARY {
-                self.violations += 1;
-                return Err(GuardError::PostCanaryClobbered { index, found: post });
-            }
+        // SAFETY: `index` was range-checked by the caller; the pre canary is
+        // the slot's first 8 bytes.
+        let pre = unsafe { (slot.as_ptr() as *const u64).read_unaligned() };
+        if pre != PRE_CANARY {
+            self.violations += 1;
+            return Err(GuardError::PreCanaryClobbered { index, found: pre });
+        }
+        // SAFETY: the post canary starts GUARD+8+user_block_size bytes in.
+        let post_ptr = unsafe { slot.as_ptr().add(GUARD + 8 + self.user_block_size) };
+        // SAFETY: its 8 bytes lie inside the slot, past the payload.
+        let post = unsafe { (post_ptr as *const u64).read_unaligned() };
+        if post != POST_CANARY {
+            self.violations += 1;
+            return Err(GuardError::PostCanaryClobbered { index, found: post });
         }
         Ok(())
     }
@@ -285,11 +280,12 @@ impl GuardedPool {
         if !self.cfg.fills {
             return true;
         }
-        // SAFETY: `payload` points at `user_block_size` readable bytes inside
-        // a live slot of this pool.
-        unsafe {
-            (0..self.user_block_size).all(|i| payload.as_ptr().add(i).read() == FILL_ALLOC)
-        }
+        (0..self.user_block_size).all(|i| {
+            // SAFETY: i < user_block_size, inside the live slot's payload.
+            let p = unsafe { payload.as_ptr().add(i) };
+            // SAFETY: payload bytes are readable (filled at allocation).
+            unsafe { p.read() == FILL_ALLOC }
+        })
     }
 }
 
@@ -313,9 +309,11 @@ mod tests {
         let mut g = GuardedPool::with_blocks(16, 4, GuardConfig::default());
         let p = g.allocate("overrun").unwrap();
         // Write one byte past the payload → clobbers post canary.
-        // SAFETY: `add(16)` lands in the post-guard area of this slot — still
-        // inside pool memory, deliberately clobbering the canary.
-        unsafe { p.as_ptr().add(16).write(0xFF) };
+        // SAFETY: `add(16)` lands in the post-guard area of this slot, still
+        // inside pool memory.
+        let guard = unsafe { p.as_ptr().add(16) };
+        // SAFETY: deliberately clobbering the writable canary byte.
+        unsafe { guard.write(0xFF) };
         match g.deallocate(p) {
             Err(GuardError::PostCanaryClobbered { index: 0, .. }) => {}
             other => panic!("expected post-canary error, got {other:?}"),
@@ -327,9 +325,11 @@ mod tests {
     fn detects_underrun() {
         let mut g = GuardedPool::with_blocks(16, 4, GuardConfig::default());
         let p = g.allocate("underrun").unwrap();
-        // SAFETY: `sub(GUARD + 8)` is the slot's pre-canary word — inside pool
-        // memory, deliberately clobbered.
-        unsafe { p.as_ptr().sub(GUARD + 8).write(0x00) }; // clobber pre canary
+        // SAFETY: `sub(GUARD + 8)` is the slot's pre-canary word — inside
+        // pool memory.
+        let canary = unsafe { p.as_ptr().sub(GUARD + 8) };
+        // SAFETY: deliberately clobbering the writable canary byte.
+        unsafe { canary.write(0x00) }; // clobber pre canary
         assert!(matches!(
             g.deallocate(p),
             Err(GuardError::PreCanaryClobbered { .. })
@@ -375,7 +375,9 @@ mod tests {
         // Corrupt `a`'s post canary but free only `b` — only a global
         // sweep can catch this.
         // SAFETY: `add(16)` lands in `a`'s post-guard area — inside pool memory.
-        unsafe { a.as_ptr().add(16).write(0xAA) };
+        let guard = unsafe { a.as_ptr().add(16) };
+        // SAFETY: deliberately corrupting the writable canary byte.
+        unsafe { guard.write(0xAA) };
         g.deallocate(b).unwrap(); // sweep_every=64, not yet
         assert!(matches!(
             g.check_all(),
@@ -394,12 +396,15 @@ mod tests {
         // the block is free but the memory is still ours via the pool).
         // Note: first 4 bytes of the *slot* hold the free-list index, but
         // the payload area (offset GUARD+8) keeps the fill.
-        // SAFETY: the slot stays mapped after free (pool memory); reads are in
-        // bounds of the old payload.
-        unsafe {
-            assert_eq!(slot_payload.read(), FILL_FREE);
-            assert_eq!(slot_payload.add(7).read(), FILL_FREE);
-        }
+        // SAFETY: the slot stays mapped after free (pool memory); the read is
+        // in bounds of the old payload.
+        let first = unsafe { slot_payload.read() };
+        assert_eq!(first, FILL_FREE);
+        // SAFETY: offset 7 is still inside the old 8-byte payload.
+        let last_ptr = unsafe { slot_payload.add(7) };
+        // SAFETY: as above — mapped pool memory.
+        let last = unsafe { last_ptr.read() };
+        assert_eq!(last, FILL_FREE);
     }
 
     #[test]
@@ -407,7 +412,9 @@ mod tests {
         let mut g = GuardedPool::with_blocks(16, 4, GuardConfig::off());
         let p = g.allocate("off").unwrap();
         // SAFETY: `add(16)` lands in the post-guard area — inside pool memory.
-        unsafe { p.as_ptr().add(16).write(0xFF) }; // would clobber canary
+        let guard = unsafe { p.as_ptr().add(16) };
+        // SAFETY: the guard byte is writable pool memory.
+        unsafe { guard.write(0xFF) }; // would clobber canary
         g.deallocate(p).unwrap(); // no error: checks disabled
                                   // double free IS unchecked in off mode — don't do it here; just
                                   // verify state is consistent.

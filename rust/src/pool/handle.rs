@@ -381,7 +381,9 @@ impl<T: Copy> PooledVec<T> {
             self.grow((self.cap * 2).max(4));
         }
         // SAFETY: len < cap after the growth check.
-        unsafe { (self.ptr.as_ptr() as *mut T).add(self.len).write(v) };
+        let slot = unsafe { (self.ptr.as_ptr() as *mut T).add(self.len) };
+        // SAFETY: the slot is inside the buffer and unaliased (&mut self).
+        unsafe { slot.write(v) };
         self.len += 1;
         self.init = self.init.max(self.len);
     }
@@ -390,14 +392,11 @@ impl<T: Copy> PooledVec<T> {
         if self.len + xs.len() > self.cap {
             self.grow((self.len + xs.len()).max(self.cap * 2));
         }
-        // SAFETY: room for xs.len() more elements after the growth check.
-        unsafe {
-            core::ptr::copy_nonoverlapping(
-                xs.as_ptr(),
-                (self.ptr.as_ptr() as *mut T).add(self.len),
-                xs.len(),
-            );
-        }
+        // SAFETY: len stays within cap after the growth check.
+        let dst = unsafe { (self.ptr.as_ptr() as *mut T).add(self.len) };
+        // SAFETY: room for xs.len() more elements; src and dst are disjoint
+        // (xs borrows another allocation; &mut self owns this one).
+        unsafe { core::ptr::copy_nonoverlapping(xs.as_ptr(), dst, xs.len()) };
         self.len += xs.len();
         self.init = self.init.max(self.len);
     }
@@ -550,12 +549,11 @@ mod tests {
         let (p, _) = mp.allocate(48).unwrap();
         assert_eq!(mp.spill_total(), 1);
         assert_eq!(mp.class_of_ptr(p), Some(2));
-        // SAFETY: every pointer came from `allocate(48)` and is freed exactly once.
-        unsafe {
-            mp.deallocate(p, 48);
-            for p in held {
-                mp.deallocate(p, 48);
-            }
+        // SAFETY: `p` came from `allocate(48)` and is freed exactly once.
+        unsafe { mp.deallocate(p, 48) };
+        for p in held {
+            // SAFETY: likewise for every held pointer.
+            unsafe { mp.deallocate(p, 48) };
         }
     }
 

@@ -120,8 +120,11 @@ struct MagazineSlot {
     /// Ownership word: `Free`, `Claimed`, or `Owned(gen)` — the
     /// `proto::mag` protocol arbitrating access to `inner`.
     state: MagWord,
-    /// Mirror of `loaded_len + prev_len` (Release store by the owner):
-    /// feeds `num_free`, exact at quiescence.
+    /// Mirror of `loaded_len + prev_len`: feeds `num_free`, exact at
+    /// quiescence. Relaxed on both sides (PR 8 audit downgrade): it is
+    /// a statistics gauge, never a publication edge — readers that need
+    /// the blocks themselves go through the slot-state protocol, whose
+    /// `publish_owned` Release the audit proved load-bearing.
     cached: AtomicU32,
     /// Mirror of the adaptive depth.
     depth: AtomicU32,
@@ -311,7 +314,7 @@ impl MagazinePool {
                 inner.loaded_len -= 1;
                 let grid = inner.loaded[inner.loaded_len as usize];
                 bump(&m.hits, 1);
-                m.cached.store(inner.len(), Ordering::Release);
+                m.cached.store(inner.len(), Ordering::Relaxed);
                 return Some(self.shared.grid_to_ptr(grid));
             }
             return self.refill_and_pop(m, inner);
@@ -343,7 +346,7 @@ impl MagazinePool {
             }
             inner.loaded[inner.loaded_len as usize] = self.shared.ptr_to_grid(p);
             inner.loaded_len += 1;
-            m.cached.store(inner.len(), Ordering::Release);
+            m.cached.store(inner.len(), Ordering::Relaxed);
             return;
         }
         // SAFETY: forwarded contract.
@@ -372,7 +375,7 @@ impl MagazinePool {
         let n = got as usize;
         inner.loaded[..n - 1].copy_from_slice(&buf[1..n]);
         inner.loaded_len = got - 1;
-        m.cached.store(inner.len(), Ordering::Release);
+        m.cached.store(inner.len(), Ordering::Relaxed);
         Some(self.shared.grid_to_ptr(buf[0]))
     }
 
@@ -427,7 +430,7 @@ impl MagazinePool {
             bump(&m.flushes, 1);
             bump(&m.flushed_blocks, moved as u64);
         }
-        m.cached.store(0, Ordering::Release);
+        m.cached.store(0, Ordering::Relaxed);
         moved
     }
 
@@ -554,7 +557,7 @@ impl MagazinePool {
             refilled_blocks += m.refilled_blocks.load(Ordering::Relaxed);
             flushes += m.flushes.load(Ordering::Relaxed);
             flushed_blocks += m.flushed_blocks.load(Ordering::Relaxed);
-            cached += m.cached.load(Ordering::Acquire);
+            cached += m.cached.load(Ordering::Relaxed);
             if let MagState::Owned(_) = m.state.peek_relaxed() {
                 active_slots += 1;
                 depth_sum += m.depth.load(Ordering::Relaxed) as u64;
@@ -782,11 +785,10 @@ mod tests {
                 s.spawn(|| {
                     let a = p.allocate().unwrap();
                     let b = p.allocate().unwrap();
-                    // SAFETY: `a` and `b` came from `allocate` and are each freed once.
-                    unsafe {
-                        p.deallocate(a);
-                        p.deallocate(b);
-                    }
+                    // SAFETY: `a` came from `allocate` and is freed once.
+                    unsafe { p.deallocate(a) };
+                    // SAFETY: likewise for `b`.
+                    unsafe { p.deallocate(b) };
                 });
             });
         }
@@ -842,19 +844,17 @@ mod tests {
                         } else {
                             let i = rng.gen_usize(0, held.len());
                             let addr = held.swap_remove(i);
-                            // SAFETY: `addr` was recorded from a successful `allocate` and removed
-                            // from `held`, so each block is freed exactly once.
-                            unsafe {
-                                p.deallocate(NonNull::new_unchecked(addr as *mut u8))
-                            };
+                            // SAFETY: `addr` came from `allocate`, so non-null.
+                            let q = unsafe { NonNull::new_unchecked(addr as *mut u8) };
+                            // SAFETY: removed from `held`: freed exactly once.
+                            unsafe { p.deallocate(q) };
                         }
                     }
                     for addr in held {
-                        // SAFETY: the remaining addresses each came from `allocate` and were
-                        // never freed in the loop above.
-                        unsafe {
-                            p.deallocate(NonNull::new_unchecked(addr as *mut u8))
-                        };
+                        // SAFETY: `addr` came from `allocate`, so non-null.
+                        let q = unsafe { NonNull::new_unchecked(addr as *mut u8) };
+                        // SAFETY: never freed in the loop above.
+                        unsafe { p.deallocate(q) };
                     }
                 });
             }

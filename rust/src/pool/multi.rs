@@ -933,13 +933,11 @@ mod tests {
         assert_eq!(mp.spill_total(), 1);
         assert_eq!(mp.system_allocs, 0, "spill must keep the system allocator out");
         assert_eq!(mp.class_of_ptr(p), Some(1), "spilled block belongs to class 1");
-        // SAFETY: every pointer came from `allocate` with the size passed
-        // here and is freed exactly once.
-        unsafe {
-            mp.deallocate(p, 16);
-            for p in held {
-                mp.deallocate(p, 16);
-            }
+        // SAFETY: `p` came from `allocate(16)` and is freed exactly once.
+        unsafe { mp.deallocate(p, 16) };
+        for p in held {
+            // SAFETY: likewise for every held pointer.
+            unsafe { mp.deallocate(p, 16) };
         }
         // The spilled block went back to its serving class.
         assert_eq!(mp.class_free(0), 8);
@@ -960,12 +958,9 @@ mod tests {
         }
         assert_eq!(held.len(), 24, "own class + two spill hops, nothing more");
         assert_eq!(mp.class_free(3), 8, "the 128B class never got raided");
-        // SAFETY: every pointer came from `allocate` with the size passed
-        // here and is freed exactly once.
-        unsafe {
-            for p in held {
-                mp.deallocate(p, 16);
-            }
+        for p in held {
+            // SAFETY: `p` came from `allocate(16)` and is freed exactly once.
+            unsafe { mp.deallocate(p, 16) };
         }
         for ci in 0..3 {
             assert_eq!(mp.class_free(ci), 8, "class {ci} whole after drain");
@@ -985,13 +980,11 @@ mod tests {
         assert_eq!(o, Origin::System);
         assert_eq!(mp.class_stats(0).exhausted, 1);
         assert_eq!(mp.spill_total(), 0);
-        // SAFETY: every pointer came from `allocate` with the size passed
-        // here and is freed exactly once.
-        unsafe {
-            mp.deallocate(p, 16);
-            for p in held {
-                mp.deallocate(p, 16);
-            }
+        // SAFETY: `p` came from `allocate(16)` and is freed exactly once.
+        unsafe { mp.deallocate(p, 16) };
+        for p in held {
+            // SAFETY: likewise for every held pointer.
+            unsafe { mp.deallocate(p, 16) };
         }
     }
 
@@ -1068,13 +1061,11 @@ mod tests {
         assert_eq!(o, Origin::System);
         assert_eq!(mp.class_exhausted(0), 1);
         assert_eq!(mp.class_hits(0), 8);
-        // SAFETY: every pointer came from `allocate` with the size passed
-        // here and is freed exactly once.
-        unsafe {
-            mp.deallocate(p, 16);
-            for p in held {
-                mp.deallocate(p, 16);
-            }
+        // SAFETY: `p` came from `allocate(16)` and is freed exactly once.
+        unsafe { mp.deallocate(p, 16) };
+        for p in held {
+            // SAFETY: likewise for every held pointer.
+            unsafe { mp.deallocate(p, 16) };
         }
         assert_eq!(mp.system_frees.load(Ordering::Relaxed), 1);
         assert!(mp.pool_hit_rate() > 0.8);
@@ -1102,13 +1093,11 @@ mod tests {
         assert_eq!(mp.spill_total(), 1);
         assert_eq!(mp.system_allocs.load(Ordering::Relaxed), 0);
         assert_eq!(mp.class_of_ptr(p), Some(1));
-        // SAFETY: every pointer came from `allocate` with the size passed
-        // here and is freed exactly once.
-        unsafe {
-            mp.deallocate(p, 16);
-            for p in held {
-                mp.deallocate(p, 16);
-            }
+        // SAFETY: `p` came from `allocate(16)` and is freed exactly once.
+        unsafe { mp.deallocate(p, 16) };
+        for p in held {
+            // SAFETY: likewise for every held pointer.
+            unsafe { mp.deallocate(p, 16) };
         }
         // Conservation: both classes whole again (magazines count as free).
         assert_eq!(mp.class_shard_stats(0).num_free(), 8);
@@ -1195,13 +1184,11 @@ mod tests {
         assert!(r.contains("pool.s.c16.spill_out = 1"), "{r}");
         assert!(r.contains("pool.s.c32.spill_in = 1"), "{r}");
         assert!(r.contains("pool.s.c32.spill_total = 1"), "{r}");
-        // SAFETY: every pointer came from `allocate` with the size passed
-        // here and is freed exactly once.
-        unsafe {
-            mp.deallocate(spilled, 16);
-            for p in held {
-                mp.deallocate(p, 16);
-            }
+        // SAFETY: `spilled` came from `allocate(16)` and is freed exactly once.
+        unsafe { mp.deallocate(spilled, 16) };
+        for p in held {
+            // SAFETY: likewise for every held pointer.
+            unsafe { mp.deallocate(p, 16) };
         }
     }
 
@@ -1279,12 +1266,10 @@ mod tests {
         addrs.sort_unstable();
         addrs.dedup();
         assert_eq!(addrs.len(), 30);
-        // SAFETY: each `(p, size)` pair came from a successful `allocate(size)`
-        // and is freed exactly once.
-        unsafe {
-            for (p, size) in all {
-                mp.deallocate(p, size);
-            }
+        for (p, size) in all {
+            // SAFETY: the pair came from a successful `allocate(size)` and is
+            // freed exactly once.
+            unsafe { mp.deallocate(p, size) };
         }
     }
 }

@@ -16,9 +16,9 @@
 //! `run()` drives a machine to completion and inlines back to the
 //! original CAS loop.
 
-use crate::sync::{AtomicU32, AtomicU64, Ordering};
+use crate::sync::{AtomicU32, AtomicU64};
 
-use super::Step;
+use super::{sites, Step};
 
 /// Empty-stack sentinel index (`u32::MAX` can never be a block index:
 /// pool constructors assert `num_blocks < NIL`).
@@ -65,14 +65,14 @@ impl<const TAG: bool> TaggedHead<TAG> {
         }
     }
 
-    /// Current ABA tag (Relaxed; for tests and stats).
+    /// Current ABA tag (relaxed; for tests and stats).
     pub fn tag(&self) -> u32 {
-        unpack(self.head.load(Ordering::Relaxed)).1
+        unpack(self.head.load(sites::ord(sites::HEAD_TAG_LOAD))).1
     }
 
-    /// Current top index, `NIL` when empty (Relaxed; for tests/stats).
+    /// Current top index, `NIL` when empty (relaxed; for tests/stats).
     pub fn top(&self) -> u32 {
-        unpack(self.head.load(Ordering::Relaxed)).0
+        unpack(self.head.load(sites::ord(sites::HEAD_TOP_LOAD))).0
     }
 }
 
@@ -153,7 +153,7 @@ impl Pop {
     ) -> Step<Option<u32>> {
         match self.state {
             PopState::LoadHead => {
-                let cur = head.head.load(Ordering::Acquire);
+                let cur = head.head.load(sites::ord(sites::POP_LOAD_HEAD));
                 if unpack(cur).0 == NIL {
                     return Step::Done(None);
                 }
@@ -162,7 +162,7 @@ impl Pop {
             }
             PopState::ReadNext { cur } => {
                 let (idx, _) = unpack(cur);
-                let nxt = links[idx as usize].load(Ordering::Relaxed);
+                let nxt = links[idx as usize].load(sites::ord(sites::POP_READ_NEXT));
                 self.state = PopState::Cas { cur, nxt };
                 Step::Pending
             }
@@ -171,8 +171,8 @@ impl Pop {
                 match head.head.compare_exchange_weak(
                     cur,
                     pack(nxt, TaggedHead::<TAG>::bump(tag)),
-                    Ordering::AcqRel,
-                    Ordering::Acquire,
+                    sites::ord(sites::POP_CAS_OK),
+                    sites::ord(sites::POP_CAS_FAIL),
                 ) {
                     Ok(_) => Step::Done(Some(idx)),
                     Err(actual) => {
@@ -238,12 +238,12 @@ impl Push {
     ) -> Step<()> {
         match self.state {
             PushState::LoadHead => {
-                let cur = head.head.load(Ordering::Acquire);
+                let cur = head.head.load(sites::ord(sites::PUSH_LOAD_HEAD));
                 self.state = PushState::StoreNext { cur };
                 Step::Pending
             }
             PushState::StoreNext { cur } => {
-                links[self.idx as usize].store(unpack(cur).0, Ordering::Relaxed);
+                links[self.idx as usize].store(unpack(cur).0, sites::ord(sites::PUSH_STORE_NEXT));
                 self.state = PushState::Cas { cur };
                 Step::Pending
             }
@@ -252,8 +252,8 @@ impl Push {
                 match head.head.compare_exchange_weak(
                     cur,
                     pack(self.idx, TaggedHead::<TAG>::bump(tag)),
-                    Ordering::AcqRel,
-                    Ordering::Acquire,
+                    sites::ord(sites::PUSH_CAS_OK),
+                    sites::ord(sites::PUSH_CAS_FAIL),
                 ) {
                     Ok(_) => Step::Done(()),
                     Err(actual) => {
@@ -320,7 +320,8 @@ impl<'a> PushChain<'a> {
     ) -> Step<()> {
         match self.state {
             PushChainState::Link { i } => {
-                links[self.idxs[i] as usize].store(self.idxs[i + 1], Ordering::Relaxed);
+                links[self.idxs[i] as usize]
+                    .store(self.idxs[i + 1], sites::ord(sites::CHAIN_LINK_STORE));
                 self.state = if i + 2 < self.idxs.len() {
                     PushChainState::Link { i: i + 1 }
                 } else {
@@ -329,13 +330,13 @@ impl<'a> PushChain<'a> {
                 Step::Pending
             }
             PushChainState::LoadHead => {
-                let cur = head.head.load(Ordering::Acquire);
+                let cur = head.head.load(sites::ord(sites::CHAIN_LOAD_HEAD));
                 self.state = PushChainState::StoreTail { cur };
                 Step::Pending
             }
             PushChainState::StoreTail { cur } => {
                 let last = *self.idxs.last().unwrap();
-                links[last as usize].store(unpack(cur).0, Ordering::Relaxed);
+                links[last as usize].store(unpack(cur).0, sites::ord(sites::CHAIN_STORE_TAIL));
                 self.state = PushChainState::Cas { cur };
                 Step::Pending
             }
@@ -344,8 +345,8 @@ impl<'a> PushChain<'a> {
                 match head.head.compare_exchange_weak(
                     cur,
                     pack(self.idxs[0], TaggedHead::<TAG>::bump(tag)),
-                    Ordering::AcqRel,
-                    Ordering::Acquire,
+                    sites::ord(sites::CHAIN_CAS_OK),
+                    sites::ord(sites::CHAIN_CAS_FAIL),
                 ) {
                     Ok(_) => Step::Done(()),
                     Err(actual) => {
@@ -407,7 +408,7 @@ impl Detach {
     ) -> Step<u32> {
         match self.state {
             DetachState::LoadHead => {
-                let cur = head.head.load(Ordering::Acquire);
+                let cur = head.head.load(sites::ord(sites::DETACH_LOAD_HEAD));
                 let (idx, _) = unpack(cur);
                 if idx == NIL {
                     return Step::Done(0);
@@ -419,7 +420,7 @@ impl Detach {
             DetachState::Walk { cur, n, last } => {
                 // The link may be stale; the CAS below validates the
                 // whole chain (any interleaved op bumps the tag).
-                let tail_next = links[last as usize].load(Ordering::Relaxed);
+                let tail_next = links[last as usize].load(sites::ord(sites::DETACH_WALK_NEXT));
                 if n < self.want && tail_next != NIL && (tail_next as usize) < links.len() {
                     out[n as usize] = tail_next;
                     self.state = DetachState::Walk {
@@ -437,8 +438,8 @@ impl Detach {
                 match head.head.compare_exchange_weak(
                     cur,
                     pack(tail_next, TaggedHead::<TAG>::bump(tag)),
-                    Ordering::AcqRel,
-                    Ordering::Acquire,
+                    sites::ord(sites::DETACH_CAS_OK),
+                    sites::ord(sites::DETACH_CAS_FAIL),
                 ) {
                     Ok(_) => Step::Done(n),
                     Err(actual) => {
@@ -513,7 +514,7 @@ impl Claim {
     pub fn step(&mut self, watermark: &AtomicU32, out: &mut [u32]) -> Step<u32> {
         match self.state {
             ClaimState::FetchAdd => {
-                let w = watermark.fetch_add(self.want, Ordering::Relaxed);
+                let w = watermark.fetch_add(self.want, sites::ord(sites::CLAIM_FETCH_ADD));
                 let avail = self.cap.saturating_sub(w).min(self.want);
                 for (i, slot) in out.iter_mut().take(avail as usize).enumerate() {
                     *slot = w + i as u32;
@@ -529,7 +530,7 @@ impl Claim {
                 }
             }
             ClaimState::Undo { give_back, avail } => {
-                watermark.fetch_sub(give_back, Ordering::Relaxed);
+                watermark.fetch_sub(give_back, sites::ord(sites::CLAIM_UNDO_SUB));
                 Step::Done(avail)
             }
         }
@@ -552,6 +553,7 @@ impl Claim {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sync::Ordering;
 
     fn links(n: usize) -> Vec<AtomicU32> {
         (0..n).map(|_| AtomicU32::new(NIL)).collect()

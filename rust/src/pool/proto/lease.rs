@@ -15,10 +15,10 @@
 //! Entirely lock-free and allocation-free: safe to run inside a
 //! `#[global_allocator]`.
 
-use crate::sync::{AtomicU32, AtomicU64, Ordering};
+use crate::sync::{AtomicU32, AtomicU64};
 
 use super::head::{Pop, Push, TaggedHead, NIL};
-use super::Step;
+use super::{sites, Step};
 
 /// The lease protocol surface.
 pub trait Lease {
@@ -71,28 +71,31 @@ impl<const N: usize> LeaseRegistry<N> {
 
     /// A shared overflow id (round-robin over the arena).
     pub fn shared_slot(&self) -> u32 {
-        self.overflow_rr.fetch_add(1, Ordering::Relaxed) % N as u32
+        self.overflow_rr.fetch_add(1, sites::ord(sites::LEASE_RR_NEXT)) % N as u32
     }
 
     /// Generation without the Acquire edge (first-bind stamping only:
     /// the acquirer owns the slot, so there is nothing to synchronise).
     pub fn generation_relaxed(&self, slot: usize) -> u32 {
-        self.gen[slot % N].load(Ordering::Relaxed)
+        self.gen[slot % N].load(sites::ord(sites::LEASE_GEN_RELAXED))
     }
 
     /// Highest number of ids ever live at once (clamped to the arena).
     pub fn high_water(&self) -> usize {
-        (self.high_water.load(Ordering::Relaxed) as usize).min(N)
+        (self.high_water.load(sites::ord(sites::LEASE_HW_LOAD)) as usize).min(N)
     }
 
     /// Ids currently parked in the recycle free-list.
     pub fn free_slots(&self) -> usize {
-        self.free_count.load(Ordering::Relaxed) as usize
+        self.free_count.load(sites::ord(sites::LEASE_FREE_LOAD)) as usize
     }
 
-    /// Monotone churn counter: bumps on every release.
+    /// Monotone churn counter: bumps on every release. Relaxed on both
+    /// sides (PR 8 audit downgrade): the epoch gates maintenance
+    /// heuristics only — the generation bump/read pair carries the
+    /// publication edge every consumer revalidates against.
     pub fn epoch(&self) -> u64 {
-        self.epoch.load(Ordering::Acquire)
+        self.epoch.load(sites::ord(sites::LEASE_EPOCH_LOAD))
     }
 }
 
@@ -109,7 +112,7 @@ impl<const N: usize> Lease for LeaseRegistry<N> {
 
     #[inline]
     fn generation(&self, slot: usize) -> u32 {
-        self.gen[slot % N].load(Ordering::Acquire)
+        self.gen[slot % N].load(sites::ord(sites::LEASE_GEN_ACQ))
     }
 }
 
@@ -160,11 +163,11 @@ impl Acquire {
             }
             AcquireState::SubFree { slot } => {
                 let slot = *slot;
-                reg.free_count.fetch_sub(1, Ordering::Relaxed);
+                reg.free_count.fetch_sub(1, sites::ord(sites::LEASE_FREE_SUB));
                 Step::Done((slot, true))
             }
             AcquireState::ClaimFresh => {
-                let fresh = reg.high_water.fetch_add(1, Ordering::Relaxed);
+                let fresh = reg.high_water.fetch_add(1, sites::ord(sites::LEASE_HW_CLAIM));
                 if (fresh as usize) < N {
                     Step::Done((fresh, true))
                 } else {
@@ -173,12 +176,12 @@ impl Acquire {
                 }
             }
             AcquireState::UndoFresh => {
-                reg.high_water.fetch_sub(1, Ordering::Relaxed);
+                reg.high_water.fetch_sub(1, sites::ord(sites::LEASE_HW_UNDO));
                 self.state = AcquireState::Overflow;
                 Step::Pending
             }
             AcquireState::Overflow => {
-                let rr = reg.overflow_rr.fetch_add(1, Ordering::Relaxed);
+                let rr = reg.overflow_rr.fetch_add(1, sites::ord(sites::LEASE_RR_OVERFLOW));
                 Step::Done((rr % N as u32, false))
             }
         }
@@ -232,7 +235,7 @@ impl Release {
         match &mut self.state {
             ReleaseState::BumpGen => {
                 debug_assert!((self.slot as usize) < N);
-                reg.gen[self.slot as usize % N].fetch_add(1, Ordering::Release);
+                reg.gen[self.slot as usize % N].fetch_add(1, sites::ord(sites::LEASE_GEN_BUMP));
                 self.state = ReleaseState::Recycle(Push::new(self.slot));
                 Step::Pending
             }
@@ -243,12 +246,12 @@ impl Release {
                 Step::Pending
             }
             ReleaseState::AddFree => {
-                reg.free_count.fetch_add(1, Ordering::Relaxed);
+                reg.free_count.fetch_add(1, sites::ord(sites::LEASE_FREE_ADD));
                 self.state = ReleaseState::BumpEpoch;
                 Step::Pending
             }
             ReleaseState::BumpEpoch => {
-                reg.epoch.fetch_add(1, Ordering::Release);
+                reg.epoch.fetch_add(1, sites::ord(sites::LEASE_EPOCH_BUMP));
                 Step::Done(())
             }
         }

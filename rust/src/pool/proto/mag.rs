@@ -23,9 +23,9 @@
 //! Every primitive here performs exactly one shared access; the multi-
 //! access bind loop is the [`Bind`] machine.
 
-use crate::sync::{AtomicU64, Ordering};
+use crate::sync::AtomicU64;
 
-use super::Step;
+use super::{sites, Step};
 
 /// Raw word value: no owner, magazines empty.
 const MAG_FREE: u64 = 0;
@@ -92,7 +92,7 @@ impl MagWord {
     /// itself published `Owned(gen)` — there is nothing to acquire.
     #[inline(always)]
     pub fn is_owned_by(&self, gen: u32) -> bool {
-        self.state.load(Ordering::Relaxed) == owned(gen)
+        self.state.load(sites::ord(sites::MAG_OWNED_CHECK)) == owned(gen)
     }
 
     /// Decode the current state (Acquire: pairs with the Release
@@ -100,14 +100,14 @@ impl MagWord {
     /// magazine contents behind it are visible).
     #[inline(always)]
     pub fn peek(&self) -> MagState {
-        MagState::decode(self.state.load(Ordering::Acquire))
+        MagState::decode(self.state.load(sites::ord(sites::MAG_PEEK)))
     }
 
     /// Decode with a relaxed load — stats/diagnostics only, implies no
     /// synchronisation with the magazine contents.
     #[inline(always)]
     pub fn peek_relaxed(&self) -> MagState {
-        MagState::decode(self.state.load(Ordering::Relaxed))
+        MagState::decode(self.state.load(sites::ord(sites::MAG_PEEK_RELAXED)))
     }
 
     /// One CAS: take exclusive access from an observed state. On success
@@ -118,8 +118,8 @@ impl MagWord {
             .compare_exchange(
                 from.encode(),
                 MAG_CLAIMED,
-                Ordering::AcqRel,
-                Ordering::Acquire,
+                sites::ord(sites::MAG_CLAIM_OK),
+                sites::ord(sites::MAG_CLAIM_FAIL),
             )
             .map(|_| ())
             .map_err(MagState::decode)
@@ -129,13 +129,13 @@ impl MagWord {
     /// becomes visible to any future claimer).
     #[inline(always)]
     pub fn publish_owned(&self, gen: u32) {
-        self.state.store(owned(gen), Ordering::Release);
+        self.state.store(owned(gen), sites::ord(sites::MAG_PUBLISH_OWNED));
     }
 
     /// Publish `Free` after a reclaim flush (Release, as above).
     #[inline(always)]
     pub fn publish_free(&self) {
-        self.state.store(MAG_FREE, Ordering::Release);
+        self.state.store(MAG_FREE, sites::ord(sites::MAG_PUBLISH_FREE));
     }
 }
 

@@ -30,6 +30,7 @@ pub mod head;
 pub mod lease;
 pub mod mag;
 pub mod rehome;
+pub mod sites;
 pub mod stash;
 
 pub use head::{Head, TaggedHead, NIL};

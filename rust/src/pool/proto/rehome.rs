@@ -14,9 +14,10 @@
 //! Every method performs exactly one shared access, so production calls
 //! are themselves the model checker's atomic steps.
 
-use crate::sync::{AtomicU64, Ordering};
+use crate::sync::AtomicU64;
 
 use super::head::{pack, unpack};
+use super::sites;
 
 /// Generation stamp meaning "never bound": forces first-use rebind.
 /// A live slot generation can never reach this value in practice
@@ -49,7 +50,7 @@ impl GenEntry {
     /// stamp; a torn-in-time read at worst causes one extra rebind.
     #[inline(always)]
     pub fn resolve(&self, gen: u32, shards: usize) -> Option<usize> {
-        let (target, stamp) = unpack(self.word.load(Ordering::Relaxed));
+        let (target, stamp) = unpack(self.word.load(sites::ord(sites::REHOME_RESOLVE)));
         let target = target as usize;
         if stamp == gen && target < shards {
             Some(target)
@@ -64,7 +65,8 @@ impl GenEntry {
     /// re-routes the same tenant.
     #[inline(always)]
     pub fn rebind(&self, target: usize, gen: u32) {
-        self.word.store(pack(target as u32, gen), Ordering::Relaxed);
+        self.word
+            .store(pack(target as u32, gen), sites::ord(sites::REHOME_REBIND));
     }
 
     /// One CAS: move the route `from → to`, conditioned on the stamp.
@@ -77,15 +79,15 @@ impl GenEntry {
             .compare_exchange(
                 pack(from as u32, gen),
                 pack(to as u32, gen),
-                Ordering::AcqRel,
-                Ordering::Acquire,
+                sites::ord(sites::REHOME_SWING_OK),
+                sites::ord(sites::REHOME_SWING_FAIL),
             )
             .is_ok()
     }
 
     /// Snapshot `(target, stamp)` for tests and diagnostics.
     pub fn peek(&self) -> (u32, u32) {
-        unpack(self.word.load(Ordering::Relaxed))
+        unpack(self.word.load(sites::ord(sites::REHOME_PEEK)))
     }
 }
 

@@ -1,0 +1,332 @@
+//! The atomic-site registry: every memory-ordering annotation in the
+//! `pool/proto` machines, in one auditable table.
+//!
+//! The protocol files never write an ordering literal themselves — each
+//! call site names a [`SiteId`] constant and fetches its ordering via
+//! [`ord`]. That buys three things:
+//!
+//! * **Auditability**: the weak-memory mutation audit
+//!   (`tests/ordering_audit.rs`) can weaken any single site one step via
+//!   [`set_override`] and re-run the TSO model suite, without a separate
+//!   mutated source tree. A hit census ([`take_hits`]) records which
+//!   sites each scenario actually exercises.
+//! * **Greppability**: the table below is the *only* place in
+//!   `pool/proto` with ordering literals outside test code, and it holds
+//!   exactly one per registered site — so `grep` of the literal prefix
+//!   over the protocol sources must equal [`SITES`]`.len()`, a parity
+//!   meta-test that stops new sites from dodging the audit.
+//! * **Zero cost in normal builds**: without `--cfg pallas_model`,
+//!   [`ord`] is an `#[inline(always)]` index into a const table — the
+//!   compiler folds it to the same immediate the literal produced.
+//!
+//! Naming scheme: `MACHINE_STEP` (e.g. `POP_CAS_OK` is the success
+//! ordering of the Treiber pop's head CAS). CAS sites register success
+//! and failure orderings separately — they weaken independently.
+
+use crate::sync::audit::AccessKind;
+use crate::sync::Ordering;
+
+#[cfg(pallas_model)]
+use std::cell::Cell;
+
+/// Index into [`SITES`]. The `u16` doubles as the hit-census bit index,
+/// which caps the registry at 64 sites (asserted in tests).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct SiteId(pub u16);
+
+/// One registered atomic access.
+pub struct Site {
+    /// Stable snake_case name (JSON reports, CI assertions).
+    pub name: &'static str,
+    /// Access kind — decides the legal ordering ladder and what the TSO
+    /// model can observe (see [`crate::sync::audit`]).
+    pub kind: AccessKind,
+    /// The ordering production code runs with.
+    pub declared: Ordering,
+}
+
+// --- head.rs: Treiber tagged-head machines ---------------------------
+pub const HEAD_TAG_LOAD: SiteId = SiteId(0);
+pub const HEAD_TOP_LOAD: SiteId = SiteId(1);
+pub const POP_LOAD_HEAD: SiteId = SiteId(2);
+pub const POP_READ_NEXT: SiteId = SiteId(3);
+pub const POP_CAS_OK: SiteId = SiteId(4);
+pub const POP_CAS_FAIL: SiteId = SiteId(5);
+pub const PUSH_LOAD_HEAD: SiteId = SiteId(6);
+pub const PUSH_STORE_NEXT: SiteId = SiteId(7);
+pub const PUSH_CAS_OK: SiteId = SiteId(8);
+pub const PUSH_CAS_FAIL: SiteId = SiteId(9);
+pub const CHAIN_LINK_STORE: SiteId = SiteId(10);
+pub const CHAIN_LOAD_HEAD: SiteId = SiteId(11);
+pub const CHAIN_STORE_TAIL: SiteId = SiteId(12);
+pub const CHAIN_CAS_OK: SiteId = SiteId(13);
+pub const CHAIN_CAS_FAIL: SiteId = SiteId(14);
+pub const DETACH_LOAD_HEAD: SiteId = SiteId(15);
+pub const DETACH_WALK_NEXT: SiteId = SiteId(16);
+pub const DETACH_CAS_OK: SiteId = SiteId(17);
+pub const DETACH_CAS_FAIL: SiteId = SiteId(18);
+pub const CLAIM_FETCH_ADD: SiteId = SiteId(19);
+pub const CLAIM_UNDO_SUB: SiteId = SiteId(20);
+// --- stash.rs: counted steal-stash ----------------------------------
+pub const STASH_COUNT_LOAD: SiteId = SiteId(21);
+pub const STASH_COUNT_SUB: SiteId = SiteId(22);
+pub const STASH_COUNT_ADD: SiteId = SiteId(23);
+// --- lease.rs: home-slot lease registry ------------------------------
+pub const LEASE_RR_NEXT: SiteId = SiteId(24);
+pub const LEASE_GEN_RELAXED: SiteId = SiteId(25);
+pub const LEASE_HW_LOAD: SiteId = SiteId(26);
+pub const LEASE_FREE_LOAD: SiteId = SiteId(27);
+pub const LEASE_EPOCH_LOAD: SiteId = SiteId(28);
+pub const LEASE_GEN_ACQ: SiteId = SiteId(29);
+pub const LEASE_FREE_SUB: SiteId = SiteId(30);
+pub const LEASE_HW_CLAIM: SiteId = SiteId(31);
+pub const LEASE_HW_UNDO: SiteId = SiteId(32);
+pub const LEASE_RR_OVERFLOW: SiteId = SiteId(33);
+pub const LEASE_GEN_BUMP: SiteId = SiteId(34);
+pub const LEASE_FREE_ADD: SiteId = SiteId(35);
+pub const LEASE_EPOCH_BUMP: SiteId = SiteId(36);
+// --- rehome.rs: generation-stamped routing map -----------------------
+pub const REHOME_RESOLVE: SiteId = SiteId(37);
+pub const REHOME_REBIND: SiteId = SiteId(38);
+pub const REHOME_SWING_OK: SiteId = SiteId(39);
+pub const REHOME_SWING_FAIL: SiteId = SiteId(40);
+pub const REHOME_PEEK: SiteId = SiteId(41);
+// --- mag.rs: magazine slot-ownership word ----------------------------
+pub const MAG_OWNED_CHECK: SiteId = SiteId(42);
+pub const MAG_PEEK: SiteId = SiteId(43);
+pub const MAG_PEEK_RELAXED: SiteId = SiteId(44);
+pub const MAG_CLAIM_OK: SiteId = SiteId(45);
+pub const MAG_CLAIM_FAIL: SiteId = SiteId(46);
+pub const MAG_PUBLISH_OWNED: SiteId = SiteId(47);
+pub const MAG_PUBLISH_FREE: SiteId = SiteId(48);
+
+/// The registry. Row order must match the constants above (asserted by
+/// `registry_is_consistent`); exactly one ordering literal per row (the
+/// grep-parity meta-test counts them).
+pub const SITES: &[Site] = &[
+    Site { name: "head_tag_load", kind: AccessKind::Load, declared: Ordering::Relaxed },
+    Site { name: "head_top_load", kind: AccessKind::Load, declared: Ordering::Relaxed },
+    Site { name: "pop_load_head", kind: AccessKind::Load, declared: Ordering::Acquire },
+    Site { name: "pop_read_next", kind: AccessKind::Load, declared: Ordering::Relaxed },
+    Site { name: "pop_cas_ok", kind: AccessKind::RmwSuccess, declared: Ordering::AcqRel },
+    Site { name: "pop_cas_fail", kind: AccessKind::RmwFailure, declared: Ordering::Acquire },
+    Site { name: "push_load_head", kind: AccessKind::Load, declared: Ordering::Acquire },
+    Site { name: "push_store_next", kind: AccessKind::Store, declared: Ordering::Relaxed },
+    Site { name: "push_cas_ok", kind: AccessKind::RmwSuccess, declared: Ordering::AcqRel },
+    Site { name: "push_cas_fail", kind: AccessKind::RmwFailure, declared: Ordering::Acquire },
+    Site { name: "chain_link_store", kind: AccessKind::Store, declared: Ordering::Relaxed },
+    Site { name: "chain_load_head", kind: AccessKind::Load, declared: Ordering::Acquire },
+    Site { name: "chain_store_tail", kind: AccessKind::Store, declared: Ordering::Relaxed },
+    Site { name: "chain_cas_ok", kind: AccessKind::RmwSuccess, declared: Ordering::AcqRel },
+    Site { name: "chain_cas_fail", kind: AccessKind::RmwFailure, declared: Ordering::Acquire },
+    Site { name: "detach_load_head", kind: AccessKind::Load, declared: Ordering::Acquire },
+    Site { name: "detach_walk_next", kind: AccessKind::Load, declared: Ordering::Relaxed },
+    Site { name: "detach_cas_ok", kind: AccessKind::RmwSuccess, declared: Ordering::AcqRel },
+    Site { name: "detach_cas_fail", kind: AccessKind::RmwFailure, declared: Ordering::Acquire },
+    Site { name: "claim_fetch_add", kind: AccessKind::Rmw, declared: Ordering::Relaxed },
+    Site { name: "claim_undo_sub", kind: AccessKind::Rmw, declared: Ordering::Relaxed },
+    Site { name: "stash_count_load", kind: AccessKind::Load, declared: Ordering::Relaxed },
+    Site { name: "stash_count_sub", kind: AccessKind::Rmw, declared: Ordering::Relaxed },
+    Site { name: "stash_count_add", kind: AccessKind::Rmw, declared: Ordering::Relaxed },
+    Site { name: "lease_rr_next", kind: AccessKind::Rmw, declared: Ordering::Relaxed },
+    Site { name: "lease_gen_relaxed", kind: AccessKind::Load, declared: Ordering::Relaxed },
+    Site { name: "lease_hw_load", kind: AccessKind::Load, declared: Ordering::Relaxed },
+    Site { name: "lease_free_load", kind: AccessKind::Load, declared: Ordering::Relaxed },
+    // Audit-informed downgrade (PR 8): the epoch is a monotone churn
+    // gauge; the generation bump/read pair carries the real publication
+    // edge, so the epoch pair runs relaxed. See EXPERIMENTS.md
+    // §WeakMemory.
+    Site { name: "lease_epoch_load", kind: AccessKind::Load, declared: Ordering::Relaxed },
+    Site { name: "lease_gen_acq", kind: AccessKind::Load, declared: Ordering::Acquire },
+    Site { name: "lease_free_sub", kind: AccessKind::Rmw, declared: Ordering::Relaxed },
+    Site { name: "lease_hw_claim", kind: AccessKind::Rmw, declared: Ordering::Relaxed },
+    Site { name: "lease_hw_undo", kind: AccessKind::Rmw, declared: Ordering::Relaxed },
+    Site { name: "lease_rr_overflow", kind: AccessKind::Rmw, declared: Ordering::Relaxed },
+    Site { name: "lease_gen_bump", kind: AccessKind::Rmw, declared: Ordering::Release },
+    Site { name: "lease_free_add", kind: AccessKind::Rmw, declared: Ordering::Relaxed },
+    // Audit-informed downgrade (PR 8) — see lease_epoch_load above.
+    Site { name: "lease_epoch_bump", kind: AccessKind::Rmw, declared: Ordering::Relaxed },
+    Site { name: "rehome_resolve", kind: AccessKind::Load, declared: Ordering::Relaxed },
+    Site { name: "rehome_rebind", kind: AccessKind::Store, declared: Ordering::Relaxed },
+    Site { name: "rehome_swing_ok", kind: AccessKind::RmwSuccess, declared: Ordering::AcqRel },
+    Site { name: "rehome_swing_fail", kind: AccessKind::RmwFailure, declared: Ordering::Acquire },
+    Site { name: "rehome_peek", kind: AccessKind::Load, declared: Ordering::Relaxed },
+    Site { name: "mag_owned_check", kind: AccessKind::Load, declared: Ordering::Relaxed },
+    Site { name: "mag_peek", kind: AccessKind::Load, declared: Ordering::Acquire },
+    Site { name: "mag_peek_relaxed", kind: AccessKind::Load, declared: Ordering::Relaxed },
+    Site { name: "mag_claim_ok", kind: AccessKind::RmwSuccess, declared: Ordering::AcqRel },
+    Site { name: "mag_claim_fail", kind: AccessKind::RmwFailure, declared: Ordering::Acquire },
+    Site { name: "mag_publish_owned", kind: AccessKind::Store, declared: Ordering::Release },
+    Site { name: "mag_publish_free", kind: AccessKind::Store, declared: Ordering::Release },
+];
+
+/// Fetch a site's effective ordering. Normal builds: a const-table read
+/// the optimiser folds to the declared immediate.
+#[cfg(not(pallas_model))]
+#[inline(always)]
+pub fn ord(site: SiteId) -> Ordering {
+    SITES[site.0 as usize].declared
+}
+
+#[cfg(pallas_model)]
+thread_local! {
+    /// At most one site overridden at a time (the audit mutates sites
+    /// one by one).
+    static OVERRIDE: Cell<Option<(u16, Ordering)>> = const { Cell::new(None) };
+    /// Bitmask of sites fetched since the last [`take_hits`].
+    static HITS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Fetch a site's effective ordering. Model builds: records the site in
+/// the hit census and honours a single-site override.
+#[cfg(pallas_model)]
+#[inline]
+pub fn ord(site: SiteId) -> Ordering {
+    HITS.with(|h| h.set(h.get() | 1u64 << site.0));
+    match OVERRIDE.with(Cell::get) {
+        Some((id, o)) if id == site.0 => o,
+        _ => SITES[site.0 as usize].declared,
+    }
+}
+
+/// Override one site's ordering (replacing any previous override) until
+/// [`clear_override`]. Audit harness only.
+#[cfg(pallas_model)]
+pub fn set_override(site: SiteId, to: Ordering) {
+    OVERRIDE.with(|o| o.set(Some((site.0, to))));
+}
+
+/// Drop the active override, restoring declared orderings everywhere.
+#[cfg(pallas_model)]
+pub fn clear_override() {
+    OVERRIDE.with(|o| o.set(None));
+}
+
+/// Return and reset the hit census: bit `i` set ⇔ [`ord`] was called
+/// for `SiteId(i)` on this OS thread since the last take.
+#[cfg(pallas_model)]
+pub fn take_hits() -> u64 {
+    HITS.with(|h| h.replace(0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Constant order, table order, and names must agree — everything
+    /// else (the audit, CI jq floors) keys off this alignment.
+    #[test]
+    fn registry_is_consistent() {
+        const EXPECT: &[(SiteId, &str)] = &[
+            (HEAD_TAG_LOAD, "head_tag_load"),
+            (HEAD_TOP_LOAD, "head_top_load"),
+            (POP_LOAD_HEAD, "pop_load_head"),
+            (POP_READ_NEXT, "pop_read_next"),
+            (POP_CAS_OK, "pop_cas_ok"),
+            (POP_CAS_FAIL, "pop_cas_fail"),
+            (PUSH_LOAD_HEAD, "push_load_head"),
+            (PUSH_STORE_NEXT, "push_store_next"),
+            (PUSH_CAS_OK, "push_cas_ok"),
+            (PUSH_CAS_FAIL, "push_cas_fail"),
+            (CHAIN_LINK_STORE, "chain_link_store"),
+            (CHAIN_LOAD_HEAD, "chain_load_head"),
+            (CHAIN_STORE_TAIL, "chain_store_tail"),
+            (CHAIN_CAS_OK, "chain_cas_ok"),
+            (CHAIN_CAS_FAIL, "chain_cas_fail"),
+            (DETACH_LOAD_HEAD, "detach_load_head"),
+            (DETACH_WALK_NEXT, "detach_walk_next"),
+            (DETACH_CAS_OK, "detach_cas_ok"),
+            (DETACH_CAS_FAIL, "detach_cas_fail"),
+            (CLAIM_FETCH_ADD, "claim_fetch_add"),
+            (CLAIM_UNDO_SUB, "claim_undo_sub"),
+            (STASH_COUNT_LOAD, "stash_count_load"),
+            (STASH_COUNT_SUB, "stash_count_sub"),
+            (STASH_COUNT_ADD, "stash_count_add"),
+            (LEASE_RR_NEXT, "lease_rr_next"),
+            (LEASE_GEN_RELAXED, "lease_gen_relaxed"),
+            (LEASE_HW_LOAD, "lease_hw_load"),
+            (LEASE_FREE_LOAD, "lease_free_load"),
+            (LEASE_EPOCH_LOAD, "lease_epoch_load"),
+            (LEASE_GEN_ACQ, "lease_gen_acq"),
+            (LEASE_FREE_SUB, "lease_free_sub"),
+            (LEASE_HW_CLAIM, "lease_hw_claim"),
+            (LEASE_HW_UNDO, "lease_hw_undo"),
+            (LEASE_RR_OVERFLOW, "lease_rr_overflow"),
+            (LEASE_GEN_BUMP, "lease_gen_bump"),
+            (LEASE_FREE_ADD, "lease_free_add"),
+            (LEASE_EPOCH_BUMP, "lease_epoch_bump"),
+            (REHOME_RESOLVE, "rehome_resolve"),
+            (REHOME_REBIND, "rehome_rebind"),
+            (REHOME_SWING_OK, "rehome_swing_ok"),
+            (REHOME_SWING_FAIL, "rehome_swing_fail"),
+            (REHOME_PEEK, "rehome_peek"),
+            (MAG_OWNED_CHECK, "mag_owned_check"),
+            (MAG_PEEK, "mag_peek"),
+            (MAG_PEEK_RELAXED, "mag_peek_relaxed"),
+            (MAG_CLAIM_OK, "mag_claim_ok"),
+            (MAG_CLAIM_FAIL, "mag_claim_fail"),
+            (MAG_PUBLISH_OWNED, "mag_publish_owned"),
+            (MAG_PUBLISH_FREE, "mag_publish_free"),
+        ];
+        assert_eq!(SITES.len(), EXPECT.len());
+        assert!(SITES.len() <= 64, "hit census is a u64 bitmask");
+        for (i, (id, name)) in EXPECT.iter().enumerate() {
+            assert_eq!(id.0 as usize, i, "constant {name} out of order");
+            assert_eq!(SITES[i].name, *name, "table row {i} misnamed");
+        }
+        let mut names: Vec<&str> = SITES.iter().map(|s| s.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), SITES.len(), "site names must be unique");
+    }
+
+    /// Declared orderings must be legal for their access kind (std
+    /// panics at runtime otherwise — catch it in the table instead).
+    #[test]
+    fn declared_orderings_are_legal() {
+        for s in SITES {
+            match s.kind {
+                AccessKind::Load | AccessKind::RmwFailure => assert!(
+                    !matches!(s.declared, Ordering::Release | Ordering::AcqRel),
+                    "{}: illegal load ordering",
+                    s.name
+                ),
+                AccessKind::Store => assert!(
+                    !matches!(s.declared, Ordering::Acquire | Ordering::AcqRel),
+                    "{}: illegal store ordering",
+                    s.name
+                ),
+                AccessKind::Rmw | AccessKind::RmwSuccess => {}
+            }
+        }
+    }
+
+    /// Normal builds: `ord` returns exactly the table entry.
+    #[test]
+    fn ord_returns_declared() {
+        #[cfg(pallas_model)]
+        clear_override();
+        assert_eq!(ord(POP_CAS_OK), Ordering::AcqRel);
+        assert_eq!(ord(MAG_PUBLISH_OWNED), Ordering::Release);
+        assert_eq!(ord(LEASE_EPOCH_BUMP), Ordering::Relaxed);
+    }
+
+    /// Model builds: overrides apply to exactly the chosen site and the
+    /// census records fetches.
+    #[cfg(pallas_model)]
+    #[test]
+    fn override_and_census() {
+        clear_override();
+        let _ = take_hits();
+        set_override(MAG_PUBLISH_OWNED, Ordering::Relaxed);
+        assert_eq!(ord(MAG_PUBLISH_OWNED), Ordering::Relaxed);
+        assert_eq!(ord(MAG_PUBLISH_FREE), Ordering::Release, "other sites untouched");
+        clear_override();
+        assert_eq!(ord(MAG_PUBLISH_OWNED), Ordering::Release);
+        let hits = take_hits();
+        assert_ne!(hits & (1 << MAG_PUBLISH_OWNED.0), 0);
+        assert_ne!(hits & (1 << MAG_PUBLISH_FREE.0), 0);
+        assert_eq!(hits & (1 << POP_CAS_OK.0), 0, "unfetched site must not appear");
+        assert_eq!(take_hits(), 0, "take resets the census");
+    }
+}

@@ -10,10 +10,10 @@
 //! two agree exactly, which is the conservation law the model checker
 //! proves in `tests/model_check.rs`.
 
-use crate::sync::{AtomicU32, Ordering};
+use crate::sync::AtomicU32;
 
 use super::head::{Pop, PushChain, TaggedHead};
-use super::Step;
+use super::{sites, Step};
 
 /// The stash protocol surface.
 pub trait Stash {
@@ -66,7 +66,7 @@ impl Stash for CountedStash {
 
     #[inline]
     fn count(&self) -> u32 {
-        self.count.load(Ordering::Relaxed)
+        self.count.load(sites::ord(sites::STASH_COUNT_LOAD))
     }
 }
 
@@ -111,7 +111,7 @@ impl StashPop {
             },
             StashPopState::SubCount { grid } => {
                 let grid = *grid;
-                stash.count.fetch_sub(1, Ordering::Relaxed);
+                stash.count.fetch_sub(1, sites::ord(sites::STASH_COUNT_SUB));
                 Step::Done(Some(grid))
             }
         }
@@ -163,7 +163,7 @@ impl<'a> StashPush<'a> {
                 Step::Pending
             }
             StashPushState::AddCount => {
-                stash.count.fetch_add(self.len, Ordering::Relaxed);
+                stash.count.fetch_add(self.len, sites::ord(sites::STASH_COUNT_ADD));
                 Step::Done(())
             }
         }

@@ -126,7 +126,9 @@ impl RawPool {
     pub fn addr_from_index(&self, i: u32) -> NonNull<u8> {
         debug_assert!(i < self.num_blocks, "index {i} out of range");
         // SAFETY: i < num_blocks keeps the pointer inside the region.
-        unsafe { NonNull::new_unchecked(self.mem_start.as_ptr().add(i as usize * self.block_size)) }
+        let p = unsafe { self.mem_start.as_ptr().add(i as usize * self.block_size) };
+        // SAFETY: in-bounds pointer into a live allocation, never null.
+        unsafe { NonNull::new_unchecked(p) }
     }
 
     /// Paper's `IndexFromAddr`: address → block index.
@@ -517,11 +519,10 @@ mod tests {
         let p = &mut t.pool;
         let ptrs: Vec<_> = (0..8).map(|_| p.allocate().unwrap()).collect();
         // Free 3, 5, 1 → reallocation order must be 1, 5, 3 (LIFO).
-        // SAFETY: each pointer came from this pool's `allocate` and is freed exactly once.
-        unsafe {
-            p.deallocate(ptrs[3]);
-            p.deallocate(ptrs[5]);
-            p.deallocate(ptrs[1]);
+        for i in [3, 5, 1] {
+            // SAFETY: each pointer came from this pool's `allocate` and is
+            // freed exactly once.
+            unsafe { p.deallocate(ptrs[i]) };
         }
         for expect in [1u32, 5, 3] {
             let q = p.allocate().unwrap();
@@ -599,8 +600,10 @@ mod tests {
         let a = p.allocate().unwrap();
         assert!(p.validate_addr(a));
         // Off-boundary pointer inside region: invalid.
-        // SAFETY: one byte past `a`'s base is still inside the region, hence non-null.
-        let off = unsafe { NonNull::new_unchecked(a.as_ptr().add(1)) };
+        // SAFETY: one byte past `a`'s base is still inside the region.
+        let off_raw = unsafe { a.as_ptr().add(1) };
+        // SAFETY: in-bounds pointer into a live buffer, never null.
+        let off = unsafe { NonNull::new_unchecked(off_raw) };
         assert!(!p.validate_addr(off));
         // Outside region: invalid.
         let mut other = [0u8; 16];
@@ -726,10 +729,10 @@ mod tests {
         let mut t = mk(8, 8);
         let p = &mut t.pool;
         let ptrs: Vec<_> = (0..6).map(|_| p.allocate().unwrap()).collect();
-        // SAFETY: each pointer came from this pool's `allocate` and is freed exactly once.
-        unsafe {
-            p.deallocate(ptrs[0]);
-            p.deallocate(ptrs[4]);
+        for i in [0, 4] {
+            // SAFETY: each pointer came from this pool's `allocate` and is
+            // freed exactly once.
+            unsafe { p.deallocate(ptrs[i]) };
         }
         let chain = p.free_list_indices();
         assert_eq!(chain.len() as u32 + p.uninitialized_free(), p.num_free());

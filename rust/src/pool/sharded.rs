@@ -472,8 +472,9 @@ impl ShardedPool {
             // SAFETY: shard i's window [i*shard_bytes, i*shard_bytes +
             // count*bs) lies inside the region we just allocated; windows
             // are disjoint and each shard gets exclusive use of its own.
-            let shard_base =
-                unsafe { NonNull::new_unchecked(region.as_ptr().add(i * shard_bytes)) };
+            let shard_raw = unsafe { region.as_ptr().add(i * shard_bytes) };
+            // SAFETY: in-bounds pointer into a live allocation, never null.
+            let shard_base = unsafe { NonNull::new_unchecked(shard_raw) };
             // SAFETY: `shard_base` addresses `count` blocks of `bs` bytes that
             // this pool owns and keeps alive for the shard's whole lifetime.
             pools.push(CachePadded::new(unsafe {
@@ -527,11 +528,9 @@ impl ShardedPool {
     pub(crate) fn grid_to_ptr(&self, grid: u32) -> NonNull<u8> {
         // SAFETY: grid indices come from shard geometry; the offset lies
         // inside the owned region.
-        unsafe {
-            NonNull::new_unchecked(
-                self.mem_start.as_ptr().add(grid as usize * self.block_size),
-            )
-        }
+        let p = unsafe { self.mem_start.as_ptr().add(grid as usize * self.block_size) };
+        // SAFETY: in-bounds pointer into a live allocation, never null.
+        unsafe { NonNull::new_unchecked(p) }
     }
 
     /// Grid index for a block pointer of this pool — the §Perf exact
@@ -1095,8 +1094,10 @@ mod tests {
         let a = p.allocate().unwrap();
         assert!(p.contains(a));
         // Off-grid pointer inside the region.
-        // SAFETY: `add(1)` stays inside block 0 of the region, hence non-null.
-        let off = unsafe { NonNull::new_unchecked(a.as_ptr().add(1)) };
+        // SAFETY: `add(1)` stays inside block 0 of the region.
+        let off_raw = unsafe { a.as_ptr().add(1) };
+        // SAFETY: in-bounds pointer into a live allocation, never null.
+        let off = unsafe { NonNull::new_unchecked(off_raw) };
         assert!(!p.contains(off));
         // Padding slot of shard 2 (local index 1 does not exist there).
         // SAFETY: the padding-slot address lies inside the owned region, so it
@@ -1424,19 +1425,17 @@ mod tests {
                         } else {
                             let i = rng.gen_usize(0, held.len());
                             let addr = held.swap_remove(i);
-                            // SAFETY: `addr` was recorded from a successful `allocate` and removed
-                            // from `held`, so each block is freed exactly once.
-                            unsafe {
-                                pool.deallocate(NonNull::new_unchecked(addr as *mut u8))
-                            };
+                            // SAFETY: `addr` came from `allocate`, so non-null.
+                            let p = unsafe { NonNull::new_unchecked(addr as *mut u8) };
+                            // SAFETY: removed from `held`: freed exactly once.
+                            unsafe { pool.deallocate(p) };
                         }
                     }
                     for addr in held {
-                        // SAFETY: the remaining addresses each came from `allocate` and were
-                        // never freed in the loop above.
-                        unsafe {
-                            pool.deallocate(NonNull::new_unchecked(addr as *mut u8))
-                        };
+                        // SAFETY: `addr` came from `allocate`, so non-null.
+                        let p = unsafe { NonNull::new_unchecked(addr as *mut u8) };
+                        // SAFETY: never freed in the loop above.
+                        unsafe { pool.deallocate(p) };
                     }
                 });
             }

@@ -1,0 +1,230 @@
+//! Ordering-mutation vocabulary for the weak-memory audit.
+//!
+//! The audit harness (`tests/ordering_audit.rs`) takes every registered
+//! atomic site in [`crate::pool::proto::sites`], rewrites its declared
+//! `Ordering` one step weaker, and re-runs the TSO protocol suite. This
+//! module owns the pure vocabulary for that: what "one step weaker"
+//! (and, for the soundness meta-test, "one step stronger") means per
+//! access kind, and which mutations the TSO store-buffer model can even
+//! observe.
+//!
+//! The weakening ladder follows the ISSUE/C11 strength order:
+//!
+//! ```text
+//! loads:          SeqCst → Acquire → Relaxed
+//! stores:         SeqCst → Release → Relaxed
+//! RMW (success):  SeqCst → AcqRel → {Acquire | Release} → Relaxed
+//! CAS failure:    SeqCst → Acquire → Relaxed
+//! ```
+//!
+//! Observability is decided by the model's semantics (see
+//! [`super::model`]): only the *store side* of an ordering has any
+//! effect under TSO-with-store-buffers — stores change buffering
+//! behaviour (`SeqCst` drains, `Release` buffers FIFO-only, `Relaxed`
+//! buffers and may flush out of order), and RMWs drain the whole buffer
+//! iff their success ordering is Release-bearing. Load orderings and CAS
+//! failure orderings never change model behaviour (loads don't reorder
+//! in TSO), so mutating them is classified out-of-scope: the audit must
+//! report them as unverifiable rather than "proven relaxable".
+
+use core::sync::atomic::Ordering;
+
+/// What kind of atomic access a registered site performs. Determines
+/// both the legal ordering ladder and model observability.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum AccessKind {
+    /// A pure atomic load.
+    Load,
+    /// A pure atomic store.
+    Store,
+    /// A read-modify-write (`fetch_*`, `swap`) ordering.
+    Rmw,
+    /// The success ordering of a `compare_exchange`.
+    RmwSuccess,
+    /// The failure ordering of a `compare_exchange` (a load ordering).
+    RmwFailure,
+}
+
+impl AccessKind {
+    /// Stable lowercase name for JSON reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            AccessKind::Load => "load",
+            AccessKind::Store => "store",
+            AccessKind::Rmw => "rmw",
+            AccessKind::RmwSuccess => "rmw_success",
+            AccessKind::RmwFailure => "rmw_failure",
+        }
+    }
+}
+
+/// Stable lowercase name of an ordering for JSON reports.
+pub fn ordering_name(o: Ordering) -> &'static str {
+    match o {
+        Ordering::Relaxed => "relaxed",
+        Ordering::Acquire => "acquire",
+        Ordering::Release => "release",
+        Ordering::AcqRel => "acqrel",
+        Ordering::SeqCst => "seqcst",
+        _ => "unknown",
+    }
+}
+
+/// All one-step weakenings of `declared` legal for `kind` (empty when
+/// already `Relaxed`). `AcqRel` weakens two ways — dropping the acquire
+/// half or the release half — so this returns a slice, not an option.
+pub fn weaken(kind: AccessKind, declared: Ordering) -> &'static [Ordering] {
+    use Ordering::{AcqRel, Acquire, Relaxed, Release, SeqCst};
+    match kind {
+        AccessKind::Load | AccessKind::RmwFailure => match declared {
+            SeqCst => &[Acquire],
+            Acquire => &[Relaxed],
+            _ => &[],
+        },
+        AccessKind::Store => match declared {
+            SeqCst => &[Release],
+            Release => &[Relaxed],
+            _ => &[],
+        },
+        AccessKind::Rmw | AccessKind::RmwSuccess => match declared {
+            SeqCst => &[AcqRel],
+            AcqRel => &[Acquire, Release],
+            Acquire | Release => &[Relaxed],
+            _ => &[],
+        },
+    }
+}
+
+/// All one-step strengthenings of `declared` legal for `kind` (the
+/// soundness meta-test: none of these may ever be reported killed).
+pub fn strengthen(kind: AccessKind, declared: Ordering) -> &'static [Ordering] {
+    use Ordering::{AcqRel, Acquire, Relaxed, Release, SeqCst};
+    match kind {
+        AccessKind::Load | AccessKind::RmwFailure => match declared {
+            Relaxed => &[Acquire],
+            Acquire => &[SeqCst],
+            _ => &[],
+        },
+        AccessKind::Store => match declared {
+            Relaxed => &[Release],
+            Release => &[SeqCst],
+            _ => &[],
+        },
+        AccessKind::Rmw | AccessKind::RmwSuccess => match declared {
+            Relaxed => &[Acquire, Release],
+            Acquire | Release => &[AcqRel],
+            AcqRel => &[SeqCst],
+            _ => &[],
+        },
+    }
+}
+
+/// Does the operation drain the stepping thread's whole store buffer
+/// under the model? (The store side of an ordering; loads never do.)
+fn release_bearing(o: Ordering) -> bool {
+    matches!(o, Ordering::Release | Ordering::AcqRel | Ordering::SeqCst)
+}
+
+/// Can the TSO store-buffer model distinguish `from` vs `to` at a site
+/// of this kind? Mutations where this is `false` are out-of-scope for
+/// the audit — surviving says nothing about the ordering.
+pub fn model_observable(kind: AccessKind, from: Ordering, to: Ordering) -> bool {
+    match kind {
+        // Loads never reorder under TSO: load orderings are model-blind.
+        AccessKind::Load | AccessKind::RmwFailure => false,
+        // SeqCst drains + writes through; Release buffers FIFO-only;
+        // Relaxed buffers and may flush out of order: all three differ.
+        AccessKind::Store => from != to,
+        // RMWs execute on memory either way; the ordering only decides
+        // whether the whole buffer drains first.
+        AccessKind::Rmw | AccessKind::RmwSuccess => {
+            release_bearing(from) != release_bearing(to)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use Ordering::{AcqRel, Acquire, Relaxed, Release, SeqCst};
+
+    const KINDS: [AccessKind; 5] = [
+        AccessKind::Load,
+        AccessKind::Store,
+        AccessKind::Rmw,
+        AccessKind::RmwSuccess,
+        AccessKind::RmwFailure,
+    ];
+    const ORDERS: [Ordering; 5] = [Relaxed, Acquire, Release, AcqRel, SeqCst];
+
+    /// Legality: weakening/strengthening never produces an ordering the
+    /// std atomics would reject for that access kind.
+    #[test]
+    fn ladders_stay_legal_per_kind() {
+        for kind in KINDS {
+            for from in ORDERS {
+                for &to in weaken(kind, from).iter().chain(strengthen(kind, from)) {
+                    match kind {
+                        AccessKind::Load | AccessKind::RmwFailure => {
+                            assert!(!matches!(to, Release | AcqRel), "{kind:?} {from:?}→{to:?}")
+                        }
+                        AccessKind::Store => {
+                            assert!(!matches!(to, Acquire | AcqRel), "{kind:?} {from:?}→{to:?}")
+                        }
+                        AccessKind::Rmw | AccessKind::RmwSuccess => {}
+                    }
+                }
+            }
+        }
+    }
+
+    /// Weaken and strengthen are converses: every one-step weakening is
+    /// undone by some one-step strengthening, and vice versa.
+    #[test]
+    fn weaken_strengthen_are_converse() {
+        for kind in KINDS {
+            for from in ORDERS {
+                for &to in weaken(kind, from) {
+                    assert!(
+                        strengthen(kind, to).contains(&from),
+                        "{kind:?}: weaken {from:?}→{to:?} has no converse"
+                    );
+                }
+                for &to in strengthen(kind, from) {
+                    assert!(
+                        weaken(kind, to).contains(&from),
+                        "{kind:?}: strengthen {from:?}→{to:?} has no converse"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Relaxed is the weakening fixpoint; SeqCst the strengthening one.
+    #[test]
+    fn ladder_endpoints() {
+        for kind in KINDS {
+            assert!(weaken(kind, Relaxed).is_empty());
+            assert!(strengthen(kind, SeqCst).is_empty());
+        }
+    }
+
+    /// Observability: the model sees store-side changes only.
+    #[test]
+    fn observability_matches_model_semantics() {
+        assert!(model_observable(AccessKind::Store, Release, Relaxed));
+        assert!(model_observable(AccessKind::Store, SeqCst, Release));
+        assert!(model_observable(AccessKind::RmwSuccess, AcqRel, Acquire));
+        assert!(model_observable(AccessKind::Rmw, Release, Relaxed));
+        // Dropping only the release→acquire half keeps drain behaviour.
+        assert!(!model_observable(AccessKind::RmwSuccess, SeqCst, AcqRel));
+        assert!(!model_observable(AccessKind::RmwSuccess, AcqRel, Release));
+        assert!(!model_observable(AccessKind::Rmw, Acquire, Relaxed));
+        for from in ORDERS {
+            for to in ORDERS {
+                assert!(!model_observable(AccessKind::Load, from, to));
+                assert!(!model_observable(AccessKind::RmwFailure, from, to));
+            }
+        }
+    }
+}

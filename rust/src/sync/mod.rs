@@ -26,13 +26,20 @@
 //! to the counting shims so the explorer can *audit* step granularity; the
 //! schedules explored are identical under either cfg.
 //!
-//! Scope (documented honestly): exploration is **sequentially
-//! consistent** (CHESS-style). Steps execute one at a time on one OS
-//! thread, so weak-memory reorderings (`Relaxed` load/store hoisting
-//! etc.) are *not* explored — the suite proves linearizability of the
-//! protocol logic over all bounded thread interleavings, not absence of
-//! memory-ordering bugs. The orderings themselves are reviewed at each
-//! SAFETY comment and exercised by the multi-threaded stress suite.
+//! Scope (documented honestly): the default exploration is
+//! **sequentially consistent** (CHESS-style), and under
+//! [`model::MemoryModel::Tso`] (model builds only) it additionally
+//! explores **store-buffer reorderings**: each virtual thread gets a
+//! bounded FIFO store buffer, non-SeqCst stores become visible to other
+//! threads only at a (schedulable, bounded) flush point, and Relaxed
+//! stores may flush out of FIFO order where Release stores may not —
+//! see the [`model`] module docs for the exact semantics. What remains
+//! out of scope is load reordering (TSO's loads are strong, so
+//! Acquire-vs-Relaxed *load* distinctions are invisible to the model)
+//! and full C11 weak memory; the [`audit`] module's mutation harness
+//! classifies such sites as out-of-scope rather than "proven". The
+//! orderings themselves are additionally reviewed at each SAFETY
+//! comment and exercised by the multi-threaded stress suite.
 
 /// Normal builds: the shim types *are* the std atomics (re-export).
 #[cfg(not(pallas_model))]
@@ -47,6 +54,7 @@ pub use core::sync::atomic::Ordering;
 #[cfg(pallas_model)]
 pub use shim::{fence, AtomicBool, AtomicPtr, AtomicU32, AtomicU64, AtomicUsize};
 
+pub mod audit;
 pub mod model;
 
 /// Thread shim. In normal builds this is `std::thread`. Model executions

@@ -12,10 +12,11 @@
 //! The [`Explorer`] enumerates thread schedules by stateless
 //! re-execution DFS (CHESS-style):
 //!
-//! * A schedule prefix is a list of thread ids. Executing a prefix
-//!   replays those choices, then extends with a deterministic default
-//!   policy (keep running the current thread while it is runnable,
-//!   otherwise the first runnable thread in seed-permuted order).
+//! * A schedule prefix is a list of actions (thread ids, plus flush
+//!   actions under [`MemoryModel::Tso`]). Executing a prefix replays
+//!   those choices, then extends with a deterministic default policy
+//!   (keep running the current thread while it is runnable, otherwise
+//!   the first runnable thread in seed-permuted order).
 //! * At every decision point past the replayed prefix, each alternative
 //!   runnable thread spawns a new prefix onto the DFS stack — unless
 //!   taking it would exceed the **preemption bound** (a switch away from
@@ -26,6 +27,44 @@
 //!   preemptions", which is a subset of the bound-*k+1* set (asserted by
 //!   the monotonicity meta-test).
 //!
+//! # Memory models
+//!
+//! Under [`MemoryModel::Sc`] (the default) every shim access hits shared
+//! memory immediately: classic sequentially consistent exploration.
+//!
+//! Under [`MemoryModel::Tso`] (model builds only — the normal-build
+//! shims are re-exports and cannot interpose) each virtual thread owns a
+//! bounded FIFO **store buffer**, modelling x86-TSO with one deliberate
+//! extension:
+//!
+//! * A non-SeqCst store enqueues into the stepping thread's buffer
+//!   instead of writing memory ([`Exploration::buffered_stores`]).
+//! * A load snoops the thread's own buffer first (latest same-address
+//!   entry), then falls through to memory — so a thread always observes
+//!   its own program order, but *other* threads do not until the entry
+//!   flushes. Load orderings have no additional effect: loads never
+//!   reorder in this model (TSO's only relaxation is store→load).
+//! * Flushing one buffered entry is a **schedulable explorer action**,
+//!   recorded in the trace as a [`FLUSH_BIT`] entry and budgeted by
+//!   [`Explorer::flush_bound`] exactly like preemptions (a flush costs
+//!   no preemption — the current thread keeps running afterwards).
+//! * **Release/Relaxed distinction** (the extension; strict TSO cannot
+//!   see it): a `Release` entry may only flush in FIFO position, while a
+//!   `Relaxed` entry may flush out of order — eligible as long as no
+//!   older entry targets the same address (per-location coherence is
+//!   preserved). This PSO-style weakening is what makes a
+//!   missing-release-fence mutation observable by the ordering audit.
+//! * A `SeqCst` store, a Release-bearing RMW/CAS (success ordering
+//!   `Release`/`AcqRel`/`SeqCst`), and a `Release`/`AcqRel`/`SeqCst`
+//!   fence drain the thread's buffer first ("forced" flushes —
+//!   [`Exploration::forced_flushes`] — which do not spend the scheduled
+//!   budget). A Relaxed/Acquire RMW drains only the same-address prefix
+//!   (an RMW reads-modifies-writes memory directly, so coherence
+//!   requires its own earlier stores to that address to land first).
+//! * Buffer overflow force-flushes the oldest entry; thread completion
+//!   force-drains the whole buffer, so finalizers always observe fully
+//!   flushed memory.
+//!
 //! Everything is deterministic: no OS threads, no wall clock, no entropy.
 //! The `seed` only permutes the *order* in which schedules are visited
 //! (useful for shaking out order-dependent checker bugs); the set of
@@ -34,7 +73,11 @@
 //! reproduces the recorded execution.
 
 #[cfg(pallas_model)]
-use std::cell::Cell;
+use core::sync::atomic::Ordering;
+#[cfg(pallas_model)]
+use std::cell::{Cell, RefCell};
+#[cfg(pallas_model)]
+use std::collections::VecDeque;
 
 /// Hard cap on virtual threads per scenario (trace entries are `u16`;
 /// the real limit is combinatorial explosion, not this constant).
@@ -42,6 +85,36 @@ pub const MAX_MODEL_THREADS: usize = 8;
 
 /// True when shim access auditing is active (`--cfg pallas_model`).
 pub const ACCESS_AUDIT: bool = cfg!(pallas_model);
+
+/// Trace-entry flag marking a scheduled store-buffer flush. Thread-step
+/// entries are plain thread ids (`< MAX_MODEL_THREADS`); flush entries
+/// are `FLUSH_BIT | (thread << 8) | buffer_index`.
+pub const FLUSH_BIT: u16 = 0x8000;
+
+/// Encode a scheduled flush of `thread`'s buffer entry `entry` as a
+/// trace action.
+#[inline]
+pub const fn encode_flush(thread: usize, entry: usize) -> u16 {
+    FLUSH_BIT | ((thread as u16) << 8) | entry as u16
+}
+
+/// Decode a [`FLUSH_BIT`] trace action back into `(thread, entry)`.
+#[inline]
+pub const fn decode_flush(action: u16) -> (usize, usize) {
+    (((action >> 8) & 0x7f) as usize, (action & 0xff) as usize)
+}
+
+/// Memory model a schedule executes under.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum MemoryModel {
+    /// Sequential consistency: every access hits shared memory in
+    /// schedule order. Orderings are recorded but powerless.
+    Sc,
+    /// Total store order with per-thread bounded store buffers (plus
+    /// out-of-order Relaxed flush — see the module docs). Requires
+    /// `--cfg pallas_model`.
+    Tso,
+}
 
 #[cfg(pallas_model)]
 thread_local! {
@@ -68,6 +141,291 @@ pub fn access_ledger() -> u64 {
         0
     }
 }
+
+// ------------------------------------------------- TSO store buffers --
+
+/// One buffered (not yet globally visible) store. `commit` writes `val`
+/// back through the originating atomic type; `addr` keys snooping and
+/// coherence.
+#[cfg(pallas_model)]
+struct BufferedStore {
+    addr: usize,
+    val: u64,
+    commit: unsafe fn(usize, u64),
+    release: bool,
+}
+
+/// Per-exploration TSO state, installed in a thread-local by
+/// [`TsoGuard::begin`] so the shims can reach it without plumbing.
+#[cfg(pallas_model)]
+struct TsoExec {
+    buffers: Vec<VecDeque<BufferedStore>>,
+    /// The virtual thread currently stepping (shim ops outside a step —
+    /// scenario construction, finalizers — bypass the buffers).
+    current: Option<usize>,
+    bound: usize,
+    forced_flushes: u64,
+    buffered_stores: u64,
+}
+
+#[cfg(pallas_model)]
+impl TsoExec {
+    /// Write one buffered entry to shared memory.
+    fn commit_entry(e: BufferedStore) {
+        // SAFETY: `addr` was captured from a live shim atomic by the
+        // store that enqueued this entry; entries are drained before the
+        // scenario is dropped (thread completion drains, and a panicking
+        // schedule discards its buffers without writing).
+        unsafe { (e.commit)(e.addr, e.val) }
+    }
+
+    /// Drain thread `t`'s whole buffer, oldest first (forced).
+    fn drain_thread(&mut self, t: usize) {
+        while let Some(e) = self.buffers[t].pop_front() {
+            Self::commit_entry(e);
+            self.forced_flushes += 1;
+        }
+    }
+
+    /// May `buf[idx]` flush now? FIFO head always; a later entry only if
+    /// it is Relaxed and no older entry targets the same address.
+    fn eligible(buf: &VecDeque<BufferedStore>, idx: usize) -> bool {
+        idx == 0
+            || (!buf[idx].release && buf.iter().take(idx).all(|e| e.addr != buf[idx].addr))
+    }
+}
+
+#[cfg(pallas_model)]
+thread_local! {
+    static TSO_EXEC: RefCell<Option<TsoExec>> = const { RefCell::new(None) };
+}
+
+/// Shim hook — non-SeqCst stores enqueue (returns `true`: the shim must
+/// *not* also write memory); SeqCst stores drain then write through
+/// (returns `false`). No-op outside an active TSO step.
+#[cfg(pallas_model)]
+pub(crate) fn tso_store(
+    addr: usize,
+    val: u64,
+    commit: unsafe fn(usize, u64),
+    order: Ordering,
+) -> bool {
+    TSO_EXEC.with(|x| {
+        let mut x = x.borrow_mut();
+        let Some(exec) = x.as_mut() else { return false };
+        let Some(t) = exec.current else { return false };
+        if order == Ordering::SeqCst {
+            exec.drain_thread(t);
+            return false;
+        }
+        if exec.buffers[t].len() == exec.bound {
+            let e = exec.buffers[t].pop_front().expect("bound >= 1");
+            TsoExec::commit_entry(e);
+            exec.forced_flushes += 1;
+        }
+        exec.buffers[t].push_back(BufferedStore {
+            addr,
+            val,
+            commit,
+            release: order == Ordering::Release,
+        });
+        exec.buffered_stores += 1;
+        true
+    })
+}
+
+/// Shim hook — a load snoops the stepping thread's own buffer (latest
+/// same-address entry) before falling through to memory.
+#[cfg(pallas_model)]
+pub(crate) fn tso_snoop(addr: usize) -> Option<u64> {
+    TSO_EXEC.with(|x| {
+        let x = x.borrow();
+        let exec = x.as_ref()?;
+        let t = exec.current?;
+        exec.buffers[t].iter().rev().find(|e| e.addr == addr).map(|e| e.val)
+    })
+}
+
+/// Shim hook — called before any RMW/CAS executes directly on memory.
+/// Release-bearing success orderings drain the whole buffer; otherwise
+/// only the same-address prefix drains (coherence).
+#[cfg(pallas_model)]
+pub(crate) fn tso_before_rmw(addr: usize, success: Ordering) {
+    TSO_EXEC.with(|x| {
+        let mut x = x.borrow_mut();
+        let Some(exec) = x.as_mut() else { return };
+        let Some(t) = exec.current else { return };
+        if matches!(success, Ordering::Release | Ordering::AcqRel | Ordering::SeqCst) {
+            exec.drain_thread(t);
+            return;
+        }
+        if let Some(last) = exec.buffers[t].iter().rposition(|e| e.addr == addr) {
+            for _ in 0..=last {
+                let e = exec.buffers[t].pop_front().expect("rposition is in range");
+                TsoExec::commit_entry(e);
+                exec.forced_flushes += 1;
+            }
+        }
+    })
+}
+
+/// Shim hook — a Release-bearing fence drains the stepping thread's
+/// buffer. Acquire-only fences order loads, which never reorder here.
+#[cfg(pallas_model)]
+pub(crate) fn tso_fence(order: Ordering) {
+    if !matches!(order, Ordering::Release | Ordering::AcqRel | Ordering::SeqCst) {
+        return;
+    }
+    TSO_EXEC.with(|x| {
+        let mut x = x.borrow_mut();
+        let Some(exec) = x.as_mut() else { return };
+        let Some(t) = exec.current else { return };
+        exec.drain_thread(t);
+    })
+}
+
+/// RAII installer for one schedule's TSO state. In SC mode (or normal
+/// builds) every method is a no-op. `Drop` discards any leftover buffers
+/// without writing them, so a panicking schedule (a found bug) unwinds
+/// cleanly past memory the scenario may be dropping.
+struct TsoGuard {
+    #[cfg_attr(not(pallas_model), allow(dead_code))]
+    active: bool,
+}
+
+#[cfg(pallas_model)]
+impl TsoGuard {
+    fn begin(threads: usize, bound: usize, active: bool) -> Self {
+        if active {
+            assert!(
+                (1..=256).contains(&bound),
+                "store_buffer_bound must be in 1..=256, got {bound}"
+            );
+            TSO_EXEC.with(|x| {
+                let prev = x.borrow_mut().replace(TsoExec {
+                    buffers: (0..threads).map(|_| VecDeque::new()).collect(),
+                    current: None,
+                    bound,
+                    forced_flushes: 0,
+                    buffered_stores: 0,
+                });
+                assert!(prev.is_none(), "nested Tso explorations are not supported");
+            });
+        }
+        Self { active }
+    }
+
+    fn set_current(&self, t: Option<usize>) {
+        if self.active {
+            TSO_EXEC.with(|x| {
+                if let Some(exec) = x.borrow_mut().as_mut() {
+                    exec.current = t;
+                }
+            });
+        }
+    }
+
+    /// Force-drain a finished thread's buffer.
+    fn drain_finished(&self, t: usize) {
+        if self.active {
+            TSO_EXEC.with(|x| {
+                if let Some(exec) = x.borrow_mut().as_mut() {
+                    exec.drain_thread(t);
+                }
+            });
+        }
+    }
+
+    /// Append every currently eligible scheduled-flush action.
+    fn candidates(&self, into: &mut Vec<u16>) {
+        if self.active {
+            TSO_EXEC.with(|x| {
+                if let Some(exec) = x.borrow().as_ref() {
+                    for (t, buf) in exec.buffers.iter().enumerate() {
+                        for idx in 0..buf.len() {
+                            if TsoExec::eligible(buf, idx) {
+                                into.push(encode_flush(t, idx));
+                            }
+                        }
+                    }
+                }
+            });
+        }
+    }
+
+    /// Execute one scheduled flush action; `false` if it is no longer
+    /// valid (a replay divergence — explorer bug).
+    fn flush(&self, action: u16) -> bool {
+        if !self.active {
+            return false;
+        }
+        let (t, idx) = decode_flush(action);
+        TSO_EXEC.with(|x| {
+            let mut x = x.borrow_mut();
+            let Some(exec) = x.as_mut() else { return false };
+            if t >= exec.buffers.len()
+                || idx >= exec.buffers[t].len()
+                || !TsoExec::eligible(&exec.buffers[t], idx)
+            {
+                return false;
+            }
+            let e = exec.buffers[t].remove(idx).expect("idx is in range");
+            TsoExec::commit_entry(e);
+            true
+        })
+    }
+
+    /// `(forced_flushes, buffered_stores)` accumulated this schedule.
+    fn stats(&self) -> (u64, u64) {
+        if !self.active {
+            return (0, 0);
+        }
+        TSO_EXEC.with(|x| {
+            x.borrow()
+                .as_ref()
+                .map_or((0, 0), |e| (e.forced_flushes, e.buffered_stores))
+        })
+    }
+}
+
+#[cfg(pallas_model)]
+impl Drop for TsoGuard {
+    fn drop(&mut self) {
+        if self.active {
+            TSO_EXEC.with(|x| {
+                x.borrow_mut().take();
+            });
+        }
+    }
+}
+
+#[cfg(not(pallas_model))]
+impl TsoGuard {
+    fn begin(_threads: usize, _bound: usize, active: bool) -> Self {
+        assert!(
+            !active,
+            "MemoryModel::Tso requires --cfg pallas_model (the normal-build \
+             shims are re-exports and cannot buffer stores)"
+        );
+        Self { active }
+    }
+
+    fn set_current(&self, _t: Option<usize>) {}
+
+    fn drain_finished(&self, _t: usize) {}
+
+    fn candidates(&self, _into: &mut Vec<u16>) {}
+
+    fn flush(&self, _action: u16) -> bool {
+        false
+    }
+
+    fn stats(&self) -> (u64, u64) {
+        (0, 0)
+    }
+}
+
+// ------------------------------------------------------- the explorer --
 
 /// One virtual thread: a state machine driven by the explorer.
 ///
@@ -116,6 +474,16 @@ pub struct Scenario {
 pub struct Explorer {
     /// Max preemptive context switches per schedule (see module docs).
     pub preemption_bound: usize,
+    /// Memory model schedules execute under ([`MemoryModel::Tso`] needs
+    /// `--cfg pallas_model`).
+    pub memory: MemoryModel,
+    /// TSO only: store-buffer capacity per virtual thread (overflow
+    /// force-flushes the oldest entry).
+    pub store_buffer_bound: usize,
+    /// TSO only: max *scheduled* flush actions per schedule — the
+    /// flush analogue of `preemption_bound`. Forced drains (SeqCst,
+    /// RMW, fence, overflow, thread completion) are always free.
+    pub flush_bound: usize,
     /// Permutes visit order only — the schedule set is seed-independent.
     pub seed: u64,
     /// Iteration bound: stop after this many complete schedules and
@@ -134,6 +502,9 @@ impl Default for Explorer {
     fn default() -> Self {
         Self {
             preemption_bound: 2,
+            memory: MemoryModel::Sc,
+            store_buffer_bound: 2,
+            flush_bound: 2,
             seed: 0,
             max_schedules: 1_000_000,
             max_steps_per_schedule: 1_000_000,
@@ -153,10 +524,20 @@ pub struct Exploration {
     pub capped: bool,
     /// Largest preemption count any schedule actually used.
     pub max_preemptions_seen: usize,
+    /// Largest scheduled-flush count any schedule actually used.
+    pub max_flushes_seen: usize,
     /// Total virtual-thread steps across all schedules.
     pub total_steps: u64,
     /// Total shim accesses across all schedules (0 in normal builds).
     pub total_accesses: u64,
+    /// Scheduled (explorer-chosen) flush actions across all schedules.
+    pub total_flushes: u64,
+    /// Forced flushes across all schedules: SeqCst stores, Release-
+    /// bearing RMWs/fences, buffer overflow, and thread completion.
+    pub forced_flushes: u64,
+    /// Stores that entered a store buffer across all schedules (every
+    /// one eventually flushes, scheduled or forced).
+    pub buffered_stores: u64,
     /// Complete schedules, in visit order (only if `record_traces`).
     pub traces: Vec<Vec<u16>>,
 }
@@ -172,8 +553,8 @@ fn splitmix64(mut x: u64) -> u64 {
 
 impl Explorer {
     /// Exhaustively run `scenario` (a factory producing a fresh system
-    /// per schedule) over all interleavings within the preemption bound,
-    /// up to `max_schedules`.
+    /// per schedule) over all interleavings within the preemption bound
+    /// (× flush bound under TSO), up to `max_schedules`.
     ///
     /// Panics propagate from thread steps and finalizers — a panicking
     /// schedule is a found bug; wrap in `std::panic::catch_unwind` to
@@ -211,6 +592,11 @@ impl Explorer {
     where
         F: FnMut() -> Scenario,
     {
+        let tso = TsoGuard::begin(
+            MAX_MODEL_THREADS,
+            self.store_buffer_bound,
+            matches!(self.memory, MemoryModel::Tso),
+        );
         let Scenario { mut threads, finalize } = scenario();
         let n = threads.len();
         assert!(
@@ -221,8 +607,10 @@ impl Explorer {
         let mut remaining = n;
         let mut trace: Vec<u16> = Vec::with_capacity(prefix.len() + 8);
         let mut preemptions = 0usize;
+        let mut flushes = 0usize;
         let mut prev: Option<usize> = None;
         let mut steps = 0u64;
+        let mut flush_candidates: Vec<u16> = Vec::new();
 
         while remaining > 0 {
             // Runnable threads, rotated by a seed-derived offset so the
@@ -230,16 +618,22 @@ impl Explorer {
             let mut enabled: Vec<usize> = (0..n).filter(|&t| !done[t]).collect();
             let rot = (splitmix64(self.seed ^ trace.len() as u64) % enabled.len() as u64) as usize;
             enabled.rotate_left(rot);
+            flush_candidates.clear();
+            tso.candidates(&mut flush_candidates);
 
-            let choice = if trace.len() < prefix.len() {
+            let action: u16 = if trace.len() < prefix.len() {
                 // Replay: determinism guarantees the recorded choice is
-                // still runnable.
-                let c = prefix[trace.len()] as usize;
-                assert!(c < n && !done[c], "schedule replay diverged — explorer bug");
-                c
+                // still runnable (flush actions validate in `tso.flush`).
+                let a = prefix[trace.len()];
+                if a & FLUSH_BIT == 0 {
+                    let c = a as usize;
+                    assert!(c < n && !done[c], "schedule replay diverged — explorer bug");
+                }
+                a
             } else {
                 // Default policy: stay on the current thread while it is
-                // runnable (no preemption), else first enabled.
+                // runnable (no preemption), else first enabled. Flushes
+                // are never the default — they only arise as branches.
                 let default = match prev {
                     Some(p) if !done[p] => p,
                     _ => enabled[0],
@@ -254,18 +648,38 @@ impl Explorer {
                         pending.push(p);
                     }
                 }
-                default
+                // A scheduled flush costs no preemption (the current
+                // thread keeps running afterwards), only flush budget.
+                if flushes < self.flush_bound {
+                    for &f in &flush_candidates {
+                        let mut p = trace.clone();
+                        p.push(f);
+                        pending.push(p);
+                    }
+                }
+                default as u16
             };
 
+            trace.push(action);
+
+            if action & FLUSH_BIT != 0 {
+                assert!(tso.flush(action), "flush replay diverged — explorer bug");
+                flushes += 1;
+                out.total_flushes += 1;
+                continue;
+            }
+
+            let choice = action as usize;
             if let Some(p) = prev {
                 if !done[p] && choice != p {
                     preemptions += 1;
                 }
             }
-            trace.push(choice as u16);
 
             let before = access_ledger();
+            tso.set_current(Some(choice));
             let finished = threads[choice].step();
+            tso.set_current(None);
             let accesses = access_ledger() - before;
             if ACCESS_AUDIT {
                 assert!(
@@ -285,11 +699,17 @@ impl Explorer {
             if finished {
                 done[choice] = true;
                 remaining -= 1;
+                tso.drain_finished(choice);
             }
             prev = Some(choice);
         }
 
         out.max_preemptions_seen = out.max_preemptions_seen.max(preemptions);
+        out.max_flushes_seen = out.max_flushes_seen.max(flushes);
+        let (forced, buffered) = tso.stats();
+        out.forced_flushes += forced;
+        out.buffered_stores += buffered;
+        drop(tso);
         finalize();
         trace
     }
@@ -438,6 +858,19 @@ mod tests {
         assert!(caught.is_err());
     }
 
+    /// Flush-action encoding round-trips and never collides with thread
+    /// ids.
+    #[test]
+    fn flush_action_encoding_roundtrip() {
+        for t in 0..MAX_MODEL_THREADS {
+            for idx in [0usize, 1, 7, 255] {
+                let a = encode_flush(t, idx);
+                assert!(a & FLUSH_BIT != 0);
+                assert_eq!(decode_flush(a), (t, idx));
+            }
+        }
+    }
+
     /// Step-granularity audit: a thread touching shared memory twice in
     /// one step must be rejected (model builds only — this is the
     /// soundness contract the shims exist to enforce).
@@ -465,5 +898,258 @@ mod tests {
             });
         }));
         assert!(caught.is_err(), "double-access step must trip the audit");
+    }
+}
+
+#[cfg(all(test, pallas_model))]
+mod tso_tests {
+    use super::*;
+    use crate::sync::{AtomicU64, Ordering};
+    use std::cell::RefCell;
+    use std::collections::BTreeSet;
+    use std::rc::Rc;
+
+    /// SB litmus half: store 1 into `w`, load `r`, then one trailing
+    /// no-access step so the load happens before this thread's
+    /// completion force-drain.
+    struct WriterReader {
+        w: Rc<AtomicU64>,
+        r: Rc<AtomicU64>,
+        store_order: Ordering,
+        out: Rc<RefCell<u64>>,
+        step: u8,
+    }
+
+    impl VThread for WriterReader {
+        fn step(&mut self) -> bool {
+            self.step += 1;
+            match self.step {
+                1 => {
+                    self.w.store(1, self.store_order);
+                    false
+                }
+                2 => {
+                    *self.out.borrow_mut() = self.r.load(Ordering::Relaxed);
+                    false
+                }
+                _ => true,
+            }
+        }
+    }
+
+    fn sb_outcomes(memory: MemoryModel, store_order: Ordering) -> BTreeSet<(u64, u64)> {
+        let seen = Rc::new(RefCell::new(BTreeSet::new()));
+        let sink = Rc::clone(&seen);
+        let ex = Explorer {
+            preemption_bound: 4,
+            memory,
+            ..Explorer::default()
+        };
+        let r = ex.explore(move || {
+            let x = Rc::new(AtomicU64::new(0));
+            let y = Rc::new(AtomicU64::new(0));
+            let r0 = Rc::new(RefCell::new(u64::MAX));
+            let r1 = Rc::new(RefCell::new(u64::MAX));
+            let t0 = WriterReader {
+                w: Rc::clone(&x),
+                r: Rc::clone(&y),
+                store_order,
+                out: Rc::clone(&r0),
+                step: 0,
+            };
+            let t1 = WriterReader {
+                w: y,
+                r: x,
+                store_order,
+                out: Rc::clone(&r1),
+                step: 0,
+            };
+            let sink = Rc::clone(&sink);
+            Scenario {
+                threads: vec![Box::new(t0), Box::new(t1)],
+                finalize: Box::new(move || {
+                    sink.borrow_mut().insert((*r0.borrow(), *r1.borrow()));
+                }),
+            }
+        });
+        assert!(!r.capped);
+        seen.take()
+    }
+
+    /// The store-buffering litmus: `(r0, r1) = (0, 0)` is the signature
+    /// TSO-but-not-SC outcome, and SeqCst stores (which drain) forbid it
+    /// again.
+    #[test]
+    fn store_buffering_litmus_outcomes() {
+        assert!(!sb_outcomes(MemoryModel::Sc, Ordering::Relaxed).contains(&(0, 0)));
+        assert!(sb_outcomes(MemoryModel::Tso, Ordering::Relaxed).contains(&(0, 0)));
+        assert!(!sb_outcomes(MemoryModel::Tso, Ordering::SeqCst).contains(&(0, 0)));
+    }
+
+    /// Under TSO every SC trace is still explored (thread-only actions),
+    /// and scheduled-flush traces are strictly extra.
+    #[test]
+    fn sc_traces_strict_subset_of_tso() {
+        let run = |memory| {
+            let ex = Explorer {
+                preemption_bound: 3,
+                memory,
+                record_traces: true,
+                ..Explorer::default()
+            };
+            let mut sink = BTreeSet::new();
+            let r = ex.explore(|| {
+                let x = Rc::new(AtomicU64::new(0));
+                let y = Rc::new(AtomicU64::new(0));
+                let mk = |w: &Rc<AtomicU64>, r: &Rc<AtomicU64>| WriterReader {
+                    w: Rc::clone(w),
+                    r: Rc::clone(r),
+                    store_order: Ordering::Relaxed,
+                    out: Rc::new(RefCell::new(0)),
+                    step: 0,
+                };
+                Scenario {
+                    threads: vec![Box::new(mk(&x, &y)), Box::new(mk(&y, &x))],
+                    finalize: Box::new(|| {}),
+                }
+            });
+            assert!(!r.capped);
+            sink.extend(r.traces);
+            sink
+        };
+        let sc = run(MemoryModel::Sc);
+        let tso = run(MemoryModel::Tso);
+        assert!(sc.is_subset(&tso), "TSO must explore every SC schedule");
+        assert!(sc.len() < tso.len(), "flush actions must add schedules");
+        assert!(
+            tso.iter().any(|t| t.iter().any(|&a| a & FLUSH_BIT != 0)),
+            "some TSO trace must contain a scheduled flush"
+        );
+    }
+
+    /// TSO exploration is deterministic per seed, and the flush budget is
+    /// monotone like the preemption bound.
+    #[test]
+    fn tso_determinism_and_flush_budget_monotone() {
+        let run = |flush_bound, seed| {
+            let ex = Explorer {
+                preemption_bound: 2,
+                memory: MemoryModel::Tso,
+                flush_bound,
+                seed,
+                record_traces: true,
+                ..Explorer::default()
+            };
+            let r = ex.explore(|| {
+                let x = Rc::new(AtomicU64::new(0));
+                let y = Rc::new(AtomicU64::new(0));
+                let mk = |w: &Rc<AtomicU64>, r: &Rc<AtomicU64>| WriterReader {
+                    w: Rc::clone(w),
+                    r: Rc::clone(r),
+                    store_order: Ordering::Relaxed,
+                    out: Rc::new(RefCell::new(0)),
+                    step: 0,
+                };
+                Scenario {
+                    threads: vec![Box::new(mk(&x, &y)), Box::new(mk(&y, &x))],
+                    finalize: Box::new(|| {}),
+                }
+            });
+            assert!(!r.capped);
+            r
+        };
+        let a = run(2, 9);
+        let b = run(2, 9);
+        assert_eq!(a.traces, b.traces, "TSO visit order must be reproducible");
+        let mut prev: Option<BTreeSet<Vec<u16>>> = None;
+        // Two stores total ⇒ at most two scheduled flushes per schedule,
+        // so the budget strictly buys schedules up to bound 2.
+        for bound in 0..=2 {
+            let r = run(bound, 0);
+            assert!(r.max_flushes_seen <= bound);
+            let set: BTreeSet<Vec<u16>> = r.traces.into_iter().collect();
+            assert_eq!(set.len() as u64, r.schedules, "schedules are distinct");
+            if let Some(p) = &prev {
+                assert!(p.is_subset(&set), "flush bound {bound} lost schedules");
+                assert!(p.len() < set.len(), "flush bound {bound} must buy schedules");
+            }
+            prev = Some(set);
+        }
+    }
+
+    /// Direct hook semantics: snooping, same-address-prefix drain on a
+    /// Relaxed RMW, and full drain on a release fence — observed through
+    /// raw memory by reading outside any virtual-thread step.
+    #[test]
+    fn rmw_and_fence_drain_rules() {
+        let g = TsoGuard::begin(1, 4, true);
+        let x = AtomicU64::new(0);
+        let y = AtomicU64::new(0);
+        g.set_current(Some(0));
+        x.store(1, Ordering::Relaxed);
+        let snooped = x.load(Ordering::Relaxed);
+        g.set_current(None);
+        assert_eq!(snooped, 1, "own loads must snoop the buffer");
+        assert_eq!(x.load(Ordering::Relaxed), 0, "memory unchanged while buffered");
+        g.set_current(Some(0));
+        y.store(1, Ordering::Relaxed);
+        x.fetch_add(1, Ordering::Relaxed);
+        g.set_current(None);
+        assert_eq!(x.load(Ordering::Relaxed), 2, "relaxed RMW drains same-address prefix");
+        assert_eq!(y.load(Ordering::Relaxed), 0, "y must still be buffered");
+        g.set_current(Some(0));
+        crate::sync::fence(Ordering::Release);
+        g.set_current(None);
+        assert_eq!(y.load(Ordering::Relaxed), 1, "release fence drains the buffer");
+        let (forced, buffered) = g.stats();
+        assert_eq!(buffered, 2);
+        assert_eq!(forced, 2);
+    }
+
+    /// Overflowing the bounded buffer force-flushes the oldest entry.
+    #[test]
+    fn buffer_overflow_forces_oldest_flush() {
+        let g = TsoGuard::begin(1, 2, true);
+        let a = AtomicU64::new(0);
+        let b = AtomicU64::new(0);
+        let c = AtomicU64::new(0);
+        g.set_current(Some(0));
+        a.store(1, Ordering::Relaxed);
+        b.store(1, Ordering::Relaxed);
+        c.store(1, Ordering::Relaxed); // overflow: `a` must land
+        g.set_current(None);
+        assert_eq!(a.load(Ordering::Relaxed), 1, "oldest entry force-flushed");
+        assert_eq!(b.load(Ordering::Relaxed), 0);
+        assert_eq!(c.load(Ordering::Relaxed), 0);
+        let (forced, buffered) = g.stats();
+        assert_eq!(buffered, 3);
+        assert_eq!(forced, 1);
+    }
+
+    /// Release entries flush only in FIFO position; Relaxed entries may
+    /// jump the queue unless an older same-address entry exists.
+    #[test]
+    fn flush_eligibility_release_vs_relaxed() {
+        let g = TsoGuard::begin(1, 4, true);
+        let a = AtomicU64::new(0);
+        let b = AtomicU64::new(0);
+        g.set_current(Some(0));
+        a.store(1, Ordering::Release);
+        b.store(1, Ordering::Relaxed);
+        a.store(2, Ordering::Relaxed);
+        g.set_current(None);
+        let mut cands = Vec::new();
+        g.candidates(&mut cands);
+        // Entry 0 (release, head) and entry 1 (relaxed, no older same-
+        // address entry) are eligible; entry 2 is blocked by entry 0's
+        // same-address store (coherence).
+        assert_eq!(cands, vec![encode_flush(0, 0), encode_flush(0, 1)]);
+        assert!(g.flush(encode_flush(0, 1)), "relaxed entry may jump the queue");
+        assert_eq!(b.load(Ordering::Relaxed), 1);
+        assert_eq!(a.load(Ordering::Relaxed), 0, "release entry still buffered");
+        assert!(!g.flush(encode_flush(0, 1)), "stale flush action must be rejected");
+        assert!(g.flush(encode_flush(0, 0)));
+        assert!(g.flush(encode_flush(0, 0)));
+        assert_eq!(a.load(Ordering::Relaxed), 2, "coherence: program order per address");
     }
 }

@@ -1,6 +1,23 @@
 //! `--cfg pallas_model` shim atomics: `#[repr(transparent)]` wrappers
 //! over `core::sync::atomic` that tick the [`super::model`] access ledger
-//! on every load/store/RMW.
+//! on every load/store/RMW — and, when a [`super::model::MemoryModel::Tso`]
+//! exploration is running, route their declared `Ordering` into the
+//! store-buffer semantics:
+//!
+//! * `store` asks [`super::model::tso_store`] first: non-SeqCst stores
+//!   get buffered (the shim then skips the real write — the buffered
+//!   entry's `commit` fn performs it at flush time), SeqCst stores drain
+//!   and write through.
+//! * `load` snoops the stepping thread's own buffer via
+//!   [`super::model::tso_snoop`] before touching memory.
+//! * every RMW/CAS calls [`super::model::tso_before_rmw`] with its
+//!   (success) ordering so Release-bearing operations drain the buffer
+//!   and Relaxed ones keep per-address coherence.
+//! * [`fence`] routes through [`super::model::tso_fence`].
+//!
+//! Outside a TSO exploration all hooks are no-ops and the wrappers
+//! delegate directly, so code compiled under the cfg but running outside
+//! an exploration behaves exactly as in normal builds.
 //!
 //! Two deliberate deviations from the std types, both in service of
 //! deterministic replay:
@@ -23,7 +40,7 @@
 
 use core::sync::atomic::Ordering;
 
-use super::model::note_access;
+use super::model::{note_access, tso_before_rmw, tso_fence, tso_snoop, tso_store};
 
 macro_rules! shim_atomic_int {
     ($(#[$meta:meta])* $name:ident, $raw:ident, $t:ty) => {
@@ -41,21 +58,39 @@ macro_rules! shim_atomic_int {
                 }
             }
 
+            /// Flush-time writeback for a TSO-buffered store (the
+            /// explorer serialises executions, so the ordering here is
+            /// immaterial — SeqCst for simplicity).
+            unsafe fn tso_commit(addr: usize, val: u64) {
+                // SAFETY: `addr` was derived from `&self.inner` by
+                // `store` below, and the explorer drains every buffered
+                // entry before the owning scenario is dropped.
+                let cell = unsafe { &*(addr as *const core::sync::atomic::$raw) };
+                cell.store(val as $t, Ordering::SeqCst);
+            }
+
             #[inline]
             pub fn load(&self, order: Ordering) -> $t {
                 note_access();
-                self.inner.load(order)
+                match tso_snoop(&self.inner as *const _ as usize) {
+                    Some(v) => v as $t,
+                    None => self.inner.load(order),
+                }
             }
 
             #[inline]
             pub fn store(&self, val: $t, order: Ordering) {
                 note_access();
-                self.inner.store(val, order)
+                let addr = &self.inner as *const _ as usize;
+                if !tso_store(addr, val as u64, Self::tso_commit, order) {
+                    self.inner.store(val, order)
+                }
             }
 
             #[inline]
             pub fn swap(&self, val: $t, order: Ordering) -> $t {
                 note_access();
+                tso_before_rmw(&self.inner as *const _ as usize, order);
                 self.inner.swap(val, order)
             }
 
@@ -68,6 +103,7 @@ macro_rules! shim_atomic_int {
                 failure: Ordering,
             ) -> Result<$t, $t> {
                 note_access();
+                tso_before_rmw(&self.inner as *const _ as usize, success);
                 self.inner.compare_exchange(current, new, success, failure)
             }
 
@@ -82,42 +118,49 @@ macro_rules! shim_atomic_int {
                 failure: Ordering,
             ) -> Result<$t, $t> {
                 note_access();
+                tso_before_rmw(&self.inner as *const _ as usize, success);
                 self.inner.compare_exchange(current, new, success, failure)
             }
 
             #[inline]
             pub fn fetch_add(&self, val: $t, order: Ordering) -> $t {
                 note_access();
+                tso_before_rmw(&self.inner as *const _ as usize, order);
                 self.inner.fetch_add(val, order)
             }
 
             #[inline]
             pub fn fetch_sub(&self, val: $t, order: Ordering) -> $t {
                 note_access();
+                tso_before_rmw(&self.inner as *const _ as usize, order);
                 self.inner.fetch_sub(val, order)
             }
 
             #[inline]
             pub fn fetch_or(&self, val: $t, order: Ordering) -> $t {
                 note_access();
+                tso_before_rmw(&self.inner as *const _ as usize, order);
                 self.inner.fetch_or(val, order)
             }
 
             #[inline]
             pub fn fetch_and(&self, val: $t, order: Ordering) -> $t {
                 note_access();
+                tso_before_rmw(&self.inner as *const _ as usize, order);
                 self.inner.fetch_and(val, order)
             }
 
             #[inline]
             pub fn fetch_max(&self, val: $t, order: Ordering) -> $t {
                 note_access();
+                tso_before_rmw(&self.inner as *const _ as usize, order);
                 self.inner.fetch_max(val, order)
             }
 
             #[inline]
             pub fn fetch_min(&self, val: $t, order: Ordering) -> $t {
                 note_access();
+                tso_before_rmw(&self.inner as *const _ as usize, order);
                 self.inner.fetch_min(val, order)
             }
 
@@ -153,7 +196,8 @@ shim_atomic_int!(
     usize
 );
 
-/// Shim over [`core::sync::atomic::AtomicBool`].
+/// Shim over [`core::sync::atomic::AtomicBool`] (buffered values travel
+/// as `0`/`1` in the `u64` store-buffer slot).
 #[repr(transparent)]
 #[derive(Default, Debug)]
 pub struct AtomicBool {
@@ -167,21 +211,37 @@ impl AtomicBool {
         }
     }
 
+    /// Flush-time writeback for a TSO-buffered store.
+    unsafe fn tso_commit(addr: usize, val: u64) {
+        // SAFETY: `addr` was derived from `&self.inner` by `store`
+        // below, and the explorer drains every buffered entry before the
+        // owning scenario is dropped.
+        let cell = unsafe { &*(addr as *const core::sync::atomic::AtomicBool) };
+        cell.store(val != 0, Ordering::SeqCst);
+    }
+
     #[inline]
     pub fn load(&self, order: Ordering) -> bool {
         note_access();
-        self.inner.load(order)
+        match tso_snoop(&self.inner as *const _ as usize) {
+            Some(v) => v != 0,
+            None => self.inner.load(order),
+        }
     }
 
     #[inline]
     pub fn store(&self, val: bool, order: Ordering) {
         note_access();
-        self.inner.store(val, order)
+        let addr = &self.inner as *const _ as usize;
+        if !tso_store(addr, u64::from(val), Self::tso_commit, order) {
+            self.inner.store(val, order)
+        }
     }
 
     #[inline]
     pub fn swap(&self, val: bool, order: Ordering) -> bool {
         note_access();
+        tso_before_rmw(&self.inner as *const _ as usize, order);
         self.inner.swap(val, order)
     }
 
@@ -194,18 +254,21 @@ impl AtomicBool {
         failure: Ordering,
     ) -> Result<bool, bool> {
         note_access();
+        tso_before_rmw(&self.inner as *const _ as usize, success);
         self.inner.compare_exchange(current, new, success, failure)
     }
 
     #[inline]
     pub fn fetch_or(&self, val: bool, order: Ordering) -> bool {
         note_access();
+        tso_before_rmw(&self.inner as *const _ as usize, order);
         self.inner.fetch_or(val, order)
     }
 
     #[inline]
     pub fn fetch_and(&self, val: bool, order: Ordering) -> bool {
         note_access();
+        tso_before_rmw(&self.inner as *const _ as usize, order);
         self.inner.fetch_and(val, order)
     }
 
@@ -220,7 +283,8 @@ impl AtomicBool {
     }
 }
 
-/// Shim over [`core::sync::atomic::AtomicPtr`].
+/// Shim over [`core::sync::atomic::AtomicPtr`] (buffered values travel
+/// as addresses in the `u64` store-buffer slot).
 #[repr(transparent)]
 #[derive(Debug)]
 pub struct AtomicPtr<T> {
@@ -240,21 +304,38 @@ impl<T> AtomicPtr<T> {
         }
     }
 
+    /// Flush-time writeback for a TSO-buffered store (monomorphised per
+    /// `T` so the fn pointer restores the pointee type).
+    unsafe fn tso_commit(addr: usize, val: u64) {
+        // SAFETY: `addr` was derived from `&self.inner` by `store`
+        // below, and the explorer drains every buffered entry before the
+        // owning scenario is dropped.
+        let cell = unsafe { &*(addr as *const core::sync::atomic::AtomicPtr<T>) };
+        cell.store(val as usize as *mut T, Ordering::SeqCst);
+    }
+
     #[inline]
     pub fn load(&self, order: Ordering) -> *mut T {
         note_access();
-        self.inner.load(order)
+        match tso_snoop(&self.inner as *const _ as usize) {
+            Some(v) => v as usize as *mut T,
+            None => self.inner.load(order),
+        }
     }
 
     #[inline]
     pub fn store(&self, val: *mut T, order: Ordering) {
         note_access();
-        self.inner.store(val, order)
+        let addr = &self.inner as *const _ as usize;
+        if !tso_store(addr, val as usize as u64, Self::tso_commit, order) {
+            self.inner.store(val, order)
+        }
     }
 
     #[inline]
     pub fn swap(&self, val: *mut T, order: Ordering) -> *mut T {
         note_access();
+        tso_before_rmw(&self.inner as *const _ as usize, order);
         self.inner.swap(val, order)
     }
 
@@ -267,6 +348,7 @@ impl<T> AtomicPtr<T> {
         failure: Ordering,
     ) -> Result<*mut T, *mut T> {
         note_access();
+        tso_before_rmw(&self.inner as *const _ as usize, success);
         self.inner.compare_exchange(current, new, success, failure)
     }
 
@@ -280,6 +362,7 @@ impl<T> AtomicPtr<T> {
         failure: Ordering,
     ) -> Result<*mut T, *mut T> {
         note_access();
+        tso_before_rmw(&self.inner as *const _ as usize, success);
         self.inner.compare_exchange(current, new, success, failure)
     }
 
@@ -295,10 +378,11 @@ impl<T> AtomicPtr<T> {
 }
 
 /// Shim over [`core::sync::atomic::fence`]: a fence is a shared-memory
-/// event for step-granularity accounting, even though the
-/// sequentially-consistent explorer gives it no extra power.
+/// event for step-granularity accounting, and under TSO a Release-
+/// bearing fence drains the stepping thread's store buffer.
 #[inline]
 pub fn fence(order: Ordering) {
     note_access();
+    tso_fence(order);
     core::sync::atomic::fence(order)
 }

@@ -1,0 +1,770 @@
+//! Shared adversarial scenarios for the bounded model checker.
+//!
+//! One library of scenario builders drives both provers: the protocol
+//! suite (`tests/model_check.rs`, SC and TSO arms) and the
+//! ordering-mutation audit (`tests/ordering_audit.rs`). The audit
+//! re-runs *these exact* scenarios under every single-site ordering
+//! weakening, so a scenario added here automatically widens the audit's
+//! kill surface.
+//!
+//! Builders return a fresh [`Scenario`] per call (the explorer
+//! re-executes the construction before every schedule). The five
+//! protocol scenarios cover the five proto machines:
+//!
+//! * [`treiber_scenario`] — Treiber push/pop churn with an A→B→A
+//!   adversary (generic over the ABA-tag mutation switch).
+//! * [`rehome_scenario`] — stale rehome swing racing a slot recycle.
+//! * [`stash_scenario`] — counted chain-push vs concurrent pops.
+//! * [`magazine_scenario`] — slot-claim mutual exclusion.
+//! * [`mag_publish_scenario`] — magazine publish/consume handoff: the
+//!   missing-release-fence detector. Its invariant only bites under a
+//!   store-buffer memory model, which is exactly what makes the
+//!   `mag_publish_owned → relaxed` mutation observable.
+//!
+//! Plus the two classic litmus shapes ([`sb_scenario`],
+//! [`mp_scenario`]) the weak-memory meta-tests calibrate the model
+//! against. Litmus threads take one *extra* step after their final
+//! load: a virtual thread's finish force-drains its store buffer, so a
+//! two-step thread could never leave a store buffered across the other
+//! thread's read and the relaxed outcomes would be unreachable.
+
+use std::cell::{Cell, RefCell};
+use std::collections::BTreeSet;
+use std::rc::Rc;
+
+use crate::pool::proto::head::{Pop, Push, TaggedHead, NIL};
+use crate::pool::proto::lease::{Acquire, LeaseRegistry, Release};
+use crate::pool::proto::mag::{Bind, BindOutcome, MagState, MagWord};
+use crate::pool::proto::rehome::GenEntry;
+use crate::pool::proto::stash::{CountedStash, Stash, StashPop, StashPush};
+use crate::pool::proto::{Head, Step};
+use crate::sync::model::{Explorer, Scenario, VThread};
+use crate::sync::{AtomicU32, AtomicU64, Ordering};
+
+/// Adapt a closure to a virtual thread: each call is one step, `true`
+/// means finished.
+pub struct StepFn<F: FnMut() -> bool>(pub F);
+
+impl<F: FnMut() -> bool> VThread for StepFn<F> {
+    fn step(&mut self) -> bool {
+        (self.0)()
+    }
+}
+
+/// Box a step closure as a scenario thread.
+pub fn boxed<F: FnMut() -> bool + 'static>(f: F) -> Box<dyn VThread> {
+    Box::new(StepFn(f))
+}
+
+/// The five protocol scenarios by report name, for harnesses that
+/// iterate the whole suite (the ordering audit).
+pub fn all_protocols() -> [(&'static str, fn() -> Scenario); 5] {
+    [
+        ("treiber_push_pop", treiber_scenario::<true> as fn() -> Scenario),
+        ("rehome_swing", rehome_scenario),
+        ("stash_detach_drain", stash_scenario),
+        ("magazine_bind_reclaim", magazine_scenario),
+        ("magazine_publish", mag_publish_scenario),
+    ]
+}
+
+// ------------------------------------------------------------ treiber --
+
+/// Shared Treiber instance: head + link side table, generic over the
+/// ABA-tag mutation switch.
+struct Stack<const TAG: bool> {
+    head: TaggedHead<TAG>,
+    links: Vec<AtomicU32>,
+}
+
+impl<const TAG: bool> Stack<TAG> {
+    fn seeded(cap: usize, seed: &[u32]) -> Rc<Self> {
+        let s = Rc::new(Self {
+            head: TaggedHead::new(),
+            links: (0..cap).map(|_| AtomicU32::new(NIL)).collect(),
+        });
+        for &i in seed.iter().rev() {
+            s.head.push(&s.links, i);
+        }
+        s
+    }
+
+    /// Drain at quiescence with a cycle guard: a corrupted list (the ABA
+    /// mutant can splice one) must fail the assert, not hang the test.
+    fn drain_bounded(&self) -> Vec<u32> {
+        let mut out = Vec::new();
+        for _ in 0..=self.links.len() {
+            match self.head.pop(&self.links) {
+                Some(i) => out.push(i),
+                None => return out,
+            }
+        }
+        panic!("drain exceeded capacity — free list corrupted (cycle)");
+    }
+}
+
+/// A thread popping `n` times through the production `Pop` machine,
+/// recording what it was handed.
+fn popper<const TAG: bool>(
+    stack: Rc<Stack<TAG>>,
+    got: Rc<RefCell<Vec<u32>>>,
+    n: usize,
+) -> Box<dyn VThread> {
+    let mut remaining = n;
+    let mut pop = Pop::new();
+    boxed(move || {
+        match pop.step(&stack.head, &stack.links) {
+            Step::Done(res) => {
+                if let Some(i) = res {
+                    got.borrow_mut().push(i);
+                }
+                remaining -= 1;
+                if remaining == 0 {
+                    return true;
+                }
+                pop = Pop::new();
+            }
+            Step::Pending => {}
+        }
+        false
+    })
+}
+
+/// Treiber churn: two poppers and an adversary that pops twice and
+/// re-pushes its *first* victim — the classic ABA recipe. Under
+/// `TAG = true` the invariant must hold on every schedule; under
+/// `TAG = false` at least one schedule (one preemption suffices)
+/// double-hands an index.
+///
+/// The adversary takes one trailing observation step after its push
+/// completes. Under TSO that keeps it *alive* (unflushed) across the
+/// window where a popper can read the link word its buffered
+/// `push_store_next` has not yet committed — the window a weakened
+/// `push_cas_ok` (no buffer drain) leaves open.
+pub fn treiber_scenario<const TAG: bool>() -> Scenario {
+    let stack = Stack::<TAG>::seeded(4, &[0, 1, 2]);
+    let victim_got = Rc::new(RefCell::new(Vec::new()));
+    let third_got = Rc::new(RefCell::new(Vec::new()));
+    let adv_got = Rc::new(RefCell::new(Vec::new()));
+    let adv_pushed = Rc::new(RefCell::new(Vec::new()));
+
+    // Adversary: pop, pop, push(first pop) — drives the head through
+    // A → B → A with the tag as the only defence.
+    let adversary = {
+        let stack = Rc::clone(&stack);
+        let got = Rc::clone(&adv_got);
+        let pushed = Rc::clone(&adv_pushed);
+        enum Phase {
+            Pop(Pop, u8),
+            Push(Push),
+            Tail,
+        }
+        let mut phase = Phase::Pop(Pop::new(), 0);
+        boxed(move || {
+            match &mut phase {
+                Phase::Pop(pop, k) => {
+                    if let Step::Done(res) = pop.step(&stack.head, &stack.links) {
+                        if let Some(i) = res {
+                            got.borrow_mut().push(i);
+                        }
+                        if *k == 0 {
+                            phase = Phase::Pop(Pop::new(), 1);
+                        } else {
+                            // Re-push the first victim if we got one.
+                            match got.borrow().first().copied() {
+                                Some(first) => {
+                                    pushed.borrow_mut().push(first);
+                                    phase = Phase::Push(Push::new(first));
+                                }
+                                None => return true,
+                            }
+                        }
+                    }
+                    false
+                }
+                Phase::Push(push) => {
+                    if let Step::Done(()) = push.step(&stack.head, &stack.links) {
+                        phase = Phase::Tail;
+                    }
+                    false
+                }
+                Phase::Tail => {
+                    let _ = stack.head.tag();
+                    true
+                }
+            }
+        })
+    };
+
+    let threads: Vec<Box<dyn VThread>> = vec![
+        popper(Rc::clone(&stack), Rc::clone(&victim_got), 1),
+        adversary,
+        popper(Rc::clone(&stack), Rc::clone(&third_got), 1),
+    ];
+
+    let finalize = Box::new(move || {
+        // Outstanding = everything popped minus what was pushed back.
+        let mut outstanding: Vec<u32> = Vec::new();
+        outstanding.extend(victim_got.borrow().iter());
+        outstanding.extend(third_got.borrow().iter());
+        outstanding.extend(adv_got.borrow().iter());
+        for p in adv_pushed.borrow().iter() {
+            let pos = outstanding
+                .iter()
+                .position(|x| x == p)
+                .expect("pushed an index it never popped");
+            outstanding.swap_remove(pos);
+        }
+        let remaining = stack.drain_bounded();
+        let mut all = outstanding.clone();
+        all.extend(&remaining);
+        let uniq: BTreeSet<u32> = all.iter().copied().collect();
+        assert_eq!(
+            uniq.len(),
+            all.len(),
+            "index handed to two owners: outstanding {outstanding:?} remaining {remaining:?}"
+        );
+        assert_eq!(
+            uniq,
+            BTreeSet::from([0, 1, 2]),
+            "blocks lost or invented: outstanding {outstanding:?} remaining {remaining:?}"
+        );
+    });
+
+    Scenario { threads, finalize }
+}
+
+// ------------------------------------------------------------- rehome --
+
+/// A recycled home slot's *new* tenant must never be routed through the
+/// dead thread's map entry, even while a stale steal-aware `swing`
+/// races the recycle and the tenant's own rebind.
+pub fn rehome_scenario() -> Scenario {
+    // One-slot registry: the contended resource is slot 0.
+    let reg = Rc::new(LeaseRegistry::<1>::new());
+    let entry = Rc::new(GenEntry::unbound());
+    let (slot, owned) = reg.acquire();
+    assert!(owned && slot == 0);
+    entry.rebind(0, 0); // old tenant binds under generation 0
+
+    let swing_ok = Rc::new(Cell::new(false));
+    let pre_rebind = Rc::new(Cell::new(None::<Option<usize>>));
+    let post_rebind = Rc::new(Cell::new(None::<Option<usize>>));
+    let observed = Rc::new(RefCell::new(Vec::new()));
+
+    // T1 — stale profiler: decided to move slot 0's route 0 → 1 under
+    // generation 0, and fires the swing at an arbitrary point.
+    let profiler = {
+        let entry = Rc::clone(&entry);
+        let swing_ok = Rc::clone(&swing_ok);
+        let mut fired = false;
+        boxed(move || {
+            if !fired {
+                swing_ok.set(entry.swing(0, 1, 0));
+                fired = true;
+                false
+            } else {
+                // One trailing resolve under the dead generation —
+                // result unconstrained, exercises the read path.
+                let _ = entry.resolve(0, 2);
+                true
+            }
+        })
+    };
+
+    // T2 — churn + new tenant: release the slot (gen 0 → 1),
+    // re-acquire it, verify the stale entry is rejected, rebind, and
+    // resolve again.
+    let tenant = {
+        let reg = Rc::clone(&reg);
+        let entry = Rc::clone(&entry);
+        let pre = Rc::clone(&pre_rebind);
+        let post = Rc::clone(&post_rebind);
+        enum Phase {
+            Release(Release),
+            Acquire(Acquire),
+            ReadGen(u32),
+            Resolve(u32),
+            Rebind(u32),
+            Confirm(u32),
+        }
+        let mut phase = Phase::Release(Release::new(0));
+        boxed(move || {
+            match &mut phase {
+                Phase::Release(m) => {
+                    if let Step::Done(()) = m.step(&reg) {
+                        phase = Phase::Acquire(Acquire::new());
+                    }
+                }
+                Phase::Acquire(m) => {
+                    if let Step::Done((slot, owned)) = m.step(&reg) {
+                        assert!(owned && slot == 0, "one-slot arena must recycle");
+                        phase = Phase::ReadGen(slot);
+                    }
+                }
+                Phase::ReadGen(slot) => {
+                    let gen = reg.generation_relaxed(*slot as usize);
+                    phase = Phase::Resolve(gen);
+                }
+                Phase::Resolve(gen) => {
+                    pre.set(Some(entry.resolve(*gen, 2)));
+                    phase = Phase::Rebind(*gen);
+                }
+                Phase::Rebind(gen) => {
+                    entry.rebind(0, *gen);
+                    phase = Phase::Confirm(*gen);
+                }
+                Phase::Confirm(gen) => {
+                    post.set(Some(entry.resolve(*gen, 2)));
+                    return true;
+                }
+            }
+            false
+        })
+    };
+
+    // T3 — concurrent reader under the dead generation.
+    let reader = {
+        let entry = Rc::clone(&entry);
+        let observed = Rc::clone(&observed);
+        let mut left = 3u32;
+        boxed(move || {
+            observed.borrow_mut().push(entry.resolve(0, 2));
+            left -= 1;
+            left == 0
+        })
+    };
+
+    let finalize = Box::new(move || {
+        // THE dead-slot property: before the new tenant rebinds, the
+        // dead thread's entry must never resolve under the new
+        // generation — stale stamp ⇒ rebind, on every schedule.
+        assert_eq!(
+            pre_rebind.get(),
+            Some(None),
+            "new tenant was routed through a dead thread's map entry"
+        );
+        // And after its own rebind it always routes by it.
+        assert_eq!(post_rebind.get(), Some(Some(0)));
+        // The entry's final stamp is the new generation; the stale
+        // swing can never be the last write.
+        assert_eq!(entry.peek(), (0, 1));
+        // Causality: a reader can only see route 1 under gen 0 if the
+        // swing actually landed.
+        if observed.borrow().iter().any(|o| *o == Some(1)) {
+            assert!(swing_ok.get(), "route 1 appeared without a successful swing");
+        }
+        // Registry conservation: exactly one live lease, no frees.
+        assert_eq!(reg.high_water(), 1);
+        assert_eq!(reg.free_slots(), 0);
+        assert_eq!(reg.epoch(), 1);
+    });
+
+    Scenario {
+        threads: vec![profiler, tenant, reader],
+        finalize,
+    }
+}
+
+// -------------------------------------------------------------- stash --
+
+/// Chain the stash-push machine pushes (static: `PushChain` borrows it).
+static STASH_CHAIN: [u32; 2] = [2, 3];
+
+/// Concurrent stash chain-push and pops conserve blocks, and the
+/// trailing count is exact once every machine has completed.
+pub fn stash_scenario() -> Scenario {
+    struct Shared {
+        stash: CountedStash,
+        links: Vec<AtomicU32>,
+    }
+    let sh = Rc::new(Shared {
+        stash: CountedStash::new(),
+        links: (0..8).map(|_| AtomicU32::new(NIL)).collect(),
+    });
+    sh.stash.push_chain(&sh.links, &[0, 1]);
+
+    let popped = Rc::new(RefCell::new(Vec::new()));
+    let stash_popper = |sh: &Rc<Shared>, popped: &Rc<RefCell<Vec<u32>>>| {
+        let sh = Rc::clone(sh);
+        let popped = Rc::clone(popped);
+        let mut m = StashPop::new();
+        boxed(move || {
+            if let Step::Done(res) = m.step(&sh.stash, &sh.links) {
+                if let Some(g) = res {
+                    popped.borrow_mut().push(g);
+                }
+                true
+            } else {
+                false
+            }
+        })
+    };
+
+    let pusher = {
+        let sh = Rc::clone(&sh);
+        let mut m = StashPush::new(&STASH_CHAIN);
+        boxed(move || matches!(m.step(&sh.stash, &sh.links), Step::Done(())))
+    };
+
+    let threads = vec![
+        pusher,
+        stash_popper(&sh, &popped),
+        stash_popper(&sh, &popped),
+    ];
+    let finalize = Box::new(move || {
+        // Quiescent exactness: the trailing count equals what is
+        // actually threaded on the stash.
+        let expected_left = 4 - popped.borrow().len() as u32;
+        assert_eq!(sh.stash.count(), expected_left, "count drifted at quiescence");
+        let mut remaining = Vec::new();
+        while let Some(g) = sh.stash.pop(&sh.links) {
+            remaining.push(g);
+            assert!(remaining.len() <= 4, "stash corrupted (cycle)");
+        }
+        assert_eq!(sh.stash.count(), 0);
+        // Conservation: seeded {0,1} + pushed {2,3}, nothing lost,
+        // nothing duplicated.
+        let mut all = popped.borrow().clone();
+        all.extend(&remaining);
+        let uniq: BTreeSet<u32> = all.iter().copied().collect();
+        assert_eq!(uniq.len(), all.len(), "stash double-handed a grid index");
+        assert_eq!(uniq, BTreeSet::from([0, 1, 2, 3]), "stash lost a block");
+    });
+    Scenario { threads, finalize }
+}
+
+// ----------------------------------------------------------- magazine --
+
+/// Magazine slot-ownership transitions are mutually exclusive. Two
+/// successor binders (lease generations 1 and 2) and a stale-reclaimer
+/// race one slot word; a non-atomic `inside` cell plays the role of the
+/// magazine pair — if any interleaving ever lets two parties hold the
+/// claim at once, they would concurrently flush/reset the same
+/// magazines (lost blocks or double-freed blocks) and the assert fires.
+pub fn magazine_scenario() -> Scenario {
+    let word = Rc::new(MagWord::new());
+    let inside = Rc::new(Cell::new(0i32));
+    let claims = Rc::new(Cell::new(0u32));
+
+    let binder = |gen: u32| {
+        let word = Rc::clone(&word);
+        let inside = Rc::clone(&inside);
+        let claims = Rc::clone(&claims);
+        enum Phase {
+            Bind(Bind),
+            Publish,
+            Peek,
+        }
+        let mut phase = Phase::Bind(Bind::new(gen));
+        boxed(move || {
+            match &mut phase {
+                Phase::Bind(m) => match m.step(&word) {
+                    Step::Done(BindOutcome::Claimed) => {
+                        // Exclusive section opens on the winning CAS.
+                        inside.set(inside.get() + 1);
+                        claims.set(claims.get() + 1);
+                        assert_eq!(inside.get(), 1, "two exclusive owners of one slot");
+                        phase = Phase::Publish;
+                    }
+                    Step::Done(_) => return true, // AlreadyOwned | Busy
+                    Step::Pending => {}
+                },
+                Phase::Publish => {
+                    // Flush + depth reset happened here in production;
+                    // publishing hands the pair to generation `gen`.
+                    inside.set(inside.get() - 1);
+                    word.publish_owned(gen);
+                    phase = Phase::Peek;
+                }
+                Phase::Peek => {
+                    let _ = word.peek_relaxed();
+                    return true;
+                }
+            }
+            false
+        })
+    };
+
+    let reclaimer = {
+        let word = Rc::clone(&word);
+        let inside = Rc::clone(&inside);
+        let claims = Rc::clone(&claims);
+        enum Phase {
+            Scan,
+            Claim(MagState),
+            Free,
+            Peek,
+        }
+        let mut phase = Phase::Scan;
+        boxed(move || {
+            match &mut phase {
+                Phase::Scan => match word.peek() {
+                    st @ MagState::Owned(_) => phase = Phase::Claim(st),
+                    _ => return true, // nothing to reclaim yet
+                },
+                Phase::Claim(st) => {
+                    if word.try_claim(*st).is_ok() {
+                        inside.set(inside.get() + 1);
+                        claims.set(claims.get() + 1);
+                        assert_eq!(inside.get(), 1, "reclaimer raced an owner's claim");
+                        phase = Phase::Free;
+                    } else {
+                        return true; // lost the CAS: someone else owns it
+                    }
+                }
+                Phase::Free => {
+                    inside.set(inside.get() - 1);
+                    word.publish_free();
+                    phase = Phase::Peek;
+                }
+                Phase::Peek => {
+                    let _ = word.peek_relaxed();
+                    return true;
+                }
+            }
+            false
+        })
+    };
+
+    let threads = vec![binder(1), binder(2), reclaimer];
+    let finalize = Box::new(move || {
+        assert_eq!(inside.get(), 0, "a claim was never published back");
+        // The word ends in a coherent state and the slot was claimed at
+        // least once (binder 1 and 2 cannot both lose every CAS).
+        assert!(claims.get() >= 1);
+        match word.peek() {
+            MagState::Free | MagState::Owned(1) | MagState::Owned(2) => {}
+            other => panic!("slot wedged in {other:?}"),
+        }
+    });
+    Scenario { threads, finalize }
+}
+
+// ------------------------------------------------------- mag publish --
+
+/// The publish/consume handoff behind the magazine protocol — and the
+/// deliberate missing-release-fence detector the ordering audit must
+/// keep killed.
+///
+/// The publisher claims a fresh slot, writes the magazine payload
+/// (modelled by one relaxed store), then hands the slot over with
+/// `publish_owned` — whose **release** store is the only thing ordering
+/// the payload in front of the handoff. A consumer that observes
+/// `Owned` may therefore read the payload and must see it. Weakened to
+/// a relaxed publish, the store buffer may commit the handoff *before*
+/// the payload (out-of-order flush of same-thread stores to different
+/// locations), and the consumer reads a stale magazine — exactly the
+/// lost-block bug a missing release fence causes on real hardware.
+pub fn mag_publish_scenario() -> Scenario {
+    let word = Rc::new(MagWord::new());
+    let payload = Rc::new(AtomicU64::new(0));
+    let seen_a = Rc::new(Cell::new(None::<u64>));
+    let seen_b = Rc::new(Cell::new(None::<u64>));
+
+    let publisher = {
+        let word = Rc::clone(&word);
+        let payload = Rc::clone(&payload);
+        enum Phase {
+            Bind(Bind),
+            Fill,
+            Publish,
+            Tail,
+        }
+        let mut phase = Phase::Bind(Bind::new(1));
+        boxed(move || {
+            match &mut phase {
+                Phase::Bind(m) => {
+                    if let Step::Done(out) = m.step(&word) {
+                        assert_eq!(out, BindOutcome::Claimed, "fresh word must claim");
+                        phase = Phase::Fill;
+                    }
+                }
+                Phase::Fill => {
+                    payload.store(7, Ordering::Relaxed);
+                    phase = Phase::Publish;
+                }
+                Phase::Publish => {
+                    word.publish_owned(1);
+                    phase = Phase::Tail;
+                }
+                // Trailing no-access step: keeps the publisher alive
+                // (buffers unflushed) across consumer reads.
+                Phase::Tail => return true,
+            }
+            false
+        })
+    };
+
+    let consumer = |seen: &Rc<Cell<Option<u64>>>| {
+        let word = Rc::clone(&word);
+        let payload = Rc::clone(&payload);
+        let seen = Rc::clone(seen);
+        enum Phase {
+            Scan(u8),
+            Claim,
+            Read,
+        }
+        let mut phase = Phase::Scan(0);
+        boxed(move || {
+            match &mut phase {
+                Phase::Scan(tries) => match word.peek() {
+                    MagState::Owned(1) => phase = Phase::Claim,
+                    _ if *tries >= 3 => return true, // handoff not seen
+                    _ => *tries += 1,
+                },
+                Phase::Claim => {
+                    if word.try_claim(MagState::Owned(1)).is_ok() {
+                        phase = Phase::Read;
+                    } else {
+                        return true; // raced; nothing to observe
+                    }
+                }
+                Phase::Read => {
+                    seen.set(Some(payload.load(Ordering::Acquire)));
+                    return true;
+                }
+            }
+            false
+        })
+    };
+
+    let threads = vec![publisher, consumer(&seen_a), consumer(&seen_b)];
+    let finalize = Box::new(move || {
+        // THE handoff property: an observed `Owned` implies the payload
+        // written before the publish is visible — on every schedule,
+        // including every store-buffer flush placement.
+        for seen in [&seen_a, &seen_b] {
+            if let Some(v) = seen.get() {
+                assert_eq!(v, 7, "magazine published before its contents landed");
+            }
+        }
+        // At most one consumer can win the claim.
+        assert!(seen_a.get().is_none() || seen_b.get().is_none());
+        // Quiescence: buffers drained on thread exit.
+        assert_eq!(payload.load(Ordering::Acquire), 7);
+        match word.peek() {
+            MagState::Owned(1) | MagState::Claimed => {}
+            other => panic!("handoff wedged in {other:?}"),
+        }
+    });
+
+    Scenario { threads, finalize }
+}
+
+// ------------------------------------------------------------- litmus --
+
+/// Store-buffering litmus (SB): two lanes store their own flag then
+/// read the other's. `(0, 0)` is the relaxed outcome: unreachable under
+/// SC, reachable under TSO unless the stores are `SeqCst`.
+pub fn sb_scenario(order: Ordering, out: &Rc<RefCell<BTreeSet<(u64, u64)>>>) -> Scenario {
+    let x = Rc::new(AtomicU64::new(0));
+    let y = Rc::new(AtomicU64::new(0));
+    let r0 = Rc::new(Cell::new(u64::MAX));
+    let r1 = Rc::new(Cell::new(u64::MAX));
+
+    let lane = |w: Rc<AtomicU64>, r: Rc<AtomicU64>, cell: Rc<Cell<u64>>| {
+        let mut step = 0u8;
+        boxed(move || {
+            step += 1;
+            match step {
+                1 => {
+                    w.store(1, order);
+                    false
+                }
+                2 => {
+                    cell.set(r.load(Ordering::Acquire));
+                    false
+                }
+                _ => true, // trailing step: see module docs
+            }
+        })
+    };
+
+    let threads = vec![
+        lane(Rc::clone(&x), Rc::clone(&y), Rc::clone(&r0)),
+        lane(Rc::clone(&y), Rc::clone(&x), Rc::clone(&r1)),
+    ];
+    let out = Rc::clone(out);
+    let finalize = Box::new(move || {
+        out.borrow_mut().insert((r0.get(), r1.get()));
+    });
+    Scenario { threads, finalize }
+}
+
+/// Message-passing litmus (MP): producer stores data then a flag (with
+/// `publish` ordering); consumer reads flag then data. `(1, 0)` is the
+/// broken-handoff outcome: unreachable while the publish carries
+/// release, reachable once it is relaxed.
+pub fn mp_scenario(publish: Ordering, out: &Rc<RefCell<BTreeSet<(u64, u64)>>>) -> Scenario {
+    let data = Rc::new(AtomicU64::new(0));
+    let flag = Rc::new(AtomicU64::new(0));
+    let seen = Rc::new(Cell::new((u64::MAX, u64::MAX)));
+
+    let producer = {
+        let data = Rc::clone(&data);
+        let flag = Rc::clone(&flag);
+        let mut step = 0u8;
+        boxed(move || {
+            step += 1;
+            match step {
+                1 => {
+                    data.store(7, Ordering::Relaxed);
+                    false
+                }
+                2 => {
+                    flag.store(1, publish);
+                    false
+                }
+                _ => true, // trailing step: see module docs
+            }
+        })
+    };
+
+    let consumer = {
+        let data = Rc::clone(&data);
+        let flag = Rc::clone(&flag);
+        let seen = Rc::clone(&seen);
+        let mut step = 0u8;
+        let mut f = u64::MAX;
+        boxed(move || {
+            step += 1;
+            match step {
+                1 => {
+                    f = flag.load(Ordering::Acquire);
+                    false
+                }
+                2 => {
+                    seen.set((f, data.load(Ordering::Acquire)));
+                    false
+                }
+                _ => true,
+            }
+        })
+    };
+
+    let out = Rc::clone(out);
+    let finalize = Box::new(move || {
+        out.borrow_mut().insert(seen.get());
+    });
+    Scenario {
+        threads: vec![producer, consumer],
+        finalize,
+    }
+}
+
+/// Explore the SB litmus under `ex` and collect the outcome set.
+pub fn sb_outcomes(ex: &Explorer, order: Ordering) -> BTreeSet<(u64, u64)> {
+    let out = Rc::new(RefCell::new(BTreeSet::new()));
+    let r = ex.explore(|| sb_scenario(order, &out));
+    assert!(!r.capped, "SB litmus exploration capped");
+    out.borrow().clone()
+}
+
+/// Explore the MP litmus under `ex` and collect the outcome set.
+pub fn mp_outcomes(ex: &Explorer, publish: Ordering) -> BTreeSet<(u64, u64)> {
+    let out = Rc::new(RefCell::new(BTreeSet::new()));
+    let r = ex.explore(|| mp_scenario(publish, &out));
+    assert!(!r.capped, "MP litmus exploration capped");
+    out.borrow().clone()
+}

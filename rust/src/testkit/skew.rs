@@ -81,11 +81,10 @@ pub fn run_skewed_affinity(
                     if held.len() >= cfg.hold {
                         let i = rng.gen_usize(0, held.len());
                         let addr = held.swap_remove(i);
-                        // SAFETY: `addr` was recorded from a successful `allocate` and removed
-                        // from `held`, so each block is freed exactly once.
-                        unsafe {
-                            pool.deallocate(NonNull::new_unchecked(addr as *mut u8))
-                        };
+                        // SAFETY: `addr` came from a successful `allocate`, so non-null.
+                        let p = unsafe { NonNull::new_unchecked(addr as *mut u8) };
+                        // SAFETY: removed from `held`: each block is freed exactly once.
+                        unsafe { pool.deallocate(p) };
                     }
                     if let Some(p) = pool.allocate() {
                         held.push(p.as_ptr() as usize);
@@ -100,8 +99,10 @@ pub fn run_skewed_affinity(
                     churn(&mut held, &mut rng);
                 }
                 for addr in held {
+                    // SAFETY: `addr` came from a successful `allocate`, so non-null.
+                    let p = unsafe { NonNull::new_unchecked(addr as *mut u8) };
                     // SAFETY: the remaining addresses were never freed by `churn`.
-                    unsafe { pool.deallocate(NonNull::new_unchecked(addr as *mut u8)) };
+                    unsafe { pool.deallocate(p) };
                 }
             });
         }

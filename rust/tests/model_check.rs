@@ -1,70 +1,45 @@
-//! Bounded model checking of the pool family's five lock-free protocols.
+//! Bounded model checking of the pool family's five lock-free protocols,
+//! under two memory models.
 //!
-//! Each test builds a small adversarial scenario out of the *production*
-//! state machines in `fastpool::pool::proto` (the same code the release
-//! hot path inlines), hands it to the deterministic interleaving explorer
-//! in `fastpool::sync::model`, and asserts a safety invariant over
-//! **every** schedule within the preemption bound. Runs under both
-//! normal builds and `RUSTFLAGS="--cfg pallas_model"`; the model build
-//! additionally audits that every virtual-thread step performs at most
-//! one shared-memory access (the soundness contract of the exploration).
+//! The adversarial scenarios live in `fastpool::testkit::model_scenarios`
+//! (shared with the ordering-mutation audit in `tests/ordering_audit.rs`);
+//! this suite hands each to the deterministic interleaving explorer in
+//! `fastpool::sync::model` and asserts its safety invariant over **every**
+//! schedule within the bounds:
 //!
-//! Proven here, per ISSUE/EXPERIMENTS §ModelCheck:
+//! * the **SC arm** runs in every build: sequentially-consistent
+//!   interleaving at preemption bound 3 — the PR 7 proofs, unchanged;
+//! * the **TSO arm** runs under `RUSTFLAGS="--cfg pallas_model"`: each
+//!   virtual thread additionally gets a bounded FIFO store buffer whose
+//!   flushes are schedulable explorer actions, so the proofs extend past
+//!   sequential consistency to x86-style store→load reordering (plus
+//!   out-of-order flushing of relaxed stores; see `sync::model` docs).
 //!
-//! 1. Treiber push/pop never hands the same index to two owners
-//!    ([`treiber_never_double_hands_an_index`]).
-//! 2. The generation-stamped rehome map never routes a recycled slot's
-//!    new tenant through a dead thread's entry
-//!    ([`rehome_never_routes_through_a_dead_slot`]).
-//! 3. Stash detach/drain conserves blocks and the trailing count is
-//!    exact at quiescence ([`stash_conserves_blocks`]).
-//! 4. Magazine slot ownership is mutually exclusive — no interleaving
-//!    lets two claimers flush/reset the same magazines concurrently
-//!    (no leak, no double-free) ([`magazine_ownership_is_exclusive`]).
-//! 5. With generation tags deliberately disabled (`TaggedHead<false>`),
-//!    the classic ABA double-handout exists and the explorer finds it
-//!    ([`aba_mutant_is_caught`]) — the mutation test that shows the
-//!    checker has teeth.
+//! Alongside the proofs run the mutation tests that keep the checker
+//! honest: the untagged-Treiber ABA double-handout (SC and TSO) and the
+//! magazine publish with its release ordering stripped (TSO only — the
+//! bug is invisible under SC, which is exactly the point).
 //!
-//! Every exploration asserts `!capped` (the bounded space was *covered*,
-//! not sampled) and a floor of ≥ 1000 distinct schedules, and prints a
-//! `MODEL schedules=<n> protocol=<name>` line the CI job greps.
+//! Results are written machine-readable to `bench_out/model_check.json`
+//! — schedule counts, cap flags, buffering stats, and a verdict per
+//! mutant — and CI asserts the floors with `jq` instead of grepping
+//! stdout. The human-readable `MODEL ...` lines remain for log readers.
 
-use std::cell::{Cell, RefCell};
-use std::collections::BTreeSet;
-use std::rc::Rc;
+use std::panic::catch_unwind;
 
-use fastpool::pool::proto::head::{Pop, Push, TaggedHead, NIL};
-use fastpool::pool::proto::lease::{Acquire, LeaseRegistry, Release};
-use fastpool::pool::proto::mag::{Bind, BindOutcome, MagState, MagWord};
-use fastpool::pool::proto::rehome::GenEntry;
-use fastpool::pool::proto::stash::{CountedStash, Stash, StashPop, StashPush};
-use fastpool::pool::proto::{Head, Step};
-use fastpool::sync::model::{Explorer, Scenario, VThread};
-use fastpool::sync::AtomicU32;
+use fastpool::sync::model::Explorer;
+#[cfg(pallas_model)]
+use fastpool::sync::model::MemoryModel;
+use fastpool::testkit::model_scenarios as scen;
+use fastpool::util::json::{self, Json};
 
-/// Schedule floor every protocol exploration must clear (acceptance
-/// criterion; CI greps the printed counts against the same floor).
+/// Schedule floor every protocol exploration must clear, in both arms
+/// (acceptance criterion; CI asserts the same floor over the JSON).
 const SCHEDULE_FLOOR: u64 = 1_000;
 
-/// Adapt a closure to a virtual thread: each call is one step, `true`
-/// means finished.
-struct StepFn<F: FnMut() -> bool>(F);
-
-impl<F: FnMut() -> bool> VThread for StepFn<F> {
-    fn step(&mut self) -> bool {
-        (self.0)()
-    }
-}
-
-fn boxed<F: FnMut() -> bool + 'static>(f: F) -> Box<dyn VThread> {
-    Box::new(StepFn(f))
-}
-
-/// Explorer configuration shared by the protocol runs: full coverage at
-/// preemption bound 3, with hard stops that turn a state-space bug into
-/// a test failure instead of a hang.
-fn checker() -> Explorer {
+/// The SC arm: full coverage at preemption bound 3, with hard stops
+/// that turn a state-space bug into a test failure instead of a hang.
+fn sc_checker() -> Explorer {
     Explorer {
         preemption_bound: 3,
         max_schedules: 4_000_000,
@@ -73,508 +48,150 @@ fn checker() -> Explorer {
     }
 }
 
-fn report(protocol: &str, schedules: u64, capped: bool) {
-    println!("MODEL schedules={schedules} protocol={protocol} floor={SCHEDULE_FLOOR}");
-    assert!(!capped, "{protocol}: schedule space was capped, not covered");
+/// The TSO arm: store buffers of depth 2 with up to 2 scheduled flushes
+/// per schedule. Preemption bound 2 — the flush actions multiply the
+/// branch factor, and every store-buffer window in these protocols is
+/// at most a few steps wide, so bound 2 already covers the reorderings
+/// that matter while staying well inside the schedule cap.
+#[cfg(pallas_model)]
+fn tso_checker() -> Explorer {
+    Explorer {
+        memory: MemoryModel::Tso,
+        preemption_bound: 2,
+        store_buffer_bound: 2,
+        flush_bound: 2,
+        max_schedules: 4_000_000,
+        max_steps_per_schedule: 10_000,
+        ..Explorer::default()
+    }
+}
+
+fn report(protocol: &str, arm: &str, schedules: u64, capped: bool) {
+    println!("MODEL arm={arm} schedules={schedules} protocol={protocol} floor={SCHEDULE_FLOOR}");
+    assert!(!capped, "{protocol}/{arm}: schedule space was capped, not covered");
     assert!(
         schedules >= SCHEDULE_FLOOR,
-        "{protocol}: only {schedules} schedules explored (floor {SCHEDULE_FLOOR})"
+        "{protocol}/{arm}: only {schedules} schedules explored (floor {SCHEDULE_FLOOR})"
     );
 }
 
-// ------------------------------------------------------------ treiber --
-
-/// Shared Treiber instance: head + link side table, generic over the
-/// ABA-tag mutation switch.
-struct Stack<const TAG: bool> {
-    head: TaggedHead<TAG>,
-    links: Vec<AtomicU32>,
-}
-
-impl<const TAG: bool> Stack<TAG> {
-    fn seeded(cap: usize, seed: &[u32]) -> Rc<Self> {
-        let s = Rc::new(Self {
-            head: TaggedHead::new(),
-            links: (0..cap).map(|_| AtomicU32::new(NIL)).collect(),
-        });
-        for &i in seed.iter().rev() {
-            s.head.push(&s.links, i);
-        }
-        s
-    }
-
-    /// Drain at quiescence with a cycle guard: a corrupted list (the ABA
-    /// mutant can splice one) must fail the assert, not hang the test.
-    fn drain_bounded(&self) -> Vec<u32> {
-        let mut out = Vec::new();
-        for _ in 0..=self.links.len() {
-            match self.head.pop(&self.links) {
-                Some(i) => out.push(i),
-                None => return out,
-            }
-        }
-        panic!("drain exceeded capacity — free list corrupted (cycle)");
-    }
-}
-
-/// A thread popping `n` times through the production `Pop` machine,
-/// recording what it was handed.
-fn popper<const TAG: bool>(
-    stack: Rc<Stack<TAG>>,
-    got: Rc<RefCell<Vec<u32>>>,
-    n: usize,
-) -> Box<dyn VThread> {
-    let mut remaining = n;
-    let mut pop = Pop::new();
-    boxed(move || {
-        match pop.step(&stack.head, &stack.links) {
-            Step::Done(res) => {
-                if let Some(i) = res {
-                    got.borrow_mut().push(i);
-                }
-                remaining -= 1;
-                if remaining == 0 {
-                    return true;
-                }
-                pop = Pop::new();
-            }
-            Step::Pending => {}
-        }
-        false
-    })
-}
-
-/// The churn harness behind proofs (1) and (5): two poppers and an
-/// adversary that pops twice and re-pushes its *first* victim — the
-/// classic ABA recipe. Under `TAG = true` the invariant must hold on
-/// every schedule; under `TAG = false` at least one schedule (one
-/// preemption suffices) double-hands an index.
-fn treiber_scenario<const TAG: bool>() -> Scenario {
-    let stack = Stack::<TAG>::seeded(4, &[0, 1, 2]);
-    let victim_got = Rc::new(RefCell::new(Vec::new()));
-    let third_got = Rc::new(RefCell::new(Vec::new()));
-    let adv_got = Rc::new(RefCell::new(Vec::new()));
-    let adv_pushed = Rc::new(RefCell::new(Vec::new()));
-
-    // Adversary: pop, pop, push(first pop) — drives the head through
-    // A → B → A with the tag as the only defence.
-    let adversary = {
-        let stack = Rc::clone(&stack);
-        let got = Rc::clone(&adv_got);
-        let pushed = Rc::clone(&adv_pushed);
-        enum Phase {
-            Pop(Pop, u8),
-            Push(Push),
-        }
-        let mut phase = Phase::Pop(Pop::new(), 0);
-        boxed(move || {
-            match &mut phase {
-                Phase::Pop(pop, k) => {
-                    if let Step::Done(res) = pop.step(&stack.head, &stack.links) {
-                        if let Some(i) = res {
-                            got.borrow_mut().push(i);
-                        }
-                        if *k == 0 {
-                            phase = Phase::Pop(Pop::new(), 1);
-                        } else {
-                            // Re-push the first victim if we got one.
-                            match got.borrow().first().copied() {
-                                Some(first) => {
-                                    pushed.borrow_mut().push(first);
-                                    phase = Phase::Push(Push::new(first));
-                                }
-                                None => return true,
-                            }
-                        }
-                    }
-                    false
-                }
-                Phase::Push(push) => {
-                    matches!(push.step(&stack.head, &stack.links), Step::Done(()))
-                }
-            }
-        })
-    };
-
-    let threads: Vec<Box<dyn VThread>> = vec![
-        popper(Rc::clone(&stack), Rc::clone(&victim_got), 1),
-        adversary,
-        popper(Rc::clone(&stack), Rc::clone(&third_got), 1),
-    ];
-
-    let finalize = Box::new(move || {
-        // Outstanding = everything popped minus what was pushed back.
-        let mut outstanding: Vec<u32> = Vec::new();
-        outstanding.extend(victim_got.borrow().iter());
-        outstanding.extend(third_got.borrow().iter());
-        outstanding.extend(adv_got.borrow().iter());
-        for p in adv_pushed.borrow().iter() {
-            let pos = outstanding
-                .iter()
-                .position(|x| x == p)
-                .expect("pushed an index it never popped");
-            outstanding.swap_remove(pos);
-        }
-        let remaining = stack.drain_bounded();
-        let mut all = outstanding.clone();
-        all.extend(&remaining);
-        let uniq: BTreeSet<u32> = all.iter().copied().collect();
-        assert_eq!(
-            uniq.len(),
-            all.len(),
-            "index handed to two owners: outstanding {outstanding:?} remaining {remaining:?}"
-        );
-        assert_eq!(
-            uniq,
-            BTreeSet::from([0, 1, 2]),
-            "blocks lost or invented: outstanding {outstanding:?} remaining {remaining:?}"
-        );
-    });
-
-    Scenario { threads, finalize }
-}
-
-/// Proof (1): over every schedule within the bound, tagged Treiber
-/// push/pop neither double-hands nor loses an index.
-#[test]
-fn treiber_never_double_hands_an_index() {
-    let r = checker().explore(treiber_scenario::<true>);
-    report("treiber_push_pop", r.schedules, r.capped);
-}
-
-/// Proof (5), the mutation test: the identical harness with the ABA tag
-/// disabled must *fail* — if the checker cannot catch the classic bug,
-/// none of the green results above mean anything.
-#[test]
-fn aba_mutant_is_caught() {
-    let caught = std::panic::catch_unwind(|| {
-        checker().explore(treiber_scenario::<false>);
-    });
-    assert!(
-        caught.is_err(),
-        "untagged Treiber survived exploration — the checker lost its teeth"
+/// One JSON mutant row, asserting the verdict matches the expectation.
+fn mutant_row(name: &str, memory: &str, expect_killed: bool, killed: bool) -> Json {
+    println!("MODEL mutant={name} memory={memory} killed={killed}");
+    assert_eq!(
+        killed, expect_killed,
+        "mutant {name} under {memory}: expected killed={expect_killed}"
     );
-    println!("MODEL protocol=aba_mutant caught=true");
+    json::obj(vec![
+        ("name", json::s(name)),
+        ("memory", json::s(memory)),
+        ("expect_killed", Json::Bool(expect_killed)),
+        ("killed", Json::Bool(killed)),
+    ])
 }
 
-// ------------------------------------------------------------- rehome --
-
-/// Proof (2): a recycled home slot's *new* tenant is never routed
-/// through the dead thread's map entry, even while a stale steal-aware
-/// `swing` races the recycle and the tenant's own rebind.
+/// The whole protocol suite — every scenario under every available
+/// memory model, plus the checker's mutation tests — with the results
+/// written to `bench_out/model_check.json` for CI's jq assertions.
 #[test]
-fn rehome_never_routes_through_a_dead_slot() {
-    let r = checker().explore(|| {
-        // One-slot registry: the contended resource is slot 0.
-        let reg = Rc::new(LeaseRegistry::<1>::new());
-        let entry = Rc::new(GenEntry::unbound());
-        let (slot, owned) = reg.acquire();
-        assert!(owned && slot == 0);
-        entry.rebind(0, 0); // old tenant binds under generation 0
-
-        let swing_ok = Rc::new(Cell::new(false));
-        let pre_rebind = Rc::new(Cell::new(None::<Option<usize>>));
-        let post_rebind = Rc::new(Cell::new(None::<Option<usize>>));
-        let observed = Rc::new(RefCell::new(Vec::new()));
-
-        // T1 — stale profiler: decided to move slot 0's route 0 → 1
-        // under generation 0, and fires the swing at an arbitrary point.
-        let profiler = {
-            let entry = Rc::clone(&entry);
-            let swing_ok = Rc::clone(&swing_ok);
-            let mut fired = false;
-            boxed(move || {
-                if !fired {
-                    swing_ok.set(entry.swing(0, 1, 0));
-                    fired = true;
-                    false
-                } else {
-                    // One trailing resolve under the dead generation —
-                    // result unconstrained, exercises the read path.
-                    let _ = entry.resolve(0, 2);
-                    true
-                }
-            })
-        };
-
-        // T2 — churn + new tenant: release the slot (gen 0 → 1),
-        // re-acquire it, verify the stale entry is rejected, rebind,
-        // and resolve again.
-        let tenant = {
-            let reg = Rc::clone(&reg);
-            let entry = Rc::clone(&entry);
-            let pre = Rc::clone(&pre_rebind);
-            let post = Rc::clone(&post_rebind);
-            enum Phase {
-                Release(Release),
-                Acquire(Acquire),
-                ReadGen(u32),
-                Resolve(u32),
-                Rebind(u32),
-                Confirm(u32),
-            }
-            let mut phase = Phase::Release(Release::new(0));
-            boxed(move || {
-                match &mut phase {
-                    Phase::Release(m) => {
-                        if let Step::Done(()) = m.step(&reg) {
-                            phase = Phase::Acquire(Acquire::new());
-                        }
-                    }
-                    Phase::Acquire(m) => {
-                        if let Step::Done((slot, owned)) = m.step(&reg) {
-                            assert!(owned && slot == 0, "one-slot arena must recycle");
-                            phase = Phase::ReadGen(slot);
-                        }
-                    }
-                    Phase::ReadGen(slot) => {
-                        let gen = reg.generation_relaxed(*slot as usize);
-                        phase = Phase::Resolve(gen);
-                    }
-                    Phase::Resolve(gen) => {
-                        pre.set(Some(entry.resolve(*gen, 2)));
-                        phase = Phase::Rebind(*gen);
-                    }
-                    Phase::Rebind(gen) => {
-                        entry.rebind(0, *gen);
-                        phase = Phase::Confirm(*gen);
-                    }
-                    Phase::Confirm(gen) => {
-                        post.set(Some(entry.resolve(*gen, 2)));
-                        return true;
-                    }
-                }
-                false
-            })
-        };
-
-        // T3 — concurrent reader under the dead generation.
-        let reader = {
-            let entry = Rc::clone(&entry);
-            let observed = Rc::clone(&observed);
-            let mut left = 3u32;
-            boxed(move || {
-                observed.borrow_mut().push(entry.resolve(0, 2));
-                left -= 1;
-                left == 0
-            })
-        };
-
-        let finalize = Box::new(move || {
-            // THE dead-slot property: before the new tenant rebinds, the
-            // dead thread's entry must never resolve under the new
-            // generation — stale stamp ⇒ rebind, on every schedule.
-            assert_eq!(
-                pre_rebind.get(),
-                Some(None),
-                "new tenant was routed through a dead thread's map entry"
-            );
-            // And after its own rebind it always routes by it.
-            assert_eq!(post_rebind.get(), Some(Some(0)));
-            // The entry's final stamp is the new generation; the stale
-            // swing can never be the last write.
-            assert_eq!(entry.peek(), (0, 1));
-            // Causality: a reader can only see route 1 under gen 0 if
-            // the swing actually landed.
-            if observed.borrow().iter().any(|o| *o == Some(1)) {
-                assert!(swing_ok.get(), "route 1 appeared without a successful swing");
-            }
-            // Registry conservation: exactly one live lease, no frees.
-            assert_eq!(reg.high_water(), 1);
-            assert_eq!(reg.free_slots(), 0);
-            assert_eq!(reg.epoch(), 1);
-        });
-
-        Scenario {
-            threads: vec![profiler, tenant, reader],
-            finalize,
-        }
-    });
-    report("rehome_swing", r.schedules, r.capped);
-}
-
-// -------------------------------------------------------------- stash --
-
-/// Chain the stash-push machine pushes (static: `PushChain` borrows it).
-static STASH_CHAIN: [u32; 2] = [2, 3];
-
-/// Proof (3): concurrent stash chain-push and pops conserve blocks, and
-/// the trailing count is exact once every machine has completed.
-#[test]
-fn stash_conserves_blocks() {
-    struct Shared {
-        stash: CountedStash,
-        links: Vec<AtomicU32>,
-    }
-    let r = checker().explore(|| {
-        let sh = Rc::new(Shared {
-            stash: CountedStash::new(),
-            links: (0..8).map(|_| AtomicU32::new(NIL)).collect(),
-        });
-        sh.stash.push_chain(&sh.links, &[0, 1]);
-
-        let popped = Rc::new(RefCell::new(Vec::new()));
-        let stash_popper = |sh: &Rc<Shared>, popped: &Rc<RefCell<Vec<u32>>>| {
-            let sh = Rc::clone(sh);
-            let popped = Rc::clone(popped);
-            let mut m = StashPop::new();
-            boxed(move || {
-                if let Step::Done(res) = m.step(&sh.stash, &sh.links) {
-                    if let Some(g) = res {
-                        popped.borrow_mut().push(g);
-                    }
-                    true
-                } else {
-                    false
-                }
-            })
-        };
-
-        let pusher = {
-            let sh = Rc::clone(&sh);
-            let mut m = StashPush::new(&STASH_CHAIN);
-            boxed(move || matches!(m.step(&sh.stash, &sh.links), Step::Done(())))
-        };
-
-        let threads = vec![
-            pusher,
-            stash_popper(&sh, &popped),
-            stash_popper(&sh, &popped),
+fn protocol_suite_writes_model_check_json() {
+    let mut protocols: Vec<Json> = Vec::new();
+    for (name, build) in scen::all_protocols() {
+        let sc = sc_checker().explore(build);
+        report(name, "sc", sc.schedules, sc.capped);
+        #[cfg_attr(not(pallas_model), allow(unused_mut))]
+        let mut row = vec![
+            ("name", json::s(name)),
+            (
+                "sc",
+                json::obj(vec![
+                    ("schedules", json::num(sc.schedules as f64)),
+                    ("capped", Json::Bool(sc.capped)),
+                ]),
+            ),
         ];
-        let finalize = Box::new(move || {
-            // Quiescent exactness: the trailing count equals what is
-            // actually threaded on the stash.
-            let expected_left = 4 - popped.borrow().len() as u32;
-            assert_eq!(sh.stash.count(), expected_left, "count drifted at quiescence");
-            let mut remaining = Vec::new();
-            while let Some(g) = sh.stash.pop(&sh.links) {
-                remaining.push(g);
-                assert!(remaining.len() <= 4, "stash corrupted (cycle)");
-            }
-            assert_eq!(sh.stash.count(), 0);
-            // Conservation: seeded {0,1} + pushed {2,3}, nothing lost,
-            // nothing duplicated.
-            let mut all = popped.borrow().clone();
-            all.extend(&remaining);
-            let uniq: BTreeSet<u32> = all.iter().copied().collect();
-            assert_eq!(uniq.len(), all.len(), "stash double-handed a grid index");
-            assert_eq!(uniq, BTreeSet::from([0, 1, 2, 3]), "stash lost a block");
-        });
-        Scenario { threads, finalize }
-    });
-    report("stash_detach_drain", r.schedules, r.capped);
-}
+        #[cfg(pallas_model)]
+        {
+            let tso = tso_checker().explore(build);
+            report(name, "tso", tso.schedules, tso.capped);
+            assert!(
+                tso.buffered_stores > 0,
+                "{name}/tso: no store was ever buffered — the TSO arm is not engaging"
+            );
+            row.push((
+                "tso",
+                json::obj(vec![
+                    ("schedules", json::num(tso.schedules as f64)),
+                    ("capped", Json::Bool(tso.capped)),
+                    ("buffered_stores", json::num(tso.buffered_stores as f64)),
+                    ("total_flushes", json::num(tso.total_flushes as f64)),
+                    ("forced_flushes", json::num(tso.forced_flushes as f64)),
+                    ("max_flushes_seen", json::num(tso.max_flushes_seen as f64)),
+                ]),
+            ));
+        }
+        protocols.push(json::obj(row));
+    }
 
-// ----------------------------------------------------------- magazine --
+    // --- mutation tests: does the checker still have teeth? ----------
+    let mut mutants: Vec<Json> = Vec::new();
 
-/// Proof (4): magazine slot-ownership transitions are mutually
-/// exclusive. Two successor binders (lease generations 1 and 2) and a
-/// stale-reclaimer race one slot word; a non-atomic `inside` cell plays
-/// the role of the magazine pair — if any interleaving ever lets two
-/// parties hold the claim at once, they would concurrently flush/reset
-/// the same magazines (lost blocks or double-freed blocks) and the
-/// assert fires.
-#[test]
-fn magazine_ownership_is_exclusive() {
-    let r = checker().explore(|| {
-        let word = Rc::new(MagWord::new());
-        let inside = Rc::new(Cell::new(0i32));
-        let claims = Rc::new(Cell::new(0u32));
+    // The classic ABA double-handout with the generation tag disabled:
+    // caught under plain SC interleaving (one preemption suffices).
+    let killed = catch_unwind(|| {
+        sc_checker().explore(scen::treiber_scenario::<false>);
+    })
+    .is_err();
+    mutants.push(mutant_row("aba_untagged", "sc", true, killed));
 
-        let binder = |gen: u32| {
-            let word = Rc::clone(&word);
-            let inside = Rc::clone(&inside);
-            let claims = Rc::clone(&claims);
-            enum Phase {
-                Bind(Bind),
-                Publish,
-                Peek,
-            }
-            let mut phase = Phase::Bind(Bind::new(gen));
-            boxed(move || {
-                match &mut phase {
-                    Phase::Bind(m) => match m.step(&word) {
-                        Step::Done(BindOutcome::Claimed) => {
-                            // Exclusive section opens on the winning CAS.
-                            inside.set(inside.get() + 1);
-                            claims.set(claims.get() + 1);
-                            assert_eq!(inside.get(), 1, "two exclusive owners of one slot");
-                            phase = Phase::Publish;
-                        }
-                        Step::Done(_) => return true, // AlreadyOwned | Busy
-                        Step::Pending => {}
-                    },
-                    Phase::Publish => {
-                        // Flush + depth reset happened here in production;
-                        // publishing hands the pair to generation `gen`.
-                        inside.set(inside.get() - 1);
-                        word.publish_owned(gen);
-                        phase = Phase::Peek;
-                    }
-                    Phase::Peek => {
-                        let _ = word.peek_relaxed();
-                        return true;
-                    }
-                }
-                false
-            })
-        };
+    #[cfg(pallas_model)]
+    {
+        use fastpool::pool::proto::sites;
+        use fastpool::sync::Ordering;
 
-        let reclaimer = {
-            let word = Rc::clone(&word);
-            let inside = Rc::clone(&inside);
-            let claims = Rc::clone(&claims);
-            enum Phase {
-                Scan,
-                Claim(MagState),
-                Free,
-                Peek,
-            }
-            let mut phase = Phase::Scan;
-            boxed(move || {
-                match &mut phase {
-                    Phase::Scan => match word.peek() {
-                        st @ MagState::Owned(_) => phase = Phase::Claim(st),
-                        _ => return true, // nothing to reclaim yet
-                    },
-                    Phase::Claim(st) => {
-                        if word.try_claim(*st).is_ok() {
-                            inside.set(inside.get() + 1);
-                            claims.set(claims.get() + 1);
-                            assert_eq!(inside.get(), 1, "reclaimer raced an owner's claim");
-                            phase = Phase::Free;
-                        } else {
-                            return true; // lost the CAS: someone else owns it
-                        }
-                    }
-                    Phase::Free => {
-                        inside.set(inside.get() - 1);
-                        word.publish_free();
-                        phase = Phase::Peek;
-                    }
-                    Phase::Peek => {
-                        let _ = word.peek_relaxed();
-                        return true;
-                    }
-                }
-                false
-            })
-        };
+        // The same ABA mutant must stay caught when store buffers are in
+        // play — TSO only adds behaviours, it must not hide any.
+        let killed = catch_unwind(|| {
+            tso_checker().explore(scen::treiber_scenario::<false>);
+        })
+        .is_err();
+        mutants.push(mutant_row("aba_untagged", "tso", true, killed));
 
-        let threads = vec![binder(1), binder(2), reclaimer];
-        let finalize = Box::new(move || {
-            assert_eq!(inside.get(), 0, "a claim was never published back");
-            // The word ends in a coherent state and the slot was claimed
-            // at least once (binder 1 and 2 cannot both lose every CAS).
-            assert!(claims.get() >= 1);
-            match word.peek() {
-                MagState::Free | MagState::Owned(1) | MagState::Owned(2) => {}
-                other => panic!("slot wedged in {other:?}"),
-            }
-        });
-        Scenario { threads, finalize }
-    });
-    report("magazine_bind_reclaim", r.schedules, r.capped);
+        // The deliberate missing-release-fence mutant: strip the release
+        // ordering off the magazine ownership publish. The store buffer
+        // may then commit the handoff before the payload, and a consumer
+        // reads a stale magazine. TSO must kill it...
+        sites::set_override(sites::MAG_PUBLISH_OWNED, Ordering::Relaxed);
+        let tso_killed = catch_unwind(|| {
+            tso_checker().explore(scen::mag_publish_scenario);
+        })
+        .is_err();
+        // ...and SC must be blind to it — under sequential consistency
+        // stores commit in program order, so nothing distinguishes the
+        // mutant. This is the whole reason the TSO arm exists.
+        let sc_killed = catch_unwind(|| {
+            sc_checker().explore(scen::mag_publish_scenario);
+        })
+        .is_err();
+        sites::clear_override();
+        mutants.push(mutant_row("mag_publish_relaxed", "tso", true, tso_killed));
+        mutants.push(mutant_row("mag_publish_relaxed", "sc", false, sc_killed));
+    }
+
+    let arms: Vec<Json> = if cfg!(pallas_model) {
+        vec![json::s("sc"), json::s("tso")]
+    } else {
+        vec![json::s("sc")]
+    };
+    let out = json::obj(vec![
+        ("floor", json::num(SCHEDULE_FLOOR as f64)),
+        ("arms", Json::Arr(arms)),
+        ("protocols", Json::Arr(protocols)),
+        ("mutants", Json::Arr(mutants)),
+    ]);
+    std::fs::create_dir_all("bench_out").expect("create bench_out/");
+    std::fs::write("bench_out/model_check.json", out.to_string() + "\n")
+        .expect("write bench_out/model_check.json");
 }
 
 // ----------------------------------------------- checker meta-tests --
@@ -593,7 +210,7 @@ fn protocol_coverage_grows_with_preemption_bound() {
             max_steps_per_schedule: 10_000,
             ..Explorer::default()
         };
-        let r = ex.explore(treiber_scenario::<true>);
+        let r = ex.explore(scen::treiber_scenario::<true>);
         assert!(!r.capped);
         if bound == 0 {
             assert_eq!(r.schedules, 6, "bound 0 = run-to-completion orders of 3 threads");
@@ -614,8 +231,8 @@ fn protocol_coverage_grows_with_preemption_bound() {
 #[test]
 fn protocol_exploration_is_deterministic() {
     let run = |seed: u64| {
-        let ex = Explorer { seed, ..checker() };
-        ex.explore(treiber_scenario::<true>)
+        let ex = Explorer { seed, ..sc_checker() };
+        ex.explore(scen::treiber_scenario::<true>)
     };
     let a = run(7);
     let b = run(7);
@@ -624,6 +241,117 @@ fn protocol_exploration_is_deterministic() {
     assert_eq!(a.total_steps, b.total_steps);
     assert_eq!(a.schedules, c.schedules, "seed must not change the explored set");
 }
+
+// ------------------------------------------- weak-memory meta-tests --
+
+/// Litmus explorer: small two-thread scenarios, so full coverage is
+/// cheap even at preemption bound 3 with both flush slots.
+#[cfg(pallas_model)]
+fn litmus(memory: MemoryModel) -> Explorer {
+    Explorer {
+        memory,
+        preemption_bound: 3,
+        store_buffer_bound: 2,
+        flush_bound: 2,
+        ..Explorer::default()
+    }
+}
+
+/// Store-buffering litmus matrix: the calibration test that the TSO arm
+/// models exactly the relaxation it claims — `(0,0)` appears under TSO
+/// with non-SeqCst stores, and nowhere else.
+#[cfg(pallas_model)]
+#[test]
+fn sb_litmus_matrix() {
+    use fastpool::sync::Ordering;
+    use MemoryModel::{Sc, Tso};
+    let zz = (0u64, 0u64);
+
+    let sc = scen::sb_outcomes(&litmus(Sc), Ordering::Relaxed);
+    assert!(!sc.contains(&zz), "SC produced the store-buffering outcome");
+    assert!(sc.contains(&(1, 1)) && sc.contains(&(0, 1)) && sc.contains(&(1, 0)));
+
+    let tso_relaxed = scen::sb_outcomes(&litmus(Tso), Ordering::Relaxed);
+    assert!(tso_relaxed.contains(&zz), "TSO must reach the store-buffering outcome");
+    assert!(sc.is_subset(&tso_relaxed), "TSO lost an SC outcome");
+
+    let tso_release = scen::sb_outcomes(&litmus(Tso), Ordering::Release);
+    assert!(
+        tso_release.contains(&zz),
+        "release stores still buffer: SB reordering must remain reachable"
+    );
+
+    let tso_seqcst = scen::sb_outcomes(&litmus(Tso), Ordering::SeqCst);
+    assert!(!tso_seqcst.contains(&zz), "SeqCst stores must drain and write through");
+}
+
+/// Message-passing litmus matrix: a release publish forbids the broken
+/// handoff `(flag=1, data=0)` even under TSO; a relaxed publish admits
+/// it (out-of-order flush); SC never produces it regardless.
+#[cfg(pallas_model)]
+#[test]
+fn mp_litmus_matrix() {
+    use fastpool::sync::Ordering;
+    use MemoryModel::{Sc, Tso};
+    let broken = (1u64, 0u64);
+
+    let tso_release = scen::mp_outcomes(&litmus(Tso), Ordering::Release);
+    assert!(!tso_release.contains(&broken), "release publish leaked a stale read");
+    assert!(tso_release.contains(&(1, 7)), "handoff never observed");
+
+    let tso_relaxed = scen::mp_outcomes(&litmus(Tso), Ordering::Relaxed);
+    assert!(
+        tso_relaxed.contains(&broken),
+        "relaxed publish must be able to overtake the payload store"
+    );
+
+    let sc_relaxed = scen::mp_outcomes(&litmus(Sc), Ordering::Relaxed);
+    assert!(!sc_relaxed.contains(&broken), "SC has no store buffer to leak through");
+}
+
+/// SC schedules are a strict subset of TSO schedules at equal bounds:
+/// the TSO arm adds flush interleavings and removes nothing.
+#[cfg(pallas_model)]
+#[test]
+fn sc_schedules_strict_subset_of_tso() {
+    use std::cell::RefCell;
+    use std::collections::BTreeSet;
+    use std::rc::Rc;
+
+    use fastpool::sync::Ordering;
+
+    let traces = |memory| {
+        let ex = Explorer { record_traces: true, ..litmus(memory) };
+        let out = Rc::new(RefCell::new(BTreeSet::new()));
+        let r = ex.explore(|| scen::mp_scenario(Ordering::Release, &out));
+        r.traces.into_iter().collect::<BTreeSet<Vec<u16>>>()
+    };
+    let sc = traces(MemoryModel::Sc);
+    let tso = traces(MemoryModel::Tso);
+    assert!(sc.is_subset(&tso), "TSO dropped an SC interleaving");
+    assert!(tso.len() > sc.len(), "TSO explored no additional interleavings");
+}
+
+/// TSO exploration is deterministic per seed, and the seed permutes
+/// visit order only — counts and flush totals are seed-independent.
+#[cfg(pallas_model)]
+#[test]
+fn tso_exploration_is_deterministic() {
+    let run = |seed: u64| {
+        let ex = Explorer { seed, ..tso_checker() };
+        ex.explore(scen::mag_publish_scenario)
+    };
+    let a = run(7);
+    let b = run(7);
+    let c = run(8);
+    assert_eq!(a.schedules, b.schedules);
+    assert_eq!(a.total_steps, b.total_steps);
+    assert_eq!(a.total_flushes, b.total_flushes);
+    assert_eq!(a.schedules, c.schedules, "seed must not change the explored set");
+    assert_eq!(a.total_flushes, c.total_flushes);
+}
+
+// -------------------------------------------------- shim meta-tests --
 
 /// Normal builds: the sync shims are *the* std atomics — same types by
 /// `TypeId`, so the refactor is zero-cost by construction, not by

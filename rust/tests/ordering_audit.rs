@@ -1,0 +1,291 @@
+//! The memory-ordering mutation audit (TSO model builds only).
+//!
+//! For every atomic site registered in `fastpool::pool::proto::sites`,
+//! weaken its declared ordering one step down the C11 ladder (via the
+//! site-override hook — no mutated source tree) and re-run the TSO
+//! protocol suite from `fastpool::testkit::model_scenarios`. Each
+//! mutation gets a verdict:
+//!
+//! * `killed` — some scenario's invariant failed under the weakening:
+//!   the declared ordering is load-bearing, proven by counterexample;
+//! * `survived` — every covering scenario passed at the audit bounds: a
+//!   *candidate* for relaxation, pending hand review (bounded search is
+//!   not a proof of absence);
+//! * `out_of_scope` — the TSO store-buffer model cannot observe the
+//!   mutation (load and CAS-failure orderings never change model
+//!   behaviour; nor does dropping only the acquire half of an RMW).
+//!   Reported honestly as unverifiable, never as relaxable;
+//! * `uncovered` — observable, but no scenario exercises the site (the
+//!   per-scenario hit census decides coverage);
+//! * `already_weakest` — the site is `Relaxed`; nothing to weaken.
+//!
+//! The full report goes to `bench_out/ordering_audit.json` (every one
+//! of the registered sites, with per-mutation scenario runs); CI
+//! asserts with `jq` that the deliberate missing-release-fence mutant
+//! (`mag_publish_owned → relaxed`) and the other previously-killed
+//! mutations stay killed.
+//!
+//! Two meta-tests keep the audit itself honest: strengthening any site
+//! must never be reported killed (soundness — a stronger ordering only
+//! removes behaviours), and the registry must textually match a grep of
+//! the protocol sources (completeness — no site dodges the audit).
+
+#![cfg(pallas_model)]
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use fastpool::pool::proto::sites::{self, SiteId, SITES};
+use fastpool::sync::audit::{model_observable, ordering_name, strengthen, weaken, AccessKind};
+use fastpool::sync::model::{Explorer, MemoryModel, Scenario};
+use fastpool::testkit::model_scenarios as scen;
+use fastpool::util::json::{self, Json};
+
+/// The audit's exploration budget per (mutation, scenario) pair. A
+/// `killed` verdict ends the exploration at the failing schedule; a
+/// `survived` verdict may hit the schedule cap, which the report
+/// records (`capped`) rather than hiding.
+fn audit_checker() -> Explorer {
+    Explorer {
+        memory: MemoryModel::Tso,
+        preemption_bound: 2,
+        store_buffer_bound: 2,
+        flush_bound: 2,
+        max_schedules: 400_000,
+        max_steps_per_schedule: 10_000,
+        ..Explorer::default()
+    }
+}
+
+/// Cheap pass used for the hit census and the soundness meta-test.
+fn shallow_checker() -> Explorer {
+    Explorer {
+        memory: MemoryModel::Tso,
+        preemption_bound: 1,
+        store_buffer_bound: 2,
+        flush_bound: 1,
+        max_schedules: 100_000,
+        max_steps_per_schedule: 10_000,
+        ..Explorer::default()
+    }
+}
+
+/// Per-scenario site coverage: which registered sites each protocol
+/// scenario actually fetches, as a bitmask over `SiteId`.
+fn census() -> Vec<(&'static str, fn() -> Scenario, u64)> {
+    scen::all_protocols()
+        .into_iter()
+        .map(|(name, build)| {
+            let _ = sites::take_hits();
+            let r = shallow_checker().explore(build);
+            assert!(!r.capped, "{name}: census exploration capped");
+            let hits = sites::take_hits();
+            assert_ne!(hits, 0, "{name}: scenario exercised no registered site");
+            (name, build, hits)
+        })
+        .collect()
+}
+
+/// Run one overridden exploration; `Err` from the invariant = killed.
+fn run_mutated(
+    id: SiteId,
+    to: fastpool::sync::Ordering,
+    ex: &Explorer,
+    build: fn() -> Scenario,
+) -> (bool, bool) {
+    sites::set_override(id, to);
+    let out = catch_unwind(AssertUnwindSafe(|| ex.explore(build)));
+    sites::clear_override();
+    match out {
+        Err(_) => (true, false),
+        Ok(r) => (false, r.capped),
+    }
+}
+
+/// The audit proper: weaken every site one step, re-run the TSO suite,
+/// write `bench_out/ordering_audit.json`, and pin the expected kills.
+#[test]
+fn weakening_audit_writes_report() {
+    let cov = census();
+    let mut site_rows: Vec<Json> = Vec::new();
+    let mut killed: Vec<String> = Vec::new();
+
+    for (i, site) in SITES.iter().enumerate() {
+        let id = SiteId(i as u16);
+        let candidates = weaken(site.kind, site.declared);
+        // Verdict precedence: killed > survived > uncovered >
+        // out_of_scope > already_weakest.
+        let mut rank = 0u8;
+        let mut mutation_rows: Vec<Json> = Vec::new();
+        for &to in candidates {
+            let observable = model_observable(site.kind, site.declared, to);
+            let mut row = vec![
+                ("to", json::s(ordering_name(to))),
+                ("observable", Json::Bool(observable)),
+            ];
+            if !observable {
+                row.push(("verdict", json::s("out_of_scope")));
+                rank = rank.max(1);
+                mutation_rows.push(json::obj(row));
+                continue;
+            }
+            let covering: Vec<_> =
+                cov.iter().filter(|(_, _, hits)| hits & (1u64 << i) != 0).collect();
+            if covering.is_empty() {
+                row.push(("verdict", json::s("uncovered")));
+                rank = rank.max(2);
+                mutation_rows.push(json::obj(row));
+                continue;
+            }
+            let ex = audit_checker();
+            let mut was_killed = false;
+            let mut runs: Vec<Json> = Vec::new();
+            for (sname, build, _) in &covering {
+                let (k, capped) = run_mutated(id, to, &ex, *build);
+                runs.push(json::obj(vec![
+                    ("scenario", json::s(sname)),
+                    ("killed", Json::Bool(k)),
+                    ("capped", Json::Bool(capped)),
+                ]));
+                if k {
+                    was_killed = true;
+                    break; // one counterexample settles the mutation
+                }
+            }
+            let verdict = if was_killed { "killed" } else { "survived" };
+            if was_killed {
+                killed.push(format!("{}->{}", site.name, ordering_name(to)));
+                rank = rank.max(4);
+            } else {
+                rank = rank.max(3);
+            }
+            println!("AUDIT site={} to={} verdict={verdict}", site.name, ordering_name(to));
+            row.push(("verdict", json::s(verdict)));
+            row.push(("runs", Json::Arr(runs)));
+            mutation_rows.push(json::obj(row));
+        }
+        let site_verdict = match rank {
+            4 => "killed",
+            3 => "survived",
+            2 => "uncovered",
+            1 => "out_of_scope",
+            _ => "already_weakest",
+        };
+        site_rows.push(json::obj(vec![
+            ("name", json::s(site.name)),
+            ("kind", json::s(site.kind.name())),
+            ("declared", json::s(ordering_name(site.declared))),
+            ("verdict", json::s(site_verdict)),
+            ("mutations", Json::Arr(mutation_rows)),
+        ]));
+
+        // Scope honesty: pure-load sites can never produce a model
+        // verdict — the audit must not claim to have tested them.
+        if matches!(site.kind, AccessKind::Load | AccessKind::RmwFailure) {
+            assert!(
+                matches!(site_verdict, "out_of_scope" | "already_weakest"),
+                "{}: load-side site got model verdict {site_verdict}",
+                site.name
+            );
+        }
+    }
+
+    assert_eq!(site_rows.len(), SITES.len(), "every registered site must be reported");
+    let out = json::obj(vec![
+        ("model", json::s("tso")),
+        (
+            "bounds",
+            json::obj(vec![
+                ("preemption", json::num(2.0)),
+                ("store_buffer", json::num(2.0)),
+                ("flush", json::num(2.0)),
+                ("max_schedules", json::num(400_000.0)),
+            ]),
+        ),
+        ("sites", Json::Arr(site_rows)),
+    ]);
+    std::fs::create_dir_all("bench_out").expect("create bench_out/");
+    std::fs::write("bench_out/ordering_audit.json", out.to_string() + "\n")
+        .expect("write bench_out/ordering_audit.json");
+
+    // The kills the protocols depend on — above all the deliberate
+    // missing-release-fence mutant on the magazine publish path. If any
+    // of these starts surviving, either the model or a scenario lost
+    // its teeth.
+    for expected in [
+        "mag_publish_owned->relaxed",
+        "push_cas_ok->acquire",
+        "chain_cas_ok->acquire",
+    ] {
+        assert!(
+            killed.iter().any(|k| k == expected),
+            "expected mutation {expected} to be killed; killed set: {killed:?}"
+        );
+    }
+}
+
+/// Soundness: strengthening a site (one step up the ladder) only
+/// removes store-buffer behaviours, so no scenario may ever fail under
+/// it. A kill here would mean the audit's verdicts are noise.
+#[test]
+fn strengthening_is_never_killed() {
+    let cov = census();
+    for (i, site) in SITES.iter().enumerate() {
+        let id = SiteId(i as u16);
+        for &to in strengthen(site.kind, site.declared) {
+            if !model_observable(site.kind, site.declared, to) {
+                continue;
+            }
+            let ex = shallow_checker();
+            for (sname, build, hits) in &cov {
+                if hits & (1u64 << i) == 0 {
+                    continue;
+                }
+                let (killed, _) = run_mutated(id, to, &ex, *build);
+                assert!(
+                    !killed,
+                    "strengthening {} -> {} was reported killed by {sname} — audit unsound",
+                    site.name,
+                    ordering_name(to)
+                );
+            }
+        }
+    }
+}
+
+/// Completeness: the registry is in one-to-one correspondence with the
+/// ordering literals in the protocol sources. Counting the literal
+/// prefix in non-test code across `pool/proto/` must equal the table
+/// length, and only the registry file itself may contain any — so a new
+/// atomic access cannot be added to a machine without registering it.
+#[test]
+fn site_registry_matches_grep() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/src/pool/proto");
+    let expected_files =
+        ["head.rs", "lease.rs", "mag.rs", "mod.rs", "rehome.rs", "sites.rs", "stash.rs"];
+    let mut found: Vec<String> = std::fs::read_dir(&dir)
+        .expect("list pool/proto")
+        .map(|e| e.expect("dir entry").file_name().into_string().expect("utf-8 name"))
+        .collect();
+    found.sort();
+    assert_eq!(found, expected_files, "proto file set changed; update the audit");
+
+    let needle = "Ordering::";
+    let mut total = 0usize;
+    for f in expected_files {
+        let src = std::fs::read_to_string(dir.join(f)).expect("read proto source");
+        // Only non-test code is registry-governed: stop at the first
+        // test-module marker.
+        let pre_test: Vec<&str> =
+            src.lines().take_while(|l| l.trim() != "#[cfg(test)]").collect();
+        let count = pre_test.iter().map(|l| l.matches(needle).count()).sum::<usize>();
+        if f != "sites.rs" {
+            assert_eq!(count, 0, "{f}: ordering literal outside the site registry");
+        }
+        total += count;
+    }
+    assert_eq!(
+        total,
+        SITES.len(),
+        "registry size diverged from the grep count over pool/proto sources"
+    );
+}

@@ -124,18 +124,15 @@ fn sharded_pool_data_integrity_under_churn() {
                     } else {
                         let i = rng.gen_usize(0, held.len());
                         let p = held.swap_remove(i);
-                        // SAFETY: `p` is still exclusively owned; reads stay inside its BLOCK
-                        // bytes, then it is freed exactly once.
-                        unsafe {
-                            for off in 0..BLOCK {
-                                assert_eq!(
-                                    p.as_ptr().add(off).read(),
-                                    t as u8,
-                                    "S1: block shared between threads"
-                                );
-                            }
-                            pool.deallocate(p);
+                        for off in 0..BLOCK {
+                            // SAFETY: `off < BLOCK` keeps the probe inside the block.
+                            let q = unsafe { p.as_ptr().add(off) };
+                            // SAFETY: `p` is still exclusively owned, so the read is valid.
+                            let byte = unsafe { q.read() };
+                            assert_eq!(byte, t as u8, "S1: block shared between threads");
                         }
+                        // SAFETY: `p` came from this pool and is freed exactly once.
+                        unsafe { pool.deallocate(p) };
                     }
                 }
                 for p in held {
@@ -308,18 +305,18 @@ fn thread_churn_recycles_slots_and_drains_orphan_stashes() {
                         } else {
                             let i = rng.gen_usize(0, held.len());
                             let addr = held.swap_remove(i);
-                            // SAFETY: `addr` was recorded from a successful `allocate` and removed
-                            // from `held`, so each block is freed exactly once.
-                            unsafe {
-                                pool.deallocate(NonNull::new_unchecked(addr as *mut u8))
-                            };
+                            // SAFETY: `addr` was recorded from a successful `allocate`, so it
+                            // is non-null.
+                            let p = unsafe { NonNull::new_unchecked(addr as *mut u8) };
+                            // SAFETY: removed from `held`, so each block is freed exactly once.
+                            unsafe { pool.deallocate(p) };
                         }
                     }
                     for addr in held {
+                        // SAFETY: allocation addresses are non-null.
+                        let p = unsafe { NonNull::new_unchecked(addr as *mut u8) };
                         // SAFETY: the remaining addresses were never freed in the loop above.
-                        unsafe {
-                            pool.deallocate(NonNull::new_unchecked(addr as *mut u8))
-                        };
+                        unsafe { pool.deallocate(p) };
                     }
                 });
             }
@@ -470,18 +467,18 @@ fn magazine_conservation_across_random_thread_exits() {
                         } else {
                             let i = rng.gen_usize(0, held.len());
                             let addr = held.swap_remove(i);
-                            // SAFETY: `addr` was recorded from a successful `allocate` and removed
-                            // from `held`, so each block is freed exactly once.
-                            unsafe {
-                                pool.deallocate(NonNull::new_unchecked(addr as *mut u8))
-                            };
+                            // SAFETY: `addr` was recorded from a successful `allocate`, so it
+                            // is non-null.
+                            let p = unsafe { NonNull::new_unchecked(addr as *mut u8) };
+                            // SAFETY: removed from `held`, so each block is freed exactly once.
+                            unsafe { pool.deallocate(p) };
                         }
                     }
                     for addr in held {
+                        // SAFETY: allocation addresses are non-null.
+                        let p = unsafe { NonNull::new_unchecked(addr as *mut u8) };
                         // SAFETY: the remaining addresses were never freed in the loop above.
-                        unsafe {
-                            pool.deallocate(NonNull::new_unchecked(addr as *mut u8))
-                        };
+                        unsafe { pool.deallocate(p) };
                     }
                 });
             }
@@ -540,18 +537,18 @@ fn batched_steal_counters_exact_at_quiescence() {
                     } else {
                         let i = rng.gen_usize(0, held.len());
                         let addr = held.swap_remove(i);
-                        // SAFETY: `addr` was recorded from a successful `allocate` and removed
-                        // from `held`, so each block is freed exactly once.
-                        unsafe {
-                            pool.deallocate(NonNull::new_unchecked(addr as *mut u8))
-                        };
+                        // SAFETY: `addr` was recorded from a successful `allocate`, so it
+                        // is non-null.
+                        let p = unsafe { NonNull::new_unchecked(addr as *mut u8) };
+                        // SAFETY: removed from `held`, so each block is freed exactly once.
+                        unsafe { pool.deallocate(p) };
                     }
                 }
                 for addr in held {
+                    // SAFETY: allocation addresses are non-null.
+                    let p = unsafe { NonNull::new_unchecked(addr as *mut u8) };
                     // SAFETY: the remaining addresses were never freed in the loop above.
-                    unsafe {
-                        pool.deallocate(NonNull::new_unchecked(addr as *mut u8))
-                    };
+                    unsafe { pool.deallocate(p) };
                 }
             });
         }
