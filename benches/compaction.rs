@@ -1,0 +1,173 @@
+//! §Traversal: what the traversal-powered maintenance paths cost — KV
+//! compaction (pack the live block grid into a compact prefix, return
+//! whole regions) and engine snapshot/restore (serialize the full
+//! serving state, resume decoding bit-identically).
+//!
+//! Two arms:
+//!
+//! * compaction — a fragmented KV grid (every other 2-block sequence
+//!   freed → occupancy 0.5, watermark at capacity) compacted in one
+//!   call; the JSON summary carries the migration counters CI asserts
+//!   (`blocks_migrated`, `regions_returned`, `post_occupancy`).
+//! * snapshot   — a mid-decode engine over the mock backend snapshotted
+//!   to bytes, restored into a fresh engine, and both run to completion
+//!   in lock step; `restore_ok` is 1.0 only if every remaining step and
+//!   every output matches.
+//!
+//! Run: `cargo bench --bench compaction` (arg 1 filters arms by
+//! name; `--smoke` shrinks the grid and run count for CI).
+
+use fastpool::bench_harness::{write_json, write_markdown, ReportTable, Suite};
+use fastpool::coordinator::{Engine, EngineConfig, MockBackend, SamplingParams};
+use fastpool::kvcache::KvCacheManager;
+use fastpool::pool::PoolHandle;
+use fastpool::util::json::Json;
+use fastpool::util::Timer;
+
+const BLOCK_TOKENS: u32 = 16;
+const REGION_BLOCKS: u32 = 64;
+
+fn median(mut xs: Vec<f64>) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs[xs.len() / 2]
+}
+
+/// Build a fragmented manager: `usable` blocks, filled with 2-block
+/// sequences, every other sequence freed. Occupancy lands at 0.5 with
+/// the watermark pinned at capacity — the shape maintenance sees after
+/// a burst of completions.
+fn fragmented(usable: u32) -> KvCacheManager {
+    let mut kv = KvCacheManager::new(usable + 1, BLOCK_TOKENS, 8);
+    let seqs = usable / 2;
+    for id in 0..seqs as u64 {
+        kv.create_seq(id, 2 * BLOCK_TOKENS).expect("grid sized for exactly this");
+    }
+    for id in (0..seqs as u64).step_by(2) {
+        kv.free_seq(id).unwrap();
+    }
+    kv
+}
+
+fn main() {
+    let suite = Suite::new("compaction");
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let usable: u32 = if smoke { 256 } else { 2048 };
+    let runs: usize = if smoke { 3 } else { 7 };
+
+    let mut tab = ReportTable::new(
+        "§Traversal: compaction + snapshot/restore cost",
+        "operation",
+        vec![
+            "kv compact (full grid)".into(),
+            "engine snapshot".into(),
+            "engine restore".into(),
+        ],
+        vec!["ns/op".into(), "per block/byte".into()],
+        format!("median of {runs} runs; grid {usable} blocks"),
+    );
+    let mut summary: Vec<(&str, Json)> = vec![
+        ("grid_blocks", Json::Num(usable as f64)),
+        ("region_blocks", Json::Num(REGION_BLOCKS as f64)),
+        ("runs", Json::Num(runs as f64)),
+    ];
+
+    // ---- arm 1: compaction -------------------------------------------
+    if suite.enabled("compact") {
+        let mut ns_runs = Vec::with_capacity(runs);
+        let mut last = None;
+        for _ in 0..runs {
+            let mut kv = fragmented(usable);
+            let t = Timer::start();
+            let report = kv.compact(REGION_BLOCKS);
+            ns_runs.push(t.elapsed_ns() as f64);
+            // The compacted grid must re-admit into the freed tail.
+            kv.create_seq(u64::from(usable), BLOCK_TOKENS).unwrap();
+            last = Some(report);
+        }
+        let report = last.unwrap();
+        let ns = median(ns_runs);
+        println!(
+            "compact: {ns:>10.0} ns  ({:.1} ns/block)  migrated {} blocks, \
+             returned {} regions, occupancy {:.2} -> {:.2}",
+            ns / usable as f64,
+            report.blocks_migrated,
+            report.regions_returned,
+            report.pre_occupancy,
+            report.post_occupancy,
+        );
+        tab.set(0, 0, ns);
+        tab.set(0, 1, ns / usable as f64);
+        summary.push(("compact_ns", Json::Num(ns)));
+        summary.push(("blocks_migrated", Json::Num(report.blocks_migrated as f64)));
+        summary.push(("regions_returned", Json::Num(report.regions_returned as f64)));
+        summary.push(("pre_occupancy", Json::Num(report.pre_occupancy)));
+        summary.push(("post_occupancy", Json::Num(report.post_occupancy)));
+    }
+
+    // ---- arm 2: snapshot/restore -------------------------------------
+    if suite.enabled("snapshot") {
+        let mut snap_ns = Vec::with_capacity(runs);
+        let mut restore_ns = Vec::with_capacity(runs);
+        let mut snapshot_bytes = 0usize;
+        let mut restore_ok = true;
+        for _ in 0..runs {
+            let mut a = Engine::new(MockBackend::new(), EngineConfig::default());
+            let prompts: Vec<Vec<i32>> =
+                (0..6).map(|i| vec![i + 1, (i + 2) * 3, (i * 7) % 250]).collect();
+            for p in &prompts {
+                a.submit(p.clone(), SamplingParams::greedy(12)).unwrap();
+            }
+            for _ in 0..5 {
+                a.step().unwrap();
+            }
+
+            let t = Timer::start();
+            let bytes = a.snapshot();
+            snap_ns.push(t.elapsed_ns() as f64);
+            snapshot_bytes = bytes.len();
+
+            let t = Timer::start();
+            let mut b =
+                Engine::restore(MockBackend::new(), PoolHandle::builder().build(), &bytes)
+                    .expect("own snapshot must restore");
+            restore_ns.push(t.elapsed_ns() as f64);
+
+            // Lock-step to completion: the restored engine must decode
+            // bit-identically from where the original stood.
+            while a.has_work() || b.has_work() {
+                let sa = a.step().unwrap();
+                let sb = b.step().unwrap();
+                restore_ok &= sa == sb;
+            }
+            let dump = |v: Vec<fastpool::coordinator::RequestOutput>| {
+                let mut d: Vec<String> = v.iter().map(|o| format!("{o:?}")).collect();
+                d.sort();
+                d
+            };
+            restore_ok &= dump(a.take_finished()) == dump(b.take_finished());
+        }
+        let s_ns = median(snap_ns);
+        let r_ns = median(restore_ns);
+        println!(
+            "snapshot: {s_ns:>9.0} ns  ({:.2} ns/byte, {snapshot_bytes} bytes)",
+            s_ns / snapshot_bytes as f64
+        );
+        println!(
+            "restore:  {r_ns:>9.0} ns  ({:.2} ns/byte)  lock-step decode identical: {restore_ok}",
+            r_ns / snapshot_bytes as f64
+        );
+        tab.set(1, 0, s_ns);
+        tab.set(1, 1, s_ns / snapshot_bytes as f64);
+        tab.set(2, 0, r_ns);
+        tab.set(2, 1, r_ns / snapshot_bytes as f64);
+        summary.push(("snapshot_ns", Json::Num(s_ns)));
+        summary.push(("restore_ns", Json::Num(r_ns)));
+        summary.push(("snapshot_bytes", Json::Num(snapshot_bytes as f64)));
+        summary.push(("restore_ok", Json::Num(if restore_ok { 1.0 } else { 0.0 })));
+    }
+
+    let tables = [tab];
+    write_markdown("compaction", &[], &tables).unwrap();
+    write_json("compaction", &tables, &summary).unwrap();
+    println!("wrote bench_out/compaction.json (+md)");
+}

@@ -1,12 +1,19 @@
 //! §IV.B in action: hunting leaks, overruns, and double frees with
-//! `GuardedPool` — then measuring what the checks cost (the debug/release
+//! `GuardedPool` — and walking the exact live set through the traversal
+//! API, from a single guarded pool up to the serving `PoolHandle`
+//! lineage — then measuring what the checks cost (the debug/release
 //! trade-off the paper quantifies with Figures 3 vs 4).
+//!
+//! Every "leak report" here is asserted, not just printed: the traversed
+//! live set must match what the workload actually left allocated.
 //!
 //! ```bash
 //! cargo run --release --example leak_hunt
 //! ```
 
-use fastpool::pool::{FixedPool, GuardConfig, GuardError, GuardedPool};
+use fastpool::pool::{
+    FixedPool, GuardConfig, GuardError, GuardedPool, PoolHandle, PooledVec,
+};
 use fastpool::util::{fmt_ns, Timer};
 
 fn main() {
@@ -16,8 +23,19 @@ fn main() {
     let b = pool.allocate("particle_system.rs:55").unwrap();
     let _c = pool.allocate("net/session.rs:310").unwrap();
     pool.deallocate(b).unwrap();
+    // The report rides the traversal API now: the free-chain complement
+    // must yield exactly the two blocks the workload never freed.
+    let leaks = pool.leaks();
+    assert_eq!(leaks.len(), 2, "exactly the two unfreed blocks leak");
+    assert_eq!(pool.num_live(), 2);
+    let tags: Vec<&str> = leaks.iter().map(|l| l.tag).collect();
+    assert_eq!(
+        tags,
+        ["asset_loader.rs:101", "net/session.rs:310"],
+        "leak report is ordered by allocation seq"
+    );
     println!("live allocations at shutdown (leaks):");
-    for leak in pool.leaks() {
+    for leak in &leaks {
         println!("  block {:>3}  seq {:>3}  tag {}", leak.index, leak.seq, leak.tag);
     }
 
@@ -59,7 +77,39 @@ fn main() {
         Ok(()) => println!("  MISSED (should not happen)"),
     }
 
-    println!("\n=== 5. what do the checks cost? (§IV.B \"at the cost of\") ===");
+    println!("\n=== 5. exact live set through the serving handle (builder + traversal) ===");
+    // The builder replaces the deprecated PoolHandle constructor zoo.
+    let handle = PoolHandle::builder()
+        .classes([64usize, 256])
+        .blocks_per_class(128)
+        .build();
+    assert_eq!(handle.live_count(), 0, "fresh pool has no live blocks");
+    let v1: PooledVec<u8> = PooledVec::with_capacity(&handle, 64); // 64B class
+    let v2: PooledVec<u64> = PooledVec::with_capacity(&handle, 32); // 256B class
+    let v3: PooledVec<u8> = PooledVec::with_capacity(&handle, 200); // 256B class
+    assert_eq!(handle.live_count(), 3);
+    {
+        // Pin the pool for a concurrent-safe walk (allocation parks while
+        // the pin is held — so don't allocate from it in this scope).
+        let _pin = handle.pin_for_traversal();
+        let mut per_class = [0u32; 2];
+        handle.for_each_live(|blk| per_class[blk.class] += 1);
+        assert_eq!(per_class, [1, 2], "one 64B block live, two 256B blocks live");
+    }
+    drop(v2);
+    // The dropped table's block now sits in this thread's magazine: cached
+    // blocks are FREE, not live — the traversal must not report it.
+    assert_eq!(handle.live_count(), 2, "magazine-cached block left the live set");
+    println!(
+        "  live after drop(v2): {} (its block is magazine-cached → free, not live)",
+        handle.live_count()
+    );
+    drop(v1);
+    drop(v3);
+    assert_eq!(handle.live_count(), 0, "everything returned: no leaks");
+    println!("  all tables dropped: live set is empty");
+
+    println!("\n=== 6. what do the checks cost? (§IV.B \"at the cost of\") ===");
     const N: u32 = 100_000;
     let cost = |label: &str, cfg: Option<GuardConfig>| {
         let t = Timer::start();

@@ -73,6 +73,16 @@ pub trait Backend {
         tables: &[i32],
         logits: &mut [f32],
     ) -> Result<(), String>;
+
+    /// Whether this backend's KV addressing survives a block move: after
+    /// the engine rewrites sequences' block tables (KV compaction), the
+    /// next decode must still attend over the same logical content. The
+    /// mock is positional (block ids are routing, not state) so moves are
+    /// free; a device backend must copy the moved blocks' payloads first
+    /// and should return `false` until it does.
+    fn supports_block_moves(&self) -> bool {
+        false
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -220,6 +230,10 @@ impl Default for MockBackend {
 impl Backend for MockBackend {
     fn geometry(&self) -> BackendGeometry {
         self.geo.clone()
+    }
+
+    fn supports_block_moves(&self) -> bool {
+        true
     }
 
     fn prefill(

@@ -23,7 +23,7 @@ use super::request::{FinishReason, Request, RequestOutput, RequestState, Samplin
 use super::sampler;
 use crate::kvcache::{CacheError, KvCacheManager};
 use crate::metrics::Metrics;
-use crate::pool::{PoolHandle, PooledVec};
+use crate::pool::{PoolHandle, PooledVec, SnapError, SnapReader, SnapWriter};
 
 /// Admission policy for prompt blocks.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -42,6 +42,10 @@ pub enum Policy {
     /// Shortest prompt first.
     Sjf,
 }
+
+/// Occupancy (live blocks over the touched watermark) below which
+/// [`Engine::maintain_pool`] compacts the KV block grid.
+const KV_COMPACT_BELOW: f64 = 0.5;
 
 /// Engine configuration.
 #[derive(Debug, Clone)]
@@ -170,11 +174,14 @@ impl<B: Backend> Engine<B> {
 
     /// Periodic pool maintenance (the server runs it with the stats
     /// dump): return steal-stash blocks — including chains orphaned by
-    /// exited worker threads — to their owning shards' free lists, and
-    /// flush idle magazines (per-thread caches whose owner has exited)
-    /// back to the shared tiers, recording how many blocks moved.
-    /// Allocation-free; a no-op in system mode.
-    pub fn maintain_pool(&self) {
+    /// exited worker threads — to their owning shards' free lists, flush
+    /// idle magazines (per-thread caches whose owner has exited) back to
+    /// the shared tiers, and — when churn has left the KV block grid
+    /// sparse and the backend is move-safe — compact it, migrating live
+    /// blocks down and returning the freed tail in whole sequence-sized
+    /// regions. Runs between steps only; a no-op in system mode with a
+    /// dense grid.
+    pub fn maintain_pool(&mut self) {
         if let Some(mp) = self.pool.multi() {
             let drained = mp.drain_stashes();
             if drained > 0 {
@@ -184,6 +191,21 @@ impl<B: Backend> Engine<B> {
             if flushed > 0 {
                 self.metrics.counter("pool_magazines_flushed").add(flushed as u64);
             }
+        }
+        let pre = self.kv.occupancy();
+        self.metrics.gauge("kv_occupancy_pct").set((pre * 100.0) as i64);
+        if self.backend.supports_block_moves() && pre < KV_COMPACT_BELOW {
+            let report = self.kv.compact(self.geo.max_blocks_per_seq as u32);
+            self.metrics.counter("kv_compactions").inc();
+            self.metrics
+                .counter("kv_blocks_migrated")
+                .add(u64::from(report.blocks_migrated));
+            self.metrics
+                .counter("kv_regions_returned")
+                .add(u64::from(report.regions_returned));
+            self.metrics
+                .gauge("kv_occupancy_post_pct")
+                .set((report.post_occupancy * 100.0) as i64);
         }
     }
 
@@ -561,6 +583,310 @@ impl<B: Backend> Engine<B> {
             run_steps: self.step_count.saturating_sub(first),
         });
     }
+
+    // ------------------------------------------------------------------
+    // Snapshot / restore
+    // ------------------------------------------------------------------
+
+    /// Serialise the engine's complete logical state — scheduler config,
+    /// queue order, every in-flight request, pending outputs, and the KV
+    /// manager (allocator + block tables) — to a byte buffer. Pool-backed
+    /// storage (step buffers, per-sequence tables) is rebuilt from the
+    /// restoring process's pool, so the snapshot is process-portable.
+    ///
+    /// Call between steps, never mid-step. Metrics are observability, not
+    /// replay state: a restored engine starts fresh counters. Backend
+    /// device state is out of scope — [`Self::restore`] pairs the bytes
+    /// with a backend whose geometry matches; for the deterministic mock
+    /// that is enough for the restored engine to resume decoding
+    /// bit-identically.
+    pub fn snapshot(&self) -> Vec<u8> {
+        let mut w = SnapWriter::new();
+        w.put_u32(ENGINE_SNAP_MAGIC);
+        w.put_u32(ENGINE_SNAP_VERSION);
+        w.put_u64(self.cfg.max_batch as u64);
+        w.put_u64(self.cfg.queue_limit as u64);
+        w.put_u8(match self.cfg.admission {
+            Admission::Optimistic => 0,
+            Admission::Conservative => 1,
+        });
+        w.put_u8(match self.cfg.policy {
+            Policy::Fcfs => 0,
+            Policy::Sjf => 1,
+        });
+        w.put_u64(self.step_count);
+        w.put_u64(self.next_id);
+        w.put_u32(self.waiting.len() as u32);
+        for &id in &self.waiting {
+            w.put_u64(id);
+        }
+        w.put_u32(self.running.len() as u32);
+        for &id in &self.running {
+            w.put_u64(id);
+        }
+        let mut ids: Vec<u64> = self.reqs.keys().copied().collect();
+        ids.sort_unstable();
+        w.put_u32(ids.len() as u32);
+        for id in ids {
+            put_request(&mut w, &self.reqs[&id]);
+        }
+        w.put_u32(self.finished.len() as u32);
+        for o in &self.finished {
+            put_output(&mut w, o);
+        }
+        self.kv.snapshot_into(&mut w);
+        w.into_bytes()
+    }
+
+    /// Rebuild an engine from [`Self::snapshot`] bytes over `backend`
+    /// and `pool`. The backend's geometry must match the snapshot's KV
+    /// shape ([`SnapError::ConfigMismatch`] otherwise); the stream is
+    /// structurally validated, never trusted.
+    pub fn restore(backend: B, pool: PoolHandle, bytes: &[u8]) -> Result<Self, SnapError> {
+        let mut r = SnapReader::new(bytes);
+        if r.u32()? != ENGINE_SNAP_MAGIC {
+            return Err(SnapError::BadMagic);
+        }
+        let ver = r.u32()?;
+        if ver != ENGINE_SNAP_VERSION {
+            return Err(SnapError::BadVersion(ver));
+        }
+        let max_batch = r.u64()? as usize;
+        let queue_limit = r.u64()? as usize;
+        let admission = match r.u8()? {
+            0 => Admission::Optimistic,
+            1 => Admission::Conservative,
+            _ => return Err(SnapError::Corrupt("admission policy")),
+        };
+        let policy = match r.u8()? {
+            0 => Policy::Fcfs,
+            1 => Policy::Sjf,
+            _ => return Err(SnapError::Corrupt("queue policy")),
+        };
+        let cfg = EngineConfig { max_batch, queue_limit, admission, policy };
+        let step_count = r.u64()?;
+        let next_id = r.u64()?;
+        let n_waiting = r.u32()?;
+        let mut waiting = VecDeque::new();
+        for _ in 0..n_waiting {
+            waiting.push_back(r.u64()?);
+        }
+        let n_running = r.u32()?;
+        let mut running = Vec::new();
+        for _ in 0..n_running {
+            running.push(r.u64()?);
+        }
+        let n_reqs = r.u32()?;
+        let mut reqs = HashMap::new();
+        for _ in 0..n_reqs {
+            let req = get_request(&mut r)?;
+            if req.id >= next_id {
+                return Err(SnapError::Corrupt("request id at or above next_id"));
+            }
+            if reqs.insert(req.id, req).is_some() {
+                return Err(SnapError::Corrupt("duplicate request id"));
+            }
+        }
+        for id in waiting.iter().chain(running.iter()) {
+            if !reqs.contains_key(id) {
+                return Err(SnapError::Corrupt("queued id without a request"));
+            }
+        }
+        let n_fin = r.u32()?;
+        let mut finished = Vec::new();
+        for _ in 0..n_fin {
+            finished.push(get_output(&mut r)?);
+        }
+        let kv = KvCacheManager::restore_from(&mut r, pool.clone())?;
+        r.expect_end()?;
+        for id in &running {
+            if kv.seq(*id).is_none() {
+                return Err(SnapError::Corrupt("running id without a cache row"));
+            }
+        }
+        let geo = backend.geometry();
+        if kv.block_tokens != geo.block_tokens
+            || kv.max_blocks_per_seq != geo.max_blocks_per_seq
+            || kv.scratch_block != geo.scratch_block
+        {
+            return Err(SnapError::ConfigMismatch("backend geometry does not match snapshot"));
+        }
+        let bufs = StepBuffers::new(&pool, &geo, cfg.max_batch);
+        Ok(Self {
+            backend,
+            kv,
+            cfg,
+            geo,
+            waiting,
+            running,
+            reqs,
+            finished,
+            next_id,
+            step_count,
+            pool,
+            bufs,
+            metrics: Metrics::new(),
+        })
+    }
+}
+
+const ENGINE_SNAP_MAGIC: u32 = u32::from_le_bytes(*b"FPEN");
+const ENGINE_SNAP_VERSION: u32 = 1;
+
+fn put_tokens(w: &mut SnapWriter, toks: &[i32]) {
+    w.put_u32(toks.len() as u32);
+    for &t in toks {
+        w.put_u32(t as u32);
+    }
+}
+
+fn get_tokens(r: &mut SnapReader<'_>) -> Result<Vec<i32>, SnapError> {
+    let n = r.u32()?;
+    let mut v = Vec::new();
+    for _ in 0..n {
+        v.push(r.u32()? as i32);
+    }
+    Ok(v)
+}
+
+fn put_finish(w: &mut SnapWriter, f: FinishReason) {
+    w.put_u8(match f {
+        FinishReason::Length => 0,
+        FinishReason::Stop => 1,
+        FinishReason::ContextOverflow => 2,
+        FinishReason::Aborted => 3,
+        FinishReason::Rejected => 4,
+    });
+}
+
+fn get_finish(r: &mut SnapReader<'_>) -> Result<FinishReason, SnapError> {
+    Ok(match r.u8()? {
+        0 => FinishReason::Length,
+        1 => FinishReason::Stop,
+        2 => FinishReason::ContextOverflow,
+        3 => FinishReason::Aborted,
+        4 => FinishReason::Rejected,
+        _ => return Err(SnapError::Corrupt("finish reason")),
+    })
+}
+
+fn put_opt_u64(w: &mut SnapWriter, v: Option<u64>) {
+    match v {
+        None => w.put_u8(0),
+        Some(x) => {
+            w.put_u8(1);
+            w.put_u64(x);
+        }
+    }
+}
+
+fn get_opt_u64(r: &mut SnapReader<'_>) -> Result<Option<u64>, SnapError> {
+    Ok(match r.u8()? {
+        0 => None,
+        1 => Some(r.u64()?),
+        _ => return Err(SnapError::Corrupt("option tag")),
+    })
+}
+
+fn put_request(w: &mut SnapWriter, req: &Request) {
+    w.put_u64(req.id);
+    put_tokens(w, &req.prompt);
+    put_tokens(w, &req.generated);
+    w.put_u32(req.params.max_tokens);
+    match req.params.eos {
+        None => w.put_u8(0),
+        Some(e) => {
+            w.put_u8(1);
+            w.put_u32(e as u32);
+        }
+    }
+    w.put_u32(req.params.top_k);
+    w.put_u32(req.params.temperature.to_bits());
+    w.put_u64(req.params.seed);
+    match req.state {
+        RequestState::Queued => w.put_u8(0),
+        RequestState::Running => w.put_u8(1),
+        RequestState::Preempted => w.put_u8(2),
+        RequestState::Finished(f) => {
+            w.put_u8(3);
+            put_finish(w, f);
+        }
+    }
+    w.put_u64(req.arrived_step);
+    put_opt_u64(w, req.first_scheduled_step);
+    put_opt_u64(w, req.finished_step);
+    w.put_u32(req.preemptions);
+}
+
+fn get_request(r: &mut SnapReader<'_>) -> Result<Request, SnapError> {
+    let id = r.u64()?;
+    let prompt = get_tokens(r)?;
+    if prompt.is_empty() {
+        return Err(SnapError::Corrupt("empty request prompt"));
+    }
+    let generated_vals = get_tokens(r)?;
+    let max_tokens = r.u32()?;
+    // `Request::new` reserves `max_tokens` up front; bound it so a
+    // corrupt stream cannot turn into a multi-GiB reservation (submit
+    // clamps to the model context, far below this).
+    if max_tokens > 1 << 22 {
+        return Err(SnapError::Corrupt("implausible max_tokens"));
+    }
+    if generated_vals.len() as u32 > max_tokens {
+        return Err(SnapError::Corrupt("generated exceeds max_tokens"));
+    }
+    let eos = match r.u8()? {
+        0 => None,
+        1 => Some(r.u32()? as i32),
+        _ => return Err(SnapError::Corrupt("eos tag")),
+    };
+    let top_k = r.u32()?;
+    let temperature = f32::from_bits(r.u32()?);
+    let seed = r.u64()?;
+    let params = SamplingParams { max_tokens, eos, top_k, temperature, seed };
+    let state = match r.u8()? {
+        0 => RequestState::Queued,
+        1 => RequestState::Running,
+        2 => RequestState::Preempted,
+        3 => RequestState::Finished(get_finish(r)?),
+        _ => return Err(SnapError::Corrupt("request state")),
+    };
+    let arrived_step = r.u64()?;
+    let first_scheduled_step = get_opt_u64(r)?;
+    let finished_step = get_opt_u64(r)?;
+    let preemptions = r.u32()?;
+    // Rebuild through `Request::new` so the generated buffer keeps its
+    // submit-time reservation (push never reallocates on the hot path).
+    let mut req = Request::new(id, prompt, params);
+    req.generated.extend_from_slice(&generated_vals);
+    req.state = state;
+    req.arrived_step = arrived_step;
+    req.first_scheduled_step = first_scheduled_step;
+    req.finished_step = finished_step;
+    req.preemptions = preemptions;
+    Ok(req)
+}
+
+fn put_output(w: &mut SnapWriter, o: &RequestOutput) {
+    w.put_u64(o.id);
+    put_tokens(w, &o.prompt);
+    put_tokens(w, &o.tokens);
+    put_finish(w, o.finish);
+    w.put_u32(o.preemptions);
+    w.put_u64(o.queue_steps);
+    w.put_u64(o.run_steps);
+}
+
+fn get_output(r: &mut SnapReader<'_>) -> Result<RequestOutput, SnapError> {
+    Ok(RequestOutput {
+        id: r.u64()?,
+        prompt: get_tokens(r)?,
+        tokens: get_tokens(r)?,
+        finish: get_finish(r)?,
+        preemptions: r.u32()?,
+        queue_steps: r.u64()?,
+        run_steps: r.u64()?,
+    })
 }
 
 #[cfg(test)]
@@ -824,7 +1150,7 @@ mod tests {
             PoolHandle::builder().placement(Arc::new(RoundRobin)).build(),
         );
         assert_eq!(e.pool().multi().unwrap().placement_name(), "round_robin");
-        let d = engine(EngineConfig::default());
+        let mut d = engine(EngineConfig::default());
         assert_eq!(
             d.pool().multi().unwrap().placement_name(),
             "steal_aware",
@@ -834,5 +1160,129 @@ mod tests {
         d.maintain_pool();
         Engine::with_pool(MockBackend::new(), EngineConfig::default(), PoolHandle::system())
             .maintain_pool();
+    }
+
+    #[test]
+    fn snapshot_restore_resumes_bit_identically() {
+        // Run a batch partway, snapshot, and restore into a second engine
+        // over a fresh pool: from that point on the two engines must make
+        // identical scheduling decisions and emit identical tokens.
+        let mut a = engine(EngineConfig { max_batch: 4, ..Default::default() });
+        for i in 0..6 {
+            a.submit(vec![i + 1, 2 * i + 5], SamplingParams::greedy(12)).unwrap();
+        }
+        for _ in 0..5 {
+            a.step().unwrap();
+        }
+        let bytes = a.snapshot();
+        let mut b = Engine::restore(
+            MockBackend::new(),
+            crate::pool::PoolHandle::builder().build(),
+            &bytes,
+        )
+        .unwrap();
+        assert_eq!(b.steps(), a.steps());
+        assert_eq!(b.num_waiting(), a.num_waiting());
+        assert_eq!(b.num_running(), a.num_running());
+        assert_eq!(b.kv.num_free_blocks(), a.kv.num_free_blocks());
+        assert_eq!(b.kv.num_seqs(), a.kv.num_seqs());
+        // Lock-step resume: every step produces the same token count.
+        while a.has_work() || b.has_work() {
+            assert_eq!(a.step().unwrap(), b.step().unwrap());
+            assert_eq!(a.steps(), b.steps());
+        }
+        // Identical outputs, including outputs finished before the
+        // snapshot (they travel in the bytes), and identical follow-up
+        // ids (next_id travels too).
+        let oa = a.take_finished();
+        let ob = b.take_finished();
+        let dump = |v: &[RequestOutput]| v.iter().map(|o| format!("{o:?}")).collect::<Vec<_>>();
+        assert_eq!(dump(&oa), dump(&ob));
+        assert_eq!(
+            a.submit(vec![1], SamplingParams::greedy(1)).unwrap(),
+            b.submit(vec![1], SamplingParams::greedy(1)).unwrap()
+        );
+        // The restored outputs are the mock's exact continuations.
+        for o in &ob {
+            if o.id <= 6 {
+                assert_eq!(o.finish, FinishReason::Length);
+                assert_eq!(o.tokens, mock_expect(&o.prompt, 12), "req {}", o.id);
+            }
+        }
+    }
+
+    #[test]
+    fn snapshot_restore_rejects_bad_streams() {
+        let mut a = engine(EngineConfig::default());
+        a.submit(vec![3, 4], SamplingParams::greedy(4)).unwrap();
+        a.step().unwrap();
+        let bytes = a.snapshot();
+        let pool = || crate::pool::PoolHandle::system();
+        // Valid bytes restore fine.
+        assert!(Engine::restore(MockBackend::new(), pool(), &bytes).is_ok());
+        // Bad magic, truncation, trailing garbage, geometry mismatch.
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xFF;
+        assert!(matches!(
+            Engine::restore(MockBackend::new(), pool(), &bad),
+            Err(SnapError::BadMagic)
+        ));
+        assert!(Engine::restore(MockBackend::new(), pool(), &bytes[..bytes.len() - 3]).is_err());
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(Engine::restore(MockBackend::new(), pool(), &long).is_err());
+        assert!(matches!(
+            Engine::restore(MockBackend::with_blocks(9, 4, 4), pool(), &bytes),
+            Err(SnapError::ConfigMismatch(_))
+        ));
+    }
+
+    #[test]
+    fn decode_survives_mid_run_compaction() {
+        // Tiny pool + preemption churn scatters the live KV blocks;
+        // compacting between every step rewrites the running sequences'
+        // block tables mid-flight. The mock is positional, so outputs
+        // must still be the exact uncontended continuations.
+        let be = MockBackend::with_blocks(9, 4, 4);
+        let mut e = Engine::new(be, EngineConfig { max_batch: 4, ..Default::default() });
+        let prompts: Vec<Vec<i32>> = (0..4).map(|i| vec![i * 3 + 1, i + 2]).collect();
+        for p in &prompts {
+            e.submit(p.clone(), SamplingParams::greedy(10)).unwrap();
+        }
+        let mut steps = 0u64;
+        while e.has_work() {
+            e.step().unwrap();
+            let report = e.kv.compact(2);
+            assert!(report.post_occupancy >= report.pre_occupancy);
+            steps += 1;
+            assert!(steps < 100_000, "no completion");
+        }
+        let mut outs = e.take_finished();
+        outs.sort_by_key(|o| o.id);
+        for (o, p) in outs.iter().zip(&prompts) {
+            assert_eq!(o.finish, FinishReason::Length, "req {}", o.id);
+            assert_eq!(o.tokens, mock_expect(p, 10), "req {} across compactions", o.id);
+        }
+    }
+
+    #[test]
+    fn maintain_pool_compacts_sparse_kv_grid() {
+        // A finished wave leaves a high watermark with zero live blocks:
+        // occupancy 0 < threshold, so maintenance compacts and returns
+        // the whole touched span as regions.
+        let mut e = engine(EngineConfig { max_batch: 4, ..Default::default() });
+        for i in 0..4 {
+            // 30-token prompts + 18 generated = 48 tokens = 3 blocks each.
+            e.submit(vec![i + 2; 30], SamplingParams::greedy(18)).unwrap();
+        }
+        e.run_to_completion(100_000).unwrap();
+        assert!(e.kv.occupancy() < KV_COMPACT_BELOW);
+        e.maintain_pool();
+        assert_eq!(e.metrics.counter("kv_compactions").get(), 1);
+        assert!(e.metrics.counter("kv_regions_returned").get() >= 1);
+        assert_eq!(e.kv.occupancy(), 1.0);
+        // Now dense: a second maintenance pass does not compact again.
+        e.maintain_pool();
+        assert_eq!(e.metrics.counter("kv_compactions").get(), 1);
     }
 }

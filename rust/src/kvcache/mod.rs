@@ -13,7 +13,7 @@
 
 use std::collections::HashMap;
 
-use crate::pool::{PoolHandle, PooledVec};
+use crate::pool::{FreeMask, PoolHandle, PooledVec, SnapError, SnapReader, SnapWriter};
 
 /// The paper's fixed-size pool over block *indices* (§IV adapted to
 /// device-resident blocks). O(1) allocate/free, lazy initialisation,
@@ -94,6 +94,85 @@ impl BlockAllocator {
 
     pub fn watermark(&self) -> u32 {
         self.num_initialized
+    }
+
+    /// Mark every not-live index into `mask`: the free-chain walk plus
+    /// the uninitialised tail — the same complement rule as
+    /// [`crate::pool::Traverse`], in index space (KV blocks live on the
+    /// device, so there is no pointer to resolve). Exact whenever the
+    /// manager is not mid-call (it is `&mut self` throughout, so any
+    /// caller that can borrow it is quiescent by construction).
+    pub fn mark_free(&self, mask: &mut FreeMask) {
+        let mut cur = self.head;
+        let mut steps = 0u32;
+        while cur < self.num_blocks && steps <= self.num_blocks {
+            mask.mark(cur);
+            if cur >= self.num_initialized {
+                break;
+            }
+            cur = self.next_free[cur as usize];
+            steps += 1;
+        }
+        for idx in self.num_initialized..self.num_blocks {
+            mask.mark(idx);
+        }
+    }
+
+    /// The not-live mask over the block grid.
+    pub fn free_mask(&self) -> FreeMask {
+        let mut mask = FreeMask::new(self.num_blocks as usize);
+        self.mark_free(&mut mask);
+        mask
+    }
+
+    /// Live (allocated) block indices, ascending.
+    pub fn live_indices(&self) -> Vec<u32> {
+        let mut v = Vec::with_capacity(self.num_used() as usize);
+        self.free_mask().for_each_live(|i| v.push(i));
+        v
+    }
+
+    /// Reset to the compacted pristine state: blocks `[0, live)` are
+    /// allocated, everything above is the untouched lazy tail — exactly
+    /// the state `live` allocations from a fresh allocator produce. This
+    /// is how compaction "returns whole regions": the free set collapses
+    /// from a scattered chain into the watermark tail.
+    fn reset_compacted(&mut self, live: u32) {
+        debug_assert!(live <= self.num_blocks);
+        self.num_initialized = live;
+        self.num_free = self.num_blocks - live;
+        self.head = if live == self.num_blocks { NIL } else { live };
+    }
+
+    /// Serialise the allocator (fields + the initialised prefix of the
+    /// free-chain table; the lazy tail needs no bytes).
+    pub fn snapshot_into(&self, w: &mut SnapWriter) {
+        w.put_u32(self.num_blocks);
+        w.put_u32(self.num_free);
+        w.put_u32(self.num_initialized);
+        w.put_u32(self.head);
+        for &nf in &self.next_free[..self.num_initialized as usize] {
+            w.put_u32(nf);
+        }
+    }
+
+    /// Inverse of [`Self::snapshot_into`], with structural validation.
+    pub fn restore_from(r: &mut SnapReader<'_>) -> Result<Self, SnapError> {
+        let num_blocks = r.u32()?;
+        if num_blocks == 0 || num_blocks >= NIL {
+            return Err(SnapError::Corrupt("allocator block count"));
+        }
+        let num_free = r.u32()?;
+        let num_initialized = r.u32()?;
+        let head = r.u32()?;
+        if num_free > num_blocks || num_initialized > num_blocks {
+            return Err(SnapError::Corrupt("allocator counters"));
+        }
+        let mut next_free = vec![0u32; num_blocks as usize];
+        for nf in next_free[..num_initialized as usize].iter_mut() {
+            *nf = r.u32()?;
+        }
+        Ok(Self { num_blocks, num_free, num_initialized, head, next_free })
     }
 
     /// Test/debug helper: walks the free list (O(n), never on hot path).
@@ -323,6 +402,173 @@ impl KvCacheManager {
     pub fn utilization(&self) -> f64 {
         self.alloc.num_used() as f64 / self.alloc.num_blocks() as f64
     }
+
+    /// Occupancy of the *touched* region: used blocks over the lazy
+    /// watermark. 1.0 means the touched prefix is dense (no holes); low
+    /// values mean churn has scattered live blocks across a wide span —
+    /// the condition [`Self::compact`] repairs.
+    pub fn occupancy(&self) -> f64 {
+        let wm = self.alloc.watermark();
+        if wm == 0 {
+            1.0
+        } else {
+            f64::from(self.alloc.num_used()) / f64::from(wm)
+        }
+    }
+
+    /// Compact the block grid: migrate every live block above the live
+    /// count down into a hole below it, rewrite the owning sequences'
+    /// block tables, and reset the allocator to the pristine compacted
+    /// state (live prefix + lazy tail). The freed tail is accounted in
+    /// whole `region_blocks`-sized regions — the unit a device allocator
+    /// could return to the OS / a peer pool.
+    ///
+    /// Returns the move list `(from, to)`; a real backend must apply the
+    /// same copies to device KV memory before the next step. The bundled
+    /// [`crate::coordinator::backend::MockBackend`] is positional (block
+    /// ids are routing, not state), so no device copy is needed in-tree.
+    pub fn compact(&mut self, region_blocks: u32) -> CompactionReport {
+        let n = self.alloc.num_blocks();
+        let pre_occupancy = self.occupancy();
+        let pre_watermark = self.alloc.watermark();
+
+        // Owner map over the grid: block index -> (seq id, table slot).
+        let mut owner: Vec<Option<(u64, usize)>> = vec![None; n as usize];
+        for (&sid, seq) in &self.seqs {
+            for (pos, &b) in seq.blocks.iter().enumerate() {
+                debug_assert!(owner[b as usize].is_none(), "block {b} owned twice");
+                owner[b as usize] = Some((sid, pos));
+            }
+        }
+        let live = owner.iter().filter(|o| o.is_some()).count() as u32;
+        debug_assert_eq!(
+            live,
+            self.alloc.num_used(),
+            "seq tables and allocator disagree on the live set"
+        );
+        // Cross-check against the traversed free set: the complement of
+        // the free mask must be exactly the owned blocks.
+        debug_assert_eq!(
+            self.alloc.free_mask().live() as u32,
+            live,
+            "traversed live set disagrees with the owner map"
+        );
+
+        // Pack: every live block at index >= live moves into a hole
+        // below. Scanning `hole` forward once keeps this O(n) total.
+        let mut moves: Vec<(u32, u32)> = Vec::new();
+        let mut hole = 0u32;
+        for from in live..n {
+            let Some((sid, pos)) = owner[from as usize] else {
+                continue;
+            };
+            while owner[hole as usize].is_some() {
+                hole += 1;
+            }
+            debug_assert!(hole < live, "more live blocks than holes below the live count");
+            owner[hole as usize] = owner[from as usize].take();
+            let seq = self.seqs.get_mut(&sid).expect("owner map points at a live seq");
+            seq.blocks.as_mut_slice()[pos] = hole;
+            moves.push((from, hole));
+        }
+
+        self.alloc.reset_compacted(live);
+        let regions_returned = if region_blocks == 0 {
+            0
+        } else {
+            (pre_watermark.max(live) - live) / region_blocks
+        };
+        CompactionReport {
+            pre_occupancy,
+            post_occupancy: self.occupancy(),
+            blocks_migrated: moves.len() as u32,
+            regions_returned,
+            moves,
+        }
+    }
+
+    /// Serialise the full manager state — allocator, config scalars, and
+    /// every sequence table (sorted by id, so the byte stream is
+    /// deterministic regardless of hash order).
+    pub fn snapshot_into(&self, w: &mut SnapWriter) {
+        w.put_u32(self.block_tokens);
+        w.put_u64(self.max_blocks_per_seq as u64);
+        w.put_u32(self.scratch_block);
+        w.put_u32(self.peak_used);
+        self.alloc.snapshot_into(w);
+        let mut ids: Vec<u64> = self.seqs.keys().copied().collect();
+        ids.sort_unstable();
+        w.put_u32(ids.len() as u32);
+        for id in ids {
+            let s = &self.seqs[&id];
+            w.put_u64(id);
+            w.put_u32(s.tokens);
+            w.put_u32(s.blocks.len() as u32);
+            for &b in s.blocks.iter() {
+                w.put_u32(b);
+            }
+        }
+    }
+
+    /// Inverse of [`Self::snapshot_into`]: rebuild the manager over
+    /// `pool` (per-sequence tables are re-allocated from it, so a
+    /// restored manager draws its storage from the *restoring* process's
+    /// pool, not stale pointers).
+    pub fn restore_from(r: &mut SnapReader<'_>, pool: PoolHandle) -> Result<Self, SnapError> {
+        let block_tokens = r.u32()?;
+        if block_tokens == 0 {
+            return Err(SnapError::Corrupt("zero block_tokens"));
+        }
+        let max_blocks_per_seq = r.u64()? as usize;
+        let scratch_block = r.u32()?;
+        let peak_used = r.u32()?;
+        let alloc = BlockAllocator::restore_from(r)?;
+        if scratch_block != alloc.num_blocks() {
+            return Err(SnapError::ConfigMismatch("scratch block is not the last block"));
+        }
+        let n_seqs = r.u32()?;
+        let mut seqs = HashMap::with_capacity(n_seqs as usize);
+        for _ in 0..n_seqs {
+            let id = r.u64()?;
+            let tokens = r.u32()?;
+            let n_blocks = r.u32()?;
+            if n_blocks as usize > max_blocks_per_seq {
+                return Err(SnapError::Corrupt("sequence exceeds max_blocks_per_seq"));
+            }
+            let mut blocks = PooledVec::with_capacity(&pool, max_blocks_per_seq);
+            for _ in 0..n_blocks {
+                let b = r.u32()?;
+                if b >= alloc.num_blocks() {
+                    return Err(SnapError::Corrupt("sequence block out of range"));
+                }
+                blocks.push(b);
+            }
+            if seqs.insert(id, SeqCache { blocks, tokens }).is_some() {
+                return Err(SnapError::Corrupt("duplicate sequence id"));
+            }
+        }
+        Ok(Self {
+            alloc,
+            seqs,
+            pool,
+            block_tokens,
+            max_blocks_per_seq,
+            scratch_block,
+            peak_used,
+        })
+    }
+}
+
+/// What [`KvCacheManager::compact`] did: occupancy before/after, the
+/// migration count, whole regions returned to the lazy tail, and the
+/// device copy contract (`(from, to)` block moves).
+#[derive(Debug, Clone)]
+pub struct CompactionReport {
+    pub pre_occupancy: f64,
+    pub post_occupancy: f64,
+    pub blocks_migrated: u32,
+    pub regions_returned: u32,
+    pub moves: Vec<(u32, u32)>,
 }
 
 #[cfg(test)]
@@ -545,5 +791,141 @@ mod tests {
         assert!(!m.can_admit(33));
         m.create_seq(7, 32).unwrap();
         assert!(!m.can_admit(1));
+    }
+
+    // ---- traversal, compaction, snapshot ----
+
+    #[test]
+    fn allocator_free_mask_matches_slow_walk() {
+        let mut a = BlockAllocator::new(8);
+        let got: Vec<u32> = (0..6).map(|_| a.allocate().unwrap()).collect();
+        a.free(got[1]);
+        a.free(got[4]);
+        let mask = a.free_mask();
+        for i in 0..8u32 {
+            let free = i >= a.watermark() || a.is_free_slow(i);
+            assert_eq!(mask.is_free(i), free, "index {i}");
+        }
+        assert_eq!(mask.live() as u32, a.num_used());
+        assert_eq!(a.live_indices(), vec![0, 2, 3, 5]);
+        // Conservation: live + free == total.
+        assert_eq!(mask.live() as u32 + a.num_free(), a.num_blocks());
+    }
+
+    #[test]
+    fn compact_packs_live_blocks_and_returns_regions() {
+        let mut m = mgr();
+        // Fill all 16 data blocks across 8 seqs, then free alternating
+        // seqs: live blocks end up scattered across the full watermark.
+        for id in 0..8 {
+            m.create_seq(id, 32).unwrap(); // 2 blocks each
+        }
+        for id in (0..8).step_by(2) {
+            m.free_seq(id).unwrap();
+        }
+        assert_eq!(m.alloc.num_used(), 8);
+        assert_eq!(m.alloc.watermark(), 16);
+        assert!(m.occupancy() < 0.75);
+
+        let report = m.compact(4);
+        assert!(report.pre_occupancy < 0.75);
+        assert_eq!(report.post_occupancy, 1.0);
+        assert!(report.blocks_migrated >= 1);
+        assert_eq!(report.blocks_migrated as usize, report.moves.len());
+        // Tail of 8 free blocks over 4-block regions → 2 whole regions.
+        assert_eq!(report.regions_returned, 2);
+        assert_eq!(m.alloc.watermark(), 8);
+
+        // Every surviving seq's table now points below the live count,
+        // at distinct blocks, and the allocator agrees.
+        let mut seen = std::collections::HashSet::new();
+        for id in (1..8).step_by(2) {
+            for &b in m.seq(id).unwrap().blocks.iter() {
+                assert!(b < 8, "block {b} above the compacted live count");
+                assert!(seen.insert(b), "block {b} double-owned after compact");
+                assert!(!m.alloc.is_free_slow(b));
+            }
+        }
+        assert_eq!(seen.len(), 8);
+
+        // The pool keeps working: admission reuses the compact tail.
+        m.create_seq(100, 64).unwrap();
+        assert_eq!(m.num_free_blocks(), 4);
+
+        // Compacting an already-dense grid is a no-op with no moves.
+        let again = m.compact(4);
+        assert_eq!(again.blocks_migrated, 0);
+        assert_eq!(again.pre_occupancy, 1.0);
+    }
+
+    #[test]
+    fn compact_empty_and_full_edges() {
+        let mut m = mgr();
+        let r = m.compact(4);
+        assert_eq!(r.blocks_migrated, 0);
+        assert_eq!(r.pre_occupancy, 1.0);
+        assert_eq!(r.regions_returned, 0);
+        // Full grid: nothing to move, nothing to return.
+        for id in 0..8 {
+            m.create_seq(id, 32).unwrap();
+        }
+        let r = m.compact(4);
+        assert_eq!(r.blocks_migrated, 0);
+        assert_eq!(r.regions_returned, 0);
+        assert_eq!(m.num_free_blocks(), 0);
+        // region_blocks == 0 never divides by zero.
+        m.free_seq(0).unwrap();
+        assert_eq!(m.compact(0).regions_returned, 0);
+    }
+
+    #[test]
+    fn manager_snapshot_round_trip() {
+        let mut m = mgr();
+        for id in 0..5 {
+            m.create_seq(id, 20 + id as u32).unwrap();
+        }
+        m.free_seq(2).unwrap();
+        for _ in 0..30 {
+            m.append_token(3).unwrap();
+        }
+
+        let mut w = SnapWriter::new();
+        m.snapshot_into(&mut w);
+        let bytes = w.into_bytes();
+        let mut r = SnapReader::new(&bytes);
+        let restored = KvCacheManager::restore_from(&mut r, PoolHandle::system()).unwrap();
+        r.expect_end().unwrap();
+
+        assert_eq!(restored.block_tokens, m.block_tokens);
+        assert_eq!(restored.max_blocks_per_seq, m.max_blocks_per_seq);
+        assert_eq!(restored.scratch_block, m.scratch_block);
+        assert_eq!(restored.peak_used, m.peak_used);
+        assert_eq!(restored.num_free_blocks(), m.num_free_blocks());
+        assert_eq!(restored.num_seqs(), m.num_seqs());
+        for id in [0u64, 1, 3, 4] {
+            let (a, b) = (m.seq(id).unwrap(), restored.seq(id).unwrap());
+            assert_eq!(a.tokens, b.tokens);
+            assert_eq!(a.blocks.as_slice(), b.blocks.as_slice());
+            assert_eq!(m.table_row(id).unwrap(), restored.table_row(id).unwrap());
+        }
+        // The restored allocator replays identically: drain both to
+        // exhaustion and compare the handed-out sequences.
+        let mut a = m;
+        let mut b = restored;
+        loop {
+            let (x, y) = (a.alloc.allocate(), b.alloc.allocate());
+            assert_eq!(x, y);
+            if x.is_none() {
+                break;
+            }
+        }
+
+        // Corrupt stream is rejected, not trusted.
+        let mut bad = bytes.clone();
+        bad[0] = 0; // block_tokens -> 0
+        let mut r = SnapReader::new(&bad);
+        assert!(KvCacheManager::restore_from(&mut r, PoolHandle::system()).is_err());
+        let mut r = SnapReader::new(&bytes[..9]);
+        assert!(KvCacheManager::restore_from(&mut r, PoolHandle::system()).is_err());
     }
 }

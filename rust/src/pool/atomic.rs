@@ -290,6 +290,52 @@ impl AtomicPool {
     pub fn aba_tag(&self) -> u32 {
         self.head.tag()
     }
+
+    /// Walk the Treiber free chain (head + side-table links) and report
+    /// each free index to `mark`, then the never-threaded watermark tail.
+    /// Read-only and bounded by `num_blocks` steps, so a torn concurrent
+    /// read can at worst mis-mark — it cannot loop or index out of range.
+    /// Exact at quiescence / under the sharded layer's traversal pin
+    /// (see [`super::traverse`]).
+    pub(crate) fn mark_free_indices(&self, mut mark: impl FnMut(u32)) {
+        let mut cur = self.head.top();
+        let mut steps = 0u32;
+        while cur < self.num_blocks && steps < self.num_blocks {
+            mark(cur);
+            cur = self.next[cur as usize].load(Ordering::Acquire);
+            steps += 1;
+        }
+        for idx in self.watermark.load(Ordering::Acquire)..self.num_blocks {
+            mark(idx);
+        }
+    }
+
+    /// Pointer for a block index (shared with the traversal layer).
+    pub(crate) fn ptr_of_index(&self, i: u32) -> NonNull<u8> {
+        self.addr_from_index(i)
+    }
+}
+
+/// Free = Treiber chain + watermark tail; live = complement. Exact at
+/// quiescence or under the sharded layer's pin (this layer alone has no
+/// pin — its callers either own it exclusively or pin above it).
+impl super::traverse::Traverse for AtomicPool {
+    fn grid_len(&self) -> usize {
+        self.num_blocks as usize
+    }
+
+    fn mark_free(&self, mask: &mut super::traverse::FreeMask) {
+        self.mark_free_indices(|i| mask.mark(i));
+    }
+
+    fn live_block(&self, index: u32) -> super::traverse::LiveBlock {
+        super::traverse::LiveBlock {
+            index,
+            ptr: self.addr_from_index(index),
+            size: self.block_size(),
+            class: 0,
+        }
+    }
 }
 
 impl Drop for AtomicPool {

@@ -179,6 +179,25 @@ impl FixedPool {
     }
 }
 
+/// Delegates to the wrapped [`RawPool`] — same grid, same complement
+/// walk, same `&mut`-exclusivity quiescence argument.
+impl super::traverse::Traverse for FixedPool {
+    fn grid_len(&self) -> usize {
+        use super::traverse::Traverse;
+        self.raw.grid_len()
+    }
+
+    fn mark_free(&self, mask: &mut super::traverse::FreeMask) {
+        use super::traverse::Traverse;
+        self.raw.mark_free(mask);
+    }
+
+    fn live_block(&self, index: u32) -> super::traverse::LiveBlock {
+        use super::traverse::Traverse;
+        self.raw.live_block(index)
+    }
+}
+
 impl Drop for FixedPool {
     fn drop(&mut self) {
         // O(1) destroy (paper's DestroyPool): free the region; no per-block

@@ -247,24 +247,43 @@ impl GuardedPool {
 
     /// Live allocations (the leak report, §IV.B). Order: by allocation
     /// sequence number.
+    ///
+    /// The live set comes from the traversal layer
+    /// ([`Traverse`](super::traverse::Traverse) on the backing pool):
+    /// the complement of the in-slot free chain — not from the guard
+    /// bitmap, so the report works even with
+    /// [`GuardConfig::track_double_free`] off. When the bitmap *is*
+    /// tracked, debug builds cross-check the two block for block.
     pub fn leaks(&self) -> Vec<Allocation> {
-        let mut out: Vec<Allocation> = self
-            .allocated
-            .iter()
-            .enumerate()
-            .filter(|(_, &live)| live)
-            .map(|(i, _)| Allocation {
-                index: i as u32,
-                tag: self.tags[i],
-                seq: self.seqs[i],
-            })
-            .collect();
+        use super::traverse::Traverse;
+        let mut out: Vec<Allocation> = Vec::new();
+        self.pool.for_each_live(|b| {
+            let i = b.index as usize;
+            debug_assert!(
+                !self.cfg.track_double_free || self.allocated[i],
+                "traversal found live block {i} the guard bitmap says is free"
+            );
+            out.push(Allocation { index: b.index, tag: self.tags[i], seq: self.seqs[i] });
+        });
+        debug_assert!(
+            !self.cfg.track_double_free
+                || out.len() == self.allocated.iter().filter(|&&b| b).count(),
+            "traversed live set disagrees with the guard bitmap"
+        );
         out.sort_by_key(|a| a.seq);
         out
     }
 
+    /// Live block count, derived from traversal (see [`Self::leaks`]).
     pub fn num_live(&self) -> usize {
-        self.allocated.iter().filter(|&&b| b).count()
+        use super::traverse::Traverse;
+        let n = self.pool.live_count() as usize;
+        debug_assert!(
+            !self.cfg.track_double_free
+                || n == self.allocated.iter().filter(|&&b| b).count(),
+            "traversed live count disagrees with the guard bitmap"
+        );
+        n
     }
 
     pub fn num_free(&self) -> u32 {

@@ -244,6 +244,44 @@ impl PoolHandle {
         self.inner.as_deref()
     }
 
+    // ---- traversal --------------------------------------------------------
+    //
+    // The handle is the engine-facing end of the `Traverse` lineage:
+    // these passthroughs answer "what is allocated right now?" without
+    // exposing the pool itself. A system-mode handle has no grid to walk
+    // (and blocks served by a pooled handle's *system fallback* live
+    // outside every class region), so these cover exactly the pool-served
+    // blocks — the same set `num_free` accounts for.
+
+    /// Number of live pool-served blocks. 0 for system-mode handles.
+    /// Exact at quiescence or under [`Self::pin_for_traversal`].
+    pub fn live_count(&self) -> u32 {
+        use super::traverse::Traverse;
+        self.inner.as_deref().map_or(0, |mp| mp.live_count())
+    }
+
+    /// Visit every live pool-served block (ascending grid order, class
+    /// attributed). No-op for system-mode handles.
+    pub fn for_each_live(&self, f: impl FnMut(super::traverse::LiveBlock)) {
+        use super::traverse::Traverse;
+        if let Some(mp) = self.inner.as_deref() {
+            mp.for_each_live(f);
+        }
+    }
+
+    /// Materialise the live set. Empty for system-mode handles.
+    pub fn live_snapshot(&self) -> Vec<super::traverse::LiveBlock> {
+        use super::traverse::Traverse;
+        self.inner.as_deref().map_or_else(Vec::new, |mp| mp.live_snapshot())
+    }
+
+    /// Park allocation on the backing pool while traversing (`None` for
+    /// system-mode handles). The pinning thread must not allocate from
+    /// this handle while the pin is held.
+    pub fn pin_for_traversal(&self) -> Option<super::multi::MultiTraversalPin<'_>> {
+        self.inner.as_deref().map(|mp| mp.pin_for_traversal())
+    }
+
     /// Allocate `size` bytes at 16-alignment. `size` must be non-zero.
     fn alloc_bytes(&self, size: usize) -> Option<(NonNull<u8>, Backing)> {
         debug_assert!(size > 0);

@@ -303,6 +303,7 @@ impl MagazinePool {
     /// calling thread's loaded magazine — no CAS, no fence, no scan.
     #[inline]
     pub fn allocate(&self) -> Option<NonNull<u8>> {
+        self.shared.park_check();
         if let Some(m) = self.my_slot() {
             // SAFETY: `my_slot` returns only while this thread owns the
             // slot state, so `inner` is exclusively ours.
@@ -329,6 +330,7 @@ impl MagazinePool {
     /// `p` must come from `allocate` on this pool, freed at most once.
     #[inline]
     pub unsafe fn deallocate(&self, p: NonNull<u8>) {
+        self.shared.park_check();
         if let Some(m) = self.my_slot() {
             // SAFETY: as in `allocate` — slot ownership is exclusive.
             let inner = unsafe { &mut *m.inner.get() };
@@ -438,6 +440,7 @@ impl MagazinePool {
     /// returns blocks moved. Deterministic hand-back for benches and for
     /// callers about to park a thread.
     pub fn flush_local(&self) -> u32 {
+        self.shared.park_check();
         match self.my_slot() {
             Some(m) => {
                 // SAFETY: slot ownership is exclusive (see `allocate`).
@@ -454,6 +457,7 @@ impl MagazinePool {
     /// engine calls this from its maintenance tick, and the allocate slow
     /// path uses it as a last resort before reporting exhaustion.
     pub fn flush_stale_magazines(&self) -> u32 {
+        self.shared.park_check();
         let mut moved = 0u32;
         // Only slots that were ever bound can hold anything; the bound
         // high-water keeps this scan proportional to the pool's actual
@@ -484,6 +488,16 @@ impl MagazinePool {
     }
 
     // ---- delegation & introspection ---------------------------------------
+
+    /// Pin the backing sharded pool for traversal (see
+    /// [`ShardedPool::pin_for_traversal`]). Magazine entry points park on
+    /// the same epoch word, so ops that *begin* after the pin is visible
+    /// wait it out; the pin's grace window plus the per-slot claim CAS in
+    /// [`Traverse::mark_free`](super::traverse::Traverse::mark_free)
+    /// absorb ops already in flight.
+    pub fn pin_for_traversal(&self) -> super::sharded::TraversalPin<'_> {
+        self.shared.pin_for_traversal()
+    }
 
     /// See [`ShardedPool::drain_stashes`].
     pub fn drain_stashes(&self) -> u32 {
@@ -597,6 +611,66 @@ impl MagazinePool {
         s.magazines = m;
         metrics.gauge(&format!("{prefix}.free_blocks")).set(s.num_free() as i64);
         s
+    }
+}
+
+impl super::traverse::Traverse for MagazinePool {
+    fn grid_len(&self) -> usize {
+        use super::traverse::Traverse;
+        self.shared.grid_len()
+    }
+
+    /// Free = shared free (shard chains + stashes + padding + tail) ∪
+    /// magazine-cached. Rack contents are read under the slot-state claim
+    /// protocol: each slot is CASed into CLAIMED, its magazines read, and
+    /// the observed state restored — so the read never races the owner's
+    /// non-atomic pushes/pops. Owners parked on the traversal pin (or
+    /// quiescent) cannot be mid-op, which is what makes the claim winnable
+    /// and the snapshot exact.
+    fn mark_free(&self, mask: &mut super::traverse::FreeMask) {
+        use super::traverse::Traverse;
+        self.shared.mark_free(mask);
+        let hw = (self.bound_hw.load(Ordering::Relaxed) as usize).min(self.rack.len());
+        for m in self.rack[..hw].iter() {
+            loop {
+                let observed = m.state.peek();
+                if matches!(observed, MagState::Claimed) {
+                    // A binder, reclaimer, or sibling traversal holds the
+                    // slot; none of them park while claiming (the bulk
+                    // grid paths skip the pin), so this resolves.
+                    std::thread::yield_now();
+                    continue;
+                }
+                if m.state.try_claim(observed).is_err() {
+                    std::thread::yield_now();
+                    continue;
+                }
+                // SAFETY: winning the claim CAS grants exclusive access
+                // to `inner` until we publish a non-CLAIMED state below.
+                let inner = unsafe { &*m.inner.get() };
+                for &grid in &inner.loaded[..inner.loaded_len as usize] {
+                    mask.mark(grid);
+                }
+                for &grid in &inner.prev[..inner.prev_len as usize] {
+                    mask.mark(grid);
+                }
+                // Restore exactly what was observed: a FREE slot stays
+                // free, an owned slot goes back to its owner's generation
+                // (the owner is parked or quiescent, so it never saw the
+                // transient CLAIMED).
+                match observed {
+                    MagState::Free => m.state.publish_free(),
+                    MagState::Owned(gen) => m.state.publish_owned(gen),
+                    MagState::Claimed => unreachable!("claimed slots retry above"),
+                }
+                break;
+            }
+        }
+    }
+
+    fn live_block(&self, index: u32) -> super::traverse::LiveBlock {
+        use super::traverse::Traverse;
+        self.shared.live_block(index)
     }
 }
 

@@ -69,7 +69,9 @@ pub mod proto;
 pub mod raw;
 pub mod resize;
 pub mod sharded;
+pub mod snapshot;
 pub mod stats;
+pub mod traverse;
 pub mod typed;
 
 pub use atomic::AtomicPool;
@@ -82,8 +84,8 @@ pub use handle::{PoolHandle, PoolHandleBuilder, PooledVec};
 pub use locked::{BlockToken, LockedPool};
 pub use magazine::{MagazinePool, DEFAULT_MAG_DEPTH, MAX_MAG_DEPTH};
 pub use multi::{
-    ConfigError, MultiPool, MultiPoolConfig, Origin, ShardedMultiPool, CLASS_ALIGN,
-    DEFAULT_SPILL_HOPS,
+    ConfigError, MultiPool, MultiPoolConfig, MultiTraversalPin, Origin, ShardedMultiPool,
+    CLASS_ALIGN, DEFAULT_SPILL_HOPS,
 };
 pub use placement::{
     Pinned, RoundRobin, ShardPlacement, StealAware, DEFAULT_REHOME_THRESHOLD_PCT,
@@ -93,7 +95,9 @@ pub use raw::{RawPool, MIN_BLOCK_SIZE};
 pub use resize::ResizablePool;
 pub use sharded::{
     default_shards, home_slot_epoch, home_slots_free, home_slots_high_water, ShardedPool,
-    MAX_HOME_SLOTS, MAX_STEAL_BATCH,
+    TraversalPin, MAX_HOME_SLOTS, MAX_STEAL_BATCH,
 };
+pub use snapshot::{ClassSnapshot, PoolSnapshot, RestoredBlock, SnapError, SnapReader, SnapWriter};
 pub use stats::{MagazineStats, PoolStats, ShardStats, ShardedPoolStats, SpillStats};
+pub use traverse::{FreeMask, LiveBlock, Traverse};
 pub use typed::{PoolBox, TypedPool};

@@ -786,6 +786,202 @@ impl ShardedMultiPool {
     }
 }
 
+// ------------------------------------------------------------ traversal --
+//
+// A multi-pool's grid is the concatenation of its classes' grids, each
+// class based at a multiple of 64 slots so per-class masks fold into the
+// combined mask with whole-word ORs ([`FreeMask::or_shifted`]). The
+// alignment gap between a class's real grid and its padded end is marked
+// not-live like stride padding.
+
+use super::traverse::{FreeMask, LiveBlock, Traverse};
+
+/// Round a class grid length up to the 64-slot base granularity.
+#[inline]
+fn padded_grid(len: usize) -> usize {
+    len.div_ceil(64) * 64
+}
+
+fn multi_grid_len<T: Traverse>(classes: &[T]) -> usize {
+    classes.iter().map(|c| padded_grid(c.grid_len())).sum()
+}
+
+fn multi_mark_free<T: Traverse>(classes: &[T], mask: &mut FreeMask) {
+    let mut base = 0usize;
+    for c in classes {
+        let len = c.grid_len();
+        let padded = padded_grid(len);
+        let mut sub = FreeMask::new(padded);
+        c.mark_free(&mut sub);
+        for gap in len..padded {
+            sub.mark(gap as u32);
+        }
+        mask.or_shifted(&sub, base);
+        base += padded;
+    }
+}
+
+fn multi_live_block<T: Traverse>(classes: &[T], index: u32) -> LiveBlock {
+    let mut base = 0usize;
+    for (ci, c) in classes.iter().enumerate() {
+        let padded = padded_grid(c.grid_len());
+        if (index as usize) < base + padded {
+            let mut b = c.live_block(index - base as u32);
+            b.index = index;
+            b.class = ci;
+            return b;
+        }
+        base += padded;
+    }
+    unreachable!("grid index {index} beyond the multi-pool grid")
+}
+
+impl Traverse for MultiPool {
+    fn grid_len(&self) -> usize {
+        multi_grid_len(&self.classes)
+    }
+
+    fn mark_free(&self, mask: &mut FreeMask) {
+        multi_mark_free(&self.classes, mask);
+    }
+
+    fn live_block(&self, index: u32) -> LiveBlock {
+        multi_live_block(&self.classes, index)
+    }
+}
+
+impl Traverse for ShardedMultiPool {
+    fn grid_len(&self) -> usize {
+        multi_grid_len(&self.classes)
+    }
+
+    fn mark_free(&self, mask: &mut FreeMask) {
+        multi_mark_free(&self.classes, mask);
+    }
+
+    fn live_block(&self, index: u32) -> LiveBlock {
+        multi_live_block(&self.classes, index)
+    }
+}
+
+/// RAII guard pinning every size class of a [`ShardedMultiPool`] for
+/// traversal (see [`super::sharded::ShardedPool::pin_for_traversal`]).
+pub struct MultiTraversalPin<'a> {
+    _pins: Vec<super::sharded::TraversalPin<'a>>,
+}
+
+impl ShardedMultiPool {
+    /// Pin allocation/free on every class while traversing. The pinning
+    /// thread must not allocate from or free to this pool while the pin
+    /// is held (it would park on itself).
+    pub fn pin_for_traversal(&self) -> MultiTraversalPin<'_> {
+        MultiTraversalPin {
+            _pins: self.classes.iter().map(|c| c.pin_for_traversal()).collect(),
+        }
+    }
+
+    /// Base offset of class `ci`'s grid inside the concatenated
+    /// multi-pool grid ([`Traverse`] index space).
+    pub fn class_grid_base(&self, ci: usize) -> usize {
+        self.classes[..ci].iter().map(|c| padded_grid(c.grid_len())).sum()
+    }
+
+    /// Free blocks currently in class `ci` (shards + stashes + magazine
+    /// caches; exact at quiescence).
+    pub fn class_free(&self, ci: usize) -> u32 {
+        self.classes[ci].num_free()
+    }
+
+    /// Per-class capacity in blocks.
+    pub fn blocks_per_class(&self) -> u32 {
+        self.cfg.blocks_per_class
+    }
+
+    // ------------------------------------------------------- snapshot --
+
+    /// Capture every live block (grid index, class, payload bytes) into a
+    /// [`PoolSnapshot`]. Pins all classes for the duration; the caller
+    /// must additionally guarantee no thread is *writing block payloads*
+    /// concurrently (the pin parks alloc/free, not content writes).
+    pub fn snapshot(&self) -> PoolSnapshot {
+        let _pin = self.pin_for_traversal();
+        let classes = self
+            .classes
+            .iter()
+            .enumerate()
+            .map(|(ci, c)| {
+                let size = self.class_sizes[ci];
+                let mut live = Vec::new();
+                c.for_each_live(|b| {
+                    debug_assert_eq!(b.size, size);
+                    // SAFETY: `b` is a live block: `b.ptr` points at
+                    // `b.size` readable bytes inside this class's region.
+                    let payload = unsafe {
+                        core::slice::from_raw_parts(b.ptr.as_ptr(), b.size)
+                    };
+                    live.push((b.index, payload.to_vec()));
+                });
+                ClassSnapshot {
+                    class_size: size as u64,
+                    num_blocks: c.num_blocks(),
+                    live,
+                }
+            })
+            .collect();
+        PoolSnapshot { classes }
+    }
+
+    /// Replay a [`PoolSnapshot`] into this pool: allocate a block per
+    /// snapshotted live block (from the same class), copy its payload
+    /// back, and return the relocation map old grid index → new pointer.
+    /// The pool's geometry (class count, sizes, capacities) must match
+    /// the snapshot's; on any failure every block allocated so far is
+    /// released and the pool is left as it was.
+    pub fn restore(&self, snap: &PoolSnapshot) -> Result<Vec<RestoredBlock>, SnapError> {
+        if snap.classes.len() != self.classes.len() {
+            return Err(SnapError::ConfigMismatch("class count"));
+        }
+        let mut out: Vec<RestoredBlock> = Vec::with_capacity(snap.live_blocks());
+        let mut fail = |restored: &[RestoredBlock], e: SnapError| {
+            for r in restored {
+                // SAFETY: `r.ptr` was allocated from class `r.class` in
+                // this very call and never escaped; freed exactly once.
+                unsafe { self.classes[r.class].deallocate(r.ptr) };
+            }
+            Err(e)
+        };
+        for (ci, cs) in snap.classes.iter().enumerate() {
+            if cs.class_size as usize != self.class_sizes[ci] {
+                return fail(&out, SnapError::ConfigMismatch("class size"));
+            }
+            if cs.num_blocks != self.classes[ci].num_blocks() {
+                return fail(&out, SnapError::ConfigMismatch("class capacity"));
+            }
+            for (old_index, payload) in &cs.live {
+                if payload.len() != self.class_sizes[ci] {
+                    return fail(&out, SnapError::Corrupt("payload size"));
+                }
+                let Some(p) = self.classes[ci].allocate() else {
+                    return fail(&out, SnapError::ConfigMismatch("not enough free blocks"));
+                };
+                // SAFETY: `p` is a fresh `class_sizes[ci]`-byte block and
+                // `payload.len()` equals that size (checked above).
+                unsafe {
+                    core::ptr::copy_nonoverlapping(
+                        payload.as_ptr(),
+                        p.as_ptr(),
+                        payload.len(),
+                    )
+                };
+                out.push(RestoredBlock { class: ci, old_index: *old_index, ptr: p });
+            }
+        }
+        Ok(out)
+    }
+}
+
+use super::snapshot::{ClassSnapshot, PoolSnapshot, RestoredBlock, SnapError};
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -51,6 +51,14 @@ impl CountedStash {
     pub fn tag(&self) -> u32 {
         self.head.tag()
     }
+
+    /// Current top grid index ([`super::head::NIL`] when empty) — the
+    /// read-only entry point for the traversal layer's stash-chain walk.
+    /// Reuses the head's existing top-load site; adds no new atomic site
+    /// to the ordering-audit registry.
+    pub fn top(&self) -> u32 {
+        self.head.top()
+    }
 }
 
 impl Stash for CountedStash {

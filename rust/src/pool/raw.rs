@@ -357,6 +357,34 @@ impl RawPool {
     }
 }
 
+/// §IV inverted (see [`super::traverse`]): free = the in-band chain plus
+/// the never-initialised tail; live = the complement. Exact whenever the
+/// caller holds `&self` exclusively w.r.t. mutation — `RawPool` ops all
+/// take `&mut self`, so the borrow checker *is* the quiescence proof.
+impl super::traverse::Traverse for RawPool {
+    fn grid_len(&self) -> usize {
+        self.num_blocks as usize
+    }
+
+    fn mark_free(&self, mask: &mut super::traverse::FreeMask) {
+        for idx in self.free_list_indices() {
+            mask.mark(idx);
+        }
+        for idx in self.num_initialized..self.num_blocks {
+            mask.mark(idx);
+        }
+    }
+
+    fn live_block(&self, index: u32) -> super::traverse::LiveBlock {
+        super::traverse::LiveBlock {
+            index,
+            ptr: self.addr_from_index(index),
+            size: self.block_size(),
+            class: 0,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

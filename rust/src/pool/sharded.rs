@@ -379,6 +379,11 @@ pub struct ShardedPool {
     /// `div_inv = odd⁻¹ mod 2⁶⁴` (see `raw.rs` §Perf).
     div_shift: u32,
     div_inv: u64,
+    /// Traversal epoch: even = running, odd = pinned. While pinned, every
+    /// alloc/free/drain parks at the pool boundary (one relaxed load on
+    /// the fast path) so the free chains, stashes and magazines are
+    /// stable for [`Self::pin_for_traversal`]'s guard lifetime.
+    traverse_epoch: AtomicU32,
 }
 
 // SAFETY: the region is exclusively owned; shards are `Sync` and all
@@ -518,7 +523,62 @@ impl ShardedPool {
             stride_mask: stride as u64 - 1,
             div_shift,
             div_inv,
+            traverse_epoch: AtomicU32::new(0),
         }
+    }
+
+    /// Park point for the traversal pin: one relaxed load on the hot
+    /// path; the wait loop is out-of-line. Every alloc/free/drain entry
+    /// calls this before touching any chain.
+    #[inline(always)]
+    pub(crate) fn park_check(&self) {
+        if self.traverse_epoch.load(Ordering::Relaxed) & 1 != 0 {
+            self.park_wait();
+        }
+    }
+
+    #[cold]
+    fn park_wait(&self) {
+        while self.traverse_epoch.load(Ordering::Acquire) & 1 != 0 {
+            std::thread::yield_now();
+        }
+    }
+
+    /// Pin the pool for traversal: bumps the traversal epoch to odd, so
+    /// every allocate/deallocate/drain (magazine fast paths included, via
+    /// the magazine layer's own [`Self::park_check`] call) parks at the
+    /// pool boundary until the returned guard drops. The pin then spins a
+    /// short grace window so ops that were already past the park point
+    /// when the epoch flipped can drain.
+    ///
+    /// The pinning thread itself MUST NOT allocate or free on this pool
+    /// while the guard lives — it would park against its own pin.
+    /// Concurrent pinners serialise (second pin waits for the first).
+    pub fn pin_for_traversal(&self) -> TraversalPin<'_> {
+        loop {
+            let e = self.traverse_epoch.load(Ordering::Relaxed);
+            if e & 1 == 0
+                && self
+                    .traverse_epoch
+                    .compare_exchange(e, e + 1, Ordering::AcqRel, Ordering::Relaxed)
+                    .is_ok()
+            {
+                break;
+            }
+            std::thread::yield_now();
+        }
+        // Grace window: ops that loaded an even epoch just before the
+        // flip are a few instructions from their chain touch; yield a
+        // couple of quanta so they complete before the walk starts.
+        for _ in 0..4 {
+            std::thread::yield_now();
+        }
+        TraversalPin { pool: self }
+    }
+
+    /// Is a traversal pin currently held? (Tests / diagnostics.)
+    pub fn traversal_pinned(&self) -> bool {
+        self.traverse_epoch.load(Ordering::Relaxed) & 1 != 0
     }
 
     /// Pointer for a grid index (shard << stride_shift | local). Shared
@@ -678,6 +738,7 @@ impl ShardedPool {
     /// the local fast paths. The serving engine calls this from its
     /// periodic maintenance tick.
     pub fn drain_stashes(&self) -> u32 {
+        self.park_check();
         (0..self.counters.len()).map(|i| self.drain_slot_stash(i)).sum()
     }
 
@@ -686,6 +747,7 @@ impl ShardedPool {
     /// `None` only when every shard and stash is (momentarily) empty.
     #[inline]
     pub fn allocate(&self) -> Option<NonNull<u8>> {
+        self.park_check();
         let (slot, gen) = home_slot();
         let home = self.resolve_home(slot, gen);
         let c = &self.counters[home];
@@ -758,6 +820,11 @@ impl ShardedPool {
     /// window only **once**: a magazine refill is one routing decision,
     /// so the `StealAware` policy sees refills, not individual blocks,
     /// and its window thresholds keep their meaning under caching.
+    // NOTE: the bulk grid paths deliberately do NOT park on the traversal
+    // pin: they run between a magazine slot claim and its release (bind,
+    // flush, stale-rescue), and parking there would strand a slot in
+    // CLAIMED for the pin's lifetime — which the pinned traversal spins
+    // on. The pin parks at the layer entry points instead.
     pub(crate) fn allocate_grids(&self, want: u32, out: &mut [u32]) -> u32 {
         debug_assert!(want as usize <= out.len());
         let (slot, gen) = home_slot();
@@ -816,6 +883,7 @@ impl ShardedPool {
     /// `p` must come from `allocate` on this pool, freed at most once.
     #[inline]
     pub unsafe fn deallocate(&self, p: NonNull<u8>) {
+        self.park_check();
         let grid = self.ptr_to_grid(p);
         let shard = (grid >> self.stride_shift) as usize;
         let local = (grid as u64 & self.stride_mask) as u32;
@@ -979,6 +1047,66 @@ impl ShardedPool {
             metrics.gauge(&format!("{prefix}.shard{i}.free")).set(sh.num_free as i64);
         }
         s
+    }
+}
+
+/// RAII guard for a traversal pin (see
+/// [`ShardedPool::pin_for_traversal`]). While it lives, alloc/free on
+/// the pinned pool park; dropping it releases the epoch.
+pub struct TraversalPin<'a> {
+    pool: &'a ShardedPool,
+}
+
+impl Drop for TraversalPin<'_> {
+    fn drop(&mut self) {
+        // Odd → even: release the parked ops.
+        self.pool.traverse_epoch.fetch_add(1, Ordering::Release);
+    }
+}
+
+/// Free = every shard's Treiber chain + watermark tail, every home
+/// slot's steal-stash chain (stashed blocks are free capacity parked in
+/// a different container), and the stride-padding slots that exist only
+/// as address-space slack. Live = the grid complement. Exact at
+/// quiescence or under [`ShardedPool::pin_for_traversal`].
+impl super::traverse::Traverse for ShardedPool {
+    fn grid_len(&self) -> usize {
+        self.shards.len() << self.stride_shift
+    }
+
+    fn mark_free(&self, mask: &mut super::traverse::FreeMask) {
+        let stride = 1u32 << self.stride_shift;
+        for (si, shard) in self.shards.iter().enumerate() {
+            let base = (si as u32) << self.stride_shift;
+            shard.mark_free_indices(|local| mask.mark(base + local));
+            // Stride padding past the shard's populated window: address
+            // space, never blocks.
+            for local in shard.num_blocks()..stride {
+                mask.mark(base + local);
+            }
+        }
+        // Steal stashes chain grid indices through `steal_next`. The walk
+        // is bounded by the grid size and every link is range-checked, so
+        // a torn read cannot loop or index out of bounds.
+        let grid_slots = self.steal_next.len() as u32;
+        for c in self.counters.iter() {
+            let mut cur = c.stash.top();
+            let mut steps = 0u32;
+            while cur < grid_slots && steps < grid_slots {
+                mask.mark(cur);
+                cur = self.steal_next[cur as usize].load(Ordering::Acquire);
+                steps += 1;
+            }
+        }
+    }
+
+    fn live_block(&self, index: u32) -> super::traverse::LiveBlock {
+        super::traverse::LiveBlock {
+            index,
+            ptr: self.grid_to_ptr(index),
+            size: self.block_size,
+            class: 0,
+        }
     }
 }
 

@@ -1,0 +1,334 @@
+//! Pool snapshot / restore — the traversal layer serialised.
+//!
+//! [`Traverse`](super::traverse::Traverse) makes the live set of any
+//! pool enumerable; this module makes it *portable*: a
+//! [`PoolSnapshot`] captures every live block of a
+//! [`ShardedMultiPool`](super::multi::ShardedMultiPool) — grid index,
+//! class, payload bytes — into a self-describing little-endian byte
+//! buffer, and restore replays it into a fresh (or drained) pool of the
+//! same geometry, returning a relocation map from old grid indices to
+//! new block pointers so owners (the KV cache, the serving engine) can
+//! re-point their references.
+//!
+//! The encoding is deliberately hand-rolled ([`SnapWriter`] /
+//! [`SnapReader`]): the crate takes no serialisation dependency, the
+//! format is a few fixed-width fields, and the reader is fully bounds-
+//! checked so a truncated or corrupt buffer fails with a typed
+//! [`SnapError`] instead of a panic or an over-allocation.
+//!
+//! Contents are read and written with plain memory copies, so the
+//! caller must be quiescent *for block payloads* too — the traversal
+//! pin parks alloc/free, but only the owner can promise nobody is
+//! writing block bytes mid-snapshot (the engine snapshots between
+//! decode steps).
+
+use core::ptr::NonNull;
+
+/// Decode / restore failure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SnapError {
+    /// Buffer ended before the structure did.
+    Truncated,
+    /// Leading magic bytes are not a pool snapshot's.
+    BadMagic,
+    /// Unknown format version.
+    BadVersion(u32),
+    /// Structurally invalid field (duplicate index, wrong payload size).
+    Corrupt(&'static str),
+    /// Snapshot geometry does not match the restoring pool.
+    ConfigMismatch(&'static str),
+}
+
+impl std::fmt::Display for SnapError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Truncated => write!(f, "snapshot buffer truncated"),
+            Self::BadMagic => write!(f, "not a pool snapshot (bad magic)"),
+            Self::BadVersion(v) => write!(f, "unsupported snapshot version {v}"),
+            Self::Corrupt(what) => write!(f, "corrupt snapshot: {what}"),
+            Self::ConfigMismatch(what) => {
+                write!(f, "snapshot does not match this pool: {what}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SnapError {}
+
+/// Little-endian byte-buffer writer for snapshot encodings.
+#[derive(Debug, Default)]
+pub struct SnapWriter {
+    buf: Vec<u8>,
+}
+
+impl SnapWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Raw bytes, no length prefix (the length is implied by the schema).
+    pub fn put_bytes(&mut self, b: &[u8]) {
+        self.buf.extend_from_slice(b);
+    }
+
+    /// `u64` length prefix followed by the bytes.
+    pub fn put_slice(&mut self, b: &[u8]) {
+        self.put_u64(b.len() as u64);
+        self.put_bytes(b);
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Bounds-checked little-endian reader over a snapshot buffer.
+#[derive(Debug)]
+pub struct SnapReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> SnapReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], SnapError> {
+        let end = self.pos.checked_add(n).ok_or(SnapError::Truncated)?;
+        let s = self.buf.get(self.pos..end).ok_or(SnapError::Truncated)?;
+        self.pos = end;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, SnapError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32, SnapError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, SnapError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Raw bytes of a schema-implied length.
+    pub fn bytes(&mut self, n: usize) -> Result<&'a [u8], SnapError> {
+        self.take(n)
+    }
+
+    /// A `u64`-length-prefixed slice written by [`SnapWriter::put_slice`].
+    pub fn slice(&mut self) -> Result<&'a [u8], SnapError> {
+        let n = self.u64()?;
+        let n = usize::try_from(n).map_err(|_| SnapError::Truncated)?;
+        self.take(n)
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Fail if trailing bytes remain (a length-field lie upstream).
+    pub fn expect_end(&self) -> Result<(), SnapError> {
+        if self.remaining() == 0 {
+            Ok(())
+        } else {
+            Err(SnapError::Corrupt("trailing bytes"))
+        }
+    }
+}
+
+/// One size class's live blocks.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ClassSnapshot {
+    /// Block size the class serves.
+    pub class_size: u64,
+    /// Class capacity in blocks (geometry check on restore).
+    pub num_blocks: u32,
+    /// Live blocks: class-local grid index + payload (`class_size` bytes).
+    pub live: Vec<(u32, Vec<u8>)>,
+}
+
+/// Full live state of a multi-pool: every class's live blocks with
+/// payloads, encodable to / decodable from a byte buffer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PoolSnapshot {
+    pub classes: Vec<ClassSnapshot>,
+}
+
+impl PoolSnapshot {
+    /// `b"FPSN"` little-endian.
+    pub const MAGIC: u32 = u32::from_le_bytes(*b"FPSN");
+    pub const VERSION: u32 = 1;
+
+    /// Total live blocks across classes.
+    pub fn live_blocks(&self) -> usize {
+        self.classes.iter().map(|c| c.live.len()).sum()
+    }
+
+    /// Total payload bytes captured.
+    pub fn payload_bytes(&self) -> usize {
+        self.classes
+            .iter()
+            .map(|c| c.live.len() * c.class_size as usize)
+            .sum()
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = SnapWriter::new();
+        w.put_u32(Self::MAGIC);
+        w.put_u32(Self::VERSION);
+        w.put_u32(self.classes.len() as u32);
+        for c in &self.classes {
+            w.put_u64(c.class_size);
+            w.put_u32(c.num_blocks);
+            w.put_u32(c.live.len() as u32);
+            for (grid, payload) in &c.live {
+                debug_assert_eq!(payload.len() as u64, c.class_size);
+                w.put_u32(*grid);
+                w.put_bytes(payload);
+            }
+        }
+        w.into_bytes()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Self, SnapError> {
+        let mut r = SnapReader::new(buf);
+        if r.u32()? != Self::MAGIC {
+            return Err(SnapError::BadMagic);
+        }
+        let version = r.u32()?;
+        if version != Self::VERSION {
+            return Err(SnapError::BadVersion(version));
+        }
+        let n_classes = r.u32()?;
+        let mut classes = Vec::new();
+        for _ in 0..n_classes {
+            let class_size = r.u64()?;
+            let block = usize::try_from(class_size).map_err(|_| SnapError::Truncated)?;
+            let num_blocks = r.u32()?;
+            let n_live = r.u32()?;
+            if n_live > num_blocks {
+                return Err(SnapError::Corrupt("more live blocks than capacity"));
+            }
+            // No pre-reserve from untrusted counts: growth is bounded by
+            // actual bytes read, so a corrupt count can only hit
+            // `Truncated`, never an over-allocation.
+            let mut live = Vec::new();
+            for _ in 0..n_live {
+                let grid = r.u32()?;
+                let payload = r.bytes(block)?.to_vec();
+                live.push((grid, payload));
+            }
+            classes.push(ClassSnapshot { class_size, num_blocks, live });
+        }
+        r.expect_end()?;
+        Ok(Self { classes })
+    }
+}
+
+/// One relocation-map entry from
+/// [`ShardedMultiPool::restore`](super::multi::ShardedMultiPool::restore):
+/// where a snapshotted block landed in the restoring pool.
+#[derive(Debug, Clone, Copy)]
+pub struct RestoredBlock {
+    /// Size-class index.
+    pub class: usize,
+    /// The block's class-local grid index in the snapshotted pool.
+    pub old_index: u32,
+    /// The block's address in the restoring pool (payload already copied).
+    pub ptr: NonNull<u8>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writer_reader_round_trip() {
+        let mut w = SnapWriter::new();
+        w.put_u8(7);
+        w.put_u32(0xDEAD_BEEF);
+        w.put_u64(u64::MAX - 1);
+        w.put_slice(b"hello");
+        w.put_bytes(&[1, 2, 3]);
+        let buf = w.into_bytes();
+        let mut r = SnapReader::new(&buf);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 1);
+        assert_eq!(r.slice().unwrap(), b"hello");
+        assert_eq!(r.bytes(3).unwrap(), &[1, 2, 3]);
+        r.expect_end().unwrap();
+        assert!(matches!(r.u8(), Err(SnapError::Truncated)));
+    }
+
+    #[test]
+    fn snapshot_encode_decode_round_trip() {
+        let snap = PoolSnapshot {
+            classes: vec![
+                ClassSnapshot {
+                    class_size: 4,
+                    num_blocks: 8,
+                    live: vec![(3, vec![1, 2, 3, 4]), (7, vec![9, 9, 9, 9])],
+                },
+                ClassSnapshot { class_size: 2, num_blocks: 2, live: vec![] },
+            ],
+        };
+        assert_eq!(snap.live_blocks(), 2);
+        assert_eq!(snap.payload_bytes(), 8);
+        let buf = snap.encode();
+        assert_eq!(PoolSnapshot::decode(&buf).unwrap(), snap);
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert_eq!(PoolSnapshot::decode(&[]), Err(SnapError::Truncated));
+        assert_eq!(
+            PoolSnapshot::decode(&[0xFF; 16]),
+            Err(SnapError::BadMagic)
+        );
+        let snap = PoolSnapshot {
+            classes: vec![ClassSnapshot {
+                class_size: 4,
+                num_blocks: 1,
+                live: vec![(0, vec![0; 4])],
+            }],
+        };
+        let mut buf = snap.encode();
+        // Version bump → typed error.
+        buf[4] = 99;
+        assert_eq!(PoolSnapshot::decode(&buf), Err(SnapError::BadVersion(99)));
+        buf[4] = 1;
+        // Truncated payload.
+        let cut = buf.len() - 2;
+        assert_eq!(PoolSnapshot::decode(&buf[..cut]), Err(SnapError::Truncated));
+        // Trailing junk.
+        buf.push(0);
+        assert_eq!(
+            PoolSnapshot::decode(&buf),
+            Err(SnapError::Corrupt("trailing bytes"))
+        );
+    }
+}

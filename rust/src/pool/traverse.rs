@@ -1,0 +1,245 @@
+//! Live-block traversal — the paper's in-band free list, inverted.
+//!
+//! Keeping the free-list links *inside* unused slots (§IV) means the pool
+//! stores no per-block metadata at all — which looks like it forecloses
+//! any "what is allocated right now?" question. Schüßler & Gruber
+//! (PAPERS.md, arXiv 1611.01667) point out the opposite: because every
+//! *free* block is reachable by walking the chains the allocator already
+//! maintains, the *live* set is simply the complement of that walk over
+//! the pool's index grid. No headers, no side bitmaps, no per-alloc
+//! bookkeeping — the zero-overhead property is preserved and traversal
+//! is paid for only when you ask for it.
+//!
+//! [`Traverse`] is the one capability every layer of the pool lineage
+//! implements (`raw` → `fixed` → `atomic` → `sharded` → `magazine` →
+//! `multi` → `handle`). A layer contributes exactly its own notion of
+//! "not live" into a [`FreeMask`] over its grid index space:
+//!
+//! * **raw / fixed** — the in-slot free chain plus the never-initialised
+//!   watermark tail.
+//! * **atomic** — the Treiber chain (side-table links) plus the tail.
+//! * **sharded** — every shard's chain and tail, the *stride padding*
+//!   slots that exist only as address-space slack, and every home slot's
+//!   steal-stash chain (stashed blocks are free — they just live in a
+//!   different container).
+//! * **magazine** — everything the shared tier reports, plus the blocks
+//!   cached in per-thread magazines (read under the slot claim
+//!   protocol; cached blocks are free capacity, not live data).
+//! * **multi** — the per-class union, with class attribution on the way
+//!   back out.
+//!
+//! The live set is then `grid − marked`, yielded in ascending grid
+//! order.
+//!
+//! ### Concurrency contract
+//!
+//! Traversal never locks and never allocates, but it reads chains that
+//! concurrent alloc/free mutate. The result is exact under either of:
+//!
+//! * **Quiescence** — no other thread is inside an alloc/free on this
+//!   pool (the maintenance-tick / shutdown / test situation), or
+//! * an **epoch pin** ([`super::sharded::ShardedPool::pin_for_traversal`])
+//!   — allocation and free park at the pool boundary while the pin is
+//!   held, magazine ops included, so the chains are stable for the
+//!   pin's lifetime. Ops that were already in flight when the pin landed
+//!   drain during the pin's grace window.
+//!
+//! Without either, the walk is still memory-safe (chain walks are
+//! bounded and validated against the grid) but the snapshot may be
+//! torn — same contract as the `num_free` gauge.
+
+use core::ptr::NonNull;
+
+/// One live block yielded by traversal.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LiveBlock {
+    /// Grid index in the traversed pool's index space (layer-relative:
+    /// a multi-pool prefixes class bases, a sharded pool packs
+    /// `shard << stride_shift | local`).
+    pub index: u32,
+    /// Start of the block.
+    pub ptr: NonNull<u8>,
+    /// Usable size of the block in bytes (the serving class size).
+    pub size: usize,
+    /// Size-class index for multi-pool layers; 0 for single-class pools.
+    pub class: usize,
+}
+
+/// Bit mask over a pool's grid index space; set bits mark slots that are
+/// **not live** (free-chain members, stashed, magazine-cached, the
+/// uninitialised tail, stride padding).
+#[derive(Debug, Clone)]
+pub struct FreeMask {
+    bits: Vec<u64>,
+    len: usize,
+}
+
+impl FreeMask {
+    pub fn new(len: usize) -> Self {
+        Self { bits: vec![0; len.div_ceil(64)], len }
+    }
+
+    /// Number of grid slots the mask covers.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Mark grid slot `i` as not-live. Out-of-range indices are ignored
+    /// (a torn concurrent read can surface garbage links; the mask is
+    /// the backstop, not the validator).
+    #[inline]
+    pub fn mark(&mut self, i: u32) {
+        let i = i as usize;
+        if i < self.len {
+            self.bits[i / 64] |= 1u64 << (i % 64);
+        }
+    }
+
+    /// Is grid slot `i` marked not-live?
+    #[inline]
+    pub fn is_free(&self, i: u32) -> bool {
+        let i = i as usize;
+        i >= self.len || self.bits[i / 64] & (1u64 << (i % 64)) != 0
+    }
+
+    /// Number of marked (not-live) slots.
+    pub fn marked(&self) -> usize {
+        self.bits.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Number of unmarked (live) slots.
+    pub fn live(&self) -> usize {
+        self.len - self.marked()
+    }
+
+    /// OR `other` into `self` with every bit shifted up by `offset`
+    /// slots — how a multi-pool folds per-class masks into its
+    /// concatenated grid. `offset` must be a multiple of 64 (class
+    /// bases are rounded up to this by the caller).
+    pub fn or_shifted(&mut self, other: &FreeMask, offset: usize) {
+        debug_assert_eq!(offset % 64, 0, "class bases are 64-aligned");
+        let base = offset / 64;
+        for (i, w) in other.bits.iter().enumerate() {
+            if let Some(dst) = self.bits.get_mut(base + i) {
+                *dst |= w;
+            }
+        }
+    }
+
+    /// Iterate unmarked (live) slot indices in ascending order.
+    pub fn for_each_live(&self, mut f: impl FnMut(u32)) {
+        for (wi, &w) in self.bits.iter().enumerate() {
+            // Live = complement of marked, clipped to `len` in the last word.
+            let mut live = !w;
+            if (wi + 1) * 64 > self.len {
+                let valid = self.len - wi * 64;
+                if valid == 0 {
+                    break;
+                }
+                live &= (1u64 << valid) - 1;
+            }
+            while live != 0 {
+                let bit = live.trailing_zeros();
+                f((wi * 64) as u32 + bit);
+                live &= live - 1;
+            }
+        }
+    }
+}
+
+/// The traversal capability threaded through the pool lineage. A layer
+/// implements the three required methods; the derived walkers come free.
+pub trait Traverse {
+    /// Size of the grid index space [`FreeMask`] bits refer to. May
+    /// exceed the block count (stride padding); every grid slot beyond a
+    /// real block must be marked by [`Self::mark_free`].
+    fn grid_len(&self) -> usize;
+
+    /// Mark every slot that is **not** a live block: free chains, steal
+    /// stashes, magazine caches, the uninitialised tail, padding.
+    fn mark_free(&self, mask: &mut FreeMask);
+
+    /// Resolve a live grid index to its block. Only called with indices
+    /// left unmarked by [`Self::mark_free`].
+    fn live_block(&self, index: u32) -> LiveBlock;
+
+    /// Build the full not-live mask for this layer.
+    fn free_mask(&self) -> FreeMask {
+        let mut mask = FreeMask::new(self.grid_len());
+        self.mark_free(&mut mask);
+        mask
+    }
+
+    /// Visit every live block in ascending grid order. Exact at
+    /// quiescence or under an epoch pin (see the module docs).
+    fn for_each_live(&self, mut f: impl FnMut(LiveBlock)) {
+        self.free_mask().for_each_live(|i| f(self.live_block(i)));
+    }
+
+    /// Materialise the live set.
+    fn live_snapshot(&self) -> Vec<LiveBlock> {
+        let mut v = Vec::new();
+        self.for_each_live(|b| v.push(b));
+        v
+    }
+
+    /// Number of live blocks.
+    fn live_count(&self) -> u32 {
+        self.free_mask().live() as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mask_mark_count_complement() {
+        let mut m = FreeMask::new(130);
+        assert_eq!(m.len(), 130);
+        assert_eq!(m.marked(), 0);
+        assert_eq!(m.live(), 130);
+        m.mark(0);
+        m.mark(64);
+        m.mark(129);
+        m.mark(500); // out of range: ignored
+        assert_eq!(m.marked(), 3);
+        assert!(m.is_free(0) && m.is_free(64) && m.is_free(129));
+        assert!(m.is_free(500), "out of range counts as not-live");
+        assert!(!m.is_free(1));
+        let mut live = Vec::new();
+        m.for_each_live(|i| live.push(i));
+        assert_eq!(live.len(), 127);
+        assert!(!live.contains(&0) && !live.contains(&64) && !live.contains(&129));
+        assert_eq!(live[0], 1);
+        assert_eq!(*live.last().unwrap(), 128);
+    }
+
+    #[test]
+    fn mask_exact_word_boundary() {
+        let mut m = FreeMask::new(128);
+        for i in 0..128 {
+            m.mark(i);
+        }
+        assert_eq!(m.marked(), 128);
+        assert_eq!(m.live(), 0);
+        let mut n = 0;
+        m.for_each_live(|_| n += 1);
+        assert_eq!(n, 0);
+    }
+
+    #[test]
+    fn mask_or_shifted() {
+        let mut small = FreeMask::new(64);
+        small.mark(3);
+        small.mark(63);
+        let mut big = FreeMask::new(192);
+        big.or_shifted(&small, 64);
+        assert!(big.is_free(67) && big.is_free(127));
+        assert_eq!(big.marked(), 2);
+    }
+}

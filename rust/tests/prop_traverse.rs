@@ -1,0 +1,560 @@
+//! Property tests for the traversal layer: the live set a [`Traverse`]
+//! walk yields must equal a shadow model of "blocks currently handed
+//! out" at every step, across the whole pool lineage — and the free-set
+//! complement must agree with the `num_free` accounting seams.
+//!
+//! The invariants (ROADMAP item 2, on top of prop_pool's I1–I6):
+//!   T1  traversed live set ≡ shadow set (by block address), exactly;
+//!   T2  traversal never yields a freed, stashed, or magazine-cached
+//!       block (implied by T1: the shadow only holds handed-out blocks);
+//!   T3  conservation: live_count() + num_free() == num_blocks() at
+//!       quiescence, with magazine-cached and stashed blocks counted
+//!       as free — and the same identity holds under an epoch pin while
+//!       other threads churn;
+//!   T4  multi-pool class attribution: every yielded block's `class`
+//!       matches pointer→class resolution, spill included;
+//!   T5  snapshot → encode → decode → restore round-trips every live
+//!       payload byte-identically.
+
+use std::collections::BTreeSet;
+use std::ptr::NonNull;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use fastpool::pool::{
+    AtomicPool, FixedPool, MagazinePool, MultiPool, MultiPoolConfig, PoolSnapshot,
+    ShardedMultiPool, ShardedPool, Traverse,
+};
+use fastpool::testkit::{check_seq, PropConfig};
+use fastpool::util::Rng;
+
+/// Abstract pool op for generated sequences (same shape as prop_pool).
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum PoolOp {
+    Alloc,
+    /// Free the i-th live allocation (index modulo live count).
+    Free(usize),
+}
+
+fn gen_ops(rng: &mut Rng) -> Vec<PoolOp> {
+    let len = rng.gen_usize(1, 200);
+    (0..len)
+        .map(|_| {
+            if rng.gen_bool(0.55) {
+                PoolOp::Alloc
+            } else {
+                PoolOp::Free(rng.gen_usize(0, 64))
+            }
+        })
+        .collect()
+}
+
+/// Drive an alloc/free closure pair through an op sequence, calling
+/// `observe(shadow)` after every op so the caller can compare the
+/// traversed live set against the shadow of handed-out addresses.
+fn drive<A, F, O>(
+    ops: &[PoolOp],
+    mut alloc: A,
+    mut free: F,
+    mut observe: O,
+) -> Result<(), String>
+where
+    A: FnMut() -> Option<NonNull<u8>>,
+    F: FnMut(NonNull<u8>),
+    O: FnMut(&BTreeSet<usize>) -> Result<(), String>,
+{
+    let mut live: Vec<NonNull<u8>> = Vec::new();
+    let mut shadow: BTreeSet<usize> = BTreeSet::new();
+    for (i, op) in ops.iter().enumerate() {
+        match *op {
+            PoolOp::Alloc => {
+                if let Some(p) = alloc() {
+                    shadow.insert(p.as_ptr() as usize);
+                    live.push(p);
+                }
+            }
+            PoolOp::Free(k) => {
+                if !live.is_empty() {
+                    let p = live.swap_remove(k % live.len());
+                    shadow.remove(&(p.as_ptr() as usize));
+                    free(p);
+                }
+            }
+        }
+        observe(&shadow).map_err(|e| format!("op {i}: {e}"))?;
+    }
+    // Drain so every case also checks the empty fixed point.
+    for p in live.drain(..) {
+        shadow.remove(&(p.as_ptr() as usize));
+        free(p);
+    }
+    observe(&shadow).map_err(|e| format!("after drain: {e}"))
+}
+
+/// T1/T2: the traversed live set equals the shadow, address for address.
+fn traversal_matches<P: Traverse>(pool: &P, shadow: &BTreeSet<usize>) -> Result<(), String> {
+    let snap = pool.live_snapshot();
+    if snap.len() != shadow.len() {
+        return Err(format!(
+            "T1: traversal yields {} blocks, shadow holds {}",
+            snap.len(),
+            shadow.len()
+        ));
+    }
+    for b in &snap {
+        if !shadow.contains(&(b.ptr.as_ptr() as usize)) {
+            return Err(format!(
+                "T2: traversal yielded non-live block {:p} (index {})",
+                b.ptr.as_ptr(),
+                b.index
+            ));
+        }
+    }
+    if pool.live_count() as usize != shadow.len() {
+        return Err(format!(
+            "T1: live_count {} != shadow {}",
+            pool.live_count(),
+            shadow.len()
+        ));
+    }
+    Ok(())
+}
+
+/// T3: the free-set complement agrees with the `num_free` gauge.
+fn conservation(live_count: u32, num_free: u32, num_blocks: u32) -> Result<(), String> {
+    if live_count + num_free != num_blocks {
+        return Err(format!(
+            "T3: live {live_count} + free {num_free} != blocks {num_blocks}"
+        ));
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_traversal_matches_shadow_fixed() {
+    check_seq(
+        PropConfig { cases: 64, ..Default::default() },
+        gen_ops,
+        |ops| {
+            let cell = std::cell::RefCell::new(FixedPool::with_blocks(24, 32));
+            drive(
+                ops,
+                || cell.borrow_mut().allocate(),
+                // SAFETY: `drive` only frees pointers it previously obtained from
+                // the paired alloc closure, each exactly once.
+                |p| unsafe { cell.borrow_mut().deallocate(p) },
+                |shadow| {
+                    let pool = cell.borrow();
+                    traversal_matches(&*pool, shadow)?;
+                    conservation(pool.live_count(), pool.num_free(), pool.num_blocks())
+                },
+            )
+        },
+    )
+    .unwrap();
+}
+
+#[test]
+fn prop_traversal_matches_shadow_atomic() {
+    check_seq(
+        PropConfig { cases: 64, ..Default::default() },
+        gen_ops,
+        |ops| {
+            let pool = AtomicPool::with_blocks(16, 24);
+            drive(
+                ops,
+                || pool.allocate(),
+                // SAFETY: `drive` only frees pointers it previously obtained from
+                // the paired alloc closure, each exactly once.
+                |p| unsafe { pool.deallocate(p) },
+                |shadow| {
+                    traversal_matches(&pool, shadow)?;
+                    conservation(pool.live_count(), pool.num_free(), pool.num_blocks())
+                },
+            )
+        },
+    )
+    .unwrap();
+}
+
+#[test]
+fn prop_traversal_matches_shadow_sharded() {
+    // Cross-shard frees route blocks through steal stashes; a stashed
+    // block is free capacity and must never surface as live.
+    check_seq(
+        PropConfig { cases: 48, ..Default::default() },
+        gen_ops,
+        |ops| {
+            let pool = ShardedPool::with_shards(16, 24, 4);
+            drive(
+                ops,
+                || pool.allocate(),
+                // SAFETY: `drive` only frees pointers it previously obtained from
+                // the paired alloc closure, each exactly once.
+                |p| unsafe { pool.deallocate(p) },
+                |shadow| {
+                    traversal_matches(&pool, shadow)?;
+                    conservation(pool.live_count(), pool.num_free(), pool.num_blocks())
+                },
+            )
+        },
+    )
+    .unwrap();
+}
+
+#[test]
+fn prop_traversal_matches_shadow_magazine() {
+    // The shadow holds only handed-out blocks, so equality proves the
+    // claim-read walk of the magazine rack: a freed block sitting in
+    // this thread's magazine is cached *free* capacity, never live.
+    check_seq(
+        PropConfig { cases: 48, ..Default::default() },
+        gen_ops,
+        |ops| {
+            let pool = MagazinePool::with_shards(16, 32, 2, 4);
+            drive(
+                ops,
+                || pool.allocate(),
+                // SAFETY: `drive` only frees pointers it previously obtained from
+                // the paired alloc closure, each exactly once.
+                |p| unsafe { pool.deallocate(p) },
+                |shadow| {
+                    traversal_matches(&pool, shadow)?;
+                    // num_free counts shard chains + stashes + magazine-cached.
+                    conservation(pool.live_count(), pool.num_free(), pool.num_blocks())
+                },
+            )
+        },
+    )
+    .unwrap();
+}
+
+/// Alloc op carrying a request size, for the multi-pool runs.
+#[derive(Debug, Clone, Copy)]
+enum MultiOp {
+    Alloc(usize),
+    Free(usize),
+}
+
+fn gen_multi_ops(rng: &mut Rng) -> Vec<MultiOp> {
+    let len = rng.gen_usize(1, 200);
+    (0..len)
+        .map(|_| {
+            if rng.gen_bool(0.6) {
+                // Bias small so the 16B class exhausts and spill runs
+                // routinely, not incidentally.
+                let size = if rng.gen_bool(0.7) {
+                    1 + rng.gen_usize(0, 16)
+                } else {
+                    1 + rng.gen_usize(0, 64)
+                };
+                MultiOp::Alloc(size)
+            } else {
+                MultiOp::Free(rng.gen_usize(0, 64))
+            }
+        })
+        .collect()
+}
+
+fn multi_cfg() -> MultiPoolConfig {
+    MultiPoolConfig {
+        classes: vec![16, 32, 64],
+        blocks_per_class: 4,
+        system_fallback: false, // system blocks are outside the grid
+        magazine_depth: 2,      // ignored by MultiPool, used by the sharded flavour
+        spill_hops: 2,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn prop_traversal_matches_shadow_multi_spill() {
+    // T1/T2/T4 on the single-threaded tier with spill enabled: a 16B
+    // request served from the 32B class is live *in the 32B class*, and
+    // class attribution must say so.
+    check_seq(
+        PropConfig { cases: 48, ..Default::default() },
+        gen_multi_ops,
+        |ops| {
+            let mut mp = MultiPool::new(multi_cfg());
+            let mut live: Vec<(NonNull<u8>, usize)> = Vec::new();
+            let mut shadow: BTreeSet<usize> = BTreeSet::new();
+            let check = |mp: &MultiPool, shadow: &BTreeSet<usize>| {
+                traversal_matches(mp, shadow)?;
+                for b in mp.live_snapshot() {
+                    if mp.class_of_ptr(b.ptr) != Some(b.class) {
+                        return Err(format!(
+                            "T4: block {:p} attributed to class {} but resolves to {:?}",
+                            b.ptr.as_ptr(),
+                            b.class,
+                            mp.class_of_ptr(b.ptr)
+                        ));
+                    }
+                }
+                let total_free: u32 = (0..mp.num_classes()).map(|ci| mp.class_free(ci)).sum();
+                let total = mp.num_classes() as u32 * 4;
+                conservation(mp.live_count(), total_free, total)
+            };
+            for (i, op) in ops.iter().enumerate() {
+                match *op {
+                    MultiOp::Alloc(size) => {
+                        if let Some((p, _)) = mp.allocate(size) {
+                            shadow.insert(p.as_ptr() as usize);
+                            live.push((p, size));
+                        }
+                    }
+                    MultiOp::Free(k) => {
+                        if !live.is_empty() {
+                            let (p, size) = live.swap_remove(k % live.len());
+                            shadow.remove(&(p.as_ptr() as usize));
+                            // SAFETY: `(p, size)` came from `allocate(size)` and was removed
+                            // from `live`, so it is freed exactly once.
+                            unsafe { mp.deallocate(p, size) };
+                        }
+                    }
+                }
+                check(&mp, &shadow).map_err(|e| format!("op {i}: {e}"))?;
+            }
+            for (p, size) in live.drain(..) {
+                shadow.remove(&(p.as_ptr() as usize));
+                // SAFETY: the remaining live pairs were never freed in the loop above.
+                unsafe { mp.deallocate(p, size) };
+            }
+            check(&mp, &shadow).map_err(|e| format!("after drain: {e}"))
+        },
+    )
+    .unwrap();
+}
+
+#[test]
+fn prop_traversal_matches_shadow_sharded_multi() {
+    // The full serving stack: sharded classes + magazines + spill, all
+    // folded into one concatenated grid. Single-threaded here, so the
+    // walk runs under the quiescence arm of the contract.
+    check_seq(
+        PropConfig { cases: 32, ..Default::default() },
+        gen_multi_ops,
+        |ops| {
+            let mp = ShardedMultiPool::with_shards(multi_cfg(), 2);
+            let mut live: Vec<(NonNull<u8>, usize)> = Vec::new();
+            let mut shadow: BTreeSet<usize> = BTreeSet::new();
+            let check = |mp: &ShardedMultiPool, shadow: &BTreeSet<usize>| {
+                traversal_matches(mp, shadow)?;
+                for b in mp.live_snapshot() {
+                    if mp.class_of_ptr(b.ptr) != Some(b.class) {
+                        return Err(format!(
+                            "T4: block {:p} attributed to class {} but resolves to {:?}",
+                            b.ptr.as_ptr(),
+                            b.class,
+                            mp.class_of_ptr(b.ptr)
+                        ));
+                    }
+                }
+                let total_free: u32 = (0..mp.num_classes()).map(|ci| mp.class_free(ci)).sum();
+                let total = mp.num_classes() as u32 * mp.blocks_per_class();
+                conservation(mp.live_count(), total_free, total)
+            };
+            for (i, op) in ops.iter().enumerate() {
+                match *op {
+                    MultiOp::Alloc(size) => {
+                        if let Some((p, _)) = mp.allocate(size) {
+                            shadow.insert(p.as_ptr() as usize);
+                            live.push((p, size));
+                        }
+                    }
+                    MultiOp::Free(k) => {
+                        if !live.is_empty() {
+                            let (p, size) = live.swap_remove(k % live.len());
+                            shadow.remove(&(p.as_ptr() as usize));
+                            // SAFETY: `(p, size)` came from `allocate(size)` and was removed
+                            // from `live`, so it is freed exactly once.
+                            unsafe { mp.deallocate(p, size) };
+                        }
+                    }
+                }
+                check(&mp, &shadow).map_err(|e| format!("op {i}: {e}"))?;
+            }
+            for (p, size) in live.drain(..) {
+                shadow.remove(&(p.as_ptr() as usize));
+                // SAFETY: the remaining live pairs were never freed in the loop above.
+                unsafe { mp.deallocate(p, size) };
+            }
+            check(&mp, &shadow).map_err(|e| format!("after drain: {e}"))
+        },
+    )
+    .unwrap();
+}
+
+#[test]
+fn accounting_seams_agree_at_quiescence() {
+    // The regression half of the accounting satellite: the gauges that
+    // reports/maintenance read (num_free, magazine_stats().cached) must
+    // agree with the traversed free set — including when blocks are
+    // parked in magazines rather than on shard chains.
+    let pool = MagazinePool::with_shards(32, 24, 2, 8);
+    let held: Vec<_> = (0..12).map(|_| pool.allocate().unwrap()).collect();
+    for p in held.iter().take(7) {
+        // SAFETY: each pointer came from `allocate` above and is freed
+        // exactly once (the remaining 5 are freed at the end).
+        unsafe { pool.deallocate(*p) };
+    }
+    // 5 live; the 7 freed blocks sit in this thread's magazine + shards.
+    assert_eq!(pool.live_count(), 5);
+    assert!(
+        pool.magazine_stats().cached > 0,
+        "frees above must land in the magazine for this test to bite"
+    );
+    assert_eq!(
+        pool.live_count() + pool.num_free(),
+        pool.num_blocks(),
+        "free gauge disagrees with the traversed free set"
+    );
+    // The traversed free set itself: complement of the mask.
+    let mask = pool.free_mask();
+    assert_eq!(mask.live() as u32, pool.live_count());
+    for p in held.iter().skip(7) {
+        // SAFETY: these 5 were not freed in the loop above.
+        unsafe { pool.deallocate(*p) };
+    }
+    assert_eq!(pool.live_count(), 0);
+    assert_eq!(pool.num_free(), pool.num_blocks());
+}
+
+#[test]
+fn pin_under_churn_conservation() {
+    // T3 under the epoch-pin arm of the contract: worker threads churn
+    // alloc/free continuously; the main thread pins, waits out the grace
+    // window, and the conservation identity must hold exactly — blocks
+    // may be live with workers, on shard chains, in stashes, or cached
+    // in worker magazines, but never unaccounted for.
+    let pool = Arc::new(MagazinePool::with_shards(64, 64, 4, 4));
+    let stop = Arc::new(AtomicBool::new(false));
+    let workers: Vec<_> = (0..3)
+        .map(|w| {
+            let pool = Arc::clone(&pool);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(0xC0FFEE ^ w as u64);
+                let mut held: Vec<NonNull<u8>> = Vec::new();
+                while !stop.load(Ordering::Relaxed) {
+                    if held.len() < 8 && rng.gen_bool(0.6) {
+                        if let Some(p) = pool.allocate() {
+                            held.push(p);
+                        }
+                    } else if !held.is_empty() {
+                        let p = held.swap_remove(rng.gen_usize(0, held.len()));
+                        // SAFETY: `p` came from `allocate` and was removed from
+                        // `held`, so it is freed exactly once.
+                        unsafe { pool.deallocate(p) };
+                    }
+                }
+                for p in held.drain(..) {
+                    // SAFETY: remaining pointers from `allocate`, freed once.
+                    unsafe { pool.deallocate(p) };
+                }
+            })
+        })
+        .collect();
+
+    for _ in 0..6 {
+        {
+            let _pin = pool.pin_for_traversal();
+            // Give any thread that slipped past the park check before the
+            // epoch flipped time to finish its in-flight op (the pin's
+            // grace window plus a generous scheduler margin).
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            let live = pool.live_count();
+            let free = pool.num_free();
+            assert_eq!(
+                live + free,
+                pool.num_blocks(),
+                "conservation broken under pin: live {live} + free {free}"
+            );
+            let mask = pool.free_mask();
+            assert_eq!(mask.live() as u32, live);
+        }
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+    stop.store(true, Ordering::Relaxed);
+    for w in workers {
+        w.join().unwrap();
+    }
+    // Quiescent fixed point: everything drained back.
+    assert_eq!(pool.live_count(), 0);
+    assert_eq!(pool.num_free(), pool.num_blocks());
+}
+
+#[test]
+fn sharded_multi_snapshot_round_trip() {
+    // T5: payloads written into live blocks survive snapshot → encode →
+    // decode → restore into a fresh pool, byte for byte, keyed by the
+    // (class, old grid index) the snapshot recorded.
+    let cfg = multi_cfg();
+    let src = ShardedMultiPool::with_shards(cfg.clone(), 2);
+    let mut expected: Vec<(usize, Vec<u8>)> = Vec::new(); // (addr, payload) in src
+    let mut live: Vec<(NonNull<u8>, usize)> = Vec::new();
+    for (i, &size) in [12usize, 16, 24, 32, 40, 64, 9, 64].iter().enumerate() {
+        let (p, _) = src.allocate(size).expect("small grid must not exhaust here");
+        let ci = src.class_of_ptr(p).unwrap();
+        let class_size = src.class_size(ci);
+        let pattern: Vec<u8> = (0..class_size).map(|b| (b as u8) ^ (i as u8) ^ 0xA5).collect();
+        // SAFETY: `p` is a live `class_size`-byte block from this pool.
+        unsafe { std::ptr::copy_nonoverlapping(pattern.as_ptr(), p.as_ptr(), class_size) };
+        expected.push((p.as_ptr() as usize, pattern));
+        live.push((p, size));
+    }
+
+    let snap = src.snapshot();
+    assert_eq!(snap.live_blocks(), live.len());
+    let bytes = snap.encode();
+    let decoded = PoolSnapshot::decode(&bytes).expect("own encoding must decode");
+    assert_eq!(decoded.live_blocks(), live.len());
+
+    // Map old grid index -> expected payload via the source's live walk.
+    let src_live = src.live_snapshot();
+    assert_eq!(src_live.len(), live.len());
+    let payload_of = |class: usize, old_index: u32| -> &Vec<u8> {
+        let b = src_live
+            .iter()
+            .find(|b| b.class == class && b.index == old_index)
+            .expect("restored block must exist in source live set");
+        let (_, pat) = expected
+            .iter()
+            .find(|(addr, _)| *addr == b.ptr.as_ptr() as usize)
+            .expect("source live block must carry a written pattern");
+        pat
+    };
+
+    let dst = ShardedMultiPool::with_shards(cfg, 2);
+    let restored = dst.restore(&decoded).expect("matching geometry must restore");
+    assert_eq!(restored.len(), live.len());
+    assert_eq!(dst.live_count() as usize, live.len());
+    for r in &restored {
+        let want = payload_of(r.class, r.old_index);
+        // SAFETY: `r.ptr` is a live block of `want.len()` (== class size)
+        // bytes in `dst`, freshly written by `restore`.
+        let got = unsafe { std::slice::from_raw_parts(r.ptr.as_ptr(), want.len()) };
+        assert_eq!(got, &want[..], "payload mismatch for class {} index {}", r.class, r.old_index);
+    }
+
+    // Geometry mismatch must be rejected and leave the pool untouched.
+    let other = ShardedMultiPool::with_shards(
+        MultiPoolConfig { blocks_per_class: 8, ..multi_cfg() },
+        2,
+    );
+    assert!(other.restore(&decoded).is_err());
+    assert_eq!(other.live_count(), 0);
+
+    // Release everything so both pools drain to their fixed points.
+    for r in &restored {
+        let size = dst.class_size(r.class);
+        // SAFETY: `r.ptr` came from `dst.restore` and is freed exactly once.
+        unsafe { dst.deallocate(r.ptr, size) };
+    }
+    assert_eq!(dst.live_count(), 0);
+    for (p, size) in live.drain(..) {
+        // SAFETY: `(p, size)` came from `src.allocate(size)`, freed once.
+        unsafe { src.deallocate(p, size) };
+    }
+    assert_eq!(src.live_count(), 0);
+}
