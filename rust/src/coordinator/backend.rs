@@ -78,11 +78,26 @@ pub trait Backend {
     /// the engine rewrites sequences' block tables (KV compaction), the
     /// next decode must still attend over the same logical content. The
     /// mock is positional (block ids are routing, not state) so moves are
-    /// free; a device backend must copy the moved blocks' payloads first
-    /// and should return `false` until it does.
+    /// free; a device backend must copy the moved blocks' payloads in
+    /// [`Self::apply_block_moves`] and should return `false` until it
+    /// does.
     fn supports_block_moves(&self) -> bool {
         false
     }
+
+    /// Apply a compaction's `(from, to)` block moves to device KV
+    /// memory, before the next prefill/decode call. The engine invokes
+    /// this with [`crate::kvcache::CompactionReport::moves`] every time
+    /// it compacts; the move list is hole-free on the destination side
+    /// (every `to` is dead at call time), so copies can be applied in
+    /// list order without staging.
+    ///
+    /// The default no-op is correct only for positional backends (block
+    /// ids are routing, not state — the mock). A backend that stores
+    /// per-block payloads must override this with real copies or keep
+    /// [`Self::supports_block_moves`] returning `false` so the engine
+    /// never compacts under it.
+    fn apply_block_moves(&mut self, _moves: &[(u32, u32)]) {}
 }
 
 // ---------------------------------------------------------------------------

@@ -196,6 +196,10 @@ impl<B: Backend> Engine<B> {
         self.metrics.gauge("kv_occupancy_pct").set((pre * 100.0) as i64);
         if self.backend.supports_block_moves() && pre < KV_COMPACT_BELOW {
             let report = self.kv.compact(self.geo.max_blocks_per_seq as u32);
+            // The block tables now address the compacted grid; the
+            // backend must move the payloads before the next step reads
+            // through them.
+            self.backend.apply_block_moves(&report.moves);
             self.metrics.counter("kv_compactions").inc();
             self.metrics
                 .counter("kv_blocks_migrated")

@@ -156,7 +156,14 @@ impl BlockAllocator {
         }
     }
 
-    /// Inverse of [`Self::snapshot_into`], with structural validation.
+    /// Inverse of [`Self::snapshot_into`], with structural validation:
+    /// beyond the counter range checks, the free chain itself is walked
+    /// once — exactly as [`Self::mark_free`] interprets it — rejecting
+    /// duplicate links, a head the allocator could never reach (`head`
+    /// is in range exactly when something is free, NIL exactly when
+    /// nothing is), and any state whose reachable free set disagrees
+    /// with `num_free`. A stream that passes cannot make `allocate`
+    /// index out of range or hand out a block twice.
     pub fn restore_from(r: &mut SnapReader<'_>) -> Result<Self, SnapError> {
         let num_blocks = r.u32()?;
         if num_blocks == 0 || num_blocks >= NIL {
@@ -168,9 +175,57 @@ impl BlockAllocator {
         if num_free > num_blocks || num_initialized > num_blocks {
             return Err(SnapError::Corrupt("allocator counters"));
         }
+        // Head convention: every reachable state has `head < num_blocks`
+        // while blocks are free (the chain start, or the lazy watermark)
+        // and `head == NIL` once the last one is handed out. Anything in
+        // [num_blocks, NIL) would be returned as a bogus block index by
+        // `allocate` before indexing `next_free` out of bounds.
+        if num_free > 0 && head >= num_blocks {
+            return Err(SnapError::Corrupt("free-list head out of range"));
+        }
+        if num_free == 0 && head != NIL {
+            return Err(SnapError::Corrupt("free-list head with no free blocks"));
+        }
         let mut next_free = vec![0u32; num_blocks as usize];
         for nf in next_free[..num_initialized as usize].iter_mut() {
             *nf = r.u32()?;
+        }
+        // Walk the chain the way `mark_free` does, with duplicates
+        // rejected (a cycle or a link back into the chain would make
+        // `allocate` serve the same block twice) and the chain ending
+        // pinned to the two shapes a reachable state can have: while the
+        // lazy watermark has blocks above it the chain must bottom out at
+        // the watermark itself (the drain threads onward from there); once
+        // the watermark covers the pool it must end at NIL or the legacy
+        // `num_blocks` sentinel the final threading writes. Any other
+        // ending — a garbage link, NIL mid-lazy — would eventually be
+        // handed out of `allocate` as a bogus block index.
+        let mut mask = FreeMask::new(num_blocks as usize);
+        let mut cur = head;
+        let mut chain_ok = false;
+        while cur < num_blocks {
+            if mask.is_free(cur) {
+                return Err(SnapError::Corrupt("free chain revisits a block"));
+            }
+            mask.mark(cur);
+            if cur >= num_initialized {
+                chain_ok = cur == num_initialized;
+                break;
+            }
+            cur = next_free[cur as usize];
+        }
+        if cur >= num_blocks {
+            chain_ok =
+                num_initialized == num_blocks && (cur == NIL || cur == num_blocks);
+        }
+        if !chain_ok {
+            return Err(SnapError::Corrupt("free chain terminator"));
+        }
+        for idx in num_initialized..num_blocks {
+            mask.mark(idx);
+        }
+        if mask.marked() as u32 != num_free {
+            return Err(SnapError::Corrupt("free count does not match the chain"));
         }
         Ok(Self { num_blocks, num_free, num_initialized, head, next_free })
     }
@@ -423,10 +478,13 @@ impl KvCacheManager {
     /// whole `region_blocks`-sized regions — the unit a device allocator
     /// could return to the OS / a peer pool.
     ///
-    /// Returns the move list `(from, to)`; a real backend must apply the
-    /// same copies to device KV memory before the next step. The bundled
+    /// Returns the move list `(from, to)`; the engine hands it to
+    /// [`crate::coordinator::backend::Backend::apply_block_moves`] so a
+    /// real backend can apply the same copies to device KV memory before
+    /// the next step. The bundled
     /// [`crate::coordinator::backend::MockBackend`] is positional (block
-    /// ids are routing, not state), so no device copy is needed in-tree.
+    /// ids are routing, not state), so its implementation is the no-op
+    /// default.
     pub fn compact(&mut self, region_blocks: u32) -> CompactionReport {
         let n = self.alloc.num_blocks();
         let pre_occupancy = self.occupancy();
@@ -527,6 +585,14 @@ impl KvCacheManager {
             return Err(SnapError::ConfigMismatch("scratch block is not the last block"));
         }
         let n_seqs = r.u32()?;
+        // Ownership validation against the restored allocator: a block a
+        // sequence claims must actually be allocated (not on the free
+        // chain or above the watermark) and claimed by exactly one
+        // sequence — and every allocated block must be claimed by some
+        // sequence. Anything else is a corrupt stream that `compact`
+        // would silently mangle in release builds.
+        let free = alloc.free_mask();
+        let mut owned = FreeMask::new(alloc.num_blocks() as usize);
         let mut seqs = HashMap::with_capacity(n_seqs as usize);
         for _ in 0..n_seqs {
             let id = r.u64()?;
@@ -541,11 +607,23 @@ impl KvCacheManager {
                 if b >= alloc.num_blocks() {
                     return Err(SnapError::Corrupt("sequence block out of range"));
                 }
+                if free.is_free(b) {
+                    return Err(SnapError::Corrupt("sequence block on the free list"));
+                }
+                if owned.is_free(b) {
+                    // `owned` reuses FreeMask as a seen-set: "free" here
+                    // means "already marked by an earlier sequence".
+                    return Err(SnapError::Corrupt("block owned by two sequences"));
+                }
+                owned.mark(b);
                 blocks.push(b);
             }
             if seqs.insert(id, SeqCache { blocks, tokens }).is_some() {
                 return Err(SnapError::Corrupt("duplicate sequence id"));
             }
+        }
+        if owned.marked() as u32 != alloc.num_used() {
+            return Err(SnapError::Corrupt("allocated blocks not owned by any sequence"));
         }
         Ok(Self {
             alloc,
@@ -927,5 +1005,98 @@ mod tests {
         assert!(KvCacheManager::restore_from(&mut r, PoolHandle::system()).is_err());
         let mut r = SnapReader::new(&bytes[..9]);
         assert!(KvCacheManager::restore_from(&mut r, PoolHandle::system()).is_err());
+    }
+
+    #[test]
+    fn allocator_restore_accepts_reachable_sentinel_terminator() {
+        // The final lazy threading writes `num_blocks` as block n-1's
+        // link; if that block is still chained when the watermark closes,
+        // the sentinel is a live terminator in a real snapshot. Restore
+        // must accept it (and the drain must never dereference it).
+        let mut a = BlockAllocator::new(2);
+        assert_eq!(a.allocate(), Some(0));
+        a.free(0);
+        assert_eq!(a.allocate(), Some(0)); // threads next_free[1] = 2
+        assert_eq!(a.watermark(), 2);
+
+        let mut w = SnapWriter::new();
+        a.snapshot_into(&mut w);
+        let bytes = w.into_bytes();
+        let mut r = SnapReader::new(&bytes);
+        let mut b = BlockAllocator::restore_from(&mut r).unwrap();
+        loop {
+            let (x, y) = (a.allocate(), b.allocate());
+            assert_eq!(x, y);
+            if x.is_none() {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn manager_restore_rejects_inconsistent_streams() {
+        // Hand-author streams whose framing is well-formed but whose
+        // allocator/sequence state is unreachable: each must be refused,
+        // because `compact` (release mode) trusts exactly these
+        // invariants.
+        fn stream(alloc: (u32, u32, u32, u32, &[u32]), seqs: &[(u64, u32, &[u32])]) -> Vec<u8> {
+            let (nb, nf, ni, head, links) = alloc;
+            assert_eq!(links.len() as u32, ni);
+            let mut w = SnapWriter::new();
+            w.put_u32(16); // block_tokens
+            w.put_u64(4); // max_blocks_per_seq
+            w.put_u32(nb); // scratch = last block
+            w.put_u32(0); // peak_used
+            w.put_u32(nb);
+            w.put_u32(nf);
+            w.put_u32(ni);
+            w.put_u32(head);
+            for &l in links {
+                w.put_u32(l);
+            }
+            w.put_u32(seqs.len() as u32);
+            for &(id, tokens, blocks) in seqs {
+                w.put_u64(id);
+                w.put_u32(tokens);
+                w.put_u32(blocks.len() as u32);
+                for &b in blocks {
+                    w.put_u32(b);
+                }
+            }
+            w.into_bytes()
+        }
+        fn restore(bytes: &[u8]) -> Result<KvCacheManager, SnapError> {
+            KvCacheManager::restore_from(&mut SnapReader::new(bytes), PoolHandle::system())
+        }
+
+        // Baseline is a reachable state (2 of 4 blocks allocated to one
+        // seq, chain = watermark gateway): the helper itself is sound.
+        let ok = stream((4, 2, 2, 2, &[1, 2]), &[(7, 17, &[0, 1])]);
+        assert!(restore(&ok).is_ok());
+
+        let cases: &[(&str, Vec<u8>)] = &[
+            ("head out of range", stream((4, 2, 2, 5, &[1, 2]), &[(7, 17, &[0, 1])])),
+            ("head NIL while free", stream((4, 2, 2, NIL, &[1, 2]), &[(7, 17, &[0, 1])])),
+            (
+                "head set with nothing free",
+                stream((4, 0, 4, 2, &[1, 2, 3, 4]), &[(7, 17, &[0, 1, 2, 3])]),
+            ),
+            ("NIL terminator mid-lazy", stream((4, 3, 2, 0, &[NIL, 0]), &[(7, 17, &[1])])),
+            ("chain cycle", stream((4, 2, 4, 0, &[0, 0, 0, 0]), &[(7, 17, &[2, 3])])),
+            (
+                "count disagrees with chain",
+                stream((4, 3, 4, 0, &[1, NIL, 0, 0]), &[(7, 17, &[2])]),
+            ),
+            ("seq block on free list", stream((4, 2, 2, 2, &[1, 2]), &[(7, 17, &[0, 2])])),
+            (
+                "block owned twice",
+                stream((4, 2, 2, 2, &[1, 2]), &[(7, 17, &[0]), (8, 17, &[0])]),
+            ),
+            ("allocated block leaked", stream((4, 2, 2, 2, &[1, 2]), &[(7, 17, &[0])])),
+            ("seq block out of range", stream((4, 2, 2, 2, &[1, 2]), &[(7, 17, &[0, 9])])),
+        ];
+        for (what, bytes) in cases {
+            assert!(restore(bytes).is_err(), "accepted corrupt stream: {what}");
+        }
     }
 }

@@ -303,7 +303,7 @@ impl MagazinePool {
     /// calling thread's loaded magazine — no CAS, no fence, no scan.
     #[inline]
     pub fn allocate(&self) -> Option<NonNull<u8>> {
-        self.shared.park_check();
+        let _op = self.shared.enter_op();
         if let Some(m) = self.my_slot() {
             // SAFETY: `my_slot` returns only while this thread owns the
             // slot state, so `inner` is exclusively ours.
@@ -330,7 +330,7 @@ impl MagazinePool {
     /// `p` must come from `allocate` on this pool, freed at most once.
     #[inline]
     pub unsafe fn deallocate(&self, p: NonNull<u8>) {
-        self.shared.park_check();
+        let _op = self.shared.enter_op();
         if let Some(m) = self.my_slot() {
             // SAFETY: as in `allocate` — slot ownership is exclusive.
             let inner = unsafe { &mut *m.inner.get() };
@@ -351,8 +351,9 @@ impl MagazinePool {
             m.cached.store(inner.len(), Ordering::Relaxed);
             return;
         }
-        // SAFETY: forwarded contract.
-        unsafe { self.shared.deallocate(p) }
+        // SAFETY: forwarded contract (the `_op` guard above already
+        // registered this op; `deallocate_impl` must not re-enter).
+        unsafe { self.shared.deallocate_impl(p) }
     }
 
     /// Both magazines empty: pull a fresh one from the home shard in one
@@ -384,13 +385,14 @@ impl MagazinePool {
     /// Shared-pool allocate with a stale-magazine rescue: if every shard
     /// and stash looks empty, blocks may still sit in magazines of exited
     /// threads — reclaim those and retry once, so churn can never strand
-    /// capacity.
+    /// capacity. Runs under the caller's `enter_op` registration, so it
+    /// uses the non-re-entering `_impl`/`_inner` flavours throughout.
     fn allocate_shared_slow(&self) -> Option<NonNull<u8>> {
-        if let Some(p) = self.shared.allocate() {
+        if let Some(p) = self.shared.allocate_impl() {
             return Some(p);
         }
-        if self.flush_stale_magazines() > 0 {
-            return self.shared.allocate();
+        if self.flush_stale_inner() > 0 {
+            return self.shared.allocate_impl();
         }
         None
     }
@@ -440,7 +442,7 @@ impl MagazinePool {
     /// returns blocks moved. Deterministic hand-back for benches and for
     /// callers about to park a thread.
     pub fn flush_local(&self) -> u32 {
-        self.shared.park_check();
+        let _op = self.shared.enter_op();
         match self.my_slot() {
             Some(m) => {
                 // SAFETY: slot ownership is exclusive (see `allocate`).
@@ -457,7 +459,13 @@ impl MagazinePool {
     /// engine calls this from its maintenance tick, and the allocate slow
     /// path uses it as a last resort before reporting exhaustion.
     pub fn flush_stale_magazines(&self) -> u32 {
-        self.shared.park_check();
+        let _op = self.shared.enter_op();
+        self.flush_stale_inner()
+    }
+
+    /// [`Self::flush_stale_magazines`] minus the traversal-park entry —
+    /// for the allocate slow path, which already holds the op guard.
+    fn flush_stale_inner(&self) -> u32 {
         let mut moved = 0u32;
         // Only slots that were ever bound can hold anything; the bound
         // high-water keeps this scan proportional to the pool's actual
@@ -490,11 +498,10 @@ impl MagazinePool {
     // ---- delegation & introspection ---------------------------------------
 
     /// Pin the backing sharded pool for traversal (see
-    /// [`ShardedPool::pin_for_traversal`]). Magazine entry points park on
-    /// the same epoch word, so ops that *begin* after the pin is visible
-    /// wait it out; the pin's grace window plus the per-slot claim CAS in
-    /// [`Traverse::mark_free`](super::traverse::Traverse::mark_free)
-    /// absorb ops already in flight.
+    /// [`ShardedPool::pin_for_traversal`]). Magazine entry points
+    /// register on the same in-flight counter, so the pin's rendezvous
+    /// covers them too: when it returns, no magazine op is anywhere
+    /// between its entry point and its last chain or cache touch.
     pub fn pin_for_traversal(&self) -> super::sharded::TraversalPin<'_> {
         self.shared.pin_for_traversal()
     }
@@ -624,9 +631,11 @@ impl super::traverse::Traverse for MagazinePool {
     /// magazine-cached. Rack contents are read under the slot-state claim
     /// protocol: each slot is CASed into CLAIMED, its magazines read, and
     /// the observed state restored — so the read never races the owner's
-    /// non-atomic pushes/pops. Owners parked on the traversal pin (or
-    /// quiescent) cannot be mid-op, which is what makes the claim winnable
-    /// and the snapshot exact.
+    /// non-atomic pushes/pops. Under the pin's rendezvous (or at
+    /// quiescence) no owner is mid-op — every op holds an `enter_op`
+    /// registration for its whole slot-claimed span and the pin waits
+    /// those out — which is what makes the claim winnable, the `inner`
+    /// read exclusive, and the snapshot exact.
     fn mark_free(&self, mask: &mut super::traverse::FreeMask) {
         use super::traverse::Traverse;
         self.shared.mark_free(mask);

@@ -915,7 +915,10 @@ impl ShardedMultiPool {
                 c.for_each_live(|b| {
                     debug_assert_eq!(b.size, size);
                     // SAFETY: `b` is a live block: `b.ptr` points at
-                    // `b.size` readable bytes inside this class's region.
+                    // `b.size` readable bytes inside this class's region,
+                    // and the region is alloc_zeroed at pool creation so
+                    // every byte is initialised even if the block's owner
+                    // never wrote it.
                     let payload = unsafe {
                         core::slice::from_raw_parts(b.ptr.as_ptr(), b.size)
                     };
@@ -924,6 +927,7 @@ impl ShardedMultiPool {
                 ClassSnapshot {
                     class_size: size as u64,
                     num_blocks: c.num_blocks(),
+                    grid_len: c.grid_len() as u32,
                     live,
                 }
             })

@@ -380,10 +380,16 @@ pub struct ShardedPool {
     div_shift: u32,
     div_inv: u64,
     /// Traversal epoch: even = running, odd = pinned. While pinned, every
-    /// alloc/free/drain parks at the pool boundary (one relaxed load on
-    /// the fast path) so the free chains, stashes and magazines are
-    /// stable for [`Self::pin_for_traversal`]'s guard lifetime.
+    /// alloc/free/drain parks at the pool boundary so the free chains,
+    /// stashes and magazines are stable for
+    /// [`Self::pin_for_traversal`]'s guard lifetime.
     traverse_epoch: AtomicU32,
+    /// Ops currently between [`Self::enter_op`] and their guard drop.
+    /// The traversal pin rendezvouses on this reaching zero, which is
+    /// what upgrades the epoch park from "probably drained" to a hard
+    /// exclusion guarantee (stragglers that raced past the epoch flip
+    /// are still registered here).
+    in_flight: CachePadded<AtomicU32>,
 }
 
 // SAFETY: the region is exclusively owned; shards are `Sync` and all
@@ -466,8 +472,14 @@ impl ShardedPool {
             .checked_mul(n_shards)
             .expect("pool region size overflows usize");
         let region_layout = Layout::from_size_align(total_bytes, align).expect("bad layout");
+        // Zeroed so every byte of the region is initialised memory:
+        // blocks are still handed out with no per-allocation init (the
+        // paper's contract), but traversal snapshots may copy the payload
+        // of a block its owner never wrote, and that read must be over
+        // defined bytes. Fresh pages are zero from the OS anyway, so this
+        // costs nothing beyond what first-touch would pay.
         // SAFETY: `region_layout` has non-zero, overflow-checked size.
-        let region = NonNull::new(unsafe { std::alloc::alloc(region_layout) })
+        let region = NonNull::new(unsafe { std::alloc::alloc_zeroed(region_layout) })
             .expect("pool region allocation failed");
 
         let mut pools = Vec::with_capacity(n_shards);
@@ -524,32 +536,61 @@ impl ShardedPool {
             div_shift,
             div_inv,
             traverse_epoch: AtomicU32::new(0),
+            in_flight: CachePadded::new(AtomicU32::new(0)),
         }
     }
 
-    /// Park point for the traversal pin: one relaxed load on the hot
-    /// path; the wait loop is out-of-line. Every alloc/free/drain entry
-    /// calls this before touching any chain.
+    /// Entry point of every alloc/free/drain (magazine layer included):
+    /// registers the op in [`Self::in_flight`], then parks if a
+    /// traversal pin is (or lands) in place. The returned guard keeps
+    /// the registration until the op's last chain touch, which is what
+    /// lets [`Self::pin_for_traversal`] rendezvous on a *provable*
+    /// quiescent point instead of a grace window.
+    ///
+    /// SeqCst on both sides of the store→load pairs (`in_flight` inc vs
+    /// epoch read here; epoch flip vs `in_flight` read in the pin) puts
+    /// the four accesses in one total order, so exactly one of two
+    /// things happens: this op's registration is visible to the pinner's
+    /// rendezvous loop (which then waits for the guard drop), or this op
+    /// sees the odd epoch and backs out before touching any chain.
+    ///
+    /// Inner layers must NOT re-enter (the `*_impl` variants exist for
+    /// that): a nested entry would park against a pin that is itself
+    /// waiting for the outer registration to drop.
     #[inline(always)]
-    pub(crate) fn park_check(&self) {
-        if self.traverse_epoch.load(Ordering::Relaxed) & 1 != 0 {
-            self.park_wait();
+    pub(crate) fn enter_op(&self) -> OpGuard<'_> {
+        self.in_flight.fetch_add(1, Ordering::SeqCst);
+        if self.traverse_epoch.load(Ordering::SeqCst) & 1 != 0 {
+            self.enter_op_parked();
         }
+        OpGuard { pool: self }
     }
 
+    /// Slow path of [`Self::enter_op`]: deregister (so the pinner's
+    /// rendezvous can complete), wait the pin out, re-register.
     #[cold]
-    fn park_wait(&self) {
-        while self.traverse_epoch.load(Ordering::Acquire) & 1 != 0 {
-            std::thread::yield_now();
+    fn enter_op_parked(&self) {
+        loop {
+            self.in_flight.fetch_sub(1, Ordering::SeqCst);
+            while self.traverse_epoch.load(Ordering::Acquire) & 1 != 0 {
+                std::thread::yield_now();
+            }
+            self.in_flight.fetch_add(1, Ordering::SeqCst);
+            if self.traverse_epoch.load(Ordering::SeqCst) & 1 == 0 {
+                return;
+            }
         }
     }
 
     /// Pin the pool for traversal: bumps the traversal epoch to odd, so
     /// every allocate/deallocate/drain (magazine fast paths included, via
-    /// the magazine layer's own [`Self::park_check`] call) parks at the
-    /// pool boundary until the returned guard drops. The pin then spins a
-    /// short grace window so ops that were already past the park point
-    /// when the epoch flipped can drain.
+    /// the magazine layer's own [`Self::enter_op`] call) parks at the
+    /// pool boundary until the returned guard drops — then rendezvouses
+    /// with ops already in flight by spinning until the [`Self::enter_op`]
+    /// registration count reaches zero. On return, no thread is anywhere
+    /// between an entry point and its last chain touch: the chains,
+    /// stashes and magazine contents are exactly stable, not just
+    /// probably so.
     ///
     /// The pinning thread itself MUST NOT allocate or free on this pool
     /// while the guard lives — it would park against its own pin.
@@ -560,17 +601,18 @@ impl ShardedPool {
             if e & 1 == 0
                 && self
                     .traverse_epoch
-                    .compare_exchange(e, e + 1, Ordering::AcqRel, Ordering::Relaxed)
+                    .compare_exchange(e, e + 1, Ordering::SeqCst, Ordering::Relaxed)
                     .is_ok()
             {
                 break;
             }
             std::thread::yield_now();
         }
-        // Grace window: ops that loaded an even epoch just before the
-        // flip are a few instructions from their chain touch; yield a
-        // couple of quanta so they complete before the walk starts.
-        for _ in 0..4 {
+        // Rendezvous: every op that entered before the flip is still
+        // registered; ops entering after it see the odd epoch and back
+        // out (see `enter_op` for the ordering argument). Zero here
+        // therefore proves no op is past an entry point.
+        while self.in_flight.load(Ordering::SeqCst) != 0 {
             std::thread::yield_now();
         }
         TraversalPin { pool: self }
@@ -738,7 +780,7 @@ impl ShardedPool {
     /// the local fast paths. The serving engine calls this from its
     /// periodic maintenance tick.
     pub fn drain_stashes(&self) -> u32 {
-        self.park_check();
+        let _op = self.enter_op();
         (0..self.counters.len()).map(|i| self.drain_slot_stash(i)).sum()
     }
 
@@ -747,7 +789,14 @@ impl ShardedPool {
     /// `None` only when every shard and stash is (momentarily) empty.
     #[inline]
     pub fn allocate(&self) -> Option<NonNull<u8>> {
-        self.park_check();
+        let _op = self.enter_op();
+        self.allocate_impl()
+    }
+
+    /// [`Self::allocate`] minus the traversal-park entry — for callers
+    /// (the magazine layer) already holding an [`OpGuard`].
+    #[inline]
+    pub(crate) fn allocate_impl(&self) -> Option<NonNull<u8>> {
         let (slot, gen) = home_slot();
         let home = self.resolve_home(slot, gen);
         let c = &self.counters[home];
@@ -820,11 +869,13 @@ impl ShardedPool {
     /// window only **once**: a magazine refill is one routing decision,
     /// so the `StealAware` policy sees refills, not individual blocks,
     /// and its window thresholds keep their meaning under caching.
-    // NOTE: the bulk grid paths deliberately do NOT park on the traversal
-    // pin: they run between a magazine slot claim and its release (bind,
-    // flush, stale-rescue), and parking there would strand a slot in
-    // CLAIMED for the pin's lifetime — which the pinned traversal spins
-    // on. The pin parks at the layer entry points instead.
+    // NOTE: the bulk grid paths deliberately do NOT register with
+    // `enter_op`: they run inside a magazine-layer op that already holds
+    // an `OpGuard` (bind, flush, stale-rescue), and a nested entry would
+    // park against a pin waiting for the outer registration — stranding
+    // a magazine slot in CLAIMED for the pin's lifetime, which the
+    // pinned traversal spins on. The rendezvous happens at the layer
+    // entry points instead.
     pub(crate) fn allocate_grids(&self, want: u32, out: &mut [u32]) -> u32 {
         debug_assert!(want as usize <= out.len());
         let (slot, gen) = home_slot();
@@ -883,7 +934,18 @@ impl ShardedPool {
     /// `p` must come from `allocate` on this pool, freed at most once.
     #[inline]
     pub unsafe fn deallocate(&self, p: NonNull<u8>) {
-        self.park_check();
+        let _op = self.enter_op();
+        // SAFETY: forwarded contract.
+        unsafe { self.deallocate_impl(p) }
+    }
+
+    /// [`Self::deallocate`] minus the traversal-park entry — for callers
+    /// (the magazine layer) already holding an [`OpGuard`].
+    ///
+    /// # Safety
+    /// As [`Self::deallocate`].
+    #[inline]
+    pub(crate) unsafe fn deallocate_impl(&self, p: NonNull<u8>) {
         let grid = self.ptr_to_grid(p);
         let shard = (grid >> self.stride_shift) as usize;
         let local = (grid as u64 & self.stride_mask) as u32;
@@ -1061,6 +1123,22 @@ impl Drop for TraversalPin<'_> {
     fn drop(&mut self) {
         // Odd → even: release the parked ops.
         self.pool.traverse_epoch.fetch_add(1, Ordering::Release);
+    }
+}
+
+/// RAII registration of one in-flight alloc/free/drain (see
+/// [`ShardedPool::enter_op`]). Dropping it is the op's commit point for
+/// the traversal rendezvous: after the drop, a pinner may start walking
+/// chains this op touched.
+pub(crate) struct OpGuard<'a> {
+    pool: &'a ShardedPool,
+}
+
+impl Drop for OpGuard<'_> {
+    fn drop(&mut self) {
+        // Release publishes this op's chain writes to the pinner's
+        // Acquire-or-stronger rendezvous read of the zero count.
+        self.pool.in_flight.fetch_sub(1, Ordering::Release);
     }
 }
 

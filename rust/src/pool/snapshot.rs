@@ -166,6 +166,10 @@ pub struct ClassSnapshot {
     pub class_size: u64,
     /// Class capacity in blocks (geometry check on restore).
     pub num_blocks: u32,
+    /// Size of the source pool's grid index space — `num_blocks` plus
+    /// shard-stride padding ([`crate::pool::Traverse::grid_len`]). The
+    /// bound every `live` grid index is validated against on decode.
+    pub grid_len: u32,
     /// Live blocks: class-local grid index + payload (`class_size` bytes).
     pub live: Vec<(u32, Vec<u8>)>,
 }
@@ -180,7 +184,9 @@ pub struct PoolSnapshot {
 impl PoolSnapshot {
     /// `b"FPSN"` little-endian.
     pub const MAGIC: u32 = u32::from_le_bytes(*b"FPSN");
-    pub const VERSION: u32 = 1;
+    /// v2 added the per-class `grid_len` bound (and with it duplicate /
+    /// out-of-range grid-index rejection on decode).
+    pub const VERSION: u32 = 2;
 
     /// Total live blocks across classes.
     pub fn live_blocks(&self) -> usize {
@@ -203,6 +209,7 @@ impl PoolSnapshot {
         for c in &self.classes {
             w.put_u64(c.class_size);
             w.put_u32(c.num_blocks);
+            w.put_u32(c.grid_len);
             w.put_u32(c.live.len() as u32);
             for (grid, payload) in &c.live {
                 debug_assert_eq!(payload.len() as u64, c.class_size);
@@ -228,20 +235,33 @@ impl PoolSnapshot {
             let class_size = r.u64()?;
             let block = usize::try_from(class_size).map_err(|_| SnapError::Truncated)?;
             let num_blocks = r.u32()?;
+            let grid_len = r.u32()?;
+            if num_blocks > grid_len {
+                return Err(SnapError::Corrupt("capacity beyond grid"));
+            }
             let n_live = r.u32()?;
             if n_live > num_blocks {
                 return Err(SnapError::Corrupt("more live blocks than capacity"));
             }
-            // No pre-reserve from untrusted counts: growth is bounded by
-            // actual bytes read, so a corrupt count can only hit
-            // `Truncated`, never an over-allocation.
+            // No pre-reserve from untrusted counts: growth (the live vec
+            // AND the duplicate-index set) is bounded by actual bytes
+            // read — every entry costs at least its 4-byte grid index —
+            // so a corrupt count can only hit `Truncated`, never an
+            // over-allocation.
+            let mut seen = std::collections::HashSet::new();
             let mut live = Vec::new();
             for _ in 0..n_live {
                 let grid = r.u32()?;
+                if grid >= grid_len {
+                    return Err(SnapError::Corrupt("index beyond capacity"));
+                }
+                if !seen.insert(grid) {
+                    return Err(SnapError::Corrupt("duplicate index"));
+                }
                 let payload = r.bytes(block)?.to_vec();
                 live.push((grid, payload));
             }
-            classes.push(ClassSnapshot { class_size, num_blocks, live });
+            classes.push(ClassSnapshot { class_size, num_blocks, grid_len, live });
         }
         r.expect_end()?;
         Ok(Self { classes })
@@ -291,9 +311,10 @@ mod tests {
                 ClassSnapshot {
                     class_size: 4,
                     num_blocks: 8,
+                    grid_len: 16,
                     live: vec![(3, vec![1, 2, 3, 4]), (7, vec![9, 9, 9, 9])],
                 },
-                ClassSnapshot { class_size: 2, num_blocks: 2, live: vec![] },
+                ClassSnapshot { class_size: 2, num_blocks: 2, grid_len: 2, live: vec![] },
             ],
         };
         assert_eq!(snap.live_blocks(), 2);
@@ -313,6 +334,7 @@ mod tests {
             classes: vec![ClassSnapshot {
                 class_size: 4,
                 num_blocks: 1,
+                grid_len: 1,
                 live: vec![(0, vec![0; 4])],
             }],
         };
@@ -320,7 +342,7 @@ mod tests {
         // Version bump → typed error.
         buf[4] = 99;
         assert_eq!(PoolSnapshot::decode(&buf), Err(SnapError::BadVersion(99)));
-        buf[4] = 1;
+        buf[4] = PoolSnapshot::VERSION as u8;
         // Truncated payload.
         let cut = buf.len() - 2;
         assert_eq!(PoolSnapshot::decode(&buf[..cut]), Err(SnapError::Truncated));
@@ -329,6 +351,49 @@ mod tests {
         assert_eq!(
             PoolSnapshot::decode(&buf),
             Err(SnapError::Corrupt("trailing bytes"))
+        );
+    }
+
+    #[test]
+    fn decode_rejects_structurally_invalid_indices() {
+        // Duplicate grid index.
+        let dup = PoolSnapshot {
+            classes: vec![ClassSnapshot {
+                class_size: 2,
+                num_blocks: 4,
+                grid_len: 4,
+                live: vec![(1, vec![0; 2]), (1, vec![0; 2])],
+            }],
+        };
+        assert_eq!(
+            PoolSnapshot::decode(&dup.encode()),
+            Err(SnapError::Corrupt("duplicate index"))
+        );
+        // Grid index beyond the recorded grid bound.
+        let oob = PoolSnapshot {
+            classes: vec![ClassSnapshot {
+                class_size: 2,
+                num_blocks: 4,
+                grid_len: 4,
+                live: vec![(4, vec![0; 2])],
+            }],
+        };
+        assert_eq!(
+            PoolSnapshot::decode(&oob.encode()),
+            Err(SnapError::Corrupt("index beyond capacity"))
+        );
+        // Capacity larger than the grid it supposedly lives in.
+        let bad_grid = PoolSnapshot {
+            classes: vec![ClassSnapshot {
+                class_size: 2,
+                num_blocks: 4,
+                grid_len: 3,
+                live: vec![],
+            }],
+        };
+        assert_eq!(
+            PoolSnapshot::decode(&bad_grid.encode()),
+            Err(SnapError::Corrupt("capacity beyond grid"))
         );
     }
 }

@@ -41,8 +41,10 @@
 //! * an **epoch pin** ([`super::sharded::ShardedPool::pin_for_traversal`])
 //!   — allocation and free park at the pool boundary while the pin is
 //!   held, magazine ops included, so the chains are stable for the
-//!   pin's lifetime. Ops that were already in flight when the pin landed
-//!   drain during the pin's grace window.
+//!   pin's lifetime. Every op registers in an in-flight counter at its
+//!   entry point, and the pin rendezvouses on that counter reaching
+//!   zero before returning — ops already in flight when the epoch
+//!   flipped have provably drained, not just probably.
 //!
 //! Without either, the walk is still memory-safe (chain walks are
 //! bounded and validated against the grid) but the snapshot may be
