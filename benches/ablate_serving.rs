@@ -8,18 +8,79 @@
 //! is therefore exactly the allocator's share of the serving loop — the
 //! paper's claim, measured end-to-end instead of in a micro-loop.
 //!
+//! **Ablation A4b** (same binary, `-- admission [--smoke]`) A/Bs the
+//! occupancy-driven admission controller under open-loop overload:
+//! with it off the legacy path admits until the pool exhausts and pays
+//! preemptions; with it on, submit-side shedding plus worst-case
+//! reservations keep `pool_exhaustion_events` at exactly zero — the
+//! invariant CI gates on.
+//!
 //! Writes `bench_out/ablate_serving.{md,csv,json}`; the JSON summary
-//! carries the pooled arm's hit-rate and batched-steal counters.
+//! carries the pooled arm's hit-rate, batched-steal counters, and the
+//! A4b admission columns.
 //!
 //! Run: `cargo bench --bench ablate_serving`
 
 use fastpool::bench_harness::{write_csv, write_json, write_markdown, ReportTable, Suite};
-use fastpool::coordinator::{Engine, EngineConfig, MockBackend, SamplingParams};
+use fastpool::coordinator::{AdmissionConfig, Engine, EngineConfig, MockBackend, SamplingParams};
 use fastpool::pool::PoolHandle;
 use fastpool::util::json::{self, Json};
 use fastpool::util::{Rng, Timer};
 
 const REQUESTS: usize = 384;
+
+/// A4b arm: open-loop overload with occupancy-driven admission on/off.
+struct AdmissionArm {
+    exhaustion: u64,
+    rejected: u64,
+    preemptions: u64,
+    p50_queue: u64,
+    p99_queue: u64,
+    completed: usize,
+}
+
+/// Drive an overloaded engine (offered concurrency far above both the
+/// 8 batch lanes and the 32-data-block KV pool) for `steps`, then
+/// drain. With admission off the legacy path admits while blocks fit
+/// and pays exhaustion-preemptions; with it on, submit-side shedding
+/// plus worst-case reservations keep `pool_exhaustion_events` at zero.
+fn run_admission_arm(on: bool, steps: u64, seed: u64) -> AdmissionArm {
+    let mut e = Engine::with_pool(
+        MockBackend::with_blocks(33, 16, 8),
+        EngineConfig {
+            max_batch: 8,
+            queue_limit: 64,
+            admission_ctl: if on { Some(AdmissionConfig::default()) } else { None },
+            ..Default::default()
+        },
+        PoolHandle::builder().build(),
+    );
+    let mut rng = Rng::new(seed);
+    let mut rejected = 0u64;
+    for _ in 0..steps {
+        for _ in 0..rng.gen_poisson(0.9) {
+            let plen = 1 + rng.gen_usize(0, 23);
+            let prompt: Vec<i32> = (0..plen).map(|_| rng.gen_range(256) as i32).collect();
+            let max_tokens = 16 + rng.gen_range(48) as u32;
+            if e.submit(prompt, SamplingParams::greedy(max_tokens)).is_err() {
+                rejected += 1;
+            }
+        }
+        e.step().unwrap();
+    }
+    let outs = e.run_to_completion(10_000_000).unwrap();
+    let mut queue: Vec<u64> = outs.iter().map(|o| o.queue_steps).collect();
+    queue.sort_unstable();
+    let pct = |p: usize| if queue.is_empty() { 0 } else { queue[(queue.len() - 1) * p / 100] };
+    AdmissionArm {
+        exhaustion: e.metrics.counter("pool_exhaustion_events").get(),
+        rejected,
+        preemptions: e.metrics.counter("preemptions").get(),
+        p50_queue: pct(50),
+        p99_queue: pct(99),
+        completed: outs.len(),
+    }
+}
 
 /// One serving run; returns (tokens/s, engine steps, pool hit rate).
 fn run_arm(pool: PoolHandle, max_batch: usize, seed: u64) -> (f64, u64, f64) {
@@ -136,14 +197,74 @@ fn main() {
         steal_summary.push(("magazine_hits_per_refill", Json::Num(ms.hits_per_refill())));
     }
 
+    // A4b: occupancy-driven admission control on/off under overload.
+    // Smoke mode (`-- admission --smoke`) shortens the drive for CI,
+    // which gates on `exhaustion_admission_on == 0 &&
+    // exhaustion_admission_off >= 1` in the JSON summary.
+    let mut adm_tab = ReportTable::new(
+        "A4b: admission control on/off under open-loop overload",
+        "admission",
+        vec!["on".into(), "off".into()],
+        vec![
+            "exhaustion".into(),
+            "rejected".into(),
+            "preemptions".into(),
+            "p50 queue".into(),
+            "p99 queue".into(),
+            "completed".into(),
+        ],
+        "Poisson 0.9 req/step, 8 lanes, 32 KV blocks".to_string(),
+    );
+    let mut admission_summary: Vec<(&str, Json)> = Vec::new();
+    if suite.enabled("admission") {
+        let smoke = std::env::args().any(|a| a == "--smoke");
+        let steps = if smoke { 2_000 } else { 12_000 };
+        for (ri, on) in [true, false].into_iter().enumerate() {
+            let arm = run_admission_arm(on, steps, 23);
+            println!(
+                "admission {}: exhaustion {} | rejected {} | preemptions {} | queue p50/p99 {}/{} | completed {}",
+                if on { "on " } else { "off" },
+                arm.exhaustion,
+                arm.rejected,
+                arm.preemptions,
+                arm.p50_queue,
+                arm.p99_queue,
+                arm.completed
+            );
+            adm_tab.set(ri, 0, arm.exhaustion as f64);
+            adm_tab.set(ri, 1, arm.rejected as f64);
+            adm_tab.set(ri, 2, arm.preemptions as f64);
+            adm_tab.set(ri, 3, arm.p50_queue as f64);
+            adm_tab.set(ri, 4, arm.p99_queue as f64);
+            adm_tab.set(ri, 5, arm.completed as f64);
+            admission_summary.push((
+                if on { "exhaustion_admission_on" } else { "exhaustion_admission_off" },
+                Json::Num(arm.exhaustion as f64),
+            ));
+            admission_summary.push((
+                if on { "rejected_admission_on" } else { "rejected_admission_off" },
+                Json::Num(arm.rejected as f64),
+            ));
+            admission_summary.push((
+                if on { "preemptions_admission_on" } else { "preemptions_admission_off" },
+                Json::Num(arm.preemptions as f64),
+            ));
+            admission_summary.push((
+                if on { "p99_queue_admission_on" } else { "p99_queue_admission_off" },
+                Json::Num(arm.p99_queue as f64),
+            ));
+        }
+    }
+
     let mut summary = vec![
         ("requests", Json::Num(REQUESTS as f64)),
         ("pool_hit_rate", Json::Num(last_hit_rate)),
         ("mode", json::s("mock-engine A/B, allocation handle only")),
     ];
     summary.extend(steal_summary);
+    summary.extend(admission_summary);
 
-    let tables = [tab];
+    let tables = [tab, adm_tab];
     write_markdown("ablate_serving", &[], &tables).unwrap();
     write_csv("ablate_serving", &tables).unwrap();
     write_json("ablate_serving", &tables, &summary).unwrap();

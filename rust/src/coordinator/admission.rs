@@ -1,0 +1,350 @@
+//! Occupancy-driven admission control with hysteresis, plus the typed
+//! submit-error surface.
+//!
+//! The engine used to degrade *reactively*: requests were admitted while
+//! their prompt blocks fit and the pool preempted the youngest sequence
+//! only after `CacheError::OutOfBlocks` fired mid-decode. The
+//! [`AdmissionController`] turns that around: `Engine::submit` computes a
+//! *committed* occupancy sample — blocks held now, plus the worst-case
+//! growth of every running sequence, plus the worst case of everything
+//! still queued — and the controller sheds load *before* exhaustion:
+//!
+//! * occupancy < low watermark → [`AdmissionDecision::Admit`]
+//! * low ≤ occupancy < high   → [`AdmissionDecision::Queue`] (bounded wait)
+//! * occupancy ≥ high         → [`AdmissionDecision::Reject`] and latch
+//!
+//! The latch is the hysteresis half: once shedding, the controller keeps
+//! rejecting until occupancy falls back below the *low* watermark, so a
+//! saturated server does not flap between accept and reject at the high
+//! mark. A second pressure input folds in the serving pool itself
+//! ([`pool_pressure`]): if any size class of the request-path
+//! [`ShardedMultiPool`](crate::pool::ShardedMultiPool) runs nearly dry,
+//! the controller sheds even when KV occupancy looks healthy.
+
+use crate::pool::PoolHandle;
+
+/// Watermark configuration for the controller. All watermarks are
+/// fractions in `[0, 1]` of the KV data-block capacity (respectively the
+/// per-class pool capacity for `pool_high_watermark`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdmissionConfig {
+    /// Latch shedding at or above this committed occupancy.
+    pub high_watermark: f64,
+    /// Unlatch (resume admitting) strictly below this occupancy; also the
+    /// boundary between `Admit` and `Queue`.
+    pub low_watermark: f64,
+    /// Shed when any serving-pool class's free fraction drops below
+    /// `1 - pool_high_watermark` (i.e. class occupancy at or above this).
+    pub pool_high_watermark: f64,
+    /// Bounded wait for `Queue` decisions: a queued request that is not
+    /// scheduled within this many engine steps finishes `Rejected`.
+    pub max_queue_wait_steps: u64,
+    /// Retry hint handed back with `Reject` decisions.
+    pub retry_after_steps: u64,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        Self {
+            high_watermark: 0.85,
+            low_watermark: 0.70,
+            pool_high_watermark: 0.95,
+            max_queue_wait_steps: 512,
+            retry_after_steps: 64,
+        }
+    }
+}
+
+/// What the controller tells `submit` to do with one request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionDecision {
+    /// Plenty of headroom: enqueue normally.
+    Admit,
+    /// Pressure band: enqueue, but bound the wait — the engine stamps a
+    /// queue deadline of `now + max_wait_steps`.
+    Queue { max_wait_steps: u64 },
+    /// Shedding: refuse the request outright with a retry hint.
+    Reject { retry_after_steps: u64 },
+}
+
+/// One occupancy reading, computed by the engine at submit time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OccupancySample {
+    /// Blocks held now + worst-case growth of running sequences +
+    /// worst case of queued requests + the incoming request.
+    pub committed_blocks: u64,
+    /// KV data-block capacity (excludes the scratch block).
+    pub data_blocks: u64,
+    /// Highest per-class occupancy of the serving pool in `[0, 1]`
+    /// (0.0 when the engine runs on the system allocator).
+    pub pool_pressure: f64,
+}
+
+impl OccupancySample {
+    /// Committed occupancy as a fraction of capacity. Saturates at the
+    /// committed ratio even past 1.0 (over-commit is meaningful input).
+    pub fn occupancy(&self) -> f64 {
+        if self.data_blocks == 0 {
+            1.0
+        } else {
+            self.committed_blocks as f64 / self.data_blocks as f64
+        }
+    }
+}
+
+/// Hysteresis admission controller: pure decision logic plus one bit of
+/// state (the shedding latch). The engine owns one and feeds it samples.
+#[derive(Debug, Clone)]
+pub struct AdmissionController {
+    cfg: AdmissionConfig,
+    shedding: bool,
+}
+
+impl AdmissionController {
+    pub fn new(cfg: AdmissionConfig) -> Self {
+        Self { cfg, shedding: false }
+    }
+
+    pub fn config(&self) -> &AdmissionConfig {
+        &self.cfg
+    }
+
+    /// Currently latched into load shedding?
+    pub fn is_shedding(&self) -> bool {
+        self.shedding
+    }
+
+    /// Restore the latch (snapshot/restore path).
+    pub fn set_shedding(&mut self, shedding: bool) {
+        self.shedding = shedding;
+    }
+
+    /// Decide the fate of one incoming request given a fresh sample.
+    pub fn decide(&mut self, sample: &OccupancySample) -> AdmissionDecision {
+        let occ = sample.occupancy();
+        let pool_hot = sample.pool_pressure >= self.cfg.pool_high_watermark;
+        if self.shedding {
+            if occ < self.cfg.low_watermark && !pool_hot {
+                self.shedding = false;
+            } else {
+                return AdmissionDecision::Reject {
+                    retry_after_steps: self.cfg.retry_after_steps,
+                };
+            }
+        } else if occ >= self.cfg.high_watermark || pool_hot {
+            self.shedding = true;
+            return AdmissionDecision::Reject { retry_after_steps: self.cfg.retry_after_steps };
+        }
+        if occ >= self.cfg.low_watermark {
+            AdmissionDecision::Queue { max_wait_steps: self.cfg.max_queue_wait_steps }
+        } else {
+            AdmissionDecision::Admit
+        }
+    }
+}
+
+/// Highest per-class occupancy of the serving pool behind `handle`, in
+/// `[0, 1]`. Free counts include shard free lists, steal stashes, and
+/// magazine caches (exact at quiescence — submit runs between steps), so
+/// a class only reads "hot" when blocks are genuinely live. System-mode
+/// handles report 0.0: malloc does not exhaust in this sense.
+pub fn pool_pressure(handle: &PoolHandle) -> f64 {
+    let Some(mp) = handle.multi() else { return 0.0 };
+    let cap = mp.blocks_per_class();
+    if cap == 0 {
+        return 0.0;
+    }
+    let mut worst = 0.0f64;
+    for ci in 0..mp.num_classes() {
+        let used = cap.saturating_sub(mp.class_free(ci));
+        worst = worst.max(f64::from(used) / f64::from(cap));
+    }
+    worst
+}
+
+// ---------------------------------------------------------------------------
+// Typed submit errors
+// ---------------------------------------------------------------------------
+
+/// Why `Engine::submit` / `Router::submit` refused a request. Every
+/// variant maps to a stable machine-readable wire code
+/// ([`SubmitError::code`]) that `server::err_json` puts on the wire —
+/// clients dispatch on the code, humans read the `Display` text.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SubmitError {
+    /// The prompt tokenized to nothing.
+    EmptyPrompt,
+    /// The prompt exceeds the model's prefill window.
+    ContextOverflow { len: usize, max: usize },
+    /// The waiting queue is at `queue_limit`.
+    QueueFull { limit: usize },
+    /// The admission controller is shedding load.
+    Rejected { reason: &'static str, retry_after_steps: u64 },
+    /// The tenant's committed blocks would exceed its hard quota.
+    TenantQuotaExceeded { tenant: u32, committed_blocks: u64, hard_blocks: u32 },
+    /// Strict tenancy is on and this tenant is not configured.
+    UnknownTenant { tenant: u32 },
+    /// Engine-internal failure surfaced through the submit channel.
+    Internal(String),
+}
+
+impl SubmitError {
+    /// Stable wire code for the `code` field of error responses. These
+    /// are a compatibility surface — never rename one.
+    pub fn code(&self) -> &'static str {
+        match self {
+            SubmitError::EmptyPrompt => "empty_prompt",
+            SubmitError::ContextOverflow { .. } => "context_overflow",
+            SubmitError::QueueFull { .. } => "queue_full",
+            SubmitError::Rejected { .. } => "rejected",
+            SubmitError::TenantQuotaExceeded { .. } => "tenant_quota",
+            SubmitError::UnknownTenant { .. } => "unknown_tenant",
+            SubmitError::Internal(_) => "internal",
+        }
+    }
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::EmptyPrompt => write!(f, "empty prompt"),
+            SubmitError::ContextOverflow { len, max } => {
+                write!(f, "prompt len {len} exceeds prefill window {max}")
+            }
+            SubmitError::QueueFull { limit } => write!(f, "queue full (limit {limit})"),
+            SubmitError::Rejected { reason, retry_after_steps } => {
+                write!(f, "admission rejected: {reason} (retry after ~{retry_after_steps} steps)")
+            }
+            SubmitError::TenantQuotaExceeded { tenant, committed_blocks, hard_blocks } => {
+                write!(
+                    f,
+                    "tenant {tenant} over hard quota: {committed_blocks} committed blocks \
+                     against a limit of {hard_blocks}"
+                )
+            }
+            SubmitError::UnknownTenant { tenant } => write!(f, "unknown tenant {tenant}"),
+            SubmitError::Internal(msg) => write!(f, "internal engine error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+// Callers that still plumb `Result<_, String>` (the launcher, examples)
+// keep working with `?` through this conversion.
+impl From<SubmitError> for String {
+    fn from(e: SubmitError) -> String {
+        e.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(committed: u64, data: u64) -> OccupancySample {
+        OccupancySample { committed_blocks: committed, data_blocks: data, pool_pressure: 0.0 }
+    }
+
+    #[test]
+    fn decision_bands() {
+        let mut c = AdmissionController::new(AdmissionConfig::default());
+        assert_eq!(c.decide(&sample(10, 100)), AdmissionDecision::Admit);
+        assert_eq!(
+            c.decide(&sample(70, 100)),
+            AdmissionDecision::Queue { max_wait_steps: 512 }
+        );
+        assert!(!c.is_shedding());
+        assert_eq!(
+            c.decide(&sample(85, 100)),
+            AdmissionDecision::Reject { retry_after_steps: 64 }
+        );
+        assert!(c.is_shedding());
+    }
+
+    #[test]
+    fn hysteresis_latch_holds_until_low_watermark() {
+        let mut c = AdmissionController::new(AdmissionConfig::default());
+        assert!(matches!(c.decide(&sample(90, 100)), AdmissionDecision::Reject { .. }));
+        // Back under high but above low: still shedding (no flapping).
+        assert!(matches!(c.decide(&sample(80, 100)), AdmissionDecision::Reject { .. }));
+        assert!(matches!(c.decide(&sample(71, 100)), AdmissionDecision::Reject { .. }));
+        // Below low: unlatch and admit in the same call.
+        assert_eq!(c.decide(&sample(50, 100)), AdmissionDecision::Admit);
+        assert!(!c.is_shedding());
+    }
+
+    #[test]
+    fn pool_pressure_triggers_and_holds_shedding() {
+        let mut c = AdmissionController::new(AdmissionConfig::default());
+        let hot = OccupancySample { committed_blocks: 5, data_blocks: 100, pool_pressure: 0.97 };
+        assert!(matches!(c.decide(&hot), AdmissionDecision::Reject { .. }));
+        assert!(c.is_shedding());
+        // KV occupancy is fine but the pool is still hot: stay latched.
+        assert!(matches!(c.decide(&hot), AdmissionDecision::Reject { .. }));
+        let cooled = OccupancySample { pool_pressure: 0.2, ..hot };
+        assert_eq!(c.decide(&cooled), AdmissionDecision::Admit);
+    }
+
+    #[test]
+    fn over_commit_and_zero_capacity_edges() {
+        let mut c = AdmissionController::new(AdmissionConfig::default());
+        assert!(matches!(c.decide(&sample(150, 100)), AdmissionDecision::Reject { .. }));
+        let mut c = AdmissionController::new(AdmissionConfig::default());
+        assert_eq!(sample(0, 0).occupancy(), 1.0);
+        assert!(matches!(c.decide(&sample(0, 0)), AdmissionDecision::Reject { .. }));
+    }
+
+    #[test]
+    fn pool_pressure_reads_the_handle() {
+        // System handles have no classed pool to exhaust.
+        assert_eq!(pool_pressure(&PoolHandle::system()), 0.0);
+        let handle = PoolHandle::builder().build();
+        let idle = pool_pressure(&handle);
+        assert!((0.0..=1.0).contains(&idle), "{idle}");
+        // Holding live allocations must not *decrease* measured pressure.
+        let held: Vec<crate::pool::PooledVec<u64>> = (0..32)
+            .map(|_| {
+                let mut v = crate::pool::PooledVec::with_capacity(&handle, 16);
+                v.push(1u64);
+                v
+            })
+            .collect();
+        let loaded = pool_pressure(&handle);
+        assert!(loaded >= idle, "{loaded} < {idle}");
+        drop(held);
+    }
+
+    #[test]
+    fn submit_error_codes_and_display_are_stable() {
+        let cases: Vec<(SubmitError, &str)> = vec![
+            (SubmitError::EmptyPrompt, "empty_prompt"),
+            (SubmitError::ContextOverflow { len: 40, max: 32 }, "context_overflow"),
+            (SubmitError::QueueFull { limit: 8 }, "queue_full"),
+            (
+                SubmitError::Rejected { reason: "occupancy", retry_after_steps: 4 },
+                "rejected",
+            ),
+            (
+                SubmitError::TenantQuotaExceeded {
+                    tenant: 3,
+                    committed_blocks: 9,
+                    hard_blocks: 8,
+                },
+                "tenant_quota",
+            ),
+            (SubmitError::UnknownTenant { tenant: 9 }, "unknown_tenant"),
+            (SubmitError::Internal("boom".into()), "internal"),
+        ];
+        for (err, code) in cases {
+            assert_eq!(err.code(), code);
+            assert!(!err.to_string().is_empty());
+        }
+        // The std::error::Error impl makes boxing work for callers.
+        let boxed: Box<dyn std::error::Error> = Box::new(SubmitError::EmptyPrompt);
+        assert_eq!(boxed.to_string(), "empty prompt");
+        // And the String conversion keeps `?` working in stringly callers.
+        let s: String = SubmitError::QueueFull { limit: 2 }.into();
+        assert!(s.contains("queue full"), "{s}");
+    }
+}

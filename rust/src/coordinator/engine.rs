@@ -18,12 +18,16 @@
 
 use std::collections::{HashMap, VecDeque};
 
+use super::admission::{
+    self, AdmissionConfig, AdmissionController, AdmissionDecision, OccupancySample, SubmitError,
+};
 use super::backend::{Backend, BackendGeometry};
 use super::request::{FinishReason, Request, RequestOutput, RequestState, SamplingParams};
 use super::sampler;
-use crate::kvcache::{CacheError, KvCacheManager};
+use crate::kvcache::{CacheError, KvCacheManager, TenantQuota, TenantQuotas};
 use crate::metrics::Metrics;
 use crate::pool::{PoolHandle, PooledVec, SnapError, SnapReader, SnapWriter};
+use crate::testkit::fault;
 
 /// Admission policy for prompt blocks.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -54,6 +58,17 @@ pub struct EngineConfig {
     pub queue_limit: usize,
     pub admission: Admission,
     pub policy: Policy,
+    /// Occupancy-driven admission control (None = legacy behaviour:
+    /// admit while blocks fit, preempt at exhaustion). When set, submit
+    /// consults an [`AdmissionController`] over committed occupancy and
+    /// the scheduler reserves each request's worst case up front, so
+    /// `pool_exhaustion_events` stays 0 in steady state.
+    pub admission_ctl: Option<AdmissionConfig>,
+    /// Per-tenant block quotas (installed into the KV manager).
+    pub quotas: TenantQuotas,
+    /// Transient-failure budget per request: backend step errors charge
+    /// one retry; exceeding the budget finishes the request `Aborted`.
+    pub max_retries: u32,
 }
 
 impl Default for EngineConfig {
@@ -63,6 +78,9 @@ impl Default for EngineConfig {
             queue_limit: 256,
             admission: Admission::Optimistic,
             policy: Policy::Fcfs,
+            admission_ctl: None,
+            quotas: TenantQuotas::default(),
+            max_retries: 3,
         }
     }
 }
@@ -118,6 +136,14 @@ pub struct Engine<B: Backend> {
     /// KV manager and the step buffers.
     pool: PoolHandle,
     bufs: StepBuffers,
+    /// Occupancy-driven admission (None = legacy reactive behaviour).
+    admission_ctl: Option<AdmissionController>,
+    /// Steps before this are no-ops after a backend failure
+    /// (deterministic exponential backoff; not serialized — a restored
+    /// engine retries immediately).
+    backoff_until: u64,
+    /// Consecutive backend step failures (drives the backoff width).
+    backend_error_streak: u32,
     pub metrics: Metrics,
 }
 
@@ -133,13 +159,15 @@ impl<B: Backend> Engine<B> {
     /// identical engine code, no pool.
     pub fn with_pool(backend: B, cfg: EngineConfig, pool: PoolHandle) -> Self {
         let geo = backend.geometry();
-        let kv = KvCacheManager::with_pool(
+        let mut kv = KvCacheManager::with_pool(
             geo.num_blocks,
             geo.block_tokens,
             geo.max_blocks_per_seq,
             pool.clone(),
         );
+        kv.quotas = cfg.quotas.clone();
         let bufs = StepBuffers::new(&pool, &geo, cfg.max_batch);
+        let admission_ctl = cfg.admission_ctl.clone().map(AdmissionController::new);
         Self {
             backend,
             kv,
@@ -153,6 +181,9 @@ impl<B: Backend> Engine<B> {
             step_count: 0,
             pool,
             bufs,
+            admission_ctl,
+            backoff_until: 0,
+            backend_error_streak: 0,
             metrics: Metrics::new(),
         }
     }
@@ -170,6 +201,11 @@ impl<B: Backend> Engine<B> {
             mp.export_metrics(&self.metrics, "pool.serving");
         }
         self.metrics.gauge("kv_peak_used").set(self.kv.peak_used as i64);
+        for (tenant, held) in self.kv.tenant_usage() {
+            self.metrics
+                .gauge(&format!("tenant.{tenant}.kv_blocks"))
+                .set(i64::from(held));
+        }
     }
 
     /// Periodic pool maintenance (the server runs it with the stats
@@ -213,22 +249,22 @@ impl<B: Backend> Engine<B> {
         }
     }
 
-    /// Submit a request. Fails fast on overload (backpressure) or an
-    /// impossible prompt.
-    pub fn submit(&mut self, prompt: Vec<i32>, params: SamplingParams) -> Result<u64, String> {
+    /// Submit a request. Fails fast — with a typed, wire-codeable
+    /// [`SubmitError`] — on overload (backpressure), quota violations,
+    /// admission shedding, or an impossible prompt.
+    pub fn submit(&mut self, prompt: Vec<i32>, params: SamplingParams) -> Result<u64, SubmitError> {
         if prompt.is_empty() {
-            return Err("empty prompt".into());
+            return Err(SubmitError::EmptyPrompt);
         }
         if prompt.len() > self.geo.prefill_len {
-            return Err(format!(
-                "prompt len {} exceeds prefill window {}",
-                prompt.len(),
-                self.geo.prefill_len
-            ));
+            return Err(SubmitError::ContextOverflow {
+                len: prompt.len(),
+                max: self.geo.prefill_len,
+            });
         }
         if self.waiting.len() >= self.cfg.queue_limit {
             self.metrics.counter("rejected").inc();
-            return Err("queue full".into());
+            return Err(SubmitError::QueueFull { limit: self.cfg.queue_limit });
         }
         // Clamp the generation budget to the model's context window:
         // generation can never exceed it (ContextOverflow fires first), and
@@ -237,14 +273,113 @@ impl<B: Backend> Engine<B> {
         // multi-GiB reservation.
         let mut params = params;
         params.max_tokens = params.max_tokens.min(self.geo.max_context());
+        let tenant = params.tenant;
+        if self.kv.quotas.strict && !self.kv.quotas.is_known(tenant) {
+            self.metrics.counter("rejected").inc();
+            return Err(SubmitError::UnknownTenant { tenant });
+        }
+        let wc = self.worst_case_blocks(prompt.len() as u32, params.max_tokens);
+        if let Some(hard) = self.kv.quotas.hard_for(tenant) {
+            let committed = self.tenant_committed_blocks(tenant) + wc;
+            if committed > u64::from(hard) {
+                self.metrics.counter("quota_rejected").inc();
+                return Err(SubmitError::TenantQuotaExceeded {
+                    tenant,
+                    committed_blocks: committed,
+                    hard_blocks: hard,
+                });
+            }
+        }
+        let mut queue_deadline = None;
+        if self.admission_ctl.is_some() {
+            let sample = self.occupancy_sample(wc);
+            let ctl = self.admission_ctl.as_mut().expect("checked is_some above");
+            let decision = ctl.decide(&sample);
+            self.metrics.gauge("admission_shedding").set(i64::from(ctl.is_shedding()));
+            self.metrics
+                .gauge("admission_occupancy_pct")
+                .set((sample.occupancy() * 100.0) as i64);
+            match decision {
+                AdmissionDecision::Admit => {}
+                AdmissionDecision::Queue { max_wait_steps } => {
+                    queue_deadline = Some(self.step_count + max_wait_steps);
+                    self.metrics.counter("admission_queued").inc();
+                }
+                AdmissionDecision::Reject { retry_after_steps } => {
+                    self.metrics.counter("admission_rejected").inc();
+                    return Err(SubmitError::Rejected {
+                        reason: "committed occupancy above the high watermark",
+                        retry_after_steps,
+                    });
+                }
+            }
+        }
         let id = self.next_id;
         self.next_id += 1;
         let mut req = Request::new(id, prompt, params);
         req.arrived_step = self.step_count;
+        req.queue_deadline = queue_deadline;
         self.reqs.insert(id, req);
         self.waiting.push_back(id);
         self.metrics.counter("submitted").inc();
         Ok(id)
+    }
+
+    /// Worst-case KV blocks one request can ever hold: its full context
+    /// (prompt + generation budget), clamped to the per-seq table limit.
+    /// Stable across preemptions — the replay prompt grows, but the total
+    /// context does not — so committed-occupancy accounting never drifts.
+    fn worst_case_blocks(&self, prompt_len: u32, max_tokens: u32) -> u64 {
+        let blocks = self.kv.blocks_for(prompt_len + max_tokens).max(1);
+        u64::from(blocks).min(self.geo.max_blocks_per_seq as u64)
+    }
+
+    fn req_worst_case_blocks(&self, req: &Request) -> u64 {
+        self.worst_case_blocks(req.prompt.len() as u32, req.params.max_tokens)
+    }
+
+    /// Committed occupancy: blocks held now, plus the worst-case growth
+    /// of every running sequence, plus the worst case of everything
+    /// queued, plus `incoming_blocks` (the request being decided).
+    fn occupancy_sample(&self, incoming_blocks: u64) -> OccupancySample {
+        let mut committed = u64::from(self.kv.num_used_blocks());
+        for &id in &self.running {
+            if let Some(req) = self.reqs.get(&id) {
+                let held = self.kv.seq(id).map_or(0, |s| s.blocks.len() as u64);
+                committed += self.req_worst_case_blocks(req).saturating_sub(held);
+            }
+        }
+        for &id in &self.waiting {
+            if let Some(req) = self.reqs.get(&id) {
+                committed += self.req_worst_case_blocks(req);
+            }
+        }
+        OccupancySample {
+            committed_blocks: committed + incoming_blocks,
+            data_blocks: u64::from(self.kv.num_data_blocks()),
+            pool_pressure: admission::pool_pressure(&self.pool),
+        }
+    }
+
+    /// `tenant`'s committed blocks (held + worst-case growth of its
+    /// running sequences + worst case of its queued requests) — the
+    /// quantity the hard quota bounds.
+    fn tenant_committed_blocks(&self, tenant: u32) -> u64 {
+        let mut committed = u64::from(self.kv.tenant_held_blocks(tenant));
+        for &id in &self.running {
+            let Some(req) = self.reqs.get(&id) else { continue };
+            if req.params.tenant == tenant {
+                let held = self.kv.seq(id).map_or(0, |s| s.blocks.len() as u64);
+                committed += self.req_worst_case_blocks(req).saturating_sub(held);
+            }
+        }
+        for &id in &self.waiting {
+            let Some(req) = self.reqs.get(&id) else { continue };
+            if req.params.tenant == tenant {
+                committed += self.req_worst_case_blocks(req);
+            }
+        }
+        committed
     }
 
     pub fn num_waiting(&self) -> usize {
@@ -255,6 +390,18 @@ impl<B: Backend> Engine<B> {
     /// router's capacity-aware failover checks this before routing.)
     pub fn has_queue_capacity(&self) -> bool {
         self.waiting.len() < self.cfg.queue_limit
+    }
+
+    /// Queue capacity AND the admission controller is not latched into
+    /// load shedding — the router's failover signal.
+    pub fn accepting(&self) -> bool {
+        self.has_queue_capacity()
+            && !self.admission_ctl.as_ref().is_some_and(|c| c.is_shedding())
+    }
+
+    /// Is the admission controller currently shedding load?
+    pub fn is_shedding(&self) -> bool {
+        self.admission_ctl.as_ref().is_some_and(|c| c.is_shedding())
     }
 
     pub fn num_running(&self) -> usize {
@@ -296,15 +443,28 @@ impl<B: Backend> Engine<B> {
         }
         let mut admitted = Vec::new();
         let mut free = self.kv.num_free_blocks() as i64;
-        if self.cfg.admission == Admission::Conservative {
-            // Reserve worst-case growth for every running sequence so a
-            // conservative engine can never hit pool exhaustion.
+        // Budget-aware scheduling (admission control on): reserve each
+        // request's exact worst case — tighter than Conservative's
+        // max_blocks_per_seq, and enough to make exhaustion unreachable.
+        let budget_aware = self.admission_ctl.is_some();
+        if budget_aware || self.cfg.admission == Admission::Conservative {
+            // Reserve worst-case growth for every running sequence so the
+            // engine can never hit pool exhaustion.
             let reserved: i64 = self
                 .running
                 .iter()
                 .map(|id| {
-                    self.geo.max_blocks_per_seq as i64
-                        - self.kv.seq(*id).map(|s| s.blocks.len()).unwrap_or(0) as i64
+                    let held = self.kv.seq(*id).map_or(0, |s| s.blocks.len()) as i64;
+                    let cap = if budget_aware {
+                        self.reqs
+                            .get(id)
+                            .map_or(self.geo.max_blocks_per_seq as i64, |r| {
+                                self.req_worst_case_blocks(r) as i64
+                            })
+                    } else {
+                        self.geo.max_blocks_per_seq as i64
+                    };
+                    (cap - held).max(0)
                 })
                 .sum();
             free -= reserved;
@@ -312,10 +472,14 @@ impl<B: Backend> Engine<B> {
         let room = self.cfg.max_batch - self.running.len();
         while admitted.len() < room {
             let Some(&id) = self.waiting.front() else { break };
-            let prompt_tokens = self.reqs[&id].replay_prompt().len() as u32;
-            let needed = match self.cfg.admission {
-                Admission::Optimistic => self.kv.blocks_for(prompt_tokens).max(1) as i64,
-                Admission::Conservative => self.geo.max_blocks_per_seq as i64,
+            let needed = if budget_aware {
+                self.req_worst_case_blocks(&self.reqs[&id]) as i64
+            } else {
+                let prompt_tokens = self.reqs[&id].replay_prompt().len() as u32;
+                match self.cfg.admission {
+                    Admission::Optimistic => self.kv.blocks_for(prompt_tokens).max(1) as i64,
+                    Admission::Conservative => self.geo.max_blocks_per_seq as i64,
+                }
             };
             if needed > free {
                 break; // FCFS head-of-line: wait for blocks
@@ -327,9 +491,41 @@ impl<B: Backend> Engine<B> {
         admitted
     }
 
+    /// Finish (`Rejected`) every queued request whose bounded admission
+    /// wait expired before it was ever scheduled. Preempted requests are
+    /// exempt: they were admitted once and must reach a terminal state
+    /// through the normal resume path.
+    fn expire_queued(&mut self) {
+        let expired: Vec<u64> = self
+            .waiting
+            .iter()
+            .filter(|id| {
+                self.reqs.get(id).is_some_and(|r| {
+                    r.state == RequestState::Queued
+                        && r.queue_deadline.is_some_and(|d| self.step_count > d)
+                })
+            })
+            .copied()
+            .collect();
+        for id in expired {
+            self.metrics.counter("admission_queue_timeouts").inc();
+            self.finish(id, FinishReason::Rejected);
+        }
+    }
+
     /// Run one scheduler iteration. Returns the number of tokens produced.
     pub fn step(&mut self) -> Result<usize, String> {
         self.step_count += 1;
+        if self.admission_ctl.is_some() {
+            self.expire_queued();
+        }
+        if self.step_count < self.backoff_until {
+            // Inside a backend-failure backoff window: burn the step
+            // without touching the backend.
+            self.metrics.counter("backoff_steps").inc();
+            self.publish_step_gauges();
+            return Ok(0);
+        }
         let admitted = self.plan_admission();
         let produced = if !admitted.is_empty() {
             self.do_prefill(admitted)?
@@ -338,12 +534,47 @@ impl<B: Backend> Engine<B> {
         } else {
             0
         };
+        self.publish_step_gauges();
+        Ok(produced)
+    }
+
+    fn publish_step_gauges(&self) {
         self.metrics.gauge("running").set(self.running.len() as i64);
         self.metrics.gauge("waiting").set(self.waiting.len() as i64);
         self.metrics
             .gauge("kv_free_blocks")
             .set(self.kv.num_free_blocks() as i64);
-        Ok(produced)
+    }
+
+    /// Record a backend step failure: bump the streak, open a
+    /// deterministic exponential-backoff window (1, 2, 4, … capped at 32
+    /// steps), and count it.
+    fn note_backend_failure(&mut self, stage_counter: &'static str) {
+        self.backend_error_streak += 1;
+        let delay = (1u64 << (self.backend_error_streak.min(6) - 1)).min(32);
+        self.backoff_until = self.step_count + 1 + delay;
+        self.metrics.counter("backend_errors").inc();
+        self.metrics.counter(stage_counter).inc();
+    }
+
+    /// Return a request to the queue head after a transient failure,
+    /// charging one retry; finishes it `Aborted` once the budget is
+    /// exhausted.
+    fn requeue_after_failure(&mut self, id: u64) {
+        let max_retries = self.cfg.max_retries;
+        let Some(req) = self.reqs.get_mut(&id) else {
+            debug_assert!(false, "requeue of unknown request {id}");
+            return;
+        };
+        req.retries += 1;
+        if req.retries > max_retries {
+            self.finish(id, FinishReason::Aborted);
+            return;
+        }
+        req.state = RequestState::Queued;
+        if !self.waiting.contains(&id) {
+            self.waiting.push_front(id);
+        }
     }
 
     /// Drive until all work completes (or `max_steps`). Returns outputs.
@@ -378,35 +609,78 @@ impl<B: Backend> Engine<B> {
         self.bufs.lens.fill_with(batch, 0);
         self.bufs.tables.fill_with(batch * mb, self.geo.scratch_block as i32);
         self.bufs.logits.set_len_initialized(batch * v);
+        // Lanes that survive registration (admission can race actual
+        // allocation; losers are un-admitted, not fatal).
+        let mut live: Vec<(usize, u64)> = Vec::with_capacity(admitted.len());
         for (lane, &id) in admitted.iter().enumerate() {
-            let replay = self.reqs[&id].replay_prompt();
-            self.kv
-                .create_seq(id, replay.len() as u32)
-                .map_err(|e| format!("admission raced: {e}"))?;
+            let Some(req) = self.reqs.get(&id) else {
+                debug_assert!(false, "admitted id {id} without a request");
+                continue;
+            };
+            let tenant = req.params.tenant;
+            let replay = req.replay_prompt();
+            if let Err(e) = self.kv.create_seq_for_tenant(id, replay.len() as u32, tenant) {
+                // The plan's free-count check raced the real allocation
+                // (or a failpoint simulated exhaustion). Un-admit: the
+                // lane stays a pad lane, the request goes back to the
+                // queue head with one retry charged.
+                if matches!(e, CacheError::OutOfBlocks { .. }) {
+                    self.metrics.counter("pool_exhaustion_events").inc();
+                }
+                self.metrics.counter("admission_races").inc();
+                self.requeue_after_failure(id);
+                continue;
+            }
             self.bufs.tokens[lane * p..lane * p + replay.len()].copy_from_slice(&replay);
             self.bufs.lens[lane] = replay.len() as i32;
-            self.kv
-                .table_row_into(id, &mut self.bufs.tables[lane * mb..(lane + 1) * mb])
-                .unwrap();
-            let req = self.reqs.get_mut(&id).unwrap();
+            // create_seq just succeeded, so the table row must exist.
+            let row = &mut self.bufs.tables[lane * mb..(lane + 1) * mb];
+            if self.kv.table_row_into(id, row).is_err() {
+                debug_assert!(false, "freshly created seq {id} has no table row");
+                continue;
+            }
+            let Some(req) = self.reqs.get_mut(&id) else {
+                debug_assert!(false, "admitted id {id} lost its request mid-prefill");
+                continue;
+            };
             req.state = RequestState::Running;
             if req.first_scheduled_step.is_none() {
                 req.first_scheduled_step = Some(self.step_count);
             }
+            live.push((lane, id));
         }
-        self.backend.prefill(
+        if live.is_empty() {
+            return Ok(0);
+        }
+        let prefilled = self.backend.prefill(
             batch,
             &self.bufs.tokens,
             &self.bufs.lens,
             &self.bufs.tables,
             &mut self.bufs.logits,
-        )?;
+        );
+        if prefilled.is_err() {
+            // Transient backend failure: nothing was sampled, so roll the
+            // registered lanes back to the queue (freeing their blocks)
+            // and open the backoff window. Each charged one retry.
+            self.note_backend_failure("backend_prefill_errors");
+            for &(_, id) in live.iter().rev() {
+                let _ = self.kv.free_seq(id);
+                self.requeue_after_failure(id);
+            }
+            return Ok(0);
+        }
+        self.backend_error_streak = 0;
         self.metrics.counter("prefill_batches").inc();
-        // Sample first tokens.
+        // Sample first tokens (live lanes only — un-admitted lanes are
+        // pads the backend ignored).
         let mut produced = 0;
-        for (lane, &id) in admitted.iter().enumerate() {
+        for &(lane, id) in &live {
             let tok = {
-                let req = &self.reqs[&id];
+                let Some(req) = self.reqs.get(&id) else {
+                    debug_assert!(false, "live lane {lane} lost its request");
+                    continue;
+                };
                 let row = &self.bufs.logits[lane * v..(lane + 1) * v];
                 sampler::sample(row, &req.params, req.total_tokens() as u64)
             };
@@ -454,23 +728,56 @@ impl<B: Backend> Engine<B> {
                     continue;
                 }
                 // Last token is the most recent generated one (running seqs
-                // always have ≥1 generated token, from prefill sampling).
-                self.bufs.tokens[lane] =
-                    *req.generated.last().expect("running seq has a token");
+                // always have ≥1 generated token, from prefill sampling —
+                // a violation degrades to a pad lane, never a panic).
+                let Some(&last_tok) = req.generated.last() else {
+                    debug_assert!(false, "running seq {id} has no generated token");
+                    continue;
+                };
+                self.bufs.tokens[lane] = last_tok;
                 // Cache currently holds total_tokens - 1 (the new token's
                 // K/V is written by this decode call).
                 self.bufs.lens[lane] = (req.total_tokens() - 1) as i32;
-                self.kv
-                    .table_row_into(id, &mut self.bufs.tables[lane * mb..(lane + 1) * mb])
-                    .expect("running request has a cache row");
+                // Running implies a cache row (create_seq at admission,
+                // freed only by preempt/finish which leave Running).
+                let row = &mut self.bufs.tables[lane * mb..(lane + 1) * mb];
+                if self.kv.table_row_into(id, row).is_err() {
+                    debug_assert!(false, "running request {id} without a cache row");
+                    self.bufs.lens[lane] = 0;
+                    continue;
+                }
             }
-            self.backend.decode(
+            let decoded = self.backend.decode(
                 batch,
                 &self.bufs.tokens,
                 &self.bufs.lens,
                 &self.bufs.tables,
                 &mut self.bufs.logits,
-            )?;
+            );
+            if decoded.is_err() {
+                // Transient backend failure: no tokens were produced for
+                // this chunk, the sequences keep their blocks, and the
+                // next non-backoff step retries the same decode. Charge
+                // each painted lane one retry; budget-exhausted requests
+                // finish Aborted instead of spinning forever.
+                self.note_backend_failure("backend_decode_errors");
+                let max_retries = self.cfg.max_retries;
+                for (lane, &id) in chunk.iter().enumerate() {
+                    if self.bufs.lens[lane] == 0 {
+                        continue;
+                    }
+                    let over_budget = {
+                        let Some(req) = self.reqs.get_mut(&id) else { continue };
+                        req.retries += 1;
+                        req.retries > max_retries
+                    };
+                    if over_budget {
+                        self.finish(id, FinishReason::Aborted);
+                    }
+                }
+                return Ok(produced);
+            }
+            self.backend_error_streak = 0;
             self.metrics.counter("decode_batches").inc();
             for (lane, &id) in chunk.iter().enumerate() {
                 // Pad lane (vanished or preempted before this chunk was
@@ -501,13 +808,15 @@ impl<B: Backend> Engine<B> {
         // slot — block ownership was guaranteed by the table row; a fresh
         // block is needed only for the NEXT step's write, so allocating
         // here keeps the table ready before the next decode.)
-        let preempted_mid_chunk = {
-            let req = &self.reqs[&id];
-            req.state == RequestState::Preempted
-        };
-        let finish = {
-            let req = self.reqs.get_mut(&id).unwrap();
-            req.push_token(tok)
+        // Callers resolve `id` through `reqs` before committing (prefill
+        // admits it, decode paints it), so the entry must exist; degrade
+        // to a dropped token rather than panicking if it does not.
+        let (preempted_mid_chunk, finish) = {
+            let Some(req) = self.reqs.get_mut(&id) else {
+                debug_assert!(false, "commit for unknown request {id}");
+                return Ok(());
+            };
+            (req.state == RequestState::Preempted, req.push_token(tok))
         };
         if let Some(reason) = finish {
             self.finish(id, reason);
@@ -528,18 +837,22 @@ impl<B: Backend> Engine<B> {
             }
             Err(CacheError::OutOfBlocks { .. }) => {
                 self.metrics.counter("pool_exhaustion_events").inc();
-                // Preempt the *youngest* running sequence (LIFO) — possibly
-                // the one that just overflowed.
-                let victim = *self.running.last().unwrap();
+                // Preempt an over-quota tenant's youngest sequence if one
+                // exists, else the globally youngest (LIFO) — possibly
+                // the one that just overflowed. `running` is non-empty
+                // here (`id` itself is committing), but degrade to
+                // preempting `id` rather than panicking if not.
+                let Some(victim) = self.pick_preemption_victim() else {
+                    debug_assert!(false, "exhaustion with nothing running");
+                    self.preempt(id);
+                    return Ok(());
+                };
                 self.preempt(victim);
                 if victim != id {
                     // Retry the original append now that blocks are free.
-                    match self.kv.append_token(id) {
-                        Ok(()) => {}
-                        Err(_) => {
-                            // Still starved: preempt this one too.
-                            self.preempt(id);
-                        }
+                    if self.kv.append_token(id).is_err() {
+                        // Still starved: preempt this one too.
+                        self.preempt(id);
                     }
                 }
                 Ok(())
@@ -548,10 +861,32 @@ impl<B: Backend> Engine<B> {
         }
     }
 
+    /// Who loses blocks under exhaustion: the youngest running sequence
+    /// of a tenant over its soft quota (isolation — the noisy tenant
+    /// pays first), else the globally youngest.
+    fn pick_preemption_victim(&self) -> Option<u64> {
+        for &id in self.running.iter().rev() {
+            let Some(req) = self.reqs.get(&id) else { continue };
+            let t = req.params.tenant;
+            if let Some(soft) = self.kv.quotas.soft_for(t) {
+                if self.kv.tenant_held_blocks(t) > soft {
+                    return Some(id);
+                }
+            }
+        }
+        self.running.last().copied()
+    }
+
     fn preempt(&mut self, id: u64) {
         let _ = self.kv.free_seq(id);
         self.running.retain(|&r| r != id);
-        let req = self.reqs.get_mut(&id).unwrap();
+        // Victims come from `running`, whose ids stay in `reqs` until
+        // `finish` removes them — a miss is an engine bug, not a state
+        // a release build should die on.
+        let Some(req) = self.reqs.get_mut(&id) else {
+            debug_assert!(false, "preempt of unknown request {id}");
+            return;
+        };
         req.preemptions += 1;
         self.metrics.counter("preemptions").inc();
         if req.replay_prompt().len() <= self.geo.prefill_len {
@@ -567,7 +902,12 @@ impl<B: Backend> Engine<B> {
         let _ = self.kv.free_seq(id);
         self.running.retain(|&r| r != id);
         self.waiting.retain(|&r| r != id); // may finish while preempted
-        let mut req = self.reqs.remove(&id).unwrap();
+        // Every finish call site resolved `id` through `reqs` first, so
+        // the entry must exist; a miss means the output is already gone.
+        let Some(mut req) = self.reqs.remove(&id) else {
+            debug_assert!(false, "finish of unknown request {id}");
+            return;
+        };
         req.state = RequestState::Finished(reason);
         req.finished_step = Some(self.step_count);
         let first = req.first_scheduled_step.unwrap_or(self.step_count);
@@ -618,6 +958,34 @@ impl<B: Backend> Engine<B> {
             Policy::Fcfs => 0,
             Policy::Sjf => 1,
         });
+        w.put_u32(self.cfg.max_retries);
+        // Admission controller: config plus the latched shedding bit
+        // (hysteresis state must survive a restore, or a saturated
+        // engine would resume admitting straight into exhaustion).
+        match &self.admission_ctl {
+            None => w.put_u8(0),
+            Some(ctl) => {
+                w.put_u8(1);
+                let c = ctl.config();
+                w.put_u64(c.high_watermark.to_bits());
+                w.put_u64(c.low_watermark.to_bits());
+                w.put_u64(c.pool_high_watermark.to_bits());
+                w.put_u64(c.max_queue_wait_steps);
+                w.put_u64(c.retry_after_steps);
+                w.put_u8(u8::from(ctl.is_shedding()));
+            }
+        }
+        // Tenant quota policy (the KV snapshot carries only usage).
+        let q = &self.cfg.quotas;
+        w.put_u8(u8::from(q.strict));
+        put_opt_u32(&mut w, q.default_soft);
+        put_opt_u32(&mut w, q.default_hard);
+        w.put_u32(q.per_tenant.len() as u32);
+        for &(tenant, tq) in &q.per_tenant {
+            w.put_u32(tenant);
+            put_opt_u32(&mut w, tq.soft);
+            put_opt_u32(&mut w, tq.hard);
+        }
         w.put_u64(self.step_count);
         w.put_u64(self.next_id);
         w.put_u32(self.waiting.len() as u32);
@@ -647,6 +1015,9 @@ impl<B: Backend> Engine<B> {
     /// shape ([`SnapError::ConfigMismatch`] otherwise); the stream is
     /// structurally validated, never trusted.
     pub fn restore(backend: B, pool: PoolHandle, bytes: &[u8]) -> Result<Self, SnapError> {
+        if fault::should_fail("snapshot.decode") {
+            return Err(SnapError::Corrupt("failpoint snapshot.decode"));
+        }
         let mut r = SnapReader::new(bytes);
         if r.u32()? != ENGINE_SNAP_MAGIC {
             return Err(SnapError::BadMagic);
@@ -667,7 +1038,64 @@ impl<B: Backend> Engine<B> {
             1 => Policy::Sjf,
             _ => return Err(SnapError::Corrupt("queue policy")),
         };
-        let cfg = EngineConfig { max_batch, queue_limit, admission, policy };
+        let max_retries = r.u32()?;
+        let (admission_cfg, shedding) = match r.u8()? {
+            0 => (None, false),
+            1 => {
+                let high_watermark = f64::from_bits(r.u64()?);
+                let low_watermark = f64::from_bits(r.u64()?);
+                let pool_high_watermark = f64::from_bits(r.u64()?);
+                for w in [high_watermark, low_watermark, pool_high_watermark] {
+                    if !w.is_finite() || !(0.0..=1.0).contains(&w) {
+                        return Err(SnapError::Corrupt("admission watermark out of [0, 1]"));
+                    }
+                }
+                let max_queue_wait_steps = r.u64()?;
+                let retry_after_steps = r.u64()?;
+                let shedding = match r.u8()? {
+                    0 => false,
+                    1 => true,
+                    _ => return Err(SnapError::Corrupt("shedding flag")),
+                };
+                let c = AdmissionConfig {
+                    high_watermark,
+                    low_watermark,
+                    pool_high_watermark,
+                    max_queue_wait_steps,
+                    retry_after_steps,
+                };
+                (Some(c), shedding)
+            }
+            _ => return Err(SnapError::Corrupt("admission controller tag")),
+        };
+        let strict = match r.u8()? {
+            0 => false,
+            1 => true,
+            _ => return Err(SnapError::Corrupt("quota strict flag")),
+        };
+        let default_soft = get_opt_u32(&mut r)?;
+        let default_hard = get_opt_u32(&mut r)?;
+        let n_quota = r.u32()?;
+        let mut per_tenant = Vec::new();
+        for _ in 0..n_quota {
+            let tenant = r.u32()?;
+            let soft = get_opt_u32(&mut r)?;
+            let hard = get_opt_u32(&mut r)?;
+            if per_tenant.iter().any(|&(t, _)| t == tenant) {
+                return Err(SnapError::Corrupt("duplicate tenant quota entry"));
+            }
+            per_tenant.push((tenant, TenantQuota { soft, hard }));
+        }
+        let quotas = TenantQuotas { default_soft, default_hard, per_tenant, strict };
+        let cfg = EngineConfig {
+            max_batch,
+            queue_limit,
+            admission,
+            policy,
+            admission_ctl: admission_cfg,
+            quotas,
+            max_retries,
+        };
         let step_count = r.u64()?;
         let next_id = r.u64()?;
         let n_waiting = r.u32()?;
@@ -701,7 +1129,10 @@ impl<B: Backend> Engine<B> {
         for _ in 0..n_fin {
             finished.push(get_output(&mut r)?);
         }
-        let kv = KvCacheManager::restore_from(&mut r, pool.clone())?;
+        let mut kv = KvCacheManager::restore_from(&mut r, pool.clone())?;
+        // Quotas are policy, not cache state: the engine stream carries
+        // them (validated above), the KV restore only rebuilds usage.
+        kv.quotas = cfg.quotas.clone();
         r.expect_end()?;
         for id in &running {
             if kv.seq(*id).is_none() {
@@ -716,6 +1147,11 @@ impl<B: Backend> Engine<B> {
             return Err(SnapError::ConfigMismatch("backend geometry does not match snapshot"));
         }
         let bufs = StepBuffers::new(&pool, &geo, cfg.max_batch);
+        let admission_ctl = cfg.admission_ctl.clone().map(|c| {
+            let mut ctl = AdmissionController::new(c);
+            ctl.set_shedding(shedding);
+            ctl
+        });
         Ok(Self {
             backend,
             kv,
@@ -729,13 +1165,18 @@ impl<B: Backend> Engine<B> {
             step_count,
             pool,
             bufs,
+            admission_ctl,
+            backoff_until: 0,
+            backend_error_streak: 0,
             metrics: Metrics::new(),
         })
     }
 }
 
 const ENGINE_SNAP_MAGIC: u32 = u32::from_le_bytes(*b"FPEN");
-const ENGINE_SNAP_VERSION: u32 = 1;
+// v2: + max_retries, admission-controller state, tenant quota policy,
+// and per-request tenant / retries / queue_deadline.
+const ENGINE_SNAP_VERSION: u32 = 2;
 
 fn put_tokens(w: &mut SnapWriter, toks: &[i32]) {
     w.put_u32(toks.len() as u32);
@@ -792,6 +1233,24 @@ fn get_opt_u64(r: &mut SnapReader<'_>) -> Result<Option<u64>, SnapError> {
     })
 }
 
+fn put_opt_u32(w: &mut SnapWriter, v: Option<u32>) {
+    match v {
+        None => w.put_u8(0),
+        Some(x) => {
+            w.put_u8(1);
+            w.put_u32(x);
+        }
+    }
+}
+
+fn get_opt_u32(r: &mut SnapReader<'_>) -> Result<Option<u32>, SnapError> {
+    Ok(match r.u8()? {
+        0 => None,
+        1 => Some(r.u32()?),
+        _ => return Err(SnapError::Corrupt("option tag")),
+    })
+}
+
 fn put_request(w: &mut SnapWriter, req: &Request) {
     w.put_u64(req.id);
     put_tokens(w, &req.prompt);
@@ -807,6 +1266,7 @@ fn put_request(w: &mut SnapWriter, req: &Request) {
     w.put_u32(req.params.top_k);
     w.put_u32(req.params.temperature.to_bits());
     w.put_u64(req.params.seed);
+    w.put_u32(req.params.tenant);
     match req.state {
         RequestState::Queued => w.put_u8(0),
         RequestState::Running => w.put_u8(1),
@@ -820,6 +1280,8 @@ fn put_request(w: &mut SnapWriter, req: &Request) {
     put_opt_u64(w, req.first_scheduled_step);
     put_opt_u64(w, req.finished_step);
     w.put_u32(req.preemptions);
+    w.put_u32(req.retries);
+    put_opt_u64(w, req.queue_deadline);
 }
 
 fn get_request(r: &mut SnapReader<'_>) -> Result<Request, SnapError> {
@@ -847,7 +1309,8 @@ fn get_request(r: &mut SnapReader<'_>) -> Result<Request, SnapError> {
     let top_k = r.u32()?;
     let temperature = f32::from_bits(r.u32()?);
     let seed = r.u64()?;
-    let params = SamplingParams { max_tokens, eos, top_k, temperature, seed };
+    let tenant = r.u32()?;
+    let params = SamplingParams { max_tokens, eos, top_k, temperature, seed, tenant };
     let state = match r.u8()? {
         0 => RequestState::Queued,
         1 => RequestState::Running,
@@ -859,6 +1322,8 @@ fn get_request(r: &mut SnapReader<'_>) -> Result<Request, SnapError> {
     let first_scheduled_step = get_opt_u64(r)?;
     let finished_step = get_opt_u64(r)?;
     let preemptions = r.u32()?;
+    let retries = r.u32()?;
+    let queue_deadline = get_opt_u64(r)?;
     // Rebuild through `Request::new` so the generated buffer keeps its
     // submit-time reservation (push never reallocates on the hot path).
     let mut req = Request::new(id, prompt, params);
@@ -868,6 +1333,8 @@ fn get_request(r: &mut SnapReader<'_>) -> Result<Request, SnapError> {
     req.first_scheduled_step = first_scheduled_step;
     req.finished_step = finished_step;
     req.preemptions = preemptions;
+    req.retries = retries;
+    req.queue_deadline = queue_deadline;
     Ok(req)
 }
 
@@ -1288,5 +1755,237 @@ mod tests {
         // Now dense: a second maintenance pass does not compact again.
         e.maintain_pool();
         assert_eq!(e.metrics.counter("kv_compactions").get(), 1);
+    }
+
+    #[test]
+    fn submit_errors_are_typed() {
+        let mut e = engine(EngineConfig { queue_limit: 1, ..Default::default() });
+        assert_eq!(
+            e.submit(vec![], SamplingParams::greedy(1)),
+            Err(SubmitError::EmptyPrompt)
+        );
+        assert_eq!(
+            e.submit(vec![1; 33], SamplingParams::greedy(1)),
+            Err(SubmitError::ContextOverflow { len: 33, max: 32 })
+        );
+        e.submit(vec![1], SamplingParams::greedy(1)).unwrap();
+        assert_eq!(
+            e.submit(vec![2], SamplingParams::greedy(1)),
+            Err(SubmitError::QueueFull { limit: 1 })
+        );
+        // Strict quota mode: only registered tenants may submit.
+        let quotas = TenantQuotas { strict: true, ..Default::default() }.tenant(1, None, None);
+        let mut s = engine(EngineConfig { quotas, ..Default::default() });
+        assert_eq!(
+            s.submit(vec![1], SamplingParams { tenant: 7, ..Default::default() }),
+            Err(SubmitError::UnknownTenant { tenant: 7 })
+        );
+        s.submit(vec![1], SamplingParams { tenant: 1, ..Default::default() }).unwrap();
+    }
+
+    #[test]
+    fn admission_sheds_before_exhaustion_and_recovers() {
+        // 8 data blocks of 4 tokens; each request's worst case is 3
+        // blocks (2 prompt + 10 generated = 12 tokens). Committed
+        // occupancy per submit: 3/8, 6/8 (≥ low → Queue), 9/8 (≥ high →
+        // Reject + latch), latched → Reject.
+        let be = MockBackend::with_blocks(9, 4, 4);
+        let mut e = Engine::new(
+            be,
+            EngineConfig {
+                max_batch: 4,
+                admission_ctl: Some(AdmissionConfig::default()),
+                ..Default::default()
+            },
+        );
+        let prompts: Vec<Vec<i32>> = (0..2).map(|i| vec![i * 3 + 1, i + 2]).collect();
+        e.submit(prompts[0].clone(), SamplingParams::greedy(10)).unwrap();
+        e.submit(prompts[1].clone(), SamplingParams::greedy(10)).unwrap();
+        let err = e.submit(vec![9, 9], SamplingParams::greedy(10)).unwrap_err();
+        assert!(
+            matches!(err, SubmitError::Rejected { retry_after_steps: 64, .. }),
+            "{err:?}"
+        );
+        assert!(e.is_shedding());
+        assert!(!e.accepting());
+        // Latched: rejected even though nothing changed.
+        assert!(e.submit(vec![9], SamplingParams::greedy(1)).is_err());
+        assert_eq!(e.metrics.counter("admission_rejected").get(), 2);
+        assert_eq!(e.metrics.counter("admission_queued").get(), 1);
+        // The admitted pair completes exactly, with zero exhaustion and
+        // zero preemption: budget-aware scheduling reserved their worst
+        // cases up front.
+        let mut outs = e.run_to_completion(10_000).unwrap();
+        outs.sort_by_key(|o| o.id);
+        assert_eq!(outs.len(), 2);
+        for (o, p) in outs.iter().zip(&prompts) {
+            assert_eq!(o.finish, FinishReason::Length);
+            assert_eq!(o.tokens, mock_expect(p, 10), "req {}", o.id);
+        }
+        assert_eq!(e.metrics.counter("pool_exhaustion_events").get(), 0);
+        assert_eq!(e.metrics.counter("preemptions").get(), 0);
+        // Hysteresis: occupancy fell to 0 < low watermark, so the next
+        // submit unlatches and admits.
+        e.submit(vec![5, 6], SamplingParams::greedy(10)).unwrap();
+        assert!(!e.is_shedding());
+        assert!(e.accepting());
+    }
+
+    #[test]
+    fn queued_admission_expires_to_rejected() {
+        // One lane; the second request rides the Queue band with a
+        // 2-step deadline it can never make behind a 14-token decode.
+        let be = MockBackend::with_blocks(17, 4, 4);
+        let mut e = Engine::new(
+            be,
+            EngineConfig {
+                max_batch: 1,
+                admission_ctl: Some(AdmissionConfig {
+                    high_watermark: 0.9,
+                    low_watermark: 0.3,
+                    pool_high_watermark: 0.95,
+                    max_queue_wait_steps: 2,
+                    retry_after_steps: 64,
+                }),
+                ..Default::default()
+            },
+        );
+        let a = e.submit(vec![1, 2], SamplingParams::greedy(14)).unwrap();
+        let b = e.submit(vec![3, 4], SamplingParams::greedy(14)).unwrap();
+        let outs = e.run_to_completion(1000).unwrap();
+        assert_eq!(e.metrics.counter("admission_queue_timeouts").get(), 1);
+        let get = |id| outs.iter().find(|o| o.id == id).unwrap();
+        assert_eq!(get(a).finish, FinishReason::Length);
+        assert_eq!(get(a).tokens, mock_expect(&[1, 2], 14));
+        assert_eq!(get(b).finish, FinishReason::Rejected);
+        assert!(get(b).tokens.is_empty());
+    }
+
+    #[test]
+    fn tenant_hard_quota_rejects_submit() {
+        // Default mock: 16-token blocks, so 2 prompt + 30 generated = 2
+        // blocks per request. Tenant 1's hard cap of 3 admits one
+        // request (committed 2) and rejects the next (committed 4).
+        let quotas = TenantQuotas::default().tenant(1, None, Some(3));
+        let mut e = engine(EngineConfig { quotas, ..Default::default() });
+        let t1 = SamplingParams { max_tokens: 30, tenant: 1, ..Default::default() };
+        e.submit(vec![1, 2], t1.clone()).unwrap();
+        assert_eq!(
+            e.submit(vec![3, 4], t1),
+            Err(SubmitError::TenantQuotaExceeded {
+                tenant: 1,
+                committed_blocks: 4,
+                hard_blocks: 3
+            })
+        );
+        assert_eq!(e.metrics.counter("quota_rejected").get(), 1);
+        // Other tenants are untouched by tenant 1's cap.
+        let t0 = SamplingParams { max_tokens: 30, ..Default::default() };
+        e.submit(vec![5, 6], t0).unwrap();
+    }
+
+    #[test]
+    fn soft_quota_picks_the_over_quota_victim() {
+        // Three lock-step requests need 9 blocks of an 8-block pool, so
+        // exhaustion preempts exactly one. Tenant 1 (two requests, soft
+        // cap 3) is over quota when it hits; its YOUNGEST sequence must
+        // be the victim, never tenant 0's.
+        let be = MockBackend::with_blocks(9, 4, 4);
+        let quotas = TenantQuotas::default().tenant(1, Some(3), None);
+        let mut e = Engine::new(be, EngineConfig { max_batch: 4, quotas, ..Default::default() });
+        let t1 = SamplingParams { max_tokens: 10, tenant: 1, ..Default::default() };
+        let t0 = SamplingParams { max_tokens: 10, ..Default::default() };
+        let a = e.submit(vec![1, 2], t1.clone()).unwrap();
+        let b = e.submit(vec![3, 4], t1).unwrap();
+        let c = e.submit(vec![5, 6], t0).unwrap();
+        let outs = e.run_to_completion(100_000).unwrap();
+        assert_eq!(outs.len(), 3);
+        let get = |id| outs.iter().find(|o| o.id == id).unwrap();
+        for (id, p) in [(a, vec![1, 2]), (b, vec![3, 4]), (c, vec![5, 6])] {
+            assert_eq!(get(id).finish, FinishReason::Length, "req {id}");
+            assert_eq!(get(id).tokens, mock_expect(&p, 10), "req {id}");
+        }
+        assert!(e.metrics.counter("pool_exhaustion_events").get() >= 1);
+        assert_eq!(get(c).preemptions, 0, "tenant 0 must be isolated");
+        assert_eq!(get(a).preemptions, 0, "victim is the youngest over-quota seq");
+        assert!(get(b).preemptions >= 1);
+    }
+
+    #[test]
+    fn backend_failures_retry_with_backoff_and_recover() {
+        let mut e = engine(EngineConfig::default());
+        e.submit(vec![3, 4], SamplingParams::greedy(5)).unwrap();
+        e.step().unwrap(); // prefill succeeds
+        e.backend.fail_next_decodes = 2;
+        let outs = e.run_to_completion(1000).unwrap();
+        assert_eq!(outs[0].finish, FinishReason::Length);
+        assert_eq!(outs[0].tokens, mock_expect(&[3, 4], 5));
+        assert_eq!(e.metrics.counter("backend_errors").get(), 2);
+        assert_eq!(e.metrics.counter("backend_decode_errors").get(), 2);
+        // Exponential backoff burned idle steps: 1 after the first
+        // failure, 2 after the second.
+        assert_eq!(e.metrics.counter("backoff_steps").get(), 3);
+    }
+
+    #[test]
+    fn retry_budget_exhaustion_aborts_cleanly() {
+        let mut e = engine(EngineConfig { max_retries: 2, ..Default::default() });
+        e.submit(vec![3, 4], SamplingParams::greedy(5)).unwrap();
+        e.step().unwrap();
+        e.backend.fail_next_decodes = 100;
+        let outs = e.run_to_completion(1000).unwrap();
+        assert_eq!(outs[0].finish, FinishReason::Aborted);
+        assert!(!e.has_work());
+        assert_eq!(e.kv.num_seqs(), 0);
+        assert_eq!(e.metrics.counter("backend_errors").get(), 3);
+    }
+
+    #[test]
+    fn snapshot_v2_carries_admission_and_quota_state() {
+        let mk = || MockBackend::with_blocks(9, 4, 4);
+        let cfg = EngineConfig {
+            max_batch: 4,
+            admission_ctl: Some(AdmissionConfig::default()),
+            quotas: TenantQuotas::default().tenant(1, Some(6), Some(8)),
+            max_retries: 5,
+            ..Default::default()
+        };
+        let mut a = Engine::new(mk(), cfg);
+        let t1 = SamplingParams { max_tokens: 10, tenant: 1, ..Default::default() };
+        a.submit(vec![1, 2], SamplingParams::greedy(10)).unwrap();
+        a.submit(vec![3, 4], t1).unwrap();
+        // Third submit latches load shedding (committed 9/8 ≥ high).
+        a.submit(vec![5, 6], SamplingParams::greedy(10)).unwrap_err();
+        assert!(a.is_shedding());
+        for _ in 0..2 {
+            a.step().unwrap();
+        }
+        let bytes = a.snapshot();
+        let mut b =
+            Engine::restore(mk(), crate::pool::PoolHandle::builder().build(), &bytes).unwrap();
+        assert!(b.is_shedding(), "hysteresis latch must survive restore");
+        assert_eq!(b.cfg.max_retries, 5);
+        assert_eq!(b.cfg.quotas, a.cfg.quotas);
+        assert_eq!(b.cfg.admission_ctl, a.cfg.admission_ctl);
+        assert_eq!(b.kv.quotas, a.kv.quotas, "quotas re-installed into the KV manager");
+        assert_eq!(b.kv.tenant_usage(), a.kv.tenant_usage());
+        // Lock-step resume, identical outputs (tenants included).
+        while a.has_work() || b.has_work() {
+            assert_eq!(a.step().unwrap(), b.step().unwrap());
+        }
+        let dump = |v: &[RequestOutput]| v.iter().map(|o| format!("{o:?}")).collect::<Vec<_>>();
+        assert_eq!(dump(&a.take_finished()), dump(&b.take_finished()));
+        // Both engines make the same post-restore admission decision.
+        assert_eq!(
+            a.submit(vec![7], SamplingParams::greedy(1)),
+            b.submit(vec![7], SamplingParams::greedy(1))
+        );
+        // A v1 stream is no longer accepted.
+        let mut old = bytes.clone();
+        old[4..8].copy_from_slice(&1u32.to_le_bytes());
+        assert!(matches!(
+            Engine::restore(mk(), crate::pool::PoolHandle::system(), &old),
+            Err(SnapError::BadVersion(1))
+        ));
     }
 }

@@ -6,9 +6,12 @@
 //!   [`MockBackend`] (deterministic, for tests).
 //! * [`engine`] — continuous-batching scheduler with admission control and
 //!   preemption over the [`crate::kvcache`] block pool.
+//! * [`admission`] — occupancy-driven admission control (hysteresis
+//!   load shedding, bounded queue waits) and the typed [`SubmitError`].
 //! * [`router`] — multi-engine routing (round-robin / least-loaded).
 //! * [`sampler`], [`tokenizer`] — greedy/top-k sampling, byte tokenizer.
 
+pub mod admission;
 pub mod backend;
 pub mod engine;
 pub mod request;
@@ -17,6 +20,7 @@ pub mod server;
 pub mod sampler;
 pub mod tokenizer;
 
+pub use admission::{AdmissionConfig, AdmissionController, AdmissionDecision, SubmitError};
 pub use backend::{Backend, BackendGeometry, MockBackend, XlaBackend};
 pub use engine::{Admission, Engine, EngineConfig, Policy};
 pub use request::{FinishReason, Request, RequestOutput, RequestState, SamplingParams};

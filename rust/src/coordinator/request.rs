@@ -13,11 +13,14 @@ pub struct SamplingParams {
     pub temperature: f32,
     /// Per-request sampling seed (deterministic replay).
     pub seed: u64,
+    /// Owning tenant for quota accounting and isolation (0 = default
+    /// tenant; single-tenant callers never need to set this).
+    pub tenant: u32,
 }
 
 impl Default for SamplingParams {
     fn default() -> Self {
-        Self { max_tokens: 16, eos: None, top_k: 0, temperature: 1.0, seed: 0 }
+        Self { max_tokens: 16, eos: None, top_k: 0, temperature: 1.0, seed: 0, tenant: 0 }
     }
 }
 
@@ -39,7 +42,8 @@ pub enum FinishReason {
     /// Preempted and could not be recovered (prompt+generated exceeds the
     /// prefill window, so recompute is impossible).
     Aborted,
-    /// Rejected at admission (queue full).
+    /// Rejected by admission control (shed at submit, or the bounded
+    /// queue wait expired before the request was ever scheduled).
     Rejected,
 }
 
@@ -66,6 +70,12 @@ pub struct Request {
     pub first_scheduled_step: Option<u64>,
     pub finished_step: Option<u64>,
     pub preemptions: u32,
+    /// Backend failures charged to this request so far (bounded by
+    /// `EngineConfig::max_retries`; exceeding the budget aborts).
+    pub retries: u32,
+    /// Admission `Queue` deadline: finish `Rejected` if still queued
+    /// past this engine step. `None` = unbounded (plain `Admit`).
+    pub queue_deadline: Option<u64>,
 }
 
 impl Request {
@@ -83,6 +93,8 @@ impl Request {
             first_scheduled_step: None,
             finished_step: None,
             preemptions: 0,
+            retries: 0,
+            queue_deadline: None,
         }
     }
 

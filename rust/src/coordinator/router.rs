@@ -2,6 +2,7 @@
 //! (round-robin or least-loaded), steps them all, and merges outputs.
 //! Reference shape: vllm-project/router.
 
+use super::admission::SubmitError;
 use super::backend::Backend;
 use super::engine::Engine;
 use super::request::{RequestOutput, SamplingParams};
@@ -75,19 +76,24 @@ impl<B: Backend> Router<B> {
     /// fail fast on the picked engine and leave the cursor unmoved.
     /// Least-loaded keeps its single pick — it already chose the best
     /// candidate, so a rejection there means cluster-wide pressure.
+    ///
+    /// An engine whose admission controller has latched into load
+    /// shedding is treated like a full queue: round-robin fails over
+    /// past it (`Engine::accepting`), so one saturated replica does not
+    /// shed traffic the rest of the ring could serve.
     pub fn submit(
         &mut self,
         prompt: Vec<i32>,
         params: SamplingParams,
-    ) -> Result<GlobalId, String> {
+    ) -> Result<GlobalId, SubmitError> {
         let n = self.engines.len();
         let start = self.pick();
         let engine = match self.policy {
-            // First engine from the cursor with queue room; when every
-            // queue is full, let the cursor's engine surface the error.
+            // First engine from the cursor that is accepting; when every
+            // engine rejects, let the cursor's engine surface the error.
             RoutePolicy::RoundRobin => (0..n)
                 .map(|j| (start + j) % n)
-                .find(|&e| self.engines[e].has_queue_capacity())
+                .find(|&e| self.engines[e].accepting())
                 .unwrap_or(start),
             RoutePolicy::LeastLoaded => start,
         };
@@ -217,11 +223,40 @@ mod tests {
         // Now every queue is full: the error surfaces only after the
         // whole ring rejected, and the cursor stays put for the retry.
         let err = r.submit(vec![3], SamplingParams::greedy(2)).unwrap_err();
-        assert!(err.contains("queue full"), "{err}");
+        assert_eq!(err, SubmitError::QueueFull { limit: 1 });
+        assert!(err.to_string().contains("queue full"), "{err}");
         // Drain; the next success lands on engine 0, whose turn it still is.
         r.run_to_completion(1_000).unwrap();
         let gid = r.submit(vec![4], SamplingParams::greedy(2)).unwrap();
         assert_eq!(gid.engine, 0);
+    }
+
+    #[test]
+    fn shedding_engine_fails_over_like_a_full_queue() {
+        use crate::coordinator::admission::AdmissionConfig;
+        // Engine 0: tiny pool + admission control → one big submission
+        // latches it into load shedding. Engine 1: roomy and open.
+        let small = Engine::new(
+            MockBackend::with_blocks(5, 4, 4),
+            EngineConfig {
+                admission_ctl: Some(AdmissionConfig::default()),
+                ..Default::default()
+            },
+        );
+        let big = Engine::new(MockBackend::new(), EngineConfig::default());
+        let mut r = Router::new(vec![small, big], RoutePolicy::RoundRobin);
+        // 2 prompt + 14 generated = 16 tokens = 4 blocks on a 4-data-block
+        // pool → occupancy 1.0 ≥ high watermark → reject + latch.
+        assert!(r.engine_mut(0).submit(vec![1, 2], SamplingParams::greedy(14)).is_err());
+        assert!(r.engine(0).is_shedding());
+        assert!(!r.engine(0).accepting());
+        // The ring's cursor points at the shedding engine; submissions
+        // must fail over to engine 1 instead of being shed.
+        for i in 0..3 {
+            let gid = r.submit(vec![i + 1], SamplingParams::greedy(2)).unwrap();
+            assert_eq!(gid.engine, 1, "submission {i} must avoid the shedding engine");
+        }
+        assert_eq!(r.routed, vec![0, 3]);
     }
 
     #[test]

@@ -14,6 +14,7 @@
 use std::collections::HashMap;
 
 use crate::pool::{FreeMask, PoolHandle, PooledVec, SnapError, SnapReader, SnapWriter};
+use crate::testkit::fault;
 
 /// The paper's fixed-size pool over block *indices* (§IV adapted to
 /// device-resident blocks). O(1) allocate/free, lazy initialisation,
@@ -262,6 +263,9 @@ impl BlockAllocator {
 pub struct SeqCache {
     pub blocks: PooledVec<u32>,
     pub tokens: u32,
+    /// Owning tenant — the key the manager charges this sequence's
+    /// blocks against in its per-tenant accounting.
+    pub tenant: u32,
 }
 
 impl SeqCache {
@@ -305,6 +309,62 @@ impl std::fmt::Display for CacheError {
     }
 }
 
+/// Block-quota limits for one tenant. `None` = unlimited.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TenantQuota {
+    /// Soft cap: exceeding it makes this tenant's youngest sequence the
+    /// preferred preemption victim under pressure (isolation without
+    /// hard failure).
+    pub soft: Option<u32>,
+    /// Hard cap: submits whose worst case would push committed blocks
+    /// past this are rejected outright.
+    pub hard: Option<u32>,
+}
+
+/// Per-tenant quota table. Tenants not listed fall back to the
+/// defaults; with `strict` set, unlisted tenants are rejected at submit
+/// instead.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct TenantQuotas {
+    pub default_soft: Option<u32>,
+    pub default_hard: Option<u32>,
+    /// Explicit per-tenant overrides, sorted lookups not needed — the
+    /// table is tiny and read at submit/preempt time only.
+    pub per_tenant: Vec<(u32, TenantQuota)>,
+    /// Reject tenants without an explicit entry (`UnknownTenant`).
+    pub strict: bool,
+}
+
+impl TenantQuotas {
+    /// Builder-style: set `tenant`'s quota entry.
+    pub fn tenant(mut self, tenant: u32, soft: Option<u32>, hard: Option<u32>) -> Self {
+        if let Some(e) = self.per_tenant.iter_mut().find(|(t, _)| *t == tenant) {
+            e.1 = TenantQuota { soft, hard };
+        } else {
+            self.per_tenant.push((tenant, TenantQuota { soft, hard }));
+        }
+        self
+    }
+
+    pub fn is_known(&self, tenant: u32) -> bool {
+        self.per_tenant.iter().any(|(t, _)| *t == tenant)
+    }
+
+    pub fn soft_for(&self, tenant: u32) -> Option<u32> {
+        self.per_tenant
+            .iter()
+            .find(|(t, _)| *t == tenant)
+            .map_or(self.default_soft, |(_, q)| q.soft)
+    }
+
+    pub fn hard_for(&self, tenant: u32) -> Option<u32> {
+        self.per_tenant
+            .iter()
+            .find(|(t, _)| *t == tenant)
+            .map_or(self.default_hard, |(_, q)| q.hard)
+    }
+}
+
 /// The KV-cache manager: allocator + per-sequence tables. Per-sequence
 /// block tables are pool-backed through a [`PoolHandle`] — the serving
 /// engine passes its shared [`crate::pool::ShardedMultiPool`] handle so
@@ -313,6 +373,12 @@ pub struct KvCacheManager {
     alloc: BlockAllocator,
     seqs: HashMap<u64, SeqCache>,
     pool: PoolHandle,
+    /// Blocks currently held per tenant. Invariant (tested):
+    /// `sum(values) == alloc.num_used()` at every quiescent point.
+    tenant_blocks: HashMap<u32, u32>,
+    /// Quota table the engine consults for hard rejects and soft
+    /// preemption-victim choice.
+    pub quotas: TenantQuotas,
     pub block_tokens: u32,
     pub max_blocks_per_seq: usize,
     /// Reserved scratch block (the model routes padding writes here); never
@@ -351,6 +417,8 @@ impl KvCacheManager {
             alloc,
             seqs: HashMap::new(),
             pool,
+            tenant_blocks: HashMap::new(),
+            quotas: TenantQuotas::default(),
             block_tokens,
             max_blocks_per_seq,
             scratch_block,
@@ -368,11 +436,26 @@ impl KvCacheManager {
         self.blocks_for(tokens) <= self.alloc.num_free()
     }
 
-    /// Register a sequence and allocate blocks for its prompt.
+    /// Register a sequence and allocate blocks for its prompt (default
+    /// tenant 0 — single-tenant callers).
     pub fn create_seq(&mut self, seq_id: u64, prompt_tokens: u32) -> Result<(), CacheError> {
+        self.create_seq_for_tenant(seq_id, prompt_tokens, 0)
+    }
+
+    /// Register a sequence for `tenant` and allocate blocks for its
+    /// prompt, charging the tenant's block account.
+    pub fn create_seq_for_tenant(
+        &mut self,
+        seq_id: u64,
+        prompt_tokens: u32,
+        tenant: u32,
+    ) -> Result<(), CacheError> {
         let needed = self.blocks_for(prompt_tokens).max(1);
         if needed as usize > self.max_blocks_per_seq {
             return Err(CacheError::ContextOverflow);
+        }
+        if fault::should_fail("kv.create_seq") {
+            return Err(CacheError::OutOfBlocks { needed, free: 0 });
         }
         if needed > self.alloc.num_free() {
             return Err(CacheError::OutOfBlocks { needed, free: self.alloc.num_free() });
@@ -383,7 +466,8 @@ impl KvCacheManager {
         for _ in 0..needed {
             blocks.push(self.alloc.allocate().expect("checked free count"));
         }
-        self.seqs.insert(seq_id, SeqCache { blocks, tokens: prompt_tokens });
+        self.seqs.insert(seq_id, SeqCache { blocks, tokens: prompt_tokens, tenant });
+        *self.tenant_blocks.entry(tenant).or_insert(0) += needed;
         self.peak_used = self.peak_used.max(self.alloc.num_used());
         Ok(())
     }
@@ -405,11 +489,16 @@ impl KvCacheManager {
             return Err(CacheError::ContextOverflow);
         }
         if needs_block {
+            if fault::should_fail("kv.append_block") {
+                return Err(CacheError::OutOfBlocks { needed: 1, free: 0 });
+            }
             let blk = self
                 .alloc
                 .allocate()
                 .ok_or(CacheError::OutOfBlocks { needed: 1, free: 0 })?;
-            self.seqs.get_mut(&seq_id).unwrap().blocks.push(blk);
+            let seq = self.seqs.get_mut(&seq_id).unwrap();
+            seq.blocks.push(blk);
+            *self.tenant_blocks.entry(seq.tenant).or_insert(0) += 1;
         }
         self.seqs.get_mut(&seq_id).unwrap().tokens += 1;
         self.peak_used = self.peak_used.max(self.alloc.num_used());
@@ -423,6 +512,12 @@ impl KvCacheManager {
         let n = seq.blocks.len() as u32;
         for &b in seq.blocks.iter() {
             self.alloc.free(b);
+        }
+        if let Some(held) = self.tenant_blocks.get_mut(&seq.tenant) {
+            *held = held.saturating_sub(n);
+            if *held == 0 {
+                self.tenant_blocks.remove(&seq.tenant);
+            }
         }
         Ok(n)
     }
@@ -448,6 +543,34 @@ impl KvCacheManager {
 
     pub fn num_free_blocks(&self) -> u32 {
         self.alloc.num_free()
+    }
+
+    /// Data-block capacity (excludes the reserved scratch block).
+    pub fn num_data_blocks(&self) -> u32 {
+        self.alloc.num_blocks()
+    }
+
+    pub fn num_used_blocks(&self) -> u32 {
+        self.alloc.num_used()
+    }
+
+    /// Blocks currently held by `tenant`.
+    pub fn tenant_held_blocks(&self, tenant: u32) -> u32 {
+        self.tenant_blocks.get(&tenant).copied().unwrap_or(0)
+    }
+
+    /// `(tenant, held_blocks)` pairs, sorted by tenant id (deterministic
+    /// for metrics dumps).
+    pub fn tenant_usage(&self) -> Vec<(u32, u32)> {
+        let mut v: Vec<(u32, u32)> = self.tenant_blocks.iter().map(|(&t, &n)| (t, n)).collect();
+        v.sort_unstable_by_key(|&(t, _)| t);
+        v
+    }
+
+    /// Sum of all tenants' held blocks. Conservation invariant: equals
+    /// [`Self::num_used_blocks`] at every quiescent point.
+    pub fn tenant_blocks_total(&self) -> u32 {
+        self.tenant_blocks.values().sum()
     }
 
     pub fn num_seqs(&self) -> usize {
@@ -561,6 +684,7 @@ impl KvCacheManager {
             let s = &self.seqs[&id];
             w.put_u64(id);
             w.put_u32(s.tokens);
+            w.put_u32(s.tenant);
             w.put_u32(s.blocks.len() as u32);
             for &b in s.blocks.iter() {
                 w.put_u32(b);
@@ -594,9 +718,11 @@ impl KvCacheManager {
         let free = alloc.free_mask();
         let mut owned = FreeMask::new(alloc.num_blocks() as usize);
         let mut seqs = HashMap::with_capacity(n_seqs as usize);
+        let mut tenant_blocks: HashMap<u32, u32> = HashMap::new();
         for _ in 0..n_seqs {
             let id = r.u64()?;
             let tokens = r.u32()?;
+            let tenant = r.u32()?;
             let n_blocks = r.u32()?;
             if n_blocks as usize > max_blocks_per_seq {
                 return Err(SnapError::Corrupt("sequence exceeds max_blocks_per_seq"));
@@ -618,17 +744,25 @@ impl KvCacheManager {
                 owned.mark(b);
                 blocks.push(b);
             }
-            if seqs.insert(id, SeqCache { blocks, tokens }).is_some() {
+            if n_blocks > 0 {
+                *tenant_blocks.entry(tenant).or_insert(0) += n_blocks;
+            }
+            if seqs.insert(id, SeqCache { blocks, tokens, tenant }).is_some() {
                 return Err(SnapError::Corrupt("duplicate sequence id"));
             }
         }
         if owned.marked() as u32 != alloc.num_used() {
             return Err(SnapError::Corrupt("allocated blocks not owned by any sequence"));
         }
+        // Quotas are policy, not cache state: the engine snapshot carries
+        // them and re-installs after restore; standalone restores get the
+        // permissive default.
         Ok(Self {
             alloc,
             seqs,
             pool,
+            tenant_blocks,
+            quotas: TenantQuotas::default(),
             block_tokens,
             max_blocks_per_seq,
             scratch_block,
@@ -859,6 +993,81 @@ mod tests {
     }
 
     #[test]
+    fn tenant_accounting_conserves_blocks() {
+        let mut m = mgr();
+        m.create_seq_for_tenant(1, 32, 7).unwrap(); // 2 blocks
+        m.create_seq_for_tenant(2, 16, 7).unwrap(); // 1 block
+        m.create_seq_for_tenant(3, 16, 9).unwrap(); // 1 block
+        m.create_seq(4, 16).unwrap(); // tenant 0, 1 block
+        assert_eq!(m.tenant_held_blocks(7), 3);
+        assert_eq!(m.tenant_held_blocks(9), 1);
+        assert_eq!(m.tenant_held_blocks(0), 1);
+        assert_eq!(m.tenant_usage(), vec![(0, 1), (7, 3), (9, 1)]);
+        assert_eq!(m.tenant_blocks_total(), m.num_used_blocks());
+        // Boundary growth charges the owning tenant (17th token of seq 2
+        // opens its second block).
+        m.append_token(2).unwrap();
+        assert_eq!(m.tenant_held_blocks(7), 4);
+        assert_eq!(m.tenant_blocks_total(), m.num_used_blocks());
+        // Freeing uncharges; empty accounts vanish from the usage dump.
+        m.free_seq(3).unwrap();
+        assert_eq!(m.tenant_held_blocks(9), 0);
+        assert_eq!(m.tenant_usage(), vec![(0, 1), (7, 4)]);
+        m.free_seq(1).unwrap();
+        m.free_seq(2).unwrap();
+        m.free_seq(4).unwrap();
+        assert_eq!(m.tenant_blocks_total(), 0);
+        assert_eq!(m.num_used_blocks(), 0);
+    }
+
+    #[test]
+    fn tenant_accounting_survives_snapshot_and_compaction() {
+        let mut m = mgr();
+        m.create_seq_for_tenant(1, 32, 3).unwrap();
+        m.create_seq_for_tenant(2, 32, 5).unwrap();
+        m.create_seq_for_tenant(3, 32, 3).unwrap();
+        m.free_seq(2).unwrap(); // scatter live blocks
+        m.compact(4); // moves rewrite tables, not ownership
+        assert_eq!(m.tenant_held_blocks(3), 4);
+        assert_eq!(m.tenant_blocks_total(), m.num_used_blocks());
+
+        let mut w = SnapWriter::new();
+        m.snapshot_into(&mut w);
+        let bytes = w.into_bytes();
+        let restored =
+            KvCacheManager::restore_from(&mut SnapReader::new(&bytes), PoolHandle::system())
+                .unwrap();
+        assert_eq!(restored.seq(1).unwrap().tenant, 3);
+        assert_eq!(restored.seq(3).unwrap().tenant, 3);
+        assert_eq!(restored.tenant_held_blocks(3), 4);
+        assert_eq!(restored.tenant_blocks_total(), restored.num_used_blocks());
+    }
+
+    #[test]
+    fn quota_table_lookup_rules() {
+        let q = TenantQuotas {
+            default_soft: Some(8),
+            default_hard: None,
+            ..Default::default()
+        }
+        .tenant(1, Some(2), Some(4))
+        .tenant(2, None, None);
+        assert_eq!(q.soft_for(1), Some(2));
+        assert_eq!(q.hard_for(1), Some(4));
+        // An explicit entry overrides the defaults even with None.
+        assert_eq!(q.soft_for(2), None);
+        assert_eq!(q.hard_for(2), None);
+        // Unlisted tenants fall back to the defaults.
+        assert_eq!(q.soft_for(3), Some(8));
+        assert_eq!(q.hard_for(3), None);
+        assert!(q.is_known(1) && q.is_known(2) && !q.is_known(3));
+        // Re-setting a tenant replaces its entry in place.
+        let q = q.tenant(1, None, Some(16));
+        assert_eq!(q.hard_for(1), Some(16));
+        assert_eq!(q.per_tenant.iter().filter(|(t, _)| *t == 1).count(), 1);
+    }
+
+    #[test]
     fn can_admit_matches_create() {
         let mut m = mgr();
         for id in 0..7 {
@@ -1058,6 +1267,7 @@ mod tests {
             for &(id, tokens, blocks) in seqs {
                 w.put_u64(id);
                 w.put_u32(tokens);
+                w.put_u32(0); // tenant
                 w.put_u32(blocks.len() as u32);
                 for &b in blocks {
                     w.put_u32(b);

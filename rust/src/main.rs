@@ -81,6 +81,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
             Admission::Optimistic
         },
         policy: if cfg.policy == "sjf" { Policy::Sjf } else { Policy::Fcfs },
+        ..Default::default()
     };
     let mut engine = Engine::new(backend, engine_cfg);
 

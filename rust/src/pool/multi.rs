@@ -44,6 +44,7 @@ use super::magazine::{MagazinePool, DEFAULT_MAG_DEPTH};
 use super::placement::{ShardPlacement, StealAware};
 use super::sharded::default_shards;
 use super::stats::{MagazineStats, ShardedPoolStats, SpillStats};
+use crate::testkit::fault;
 use crate::util::align::{align_up, next_pow2};
 
 /// Alignment every class pool is built at (and the strictest request
@@ -581,9 +582,15 @@ impl ShardedMultiPool {
     pub fn allocate(&self, size: usize) -> Option<(NonNull<u8>, Origin)> {
         match self.class_of(size) {
             Some(ci) => {
-                if let Some(p) = self.classes[ci].allocate() {
-                    self.hits[ci].fetch_add(1, Ordering::Relaxed);
-                    return Some((p, Origin::Pool(ci)));
+                // Failpoint: simulate an empty class free list, forcing
+                // the exhausted/spill/fallback path (compiles to nothing
+                // without the `failpoints` feature).
+                let class_starved = fault::should_fail("pool.class_exhausted");
+                if !class_starved {
+                    if let Some(p) = self.classes[ci].allocate() {
+                        self.hits[ci].fetch_add(1, Ordering::Relaxed);
+                        return Some((p, Origin::Pool(ci)));
+                    }
                 }
                 self.exhausted[ci].fetch_add(1, Ordering::Relaxed);
                 let top =

@@ -1,0 +1,332 @@
+//! Deterministic fault injection: seeded failpoints plus a faulty
+//! backend wrapper.
+//!
+//! Production code is instrumented at a handful of named *sites* (KV
+//! block allocation, pool class exhaustion, backend steps, snapshot
+//! decode) with a single call: `if fault::should_fail("kv.append_block")
+//! { return Err(...) }`. A test installs a [`FaultPlan`] — "fire at the
+//! Nth hit of this site" — and the plan decides, deterministically,
+//! which hits fail. With the `failpoints` cargo feature off,
+//! [`should_fail`] compiles to a literal `false` and every site
+//! optimizes away; with it on but no plan installed, the cost is one
+//! relaxed atomic load.
+//!
+//! The registry is **thread-local**: a plan installed on the test thread
+//! only affects code running on that thread, so parallel tests never
+//! interfere. The global [`ARMED`] counter exists only to keep the
+//! unarmed fast path cheap for every other thread.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::coordinator::backend::{Backend, BackendGeometry};
+use crate::util::Rng;
+
+/// Number of installed plans across all threads. Zero means
+/// [`should_fail`] returns without touching thread-local storage.
+static ARMED: AtomicUsize = AtomicUsize::new(0);
+
+/// One scheduled fault: fire at hits `[from_hit, from_hit + count)` of
+/// `site` (1-based hit numbering).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct Trigger {
+    site: &'static str,
+    from_hit: u64,
+    count: u64,
+}
+
+/// Per-site outcome of a plan, read back via [`FaultGuard::report`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SiteReport {
+    pub site: &'static str,
+    /// Times the site was evaluated while the plan was installed.
+    pub hits: u64,
+    /// Times it actually fired.
+    pub fired: u64,
+}
+
+struct Registry {
+    triggers: Vec<Trigger>,
+    hits: BTreeMap<&'static str, u64>,
+    fired: BTreeMap<&'static str, u64>,
+}
+
+thread_local! {
+    static REGISTRY: RefCell<Option<Registry>> = const { RefCell::new(None) };
+}
+
+/// A deterministic schedule of faults. Build one, [`install`] it, run
+/// the scenario, then drop the guard (or read its report first).
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    triggers: Vec<Trigger>,
+}
+
+impl FaultPlan {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fire exactly once, at the `nth` hit (1-based) of `site`.
+    pub fn fail_nth(mut self, site: &'static str, nth: u64) -> Self {
+        assert!(nth >= 1, "hit numbering is 1-based");
+        self.triggers.push(Trigger { site, from_hit: nth, count: 1 });
+        self
+    }
+
+    /// Fire on `count` consecutive hits starting at `from_hit` (1-based).
+    pub fn fail_range(mut self, site: &'static str, from_hit: u64, count: u64) -> Self {
+        assert!(from_hit >= 1, "hit numbering is 1-based");
+        self.triggers.push(Trigger { site, from_hit, count });
+        self
+    }
+
+    /// Seeded random plan: `faults` single-shot triggers spread over
+    /// `sites`, each at a hit in `[1, max_hit]`. Same seed, same plan.
+    pub fn random(seed: u64, sites: &[&'static str], faults: usize, max_hit: u64) -> Self {
+        assert!(!sites.is_empty() && max_hit >= 1);
+        let mut rng = Rng::new(seed ^ 0xfa17_0000_0000_0000);
+        let mut plan = Self::new();
+        for _ in 0..faults {
+            let site = sites[rng.gen_usize(0, sites.len())];
+            plan = plan.fail_nth(site, 1 + rng.gen_range(max_hit));
+        }
+        plan
+    }
+
+    /// Install the plan on the current thread. Panics if a plan is
+    /// already installed — nested plans are a test bug, not a feature.
+    pub fn install(self) -> FaultGuard {
+        REGISTRY.with(|r| {
+            let mut slot = r.borrow_mut();
+            assert!(slot.is_none(), "a FaultPlan is already installed on this thread");
+            *slot = Some(Registry {
+                triggers: self.triggers,
+                hits: BTreeMap::new(),
+                fired: BTreeMap::new(),
+            });
+        });
+        ARMED.fetch_add(1, Ordering::Relaxed);
+        FaultGuard { _priv: () }
+    }
+}
+
+/// RAII guard for an installed plan; uninstalls on drop.
+pub struct FaultGuard {
+    _priv: (),
+}
+
+impl FaultGuard {
+    /// Per-site hit/fire counts so far, sorted by site name.
+    pub fn report(&self) -> Vec<SiteReport> {
+        REGISTRY.with(|r| {
+            let slot = r.borrow();
+            let reg = slot.as_ref().expect("guard alive implies registry installed");
+            reg.hits
+                .iter()
+                .map(|(&site, &hits)| SiteReport {
+                    site,
+                    hits,
+                    fired: reg.fired.get(site).copied().unwrap_or(0),
+                })
+                .collect()
+        })
+    }
+}
+
+impl Drop for FaultGuard {
+    fn drop(&mut self) {
+        REGISTRY.with(|r| r.borrow_mut().take());
+        ARMED.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Should the named site fail right now? Production call sites use this
+/// directly; it counts a hit and consults the installed plan, if any.
+#[cfg(feature = "failpoints")]
+pub fn should_fail(site: &'static str) -> bool {
+    if ARMED.load(Ordering::Relaxed) == 0 {
+        return false;
+    }
+    REGISTRY.with(|r| {
+        let mut slot = r.borrow_mut();
+        let Some(reg) = slot.as_mut() else { return false };
+        let hit = reg.hits.entry(site).or_insert(0);
+        *hit += 1;
+        let hit = *hit;
+        let fire = reg
+            .triggers
+            .iter()
+            .any(|t| t.site == site && hit >= t.from_hit && hit < t.from_hit + t.count);
+        if fire {
+            *reg.fired.entry(site).or_insert(0) += 1;
+        }
+        fire
+    })
+}
+
+/// Feature-off stub: a literal `false` the optimizer deletes, so
+/// instrumented sites carry zero cost in production builds.
+#[cfg(not(feature = "failpoints"))]
+#[inline(always)]
+pub fn should_fail(_site: &'static str) -> bool {
+    false
+}
+
+// ---------------------------------------------------------------------------
+// FaultyBackend
+// ---------------------------------------------------------------------------
+
+/// [`Backend`] decorator that fails scheduled prefill/decode calls
+/// (1-based call indices), composing with registry-driven faults at the
+/// `backend.prefill` / `backend.decode` sites. Deterministic: call
+/// indices depend only on the engine's step sequence.
+pub struct FaultyBackend<B: Backend> {
+    inner: B,
+    prefill_seen: u64,
+    decode_seen: u64,
+    fail_prefill_calls: Vec<u64>,
+    fail_decode_calls: Vec<u64>,
+}
+
+impl<B: Backend> FaultyBackend<B> {
+    pub fn new(inner: B) -> Self {
+        Self {
+            inner,
+            prefill_seen: 0,
+            decode_seen: 0,
+            fail_prefill_calls: Vec::new(),
+            fail_decode_calls: Vec::new(),
+        }
+    }
+
+    /// Schedule the `nth` prefill call (1-based) to fail.
+    pub fn fail_prefill_at(mut self, nth: u64) -> Self {
+        self.fail_prefill_calls.push(nth);
+        self
+    }
+
+    /// Schedule the `nth` decode call (1-based) to fail.
+    pub fn fail_decode_at(mut self, nth: u64) -> Self {
+        self.fail_decode_calls.push(nth);
+        self
+    }
+
+    pub fn inner(&self) -> &B {
+        &self.inner
+    }
+}
+
+impl<B: Backend> Backend for FaultyBackend<B> {
+    fn geometry(&self) -> BackendGeometry {
+        self.inner.geometry()
+    }
+
+    fn prefill(
+        &mut self,
+        batch: usize,
+        tokens: &[i32],
+        lens: &[i32],
+        tables: &[i32],
+        logits: &mut [f32],
+    ) -> Result<(), String> {
+        self.prefill_seen += 1;
+        if self.fail_prefill_calls.contains(&self.prefill_seen) {
+            return Err(format!("injected prefill failure at call {}", self.prefill_seen));
+        }
+        if should_fail("backend.prefill") {
+            return Err("failpoint backend.prefill".into());
+        }
+        self.inner.prefill(batch, tokens, lens, tables, logits)
+    }
+
+    fn decode(
+        &mut self,
+        batch: usize,
+        tokens: &[i32],
+        lens: &[i32],
+        tables: &[i32],
+        logits: &mut [f32],
+    ) -> Result<(), String> {
+        self.decode_seen += 1;
+        if self.fail_decode_calls.contains(&self.decode_seen) {
+            return Err(format!("injected decode failure at call {}", self.decode_seen));
+        }
+        if should_fail("backend.decode") {
+            return Err("failpoint backend.decode".into());
+        }
+        self.inner.decode(batch, tokens, lens, tables, logits)
+    }
+
+    fn supports_block_moves(&self) -> bool {
+        self.inner.supports_block_moves()
+    }
+
+    fn apply_block_moves(&mut self, moves: &[(u32, u32)]) {
+        self.inner.apply_block_moves(moves)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::MockBackend;
+
+    #[test]
+    #[cfg(feature = "failpoints")]
+    fn plan_fires_at_exact_hits_and_uninstalls() {
+        assert!(!should_fail("t.site"), "no plan installed yet");
+        {
+            let guard = FaultPlan::new()
+                .fail_nth("t.site", 2)
+                .fail_range("t.other", 1, 3)
+                .install();
+            assert!(!should_fail("t.site")); // hit 1
+            assert!(should_fail("t.site")); // hit 2 fires
+            assert!(!should_fail("t.site")); // hit 3
+            for _ in 0..3 {
+                assert!(should_fail("t.other"));
+            }
+            assert!(!should_fail("t.other")); // range exhausted
+            let report = guard.report();
+            assert_eq!(
+                report,
+                vec![
+                    SiteReport { site: "t.other", hits: 4, fired: 3 },
+                    SiteReport { site: "t.site", hits: 3, fired: 1 },
+                ]
+            );
+        }
+        // Guard dropped: registry is gone.
+        assert!(!should_fail("t.site"));
+    }
+
+    #[test]
+    #[cfg(feature = "failpoints")]
+    fn random_plans_are_seed_deterministic() {
+        let sites: &[&'static str] = &["a", "b", "c"];
+        let p1 = FaultPlan::random(7, sites, 5, 100);
+        let p2 = FaultPlan::random(7, sites, 5, 100);
+        assert_eq!(p1.triggers, p2.triggers);
+        let p3 = FaultPlan::random(8, sites, 5, 100);
+        assert_ne!(p1.triggers, p3.triggers);
+        for t in &p1.triggers {
+            assert!(t.from_hit >= 1 && t.from_hit <= 100);
+        }
+    }
+
+    #[test]
+    fn faulty_backend_fails_scheduled_calls_only() {
+        let mut fb = FaultyBackend::new(MockBackend::new()).fail_decode_at(2).fail_prefill_at(1);
+        let geo = fb.geometry();
+        let mut logits = vec![0.0f32; geo.vocab];
+        let mut toks = vec![0i32; geo.prefill_len];
+        toks[0] = 5;
+        assert!(fb.prefill(1, &toks, &[1], &[], &mut logits).is_err());
+        assert!(fb.prefill(1, &toks, &[1], &[], &mut logits).is_ok());
+        assert!(fb.decode(1, &[1], &[2], &[], &mut logits).is_ok());
+        assert!(fb.decode(1, &[1], &[3], &[], &mut logits).is_err());
+        assert!(fb.decode(1, &[1], &[3], &[], &mut logits).is_ok());
+    }
+}

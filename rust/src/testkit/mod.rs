@@ -5,6 +5,7 @@
 //! inputs. Used by `rust/tests/prop_*.rs` for the coordinator/pool
 //! invariants the task calls for.
 
+pub mod fault;
 pub mod model_scenarios;
 pub mod skew;
 

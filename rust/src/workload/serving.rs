@@ -27,6 +27,13 @@ pub struct ServingConfig {
     pub decode_len: (u32, u32),
     /// Tokens per KV block (the pool's block granularity).
     pub block_tokens: u32,
+    /// Number of tenants requests are attributed to (1 = single-tenant;
+    /// tenant ids are `0..tenants`).
+    pub tenants: u32,
+    /// Probability an arrival belongs to tenant 0 (the "heavy" tenant);
+    /// the remainder is uniform over tenants `1..tenants`. 0.0 = uniform
+    /// over all tenants. Ignored when `tenants <= 1`.
+    pub tenant_skew: f64,
 }
 
 impl Default for ServingConfig {
@@ -37,6 +44,8 @@ impl Default for ServingConfig {
             prompt_len: (16, 256),
             decode_len: (16, 128),
             block_tokens: 16,
+            tenants: 1,
+            tenant_skew: 0.0,
         }
     }
 }
@@ -47,6 +56,8 @@ pub struct RequestSpec {
     pub arrival_step: u32,
     pub prompt_len: u32,
     pub decode_len: u32,
+    /// Owning tenant (0 when the workload is single-tenant).
+    pub tenant: u32,
 }
 
 /// Derived statistics.
@@ -81,7 +92,21 @@ pub fn generate(cfg: ServingConfig, seed: u64) -> (Trace, Vec<RequestSpec>, Serv
                 cfg.prompt_len.0 + rng.gen_range((cfg.prompt_len.1 - cfg.prompt_len.0 + 1) as u64) as u32;
             let decode =
                 cfg.decode_len.0 + rng.gen_range((cfg.decode_len.1 - cfg.decode_len.0 + 1) as u64) as u32;
-            specs.push(RequestSpec { arrival_step: step, prompt_len: prompt, decode_len: decode });
+            let tenant = if cfg.tenants <= 1 {
+                0
+            } else if cfg.tenant_skew > 0.0 && rng.gen_bool(cfg.tenant_skew) {
+                0
+            } else if cfg.tenant_skew > 0.0 {
+                1 + rng.gen_range(u64::from(cfg.tenants - 1)) as u32
+            } else {
+                rng.gen_range(u64::from(cfg.tenants)) as u32
+            };
+            specs.push(RequestSpec {
+                arrival_step: step,
+                prompt_len: prompt,
+                decode_len: decode,
+                tenant,
+            });
             stats.requests += 1;
             // Prefill: allocate ceil(prompt / block_tokens) blocks.
             let nblocks = prompt.div_ceil(cfg.block_tokens);
@@ -159,6 +184,7 @@ mod tests {
             prompt_len: (33, 33),
             decode_len: (5, 5),
             block_tokens: 16,
+            ..Default::default()
         };
         let (t, specs, _) = generate(cfg, 5);
         if let Some(spec) = specs.first() {
@@ -179,6 +205,31 @@ mod tests {
         let (b, sb, _) = generate(ServingConfig::default(), 2);
         assert_eq!(a.ops, b.ops);
         assert_eq!(sa, sb);
+    }
+
+    #[test]
+    fn tenant_assignment_respects_skew() {
+        // Single-tenant: everything is tenant 0.
+        let (_, specs, _) = generate(ServingConfig::default(), 4);
+        assert!(specs.iter().all(|s| s.tenant == 0));
+        // Skewed 3-tenant mix: tenant 0 dominates, others appear.
+        let cfg = ServingConfig { tenants: 3, tenant_skew: 0.8, ..Default::default() };
+        let (_, specs, _) = generate(cfg, 4);
+        let count = |t: u32| specs.iter().filter(|s| s.tenant == t).count();
+        assert!(specs.iter().all(|s| s.tenant < 3));
+        assert!(count(0) > specs.len() / 2, "heavy tenant should dominate");
+        assert!(count(1) + count(2) > 0, "light tenants must still appear");
+        // Uniform mix: no tenant takes a majority.
+        let cfg = ServingConfig { tenants: 4, ..Default::default() };
+        let (_, specs, _) = generate(cfg, 9);
+        for t in 0..4 {
+            assert!(count_of(&specs, t) > 0, "tenant {t} unused");
+            assert!(count_of(&specs, t) < specs.len() * 2 / 3, "tenant {t} dominates");
+        }
+    }
+
+    fn count_of(specs: &[RequestSpec], t: u32) -> usize {
+        specs.iter().filter(|s| s.tenant == t).count()
     }
 
     #[test]

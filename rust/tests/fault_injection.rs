@@ -1,0 +1,339 @@
+//! Deterministic fault-injection suite (acceptance leg of the
+//! exhaustion-safe serving work): every scripted [`FaultPlan`] runs the
+//! engine through allocator, KV, backend and snapshot failures and
+//! asserts two global invariants —
+//!
+//! 1. the engine **never panics** (each scenario runs under
+//!    `catch_unwind`; the count is written out and asserted zero), and
+//! 2. every admitted request reaches a **terminal state** with exactly
+//!    the tokens the deterministic MockBackend would have produced
+//!    without faults (retry/replay must be byte-exact, not just "some
+//!    output").
+//!
+//! Scenarios share one `#[test]` on purpose: fault plans are
+//! thread-local, so running them sequentially on the test thread keeps
+//! installs race-free, and the aggregated per-site hit/fire matrix is
+//! written to `bench_out/fault_matrix.json` for CI's jq gate (every
+//! site fired at least once, zero panics).
+
+#![cfg(feature = "failpoints")]
+
+use std::collections::BTreeMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use fastpool::coordinator::{
+    AdmissionConfig, Engine, EngineConfig, FinishReason, MockBackend, SamplingParams,
+};
+use fastpool::kvcache::TenantQuotas;
+use fastpool::pool::PoolHandle;
+use fastpool::testkit::fault::{FaultPlan, FaultyBackend, SiteReport};
+use fastpool::util::json::{self, Json};
+
+/// Every instrumented site; the matrix must show each fired ≥ 1.
+const SITES: [&str; 6] = [
+    "kv.create_seq",
+    "kv.append_block",
+    "pool.class_exhausted",
+    "backend.prefill",
+    "backend.decode",
+    "snapshot.decode",
+];
+
+/// Tokens the mock backend produces for `prompt` — the ground truth a
+/// faulted run must still match exactly after retries and replays.
+fn mock_expect(prompt: &[i32], n: usize) -> Vec<i32> {
+    let mut out = Vec::new();
+    let mut prev = *prompt.last().unwrap();
+    let mut total = prompt.len() as u32;
+    for _ in 0..n {
+        let t = MockBackend::next_token(prev, total);
+        out.push(t);
+        prev = t;
+        total += 1;
+    }
+    out
+}
+
+struct Matrix {
+    panics: u64,
+    scenarios: Vec<&'static str>,
+    /// site → (hits, fired), summed across scenarios.
+    sites: BTreeMap<&'static str, (u64, u64)>,
+}
+
+impl Matrix {
+    fn run(&mut self, name: &'static str, f: impl FnOnce() -> Vec<SiteReport>) {
+        self.scenarios.push(name);
+        match catch_unwind(AssertUnwindSafe(f)) {
+            Ok(reports) => {
+                for r in reports {
+                    let e = self.sites.entry(r.site).or_insert((0, 0));
+                    e.0 += r.hits;
+                    e.1 += r.fired;
+                }
+            }
+            Err(_) => self.panics += 1,
+        }
+    }
+}
+
+/// KV block allocation fails three times mid-decode: the engine eats
+/// the exhaustion (preempt + replay), never panics, and both requests
+/// still finish with exact tokens.
+fn exhaustion_mid_decode() -> Vec<SiteReport> {
+    let guard = FaultPlan::new().fail_range("kv.append_block", 1, 3).install();
+    // 8 data blocks of 4 tokens; two 12-token requests fit (3 blocks
+    // each), so every failure is injected, not organic.
+    let mut e = Engine::new(MockBackend::with_blocks(9, 4, 4), EngineConfig::default());
+    e.submit(vec![1, 2], SamplingParams::greedy(10)).unwrap();
+    e.submit(vec![3, 4], SamplingParams::greedy(10)).unwrap();
+    let mut outs = e.run_to_completion(100_000).unwrap();
+    outs.sort_by_key(|o| o.id);
+    assert_eq!(outs.len(), 2);
+    for (o, p) in outs.iter().zip([[1, 2], [3, 4]]) {
+        assert_eq!(o.finish, FinishReason::Length, "req {}", o.id);
+        assert_eq!(o.tokens, mock_expect(&p, 10), "req {}", o.id);
+    }
+    assert!(e.metrics.counter("pool_exhaustion_events").get() >= 1);
+    assert_eq!(e.kv.num_used_blocks(), 0, "all blocks returned");
+    assert_eq!(e.kv.tenant_blocks_total(), 0);
+    guard.report()
+}
+
+/// Sequence registration fails for both lanes of the first prefill
+/// batch (simulating a plan/allocation race): the lanes are un-admitted
+/// with one retry charged, requeued, and complete exactly on the next
+/// attempt.
+fn admission_races_create_seq() -> Vec<SiteReport> {
+    let guard =
+        FaultPlan::new().fail_nth("kv.create_seq", 1).fail_nth("kv.create_seq", 2).install();
+    let mut e = Engine::new(MockBackend::new(), EngineConfig::default());
+    e.submit(vec![1, 2], SamplingParams::greedy(8)).unwrap();
+    e.submit(vec![3, 4], SamplingParams::greedy(8)).unwrap();
+    let mut outs = e.run_to_completion(10_000).unwrap();
+    outs.sort_by_key(|o| o.id);
+    assert_eq!(outs.len(), 2);
+    for (o, p) in outs.iter().zip([[1, 2], [3, 4]]) {
+        assert_eq!(o.finish, FinishReason::Length, "req {}", o.id);
+        assert_eq!(o.tokens, mock_expect(&p, 8), "req {}", o.id);
+    }
+    assert!(e.metrics.counter("admission_races").get() >= 2);
+    guard.report()
+}
+
+/// The multi-pool's size-class free list reads as empty for the first
+/// 64 allocations: every one takes the spill/fallback path and the
+/// pooled engine still serves exact outputs.
+fn pool_class_pressure() -> Vec<SiteReport> {
+    let guard = FaultPlan::new().fail_range("pool.class_exhausted", 1, 64).install();
+    // Magazines off so allocations hit the sharded pool (and its
+    // failpoint) directly instead of a thread-local cache.
+    let mut e = Engine::with_pool(
+        MockBackend::new(),
+        EngineConfig::default(),
+        PoolHandle::builder().magazines(false).build(),
+    );
+    let prompts = [vec![5, 6], vec![7, 8], vec![9, 10]];
+    for p in &prompts {
+        e.submit(p.clone(), SamplingParams::greedy(6)).unwrap();
+    }
+    let mut outs = e.run_to_completion(10_000).unwrap();
+    outs.sort_by_key(|o| o.id);
+    assert_eq!(outs.len(), 3);
+    for (o, p) in outs.iter().zip(&prompts) {
+        assert_eq!(o.finish, FinishReason::Length, "req {}", o.id);
+        assert_eq!(o.tokens, mock_expect(p, 6), "req {}", o.id);
+    }
+    let rep = guard.report();
+    assert!(
+        rep.iter().any(|r| r.site == "pool.class_exhausted" && r.fired >= 1),
+        "pooled engine must exercise the class-exhaustion path: {rep:?}"
+    );
+    rep
+}
+
+/// Call-indexed faults via the [`FaultyBackend`] wrapper (no registry):
+/// a failed prefill and two failed decodes are retried with backoff and
+/// both requests recover to exact outputs.
+fn backend_faults_scheduled() -> Vec<SiteReport> {
+    let be = FaultyBackend::new(MockBackend::new())
+        .fail_prefill_at(2)
+        .fail_decode_at(2)
+        .fail_decode_at(3);
+    let mut e = Engine::new(be, EngineConfig { max_retries: 5, ..Default::default() });
+    e.submit(vec![1, 2], SamplingParams::greedy(6)).unwrap();
+    e.step().unwrap(); // prefill call 1 succeeds
+    e.submit(vec![3, 4], SamplingParams::greedy(6)).unwrap();
+    let mut outs = e.run_to_completion(10_000).unwrap();
+    outs.sort_by_key(|o| o.id);
+    assert_eq!(outs.len(), 2);
+    for (o, p) in outs.iter().zip([[1, 2], [3, 4]]) {
+        assert_eq!(o.finish, FinishReason::Length, "req {}", o.id);
+        assert_eq!(o.tokens, mock_expect(&p, 6), "req {}", o.id);
+    }
+    assert!(e.metrics.counter("backend_errors").get() >= 2);
+    Vec::new() // wrapper-scheduled faults bypass the registry
+}
+
+/// The same backend faults driven through the registry sites instead of
+/// call scheduling, so `backend.prefill` / `backend.decode` show up in
+/// the matrix.
+fn backend_faults_via_registry() -> Vec<SiteReport> {
+    let guard =
+        FaultPlan::new().fail_nth("backend.prefill", 1).fail_nth("backend.decode", 3).install();
+    let mut e = Engine::new(
+        FaultyBackend::new(MockBackend::new()),
+        EngineConfig { max_retries: 5, ..Default::default() },
+    );
+    e.submit(vec![1, 2], SamplingParams::greedy(6)).unwrap();
+    e.submit(vec![3, 4], SamplingParams::greedy(6)).unwrap();
+    let mut outs = e.run_to_completion(10_000).unwrap();
+    outs.sort_by_key(|o| o.id);
+    assert_eq!(outs.len(), 2);
+    for (o, p) in outs.iter().zip([[1, 2], [3, 4]]) {
+        assert_eq!(o.finish, FinishReason::Length, "req {}", o.id);
+        assert_eq!(o.tokens, mock_expect(&p, 6), "req {}", o.id);
+    }
+    assert!(e.metrics.counter("backend_errors").get() >= 2);
+    guard.report()
+}
+
+/// Snapshot restore under a decode failpoint errors cleanly, and no
+/// single-bit corruption or truncation of the snapshot bytes can panic
+/// the decoder (errors are fine; panics are not).
+fn corrupt_snapshot() -> Vec<SiteReport> {
+    let mut e = Engine::new(MockBackend::new(), EngineConfig::default());
+    e.submit(vec![1, 2, 3], SamplingParams::greedy(8)).unwrap();
+    e.step().unwrap();
+    e.step().unwrap();
+    let bytes = e.snapshot();
+    let reports = {
+        let guard = FaultPlan::new().fail_nth("snapshot.decode", 1).install();
+        let r = Engine::restore(MockBackend::new(), PoolHandle::builder().build(), &bytes);
+        assert!(r.is_err(), "failpoint must surface as a decode error");
+        guard.report()
+    };
+    // Single-bit flips: low bits only, so corrupted length prefixes
+    // stay near their true values instead of requesting absurd
+    // capacities. Restore may succeed or fail; it must not panic.
+    for i in (0..bytes.len()).step_by(3) {
+        let mut m = bytes.clone();
+        m[i] ^= 1;
+        let _ = Engine::restore(MockBackend::new(), PoolHandle::builder().build(), &m);
+    }
+    // Truncations, including the empty prefix.
+    for k in 0..bytes.len().min(96) {
+        let _ = Engine::restore(MockBackend::new(), PoolHandle::builder().build(), &bytes[..k]);
+    }
+    reports
+}
+
+/// Two-tenant flood (satellite stress test): an abuser hammering submit
+/// is capped by its hard quota and absorbs rejections; the victim
+/// tenant is always admitted, every one of its requests completes with
+/// exact tokens and bounded queueing, and per-tenant block accounting
+/// reconciles with the allocator on every step.
+fn tenant_flood_isolation() -> Vec<SiteReport> {
+    // 64 data blocks of 16 tokens. Abuser worst case 4 blocks/request,
+    // hard-capped at 16 blocks → ≤ 4 concurrent, leaving ≥ 4 of the 8
+    // batch lanes for the victim, whose load (1 block, 12 decode steps,
+    // one arrival per 6 steps) keeps occupancy far below the admission
+    // watermarks.
+    let mut e = Engine::with_pool(
+        MockBackend::with_blocks(65, 16, 8),
+        EngineConfig {
+            max_batch: 8,
+            queue_limit: 16,
+            admission_ctl: Some(AdmissionConfig::default()),
+            quotas: TenantQuotas::default().tenant(1, Some(8), Some(16)),
+            ..Default::default()
+        },
+        PoolHandle::builder().build(),
+    );
+    let abuser = SamplingParams { max_tokens: 48, tenant: 1, ..Default::default() };
+    let mut victims: Vec<(u64, Vec<i32>)> = Vec::new();
+    let mut abuser_rejected = 0u64;
+    let mut abuser_admitted = 0u64;
+    for step in 0..300u64 {
+        for k in 0..2u64 {
+            let prompt: Vec<i32> =
+                (0..16).map(|i| ((step * 31 + k * 7 + i) % 250 + 1) as i32).collect();
+            match e.submit(prompt, abuser.clone()) {
+                Ok(_) => abuser_admitted += 1,
+                Err(_) => abuser_rejected += 1,
+            }
+        }
+        if step % 6 == 0 {
+            let p = vec![(step % 250 + 1) as i32, 7, 9];
+            let id = e
+                .submit(p.clone(), SamplingParams::greedy(12))
+                .expect("victim tenant must always be admitted");
+            victims.push((id, p));
+        }
+        e.step().unwrap();
+        assert_eq!(
+            e.kv.tenant_blocks_total(),
+            e.kv.num_used_blocks(),
+            "per-tenant accounting must reconcile at step {step}"
+        );
+    }
+    let outs = e.run_to_completion(100_000).unwrap();
+    assert_eq!(outs.len() as u64, abuser_admitted + victims.len() as u64);
+    let mut queue_steps: Vec<u64> = Vec::new();
+    for (id, p) in &victims {
+        let o = outs
+            .iter()
+            .find(|o| o.id == *id)
+            .unwrap_or_else(|| panic!("victim request {id} never reached a terminal state"));
+        assert_eq!(o.finish, FinishReason::Length, "victim {id}");
+        assert_eq!(o.tokens, mock_expect(p, 12), "victim {id}");
+        queue_steps.push(o.queue_steps);
+    }
+    queue_steps.sort_unstable();
+    let p99 = queue_steps[queue_steps.len() * 99 / 100];
+    assert!(p99 <= 128, "victim p99 queue depth unbounded: {p99} steps");
+    assert!(abuser_rejected >= 1, "abuser must absorb rejections");
+    assert!(e.metrics.counter("quota_rejected").get() >= 1);
+    assert_eq!(e.metrics.counter("pool_exhaustion_events").get(), 0);
+    assert_eq!(e.kv.tenant_blocks_total(), 0, "drained engine holds no tenant blocks");
+    Vec::new() // quota/admission pressure is organic — no registry here
+}
+
+#[test]
+fn fault_matrix_never_panics_and_all_sites_fire() {
+    let mut matrix = Matrix { panics: 0, scenarios: Vec::new(), sites: BTreeMap::new() };
+    matrix.run("exhaustion_mid_decode", exhaustion_mid_decode);
+    matrix.run("admission_races_create_seq", admission_races_create_seq);
+    matrix.run("pool_class_pressure", pool_class_pressure);
+    matrix.run("backend_faults_scheduled", backend_faults_scheduled);
+    matrix.run("backend_faults_via_registry", backend_faults_via_registry);
+    matrix.run("corrupt_snapshot", corrupt_snapshot);
+    matrix.run("tenant_flood_isolation", tenant_flood_isolation);
+
+    // Write the matrix before asserting, so CI's jq gate sees the
+    // failure shape even when an assertion below fires first.
+    let sites_json: Vec<Json> = SITES
+        .iter()
+        .map(|&s| {
+            let (hits, fired) = matrix.sites.get(s).copied().unwrap_or((0, 0));
+            json::obj(vec![
+                ("name", json::s(s)),
+                ("hits", Json::Num(hits as f64)),
+                ("fired", Json::Num(fired as f64)),
+            ])
+        })
+        .collect();
+    let doc = json::obj(vec![
+        ("panics", Json::Num(matrix.panics as f64)),
+        ("scenarios", Json::Arr(matrix.scenarios.iter().map(|s| json::s(s)).collect())),
+        ("sites", Json::Arr(sites_json)),
+    ]);
+    std::fs::create_dir_all("bench_out").unwrap();
+    std::fs::write("bench_out/fault_matrix.json", doc.to_string()).unwrap();
+
+    assert_eq!(matrix.panics, 0, "the engine must never panic under any fault plan");
+    for site in SITES {
+        let (hits, fired) = matrix.sites.get(site).copied().unwrap_or((0, 0));
+        assert!(fired >= 1, "site {site} never fired (hits {hits})");
+    }
+}

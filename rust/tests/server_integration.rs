@@ -44,6 +44,15 @@ fn malformed_request_gets_error() {
     let server = start_server();
     let resp = request(server.addr, "this is not json");
     assert!(resp.req_str("error").is_ok());
+    // Errors carry a stable machine-readable `code` alongside the
+    // human-readable message (the wire contract clients dispatch on).
+    assert_eq!(resp.req_str("code").unwrap(), "bad_request", "{resp:?}");
+    // A well-formed request that the engine rejects gets a typed code
+    // too: 40 prompt tokens overflow the mock's 32-token prefill window.
+    let long = "x".repeat(40);
+    let over = request(server.addr, &format!(r#"{{"prompt": "{long}", "max_tokens": 2}}"#));
+    assert!(over.req_str("error").is_ok());
+    assert_eq!(over.req_str("code").unwrap(), "context_overflow", "{over:?}");
     // Server must still work afterwards.
     let ok = request(server.addr, r#"{"prompt": "x", "max_tokens": 2}"#);
     assert!(ok.get("error").is_none());
